@@ -1,0 +1,152 @@
+//! THE HEADLINE BENCH: per-request cost vs catalog size N.
+//!
+//! Reproduces the paper's central complexity claim (§1/§3): OGB's
+//! amortized per-request cost grows ~log N while the classic OGB_cl grows
+//! ~N (dense projection + systematic resampling).  Also rows for LRU
+//! (constant) and FTPL (log N) as reference points, and the XLA-backed
+//! OGB_cl when artifacts are present (set OGB_ARTIFACTS or run `make
+//! artifacts` first).
+//!
+//! Output: table on stdout + results/complexity/complexity.csv.
+
+use ogb_cache::policies::{
+    CpuDenseStep, Ftpl, Lru, Ogb, OgbClassic, OgbClassicMode, Policy,
+};
+use ogb_cache::runtime::{artifacts_available, ArtifactRegistry};
+use ogb_cache::util::bench::{bench_batch, fast_mode, print_table, to_csv_row, BenchResult};
+use ogb_cache::util::csv::CsvWriter;
+use ogb_cache::util::{Xoshiro256pp, Zipf};
+
+fn drive(policy: &mut dyn Policy, n: usize, reqs: usize, seed: u64) {
+    let mut rng = Xoshiro256pp::seed_from(seed);
+    let zipf = Zipf::new(n as u64, 0.9);
+    for _ in 0..reqs {
+        std::hint::black_box(policy.request(zipf.sample(&mut rng)));
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = fast_mode();
+    let reqs: usize = if fast { 20_000 } else { 100_000 };
+    let reps = if fast { 2 } else { 5 };
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    let ns: &[usize] = if fast {
+        &[1 << 12, 1 << 16]
+    } else {
+        &[1 << 10, 1 << 12, 1 << 14, 1 << 16, 1 << 18, 1 << 20]
+    };
+    // O(log N) + O(1) policies: full N sweep.  Policies are constructed
+    // OUTSIDE the timed region (construction is O(N log N)) and keep
+    // learning across repetitions — the measured number is the
+    // steady-state per-request cost.
+    for &n in ns {
+        let c = (n / 20).max(2);
+        let mut ogb1 = Ogb::with_theory_eta(n, c as f64, reqs, 1, 7);
+        results.push(bench_batch(
+            &format!("OGB(b=1)       N=2^{:<2}", n.trailing_zeros()),
+            reqs as u64,
+            reps,
+            || drive(&mut ogb1, n, reqs, 11),
+        ));
+        let mut ogb100 = Ogb::with_theory_eta(n, c as f64, reqs, 100, 7);
+        results.push(bench_batch(
+            &format!("OGB(b=100)     N=2^{:<2}", n.trailing_zeros()),
+            reqs as u64,
+            reps,
+            || drive(&mut ogb100, n, reqs, 11),
+        ));
+        let mut lru = Lru::new(c);
+        results.push(bench_batch(
+            &format!("LRU            N=2^{:<2}", n.trailing_zeros()),
+            reqs as u64,
+            reps,
+            || drive(&mut lru, n, reqs, 11),
+        ));
+        let zeta = ogb_cache::ftpl_theory_zeta(c as f64, n as f64, reqs as f64);
+        let mut ftpl = Ftpl::new(n, c, zeta, 7);
+        results.push(bench_batch(
+            &format!("FTPL           N=2^{:<2}", n.trailing_zeros()),
+            reqs as u64,
+            reps,
+            || drive(&mut ftpl, n, reqs, 11),
+        ));
+    }
+
+    // O(N)-per-batch classic policy: the N sweep is capped (the point of
+    // the paper — it stops being runnable), batch sizes {1, 100}.
+    let classic_ns: &[usize] = if fast {
+        &[1 << 10]
+    } else {
+        &[1 << 10, 1 << 12, 1 << 14]
+    };
+    for &n in classic_ns {
+        let c = (n / 20).max(2);
+        let classic_reqs = if n >= 1 << 14 { reqs / 10 } else { reqs / 2 };
+        for b in [1usize, 100] {
+            let mut p = OgbClassic::with_theory_eta(
+                n,
+                c as f64,
+                classic_reqs,
+                b,
+                OgbClassicMode::Integral,
+                Box::new(CpuDenseStep),
+                7,
+            );
+            results.push(bench_batch(
+                &format!("OGB_cl(b={b:<4}) N=2^{:<2}", n.trailing_zeros()),
+                classic_reqs as u64,
+                reps.min(3),
+                || drive(&mut p, n, classic_reqs, 11),
+            ));
+        }
+    }
+
+    // XLA-backed classic (L1/L2 layers on the request path), if artifacts
+    // were built.
+    let dir = std::env::var("OGB_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let avail = artifacts_available(std::path::Path::new(&dir));
+    if !avail.is_empty() {
+        let reg = ArtifactRegistry::open(&dir)?;
+        for &n in avail.iter().filter(|&&n| n <= 1 << 14) {
+            let c = (n / 20).max(2);
+            let xla_reqs = reqs / 20;
+            let backend = reg.dense_step(n)?;
+            // the policy owns the backend; rebuild per repetition is too
+            // costly (XLA compile), so drive a single long run.
+            let mut p = OgbClassic::with_theory_eta(
+                n,
+                c as f64,
+                xla_reqs,
+                100,
+                OgbClassicMode::Integral,
+                Box::new(backend),
+                7,
+            );
+            results.push(bench_batch(
+                &format!("OGB_cl-xla(b=100) N=2^{:<2}", n.trailing_zeros()),
+                xla_reqs as u64,
+                1,
+                || drive(&mut p, n, xla_reqs, 11),
+            ));
+        }
+    } else {
+        eprintln!("(artifacts not found in `{dir}` — skipping XLA-backed rows; run `make artifacts`)");
+    }
+
+    print_table(
+        "per-request cost vs catalog size (paper's O(log N) vs O(N) claim)",
+        &results,
+    );
+    let mut w = CsvWriter::create(
+        "results/complexity/complexity.csv",
+        &[("experiment", "complexity".to_string()), ("requests", reqs.to_string())],
+        &["benchmark", "ns_per_op", "ops_per_s", "min_ns", "max_ns"],
+    )?;
+    for r in &results {
+        w.row_str(&to_csv_row(r))?;
+    }
+    let p = w.finish()?;
+    eprintln!("\nwrote {}", p.display());
+    Ok(())
+}

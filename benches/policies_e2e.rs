@@ -1,0 +1,63 @@
+//! End-to-end policy throughput on a common workload: requests/second of
+//! every policy in the comparison set on a Zipf(0.9) trace at N=2^17 —
+//! the practical "can this run in a production cache?" row for each.
+
+use ogb_cache::policies::{self, Policy};
+use ogb_cache::trace::synth;
+use ogb_cache::util::bench::{bench_batch, fast_mode, print_table, to_csv_row, BenchResult};
+use ogb_cache::util::csv::CsvWriter;
+
+fn main() -> anyhow::Result<()> {
+    let fast = fast_mode();
+    let n: usize = 1 << 17;
+    let t: usize = if fast { 50_000 } else { 500_000 };
+    let c = n / 20;
+    let reps = if fast { 2 } else { 3 };
+    let trace = synth::zipf(n, t, 0.9, 5);
+
+    let mut results: Vec<BenchResult> = Vec::new();
+    let names = [
+        "lru", "lfu", "fifo", "arc", "gds", "ftpl", "ogb", "ogb-frac", "omd-frac", "opt",
+        "infinite",
+    ];
+    // Policies are constructed outside the timed region and keep state
+    // across reps: steady-state per-request cost.
+    for name in names {
+        let mut p = policies::by_name(name, n, c, t, 1, 7, Some(&trace)).expect("factory");
+        results.push(bench_batch(&format!("{name:<10} N=2^17"), t as u64, reps, || {
+            let mut reward = 0.0;
+            for &r in &trace.requests {
+                reward += p.request(r as u64);
+            }
+            std::hint::black_box(reward);
+        }));
+    }
+    // batched OGB variants
+    for b in [10usize, 100, 1000] {
+        let mut p = policies::Ogb::with_theory_eta(n, c as f64, t, b, 7);
+        results.push(bench_batch(
+            &format!("ogb(b={b:<4}) N=2^17"),
+            t as u64,
+            reps,
+            || {
+                let mut reward = 0.0;
+                for &r in &trace.requests {
+                    reward += p.request(r as u64);
+                }
+                std::hint::black_box(reward);
+            },
+        ));
+    }
+
+    print_table("policy throughput, Zipf(0.9) N=2^17 C=5%", &results);
+    let mut w = CsvWriter::create(
+        "results/complexity/policies_e2e.csv",
+        &[("experiment", "policies_e2e".to_string()), ("n", n.to_string()), ("t", t.to_string())],
+        &["benchmark", "ns_per_op", "ops_per_s", "min_ns", "max_ns"],
+    )?;
+    for r in &results {
+        w.row_str(&to_csv_row(r))?;
+    }
+    eprintln!("\nwrote {}", w.finish()?.display());
+    Ok(())
+}

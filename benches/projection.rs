@@ -1,0 +1,104 @@
+//! Projection micro-bench: the paper's Algorithm 2 (lazy, O(log N)) vs the
+//! dense exact projection (O(N log N)) vs the XLA/Pallas artifact executed
+//! through PJRT — per-update cost at several catalog sizes.
+
+use ogb_cache::proj::{dense, LazySimplex};
+use ogb_cache::runtime::{artifacts_available, ArtifactRegistry};
+use ogb_cache::util::bench::{bench_batch, fast_mode, print_table, to_csv_row, BenchResult};
+use ogb_cache::util::csv::CsvWriter;
+use ogb_cache::util::{Xoshiro256pp, Zipf};
+
+fn main() -> anyhow::Result<()> {
+    let fast = fast_mode();
+    let steps: usize = if fast { 5_000 } else { 50_000 };
+    let reps = if fast { 2 } else { 5 };
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    let ns: &[usize] = if fast {
+        &[1 << 12]
+    } else {
+        &[1 << 10, 1 << 12, 1 << 14, 1 << 16, 1 << 18, 1 << 20]
+    };
+    for &n in ns {
+        let c = (n / 4) as f64;
+        let eta = ogb_cache::theory_eta(c, n as f64, steps as f64, 1.0);
+        // steady-state cost: construction (O(N log N)) happens once,
+        // outside the timed region; each rep continues the same stream.
+        let mut s = LazySimplex::new_uniform(n, c);
+        let mut rng = Xoshiro256pp::seed_from(3);
+        let zipf = Zipf::new(n as u64, 0.9);
+        results.push(bench_batch(
+            &format!("lazy request   N=2^{:<2}", n.trailing_zeros()),
+            steps as u64,
+            reps,
+            || {
+                for _ in 0..steps {
+                    s.request(zipf.sample(&mut rng), eta);
+                }
+                std::hint::black_box(s.rho());
+            },
+        ));
+    }
+
+    let dense_ns: &[usize] = if fast { &[1 << 10] } else { &[1 << 10, 1 << 12, 1 << 14] };
+    for &n in dense_ns {
+        let c = (n / 4) as f64;
+        let eta = 0.01;
+        let dense_steps = (steps / 50).max(100);
+        results.push(bench_batch(
+            &format!("dense project  N=2^{:<2}", n.trailing_zeros()),
+            dense_steps as u64,
+            reps.min(3),
+            || {
+                let mut f = vec![c / n as f64; n];
+                let mut rng = Xoshiro256pp::seed_from(4);
+                for _ in 0..dense_steps {
+                    let j = rng.next_below(n as u64) as usize;
+                    dense::project_single_bump(&mut f, j, eta, c);
+                }
+                std::hint::black_box(f[0]);
+            },
+        ));
+    }
+
+    let dir = std::env::var("OGB_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let avail = artifacts_available(std::path::Path::new(&dir));
+    if !avail.is_empty() {
+        let reg = ArtifactRegistry::open(&dir)?;
+        for &n in avail.iter().filter(|&&n| n <= 1 << 16) {
+            let c = (n / 4) as f32;
+            let exe = reg.load_proj(n)?;
+            let xla_steps = if fast { 20 } else { 200 };
+            let mut rng = Xoshiro256pp::seed_from(5);
+            let mut y: Vec<f32> = (0..n).map(|_| rng.next_f64() as f32).collect();
+            let scale = c / y.iter().sum::<f32>();
+            y.iter_mut().for_each(|v| *v *= scale);
+            results.push(bench_batch(
+                &format!("xla project    N=2^{:<2}", n.trailing_zeros()),
+                xla_steps as u64,
+                reps.min(3),
+                || {
+                    for k in 0..xla_steps {
+                        let mut yk = y.clone();
+                        yk[k % n] += 0.01;
+                        std::hint::black_box(exe.project(&yk, c).expect("xla project"));
+                    }
+                },
+            ));
+        }
+    } else {
+        eprintln!("(artifacts not found in `{dir}` — skipping XLA rows; run `make artifacts`)");
+    }
+
+    print_table("capped-simplex projection: lazy vs dense vs XLA artifact", &results);
+    let mut w = CsvWriter::create(
+        "results/complexity/projection.csv",
+        &[("experiment", "projection".to_string())],
+        &["benchmark", "ns_per_op", "ops_per_s", "min_ns", "max_ns"],
+    )?;
+    for r in &results {
+        w.row_str(&to_csv_row(r))?;
+    }
+    eprintln!("\nwrote {}", w.finish()?.display());
+    Ok(())
+}

@@ -1,0 +1,123 @@
+//! Sampling micro-bench (paper §5): coordinated Poisson updates
+//! (Algorithm 3, O((B + evictions) log N)) vs Madow systematic resampling
+//! from scratch (O(N)), plus the *replacement* counts that motivate
+//! coordination (positive coordination ⇒ ~B replacements per update;
+//! fresh samples ⇒ hundreds).
+
+use ogb_cache::proj::LazySimplex;
+use ogb_cache::sample::{systematic_sample, CoordinatedSampler};
+use ogb_cache::util::bench::{bench_batch, fast_mode, print_table, to_csv_row, BenchResult};
+use ogb_cache::util::csv::CsvWriter;
+use ogb_cache::util::{Xoshiro256pp, Zipf};
+
+fn main() -> anyhow::Result<()> {
+    let fast = fast_mode();
+    let reps = if fast { 2 } else { 5 };
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    let ns: &[usize] = if fast {
+        &[1 << 14]
+    } else {
+        &[1 << 12, 1 << 14, 1 << 16, 1 << 18, 1 << 20]
+    };
+    for &n in ns {
+        let c = (n / 20) as f64;
+        let b = 100usize;
+        let updates = if fast { 50 } else { 500 };
+        let eta = ogb_cache::theory_eta(c, n as f64, (updates * b) as f64, 1.0);
+
+        results.push(bench_batch(
+            &format!("coordinated update (B=100) N=2^{:<2}", n.trailing_zeros()),
+            updates as u64,
+            reps,
+            || {
+                let mut lazy = LazySimplex::new_uniform(n, c);
+                let mut smp = CoordinatedSampler::new(&lazy, 9);
+                let mut rng = Xoshiro256pp::seed_from(10);
+                let zipf = Zipf::new(n as u64, 0.9);
+                let mut batch = Vec::with_capacity(b);
+                for _ in 0..updates {
+                    batch.clear();
+                    for _ in 0..b {
+                        let j = zipf.sample(&mut rng);
+                        lazy.request(j, eta);
+                        batch.push(j);
+                    }
+                    std::hint::black_box(smp.update(&lazy, &batch));
+                }
+            },
+        ));
+
+        let sys_updates = if n >= 1 << 18 { updates / 10 } else { updates };
+        results.push(bench_batch(
+            &format!("systematic resample        N=2^{:<2}", n.trailing_zeros()),
+            sys_updates as u64,
+            reps.min(3),
+            || {
+                let f = vec![c / n as f64; n];
+                let mut rng = Xoshiro256pp::seed_from(11);
+                for _ in 0..sys_updates {
+                    std::hint::black_box(systematic_sample(&f, &mut rng));
+                }
+            },
+        ));
+    }
+
+    // Replacement comparison at one size (quality, not speed).
+    {
+        let n = 1 << 16;
+        let c = (n / 20) as f64;
+        let b = 100usize;
+        let updates = 200;
+        let eta = ogb_cache::theory_eta(c, n as f64, (updates * b) as f64, 1.0);
+        let mut lazy = LazySimplex::new_uniform(n, c);
+        let mut smp = CoordinatedSampler::new(&lazy, 12);
+        let mut rng = Xoshiro256pp::seed_from(13);
+        let zipf = Zipf::new(n as u64, 0.9);
+        let mut coord_replacements = 0u64;
+        let mut batch = Vec::new();
+        for _ in 0..updates {
+            batch.clear();
+            for _ in 0..b {
+                let j = zipf.sample(&mut rng);
+                lazy.request(j, eta);
+                batch.push(j);
+            }
+            coord_replacements += smp.update(&lazy, &batch).evicted as u64;
+        }
+        // fresh systematic samples on the same trajectory
+        let mut lazy2 = LazySimplex::new_uniform(n, c);
+        let mut rng2 = Xoshiro256pp::seed_from(13);
+        let mut prev: Vec<u64> = Vec::new();
+        let mut sys_replacements = 0u64;
+        for _ in 0..updates {
+            for _ in 0..b {
+                lazy2.request(zipf.sample(&mut rng2), eta);
+            }
+            let f = lazy2.to_dense();
+            let cur = systematic_sample(&f, &mut rng2);
+            if !prev.is_empty() {
+                let prev_set: std::collections::HashSet<u64> = prev.iter().copied().collect();
+                sys_replacements += cur.iter().filter(|i| !prev_set.contains(i)).count() as u64;
+            }
+            prev = cur;
+        }
+        println!(
+            "\nreplacements per update (B={b}, N=2^16): coordinated={:.1} fresh-systematic={:.1}",
+            coord_replacements as f64 / updates as f64,
+            sys_replacements as f64 / (updates - 1) as f64,
+        );
+    }
+
+    print_table("sample update cost (Algorithm 3 vs Madow resampling)", &results);
+    let mut w = CsvWriter::create(
+        "results/complexity/sampling.csv",
+        &[("experiment", "sampling".to_string())],
+        &["benchmark", "ns_per_op", "ops_per_s", "min_ns", "max_ns"],
+    )?;
+    for r in &results {
+        w.row_str(&to_csv_row(r))?;
+    }
+    eprintln!("\nwrote {}", w.finish()?.display());
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! The paper's Fig. 2 scenario as a runnable demo: a round-robin
+//! adversarial trace where recency/frequency policies collapse to a ~C/N
+//! hit ratio with *linear* regret, while OGB converges to OPT.
+//!
+//!     cargo run --release --example adversarial
+
+use ogb_cache::policies::{ArcCache, Lfu, Lru, Ogb, Opt, Policy};
+use ogb_cache::sim::regret::{regret_growth_exponent, regret_series};
+use ogb_cache::trace::synth;
+
+fn main() {
+    let n = 1_000;
+    let c = 250;
+    let rounds = 1_000; // T = 1e6
+    let trace = synth::adversarial(n, rounds, 1);
+    let t = trace.len();
+    println!(
+        "adversarial trace: N={n} items, C={c} (25%), {rounds} rounds, T={t}\n"
+    );
+    println!(
+        "{:<8} {:>10} {:>12} {:>18}",
+        "policy", "hit_ratio", "final regret", "regret growth exp"
+    );
+
+    let entries: Vec<(&str, Box<dyn Policy>)> = vec![
+        ("LRU", Box::new(Lru::new(c))),
+        ("LFU", Box::new(Lfu::new(c))),
+        ("ARC", Box::new(ArcCache::new(c))),
+        ("OGB", Box::new(Ogb::with_theory_eta(n, c as f64, t, 1, 2))),
+        ("OPT", Box::new(Opt::from_trace(&trace, c))),
+    ];
+    for (name, mut p) in entries {
+        let series = regret_series(p.as_mut(), &trace, c, 1, 24);
+        let last = series.last().unwrap();
+        let hit_ratio = (last.t as f64 * (c as f64 / n as f64) - last.regret) / last.t as f64
+            + 0.0; // OPT hit ratio on this trace is exactly C/N
+        println!(
+            "{:<8} {:>10.4} {:>12.0} {:>18.3}",
+            name,
+            hit_ratio,
+            last.regret,
+            regret_growth_exponent(&series)
+        );
+        if name == "OGB" {
+            println!(
+                "         (Theorem 3.1 bound at T: {:.0} — measured {:.0})",
+                last.bound, last.regret
+            );
+        }
+    }
+    println!(
+        "\nexpected shape (paper Fig. 2): LRU/LFU/ARC exponents ~1.0 (linear\n\
+         regret, hit ratio << OPT); OGB sub-linear (~0.5) approaching OPT = C/N = {:.2}",
+        c as f64 / n as f64
+    );
+}

@@ -1,0 +1,104 @@
+//! END-TO-END DRIVER: the full system composed — trace generator → router
+//! → sharded OGB cache service (threads, bounded queues, batched sample
+//! updates) → metrics.  Serves a realistic workload (twitter-like bursts
+//! on top of a Zipf core) and reports hit ratio, throughput and latency
+//! percentiles.  This is the run recorded in EXPERIMENTS.md §End-to-end.
+//!
+//!     cargo run --release --example cache_server [requests] [shards]
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use ogb_cache::coordinator::{CacheServer, ServerConfig};
+use ogb_cache::trace::realworld;
+
+fn main() -> anyhow::Result<()> {
+    let requests: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2_000_000);
+    let shards: usize = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let clients = 4usize;
+
+    // Realistic workload: twitter-like (bursty) requests, pre-generated so
+    // the load generator is not the bottleneck.
+    let scale = (requests as f64 / 2_000_000.0).clamp(0.05, 10.0);
+    let trace = realworld::by_name("twitter", scale, 7).unwrap();
+    let catalog = trace.catalog;
+    let capacity = catalog / 20;
+    println!(
+        "workload: {} requests over catalog {} (twitter-like bursts)",
+        trace.len().min(requests),
+        catalog
+    );
+
+    let cfg = ServerConfig {
+        catalog,
+        capacity,
+        shards,
+        batch: 64,
+        horizon: requests,
+        queue_depth: 4096,
+        seed: 1,
+    };
+    println!(
+        "server: shards={} capacity={} batch={} queue_depth={}",
+        cfg.shards, cfg.capacity, cfg.batch, cfg.queue_depth
+    );
+    let server = Arc::new(CacheServer::start(cfg)?);
+
+    let n_req = trace.len().min(requests);
+    let reqs: Arc<Vec<u32>> = Arc::new(trace.requests[..n_req].to_vec());
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for w in 0..clients {
+        let s = server.clone();
+        let reqs = reqs.clone();
+        handles.push(std::thread::spawn(move || {
+            // clients stripe the trace to preserve rough request order
+            let mut i = w;
+            while i < reqs.len() {
+                s.get_nowait(reqs[i] as u64);
+                i += clients;
+            }
+        }));
+    }
+    for h in handles {
+        h.join().map_err(|_| anyhow::anyhow!("client panicked"))?;
+    }
+    let drive_s = t0.elapsed().as_secs_f64();
+    let snap_live = server.snapshot();
+    println!(
+        "\nlive snapshot after drive: {} processed / {} sent",
+        snap_live.requests, n_req
+    );
+
+    let server = Arc::try_unwrap(server)
+        .map_err(|_| anyhow::anyhow!("server still referenced"))?;
+    let snap = server.shutdown();
+    let total_s = t0.elapsed().as_secs_f64();
+
+    println!("\n=== end-to-end results ===");
+    println!("requests      : {}", snap.requests);
+    println!("hit ratio     : {:.4}", snap.hit_ratio());
+    println!("evictions     : {}", snap.evictions);
+    println!("batch updates : {}", snap.batch_updates);
+    println!(
+        "throughput    : {:.3e} req/s (drive {:.2}s, total incl. drain {:.2}s)",
+        snap.requests as f64 / total_s,
+        drive_s,
+        total_s
+    );
+    println!(
+        "latency       : p50={:.1}us p90={:.1}us p99={:.1}us max={:.1}us (enqueue→served)",
+        snap.latency.percentile_ns(50.0) as f64 / 1e3,
+        snap.latency.percentile_ns(90.0) as f64 / 1e3,
+        snap.latency.percentile_ns(99.0) as f64 / 1e3,
+        snap.latency.max_ns() as f64 / 1e3,
+    );
+    anyhow::ensure!(snap.requests as usize == n_req, "all requests served");
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Quickstart: build the OGB policy, replay a Zipf workload, and compare
+//! against LRU and the hindsight-optimal static allocation.
+//!
+//!     cargo run --release --example quickstart
+
+use ogb_cache::policies::{Lru, Ogb, Opt, Policy};
+use ogb_cache::sim::{run, RunConfig};
+use ogb_cache::trace::synth;
+
+fn main() {
+    // A catalog of 100k items, 1M Zipf(0.9) requests, cache = 5% of catalog.
+    let n = 100_000;
+    let t = 1_000_000;
+    let c = n / 20;
+    let trace = synth::zipf(n, t, 0.9, 7);
+    println!(
+        "trace: {} requests over {} items ({} distinct), cache C={c}",
+        trace.len(),
+        trace.catalog,
+        trace.distinct()
+    );
+
+    // The paper's policy: O(log N) per request, eta from Theorem 3.1.
+    let mut ogb = Ogb::with_theory_eta(n, c as f64, t, /*batch=*/ 1, /*seed=*/ 42);
+    let cfg = RunConfig::default();
+    let r = run(&mut ogb, &trace, &cfg);
+    println!(
+        "OGB   hit_ratio={:.4}  throughput={:.2e} req/s  occupancy={:.0} (soft C={c})",
+        r.hit_ratio(),
+        r.throughput_rps,
+        ogb.occupancy()
+    );
+
+    let mut lru = Lru::new(c);
+    let r_lru = run(&mut lru, &trace, &cfg);
+    println!(
+        "LRU   hit_ratio={:.4}  throughput={:.2e} req/s",
+        r_lru.hit_ratio(),
+        r_lru.throughput_rps
+    );
+
+    let mut opt = Opt::from_trace(&trace, c);
+    let r_opt = run(&mut opt, &trace, &cfg);
+    println!(
+        "OPT   hit_ratio={:.4}  (best static allocation in hindsight)",
+        r_opt.hit_ratio()
+    );
+
+    let d = ogb.diag();
+    println!(
+        "\nOGB internals: removed_coeffs/request={:.3}  sample_evictions/request={:.3}",
+        d.removed_coeffs as f64 / t as f64,
+        d.sample_evictions as f64 / t as f64
+    );
+    println!(
+        "regret vs OPT: {:.0} hits over {t} requests (avg {:.5}/req, Thm 3.1 bound {:.5}/req)",
+        r_opt.total_reward - r.total_reward,
+        (r_opt.total_reward - r.total_reward) / t as f64,
+        ogb_cache::theory_regret_bound(c as f64, n as f64, t as f64, 1.0) / t as f64,
+    );
+}

@@ -1,0 +1,114 @@
+"""AOT pipeline: lower the L2 model to HLO *text* artifacts for the Rust
+runtime.
+
+Interchange format is HLO text, NOT `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot [--out-dir ../artifacts] [--sizes 1024,4096,...]
+
+Emits, per catalog size N:
+    ogb_step_{N}.hlo.txt   (f[N], counts[N], eta, c) -> (f_next[N], reward)
+    proj_{N}.hlo.txt       (y[N], c) -> (f[N],)
+plus a manifest.json describing every artifact (consumed by
+rust/src/runtime/registry.rs).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+DEFAULT_SIZES = (1024, 4096, 16384, 65536)
+DTYPE = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_ogb_step(n: int) -> str:
+    vec = jax.ShapeDtypeStruct((n,), DTYPE)
+    scalar = jax.ShapeDtypeStruct((), DTYPE)
+    lowered = jax.jit(model.ogb_step).lower(vec, vec, scalar, scalar)
+    return to_hlo_text(lowered)
+
+
+def lower_proj(n: int) -> str:
+    vec = jax.ShapeDtypeStruct((n,), DTYPE)
+    scalar = jax.ShapeDtypeStruct((), DTYPE)
+    lowered = jax.jit(model.proj).lower(vec, scalar)
+    return to_hlo_text(lowered)
+
+
+def _write(path: str, text: str) -> dict:
+    with open(path, "w") as fh:
+        fh.write(text)
+    return {
+        "file": os.path.basename(path),
+        "bytes": len(text),
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--sizes", default=",".join(str(s) for s in DEFAULT_SIZES))
+    # Back-compat with `make artifacts` calling with --out <file>: treated as
+    # a marker file; artifacts land next to it.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    out_dir = os.path.abspath(out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+
+    manifest = {"dtype": "f32", "entries": []}
+    for n in sizes:
+        step_meta = _write(os.path.join(out_dir, f"ogb_step_{n}.hlo.txt"), lower_ogb_step(n))
+        proj_meta = _write(os.path.join(out_dir, f"proj_{n}.hlo.txt"), lower_proj(n))
+        manifest["entries"].append(
+            {
+                "n": n,
+                "ogb_step": step_meta,
+                "proj": proj_meta,
+                "inputs": {
+                    "ogb_step": ["f[n] f32", "counts[n] f32", "eta f32", "c f32"],
+                    "proj": ["y[n] f32", "c f32"],
+                },
+                "outputs": {
+                    "ogb_step": ["f_next[n] f32", "reward f32"],
+                    "proj": ["f[n] f32"],
+                },
+            }
+        )
+        print(f"lowered N={n}: ogb_step {step_meta['bytes']}B, proj {proj_meta['bytes']}B")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    if args.out:
+        # marker for make: newest artifact timestamp
+        with open(args.out, "w") as fh:
+            fh.write(json.dumps({"sizes": sizes}) + "\n")
+    print(f"wrote manifest with {len(sizes)} sizes to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

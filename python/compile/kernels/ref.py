@@ -1,0 +1,116 @@
+"""Pure-jnp / numpy reference oracles for the capped-simplex projection.
+
+The projection is the hot-spot of the classic OGB_cl policy (paper Eq. (3)):
+
+    min_f 0.5 * ||f - y||^2   s.t.  0 <= f_i <= 1,  sum_i f_i = C
+
+The KKT conditions give f_i = clip(y_i - lam, 0, 1) for the unique lam with
+g(lam) = sum_i clip(y_i - lam, 0, 1) = C.  g is continuous, piecewise linear
+and non-increasing in lam, so lam can be found either exactly (sorting the
+2N breakpoints {y_i, y_i - 1}) or by bisection to machine precision.
+
+These oracles are the correctness anchor for:
+  * the Pallas kernel (python/tests/test_kernel.py),
+  * the Rust dense projection (rust/src/proj/dense.rs, cross-checked via the
+    AOT artifact in rust/tests/),
+  * the Rust lazy O(log N) projection (equivalence through the dense one).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "capped_simplex_proj_np",
+    "capped_simplex_proj_ref",
+    "ogb_step_ref",
+    "lam_exact_np",
+]
+
+
+def lam_exact_np(y: np.ndarray, c: float) -> float:
+    """Exact water-level lam for the capped-simplex projection (float64).
+
+    Sorts the 2N breakpoints of the piecewise-linear g(lam) and solves the
+    linear piece containing C.  O(N log N), exact up to float64 arithmetic.
+    """
+    y = np.asarray(y, dtype=np.float64)
+    n = y.size
+    if not 0.0 < c <= n:
+        raise ValueError(f"capacity must be in (0, N], got {c} with N={n}")
+
+    def g(lam: float) -> float:
+        return float(np.minimum(1.0, np.maximum(0.0, y - lam)).sum())
+
+    # Breakpoints where the slope of g changes: lam = y_i (component enters
+    # the interior from 0) and lam = y_i - 1 (component hits the cap at 1).
+    bps = np.concatenate([y, y - 1.0])
+    bps.sort()
+    # Binary search for the segment [bps[k], bps[k+1]] that brackets C.
+    lo_idx, hi_idx = 0, bps.size - 1
+    while hi_idx - lo_idx > 1:
+        mid = (lo_idx + hi_idx) // 2
+        if g(bps[mid]) >= c:
+            lo_idx = mid
+        else:
+            hi_idx = mid
+    lam_lo, lam_hi = bps[lo_idx], bps[hi_idx]
+    g_lo, g_hi = g(lam_lo), g(lam_hi)
+    if g_lo == g_hi:  # flat segment (g constant == C on it)
+        return float(lam_lo)
+    # g is linear between consecutive breakpoints: interpolate.
+    t = (g_lo - c) / (g_lo - g_hi)
+    return float(lam_lo + t * (lam_hi - lam_lo))
+
+
+def capped_simplex_proj_np(y: np.ndarray, c: float) -> np.ndarray:
+    """Exact Euclidean projection onto {f : 0<=f<=1, sum f = C} (float64)."""
+    y = np.asarray(y, dtype=np.float64)
+    lam = lam_exact_np(y, c)
+    f = np.minimum(1.0, np.maximum(0.0, y - lam))
+    # One Newton correction for the residual introduced by float rounding:
+    interior = (f > 0.0) & (f < 1.0)
+    k = int(interior.sum())
+    if k > 0:
+        lam += (f.sum() - c) / k
+        f = np.minimum(1.0, np.maximum(0.0, y - lam))
+    return f
+
+
+def capped_simplex_proj_ref(y: jax.Array, c, n_iters: int = 64) -> jax.Array:
+    """Pure-jnp bisection reference (trace-able; same algorithm the Pallas
+    kernel implements, expressed as stock jnp ops)."""
+    y = jnp.asarray(y)
+    dt = y.dtype
+    c = jnp.asarray(c, dtype=dt)
+    lo = jnp.minimum(jnp.min(y) - 1.0, jnp.zeros((), dt))
+    hi = jnp.max(y)
+
+    def body(_, state):
+        lo, hi = state
+        mid = 0.5 * (lo + hi)
+        g = jnp.sum(jnp.clip(y - mid, 0.0, 1.0))
+        too_big = g >= c  # g non-increasing: need larger lam while g >= C
+        lo = jnp.where(too_big, mid, lo)
+        hi = jnp.where(too_big, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, n_iters, body, (lo, hi))
+    lam = 0.5 * (lo + hi)
+    return jnp.clip(y - lam, 0.0, 1.0)
+
+
+def ogb_step_ref(f: jax.Array, counts: jax.Array, eta, c):
+    """Reference for the fused OGB_cl batch step (paper Eq. (2)).
+
+    reward  = phi accumulated over the batch with the *pre-update* state
+            = sum_i counts_i * f_i        (w_{t,i} = 1)
+    f_next  = Pi_F(f + eta * counts)
+    """
+    f = jnp.asarray(f)
+    counts = jnp.asarray(counts, dtype=f.dtype)
+    reward = jnp.sum(counts * f)
+    y = f + jnp.asarray(eta, f.dtype) * counts
+    return capped_simplex_proj_ref(y, c), reward

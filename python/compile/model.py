@@ -1,0 +1,51 @@
+"""L2 JAX compute graph: the fused OGB_cl batch step (paper Eq. (2)).
+
+This is the dense *classic* baseline the paper compares complexity against:
+every B requests, the fractional state is pushed along the accumulated
+gradient and projected back onto the capped simplex.  The projection runs
+in the L1 Pallas kernel (kernels/capped_simplex.py); everything here lowers
+into a single HLO module that the Rust runtime loads and executes via PJRT
+(rust/src/runtime/) — Python never runs on the request path.
+
+Exported entry points (per catalog size N, see aot.py):
+
+  ogb_step(f, counts, eta, c) -> (f_next, reward)
+      reward = sum_i counts_i * f_i     (batch reward with pre-update state)
+      f_next = Pi_F(f + eta * counts)
+
+  proj(y, c) -> f                       (bare projection, for validation)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.capped_simplex import capped_simplex_proj
+
+__all__ = ["ogb_step", "proj"]
+
+
+def ogb_step(f: jax.Array, counts: jax.Array, eta: jax.Array, c: jax.Array):
+    """One OGB_cl update over a batch summarised by per-item request counts.
+
+    Args:
+      f:      fractional cache state, shape (N,), in F (0<=f<=1, sum=C).
+      counts: number of requests per item in the batch, shape (N,).
+      eta:    learning-rate scalar.
+      c:      cache capacity scalar (same C the state satisfies).
+
+    Returns:
+      (f_next, reward): the projected next state and the batch reward
+      accumulated with the pre-update state (w_{t,i} = 1, paper §2.1).
+    """
+    counts = counts.astype(f.dtype)
+    reward = jnp.sum(counts * f)
+    y = f + eta.astype(f.dtype) * counts
+    f_next = capped_simplex_proj(y, c)
+    return f_next, reward
+
+
+def proj(y: jax.Array, c: jax.Array) -> jax.Array:
+    """Bare capped-simplex projection (validation artifact)."""
+    return capped_simplex_proj(y, c)

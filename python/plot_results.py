@@ -1,0 +1,167 @@
+#!/usr/bin/env python
+"""Render the figure CSVs produced by `ogb-cache figures` into PNGs that
+mirror the paper's plots.  Analysis-path tooling only (never on the Rust
+request path).
+
+Usage:  python python/plot_results.py [results_dir] [out_dir]
+"""
+
+from __future__ import annotations
+
+import csv
+import os
+import sys
+from collections import defaultdict
+
+import matplotlib
+
+matplotlib.use("Agg")
+import matplotlib.pyplot as plt  # noqa: E402
+
+
+def read_csv(path):
+    """Returns (meta dict, header list, rows list)."""
+    meta, header, rows = {}, None, []
+    with open(path) as fh:
+        for line in fh:
+            line = line.rstrip("\n")
+            if line.startswith("#"):
+                if ":" in line:
+                    k, v = line[1:].split(":", 1)
+                    meta[k.strip()] = v.strip()
+                continue
+            cells = next(csv.reader([line]))
+            if header is None:
+                header = cells
+            else:
+                rows.append(cells)
+    return meta, header, rows
+
+
+def series_by(rows, key_idx, x_idx, y_idx):
+    out = defaultdict(lambda: ([], []))
+    for r in rows:
+        xs, ys = out[r[key_idx]]
+        xs.append(float(r[x_idx]))
+        ys.append(float(r[y_idx]))
+    return out
+
+
+def save(fig, out_dir, name):
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, name)
+    fig.savefig(path, dpi=130, bbox_inches="tight")
+    plt.close(fig)
+    print(f"wrote {path}")
+
+
+def plot_hit_ratio_csv(path, out_dir, name, y_col="cumulative_hit_ratio", title=""):
+    meta, header, rows = read_csv(path)
+    idx = {h: i for i, h in enumerate(header)}
+    fig, ax = plt.subplots(figsize=(6, 3.4))
+    for policy, (xs, ys) in series_by(rows, idx["policy"], idx["window_end"], idx[y_col]).items():
+        ax.plot(xs, ys, label=policy, lw=1.4)
+    ax.set_xlabel("requests")
+    ax.set_ylabel(y_col.replace("_", " "))
+    ax.set_title(title or meta.get("experiment", ""), fontsize=10)
+    ax.legend(fontsize=7, ncol=2)
+    ax.grid(alpha=0.3)
+    save(fig, out_dir, name)
+
+
+def plot_fig10(path, out_dir):
+    meta, header, rows = read_csv(path)
+    idx = {h: i for i, h in enumerate(header)}
+    fig, ax = plt.subplots(figsize=(5, 3.4))
+    for trace, (xs, ys) in series_by(rows, idx["trace"], idx["batch"], idx["hit_ratio"]).items():
+        ax.plot(xs, ys, "o-", label=trace)
+    ax.set_xscale("log")
+    ax.set_xlabel("batch size B")
+    ax.set_ylabel("hit ratio")
+    ax.set_title("Fig 10 — fractional OGB vs batch size", fontsize=10)
+    ax.legend()
+    ax.grid(alpha=0.3)
+    save(fig, out_dir, "fig10_batch_sweep.png")
+
+
+def plot_fig11(results, out_dir):
+    for fname, xcol, ycol, logx, title in [
+        ("fig11/lifetime.csv", "lifetime", "cumulative_max_hit_ratio", True, "Fig 11 left — lifetime vs max hit share"),
+        ("fig11/reuse_cdf.csv", "mean_reuse_distance", "cdf", True, "Fig 11 right — reuse distance CDF"),
+    ]:
+        path = os.path.join(results, fname)
+        if not os.path.exists(path):
+            continue
+        meta, header, rows = read_csv(path)
+        idx = {h: i for i, h in enumerate(header)}
+        fig, ax = plt.subplots(figsize=(5, 3.4))
+        for trace, (xs, ys) in series_by(rows, idx["trace"], idx[xcol], idx[ycol]).items():
+            ax.plot(xs, ys, label=trace)
+        if logx:
+            ax.set_xscale("log")
+        ax.set_xlabel(xcol.replace("_", " "))
+        ax.set_ylabel(ycol.replace("_", " "))
+        ax.set_title(title, fontsize=10)
+        ax.legend()
+        ax.grid(alpha=0.3)
+        save(fig, out_dir, os.path.basename(fname).replace(".csv", ".png"))
+
+
+def plot_regret(results, out_dir):
+    path = os.path.join(results, "regret/series.csv")
+    if not os.path.exists(path):
+        return
+    meta, header, rows = read_csv(path)
+    idx = {h: i for i, h in enumerate(header)}
+    fig, ax = plt.subplots(figsize=(5.5, 3.4))
+    groups = defaultdict(lambda: ([], []))
+    bound = ([], [])
+    for r in rows:
+        key = f'{r[idx["policy"]]} (B={r[idx["b"]]})'
+        groups[key][0].append(float(r[idx["t"]]))
+        groups[key][1].append(max(float(r[idx["regret"]]), 1e-3))
+        if r[idx["policy"]] == "OGB" and r[idx["b"]] == "1":
+            bound[0].append(float(r[idx["t"]]))
+            bound[1].append(float(r[idx["theory_bound"]]))
+    for key, (xs, ys) in groups.items():
+        ax.plot(xs, ys, label=key, lw=1.3)
+    ax.plot(bound[0], bound[1], "k--", label="Thm 3.1 bound (B=1)", lw=1)
+    ax.set_xscale("log")
+    ax.set_yscale("log")
+    ax.set_xlabel("t")
+    ax.set_ylabel("regret $R_t$")
+    ax.set_title("Regret vs Theorem 3.1 bound (adversarial)", fontsize=10)
+    ax.legend(fontsize=7)
+    ax.grid(alpha=0.3)
+    save(fig, out_dir, "regret.png")
+
+
+def main():
+    results = sys.argv[1] if len(sys.argv) > 1 else "results"
+    out_dir = sys.argv[2] if len(sys.argv) > 2 else os.path.join(results, "plots")
+    if not os.path.isdir(results):
+        sys.exit(f"no results dir at {results}; run `ogb-cache figures --id all` first")
+
+    simple = {
+        "fig2/adversarial.csv": ("fig2_adversarial.png", "cumulative_hit_ratio", "Fig 2 — adversarial trace"),
+        "fig3/sensitivity_short.csv": ("fig3_sensitivity.png", "cumulative_hit_ratio", "Fig 3 — eta/zeta sensitivity (short)"),
+        "fig4/long_main.csv": ("fig4_long.png", "cumulative_hit_ratio", "Fig 4 — long cdn-like trace"),
+        "fig7/ms-ex.csv": ("fig7_msex.png", "window_hit_ratio", "Fig 7 — ms-ex-like (windowed)"),
+        "fig7/systor.csv": ("fig7_systor.png", "window_hit_ratio", "Fig 7 — systor-like (windowed)"),
+        "fig8/cdn.csv": ("fig8_cdn.png", "window_hit_ratio", "Fig 8 — cdn-like (windowed)"),
+        "fig8/twitter.csv": ("fig8_twitter.png", "window_hit_ratio", "Fig 8 — twitter-like (windowed)"),
+    }
+    for rel, (png, ycol, title) in simple.items():
+        path = os.path.join(results, rel)
+        if os.path.exists(path):
+            plot_hit_ratio_csv(path, out_dir, png, y_col=ycol, title=title)
+    p10 = os.path.join(results, "fig10/batch_sweep.csv")
+    if os.path.exists(p10):
+        plot_fig10(p10, out_dir)
+    plot_fig11(results, out_dir)
+    plot_regret(results, out_dir)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

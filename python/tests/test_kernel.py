@@ -1,0 +1,198 @@
+"""L1 correctness: Pallas capped-simplex kernel vs the exact oracles.
+
+The kernel is the CORE numeric building block the Rust runtime executes via
+the AOT artifacts, so this file is the primary correctness signal for the
+whole dense path.  Hypothesis sweeps shapes, capacities and input
+distributions; fixed tests nail the paper-relevant corner cases from §4
+(requested component hitting the cap, components driven to zero).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.capped_simplex import capped_simplex_proj
+from compile.kernels.ref import (
+    capped_simplex_proj_np,
+    capped_simplex_proj_ref,
+    lam_exact_np,
+)
+
+ATOL = 5e-5  # f32 kernel vs f64 oracle
+
+
+def _feasible(f: np.ndarray, c: float, atol=1e-3):
+    assert f.min() >= -1e-6, f"negative component {f.min()}"
+    assert f.max() <= 1.0 + 1e-6, f"component above cap {f.max()}"
+    assert abs(f.sum() - c) < atol * max(1.0, c), f"sum {f.sum()} != {c}"
+
+
+# ---------------------------------------------------------------- fixed cases
+
+@pytest.mark.parametrize(
+    "n,c",
+    [(8, 2.0), (100, 25.0), (1000, 250.0), (1024, 51.0), (2048, 102.0),
+     (2049, 102.0), (4097, 205.0), (130, 129.0)],
+)
+def test_matches_exact_oracle(n, c):
+    rng = np.random.default_rng(n)
+    y = rng.uniform(0.0, 1.5, n).astype(np.float32)
+    f_k = np.asarray(capped_simplex_proj(jnp.asarray(y), c))
+    f_o = capped_simplex_proj_np(y, c)
+    _feasible(f_k, c)
+    np.testing.assert_allclose(f_k, f_o, atol=ATOL)
+
+
+def test_projection_of_feasible_point_is_identity():
+    rng = np.random.default_rng(7)
+    f = rng.dirichlet(np.ones(512)) * 40.0
+    f = np.minimum(f, 1.0)
+    c = float(f.sum())
+    out = np.asarray(capped_simplex_proj(jnp.asarray(f, jnp.float32), c))
+    np.testing.assert_allclose(out, f.astype(np.float32), atol=ATOL)
+
+
+def test_single_component_perturbation_uniform_decrease():
+    """Paper §4: after a one-hot bump of eta, every positive component drops
+    by the same rho = eta / |M_p| (no corner case)."""
+    n, c, eta = 64, 16.0, 0.01
+    f = np.full(n, c / n, dtype=np.float64)  # all interior, 0.25 each
+    y = f.copy()
+    y[3] += eta
+    out = np.asarray(capped_simplex_proj(jnp.asarray(y, jnp.float32), c), np.float64)
+    rho = eta / n
+    expect = f - rho
+    expect[3] = f[3] + eta - rho
+    np.testing.assert_allclose(out, expect, atol=ATOL)
+
+
+def test_requested_component_capped_at_one():
+    """Corner case 1 of §4: the requested component would exceed 1."""
+    n, c = 16, 4.0
+    f = np.full(n, c / n)
+    f[0] = 0.999
+    f = f * (c / f.sum())  # refeasible-ish
+    f = capped_simplex_proj_np(f, c)
+    y = f.copy()
+    y[0] += 0.5
+    out = np.asarray(capped_simplex_proj(jnp.asarray(y, jnp.float32), c))
+    _feasible(out, c)
+    assert out[0] <= 1.0 + 1e-6
+    np.testing.assert_allclose(out, capped_simplex_proj_np(y, c), atol=ATOL)
+
+
+def test_components_driven_to_zero():
+    """Corner case 2 of §4: tiny components are zeroed by the excess."""
+    n, c = 32, 8.0
+    # Hand-built feasible state with two genuinely tiny components: the
+    # excess rho ~ 0.5/32 = 0.0156 will push them below zero.
+    f = np.full(n, (c - 2e-3) / (n - 2))
+    f[10] = 1e-3
+    f[11] = 1e-3
+    assert abs(f.sum() - c) < 1e-9
+    y = f.copy()
+    y[0] += 0.5
+    out = np.asarray(capped_simplex_proj(jnp.asarray(y, jnp.float32), c))
+    oracle = capped_simplex_proj_np(y, c)
+    _feasible(out, c)
+    np.testing.assert_allclose(out, oracle, atol=ATOL)
+    assert oracle[10] == 0.0 and out[10] <= ATOL
+
+
+def test_all_mass_on_few_items():
+    n, c = 256, 3.0
+    y = np.zeros(n, np.float32)
+    y[:5] = 10.0
+    out = np.asarray(capped_simplex_proj(jnp.asarray(y), c))
+    _feasible(out, c)
+    np.testing.assert_allclose(out[:5], 0.6, atol=ATOL)
+    np.testing.assert_allclose(out[5:], 0.0, atol=ATOL)
+
+
+def test_capacity_equals_catalog():
+    n = 128
+    y = np.random.default_rng(1).uniform(0, 2, n).astype(np.float32)
+    out = np.asarray(capped_simplex_proj(jnp.asarray(y), float(n)))
+    np.testing.assert_allclose(out, 1.0, atol=ATOL)
+
+
+def test_block_size_invariance():
+    n, c = 4096, 300.0
+    y = np.random.default_rng(2).uniform(0, 1.2, n).astype(np.float32)
+    outs = [
+        np.asarray(capped_simplex_proj(jnp.asarray(y), c, block=b))
+        for b in (256, 1024, 2048, 8192)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=1e-6)
+
+
+def test_float64_interpret():
+    with jax.experimental.enable_x64():
+        n, c = 1000, 100.0
+        y = np.random.default_rng(3).uniform(0, 1.2, n)
+        out = np.asarray(
+            capped_simplex_proj(jnp.asarray(y, jnp.float64), jnp.asarray(c, jnp.float64), n_iters=64)
+        )
+        np.testing.assert_allclose(out, capped_simplex_proj_np(y, c), atol=1e-9)
+
+
+# ------------------------------------------------------------- property sweep
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=3000),
+    cap_frac=st.floats(min_value=0.01, max_value=0.99),
+    scale=st.floats(min_value=0.1, max_value=5.0),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_property_matches_oracle(n, cap_frac, scale, seed):
+    c = max(1.0, round(cap_frac * n))
+    rng = np.random.default_rng(seed)
+    y = (rng.uniform(0.0, scale, n)).astype(np.float32)
+    f_k = np.asarray(capped_simplex_proj(jnp.asarray(y), float(c)))
+    f_o = capped_simplex_proj_np(y, float(c))
+    _feasible(f_k, c, atol=2e-3)
+    np.testing.assert_allclose(f_k, f_o, atol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=8, max_value=1024),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_property_ogb_shape_streams(n, seed):
+    """Simulate a short OGB_cl stream: f stays feasible through repeated
+    one-hot bumps + projections (the exact request-path usage)."""
+    rng = np.random.default_rng(seed)
+    c = max(1.0, n // 4)
+    eta = float(np.sqrt(c * (1 - c / n) / 64))
+    f = np.full(n, c / n, dtype=np.float32)
+    for _ in range(8):
+        j = rng.integers(n)
+        y = f.copy()
+        y[j] += eta
+        f = np.asarray(capped_simplex_proj(jnp.asarray(y), float(c)))
+        _feasible(f, c, atol=2e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31))
+def test_property_jnp_ref_equals_np_oracle(seed):
+    """The traceable jnp bisection reference itself matches the exact oracle
+    (it is used as the in-graph reference for the model tests)."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(4, 2000))
+    c = float(max(1, n // 5))
+    y = rng.uniform(0, 2, n)
+    with jax.experimental.enable_x64():
+        f_ref = np.asarray(capped_simplex_proj_ref(jnp.asarray(y, jnp.float64), c, n_iters=80))
+    np.testing.assert_allclose(f_ref, capped_simplex_proj_np(y, c), atol=1e-8)
+
+
+def test_lam_exact_breakpoints():
+    y = np.array([0.5, 0.5, 0.5, 0.5])
+    lam = lam_exact_np(y, 2.0)
+    np.testing.assert_allclose(np.clip(y - lam, 0, 1).sum(), 2.0, atol=1e-12)

@@ -1,0 +1,126 @@
+"""L2 correctness: the fused ogb_step graph vs references, shapes, and the
+regret-relevant invariants of the update rule."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import capped_simplex_proj_np, ogb_step_ref
+
+ATOL = 5e-5
+
+
+def _theory_eta(c, n, t, b=1):
+    return float(np.sqrt(c * (1 - c / n) / (t * b)))
+
+
+def _rand_state(rng, n, c):
+    f = rng.uniform(0, 1, n)
+    return capped_simplex_proj_np(f * c / f.sum(), c).astype(np.float32)
+
+
+def test_step_matches_reference():
+    rng = np.random.default_rng(0)
+    n, c = 512, 64.0
+    f = _rand_state(rng, n, c)
+    counts = rng.poisson(0.2, n).astype(np.float32)
+    eta = jnp.asarray(0.05, jnp.float32)
+    f2, reward = model.ogb_step(jnp.asarray(f), jnp.asarray(counts), eta, jnp.asarray(c, jnp.float32))
+    f2_ref, reward_ref = ogb_step_ref(f, counts, 0.05, c)
+    np.testing.assert_allclose(np.asarray(f2), np.asarray(f2_ref), atol=ATOL)
+    np.testing.assert_allclose(float(reward), float(reward_ref), rtol=1e-5)
+
+
+def test_reward_uses_pre_update_state():
+    n, c = 64, 8.0
+    f = np.zeros(n, np.float32)
+    f[:8] = 1.0
+    counts = np.zeros(n, np.float32)
+    counts[0] = 3.0   # cached: contributes 3 * 1.0
+    counts[20] = 5.0  # not cached: contributes 0
+    _, reward = model.ogb_step(
+        jnp.asarray(f), jnp.asarray(counts), jnp.asarray(0.1, jnp.float32), jnp.asarray(c, jnp.float32)
+    )
+    assert float(reward) == pytest.approx(3.0, abs=1e-6)
+
+
+def test_zero_eta_is_projection_identity():
+    rng = np.random.default_rng(1)
+    n, c = 256, 32.0
+    f = _rand_state(rng, n, c)
+    counts = rng.poisson(1.0, n).astype(np.float32)
+    f2, _ = model.ogb_step(
+        jnp.asarray(f), jnp.asarray(counts), jnp.asarray(0.0, jnp.float32), jnp.asarray(c, jnp.float32)
+    )
+    np.testing.assert_allclose(np.asarray(f2), f, atol=ATOL)
+
+
+def test_empty_batch_keeps_state():
+    rng = np.random.default_rng(2)
+    n, c = 128, 16.0
+    f = _rand_state(rng, n, c)
+    f2, reward = model.ogb_step(
+        jnp.asarray(f), jnp.zeros(n, jnp.float32), jnp.asarray(0.3, jnp.float32), jnp.asarray(c, jnp.float32)
+    )
+    np.testing.assert_allclose(np.asarray(f2), f, atol=ATOL)
+    assert float(reward) == 0.0
+
+
+def test_requested_items_gain_probability():
+    rng = np.random.default_rng(3)
+    n, c = 200, 20.0
+    f = _rand_state(rng, n, c)
+    counts = np.zeros(n, np.float32)
+    j = int(np.argmin(f))
+    counts[j] = 10.0
+    eta = _theory_eta(c, n, 1000)
+    f2, _ = model.ogb_step(
+        jnp.asarray(f), jnp.asarray(counts), jnp.asarray(eta, jnp.float32), jnp.asarray(c, jnp.float32)
+    )
+    assert float(f2[j]) > float(f[j])
+    # mass conservation
+    assert float(jnp.sum(f2)) == pytest.approx(c, abs=1e-2)
+
+
+def test_proj_entry_point():
+    rng = np.random.default_rng(4)
+    y = rng.uniform(0, 1.5, 300).astype(np.float32)
+    f = model.proj(jnp.asarray(y), jnp.asarray(40.0, jnp.float32))
+    np.testing.assert_allclose(np.asarray(f), capped_simplex_proj_np(y, 40.0), atol=ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([64, 257, 1024]),
+    b=st.integers(min_value=1, max_value=200),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_property_step_feasibility_and_monotone_reward(n, b, seed):
+    """After any batch, the state stays in F; rewarding items' probability
+    never collectively decreases more than the excess redistribution."""
+    rng = np.random.default_rng(seed)
+    c = max(1.0, n // 8)
+    f = _rand_state(rng, n, c)
+    items = rng.integers(0, n, b)
+    counts = np.bincount(items, minlength=n).astype(np.float32)
+    eta = _theory_eta(c, n, 512, 1)
+    f2, reward = model.ogb_step(
+        jnp.asarray(f), jnp.asarray(counts), jnp.asarray(eta, jnp.float32), jnp.asarray(c, jnp.float32)
+    )
+    f2 = np.asarray(f2)
+    assert f2.min() >= -1e-5 and f2.max() <= 1 + 1e-5
+    assert abs(f2.sum() - c) < 2e-3 * max(1.0, c)
+    assert float(reward) == pytest.approx(float(counts @ f), rel=1e-4, abs=1e-4)
+
+
+def test_jit_cache_stability_across_shapes():
+    """Lowering for several N must not cross-contaminate (separate HLO per
+    shape, as the AOT registry assumes)."""
+    for n in (64, 128):
+        f = jnp.full((n,), 8.0 / n, jnp.float32)
+        counts = jnp.zeros((n,), jnp.float32)
+        out, _ = model.ogb_step(f, counts, jnp.asarray(0.1, jnp.float32), jnp.asarray(8.0, jnp.float32))
+        assert out.shape == (n,)

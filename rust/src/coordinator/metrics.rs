@@ -1,0 +1,143 @@
+//! Service metrics: lock-free counters updated by shard threads, plus
+//! per-shard latency histograms, snapshot-able while the server runs.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::stats::LatencyHistogram;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub hits: AtomicU64,
+    pub evictions: AtomicU64,
+    pub batch_updates: AtomicU64,
+    pub rejected: AtomicU64,
+    latency: Mutex<LatencyHistogram>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn record_request(&self, hit: bool, latency_ns: u64) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        if hit {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        // Histogram under a short uncontended lock (one writer per shard);
+        // contention is avoided by giving each shard its own Metrics and
+        // merging at snapshot time.
+        self.latency.lock().unwrap().record_ns(latency_ns);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let h = self.latency.lock().unwrap().clone();
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            hits: self.hits.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            batch_updates: self.batch_updates.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            latency: h,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub hits: u64,
+    pub evictions: u64,
+    pub batch_updates: u64,
+    pub rejected: u64,
+    pub latency: LatencyHistogram,
+}
+
+impl MetricsSnapshot {
+    pub fn hit_ratio(&self) -> f64 {
+        self.hits as f64 / self.requests.max(1) as f64
+    }
+
+    pub fn merge(mut snaps: Vec<MetricsSnapshot>) -> MetricsSnapshot {
+        let mut out = snaps.pop().expect("at least one shard");
+        for s in snaps {
+            out.requests += s.requests;
+            out.hits += s.hits;
+            out.evictions += s.evictions;
+            out.batch_updates += s.batch_updates;
+            out.rejected += s.rejected;
+            out.latency.merge(&s.latency);
+        }
+        out
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} hit_ratio={:.4} evictions={} batch_updates={} rejected={} p50={}ns p99={}ns max={}ns",
+            self.requests,
+            self.hit_ratio(),
+            self.evictions,
+            self.batch_updates,
+            self.rejected,
+            self.latency.percentile_ns(50.0),
+            self.latency.percentile_ns(99.0),
+            self.latency.max_ns(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_snapshot() {
+        let m = Metrics::new();
+        m.record_request(true, 100);
+        m.record_request(false, 200);
+        m.record_request(true, 300);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.hits, 2);
+        assert!((s.hit_ratio() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.latency.count(), 3);
+    }
+
+    #[test]
+    fn merge_across_shards() {
+        let a = Metrics::new();
+        let b = Metrics::new();
+        a.record_request(true, 50);
+        b.record_request(false, 150);
+        b.record_request(false, 250);
+        let merged = MetricsSnapshot::merge(vec![a.snapshot(), b.snapshot()]);
+        assert_eq!(merged.requests, 3);
+        assert_eq!(merged.hits, 1);
+        assert_eq!(merged.latency.count(), 3);
+        assert!(!merged.report().is_empty());
+    }
+
+    #[test]
+    fn concurrent_updates() {
+        use std::sync::Arc;
+        let m = Arc::new(Metrics::new());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..10_000 {
+                    m.record_request(i % 2 == 0, i);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = m.snapshot();
+        assert_eq!(s.requests, 40_000);
+        assert_eq!(s.hits, 20_000);
+    }
+}

@@ -1,0 +1,24 @@
+//! Deployable cache-service coordinator built around the OGB policy —
+//! the L3 "system" wrapper (router → shards → batcher → metrics), shaped
+//! like a production cache front (cf. vllm-project/router):
+//!
+//! * [`router`]  — stable hash routing of keys to shard workers;
+//! * [`shard`]   — one OS thread per shard owning an OGB instance and an
+//!   (optional) value store; requests arrive over bounded channels
+//!   (backpressure by construction);
+//! * [`metrics`] — lock-free hit/miss counters + log-bucketed latency
+//!   histograms, snapshot-able while running;
+//! * [`server`]  — lifecycle: spawn, client handles, drain, join.
+//!
+//! The OGB batch parameter B maps naturally onto the shard request loop:
+//! each shard refreshes its sampled cache every B requests (Algorithm 3),
+//! amortizing update cost exactly as §2.1 motivates.
+
+pub mod metrics;
+pub mod router;
+pub mod server;
+pub mod shard;
+
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use router::Router;
+pub use server::{CacheClient, CacheServer, ServerConfig};

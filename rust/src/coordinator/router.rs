@@ -1,0 +1,96 @@
+//! Key → shard routing.
+//!
+//! Stable hash routing: shard = h(key) mod S, with a salted high-quality
+//! mixer so adversarial key patterns cannot skew shard load.  A routing
+//! epoch allows controlled re-sharding (all keys move deterministically to
+//! the new layout; per-key stability across epochs is not a goal — the
+//! cache warms back up via the policy itself).
+
+use crate::util::fxhash::hash2;
+
+#[derive(Debug, Clone)]
+pub struct Router {
+    shards: usize,
+    salt: u64,
+    epoch: u64,
+}
+
+impl Router {
+    pub fn new(shards: usize, salt: u64) -> Self {
+        assert!(shards > 0);
+        Self {
+            shards,
+            salt,
+            epoch: 0,
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    #[inline]
+    pub fn route(&self, key: u64) -> usize {
+        (hash2(self.salt ^ self.epoch, key) % self.shards as u64) as usize
+    }
+
+    /// Advance the routing epoch (re-shard).
+    pub fn advance_epoch(&mut self) {
+        self.epoch += 1;
+    }
+
+    /// Split a catalog across shards: the *expected* number of keys routed
+    /// to each shard, used to size per-shard capacity.
+    pub fn shard_catalog_size(&self, catalog: usize, shard: usize) -> usize {
+        // balanced split with remainder spread over the first shards
+        let base = catalog / self.shards;
+        let extra = usize::from(shard < catalog % self.shards);
+        base + extra
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_in_range() {
+        let r = Router::new(8, 42);
+        for k in 0..1000u64 {
+            let s = r.route(k);
+            assert!(s < 8);
+            assert_eq!(s, r.route(k));
+        }
+    }
+
+    #[test]
+    fn load_is_balanced() {
+        let r = Router::new(16, 7);
+        let mut counts = [0u32; 16];
+        for k in 0..160_000u64 {
+            counts[r.route(k)] += 1;
+        }
+        for &c in &counts {
+            assert!(
+                (c as f64 - 10_000.0).abs() < 500.0,
+                "shard load skewed: {c}"
+            );
+        }
+    }
+
+    #[test]
+    fn epoch_remaps() {
+        let mut r = Router::new(4, 3);
+        let before: Vec<usize> = (0..100u64).map(|k| r.route(k)).collect();
+        r.advance_epoch();
+        let after: Vec<usize> = (0..100u64).map(|k| r.route(k)).collect();
+        assert_ne!(before, after);
+    }
+
+    #[test]
+    fn catalog_split_sums() {
+        let r = Router::new(3, 1);
+        let total: usize = (0..3).map(|s| r.shard_catalog_size(1000, s)).sum();
+        assert_eq!(total, 1000);
+    }
+}

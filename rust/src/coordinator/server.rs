@@ -1,0 +1,296 @@
+//! Cache server lifecycle: spawn shard workers, hand out client handles,
+//! drain and join.  Bounded request channels give backpressure: when a
+//! shard falls behind, `try_get` rejects (counted in metrics) instead of
+//! growing an unbounded queue.
+
+use std::sync::mpsc::{self, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::router::Router;
+use super::shard::{run_shard, ShardConfig, ShardMsg, ShardRequest};
+
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub catalog: usize,
+    /// total cache capacity across shards (soft, E[items] = capacity)
+    pub capacity: usize,
+    pub shards: usize,
+    /// OGB batch size per shard
+    pub batch: usize,
+    /// expected horizon (sets the theoretical eta)
+    pub horizon: usize,
+    pub queue_depth: usize,
+    pub seed: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            catalog: 100_000,
+            capacity: 5_000,
+            shards: 4,
+            batch: 64,
+            horizon: 10_000_000,
+            queue_depth: 1024,
+            seed: 0xCAFE,
+        }
+    }
+}
+
+pub struct CacheServer {
+    router: Router,
+    senders: Vec<SyncSender<ShardMsg>>,
+    workers: Vec<JoinHandle<()>>,
+    metrics: Vec<Arc<Metrics>>,
+    cfg: ServerConfig,
+}
+
+/// Cloneable client handle.
+#[derive(Clone)]
+pub struct CacheClient {
+    router: Router,
+    senders: Vec<SyncSender<ShardMsg>>,
+    catalog: usize,
+    shards: usize,
+}
+
+impl CacheServer {
+    pub fn start(cfg: ServerConfig) -> Result<Self> {
+        anyhow::ensure!(cfg.shards > 0 && cfg.capacity > 0 && cfg.catalog > cfg.capacity);
+        let router = Router::new(cfg.shards, cfg.seed);
+        let mut senders = Vec::with_capacity(cfg.shards);
+        let mut workers = Vec::with_capacity(cfg.shards);
+        let mut metrics = Vec::with_capacity(cfg.shards);
+        for shard_id in 0..cfg.shards {
+            let (tx, rx) = mpsc::sync_channel::<ShardMsg>(cfg.queue_depth);
+            let m = Arc::new(Metrics::new());
+            // Each shard handles ~catalog/S keys with ~capacity/S budget;
+            // eta follows Theorem 3.1 on the shard-local horizon.
+            let local_catalog = router.shard_catalog_size(cfg.catalog, shard_id).max(2);
+            let local_capacity = (cfg.capacity as f64 / cfg.shards as f64).max(1.0);
+            let local_horizon = (cfg.horizon / cfg.shards).max(1);
+            let eta = crate::theory_eta(
+                local_capacity,
+                local_catalog as f64,
+                local_horizon as f64,
+                cfg.batch as f64,
+            );
+            let scfg = ShardConfig {
+                shard_id,
+                local_catalog,
+                capacity: local_capacity,
+                eta,
+                batch: cfg.batch,
+                seed: cfg.seed,
+            };
+            let m2 = m.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("ogb-shard-{shard_id}"))
+                    .spawn(move || run_shard(scfg, rx, m2))?,
+            );
+            senders.push(tx);
+            metrics.push(m);
+        }
+        Ok(Self {
+            router,
+            senders,
+            workers,
+            metrics,
+            cfg,
+        })
+    }
+
+    pub fn client(&self) -> CacheClient {
+        CacheClient {
+            router: self.router.clone(),
+            senders: self.senders.clone(),
+            catalog: self.cfg.catalog,
+            shards: self.cfg.shards,
+        }
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot::merge(self.metrics.iter().map(|m| m.snapshot()).collect())
+    }
+
+    /// Ask every shard to redraw its sampler's permanent random numbers.
+    pub fn redraw_samplers(&self) {
+        for tx in &self.senders {
+            let _ = tx.send(ShardMsg::Redraw);
+        }
+    }
+
+    /// Drain queues, stop workers, return the final metrics.
+    pub fn shutdown(self) -> MetricsSnapshot {
+        for tx in &self.senders {
+            let _ = tx.send(ShardMsg::Shutdown);
+        }
+        drop(self.senders);
+        for w in self.workers {
+            let _ = w.join();
+        }
+        MetricsSnapshot::merge(self.metrics.iter().map(|m| m.snapshot()).collect())
+    }
+
+    fn reject(&self) {
+        // rejected requests are recorded on shard 0's metrics
+        self.metrics[0]
+            .rejected
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// Fire-and-forget enqueue with backpressure; returns false if the
+    /// shard queue is full (request rejected).
+    pub fn try_get(&self, key: u64) -> bool {
+        let shard = self.router.route(key);
+        let local = self.local_id(key);
+        match self.senders[shard].try_send(ShardMsg::Request(ShardRequest {
+            local_item: local,
+            enqueued: Instant::now(),
+            reply: None,
+        })) {
+            Ok(()) => true,
+            Err(TrySendError::Full(_)) => {
+                self.reject();
+                false
+            }
+            Err(TrySendError::Disconnected(_)) => false,
+        }
+    }
+
+    /// Blocking enqueue (waits when the queue is full).
+    pub fn get_nowait(&self, key: u64) {
+        let shard = self.router.route(key);
+        let local = self.local_id(key);
+        let _ = self.senders[shard].send(ShardMsg::Request(ShardRequest {
+            local_item: local,
+            enqueued: Instant::now(),
+            reply: None,
+        }));
+    }
+
+    #[inline]
+    fn local_id(&self, key: u64) -> u64 {
+        // dense shard-local id: keys are striped across shards
+        key / self.cfg.shards as u64
+    }
+}
+
+impl CacheClient {
+    /// Synchronous lookup: true = hit. One reply channel per call-site
+    /// would be wasteful; callers in benches keep a reusable channel via
+    /// [`CacheClient::get_with`].
+    pub fn get(&self, key: u64) -> bool {
+        let (tx, rx) = mpsc::channel();
+        self.get_with(key, &tx);
+        rx.recv().unwrap_or(false)
+    }
+
+    /// Synchronous lookup reusing the caller's reply channel.
+    pub fn get_with(&self, key: u64, reply: &mpsc::Sender<bool>) {
+        let shard = self.router.route(key % self.catalog as u64);
+        let local = (key % self.catalog as u64) / self.shards as u64;
+        let _ = self.senders[shard].send(ShardMsg::Request(ShardRequest {
+            local_item: local,
+            enqueued: Instant::now(),
+            reply: Some(reply.clone()),
+        }));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::synth;
+
+    fn small_cfg() -> ServerConfig {
+        ServerConfig {
+            catalog: 10_000,
+            capacity: 500,
+            shards: 4,
+            batch: 16,
+            horizon: 200_000,
+            queue_depth: 256,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn end_to_end_hit_ratio_on_zipf() {
+        let server = CacheServer::start(small_cfg()).unwrap();
+        let t = synth::zipf(10_000, 120_000, 1.0, 3);
+        for &r in &t.requests {
+            server.get_nowait(r as u64);
+        }
+        let snap = server.shutdown();
+        assert_eq!(snap.requests, 120_000);
+        // Zipf(1.0), C/N = 5%: a learning policy lands well above C/N
+        assert!(
+            snap.hit_ratio() > 0.2,
+            "server hit ratio {:.3} too low",
+            snap.hit_ratio()
+        );
+        assert!(snap.latency.percentile_ns(50.0) > 0);
+    }
+
+    #[test]
+    fn synchronous_client_replies() {
+        let server = CacheServer::start(small_cfg()).unwrap();
+        let client = server.client();
+        let mut hits = 0;
+        for k in 0..2000u64 {
+            if client.get(k % 20) {
+                hits += 1;
+            }
+        }
+        assert!(hits > 500, "hot-set sync gets should hit ({hits})");
+        let snap = server.shutdown();
+        assert_eq!(snap.requests, 2000);
+    }
+
+    #[test]
+    fn backpressure_rejects_rather_than_grow() {
+        let mut cfg = small_cfg();
+        cfg.queue_depth = 4;
+        let server = CacheServer::start(cfg).unwrap();
+        let mut sent = 0u64;
+        let mut rejected = 0u64;
+        for k in 0..50_000u64 {
+            if server.try_get(k % 1000) {
+                sent += 1;
+            } else {
+                rejected += 1;
+            }
+        }
+        let snap = server.shutdown();
+        assert_eq!(snap.requests, sent, "every accepted request processed");
+        assert_eq!(snap.rejected, rejected, "rejections accounted");
+        assert_eq!(sent + rejected, 50_000);
+    }
+
+    #[test]
+    fn multithreaded_clients() {
+        let server = Arc::new(CacheServer::start(small_cfg()).unwrap());
+        let mut handles = Vec::new();
+        for w in 0..4u64 {
+            let s = server.clone();
+            handles.push(std::thread::spawn(move || {
+                for k in 0..20_000u64 {
+                    s.get_nowait((k.wrapping_mul(w + 1)) % 5_000);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let server = Arc::try_unwrap(server).ok().expect("sole owner");
+        let snap = server.shutdown();
+        assert_eq!(snap.requests, 80_000);
+    }
+}

@@ -1,0 +1,127 @@
+//! Shard worker: one OS thread owning an OGB policy instance for its slice
+//! of the key space.  Requests arrive over a bounded channel (backpressure)
+//! and carry their enqueue timestamp so the recorded latency covers
+//! queueing + policy work — the number a client actually observes.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::policies::{Ogb, Policy};
+
+use super::metrics::Metrics;
+
+/// A request routed to a shard.
+pub struct ShardRequest {
+    /// key already translated to the shard-local dense id
+    pub local_item: u64,
+    pub enqueued: Instant,
+    /// optional synchronous reply (true = hit)
+    pub reply: Option<Sender<bool>>,
+}
+
+/// Control messages interleaved with requests.
+pub enum ShardMsg {
+    Request(ShardRequest),
+    /// redraw the sampler's permanent random numbers (paper §5.1)
+    Redraw,
+    /// flush + stop
+    Shutdown,
+}
+
+pub struct ShardConfig {
+    pub shard_id: usize,
+    pub local_catalog: usize,
+    pub capacity: f64,
+    pub eta: f64,
+    pub batch: usize,
+    pub seed: u64,
+}
+
+/// Run the shard loop until `Shutdown` (or the channel closes).
+pub fn run_shard(cfg: ShardConfig, rx: Receiver<ShardMsg>, metrics: Arc<Metrics>) {
+    let mut policy = Ogb::new(
+        cfg.local_catalog,
+        cfg.capacity,
+        cfg.eta,
+        cfg.batch,
+        cfg.seed ^ (cfg.shard_id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    );
+    let mut last_evictions = 0u64;
+    let mut last_requests = 0u64;
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ShardMsg::Request(req) => {
+                let hit = policy.request(req.local_item) >= 1.0;
+                let lat = req.enqueued.elapsed().as_nanos().min(u128::from(u64::MAX)) as u64;
+                metrics.record_request(hit, lat);
+                last_requests += 1;
+                if last_requests % cfg.batch as u64 == 0 {
+                    metrics
+                        .batch_updates
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    let ev = policy.diag().sample_evictions;
+                    metrics
+                        .evictions
+                        .fetch_add(ev - last_evictions, std::sync::atomic::Ordering::Relaxed);
+                    last_evictions = ev;
+                }
+                if let Some(reply) = req.reply {
+                    let _ = reply.send(hit);
+                }
+            }
+            ShardMsg::Redraw => policy.redraw_sampler(),
+            ShardMsg::Shutdown => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    #[test]
+    fn shard_processes_and_replies() {
+        let (tx, rx) = mpsc::sync_channel::<ShardMsg>(64);
+        let metrics = Arc::new(Metrics::new());
+        let m2 = metrics.clone();
+        let h = std::thread::spawn(move || {
+            run_shard(
+                ShardConfig {
+                    shard_id: 0,
+                    local_catalog: 100,
+                    capacity: 20.0,
+                    eta: 0.01,
+                    batch: 4,
+                    seed: 1,
+                },
+                rx,
+                m2,
+            )
+        });
+        let (rtx, rrx) = mpsc::channel();
+        let total = 2_000u64;
+        for k in 0..total {
+            tx.send(ShardMsg::Request(ShardRequest {
+                local_item: k % 10,
+                enqueued: Instant::now(),
+                reply: Some(rtx.clone()),
+            }))
+            .unwrap();
+            let _ = rrx.recv().unwrap();
+        }
+        tx.send(ShardMsg::Shutdown).unwrap();
+        h.join().unwrap();
+        let s = metrics.snapshot();
+        assert_eq!(s.requests, total);
+        // hot 10-item set inside C=20: the policy converges to caching it
+        assert!(
+            s.hits as f64 > 0.5 * total as f64,
+            "hot set should mostly hit: {}/{}",
+            s.hits,
+            total
+        );
+        assert!(s.batch_updates >= total / 4 - 1);
+    }
+}

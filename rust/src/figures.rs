@@ -1,0 +1,629 @@
+//! Experiment harness regenerating every table and figure of the paper's
+//! evaluation (§2.2 motivation + §6), plus two additions that directly
+//! check the headline claims: `regret` (Theorem 3.1) and the complexity
+//! table (in `benches/complexity.rs`).
+//!
+//! Each experiment writes CSV series under `results/<id>/` with full
+//! provenance (seed, parameters) in the header; DESIGN.md §4 maps ids to
+//! paper figures.  `scale` shrinks trace length and catalog together so
+//! the same code runs from CI-size to paper-size.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::policies::{self, Policy};
+use crate::sim::{self, regret::regret_growth_exponent, RunConfig};
+use crate::trace::{realworld, stats, synth, Trace};
+use crate::util::csv::CsvWriter;
+
+#[derive(Debug, Clone)]
+pub struct FigOpts {
+    pub out_dir: PathBuf,
+    pub scale: f64,
+    pub seed: u64,
+}
+
+impl Default for FigOpts {
+    fn default() -> Self {
+        Self {
+            out_dir: PathBuf::from("results"),
+            scale: 1.0,
+            seed: 42,
+        }
+    }
+}
+
+pub const ALL_IDS: &[&str] = &[
+    "table1", "fig2", "fig3", "fig4", "fig7", "fig8", "fig9", "fig10", "fig11", "regret",
+];
+
+pub fn run_figure(id: &str, opts: &FigOpts) -> Result<Vec<PathBuf>> {
+    match id {
+        "table1" => table1(opts),
+        "fig2" => fig2(opts),
+        "fig3" => fig3(opts),
+        "fig4" => fig4(opts),
+        "fig7" => fig7(opts),
+        "fig8" => fig8(opts),
+        "fig9" => fig9(opts),
+        "fig10" => fig10(opts),
+        "fig11" => fig11(opts),
+        "regret" => regret(opts),
+        "all" => {
+            let mut all = Vec::new();
+            for id in ALL_IDS {
+                eprintln!("=== figure {id} ===");
+                all.extend(run_figure(id, opts)?);
+            }
+            Ok(all)
+        }
+        other => anyhow::bail!("unknown experiment id `{other}` (known: {ALL_IDS:?} or `all`)"),
+    }
+}
+
+fn scaled(base: usize, scale: f64, min: usize) -> usize {
+    ((base as f64 * scale) as usize).max(min)
+}
+
+fn meta(opts: &FigOpts, id: &str, extra: &[(&str, String)]) -> Vec<(&'static str, String)> {
+    let mut m = vec![
+        ("experiment", id.to_string()),
+        ("seed", opts.seed.to_string()),
+        ("scale", opts.scale.to_string()),
+    ];
+    for (k, v) in extra {
+        // leak is fine: experiment metadata keys are a small fixed set
+        m.push((Box::leak(k.to_string().into_boxed_str()), v.clone()));
+    }
+    m
+}
+
+/// Run a set of policies over a trace and dump windowed + cumulative
+/// hit-ratio series in one long-format CSV.
+fn run_and_dump(
+    path: &Path,
+    metas: &[(&'static str, String)],
+    trace: &Trace,
+    window: usize,
+    mut entries: Vec<(String, Box<dyn Policy>)>,
+) -> Result<PathBuf> {
+    let mut w = CsvWriter::create(
+        path,
+        metas,
+        &["policy", "window_end", "window_hit_ratio", "cumulative_hit_ratio"],
+    )?;
+    for (label, policy) in entries.iter_mut() {
+        let r = sim::run(
+            policy.as_mut(),
+            trace,
+            &RunConfig {
+                window,
+                occupancy_every: 0,
+                max_requests: 0,
+            },
+        );
+        for (k, (&wh, &ch)) in r.windowed.iter().zip(&r.cumulative).enumerate() {
+            let end = ((k + 1) * window).min(trace.len());
+            w.row_str(&[
+                label.clone(),
+                end.to_string(),
+                format!("{wh:.6}"),
+                format!("{ch:.6}"),
+            ])?;
+        }
+        eprintln!(
+            "  {label:<24} hit_ratio={:.4} throughput={:.2e} req/s",
+            r.hit_ratio(),
+            r.throughput_rps
+        );
+    }
+    w.finish()
+}
+
+// ---------------------------------------------------------------- table1
+
+/// Table 1 + Fig. 1: literature scales (static metadata from the paper)
+/// and the measured scales/statistics of our trace substitutes.
+fn table1(opts: &FigOpts) -> Result<Vec<PathBuf>> {
+    let dir = opts.out_dir.join("table1");
+    // (label, T, N, year, kind) from the paper's Table 1 / Fig. 1.
+    let lit: &[(&str, f64, f64, u32, &str)] = &[
+        ("no-regr1 (Paschos et al.)", 1.2e5, 1.0e4, 2019, "no-regret"),
+        ("no-regr2 (Bhattacharjee)", 1.0e5, 3.0e3, 2020, "no-regret"),
+        ("no-regr3 (Paria et al.)", 1.5e5, 5.0e3, 2021, "no-regret"),
+        ("no-regr4 (Mhaisen a)", 2.0e5, 1.0e4, 2022, "no-regret"),
+        ("no-regr5 (Mhaisen b)", 1.0e5, 1.0e4, 2022, "no-regret"),
+        ("no-regr6 (Si Salem)", 5.0e5, 1.0e4, 2023, "no-regret"),
+        ("ms-ex (Kavalanekar)", 4.0e7, 5.0e6, 2007, "classic"),
+        ("systor (Lee et al.)", 1.0e8, 2.0e7, 2016, "classic"),
+        ("cdn (Song et al.)", 3.5e7, 6.8e6, 2019, "classic"),
+        ("twitter (Yang et al.)", 2.0e7, 1.0e7, 2020, "classic"),
+    ];
+    let mut w = CsvWriter::create(
+        dir.join("literature.csv"),
+        &meta(opts, "table1", &[]),
+        &["label", "trace_length", "catalog_size", "year", "kind"],
+    )?;
+    for (label, t, n, year, kind) in lit {
+        w.row_str(&[
+            label.to_string(),
+            format!("{t:.0}"),
+            format!("{n:.0}"),
+            year.to_string(),
+            kind.to_string(),
+        ])?;
+    }
+    let p1 = w.finish()?;
+
+    let mut w = CsvWriter::create(
+        dir.join("our_traces.csv"),
+        &meta(opts, "table1", &[]),
+        &[
+            "trace", "t", "catalog", "distinct", "max_count", "singleton_frac", "top1pct_share",
+        ],
+    )?;
+    for name in ["cdn", "twitter", "ms-ex", "systor"] {
+        let tr = realworld::by_name(name, opts.scale, opts.seed).unwrap();
+        let s = stats::summarize(&tr);
+        w.row_str(&[
+            s.name,
+            s.t.to_string(),
+            s.catalog.to_string(),
+            s.distinct.to_string(),
+            s.max_count.to_string(),
+            format!("{:.4}", s.singleton_frac),
+            format!("{:.4}", s.top1pct_share),
+        ])?;
+        eprintln!("  summarized {name}");
+    }
+    Ok(vec![p1, w.finish()?])
+}
+
+// ---------------------------------------------------------------- fig2
+
+/// Fig. 2: adversarial round-robin trace — LRU/LFU/ARC have linear regret,
+/// OGB tracks OPT.
+fn fig2(opts: &FigOpts) -> Result<Vec<PathBuf>> {
+    let n = 1000;
+    let c = 250;
+    let rounds = scaled(1000, opts.scale, 50);
+    let trace = synth::adversarial(n, rounds, opts.seed);
+    let t = trace.len();
+    let window = (t / 50).max(1000);
+    let entries: Vec<(String, Box<dyn Policy>)> = vec![
+        ("LRU".into(), Box::new(policies::Lru::new(c))),
+        ("LFU".into(), Box::new(policies::Lfu::new(c))),
+        ("ARC".into(), Box::new(policies::ArcCache::new(c))),
+        ("FIFO".into(), Box::new(policies::Fifo::new(c))),
+        (
+            "OGB".into(),
+            Box::new(policies::Ogb::with_theory_eta(n, c as f64, t, 1, opts.seed)),
+        ),
+        (
+            "OPT".into(),
+            Box::new(policies::Opt::from_trace(&trace, c)),
+        ),
+    ];
+    let p = run_and_dump(
+        &opts.out_dir.join("fig2/adversarial.csv"),
+        &meta(
+            opts,
+            "fig2",
+            &[("n", n.to_string()), ("c", c.to_string()), ("t", t.to_string())],
+        ),
+        &trace,
+        window,
+        entries,
+    )?;
+    Ok(vec![p])
+}
+
+// ---------------------------------------------------------------- fig3
+
+/// Fig. 3: short real-world-like trace (1e5 requests, 1e4 items, C=500) —
+/// sensitivity of OGB to eta (left) and FTPL to zeta (right).
+fn fig3(opts: &FigOpts) -> Result<Vec<PathBuf>> {
+    let n = scaled(10_000, opts.scale.max(0.5), 2_000);
+    let t_len = scaled(100_000, opts.scale.max(0.5), 20_000);
+    let c = n / 20;
+    let trace = realworld::cdn_like(n, t_len, opts.seed);
+    let window = (t_len / 40).max(500);
+    let eta_theory = crate::theory_eta(c as f64, n as f64, t_len as f64, 1.0);
+    let zeta_theory = crate::ftpl_theory_zeta(c as f64, n as f64, t_len as f64);
+
+    let mut entries: Vec<(String, Box<dyn Policy>)> = vec![
+        ("LRU".into(), Box::new(policies::Lru::new(c))),
+        ("OPT".into(), Box::new(policies::Opt::from_trace(&trace, c))),
+    ];
+    for mult in [0.1, 0.5, 1.0, 5.0, 10.0] {
+        entries.push((
+            format!("OGB eta={mult}x"),
+            Box::new(policies::Ogb::new(n, c as f64, eta_theory * mult, 1, opts.seed)),
+        ));
+    }
+    for mult in [0.01, 0.1, 1.0, 10.0, 100.0] {
+        entries.push((
+            format!("FTPL zeta={mult}x"),
+            Box::new(policies::Ftpl::new(n, c, zeta_theory * mult, opts.seed)),
+        ));
+    }
+    let p = run_and_dump(
+        &opts.out_dir.join("fig3/sensitivity_short.csv"),
+        &meta(
+            opts,
+            "fig3",
+            &[
+                ("n", n.to_string()),
+                ("c", c.to_string()),
+                ("t", t_len.to_string()),
+                ("eta_theory", format!("{eta_theory:.6}")),
+                ("zeta_theory", format!("{zeta_theory:.3}")),
+            ],
+        ),
+        &trace,
+        window,
+        entries,
+    )?;
+    Ok(vec![p])
+}
+
+// ---------------------------------------------------------------- fig4
+
+/// Fig. 4: long trace — OGB vs LRU vs FTPL (left); parameter sensitivity
+/// at scale (right).
+fn fig4(opts: &FigOpts) -> Result<Vec<PathBuf>> {
+    let n = scaled(200_000, opts.scale, 20_000);
+    let t_len = scaled(2_000_000, opts.scale, 200_000);
+    let c = n / 20;
+    let trace = realworld::cdn_like(n, t_len, opts.seed);
+    let window = (t_len / 40).max(5_000);
+    let eta_theory = crate::theory_eta(c as f64, n as f64, t_len as f64, 1.0);
+    let zeta_theory = crate::ftpl_theory_zeta(c as f64, n as f64, t_len as f64);
+
+    let entries: Vec<(String, Box<dyn Policy>)> = vec![
+        ("LRU".into(), Box::new(policies::Lru::new(c))),
+        (
+            "OGB".into(),
+            Box::new(policies::Ogb::new(n, c as f64, eta_theory, 1, opts.seed)),
+        ),
+        (
+            "FTPL".into(),
+            Box::new(policies::Ftpl::new(n, c, zeta_theory, opts.seed)),
+        ),
+        ("OPT".into(), Box::new(policies::Opt::from_trace(&trace, c))),
+    ];
+    let p1 = run_and_dump(
+        &opts.out_dir.join("fig4/long_main.csv"),
+        &meta(
+            opts,
+            "fig4",
+            &[("n", n.to_string()), ("c", c.to_string()), ("t", t_len.to_string())],
+        ),
+        &trace,
+        window,
+        entries,
+    )?;
+
+    // right panel: final hit ratio vs parameter multiplier
+    let mut w = CsvWriter::create(
+        opts.out_dir.join("fig4/sensitivity_final.csv"),
+        &meta(
+            opts,
+            "fig4",
+            &[
+                ("eta_theory", format!("{eta_theory:.6}")),
+                ("zeta_theory", format!("{zeta_theory:.3}")),
+            ],
+        ),
+        &["policy", "multiplier", "hit_ratio"],
+    )?;
+    for mult in [0.1, 0.5, 1.0, 5.0, 10.0] {
+        let mut p: Box<dyn Policy> =
+            Box::new(policies::Ogb::new(n, c as f64, eta_theory * mult, 1, opts.seed));
+        let r = sim::run(p.as_mut(), &trace, &RunConfig { window, occupancy_every: 0, max_requests: 0 });
+        w.row_str(&["OGB".into(), mult.to_string(), format!("{:.6}", r.hit_ratio())])?;
+        let mut p: Box<dyn Policy> =
+            Box::new(policies::Ftpl::new(n, c, zeta_theory * mult, opts.seed));
+        let r = sim::run(p.as_mut(), &trace, &RunConfig { window, occupancy_every: 0, max_requests: 0 });
+        w.row_str(&["FTPL".into(), mult.to_string(), format!("{:.6}", r.hit_ratio())])?;
+        eprintln!("  sensitivity mult={mult} done");
+    }
+    Ok(vec![p1, w.finish()?])
+}
+
+// ---------------------------------------------------------------- fig7/8
+
+fn windowed_four_policies(opts: &FigOpts, id: &str, names: &[&str]) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    for name in names {
+        let trace = realworld::by_name(name, opts.scale, opts.seed).unwrap();
+        let n = trace.catalog;
+        let c = n / 20;
+        let t_len = trace.len();
+        let window = (t_len / 40).max(2_000);
+        let eta = crate::theory_eta(c as f64, n as f64, t_len as f64, 1.0);
+        let zeta = crate::ftpl_theory_zeta(c as f64, n as f64, t_len as f64);
+        let entries: Vec<(String, Box<dyn Policy>)> = vec![
+            ("OPT".into(), Box::new(policies::Opt::from_trace(&trace, c))),
+            ("LRU".into(), Box::new(policies::Lru::new(c))),
+            ("FTPL".into(), Box::new(policies::Ftpl::new(n, c, zeta, opts.seed))),
+            ("OGB".into(), Box::new(policies::Ogb::new(n, c as f64, eta, 1, opts.seed))),
+        ];
+        let p = run_and_dump(
+            &opts.out_dir.join(format!("{id}/{name}.csv")),
+            &meta(
+                opts,
+                id,
+                &[
+                    ("trace", trace.name.clone()),
+                    ("n", n.to_string()),
+                    ("c", c.to_string()),
+                    ("t", t_len.to_string()),
+                ],
+            ),
+            &trace,
+            window,
+            entries,
+        )?;
+        out.push(p);
+    }
+    Ok(out)
+}
+
+/// Fig. 7: windowed hit ratio on the less recent traces (ms-ex, systor).
+fn fig7(opts: &FigOpts) -> Result<Vec<PathBuf>> {
+    windowed_four_policies(opts, "fig7", &["ms-ex", "systor"])
+}
+
+/// Fig. 8: windowed hit ratio on the more recent traces (cdn, twitter).
+fn fig8(opts: &FigOpts) -> Result<Vec<PathBuf>> {
+    windowed_four_policies(opts, "fig8", &["cdn", "twitter"])
+}
+
+// ---------------------------------------------------------------- fig9
+
+/// Fig. 9: cache occupancy vs nominal C (left); removed coefficients per
+/// request (right) — OGB implementation statistics on all four traces.
+fn fig9(opts: &FigOpts) -> Result<Vec<PathBuf>> {
+    let dir = opts.out_dir.join("fig9");
+    let mut w_occ = CsvWriter::create(
+        dir.join("occupancy.csv"),
+        &meta(opts, "fig9", &[]),
+        &["trace", "normalized_time", "occupancy_pct_of_c"],
+    )?;
+    let mut w_rem = CsvWriter::create(
+        dir.join("removed.csv"),
+        &meta(opts, "fig9", &[]),
+        &["trace", "window_end", "removed_per_request"],
+    )?;
+    for name in ["cdn", "twitter", "ms-ex", "systor"] {
+        let trace = realworld::by_name(name, opts.scale, opts.seed).unwrap();
+        let n = trace.catalog;
+        let c = n / 20;
+        let t_len = trace.len();
+        let window = (t_len / 40).max(2_000);
+        let mut p = policies::Ogb::with_theory_eta(n, c as f64, t_len, 1, opts.seed);
+        let r = sim::run(
+            &mut p,
+            &trace,
+            &RunConfig {
+                window,
+                occupancy_every: (t_len / 200).max(1),
+                max_requests: 0,
+            },
+        );
+        for &(k, occ) in &r.occupancy {
+            w_occ.row_str(&[
+                name.to_string(),
+                format!("{:.4}", k as f64 / t_len as f64),
+                format!("{:.4}", 100.0 * occ / c as f64),
+            ])?;
+        }
+        for (k, &rem) in r.removed_per_req.iter().enumerate() {
+            w_rem.row_str(&[
+                name.to_string(),
+                (((k + 1) * window).min(t_len)).to_string(),
+                format!("{rem:.4}"),
+            ])?;
+        }
+        eprintln!("  fig9 {name}: occupancy CV and removals recorded");
+    }
+    Ok(vec![w_occ.finish()?, w_rem.finish()?])
+}
+
+// ---------------------------------------------------------------- fig10
+
+/// Fig. 10: fractional OGB under batched arrivals, B sweep — cdn is flat,
+/// twitter degrades from B≈100 (temporal-locality mechanism of App. B.2).
+fn fig10(opts: &FigOpts) -> Result<Vec<PathBuf>> {
+    let mut w = CsvWriter::create(
+        opts.out_dir.join("fig10/batch_sweep.csv"),
+        &meta(opts, "fig10", &[]),
+        &["trace", "batch", "batch_over_t", "hit_ratio"],
+    )?;
+    for name in ["cdn", "twitter"] {
+        let trace = realworld::by_name(name, opts.scale, opts.seed).unwrap();
+        let n = trace.catalog;
+        let c = n / 20;
+        let t_len = trace.len();
+        // The paper sweeps B in {1, 1e2, 1e3, 1e4, 1e5} on T≈2-3.5e7
+        // traces.  To keep the *relative* batching pressure (B/T) intact
+        // at any scale, the sweep is anchored to the default T=2e6 and
+        // scaled with the trace: at scale 1.0 the values match the paper's
+        // labels exactly.
+        let scale_b = |b: usize| ((b as f64 * t_len as f64 / 2_000_000.0) as usize).max(1);
+        for b in [1usize, 100, 1_000, 10_000, 100_000].map(scale_b) {
+            if b * 4 > t_len {
+                continue;
+            }
+            // eta stays at its per-request (B=1) value: OGB's probabilities
+            // advance every request regardless of B (Algorithm 1 / Eq. 4);
+            // only the materialized cache refresh is batched.  Using the
+            // Theorem 3.1 eta(B) would conflate learning-rate shrink with
+            // the temporal-locality effect this figure isolates.
+            let eta = crate::theory_eta(c as f64, n as f64, t_len as f64, 1.0);
+            let mut p = policies::FractionalOgb::new(n, c as f64, eta, b);
+            let r = sim::run(
+                &mut p,
+                &trace,
+                &RunConfig {
+                    window: t_len,
+                    occupancy_every: 0,
+                    max_requests: 0,
+                },
+            );
+            w.row_str(&[
+                name.to_string(),
+                b.to_string(),
+                format!("{:.2e}", b as f64 / t_len as f64),
+                format!("{:.6}", r.hit_ratio()),
+            ])?;
+            eprintln!("  fig10 {name} B={b}: hit={:.4}", r.hit_ratio());
+        }
+    }
+    Ok(vec![w.finish()?])
+}
+
+// ---------------------------------------------------------------- fig11
+
+/// Fig. 11: lifetime-sorted cumulative max hit ratio (left) and reuse-
+/// distance CDF (right) for cdn vs twitter.
+fn fig11(opts: &FigOpts) -> Result<Vec<PathBuf>> {
+    let dir = opts.out_dir.join("fig11");
+    let mut w_life = CsvWriter::create(
+        dir.join("lifetime.csv"),
+        &meta(opts, "fig11", &[]),
+        &["trace", "lifetime", "cumulative_max_hit_ratio"],
+    )?;
+    let mut w_reuse = CsvWriter::create(
+        dir.join("reuse_cdf.csv"),
+        &meta(opts, "fig11", &[]),
+        &["trace", "mean_reuse_distance", "cdf"],
+    )?;
+    for name in ["cdn", "twitter"] {
+        let trace = realworld::by_name(name, opts.scale, opts.seed).unwrap();
+        for (life, share) in stats::lifetime_hit_curve(&trace, 60) {
+            w_life.row_str(&[name.to_string(), format!("{life:.0}"), format!("{share:.5}")])?;
+        }
+        for (d, cdf) in stats::reuse_distance_cdf(&trace, 60) {
+            w_reuse.row_str(&[name.to_string(), format!("{d:.1}"), format!("{cdf:.5}")])?;
+        }
+        eprintln!("  fig11 {name} analyzed");
+    }
+    Ok(vec![w_life.finish()?, w_reuse.finish()?])
+}
+
+// ---------------------------------------------------------------- regret
+
+/// Theorem 3.1 check: measured regret vs the bound, growth exponents, and
+/// batch-size scaling on the adversarial trace.
+fn regret(opts: &FigOpts) -> Result<Vec<PathBuf>> {
+    let n = 1000;
+    let c = 250;
+    let rounds = scaled(1000, opts.scale, 100);
+    let trace = synth::adversarial(n, rounds, opts.seed);
+    let t_len = trace.len();
+
+    let mut w = CsvWriter::create(
+        opts.out_dir.join("regret/series.csv"),
+        &meta(
+            opts,
+            "regret",
+            &[("n", n.to_string()), ("c", c.to_string()), ("t", t_len.to_string())],
+        ),
+        &["policy", "b", "t", "regret", "avg_regret", "theory_bound"],
+    )?;
+    let mut w_exp = CsvWriter::create(
+        opts.out_dir.join("regret/exponents.csv"),
+        &meta(opts, "regret", &[]),
+        &["policy", "b", "growth_exponent"],
+    )?;
+
+    for b in [1usize, 10, 100] {
+        let mut ogb = policies::Ogb::with_theory_eta(n, c as f64, t_len, b, opts.seed);
+        let series = sim::regret_series(&mut ogb, &trace, c, b, 30);
+        for p in &series {
+            w.row_str(&[
+                "OGB".into(),
+                b.to_string(),
+                p.t.to_string(),
+                format!("{:.2}", p.regret),
+                format!("{:.6}", p.avg_regret),
+                format!("{:.2}", p.bound),
+            ])?;
+        }
+        w_exp.row_str(&[
+            "OGB".into(),
+            b.to_string(),
+            format!("{:.3}", regret_growth_exponent(&series)),
+        ])?;
+        eprintln!("  regret OGB b={b} done");
+    }
+    for (label, mut p) in [
+        ("LRU", Box::new(policies::Lru::new(c)) as Box<dyn Policy>),
+        ("LFU", Box::new(policies::Lfu::new(c))),
+        (
+            "FTPL",
+            Box::new(policies::Ftpl::new(
+                n,
+                c,
+                crate::ftpl_theory_zeta(c as f64, n as f64, t_len as f64),
+                opts.seed,
+            )),
+        ),
+    ] {
+        let series = sim::regret_series(p.as_mut(), &trace, c, 1, 30);
+        for pt in &series {
+            w.row_str(&[
+                label.into(),
+                "1".into(),
+                pt.t.to_string(),
+                format!("{:.2}", pt.regret),
+                format!("{:.6}", pt.avg_regret),
+                format!("{:.2}", pt.bound),
+            ])?;
+        }
+        w_exp.row_str(&[
+            label.into(),
+            "1".into(),
+            format!("{:.3}", regret_growth_exponent(&series)),
+        ])?;
+        eprintln!("  regret {label} done");
+    }
+    Ok(vec![w.finish()?, w_exp.finish()?])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_opts(tag: &str) -> FigOpts {
+        FigOpts {
+            out_dir: std::env::temp_dir().join(format!("ogb_fig_test_{tag}")),
+            scale: 0.01,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn every_figure_runs_at_tiny_scale() {
+        for id in ALL_IDS {
+            // fig3/fig4 clamp their own minimums; all must produce files.
+            let opts = tiny_opts(id);
+            let files = run_figure(id, &opts).unwrap_or_else(|e| panic!("{id}: {e}"));
+            assert!(!files.is_empty(), "{id} produced no files");
+            for f in &files {
+                let text = std::fs::read_to_string(f).unwrap();
+                assert!(text.lines().count() > 3, "{id}: {f:?} nearly empty");
+                assert!(text.contains("# experiment"), "{id}: missing provenance");
+            }
+            std::fs::remove_dir_all(&opts.out_dir).ok();
+        }
+    }
+
+    #[test]
+    fn unknown_id_rejected() {
+        assert!(run_figure("fig99", &tiny_opts("x")).is_err());
+    }
+}

@@ -1,0 +1,343 @@
+//! `ogb-cache` — CLI launcher for the OGB caching system.
+//!
+//! Commands:
+//!   simulate   replay a trace through a policy, report hit ratio
+//!   figures    regenerate the paper's tables/figures (CSV under results/)
+//!   serve      run the sharded cache service under synthetic load
+//!   analyze    temporal-locality analysis of a trace (App. B)
+//!   validate   three-way projection check: lazy == dense == XLA artifact
+//!   gen-trace  write a generated trace to a binary file
+
+use anyhow::Result;
+use ogb_cache::coordinator::{CacheServer, ServerConfig};
+use ogb_cache::figures::{run_figure, FigOpts};
+use ogb_cache::proj::{dense, LazySimplex};
+use ogb_cache::sim::{self, RunConfig};
+use ogb_cache::trace::{self, realworld, synth, Trace};
+use ogb_cache::util::args::{flag, opt, Cli};
+use ogb_cache::util::{logger, Xoshiro256pp};
+
+fn cli() -> Cli {
+    Cli::new("ogb-cache", "Online Gradient-Based caching with O(log N) complexity (Carra & Neglia 2024)")
+        .command(
+            "simulate",
+            "replay a trace through a policy",
+            vec![
+                opt("policy", "policy name (lru lfu fifo arc gds ftpl ogb ogb-frac ogb-classic ogb-classic-frac opt infinite)", "ogb"),
+                opt("trace", "trace name (cdn twitter ms-ex systor adversarial zipf uniform) or path to .ogbt/.txt", "cdn"),
+                opt("scale", "trace scale factor", "0.1"),
+                opt("cache-pct", "cache size as % of catalog", "5"),
+                opt("batch", "batch size B", "1"),
+                opt("window", "hit-ratio window", "100000"),
+                opt("seed", "random seed", "42"),
+                opt("csv", "optional output CSV path", ""),
+            ],
+        )
+        .command(
+            "figures",
+            "regenerate paper tables/figures",
+            vec![
+                opt("id", "experiment id (table1 fig2 fig3 fig4 fig7 fig8 fig9 fig10 fig11 regret all)", "all"),
+                opt("out", "output directory", "results"),
+                opt("scale", "trace scale factor", "0.1"),
+                opt("seed", "random seed", "42"),
+            ],
+        )
+        .command(
+            "serve",
+            "run the sharded cache service under synthetic load",
+            vec![
+                opt("catalog", "catalog size", "100000"),
+                opt("capacity", "total cache capacity", "5000"),
+                opt("shards", "shard threads", "4"),
+                opt("batch", "OGB batch size per shard", "64"),
+                opt("requests", "number of requests to drive", "1000000"),
+                opt("zipf", "workload Zipf exponent", "0.9"),
+                opt("clients", "load-generator threads", "2"),
+                opt("seed", "random seed", "42"),
+                flag("open-loop", "fire-and-forget load (throughput mode)"),
+            ],
+        )
+        .command(
+            "analyze",
+            "temporal-locality analysis of a trace (paper App. B)",
+            vec![
+                opt("trace", "trace name or file path", "twitter"),
+                opt("scale", "trace scale factor", "0.1"),
+                opt("seed", "random seed", "42"),
+            ],
+        )
+        .command(
+            "validate",
+            "three-way projection check: lazy == dense == XLA artifact",
+            vec![
+                opt("n", "catalog size (must have an artifact)", "1024"),
+                opt("steps", "request steps to validate", "2000"),
+                opt("artifacts", "artifacts directory", "artifacts"),
+                opt("seed", "random seed", "42"),
+            ],
+        )
+        .command(
+            "gen-trace",
+            "generate a trace and write it to a binary file",
+            vec![
+                opt("trace", "generator name", "cdn"),
+                opt("scale", "trace scale factor", "0.1"),
+                opt("seed", "random seed", "42"),
+                opt("out", "output path", "trace.ogbt"),
+            ],
+        )
+}
+
+fn load_trace(name: &str, scale: f64, seed: u64) -> Result<Trace> {
+    if let Some(t) = realworld::by_name(name, scale, seed) {
+        return Ok(t);
+    }
+    Ok(match name {
+        "adversarial" => synth::adversarial(1000, ((1000.0 * scale) as usize).max(50), seed),
+        "zipf" => synth::zipf(
+            ((1_000_000.0 * scale) as usize).max(1000),
+            ((10_000_000.0 * scale) as usize).max(10_000),
+            0.9,
+            seed,
+        ),
+        "uniform" => synth::uniform(
+            ((100_000.0 * scale) as usize).max(1000),
+            ((1_000_000.0 * scale) as usize).max(10_000),
+            seed,
+        ),
+        path if std::path::Path::new(path).exists() => {
+            if path.ends_with(".txt") {
+                trace::file::read_text(path)?
+            } else {
+                trace::file::read_binary(path)?
+            }
+        }
+        other => anyhow::bail!("unknown trace `{other}` and no such file"),
+    })
+}
+
+fn cmd_simulate(a: &ogb_cache::util::args::Args) -> Result<()> {
+    let scale: f64 = a.get_parse("scale", 0.1);
+    let seed: u64 = a.get_parse("seed", 42);
+    let tr = load_trace(a.get_or("trace", "cdn"), scale, seed)?;
+    let cache_pct: f64 = a.get_parse("cache-pct", 5.0);
+    let c = ((tr.catalog as f64 * cache_pct / 100.0) as usize).max(1);
+    let b: usize = a.get_parse("batch", 1);
+    let mut policy = ogb_cache::policies::by_name(
+        a.get_or("policy", "ogb"),
+        tr.catalog,
+        c,
+        tr.len(),
+        b,
+        seed,
+        Some(&tr),
+    )?;
+    let cfg = RunConfig {
+        window: a.get_parse("window", 100_000),
+        occupancy_every: 10_000,
+        max_requests: 0,
+    };
+    println!(
+        "trace={} T={} N={} (distinct {}) C={c} policy={}",
+        tr.name,
+        tr.len(),
+        tr.catalog,
+        tr.distinct(),
+        policy.name()
+    );
+    let r = sim::run(policy.as_mut(), &tr, &cfg);
+    println!(
+        "hit_ratio={:.4} total_reward={:.0} elapsed={:.2}s throughput={:.3e} req/s",
+        r.hit_ratio(),
+        r.total_reward,
+        r.elapsed_s,
+        r.throughput_rps
+    );
+    let d = policy.diag();
+    println!(
+        "diag: removed_coeffs={} sample_evictions={} rebases={} occupancy={:.1}",
+        d.removed_coeffs,
+        d.sample_evictions,
+        d.rebases,
+        policy.occupancy()
+    );
+    let csv = a.get_or("csv", "");
+    if !csv.is_empty() {
+        let mut w = ogb_cache::util::csv::CsvWriter::create(
+            csv,
+            &[
+                ("trace", tr.name.clone()),
+                ("policy", policy.name()),
+                ("seed", seed.to_string()),
+            ],
+            &["window_end", "window_hit_ratio", "cumulative_hit_ratio"],
+        )?;
+        for (k, (&wh, &ch)) in r.windowed.iter().zip(&r.cumulative).enumerate() {
+            w.row(&[(((k + 1) * cfg.window).min(tr.len())) as f64, wh, ch])?;
+        }
+        let p = w.finish()?;
+        println!("wrote {}", p.display());
+    }
+    Ok(())
+}
+
+fn cmd_serve(a: &ogb_cache::util::args::Args) -> Result<()> {
+    let cfg = ServerConfig {
+        catalog: a.get_parse("catalog", 100_000),
+        capacity: a.get_parse("capacity", 5_000),
+        shards: a.get_parse("shards", 4),
+        batch: a.get_parse("batch", 64),
+        horizon: a.get_parse("requests", 1_000_000),
+        queue_depth: 1024,
+        seed: a.get_parse("seed", 42),
+    };
+    let requests: usize = a.get_parse("requests", 1_000_000);
+    let clients: usize = a.get_parse("clients", 2);
+    let zipf_s: f64 = a.get_parse("zipf", 0.9);
+    let open_loop = a.flag("open-loop");
+    println!(
+        "serving catalog={} capacity={} shards={} batch={} clients={clients} zipf={zipf_s} open_loop={open_loop}",
+        cfg.catalog, cfg.capacity, cfg.shards, cfg.batch
+    );
+    let catalog = cfg.catalog;
+    let seed = cfg.seed;
+    let server = std::sync::Arc::new(CacheServer::start(cfg)?);
+    let start = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for w in 0..clients {
+        let s = server.clone();
+        let per_client = requests / clients;
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Xoshiro256pp::seed_from(seed ^ ((w as u64) << 32));
+            let dist = ogb_cache::util::Zipf::new(catalog as u64, zipf_s);
+            if open_loop {
+                for _ in 0..per_client {
+                    s.get_nowait(dist.sample(&mut rng));
+                }
+            } else {
+                let client = s.client();
+                let (tx, rx) = std::sync::mpsc::channel();
+                for _ in 0..per_client {
+                    client.get_with(dist.sample(&mut rng), &tx);
+                    let _ = rx.recv();
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().map_err(|_| anyhow::anyhow!("client panicked"))?;
+    }
+    let elapsed = start.elapsed().as_secs_f64();
+    let server = std::sync::Arc::try_unwrap(server)
+        .map_err(|_| anyhow::anyhow!("server still referenced"))?;
+    let snap = server.shutdown();
+    println!("{}", snap.report());
+    println!(
+        "drove {} requests in {elapsed:.2}s => {:.3e} req/s end-to-end",
+        snap.requests,
+        snap.requests as f64 / elapsed
+    );
+    Ok(())
+}
+
+fn cmd_analyze(a: &ogb_cache::util::args::Args) -> Result<()> {
+    let tr = load_trace(
+        a.get_or("trace", "twitter"),
+        a.get_parse("scale", 0.1),
+        a.get_parse("seed", 42),
+    )?;
+    let s = trace::stats::summarize(&tr);
+    println!(
+        "trace={} T={} catalog={} distinct={} max_count={} singletons={:.1}% top1%share={:.1}%",
+        s.name,
+        s.t,
+        s.catalog,
+        s.distinct,
+        s.max_count,
+        100.0 * s.singleton_frac,
+        100.0 * s.top1pct_share
+    );
+    println!("\nlifetime -> cumulative max hit ratio (Fig 11 left):");
+    for (life, share) in trace::stats::lifetime_hit_curve(&tr, 12) {
+        println!("  lifetime<={life:>12.0}  max_hit_share={share:.4}");
+    }
+    println!("\nmean reuse distance CDF (Fig 11 right):");
+    for (d, cdf) in trace::stats::reuse_distance_cdf(&tr, 12) {
+        println!("  d<={d:>12.1}  fraction_of_items={cdf:.4}");
+    }
+    Ok(())
+}
+
+fn cmd_validate(a: &ogb_cache::util::args::Args) -> Result<()> {
+    let n: usize = a.get_parse("n", 1024);
+    let steps: usize = a.get_parse("steps", 2000);
+    let seed: u64 = a.get_parse("seed", 42);
+    let dir = a.get_or("artifacts", "artifacts");
+    let reg = ogb_cache::runtime::ArtifactRegistry::open(dir)?;
+    println!("PJRT platform: {}", reg.platform());
+    let exe = reg.load_proj(n)?;
+    let c = (n / 4) as f64;
+    let eta = 0.05;
+    let mut lazy = LazySimplex::new_uniform(n, c);
+    let mut f = vec![c / n as f64; n];
+    let mut rng = Xoshiro256pp::seed_from(seed);
+    let mut max_dense = 0f64;
+    let mut max_xla = 0f64;
+    for _ in 0..steps {
+        let j = rng.next_below(n as u64);
+        // XLA artifact path (f32)
+        let mut y32: Vec<f32> = f.iter().map(|&v| v as f32).collect();
+        y32[j as usize] += eta as f32;
+        let f_xla = exe.project(&y32, c as f32)?;
+        // dense oracle + lazy
+        dense::project_single_bump(&mut f, j as usize, eta, c);
+        lazy.request(j, eta);
+        for i in 0..n {
+            max_dense = max_dense.max((lazy.prob(i as u64) - f[i]).abs());
+            max_xla = max_xla.max((f_xla[i] as f64 - f[i]).abs());
+        }
+    }
+    println!("max |lazy - dense| = {max_dense:.3e} (f64 tolerance 1e-8)");
+    println!("max |xla  - dense| = {max_xla:.3e} (f32 tolerance 5e-4)");
+    anyhow::ensure!(max_dense < 1e-8, "lazy projection diverged");
+    anyhow::ensure!(max_xla < 5e-4, "XLA artifact diverged");
+    println!("validate OK: lazy == dense == XLA artifact over {steps} steps");
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    logger::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, a) = cli().parse(&argv);
+    match cmd.as_str() {
+        "simulate" => cmd_simulate(&a),
+        "figures" => {
+            let opts = FigOpts {
+                out_dir: a.get_or("out", "results").into(),
+                scale: a.get_parse("scale", 0.1),
+                seed: a.get_parse("seed", 42),
+            };
+            let files = run_figure(a.get_or("id", "all"), &opts)?;
+            for f in files {
+                println!("wrote {}", f.display());
+            }
+            Ok(())
+        }
+        "serve" => cmd_serve(&a),
+        "analyze" => cmd_analyze(&a),
+        "validate" => cmd_validate(&a),
+        "gen-trace" => {
+            let tr = load_trace(
+                a.get_or("trace", "cdn"),
+                a.get_parse("scale", 0.1),
+                a.get_parse("seed", 42),
+            )?;
+            let out = a.get_or("out", "trace.ogbt");
+            trace::file::write_binary(&tr, out)?;
+            println!("wrote {} ({} requests, catalog {})", out, tr.len(), tr.catalog);
+            Ok(())
+        }
+        _ => unreachable!("cli() rejects unknown commands"),
+    }
+}

@@ -1,0 +1,214 @@
+//! ARC — Adaptive Replacement Cache (Megiddo & Modha, FAST '03).
+//!
+//! Balances recency (T1) and frequency (T2) with ghost lists (B1, B2) that
+//! adapt the target size `p` of T1.  Faithful implementation of the
+//! published pseudocode; O(1) per request.
+
+use super::list::DList;
+use super::Policy;
+use crate::util::FxHashMap;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Where {
+    T1,
+    T2,
+    B1,
+    B2,
+}
+
+#[derive(Debug)]
+pub struct ArcCache {
+    cap: usize,
+    p: usize, // target size of T1
+    t1: DList,
+    t2: DList,
+    b1: DList,
+    b2: DList,
+    map: FxHashMap<u64, (Where, u32)>,
+}
+
+impl ArcCache {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        Self {
+            cap,
+            p: 0,
+            t1: DList::new(),
+            t2: DList::new(),
+            b1: DList::new(),
+            b2: DList::new(),
+            map: FxHashMap::default(),
+        }
+    }
+
+    pub fn contains(&self, item: u64) -> bool {
+        matches!(self.map.get(&item), Some((Where::T1 | Where::T2, _)))
+    }
+
+    /// REPLACE(x, p): evict from T1 or T2 into the corresponding ghost list.
+    fn replace(&mut self, in_b2: bool) {
+        let t1_len = self.t1.len();
+        if t1_len > 0 && (t1_len > self.p || (in_b2 && t1_len == self.p)) {
+            let victim = self.t1.pop_back().expect("t1 non-empty");
+            let h = self.b1.push_front(victim);
+            self.map.insert(victim, (Where::B1, h));
+        } else {
+            let victim = self.t2.pop_back().expect("t2 non-empty when t1 can't evict");
+            let h = self.b2.push_front(victim);
+            self.map.insert(victim, (Where::B2, h));
+        }
+    }
+}
+
+impl Policy for ArcCache {
+    fn name(&self) -> String {
+        "ARC".into()
+    }
+
+    fn request(&mut self, item: u64) -> f64 {
+        match self.map.get(&item).copied() {
+            // Case I: hit in T1 or T2 -> move to MRU of T2.
+            Some((Where::T1, h)) => {
+                self.t1.remove(h);
+                let nh = self.t2.push_front(item);
+                self.map.insert(item, (Where::T2, nh));
+                1.0
+            }
+            Some((Where::T2, h)) => {
+                self.t2.move_front(h);
+                self.map.insert(item, (Where::T2, h));
+                1.0
+            }
+            // Case II: ghost hit in B1 -> grow p, replace, promote to T2.
+            Some((Where::B1, h)) => {
+                let delta = (self.b2.len() / self.b1.len().max(1)).max(1);
+                self.p = (self.p + delta).min(self.cap);
+                self.b1.remove(h);
+                self.replace(false);
+                let nh = self.t2.push_front(item);
+                self.map.insert(item, (Where::T2, nh));
+                0.0
+            }
+            // Case III: ghost hit in B2 -> shrink p, replace, promote to T2.
+            Some((Where::B2, h)) => {
+                let delta = (self.b1.len() / self.b2.len().max(1)).max(1);
+                self.p = self.p.saturating_sub(delta);
+                self.b2.remove(h);
+                self.replace(true);
+                let nh = self.t2.push_front(item);
+                self.map.insert(item, (Where::T2, nh));
+                0.0
+            }
+            // Case IV: full miss.
+            None => {
+                let l1 = self.t1.len() + self.b1.len();
+                let l2 = self.t2.len() + self.b2.len();
+                if l1 == self.cap {
+                    if self.t1.len() < self.cap {
+                        if let Some(victim) = self.b1.pop_back() {
+                            self.map.remove(&victim);
+                        }
+                        self.replace(false);
+                    } else {
+                        // T1 itself is at capacity: drop its LRU outright.
+                        if let Some(victim) = self.t1.pop_back() {
+                            self.map.remove(&victim);
+                        }
+                    }
+                } else if l1 < self.cap && l1 + l2 >= self.cap {
+                    if l1 + l2 == 2 * self.cap {
+                        if let Some(victim) = self.b2.pop_back() {
+                            self.map.remove(&victim);
+                        }
+                    }
+                    if self.t1.len() + self.t2.len() >= self.cap {
+                        self.replace(false);
+                    }
+                }
+                let h = self.t1.push_front(item);
+                self.map.insert(item, (Where::T1, h));
+                0.0
+            }
+        }
+    }
+
+    fn occupancy(&self) -> f64 {
+        (self.t1.len() + self.t2.len()) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policies::lru::Lru;
+    use crate::trace::synth;
+
+    #[test]
+    fn basic_hit_miss() {
+        let mut a = ArcCache::new(3);
+        assert_eq!(a.request(1), 0.0);
+        assert_eq!(a.request(1), 1.0);
+        assert_eq!(a.request(2), 0.0);
+        assert_eq!(a.request(3), 0.0);
+        assert!(a.contains(1) && a.contains(2) && a.contains(3));
+    }
+
+    #[test]
+    fn capacity_invariants_under_stress() {
+        use crate::util::Xoshiro256pp;
+        let mut rng = Xoshiro256pp::seed_from(4);
+        let cap = 16;
+        let mut a = ArcCache::new(cap);
+        for _ in 0..100_000 {
+            a.request(rng.next_below(100));
+            assert!(a.t1.len() + a.t2.len() <= cap, "cache overflow");
+            assert!(a.t1.len() + a.b1.len() <= cap, "L1 overflow");
+            assert!(
+                a.t1.len() + a.t2.len() + a.b1.len() + a.b2.len() <= 2 * cap,
+                "directory overflow"
+            );
+            assert!(a.p <= cap);
+        }
+    }
+
+    #[test]
+    fn scan_resistance_beats_lru() {
+        // Loop over a hot set that fits, interleaved with a one-shot scan:
+        // ARC keeps the hot set (frequency), LRU flushes it.
+        let cap = 32;
+        let mut arc = ArcCache::new(cap);
+        let mut lru = Lru::new(cap);
+        let mut arc_hits = 0.0;
+        let mut lru_hits = 0.0;
+        let mut scan_id = 1000u64;
+        for round in 0..400 {
+            for hot in 0..24u64 {
+                arc_hits += arc.request(hot);
+                lru_hits += lru.request(hot);
+            }
+            if round % 2 == 1 {
+                for _ in 0..40 {
+                    arc.request(scan_id);
+                    lru.request(scan_id);
+                    scan_id += 1;
+                }
+            }
+        }
+        assert!(
+            arc_hits > lru_hits,
+            "ARC ({arc_hits}) should beat LRU ({lru_hits}) under scans"
+        );
+    }
+
+    #[test]
+    fn zipf_hit_ratio_reasonable() {
+        let t = synth::zipf(1000, 50_000, 0.9, 6);
+        let mut a = ArcCache::new(100);
+        let mut hits = 0.0;
+        for &r in &t.requests {
+            hits += a.request(r as u64);
+        }
+        let hr = hits / t.len() as f64;
+        assert!(hr > 0.3, "ARC hit ratio {hr} suspiciously low on Zipf(0.9)");
+    }
+}

@@ -1,0 +1,71 @@
+//! First-In First-Out — O(1) per request; no reordering on hit.
+
+use super::list::DList;
+use super::Policy;
+use crate::util::FxHashMap;
+
+#[derive(Debug, Clone)]
+pub struct Fifo {
+    cap: usize,
+    map: FxHashMap<u64, u32>,
+    list: DList,
+}
+
+impl Fifo {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        Self {
+            cap,
+            map: FxHashMap::default(),
+            list: DList::new(),
+        }
+    }
+}
+
+impl Policy for Fifo {
+    fn name(&self) -> String {
+        "FIFO".into()
+    }
+
+    fn request(&mut self, item: u64) -> f64 {
+        if self.map.contains_key(&item) {
+            return 1.0; // no touch: insertion order rules
+        }
+        if self.map.len() >= self.cap {
+            let victim = self.list.pop_back().expect("non-empty at capacity");
+            self.map.remove(&victim);
+        }
+        let h = self.list.push_front(item);
+        self.map.insert(item, h);
+        0.0
+    }
+
+    fn occupancy(&self) -> f64 {
+        self.map.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_does_not_refresh_position() {
+        let mut f = Fifo::new(2);
+        f.request(1);
+        f.request(2);
+        assert_eq!(f.request(1), 1.0); // hit, but 1 stays oldest
+        f.request(3); // evicts 1 (FIFO), unlike LRU
+        assert_eq!(f.request(1), 0.0);
+    }
+
+    #[test]
+    fn occupancy_caps() {
+        let mut f = Fifo::new(3);
+        for i in 0..10 {
+            f.request(i);
+            assert!(f.occupancy() <= 3.0);
+        }
+        assert_eq!(f.occupancy(), 3.0);
+    }
+}

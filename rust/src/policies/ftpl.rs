@@ -1,0 +1,189 @@
+//! Follow The Perturbed Leader — the O(log N) single-initial-noise variant
+//! (Mhaisen et al. 2022; paper §2.2).
+//!
+//! FTPL caches the C items with the largest perturbed counts
+//! `n_i + zeta * g_i`, where `g_i ~ N(0,1)` is drawn *once* (here derived
+//! from a per-item hash, so the noise costs no storage and the policy is
+//! reproducible).  Only the requested item's perturbed count changes, so
+//! the top-C set can be maintained with one ordered-tree update per
+//! request — the same O(log N) complexity class as OGB, which is why it is
+//! the one no-regret baseline the paper can run at full scale.
+//!
+//! With the theoretical `zeta ~ sqrt(T/C)` the initial noise dominates the
+//! counts for a long prefix — the mechanism behind FTPL's slow start in the
+//! paper's Figs. 3-4 and its LFU-like rigidity under pattern changes.
+
+use super::Policy;
+use crate::util::fxhash::hash2;
+use crate::util::OrdTree;
+
+#[derive(Debug, Clone)]
+pub struct Ftpl {
+    n: usize,
+    cap: usize,
+    zeta: f64,
+    seed: u64,
+    counts: Vec<u64>,
+    /// ordered by perturbed count; holds exactly the cached top-C
+    cached: OrdTree,
+    /// perturbed-count key per cached item (NaN = not cached)
+    key_of: Vec<f64>,
+}
+
+impl Ftpl {
+    pub fn new(n: usize, cap: usize, zeta: f64, seed: u64) -> Self {
+        assert!(cap > 0 && cap <= n);
+        let mut s = Self {
+            n,
+            cap,
+            zeta,
+            seed,
+            counts: vec![0; n],
+            cached: OrdTree::new(),
+            key_of: vec![f64::NAN; n],
+        };
+        // Initial cache: top-C by pure noise (all counts are zero).
+        for i in 0..n as u64 {
+            s.offer(i);
+        }
+        s
+    }
+
+    /// Per-item standard normal derived from two hash uniforms
+    /// (Box–Muller), permanently associated with the item.
+    fn noise(&self, i: u64) -> f64 {
+        let u1_bits = hash2(self.seed ^ 0xF7_91, i);
+        let u2_bits = hash2(self.seed ^ 0x11_C5, i);
+        let u1 = ((u1_bits >> 11) as f64 + 1.0) * (1.0 / (1u64 << 53) as f64); // (0,1]
+        let u2 = (u2_bits >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    #[inline]
+    fn perturbed(&self, i: u64) -> f64 {
+        self.counts[i as usize] as f64 + self.zeta * self.noise(i)
+    }
+
+    pub fn is_cached(&self, i: u64) -> bool {
+        !self.key_of[i as usize].is_nan()
+    }
+
+    /// Offer item `i` for caching: insert if the cache has room, otherwise
+    /// displace the minimum if `i` beats it.
+    fn offer(&mut self, i: u64) {
+        let key = self.perturbed(i);
+        if self.cached.len() < self.cap {
+            self.cached.insert(key, i);
+            self.key_of[i as usize] = key;
+            return;
+        }
+        let (min_key, min_item) = self.cached.min().expect("cap > 0");
+        if key > min_key {
+            self.cached.remove(min_key, min_item);
+            self.key_of[min_item as usize] = f64::NAN;
+            self.cached.insert(key, i);
+            self.key_of[i as usize] = key;
+        }
+    }
+}
+
+impl Policy for Ftpl {
+    fn name(&self) -> String {
+        format!("FTPL(zeta={:.3})", self.zeta)
+    }
+
+    fn request(&mut self, item: u64) -> f64 {
+        let ii = item as usize;
+        assert!(ii < self.n);
+        let hit = if !self.key_of[ii].is_nan() { 1.0 } else { 0.0 };
+        self.counts[ii] += 1;
+        if hit == 1.0 {
+            // re-key in place
+            let old = self.key_of[ii];
+            let new = self.perturbed(item);
+            self.cached.remove(old, item);
+            self.cached.insert(new, item);
+            self.key_of[ii] = new;
+        } else {
+            self.offer(item);
+        }
+        hit
+    }
+
+    fn occupancy(&self) -> f64 {
+        self.cached.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn holds_exactly_c_items() {
+        let f = Ftpl::new(100, 10, 1.0, 1);
+        assert_eq!(f.occupancy(), 10.0);
+        let cached = (0..100).filter(|&i| f.is_cached(i)).count();
+        assert_eq!(cached, 10);
+    }
+
+    #[test]
+    fn cache_is_exactly_top_c_perturbed() {
+        use crate::util::Xoshiro256pp;
+        let mut f = Ftpl::new(50, 8, 2.0, 3);
+        let mut rng = Xoshiro256pp::seed_from(9);
+        let zipf = crate::util::Zipf::new(50, 1.0);
+        for _ in 0..5_000 {
+            f.request(zipf.sample(&mut rng));
+        }
+        // verify against brute force
+        let mut keys: Vec<(f64, u64)> = (0..50u64).map(|i| (f.perturbed(i), i)).collect();
+        keys.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        for &(_, i) in keys.iter().take(8) {
+            assert!(f.is_cached(i), "top-8 item {i} must be cached");
+        }
+        for &(_, i) in keys.iter().skip(8) {
+            assert!(!f.is_cached(i), "non-top item {i} must not be cached");
+        }
+    }
+
+    #[test]
+    fn zero_noise_equals_lfu_behaviour() {
+        // zeta = 0: FTPL == LFU on counts. On a stationary Zipf trace the
+        // head must end up cached.
+        use crate::trace::synth;
+        let t = synth::zipf(200, 20_000, 1.0, 7);
+        let mut f = Ftpl::new(200, 20, 0.0, 1);
+        for &r in &t.requests {
+            f.request(r as u64);
+        }
+        let head = (0..20u64).filter(|&i| f.is_cached(i)).count();
+        assert!(head >= 14, "zeta=0 FTPL should track the head ({head}/20)");
+    }
+
+    #[test]
+    fn huge_noise_freezes_cache() {
+        // zeta >> T: counts never overcome the noise; the cache stays at its
+        // initial (noise-ranked) content — the paper's FTPL pathology.
+        use crate::trace::synth;
+        let t = synth::zipf(200, 5_000, 1.0, 8);
+        let mut f = Ftpl::new(200, 20, 1e9, 2);
+        let before: Vec<bool> = (0..200u64).map(|i| f.is_cached(i)).collect();
+        for &r in &t.requests {
+            f.request(r as u64);
+        }
+        let after: Vec<bool> = (0..200u64).map(|i| f.is_cached(i)).collect();
+        assert_eq!(before, after, "cache content must be frozen by the noise");
+    }
+
+    #[test]
+    fn noise_deterministic_per_seed() {
+        let a = Ftpl::new(50, 5, 1.0, 42);
+        let b = Ftpl::new(50, 5, 1.0, 42);
+        let c = Ftpl::new(50, 5, 1.0, 43);
+        for i in 0..50u64 {
+            assert_eq!(a.noise(i), b.noise(i));
+        }
+        assert!((0..50u64).any(|i| a.noise(i) != c.noise(i)));
+    }
+}

@@ -1,0 +1,52 @@
+//! Infinite cache: every item is kept forever; only cold misses occur.
+//! Upper-bounds every feasible policy's hit count (used by the App. B.2
+//! lifetime analysis and as a sanity ceiling in figures).
+
+use super::Policy;
+use crate::util::FxHashSet;
+
+#[derive(Debug, Clone, Default)]
+pub struct InfiniteCache {
+    seen: FxHashSet<u64>,
+}
+
+impl InfiniteCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Policy for InfiniteCache {
+    fn name(&self) -> String {
+        "Infinite".into()
+    }
+
+    fn request(&mut self, item: u64) -> f64 {
+        if self.seen.insert(item) {
+            0.0
+        } else {
+            1.0
+        }
+    }
+
+    fn occupancy(&self) -> f64 {
+        self.seen.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::synth;
+
+    #[test]
+    fn hits_equal_t_minus_distinct() {
+        let t = synth::zipf(100, 5_000, 1.0, 5);
+        let mut p = InfiniteCache::new();
+        let mut hits = 0.0;
+        for &r in &t.requests {
+            hits += p.request(r as u64);
+        }
+        assert_eq!(hits as usize, t.len() - t.distinct());
+    }
+}

@@ -1,0 +1,141 @@
+//! Least Frequently Used with an ordered (frequency, recency) eviction key.
+//!
+//! Counts are *perfect* (kept for every item ever seen, as in the paper's
+//! LFU baseline, not a windowed approximation).  Eviction picks the cached
+//! item with the smallest (count, last-use) — the recency tie-break matches
+//! the common implementation.  O(log C) per request via a BTreeSet; an
+//! O(1) frequency-bucket implementation exists (Matani et al.) but the
+//! ordered-set version is simpler and never the bottleneck here (the
+//! complexity benches target OGB vs OGB_cl).
+
+use std::collections::BTreeSet;
+
+use super::Policy;
+use crate::util::FxHashMap;
+
+#[derive(Debug, Clone)]
+pub struct Lfu {
+    cap: usize,
+    /// count for every item ever requested (persistent frequencies)
+    counts: FxHashMap<u64, u64>,
+    /// eviction key of cached items: (count, tick, item)
+    cached: BTreeSet<(u64, u64, u64)>,
+    key_of: FxHashMap<u64, (u64, u64)>,
+    tick: u64,
+}
+
+impl Lfu {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        Self {
+            cap,
+            counts: FxHashMap::default(),
+            cached: BTreeSet::new(),
+            key_of: FxHashMap::default(),
+            tick: 0,
+        }
+    }
+
+    pub fn contains(&self, item: u64) -> bool {
+        self.key_of.contains_key(&item)
+    }
+
+    pub fn count(&self, item: u64) -> u64 {
+        self.counts.get(&item).copied().unwrap_or(0)
+    }
+}
+
+impl Policy for Lfu {
+    fn name(&self) -> String {
+        "LFU".into()
+    }
+
+    fn request(&mut self, item: u64) -> f64 {
+        self.tick += 1;
+        let cnt = {
+            let e = self.counts.entry(item).or_insert(0);
+            *e += 1;
+            *e
+        };
+        if let Some(&(old_cnt, old_tick)) = self.key_of.get(&item) {
+            // hit: re-key with the new count
+            self.cached.remove(&(old_cnt, old_tick, item));
+            self.cached.insert((cnt, self.tick, item));
+            self.key_of.insert(item, (cnt, self.tick));
+            return 1.0;
+        }
+        // miss: admit; evict the (count, recency)-smallest if full.
+        if self.key_of.len() >= self.cap {
+            let &(vc, vt, victim) = self.cached.iter().next().expect("full cache");
+            // Standard LFU admits unconditionally (perfect-LFU *with*
+            // replacement): the newcomer (count cnt) replaces the minimum.
+            self.cached.remove(&(vc, vt, victim));
+            self.key_of.remove(&victim);
+        }
+        self.cached.insert((cnt, self.tick, item));
+        self.key_of.insert(item, (cnt, self.tick));
+        0.0
+    }
+
+    fn occupancy(&self) -> f64 {
+        self.key_of.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evicts_least_frequent() {
+        let mut l = Lfu::new(2);
+        l.request(1);
+        l.request(1);
+        l.request(2);
+        l.request(3); // evicts 2 (count 1, older than 3? both count... 2 evicted as LRU tie-break)
+        assert!(l.contains(1));
+        assert!(l.contains(3));
+        assert!(!l.contains(2));
+    }
+
+    #[test]
+    fn frequency_memory_persists_after_eviction() {
+        let mut l = Lfu::new(2);
+        for _ in 0..5 {
+            l.request(10);
+        }
+        l.request(11);
+        l.request(12); // evicts 11 (count 1) not 10 (count 5)
+        assert!(l.contains(10));
+        assert!(!l.contains(11));
+        // 11 returns: its count resumes from 1 -> 2
+        l.request(11);
+        assert_eq!(l.count(11), 2);
+    }
+
+    #[test]
+    fn stationary_zipf_converges_to_head() {
+        use crate::trace::synth;
+        let t = synth::zipf(200, 30_000, 1.0, 5);
+        let c = 20;
+        let mut l = Lfu::new(c);
+        for &r in &t.requests {
+            l.request(r as u64);
+        }
+        // after convergence the cache holds (mostly) the head ranks
+        let head_cached = (0..c as u64).filter(|&i| l.contains(i)).count();
+        assert!(
+            head_cached >= c * 7 / 10,
+            "LFU should converge to the Zipf head ({head_cached}/{c})"
+        );
+    }
+
+    #[test]
+    fn capacity_never_exceeded() {
+        let mut l = Lfu::new(5);
+        for i in 0..1000u64 {
+            l.request(i % 37);
+            assert!(l.occupancy() <= 5.0);
+        }
+    }
+}

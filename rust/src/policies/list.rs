@@ -1,0 +1,241 @@
+//! Arena-backed intrusive doubly-linked list: the O(1) recency structure
+//! shared by LRU, FIFO and ARC.  Nodes live in a `Vec` arena addressed by
+//! `u32` handles (no per-node allocation on the request path; freed slots
+//! are recycled).
+
+const NIL: u32 = u32::MAX;
+
+#[derive(Debug, Clone)]
+struct Node {
+    item: u64,
+    prev: u32,
+    next: u32,
+}
+
+/// Doubly-linked list over a `Vec` arena; handles are stable until freed.
+#[derive(Debug, Clone, Default)]
+pub struct DList {
+    nodes: Vec<Node>,
+    free: Vec<u32>,
+    head: u32,
+    tail: u32,
+    len: usize,
+}
+
+impl DList {
+    pub fn new() -> Self {
+        Self {
+            nodes: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn alloc(&mut self, item: u64) -> u32 {
+        if let Some(h) = self.free.pop() {
+            self.nodes[h as usize] = Node {
+                item,
+                prev: NIL,
+                next: NIL,
+            };
+            h
+        } else {
+            self.nodes.push(Node {
+                item,
+                prev: NIL,
+                next: NIL,
+            });
+            (self.nodes.len() - 1) as u32
+        }
+    }
+
+    /// Push to the front (MRU side); returns the node handle.
+    pub fn push_front(&mut self, item: u64) -> u32 {
+        let h = self.alloc(item);
+        self.nodes[h as usize].next = self.head;
+        if self.head != NIL {
+            self.nodes[self.head as usize].prev = h;
+        }
+        self.head = h;
+        if self.tail == NIL {
+            self.tail = h;
+        }
+        self.len += 1;
+        h
+    }
+
+    /// Item stored at a handle.
+    pub fn item(&self, h: u32) -> u64 {
+        self.nodes[h as usize].item
+    }
+
+    /// Item at the back (LRU side).
+    pub fn back(&self) -> Option<u64> {
+        if self.tail == NIL {
+            None
+        } else {
+            Some(self.nodes[self.tail as usize].item)
+        }
+    }
+
+    /// Unlink and free a node.
+    pub fn remove(&mut self, h: u32) -> u64 {
+        let (prev, next, item) = {
+            let n = &self.nodes[h as usize];
+            (n.prev, n.next, n.item)
+        };
+        if prev != NIL {
+            self.nodes[prev as usize].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.nodes[next as usize].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+        self.free.push(h);
+        self.len -= 1;
+        item
+    }
+
+    /// Pop from the back (evict LRU). Returns the item.
+    pub fn pop_back(&mut self) -> Option<u64> {
+        if self.tail == NIL {
+            None
+        } else {
+            Some(self.remove(self.tail))
+        }
+    }
+
+    /// Move an existing node to the front (touch).
+    pub fn move_front(&mut self, h: u32) {
+        if self.head == h {
+            return;
+        }
+        let item = self.remove(h);
+        let new_h = self.push_front(item);
+        // `remove` freed h and `push_front` recycles the most recently
+        // freed slot, so the handle is preserved.
+        debug_assert_eq!(new_h, h);
+    }
+
+    /// Iterate front (MRU) to back (LRU).
+    pub fn iter(&self) -> impl Iterator<Item = u64> + '_ {
+        struct It<'a> {
+            l: &'a DList,
+            cur: u32,
+        }
+        impl Iterator for It<'_> {
+            type Item = u64;
+            fn next(&mut self) -> Option<u64> {
+                if self.cur == NIL {
+                    None
+                } else {
+                    let n = &self.l.nodes[self.cur as usize];
+                    self.cur = n.next;
+                    Some(n.item)
+                }
+            }
+        }
+        It {
+            l: self,
+            cur: self.head,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_touch_evict() {
+        let mut l = DList::new();
+        let a = l.push_front(1);
+        let _b = l.push_front(2);
+        let _c = l.push_front(3);
+        assert_eq!(l.iter().collect::<Vec<_>>(), vec![3, 2, 1]);
+        l.move_front(a);
+        assert_eq!(l.iter().collect::<Vec<_>>(), vec![1, 3, 2]);
+        assert_eq!(l.pop_back(), Some(2));
+        assert_eq!(l.len(), 2);
+        assert_eq!(l.back(), Some(3));
+    }
+
+    #[test]
+    fn handle_stability_after_move() {
+        let mut l = DList::new();
+        let hs: Vec<u32> = (0..10).map(|i| l.push_front(i)).collect();
+        for &h in hs.iter().rev() {
+            l.move_front(h);
+        }
+        // touched in item order 9,8,...,0 (hs[i] holds item i; reversed
+        // iteration starts at item 9) => item 0 was touched last => MRU
+        assert_eq!(l.iter().collect::<Vec<_>>(), (0..10).collect::<Vec<_>>());
+        for (i, &h) in hs.iter().enumerate() {
+            assert_eq!(l.item(h), i as u64);
+        }
+    }
+
+    #[test]
+    fn remove_middle_and_reuse() {
+        let mut l = DList::new();
+        let _a = l.push_front(1);
+        let b = l.push_front(2);
+        let _c = l.push_front(3);
+        assert_eq!(l.remove(b), 2);
+        assert_eq!(l.iter().collect::<Vec<_>>(), vec![3, 1]);
+        let d = l.push_front(4);
+        assert_eq!(d, b, "freed slot recycled");
+        assert_eq!(l.iter().collect::<Vec<_>>(), vec![4, 3, 1]);
+    }
+
+    #[test]
+    fn randomized_against_vecdeque_model() {
+        use crate::util::Xoshiro256pp;
+        let mut rng = Xoshiro256pp::seed_from(1);
+        let mut l = DList::new();
+        let mut model: std::collections::VecDeque<u64> = Default::default();
+        let mut handles: std::collections::HashMap<u64, u32> = Default::default();
+        for step in 0..20_000u64 {
+            match rng.next_below(3) {
+                0 => {
+                    let h = l.push_front(step);
+                    handles.insert(step, h);
+                    model.push_front(step);
+                }
+                1 => {
+                    if let Some(&item) = model.back() {
+                        assert_eq!(l.pop_back(), Some(item));
+                        model.pop_back();
+                        handles.remove(&item);
+                    } else {
+                        assert_eq!(l.pop_back(), None);
+                    }
+                }
+                _ => {
+                    if !model.is_empty() {
+                        let k = rng.next_below(model.len() as u64) as usize;
+                        let item = model[k];
+                        l.move_front(handles[&item]);
+                        model.remove(k);
+                        model.push_front(item);
+                    }
+                }
+            }
+            assert_eq!(l.len(), model.len());
+        }
+        assert_eq!(l.iter().collect::<Vec<_>>(), model.iter().copied().collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,189 @@
+//! Caching policies: the paper's OGB (integral, Algorithm 1), OGB_cl
+//! (classic dense gradient policy), fractional OGB, and the complete
+//! comparison set used in the paper's evaluation — LRU, LFU, FIFO, ARC,
+//! GDS, FTPL and OPT (best static allocation in hindsight).
+//!
+//! All policies implement the streaming [`Policy`] trait; OPT is two-pass
+//! and is constructed from the trace directly.
+
+pub mod arc;
+pub mod fifo;
+pub mod fractional;
+pub mod ftpl;
+pub mod gds;
+pub mod infinite;
+pub mod lfu;
+pub mod list;
+pub mod lru;
+pub mod ogb;
+pub mod ogb_classic;
+pub mod omd;
+pub mod opt;
+
+pub use arc::ArcCache;
+pub use fifo::Fifo;
+pub use fractional::FractionalOgb;
+pub use ftpl::Ftpl;
+pub use gds::Gds;
+pub use infinite::InfiniteCache;
+pub use lfu::Lfu;
+pub use lru::Lru;
+pub use ogb::Ogb;
+pub use ogb_classic::{CpuDenseStep, DenseStep, OgbClassic, OgbClassicMode};
+pub use omd::OmdFractional;
+pub use opt::Opt;
+
+/// Streaming cache policy.
+///
+/// `request` serves one request and returns the obtained reward: for
+/// integral policies a hit indicator in {0, 1}; for fractional policies
+/// the stored fraction `f_j ∈ [0, 1]` of the requested item (the paper's
+/// `phi_t` with `w = 1`).
+///
+/// Deliberately NOT `Send`: the XLA-backed dense backend wraps PJRT
+/// handles that are single-threaded; the coordinator's shard threads own
+/// concrete (`Send`) policy values instead of trait objects.
+pub trait Policy {
+    fn name(&self) -> String;
+
+    fn request(&mut self, item: u64) -> f64;
+
+    /// Number of items currently stored (fractional mass for fractional
+    /// policies).  Drives the paper's Fig. 9 (left).
+    fn occupancy(&self) -> f64;
+
+    /// Implementation diagnostics (Fig. 9 right and §Perf counters);
+    /// cumulative since construction.
+    fn diag(&self) -> Diag {
+        Diag::default()
+    }
+}
+
+/// Cumulative diagnostics counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Diag {
+    /// components of f~ removed by the projection (Alg. 2 lines 11-18)
+    pub removed_coeffs: u64,
+    /// items replaced in the integral cache by sampling updates
+    pub sample_evictions: u64,
+    /// number of numerical re-bases performed
+    pub rebases: u64,
+}
+
+/// Construct a policy by CLI name. `t_hint` is the expected horizon used
+/// for the theoretical eta/zeta; `trace_counts` is required only by `opt`.
+pub fn by_name(
+    name: &str,
+    n: usize,
+    c: usize,
+    t_hint: usize,
+    b: usize,
+    seed: u64,
+    trace: Option<&crate::trace::Trace>,
+) -> anyhow::Result<Box<dyn Policy>> {
+    let eta = crate::theory_eta(c as f64, n as f64, t_hint as f64, b as f64);
+    let zeta = crate::ftpl_theory_zeta(c as f64, n as f64, t_hint as f64);
+    Ok(match name {
+        "lru" => Box::new(Lru::new(c)),
+        "lfu" => Box::new(Lfu::new(c)),
+        "fifo" => Box::new(Fifo::new(c)),
+        "arc" => Box::new(ArcCache::new(c)),
+        "gds" => Box::new(Gds::new(c)),
+        "ftpl" => Box::new(Ftpl::new(n, c, zeta, seed)),
+        "ogb" => Box::new(Ogb::new(n, c as f64, eta, b, seed)),
+        "ogb-frac" => Box::new(FractionalOgb::new(n, c as f64, eta, b)),
+        "ogb-classic" => Box::new(OgbClassic::new(
+            n,
+            c as f64,
+            eta,
+            b,
+            OgbClassicMode::Integral,
+            Box::new(CpuDenseStep),
+            seed,
+        )),
+        "ogb-classic-frac" => Box::new(OgbClassic::new(
+            n,
+            c as f64,
+            eta,
+            b,
+            OgbClassicMode::Fractional,
+            Box::new(CpuDenseStep),
+            seed,
+        )),
+        "omd-frac" => Box::new(OmdFractional::with_theory_eta(n, c as f64, t_hint, b)),
+        "opt" => {
+            let tr = trace.ok_or_else(|| anyhow::anyhow!("opt policy needs the trace"))?;
+            Box::new(Opt::from_trace(tr, c))
+        }
+        "infinite" => Box::new(InfiniteCache::new()),
+        other => anyhow::bail!(
+            "unknown policy `{other}` (known: lru lfu fifo arc gds ftpl ogb ogb-frac ogb-classic ogb-classic-frac omd-frac opt infinite)"
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::synth;
+
+    #[test]
+    fn factory_builds_all() {
+        let t = synth::zipf(100, 1000, 0.9, 1);
+        for name in [
+            "lru",
+            "lfu",
+            "fifo",
+            "arc",
+            "gds",
+            "ftpl",
+            "ogb",
+            "ogb-frac",
+            "ogb-classic",
+            "ogb-classic-frac",
+            "omd-frac",
+            "opt",
+            "infinite",
+        ] {
+            let mut p = by_name(name, 100, 25, 1000, 1, 42, Some(&t)).unwrap();
+            let mut reward = 0.0;
+            for &r in &t.requests[..200] {
+                reward += p.request(r as u64);
+            }
+            assert!(reward >= 0.0, "{name}");
+            assert!(p.occupancy() >= 0.0, "{name}");
+        }
+        assert!(by_name("bogus", 10, 2, 10, 1, 0, None).is_err());
+    }
+
+    /// Every integral policy must respect its capacity bound (OGB's soft
+    /// constraint is checked with a concentration margin).
+    #[test]
+    fn capacity_respected() {
+        let t = synth::zipf(500, 20_000, 0.8, 3);
+        let c = 50usize;
+        for name in ["lru", "lfu", "fifo", "arc", "gds", "ftpl", "opt"] {
+            let mut p = by_name(name, 500, c, t.len(), 1, 7, Some(&t)).unwrap();
+            for &r in &t.requests {
+                p.request(r as u64);
+                assert!(
+                    p.occupancy() <= c as f64 + 1e-9,
+                    "{name} exceeded capacity: {}",
+                    p.occupancy()
+                );
+            }
+        }
+        // soft-capacity policies stay within a few sigma
+        for name in ["ogb", "ogb-frac", "ogb-classic-frac"] {
+            let mut p = by_name(name, 500, c, t.len(), 1, 7, Some(&t)).unwrap();
+            for &r in &t.requests {
+                p.request(r as u64);
+            }
+            let occ = p.occupancy();
+            assert!(
+                (occ - c as f64).abs() < 6.0 * (c as f64).sqrt(),
+                "{name} occupancy {occ} far from soft C={c}"
+            );
+        }
+    }
+}

@@ -1,0 +1,298 @@
+//! **OGB** — the paper's integral online gradient-based caching policy
+//! (Algorithm 1): O(log N) amortized per request, soft capacity
+//! constraint, regret ≤ sqrt(C(1-C/N)·T·B) (Theorem 3.1).
+//!
+//! Composition per request:
+//!   1. serve: hit ⟺ the item is in the sampled integral cache `x_t`;
+//!   2. UPDATEPROBABILITIES (Algorithm 2, [`crate::proj::LazySimplex`]):
+//!      the fractional state advances *every* request — this is the one
+//!      difference from OGB_cl, which freezes `f` within a batch;
+//!   3. every B requests, UPDATESAMPLE (Algorithm 3,
+//!      [`crate::sample::CoordinatedSampler`]) refreshes `x_t` so that
+//!      `E[x_t] = f_t` while minimizing replacements.
+//!
+//! The policy also drives the numerical re-base, shifting the sampler's
+//! keys in lock-step (see `LazySimplex::maybe_rebase`).
+
+use super::{Diag, Policy};
+use crate::proj::LazySimplex;
+use crate::sample::CoordinatedSampler;
+
+#[derive(Debug, Clone)]
+pub struct Ogb {
+    lazy: LazySimplex,
+    sampler: CoordinatedSampler,
+    eta: f64,
+    b: usize,
+    batch: Vec<u64>,
+    // cumulative diagnostics
+    removed_coeffs: u64,
+    sample_evictions: u64,
+    rebases: u64,
+    requests: u64,
+}
+
+impl Ogb {
+    /// `n` catalog size, `c` (expected) cache capacity, `eta` learning
+    /// rate (Theorem 3.1: sqrt(C(1-C/N)/(T·B))), `b` batch size, `seed`
+    /// for the permanent random numbers.
+    pub fn new(n: usize, c: f64, eta: f64, b: usize, seed: u64) -> Self {
+        assert!(b >= 1, "batch size must be >= 1");
+        assert!(eta > 0.0, "eta must be positive");
+        let lazy = LazySimplex::new_uniform(n, c);
+        let sampler = CoordinatedSampler::new(&lazy, seed);
+        Self {
+            lazy,
+            sampler,
+            eta,
+            b,
+            batch: Vec::with_capacity(b),
+            removed_coeffs: 0,
+            sample_evictions: 0,
+            rebases: 0,
+            requests: 0,
+        }
+    }
+
+    /// Theoretical configuration for a horizon of `t` requests.
+    pub fn with_theory_eta(n: usize, c: f64, t: usize, b: usize, seed: u64) -> Self {
+        let eta = crate::theory_eta(c, n as f64, t as f64, b as f64);
+        Self::new(n, c, eta, b, seed)
+    }
+
+    pub fn eta(&self) -> f64 {
+        self.eta
+    }
+
+    pub fn is_cached(&self, item: u64) -> bool {
+        self.sampler.is_cached(item)
+    }
+
+    /// Probability the item will be cached at the next sample update.
+    pub fn prob(&self, item: u64) -> f64 {
+        self.lazy.prob(item)
+    }
+
+    /// Redraw the permanent random numbers (paper §5.1's periodic redraw).
+    pub fn redraw_sampler(&mut self) {
+        let st = self.sampler.redraw(&self.lazy);
+        self.sample_evictions += st.evicted as u64;
+    }
+
+    /// Weighted request — the paper's general reward `w_{t,i}·r_{t,i}·x_i`
+    /// (§2.1: "our results can be easily extended").  The gradient of the
+    /// weighted reward w.r.t. `f_j` is `w`, so the step is `eta·w`; the
+    /// returned reward is `w` on a hit, 0 otherwise.
+    pub fn request_weighted(&mut self, item: u64, weight: f64) -> f64 {
+        assert!(weight >= 0.0, "weights must be non-negative");
+        self.requests += 1;
+        let hit = if self.sampler.is_cached(item) { weight } else { 0.0 };
+        let st = self.lazy.request(item, self.eta * weight);
+        self.removed_coeffs += st.removed as u64;
+        self.batch.push(item);
+        if self.batch.len() >= self.b {
+            let sst = self.sampler.update(&self.lazy, &self.batch);
+            self.sample_evictions += sst.evicted as u64;
+            self.batch.clear();
+            if let Some(shift) = self.lazy.maybe_rebase() {
+                self.sampler.shift_keys(shift);
+                self.rebases += 1;
+            }
+        }
+        hit
+    }
+
+    /// Exhaustive debug validation (tests only — O(N)).
+    pub fn check_invariants(&self) {
+        self.lazy.check_invariants(1e-6);
+        // Sampler consistency is only guaranteed at batch boundaries.
+        if self.batch.is_empty() {
+            self.sampler.check_invariants(&self.lazy);
+        }
+    }
+}
+
+impl Policy for Ogb {
+    fn name(&self) -> String {
+        format!("OGB(b={})", self.b)
+    }
+
+    fn request(&mut self, item: u64) -> f64 {
+        // 1. serve against the current integral cache; 2. gradient step +
+        // lazy projection (every request); 3. sample refresh every B.
+        self.request_weighted(item, 1.0)
+    }
+
+    fn occupancy(&self) -> f64 {
+        self.sampler.occupancy() as f64
+    }
+
+    fn diag(&self) -> Diag {
+        Diag {
+            removed_coeffs: self.removed_coeffs,
+            sample_evictions: self.sample_evictions,
+            rebases: self.rebases,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::synth;
+    use crate::util::Xoshiro256pp;
+
+    #[test]
+    fn invariants_through_stream() {
+        let mut p = Ogb::new(200, 50.0, 0.02, 5, 1);
+        let mut rng = Xoshiro256pp::seed_from(2);
+        for k in 0..5_000u64 {
+            p.request(rng.next_below(200));
+            if k % 500 == 0 {
+                p.check_invariants();
+            }
+        }
+        p.check_invariants();
+    }
+
+    #[test]
+    fn occupancy_concentrates_around_c() {
+        let t = synth::zipf(2_000, 40_000, 0.9, 3);
+        let c = 200.0;
+        let mut p = Ogb::with_theory_eta(2_000, c, t.len(), 1, 4);
+        let mut max_dev: f64 = 0.0;
+        for (k, &r) in t.requests.iter().enumerate() {
+            p.request(r as u64);
+            if k > 1000 {
+                max_dev = max_dev.max((p.occupancy() - c).abs());
+            }
+        }
+        // paper Fig. 9: deviation within ~0.5% for large C; at C=200 allow
+        // a few sigma (sqrt(C*(1-C/N)) ~ 13).
+        assert!(max_dev < 6.0 * (c).sqrt(), "occupancy deviated by {max_dev}");
+    }
+
+    #[test]
+    fn learns_static_head_beats_uniform_random() {
+        // On stationary Zipf, OGB must end up caching (mostly) the head.
+        let t = synth::zipf(1_000, 60_000, 1.1, 5);
+        let c = 100usize;
+        let mut p = Ogb::with_theory_eta(1_000, c as f64, t.len(), 1, 6);
+        let mut hits_late = 0.0;
+        for (k, &r) in t.requests.iter().enumerate() {
+            let h = p.request(r as u64);
+            if k >= t.len() / 2 {
+                hits_late += h;
+            }
+        }
+        let late_hr = hits_late / (t.len() / 2) as f64;
+        // OPT on this trace gets ~0.58; uniform-random caching gets C/N=0.1
+        assert!(late_hr > 0.4, "late hit ratio {late_hr} too low — not learning");
+        // the head items should be cached with high probability
+        let head_cached = (0..c as u64 / 2).filter(|&i| p.is_cached(i)).count();
+        assert!(head_cached as f64 > 0.8 * (c / 2) as f64, "{head_cached}");
+    }
+
+    #[test]
+    fn batch_sizes_agree_on_probabilities() {
+        // The fractional state trajectory is identical for any B (the
+        // sample refresh cadence differs, probabilities don't).
+        let t = synth::zipf(100, 2_000, 0.8, 7);
+        let mut p1 = Ogb::new(100, 20.0, 0.01, 1, 8);
+        let mut p5 = Ogb::new(100, 20.0, 0.01, 5, 8);
+        for &r in &t.requests {
+            p1.request(r as u64);
+            p5.request(r as u64);
+        }
+        for i in 0..100u64 {
+            assert!(
+                (p1.prob(i) - p5.prob(i)).abs() < 1e-12,
+                "prob diverged at {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn expected_cache_matches_probabilities() {
+        // E[x_i] = f_i: run many seeds with frozen f, compare marginals.
+        let n = 200;
+        let c = 40.0;
+        let t = synth::zipf(n, 3_000, 1.0, 9);
+        let mut marginal = vec![0.0f64; n];
+        let seeds = 60;
+        let mut probs = vec![0.0f64; n];
+        for seed in 0..seeds {
+            let mut p = Ogb::new(n, c, 0.01, 1, seed);
+            for &r in &t.requests {
+                p.request(r as u64);
+            }
+            for i in 0..n as u64 {
+                marginal[i as usize] += p.is_cached(i) as u32 as f64 / seeds as f64;
+                if seed == 0 {
+                    probs[i as usize] = p.prob(i);
+                }
+            }
+        }
+        // probabilities are seed-independent; marginals must track them
+        let mae: f64 = marginal
+            .iter()
+            .zip(&probs)
+            .map(|(m, p)| (m - p).abs())
+            .sum::<f64>()
+            / n as f64;
+        assert!(mae < 0.08, "E[x]=f violated: MAE {mae}");
+    }
+
+    #[test]
+    fn weighted_requests_prioritize_expensive_items() {
+        // two equally-popular groups; group A has weight 10, group B 1:
+        // the cache should end up holding (mostly) group A.
+        let n = 200;
+        let c = 50.0;
+        let mut p = Ogb::new(n, c, 0.002, 1, 3);
+        let mut rng = Xoshiro256pp::seed_from(4);
+        for _ in 0..40_000 {
+            let j = rng.next_below(100);
+            let (item, w) = if rng.next_f64() < 0.5 {
+                (j, 10.0) // group A: items 0..100, expensive
+            } else {
+                (100 + j, 1.0) // group B: items 100..200, cheap
+            };
+            p.request_weighted(item, w);
+        }
+        let a_mass: f64 = (0..100u64).map(|i| p.prob(i)).sum();
+        let b_mass: f64 = (100..200u64).map(|i| p.prob(i)).sum();
+        assert!(
+            a_mass > 4.0 * b_mass,
+            "expensive items should dominate: A={a_mass:.1} B={b_mass:.1}"
+        );
+        p.check_invariants();
+    }
+
+    #[test]
+    fn weight_one_equals_plain_request() {
+        let t = synth::zipf(100, 2_000, 0.9, 5);
+        let mut a = Ogb::new(100, 20.0, 0.01, 4, 6);
+        let mut b = Ogb::new(100, 20.0, 0.01, 4, 6);
+        for &r in &t.requests {
+            assert_eq!(a.request(r as u64), b.request_weighted(r as u64, 1.0));
+        }
+    }
+
+    #[test]
+    fn rebase_transparent_to_behaviour() {
+        let t = synth::zipf(300, 20_000, 0.9, 10);
+        let mut a = Ogb::new(300, 60.0, 0.05, 10, 11);
+        let mut b = Ogb::new(300, 60.0, 0.05, 10, 11);
+        b.lazy.set_rebase_threshold(0.02); // force very frequent rebases
+        let mut hits_a = 0.0;
+        let mut hits_b = 0.0;
+        for &r in &t.requests {
+            hits_a += a.request(r as u64);
+            hits_b += b.request(r as u64);
+        }
+        assert!(b.diag().rebases > 10, "rebases: {}", b.diag().rebases);
+        assert_eq!(hits_a, hits_b, "rebase changed decisions");
+        b.check_invariants();
+    }
+}

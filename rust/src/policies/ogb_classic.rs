@@ -1,0 +1,322 @@
+//! **OGB_cl** — the classic online gradient-based policy (Paschos et al.
+//! 2019 / Si Salem et al. 2023; paper Eq. (2)): the dense baseline whose
+//! O(N)-per-batch cost motivates the paper.
+//!
+//! Every B requests:  `f <- Pi_F(f + eta * sum_of_one_hots)`, computed by a
+//! pluggable [`DenseStep`] backend:
+//!
+//! * [`CpuDenseStep`] — the exact sort-based projection
+//!   ([`crate::proj::dense`]), O(N log N) per batch;
+//! * `runtime::XlaDenseStep` — the same computation executed through the
+//!   AOT-compiled JAX/Pallas artifact on the PJRT CPU client (the L2/L1
+//!   layers of this repo).
+//!
+//! Integral mode re-samples the cache with Madow systematic sampling each
+//! batch (the paper's §2.1 description of prior work, O(N)); fractional
+//! mode rewards the stored fraction.  Both freeze `f` within a batch —
+//! the defining difference from the paper's OGB.
+
+use super::{Diag, Policy};
+use crate::proj::dense;
+use crate::sample::systematic_sample;
+use crate::util::Xoshiro256pp;
+
+/// Backend executing the dense batch update `f <- Pi_F(f + eta*counts)`.
+pub trait DenseStep {
+    fn step(&mut self, f: &mut Vec<f64>, counts: &[f64], eta: f64, c: f64);
+    fn backend_name(&self) -> &'static str;
+}
+
+/// Pure-Rust exact projection backend.
+pub struct CpuDenseStep;
+
+impl DenseStep for CpuDenseStep {
+    fn step(&mut self, f: &mut Vec<f64>, counts: &[f64], eta: f64, c: f64) {
+        for (fi, &g) in f.iter_mut().zip(counts) {
+            *fi += eta * g;
+        }
+        let lam = dense::water_level(f, c);
+        for fi in f.iter_mut() {
+            *fi = (*fi - lam).clamp(0.0, 1.0);
+        }
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "cpu"
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OgbClassicMode {
+    /// Sample an integral cache (systematic sampling) every batch.
+    Integral,
+    /// Reward the stored fraction directly.
+    Fractional,
+}
+
+pub struct OgbClassic {
+    n: usize,
+    c: f64,
+    eta: f64,
+    b: usize,
+    mode: OgbClassicMode,
+    backend: Box<dyn DenseStep>,
+    f: Vec<f64>,
+    counts: Vec<f64>,
+    touched: Vec<u64>,
+    in_batch: usize,
+    cached: Vec<bool>,
+    occupancy: usize,
+    rng: Xoshiro256pp,
+    sample_evictions: u64,
+}
+
+impl OgbClassic {
+    pub fn new(
+        n: usize,
+        c: f64,
+        eta: f64,
+        b: usize,
+        mode: OgbClassicMode,
+        backend: Box<dyn DenseStep>,
+        seed: u64,
+    ) -> Self {
+        assert!(b >= 1 && eta > 0.0);
+        assert!(c > 0.0 && c <= n as f64);
+        let f = vec![c / n as f64; n];
+        let mut s = Self {
+            n,
+            c,
+            eta,
+            b,
+            mode,
+            backend,
+            f,
+            counts: vec![0.0; n],
+            touched: Vec::new(),
+            in_batch: 0,
+            cached: vec![false; n],
+            occupancy: 0,
+            rng: Xoshiro256pp::seed_from(seed),
+            sample_evictions: 0,
+        };
+        if s.mode == OgbClassicMode::Integral {
+            s.resample();
+        }
+        s
+    }
+
+    pub fn with_theory_eta(
+        n: usize,
+        c: f64,
+        t: usize,
+        b: usize,
+        mode: OgbClassicMode,
+        backend: Box<dyn DenseStep>,
+        seed: u64,
+    ) -> Self {
+        let eta = crate::theory_eta(c, n as f64, t as f64, b as f64);
+        Self::new(n, c, eta, b, mode, backend, seed)
+    }
+
+    pub fn fraction(&self, item: u64) -> f64 {
+        self.f[item as usize]
+    }
+
+    pub fn is_cached(&self, item: u64) -> bool {
+        self.cached[item as usize]
+    }
+
+    fn resample(&mut self) {
+        let sample = systematic_sample(&self.f, &mut self.rng);
+        let mut new_cached = vec![false; self.n];
+        for &i in &sample {
+            new_cached[i as usize] = true;
+        }
+        let evicted = self
+            .cached
+            .iter()
+            .zip(&new_cached)
+            .filter(|&(&old, &new)| old && !new)
+            .count();
+        self.sample_evictions += evicted as u64;
+        self.occupancy = sample.len();
+        self.cached = new_cached;
+    }
+
+    fn flush_batch(&mut self) {
+        self.backend
+            .step(&mut self.f, &self.counts, self.eta, self.c);
+        for &i in &self.touched {
+            self.counts[i as usize] = 0.0;
+        }
+        self.touched.clear();
+        self.in_batch = 0;
+        if self.mode == OgbClassicMode::Integral {
+            self.resample();
+        }
+    }
+}
+
+impl Policy for OgbClassic {
+    fn name(&self) -> String {
+        let m = match self.mode {
+            OgbClassicMode::Integral => "int",
+            OgbClassicMode::Fractional => "frac",
+        };
+        format!("OGB_cl[{m},{}](b={})", self.backend.backend_name(), self.b)
+    }
+
+    fn request(&mut self, item: u64) -> f64 {
+        let ii = item as usize;
+        assert!(ii < self.n);
+        let reward = match self.mode {
+            OgbClassicMode::Integral => {
+                if self.cached[ii] {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            OgbClassicMode::Fractional => self.f[ii],
+        };
+        if self.counts[ii] == 0.0 {
+            self.touched.push(item);
+        }
+        self.counts[ii] += 1.0;
+        self.in_batch += 1;
+        if self.in_batch >= self.b {
+            self.flush_batch();
+        }
+        reward
+    }
+
+    fn occupancy(&self) -> f64 {
+        match self.mode {
+            OgbClassicMode::Integral => self.occupancy as f64,
+            OgbClassicMode::Fractional => self.f.iter().sum(),
+        }
+    }
+
+    fn diag(&self) -> Diag {
+        Diag {
+            sample_evictions: self.sample_evictions,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proj::LazySimplex;
+    use crate::trace::synth;
+
+    /// The paper's footnote 3: OGB and OGB_cl coincide for B = 1 — their
+    /// fractional trajectories must match exactly.
+    #[test]
+    fn b1_fractional_trajectory_equals_lazy_ogb() {
+        let n = 60;
+        let c = 12.0;
+        let eta = 0.03;
+        let t = synth::zipf(n, 1_500, 0.9, 1);
+        let mut classic = OgbClassic::new(
+            n,
+            c,
+            eta,
+            1,
+            OgbClassicMode::Fractional,
+            Box::new(CpuDenseStep),
+            1,
+        );
+        let mut lazy = LazySimplex::new_uniform(n, c);
+        for &r in &t.requests {
+            classic.request(r as u64);
+            lazy.request(r as u64, eta);
+            for i in 0..n as u64 {
+                assert!(
+                    (classic.fraction(i) - lazy.prob(i)).abs() < 1e-8,
+                    "trajectories diverged at item {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batched_f_frozen_within_batch() {
+        let n = 30;
+        let mut p = OgbClassic::new(
+            n,
+            6.0,
+            0.1,
+            10,
+            OgbClassicMode::Fractional,
+            Box::new(CpuDenseStep),
+            2,
+        );
+        let f0: Vec<f64> = (0..n as u64).map(|i| p.fraction(i)).collect();
+        for k in 0..9 {
+            p.request(k % n as u64);
+            for i in 0..n as u64 {
+                assert_eq!(p.fraction(i), f0[i as usize], "f must not move mid-batch");
+            }
+        }
+        p.request(0); // 10th request triggers the update
+        assert!((0..n as u64).any(|i| p.fraction(i) != f0[i as usize]));
+    }
+
+    #[test]
+    fn integral_occupancy_exactly_c() {
+        let t = synth::zipf(200, 5_000, 0.9, 3);
+        let mut p = OgbClassic::new(
+            200,
+            40.0,
+            0.02,
+            25,
+            OgbClassicMode::Integral,
+            Box::new(CpuDenseStep),
+            3,
+        );
+        for &r in &t.requests {
+            p.request(r as u64);
+            assert_eq!(p.occupancy(), 40.0, "systematic sampling is exact-size");
+        }
+    }
+
+    #[test]
+    fn fractional_mass_conserved() {
+        let t = synth::zipf(100, 3_000, 1.0, 4);
+        let mut p = OgbClassic::new(
+            100,
+            20.0,
+            0.05,
+            5,
+            OgbClassicMode::Fractional,
+            Box::new(CpuDenseStep),
+            4,
+        );
+        for &r in &t.requests {
+            p.request(r as u64);
+        }
+        assert!((p.occupancy() - 20.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn learns_head_on_zipf() {
+        let t = synth::zipf(500, 30_000, 1.1, 5);
+        let mut p = OgbClassic::with_theory_eta(
+            500,
+            50.0,
+            t.len(),
+            20,
+            OgbClassicMode::Fractional,
+            Box::new(CpuDenseStep),
+            5,
+        );
+        for &r in &t.requests {
+            p.request(r as u64);
+        }
+        let head_mass: f64 = (0..25u64).map(|i| p.fraction(i)).sum();
+        assert!(head_mass > 15.0, "head mass {head_mass} too low");
+    }
+}

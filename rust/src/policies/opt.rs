@@ -1,0 +1,93 @@
+//! OPT — the best *static* cache allocation in hindsight (the paper's
+//! `x*` in Eq. (1), the regret baseline).  Two-pass: count the whole
+//! trace, keep the C most-requested items, then replay.
+//!
+//! Note this is the online-learning OPT (static), not Belady's MIN
+//! (dynamic); the paper's regret is defined against the static allocation.
+
+use super::Policy;
+use crate::trace::Trace;
+use crate::util::FxHashSet;
+
+#[derive(Debug, Clone)]
+pub struct Opt {
+    set: FxHashSet<u64>,
+    cap: usize,
+}
+
+impl Opt {
+    pub fn from_trace(trace: &Trace, c: usize) -> Self {
+        let set = trace.top_c(c).into_iter().map(|i| i as u64).collect();
+        Self { set, cap: c }
+    }
+
+    /// Build from an explicit static allocation (used by tests/figures).
+    pub fn from_items(items: impl IntoIterator<Item = u64>, c: usize) -> Self {
+        let set: FxHashSet<u64> = items.into_iter().collect();
+        assert!(set.len() <= c);
+        Self { set, cap: c }
+    }
+
+    pub fn contains(&self, item: u64) -> bool {
+        self.set.contains(&item)
+    }
+}
+
+impl Policy for Opt {
+    fn name(&self) -> String {
+        "OPT".into()
+    }
+
+    fn request(&mut self, item: u64) -> f64 {
+        if self.set.contains(&item) {
+            1.0
+        } else {
+            0.0
+        }
+    }
+
+    fn occupancy(&self) -> f64 {
+        self.set.len().min(self.cap) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::synth;
+
+    #[test]
+    fn opt_total_matches_trace_opt_hits() {
+        let t = synth::zipf(300, 10_000, 1.0, 1);
+        let c = 30;
+        let mut opt = Opt::from_trace(&t, c);
+        let mut hits = 0.0;
+        for &r in &t.requests {
+            hits += opt.request(r as u64);
+        }
+        assert_eq!(hits as u64, t.opt_hits(c));
+    }
+
+    #[test]
+    fn opt_dominates_every_static_set() {
+        use crate::util::Xoshiro256pp;
+        let t = synth::zipf(100, 5_000, 0.8, 2);
+        let c = 10;
+        let opt_hits = t.opt_hits(c);
+        let counts = t.counts();
+        let mut rng = Xoshiro256pp::seed_from(3);
+        for _ in 0..20 {
+            let mut items: Vec<u32> = (0..100).collect();
+            rng.shuffle(&mut items);
+            let hits: u64 = items[..c].iter().map(|&i| counts[i as usize] as u64).sum();
+            assert!(hits <= opt_hits);
+        }
+    }
+
+    #[test]
+    fn adversarial_opt_is_any_c_items() {
+        let t = synth::adversarial(50, 10, 4);
+        // every item appears exactly 10 times; OPT = 10 * C
+        assert_eq!(t.opt_hits(12), 120);
+    }
+}

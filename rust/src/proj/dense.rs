@@ -1,0 +1,215 @@
+//! Dense exact Euclidean projection onto the capped simplex
+//! `F = {f in [0,1]^N : sum f = C}` — paper Eq. (3).
+//!
+//! KKT: the projection of `y` is `f_i = clip(y_i - lam, 0, 1)` for the
+//! unique water level `lam` solving `g(lam) = sum_i clip(y_i - lam, 0, 1)
+//! = C`; `g` is continuous, piecewise-linear, non-increasing.  We sort the
+//! `2N` breakpoints `{y_i} ∪ {y_i - 1}` and solve the bracketing linear
+//! segment — O(N log N), exact up to float arithmetic (plus one Newton
+//! polish step).
+//!
+//! This is the *oracle* the O(log N) lazy structure (Algorithm 2,
+//! [`super::lazy`]) is validated against, and the same computation the AOT
+//! Pallas artifact performs on the XLA side (python/compile/kernels).
+
+/// Exact water level for the projection of `y` with capacity `c`.
+pub fn water_level(y: &[f64], c: f64) -> f64 {
+    let n = y.len();
+    assert!(n > 0, "empty vector");
+    assert!(
+        c > 0.0 && c <= n as f64,
+        "capacity must be in (0, N], got {c} for N={n}"
+    );
+
+    let g = |lam: f64| -> f64 { y.iter().map(|&v| (v - lam).clamp(0.0, 1.0)).sum() };
+
+    let mut bps: Vec<f64> = Vec::with_capacity(2 * n);
+    bps.extend_from_slice(y);
+    bps.extend(y.iter().map(|v| v - 1.0));
+    bps.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    // Bracket C between consecutive breakpoints (g non-increasing in lam).
+    let (mut lo, mut hi) = (0usize, bps.len() - 1);
+    while hi - lo > 1 {
+        let mid = (lo + hi) / 2;
+        if g(bps[mid]) >= c {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    let (lam_lo, lam_hi) = (bps[lo], bps[hi]);
+    let (g_lo, g_hi) = (g(lam_lo), g(lam_hi));
+    let mut lam = if g_lo == g_hi {
+        lam_lo
+    } else {
+        // g is linear on the segment: interpolate.
+        lam_lo + (g_lo - c) / (g_lo - g_hi) * (lam_hi - lam_lo)
+    };
+    // Newton polish: redistribute the float residual over the interior set.
+    let f_sum: f64 = y.iter().map(|&v| (v - lam).clamp(0.0, 1.0)).sum();
+    let interior = y
+        .iter()
+        .filter(|&&v| v - lam > 0.0 && v - lam < 1.0)
+        .count();
+    if interior > 0 {
+        lam += (f_sum - c) / interior as f64;
+    }
+    lam
+}
+
+/// Exact projection of `y` onto the capped simplex with capacity `c`.
+pub fn project(y: &[f64], c: f64) -> Vec<f64> {
+    let lam = water_level(y, c);
+    y.iter().map(|&v| (v - lam).clamp(0.0, 1.0)).collect()
+}
+
+/// In-place single-bump update `f <- Pi_F(f + eta * e_j)` using the dense
+/// oracle.  This is the O(N log N)-per-request *classic* path (OGB_cl with
+/// B = 1) used as the complexity baseline in the `complexity` bench.
+pub fn project_single_bump(f: &mut [f64], j: usize, eta: f64, c: f64) {
+    f[j] += eta;
+    let lam = water_level(f, c);
+    for v in f.iter_mut() {
+        *v = (*v - lam).clamp(0.0, 1.0);
+    }
+}
+
+/// Feasibility check used across the test-suite.
+pub fn is_feasible(f: &[f64], c: f64, tol: f64) -> bool {
+    let sum: f64 = f.iter().sum();
+    f.iter().all(|&v| (-tol..=1.0 + tol).contains(&v)) && (sum - c).abs() <= tol * c.max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{check, Gen};
+
+    fn assert_kkt(y: &[f64], f: &[f64], c: f64) {
+        // Feasibility
+        assert!(is_feasible(f, c, 1e-9), "infeasible: sum={}", f.iter().sum::<f64>());
+        // KKT: all interior components share the same y_i - f_i gap (= lam);
+        // capped components have y_i - 1 >= lam; zeroed have y_i <= lam.
+        let lam_candidates: Vec<f64> = y
+            .iter()
+            .zip(f)
+            .filter(|&(_, &fi)| fi > 1e-12 && fi < 1.0 - 1e-12)
+            .map(|(&yi, &fi)| yi - fi)
+            .collect();
+        if let Some(&lam) = lam_candidates.first() {
+            for &l in &lam_candidates {
+                assert!((l - lam).abs() < 1e-8, "non-uniform water level {l} vs {lam}");
+            }
+            for (&yi, &fi) in y.iter().zip(f) {
+                if fi <= 1e-12 {
+                    assert!(yi <= lam + 1e-8, "zeroed comp should have y <= lam");
+                }
+                if fi >= 1.0 - 1e-12 {
+                    assert!(yi - 1.0 >= lam - 1e-8, "capped comp should have y-1 >= lam");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_vector() {
+        let y = vec![0.5; 10];
+        let f = project(&y, 2.0);
+        for &v in &f {
+            assert!((v - 0.2).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn already_feasible_is_identity() {
+        let y = vec![0.3, 0.7, 0.5, 0.5];
+        let f = project(&y, 2.0);
+        for (a, b) in y.iter().zip(&f) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn mass_concentration() {
+        let mut y = vec![0.0; 100];
+        y[0] = 5.0;
+        y[1] = 5.0;
+        y[2] = 5.0;
+        let f = project(&y, 2.0);
+        assert!((f[0] - 2.0 / 3.0).abs() < 1e-9);
+        assert!(f[3].abs() < 1e-12);
+    }
+
+    #[test]
+    fn capacity_full_catalog() {
+        let y = vec![0.9, 1.4, 0.1];
+        let f = project(&y, 3.0);
+        for &v in &f {
+            assert!((v - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn single_bump_matches_full_projection() {
+        let mut f = vec![0.25; 8];
+        let c = 2.0;
+        project_single_bump(&mut f, 3, 0.1, c);
+        let mut y = vec![0.25; 8];
+        y[3] += 0.1;
+        let expect = project(&y, c);
+        for (a, b) in f.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        assert_kkt(&y, &f, c);
+    }
+
+    #[test]
+    fn property_projection_kkt_random() {
+        check("dense_kkt", |g: &mut Gen| {
+            let n = g.usize_in(2, 300);
+            let c = g.usize_in(1, n) as f64;
+            let scale = g.f64_in(0.2, 4.0);
+            let y: Vec<f64> = (0..n).map(|_| g.f64_in(-0.5, scale)).collect();
+            let f = project(&y, c);
+            assert_kkt(&y, &f, c);
+        });
+    }
+
+    #[test]
+    fn property_projection_is_idempotent() {
+        check("dense_idempotent", |g: &mut Gen| {
+            let n = g.usize_in(2, 200);
+            let c = g.usize_in(1, n) as f64;
+            let f0 = g.feasible_state(n, c);
+            let f1 = project(&f0, c);
+            for (a, b) in f0.iter().zip(&f1) {
+                assert!((a - b).abs() < 1e-9, "not identity: {a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn property_distance_optimality() {
+        // The projection must be at least as close to y as random feasible
+        // points (necessary condition of optimality).
+        check("dense_distance", |g: &mut Gen| {
+            let n = g.usize_in(2, 60);
+            let c = g.usize_in(1, n) as f64;
+            let y: Vec<f64> = (0..n).map(|_| g.f64_in(-1.0, 2.0)).collect();
+            let f = project(&y, c);
+            let dist = |a: &[f64]| -> f64 {
+                a.iter().zip(&y).map(|(x, yv)| (x - yv) * (x - yv)).sum()
+            };
+            let d_star = dist(&f);
+            for _ in 0..5 {
+                let other = g.feasible_state(n, c);
+                assert!(
+                    d_star <= dist(&other) + 1e-9,
+                    "projection not optimal: {d_star} > {}",
+                    dist(&other)
+                );
+            }
+        });
+    }
+}

@@ -1,0 +1,701 @@
+//! Lazy O(log N) capped-simplex projection — **the paper's Algorithm 2**.
+//!
+//! The classic OGB_cl policy projects the full N-vector after every request
+//! (O(N log N)–O(N²/B)).  The paper's observation: when a single component
+//! is bumped by `eta`, the projection is a *uniform* subtraction of
+//! `rho = eta / |M_p|` from every positive component (plus two corner
+//! cases).  So instead of touching N components we keep
+//!
+//!   * `f_tilde[i]` — the *unadjusted* value of component `i`,
+//!   * `rho`        — the global accumulated adjustment,
+//!   * `z`          — an ordered multiset over the positive `f_tilde`
+//!                    values,
+//!
+//! with the invariant  `f_i = f_tilde[i] - rho` if `i` is in `z`, else 0.
+//! A request only (1) re-keys the requested item in `z`, (2) advances
+//! `rho`, and (3) pops the few components that cross zero — each pop is
+//! O(log N) and the paper's amortized argument (§4.2) shows the expected
+//! number of pops per request is ≤ 1 + (N-C)/t.
+//!
+//! Two corner cases (paper §4):
+//!   1. the requested component would exceed 1 → clamp to 1, restore the
+//!      popped components and redo the redistribution among the *others*
+//!      with the reduced excess `1 - f_j` (happens at most once/request);
+//!   2. components driven below zero → pop from `z`, return their actual
+//!      remaining value to the excess, recompute `rho'` (the loop of
+//!      lines 11-18; monotone, hence terminating).
+//!
+//! **Numerical re-base** (not in the paper, required for 1e7+ request
+//! traces): `rho` and the stored `f_tilde` grow ~`eta` per request; once
+//! `rho` is large, `f_tilde - rho` loses precision.  When `rho` exceeds
+//! `rebase_threshold` we subtract `rho` from every stored value and reset
+//! it to 0 — O(N log N) amortized over ≥ millions of requests (measured in
+//! `figures --id fig9`; see DESIGN.md §5).
+
+use crate::util::{FxHashMap, OrdTree};
+
+/// Sentinel stored in `f_tilde` for components currently at zero.
+const ZERO_SENTINEL: f64 = -1.0;
+
+/// Outcome counters for one `request()` call (paper Fig. 9, right).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StepStats {
+    /// components popped to zero (lines 11-18 loop)
+    pub removed: u32,
+    /// iterations of the redistribution loop
+    pub loop_rounds: u32,
+    /// the requested component hit the f=1 cap (lines 19-24)
+    pub capped: bool,
+    /// request was a no-op because f_j was already 1
+    pub noop: bool,
+}
+
+/// Lazy representation of the fractional cache state `f ∈ F`.
+#[derive(Debug, Clone)]
+pub struct LazySimplex {
+    n: usize,
+    c: f64,
+    rho: f64,
+    f_tilde: Vec<f64>,
+    in_z: Vec<bool>,
+    z: OrdTree,
+    /// The key each in-z item is currently stored under in `z`.  PERF
+    /// (EXPERIMENTS.md §Perf iter 3): a requested item's `f_tilde` only
+    /// grows, so instead of re-keying the tree on every request we leave
+    /// the stored key as a *stale lower bound* and revalidate lazily when
+    /// the redistribution threshold pops it — identical zero-detection
+    /// (stale ≤ true, so every true sub-threshold entry is still popped),
+    /// two tree operations cheaper per request.
+    z_key: Vec<f64>,
+    rebase_threshold: f64,
+    rebase_count: u64,
+    /// Shadow of the state at the last `freeze()` — backs the O(1) frozen
+    /// reads used by the fractional policy under batching (reward must be
+    /// computed against the *materialized* cache, which only changes every
+    /// B requests).  Maps item -> f_tilde at freeze time (ZERO_SENTINEL if
+    /// the component was zero).
+    shadow: Option<Shadow>,
+}
+
+#[derive(Debug, Clone)]
+struct Shadow {
+    rho: f64,
+    saved: FxHashMap<u64, f64>,
+}
+
+impl LazySimplex {
+    /// Start from the uniform state `f_i = C/N` (the minimax center of F
+    /// used in Theorem 3.1's analysis).
+    pub fn new_uniform(n: usize, c: f64) -> Self {
+        assert!(n > 0, "empty catalog");
+        assert!(
+            c > 0.0 && c <= n as f64,
+            "capacity must be in (0, N], got {c} for N={n}"
+        );
+        let f0 = c / n as f64;
+        let mut z = OrdTree::new();
+        for i in 0..n {
+            z.insert(f0, i as u64);
+        }
+        Self {
+            n,
+            c,
+            rho: 0.0,
+            f_tilde: vec![f0; n],
+            in_z: vec![true; n],
+            z,
+            z_key: vec![f0; n],
+            rebase_threshold: 1e6,
+            rebase_count: 0,
+            shadow: None,
+        }
+    }
+
+    /// Start from an arbitrary feasible state (used by tests and by the
+    /// XLA-backed classic policy when handing state over).
+    pub fn from_state(f: &[f64], c: f64) -> Self {
+        let n = f.len();
+        let mut z = OrdTree::new();
+        let mut f_tilde = vec![ZERO_SENTINEL; n];
+        let mut in_z = vec![false; n];
+        let mut z_key = vec![f64::NAN; n];
+        for (i, &v) in f.iter().enumerate() {
+            assert!((-1e-9..=1.0 + 1e-9).contains(&v), "component out of range");
+            if v > 0.0 {
+                f_tilde[i] = v;
+                in_z[i] = true;
+                z.insert(v, i as u64);
+                z_key[i] = v;
+            }
+        }
+        Self {
+            n,
+            c,
+            rho: 0.0,
+            f_tilde,
+            in_z,
+            z,
+            z_key,
+            rebase_threshold: 1e6,
+            rebase_count: 0,
+            shadow: None,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn capacity(&self) -> f64 {
+        self.c
+    }
+
+    /// Current adjustment coefficient rho (consumed by Algorithm 3).
+    pub fn rho(&self) -> f64 {
+        self.rho
+    }
+
+    /// Unadjusted coefficient of item `i` (consumed by Algorithm 3);
+    /// `None` when the component is zero.
+    pub fn f_tilde(&self, i: u64) -> Option<f64> {
+        if self.in_z[i as usize] {
+            Some(self.f_tilde[i as usize])
+        } else {
+            None
+        }
+    }
+
+    /// Number of strictly positive components.
+    pub fn support(&self) -> usize {
+        self.z.len()
+    }
+
+    pub fn rebase_count(&self) -> u64 {
+        self.rebase_count
+    }
+
+    /// Configure the numerical re-base threshold (tests use tiny values to
+    /// force frequent re-bases).
+    pub fn set_rebase_threshold(&mut self, t: f64) {
+        assert!(t > 0.0);
+        self.rebase_threshold = t;
+    }
+
+    /// Current probability/fraction of item `i`: `f_i = f~_i - rho` or 0.
+    #[inline]
+    pub fn prob(&self, i: u64) -> f64 {
+        if self.in_z[i as usize] {
+            (self.f_tilde[i as usize] - self.rho).clamp(0.0, 1.0)
+        } else {
+            0.0
+        }
+    }
+
+    /// Materialize the full dense vector — O(N); only used by the
+    /// fractional policy at batch boundaries, tests, and figures.
+    pub fn to_dense(&self) -> Vec<f64> {
+        (0..self.n as u64).map(|i| self.prob(i)).collect()
+    }
+
+    /// Enable frozen-state tracking and snapshot "now" as the frozen state.
+    pub fn freeze(&mut self) {
+        self.shadow = Some(Shadow {
+            rho: self.rho,
+            saved: FxHashMap::default(),
+        });
+    }
+
+    /// Value of item `i` in the frozen (last `freeze()`) state. Falls back
+    /// to the live value when freezing was never enabled.
+    pub fn frozen_prob(&self, i: u64) -> f64 {
+        match &self.shadow {
+            None => self.prob(i),
+            Some(sh) => {
+                let ft = sh
+                    .saved
+                    .get(&i)
+                    .copied()
+                    .unwrap_or_else(|| self.encoded(i as usize));
+                if ft == ZERO_SENTINEL {
+                    0.0
+                } else {
+                    (ft - sh.rho).clamp(0.0, 1.0)
+                }
+            }
+        }
+    }
+
+    #[inline]
+    fn encoded(&self, i: usize) -> f64 {
+        if self.in_z[i] {
+            self.f_tilde[i]
+        } else {
+            ZERO_SENTINEL
+        }
+    }
+
+    /// Record the pre-mutation value of `i` into the shadow (no-op when
+    /// tracking is off or the item was already captured this epoch).
+    #[inline]
+    fn capture(&mut self, i: usize) {
+        if let Some(sh) = &mut self.shadow {
+            let enc = if self.in_z[i] {
+                self.f_tilde[i]
+            } else {
+                ZERO_SENTINEL
+            };
+            sh.saved.entry(i as u64).or_insert(enc);
+        }
+    }
+
+    /// Process a request for item `j` with step size `eta` — Algorithm 2.
+    ///
+    /// Cost: O(log N) amortized (tree re-key + expected O(1) pops).
+    pub fn request(&mut self, j: u64, eta: f64) -> StepStats {
+        debug_assert!(eta >= 0.0, "negative step");
+        let ji = j as usize;
+        assert!(ji < self.n, "item {j} out of catalog {n}", n = self.n);
+        let mut stats = StepStats::default();
+        if eta == 0.0 {
+            stats.noop = true;
+            return stats;
+        }
+
+        let fj = self.prob(j);
+        // Paper lines 1-2: the component is already at the cap — the whole
+        // bump is absorbed by the clamp; projection is the identity.
+        if fj >= 1.0 - 1e-12 {
+            stats.noop = true;
+            return stats;
+        }
+
+        // Bump the component.  If it is already in z we only update the
+        // source-of-truth vector: the stored tree key becomes a stale
+        // lower bound (f~ grew), revalidated lazily by the pop loop.
+        self.capture(ji);
+        let y_j = fj + eta; // true (adjusted) bumped value
+        self.f_tilde[ji] = y_j + self.rho;
+        if !self.in_z[ji] {
+            self.in_z[ji] = true;
+            self.z.insert(self.f_tilde[ji], j);
+            self.z_key[ji] = self.f_tilde[ji];
+        }
+
+        // Phase A (lines 11-18): redistribute `eta` over all positives.
+        let rho_before = self.rho;
+        let popped = self.redistribute(eta, &mut stats);
+
+        // Phase B (lines 19-24): the requested component overshot the cap.
+        if self.f_tilde[ji] - self.rho > 1.0 + 1e-12 {
+            stats.capped = true;
+            // RestoreRemoved(): roll phase A back entirely (popped items
+            // were recorded with their true f~, which is always a valid
+            // tree key).
+            self.rho = rho_before;
+            for &(v, i) in &popped {
+                self.f_tilde[i as usize] = v;
+                self.in_z[i as usize] = true;
+                self.z.insert(v, i);
+                self.z_key[i as usize] = v;
+            }
+            stats.removed = 0;
+            // Take j out (via its stored, possibly stale, key); the
+            // *others* must absorb exactly 1 - f_j.
+            self.z.remove(self.z_key[ji], j);
+            self.in_z[ji] = false;
+            self.z_key[ji] = f64::NAN;
+            let _ = self.redistribute(1.0 - fj, &mut stats);
+            // Pin j at exactly 1 (unadjusted: 1 + rho_final).
+            self.f_tilde[ji] = 1.0 + self.rho;
+            self.in_z[ji] = true;
+            self.z.insert(self.f_tilde[ji], j);
+            self.z_key[ji] = self.f_tilde[ji];
+        }
+
+        stats
+    }
+
+    /// Whether the accumulated adjustment warrants a precision re-base.
+    /// Re-basing is *driven by the owner* (policy/coordinator) rather than
+    /// performed implicitly, because any structure keyed off the raw
+    /// `f_tilde` values (the sampler's d-tree, Algorithm 3) must shift its
+    /// keys by the same amount — see `policies::ogb`.
+    pub fn needs_rebase(&self) -> bool {
+        self.rho > self.rebase_threshold
+    }
+
+    /// Re-base if needed; returns the applied shift (the old rho) so owners
+    /// can shift dependent structures.
+    pub fn maybe_rebase(&mut self) -> Option<f64> {
+        if self.needs_rebase() {
+            let shift = self.rho;
+            self.rebase();
+            Some(shift)
+        } else {
+            None
+        }
+    }
+
+    /// The redistribution loop: spread `excess` uniformly over the current
+    /// positive set, popping components that would cross zero and
+    /// recomputing until stable.  Returns every popped (unadjusted value,
+    /// item) pair so phase B can restore them.
+    fn redistribute(&mut self, excess: f64, stats: &mut StepStats) -> Vec<(f64, u64)> {
+        let mut eta_left = excess;
+        let mut popped_all: Vec<(f64, u64)> = Vec::new();
+        loop {
+            stats.loop_rounds += 1;
+            let m = self.z.len();
+            if m == 0 {
+                // Degenerate (C <= 1 with a single positive component that
+                // itself zeroed) — cannot happen with C >= 1 catalogs; keep
+                // rho unchanged.
+                debug_assert!(false, "positive set emptied during redistribution");
+                break;
+            }
+            let rho_p = eta_left / m as f64;
+            let threshold = self.rho + rho_p;
+            let mut any = false;
+            while let Some((k, i)) = self.z.pop_if_below(threshold) {
+                let ii = i as usize;
+                // The stored key may be a stale lower bound (requested
+                // items are not re-keyed); revalidate against f~.
+                let v = self.f_tilde[ii];
+                if v >= threshold {
+                    self.z.insert(v, i);
+                    self.z_key[ii] = v;
+                    continue;
+                }
+                debug_assert!(k <= v + 1e-15);
+                // The component only had (v - rho) left to give.
+                eta_left -= v - self.rho;
+                self.capture(ii);
+                self.f_tilde[ii] = ZERO_SENTINEL;
+                self.in_z[ii] = false;
+                self.z_key[ii] = f64::NAN;
+                popped_all.push((v, i));
+                stats.removed += 1;
+                any = true;
+            }
+            if !any {
+                self.rho += rho_p;
+                break;
+            }
+        }
+        popped_all
+    }
+
+    /// Subtract rho from every stored coefficient and reset it to zero —
+    /// restores full float precision.  O(N log N), triggered every
+    /// ~`rebase_threshold / eta` requests.
+    fn rebase(&mut self) {
+        let rho = self.rho;
+        let mut z = OrdTree::new();
+        for i in 0..self.n {
+            if self.in_z[i] {
+                self.capture(i);
+                self.f_tilde[i] -= rho;
+                z.insert(self.f_tilde[i], i as u64);
+                self.z_key[i] = self.f_tilde[i];
+            }
+        }
+        self.z = z;
+        self.rho = 0.0;
+        if let Some(sh) = &mut self.shadow {
+            // Keep frozen reads consistent: shadowed values were captured
+            // pre-rebase; the frozen rho stays as-is for them, but items
+            // not yet captured now store rebased values.  Capture-all above
+            // guarantees every in_z item is in the shadow, and zero items
+            // are rho-independent.
+            let _ = sh;
+        }
+        self.rebase_count += 1;
+    }
+
+    /// Exact invariant check (test/debug only — O(N)): sum of components
+    /// equals C and every component lies in [0, 1].
+    pub fn check_invariants(&self, tol: f64) {
+        let mut sum = 0.0;
+        for i in 0..self.n as u64 {
+            let p = self.prob(i);
+            assert!(
+                (0.0..=1.0 + tol).contains(&p),
+                "component {i} out of range: {p}"
+            );
+            sum += p;
+        }
+        assert!(
+            (sum - self.c).abs() < tol * self.c.max(1.0),
+            "mass drifted: sum={sum} expected={c}",
+            c = self.c
+        );
+        assert_eq!(
+            self.z.len(),
+            self.in_z.iter().filter(|&&b| b).count(),
+            "z / in_z cardinality mismatch"
+        );
+        // Every z entry must be a (possibly stale) LOWER bound on the true
+        // f~ of an in-z item, and true components must be positive.
+        for (k, i) in self.z.iter() {
+            assert!(self.in_z[i as usize], "tree entry for zeroed item {i}");
+            let v = self.f_tilde[i as usize];
+            assert!(k <= v + tol, "tree key {k} above true value {v} for {i}");
+            assert!(
+                v - self.rho > -tol,
+                "non-positive component {i}: {} vs rho={}",
+                v,
+                self.rho
+            );
+            assert_eq!(
+                self.z_key[i as usize], k,
+                "z_key mirror out of sync for {i}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proj::dense;
+    use crate::util::check::{check, Gen};
+    use crate::util::Xoshiro256pp;
+
+    /// Dense mirror: maintain f via the exact oracle for the same request
+    /// stream and compare elementwise.
+    fn compare_streams(n: usize, c: f64, eta: f64, steps: usize, seed: u64, tol: f64) {
+        let mut lazy = LazySimplex::new_uniform(n, c);
+        let mut f = vec![c / n as f64; n];
+        let mut rng = Xoshiro256pp::seed_from(seed);
+        for _ in 0..steps {
+            let j = rng.next_below(n as u64);
+            lazy.request(j, eta);
+            dense::project_single_bump(&mut f, j as usize, eta, c);
+            for (i, fv) in f.iter().enumerate() {
+                let lv = lazy.prob(i as u64);
+                assert!(
+                    (lv - fv).abs() < tol,
+                    "item {i} diverged: lazy={lv} dense={fv}"
+                );
+            }
+        }
+        lazy.check_invariants(1e-9);
+    }
+
+    #[test]
+    fn single_request_uniform_redistribution() {
+        // n=6, C=1.5, all interior; a bump of eta spreads as rho = eta/6.
+        let mut s = LazySimplex::new_uniform(6, 1.5);
+        s.request(1, 0.12);
+        let rho = 0.12 / 6.0;
+        assert!((s.prob(1) - (0.25 + 0.12 - rho)).abs() < 1e-12);
+        for i in [0u64, 2, 3, 4, 5] {
+            assert!((s.prob(i) - (0.25 - rho)).abs() < 1e-12);
+        }
+        s.check_invariants(1e-12);
+    }
+
+    #[test]
+    fn noop_when_component_at_cap() {
+        let mut f = vec![0.0; 4];
+        f[0] = 1.0;
+        f[1] = 0.5;
+        f[2] = 0.5;
+        let mut s = LazySimplex::from_state(&f, 2.0);
+        let st = s.request(0, 0.3);
+        assert!(st.noop);
+        assert_eq!(s.prob(0), 1.0);
+        s.check_invariants(1e-12);
+    }
+
+    #[test]
+    fn cap_corner_case_matches_dense() {
+        // Component close to 1 gets a big bump: must clamp and spread 1-f_j.
+        let f = vec![0.95, 0.35, 0.35, 0.35];
+        let mut s = LazySimplex::from_state(&f, 2.0);
+        let st = s.request(0, 0.5);
+        assert!(st.capped);
+        let mut y = f.clone();
+        y[0] += 0.5;
+        let expect = dense::project(&y, 2.0);
+        for i in 0..4 {
+            assert!(
+                (s.prob(i as u64) - expect[i]).abs() < 1e-12,
+                "{i}: {} vs {}",
+                s.prob(i as u64),
+                expect[i]
+            );
+        }
+        s.check_invariants(1e-12);
+    }
+
+    #[test]
+    fn zero_crossing_corner_case_matches_dense() {
+        let f = vec![0.005, 0.005, 0.7, 0.7, 0.59];
+        let mut s = LazySimplex::from_state(&f, 2.0);
+        let st = s.request(4, 0.4);
+        assert!(st.removed >= 1, "tiny components must be popped");
+        let mut y = f.clone();
+        y[4] += 0.4;
+        let expect = dense::project(&y, 2.0);
+        for i in 0..5 {
+            assert!(
+                (s.prob(i as u64) - expect[i]).abs() < 1e-12,
+                "{i}: {} vs {}",
+                s.prob(i as u64),
+                expect[i]
+            );
+        }
+    }
+
+    #[test]
+    fn item_from_zero_reenters() {
+        let f = vec![0.0, 1.0, 1.0, 0.0];
+        let mut s = LazySimplex::from_state(&f, 2.0);
+        s.request(0, 0.3);
+        // y = [0.3, 1, 1, 0]: caps stay, 0 absorbs... dense check
+        let expect = dense::project(&[0.3, 1.0, 1.0, 0.0], 2.0);
+        for i in 0..4 {
+            assert!((s.prob(i as u64) - expect[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn stream_equivalence_small() {
+        compare_streams(16, 4.0, 0.05, 400, 7, 1e-9);
+    }
+
+    #[test]
+    fn stream_equivalence_theory_eta() {
+        let (n, c, t) = (64usize, 16.0, 2000usize);
+        let eta = crate::theory_eta(c, n as f64, t as f64, 1.0);
+        compare_streams(n, c, eta, t, 11, 1e-8);
+    }
+
+    #[test]
+    fn stream_equivalence_large_eta_many_corner_cases() {
+        // eta comparable to 1/C forces caps and zero-crossings constantly.
+        compare_streams(24, 6.0, 0.5, 600, 13, 1e-8);
+    }
+
+    #[test]
+    fn property_stream_equivalence() {
+        check("lazy_equals_dense", |g: &mut Gen| {
+            let n = g.usize_in(4, 80);
+            let c = g.usize_in(1, n.min(40)) as f64;
+            let eta = g.f64_in(1e-4, 0.8);
+            let steps = g.usize_in(20, 150);
+            let seed = g.u64_below(u64::MAX);
+            compare_streams(n, c, eta, steps, seed, 1e-7);
+        });
+    }
+
+    #[test]
+    fn rebase_preserves_state() {
+        let n = 32;
+        let c = 8.0;
+        let mut a = LazySimplex::new_uniform(n, c);
+        let mut b = LazySimplex::new_uniform(n, c);
+        b.set_rebase_threshold(1e-3); // force constant re-bases
+        let mut rng = Xoshiro256pp::seed_from(3);
+        for _ in 0..3000 {
+            let j = rng.next_below(n as u64);
+            a.request(j, 0.02);
+            b.request(j, 0.02);
+            b.maybe_rebase();
+        }
+        assert!(b.rebase_count() > 10, "rebase must have triggered");
+        for i in 0..n as u64 {
+            assert!(
+                (a.prob(i) - b.prob(i)).abs() < 1e-9,
+                "rebase changed state at {i}"
+            );
+        }
+        b.check_invariants(1e-9);
+    }
+
+    #[test]
+    fn long_stream_mass_conservation() {
+        let n = 1000;
+        let c = 250.0;
+        let mut s = LazySimplex::new_uniform(n, c);
+        let eta = crate::theory_eta(c, n as f64, 5e4, 1.0);
+        let mut rng = Xoshiro256pp::seed_from(5);
+        let zipf = crate::util::Zipf::new(n as u64, 0.9);
+        for _ in 0..50_000 {
+            let j = zipf.sample(&mut rng);
+            s.request(j, eta);
+        }
+        s.check_invariants(1e-6);
+    }
+
+    #[test]
+    fn removed_items_amortized_constant() {
+        // Paper §4.2 / Fig 9 right: the average number of removals per
+        // request approaches <= ~0.5 in practice.
+        let n = 2000;
+        let c = 100.0;
+        let mut s = LazySimplex::new_uniform(n, c);
+        let eta = crate::theory_eta(c, n as f64, 2e4, 1.0);
+        let mut rng = Xoshiro256pp::seed_from(9);
+        let zipf = crate::util::Zipf::new(n as u64, 1.1);
+        let mut removed = 0u64;
+        let t = 20_000;
+        for _ in 0..t {
+            removed += s.request(zipf.sample(&mut rng), eta).removed as u64;
+        }
+        let avg = removed as f64 / t as f64;
+        // includes the transient drain of the (N - C) initial positives
+        assert!(
+            avg < 1.0 + (n as f64 - c) / t as f64,
+            "amortized removals too high: {avg}"
+        );
+    }
+
+    #[test]
+    fn frozen_prob_tracks_batch_boundary() {
+        let n = 16;
+        let c = 4.0;
+        let mut s = LazySimplex::new_uniform(n, c);
+        s.request(0, 0.2);
+        s.freeze();
+        let frozen: Vec<f64> = (0..n as u64).map(|i| s.frozen_prob(i)).collect();
+        // live state moves on; frozen stays
+        for step in 0..10 {
+            s.request(step % n as u64, 0.15);
+            for i in 0..n as u64 {
+                assert!(
+                    (s.frozen_prob(i) - frozen[i as usize]).abs() < 1e-12,
+                    "frozen value drifted at {i}"
+                );
+            }
+        }
+        // re-freeze snaps to live
+        s.freeze();
+        for i in 0..n as u64 {
+            assert!((s.frozen_prob(i) - s.prob(i)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn frozen_prob_survives_rebase() {
+        let n = 16;
+        let c = 4.0;
+        let mut s = LazySimplex::new_uniform(n, c);
+        s.set_rebase_threshold(1e-4);
+        s.freeze();
+        let frozen: Vec<f64> = (0..n as u64).map(|i| s.frozen_prob(i)).collect();
+        let mut rng = Xoshiro256pp::seed_from(17);
+        for _ in 0..500 {
+            s.request(rng.next_below(n as u64), 0.05);
+            s.maybe_rebase();
+        }
+        assert!(s.rebase_count() > 0);
+        for i in 0..n as u64 {
+            assert!(
+                (s.frozen_prob(i) - frozen[i as usize]).abs() < 1e-9,
+                "frozen value drifted across rebase at {i}"
+            );
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! Capped-simplex projection: the dense exact oracle (paper Eq. (3)) and
+//! the paper's lazy O(log N) incremental variant (Algorithm 2).
+
+pub mod dense;
+pub mod lazy;
+
+pub use lazy::{LazySimplex, StepStats};

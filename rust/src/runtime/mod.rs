@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, produced by `make artifacts` →
+//! `python/compile/aot.py`) and executes them on the XLA CPU client from
+//! the Rust request path.  Python never runs at request time.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod pjrt;
+pub mod registry;
+
+pub use pjrt::{PjrtRuntime, ProjExecutable};
+pub use registry::{artifacts_available, ArtifactRegistry, XlaDenseStep};

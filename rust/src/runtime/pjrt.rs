@@ -1,0 +1,98 @@
+//! Thin wrapper over the `xla` crate: CPU PJRT client, HLO-text loading,
+//! compilation and execution of the two artifact kinds emitted by
+//! `python/compile/aot.py`:
+//!
+//!   proj_{N}.hlo.txt      (y[N] f32, c f32) -> (f[N] f32,)
+//!   ogb_step_{N}.hlo.txt  (f[N], counts[N], eta, c)
+//!                             -> (f_next[N] f32, reward f32)
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Shared PJRT CPU client (compilation + execution device).
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file.
+    pub fn compile_hlo_text<P: AsRef<Path>>(&self, path: P) -> Result<xla::PjRtLoadedExecutable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile {}", path.display()))
+    }
+}
+
+/// A compiled capped-simplex projection for one catalog size N.
+pub struct ProjExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub n: usize,
+}
+
+impl ProjExecutable {
+    pub fn load(rt: &PjrtRuntime, path: &Path, n: usize) -> Result<Self> {
+        Ok(Self {
+            exe: rt.compile_hlo_text(path)?,
+            n,
+        })
+    }
+
+    /// Execute the projection: f = Pi_F(y).
+    pub fn project(&self, y: &[f32], c: f32) -> Result<Vec<f32>> {
+        anyhow::ensure!(y.len() == self.n, "expected N={}, got {}", self.n, y.len());
+        let y_lit = xla::Literal::vec1(y);
+        let c_lit = xla::Literal::scalar(c);
+        let result = self.exe.execute::<xla::Literal>(&[y_lit, c_lit])?[0][0]
+            .to_literal_sync()?;
+        // return_tuple=True → 1-tuple
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// A compiled fused OGB_cl step for one catalog size N.
+pub struct OgbStepExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub n: usize,
+}
+
+impl OgbStepExecutable {
+    pub fn load(rt: &PjrtRuntime, path: &Path, n: usize) -> Result<Self> {
+        Ok(Self {
+            exe: rt.compile_hlo_text(path)?,
+            n,
+        })
+    }
+
+    /// Execute (f, counts, eta, c) -> (f_next, batch reward).
+    pub fn step(&self, f: &[f32], counts: &[f32], eta: f32, c: f32) -> Result<(Vec<f32>, f32)> {
+        anyhow::ensure!(f.len() == self.n && counts.len() == self.n);
+        let args = [
+            xla::Literal::vec1(f),
+            xla::Literal::vec1(counts),
+            xla::Literal::scalar(eta),
+            xla::Literal::scalar(c),
+        ];
+        let result = self.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let (f_lit, r_lit) = result.to_tuple2()?;
+        let f_next = f_lit.to_vec::<f32>()?;
+        let reward = r_lit.to_vec::<f32>()?[0];
+        Ok((f_next, reward))
+    }
+}

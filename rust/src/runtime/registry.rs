@@ -1,0 +1,127 @@
+//! Artifact registry: discovers `artifacts/*.hlo.txt` by catalog size and
+//! provides the XLA-backed [`DenseStep`] used by the `ogb-classic-xla`
+//! policy variant (the L2/L1 layers executing on the Rust request path).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::pjrt::{OgbStepExecutable, PjrtRuntime, ProjExecutable};
+use crate::policies::DenseStep;
+
+/// Default artifacts directory: `$OGB_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("OGB_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Catalog sizes with both artifacts present on disk.
+pub fn artifacts_available(dir: &Path) -> Vec<usize> {
+    let mut sizes = Vec::new();
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return sizes;
+    };
+    for e in entries.flatten() {
+        let name = e.file_name().to_string_lossy().into_owned();
+        if let Some(rest) = name
+            .strip_prefix("ogb_step_")
+            .and_then(|s| s.strip_suffix(".hlo.txt"))
+        {
+            if let Ok(n) = rest.parse::<usize>() {
+                if dir.join(format!("proj_{n}.hlo.txt")).exists() {
+                    sizes.push(n);
+                }
+            }
+        }
+    }
+    sizes.sort_unstable();
+    sizes
+}
+
+/// Lazily compiled artifact set for one catalog size.
+pub struct ArtifactRegistry {
+    rt: PjrtRuntime,
+    dir: PathBuf,
+}
+
+impl ArtifactRegistry {
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        anyhow::ensure!(
+            dir.is_dir(),
+            "artifacts directory {} missing — run `make artifacts`",
+            dir.display()
+        );
+        Ok(Self {
+            rt: PjrtRuntime::cpu()?,
+            dir,
+        })
+    }
+
+    pub fn open_default() -> Result<Self> {
+        Self::open(artifacts_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.rt.platform()
+    }
+
+    pub fn sizes(&self) -> Vec<usize> {
+        artifacts_available(&self.dir)
+    }
+
+    pub fn load_proj(&self, n: usize) -> Result<ProjExecutable> {
+        let path = self.dir.join(format!("proj_{n}.hlo.txt"));
+        anyhow::ensure!(path.exists(), "no proj artifact for N={n} in {}", self.dir.display());
+        ProjExecutable::load(&self.rt, &path, n)
+    }
+
+    pub fn load_ogb_step(&self, n: usize) -> Result<OgbStepExecutable> {
+        let path = self.dir.join(format!("ogb_step_{n}.hlo.txt"));
+        anyhow::ensure!(path.exists(), "no ogb_step artifact for N={n} in {}", self.dir.display());
+        OgbStepExecutable::load(&self.rt, &path, n)
+    }
+
+    /// Build the XLA-backed dense step backend for catalog size `n`
+    /// (requires an exactly matching artifact).
+    pub fn dense_step(&self, n: usize) -> Result<XlaDenseStep> {
+        Ok(XlaDenseStep {
+            exe: self.load_ogb_step(n)?,
+            scratch_f: vec![0f32; n],
+            scratch_g: vec![0f32; n],
+        })
+    }
+}
+
+/// [`DenseStep`] backend executing the fused AOT artifact
+/// `(f, counts, eta, c) -> (f', reward)` through PJRT.
+pub struct XlaDenseStep {
+    exe: OgbStepExecutable,
+    scratch_f: Vec<f32>,
+    scratch_g: Vec<f32>,
+}
+
+impl DenseStep for XlaDenseStep {
+    fn step(&mut self, f: &mut Vec<f64>, counts: &[f64], eta: f64, c: f64) {
+        assert_eq!(f.len(), self.exe.n, "catalog size must match the artifact");
+        for (d, &s) in self.scratch_f.iter_mut().zip(f.iter()) {
+            *d = s as f32;
+        }
+        for (d, &s) in self.scratch_g.iter_mut().zip(counts.iter()) {
+            *d = s as f32;
+        }
+        let (f_next, _reward) = self
+            .exe
+            .step(&self.scratch_f, &self.scratch_g, eta as f32, c as f32)
+            .context("XLA ogb_step execution")
+            .expect("artifact execution failed");
+        for (d, s) in f.iter_mut().zip(f_next) {
+            *d = s as f64;
+        }
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "xla"
+    }
+}

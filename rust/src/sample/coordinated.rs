@@ -1,0 +1,403 @@
+//! Coordinated Poisson sampling with permanent random numbers —
+//! **the paper's Algorithm 3** (UPDATESAMPLE).
+//!
+//! Rounding the fractional state `f` to an integral cache `x` with
+//! `E[x_i] = f_i` uses Poisson sampling: item `i` is cached iff
+//! `p_i <= f_i`, where `p_i` is a *permanent* uniform random number
+//! (Brewer et al. 1972) — permanence gives positive coordination, i.e.
+//! consecutive samples overlap maximally, minimizing cache replacements.
+//!
+//! With the lazy projection, `f_i = f~_i - rho`, so the inclusion test is
+//! `f~_i - p_i >= rho`.  For every cached, un-requested item the key
+//! `d_i = f~_i - p_i` is *constant*; keeping the keys in an ordered tree
+//! means an update only touches (a) the <=B requested items and (b) the
+//! items whose key is crossed by the advancing threshold `rho` — expected
+//! B evictions per batch (paper §5.2) at O(log N) each.
+//!
+//! The permanent numbers are *hash-derived* (`p_i = h(seed, epoch, i)`):
+//! zero bytes stored, bit-reproducible, and the paper's optional periodic
+//! re-draw of the `{p_i}` is a single epoch bump ([`CoordinatedSampler::redraw`]).
+
+use crate::proj::LazySimplex;
+use crate::util::fxhash::hash2;
+use crate::util::OrdTree;
+
+/// Replacement accounting for one UPDATESAMPLE call.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SampleStats {
+    pub added: u32,
+    pub evicted: u32,
+}
+
+/// Integral cache state maintained by coordinated Poisson sampling.
+#[derive(Debug, Clone)]
+pub struct CoordinatedSampler {
+    n: usize,
+    seed: u64,
+    epoch: u64,
+    cached: Vec<bool>,
+    occupancy: usize,
+    /// d_i = f~_i - p_i for every cached item (key must mirror the tree).
+    d_key: Vec<f64>,
+    d: OrdTree,
+}
+
+impl CoordinatedSampler {
+    /// Build the first sample from the current fractional state
+    /// (Poisson sampling, paper §5.1 "First sample").
+    pub fn new(lazy: &LazySimplex, seed: u64) -> Self {
+        let n = lazy.n();
+        let mut s = Self {
+            n,
+            seed,
+            epoch: 0,
+            cached: vec![false; n],
+            occupancy: 0,
+            d_key: vec![f64::NAN; n],
+            d: OrdTree::new(),
+        };
+        s.resample_all(lazy);
+        s
+    }
+
+    /// Permanent random number of item `i` in the current epoch, in [0,1).
+    #[inline]
+    pub fn p(&self, i: u64) -> f64 {
+        let h = hash2(self.seed ^ self.epoch.wrapping_mul(0x9E37_79B9), i);
+        (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    #[inline]
+    pub fn is_cached(&self, i: u64) -> bool {
+        self.cached[i as usize]
+    }
+
+    /// Instantaneous number of cached items (soft constraint: E[·] = C).
+    pub fn occupancy(&self) -> usize {
+        self.occupancy
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Iterate over the cached item ids (O(occupancy log N)).
+    pub fn cached_items(&self) -> impl Iterator<Item = u64> + '_ {
+        self.d.iter().map(|(_, i)| i)
+    }
+
+    /// Algorithm 3: refresh the sample after a batch of requests.
+    ///
+    /// `requested` are the item ids requested since the previous update
+    /// (duplicates allowed).  Cost: O((B + evictions) log N).
+    pub fn update(&mut self, lazy: &LazySimplex, requested: &[u64]) -> SampleStats {
+        let mut stats = SampleStats::default();
+        let rho = lazy.rho();
+
+        // Group 1 (lines 1-8): requested items — their f~ changed.
+        for &j in requested {
+            let ji = j as usize;
+            let p_j = self.p(j);
+            match lazy.f_tilde(j) {
+                Some(ft) => {
+                    let key = ft - p_j;
+                    if self.cached[ji] {
+                        // PERF (EXPERIMENTS.md §Perf iter 2): no re-key.
+                        // f~_j only grows when j is requested, so the
+                        // stored key is a *lower bound* on the true d_j;
+                        // the eviction sweep below revalidates any popped
+                        // stale key against the live state, which makes
+                        // skipping the 2 tree ops here behaviorally
+                        // identical to Algorithm 3's eager re-key.
+                    } else if ft - rho >= p_j {
+                        self.d.insert(key, j);
+                        self.d_key[ji] = key;
+                        self.cached[ji] = true;
+                        self.occupancy += 1;
+                        stats.added += 1;
+                    }
+                }
+                None => {
+                    // The component was driven to zero within the batch;
+                    // evict immediately (its key would be stale).
+                    if self.cached[ji] {
+                        self.d.remove(self.d_key[ji], j);
+                        self.d_key[ji] = f64::NAN;
+                        self.cached[ji] = false;
+                        self.occupancy -= 1;
+                        stats.evicted += 1;
+                    }
+                }
+            }
+        }
+
+        // Group 3 (lines 9-10): cached items crossed by the threshold.
+        // (Group 2 — un-requested, un-cached items — needs no work: their
+        // f only decreased.)  Popped keys may be stale lower bounds (see
+        // above): revalidate against the live state and re-insert the
+        // survivors with their true key.
+        while let Some((_, i)) = self.d.pop_if_below(rho) {
+            let ii = i as usize;
+            debug_assert!(self.cached[ii]);
+            if let Some(ft) = lazy.f_tilde(i) {
+                let true_key = ft - self.p(i);
+                if true_key >= rho {
+                    self.d.insert(true_key, i);
+                    self.d_key[ii] = true_key;
+                    continue;
+                }
+            }
+            self.cached[ii] = false;
+            self.d_key[ii] = f64::NAN;
+            self.occupancy -= 1;
+            stats.evicted += 1;
+        }
+        stats
+    }
+
+    /// Shift every stored key by `-shift` — must be called when the owning
+    /// [`LazySimplex`] re-bases (its `f_tilde` values all dropped by
+    /// `shift`).  O(occupancy · log N).
+    pub fn shift_keys(&mut self, shift: f64) {
+        let mut d = OrdTree::new();
+        for (k, i) in self.d.iter() {
+            let nk = k - shift;
+            d.insert(nk, i);
+            self.d_key[i as usize] = nk;
+        }
+        self.d = d;
+    }
+
+    /// Redraw the permanent random numbers (paper §5.1: "may periodically
+    /// be randomly redrawn") and rebuild the sample accordingly.
+    pub fn redraw(&mut self, lazy: &LazySimplex) -> SampleStats {
+        self.epoch += 1;
+        self.rebuild(lazy)
+    }
+
+    /// Rebuild the sample from scratch against the current state, keeping
+    /// permanent numbers — used after deserialization and by tests.
+    pub fn rebuild(&mut self, lazy: &LazySimplex) -> SampleStats {
+        let before: Vec<bool> = self.cached.clone();
+        self.resample_all(lazy);
+        let mut stats = SampleStats::default();
+        for i in 0..self.n {
+            match (before[i], self.cached[i]) {
+                (false, true) => stats.added += 1,
+                (true, false) => stats.evicted += 1,
+                _ => {}
+            }
+        }
+        stats
+    }
+
+    fn resample_all(&mut self, lazy: &LazySimplex) {
+        self.d.clear();
+        self.occupancy = 0;
+        let rho = lazy.rho();
+        for i in 0..self.n as u64 {
+            let ii = i as usize;
+            self.cached[ii] = false;
+            self.d_key[ii] = f64::NAN;
+            if let Some(ft) = lazy.f_tilde(i) {
+                let p_i = self.p(i);
+                if ft - rho >= p_i {
+                    let key = ft - p_i;
+                    self.d.insert(key, i);
+                    self.d_key[ii] = key;
+                    self.cached[ii] = true;
+                    self.occupancy += 1;
+                }
+            }
+        }
+    }
+
+    /// Test/debug-only exhaustive consistency check against the fractional
+    /// state: cached ⟺ f_i >= p_i, and the d-tree mirrors the cached set.
+    pub fn check_invariants(&self, lazy: &LazySimplex) {
+        let mut occ = 0;
+        for i in 0..self.n as u64 {
+            let f_i = lazy.prob(i);
+            let p_i = self.p(i);
+            let should = f_i >= p_i && f_i > 0.0;
+            assert_eq!(
+                self.cached[i as usize],
+                should,
+                "item {i}: cached={} but f={f_i} p={p_i}",
+                self.cached[i as usize]
+            );
+            if self.cached[i as usize] {
+                occ += 1;
+                assert!(self.d.contains(self.d_key[i as usize], i), "d-tree missing {i}");
+            }
+        }
+        assert_eq!(occ, self.occupancy);
+        assert_eq!(self.d.len(), occ);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256pp;
+
+    fn drive(n: usize, c: f64, eta: f64, steps: usize, batch: usize, seed: u64) {
+        let mut lazy = LazySimplex::new_uniform(n, c);
+        let mut smp = CoordinatedSampler::new(&lazy, seed);
+        smp.check_invariants(&lazy);
+        let mut rng = Xoshiro256pp::seed_from(seed ^ 0xABCD);
+        let zipf = crate::util::Zipf::new(n as u64, 0.8);
+        let mut batch_items = Vec::new();
+        for step in 0..steps {
+            let j = zipf.sample(&mut rng);
+            lazy.request(j, eta);
+            batch_items.push(j);
+            if (step + 1) % batch == 0 {
+                smp.update(&lazy, &batch_items);
+                batch_items.clear();
+                smp.check_invariants(&lazy);
+            }
+        }
+    }
+
+    #[test]
+    fn invariants_b1() {
+        drive(64, 16.0, 0.05, 300, 1, 1);
+    }
+
+    #[test]
+    fn invariants_b10() {
+        drive(100, 25.0, 0.03, 1000, 10, 2);
+    }
+
+    #[test]
+    fn invariants_b100_aggressive_eta() {
+        drive(50, 10.0, 0.4, 2000, 100, 3);
+    }
+
+    #[test]
+    fn first_sample_marginals() {
+        // E[occupancy] = C over many seeds; each item's inclusion rate ~ f_i.
+        let n = 200;
+        let c = 50.0;
+        let lazy = LazySimplex::new_uniform(n, c);
+        let mut occ_sum = 0.0;
+        let trials = 400;
+        for seed in 0..trials {
+            let s = CoordinatedSampler::new(&lazy, seed);
+            occ_sum += s.occupancy() as f64;
+        }
+        let mean = occ_sum / trials as f64;
+        assert!(
+            (mean - c).abs() < 1.0,
+            "mean occupancy {mean} far from C={c}"
+        );
+    }
+
+    #[test]
+    fn marginal_probability_tracks_f() {
+        // Fix a non-uniform f; check inclusion frequency of a high-f and a
+        // low-f item across seeds.
+        let n = 20;
+        let mut f = vec![0.1; n];
+        f[0] = 0.9;
+        f[1] = 0.3;
+        let total: f64 = f.iter().sum();
+        let lazy = LazySimplex::from_state(&f, total);
+        let trials = 2000;
+        let mut hits0 = 0;
+        let mut hits1 = 0;
+        for seed in 0..trials {
+            let s = CoordinatedSampler::new(&lazy, seed);
+            hits0 += s.is_cached(0) as u32;
+            hits1 += s.is_cached(1) as u32;
+        }
+        let r0 = hits0 as f64 / trials as f64;
+        let r1 = hits1 as f64 / trials as f64;
+        assert!((r0 - 0.9).abs() < 0.03, "P[x_0]={r0} expect 0.9");
+        assert!((r1 - 0.3).abs() < 0.03, "P[x_1]={r1} expect 0.3");
+    }
+
+    #[test]
+    fn coordination_minimizes_replacements() {
+        // Consecutive updates with a slowly changing f must replace far
+        // fewer items than fresh independent samples would.
+        let n = 500;
+        let c = 125.0;
+        let eta = 0.01;
+        let mut lazy = LazySimplex::new_uniform(n, c);
+        let mut smp = CoordinatedSampler::new(&lazy, 7);
+        let mut rng = Xoshiro256pp::seed_from(8);
+        let mut replaced = 0u64;
+        let updates = 200;
+        for _ in 0..updates {
+            let j = rng.next_below(n as u64);
+            lazy.request(j, eta);
+            let st = smp.update(&lazy, &[j]);
+            replaced += st.evicted as u64;
+        }
+        let per_update = replaced as f64 / updates as f64;
+        // paper §5.2: ~B (=1) evictions expected per update; fresh Poisson
+        // sampling would replace ~2*C*(avg TV distance) >> 1.
+        assert!(
+            per_update < 2.0,
+            "coordinated sampling replaced {per_update}/update"
+        );
+    }
+
+    #[test]
+    fn occupancy_concentration() {
+        // CV <= 1/sqrt(C) in the worst (uniform) case — paper §5.1.
+        let n = 10_000;
+        let c = 1000.0;
+        let lazy = LazySimplex::new_uniform(n, c);
+        let mut devs = Vec::new();
+        for seed in 0..50 {
+            let s = CoordinatedSampler::new(&lazy, seed);
+            devs.push(s.occupancy() as f64);
+        }
+        let mean: f64 = devs.iter().sum::<f64>() / devs.len() as f64;
+        let var: f64 =
+            devs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / devs.len() as f64;
+        let cv = var.sqrt() / mean;
+        assert!(cv <= 1.5 / (c).sqrt(), "occupancy CV {cv} too large");
+    }
+
+    #[test]
+    fn shift_keys_preserves_sample_across_rebase() {
+        let n = 128;
+        let c = 32.0;
+        let mut lazy = LazySimplex::new_uniform(n, c);
+        lazy.set_rebase_threshold(0.05);
+        let mut smp = CoordinatedSampler::new(&lazy, 9);
+        let mut rng = Xoshiro256pp::seed_from(10);
+        let mut rebases = 0;
+        for _ in 0..2000 {
+            let j = rng.next_below(n as u64);
+            lazy.request(j, 0.02);
+            smp.update(&lazy, &[j]);
+            if let Some(shift) = lazy.maybe_rebase() {
+                smp.shift_keys(shift);
+                rebases += 1;
+            }
+            smp.check_invariants(&lazy);
+        }
+        assert!(rebases > 3, "rebase exercised ({rebases})");
+    }
+
+    #[test]
+    fn redraw_changes_sample_but_keeps_marginals() {
+        let n = 400;
+        let c = 100.0;
+        let lazy = LazySimplex::new_uniform(n, c);
+        let mut smp = CoordinatedSampler::new(&lazy, 11);
+        let before: Vec<u64> = smp.cached_items().collect();
+        let st = smp.redraw(&lazy);
+        let after: Vec<u64> = smp.cached_items().collect();
+        assert!(st.added > 0 && st.evicted > 0, "redraw must shuffle");
+        assert_ne!(before, after);
+        smp.check_invariants(&lazy);
+        // occupancy still near C
+        assert!((smp.occupancy() as f64 - c).abs() < 4.0 * c.sqrt());
+    }
+}

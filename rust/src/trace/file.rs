@@ -1,0 +1,177 @@
+//! Binary on-disk trace format + plain-text interchange.
+//!
+//! Binary layout (little-endian):
+//!   magic "OGBT" | u32 version=1 | u32 catalog | u64 len
+//!   | u64 seed | u16 name_len | name bytes | len * u32 item ids
+//!
+//! The text format is one item id per line (with optional `# catalog: N`
+//! header) for interoperability with external trace tooling.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Trace;
+
+const MAGIC: &[u8; 4] = b"OGBT";
+const VERSION: u32 = 1;
+
+pub fn write_binary<P: AsRef<Path>>(trace: &Trace, path: P) -> Result<()> {
+    let f = File::create(path.as_ref())
+        .with_context(|| format!("create {}", path.as_ref().display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(trace.catalog as u32).to_le_bytes())?;
+    w.write_all(&(trace.requests.len() as u64).to_le_bytes())?;
+    w.write_all(&trace.seed.to_le_bytes())?;
+    let name = trace.name.as_bytes();
+    w.write_all(&(name.len() as u16).to_le_bytes())?;
+    w.write_all(name)?;
+    for &r in &trace.requests {
+        w.write_all(&r.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+pub fn read_binary<P: AsRef<Path>>(path: P) -> Result<Trace> {
+    let f =
+        File::open(path.as_ref()).with_context(|| format!("open {}", path.as_ref().display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not an OGBT trace file");
+    }
+    let mut u32b = [0u8; 4];
+    let mut u64b = [0u8; 8];
+    r.read_exact(&mut u32b)?;
+    let version = u32::from_le_bytes(u32b);
+    if version != VERSION {
+        bail!("unsupported trace version {version}");
+    }
+    r.read_exact(&mut u32b)?;
+    let catalog = u32::from_le_bytes(u32b) as usize;
+    r.read_exact(&mut u64b)?;
+    let len = u64::from_le_bytes(u64b) as usize;
+    r.read_exact(&mut u64b)?;
+    let seed = u64::from_le_bytes(u64b);
+    let mut u16b = [0u8; 2];
+    r.read_exact(&mut u16b)?;
+    let name_len = u16::from_le_bytes(u16b) as usize;
+    let mut name = vec![0u8; name_len];
+    r.read_exact(&mut name)?;
+    let name = String::from_utf8(name).context("trace name not utf-8")?;
+    let mut requests = Vec::with_capacity(len);
+    let mut buf = vec![0u8; 4 * 8192];
+    let mut remaining = len;
+    while remaining > 0 {
+        let take = remaining.min(8192);
+        let bytes = &mut buf[..take * 4];
+        r.read_exact(bytes)?;
+        for c in bytes.chunks_exact(4) {
+            let id = u32::from_le_bytes(c.try_into().unwrap());
+            if id as usize >= catalog {
+                bail!("item id {id} out of catalog {catalog}");
+            }
+            requests.push(id);
+        }
+        remaining -= take;
+    }
+    Ok(Trace::new(name, catalog, requests, seed))
+}
+
+/// Read a text trace: one id per line; `#`-prefixed lines are comments
+/// except `# catalog: N` which sets the catalog size (otherwise max+1).
+pub fn read_text<P: AsRef<Path>>(path: P) -> Result<Trace> {
+    let f =
+        File::open(path.as_ref()).with_context(|| format!("open {}", path.as_ref().display()))?;
+    let r = BufReader::new(f);
+    let mut catalog: Option<usize> = None;
+    let mut requests: Vec<u32> = Vec::new();
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line?;
+        let s = line.trim();
+        if s.is_empty() {
+            continue;
+        }
+        if let Some(rest) = s.strip_prefix('#') {
+            if let Some(v) = rest.trim().strip_prefix("catalog:") {
+                catalog = Some(v.trim().parse().context("bad catalog header")?);
+            }
+            continue;
+        }
+        let id: u32 = s
+            .parse()
+            .with_context(|| format!("bad item id at line {}", lineno + 1))?;
+        requests.push(id);
+    }
+    let max = requests.iter().max().copied().unwrap_or(0) as usize;
+    let catalog = catalog.unwrap_or(max + 1);
+    if catalog <= max {
+        bail!("catalog {catalog} smaller than max item id {max}");
+    }
+    let name = path
+        .as_ref()
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "text-trace".into());
+    Ok(Trace::new(name, catalog, requests, 0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::synth;
+
+    #[test]
+    fn binary_roundtrip() {
+        let t = synth::zipf(100, 5_000, 1.0, 6);
+        let dir = std::env::temp_dir().join("ogb_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.ogbt");
+        write_binary(&t, &p).unwrap();
+        let t2 = read_binary(&p).unwrap();
+        assert_eq!(t.name, t2.name);
+        assert_eq!(t.catalog, t2.catalog);
+        assert_eq!(t.seed, t2.seed);
+        assert_eq!(t.requests, t2.requests);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn binary_rejects_garbage() {
+        let dir = std::env::temp_dir().join("ogb_trace_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.ogbt");
+        std::fs::write(&p, b"not a trace").unwrap();
+        assert!(read_binary(&p).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let dir = std::env::temp_dir().join("ogb_trace_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.txt");
+        std::fs::write(&p, "# catalog: 10\n1\n2\n7\n1\n").unwrap();
+        let t = read_text(&p).unwrap();
+        assert_eq!(t.catalog, 10);
+        assert_eq!(t.requests, vec![1, 2, 7, 1]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn text_infers_catalog() {
+        let dir = std::env::temp_dir().join("ogb_trace_test4");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.txt");
+        std::fs::write(&p, "5\n3\n9\n").unwrap();
+        let t = read_text(&p).unwrap();
+        assert_eq!(t.catalog, 10);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

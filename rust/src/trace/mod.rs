@@ -1,0 +1,112 @@
+//! Request-trace substrate: the trace container, synthetic generators
+//! (including the paper's adversarial round-robin pattern), generators
+//! mimicking the four real-world traces of Table 1 (substitutions — see
+//! DESIGN.md §3), temporal-locality analyses (paper App. B), and a binary
+//! on-disk format.
+
+pub mod file;
+pub mod realworld;
+pub mod stats;
+pub mod synth;
+
+/// A request trace over a dense catalog `0..catalog`.
+///
+/// Item ids are `u32` (a 3.5e7-request trace costs 140 MB; the paper's
+/// largest catalog, 6.8e6 items, fits comfortably).  The logical timestamp
+/// of request `k` is `k` itself, matching the paper's convention that time
+/// equals the number of requests received.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub name: String,
+    pub catalog: usize,
+    pub requests: Vec<u32>,
+    /// Generator seed (0 for file-loaded traces) — recorded in every CSV.
+    pub seed: u64,
+}
+
+impl Trace {
+    pub fn new(name: impl Into<String>, catalog: usize, requests: Vec<u32>, seed: u64) -> Self {
+        let t = Self {
+            name: name.into(),
+            catalog,
+            requests,
+            seed,
+        };
+        debug_assert!(t.requests.iter().all(|&r| (r as usize) < t.catalog));
+        t
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Number of distinct items actually requested.
+    pub fn distinct(&self) -> usize {
+        let mut seen = vec![false; self.catalog];
+        let mut n = 0;
+        for &r in &self.requests {
+            if !seen[r as usize] {
+                seen[r as usize] = true;
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Per-item request counts (len = catalog).
+    pub fn counts(&self) -> Vec<u32> {
+        let mut c = vec![0u32; self.catalog];
+        for &r in &self.requests {
+            c[r as usize] += 1;
+        }
+        c
+    }
+
+    /// The best static allocation in hindsight: the C most-requested items
+    /// (ties broken by id).  This is OPT / x* in the paper's Eq. (1).
+    pub fn top_c(&self, c: usize) -> Vec<u32> {
+        let counts = self.counts();
+        let mut items: Vec<u32> = (0..self.catalog as u32).collect();
+        items.sort_by_key(|&i| (std::cmp::Reverse(counts[i as usize]), i));
+        items.truncate(c);
+        items
+    }
+
+    /// Total hits OPT achieves: sum of counts of the top-C items.
+    pub fn opt_hits(&self, c: usize) -> u64 {
+        let counts = self.counts();
+        let mut cs: Vec<u32> = counts;
+        cs.sort_unstable_by(|a, b| b.cmp(a));
+        cs.iter().take(c).map(|&x| x as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Trace {
+        Trace::new("t", 4, vec![0, 1, 1, 2, 1, 0], 0)
+    }
+
+    #[test]
+    fn basic_stats() {
+        let t = tiny();
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.distinct(), 3);
+        assert_eq!(t.counts(), vec![2, 3, 1, 0]);
+    }
+
+    #[test]
+    fn top_c_and_opt() {
+        let t = tiny();
+        assert_eq!(t.top_c(1), vec![1]);
+        assert_eq!(t.top_c(2), vec![1, 0]);
+        assert_eq!(t.opt_hits(1), 3);
+        assert_eq!(t.opt_hits(2), 5);
+    }
+}

@@ -1,0 +1,261 @@
+//! Generators mimicking the four real-world traces of the paper's Table 1.
+//!
+//! The actual traces (SNIA `ms-ex`/`systor`, the Wikipedia `cdn` trace,
+//! Twitter cluster 45) are not redistributable inside this environment, so
+//! per the substitution policy (DESIGN.md §3) each generator reproduces the
+//! *mechanism* the paper identifies as driving its results:
+//!
+//! * `cdn_like`     — near-stationary Zipf popularity over a large catalog
+//!                    with slow content churn: long item lifetimes, large
+//!                    reuse distances ⇒ OPT ≫ LRU, batching harmless
+//!                    (Fig. 8 left, Fig. 10 left, Fig. 11).
+//! * `twitter_like` — popular core + a heavy stream of short-burst items
+//!                    (small lifetime, tiny reuse distance) carrying ~20%
+//!                    of attainable hits ⇒ LRU wins, OGB beats OPT,
+//!                    batching hurts beyond B~100 (Fig. 8 right, Fig. 10
+//!                    right, App. B.2).
+//! * `msex_like`    — Exchange-server working set that shifts abruptly
+//!                    between phases ⇒ highly time-variable OPT, slow
+//!                    no-regret convergence (Fig. 7 left).
+//! * `systor_like`  — VDI block storage: hot blocks + recurring sequential
+//!                    scans ⇒ variable OPT, fast OGB convergence (Fig. 7
+//!                    right).
+//!
+//! All generators are seeded and deterministic.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::Trace;
+use crate::util::{Xoshiro256pp, Zipf};
+
+/// Wikipedia-CDN-like workload: stationary Zipf(0.85) core (60% of the
+/// catalog) plus a slowly advancing "fresh content" frontier over the rest.
+pub fn cdn_like(n: usize, t: usize, seed: u64) -> Trace {
+    assert!(n >= 10);
+    let mut rng = Xoshiro256pp::seed_from(seed);
+    let n_core = (n as f64 * 0.6) as usize;
+    let n_fresh = n - n_core;
+    let core = Zipf::new(n_core as u64, 0.85);
+    // Shuffle so popularity rank is not aligned with item id.
+    let mut map: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut map);
+    let mut requests = Vec::with_capacity(t);
+    for k in 0..t {
+        let item = if n_fresh > 0 && rng.next_f64() < 0.06 {
+            // fresh frontier advances linearly with time; requests target
+            // recently published items with a *broad* geometric look-back
+            // (mean ~125 items back), so each fresh item keeps receiving
+            // requests over a long span — large lifetimes and reuse
+            // distances, the property that makes cdn insensitive to
+            // batching (paper Fig. 10 / App. B.2).
+            let frontier = ((k as u64 * n_fresh as u64) / t.max(1) as u64).max(1);
+            let back = rng.next_geometric(0.008).min(frontier);
+            let idx = frontier.saturating_sub(back).min(n_fresh as u64 - 1);
+            n_core as u32 + idx as u32
+        } else {
+            core.sample(&mut rng) as u32
+        };
+        requests.push(map[item as usize]);
+    }
+    Trace::new(format!("cdn-like_n{n}"), n, requests, seed)
+}
+
+/// Twitter-cache-like workload: Zipf(1.0) core plus short-burst items.
+///
+/// Bursts are the App. B.2 mechanism: a new item receives `L ~ 2+Geom`
+/// requests with tiny inter-arrival gaps (reuse distance ≲ 100) and then
+/// never again — their lifetime is below typical batch sizes, so batching
+/// absorbs their hits (Fig. 10 right).
+pub fn twitter_like(n: usize, t: usize, seed: u64) -> Trace {
+    assert!(n >= 10);
+    let mut rng = Xoshiro256pp::seed_from(seed);
+    let n_core = (n as f64 * 0.5) as usize;
+    let n_burst = n - n_core;
+    let core = Zipf::new(n_core as u64, 1.0);
+    let mut map: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut map);
+
+    // Pending scheduled burst requests: min-heap on due time.
+    let mut pending: BinaryHeap<Reverse<(u64, u32)>> = BinaryHeap::new();
+    let mut next_burst_item = 0u32;
+    // Target ~30% of requests from bursts with mean burst length ~7
+    // extra requests => spawn rate ~ 0.3/7 per request.
+    let spawn_p = 0.045;
+    let mut requests = Vec::with_capacity(t);
+    let mut k = 0u64;
+    while requests.len() < t {
+        if let Some(&Reverse((due, item))) = pending.peek() {
+            if due <= k {
+                pending.pop();
+                requests.push(item);
+                k += 1;
+                continue;
+            }
+        }
+        if (next_burst_item as usize) < n_burst && rng.next_f64() < spawn_p {
+            // Spawn a burst: first request now, L follow-ups at small gaps.
+            let item = n_core as u32 + next_burst_item;
+            next_burst_item = (next_burst_item + 1) % n_burst.max(1) as u32;
+            requests.push(map[item as usize]);
+            let len = 2 + rng.next_geometric(0.18); // mean ~2+4.6
+            let mut due = k;
+            for _ in 0..len {
+                due += 1 + rng.next_geometric(0.12); // gap mean ~8
+                pending.push(Reverse((due, map[item as usize])));
+            }
+            k += 1;
+            continue;
+        }
+        requests.push(map[core.sample(&mut rng) as usize]);
+        k += 1;
+    }
+    requests.truncate(t);
+    Trace::new(format!("twitter-like_n{n}"), n, requests, seed)
+}
+
+/// Exchange-server-like workload: Zipf(0.8) over a working set (25% of the
+/// catalog) that rotates by 40% every `t/8` requests.
+pub fn msex_like(n: usize, t: usize, seed: u64) -> Trace {
+    assert!(n >= 20);
+    let mut rng = Xoshiro256pp::seed_from(seed);
+    let w = (n / 4).max(4);
+    let phase_len = (t / 8).max(1);
+    let zipf = Zipf::new(w as u64, 0.8);
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut perm);
+    let mut start = 0usize;
+    let mut requests = Vec::with_capacity(t);
+    for k in 0..t {
+        if k > 0 && k % phase_len == 0 {
+            start = (start + (w as f64 * 0.4) as usize) % n;
+        }
+        let rank = zipf.sample(&mut rng) as usize;
+        requests.push(perm[(start + rank) % n]);
+    }
+    Trace::new(format!("msex-like_n{n}"), n, requests, seed)
+}
+
+/// VDI-block-storage-like workload: Zipf(1.1) hot blocks (10% of catalog)
+/// for 60% of requests, plus recurring sequential scans over a set of
+/// fixed regions (boot/AV storms) for the rest.
+pub fn systor_like(n: usize, t: usize, seed: u64) -> Trace {
+    assert!(n >= 100);
+    let mut rng = Xoshiro256pp::seed_from(seed);
+    let hot_n = (n / 10).max(8);
+    let hot = Zipf::new(hot_n as u64, 1.1);
+    let mut map: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut map);
+    // 12 fixed scan regions, each 2% of the catalog.
+    let region_len = (n / 50).max(16);
+    let regions: Vec<usize> = (0..12)
+        .map(|_| rng.next_below((n - region_len) as u64) as usize)
+        .collect();
+    let mut requests = Vec::with_capacity(t);
+    let mut scan_pos: Option<(usize, usize)> = None; // (abs position, remaining)
+    for _ in 0..t {
+        if let Some((pos, rem)) = scan_pos {
+            requests.push(map[pos]);
+            scan_pos = if rem > 1 { Some((pos + 1, rem - 1)) } else { None };
+            continue;
+        }
+        if rng.next_f64() < 0.006 {
+            // start a scan over a random fixed region (never past catalog end)
+            let r = regions[rng.next_below(regions.len() as u64) as usize];
+            let max_len = region_len.min(n - r);
+            let len = (max_len / 2 + rng.next_below((max_len / 2).max(1) as u64) as usize).max(1);
+            scan_pos = Some((r, len));
+            requests.push(map[r]);
+            continue;
+        }
+        requests.push(map[hot.sample(&mut rng) as usize]);
+    }
+    Trace::new(format!("systor-like_n{n}"), n, requests, seed)
+}
+
+/// Default experiment scales: (catalog, length) pairs per trace family,
+/// scaled down from the paper's (6.8e6 items / 3.5e7 requests) to CI-class
+/// budgets while keeping N, C, T ratios comparable.  `scale` multiplies
+/// both dimensions.
+pub fn by_name(name: &str, scale: f64, seed: u64) -> Option<Trace> {
+    let s = |base: usize| ((base as f64 * scale) as usize).max(1000);
+    Some(match name {
+        "cdn" => cdn_like(s(200_000), s(2_000_000), seed),
+        "twitter" => twitter_like(s(100_000), s(2_000_000), seed),
+        "ms-ex" | "msex" => msex_like(s(60_000), s(1_200_000), seed),
+        "systor" => systor_like(s(80_000), s(1_500_000), seed),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::stats;
+
+    #[test]
+    fn cdn_stationary_head_and_long_lifetimes() {
+        let t = cdn_like(5_000, 100_000, 1);
+        // the same head items dominate both halves
+        let h1 = Trace::new("a", t.catalog, t.requests[..50_000].to_vec(), 0).top_c(20);
+        let h2 = Trace::new("b", t.catalog, t.requests[50_000..].to_vec(), 0).top_c(20);
+        let overlap = h1.iter().filter(|i| h2.contains(i)).count();
+        assert!(overlap >= 14, "cdn head unstable: overlap {overlap}/20");
+    }
+
+    #[test]
+    fn twitter_burst_items_carry_hits_with_short_lifetime() {
+        let t = twitter_like(20_000, 300_000, 2);
+        let curve = stats::lifetime_hit_curve(&t, 40);
+        // share of max-attainable hits from items with lifetime < 150
+        let short: f64 = curve
+            .iter()
+            .filter(|&&(life, _)| life <= 150.0)
+            .map(|&(_, share)| share)
+            .fold(0.0, f64::max);
+        assert!(
+            short > 0.08,
+            "short-lifetime items must carry a real hit share, got {short}"
+        );
+    }
+
+    #[test]
+    fn msex_phases_shift_working_set() {
+        let t = msex_like(8_000, 160_000, 3);
+        let p = t.len() / 8;
+        let h1 = Trace::new("a", t.catalog, t.requests[..p].to_vec(), 0).top_c(50);
+        let h4 = Trace::new("b", t.catalog, t.requests[4 * p..5 * p].to_vec(), 0).top_c(50);
+        let overlap = h1.iter().filter(|i| h4.contains(i)).count();
+        assert!(overlap < 40, "working set must shift: overlap {overlap}/50");
+    }
+
+    #[test]
+    fn systor_contains_sequential_runs() {
+        let t = systor_like(10_000, 100_000, 4);
+        // detect runs: the raw (pre-shuffle) scan produces mapped sequences;
+        // instead check repeat structure: some items requested many times
+        // (hot) and catalog coverage is broad (scans touch many items).
+        let counts = t.counts();
+        let max = counts.iter().max().copied().unwrap();
+        assert!(max > 500, "hot blocks must exist (max count {max})");
+        assert!(t.distinct() > 2_000, "scans must cover catalog");
+    }
+
+    #[test]
+    fn by_name_known_traces() {
+        for name in ["cdn", "twitter", "ms-ex", "systor"] {
+            let t = by_name(name, 0.01, 5).unwrap();
+            assert!(t.len() >= 1000, "{name} too short");
+            assert!(t.distinct() > 100);
+        }
+        assert!(by_name("bogus", 1.0, 5).is_none());
+    }
+
+    #[test]
+    fn determinism() {
+        assert_eq!(
+            twitter_like(1000, 10_000, 9).requests,
+            twitter_like(1000, 10_000, 9).requests
+        );
+    }
+}

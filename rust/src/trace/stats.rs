@@ -1,0 +1,183 @@
+//! Temporal-locality analyses from the paper's Appendix B:
+//!
+//! * **lifetime / hit-share curve** (Fig. 11 left): sort items by lifetime
+//!   (timestamp span between first and last request); cumulatively account
+//!   the maximum attainable hits (count - 1, i.e. all but the cold miss,
+//!   the infinite-cache upper bound) as a fraction of the trace length.
+//! * **reuse-distance CDF** (Fig. 11 right): per-item mean distance
+//!   between consecutive requests; empirical CDF over items.
+//!
+//! Plus general trace summaries used by `figures --id table1`.
+
+use super::Trace;
+
+/// (lifetime, cumulative max-hit-ratio) points, log-bucketed into at most
+/// `points` steps — Fig. 11 left.
+pub fn lifetime_hit_curve(trace: &Trace, points: usize) -> Vec<(f64, f64)> {
+    let mut first = vec![u64::MAX; trace.catalog];
+    let mut last = vec![0u64; trace.catalog];
+    let mut count = vec![0u32; trace.catalog];
+    for (ts, &r) in trace.requests.iter().enumerate() {
+        let i = r as usize;
+        let ts = ts as u64;
+        if first[i] == u64::MAX {
+            first[i] = ts;
+        }
+        last[i] = ts;
+        count[i] += 1;
+    }
+    // (lifetime, max hits) per requested item
+    let mut items: Vec<(u64, u64)> = (0..trace.catalog)
+        .filter(|&i| count[i] > 0)
+        .map(|i| (last[i] - first[i], count[i] as u64 - 1))
+        .collect();
+    items.sort_unstable_by_key(|&(life, _)| life);
+    let t = trace.len() as f64;
+    let mut out = Vec::with_capacity(points.min(items.len()));
+    let mut cum = 0u64;
+    let mut next_edge = 1.0f64;
+    for (k, &(life, hits)) in items.iter().enumerate() {
+        cum += hits;
+        let is_last = k + 1 == items.len();
+        if life as f64 >= next_edge || is_last {
+            out.push((life as f64, cum as f64 / t));
+            // log-spaced edges
+            while next_edge <= life as f64 {
+                next_edge *= (t.max(4.0)).powf(1.0 / points as f64);
+            }
+        }
+    }
+    out
+}
+
+/// Empirical CDF over items of the per-item mean reuse distance —
+/// Fig. 11 right. Returns (distance, fraction of items with mean <= d)
+/// at `points` log-spaced distances.
+pub fn reuse_distance_cdf(trace: &Trace, points: usize) -> Vec<(f64, f64)> {
+    let mut last_seen = vec![u64::MAX; trace.catalog];
+    let mut sum_dist = vec![0u64; trace.catalog];
+    let mut n_dist = vec![0u32; trace.catalog];
+    for (ts, &r) in trace.requests.iter().enumerate() {
+        let i = r as usize;
+        let ts = ts as u64;
+        if last_seen[i] != u64::MAX {
+            sum_dist[i] += ts - last_seen[i];
+            n_dist[i] += 1;
+        }
+        last_seen[i] = ts;
+    }
+    let mut means: Vec<f64> = (0..trace.catalog)
+        .filter(|&i| n_dist[i] > 0)
+        .map(|i| sum_dist[i] as f64 / n_dist[i] as f64)
+        .collect();
+    if means.is_empty() {
+        return Vec::new();
+    }
+    means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = means.len() as f64;
+    let max_d = *means.last().unwrap();
+    let mut out = Vec::with_capacity(points);
+    let mut d = 1.0;
+    let growth = (max_d.max(2.0)).powf(1.0 / points as f64);
+    let mut idx = 0usize;
+    while d <= max_d * growth {
+        while idx < means.len() && means[idx] <= d {
+            idx += 1;
+        }
+        out.push((d, idx as f64 / n));
+        d *= growth;
+    }
+    out
+}
+
+/// One summary row per trace — backs Table 1 / Fig. 1.
+#[derive(Debug, Clone)]
+pub struct TraceSummary {
+    pub name: String,
+    pub t: usize,
+    pub catalog: usize,
+    pub distinct: usize,
+    pub max_count: u32,
+    pub singleton_frac: f64,
+    pub top1pct_share: f64,
+}
+
+pub fn summarize(trace: &Trace) -> TraceSummary {
+    let counts = trace.counts();
+    let distinct = counts.iter().filter(|&&c| c > 0).count();
+    let singletons = counts.iter().filter(|&&c| c == 1).count();
+    let mut sorted: Vec<u32> = counts.iter().copied().filter(|&c| c > 0).collect();
+    sorted.sort_unstable_by(|a, b| b.cmp(a));
+    let k = (distinct / 100).max(1);
+    let top: u64 = sorted.iter().take(k).map(|&c| c as u64).sum();
+    TraceSummary {
+        name: trace.name.clone(),
+        t: trace.len(),
+        catalog: trace.catalog,
+        distinct,
+        max_count: sorted.first().copied().unwrap_or(0),
+        singleton_frac: singletons as f64 / distinct.max(1) as f64,
+        top1pct_share: top as f64 / trace.len().max(1) as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::synth;
+
+    #[test]
+    fn lifetime_curve_monotone_and_bounded() {
+        let t = synth::zipf(500, 20_000, 0.9, 1);
+        let curve = lifetime_hit_curve(&t, 30);
+        assert!(!curve.is_empty());
+        for w in curve.windows(2) {
+            assert!(w[0].0 <= w[1].0, "x must be sorted");
+            assert!(w[0].1 <= w[1].1 + 1e-12, "cumulative share must grow");
+        }
+        let last = curve.last().unwrap().1;
+        assert!(last > 0.0 && last <= 1.0);
+        // final point = infinite-cache hit ratio = (T - distinct)/T
+        let expect = (t.len() - t.distinct()) as f64 / t.len() as f64;
+        assert!((last - expect).abs() < 1e-9, "{last} vs {expect}");
+    }
+
+    #[test]
+    fn reuse_cdf_monotone_reaching_one() {
+        let t = synth::zipf(300, 10_000, 1.0, 2);
+        let cdf = reuse_distance_cdf(&t, 25);
+        assert!(!cdf.is_empty());
+        for w in cdf.windows(2) {
+            assert!(w[0].1 <= w[1].1 + 1e-12);
+        }
+        assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn popular_items_have_small_reuse_distance() {
+        // rank 0 in a Zipf(1.2) trace is requested every few steps
+        let t = synth::zipf(1000, 50_000, 1.2, 3);
+        let mut last = None;
+        let mut dists = Vec::new();
+        for (ts, &r) in t.requests.iter().enumerate() {
+            if r == 0 {
+                if let Some(l) = last {
+                    dists.push((ts - l) as f64);
+                }
+                last = Some(ts);
+            }
+        }
+        let mean = dists.iter().sum::<f64>() / dists.len() as f64;
+        assert!(mean < 50.0, "rank-0 mean reuse distance {mean}");
+    }
+
+    #[test]
+    fn summary_fields() {
+        let t = synth::zipf(200, 5_000, 1.0, 4);
+        let s = summarize(&t);
+        assert_eq!(s.t, 5_000);
+        assert!(s.distinct <= 200);
+        assert!(s.top1pct_share > 0.0 && s.top1pct_share <= 1.0);
+        assert!(s.max_count >= 1);
+    }
+}

@@ -1,0 +1,117 @@
+//! Synthetic trace generators: the paper's adversarial round-robin pattern
+//! (Fig. 2) and standard Zipf/uniform workloads.
+
+use super::Trace;
+use crate::util::{Xoshiro256pp, Zipf};
+
+/// The paper's adversarial trace (§2.2): all N items requested round-robin,
+/// with a *fresh random permutation every round*.  Recency (LRU/FIFO) and
+/// frequency (LFU) policies churn the whole cache each round and obtain a
+/// hit ratio ~C/N with linear regret; OPT keeps any C items and hits C/N of
+/// requests... while gradient policies converge to a stable allocation.
+pub fn adversarial(n: usize, rounds: usize, seed: u64) -> Trace {
+    let mut rng = Xoshiro256pp::seed_from(seed);
+    let mut requests = Vec::with_capacity(n * rounds);
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    for _ in 0..rounds {
+        rng.shuffle(&mut perm);
+        requests.extend_from_slice(&perm);
+    }
+    Trace::new(format!("adversarial_n{n}_r{rounds}"), n, requests, seed)
+}
+
+/// Stationary Zipf(s) trace: item id == popularity rank.
+pub fn zipf(n: usize, t: usize, s: f64, seed: u64) -> Trace {
+    let mut rng = Xoshiro256pp::seed_from(seed);
+    let dist = Zipf::new(n as u64, s);
+    let requests = (0..t).map(|_| dist.sample(&mut rng) as u32).collect();
+    Trace::new(format!("zipf_n{n}_s{s}"), n, requests, seed)
+}
+
+/// Zipf with the rank->item mapping shuffled (popularity not aligned with
+/// item id) — exercises policies that accidentally exploit id ordering.
+pub fn zipf_shuffled(n: usize, t: usize, s: f64, seed: u64) -> Trace {
+    let mut rng = Xoshiro256pp::seed_from(seed);
+    let dist = Zipf::new(n as u64, s);
+    let mut map: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut map);
+    let requests = (0..t)
+        .map(|_| map[dist.sample(&mut rng) as usize])
+        .collect();
+    Trace::new(format!("zipf_shuf_n{n}_s{s}"), n, requests, seed)
+}
+
+/// Uniform random requests (worst case for every caching policy).
+pub fn uniform(n: usize, t: usize, seed: u64) -> Trace {
+    let mut rng = Xoshiro256pp::seed_from(seed);
+    let requests = (0..t).map(|_| rng.next_below(n as u64) as u32).collect();
+    Trace::new(format!("uniform_n{n}"), n, requests, seed)
+}
+
+/// Abrupt popularity shift: Zipf(s) whose rank->item mapping is re-drawn
+/// every `phase_len` requests.  The classic "pattern change" stress used to
+/// show adaptivity (no-regret policies track it; LFU/FTPL get stuck).
+pub fn shifting_zipf(n: usize, t: usize, s: f64, phase_len: usize, seed: u64) -> Trace {
+    assert!(phase_len > 0);
+    let mut rng = Xoshiro256pp::seed_from(seed);
+    let dist = Zipf::new(n as u64, s);
+    let mut map: Vec<u32> = (0..n as u32).collect();
+    let mut requests = Vec::with_capacity(t);
+    for k in 0..t {
+        if k % phase_len == 0 {
+            rng.shuffle(&mut map);
+        }
+        requests.push(map[dist.sample(&mut rng) as usize]);
+    }
+    Trace::new(format!("shifting_zipf_n{n}_s{s}_p{phase_len}"), n, requests, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adversarial_each_round_is_permutation() {
+        let n = 50;
+        let t = adversarial(n, 4, 1);
+        assert_eq!(t.len(), 200);
+        for r in 0..4 {
+            let mut round: Vec<u32> = t.requests[r * n..(r + 1) * n].to_vec();
+            round.sort_unstable();
+            assert_eq!(round, (0..n as u32).collect::<Vec<_>>());
+        }
+        // rounds differ (overwhelmingly likely)
+        assert_ne!(t.requests[0..n], t.requests[n..2 * n]);
+    }
+
+    #[test]
+    fn adversarial_opt_equals_c_over_n() {
+        let (n, rounds, c) = (100, 20, 25);
+        let t = adversarial(n, rounds, 2);
+        // every item requested exactly `rounds` times -> OPT hits = C*rounds
+        assert_eq!(t.opt_hits(c), (c * rounds) as u64);
+    }
+
+    #[test]
+    fn zipf_head_dominates() {
+        let t = zipf(1000, 50_000, 1.0, 3);
+        let counts = t.counts();
+        assert!(counts[0] > counts[100], "rank 0 must beat rank 100");
+        let head: u64 = counts[..10].iter().map(|&c| c as u64).sum();
+        assert!(head as f64 / t.len() as f64 > 0.2, "top-10 share too low");
+    }
+
+    #[test]
+    fn shifted_phases_have_different_heads() {
+        let t = shifting_zipf(500, 20_000, 1.0, 10_000, 4);
+        let phase1 = Trace::new("p1", 500, t.requests[..10_000].to_vec(), 0);
+        let phase2 = Trace::new("p2", 500, t.requests[10_000..].to_vec(), 0);
+        assert_ne!(phase1.top_c(10), phase2.top_c(10));
+    }
+
+    #[test]
+    fn determinism() {
+        assert_eq!(zipf(100, 1000, 0.8, 7).requests, zipf(100, 1000, 0.8, 7).requests);
+        assert_ne!(zipf(100, 1000, 0.8, 7).requests, zipf(100, 1000, 0.8, 8).requests);
+    }
+}

@@ -1,0 +1,233 @@
+//! Minimal CLI argument parser (the `clap` crate is unavailable offline).
+//!
+//! Supports `command --key value`, `--key=value`, boolean `--flag`, and
+//! free positional arguments; generates usage text from registered specs.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.get(key) {
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!("error: --{key} expects a {}", std::any::type_name::<T>());
+                std::process::exit(2);
+            }),
+            None => default,
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.values.contains_key(key) || self.flag(key)
+    }
+}
+
+/// A subcommand-style CLI: `prog <command> [--args]`.
+pub struct Cli {
+    pub prog: &'static str,
+    pub about: &'static str,
+    commands: Vec<(&'static str, &'static str, Vec<ArgSpec>)>,
+}
+
+impl Cli {
+    pub fn new(prog: &'static str, about: &'static str) -> Self {
+        Self {
+            prog,
+            about,
+            commands: Vec::new(),
+        }
+    }
+
+    pub fn command(mut self, name: &'static str, help: &'static str, specs: Vec<ArgSpec>) -> Self {
+        self.commands.push((name, help, specs));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [options]\n\nCOMMANDS:\n", self.prog, self.about, self.prog);
+        for (name, help, _) in &self.commands {
+            s.push_str(&format!("  {name:<12} {help}\n"));
+        }
+        s.push_str("\nRun `<command> --help` for per-command options.\n");
+        s
+    }
+
+    fn cmd_usage(&self, name: &str) -> String {
+        let (_, help, specs) = self
+            .commands
+            .iter()
+            .find(|(n, _, _)| *n == name)
+            .expect("known command");
+        let mut s = format!("{} {} — {}\n\nOPTIONS:\n", self.prog, name, help);
+        for spec in specs {
+            let d = spec
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{:<22} {}{}\n", spec.name, spec.help, d));
+        }
+        s
+    }
+
+    /// Parse `std::env::args()[1..]`. Returns (command, args) or prints
+    /// usage and exits.
+    pub fn parse(&self, argv: &[String]) -> (String, Args) {
+        if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" || argv[0] == "help" {
+            print!("{}", self.usage());
+            std::process::exit(if argv.is_empty() { 2 } else { 0 });
+        }
+        let cmd = argv[0].clone();
+        let Some((_, _, specs)) = self.commands.iter().find(|(n, _, _)| *n == cmd) else {
+            eprintln!("error: unknown command `{cmd}`\n");
+            eprint!("{}", self.usage());
+            std::process::exit(2);
+        };
+        let mut args = Args::default();
+        // seed defaults
+        for spec in specs {
+            if let Some(d) = &spec.default {
+                args.values.insert(spec.name.to_string(), d.clone());
+            }
+        }
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                print!("{}", self.cmd_usage(&cmd));
+                std::process::exit(0);
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let Some(spec) = specs.iter().find(|s| s.name == key) else {
+                    eprintln!("error: unknown option --{key} for `{cmd}`\n");
+                    eprint!("{}", self.cmd_usage(&cmd));
+                    std::process::exit(2);
+                };
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        eprintln!("error: --{key} is a flag and takes no value");
+                        std::process::exit(2);
+                    }
+                    args.flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            if i >= argv.len() {
+                                eprintln!("error: --{key} expects a value");
+                                std::process::exit(2);
+                            }
+                            argv[i].clone()
+                        }
+                    };
+                    args.values.insert(key, val);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        (cmd, args)
+    }
+}
+
+/// Convenience builders for specs.
+pub fn opt(name: &'static str, help: &'static str, default: &str) -> ArgSpec {
+    ArgSpec {
+        name,
+        help,
+        default: Some(default.to_string()),
+        is_flag: false,
+    }
+}
+
+pub fn req(name: &'static str, help: &'static str) -> ArgSpec {
+    ArgSpec {
+        name,
+        help,
+        default: None,
+        is_flag: false,
+    }
+}
+
+pub fn flag(name: &'static str, help: &'static str) -> ArgSpec {
+    ArgSpec {
+        name,
+        help,
+        default: None,
+        is_flag: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test").command(
+            "run",
+            "run it",
+            vec![
+                opt("n", "catalog", "100"),
+                opt("name", "label", "x"),
+                flag("fast", "go fast"),
+            ],
+        )
+    }
+
+    fn parse(v: &[&str]) -> (String, Args) {
+        cli().parse(&v.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let (cmd, a) = parse(&["run"]);
+        assert_eq!(cmd, "run");
+        assert_eq!(a.get_parse("n", 0u64), 100);
+        let (_, a) = parse(&["run", "--n", "5"]);
+        assert_eq!(a.get_parse("n", 0u64), 5);
+        let (_, a) = parse(&["run", "--n=7"]);
+        assert_eq!(a.get_parse("n", 0u64), 7);
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        let (_, a) = parse(&["run", "--fast", "pos1", "--name", "y", "pos2"]);
+        assert!(a.flag("fast"));
+        assert!(!a.flag("slow"));
+        assert_eq!(a.get("name"), Some("y"));
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+}

@@ -1,0 +1,105 @@
+//! Micro-benchmark harness (the `criterion` crate is unavailable offline).
+//!
+//! Used by the `benches/*.rs` targets (`harness = false`).  Methodology:
+//! warm-up iterations, then R repetitions of timed batches; reports the
+//! median ns/op with min/max spread — median over repetitions is robust to
+//! scheduler noise without criterion's full bootstrap machinery.
+//! `OGB_BENCH_FAST=1` shrinks repetitions for smoke runs.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub ns_per_op: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    pub ops: u64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> f64 {
+        1e9 / self.ns_per_op
+    }
+}
+
+pub fn fast_mode() -> bool {
+    std::env::var("OGB_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Time `op` (which performs `batch` operations per call) over `reps`
+/// repetitions after one warm-up call; report median ns per operation.
+pub fn bench_batch(name: &str, batch: u64, mut reps: usize, mut op: impl FnMut()) -> BenchResult {
+    if fast_mode() {
+        reps = reps.min(3);
+    }
+    assert!(reps >= 1 && batch >= 1);
+    op(); // warm-up
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        op();
+        samples.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    BenchResult {
+        name: name.to_string(),
+        ns_per_op: median,
+        min_ns: samples[0],
+        max_ns: *samples.last().unwrap(),
+        ops: batch * reps as u64,
+    }
+}
+
+/// Render results as an aligned table (also CSV-appendable via `to_csv_row`).
+pub fn print_table(title: &str, results: &[BenchResult]) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<44} {:>14} {:>14} {:>12}",
+        "benchmark", "ns/op (median)", "ops/s", "spread"
+    );
+    for r in results {
+        println!(
+            "{:<44} {:>14.1} {:>14.3e} {:>11.1}%",
+            r.name,
+            r.ns_per_op,
+            r.throughput(),
+            100.0 * (r.max_ns - r.min_ns) / r.ns_per_op.max(1e-9)
+        );
+    }
+}
+
+pub fn to_csv_row(r: &BenchResult) -> Vec<String> {
+    vec![
+        r.name.clone(),
+        format!("{:.2}", r.ns_per_op),
+        format!("{:.1}", r.throughput()),
+        format!("{:.2}", r.min_ns),
+        format!("{:.2}", r.max_ns),
+    ]
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut acc = 0u64;
+        let r = bench_batch("noop-loop", 1000, 5, || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert!(r.ns_per_op > 0.0);
+        assert!(r.min_ns <= r.ns_per_op && r.ns_per_op <= r.max_ns);
+        assert!(acc > 0);
+    }
+}

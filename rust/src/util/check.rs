@@ -1,0 +1,125 @@
+//! Mini property-testing harness (the `proptest` crate is unavailable
+//! offline).  Provides a seeded case generator and a runner that, on
+//! failure, re-reports the failing seed so the case is reproducible with
+//! `OGB_CHECK_SEED=<seed> OGB_CHECK_CASES=1 cargo test <name>`.
+//!
+//! Deliberately small: generators are closures over [`Gen`]; shrinking is
+//! replaced by deterministic replay (good enough in practice because every
+//! generator here derives all structure from a single u64 seed).
+
+use super::rng::Xoshiro256pp;
+
+/// Randomness source handed to property bodies.
+pub struct Gen {
+    pub rng: Xoshiro256pp,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn u64_below(&mut self, n: u64) -> u64 {
+        self.rng.next_below(n)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo < hi);
+        lo + self.rng.next_below((hi - lo) as u64) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn bool_p(&mut self, p: f64) -> bool {
+        self.rng.next_f64() < p
+    }
+
+    /// Random feasible fractional cache state: 0 <= f_i <= 1, sum == c.
+    pub fn feasible_state(&mut self, n: usize, c: f64) -> Vec<f64> {
+        assert!(c <= n as f64);
+        // Start uniform then apply random mass moves that preserve the
+        // constraints — exercises interior, 0 and 1 boundary components.
+        let mut f = vec![c / n as f64; n];
+        for _ in 0..4 * n {
+            let i = self.usize_in(0, n);
+            let j = self.usize_in(0, n);
+            if i == j {
+                continue;
+            }
+            let headroom = (1.0 - f[i]).min(f[j]);
+            let delta = self.f64_in(0.0, headroom);
+            f[i] += delta;
+            f[j] -= delta;
+        }
+        f
+    }
+}
+
+/// Run `body` for `cases` seeds (env-overridable). Panics with the failing
+/// seed embedded on the first violated property.
+pub fn check(name: &str, mut body: impl FnMut(&mut Gen)) {
+    let cases: u64 = std::env::var("OGB_CHECK_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64);
+    let base_seed: u64 = std::env::var("OGB_CHECK_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0x0601_B0B5);
+    for case in 0..cases {
+        let seed = super::rng::mix64(base_seed.wrapping_add(case));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen {
+                rng: Xoshiro256pp::seed_from(seed),
+                seed,
+            };
+            body(&mut g);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property `{name}` failed on case {case} (OGB_CHECK_SEED={base_seed}, case seed {seed}):\n{msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn feasible_state_is_feasible() {
+        check("feasible_state", |g| {
+            let n = g.usize_in(2, 200);
+            let c = g.usize_in(1, n) as f64;
+            let f = g.feasible_state(n, c);
+            let sum: f64 = f.iter().sum();
+            assert!((sum - c).abs() < 1e-6, "sum {sum} != {c}");
+            assert!(f.iter().all(|&x| (-1e-12..=1.0 + 1e-12).contains(&x)));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always_fails`")]
+    fn failure_reports_seed() {
+        check("always_fails", |g| {
+            let x = g.f64_in(0.0, 1.0);
+            assert!(x < 0.0, "x = {x}");
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        std::env::set_var("OGB_CHECK_CASES", "4");
+        let mut seen1 = Vec::new();
+        check("det", |g| seen1.push(g.u64_below(1000)));
+        let mut seen2 = Vec::new();
+        check("det", |g| seen2.push(g.u64_below(1000)));
+        std::env::remove_var("OGB_CHECK_CASES");
+        assert_eq!(seen1, seen2);
+    }
+}

@@ -1,0 +1,212 @@
+//! CSV report writer (the `serde`/`csv` crates are unavailable offline).
+//!
+//! Every figure harness emits its series through this module so results/
+//! files share one format: `# key: value` comment header (provenance:
+//! experiment id, seed, parameters, date), then a header row, then data.
+
+use std::fs::{self, File};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+pub struct CsvWriter {
+    w: BufWriter<File>,
+    path: PathBuf,
+    cols: usize,
+    rows: usize,
+}
+
+impl CsvWriter {
+    /// Create (parent dirs included) with provenance metadata and a header.
+    pub fn create<P: AsRef<Path>>(
+        path: P,
+        meta: &[(&str, String)],
+        header: &[&str],
+    ) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir).with_context(|| format!("mkdir -p {}", dir.display()))?;
+        }
+        let f = File::create(&path).with_context(|| format!("create {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        for (k, v) in meta {
+            writeln!(w, "# {k}: {v}")?;
+        }
+        writeln!(w, "{}", header.join(","))?;
+        Ok(Self {
+            w,
+            path,
+            cols: header.len(),
+            rows: 0,
+        })
+    }
+
+    /// Write a row of already-formatted fields.
+    pub fn row_str(&mut self, fields: &[String]) -> Result<()> {
+        debug_assert_eq!(fields.len(), self.cols, "column count mismatch");
+        // Quote fields containing separators (values we emit never need it,
+        // but labels might).
+        let mut first = true;
+        for f in fields {
+            if !first {
+                write!(self.w, ",")?;
+            }
+            if f.contains(',') || f.contains('"') {
+                write!(self.w, "\"{}\"", f.replace('"', "\"\""))?;
+            } else {
+                write!(self.w, "{f}")?;
+            }
+            first = false;
+        }
+        writeln!(self.w)?;
+        self.rows += 1;
+        Ok(())
+    }
+
+    /// Write a row of f64 values (formatted with up to 9 significant digits).
+    pub fn row(&mut self, fields: &[f64]) -> Result<()> {
+        self.row_str(&fields.iter().map(|v| fmt_f64(*v)).collect::<Vec<_>>())
+    }
+
+    pub fn rows_written(&self) -> usize {
+        self.rows
+    }
+
+    pub fn finish(mut self) -> Result<PathBuf> {
+        self.w.flush()?;
+        Ok(self.path)
+    }
+}
+
+/// Compact float formatting: integers print bare, everything else with
+/// enough digits to round-trip visually in plots.
+pub fn fmt_f64(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        let s = format!("{v:.9}");
+        let s = s.trim_end_matches('0').trim_end_matches('.');
+        s.to_string()
+    }
+}
+
+/// Minimal JSON value writer for manifests / metrics snapshots.
+pub mod json {
+    use std::fmt::Write as _;
+
+    #[derive(Debug, Clone)]
+    pub enum Json {
+        Null,
+        Bool(bool),
+        Num(f64),
+        Str(String),
+        Arr(Vec<Json>),
+        Obj(Vec<(String, Json)>),
+    }
+
+    impl Json {
+        pub fn obj(fields: Vec<(&str, Json)>) -> Json {
+            Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+        }
+
+        pub fn render(&self) -> String {
+            let mut s = String::new();
+            self.write(&mut s);
+            s
+        }
+
+        fn write(&self, out: &mut String) {
+            match self {
+                Json::Null => out.push_str("null"),
+                Json::Bool(b) => {
+                    let _ = write!(out, "{b}");
+                }
+                Json::Num(v) => {
+                    if v.fract() == 0.0 && v.abs() < 1e15 {
+                        let _ = write!(out, "{}", *v as i64);
+                    } else {
+                        let _ = write!(out, "{v}");
+                    }
+                }
+                Json::Str(s) => {
+                    out.push('"');
+                    for c in s.chars() {
+                        match c {
+                            '"' => out.push_str("\\\""),
+                            '\\' => out.push_str("\\\\"),
+                            '\n' => out.push_str("\\n"),
+                            c if (c as u32) < 0x20 => {
+                                let _ = write!(out, "\\u{:04x}", c as u32);
+                            }
+                            c => out.push(c),
+                        }
+                    }
+                    out.push('"');
+                }
+                Json::Arr(xs) => {
+                    out.push('[');
+                    for (i, x) in xs.iter().enumerate() {
+                        if i > 0 {
+                            out.push(',');
+                        }
+                        x.write(out);
+                    }
+                    out.push(']');
+                }
+                Json::Obj(fields) => {
+                    out.push('{');
+                    for (i, (k, v)) in fields.iter().enumerate() {
+                        if i > 0 {
+                            out.push(',');
+                        }
+                        Json::Str(k.clone()).write(out);
+                        out.push(':');
+                        v.write(out);
+                    }
+                    out.push('}');
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_meta_rows() {
+        let dir = std::env::temp_dir().join("ogb_csv_test");
+        let p = dir.join("t.csv");
+        let mut w = CsvWriter::create(
+            &p,
+            &[("experiment", "fig2".to_string()), ("seed", "42".to_string())],
+            &["t", "hit_ratio"],
+        )
+        .unwrap();
+        w.row(&[1.0, 0.25]).unwrap();
+        w.row(&[2.0, 0.333333333]).unwrap();
+        let path = w.finish().unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.starts_with("# experiment: fig2\n# seed: 42\nt,hit_ratio\n1,0.25\n"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn fmt_compact() {
+        assert_eq!(fmt_f64(3.0), "3");
+        assert_eq!(fmt_f64(0.5), "0.5");
+        assert_eq!(fmt_f64(0.1234567891), "0.123456789");
+    }
+
+    #[test]
+    fn json_render() {
+        use json::Json;
+        let j = Json::obj(vec![
+            ("a", Json::Num(1.0)),
+            ("b", Json::Arr(vec![Json::Str("x\"y".into()), Json::Bool(true)])),
+        ]);
+        assert_eq!(j.render(), r#"{"a":1,"b":["x\"y",true]}"#);
+    }
+}

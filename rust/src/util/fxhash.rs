@@ -1,0 +1,107 @@
+//! FxHash (the Firefox/rustc hash) — a fast non-cryptographic hasher for
+//! item-id keyed maps on the request path.  `std`'s default SipHash costs
+//! ~3x more per lookup, which is material when every request does several
+//! map operations (see EXPERIMENTS.md §Perf).
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasherDefault, Hasher};
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// FxHasher: multiply-xor rounds over 8-byte chunks.
+#[derive(Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add_to_hash(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            self.add_to_hash(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut buf = [0u8; 8];
+            buf[..rem.len()].copy_from_slice(rem);
+            self.add_to_hash(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, i: u64) {
+        self.add_to_hash(i);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, i: u32) {
+        self.add_to_hash(i as u64);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, i: usize) {
+        self.add_to_hash(i as u64);
+    }
+
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+}
+
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+pub type FxHashMap<K, V> = HashMap<K, V, FxBuildHasher>;
+pub type FxHashSet<K> = HashSet<K, FxBuildHasher>;
+
+/// Stateless 64-bit hash of (seed, x) — used for the permanent random
+/// numbers p_i of the coordinated sampler (zero storage, reproducible).
+#[inline]
+pub fn hash2(seed: u64, x: u64) -> u64 {
+    super::rng::mix64(seed.wrapping_mul(SEED) ^ super::rng::mix64(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_basics() {
+        let mut m: FxHashMap<u64, u32> = FxHashMap::default();
+        for i in 0..1000u64 {
+            m.insert(i, (i * 2) as u32);
+        }
+        assert_eq!(m.len(), 1000);
+        assert_eq!(m[&500], 1000);
+    }
+
+    #[test]
+    fn hash2_deterministic_and_spread() {
+        assert_eq!(hash2(1, 2), hash2(1, 2));
+        assert_ne!(hash2(1, 2), hash2(2, 1));
+        // uniformity smoke: bucket into 16, expect roughly even
+        let mut buckets = [0u32; 16];
+        for i in 0..16_000u64 {
+            buckets[(hash2(7, i) % 16) as usize] += 1;
+        }
+        for &b in &buckets {
+            assert!((b as i64 - 1000).abs() < 150, "bucket {b}");
+        }
+    }
+
+    #[test]
+    fn string_keys() {
+        let mut m: FxHashMap<String, u32> = FxHashMap::default();
+        m.insert("hello".into(), 1);
+        m.insert("world!!".into(), 2);
+        assert_eq!(m["hello"], 1);
+        assert_eq!(m["world!!"], 2);
+    }
+}

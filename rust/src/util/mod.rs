@@ -1,0 +1,21 @@
+//! Zero-dependency substrates: PRNG, ordered float structures, fast hashing,
+//! CLI parsing, CSV/JSON reports, logging, statistics, and a mini
+//! property-test harness.  These replace the crates (`rand`, `clap`,
+//! `serde`, `proptest`, `criterion`) that are unavailable in the offline
+//! build environment — see DESIGN.md §3.
+
+pub mod args;
+pub mod bench;
+pub mod check;
+pub mod csv;
+pub mod fxhash;
+pub mod logger;
+pub mod ordf64;
+pub mod ordtree;
+pub mod rng;
+pub mod stats;
+
+pub use fxhash::{FxHashMap, FxHashSet};
+pub use ordf64::OrdF64;
+pub use ordtree::OrdTree;
+pub use rng::{SplitMix64, Xoshiro256pp, Zipf};

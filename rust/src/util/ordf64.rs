@@ -1,0 +1,104 @@
+//! Total-order encoding for `f64` so floats can key `BTreeSet`/`BTreeMap`.
+//!
+//! The projection and sampling structures (paper Algorithms 2 and 3) need
+//! ordered multisets over floating-point values with O(log N)
+//! pop-below-threshold.  Rust's `f64` is not `Ord`; `OrdF64` maps the IEEE
+//! bit pattern to a monotone `u64` (flip sign bit for positives, flip all
+//! bits for negatives) giving a total order identical to `<` on non-NaN
+//! values, with all NaNs banned at construction.
+
+/// A totally ordered `f64` wrapper (NaN is rejected).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct OrdF64(u64);
+
+impl OrdF64 {
+    #[inline]
+    pub fn new(x: f64) -> Self {
+        debug_assert!(!x.is_nan(), "NaN cannot enter an ordered structure");
+        let bits = x.to_bits();
+        // Monotone mapping: positives get the sign bit set; negatives are
+        // bitwise-complemented (reverses their order and places them below).
+        let key = if bits & (1 << 63) == 0 {
+            bits | (1 << 63)
+        } else {
+            !bits
+        };
+        OrdF64(key)
+    }
+
+    /// The monotone key encoding (used by `OrdTree`'s packed-u128 keys).
+    #[inline]
+    pub fn bits(self) -> u64 {
+        self.0
+    }
+
+    /// Rebuild from a key encoding previously obtained via [`bits`].
+    #[inline]
+    pub fn from_bits(bits: u64) -> Self {
+        OrdF64(bits)
+    }
+
+    #[inline]
+    pub fn get(self) -> f64 {
+        let key = self.0;
+        let bits = if key & (1 << 63) != 0 {
+            key & !(1 << 63)
+        } else {
+            !key
+        };
+        f64::from_bits(bits)
+    }
+}
+
+impl From<f64> for OrdF64 {
+    fn from(x: f64) -> Self {
+        Self::new(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        for &x in &[0.0, -0.0, 1.5, -1.5, 1e-300, -1e300, f64::MAX, f64::MIN] {
+            assert_eq!(OrdF64::new(x).get(), x);
+        }
+    }
+
+    #[test]
+    fn order_matches_f64() {
+        let xs = [-1e9, -2.5, -1e-12, -0.0, 0.0, 1e-12, 0.5, 1.0, 3e7];
+        for i in 0..xs.len() {
+            for j in 0..xs.len() {
+                let (a, b) = (xs[i], xs[j]);
+                if a < b {
+                    assert!(OrdF64::new(a) < OrdF64::new(b), "{a} < {b}");
+                }
+                if a == b {
+                    // -0.0 == 0.0 in f64 but their encodings differ; the
+                    // structures never rely on -0.0/0.0 identity.
+                    if a.to_bits() == b.to_bits() {
+                        assert_eq!(OrdF64::new(a), OrdF64::new(b));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sort_equivalence_randomized() {
+        use crate::util::rng::Xoshiro256pp;
+        let mut rng = Xoshiro256pp::seed_from(21);
+        let mut xs: Vec<f64> = (0..1000)
+            .map(|_| (rng.next_f64() - 0.5) * 1e6)
+            .collect();
+        let mut keys: Vec<OrdF64> = xs.iter().map(|&x| OrdF64::new(x)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        keys.sort();
+        for (x, k) in xs.iter().zip(keys.iter()) {
+            assert_eq!(*x, k.get());
+        }
+    }
+}

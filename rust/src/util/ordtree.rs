@@ -1,0 +1,252 @@
+//! Ordered multiset of (value, item) pairs — the data structure behind both
+//! O(log N) claims of the paper:
+//!
+//!   * Algorithm 2 keeps the positive unadjusted coefficients `z` ordered so
+//!     components crossing zero can be popped below a moving threshold;
+//!   * Algorithm 3 keeps the differences `d_i = f~_i - p_i` ordered so cache
+//!     evictions are exactly the keys crossed by the adjustment `rho`.
+//!
+//! Built on `BTreeSet<(OrdF64, u64)>`: insert / remove / min are O(log N);
+//! `pop_below(t)` pops the k smallest elements below `t` in O(k log N).
+//! The paper's amortized argument (§4.2: on average one component zeroes per
+//! request; §5.2: on average B evictions per batch) bounds k.
+
+use std::collections::BTreeSet;
+
+use super::ordf64::OrdF64;
+
+/// Ordered multiset of `(value, item-id)`; ties on value are broken by id,
+/// so duplicate values across distinct items are fully supported.
+///
+/// Perf (EXPERIMENTS.md §Perf iter 1): entries are packed into a single
+/// `u128` — the OrdF64 total-order bits in the high word, the item id in
+/// the low word — so every B-tree node search does one branchless u128
+/// compare instead of a two-field tuple compare (~8% of request-path
+/// cycles in the tuple version).
+#[derive(Debug, Clone, Default)]
+pub struct OrdTree {
+    set: BTreeSet<u128>,
+}
+
+#[inline(always)]
+fn enc(value: f64, item: u64) -> u128 {
+    ((OrdF64::new(value).bits() as u128) << 64) | item as u128
+}
+
+#[inline(always)]
+fn dec(key: u128) -> (f64, u64) {
+    (OrdF64::from_bits((key >> 64) as u64).get(), key as u64)
+}
+
+impl OrdTree {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.set.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.set.is_empty()
+    }
+
+    /// Insert `(value, item)`. Returns false if this exact pair was present.
+    #[inline]
+    pub fn insert(&mut self, value: f64, item: u64) -> bool {
+        self.set.insert(enc(value, item))
+    }
+
+    /// Remove `(value, item)`. The caller must pass the exact stored value.
+    #[inline]
+    pub fn remove(&mut self, value: f64, item: u64) -> bool {
+        self.set.remove(&enc(value, item))
+    }
+
+    #[inline]
+    pub fn contains(&self, value: f64, item: u64) -> bool {
+        self.set.contains(&enc(value, item))
+    }
+
+    /// Smallest (value, item) or None.
+    #[inline]
+    pub fn min(&self) -> Option<(f64, u64)> {
+        self.set.first().map(|&k| dec(k))
+    }
+
+    /// Largest (value, item) or None.
+    #[inline]
+    pub fn max(&self) -> Option<(f64, u64)> {
+        self.set.last().map(|&k| dec(k))
+    }
+
+    /// Pop the smallest element if its value is strictly below `threshold`.
+    #[inline]
+    pub fn pop_if_below(&mut self, threshold: f64) -> Option<(f64, u64)> {
+        let &k = self.set.first()?;
+        // strict comparison on the value part: any id below the threshold
+        // value encodes to < enc(threshold, 0)
+        if k < enc(threshold, 0) {
+            self.set.remove(&k);
+            Some(dec(k))
+        } else {
+            None
+        }
+    }
+
+    /// Pop every element with value strictly below `threshold`.
+    pub fn pop_below(&mut self, threshold: f64) -> Vec<(f64, u64)> {
+        let mut out = Vec::new();
+        while let Some(e) = self.pop_if_below(threshold) {
+            out.push(e);
+        }
+        out
+    }
+
+    /// Count elements with value strictly below `threshold` (O(k log N)).
+    pub fn count_below(&self, threshold: f64) -> usize {
+        self.set.range(..enc(threshold, 0)).count()
+    }
+
+    /// Iterate in ascending order.
+    pub fn iter(&self) -> impl Iterator<Item = (f64, u64)> + '_ {
+        self.set.iter().map(|&k| dec(k))
+    }
+
+    pub fn clear(&mut self) {
+        self.set.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn insert_remove_min() {
+        let mut t = OrdTree::new();
+        assert!(t.insert(3.0, 1));
+        assert!(t.insert(1.0, 2));
+        assert!(t.insert(2.0, 3));
+        assert!(!t.insert(2.0, 3), "duplicate pair rejected");
+        assert_eq!(t.min(), Some((1.0, 2)));
+        assert_eq!(t.max(), Some((3.0, 1)));
+        assert!(t.remove(1.0, 2));
+        assert!(!t.remove(1.0, 2));
+        assert_eq!(t.min(), Some((2.0, 3)));
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn duplicate_values_distinct_items() {
+        let mut t = OrdTree::new();
+        for i in 0..10 {
+            assert!(t.insert(0.5, i));
+        }
+        assert_eq!(t.len(), 10);
+        let popped = t.pop_below(0.6);
+        assert_eq!(popped.len(), 10);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn pop_below_is_exact_partition() {
+        let mut t = OrdTree::new();
+        let mut rng = Xoshiro256pp::seed_from(1);
+        let vals: Vec<f64> = (0..500).map(|_| rng.next_f64()).collect();
+        for (i, &v) in vals.iter().enumerate() {
+            t.insert(v, i as u64);
+        }
+        let thr = 0.3;
+        let below = t.pop_below(thr);
+        assert_eq!(below.len(), vals.iter().filter(|&&v| v < thr).count());
+        assert!(below.iter().all(|&(v, _)| v < thr));
+        assert!(t.iter().all(|(v, _)| v >= thr));
+        assert_eq!(below.len() + t.len(), 500);
+    }
+
+    #[test]
+    fn pop_below_boundary_is_strict() {
+        let mut t = OrdTree::new();
+        t.insert(1.0, 1);
+        assert!(t.pop_if_below(1.0).is_none(), "strictly below only");
+        assert!(t.pop_if_below(1.0 + 1e-15).is_some());
+    }
+
+    #[test]
+    fn negative_values_order() {
+        let mut t = OrdTree::new();
+        t.insert(-1.0, 1);
+        t.insert(-2.0, 2);
+        t.insert(0.5, 3);
+        assert_eq!(t.min(), Some((-2.0, 2)));
+        let below = t.pop_below(0.0);
+        assert_eq!(below.len(), 2);
+    }
+
+    #[test]
+    fn count_below_matches_pop() {
+        let mut t = OrdTree::new();
+        let mut rng = Xoshiro256pp::seed_from(2);
+        for i in 0..200 {
+            t.insert(rng.next_f64() * 10.0, i);
+        }
+        let c = t.count_below(5.0);
+        assert_eq!(c, t.pop_below(5.0).len());
+    }
+
+    #[test]
+    fn randomized_against_sorted_vec_model() {
+        let mut t = OrdTree::new();
+        let mut model: Vec<(u64, f64)> = Vec::new();
+        let mut rng = Xoshiro256pp::seed_from(3);
+        for step in 0..5000u64 {
+            let op = rng.next_below(4);
+            match op {
+                0 => {
+                    let v = rng.next_f64();
+                    let id = step;
+                    t.insert(v, id);
+                    model.push((id, v));
+                }
+                1 => {
+                    if !model.is_empty() {
+                        let k = rng.next_below(model.len() as u64) as usize;
+                        let (id, v) = model.swap_remove(k);
+                        assert!(t.remove(v, id));
+                    }
+                }
+                2 => {
+                    let thr = rng.next_f64();
+                    let popped = t.pop_below(thr);
+                    let expect: Vec<u64> = model
+                        .iter()
+                        .filter(|&&(_, v)| v < thr)
+                        .map(|&(id, _)| id)
+                        .collect();
+                    model.retain(|&(_, v)| v >= thr);
+                    let mut got: Vec<u64> = popped.iter().map(|&(_, i)| i).collect();
+                    let mut exp = expect;
+                    got.sort_unstable();
+                    exp.sort_unstable();
+                    assert_eq!(got, exp);
+                }
+                _ => {
+                    let m = t.min().map(|(v, _)| v);
+                    let mm = model
+                        .iter()
+                        .map(|&(_, v)| v)
+                        .fold(f64::INFINITY, f64::min);
+                    match m {
+                        None => assert!(model.is_empty()),
+                        Some(v) => assert_eq!(v, mm),
+                    }
+                }
+            }
+            assert_eq!(t.len(), model.len());
+        }
+    }
+}

