@@ -1,0 +1,135 @@
+//! Streaming workload engine benchmarks: generator emission rates (the
+//! sources must never be the bottleneck of a policy replay), the
+//! streaming-vs-materialized replay overhead, and sweep-runner thread
+//! scaling on a multi-policy grid.
+//!
+//! Output: table on stdout + results/complexity/stream.csv.
+
+use ogb_cache::policies::Lru;
+use ogb_cache::sim::{self, RunConfig, SweepConfig};
+use ogb_cache::trace::stream::{gen, RequestSource, SourceSpec};
+use ogb_cache::trace::synth;
+use ogb_cache::util::bench::{bench_batch, fast_mode, print_table, to_csv_row, BenchResult};
+use ogb_cache::util::csv::CsvWriter;
+
+fn drain(source: &mut dyn RequestSource) -> u64 {
+    let mut acc = 0u64;
+    while let Some(r) = source.next_request() {
+        acc = acc.wrapping_add(r as u64);
+    }
+    acc
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = fast_mode();
+    let n: usize = 100_000;
+    let t: usize = if fast { 100_000 } else { 1_000_000 };
+    let reps = if fast { 2 } else { 3 };
+
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    // generator emission throughput (fresh source per rep: steady cost
+    // includes construction, amortized over t requests)
+    type MkSource = Box<dyn Fn() -> Box<dyn RequestSource>>;
+    let gens: Vec<(&str, MkSource)> = vec![
+        (
+            "zipf",
+            Box::new(move || -> Box<dyn RequestSource> {
+                Box::new(gen::ZipfSource::new(n, t, 0.9, 7))
+            }),
+        ),
+        (
+            "uniform",
+            Box::new(move || -> Box<dyn RequestSource> {
+                Box::new(gen::UniformSource::new(n, t, 7))
+            }),
+        ),
+        (
+            "drift-zipf",
+            Box::new(move || -> Box<dyn RequestSource> {
+                Box::new(gen::ZipfDriftSource::new(n, t, 0.9, 100, 7))
+            }),
+        ),
+        (
+            "flash",
+            Box::new(move || -> Box<dyn RequestSource> {
+                Box::new(gen::FlashCrowdSource::new(n, t, 0.9, 2e-4, 2e-3, 50, 0.8, 7))
+            }),
+        ),
+        (
+            "diurnal",
+            Box::new(move || -> Box<dyn RequestSource> {
+                Box::new(gen::DiurnalSource::new(n, t, 0.9, t / 4, 7))
+            }),
+        ),
+        (
+            "adversarial",
+            Box::new(move || -> Box<dyn RequestSource> {
+                Box::new(gen::AdversarialSource::new(1_000, t / 1_000, 7))
+            }),
+        ),
+    ];
+    for (name, mk) in &gens {
+        results.push(bench_batch(&format!("gen {name:<12} emit"), t as u64, reps, || {
+            let mut s = mk();
+            std::hint::black_box(drain(s.as_mut()));
+        }));
+    }
+
+    // replay overhead: LRU over a materialized trace vs the same
+    // sequence streamed
+    let trace = synth::zipf(n, t, 0.9, 7);
+    let cfg = RunConfig {
+        window: t,
+        occupancy_every: 0,
+        max_requests: 0,
+    };
+    results.push(bench_batch("replay lru materialized", t as u64, reps, || {
+        let mut p = Lru::new(n / 20);
+        std::hint::black_box(sim::run(&mut p, &trace, &cfg).total_reward);
+    }));
+    results.push(bench_batch("replay lru streamed", t as u64, reps, || {
+        let mut p = Lru::new(n / 20);
+        let mut s = gen::ZipfSource::new(n, t, 0.9, 7);
+        std::hint::black_box(sim::run_source(&mut p, &mut s, &cfg).total_reward);
+    }));
+
+    // sweep-runner thread scaling on a 4-policy × 2-size grid
+    let spec = SourceSpec::parse(&format!("drift-zipf:n={n},t={},s=0.9", t / 4))?;
+    for threads in [1usize, 2, 4] {
+        let cells = 8u64;
+        results.push(bench_batch(
+            &format!("sweep 4x2 grid, {threads} thread(s)"),
+            cells * (t as u64 / 4),
+            1,
+            || {
+                let cfg = SweepConfig {
+                    policies: ["lru", "lfu", "arc", "ogb"].map(String::from).to_vec(),
+                    cache_pcts: vec![1.0, 5.0],
+                    batch: 1,
+                    seed: 7,
+                    threads,
+                    max_requests: 0,
+                };
+                let r = sim::run_sweep(&spec, &cfg).expect("sweep");
+                std::hint::black_box(r.cells.len());
+            },
+        ));
+    }
+
+    print_table("streaming engine, N=1e5", &results);
+    let mut w = CsvWriter::create(
+        "results/complexity/stream.csv",
+        &[
+            ("experiment", "stream_bench".to_string()),
+            ("n", n.to_string()),
+            ("t", t.to_string()),
+        ],
+        &["benchmark", "ns_per_op", "ops_per_s", "min_ns", "max_ns"],
+    )?;
+    for r in &results {
+        w.row_str(&to_csv_row(r))?;
+    }
+    eprintln!("\nwrote {}", w.finish()?.display());
+    Ok(())
+}

@@ -1,10 +1,17 @@
 //! Quickstart: build the OGB policy, replay a Zipf workload, and compare
-//! against LRU and the hindsight-optimal static allocation.
+//! against LRU and the hindsight-optimal static allocation — then the
+//! same comparison on the streaming path (`trace::stream`), where the
+//! request vector is never materialized.
 //!
 //!     cargo run --release --example quickstart
+//!
+//! Next steps: `examples/streaming_sweep.rs` runs a composed scenario
+//! across a policy × cache-size grid in parallel (also available as the
+//! `ogb-cache sweep` subcommand).
 
 use ogb_cache::policies::{Lru, Ogb, Opt, Policy};
-use ogb_cache::sim::{run, RunConfig};
+use ogb_cache::sim::{run, run_source, RunConfig, StreamingOpt};
+use ogb_cache::trace::stream::gen::ZipfDriftSource;
 use ogb_cache::trace::synth;
 
 fn main() {
@@ -57,5 +64,19 @@ fn main() {
         r_opt.total_reward - r.total_reward,
         (r_opt.total_reward - r.total_reward) / t as f64,
         ogb_cache::theory_regret_bound(c as f64, n as f64, t as f64, 1.0) / t as f64,
+    );
+
+    // The same experiment on the streaming path: a drifting-Zipf scenario
+    // replayed straight from the generator (no request vector), with OPT
+    // computed by the one-pass StreamingOpt instead of Trace::counts().
+    let mut source = ZipfDriftSource::new(n, t, 0.9, /*swap_every=*/ 200, /*seed=*/ 7);
+    let mut ogb2 = Ogb::with_theory_eta(n, c as f64, t, 1, 42);
+    let rs = run_source(&mut ogb2, &mut source, &cfg);
+    let opt = StreamingOpt::from_source(&mut ZipfDriftSource::new(n, t, 0.9, 200, 7), 0);
+    println!(
+        "\nstreaming drift-zipf: OGB hit_ratio={:.4}  OPT(hindsight)={:.4}  regret/req={:.5}",
+        rs.hit_ratio(),
+        opt.opt_hits(c) as f64 / t as f64,
+        (opt.opt_hits(c) as f64 - rs.total_reward) / t as f64,
     );
 }

@@ -1,0 +1,62 @@
+//! The streaming workload engine end-to-end (DESIGN.md §6): a
+//! 10M-request scenario — drifting-Zipf base traffic interleaved with
+//! Markov-modulated flash crowds — replayed through a policy ×
+//! cache-size grid in parallel, with regret reported against a streaming
+//! one-pass OPT.  The request vector (40 MB at this scale, gigabytes at
+//! paper scale) is never materialized.
+//!
+//!     cargo run --release --example streaming_sweep [spec]
+//!
+//! Pass your own spec to explore, e.g.
+//!     "diurnal:n=1e6,t=2e7,period=5e6 + adversarial:n=1000,rounds=1000"
+
+use ogb_cache::sim::{run_sweep, SweepConfig};
+use ogb_cache::trace::stream::SourceSpec;
+
+fn main() -> anyhow::Result<()> {
+    let spec_text = std::env::args().nth(1).unwrap_or_else(|| {
+        "drift-zipf:n=1e6,t=5e6,s=0.9,swap-every=200 & flash:n=1e6,t=5e6,s=0.9,crowd-k=100"
+            .to_string()
+    });
+    let spec = SourceSpec::parse(&spec_text)?;
+    let cfg = SweepConfig {
+        policies: ["lru", "lfu", "arc", "ogb", "opt"].map(String::from).to_vec(),
+        cache_pcts: vec![1.0, 5.0],
+        batch: 1,
+        seed: 42,
+        threads: 0, // all cores
+        max_requests: 0,
+    };
+    println!("scenario: {spec_text}");
+    let r = run_sweep(&spec, &cfg)?;
+    println!(
+        "T={} requests over N={} items | {} cells on {} threads in {:.1}s \
+         ({:.3e} req/s aggregate, opt pass {:.1}s, peak RSS {:.0} MiB)\n",
+        r.requests,
+        r.catalog,
+        r.cells.len(),
+        r.threads,
+        r.wall_s,
+        r.aggregate_rps(),
+        r.opt_pass_elapsed_s,
+        r.peak_rss_bytes as f64 / (1024.0 * 1024.0),
+    );
+    println!(
+        "{:<8} {:>9} {:>7} {:>10} {:>12} {:>12}",
+        "policy", "C", "pct", "hit_ratio", "regret/T", "req/s"
+    );
+    for c in &r.cells {
+        println!(
+            "{:<8} {:>9} {:>6.1}% {:>10.4} {:>12.6} {:>12.3e}",
+            c.policy,
+            c.c,
+            c.cache_pct,
+            c.hit_ratio,
+            c.regret / c.requests.max(1) as f64,
+            c.throughput_rps
+        );
+    }
+    let out = r.write_bench_json("BENCH_stream.json")?;
+    println!("\nwrote {}", out.display());
+    Ok(())
+}

@@ -13,7 +13,8 @@ use std::path::{Path, PathBuf};
 use anyhow::Result;
 
 use crate::policies::{self, Policy};
-use crate::sim::{self, regret::regret_growth_exponent, RunConfig};
+use crate::sim::{self, regret::regret_growth_exponent, RunConfig, StreamingOpt};
+use crate::trace::stream::{gen as stream_gen, RequestSource};
 use crate::trace::{realworld, stats, synth, Trace};
 use crate::util::csv::CsvWriter;
 
@@ -121,6 +122,50 @@ fn run_and_dump(
     w.finish()
 }
 
+/// Streaming variant of [`run_and_dump`]: every policy replays a fresh
+/// source from `make_source` (the DESIGN.md §6 path — nothing is
+/// materialized), same long-format CSV.
+fn run_and_dump_stream(
+    path: &Path,
+    metas: &[(&'static str, String)],
+    make_source: &mut dyn FnMut() -> Box<dyn RequestSource>,
+    window: usize,
+    mut entries: Vec<(String, Box<dyn Policy>)>,
+) -> Result<PathBuf> {
+    let mut w = CsvWriter::create(
+        path,
+        metas,
+        &["policy", "window_end", "window_hit_ratio", "cumulative_hit_ratio"],
+    )?;
+    for (label, policy) in entries.iter_mut() {
+        let mut source = make_source();
+        let r = sim::run_source(
+            policy.as_mut(),
+            source.as_mut(),
+            &RunConfig {
+                window,
+                occupancy_every: 0,
+                max_requests: 0,
+            },
+        );
+        for (k, (&wh, &ch)) in r.windowed.iter().zip(&r.cumulative).enumerate() {
+            let end = ((k + 1) * window).min(r.requests);
+            w.row_str(&[
+                label.clone(),
+                end.to_string(),
+                format!("{wh:.6}"),
+                format!("{ch:.6}"),
+            ])?;
+        }
+        eprintln!(
+            "  {label:<24} hit_ratio={:.4} throughput={:.2e} req/s (streamed)",
+            r.hit_ratio(),
+            r.throughput_rps
+        );
+    }
+    w.finish()
+}
+
 // ---------------------------------------------------------------- table1
 
 /// Table 1 + Fig. 1: literature scales (static metadata from the paper)
@@ -184,13 +229,22 @@ fn table1(opts: &FigOpts) -> Result<Vec<PathBuf>> {
 
 /// Fig. 2: adversarial round-robin trace — LRU/LFU/ARC have linear regret,
 /// OGB tracks OPT.
+///
+/// Runs on the streaming path (DESIGN.md §6): each policy replays a fresh
+/// `AdversarialSource` (byte-identical to `synth::adversarial`, so the CSV
+/// matches the materialized version bit-for-bit) and OPT's allocation
+/// comes from a one-pass [`StreamingOpt`] count instead of
+/// `Trace::counts()` — the request vector is never materialized.
 fn fig2(opts: &FigOpts) -> Result<Vec<PathBuf>> {
     let n = 1000;
     let c = 250;
     let rounds = scaled(1000, opts.scale, 50);
-    let trace = synth::adversarial(n, rounds, opts.seed);
-    let t = trace.len();
+    let t = n * rounds;
     let window = (t / 50).max(1000);
+    let mut mk = || -> Box<dyn RequestSource> {
+        Box::new(stream_gen::AdversarialSource::new(n, rounds, opts.seed))
+    };
+    let opt = StreamingOpt::from_source(mk().as_mut(), 0);
     let entries: Vec<(String, Box<dyn Policy>)> = vec![
         ("LRU".into(), Box::new(policies::Lru::new(c))),
         ("LFU".into(), Box::new(policies::Lfu::new(c))),
@@ -202,17 +256,20 @@ fn fig2(opts: &FigOpts) -> Result<Vec<PathBuf>> {
         ),
         (
             "OPT".into(),
-            Box::new(policies::Opt::from_trace(&trace, c)),
+            Box::new(policies::Opt::from_items(
+                opt.top_c(c).into_iter().map(u64::from),
+                c,
+            )),
         ),
     ];
-    let p = run_and_dump(
+    let p = run_and_dump_stream(
         &opts.out_dir.join("fig2/adversarial.csv"),
         &meta(
             opts,
             "fig2",
             &[("n", n.to_string()), ("c", c.to_string()), ("t", t.to_string())],
         ),
-        &trace,
+        &mut mk,
         window,
         entries,
     )?;

@@ -14,8 +14,17 @@
 //!   the full comparison set: LRU, LFU, FIFO, ARC, GDS, FTPL, OPT;
 //! * [`trace`] — synthetic and real-world-like request trace generators and
 //!   the temporal-locality analyses of the paper's App. B;
-//! * [`sim`] — the windowed-hit-ratio simulation engine and regret
-//!   accounting used by every figure;
+//! * [`trace::stream`] — the streaming workload engine (DESIGN.md §6):
+//!   pull-based [`trace::stream::RequestSource`]s (chunked `.ogbt` file
+//!   replay, drifting-Zipf / flash-crowd / diurnal generators,
+//!   `Concat`/`Interleave`/`Mix` combinators, one-line scenario specs)
+//!   that replay horizons far beyond RAM without materializing a request
+//!   vector;
+//! * [`sim`] — the windowed-hit-ratio simulation engine (in-RAM and
+//!   streaming: [`sim::run`] / [`sim::run_source`]), regret accounting
+//!   with the one-pass streaming OPT ([`sim::StreamingOpt`]), and the
+//!   parallel policy × cache-size [`sim::sweep`] runner behind
+//!   `ogb-cache sweep`;
 //! * [`runtime`] — the PJRT (XLA) runtime that loads the AOT-compiled JAX /
 //!   Pallas artifacts backing the dense baseline;
 //! * [`coordinator`] — a deployable sharded cache service built around the
@@ -24,7 +33,9 @@
 //!   CSV, property-testing) required by the offline build environment.
 //!
 //! Quickstart: see `examples/quickstart.rs`; experiments: `src/figures.rs`
-//! via `ogb-cache figures --id all`.
+//! via `ogb-cache figures --id all`; streaming scenarios at scale:
+//! `examples/streaming_sweep.rs` or
+//! `ogb-cache sweep --source "drift-zipf:n=1e6,t=1e7 & flash:n=1e6,t=1e7"`.
 
 pub mod coordinator;
 pub mod figures;

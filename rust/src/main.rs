@@ -2,6 +2,7 @@
 //!
 //! Commands:
 //!   simulate   replay a trace through a policy, report hit ratio
+//!   sweep      replay a streaming scenario across a policy × cache grid
 //!   figures    regenerate the paper's tables/figures (CSV under results/)
 //!   serve      run the sharded cache service under synthetic load
 //!   analyze    temporal-locality analysis of a trace (App. B)
@@ -12,8 +13,9 @@ use anyhow::Result;
 use ogb_cache::coordinator::{CacheServer, ServerConfig};
 use ogb_cache::figures::{run_figure, FigOpts};
 use ogb_cache::proj::{dense, LazySimplex};
-use ogb_cache::sim::{self, RunConfig};
-use ogb_cache::trace::{self, realworld, synth, Trace};
+use ogb_cache::sim::{self, RunConfig, SweepConfig};
+use ogb_cache::trace::stream::SourceSpec;
+use ogb_cache::trace::{self, realworld, stream, synth, Trace};
 use ogb_cache::util::args::{flag, opt, Cli};
 use ogb_cache::util::{logger, Xoshiro256pp};
 
@@ -24,13 +26,32 @@ fn cli() -> Cli {
             "replay a trace through a policy",
             vec![
                 opt("policy", "policy name (lru lfu fifo arc gds ftpl ogb ogb-frac ogb-classic ogb-classic-frac opt infinite)", "ogb"),
-                opt("trace", "trace name (cdn twitter ms-ex systor adversarial zipf uniform) or path to .ogbt/.txt", "cdn"),
+                opt("trace", "trace name (cdn twitter ms-ex systor adversarial zipf uniform), `stream:<spec>`, or path to .ogbt/.txt", "cdn"),
                 opt("scale", "trace scale factor", "0.1"),
                 opt("cache-pct", "cache size as % of catalog", "5"),
                 opt("batch", "batch size B", "1"),
                 opt("window", "hit-ratio window", "100000"),
                 opt("seed", "random seed", "42"),
                 opt("csv", "optional output CSV path", ""),
+            ],
+        )
+        .command(
+            "sweep",
+            "replay one streaming scenario across a policy × cache-size grid in parallel",
+            vec![
+                opt(
+                    "source",
+                    "source spec, e.g. `drift-zipf:n=1e6,t=1e7 & flash:n=1e6,t=1e7` (see trace::stream::spec)",
+                    "drift-zipf:n=100000,t=1000000,s=0.9",
+                ),
+                opt("policies", "comma-separated policy names (plus `opt`)", "lru,lfu,arc,ogb,opt"),
+                opt("cache-pcts", "comma-separated cache sizes as % of catalog", "1,5,10"),
+                opt("batch", "batch size B", "1"),
+                opt("threads", "worker threads (0 = all cores)", "0"),
+                opt("max-requests", "cap on replayed requests per cell (0 = source horizon)", "0"),
+                opt("seed", "random seed", "42"),
+                opt("out", "output CSV path", "results/sweep/sweep.csv"),
+                opt("bench-json", "machine-readable perf snapshot (empty = skip)", "BENCH_stream.json"),
             ],
         )
         .command(
@@ -81,7 +102,7 @@ fn cli() -> Cli {
             "gen-trace",
             "generate a trace and write it to a binary file",
             vec![
-                opt("trace", "generator name", "cdn"),
+                opt("trace", "generator name or `stream:<spec>`", "cdn"),
                 opt("scale", "trace scale factor", "0.1"),
                 opt("seed", "random seed", "42"),
                 opt("out", "output path", "trace.ogbt"),
@@ -92,6 +113,13 @@ fn cli() -> Cli {
 fn load_trace(name: &str, scale: f64, seed: u64) -> Result<Trace> {
     if let Some(t) = realworld::by_name(name, scale, seed) {
         return Ok(t);
+    }
+    // `stream:<spec>` materializes a streaming scenario (gen-trace uses
+    // this to freeze scenarios into .ogbt files; `sweep` replays specs
+    // without materializing).
+    if let Some(spec_text) = name.strip_prefix("stream:") {
+        let spec = SourceSpec::parse(spec_text)?;
+        return Ok(stream::materialize(spec.build(seed)?.as_mut(), 0));
     }
     Ok(match name {
         "adversarial" => synth::adversarial(1000, ((1000.0 * scale) as usize).max(50), seed),
@@ -178,6 +206,72 @@ fn cmd_simulate(a: &ogb_cache::util::args::Args) -> Result<()> {
         }
         let p = w.finish()?;
         println!("wrote {}", p.display());
+    }
+    Ok(())
+}
+
+fn cmd_sweep(a: &ogb_cache::util::args::Args) -> Result<()> {
+    let spec = SourceSpec::parse(a.get_or("source", "drift-zipf:n=100000,t=1000000,s=0.9"))?;
+    let policies: Vec<String> = a
+        .get_or("policies", "lru,lfu,arc,ogb,opt")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let cache_pcts: Vec<f64> = a
+        .get_or("cache-pcts", "1,5,10")
+        .split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|s| {
+            s.trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad --cache-pcts entry `{s}`"))
+        })
+        .collect::<Result<_>>()?;
+    let cfg = SweepConfig {
+        policies,
+        cache_pcts,
+        batch: a.get_parse("batch", 1),
+        seed: a.get_parse("seed", 42),
+        threads: a.get_parse("threads", 0),
+        max_requests: a.get_parse("max-requests", 0),
+    };
+    println!("sweep source=`{}` seed={}", spec.text(), cfg.seed);
+    let r = sim::run_sweep(&spec, &cfg)?;
+    println!(
+        "source `{}`: T={} N={} | {} cells on {} threads in {:.2}s (opt pass {:.2}s) | {:.3e} req/s aggregate | peak RSS {:.1} MiB",
+        r.source,
+        r.requests,
+        r.catalog,
+        r.cells.len(),
+        r.threads,
+        r.wall_s,
+        r.opt_pass_elapsed_s,
+        r.aggregate_rps(),
+        r.peak_rss_bytes as f64 / (1024.0 * 1024.0),
+    );
+    println!(
+        "\n{:<16} {:>10} {:>8} {:>10} {:>12} {:>12}",
+        "policy", "C", "pct", "hit_ratio", "regret/T", "req/s"
+    );
+    for c in &r.cells {
+        println!(
+            "{:<16} {:>10} {:>7.2}% {:>10.4} {:>12.6} {:>12.3e}",
+            c.policy,
+            c.c,
+            c.cache_pct,
+            c.hit_ratio,
+            c.regret / c.requests.max(1) as f64,
+            c.throughput_rps
+        );
+    }
+    let out = a.get_or("out", "results/sweep/sweep.csv");
+    if !out.is_empty() {
+        println!("\nwrote {}", r.write_csv(out)?.display());
+    }
+    let bench = a.get_or("bench-json", "BENCH_stream.json");
+    if !bench.is_empty() {
+        println!("wrote {}", r.write_bench_json(bench)?.display());
     }
     Ok(())
 }
@@ -312,6 +406,7 @@ fn main() -> Result<()> {
     let (cmd, a) = cli().parse(&argv);
     match cmd.as_str() {
         "simulate" => cmd_simulate(&a),
+        "sweep" => cmd_sweep(&a),
         "figures" => {
             let opts = FigOpts {
                 out_dir: a.get_or("out", "results").into(),

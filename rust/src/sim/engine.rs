@@ -1,9 +1,16 @@
 //! Trace replay with windowed metrics (the measurement harness behind
 //! every figure of §6).
+//!
+//! Two entry points share one implementation: [`run`] replays an in-RAM
+//! [`Trace`], [`run_source`] replays any streaming
+//! [`RequestSource`] (DESIGN.md §6) — `run` is just `run_source` over the
+//! borrowing [`TraceSource`] adapter, so both paths are metric-identical
+//! by construction.
 
 use std::time::Instant;
 
 use crate::policies::Policy;
+use crate::trace::stream::{RequestSource, TraceSource};
 use crate::trace::Trace;
 
 /// Measurement configuration.
@@ -54,14 +61,31 @@ impl RunResult {
 
 /// Replay `trace` through `policy`.
 pub fn run(policy: &mut dyn Policy, trace: &Trace, cfg: &RunConfig) -> RunResult {
-    let t_total = if cfg.max_requests > 0 {
-        trace.len().min(cfg.max_requests)
-    } else {
-        trace.len()
-    };
+    run_source(policy, &mut TraceSource::new(trace), cfg)
+}
+
+/// Replay a streaming `source` through `policy` in one pass — requests
+/// are consumed as they are produced and never buffered, so the horizon
+/// is bounded by the source, not by RAM.
+pub fn run_source(
+    policy: &mut dyn Policy,
+    source: &mut dyn RequestSource,
+    cfg: &RunConfig,
+) -> RunResult {
     let window = cfg.window.max(1);
-    let mut windowed = Vec::with_capacity(t_total / window + 1);
-    let mut cumulative = Vec::with_capacity(t_total / window + 1);
+    let reserve = source
+        .horizon()
+        .map(|h| {
+            let h = if cfg.max_requests > 0 {
+                h.min(cfg.max_requests)
+            } else {
+                h
+            };
+            h / window + 1
+        })
+        .unwrap_or(0);
+    let mut windowed = Vec::with_capacity(reserve);
+    let mut cumulative = Vec::with_capacity(reserve);
     let mut occupancy = Vec::new();
     let mut removed_per_req = Vec::new();
 
@@ -71,7 +95,11 @@ pub fn run(policy: &mut dyn Policy, trace: &Trace, cfg: &RunConfig) -> RunResult
     let mut removed_at_win_start = policy.diag().removed_coeffs;
 
     let start = Instant::now();
-    for (k, &r) in trace.requests[..t_total].iter().enumerate() {
+    let mut k = 0usize;
+    while cfg.max_requests == 0 || k < cfg.max_requests {
+        let Some(r) = source.next_request() else {
+            break;
+        };
         let reward = policy.request(r as u64);
         total += reward;
         win_reward += reward;
@@ -88,7 +116,9 @@ pub fn run(policy: &mut dyn Policy, trace: &Trace, cfg: &RunConfig) -> RunResult
             win_reward = 0.0;
             win_len = 0;
         }
+        k += 1;
     }
+    let t_total = k;
     if win_len > 0 {
         windowed.push(win_reward / win_len as f64);
         cumulative.push(total / t_total as f64);
@@ -99,7 +129,7 @@ pub fn run(policy: &mut dyn Policy, trace: &Trace, cfg: &RunConfig) -> RunResult
 
     RunResult {
         policy: policy.name(),
-        trace: trace.name.clone(),
+        trace: source.name(),
         requests: t_total,
         total_reward: total,
         windowed,
@@ -155,6 +185,43 @@ mod tests {
         );
         assert_eq!(r.requests, 777);
         assert!(r.occupancy.is_empty());
+    }
+
+    #[test]
+    fn run_source_matches_run_exactly() {
+        let t = synth::zipf(100, 2_500, 0.8, 1);
+        let cfg = RunConfig {
+            window: 1_000,
+            occupancy_every: 500,
+            max_requests: 0,
+        };
+        let mut p1 = Lru::new(20);
+        let r1 = run(&mut p1, &t, &cfg);
+        let mut p2 = Lru::new(20);
+        let mut src = crate::trace::stream::gen::ZipfSource::new(100, 2_500, 0.8, 1);
+        let r2 = run_source(&mut p2, &mut src, &cfg);
+        assert_eq!(r1.total_reward, r2.total_reward);
+        assert_eq!(r1.windowed, r2.windowed);
+        assert_eq!(r1.cumulative, r2.cumulative);
+        assert_eq!(r1.occupancy, r2.occupancy);
+        assert_eq!(r1.requests, r2.requests);
+    }
+
+    #[test]
+    fn run_source_caps_unbounded_horizons() {
+        let mut p = Lru::new(10);
+        let mut src = crate::trace::stream::gen::UniformSource::new(50, 100_000, 3);
+        let r = run_source(
+            &mut p,
+            &mut src,
+            &RunConfig {
+                window: 100,
+                occupancy_every: 0,
+                max_requests: 777,
+            },
+        );
+        assert_eq!(r.requests, 777);
+        assert_eq!(r.windowed.len(), 8); // 7 full + 1 partial
     }
 
     #[test]

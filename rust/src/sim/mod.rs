@@ -1,10 +1,14 @@
-//! Simulation engine: replays a trace through a policy collecting the
-//! paper's metrics — windowed and cumulative hit ratio, occupancy samples,
-//! removed-coefficient rates, wall-clock throughput — plus regret
-//! accounting against OPT (Eq. (1)).
+//! Simulation engine: replays a trace (in-RAM or streaming, DESIGN.md §6)
+//! through a policy collecting the paper's metrics — windowed and
+//! cumulative hit ratio, occupancy samples, removed-coefficient rates,
+//! wall-clock throughput — plus regret accounting against OPT (Eq. (1)),
+//! including the streaming one-pass [`StreamingOpt`], and the parallel
+//! policy × cache-size [`sweep`] runner.
 
 pub mod engine;
 pub mod regret;
+pub mod sweep;
 
-pub use engine::{run, RunConfig, RunResult};
-pub use regret::{regret_series, RegretPoint};
+pub use engine::{run, run_source, RunConfig, RunResult};
+pub use regret::{regret_series, RegretPoint, StreamingOpt};
+pub use sweep::{run_sweep, SweepCell, SweepConfig, SweepResult};

@@ -2,9 +2,21 @@
 //! best static allocation in hindsight (OPT) and the online policy, and
 //! the sub-linearity diagnostics backing Theorem 3.1's empirical check
 //! (`figures --id regret`).
+//!
+//! [`StreamingOpt`] is the streaming counterpart of `Trace::counts()` /
+//! `Trace::top_c()`: per-item counts accumulate in a hash map while the
+//! requests stream past (memory O(distinct items), not O(T)), and the
+//! top-C extraction runs over a bounded min-heap (O(distinct · log C)),
+//! so hindsight-OPT is available even for sources that are never
+//! materialized (DESIGN.md §6).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 use crate::policies::Policy;
+use crate::trace::stream::RequestSource;
 use crate::trace::Trace;
+use crate::util::FxHashMap;
 
 /// One regret checkpoint.
 #[derive(Debug, Clone, Copy)]
@@ -70,6 +82,98 @@ pub fn regret_series(
     out
 }
 
+/// One-pass streaming hindsight-OPT accounting.
+///
+/// Records each request's item id; answers `opt_hits(c)` (the paper's
+/// OPT_T for any cache size C) and `top_c(c)` (the hindsight allocation
+/// `x*`) without ever materializing the request vector.
+#[derive(Debug, Clone, Default)]
+pub struct StreamingOpt {
+    counts: FxHashMap<u32, u64>,
+    total: u64,
+}
+
+impl StreamingOpt {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build by draining a source (`max_requests = 0` ⇒ until exhausted).
+    pub fn from_source(source: &mut dyn RequestSource, max_requests: usize) -> Self {
+        let mut s = Self::new();
+        let limit = if max_requests > 0 {
+            max_requests
+        } else {
+            usize::MAX
+        };
+        while s.total < limit as u64 {
+            match source.next_request() {
+                Some(r) => s.record(r),
+                None => break,
+            }
+        }
+        s
+    }
+
+    #[inline]
+    pub fn record(&mut self, item: u32) {
+        *self.counts.entry(item).or_insert(0) += 1;
+        self.total += 1;
+    }
+
+    /// Requests recorded so far.
+    pub fn requests(&self) -> u64 {
+        self.total
+    }
+
+    /// Distinct items requested so far.
+    pub fn distinct(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Total hits of the best static C-slot allocation: sum of the C
+    /// largest counts, via a bounded min-heap (never sorts all items).
+    pub fn opt_hits(&self, c: usize) -> u64 {
+        if c == 0 {
+            return 0;
+        }
+        let mut heap: BinaryHeap<Reverse<u64>> = BinaryHeap::with_capacity(c + 1);
+        for &cnt in self.counts.values() {
+            if heap.len() < c {
+                heap.push(Reverse(cnt));
+            } else if cnt > heap.peek().unwrap().0 {
+                heap.pop();
+                heap.push(Reverse(cnt));
+            }
+        }
+        heap.into_iter().map(|Reverse(cnt)| cnt).sum()
+    }
+
+    /// The hindsight allocation: the (up to) C most-requested items, ties
+    /// broken by smaller id — the same order as `Trace::top_c`, except
+    /// never-requested items are not padded in.
+    pub fn top_c(&self, c: usize) -> Vec<u32> {
+        if c == 0 {
+            return Vec::new();
+        }
+        // priority = (count, Reverse(id)): more requests win, then lower id
+        let mut heap: BinaryHeap<Reverse<(u64, Reverse<u32>)>> =
+            BinaryHeap::with_capacity(c + 1);
+        for (&item, &cnt) in &self.counts {
+            let p = (cnt, Reverse(item));
+            if heap.len() < c {
+                heap.push(Reverse(p));
+            } else if p > heap.peek().unwrap().0 {
+                heap.pop();
+                heap.push(Reverse(p));
+            }
+        }
+        let mut best: Vec<(u64, Reverse<u32>)> = heap.into_iter().map(|Reverse(p)| p).collect();
+        best.sort_unstable_by(|a, b| b.cmp(a));
+        best.into_iter().map(|(_, Reverse(id))| id).collect()
+    }
+}
+
 /// Least-squares slope of log(max(R_t,1)) vs log(t): < 1.0 ⟹ sub-linear
 /// growth.  Only points in the second half of the horizon are used (the
 /// transient dominates early checkpoints).
@@ -130,6 +234,37 @@ mod tests {
             last.regret,
             last.bound
         );
+    }
+
+    #[test]
+    fn streaming_opt_matches_materialized_counts() {
+        let t = synth::zipf(300, 20_000, 0.9, 5);
+        let mut s = StreamingOpt::new();
+        for &r in &t.requests {
+            s.record(r);
+        }
+        assert_eq!(s.requests(), t.len() as u64);
+        assert_eq!(s.distinct(), t.distinct());
+        for c in [1usize, 7, 50, 299, 300, 1000] {
+            assert_eq!(s.opt_hits(c), t.opt_hits(c), "c={c}");
+        }
+        // top_c matches on the requested prefix (Trace::top_c pads with
+        // never-requested ids once c exceeds the distinct count)
+        let c = 25;
+        assert_eq!(s.top_c(c), t.top_c(c));
+        assert_eq!(s.opt_hits(0), 0);
+        assert!(s.top_c(0).is_empty());
+    }
+
+    #[test]
+    fn streaming_opt_from_source_drains_and_caps() {
+        use crate::trace::stream::gen::ZipfSource;
+        let t = synth::zipf(100, 5_000, 1.0, 9);
+        let full = StreamingOpt::from_source(&mut ZipfSource::new(100, 5_000, 1.0, 9), 0);
+        assert_eq!(full.requests(), 5_000);
+        assert_eq!(full.opt_hits(10), t.opt_hits(10));
+        let capped = StreamingOpt::from_source(&mut ZipfSource::new(100, 5_000, 1.0, 9), 1_000);
+        assert_eq!(capped.requests(), 1_000);
     }
 
     #[test]

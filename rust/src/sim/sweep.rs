@@ -1,0 +1,454 @@
+//! Parallel sweep runner (DESIGN.md §6): replay ONE streaming scenario
+//! spec across a policy × cache-size grid, one fresh deterministic source
+//! per worker, and report hit ratios plus regret against a streaming
+//! one-pass OPT.
+//!
+//! Execution model:
+//!
+//! 1. a single **OPT pass** streams the scenario once through
+//!    [`StreamingOpt`], pinning the catalog, the replay horizon T, and
+//!    `OPT_hits(C)` for every requested cache size — O(distinct) memory;
+//! 2. grid cells are pulled off an atomic work queue by `threads`
+//!    workers; each worker builds its *own* source from the spec
+//!    (identical sequence by the determinism contract) and its own
+//!    policy, so nothing on the request path is shared or locked —
+//!    policies stay `!Send` as required by the XLA-backed backends;
+//! 3. results land in one CSV (long format, provenance header) and an
+//!    optional machine-readable `BENCH_stream.json` perf snapshot
+//!    (requests/sec, peak-RSS proxy, per-policy hit ratio) that future
+//!    PRs compare against.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::log_info;
+use crate::policies::{self, Opt, Policy};
+use crate::sim::engine::{run_source, RunConfig};
+use crate::sim::regret::StreamingOpt;
+use crate::trace::stream::SourceSpec;
+use crate::util::bench::peak_rss_bytes;
+use crate::util::csv::{json::Json, CsvWriter};
+
+/// Sweep grid configuration.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// policy names accepted by `policies::by_name`, plus `opt` (served
+    /// from the streaming OPT pass)
+    pub policies: Vec<String>,
+    /// cache sizes as a percentage of the catalog
+    pub cache_pcts: Vec<f64>,
+    /// batch size B handed to batched policies
+    pub batch: usize,
+    pub seed: u64,
+    /// worker threads (0 = all available cores)
+    pub threads: usize,
+    /// cap on replayed requests per cell (0 = full source horizon)
+    pub max_requests: usize,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        Self {
+            policies: ["lru", "lfu", "arc", "ogb"]
+                .map(String::from)
+                .to_vec(),
+            cache_pcts: vec![1.0, 5.0, 10.0],
+            batch: 1,
+            seed: 42,
+            threads: 0,
+            max_requests: 0,
+        }
+    }
+}
+
+/// One grid cell's outcome.
+#[derive(Debug, Clone)]
+pub struct SweepCell {
+    pub policy: String,
+    pub c: usize,
+    pub cache_pct: f64,
+    pub requests: usize,
+    pub hit_ratio: f64,
+    pub total_reward: f64,
+    pub opt_hits: u64,
+    /// `OPT_hits(C) - reward` (negative when a dynamic policy beats
+    /// static hindsight OPT, e.g. recency policies on bursty traffic)
+    pub regret: f64,
+    pub elapsed_s: f64,
+    pub throughput_rps: f64,
+}
+
+/// Whole-sweep outcome.
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    pub source: String,
+    pub spec: String,
+    pub catalog: usize,
+    pub requests: usize,
+    pub seed: u64,
+    pub threads: usize,
+    pub cells: Vec<SweepCell>,
+    pub opt_pass_elapsed_s: f64,
+    /// wall-clock of the parallel grid phase only (excludes the OPT pass)
+    pub grid_wall_s: f64,
+    /// total wall-clock including the OPT pass
+    pub wall_s: f64,
+    pub peak_rss_bytes: u64,
+}
+
+impl SweepResult {
+    /// Aggregate replay throughput: requests replayed across all cells
+    /// (excluding the OPT pass) per second of the grid phase.
+    pub fn aggregate_rps(&self) -> f64 {
+        let total: usize = self.cells.iter().map(|c| c.requests).sum();
+        total as f64 / self.grid_wall_s.max(1e-12)
+    }
+
+    /// Long-format CSV with full provenance.
+    pub fn write_csv<P: AsRef<Path>>(&self, path: P) -> Result<PathBuf> {
+        let mut w = CsvWriter::create(
+            path,
+            &[
+                ("experiment", "stream_sweep".to_string()),
+                ("source", self.source.clone()),
+                ("spec", self.spec.clone()),
+                ("catalog", self.catalog.to_string()),
+                ("requests", self.requests.to_string()),
+                ("seed", self.seed.to_string()),
+                ("threads", self.threads.to_string()),
+            ],
+            &[
+                "policy",
+                "c",
+                "cache_pct",
+                "hit_ratio",
+                "opt_hit_ratio",
+                "regret",
+                "avg_regret",
+                "throughput_rps",
+                "elapsed_s",
+            ],
+        )?;
+        for cell in &self.cells {
+            let t = cell.requests.max(1) as f64;
+            w.row_str(&[
+                cell.policy.clone(),
+                cell.c.to_string(),
+                format!("{:.3}", cell.cache_pct),
+                format!("{:.6}", cell.hit_ratio),
+                format!("{:.6}", cell.opt_hits as f64 / t),
+                format!("{:.2}", cell.regret),
+                format!("{:.6}", cell.regret / t),
+                format!("{:.1}", cell.throughput_rps),
+                format!("{:.3}", cell.elapsed_s),
+            ])?;
+        }
+        w.finish()
+    }
+
+    /// Machine-readable perf snapshot (`BENCH_stream.json`): the numbers
+    /// future PRs regress against.
+    pub fn write_bench_json<P: AsRef<Path>>(&self, path: P) -> Result<PathBuf> {
+        let cells: Vec<Json> = self
+            .cells
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("policy", Json::Str(c.policy.clone())),
+                    ("c", Json::Num(c.c as f64)),
+                    ("cache_pct", Json::Num(c.cache_pct)),
+                    ("hit_ratio", Json::Num(c.hit_ratio)),
+                    ("regret", Json::Num(c.regret)),
+                    ("requests_per_sec", Json::Num(c.throughput_rps)),
+                ])
+            })
+            .collect();
+        let j = Json::obj(vec![
+            ("experiment", Json::Str("stream_sweep".into())),
+            ("source", Json::Str(self.source.clone())),
+            ("spec", Json::Str(self.spec.clone())),
+            ("catalog", Json::Num(self.catalog as f64)),
+            ("requests_per_cell", Json::Num(self.requests as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("threads", Json::Num(self.threads as f64)),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("grid_wall_s", Json::Num(self.grid_wall_s)),
+            ("opt_pass_s", Json::Num(self.opt_pass_elapsed_s)),
+            ("aggregate_requests_per_sec", Json::Num(self.aggregate_rps())),
+            ("peak_rss_bytes", Json::Num(self.peak_rss_bytes as f64)),
+            ("cells", Json::Arr(cells)),
+        ]);
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("mkdir -p {}", dir.display()))?;
+            }
+        }
+        std::fs::write(&path, j.render() + "\n")
+            .with_context(|| format!("write {}", path.display()))?;
+        Ok(path)
+    }
+}
+
+/// Run the sweep: one streaming OPT pass, then the policy × cache-size
+/// grid in parallel.
+pub fn run_sweep(spec: &SourceSpec, cfg: &SweepConfig) -> Result<SweepResult> {
+    ensure!(!cfg.policies.is_empty(), "sweep needs at least one policy");
+    ensure!(
+        !cfg.cache_pcts.is_empty(),
+        "sweep needs at least one cache size"
+    );
+    let wall0 = Instant::now();
+
+    // 1. streaming OPT pass — also pins catalog, name, and horizon T.
+    let t0 = Instant::now();
+    let mut probe = spec.build(cfg.seed)?;
+    let catalog = probe.catalog();
+    let source_name = probe.name();
+    let promised = probe.horizon();
+    ensure!(catalog > 0, "source `{}` has an empty catalog", spec.text());
+    let opt = StreamingOpt::from_source(probe.as_mut(), cfg.max_requests);
+    drop(probe);
+    let opt_pass_elapsed_s = t0.elapsed().as_secs_f64();
+    let t_total = opt.requests() as usize;
+    ensure!(t_total > 0, "source `{}` produced no requests", spec.text());
+    if let Some(h) = promised {
+        let expected = if cfg.max_requests > 0 {
+            h.min(cfg.max_requests)
+        } else {
+            h
+        };
+        if t_total < expected {
+            crate::log_warn!(
+                "source `{}` ended early: {t_total} of {expected} promised requests \
+                 (corrupt file?) — sweeping the prefix",
+                spec.text()
+            );
+        }
+    }
+    log_info!(
+        "sweep opt pass: {} requests, {} distinct items, {:.2}s",
+        t_total,
+        opt.distinct(),
+        opt_pass_elapsed_s
+    );
+
+    // 2. the grid, in declaration order (kept stable in the output).
+    let mut grid: Vec<(String, usize, f64)> = Vec::new();
+    for p in &cfg.policies {
+        for &pct in &cfg.cache_pcts {
+            let c = ((catalog as f64 * pct / 100.0) as usize).clamp(1, catalog);
+            if let Some((_, _, prev)) = grid.iter().find(|(gp, gc, _)| gp == p && *gc == c) {
+                crate::log_warn!(
+                    "sweep: cache-pct {pct} rounds to C={c}, same as pct {prev} — \
+                     dropping the duplicate `{p}` cell"
+                );
+            } else {
+                grid.push((p.clone(), c, pct));
+            }
+        }
+    }
+
+    let workers = if cfg.threads > 0 {
+        cfg.threads
+    } else {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    }
+    .min(grid.len())
+    .max(1);
+
+    let grid0 = Instant::now();
+    let next = AtomicUsize::new(0);
+    let done = AtomicUsize::new(0);
+    let results: Mutex<Vec<(usize, SweepCell)>> = Mutex::new(Vec::with_capacity(grid.len()));
+    let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= grid.len() || first_err.lock().unwrap().is_some() {
+                    break;
+                }
+                let (name, c, pct) = &grid[i];
+                match run_cell(spec, cfg, name, *c, *pct, catalog, t_total, &opt) {
+                    Ok(cell) => {
+                        let finished = done.fetch_add(1, Ordering::Relaxed) + 1;
+                        log_info!(
+                            "sweep cell {finished}/{}: {} C={} hit={:.4} ({:.2e} req/s)",
+                            grid.len(),
+                            cell.policy,
+                            cell.c,
+                            cell.hit_ratio,
+                            cell.throughput_rps
+                        );
+                        results.lock().unwrap().push((i, cell));
+                    }
+                    Err(e) => {
+                        let mut g = first_err.lock().unwrap();
+                        if g.is_none() {
+                            *g = Some(e);
+                        }
+                        break;
+                    }
+                }
+            });
+        }
+    });
+
+    let grid_wall_s = grid0.elapsed().as_secs_f64();
+    if let Some(e) = first_err.into_inner().unwrap() {
+        return Err(e);
+    }
+    let mut indexed = results.into_inner().unwrap();
+    indexed.sort_by_key(|(i, _)| *i);
+    let cells: Vec<SweepCell> = indexed.into_iter().map(|(_, c)| c).collect();
+
+    Ok(SweepResult {
+        source: source_name,
+        spec: spec.text().to_string(),
+        catalog,
+        requests: t_total,
+        seed: cfg.seed,
+        threads: workers,
+        cells,
+        opt_pass_elapsed_s,
+        grid_wall_s,
+        wall_s: wall0.elapsed().as_secs_f64(),
+        peak_rss_bytes: peak_rss_bytes(),
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_cell(
+    spec: &SourceSpec,
+    cfg: &SweepConfig,
+    name: &str,
+    c: usize,
+    pct: f64,
+    catalog: usize,
+    t_total: usize,
+    opt: &StreamingOpt,
+) -> Result<SweepCell> {
+    let mut source = spec.build(cfg.seed)?;
+    let mut policy: Box<dyn Policy> = if name == "opt" {
+        // hindsight allocation from the shared streaming OPT pass
+        Box::new(Opt::from_items(opt.top_c(c).into_iter().map(u64::from), c))
+    } else {
+        policies::by_name(name, catalog, c, t_total, cfg.batch, cfg.seed, None)
+            .with_context(|| format!("sweep policy `{name}`"))?
+    };
+    let r = run_source(
+        policy.as_mut(),
+        source.as_mut(),
+        &RunConfig {
+            window: t_total.max(1),
+            occupancy_every: 0,
+            max_requests: cfg.max_requests,
+        },
+    );
+    let opt_hits = opt.opt_hits(c);
+    Ok(SweepCell {
+        policy: name.to_string(),
+        c,
+        cache_pct: pct,
+        requests: r.requests,
+        hit_ratio: r.hit_ratio(),
+        total_reward: r.total_reward,
+        opt_hits,
+        regret: opt_hits as f64 - r.total_reward,
+        elapsed_s: r.elapsed_s,
+        throughput_rps: r.throughput_rps,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> SweepConfig {
+        SweepConfig {
+            policies: ["lru", "ogb", "opt"].map(String::from).to_vec(),
+            cache_pcts: vec![5.0, 20.0],
+            batch: 1,
+            seed: 7,
+            threads: 2,
+            max_requests: 0,
+        }
+    }
+
+    #[test]
+    fn sweep_covers_grid_and_matches_opt() {
+        let spec = SourceSpec::parse("zipf:n=500,t=20000,s=1.0").unwrap();
+        let r = run_sweep(&spec, &small_cfg()).unwrap();
+        assert_eq!(r.catalog, 500);
+        assert_eq!(r.requests, 20_000);
+        assert_eq!(r.cells.len(), 6);
+        // OPT cell reward equals the streaming opt_hits exactly
+        for cell in r.cells.iter().filter(|c| c.policy == "opt") {
+            assert_eq!(cell.total_reward as u64, cell.opt_hits);
+            assert!(cell.regret.abs() < 1e-9);
+        }
+        // larger cache never hurts a given policy
+        for p in ["lru", "ogb", "opt"] {
+            let hrs: Vec<f64> = r
+                .cells
+                .iter()
+                .filter(|c| c.policy == p)
+                .map(|c| c.hit_ratio)
+                .collect();
+            assert_eq!(hrs.len(), 2);
+            assert!(hrs[1] >= hrs[0] - 0.02, "{p}: {hrs:?}");
+        }
+    }
+
+    #[test]
+    fn sweep_is_deterministic_across_thread_counts() {
+        let spec = SourceSpec::parse("drift-zipf:n=300,t=10000,s=0.9,swap-every=50").unwrap();
+        let mut cfg = small_cfg();
+        cfg.threads = 1;
+        let a = run_sweep(&spec, &cfg).unwrap();
+        cfg.threads = 4;
+        let b = run_sweep(&spec, &cfg).unwrap();
+        let key = |r: &SweepResult| -> Vec<(String, usize, u64, u64)> {
+            r.cells
+                .iter()
+                .map(|c| (c.policy.clone(), c.c, c.total_reward as u64, c.opt_hits))
+                .collect()
+        };
+        assert_eq!(key(&a), key(&b));
+    }
+
+    #[test]
+    fn sweep_rejects_unknown_policy() {
+        let spec = SourceSpec::parse("uniform:n=100,t=1000").unwrap();
+        let mut cfg = small_cfg();
+        cfg.policies = vec!["bogus".into()];
+        assert!(run_sweep(&spec, &cfg).is_err());
+    }
+
+    #[test]
+    fn writers_emit_csv_and_json() {
+        let spec = SourceSpec::parse("zipf:n=200,t=5000").unwrap();
+        let mut cfg = small_cfg();
+        cfg.policies = vec!["lru".into()];
+        let r = run_sweep(&spec, &cfg).unwrap();
+        let dir = std::env::temp_dir().join("ogb_sweep_test");
+        let csv = r.write_csv(dir.join("sweep.csv")).unwrap();
+        let text = std::fs::read_to_string(csv).unwrap();
+        assert!(text.contains("# experiment: stream_sweep"));
+        assert!(text.lines().count() > 8);
+        let json = r.write_bench_json(dir.join("BENCH_stream.json")).unwrap();
+        let text = std::fs::read_to_string(json).unwrap();
+        assert!(text.contains("\"aggregate_requests_per_sec\""));
+        assert!(text.contains("\"cells\""));
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

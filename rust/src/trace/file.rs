@@ -37,10 +37,20 @@ pub fn write_binary<P: AsRef<Path>>(trace: &Trace, path: P) -> Result<()> {
     Ok(())
 }
 
-pub fn read_binary<P: AsRef<Path>>(path: P) -> Result<Trace> {
-    let f =
-        File::open(path.as_ref()).with_context(|| format!("open {}", path.as_ref().display()))?;
-    let mut r = BufReader::new(f);
+/// Parsed OGBT header (everything before the request ids).  Shared by the
+/// materializing [`read_binary`] and the streaming
+/// [`super::stream::FileSource`].
+#[derive(Debug, Clone)]
+pub struct OgbtHeader {
+    pub catalog: usize,
+    pub len: usize,
+    pub seed: u64,
+    pub name: String,
+}
+
+/// Read and validate the OGBT header, leaving `r` positioned at the first
+/// request id.
+pub fn read_header<R: Read>(r: &mut R) -> Result<OgbtHeader> {
     let mut magic = [0u8; 4];
     r.read_exact(&mut magic)?;
     if &magic != MAGIC {
@@ -65,6 +75,24 @@ pub fn read_binary<P: AsRef<Path>>(path: P) -> Result<Trace> {
     let mut name = vec![0u8; name_len];
     r.read_exact(&mut name)?;
     let name = String::from_utf8(name).context("trace name not utf-8")?;
+    Ok(OgbtHeader {
+        catalog,
+        len,
+        seed,
+        name,
+    })
+}
+
+pub fn read_binary<P: AsRef<Path>>(path: P) -> Result<Trace> {
+    let f =
+        File::open(path.as_ref()).with_context(|| format!("open {}", path.as_ref().display()))?;
+    let mut r = BufReader::new(f);
+    let OgbtHeader {
+        catalog,
+        len,
+        seed,
+        name,
+    } = read_header(&mut r)?;
     let mut requests = Vec::with_capacity(len);
     let mut buf = vec![0u8; 4 * 8192];
     let mut remaining = len;

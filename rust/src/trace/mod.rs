@@ -1,12 +1,15 @@
 //! Request-trace substrate: the trace container, synthetic generators
 //! (including the paper's adversarial round-robin pattern), generators
 //! mimicking the four real-world traces of Table 1 (substitutions — see
-//! DESIGN.md §3), temporal-locality analyses (paper App. B), and a binary
-//! on-disk format.
+//! DESIGN.md §3), temporal-locality analyses (paper App. B), a binary
+//! on-disk format, and the streaming request-source layer
+//! ([`stream`], DESIGN.md §6) that replays unbounded horizons without
+//! materializing the request vector.
 
 pub mod file;
 pub mod realworld;
 pub mod stats;
+pub mod stream;
 pub mod synth;
 
 /// A request trace over a dense catalog `0..catalog`.
@@ -74,6 +77,11 @@ impl Trace {
         items.sort_by_key(|&i| (std::cmp::Reverse(counts[i as usize]), i));
         items.truncate(c);
         items
+    }
+
+    /// View this trace as a streaming [`stream::RequestSource`].
+    pub fn as_source(&self) -> stream::TraceSource<'_> {
+        stream::TraceSource::new(self)
     }
 
     /// Total hits OPT achieves: sum of counts of the top-C items.

@@ -1,0 +1,279 @@
+//! Source combinators (DESIGN.md §6): build compound scenarios from
+//! pieces instead of writing new generators.
+//!
+//! * [`Concat`] — play parts back to back (regime changes: "stationary
+//!   month, then a flash-crowd week");
+//! * [`Interleave`] — deterministic round-robin merge (co-located tenants
+//!   sharing one cache);
+//! * [`Mix`] — seeded probabilistic merge with weights (background +
+//!   foreground traffic at a fixed intensity ratio).
+//!
+//! All combinators take boxed sources, so they nest: a `Mix` of a
+//! `Concat` and a generator is itself a `RequestSource`.  The compound
+//! catalog is the max of the parts' catalogs (item ids pass through
+//! unchanged); the compound horizon is the sum when every part's is known.
+
+use super::RequestSource;
+use crate::util::Xoshiro256pp;
+
+fn joint_name(parts: &[Box<dyn RequestSource>], sep: &str) -> String {
+    parts
+        .iter()
+        .map(|p| p.name())
+        .collect::<Vec<_>>()
+        .join(sep)
+}
+
+fn joint_catalog(parts: &[Box<dyn RequestSource>]) -> usize {
+    parts.iter().map(|p| p.catalog()).max().unwrap_or(0)
+}
+
+fn joint_horizon(parts: &[Box<dyn RequestSource>]) -> Option<usize> {
+    parts.iter().map(|p| p.horizon()).sum()
+}
+
+/// Sequential composition: exhaust each part in order.
+pub struct Concat {
+    parts: Vec<Box<dyn RequestSource>>,
+    idx: usize,
+}
+
+impl Concat {
+    pub fn new(parts: Vec<Box<dyn RequestSource>>) -> Self {
+        assert!(!parts.is_empty(), "Concat needs at least one part");
+        Self { parts, idx: 0 }
+    }
+}
+
+impl RequestSource for Concat {
+    fn name(&self) -> String {
+        joint_name(&self.parts, " + ")
+    }
+
+    fn catalog(&self) -> usize {
+        joint_catalog(&self.parts)
+    }
+
+    fn horizon(&self) -> Option<usize> {
+        joint_horizon(&self.parts)
+    }
+
+    fn next_request(&mut self) -> Option<u32> {
+        while self.idx < self.parts.len() {
+            if let Some(r) = self.parts[self.idx].next_request() {
+                return Some(r);
+            }
+            self.idx += 1;
+        }
+        None
+    }
+
+    fn seed(&self) -> u64 {
+        self.parts[0].seed()
+    }
+}
+
+/// Deterministic round-robin merge; exhausted parts are skipped, the
+/// stream ends when every part is dry.
+pub struct Interleave {
+    parts: Vec<Box<dyn RequestSource>>,
+    done: Vec<bool>,
+    cursor: usize,
+    remaining: usize,
+}
+
+impl Interleave {
+    pub fn new(parts: Vec<Box<dyn RequestSource>>) -> Self {
+        assert!(!parts.is_empty(), "Interleave needs at least one part");
+        let n = parts.len();
+        Self {
+            parts,
+            done: vec![false; n],
+            cursor: 0,
+            remaining: n,
+        }
+    }
+}
+
+impl RequestSource for Interleave {
+    fn name(&self) -> String {
+        joint_name(&self.parts, " & ")
+    }
+
+    fn catalog(&self) -> usize {
+        joint_catalog(&self.parts)
+    }
+
+    fn horizon(&self) -> Option<usize> {
+        joint_horizon(&self.parts)
+    }
+
+    fn next_request(&mut self) -> Option<u32> {
+        while self.remaining > 0 {
+            let i = self.cursor;
+            self.cursor = (self.cursor + 1) % self.parts.len();
+            if self.done[i] {
+                continue;
+            }
+            match self.parts[i].next_request() {
+                Some(r) => return Some(r),
+                None => {
+                    self.done[i] = true;
+                    self.remaining -= 1;
+                }
+            }
+        }
+        None
+    }
+
+    fn seed(&self) -> u64 {
+        self.parts[0].seed()
+    }
+}
+
+/// Seeded probabilistic merge: each request is drawn from part `i` with
+/// probability `weight[i] / Σ active weights`; exhausted parts drop out of
+/// the mixture, so the full horizon of every part is eventually emitted.
+pub struct Mix {
+    parts: Vec<Box<dyn RequestSource>>,
+    weights: Vec<f64>,
+    active: Vec<bool>,
+    active_weight: f64,
+    remaining: usize,
+    rng: Xoshiro256pp,
+    seed: u64,
+}
+
+impl Mix {
+    /// `weights.len()` must equal `parts.len()`; weights must be positive.
+    pub fn new(parts: Vec<Box<dyn RequestSource>>, weights: Vec<f64>, seed: u64) -> Self {
+        assert!(!parts.is_empty(), "Mix needs at least one part");
+        assert_eq!(parts.len(), weights.len(), "one weight per part");
+        assert!(weights.iter().all(|&w| w > 0.0), "weights must be positive");
+        let n = parts.len();
+        let total: f64 = weights.iter().sum();
+        Self {
+            parts,
+            weights,
+            active: vec![true; n],
+            active_weight: total,
+            remaining: n,
+            rng: Xoshiro256pp::seed_from(seed),
+            seed,
+        }
+    }
+
+    /// Equal-weight mixture.
+    pub fn uniform(parts: Vec<Box<dyn RequestSource>>, seed: u64) -> Self {
+        let w = vec![1.0; parts.len()];
+        Self::new(parts, w, seed)
+    }
+}
+
+impl RequestSource for Mix {
+    fn name(&self) -> String {
+        joint_name(&self.parts, " | ")
+    }
+
+    fn catalog(&self) -> usize {
+        joint_catalog(&self.parts)
+    }
+
+    fn horizon(&self) -> Option<usize> {
+        joint_horizon(&self.parts)
+    }
+
+    fn next_request(&mut self) -> Option<u32> {
+        while self.remaining > 0 {
+            // pick an active part by weight
+            let mut u = self.rng.next_f64() * self.active_weight;
+            let mut pick = usize::MAX;
+            for i in 0..self.parts.len() {
+                if !self.active[i] {
+                    continue;
+                }
+                pick = i;
+                u -= self.weights[i];
+                if u <= 0.0 {
+                    break;
+                }
+            }
+            match self.parts[pick].next_request() {
+                Some(r) => return Some(r),
+                None => {
+                    self.active[pick] = false;
+                    self.active_weight -= self.weights[pick];
+                    self.remaining -= 1;
+                }
+            }
+        }
+        None
+    }
+
+    fn seed(&self) -> u64 {
+        self.seed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::stream::gen::{UniformSource, ZipfSource};
+    use crate::trace::stream::SourceIter;
+
+    fn parts(t1: usize, t2: usize) -> Vec<Box<dyn RequestSource>> {
+        vec![
+            Box::new(ZipfSource::new(100, t1, 0.9, 1)),
+            Box::new(UniformSource::new(400, t2, 2)),
+        ]
+    }
+
+    #[test]
+    fn concat_plays_parts_in_order() {
+        let mut c = Concat::new(parts(500, 300));
+        assert_eq!(c.catalog(), 400);
+        assert_eq!(c.horizon(), Some(800));
+        let all: Vec<u32> = SourceIter(&mut c).collect();
+        assert_eq!(all.len(), 800);
+        let first: Vec<u32> = SourceIter(&mut ZipfSource::new(100, 500, 0.9, 1)).collect();
+        assert_eq!(all[..500], first[..], "first part plays first, unchanged");
+    }
+
+    #[test]
+    fn interleave_round_robins_and_drains_tail() {
+        let mut i = Interleave::new(parts(100, 400));
+        let all: Vec<u32> = SourceIter(&mut i).collect();
+        assert_eq!(all.len(), 500);
+        // positions 0,2,4,... of the first 200 come from the zipf part
+        let zipf: Vec<u32> = SourceIter(&mut ZipfSource::new(100, 100, 0.9, 1)).collect();
+        let evens: Vec<u32> = all[..200].iter().step_by(2).copied().collect();
+        assert_eq!(evens, zipf);
+    }
+
+    #[test]
+    fn mix_emits_every_request_of_every_part() {
+        let mut m = Mix::new(parts(2_000, 1_000), vec![3.0, 1.0], 9);
+        assert_eq!(m.horizon(), Some(3_000));
+        let all: Vec<u32> = SourceIter(&mut m).collect();
+        assert_eq!(all.len(), 3_000, "mixture drains both parts fully");
+        // ids < 100 can come from either; ids >= 100 only from the uniform
+        // part, and all 1_000 of its requests must appear.
+        let from_uniform = all.iter().filter(|&&r| r >= 100).count();
+        assert!(from_uniform <= 1_000);
+        let mut m2 = Mix::new(parts(2_000, 1_000), vec![3.0, 1.0], 9);
+        let again: Vec<u32> = SourceIter(&mut m2).collect();
+        assert_eq!(all, again, "mix is deterministic under its seed");
+    }
+
+    #[test]
+    fn combinators_nest() {
+        let inner: Box<dyn RequestSource> = Box::new(Concat::new(parts(50, 50)));
+        let outer = Mix::uniform(
+            vec![inner, Box::new(UniformSource::new(10, 100, 4))],
+            7,
+        );
+        let mut outer = outer;
+        assert_eq!(outer.horizon(), Some(200));
+        assert_eq!(SourceIter(&mut outer).count(), 200);
+    }
+}

@@ -1,0 +1,177 @@
+//! Chunked streaming reader over the OGBT binary trace format
+//! (DESIGN.md §6): replays multi-GB traces through a bounded decode
+//! buffer instead of materializing the full request vector the way
+//! `trace::file::read_binary` does.
+
+use std::fs::File;
+use std::io::{BufReader, Read};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::RequestSource;
+use crate::trace::file::{read_header, OgbtHeader};
+
+/// Ids decoded per refill: 64 Ki ids = 256 KiB, large enough to amortize
+/// syscalls, small enough to stay cache-resident.
+const CHUNK_ITEMS: usize = 64 * 1024;
+
+/// Streaming [`RequestSource`] over an `.ogbt` file.
+///
+/// Memory is O(CHUNK), independent of trace length; a fresh `FileSource`
+/// re-opened on the same path replays the identical sequence, which is
+/// what the parallel sweep runner relies on.
+pub struct FileSource {
+    header: OgbtHeader,
+    reader: BufReader<File>,
+    /// raw little-endian id bytes for the current chunk
+    buf: Vec<u8>,
+    /// byte offset of the next undecoded id in `buf`
+    buf_pos: usize,
+    /// valid bytes in `buf`
+    buf_len: usize,
+    /// ids handed out so far
+    emitted: usize,
+    /// set on the first malformed id; the stream ends and `error()` reports it
+    error: Option<String>,
+}
+
+impl FileSource {
+    pub fn open<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let path = path.as_ref();
+        let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let mut reader = BufReader::with_capacity(1 << 20, f);
+        let header = read_header(&mut reader)
+            .with_context(|| format!("read OGBT header of {}", path.display()))?;
+        Ok(Self {
+            header,
+            reader,
+            buf: vec![0u8; CHUNK_ITEMS * 4],
+            buf_pos: 0,
+            buf_len: 0,
+            emitted: 0,
+            error: None,
+        })
+    }
+
+    /// The parsed file header.
+    pub fn header(&self) -> &OgbtHeader {
+        &self.header
+    }
+
+    /// First decode error, if the file turned out corrupt mid-stream (the
+    /// stream ends early in that case rather than panicking a worker).
+    pub fn error(&self) -> Option<&str> {
+        self.error.as_deref()
+    }
+
+    /// Record a decode error: the stream ends early, `error()` reports
+    /// it, and a WARN line flags every consumer (the trait's
+    /// `next_request -> Option` has no error channel).
+    fn fail(&mut self, msg: String) {
+        crate::log_warn!("FileSource `{}`: {msg}", self.header.name);
+        self.error = Some(msg);
+    }
+
+    fn refill(&mut self) -> bool {
+        let remaining = self.header.len - self.emitted;
+        let take = remaining.min(CHUNK_ITEMS);
+        if take == 0 {
+            return false;
+        }
+        let bytes = take * 4;
+        if let Err(e) = self.reader.read_exact(&mut self.buf[..bytes]) {
+            self.fail(format!(
+                "truncated OGBT stream after {} of {} ids: {e}",
+                self.emitted, self.header.len
+            ));
+            return false;
+        }
+        self.buf_pos = 0;
+        self.buf_len = bytes;
+        true
+    }
+}
+
+impl RequestSource for FileSource {
+    fn name(&self) -> String {
+        self.header.name.clone()
+    }
+
+    fn catalog(&self) -> usize {
+        self.header.catalog
+    }
+
+    fn horizon(&self) -> Option<usize> {
+        Some(self.header.len)
+    }
+
+    fn next_request(&mut self) -> Option<u32> {
+        if self.error.is_some() || self.emitted >= self.header.len {
+            return None;
+        }
+        if self.buf_pos >= self.buf_len && !self.refill() {
+            return None;
+        }
+        let b = &self.buf[self.buf_pos..self.buf_pos + 4];
+        let id = u32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+        if id as usize >= self.header.catalog {
+            self.fail(format!(
+                "item id {id} out of catalog {} at position {}",
+                self.header.catalog, self.emitted
+            ));
+            return None;
+        }
+        self.buf_pos += 4;
+        self.emitted += 1;
+        Some(id)
+    }
+
+    fn seed(&self) -> u64 {
+        self.header.seed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::stream::SourceIter;
+    use crate::trace::{file, synth};
+
+    #[test]
+    fn streams_byte_identically_with_read_binary() {
+        let t = synth::zipf(200, 70_000, 0.9, 8); // > 1 chunk
+        let dir = std::env::temp_dir().join("ogb_stream_file_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.ogbt");
+        file::write_binary(&t, &p).unwrap();
+
+        let mut s = FileSource::open(&p).unwrap();
+        assert_eq!(s.name(), t.name);
+        assert_eq!(s.catalog(), t.catalog);
+        assert_eq!(s.horizon(), Some(t.len()));
+        assert_eq!(s.seed(), t.seed);
+        let streamed: Vec<u32> = SourceIter(&mut s).collect();
+        assert_eq!(streamed, t.requests);
+        assert!(s.error().is_none());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn truncated_file_ends_stream_with_error() {
+        let t = synth::uniform(50, 1_000, 9);
+        let dir = std::env::temp_dir().join("ogb_stream_file_trunc");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.ogbt");
+        file::write_binary(&t, &p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 100]).unwrap();
+
+        let mut s = FileSource::open(&p).unwrap();
+        let streamed: Vec<u32> = SourceIter(&mut s).collect();
+        assert!(streamed.len() < t.len());
+        assert!(s.error().unwrap().contains("truncated"));
+        assert_eq!(s.next_request(), None);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,554 @@
+//! Streaming scenario generators (DESIGN.md §6).
+//!
+//! Two families:
+//!
+//! * **Twins** of the materialized `trace::synth` generators
+//!   ([`ZipfSource`], [`UniformSource`], [`AdversarialSource`],
+//!   [`ShiftingZipfSource`]): same parameters, same PRNG draw order, hence
+//!   *byte-identical* request sequences (property-checked in
+//!   `rust/tests/stream_equivalence.rs`) — but O(1) memory at any horizon.
+//! * **Streaming-only** families the in-RAM path could not reasonably
+//!   host at scale: [`ZipfDriftSource`] (popularity drift via incremental
+//!   rank-map swaps), [`FlashCrowdSource`] (Markov-modulated burst
+//!   overlay), [`DiurnalSource`] (sinusoidal phase mixture of two
+//!   popularity profiles).
+//!
+//! All generators are seeded and deterministic; `next_request` draws from
+//! the PRNG in a fixed order so sequences depend only on construction
+//! parameters.
+
+use super::RequestSource;
+use crate::util::{Xoshiro256pp, Zipf};
+
+// ---------------------------------------------------------------- twins
+
+/// Streaming twin of `synth::zipf`: stationary Zipf(s), rank == item id.
+pub struct ZipfSource {
+    n: usize,
+    t: usize,
+    s: f64,
+    seed: u64,
+    emitted: usize,
+    dist: Zipf,
+    rng: Xoshiro256pp,
+}
+
+impl ZipfSource {
+    pub fn new(n: usize, t: usize, s: f64, seed: u64) -> Self {
+        let rng = Xoshiro256pp::seed_from(seed);
+        let dist = Zipf::new(n as u64, s);
+        Self {
+            n,
+            t,
+            s,
+            seed,
+            emitted: 0,
+            dist,
+            rng,
+        }
+    }
+}
+
+impl RequestSource for ZipfSource {
+    fn name(&self) -> String {
+        format!("zipf_n{}_s{}", self.n, self.s)
+    }
+
+    fn catalog(&self) -> usize {
+        self.n
+    }
+
+    fn horizon(&self) -> Option<usize> {
+        Some(self.t)
+    }
+
+    fn next_request(&mut self) -> Option<u32> {
+        if self.emitted >= self.t {
+            return None;
+        }
+        self.emitted += 1;
+        Some(self.dist.sample(&mut self.rng) as u32)
+    }
+
+    fn seed(&self) -> u64 {
+        self.seed
+    }
+}
+
+/// Streaming twin of `synth::uniform`.
+pub struct UniformSource {
+    n: usize,
+    t: usize,
+    seed: u64,
+    emitted: usize,
+    rng: Xoshiro256pp,
+}
+
+impl UniformSource {
+    pub fn new(n: usize, t: usize, seed: u64) -> Self {
+        Self {
+            n,
+            t,
+            seed,
+            emitted: 0,
+            rng: Xoshiro256pp::seed_from(seed),
+        }
+    }
+}
+
+impl RequestSource for UniformSource {
+    fn name(&self) -> String {
+        format!("uniform_n{}", self.n)
+    }
+
+    fn catalog(&self) -> usize {
+        self.n
+    }
+
+    fn horizon(&self) -> Option<usize> {
+        Some(self.t)
+    }
+
+    fn next_request(&mut self) -> Option<u32> {
+        if self.emitted >= self.t {
+            return None;
+        }
+        self.emitted += 1;
+        Some(self.rng.next_below(self.n as u64) as u32)
+    }
+
+    fn seed(&self) -> u64 {
+        self.seed
+    }
+}
+
+/// Streaming twin of `synth::adversarial`: round-robin over all N items
+/// with a fresh random permutation every round (the paper's §2.2 trace).
+pub struct AdversarialSource {
+    n: usize,
+    rounds: usize,
+    seed: u64,
+    round: usize,
+    pos: usize,
+    perm: Vec<u32>,
+    rng: Xoshiro256pp,
+}
+
+impl AdversarialSource {
+    pub fn new(n: usize, rounds: usize, seed: u64) -> Self {
+        Self {
+            n,
+            rounds,
+            seed,
+            round: 0,
+            pos: n, // forces a shuffle before the first request
+            perm: (0..n as u32).collect(),
+            rng: Xoshiro256pp::seed_from(seed),
+        }
+    }
+}
+
+impl RequestSource for AdversarialSource {
+    fn name(&self) -> String {
+        format!("adversarial_n{}_r{}", self.n, self.rounds)
+    }
+
+    fn catalog(&self) -> usize {
+        self.n
+    }
+
+    fn horizon(&self) -> Option<usize> {
+        Some(self.n * self.rounds)
+    }
+
+    fn next_request(&mut self) -> Option<u32> {
+        if self.pos >= self.n {
+            if self.round >= self.rounds {
+                return None;
+            }
+            self.rng.shuffle(&mut self.perm);
+            self.round += 1;
+            self.pos = 0;
+        }
+        let r = self.perm[self.pos];
+        self.pos += 1;
+        Some(r)
+    }
+
+    fn seed(&self) -> u64 {
+        self.seed
+    }
+}
+
+/// Streaming twin of `synth::shifting_zipf`: Zipf(s) whose rank→item map
+/// is re-drawn every `phase_len` requests (abrupt popularity shift).
+pub struct ShiftingZipfSource {
+    n: usize,
+    t: usize,
+    s: f64,
+    phase_len: usize,
+    seed: u64,
+    emitted: usize,
+    map: Vec<u32>,
+    dist: Zipf,
+    rng: Xoshiro256pp,
+}
+
+impl ShiftingZipfSource {
+    pub fn new(n: usize, t: usize, s: f64, phase_len: usize, seed: u64) -> Self {
+        assert!(phase_len > 0);
+        let rng = Xoshiro256pp::seed_from(seed);
+        let dist = Zipf::new(n as u64, s);
+        Self {
+            n,
+            t,
+            s,
+            phase_len,
+            seed,
+            emitted: 0,
+            map: (0..n as u32).collect(),
+            dist,
+            rng,
+        }
+    }
+}
+
+impl RequestSource for ShiftingZipfSource {
+    fn name(&self) -> String {
+        format!("shifting_zipf_n{}_s{}_p{}", self.n, self.s, self.phase_len)
+    }
+
+    fn catalog(&self) -> usize {
+        self.n
+    }
+
+    fn horizon(&self) -> Option<usize> {
+        Some(self.t)
+    }
+
+    fn next_request(&mut self) -> Option<u32> {
+        if self.emitted >= self.t {
+            return None;
+        }
+        if self.emitted % self.phase_len == 0 {
+            self.rng.shuffle(&mut self.map);
+        }
+        self.emitted += 1;
+        Some(self.map[self.dist.sample(&mut self.rng) as usize])
+    }
+
+    fn seed(&self) -> u64 {
+        self.seed
+    }
+}
+
+// ------------------------------------------------------- streaming-only
+
+/// Zipf with *gradual* popularity drift: the rank→item map starts as a
+/// random permutation and swaps two random entries every `swap_every`
+/// requests.  Unlike `ShiftingZipfSource`'s abrupt phase changes, the
+/// optimum drifts continuously — the shifting-comparator regime of the
+/// no-regret caching literature (Paschos et al. 2019; Si Salem et al.
+/// 2021).
+pub struct ZipfDriftSource {
+    n: usize,
+    t: usize,
+    s: f64,
+    swap_every: usize,
+    seed: u64,
+    emitted: usize,
+    map: Vec<u32>,
+    dist: Zipf,
+    rng: Xoshiro256pp,
+}
+
+impl ZipfDriftSource {
+    pub fn new(n: usize, t: usize, s: f64, swap_every: usize, seed: u64) -> Self {
+        assert!(n >= 2 && swap_every > 0);
+        let mut rng = Xoshiro256pp::seed_from(seed);
+        let dist = Zipf::new(n as u64, s);
+        let mut map: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut map);
+        Self {
+            n,
+            t,
+            s,
+            swap_every,
+            seed,
+            emitted: 0,
+            map,
+            dist,
+            rng,
+        }
+    }
+}
+
+impl RequestSource for ZipfDriftSource {
+    fn name(&self) -> String {
+        format!("drift-zipf_n{}_s{}_e{}", self.n, self.s, self.swap_every)
+    }
+
+    fn catalog(&self) -> usize {
+        self.n
+    }
+
+    fn horizon(&self) -> Option<usize> {
+        Some(self.t)
+    }
+
+    fn next_request(&mut self) -> Option<u32> {
+        if self.emitted >= self.t {
+            return None;
+        }
+        if self.emitted > 0 && self.emitted % self.swap_every == 0 {
+            let i = self.rng.next_below(self.n as u64) as usize;
+            let j = self.rng.next_below(self.n as u64) as usize;
+            self.map.swap(i, j);
+        }
+        self.emitted += 1;
+        Some(self.map[self.dist.sample(&mut self.rng) as usize])
+    }
+
+    fn seed(&self) -> u64 {
+        self.seed
+    }
+}
+
+/// Markov-modulated flash crowds: a two-state chain (Calm ↔ Crowd)
+/// overlaying a stationary Zipf base.  Entering Crowd re-draws a small
+/// hot set of `crowd_k` items which then absorbs a `crowd_q` fraction of
+/// requests until the chain falls back to Calm — the "breaking news"
+/// pattern that punishes frequency-biased policies and rewards fast
+/// adaptation.
+pub struct FlashCrowdSource {
+    n: usize,
+    t: usize,
+    s: f64,
+    /// per-request P(Calm → Crowd); mean calm dwell = 1/p_on
+    p_on: f64,
+    /// per-request P(Crowd → Calm); mean crowd dwell = 1/p_off
+    p_off: f64,
+    crowd_k: usize,
+    /// fraction of requests hitting the hot set while in Crowd
+    crowd_q: f64,
+    seed: u64,
+    emitted: usize,
+    in_crowd: bool,
+    hot: Vec<u32>,
+    dist: Zipf,
+    rng: Xoshiro256pp,
+}
+
+impl FlashCrowdSource {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        n: usize,
+        t: usize,
+        s: f64,
+        p_on: f64,
+        p_off: f64,
+        crowd_k: usize,
+        crowd_q: f64,
+        seed: u64,
+    ) -> Self {
+        assert!(n >= 2 && crowd_k >= 1 && crowd_k <= n);
+        assert!((0.0..=1.0).contains(&p_on) && (0.0..=1.0).contains(&p_off));
+        assert!((0.0..=1.0).contains(&crowd_q));
+        let rng = Xoshiro256pp::seed_from(seed);
+        let dist = Zipf::new(n as u64, s);
+        Self {
+            n,
+            t,
+            s,
+            p_on,
+            p_off,
+            crowd_k,
+            crowd_q,
+            seed,
+            emitted: 0,
+            in_crowd: false,
+            hot: Vec::new(),
+            dist,
+            rng,
+        }
+    }
+}
+
+impl RequestSource for FlashCrowdSource {
+    fn name(&self) -> String {
+        format!("flash_n{}_s{}_k{}", self.n, self.s, self.crowd_k)
+    }
+
+    fn catalog(&self) -> usize {
+        self.n
+    }
+
+    fn horizon(&self) -> Option<usize> {
+        Some(self.t)
+    }
+
+    fn next_request(&mut self) -> Option<u32> {
+        if self.emitted >= self.t {
+            return None;
+        }
+        self.emitted += 1;
+        // state transition first, then the emission draw
+        if self.in_crowd {
+            if self.rng.next_f64() < self.p_off {
+                self.in_crowd = false;
+            }
+        } else if self.rng.next_f64() < self.p_on {
+            self.in_crowd = true;
+            self.hot = (0..self.crowd_k)
+                .map(|_| self.rng.next_below(self.n as u64) as u32)
+                .collect();
+        }
+        if self.in_crowd && self.rng.next_f64() < self.crowd_q {
+            let k = self.rng.next_below(self.hot.len() as u64) as usize;
+            return Some(self.hot[k]);
+        }
+        Some(self.dist.sample(&mut self.rng) as u32)
+    }
+
+    fn seed(&self) -> u64 {
+        self.seed
+    }
+}
+
+/// Diurnal phase mixture: two popularity profiles ("day" and "night" —
+/// independently shuffled Zipf rank maps over the same catalog) mixed by
+/// a sinusoidal weight of period `period` requests.  The optimum slowly
+/// oscillates between two allocations, so static-hindsight OPT underfits
+/// both phases while adaptive policies track the swing.
+pub struct DiurnalSource {
+    n: usize,
+    t: usize,
+    s: f64,
+    period: usize,
+    seed: u64,
+    emitted: usize,
+    day: Vec<u32>,
+    night: Vec<u32>,
+    dist: Zipf,
+    rng: Xoshiro256pp,
+}
+
+impl DiurnalSource {
+    pub fn new(n: usize, t: usize, s: f64, period: usize, seed: u64) -> Self {
+        assert!(n >= 2 && period > 0);
+        let mut rng = Xoshiro256pp::seed_from(seed);
+        let dist = Zipf::new(n as u64, s);
+        let mut day: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut day);
+        let mut night: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut night);
+        Self {
+            n,
+            t,
+            s,
+            period,
+            seed,
+            emitted: 0,
+            day,
+            night,
+            dist,
+            rng,
+        }
+    }
+}
+
+impl RequestSource for DiurnalSource {
+    fn name(&self) -> String {
+        format!("diurnal_n{}_s{}_p{}", self.n, self.s, self.period)
+    }
+
+    fn catalog(&self) -> usize {
+        self.n
+    }
+
+    fn horizon(&self) -> Option<usize> {
+        Some(self.t)
+    }
+
+    fn next_request(&mut self) -> Option<u32> {
+        if self.emitted >= self.t {
+            return None;
+        }
+        let phase = 2.0 * std::f64::consts::PI * self.emitted as f64 / self.period as f64;
+        let w_day = 0.5 * (1.0 + phase.sin());
+        self.emitted += 1;
+        let rank = self.dist.sample(&mut self.rng) as usize;
+        if self.rng.next_f64() < w_day {
+            Some(self.day[rank])
+        } else {
+            Some(self.night[rank])
+        }
+    }
+
+    fn seed(&self) -> u64 {
+        self.seed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::stream::{materialize, SourceIter};
+
+    #[test]
+    fn drift_map_stays_a_permutation_and_drifts() {
+        let mut s = ZipfDriftSource::new(500, 30_000, 0.9, 50, 7);
+        let before = s.map.clone();
+        let reqs: Vec<u32> = SourceIter(&mut s).collect();
+        assert_eq!(reqs.len(), 30_000);
+        assert!(reqs.iter().all(|&r| (r as usize) < 500));
+        let mut after = s.map.clone();
+        assert_ne!(after, before, "map must drift over 600 swap points");
+        after.sort_unstable();
+        assert_eq!(after, (0..500).collect::<Vec<u32>>(), "still a permutation");
+    }
+
+    #[test]
+    fn flash_crowd_concentrates_requests_in_bursts() {
+        // High p_on/long dwell so crowds actually occur in a short run.
+        let mut s = FlashCrowdSource::new(10_000, 200_000, 0.7, 0.001, 0.005, 20, 0.8, 11);
+        let t = materialize(&mut s, 0);
+        let counts = t.counts();
+        let mut sorted: Vec<u32> = counts;
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        // hot-set items rise far above the Zipf(0.7) tail
+        let head: u64 = sorted[..20].iter().map(|&c| c as u64).sum();
+        assert!(
+            head as f64 / t.len() as f64 > 0.1,
+            "crowd items must absorb a visible share, got {}",
+            head as f64 / t.len() as f64
+        );
+    }
+
+    #[test]
+    fn diurnal_halves_prefer_different_heads() {
+        let period = 40_000;
+        let mut s = DiurnalSource::new(2_000, period, 1.0, period, 13);
+        let t = materialize(&mut s, 0);
+        // First half-period is day-dominated, second night-dominated.
+        let h1 = crate::trace::Trace::new("a", t.catalog, t.requests[..period / 2].to_vec(), 0)
+            .top_c(10);
+        let h2 = crate::trace::Trace::new("b", t.catalog, t.requests[period / 2..].to_vec(), 0)
+            .top_c(10);
+        assert_ne!(h1, h2, "phases must favor different items");
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let a: Vec<u32> =
+            SourceIter(&mut FlashCrowdSource::new(1_000, 5_000, 0.9, 0.01, 0.05, 10, 0.7, 5))
+                .collect();
+        let b: Vec<u32> =
+            SourceIter(&mut FlashCrowdSource::new(1_000, 5_000, 0.9, 0.01, 0.05, 10, 0.7, 5))
+                .collect();
+        assert_eq!(a, b);
+        let c: Vec<u32> = SourceIter(&mut DiurnalSource::new(300, 2_000, 1.0, 500, 3)).collect();
+        let d: Vec<u32> = SourceIter(&mut DiurnalSource::new(300, 2_000, 1.0, 500, 3)).collect();
+        assert_eq!(c, d);
+    }
+}

@@ -1,0 +1,196 @@
+//! Streaming request sources (DESIGN.md §6).
+//!
+//! The materialized [`Trace`] caps the horizon by RAM (a 10^9-request
+//! trace is 4 GB of ids before any policy state).  This subsystem replays
+//! requests as a *pull-based stream* instead:
+//!
+//! * [`RequestSource`] — the one-trait substrate: a catalog, an optional
+//!   known horizon, and `next_request()`;
+//! * [`TraceSource`] / [`OwnedTraceSource`] — adapters over existing
+//!   in-RAM traces, so every legacy workload runs on the streaming path;
+//! * [`file::FileSource`] — chunked reader over the OGBT binary format
+//!   (`trace/file.rs`), replaying multi-GB traces in O(chunk) memory;
+//! * [`gen`] — streaming scenario generators: byte-identical twins of the
+//!   `trace::synth` generators plus streaming-only families (Zipf with
+//!   popularity drift, Markov-modulated flash crowds, diurnal phase
+//!   mixtures);
+//! * [`combine`] — `Concat` / `Interleave` / `Mix` combinators, so new
+//!   scenarios are composed from pieces rather than written from scratch;
+//! * [`spec`] — a textual spec language (`"drift-zipf:n=1e6,t=1e7 + ..."`)
+//!   producing fresh sources on demand, which is what lets the parallel
+//!   sweep runner (`sim::sweep`) replay one scenario across a policy ×
+//!   cache-size grid with an independent source per worker.
+//!
+//! Determinism contract: a source is seeded at construction and its
+//! request sequence depends only on its parameters, never on when or how
+//! often `next_request` is called.  `rust/tests/stream_equivalence.rs`
+//! property-checks that the generator twins are byte-identical with their
+//! materialized counterparts and that `sim::run_source == sim::run`.
+
+pub mod combine;
+pub mod file;
+pub mod gen;
+pub mod spec;
+
+pub use combine::{Concat, Interleave, Mix};
+pub use file::FileSource;
+pub use gen::{
+    AdversarialSource, DiurnalSource, FlashCrowdSource, ShiftingZipfSource, UniformSource,
+    ZipfDriftSource, ZipfSource,
+};
+pub use spec::SourceSpec;
+
+use super::Trace;
+
+/// A pull-based stream of `u32` item ids over a dense catalog
+/// `0..catalog`, the streaming generalization of [`Trace`].
+pub trait RequestSource {
+    /// Human-readable source name (recorded in results, like `Trace::name`).
+    fn name(&self) -> String;
+
+    /// Catalog size N; every emitted id is `< catalog`.
+    fn catalog(&self) -> usize;
+
+    /// Total number of requests this source emits from construction, if
+    /// known (`None` for unbounded or data-dependent sources).
+    fn horizon(&self) -> Option<usize>;
+
+    /// The next request, or `None` when the source is exhausted.
+    fn next_request(&mut self) -> Option<u32>;
+
+    /// Generator seed (0 for file/trace-backed sources) — recorded in CSV
+    /// provenance like `Trace::seed`.
+    fn seed(&self) -> u64 {
+        0
+    }
+}
+
+impl<S: RequestSource + ?Sized> RequestSource for Box<S> {
+    fn name(&self) -> String {
+        (**self).name()
+    }
+
+    fn catalog(&self) -> usize {
+        (**self).catalog()
+    }
+
+    fn horizon(&self) -> Option<usize> {
+        (**self).horizon()
+    }
+
+    fn next_request(&mut self) -> Option<u32> {
+        (**self).next_request()
+    }
+
+    fn seed(&self) -> u64 {
+        (**self).seed()
+    }
+}
+
+/// Replay cursor over a [`Trace`], generic over how the trace is held.
+/// Use via the [`TraceSource`] (borrowing) and [`OwnedTraceSource`]
+/// (owning, e.g. for `spec` leaves that materialize) aliases.
+pub struct TraceCursor<T: std::borrow::Borrow<Trace>> {
+    trace: T,
+    pos: usize,
+}
+
+/// Borrowing adapter: replay an in-RAM [`Trace`] as a [`RequestSource`].
+pub type TraceSource<'a> = TraceCursor<&'a Trace>;
+
+/// Owning variant of [`TraceSource`].
+pub type OwnedTraceSource = TraceCursor<Trace>;
+
+impl<T: std::borrow::Borrow<Trace>> TraceCursor<T> {
+    pub fn new(trace: T) -> Self {
+        Self { trace, pos: 0 }
+    }
+}
+
+impl<T: std::borrow::Borrow<Trace>> RequestSource for TraceCursor<T> {
+    fn name(&self) -> String {
+        self.trace.borrow().name.clone()
+    }
+
+    fn catalog(&self) -> usize {
+        self.trace.borrow().catalog
+    }
+
+    fn horizon(&self) -> Option<usize> {
+        Some(self.trace.borrow().len())
+    }
+
+    fn next_request(&mut self) -> Option<u32> {
+        let r = self.trace.borrow().requests.get(self.pos).copied();
+        self.pos += r.is_some() as usize;
+        r
+    }
+
+    fn seed(&self) -> u64 {
+        self.trace.borrow().seed
+    }
+}
+
+/// Drain a source into an in-RAM [`Trace`].  `cap = 0` means "until
+/// exhausted" — only safe for sources with a horizon; pass a positive cap
+/// for unbounded sources.
+pub fn materialize(source: &mut dyn RequestSource, cap: usize) -> Trace {
+    let limit = if cap > 0 { cap } else { usize::MAX };
+    let mut requests = Vec::with_capacity(source.horizon().unwrap_or(0).min(limit));
+    while requests.len() < limit {
+        match source.next_request() {
+            Some(r) => requests.push(r),
+            None => break,
+        }
+    }
+    Trace::new(source.name(), source.catalog(), requests, source.seed())
+}
+
+/// Iterator bridge over a source (ends at exhaustion).
+pub struct SourceIter<'a>(pub &'a mut dyn RequestSource);
+
+impl Iterator for SourceIter<'_> {
+    type Item = u32;
+
+    fn next(&mut self) -> Option<u32> {
+        self.0.next_request()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::synth;
+
+    #[test]
+    fn trace_source_replays_exactly() {
+        let t = synth::zipf(50, 1_000, 0.9, 3);
+        let mut s = TraceSource::new(&t);
+        assert_eq!(s.catalog(), 50);
+        assert_eq!(s.horizon(), Some(1_000));
+        assert_eq!(s.seed(), 3);
+        let collected: Vec<u32> = SourceIter(&mut s).collect();
+        assert_eq!(collected, t.requests);
+        assert_eq!(s.next_request(), None, "stays exhausted");
+    }
+
+    #[test]
+    fn materialize_roundtrips_owned_source() {
+        let t = synth::uniform(20, 500, 4);
+        let mut s = OwnedTraceSource::new(t.clone());
+        let m = materialize(&mut s, 0);
+        assert_eq!(m.requests, t.requests);
+        assert_eq!(m.catalog, t.catalog);
+        assert_eq!(m.name, t.name);
+        assert_eq!(m.seed, t.seed);
+    }
+
+    #[test]
+    fn materialize_respects_cap() {
+        let t = synth::uniform(20, 500, 5);
+        let mut s = TraceSource::new(&t);
+        let m = materialize(&mut s, 100);
+        assert_eq!(m.len(), 100);
+        assert_eq!(m.requests[..], t.requests[..100]);
+    }
+}

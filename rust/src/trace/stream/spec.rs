@@ -1,0 +1,424 @@
+//! Textual source specs (DESIGN.md §6): a tiny composition language that
+//! names a streaming scenario, so one string can be carried across CLI
+//! flags, CSV provenance headers, and the parallel sweep runner (which
+//! builds a *fresh* deterministic source from the spec for every worker).
+//!
+//! Grammar (no nesting/parentheses; precedence `+` over `&` over `|`):
+//!
+//! ```text
+//! spec  :=  part ( '|' part )*          probabilistic Mix (equal weights)
+//! part  :=  seq  ( '&' seq  )*          round-robin Interleave
+//! seq   :=  leaf ( '+' leaf )*          sequential Concat
+//! leaf  :=  kind [ ':' key=value (',' key=value)* ]
+//! ```
+//!
+//! Leaves (numbers accept `1e6` / `1_000_000` forms; `seed` defaults to
+//! the sweep seed, offset per leaf so parallel parts decorrelate):
+//!
+//! | kind          | parameters (defaults)                                          |
+//! |---------------|----------------------------------------------------------------|
+//! | `zipf`        | `n=100000, t=1000000, s=0.9, seed`                             |
+//! | `uniform`     | `n=100000, t=1000000, seed`                                    |
+//! | `adversarial` | `n=1000, rounds=1000, seed`                                    |
+//! | `shift-zipf`  | `n=100000, t=1000000, s=0.9, phase=100000, seed`               |
+//! | `drift-zipf`  | `n=100000, t=1000000, s=0.9, swap-every=100, seed`             |
+//! | `flash`       | `n=100000, t=1000000, s=0.9, p-on=0.0002, p-off=0.002, crowd-k=50, crowd-q=0.8, seed` |
+//! | `diurnal`     | `n=100000, t=1000000, s=0.9, period=250000, seed`              |
+//! | `file`        | `path=<trace.ogbt>` (streamed, never materialized)             |
+//! | `trace`       | `name=<cdn\|twitter\|ms-ex\|systor>, scale=0.1, seed` (materialized) |
+//!
+//! Example: a drifting-Zipf base with an interleaved flash-crowd overlay,
+//! followed by an adversarial tail:
+//!
+//! ```text
+//! drift-zipf:n=1e6,t=5e6 & flash:n=1e6,t=5e6 + adversarial:n=1000,rounds=100
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use super::combine::{Concat, Interleave, Mix};
+use super::gen::{
+    AdversarialSource, DiurnalSource, FlashCrowdSource, ShiftingZipfSource, UniformSource,
+    ZipfDriftSource, ZipfSource,
+};
+use super::{FileSource, OwnedTraceSource, RequestSource};
+use crate::util::rng::mix64;
+
+/// A validated, buildable source spec.  Cloneable and `Send + Sync`, so
+/// sweep workers can each build their own deterministic source.
+#[derive(Debug, Clone)]
+pub struct SourceSpec {
+    text: String,
+}
+
+impl SourceSpec {
+    /// Parse and validate (kinds, parameter names, number syntax).  File
+    /// existence and catalog checks happen at [`SourceSpec::build`] time.
+    pub fn parse(text: &str) -> Result<Self> {
+        let text = text.trim().to_string();
+        parse_ast(&text)?;
+        Ok(Self { text })
+    }
+
+    pub fn text(&self) -> &str {
+        &self.text
+    }
+
+    /// Construct a fresh source.  Leaves without an explicit `seed=` get
+    /// `default_seed` offset by their position, so re-building with the
+    /// same seed replays the identical scenario.
+    pub fn build(&self, default_seed: u64) -> Result<Box<dyn RequestSource>> {
+        let ast = parse_ast(&self.text)?;
+        let mut leaf_idx = 0u64;
+        build_node(&ast, default_seed, &mut leaf_idx)
+    }
+}
+
+#[derive(Debug)]
+enum Node {
+    Mix(Vec<Node>),
+    Interleave(Vec<Node>),
+    Concat(Vec<Node>),
+    Leaf(Leaf),
+}
+
+#[derive(Debug)]
+struct Leaf {
+    kind: String,
+    params: Vec<(String, String)>,
+}
+
+impl Leaf {
+    fn get(&self, key: &str) -> Option<&str> {
+        self.params
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => parse_usize(v).with_context(|| format!("{}: bad `{key}`", self.kind)),
+            None => Ok(default),
+        }
+    }
+
+    fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v
+                .replace('_', "")
+                .parse()
+                .with_context(|| format!("{}: bad `{key}`", self.kind)),
+            None => Ok(default),
+        }
+    }
+
+    fn seed_or(&self, default_seed: u64, leaf_idx: u64) -> Result<u64> {
+        match self.get("seed") {
+            Some(v) => Ok(parse_usize(v).with_context(|| format!("{}: bad `seed`", self.kind))?
+                as u64),
+            // leaf 0 gets the sweep seed verbatim (so a single-leaf spec
+            // matches its synth twin); later leaves decorrelate.
+            None if leaf_idx == 0 => Ok(default_seed),
+            None => Ok(mix64(default_seed ^ leaf_idx.wrapping_mul(0x9E37_79B9_7F4A_7C15))),
+        }
+    }
+}
+
+/// Accept `123`, `1_000_000`, and `1e6` style numbers.
+fn parse_usize(v: &str) -> Result<usize> {
+    let v = v.replace('_', "");
+    if let Ok(x) = v.parse::<usize>() {
+        return Ok(x);
+    }
+    let f: f64 = v.parse().with_context(|| format!("not a number: `{v}`"))?;
+    if !(f >= 0.0 && f.fract() == 0.0 && f <= 1e18) {
+        bail!("not a non-negative integer: `{v}`");
+    }
+    Ok(f as usize)
+}
+
+fn allowed_keys(kind: &str) -> Option<&'static [&'static str]> {
+    Some(match kind {
+        "zipf" => &["n", "t", "s", "seed"],
+        "uniform" => &["n", "t", "seed"],
+        "adversarial" => &["n", "rounds", "seed"],
+        "shift-zipf" => &["n", "t", "s", "phase", "seed"],
+        "drift-zipf" => &["n", "t", "s", "swap-every", "seed"],
+        "flash" => &["n", "t", "s", "p-on", "p-off", "crowd-k", "crowd-q", "seed"],
+        "diurnal" => &["n", "t", "s", "period", "seed"],
+        "file" => &["path"],
+        "trace" => &["name", "scale", "seed"],
+        _ => return None,
+    })
+}
+
+fn parse_leaf(text: &str) -> Result<Leaf> {
+    let text = text.trim();
+    if text.is_empty() {
+        bail!("empty source spec component");
+    }
+    let (kind, rest) = match text.split_once(':') {
+        Some((k, r)) => (k.trim(), Some(r)),
+        None => (text, None),
+    };
+    let Some(allowed) = allowed_keys(kind) else {
+        bail!(
+            "unknown source kind `{kind}` (known: zipf uniform adversarial shift-zipf \
+             drift-zipf flash diurnal file trace)"
+        );
+    };
+    let mut params = Vec::new();
+    if let Some(rest) = rest {
+        for kv in rest.split(',') {
+            let kv = kv.trim();
+            if kv.is_empty() {
+                continue;
+            }
+            let Some((k, v)) = kv.split_once('=') else {
+                bail!("{kind}: expected key=value, got `{kv}`");
+            };
+            let (k, v) = (k.trim().to_string(), v.trim().to_string());
+            if !allowed.contains(&k.as_str()) {
+                bail!("{kind}: unknown parameter `{k}` (allowed: {allowed:?})");
+            }
+            if params.iter().any(|(pk, _)| *pk == k) {
+                bail!("{kind}: duplicate parameter `{k}`");
+            }
+            params.push((k, v));
+        }
+    }
+    let leaf = Leaf {
+        kind: kind.to_string(),
+        params,
+    };
+    // validate numbers and required params up front
+    match leaf.kind.as_str() {
+        "file" => {
+            if leaf.get("path").is_none() {
+                bail!("file: missing required `path=`");
+            }
+        }
+        "trace" => {
+            if leaf.get("name").is_none() {
+                bail!("trace: missing required `name=`");
+            }
+            leaf.f64_or("scale", 0.1)?;
+        }
+        _ => {
+            leaf.usize_or("n", 1)?;
+            leaf.usize_or("t", 1)?;
+            leaf.f64_or("s", 0.9)?;
+        }
+    }
+    if leaf.get("seed").is_some() {
+        leaf.seed_or(0, 0)?;
+    }
+    Ok(leaf)
+}
+
+fn parse_ast(text: &str) -> Result<Node> {
+    if text.trim().is_empty() {
+        bail!("empty source spec");
+    }
+    let mix: Vec<&str> = text.split('|').collect();
+    let mut mix_nodes = Vec::new();
+    for part in mix {
+        let ilv: Vec<&str> = part.split('&').collect();
+        let mut ilv_nodes = Vec::new();
+        for seq in ilv {
+            let leaves: Vec<&str> = seq.split('+').collect();
+            let mut leaf_nodes = Vec::new();
+            for leaf in leaves {
+                leaf_nodes.push(Node::Leaf(parse_leaf(leaf)?));
+            }
+            ilv_nodes.push(if leaf_nodes.len() == 1 {
+                leaf_nodes.pop().unwrap()
+            } else {
+                Node::Concat(leaf_nodes)
+            });
+        }
+        mix_nodes.push(if ilv_nodes.len() == 1 {
+            ilv_nodes.pop().unwrap()
+        } else {
+            Node::Interleave(ilv_nodes)
+        });
+    }
+    Ok(if mix_nodes.len() == 1 {
+        mix_nodes.pop().unwrap()
+    } else {
+        Node::Mix(mix_nodes)
+    })
+}
+
+fn build_node(
+    node: &Node,
+    default_seed: u64,
+    leaf_idx: &mut u64,
+) -> Result<Box<dyn RequestSource>> {
+    Ok(match node {
+        Node::Leaf(leaf) => build_leaf(leaf, default_seed, leaf_idx)?,
+        Node::Concat(parts) => {
+            let built = build_parts(parts, default_seed, leaf_idx)?;
+            Box::new(Concat::new(built))
+        }
+        Node::Interleave(parts) => {
+            let built = build_parts(parts, default_seed, leaf_idx)?;
+            Box::new(Interleave::new(built))
+        }
+        Node::Mix(parts) => {
+            let built = build_parts(parts, default_seed, leaf_idx)?;
+            let mix_seed = mix64(default_seed ^ 0x4D49_5853); // "MIXS"
+            Box::new(Mix::uniform(built, mix_seed))
+        }
+    })
+}
+
+fn build_parts(
+    parts: &[Node],
+    default_seed: u64,
+    leaf_idx: &mut u64,
+) -> Result<Vec<Box<dyn RequestSource>>> {
+    parts
+        .iter()
+        .map(|p| build_node(p, default_seed, leaf_idx))
+        .collect()
+}
+
+fn build_leaf(
+    leaf: &Leaf,
+    default_seed: u64,
+    leaf_idx: &mut u64,
+) -> Result<Box<dyn RequestSource>> {
+    let idx = *leaf_idx;
+    *leaf_idx += 1;
+    let seed = leaf.seed_or(default_seed, idx)?;
+    Ok(match leaf.kind.as_str() {
+        "zipf" => Box::new(ZipfSource::new(
+            leaf.usize_or("n", 100_000)?,
+            leaf.usize_or("t", 1_000_000)?,
+            leaf.f64_or("s", 0.9)?,
+            seed,
+        )),
+        "uniform" => Box::new(UniformSource::new(
+            leaf.usize_or("n", 100_000)?,
+            leaf.usize_or("t", 1_000_000)?,
+            seed,
+        )),
+        "adversarial" => Box::new(AdversarialSource::new(
+            leaf.usize_or("n", 1_000)?,
+            leaf.usize_or("rounds", 1_000)?,
+            seed,
+        )),
+        "shift-zipf" => Box::new(ShiftingZipfSource::new(
+            leaf.usize_or("n", 100_000)?,
+            leaf.usize_or("t", 1_000_000)?,
+            leaf.f64_or("s", 0.9)?,
+            leaf.usize_or("phase", 100_000)?,
+            seed,
+        )),
+        "drift-zipf" => Box::new(ZipfDriftSource::new(
+            leaf.usize_or("n", 100_000)?,
+            leaf.usize_or("t", 1_000_000)?,
+            leaf.f64_or("s", 0.9)?,
+            leaf.usize_or("swap-every", 100)?,
+            seed,
+        )),
+        "flash" => Box::new(FlashCrowdSource::new(
+            leaf.usize_or("n", 100_000)?,
+            leaf.usize_or("t", 1_000_000)?,
+            leaf.f64_or("s", 0.9)?,
+            leaf.f64_or("p-on", 0.0002)?,
+            leaf.f64_or("p-off", 0.002)?,
+            leaf.usize_or("crowd-k", 50)?,
+            leaf.f64_or("crowd-q", 0.8)?,
+            seed,
+        )),
+        "diurnal" => Box::new(DiurnalSource::new(
+            leaf.usize_or("n", 100_000)?,
+            leaf.usize_or("t", 1_000_000)?,
+            leaf.f64_or("s", 0.9)?,
+            leaf.usize_or("period", 250_000)?,
+            seed,
+        )),
+        "file" => Box::new(FileSource::open(leaf.get("path").expect("validated"))?),
+        "trace" => {
+            let name = leaf.get("name").expect("validated");
+            let scale = leaf.f64_or("scale", 0.1)?;
+            let Some(trace) = crate::trace::realworld::by_name(name, scale, seed) else {
+                bail!("trace: unknown real-world generator `{name}`");
+            };
+            Box::new(OwnedTraceSource::new(trace))
+        }
+        other => unreachable!("parse_leaf rejects unknown kind {other}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::stream::SourceIter;
+    use crate::trace::synth;
+
+    #[test]
+    fn single_leaf_matches_synth_twin_under_default_seed() {
+        let spec = SourceSpec::parse("zipf:n=200,t=5000,s=1.0").unwrap();
+        let mut src = spec.build(17).unwrap();
+        let got: Vec<u32> = SourceIter(src.as_mut()).collect();
+        assert_eq!(got, synth::zipf(200, 5_000, 1.0, 17).requests);
+    }
+
+    #[test]
+    fn rebuilds_are_identical() {
+        let spec =
+            SourceSpec::parse("drift-zipf:n=500,t=2000 & flash:n=500,t=2000 + uniform:n=64,t=100")
+                .unwrap();
+        let a: Vec<u32> = SourceIter(spec.build(5).unwrap().as_mut()).collect();
+        let b: Vec<u32> = SourceIter(spec.build(5).unwrap().as_mut()).collect();
+        assert_eq!(a.len(), 4_100);
+        assert_eq!(a, b);
+        let c: Vec<u32> = SourceIter(spec.build(6).unwrap().as_mut()).collect();
+        assert_ne!(a, c, "different sweep seed, different scenario");
+    }
+
+    #[test]
+    fn numbers_accept_scientific_and_underscores() {
+        let spec = SourceSpec::parse("zipf:n=1e3,t=2_000,s=0.8").unwrap();
+        let src = spec.build(1).unwrap();
+        assert_eq!(src.catalog(), 1_000);
+        assert_eq!(src.horizon(), Some(2_000));
+    }
+
+    #[test]
+    fn explicit_seed_wins_over_default() {
+        let spec = SourceSpec::parse("uniform:n=100,t=500,seed=9").unwrap();
+        let a: Vec<u32> = SourceIter(spec.build(1).unwrap().as_mut()).collect();
+        let b: Vec<u32> = SourceIter(spec.build(2).unwrap().as_mut()).collect();
+        assert_eq!(a, b);
+        assert_eq!(a, synth::uniform(100, 500, 9).requests);
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        for bad in [
+            "",
+            "bogus:n=10",
+            "zipf:n=ten",
+            "zipf:n=10,n=20",
+            "zipf:q=1",
+            "file:",
+            "trace:scale=0.1",
+            "zipf:n=10 + ",
+        ] {
+            assert!(SourceSpec::parse(bad).is_err(), "`{bad}` should be rejected");
+        }
+    }
+
+    #[test]
+    fn trace_leaf_materializes_realworld() {
+        let spec = SourceSpec::parse("trace:name=cdn,scale=0.001").unwrap();
+        let mut src = spec.build(7).unwrap();
+        assert!(src.catalog() >= 1_000);
+        assert!(SourceIter(src.as_mut()).count() >= 1_000);
+    }
+}

@@ -86,6 +86,28 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Peak resident-set size of this process in bytes (Linux `VmHWM` from
+/// `/proc/self/status`; 0 where unavailable).  A cheap proxy for "did the
+/// streaming path actually avoid materializing the trace" — recorded in
+/// `BENCH_stream.json` so PRs can compare memory trajectories.
+pub fn peak_rss_bytes() -> u64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0);
+            return kb * 1024;
+        }
+    }
+    0
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

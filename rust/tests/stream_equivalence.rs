@@ -1,0 +1,199 @@
+//! Stream/materialized equivalence (DESIGN.md §6): property tests that
+//! the streaming path is *exactly* the materialized path —
+//!
+//! * replaying a seeded generator via `RequestSource` and via its
+//!   materialized `Trace` twin yields byte-identical request sequences;
+//! * `sim::run_source` and `sim::run` produce identical `RunResult`
+//!   metrics (hit ratios, windows, occupancy) for the same policy;
+//! * the streaming one-pass OPT (`StreamingOpt`, bounded min-heap)
+//!   matches `Trace::counts()`-based `opt_hits`/`top_c`;
+//! * a `SourceSpec` scenario frozen to an `.ogbt` file and streamed back
+//!   through `FileSource` replays the identical sequence.
+
+use ogb_cache::policies::{self, Policy};
+use ogb_cache::sim::{self, RunConfig, StreamingOpt};
+use ogb_cache::trace::stream::{gen, materialize, RequestSource, SourceIter, SourceSpec};
+use ogb_cache::trace::{synth, Trace};
+use ogb_cache::util::check::{check, Gen};
+
+fn collect(source: &mut dyn RequestSource) -> Vec<u32> {
+    SourceIter(source).collect()
+}
+
+/// Every synth generator's streaming twin emits the identical bytes.
+#[test]
+fn generator_twins_are_byte_identical() {
+    check("twin_zipf", |g: &mut Gen| {
+        let n = g.usize_in(2, 2_000);
+        let t = g.usize_in(1, 20_000);
+        let s = g.f64_in(0.0, 1.4);
+        let seed = g.u64_below(u64::MAX);
+        let trace = synth::zipf(n, t, s, seed);
+        let mut src = gen::ZipfSource::new(n, t, s, seed);
+        assert_eq!(src.catalog(), trace.catalog);
+        assert_eq!(src.horizon(), Some(trace.len()));
+        assert_eq!(collect(&mut src), trace.requests);
+    });
+    check("twin_uniform", |g: &mut Gen| {
+        let n = g.usize_in(1, 1_000);
+        let t = g.usize_in(1, 10_000);
+        let seed = g.u64_below(u64::MAX);
+        let trace = synth::uniform(n, t, seed);
+        assert_eq!(
+            collect(&mut gen::UniformSource::new(n, t, seed)),
+            trace.requests
+        );
+    });
+    check("twin_adversarial", |g: &mut Gen| {
+        let n = g.usize_in(2, 300);
+        let rounds = g.usize_in(0, 40);
+        let seed = g.u64_below(u64::MAX);
+        let trace = synth::adversarial(n, rounds, seed);
+        let mut src = gen::AdversarialSource::new(n, rounds, seed);
+        assert_eq!(src.horizon(), Some(trace.len()));
+        assert_eq!(collect(&mut src), trace.requests);
+    });
+    check("twin_shifting_zipf", |g: &mut Gen| {
+        let n = g.usize_in(2, 1_000);
+        let t = g.usize_in(1, 15_000);
+        let s = g.f64_in(0.2, 1.2);
+        let phase = g.usize_in(1, t + 1);
+        let seed = g.u64_below(u64::MAX);
+        let trace = synth::shifting_zipf(n, t, s, phase, seed);
+        assert_eq!(
+            collect(&mut gen::ShiftingZipfSource::new(n, t, s, phase, seed)),
+            trace.requests
+        );
+    });
+}
+
+/// Streaming-only generators agree with their own materialization, and a
+/// `Trace` round-trips through `materialize`.
+#[test]
+fn streaming_only_generators_match_their_materialization() {
+    check("materialize_roundtrip", |g: &mut Gen| {
+        let n = g.usize_in(2, 500);
+        let t = g.usize_in(1, 5_000);
+        let seed = g.u64_below(u64::MAX);
+        let swap = g.usize_in(1, 200);
+        let trace = materialize(&mut gen::ZipfDriftSource::new(n, t, 0.9, swap, seed), 0);
+        assert_eq!(trace.len(), t);
+        let again = collect(&mut gen::ZipfDriftSource::new(n, t, 0.9, swap, seed));
+        assert_eq!(trace.requests, again);
+        // and a materialized trace streams back out unchanged
+        assert_eq!(collect(&mut trace.as_source()), trace.requests);
+    });
+}
+
+/// `run_source` on the generator == `run` on the materialized trace:
+/// identical hit ratios and window series, for both a recency policy and
+/// the paper's OGB (seeded, so bit-for-bit deterministic).
+#[test]
+fn run_source_equals_run_on_materialized_trace() {
+    check("run_equivalence", |g: &mut Gen| {
+        let n = g.usize_in(50, 800);
+        let t = g.usize_in(500, 20_000);
+        let c = g.usize_in(1, n / 2);
+        let seed = g.u64_below(u64::MAX);
+        let window = g.usize_in(1, t);
+        let cfg = RunConfig {
+            window,
+            occupancy_every: g.usize_in(0, 3) * 97,
+            max_requests: 0,
+        };
+        let mut src = gen::FlashCrowdSource::new(n, t, 0.9, 0.002, 0.01, 10, 0.8, seed);
+        let trace = materialize(&mut src, 0);
+
+        for policy_name in ["lru", "ogb"] {
+            let mut p1 = policies::by_name(policy_name, n, c, t, 1, 11, Some(&trace)).unwrap();
+            let r1 = sim::run(p1.as_mut(), &trace, &cfg);
+            let mut p2 = policies::by_name(policy_name, n, c, t, 1, 11, Some(&trace)).unwrap();
+            let mut fresh = gen::FlashCrowdSource::new(n, t, 0.9, 0.002, 0.01, 10, 0.8, seed);
+            let r2 = sim::run_source(p2.as_mut(), &mut fresh, &cfg);
+            assert_eq!(r1.requests, r2.requests, "{policy_name}");
+            assert_eq!(r1.total_reward, r2.total_reward, "{policy_name}");
+            assert_eq!(r1.hit_ratio(), r2.hit_ratio(), "{policy_name}");
+            assert_eq!(r1.windowed, r2.windowed, "{policy_name}");
+            assert_eq!(r1.cumulative, r2.cumulative, "{policy_name}");
+            assert_eq!(r1.occupancy, r2.occupancy, "{policy_name}");
+        }
+    });
+}
+
+/// The streaming one-pass OPT matches the materialized `Trace` oracle for
+/// every cache size.
+#[test]
+fn streaming_opt_equals_materialized_opt() {
+    check("streaming_opt", |g: &mut Gen| {
+        let n = g.usize_in(2, 1_000);
+        let t = g.usize_in(1, 20_000);
+        let seed = g.u64_below(u64::MAX);
+        let trace = synth::zipf(n, t, g.f64_in(0.0, 1.3), seed);
+        let mut opt = StreamingOpt::new();
+        for &r in &trace.requests {
+            opt.record(r);
+        }
+        assert_eq!(opt.requests(), trace.len() as u64);
+        assert_eq!(opt.distinct(), trace.distinct());
+        for _ in 0..4 {
+            let c = g.usize_in(1, n + 10);
+            assert_eq!(opt.opt_hits(c), trace.opt_hits(c), "c={c}");
+        }
+        // top_c agrees wherever requested items fill the allocation
+        let c = g.usize_in(1, opt.distinct().max(1) + 1).min(opt.distinct());
+        if c > 0 {
+            assert_eq!(opt.top_c(c), trace.top_c(c));
+        }
+    });
+}
+
+/// A spec-built scenario frozen to disk and streamed back via FileSource
+/// replays the identical sequence — the full CLI path
+/// (`gen-trace --trace stream:<spec>` then `sweep file:path=...`).
+#[test]
+fn spec_to_file_roundtrip_streams_identically() {
+    let spec = SourceSpec::parse("drift-zipf:n=400,t=9000,s=0.9 + adversarial:n=64,rounds=20")
+        .unwrap();
+    let direct: Vec<u32> = collect(spec.build(5).unwrap().as_mut());
+    let trace = materialize(spec.build(5).unwrap().as_mut(), 0);
+    assert_eq!(direct, trace.requests);
+
+    let dir = std::env::temp_dir().join("ogb_stream_equiv_file");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("scenario.ogbt");
+    ogb_cache::trace::file::write_binary(&trace, &path).unwrap();
+    let file_spec = SourceSpec::parse(&format!("file:path={}", path.display())).unwrap();
+    let streamed: Vec<u32> = collect(file_spec.build(0).unwrap().as_mut());
+    assert_eq!(streamed, direct);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// End-to-end: the sweep runner's OPT accounting agrees with a
+/// materialized replay of the same scenario.
+#[test]
+fn sweep_matches_materialized_replay() {
+    let spec = SourceSpec::parse("diurnal:n=600,t=30000,s=1.0,period=10000").unwrap();
+    let cfg = sim::SweepConfig {
+        policies: ["lru", "opt"].map(String::from).to_vec(),
+        cache_pcts: vec![5.0],
+        batch: 1,
+        seed: 21,
+        threads: 2,
+        max_requests: 0,
+    };
+    let sweep = sim::run_sweep(&spec, &cfg).unwrap();
+    let trace = materialize(spec.build(21).unwrap().as_mut(), 0);
+    let c = ((trace.catalog as f64) * 0.05) as usize;
+
+    let lru_cell = sweep.cells.iter().find(|x| x.policy == "lru").unwrap();
+    let mut lru = policies::Lru::new(c);
+    let r = sim::run(&mut lru, &trace, &RunConfig::default());
+    assert_eq!(lru_cell.requests, r.requests);
+    assert_eq!(lru_cell.total_reward, r.total_reward);
+    assert_eq!(lru_cell.hit_ratio, r.hit_ratio());
+
+    let opt_cell = sweep.cells.iter().find(|x| x.policy == "opt").unwrap();
+    assert_eq!(opt_cell.opt_hits, trace.opt_hits(c));
+    assert_eq!(opt_cell.total_reward as u64, trace.opt_hits(c));
+    assert_eq!(lru_cell.opt_hits, opt_cell.opt_hits);
+}

@@ -1,0 +1,215 @@
+//! Minimal offline substitute for the `anyhow` crate (DESIGN.md §3).
+//!
+//! The build environment has no crates.io access, so this shim vendors the
+//! small slice of anyhow's API the codebase uses: [`Error`], [`Result`],
+//! the [`Context`] extension trait, and the `anyhow!` / `bail!` / `ensure!`
+//! macros.  Same coherence trick as upstream: `Error` deliberately does
+//! NOT implement `std::error::Error`, which keeps the blanket
+//! `From<E: std::error::Error>` impl legal.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A type-erased error with a message and an optional source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self {
+            msg: message.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Self {
+            msg: format!("{context}: {}", self.msg),
+            source: self.source,
+        }
+    }
+
+    /// The innermost source message, if any (diagnostic convenience).
+    pub fn root_cause(&self) -> String {
+        let mut cur: Option<&(dyn StdError + 'static)> = self.source.as_deref().map(|s| s as _);
+        let mut last = self.msg.clone();
+        while let Some(e) = cur {
+            last = e.to_string();
+            cur = e.source();
+        }
+        last
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur: Option<&(dyn StdError + 'static)> = self.source.as_deref().map(|s| s as _);
+        let mut first = true;
+        while let Some(e) = cur {
+            if first {
+                write!(f, "\n\nCaused by:")?;
+                first = false;
+            }
+            write!(f, "\n    {e}")?;
+            cur = e.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Self {
+            msg: e.to_string(),
+            source: Some(Box::new(e)),
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results
+/// and options.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T, Error> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($msg:literal $(,)?) => {
+        return Err($crate::Error::msg(format!($msg)))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        return Err($crate::Error::msg(format!($fmt, $($arg)*)))
+    };
+    ($msg:expr $(,)?) => {
+        return Err($crate::Error::msg($msg))
+    };
+}
+
+/// Return early with an [`Error`] if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $msg:literal $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!($msg)));
+        }
+    };
+    ($cond:expr, $fmt:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!($fmt, $($arg)*)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn from_and_context_chain() {
+        let r: Result<()> = Err(io_err().into());
+        let r = r.context("opening trace");
+        let e = r.unwrap_err();
+        assert_eq!(e.to_string(), "opening trace: missing");
+        assert_eq!(e.root_cause(), "missing");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("no value").unwrap_err();
+        assert_eq!(e.to_string(), "no value");
+    }
+
+    #[test]
+    fn macros() {
+        fn inner(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Err(anyhow!("fell through with {}", x))
+        }
+        assert_eq!(inner(11).unwrap_err().to_string(), "x too big: 11");
+        assert_eq!(inner(5).unwrap_err().to_string(), "five is right out");
+        assert_eq!(inner(1).unwrap_err().to_string(), "fell through with 1");
+    }
+
+    #[test]
+    fn ensure_without_message() {
+        fn inner(x: u32) -> Result<()> {
+            ensure!(x > 0);
+            Ok(())
+        }
+        assert!(inner(1).is_ok());
+        assert!(inner(0).unwrap_err().to_string().contains("x > 0"));
+    }
+}
