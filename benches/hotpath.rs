@@ -1,0 +1,26 @@
+//! Request hot-path microbench (`cargo bench --bench hotpath`) — the
+//! tracked per-PR perf record (DESIGN.md §7).  Thin wrapper over
+//! [`ogb_cache::sim::hotpath`]; the same suite backs `ogb-cache bench`.
+//!
+//! Installs the counting global allocator so the allocs/request column is
+//! live, and honors `OGB_BENCH_FAST=1` (CI smoke) by switching to the
+//! tiny smoke grid.
+
+use ogb_cache::sim::hotpath::{run_hotpath, HotpathConfig};
+use ogb_cache::util::bench::{alloc_count::CountingAlloc, fast_mode};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = if fast_mode() {
+        HotpathConfig::smoke()
+    } else {
+        HotpathConfig::default()
+    };
+    let r = run_hotpath(&cfg)?;
+    r.print();
+    let p = r.write_json("BENCH_hotpath.json")?;
+    eprintln!("\nwrote {}", p.display());
+    Ok(())
+}

@@ -110,6 +110,7 @@ fn main() -> anyhow::Result<()> {
                     seed: 7,
                     threads,
                     max_requests: 0,
+                    ..Default::default()
                 };
                 let r = sim::run_sweep(&spec, &cfg).expect("sweep");
                 std::hint::black_box(r.cells.len());

@@ -7,7 +7,15 @@
 //!
 //! Next steps: `examples/streaming_sweep.rs` runs a composed scenario
 //! across a policy × cache-size grid in parallel (also available as the
-//! `ogb-cache sweep` subcommand).
+//! `ogb-cache sweep` subcommand).  To measure the request hot path
+//! itself — ns/request, tree pops/request, and the zero-allocation
+//! steady-state contract (DESIGN.md §7) — run
+//!
+//!     cargo run --release -- bench            # or: cargo bench --bench hotpath
+//!
+//! which emits `BENCH_hotpath.json` next to the sweep's
+//! `BENCH_stream.json`; the committed `BENCH_*.json` snapshots at the
+//! repo root are the perf trajectory each PR measures itself against.
 
 use ogb_cache::policies::{Lru, Ogb, Opt, Policy};
 use ogb_cache::sim::{run, run_source, RunConfig, StreamingOpt};

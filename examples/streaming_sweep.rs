@@ -26,6 +26,7 @@ fn main() -> anyhow::Result<()> {
         seed: 42,
         threads: 0, // all cores
         max_requests: 0,
+        ..Default::default()
     };
     println!("scenario: {spec_text}");
     let r = run_sweep(&spec, &cfg)?;

@@ -21,21 +21,42 @@
 //!   that replay horizons far beyond RAM without materializing a request
 //!   vector;
 //! * [`sim`] — the windowed-hit-ratio simulation engine (in-RAM and
-//!   streaming: [`sim::run`] / [`sim::run_source`]), regret accounting
-//!   with the one-pass streaming OPT ([`sim::StreamingOpt`]), and the
-//!   parallel policy × cache-size [`sim::sweep`] runner behind
-//!   `ogb-cache sweep`;
+//!   streaming: [`sim::run`] / [`sim::run_source`], generic over the
+//!   policy type so concrete callers monomorphize the per-request loop),
+//!   regret accounting with the one-pass streaming OPT
+//!   ([`sim::StreamingOpt`]), the parallel policy × cache-size
+//!   [`sim::sweep`] runner behind `ogb-cache sweep`, and the
+//!   [`sim::hotpath`] microbench suite behind `ogb-cache bench`;
 //! * [`runtime`] — the PJRT (XLA) runtime that loads the AOT-compiled JAX /
 //!   Pallas artifacts backing the dense baseline;
 //! * [`coordinator`] — a deployable sharded cache service built around the
 //!   policy (router, batcher, metrics);
-//! * [`util`] — zero-dependency substrates (PRNG, ordered float trees, CLI,
-//!   CSV, property-testing) required by the offline build environment.
+//! * [`util`] — zero-dependency substrates required by the offline build
+//!   environment: PRNG, CLI, CSV, property-testing, and
+//!   [`util::flattree::FlatTree`] — the flat arena B+-tree carrying the
+//!   request hot path (DESIGN.md §7: O(N) bulk build, allocation-free
+//!   drains, packed-u128 keys).
 //!
 //! Quickstart: see `examples/quickstart.rs`; experiments: `src/figures.rs`
 //! via `ogb-cache figures --id all`; streaming scenarios at scale:
 //! `examples/streaming_sweep.rs` or
 //! `ogb-cache sweep --source "drift-zipf:n=1e6,t=1e7 & flash:n=1e6,t=1e7"`.
+//!
+//! ## Perf trajectory (`BENCH_*.json`)
+//!
+//! Every benchmark family emits a machine-readable snapshot at the repo
+//! root so each PR has a baseline to beat and a record to extend:
+//!
+//! * `BENCH_hotpath.json` — `ogb-cache bench` (or `cargo bench --bench
+//!   hotpath`): ns/request, pops/request, allocs/request by policy ×
+//!   catalog × cache size.  The steady-state contract is
+//!   allocs/request = 0 (see [`policies::Diag::scratch_grows`]).
+//! * `BENCH_stream.json` — `ogb-cache sweep`: end-to-end replay
+//!   throughput, per-policy hit ratio, peak-RSS proxy.
+//!
+//! CI regenerates both in smoke mode on every push (tiny grids, one
+//! repetition) so the emission paths cannot rot; commit refreshed
+//! full-grid snapshots when a PR moves the numbers.
 
 pub mod coordinator;
 pub mod figures;

@@ -3,6 +3,7 @@
 //! Commands:
 //!   simulate   replay a trace through a policy, report hit ratio
 //!   sweep      replay a streaming scenario across a policy × cache grid
+//!   bench      hot-path microbench (ns/req, pops/req, allocs/req -> BENCH_hotpath.json)
 //!   figures    regenerate the paper's tables/figures (CSV under results/)
 //!   serve      run the sharded cache service under synthetic load
 //!   analyze    temporal-locality analysis of a trace (App. B)
@@ -12,12 +13,19 @@
 use anyhow::Result;
 use ogb_cache::coordinator::{CacheServer, ServerConfig};
 use ogb_cache::figures::{run_figure, FigOpts};
+use ogb_cache::policies::{BuildOpts, Policy};
 use ogb_cache::proj::{dense, LazySimplex};
-use ogb_cache::sim::{self, RunConfig, SweepConfig};
+use ogb_cache::sim::{self, HotpathConfig, RunConfig, SweepConfig};
 use ogb_cache::trace::stream::SourceSpec;
 use ogb_cache::trace::{self, realworld, stream, synth, Trace};
 use ogb_cache::util::args::{flag, opt, Cli};
+use ogb_cache::util::bench::alloc_count::CountingAlloc;
 use ogb_cache::util::{logger, Xoshiro256pp};
+
+/// Counting allocator (one relaxed atomic add per allocation): keeps the
+/// allocs/request column of `ogb-cache bench` live in the shipped binary.
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
 
 fn cli() -> Cli {
     Cli::new("ogb-cache", "Online Gradient-Based caching with O(log N) complexity (Carra & Neglia 2024)")
@@ -32,6 +40,7 @@ fn cli() -> Cli {
                 opt("batch", "batch size B", "1"),
                 opt("window", "hit-ratio window", "100000"),
                 opt("seed", "random seed", "42"),
+                opt("rebase-threshold", "lazy projection re-base threshold (empty = default 1e6)", ""),
                 opt("csv", "optional output CSV path", ""),
             ],
         )
@@ -50,8 +59,26 @@ fn cli() -> Cli {
                 opt("threads", "worker threads (0 = all cores)", "0"),
                 opt("max-requests", "cap on replayed requests per cell (0 = source horizon)", "0"),
                 opt("seed", "random seed", "42"),
+                opt("rebase-threshold", "lazy projection re-base threshold (empty = default 1e6)", ""),
                 opt("out", "output CSV path", "results/sweep/sweep.csv"),
                 opt("bench-json", "machine-readable perf snapshot (empty = skip)", "BENCH_stream.json"),
+            ],
+        )
+        .command(
+            "bench",
+            "hot-path microbench: ns/request, pops/request, allocs/request by policy × N × C (emits BENCH_hotpath.json)",
+            vec![
+                opt("policies", "comma-separated policy names", "ogb"),
+                opt("ns", "comma-separated catalog sizes (1e6 notation ok)", "10000,1000000"),
+                opt("cache-pcts", "comma-separated cache sizes as % of catalog", "1,10"),
+                opt("requests", "requests per replay (1 warm-up + reps timed)", "1000000"),
+                opt("reps", "timed repetitions (median reported)", "3"),
+                opt("batch", "batch size B", "1"),
+                opt("zipf", "workload Zipf exponent", "0.9"),
+                opt("seed", "random seed", "42"),
+                opt("rebase-threshold", "lazy projection re-base threshold (empty = default 1e6)", ""),
+                opt("out", "output JSON path (empty = skip)", "BENCH_hotpath.json"),
+                flag("smoke", "tiny CI grid (ogb+lru, N=2000, 20k requests, 1 rep; overrides --policies/--ns/--cache-pcts/--requests/--reps)"),
             ],
         )
         .command(
@@ -145,6 +172,20 @@ fn load_trace(name: &str, scale: f64, seed: u64) -> Result<Trace> {
     })
 }
 
+/// `--rebase-threshold` shared by simulate / sweep / bench ("" = default).
+fn parse_rebase_threshold(a: &ogb_cache::util::args::Args) -> Result<Option<f64>> {
+    let s = a.get_or("rebase-threshold", "");
+    if s.is_empty() {
+        Ok(None)
+    } else {
+        let t: f64 = s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad --rebase-threshold `{s}`"))?;
+        anyhow::ensure!(t > 0.0, "--rebase-threshold must be positive");
+        Ok(Some(t))
+    }
+}
+
 fn cmd_simulate(a: &ogb_cache::util::args::Args) -> Result<()> {
     let scale: f64 = a.get_parse("scale", 0.1);
     let seed: u64 = a.get_parse("seed", 42);
@@ -152,15 +193,11 @@ fn cmd_simulate(a: &ogb_cache::util::args::Args) -> Result<()> {
     let cache_pct: f64 = a.get_parse("cache-pct", 5.0);
     let c = ((tr.catalog as f64 * cache_pct / 100.0) as usize).max(1);
     let b: usize = a.get_parse("batch", 1);
-    let mut policy = ogb_cache::policies::by_name(
-        a.get_or("policy", "ogb"),
-        tr.catalog,
-        c,
-        tr.len(),
-        b,
-        seed,
-        Some(&tr),
-    )?;
+    let mut opts = BuildOpts::new(tr.len(), b, seed);
+    opts.rebase_threshold = parse_rebase_threshold(a)?;
+    // concrete enum dispatch => monomorphized replay loop (DESIGN.md §7)
+    let mut policy =
+        ogb_cache::policies::build(a.get_or("policy", "ogb"), tr.catalog, c, &opts, Some(&tr))?;
     let cfg = RunConfig {
         window: a.get_parse("window", 100_000),
         occupancy_every: 10_000,
@@ -174,7 +211,7 @@ fn cmd_simulate(a: &ogb_cache::util::args::Args) -> Result<()> {
         tr.distinct(),
         policy.name()
     );
-    let r = sim::run(policy.as_mut(), &tr, &cfg);
+    let r = sim::run(&mut policy, &tr, &cfg);
     println!(
         "hit_ratio={:.4} total_reward={:.0} elapsed={:.2}s throughput={:.3e} req/s",
         r.hit_ratio(),
@@ -184,10 +221,11 @@ fn cmd_simulate(a: &ogb_cache::util::args::Args) -> Result<()> {
     );
     let d = policy.diag();
     println!(
-        "diag: removed_coeffs={} sample_evictions={} rebases={} occupancy={:.1}",
+        "diag: removed_coeffs={} sample_evictions={} rebases={} scratch_grows={} occupancy={:.1}",
         d.removed_coeffs,
         d.sample_evictions,
         d.rebases,
+        d.scratch_grows,
         policy.occupancy()
     );
     let csv = a.get_or("csv", "");
@@ -235,6 +273,7 @@ fn cmd_sweep(a: &ogb_cache::util::args::Args) -> Result<()> {
         seed: a.get_parse("seed", 42),
         threads: a.get_parse("threads", 0),
         max_requests: a.get_parse("max-requests", 0),
+        rebase_threshold: parse_rebase_threshold(a)?,
     };
     println!("sweep source=`{}` seed={}", spec.text(), cfg.seed);
     let r = sim::run_sweep(&spec, &cfg)?;
@@ -272,6 +311,63 @@ fn cmd_sweep(a: &ogb_cache::util::args::Args) -> Result<()> {
     let bench = a.get_or("bench-json", "BENCH_stream.json");
     if !bench.is_empty() {
         println!("wrote {}", r.write_bench_json(bench)?.display());
+    }
+    Ok(())
+}
+
+fn cmd_bench(a: &ogb_cache::util::args::Args) -> Result<()> {
+    let parse_list = |key: &str, what: &str| -> Result<Vec<f64>> {
+        a.get_or(key, "")
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad --{what} entry `{s}`"))
+            })
+            .collect()
+    };
+    let cfg = if a.flag("smoke") {
+        // tiny grid, but still honor the measurement knobs
+        let mut cfg = HotpathConfig::smoke();
+        cfg.batch = a.get_parse("batch", cfg.batch);
+        cfg.zipf_s = a.get_parse("zipf", cfg.zipf_s);
+        cfg.seed = a.get_parse("seed", cfg.seed);
+        cfg.rebase_threshold = parse_rebase_threshold(a)?;
+        cfg
+    } else {
+        HotpathConfig {
+            policies: a
+                .get_or("policies", "ogb")
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect(),
+            ns: parse_list("ns", "ns")?
+                .into_iter()
+                .map(|v| (v as usize).max(1))
+                .collect(),
+            cache_pcts: parse_list("cache-pcts", "cache-pcts")?,
+            requests: a.get_parse("requests", 1_000_000),
+            reps: a.get_parse("reps", 3),
+            batch: a.get_parse("batch", 1),
+            zipf_s: a.get_parse("zipf", 0.9),
+            seed: a.get_parse("seed", 42),
+            rebase_threshold: parse_rebase_threshold(a)?,
+            smoke: false,
+        }
+    };
+    let r = sim::run_hotpath(&cfg)?;
+    r.print();
+    println!(
+        "\n{} cells in {:.2}s (alloc counter {})",
+        r.rows.len(),
+        r.wall_s,
+        if r.alloc_counter_active { "active" } else { "inactive" }
+    );
+    let out = a.get_or("out", "BENCH_hotpath.json");
+    if !out.is_empty() {
+        println!("wrote {}", r.write_json(out)?.display());
     }
     Ok(())
 }
@@ -407,6 +503,7 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "simulate" => cmd_simulate(&a),
         "sweep" => cmd_sweep(&a),
+        "bench" => cmd_bench(&a),
         "figures" => {
             let opts = FigOpts {
                 out_dir: a.get_or("out", "results").into(),

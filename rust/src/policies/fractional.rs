@@ -45,6 +45,13 @@ impl FractionalOgb {
         Self::new(n, c, eta, b)
     }
 
+    /// Builder-style override of the numerical re-base threshold (see
+    /// `LazySimplex::set_rebase_threshold`).
+    pub fn with_rebase_threshold(mut self, t: f64) -> Self {
+        self.lazy.set_rebase_threshold(t);
+        self
+    }
+
     /// The materialized (frozen) fraction currently serving requests.
     pub fn cached_fraction(&self, item: u64) -> f64 {
         self.lazy.frozen_prob(item)
@@ -84,6 +91,7 @@ impl Policy for FractionalOgb {
         Diag {
             removed_coeffs: self.removed_coeffs,
             rebases: self.rebases,
+            scratch_grows: self.lazy.scratch_grows(),
             ..Default::default()
         }
     }

@@ -15,7 +15,7 @@
 
 use super::Policy;
 use crate::util::fxhash::hash2;
-use crate::util::OrdTree;
+use crate::util::FlatTree;
 
 #[derive(Debug, Clone)]
 pub struct Ftpl {
@@ -25,7 +25,7 @@ pub struct Ftpl {
     seed: u64,
     counts: Vec<u64>,
     /// ordered by perturbed count; holds exactly the cached top-C
-    cached: OrdTree,
+    cached: FlatTree,
     /// perturbed-count key per cached item (NaN = not cached)
     key_of: Vec<f64>,
 }
@@ -39,12 +39,28 @@ impl Ftpl {
             zeta,
             seed,
             counts: vec![0; n],
-            cached: OrdTree::new(),
+            cached: FlatTree::new(),
             key_of: vec![f64::NAN; n],
         };
-        // Initial cache: top-C by pure noise (all counts are zero).
-        for i in 0..n as u64 {
-            s.offer(i);
+        // Initial cache: top-C by pure noise (all counts are zero) —
+        // O(N) select of the C largest perturbed keys, sort only that
+        // tail, and bulk-build the tree from the run (the old path did N
+        // offer() tree updates, O(N log N) with rebalancing traffic).
+        let mut keys: Vec<u128> = (0..n as u64)
+            .map(|i| FlatTree::key_of(s.perturbed(i), i))
+            .collect();
+        let top = if cap < n {
+            let (_, _, top) = keys.select_nth_unstable(n - cap - 1);
+            top.sort_unstable();
+            &*top
+        } else {
+            keys.sort_unstable();
+            &keys[..]
+        };
+        s.cached.rebuild_from_sorted_keys(top);
+        for &k in top {
+            let (v, i) = FlatTree::decode(k);
+            s.key_of[i as usize] = v;
         }
         s
     }

@@ -68,10 +68,160 @@ pub struct Diag {
     pub sample_evictions: u64,
     /// number of numerical re-bases performed
     pub rebases: u64,
+    /// times a request-path scratch buffer had to grow (re-allocate);
+    /// 0 over a steady-state window certifies the allocation-free hot
+    /// path (DESIGN.md §7)
+    pub scratch_grows: u64,
 }
 
-/// Construct a policy by CLI name. `t_hint` is the expected horizon used
-/// for the theoretical eta/zeta; `trace_counts` is required only by `opt`.
+/// Construction knobs shared by the policy factory (`t_hint` is the
+/// expected horizon used for the theoretical eta/zeta).
+#[derive(Debug, Clone)]
+pub struct BuildOpts {
+    pub t_hint: usize,
+    /// batch size B handed to batched policies
+    pub batch: usize,
+    pub seed: u64,
+    /// override of the lazy projection's numerical re-base threshold
+    /// (None = the `LazySimplex` default of 1e6)
+    pub rebase_threshold: Option<f64>,
+}
+
+impl BuildOpts {
+    pub fn new(t_hint: usize, batch: usize, seed: u64) -> Self {
+        Self {
+            t_hint,
+            batch,
+            seed,
+            rebase_threshold: None,
+        }
+    }
+}
+
+/// Concrete policy dispatch: one enum over every built-in policy so the
+/// simulation inner loop monomorphizes (`sim::run_source::<AnyPolicy>`)
+/// into a direct, predictable branch per request instead of a vtable
+/// call per request through `Box<dyn Policy>` (DESIGN.md §7).
+pub enum AnyPolicy {
+    Lru(Lru),
+    Lfu(Lfu),
+    Fifo(Fifo),
+    Arc(ArcCache),
+    Gds(Gds),
+    Ftpl(Ftpl),
+    Ogb(Ogb),
+    OgbFrac(FractionalOgb),
+    Classic(OgbClassic),
+    Omd(OmdFractional),
+    Opt(Opt),
+    Infinite(InfiniteCache),
+}
+
+macro_rules! any_policy_dispatch {
+    ($self:expr, $p:ident => $body:expr) => {
+        match $self {
+            AnyPolicy::Lru($p) => $body,
+            AnyPolicy::Lfu($p) => $body,
+            AnyPolicy::Fifo($p) => $body,
+            AnyPolicy::Arc($p) => $body,
+            AnyPolicy::Gds($p) => $body,
+            AnyPolicy::Ftpl($p) => $body,
+            AnyPolicy::Ogb($p) => $body,
+            AnyPolicy::OgbFrac($p) => $body,
+            AnyPolicy::Classic($p) => $body,
+            AnyPolicy::Omd($p) => $body,
+            AnyPolicy::Opt($p) => $body,
+            AnyPolicy::Infinite($p) => $body,
+        }
+    };
+}
+
+impl Policy for AnyPolicy {
+    fn name(&self) -> String {
+        any_policy_dispatch!(self, p => p.name())
+    }
+
+    #[inline(always)]
+    fn request(&mut self, item: u64) -> f64 {
+        any_policy_dispatch!(self, p => p.request(item))
+    }
+
+    fn occupancy(&self) -> f64 {
+        any_policy_dispatch!(self, p => p.occupancy())
+    }
+
+    fn diag(&self) -> Diag {
+        any_policy_dispatch!(self, p => p.diag())
+    }
+}
+
+/// Construct a concrete [`AnyPolicy`] by CLI name; `trace` is required
+/// only by `opt`.
+pub fn build(
+    name: &str,
+    n: usize,
+    c: usize,
+    opts: &BuildOpts,
+    trace: Option<&crate::trace::Trace>,
+) -> anyhow::Result<AnyPolicy> {
+    let (t_hint, b, seed) = (opts.t_hint, opts.batch, opts.seed);
+    let eta = crate::theory_eta(c as f64, n as f64, t_hint as f64, b as f64);
+    let zeta = crate::ftpl_theory_zeta(c as f64, n as f64, t_hint as f64);
+    Ok(match name {
+        "lru" => AnyPolicy::Lru(Lru::new(c)),
+        "lfu" => AnyPolicy::Lfu(Lfu::new(c)),
+        "fifo" => AnyPolicy::Fifo(Fifo::new(c)),
+        "arc" => AnyPolicy::Arc(ArcCache::new(c)),
+        "gds" => AnyPolicy::Gds(Gds::new(c)),
+        "ftpl" => AnyPolicy::Ftpl(Ftpl::new(n, c, zeta, seed)),
+        "ogb" => {
+            let mut p = Ogb::new(n, c as f64, eta, b, seed);
+            if let Some(t) = opts.rebase_threshold {
+                p = p.with_rebase_threshold(t);
+            }
+            AnyPolicy::Ogb(p)
+        }
+        "ogb-frac" => {
+            let mut p = FractionalOgb::new(n, c as f64, eta, b);
+            if let Some(t) = opts.rebase_threshold {
+                p = p.with_rebase_threshold(t);
+            }
+            AnyPolicy::OgbFrac(p)
+        }
+        "ogb-classic" => AnyPolicy::Classic(OgbClassic::new(
+            n,
+            c as f64,
+            eta,
+            b,
+            OgbClassicMode::Integral,
+            Box::new(CpuDenseStep),
+            seed,
+        )),
+        "ogb-classic-frac" => AnyPolicy::Classic(OgbClassic::new(
+            n,
+            c as f64,
+            eta,
+            b,
+            OgbClassicMode::Fractional,
+            Box::new(CpuDenseStep),
+            seed,
+        )),
+        "omd-frac" => AnyPolicy::Omd(OmdFractional::with_theory_eta(n, c as f64, t_hint, b)),
+        "opt" => {
+            let tr = trace.ok_or_else(|| anyhow::anyhow!("opt policy needs the trace"))?;
+            AnyPolicy::Opt(Opt::from_trace(tr, c))
+        }
+        "infinite" => AnyPolicy::Infinite(InfiniteCache::new()),
+        other => anyhow::bail!(
+            "unknown policy `{other}` (known: lru lfu fifo arc gds ftpl ogb ogb-frac ogb-classic ogb-classic-frac omd-frac opt infinite)"
+        ),
+    })
+}
+
+/// Construct a boxed policy by CLI name — the dyn-dispatch convenience
+/// wrapper around [`build`] kept for callers that store heterogeneous
+/// policies; hot loops should prefer `build` + a monomorphized
+/// `sim::run_source`.
 pub fn by_name(
     name: &str,
     n: usize,
@@ -81,45 +231,13 @@ pub fn by_name(
     seed: u64,
     trace: Option<&crate::trace::Trace>,
 ) -> anyhow::Result<Box<dyn Policy>> {
-    let eta = crate::theory_eta(c as f64, n as f64, t_hint as f64, b as f64);
-    let zeta = crate::ftpl_theory_zeta(c as f64, n as f64, t_hint as f64);
-    Ok(match name {
-        "lru" => Box::new(Lru::new(c)),
-        "lfu" => Box::new(Lfu::new(c)),
-        "fifo" => Box::new(Fifo::new(c)),
-        "arc" => Box::new(ArcCache::new(c)),
-        "gds" => Box::new(Gds::new(c)),
-        "ftpl" => Box::new(Ftpl::new(n, c, zeta, seed)),
-        "ogb" => Box::new(Ogb::new(n, c as f64, eta, b, seed)),
-        "ogb-frac" => Box::new(FractionalOgb::new(n, c as f64, eta, b)),
-        "ogb-classic" => Box::new(OgbClassic::new(
-            n,
-            c as f64,
-            eta,
-            b,
-            OgbClassicMode::Integral,
-            Box::new(CpuDenseStep),
-            seed,
-        )),
-        "ogb-classic-frac" => Box::new(OgbClassic::new(
-            n,
-            c as f64,
-            eta,
-            b,
-            OgbClassicMode::Fractional,
-            Box::new(CpuDenseStep),
-            seed,
-        )),
-        "omd-frac" => Box::new(OmdFractional::with_theory_eta(n, c as f64, t_hint, b)),
-        "opt" => {
-            let tr = trace.ok_or_else(|| anyhow::anyhow!("opt policy needs the trace"))?;
-            Box::new(Opt::from_trace(tr, c))
-        }
-        "infinite" => Box::new(InfiniteCache::new()),
-        other => anyhow::bail!(
-            "unknown policy `{other}` (known: lru lfu fifo arc gds ftpl ogb ogb-frac ogb-classic ogb-classic-frac omd-frac opt infinite)"
-        ),
-    })
+    Ok(Box::new(build(
+        name,
+        n,
+        c,
+        &BuildOpts::new(t_hint, b, seed),
+        trace,
+    )?))
 }
 
 #[cfg(test)]
@@ -154,6 +272,68 @@ mod tests {
             assert!(p.occupancy() >= 0.0, "{name}");
         }
         assert!(by_name("bogus", 10, 2, 10, 1, 0, None).is_err());
+    }
+
+    /// The monomorphized enum and the boxed trait object must be the same
+    /// policy behaviorally — identical reward trajectories.
+    #[test]
+    fn any_policy_matches_boxed_dispatch() {
+        let t = synth::zipf(200, 4_000, 0.9, 11);
+        for name in ["lru", "ftpl", "ogb", "ogb-frac", "omd-frac"] {
+            let mut concrete = build(name, 200, 20, &BuildOpts::new(t.len(), 2, 9), None).unwrap();
+            let mut boxed = by_name(name, 200, 20, t.len(), 2, 9, None).unwrap();
+            let mut ra = 0.0;
+            let mut rb = 0.0;
+            for &r in &t.requests {
+                ra += concrete.request(r as u64);
+                rb += boxed.request(r as u64);
+            }
+            assert_eq!(ra, rb, "{name} diverged across dispatch paths");
+            assert_eq!(concrete.name(), boxed.name());
+            assert_eq!(concrete.occupancy(), boxed.occupancy());
+        }
+    }
+
+    /// `BuildOpts::rebase_threshold` must reach the lazy projection.
+    #[test]
+    fn rebase_threshold_option_applies() {
+        let t = synth::zipf(100, 20_000, 0.9, 13);
+        let mut opts = BuildOpts::new(t.len(), 1, 3);
+        opts.rebase_threshold = Some(1e-3); // force frequent re-bases
+        let mut forced = build("ogb", 100, 10, &opts, None).unwrap();
+        let mut default = build("ogb", 100, 10, &BuildOpts::new(t.len(), 1, 3), None).unwrap();
+        let mut hits_f = 0.0;
+        let mut hits_d = 0.0;
+        for &r in &t.requests {
+            hits_f += forced.request(r as u64);
+            hits_d += default.request(r as u64);
+        }
+        assert!(forced.diag().rebases > 10, "threshold override ignored");
+        assert_eq!(default.diag().rebases, 0);
+        assert_eq!(hits_f, hits_d, "rebase cadence must not change decisions");
+    }
+
+    /// DESIGN.md §7 contract: once warmed up, the OGB request path
+    /// performs zero heap allocations — no scratch buffer may grow over a
+    /// steady-state window.
+    #[test]
+    fn steady_state_request_path_is_allocation_free() {
+        let n = 2_000;
+        let mut p = build("ogb", n, 200, &BuildOpts::new(40_000, 4, 7), None).unwrap();
+        let mut rng = crate::util::Xoshiro256pp::seed_from(5);
+        let zipf = crate::util::Zipf::new(n as u64, 0.9);
+        for _ in 0..20_000 {
+            p.request(zipf.sample(&mut rng));
+        }
+        let warm = p.diag().scratch_grows;
+        for _ in 0..20_000 {
+            p.request(zipf.sample(&mut rng));
+        }
+        assert_eq!(
+            p.diag().scratch_grows,
+            warm,
+            "scratch buffers grew after warm-up — the hot path allocated"
+        );
     }
 
     /// Every integral policy must respect its capacity bound (OGB's soft

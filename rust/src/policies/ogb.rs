@@ -60,6 +60,14 @@ impl Ogb {
         Self::new(n, c, eta, b, seed)
     }
 
+    /// Builder-style override of the numerical re-base threshold (how far
+    /// `rho` may drift before the O(N) precision re-base; `--rebase-threshold`
+    /// on the CLI).
+    pub fn with_rebase_threshold(mut self, t: f64) -> Self {
+        self.lazy.set_rebase_threshold(t);
+        self
+    }
+
     pub fn eta(&self) -> f64 {
         self.eta
     }
@@ -132,6 +140,9 @@ impl Policy for Ogb {
             removed_coeffs: self.removed_coeffs,
             sample_evictions: self.sample_evictions,
             rebases: self.rebases,
+            // `batch` is bounded by B and reused, so only the projection
+            // and sampler scratches can ever grow.
+            scratch_grows: self.lazy.scratch_grows() + self.sampler.scratch_grows(),
         }
     }
 }

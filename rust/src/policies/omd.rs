@@ -24,6 +24,9 @@ pub struct OmdFractional {
     f: Vec<f64>,
     counts: Vec<f64>,
     touched: Vec<u64>,
+    /// Reused capped-component marks for `kl_project` (the old path
+    /// allocated a fresh `vec![false; n]` per batch flush).
+    cap_scratch: Vec<bool>,
     in_batch: usize,
     projection_passes: u64,
 }
@@ -40,6 +43,7 @@ impl OmdFractional {
             f: vec![c / n as f64; n],
             counts: vec![0.0; n],
             touched: Vec::new(),
+            cap_scratch: vec![false; n],
             in_batch: 0,
             projection_passes: 0,
         }
@@ -61,13 +65,13 @@ impl OmdFractional {
     /// components at 1 and rescale the free mass.
     fn kl_project(&mut self) {
         let mut capped_mass = 0.0;
-        let mut is_capped = vec![false; self.n];
+        self.cap_scratch.iter_mut().for_each(|c| *c = false);
         loop {
             self.projection_passes += 1;
             let free_mass: f64 = self
                 .f
                 .iter()
-                .zip(&is_capped)
+                .zip(&self.cap_scratch)
                 .filter(|&(_, &cap)| !cap)
                 .map(|(&v, _)| v)
                 .sum();
@@ -79,13 +83,13 @@ impl OmdFractional {
             let scale = target / free_mass;
             let mut new_caps = false;
             for i in 0..self.n {
-                if is_capped[i] {
+                if self.cap_scratch[i] {
                     continue;
                 }
                 let v = self.f[i] * scale;
                 if v >= 1.0 {
                     self.f[i] = 1.0;
-                    is_capped[i] = true;
+                    self.cap_scratch[i] = true;
                     capped_mass += 1.0;
                     new_caps = true;
                 } else {

@@ -29,10 +29,20 @@
 //! traces): `rho` and the stored `f_tilde` grow ~`eta` per request; once
 //! `rho` is large, `f_tilde - rho` loses precision.  When `rho` exceeds
 //! `rebase_threshold` we subtract `rho` from every stored value and reset
-//! it to 0 — O(N log N) amortized over ≥ millions of requests (measured in
-//! `figures --id fig9`; see DESIGN.md §5).
+//! it to 0 — one O(N) sort + bulk tree build (DESIGN.md §7), amortized
+//! over ≥ millions of requests (measured in `figures --id fig9`; see
+//! DESIGN.md §5).  The threshold is configurable through the policy
+//! constructors and `--rebase-threshold` on the CLI.
+//!
+//! **Hot-path contract** (DESIGN.md §7): after the first few requests
+//! have sized the scratch buffers, `request()` performs zero heap
+//! allocations — the ordered set is the arena-backed
+//! [`crate::util::FlatTree`], popped components land in a reused scratch
+//! `Vec`, and re-bases rebuild the tree in place from a sorted run.
+//! [`LazySimplex::scratch_grows`] counts scratch re-allocations so the
+//! policies can export the violation count through `Diag`.
 
-use crate::util::{FxHashMap, OrdTree};
+use crate::util::{FlatTree, FxHashMap};
 
 /// Sentinel stored in `f_tilde` for components currently at zero.
 const ZERO_SENTINEL: f64 = -1.0;
@@ -58,7 +68,7 @@ pub struct LazySimplex {
     rho: f64,
     f_tilde: Vec<f64>,
     in_z: Vec<bool>,
-    z: OrdTree,
+    z: FlatTree,
     /// The key each in-z item is currently stored under in `z`.  PERF
     /// (EXPERIMENTS.md §Perf iter 3): a requested item's `f_tilde` only
     /// grows, so instead of re-keying the tree on every request we leave
@@ -69,6 +79,14 @@ pub struct LazySimplex {
     z_key: Vec<f64>,
     rebase_threshold: f64,
     rebase_count: u64,
+    /// Reused buffer for components popped by `redistribute` (phase B
+    /// restores from it); sized once, never reallocated at steady state.
+    popped_scratch: Vec<(f64, u64)>,
+    /// Reused sorted-run buffer for the O(N) re-base rebuild.
+    rebase_scratch: Vec<u128>,
+    /// Times a scratch buffer had to grow (0 after warm-up = the
+    /// request path is allocation-free); exported via `Diag`.
+    scratch_grows: u64,
     /// Shadow of the state at the last `freeze()` — backs the O(1) frozen
     /// reads used by the fractional policy under batching (reward must be
     /// computed against the *materialized* cache, which only changes every
@@ -93,10 +111,11 @@ impl LazySimplex {
             "capacity must be in (0, N], got {c} for N={n}"
         );
         let f0 = c / n as f64;
-        let mut z = OrdTree::new();
-        for i in 0..n {
-            z.insert(f0, i as u64);
-        }
+        // All keys share the value f0, so item order IS key order: one
+        // O(N) bulk build instead of N one-at-a-time inserts.
+        let keys: Vec<u128> = (0..n as u64).map(|i| FlatTree::key_of(f0, i)).collect();
+        let mut z = FlatTree::new();
+        z.rebuild_from_sorted_keys(&keys);
         Self {
             n,
             c,
@@ -107,6 +126,9 @@ impl LazySimplex {
             z_key: vec![f0; n],
             rebase_threshold: 1e6,
             rebase_count: 0,
+            popped_scratch: Vec::new(),
+            rebase_scratch: Vec::new(),
+            scratch_grows: 0,
             shadow: None,
         }
     }
@@ -115,19 +137,22 @@ impl LazySimplex {
     /// XLA-backed classic policy when handing state over).
     pub fn from_state(f: &[f64], c: f64) -> Self {
         let n = f.len();
-        let mut z = OrdTree::new();
         let mut f_tilde = vec![ZERO_SENTINEL; n];
         let mut in_z = vec![false; n];
         let mut z_key = vec![f64::NAN; n];
+        let mut keys: Vec<u128> = Vec::with_capacity(n);
         for (i, &v) in f.iter().enumerate() {
             assert!((-1e-9..=1.0 + 1e-9).contains(&v), "component out of range");
             if v > 0.0 {
                 f_tilde[i] = v;
                 in_z[i] = true;
-                z.insert(v, i as u64);
+                keys.push(FlatTree::key_of(v, i as u64));
                 z_key[i] = v;
             }
         }
+        keys.sort_unstable();
+        let mut z = FlatTree::new();
+        z.rebuild_from_sorted_keys(&keys);
         Self {
             n,
             c,
@@ -138,6 +163,9 @@ impl LazySimplex {
             z_key,
             rebase_threshold: 1e6,
             rebase_count: 0,
+            popped_scratch: Vec::new(),
+            rebase_scratch: Vec::new(),
+            scratch_grows: 0,
             shadow: None,
         }
     }
@@ -175,10 +203,20 @@ impl LazySimplex {
     }
 
     /// Configure the numerical re-base threshold (tests use tiny values to
-    /// force frequent re-bases).
+    /// force frequent re-bases; the CLI exposes it as `--rebase-threshold`).
     pub fn set_rebase_threshold(&mut self, t: f64) {
         assert!(t > 0.0);
         self.rebase_threshold = t;
+    }
+
+    pub fn rebase_threshold(&self) -> f64 {
+        self.rebase_threshold
+    }
+
+    /// Times a request-path scratch buffer had to grow.  0 after warm-up
+    /// means the steady-state request path performed no heap allocations.
+    pub fn scratch_grows(&self) -> u64 {
+        self.scratch_grows
     }
 
     /// Current probability/fraction of item `i`: `f_i = f~_i - rho` or 0.
@@ -282,8 +320,11 @@ impl LazySimplex {
         }
 
         // Phase A (lines 11-18): redistribute `eta` over all positives.
+        // Popped components accumulate in the reused `popped_scratch`
+        // buffer (no per-request allocation).
+        let scratch_cap = self.popped_scratch.capacity();
         let rho_before = self.rho;
-        let popped = self.redistribute(eta, &mut stats);
+        self.redistribute(eta, &mut stats);
 
         // Phase B (lines 19-24): the requested component overshot the cap.
         if self.f_tilde[ji] - self.rho > 1.0 + 1e-12 {
@@ -292,7 +333,8 @@ impl LazySimplex {
             // were recorded with their true f~, which is always a valid
             // tree key).
             self.rho = rho_before;
-            for &(v, i) in &popped {
+            for idx in 0..self.popped_scratch.len() {
+                let (v, i) = self.popped_scratch[idx];
                 self.f_tilde[i as usize] = v;
                 self.in_z[i as usize] = true;
                 self.z.insert(v, i);
@@ -304,7 +346,7 @@ impl LazySimplex {
             self.z.remove(self.z_key[ji], j);
             self.in_z[ji] = false;
             self.z_key[ji] = f64::NAN;
-            let _ = self.redistribute(1.0 - fj, &mut stats);
+            self.redistribute(1.0 - fj, &mut stats);
             // Pin j at exactly 1 (unadjusted: 1 + rho_final).
             self.f_tilde[ji] = 1.0 + self.rho;
             self.in_z[ji] = true;
@@ -312,6 +354,9 @@ impl LazySimplex {
             self.z_key[ji] = self.f_tilde[ji];
         }
 
+        if self.popped_scratch.capacity() > scratch_cap {
+            self.scratch_grows += 1;
+        }
         stats
     }
 
@@ -338,11 +383,12 @@ impl LazySimplex {
 
     /// The redistribution loop: spread `excess` uniformly over the current
     /// positive set, popping components that would cross zero and
-    /// recomputing until stable.  Returns every popped (unadjusted value,
-    /// item) pair so phase B can restore them.
-    fn redistribute(&mut self, excess: f64, stats: &mut StepStats) -> Vec<(f64, u64)> {
+    /// recomputing until stable.  Every popped (unadjusted value, item)
+    /// pair is pushed to the reused `popped_scratch` buffer (cleared on
+    /// entry) so phase B can restore them without allocating.
+    fn redistribute(&mut self, excess: f64, stats: &mut StepStats) {
         let mut eta_left = excess;
-        let mut popped_all: Vec<(f64, u64)> = Vec::new();
+        self.popped_scratch.clear();
         loop {
             stats.loop_rounds += 1;
             let m = self.z.len();
@@ -373,7 +419,7 @@ impl LazySimplex {
                 self.f_tilde[ii] = ZERO_SENTINEL;
                 self.in_z[ii] = false;
                 self.z_key[ii] = f64::NAN;
-                popped_all.push((v, i));
+                self.popped_scratch.push((v, i));
                 stats.removed += 1;
                 any = true;
             }
@@ -382,24 +428,30 @@ impl LazySimplex {
                 break;
             }
         }
-        popped_all
     }
 
     /// Subtract rho from every stored coefficient and reset it to zero —
-    /// restores full float precision.  O(N log N), triggered every
+    /// restores full float precision.  One O(N log N) sort of the reused
+    /// scratch run plus an O(N) bulk tree rebuild (the old path re-keyed
+    /// the tree one insert at a time), triggered every
     /// ~`rebase_threshold / eta` requests.
     fn rebase(&mut self) {
         let rho = self.rho;
-        let mut z = OrdTree::new();
+        let mut scratch = std::mem::take(&mut self.rebase_scratch);
+        scratch.clear();
         for i in 0..self.n {
             if self.in_z[i] {
                 self.capture(i);
                 self.f_tilde[i] -= rho;
-                z.insert(self.f_tilde[i], i as u64);
+                scratch.push(FlatTree::key_of(self.f_tilde[i], i as u64));
                 self.z_key[i] = self.f_tilde[i];
             }
         }
-        self.z = z;
+        // Item-indexed collection order is arbitrary in key space; one
+        // sort produces the run the bulk build consumes.
+        scratch.sort_unstable();
+        self.z.rebuild_from_sorted_keys(&scratch);
+        self.rebase_scratch = scratch;
         self.rho = 0.0;
         if let Some(sh) = &mut self.shadow {
             // Keep frozen reads consistent: shadowed values were captured

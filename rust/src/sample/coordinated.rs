@@ -20,7 +20,7 @@
 
 use crate::proj::LazySimplex;
 use crate::util::fxhash::hash2;
-use crate::util::OrdTree;
+use crate::util::FlatTree;
 
 /// Replacement accounting for one UPDATESAMPLE call.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -39,7 +39,16 @@ pub struct CoordinatedSampler {
     occupancy: usize,
     /// d_i = f~_i - p_i for every cached item (key must mirror the tree).
     d_key: Vec<f64>,
-    d: OrdTree,
+    d: FlatTree,
+    /// Reused per-batch buffer for newly admitted (key, item) pairs —
+    /// sorted once and fed to `FlatTree::insert_sorted` (no per-batch
+    /// allocation at steady state).
+    add_scratch: Vec<(f64, u64)>,
+    /// Reused sorted-run buffer for the O(occupancy) rebuilds
+    /// (`shift_keys` on re-base, `resample_all` on redraw).
+    key_scratch: Vec<u128>,
+    /// Times a scratch buffer had to grow (see `LazySimplex::scratch_grows`).
+    scratch_grows: u64,
 }
 
 impl CoordinatedSampler {
@@ -54,7 +63,10 @@ impl CoordinatedSampler {
             cached: vec![false; n],
             occupancy: 0,
             d_key: vec![f64::NAN; n],
-            d: OrdTree::new(),
+            d: FlatTree::new(),
+            add_scratch: Vec::new(),
+            key_scratch: Vec::new(),
+            scratch_grows: 0,
         };
         s.resample_all(lazy);
         s
@@ -93,8 +105,15 @@ impl CoordinatedSampler {
     pub fn update(&mut self, lazy: &LazySimplex, requested: &[u64]) -> SampleStats {
         let mut stats = SampleStats::default();
         let rho = lazy.rho();
+        let scratch_cap = self.add_scratch.capacity();
 
         // Group 1 (lines 1-8): requested items — their f~ changed.
+        // Admissions are staged in `add_scratch` and inserted as one
+        // sorted batch below: every staged key is >= rho (the admission
+        // test), so deferring past the flag updates cannot change what
+        // the Group-3 sweep pops, and the sorted run lets consecutive
+        // tree descents share their upper-level cache lines.
+        self.add_scratch.clear();
         for &j in requested {
             let ji = j as usize;
             let p_j = self.p(j);
@@ -110,7 +129,7 @@ impl CoordinatedSampler {
                         // skipping the 2 tree ops here behaviorally
                         // identical to Algorithm 3's eager re-key.
                     } else if ft - rho >= p_j {
-                        self.d.insert(key, j);
+                        self.add_scratch.push((key, j));
                         self.d_key[ji] = key;
                         self.cached[ji] = true;
                         self.occupancy += 1;
@@ -129,6 +148,16 @@ impl CoordinatedSampler {
                     }
                 }
             }
+        }
+        if !self.add_scratch.is_empty() {
+            self.add_scratch
+                .sort_unstable_by_key(|&(v, i)| FlatTree::key_of(v, i));
+            let inserted = self.d.insert_sorted(&self.add_scratch);
+            debug_assert_eq!(inserted, self.add_scratch.len());
+            let _ = inserted;
+        }
+        if self.add_scratch.capacity() > scratch_cap {
+            self.scratch_grows += 1;
         }
 
         // Group 3 (lines 9-10): cached items crossed by the threshold.
@@ -157,15 +186,26 @@ impl CoordinatedSampler {
 
     /// Shift every stored key by `-shift` — must be called when the owning
     /// [`LazySimplex`] re-bases (its `f_tilde` values all dropped by
-    /// `shift`).  O(occupancy · log N).
+    /// `shift`).  O(occupancy): one in-order sweep into the reused scratch
+    /// run, then a bulk rebuild of the tree in place (the old path
+    /// re-inserted every key at O(log N) each).
     pub fn shift_keys(&mut self, shift: f64) {
-        let mut d = OrdTree::new();
+        let mut keys = std::mem::take(&mut self.key_scratch);
+        keys.clear();
         for (k, i) in self.d.iter() {
             let nk = k - shift;
-            d.insert(nk, i);
+            keys.push(FlatTree::key_of(nk, i));
             self.d_key[i as usize] = nk;
         }
-        self.d = d;
+        // Subtracting one constant preserves value order except when two
+        // distinct values round to the same f64 — then the item-id tie
+        // break may locally reorder the packed keys.  Sort only in that
+        // (rare) case.
+        if !keys.windows(2).all(|w| w[0] < w[1]) {
+            keys.sort_unstable();
+        }
+        self.d.rebuild_from_sorted_keys(&keys);
+        self.key_scratch = keys;
     }
 
     /// Redraw the permanent random numbers (paper §5.1: "may periodically
@@ -192,9 +232,10 @@ impl CoordinatedSampler {
     }
 
     fn resample_all(&mut self, lazy: &LazySimplex) {
-        self.d.clear();
         self.occupancy = 0;
         let rho = lazy.rho();
+        let mut keys = std::mem::take(&mut self.key_scratch);
+        keys.clear();
         for i in 0..self.n as u64 {
             let ii = i as usize;
             self.cached[ii] = false;
@@ -203,13 +244,25 @@ impl CoordinatedSampler {
                 let p_i = self.p(i);
                 if ft - rho >= p_i {
                     let key = ft - p_i;
-                    self.d.insert(key, i);
+                    keys.push(FlatTree::key_of(key, i));
                     self.d_key[ii] = key;
                     self.cached[ii] = true;
                     self.occupancy += 1;
                 }
             }
         }
+        // Keys are item-ordered here, arbitrary in key space: sort once,
+        // then bulk-build (O(C log C + C) vs C individual O(log C) inserts
+        // plus their rebalancing traffic).
+        keys.sort_unstable();
+        self.d.rebuild_from_sorted_keys(&keys);
+        self.key_scratch = keys;
+    }
+
+    /// Times a scratch buffer had to grow (see
+    /// `LazySimplex::scratch_grows`); exported via `Diag`.
+    pub fn scratch_grows(&self) -> u64 {
+        self.scratch_grows
     }
 
     /// Test/debug-only exhaustive consistency check against the fractional

@@ -60,16 +60,23 @@ impl RunResult {
 }
 
 /// Replay `trace` through `policy`.
-pub fn run(policy: &mut dyn Policy, trace: &Trace, cfg: &RunConfig) -> RunResult {
+///
+/// Generic over the concrete policy type (with a `?Sized` bound so
+/// `&mut dyn Policy` callers keep working): passing a concrete policy —
+/// e.g. [`crate::policies::AnyPolicy`] — monomorphizes the per-request
+/// inner loop and removes the vtable call per request (DESIGN.md §7).
+pub fn run<P: Policy + ?Sized>(policy: &mut P, trace: &Trace, cfg: &RunConfig) -> RunResult {
     run_source(policy, &mut TraceSource::new(trace), cfg)
 }
 
 /// Replay a streaming `source` through `policy` in one pass — requests
 /// are consumed as they are produced and never buffered, so the horizon
-/// is bounded by the source, not by RAM.
-pub fn run_source(
-    policy: &mut dyn Policy,
-    source: &mut dyn RequestSource,
+/// is bounded by the source, not by RAM.  Generic over both the policy
+/// and the source (see [`run`]); trait-object callers still compile via
+/// the `?Sized` bounds.
+pub fn run_source<P: Policy + ?Sized, S: RequestSource + ?Sized>(
+    policy: &mut P,
+    source: &mut S,
     cfg: &RunConfig,
 ) -> RunResult {
     let window = cfg.window.max(1);

@@ -1,0 +1,362 @@
+//! Hot-path microbench suite behind `ogb-cache bench` and
+//! `benches/hotpath.rs` — the per-PR perf record of the request path
+//! (DESIGN.md §7, EXPERIMENTS.md §Perf iter 4).
+//!
+//! For every policy × catalog-size × cache-size cell the suite replays a
+//! pre-generated Zipf request vector through a *monomorphized*
+//! [`AnyPolicy`] loop and reports, per request:
+//!
+//! * **ns/request** — median over repetitions of the timed replay (the
+//!   request vector is generated outside the timed region, so the number
+//!   is pure policy cost, no RNG);
+//! * **pops/request** — ordered-tree removals (projection zero-crossings
+//!   plus sampler evictions) from `Diag` deltas, the paper's amortized
+//!   O(1) claim;
+//! * **allocs/request** — heap allocations from the counting global
+//!   allocator ([`crate::util::bench::alloc_count`]); the steady-state
+//!   contract is **0**.  Reported as `null` when the embedding binary did
+//!   not install the counting allocator.
+//!
+//! Results land in machine-readable `BENCH_hotpath.json` next to PR 1's
+//! `BENCH_stream.json`, so every future PR has a baseline to beat; the
+//! CI bench-smoke job keeps the emission path from rotting.
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::policies::{self, BuildOpts, Policy};
+use crate::util::bench::{alloc_count, black_box, print_table, BenchResult};
+use crate::util::csv::json::Json;
+use crate::util::{Xoshiro256pp, Zipf};
+
+/// Grid and measurement configuration.
+#[derive(Debug, Clone)]
+pub struct HotpathConfig {
+    /// policy names accepted by `policies::build`
+    pub policies: Vec<String>,
+    /// catalog sizes N
+    pub ns: Vec<usize>,
+    /// cache sizes as a percentage of the catalog
+    pub cache_pcts: Vec<f64>,
+    /// requests per replay (one warm-up replay + `reps` timed replays)
+    pub requests: usize,
+    /// timed repetitions (median reported)
+    pub reps: usize,
+    /// batch size B handed to batched policies
+    pub batch: usize,
+    /// workload skew
+    pub zipf_s: f64,
+    pub seed: u64,
+    /// override of the lazy projection's re-base threshold
+    pub rebase_threshold: Option<f64>,
+    /// marks the tiny CI configuration in the report
+    pub smoke: bool,
+}
+
+impl Default for HotpathConfig {
+    fn default() -> Self {
+        Self {
+            policies: vec!["ogb".into()],
+            // the acceptance grid: OGB at N = 1e4 and 1e6
+            ns: vec![10_000, 1_000_000],
+            cache_pcts: vec![1.0, 10.0],
+            requests: 1_000_000,
+            reps: 3,
+            batch: 1,
+            zipf_s: 0.9,
+            seed: 42,
+            rebase_threshold: None,
+            smoke: false,
+        }
+    }
+}
+
+impl HotpathConfig {
+    /// Tiny single-repetition configuration for the CI smoke job.
+    pub fn smoke() -> Self {
+        Self {
+            policies: vec!["ogb".into(), "lru".into()],
+            ns: vec![2_000],
+            cache_pcts: vec![5.0],
+            requests: 20_000,
+            reps: 1,
+            smoke: true,
+            ..Self::default()
+        }
+    }
+}
+
+/// One grid cell's measurements.
+#[derive(Debug, Clone)]
+pub struct HotpathRow {
+    pub policy: String,
+    pub n: usize,
+    pub c: usize,
+    pub cache_pct: f64,
+    pub ns_per_request: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    /// projection removals + sampler evictions per timed request
+    pub pops_per_request: f64,
+    pub removed_per_request: f64,
+    pub evictions_per_request: f64,
+    /// None when the counting allocator is not installed in this binary
+    pub allocs_per_request: Option<f64>,
+    /// scratch-buffer growths during the timed phase (0 = allocation-free)
+    pub scratch_grows: u64,
+    /// requests in the timed phase (reps × requests)
+    pub requests_timed: u64,
+}
+
+/// Whole-suite outcome.
+#[derive(Debug, Clone)]
+pub struct HotpathResult {
+    pub rows: Vec<HotpathRow>,
+    pub requests_per_rep: usize,
+    pub reps: usize,
+    pub batch: usize,
+    pub zipf_s: f64,
+    pub seed: u64,
+    pub smoke: bool,
+    pub alloc_counter_active: bool,
+    pub wall_s: f64,
+}
+
+impl HotpathResult {
+    /// Render the aligned console table.
+    pub fn print(&self) {
+        let results: Vec<BenchResult> = self
+            .rows
+            .iter()
+            .map(|r| BenchResult {
+                name: format!(
+                    "{:<14} N={:<9} C={:<8}",
+                    r.policy, r.n, r.c
+                ),
+                ns_per_op: r.ns_per_request,
+                min_ns: r.min_ns,
+                max_ns: r.max_ns,
+                ops: r.requests_timed,
+            })
+            .collect();
+        print_table("request hot path: ns/request (median over reps)", &results);
+        println!(
+            "\n{:<14} {:>10} {:>10} {:>14} {:>16} {:>14}",
+            "policy", "N", "C", "pops/req", "allocs/req", "scratch_grows"
+        );
+        for r in &self.rows {
+            println!(
+                "{:<14} {:>10} {:>10} {:>14.4} {:>16} {:>14}",
+                r.policy,
+                r.n,
+                r.c,
+                r.pops_per_request,
+                match r.allocs_per_request {
+                    Some(a) => format!("{a:.6}"),
+                    None => "n/a".to_string(),
+                },
+                r.scratch_grows
+            );
+        }
+        if !self.alloc_counter_active {
+            println!(
+                "(allocs/request unavailable: this binary does not install the \
+                 counting allocator — run `ogb-cache bench` or `cargo bench --bench hotpath`)"
+            );
+        }
+    }
+
+    /// Machine-readable perf snapshot (`BENCH_hotpath.json`): the numbers
+    /// future PRs regress against (convention: BENCH_*.json at the repo
+    /// root, one file per benchmark family, committed trajectory).
+    pub fn write_json<P: AsRef<Path>>(&self, path: P) -> Result<PathBuf> {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("policy", Json::Str(r.policy.clone())),
+                    ("n", Json::Num(r.n as f64)),
+                    ("c", Json::Num(r.c as f64)),
+                    ("cache_pct", Json::Num(r.cache_pct)),
+                    ("ns_per_request", Json::Num(r.ns_per_request)),
+                    ("min_ns", Json::Num(r.min_ns)),
+                    ("max_ns", Json::Num(r.max_ns)),
+                    (
+                        "requests_per_sec",
+                        Json::Num(1e9 / r.ns_per_request.max(1e-9)),
+                    ),
+                    ("pops_per_request", Json::Num(r.pops_per_request)),
+                    ("removed_per_request", Json::Num(r.removed_per_request)),
+                    ("evictions_per_request", Json::Num(r.evictions_per_request)),
+                    (
+                        "allocs_per_request",
+                        match r.allocs_per_request {
+                            Some(a) => Json::Num(a),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("scratch_grows", Json::Num(r.scratch_grows as f64)),
+                    ("requests_timed", Json::Num(r.requests_timed as f64)),
+                ])
+            })
+            .collect();
+        let j = Json::obj(vec![
+            ("experiment", Json::Str("hotpath".into())),
+            ("requests_per_rep", Json::Num(self.requests_per_rep as f64)),
+            ("reps", Json::Num(self.reps as f64)),
+            ("batch", Json::Num(self.batch as f64)),
+            ("zipf_s", Json::Num(self.zipf_s)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("smoke", Json::Bool(self.smoke)),
+            (
+                "alloc_counter_active",
+                Json::Bool(self.alloc_counter_active),
+            ),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("rows", Json::Arr(rows)),
+        ]);
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("mkdir -p {}", dir.display()))?;
+            }
+        }
+        std::fs::write(&path, j.render() + "\n")
+            .with_context(|| format!("write {}", path.display()))?;
+        Ok(path)
+    }
+}
+
+/// Run the suite: one warm-up replay plus `reps` timed replays per cell.
+pub fn run_hotpath(cfg: &HotpathConfig) -> Result<HotpathResult> {
+    ensure!(!cfg.policies.is_empty(), "bench needs at least one policy");
+    ensure!(!cfg.ns.is_empty(), "bench needs at least one catalog size");
+    ensure!(
+        !cfg.cache_pcts.is_empty(),
+        "bench needs at least one cache size"
+    );
+    ensure!(cfg.requests > 0 && cfg.reps > 0, "empty measurement");
+    let wall0 = Instant::now();
+    let alloc_counter_active = alloc_count::active();
+    let mut rows = Vec::new();
+
+    for &n in &cfg.ns {
+        // One request vector per catalog size, generated outside every
+        // timed region (the replay then measures pure policy cost).
+        let zipf = Zipf::new(n as u64, cfg.zipf_s);
+        let mut rng = Xoshiro256pp::seed_from(cfg.seed ^ (n as u64).rotate_left(17));
+        let reqs: Vec<u64> = (0..cfg.requests).map(|_| zipf.sample(&mut rng)).collect();
+
+        for name in &cfg.policies {
+            for &pct in &cfg.cache_pcts {
+                let c = ((n as f64 * pct / 100.0) as usize).clamp(1, n);
+                let horizon = cfg.requests * (cfg.reps + 1);
+                let mut opts = BuildOpts::new(horizon, cfg.batch, cfg.seed);
+                opts.rebase_threshold = cfg.rebase_threshold;
+                let mut policy = policies::build(name, n, c, &opts, None)
+                    .with_context(|| format!("bench policy `{name}`"))?;
+
+                // Warm-up replay: reaches steady state and sizes every
+                // scratch buffer before anything is measured.
+                for &r in &reqs {
+                    black_box(policy.request(r));
+                }
+
+                let mut samples: Vec<f64> = Vec::with_capacity(cfg.reps);
+                let d0 = policy.diag();
+                let a0 = alloc_count::current();
+                for _ in 0..cfg.reps {
+                    let t0 = Instant::now();
+                    for &r in &reqs {
+                        black_box(policy.request(r));
+                    }
+                    // pre-reserved push: no allocation inside the window
+                    samples.push(t0.elapsed().as_nanos() as f64);
+                }
+                let allocs = alloc_count::current() - a0;
+                let d1 = policy.diag();
+
+                samples.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+                let timed = (cfg.reps * cfg.requests) as u64;
+                let per_req = |ns: f64| ns / cfg.requests as f64;
+                let removed = (d1.removed_coeffs - d0.removed_coeffs) as f64 / timed as f64;
+                let evicted = (d1.sample_evictions - d0.sample_evictions) as f64 / timed as f64;
+                rows.push(HotpathRow {
+                    policy: name.clone(),
+                    n,
+                    c,
+                    cache_pct: pct,
+                    ns_per_request: per_req(samples[samples.len() / 2]),
+                    min_ns: per_req(samples[0]),
+                    max_ns: per_req(*samples.last().unwrap()),
+                    pops_per_request: removed + evicted,
+                    removed_per_request: removed,
+                    evictions_per_request: evicted,
+                    allocs_per_request: alloc_counter_active
+                        .then(|| allocs as f64 / timed as f64),
+                    scratch_grows: d1.scratch_grows - d0.scratch_grows,
+                    requests_timed: timed,
+                });
+            }
+        }
+    }
+
+    Ok(HotpathResult {
+        rows,
+        requests_per_rep: cfg.requests,
+        reps: cfg.reps,
+        batch: cfg.batch,
+        zipf_s: cfg.zipf_s,
+        seed: cfg.seed,
+        smoke: cfg.smoke,
+        alloc_counter_active,
+        wall_s: wall0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_suite_measures_and_writes_json() {
+        let mut cfg = HotpathConfig::smoke();
+        cfg.requests = 5_000; // keep the unit test quick
+        let r = run_hotpath(&cfg).unwrap();
+        assert_eq!(r.rows.len(), 2);
+        for row in &r.rows {
+            assert!(row.ns_per_request > 0.0, "{}", row.policy);
+            assert!(row.pops_per_request >= 0.0);
+            assert_eq!(row.c, 100);
+        }
+        // OGB's steady-state scratch buffers must not grow mid-measurement
+        let ogb = r.rows.iter().find(|r| r.policy == "ogb").unwrap();
+        assert_eq!(ogb.scratch_grows, 0, "hot path grew a scratch buffer");
+        // the library test harness does not install the counting allocator
+        if !r.alloc_counter_active {
+            assert!(ogb.allocs_per_request.is_none());
+        }
+        let dir = std::env::temp_dir().join("ogb_hotpath_test");
+        let p = r.write_json(dir.join("BENCH_hotpath.json")).unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert!(text.contains("\"experiment\":\"hotpath\""));
+        assert!(text.contains("\"ns_per_request\""));
+        assert!(text.contains("\"pops_per_request\""));
+        assert!(text.contains("\"allocs_per_request\""));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn bad_configs_rejected() {
+        let mut cfg = HotpathConfig::smoke();
+        cfg.policies.clear();
+        assert!(run_hotpath(&cfg).is_err());
+        let mut cfg = HotpathConfig::smoke();
+        cfg.policies = vec!["bogus".into()];
+        assert!(run_hotpath(&cfg).is_err());
+    }
+}

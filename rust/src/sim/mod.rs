@@ -2,13 +2,16 @@
 //! through a policy collecting the paper's metrics — windowed and
 //! cumulative hit ratio, occupancy samples, removed-coefficient rates,
 //! wall-clock throughput — plus regret accounting against OPT (Eq. (1)),
-//! including the streaming one-pass [`StreamingOpt`], and the parallel
-//! policy × cache-size [`sweep`] runner.
+//! including the streaming one-pass [`StreamingOpt`], the parallel
+//! policy × cache-size [`sweep`] runner, and the request [`hotpath`]
+//! microbench suite behind `ogb-cache bench` / `BENCH_hotpath.json`.
 
 pub mod engine;
+pub mod hotpath;
 pub mod regret;
 pub mod sweep;
 
 pub use engine::{run, run_source, RunConfig, RunResult};
+pub use hotpath::{run_hotpath, HotpathConfig, HotpathResult, HotpathRow};
 pub use regret::{regret_series, RegretPoint, StreamingOpt};
 pub use sweep::{run_sweep, SweepCell, SweepConfig, SweepResult};

@@ -26,7 +26,7 @@ use std::time::Instant;
 use anyhow::{ensure, Context, Result};
 
 use crate::log_info;
-use crate::policies::{self, Opt, Policy};
+use crate::policies::{self, AnyPolicy, BuildOpts, Opt};
 use crate::sim::engine::{run_source, RunConfig};
 use crate::sim::regret::StreamingOpt;
 use crate::trace::stream::SourceSpec;
@@ -48,6 +48,9 @@ pub struct SweepConfig {
     pub threads: usize,
     /// cap on replayed requests per cell (0 = full source horizon)
     pub max_requests: usize,
+    /// override of the lazy projection's numerical re-base threshold
+    /// (None = LazySimplex default)
+    pub rebase_threshold: Option<f64>,
 }
 
 impl Default for SweepConfig {
@@ -61,6 +64,7 @@ impl Default for SweepConfig {
             seed: 42,
             threads: 0,
             max_requests: 0,
+            rebase_threshold: None,
         }
     }
 }
@@ -338,15 +342,19 @@ fn run_cell(
     opt: &StreamingOpt,
 ) -> Result<SweepCell> {
     let mut source = spec.build(cfg.seed)?;
-    let mut policy: Box<dyn Policy> = if name == "opt" {
+    // Concrete enum dispatch: the replay loop below monomorphizes over
+    // `AnyPolicy` instead of paying a vtable call per request.
+    let mut policy: AnyPolicy = if name == "opt" {
         // hindsight allocation from the shared streaming OPT pass
-        Box::new(Opt::from_items(opt.top_c(c).into_iter().map(u64::from), c))
+        AnyPolicy::Opt(Opt::from_items(opt.top_c(c).into_iter().map(u64::from), c))
     } else {
-        policies::by_name(name, catalog, c, t_total, cfg.batch, cfg.seed, None)
+        let mut opts = BuildOpts::new(t_total, cfg.batch, cfg.seed);
+        opts.rebase_threshold = cfg.rebase_threshold;
+        policies::build(name, catalog, c, &opts, None)
             .with_context(|| format!("sweep policy `{name}`"))?
     };
     let r = run_source(
-        policy.as_mut(),
+        &mut policy,
         source.as_mut(),
         &RunConfig {
             window: t_total.max(1),
@@ -381,6 +389,7 @@ mod tests {
             seed: 7,
             threads: 2,
             max_requests: 0,
+            rebase_threshold: None,
         }
     }
 

@@ -86,6 +86,71 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Heap-allocation counting for the allocs/request column of
+/// `BENCH_hotpath.json` and the DESIGN.md §7 zero-allocation contract.
+///
+/// [`alloc_count::CountingAlloc`] wraps the system allocator with one
+/// relaxed atomic increment per `alloc`/`realloc` — cheap enough to leave
+/// installed in the `ogb-cache` binary and the bench targets:
+///
+/// ```ignore
+/// #[global_allocator]
+/// static ALLOC: ogb_cache::util::bench::alloc_count::CountingAlloc =
+///     ogb_cache::util::bench::alloc_count::CountingAlloc;
+/// ```
+///
+/// Binaries that do not install it (e.g. the library test harness) simply
+/// never move the counter; [`alloc_count::active`] probes whether counting
+/// is live so reports can mark the column as unavailable instead of
+/// printing a misleading 0.
+pub mod alloc_count {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+    /// System-allocator wrapper counting every `alloc`/`alloc_zeroed`/
+    /// `realloc` call (frees are not counted: the hot-path contract is
+    /// about acquiring memory).
+    pub struct CountingAlloc;
+
+    unsafe impl GlobalAlloc for CountingAlloc {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            System.alloc(layout)
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout)
+        }
+
+        unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            System.alloc_zeroed(layout)
+        }
+
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            System.realloc(ptr, layout, new_size)
+        }
+    }
+
+    /// Total allocations observed so far (0 forever when the counting
+    /// allocator is not installed as `#[global_allocator]`).
+    pub fn current() -> u64 {
+        ALLOCS.load(Ordering::Relaxed)
+    }
+
+    /// Whether allocation counting is live in this binary: performs a
+    /// probe heap allocation and checks that the counter moved.
+    pub fn active() -> bool {
+        let before = current();
+        let probe = super::black_box(Box::new(0xA110Cu64));
+        drop(probe);
+        current() > before
+    }
+}
+
 /// Peak resident-set size of this process in bytes (Linux `VmHWM` from
 /// `/proc/self/status`; 0 where unavailable).  A cheap proxy for "did the
 /// streaming path actually avoid materializing the trace" — recorded in

@@ -1,0 +1,951 @@
+//! Flat arena B+-tree — the ordered multiset behind both O(log N) claims
+//! of the paper (Algorithm 2's positive-coefficient set `z`, Algorithm 3's
+//! difference set `d`), replacing the `BTreeSet<u128>`-backed `OrdTree` of
+//! earlier revisions (now surviving only as the reference model in
+//! `rust/tests/flattree_model.rs`).
+//!
+//! Why a purpose-built tree (EXPERIMENTS.md §Perf iter 4):
+//!
+//! * **contiguous arenas** — nodes live in plain `Vec`s addressed by `u32`
+//!   indices with an SoA key/child layout, so a descent touches a handful
+//!   of predictable cache lines instead of chasing heap pointers;
+//! * **O(N) bulk build** ([`FlatTree::rebuild_from_sorted_keys`]) — init
+//!   (`LazySimplex::new_uniform`), numerical rebase and the sampler's
+//!   rebuilds fill leaves left-to-right from a sorted run instead of
+//!   performing N one-at-a-time O(log N) inserts;
+//! * **allocation-free drains** — [`FlatTree::pop_if_below`] is the
+//!   hot-loop primitive (the projection's redistribution and the
+//!   sampler's eviction sweep call it directly because they interleave
+//!   stale-key revalidation and re-insertion between pops); the
+//!   [`FlatTree::drain_below`] cursor and [`FlatTree::pop_below_into`]
+//!   wrap it for callers that drain unconditionally into a reused
+//!   scratch buffer.  None of them allocate;
+//! * **batched [`FlatTree::insert_sorted`]** — the sampler's per-batch
+//!   re-keying inserts a sorted run, so consecutive descents share their
+//!   upper-level cache lines.
+//!
+//! Entries are `(value: f64, item: u64)` pairs packed into a single
+//! `u128` — the [`OrdF64`] total-order bits in the high word, the item id
+//! in the low word — so every node search is a branch-friendly `u128`
+//! compare (EXPERIMENTS.md §Perf iter 1) and ties on value are broken by
+//! id, fully supporting duplicate values across distinct items.
+//!
+//! Deletion is *free-at-empty* (no borrow/merge rebalancing): a leaf or
+//! inner node is unlinked only when it empties, and the root collapses
+//! while it has a single child.  Search/insert stay O(height); the height
+//! never grows except at a root split (which requires a full root), so it
+//! remains O(log N) for any realistic insert/delete mix while keeping the
+//! delete path a short shift-left.  Routers are *min-key separators*: for
+//! child `i >= 1`, `keys[i]` satisfies `max(subtree(i-1)) < keys[i] <=
+//! min(subtree(i))`; the slot-0 key is never compared (child 0 is the
+//! catch-all for keys below `keys[1]`), which is what lets pops at the
+//! left edge skip all router maintenance.
+
+use super::ordf64::OrdF64;
+
+/// Max keys per leaf (512 B of keys = 8 cache lines).
+const LEAF_B: usize = 32;
+/// Max children per inner node (256 B keys + 64 B children).
+const INNER_B: usize = 16;
+/// Bulk-build fill targets (¾ full: headroom before the first splits).
+const BULK_LEAF_FILL: usize = 24;
+const BULK_INNER_FILL: usize = 12;
+/// Upper bound on the root-to-leaf path length.  Height only grows at a
+/// root split, which needs INNER_B live children; even adversarial
+/// fill/drain churn cannot push the height past ~log_8(total inserts).
+const MAX_HEIGHT: usize = 24;
+
+#[inline(always)]
+fn enc(value: f64, item: u64) -> u128 {
+    ((OrdF64::new(value).bits() as u128) << 64) | item as u128
+}
+
+#[inline(always)]
+fn dec(key: u128) -> (f64, u64) {
+    (OrdF64::from_bits((key >> 64) as u64).get(), key as u64)
+}
+
+/// Fixed-size root-to-leaf descent record (inner node, child index).
+type Path = ([(u32, u32); MAX_HEIGHT], usize);
+
+/// Ordered multiset of `(value, item-id)` pairs over a flat node arena.
+#[derive(Debug, Clone)]
+pub struct FlatTree {
+    len: usize,
+    root: u32,
+    /// number of inner levels above the leaves (0 = root is a leaf)
+    height: u32,
+    /// set when the structure holds its post-`new()` lazy-empty state and
+    /// no leaf has been allocated yet
+    unrooted: bool,
+    // --- leaf arena (SoA) ---
+    leaf_len: Vec<u8>,
+    leaf_keys: Vec<[u128; LEAF_B]>,
+    leaf_free: Vec<u32>,
+    // --- inner arena (SoA) ---
+    inner_len: Vec<u8>,
+    inner_keys: Vec<[u128; INNER_B]>,
+    inner_child: Vec<[u32; INNER_B]>,
+    inner_free: Vec<u32>,
+}
+
+impl Default for FlatTree {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FlatTree {
+    pub fn new() -> Self {
+        Self {
+            len: 0,
+            root: 0,
+            height: 0,
+            unrooted: true,
+            leaf_len: Vec::new(),
+            leaf_keys: Vec::new(),
+            leaf_free: Vec::new(),
+            inner_len: Vec::new(),
+            inner_keys: Vec::new(),
+            inner_child: Vec::new(),
+            inner_free: Vec::new(),
+        }
+    }
+
+    /// Build from an ascending run of `(value, item)` pairs in O(N).
+    /// Debug-asserts strict ascending order of the packed keys.
+    pub fn from_sorted_pairs(pairs: &[(f64, u64)]) -> Self {
+        let mut t = Self::new();
+        let keys: Vec<u128> = pairs.iter().map(|&(v, i)| enc(v, i)).collect();
+        debug_assert!(keys.windows(2).all(|w| w[0] < w[1]), "unsorted bulk run");
+        t.rebuild_from_sorted_keys(&keys);
+        t
+    }
+
+    /// Pack a `(value, item)` pair into its ordered `u128` key — exposed
+    /// so owners can assemble sorted runs for the bulk-build paths
+    /// without materializing `(f64, u64)` tuples twice.
+    #[inline(always)]
+    pub fn key_of(value: f64, item: u64) -> u128 {
+        enc(value, item)
+    }
+
+    /// Decode a packed key back into its `(value, item)` pair.
+    #[inline(always)]
+    pub fn decode(key: u128) -> (f64, u64) {
+        dec(key)
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Arena footprint diagnostics: (live leaves, live inner nodes).
+    /// A rooted-but-empty tree reports one (empty) live leaf.
+    pub fn node_counts(&self) -> (usize, usize) {
+        (
+            self.leaf_len.len() - self.leaf_free.len(),
+            self.inner_len.len() - self.inner_free.len(),
+        )
+    }
+
+    // ---------------------------------------------------------- arenas --
+
+    fn alloc_leaf(&mut self) -> u32 {
+        if let Some(i) = self.leaf_free.pop() {
+            self.leaf_len[i as usize] = 0;
+            i
+        } else {
+            self.leaf_len.push(0);
+            self.leaf_keys.push([0; LEAF_B]);
+            (self.leaf_len.len() - 1) as u32
+        }
+    }
+
+    fn alloc_inner(&mut self) -> u32 {
+        if let Some(i) = self.inner_free.pop() {
+            self.inner_len[i as usize] = 0;
+            i
+        } else {
+            self.inner_len.push(0);
+            self.inner_keys.push([0; INNER_B]);
+            self.inner_child.push([0; INNER_B]);
+            (self.inner_len.len() - 1) as u32
+        }
+    }
+
+    /// Materialize the empty-root leaf the first time the tree is touched
+    /// (keeps `new()` allocation-free so `Default`/`new` stay cheap).
+    #[inline]
+    fn ensure_root(&mut self) {
+        if self.unrooted {
+            self.unrooted = false;
+            self.root = self.alloc_leaf();
+        }
+    }
+
+    // ---------------------------------------------------------- search --
+
+    /// Index of the child covering `key`: the last `i` with
+    /// `keys[i] <= key`, never comparing slot 0 (the catch-all).
+    #[inline]
+    fn locate_child(&self, node: u32, key: u128) -> usize {
+        let n = self.inner_len[node as usize] as usize;
+        let keys = &self.inner_keys[node as usize];
+        let mut idx = 0;
+        for (i, k) in keys.iter().enumerate().take(n).skip(1) {
+            if *k <= key {
+                idx = i;
+            } else {
+                break;
+            }
+        }
+        idx
+    }
+
+    /// Position of `key` in a leaf: `Ok(pos)` if present, `Err(pos)` for
+    /// its insertion point.
+    #[inline]
+    fn leaf_search(&self, leaf: u32, key: u128) -> Result<usize, usize> {
+        let n = self.leaf_len[leaf as usize] as usize;
+        self.leaf_keys[leaf as usize][..n].binary_search(&key)
+    }
+
+    /// Descend to the leaf covering `key`, recording the inner path.
+    #[inline]
+    fn descend(&self, key: u128, path: &mut Path) -> u32 {
+        let mut node = self.root;
+        for _ in 0..self.height {
+            let ci = self.locate_child(node, key);
+            path.0[path.1] = (node, ci as u32);
+            path.1 += 1;
+            node = self.inner_child[node as usize][ci];
+        }
+        node
+    }
+
+    // --------------------------------------------------------- mutators --
+
+    /// Insert `(value, item)`. Returns false if this exact pair was present.
+    #[inline]
+    pub fn insert(&mut self, value: f64, item: u64) -> bool {
+        self.insert_key(enc(value, item))
+    }
+
+    fn insert_key(&mut self, key: u128) -> bool {
+        self.ensure_root();
+        let mut path: Path = ([(0, 0); MAX_HEIGHT], 0);
+        let leaf = self.descend(key, &mut path);
+        let pos = match self.leaf_search(leaf, key) {
+            Ok(_) => return false,
+            Err(p) => p,
+        };
+        self.len += 1;
+        let n = self.leaf_len[leaf as usize] as usize;
+        if n < LEAF_B {
+            let ks = &mut self.leaf_keys[leaf as usize];
+            ks.copy_within(pos..n, pos + 1);
+            ks[pos] = key;
+            self.leaf_len[leaf as usize] = (n + 1) as u8;
+            return true;
+        }
+        // Split the full leaf: upper half moves to a fresh right sibling.
+        let right = self.alloc_leaf();
+        let mid = LEAF_B / 2;
+        let src = self.leaf_keys[leaf as usize];
+        self.leaf_keys[right as usize][..LEAF_B - mid].copy_from_slice(&src[mid..]);
+        self.leaf_len[leaf as usize] = mid as u8;
+        self.leaf_len[right as usize] = (LEAF_B - mid) as u8;
+        let sep = self.leaf_keys[right as usize][0];
+        if pos <= mid {
+            let ks = &mut self.leaf_keys[leaf as usize];
+            ks.copy_within(pos..mid, pos + 1);
+            ks[pos] = key;
+            self.leaf_len[leaf as usize] += 1;
+        } else {
+            let ks = &mut self.leaf_keys[right as usize];
+            let rpos = pos - mid;
+            ks.copy_within(rpos..LEAF_B - mid, rpos + 1);
+            ks[rpos] = key;
+            self.leaf_len[right as usize] += 1;
+        }
+        self.promote(&mut path, sep, right);
+        true
+    }
+
+    /// Walk the recorded path upward inserting the `(sep, new_child)`
+    /// entry produced by a split, splitting parents (and ultimately the
+    /// root) as needed.
+    fn promote(&mut self, path: &mut Path, mut key: u128, mut new_child: u32) {
+        while path.1 > 0 {
+            path.1 -= 1;
+            let (p, ci) = path.0[path.1];
+            let ipos = ci as usize + 1;
+            let n = self.inner_len[p as usize] as usize;
+            if n < INNER_B {
+                let ks = &mut self.inner_keys[p as usize];
+                ks.copy_within(ipos..n, ipos + 1);
+                ks[ipos] = key;
+                let cs = &mut self.inner_child[p as usize];
+                cs.copy_within(ipos..n, ipos + 1);
+                cs[ipos] = new_child;
+                self.inner_len[p as usize] = (n + 1) as u8;
+                return;
+            }
+            // Split the full inner node.
+            let r = self.alloc_inner();
+            let mid = INNER_B / 2;
+            let (pk, pc) = (self.inner_keys[p as usize], self.inner_child[p as usize]);
+            self.inner_keys[r as usize][..INNER_B - mid].copy_from_slice(&pk[mid..]);
+            self.inner_child[r as usize][..INNER_B - mid].copy_from_slice(&pc[mid..]);
+            self.inner_len[p as usize] = mid as u8;
+            self.inner_len[r as usize] = (INNER_B - mid) as u8;
+            let rsep = self.inner_keys[r as usize][0];
+            if ipos <= mid {
+                let ks = &mut self.inner_keys[p as usize];
+                ks.copy_within(ipos..mid, ipos + 1);
+                ks[ipos] = key;
+                let cs = &mut self.inner_child[p as usize];
+                cs.copy_within(ipos..mid, ipos + 1);
+                cs[ipos] = new_child;
+                self.inner_len[p as usize] += 1;
+            } else {
+                let rpos = ipos - mid;
+                let rn = INNER_B - mid;
+                let ks = &mut self.inner_keys[r as usize];
+                ks.copy_within(rpos..rn, rpos + 1);
+                ks[rpos] = key;
+                let cs = &mut self.inner_child[r as usize];
+                cs.copy_within(rpos..rn, rpos + 1);
+                cs[rpos] = new_child;
+                self.inner_len[r as usize] += 1;
+            }
+            key = rsep;
+            new_child = r;
+        }
+        // Root split: new root with the old root and the promoted child.
+        let nr = self.alloc_inner();
+        let old = self.root;
+        let min0 = if self.height == 0 {
+            self.leaf_keys[old as usize][0]
+        } else {
+            self.inner_keys[old as usize][0]
+        };
+        self.inner_keys[nr as usize][0] = min0;
+        self.inner_child[nr as usize][0] = old;
+        self.inner_keys[nr as usize][1] = key;
+        self.inner_child[nr as usize][1] = new_child;
+        self.inner_len[nr as usize] = 2;
+        self.root = nr;
+        self.height += 1;
+    }
+
+    /// Shift a key out of a leaf and prune emptied ancestors
+    /// (free-at-empty), collapsing a single-child root.
+    fn remove_at(&mut self, leaf: u32, pos: usize, path: &mut Path) {
+        let n = self.leaf_len[leaf as usize] as usize;
+        self.leaf_keys[leaf as usize].copy_within(pos + 1..n, pos);
+        self.leaf_len[leaf as usize] = (n - 1) as u8;
+        self.len -= 1;
+        if self.leaf_len[leaf as usize] == 0 && self.height > 0 {
+            self.leaf_free.push(leaf);
+            loop {
+                if path.1 == 0 {
+                    // The whole tree emptied through the root.
+                    debug_assert_eq!(self.len, 0);
+                    self.root = self.alloc_leaf();
+                    self.height = 0;
+                    return;
+                }
+                path.1 -= 1;
+                let (p, ci) = path.0[path.1];
+                let m = self.inner_len[p as usize] as usize;
+                let ci = ci as usize;
+                self.inner_keys[p as usize].copy_within(ci + 1..m, ci);
+                self.inner_child[p as usize].copy_within(ci + 1..m, ci);
+                self.inner_len[p as usize] = (m - 1) as u8;
+                if self.inner_len[p as usize] > 0 {
+                    break;
+                }
+                self.inner_free.push(p);
+            }
+        }
+        while self.height > 0 && self.inner_len[self.root as usize] == 1 {
+            let old = self.root;
+            self.root = self.inner_child[old as usize][0];
+            self.inner_free.push(old);
+            self.height -= 1;
+        }
+    }
+
+    /// Remove `(value, item)`. The caller must pass the exact stored value.
+    #[inline]
+    pub fn remove(&mut self, value: f64, item: u64) -> bool {
+        if self.len == 0 {
+            return false;
+        }
+        let key = enc(value, item);
+        let mut path: Path = ([(0, 0); MAX_HEIGHT], 0);
+        let leaf = self.descend(key, &mut path);
+        match self.leaf_search(leaf, key) {
+            Ok(pos) => {
+                self.remove_at(leaf, pos, &mut path);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    #[inline]
+    pub fn contains(&self, value: f64, item: u64) -> bool {
+        if self.len == 0 {
+            return false;
+        }
+        let key = enc(value, item);
+        let mut path: Path = ([(0, 0); MAX_HEIGHT], 0);
+        let leaf = self.descend(key, &mut path);
+        self.leaf_search(leaf, key).is_ok()
+    }
+
+    /// Smallest (value, item) or None.
+    #[inline]
+    pub fn min(&self) -> Option<(f64, u64)> {
+        if self.len == 0 {
+            return None;
+        }
+        let mut node = self.root;
+        for _ in 0..self.height {
+            node = self.inner_child[node as usize][0];
+        }
+        Some(dec(self.leaf_keys[node as usize][0]))
+    }
+
+    /// Largest (value, item) or None.
+    #[inline]
+    pub fn max(&self) -> Option<(f64, u64)> {
+        if self.len == 0 {
+            return None;
+        }
+        let mut node = self.root;
+        for _ in 0..self.height {
+            node = self.inner_child[node as usize][self.inner_len[node as usize] as usize - 1];
+        }
+        Some(dec(self.leaf_keys[node as usize][self.leaf_len[node as usize] as usize - 1]))
+    }
+
+    /// Pop the smallest element if its value is strictly below `threshold`.
+    /// Allocation-free; O(height).
+    #[inline]
+    pub fn pop_if_below(&mut self, threshold: f64) -> Option<(f64, u64)> {
+        if self.len == 0 {
+            return None;
+        }
+        // any id below the threshold value encodes to < enc(threshold, 0)
+        let limit = enc(threshold, 0);
+        let mut path: Path = ([(0, 0); MAX_HEIGHT], 0);
+        let mut node = self.root;
+        for _ in 0..self.height {
+            path.0[path.1] = (node, 0);
+            path.1 += 1;
+            node = self.inner_child[node as usize][0];
+        }
+        let k = self.leaf_keys[node as usize][0];
+        if k >= limit {
+            return None;
+        }
+        self.remove_at(node, 0, &mut path);
+        Some(dec(k))
+    }
+
+    /// Cursor-style drain: lazily pops every element strictly below
+    /// `threshold` in ascending order, allocation-free.  Dropping the
+    /// cursor early leaves the remaining elements in place.
+    pub fn drain_below(&mut self, threshold: f64) -> DrainBelow<'_> {
+        DrainBelow {
+            tree: self,
+            threshold,
+        }
+    }
+
+    /// Pop every element with value strictly below `threshold` into a
+    /// caller-owned scratch buffer (appended; not cleared here) — the
+    /// no-allocation replacement for the old `pop_below`.
+    pub fn pop_below_into(&mut self, threshold: f64, out: &mut Vec<(f64, u64)>) {
+        while let Some(e) = self.pop_if_below(threshold) {
+            out.push(e);
+        }
+    }
+
+    /// Pop every element with value strictly below `threshold`.
+    /// Convenience (allocating) form used by tests and examples; hot paths
+    /// use [`FlatTree::pop_below_into`] / [`FlatTree::drain_below`].
+    pub fn pop_below(&mut self, threshold: f64) -> Vec<(f64, u64)> {
+        let mut out = Vec::new();
+        self.pop_below_into(threshold, &mut out);
+        out
+    }
+
+    /// Count elements with value strictly below `threshold` (O(k + log N)).
+    pub fn count_below(&self, threshold: f64) -> usize {
+        let limit = enc(threshold, 0);
+        self.iter_keys().take_while(|&k| k < limit).count()
+    }
+
+    /// Insert an ascending batch of `(value, item)` pairs — the sampler's
+    /// per-batch re-keying path.  Consecutive descents revisit the same
+    /// upper-level nodes, so the batch shares its cache-line traffic.
+    /// Debug-asserts ascending order; returns how many were newly inserted.
+    pub fn insert_sorted(&mut self, pairs: &[(f64, u64)]) -> usize {
+        debug_assert!(
+            pairs
+                .windows(2)
+                .all(|w| enc(w[0].0, w[0].1) < enc(w[1].0, w[1].1)),
+            "insert_sorted needs an ascending run"
+        );
+        let mut added = 0;
+        for &(v, i) in pairs {
+            added += usize::from(self.insert(v, i));
+        }
+        added
+    }
+
+    /// Discard the contents, keeping arena capacity for reuse.
+    pub fn clear(&mut self) {
+        self.leaf_len.clear();
+        self.leaf_keys.clear();
+        self.leaf_free.clear();
+        self.inner_len.clear();
+        self.inner_keys.clear();
+        self.inner_child.clear();
+        self.inner_free.clear();
+        self.len = 0;
+        self.height = 0;
+        self.unrooted = true;
+    }
+
+    /// O(N) bulk build from a strictly ascending run of packed keys
+    /// (see [`FlatTree::key_of`]), reusing the arena allocations: leaves
+    /// are filled left-to-right at ¾ capacity, then each inner level is
+    /// assembled from the (min-key, node) runs of the level below.
+    pub fn rebuild_from_sorted_keys(&mut self, keys: &[u128]) {
+        debug_assert!(
+            keys.windows(2).all(|w| w[0] < w[1]),
+            "bulk build needs a strictly ascending run"
+        );
+        self.clear();
+        self.len = keys.len();
+        if keys.is_empty() {
+            return; // stay lazily unrooted
+        }
+        self.unrooted = false;
+        let n = keys.len();
+        let n_leaves = (n + BULK_LEAF_FILL - 1) / BULK_LEAF_FILL;
+        // (min key, node) runs for the level under construction; two
+        // ping-pong buffers, small (N/24 entries) and short-lived.
+        let mut level: Vec<(u128, u32)> = Vec::with_capacity(n_leaves);
+        let mut next: Vec<(u128, u32)> =
+            Vec::with_capacity((n_leaves + BULK_INNER_FILL - 1) / BULK_INNER_FILL);
+        let mut i = 0;
+        while i < n {
+            let take = BULK_LEAF_FILL.min(n - i);
+            let leaf = self.alloc_leaf();
+            self.leaf_keys[leaf as usize][..take].copy_from_slice(&keys[i..i + take]);
+            self.leaf_len[leaf as usize] = take as u8;
+            level.push((keys[i], leaf));
+            i += take;
+        }
+        while level.len() > 1 {
+            next.clear();
+            let m = level.len();
+            let mut i = 0;
+            while i < m {
+                let rem = m - i;
+                let mut take = BULK_INNER_FILL.min(rem);
+                if rem - take == 1 {
+                    take -= 1; // avoid a trailing single-child node
+                }
+                let node = self.alloc_inner();
+                for (j, &(k, c)) in level[i..i + take].iter().enumerate() {
+                    self.inner_keys[node as usize][j] = k;
+                    self.inner_child[node as usize][j] = c;
+                }
+                self.inner_len[node as usize] = take as u8;
+                next.push((level[i].0, node));
+                i += take;
+            }
+            std::mem::swap(&mut level, &mut next);
+            self.height += 1;
+        }
+        self.root = level[0].1;
+    }
+
+    // -------------------------------------------------------- iteration --
+
+    /// Iterate in ascending order (allocation-free, fixed-depth stack).
+    pub fn iter(&self) -> Iter<'_> {
+        Iter {
+            keys: self.iter_keys(),
+        }
+    }
+
+    fn iter_keys(&self) -> IterKeys<'_> {
+        let mut it = IterKeys {
+            tree: self,
+            stack: [(0, 0); MAX_HEIGHT],
+            depth: 0,
+            leaf: 0,
+            pos: 0,
+            live: self.len > 0,
+        };
+        if it.live {
+            let mut node = self.root;
+            for _ in 0..self.height {
+                it.stack[it.depth] = (node, 0);
+                it.depth += 1;
+                node = self.inner_child[node as usize][0];
+            }
+            it.leaf = node;
+        }
+        it
+    }
+}
+
+struct IterKeys<'a> {
+    tree: &'a FlatTree,
+    stack: [(u32, u32); MAX_HEIGHT],
+    depth: usize,
+    leaf: u32,
+    pos: usize,
+    live: bool,
+}
+
+impl Iterator for IterKeys<'_> {
+    type Item = u128;
+
+    fn next(&mut self) -> Option<u128> {
+        if !self.live {
+            return None;
+        }
+        let t = self.tree;
+        loop {
+            if self.pos < t.leaf_len[self.leaf as usize] as usize {
+                let k = t.leaf_keys[self.leaf as usize][self.pos];
+                self.pos += 1;
+                return Some(k);
+            }
+            // ascend to the first ancestor with an unvisited sibling
+            while self.depth > 0 {
+                let (node, ci) = self.stack[self.depth - 1];
+                if (ci + 1) < t.inner_len[node as usize] as u32 {
+                    break;
+                }
+                self.depth -= 1;
+            }
+            if self.depth == 0 {
+                self.live = false;
+                return None;
+            }
+            let (node, ci) = self.stack[self.depth - 1];
+            self.stack[self.depth - 1] = (node, ci + 1);
+            let mut n = t.inner_child[node as usize][(ci + 1) as usize];
+            for _ in self.depth..t.height as usize {
+                self.stack[self.depth] = (n, 0);
+                self.depth += 1;
+                n = t.inner_child[n as usize][0];
+            }
+            self.leaf = n;
+            self.pos = 0;
+        }
+    }
+}
+
+/// Ascending `(value, item)` iterator over a [`FlatTree`].
+pub struct Iter<'a> {
+    keys: IterKeys<'a>,
+}
+
+impl Iterator for Iter<'_> {
+    type Item = (f64, u64);
+
+    #[inline]
+    fn next(&mut self) -> Option<(f64, u64)> {
+        self.keys.next().map(dec)
+    }
+}
+
+/// Allocation-free draining cursor returned by [`FlatTree::drain_below`].
+pub struct DrainBelow<'a> {
+    tree: &'a mut FlatTree,
+    threshold: f64,
+}
+
+impl Iterator for DrainBelow<'_> {
+    type Item = (f64, u64);
+
+    #[inline]
+    fn next(&mut self) -> Option<(f64, u64)> {
+        self.tree.pop_if_below(self.threshold)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn insert_remove_min() {
+        let mut t = FlatTree::new();
+        assert!(t.insert(3.0, 1));
+        assert!(t.insert(1.0, 2));
+        assert!(t.insert(2.0, 3));
+        assert!(!t.insert(2.0, 3), "duplicate pair rejected");
+        assert_eq!(t.min(), Some((1.0, 2)));
+        assert_eq!(t.max(), Some((3.0, 1)));
+        assert!(t.remove(1.0, 2));
+        assert!(!t.remove(1.0, 2));
+        assert_eq!(t.min(), Some((2.0, 3)));
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn duplicate_values_distinct_items() {
+        let mut t = FlatTree::new();
+        for i in 0..1000 {
+            assert!(t.insert(0.5, i));
+        }
+        assert_eq!(t.len(), 1000);
+        let popped = t.pop_below(0.6);
+        assert_eq!(popped.len(), 1000);
+        // ties on value drain in item order
+        assert!(popped.windows(2).all(|w| w[0].1 < w[1].1));
+        assert!(t.is_empty());
+        assert!(t.pop_if_below(1.0).is_none(), "empty-tree pop");
+    }
+
+    #[test]
+    fn pop_below_is_exact_partition() {
+        let mut t = FlatTree::new();
+        let mut rng = Xoshiro256pp::seed_from(1);
+        let vals: Vec<f64> = (0..5000).map(|_| rng.next_f64()).collect();
+        for (i, &v) in vals.iter().enumerate() {
+            t.insert(v, i as u64);
+        }
+        let thr = 0.3;
+        let below = t.pop_below(thr);
+        assert_eq!(below.len(), vals.iter().filter(|&&v| v < thr).count());
+        assert!(below.iter().all(|&(v, _)| v < thr));
+        assert!(t.iter().all(|(v, _)| v >= thr));
+        assert_eq!(below.len() + t.len(), 5000);
+    }
+
+    #[test]
+    fn pop_below_boundary_is_strict() {
+        let mut t = FlatTree::new();
+        t.insert(1.0, 1);
+        assert!(t.pop_if_below(1.0).is_none(), "strictly below only");
+        assert!(t.pop_if_below(1.0 + 1e-15).is_some());
+    }
+
+    #[test]
+    fn negative_values_order() {
+        let mut t = FlatTree::new();
+        t.insert(-1.0, 1);
+        t.insert(-2.0, 2);
+        t.insert(0.5, 3);
+        t.insert(-0.0, 4);
+        assert_eq!(t.min(), Some((-2.0, 2)));
+        let below = t.pop_below(0.0);
+        // -0.0 encodes strictly below +0.0, so it is drained too
+        assert_eq!(below.len(), 3);
+    }
+
+    #[test]
+    fn count_below_matches_pop() {
+        let mut t = FlatTree::new();
+        let mut rng = Xoshiro256pp::seed_from(2);
+        for i in 0..2000 {
+            t.insert(rng.next_f64() * 10.0, i);
+        }
+        let c = t.count_below(5.0);
+        assert_eq!(c, t.pop_below(5.0).len());
+    }
+
+    #[test]
+    fn drain_below_cursor_stops_early() {
+        let mut t = FlatTree::new();
+        for i in 0..100u64 {
+            t.insert(i as f64, i);
+        }
+        let first3: Vec<u64> = t.drain_below(50.0).take(3).map(|(_, i)| i).collect();
+        assert_eq!(first3, vec![0, 1, 2]);
+        assert_eq!(t.len(), 97, "early drop leaves the rest in place");
+        assert_eq!(t.drain_below(50.0).count(), 47);
+        assert_eq!(t.len(), 50);
+    }
+
+    #[test]
+    fn pop_below_into_reuses_scratch() {
+        let mut t = FlatTree::new();
+        let mut scratch = Vec::with_capacity(64);
+        for round in 0..10 {
+            for i in 0..50u64 {
+                t.insert(i as f64 * 0.01, i);
+            }
+            scratch.clear();
+            let cap = scratch.capacity();
+            t.pop_below_into(1.0, &mut scratch);
+            assert_eq!(scratch.len(), 50);
+            assert_eq!(scratch.capacity(), cap, "round {round} grew the scratch");
+        }
+    }
+
+    #[test]
+    fn bulk_build_matches_incremental() {
+        let sizes = [0usize, 1, 2, 23, 24, 25, 288, 289, 3455, 7777];
+        for &n in &sizes {
+            let pairs: Vec<(f64, u64)> = (0..n as u64).map(|i| (i as f64 * 0.01, i)).collect();
+            let t = FlatTree::from_sorted_pairs(&pairs);
+            assert_eq!(t.len(), n);
+            let got: Vec<(f64, u64)> = t.iter().collect();
+            assert_eq!(got, pairs, "n={n}");
+            let mut inc = FlatTree::new();
+            for &(v, i) in &pairs {
+                inc.insert(v, i);
+            }
+            assert_eq!(inc.iter().collect::<Vec<_>>(), got, "n={n}");
+        }
+    }
+
+    #[test]
+    fn bulk_build_then_mutate() {
+        let pairs: Vec<(f64, u64)> = (0..500u64).map(|i| (i as f64, i)).collect();
+        let mut t = FlatTree::from_sorted_pairs(&pairs);
+        let mut rng = Xoshiro256pp::seed_from(7);
+        for step in 0..2000u64 {
+            let v = rng.next_f64() * 600.0 - 50.0;
+            t.insert(v, 1000 + step);
+        }
+        for i in (0..500u64).step_by(2) {
+            assert!(t.remove(i as f64, i));
+        }
+        assert_eq!(t.len(), 500 - 250 + 2000);
+        let all: Vec<(f64, u64)> = t.iter().collect();
+        assert!(all
+            .windows(2)
+            .all(|w| FlatTree::key_of(w[0].0, w[0].1) < FlatTree::key_of(w[1].0, w[1].1)));
+    }
+
+    #[test]
+    fn rebuild_reuses_arena() {
+        let mut t = FlatTree::new();
+        let keys: Vec<u128> = (0..5000u64).map(|i| FlatTree::key_of(i as f64, i)).collect();
+        t.rebuild_from_sorted_keys(&keys);
+        let leaf_cap = t.leaf_keys.capacity();
+        t.rebuild_from_sorted_keys(&keys);
+        assert_eq!(t.leaf_keys.capacity(), leaf_cap, "rebuild must reuse arenas");
+        assert_eq!(t.len(), 5000);
+    }
+
+    #[test]
+    fn insert_sorted_batch() {
+        let mut t = FlatTree::new();
+        t.insert(5.0, 5);
+        let batch: Vec<(f64, u64)> = vec![(1.0, 1), (2.0, 2), (5.0, 5), (9.0, 9)];
+        assert_eq!(t.insert_sorted(&batch), 3, "existing pair skipped");
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.min(), Some((1.0, 1)));
+        assert_eq!(t.max(), Some((9.0, 9)));
+    }
+
+    #[test]
+    fn eviction_churn_left_drain_right_insert() {
+        // The cache pattern: drain the smallest keys while inserting on
+        // the right — stresses free-at-empty and root collapse.
+        let mut t = FlatTree::new();
+        for i in 0..2000u64 {
+            t.insert(i as f64, i);
+        }
+        for round in 0..30_000u64 {
+            t.pop_if_below(f64::INFINITY);
+            t.insert(2000.0 + round as f64, round);
+        }
+        assert_eq!(t.len(), 2000);
+        let (leaves, inners) = t.node_counts();
+        assert!(leaves <= 2 * (2000 / (LEAF_B / 2)) + 4, "leaf arena leak: {leaves}");
+        assert!(inners < leaves, "inner arena leak: {inners} vs {leaves} leaves");
+        let all: Vec<(f64, u64)> = t.iter().collect();
+        assert_eq!(all.len(), 2000);
+        assert!(all.windows(2).all(|w| w[0].0 < w[1].0));
+    }
+
+    #[test]
+    fn randomized_against_sorted_vec_model() {
+        let mut t = FlatTree::new();
+        let mut model: Vec<(u64, f64)> = Vec::new();
+        let mut rng = Xoshiro256pp::seed_from(3);
+        for step in 0..20_000u64 {
+            let op = rng.next_below(6);
+            match op {
+                0 | 1 => {
+                    let v = rng.next_f64();
+                    let id = step;
+                    t.insert(v, id);
+                    model.push((id, v));
+                }
+                2 => {
+                    if !model.is_empty() {
+                        let k = rng.next_below(model.len() as u64) as usize;
+                        let (id, v) = model.swap_remove(k);
+                        assert!(t.remove(v, id));
+                        assert!(!t.remove(v, id));
+                    }
+                }
+                3 => {
+                    let thr = rng.next_f64();
+                    let popped = t.pop_below(thr);
+                    let expect: Vec<u64> = model
+                        .iter()
+                        .filter(|&&(_, v)| v < thr)
+                        .map(|&(id, _)| id)
+                        .collect();
+                    model.retain(|&(_, v)| v >= thr);
+                    let mut got: Vec<u64> = popped.iter().map(|&(_, i)| i).collect();
+                    let mut exp = expect;
+                    got.sort_unstable();
+                    exp.sort_unstable();
+                    assert_eq!(got, exp);
+                }
+                4 => {
+                    let m = t.min().map(|(v, _)| v);
+                    let mm = model
+                        .iter()
+                        .map(|&(_, v)| v)
+                        .fold(f64::INFINITY, f64::min);
+                    match m {
+                        None => assert!(model.is_empty()),
+                        Some(v) => assert_eq!(v, mm),
+                    }
+                }
+                _ => {
+                    if step % 97 == 0 {
+                        // full-order check via the iterator
+                        let mut exp: Vec<u128> =
+                            model.iter().map(|&(id, v)| FlatTree::key_of(v, id)).collect();
+                        exp.sort_unstable();
+                        let got: Vec<u128> =
+                            t.iter().map(|(v, id)| FlatTree::key_of(v, id)).collect();
+                        assert_eq!(got, exp);
+                    }
+                }
+            }
+            assert_eq!(t.len(), model.len());
+        }
+    }
+}

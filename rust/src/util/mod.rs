@@ -8,14 +8,14 @@ pub mod args;
 pub mod bench;
 pub mod check;
 pub mod csv;
+pub mod flattree;
 pub mod fxhash;
 pub mod logger;
 pub mod ordf64;
-pub mod ordtree;
 pub mod rng;
 pub mod stats;
 
+pub use flattree::FlatTree;
 pub use fxhash::{FxHashMap, FxHashSet};
 pub use ordf64::OrdF64;
-pub use ordtree::OrdTree;
 pub use rng::{SplitMix64, Xoshiro256pp, Zipf};

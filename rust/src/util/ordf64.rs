@@ -26,7 +26,7 @@ impl OrdF64 {
         OrdF64(key)
     }
 
-    /// The monotone key encoding (used by `OrdTree`'s packed-u128 keys).
+    /// The monotone key encoding (used by `FlatTree`'s packed-u128 keys).
     #[inline]
     pub fn bits(self) -> u64 {
         self.0

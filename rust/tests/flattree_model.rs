@@ -1,0 +1,272 @@
+//! Differential property tests: `FlatTree` (the flat arena B+-tree on
+//! the request hot path, DESIGN.md §7) against a `BTreeSet<u128>`
+//! reference model — the old `util::ordtree::OrdTree` implementation,
+//! which survives here as the executable specification.
+//!
+//! Randomized op sequences cover insert / remove / pop_below / bulk-build
+//! / iteration, plus the NaN-free f64 edge cases (±0.0, denormals, huge
+//! magnitudes), duplicate values across distinct items, and empty-tree
+//! pops.
+
+use std::collections::BTreeSet;
+
+use ogb_cache::util::check::{check, Gen};
+use ogb_cache::util::{FlatTree, OrdF64, Xoshiro256pp};
+
+/// The removed `OrdTree`, verbatim: ordered multiset of (value, item)
+/// pairs over `BTreeSet<u128>` with the same packed-key encoding.
+#[derive(Debug, Clone, Default)]
+struct RefTree {
+    set: BTreeSet<u128>,
+}
+
+fn enc(value: f64, item: u64) -> u128 {
+    ((OrdF64::new(value).bits() as u128) << 64) | item as u128
+}
+
+fn dec(key: u128) -> (f64, u64) {
+    (OrdF64::from_bits((key >> 64) as u64).get(), key as u64)
+}
+
+impl RefTree {
+    fn len(&self) -> usize {
+        self.set.len()
+    }
+
+    fn insert(&mut self, value: f64, item: u64) -> bool {
+        self.set.insert(enc(value, item))
+    }
+
+    fn remove(&mut self, value: f64, item: u64) -> bool {
+        self.set.remove(&enc(value, item))
+    }
+
+    fn contains(&self, value: f64, item: u64) -> bool {
+        self.set.contains(&enc(value, item))
+    }
+
+    fn min(&self) -> Option<(f64, u64)> {
+        self.set.first().map(|&k| dec(k))
+    }
+
+    fn max(&self) -> Option<(f64, u64)> {
+        self.set.last().map(|&k| dec(k))
+    }
+
+    fn pop_if_below(&mut self, threshold: f64) -> Option<(f64, u64)> {
+        let &k = self.set.first()?;
+        if k < enc(threshold, 0) {
+            self.set.remove(&k);
+            Some(dec(k))
+        } else {
+            None
+        }
+    }
+
+    fn iter(&self) -> impl Iterator<Item = (f64, u64)> + '_ {
+        self.set.iter().map(|&k| dec(k))
+    }
+}
+
+/// Value generator biased toward collisions and edge cases.
+fn gen_value(g: &mut Gen) -> f64 {
+    match g.u64_below(10) {
+        0 => 0.0,
+        1 => -0.0,
+        2 => 0.5, // heavy duplicate mass
+        3 => -1.0,
+        4 => 1e-300,  // denormal-adjacent tiny
+        5 => -1e300,  // huge negative
+        6 => 1e300,   // huge positive
+        7 => g.f64_in(-1e-9, 1e-9),
+        _ => g.f64_in(-100.0, 100.0),
+    }
+}
+
+fn assert_same_contents(t: &FlatTree, m: &RefTree, ctx: &str) {
+    assert_eq!(t.len(), m.len(), "{ctx}: len");
+    let got: Vec<(u64, u64)> = t.iter().map(|(v, i)| (v.to_bits(), i)).collect();
+    let exp: Vec<(u64, u64)> = m.iter().map(|(v, i)| (v.to_bits(), i)).collect();
+    assert_eq!(got, exp, "{ctx}: in-order contents");
+    assert_eq!(
+        t.min().map(|(v, i)| (v.to_bits(), i)),
+        m.min().map(|(v, i)| (v.to_bits(), i)),
+        "{ctx}: min"
+    );
+    assert_eq!(
+        t.max().map(|(v, i)| (v.to_bits(), i)),
+        m.max().map(|(v, i)| (v.to_bits(), i)),
+        "{ctx}: max"
+    );
+}
+
+#[test]
+fn randomized_ops_match_reference_model() {
+    check("flattree_equals_btreeset_model", |g: &mut Gen| {
+        let steps = g.usize_in(200, 1500);
+        let item_space = g.u64_below(2000) + 1;
+        let mut t = FlatTree::new();
+        let mut m = RefTree::default();
+        for step in 0..steps {
+            match g.u64_below(100) {
+                0..=44 => {
+                    let (v, i) = (gen_value(g), g.u64_below(item_space));
+                    assert_eq!(t.insert(v, i), m.insert(v, i), "step {step}: insert");
+                }
+                45..=64 => {
+                    // remove: half the time an existing element
+                    let (v, i) = if g.bool_p(0.5) && m.len() > 0 {
+                        let k = g.usize_in(0, m.len());
+                        m.iter().nth(k).unwrap()
+                    } else {
+                        (gen_value(g), g.u64_below(item_space))
+                    };
+                    assert_eq!(t.remove(v, i), m.remove(v, i), "step {step}: remove");
+                }
+                65..=79 => {
+                    let thr = gen_value(g);
+                    loop {
+                        let a = t.pop_if_below(thr);
+                        let b = m.pop_if_below(thr);
+                        assert_eq!(
+                            a.map(|(v, i)| (v.to_bits(), i)),
+                            b.map(|(v, i)| (v.to_bits(), i)),
+                            "step {step}: pop_below({thr})"
+                        );
+                        if a.is_none() {
+                            break;
+                        }
+                    }
+                }
+                80..=84 => {
+                    // bulk rebuild from the model's sorted contents
+                    let keys: Vec<u128> = m.set.iter().copied().collect();
+                    t.rebuild_from_sorted_keys(&keys);
+                    assert_same_contents(&t, &m, "after bulk rebuild");
+                }
+                85..=89 => {
+                    let (v, i) = (gen_value(g), g.u64_below(item_space));
+                    assert_eq!(t.contains(v, i), m.contains(v, i), "step {step}: contains");
+                }
+                90..=93 => {
+                    // drain everything below a threshold via the cursor
+                    let thr = gen_value(g);
+                    let drained: Vec<(u64, u64)> =
+                        t.drain_below(thr).map(|(v, i)| (v.to_bits(), i)).collect();
+                    let mut exp = Vec::new();
+                    while let Some((v, i)) = m.pop_if_below(thr) {
+                        exp.push((v.to_bits(), i));
+                    }
+                    assert_eq!(drained, exp, "step {step}: drain_below");
+                }
+                _ => assert_same_contents(&t, &m, "periodic audit"),
+            }
+            assert_eq!(t.len(), m.len(), "step {step}: len drifted");
+        }
+        assert_same_contents(&t, &m, "final audit");
+    });
+}
+
+#[test]
+fn bulk_build_equals_incremental_build() {
+    check("bulk_build_equals_incremental", |g: &mut Gen| {
+        let n = g.usize_in(1, 4000);
+        let mut m = RefTree::default();
+        let mut pairs = Vec::new();
+        for _ in 0..n {
+            let (v, i) = (gen_value(g), g.u64_below(5000));
+            if m.insert(v, i) {
+                pairs.push((v, i));
+            }
+        }
+        let keys: Vec<u128> = m.set.iter().copied().collect();
+        let mut bulk = FlatTree::new();
+        bulk.rebuild_from_sorted_keys(&keys);
+        let mut inc = FlatTree::new();
+        for &(v, i) in &pairs {
+            assert!(inc.insert(v, i));
+        }
+        assert_same_contents(&bulk, &m, "bulk");
+        assert_same_contents(&inc, &m, "incremental");
+        // and from_sorted_pairs agrees too
+        let sorted: Vec<(f64, u64)> = m.iter().collect();
+        let fp = FlatTree::from_sorted_pairs(&sorted);
+        assert_same_contents(&fp, &m, "from_sorted_pairs");
+    });
+}
+
+#[test]
+fn duplicate_values_tie_break_on_item() {
+    let mut t = FlatTree::new();
+    let mut m = RefTree::default();
+    for i in (0..500u64).rev() {
+        assert!(t.insert(0.25, i));
+        assert!(m.insert(0.25, i));
+        assert!(!t.insert(0.25, i), "exact duplicate must be rejected");
+    }
+    assert_same_contents(&t, &m, "dups");
+    // drains in item order on equal values
+    let ids: Vec<u64> = t.drain_below(0.3).map(|(_, i)| i).collect();
+    assert_eq!(ids, (0..500).collect::<Vec<u64>>());
+    assert!(t.is_empty());
+}
+
+#[test]
+fn empty_tree_pops_and_queries() {
+    let mut t = FlatTree::new();
+    assert_eq!(t.pop_if_below(f64::INFINITY), None);
+    assert_eq!(t.min(), None);
+    assert_eq!(t.max(), None);
+    assert!(!t.remove(1.0, 1));
+    assert!(!t.contains(1.0, 1));
+    assert_eq!(t.iter().count(), 0);
+    assert_eq!(t.pop_below(1.0), vec![]);
+    // drain to empty, then pop again
+    t.insert(0.5, 1);
+    assert_eq!(t.pop_below(1.0).len(), 1);
+    assert_eq!(t.pop_if_below(1.0), None);
+    // clear on an already-empty tree
+    t.clear();
+    assert_eq!(t.len(), 0);
+    assert_eq!(t.pop_if_below(f64::INFINITY), None);
+}
+
+#[test]
+fn negative_zero_orders_below_positive_zero() {
+    // NaN-free edge case: -0.0 and 0.0 have distinct encodings with a
+    // defined order; both trees must agree.
+    let mut t = FlatTree::new();
+    let mut m = RefTree::default();
+    for (v, i) in [(0.0, 1u64), (-0.0, 1), (0.0, 2), (-0.0, 2)] {
+        assert_eq!(t.insert(v, i), m.insert(v, i));
+    }
+    assert_eq!(t.len(), 4);
+    assert_same_contents(&t, &m, "signed zeros");
+    let below: Vec<u64> = t.drain_below(0.0).map(|(_, i)| i).collect();
+    assert_eq!(below, vec![1, 2], "-0.0 entries sit strictly below +0.0");
+}
+
+#[test]
+fn heavy_churn_keeps_arena_bounded() {
+    // Cache-shaped workload at scale: left-edge drains + re-inserts for
+    // many rounds; the arena must recycle rather than leak.
+    let mut t = FlatTree::new();
+    let mut rng = Xoshiro256pp::seed_from(99);
+    for i in 0..10_000u64 {
+        t.insert(rng.next_f64(), i);
+    }
+    for round in 0..100_000u64 {
+        if let Some((_, i)) = t.pop_if_below(2.0) {
+            t.insert(1.0 + rng.next_f64(), i);
+        }
+        if round % 10_000 == 0 {
+            assert_eq!(t.len(), 10_000);
+        }
+    }
+    let (leaves, inners) = t.node_counts();
+    // 10k keys at >= half-full leaves would be ~625; allow generous slack
+    // for free-at-empty fragmentation, but fail on an actual leak.
+    assert!(leaves < 4_000, "leaf arena leak: {leaves}");
+    assert!(inners < leaves, "inner arena leak: {inners}");
+    assert_eq!(t.iter().count(), 10_000);
+}

@@ -180,6 +180,7 @@ fn sweep_matches_materialized_replay() {
         seed: 21,
         threads: 2,
         max_requests: 0,
+        ..Default::default()
     };
     let sweep = sim::run_sweep(&spec, &cfg).unwrap();
     let trace = materialize(spec.build(21).unwrap().as_mut(), 0);
