@@ -1,96 +1,72 @@
-//! Coordinator throughput: end-to-end requests/second of the sharded cache
-//! service vs shard count (open-loop load), plus closed-loop latency.
-
-use std::sync::Arc;
+//! Serving-engine scenario bench: end-to-end requests/second of the
+//! batched shard pipeline under a *multi-client* load (each client owns
+//! its own SPSC lane per shard), complementing `benches/shards.rs` —
+//! which sweeps the shard axis from a single client — with the
+//! many-producer shape, plus enqueue-to-served latency percentiles.
 
 use ogb_cache::coordinator::{CacheServer, ServerConfig};
 use ogb_cache::util::bench::{fast_mode, print_table, BenchResult};
 use ogb_cache::util::{Xoshiro256pp, Zipf};
 
-fn run_open_loop(shards: usize, requests: usize, clients: usize) -> (f64, f64) {
+fn run_clients(shards: usize, clients: usize, requests: usize) -> (f64, f64, u64, u64) {
     let cfg = ServerConfig {
         catalog: 100_000,
         capacity: 5_000,
         shards,
+        policy: "ogb".into(),
         batch: 64,
         horizon: requests,
-        queue_depth: 8192,
+        queue_depth: 64,
+        clients,
         seed: 3,
+        rebase_threshold: None,
     };
     let catalog = cfg.catalog as u64;
-    let server = Arc::new(CacheServer::start(cfg).expect("server"));
+    let mut server = CacheServer::start(cfg).expect("server");
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();
     for w in 0..clients {
-        let s = server.clone();
+        let mut client = server.take_client().expect("client handle");
         let per = requests / clients;
         handles.push(std::thread::spawn(move || {
             let mut rng = Xoshiro256pp::seed_from(100 + w as u64);
             let dist = Zipf::new(catalog, 0.9);
             for _ in 0..per {
-                s.get_nowait(dist.sample(&mut rng));
+                client.get(dist.sample(&mut rng));
             }
+            client.drain();
         }));
     }
     for h in handles {
         h.join().unwrap();
     }
-    let server = Arc::try_unwrap(server).ok().expect("sole owner");
-    let snap = server.shutdown();
     let secs = t0.elapsed().as_secs_f64();
-    (snap.requests as f64 / secs, snap.hit_ratio())
+    let snap = server.shutdown();
+    (
+        snap.requests as f64 / secs,
+        snap.hit_ratio(),
+        snap.p50_ns(),
+        snap.p99_ns(),
+    )
 }
 
 fn main() {
     let fast = fast_mode();
     let requests = if fast { 200_000 } else { 2_000_000 };
     let mut results = Vec::new();
-    for shards in [1usize, 2, 4, 8] {
-        let (rps, hit) = run_open_loop(shards, requests, 4);
+    for (shards, clients) in [(1usize, 1usize), (2, 1), (4, 1), (4, 2), (8, 4)] {
+        let (rps, hit, p50, p99) = run_clients(shards, clients, requests);
         results.push(BenchResult {
-            name: format!("server open-loop shards={shards} (hit={hit:.3})"),
+            name: format!(
+                "serve shards={shards} clients={clients} (hit={hit:.3} p50={:.1}us p99={:.1}us)",
+                p50 as f64 / 1e3,
+                p99 as f64 / 1e3,
+            ),
             ns_per_op: 1e9 / rps,
             min_ns: 1e9 / rps,
             max_ns: 1e9 / rps,
             ops: requests as u64,
         });
     }
-
-    // closed-loop: per-request round-trip latency with 1 client
-    {
-        let cfg = ServerConfig {
-            catalog: 100_000,
-            capacity: 5_000,
-            shards: 4,
-            batch: 64,
-            horizon: requests,
-            queue_depth: 1024,
-            seed: 4,
-        };
-        let server = CacheServer::start(cfg).expect("server");
-        let client = server.client();
-        let (tx, rx) = std::sync::mpsc::channel();
-        let n_sync = if fast { 5_000 } else { 50_000 };
-        let mut rng = Xoshiro256pp::seed_from(200);
-        let dist = Zipf::new(100_000, 0.9);
-        let t0 = std::time::Instant::now();
-        for _ in 0..n_sync {
-            client.get_with(dist.sample(&mut rng), &tx);
-            let _ = rx.recv();
-        }
-        let per_req = t0.elapsed().as_nanos() as f64 / n_sync as f64;
-        let snap = server.shutdown();
-        results.push(BenchResult {
-            name: format!(
-                "server closed-loop rtt (p99 queue+serve {:.1}us)",
-                snap.latency.percentile_ns(99.0) as f64 / 1e3
-            ),
-            ns_per_op: per_req,
-            min_ns: per_req,
-            max_ns: per_req,
-            ops: n_sync as u64,
-        });
-    }
-
-    print_table("sharded cache service throughput/latency", &results);
+    print_table("sharded serving engine throughput/latency", &results);
 }

@@ -1,0 +1,32 @@
+//! Multi-core scaling bench (`cargo bench --bench shards`) — the tracked
+//! per-PR perf record of the sharded serving engine (DESIGN.md §8).
+//! Thin wrapper over [`ogb_cache::sim::shardbench`]; the same suite backs
+//! `ogb-cache serve --smoke`.
+//!
+//! Installs the counting global allocator so the allocs/request column
+//! (and the shard pipeline's zero-allocation contract) is live, and
+//! honors `OGB_BENCH_FAST=1` (CI smoke) by switching to the tiny grid.
+
+use ogb_cache::sim::shardbench::{run_shardbench, ShardBenchConfig};
+use ogb_cache::util::bench::{alloc_count::CountingAlloc, fast_mode};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = if fast_mode() {
+        ShardBenchConfig::smoke()
+    } else {
+        ShardBenchConfig::default()
+    };
+    let r = run_shardbench(&cfg)?;
+    r.print();
+    let p = r.write_json("BENCH_shard.json")?;
+    eprintln!("\nwrote {}", p.display());
+    anyhow::ensure!(
+        !r.alloc_counter_active || r.steady_allocs_total() == 0,
+        "shard pipeline allocated at steady state: {} allocations",
+        r.steady_allocs_total()
+    );
+    Ok(())
+}

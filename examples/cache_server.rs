@@ -1,8 +1,9 @@
-//! END-TO-END DRIVER: the full system composed — trace generator → router
-//! → sharded OGB cache service (threads, bounded queues, batched sample
-//! updates) → metrics.  Serves a realistic workload (twitter-like bursts
-//! on top of a Zipf core) and reports hit ratio, throughput and latency
-//! percentiles.  This is the run recorded in EXPERIMENTS.md §End-to-end.
+//! END-TO-END DRIVER: the full system composed — trace generator →
+//! partitioned router → batched SPSC shard pipeline (threads, recycled
+//! request batches, bitmap replies) → metrics.  Serves a realistic
+//! workload (twitter-like bursts on top of a Zipf core) and reports hit
+//! ratio, throughput and latency percentiles.  This is the run recorded
+//! in EXPERIMENTS.md §End-to-end.
 //!
 //!     cargo run --release --example cache_server [requests] [shards]
 
@@ -24,60 +25,64 @@ fn main() -> anyhow::Result<()> {
     let clients = 4usize;
 
     // Realistic workload: twitter-like (bursty) requests, pre-generated so
-    // the load generator is not the bottleneck.
+    // the load generators are not the bottleneck.
     let scale = (requests as f64 / 2_000_000.0).clamp(0.05, 10.0);
     let trace = realworld::by_name("twitter", scale, 7).unwrap();
     let catalog = trace.catalog;
     let capacity = catalog / 20;
-    println!(
-        "workload: {} requests over catalog {} (twitter-like bursts)",
-        trace.len().min(requests),
-        catalog
-    );
+    let n_req = trace.len().min(requests);
+    println!("workload: {n_req} requests over catalog {catalog} (twitter-like bursts)");
 
     let cfg = ServerConfig {
         catalog,
         capacity,
         shards,
+        policy: "ogb".into(),
         batch: 64,
-        horizon: requests,
-        queue_depth: 4096,
+        horizon: n_req,
+        queue_depth: 64,
+        clients,
         seed: 1,
+        rebase_threshold: None,
     };
     println!(
-        "server: shards={} capacity={} batch={} queue_depth={}",
+        "server: shards={} capacity={} batch={} queue_depth={} clients={clients}",
         cfg.shards, cfg.capacity, cfg.batch, cfg.queue_depth
     );
-    let server = Arc::new(CacheServer::start(cfg)?);
+    let mut server = CacheServer::start(cfg)?;
 
-    let n_req = trace.len().min(requests);
     let reqs: Arc<Vec<u32>> = Arc::new(trace.requests[..n_req].to_vec());
     let t0 = Instant::now();
     let mut handles = Vec::new();
     for w in 0..clients {
-        let s = server.clone();
+        let mut client = server.take_client()?;
         let reqs = reqs.clone();
         handles.push(std::thread::spawn(move || {
-            // clients stripe the trace to preserve rough request order
+            // clients stripe the trace to preserve rough request order;
+            // each scatters into its own SPSC lane per shard, batches
+            // flush at B, and drain() flushes the partial tails
             let mut i = w;
             while i < reqs.len() {
-                s.get_nowait(reqs[i] as u64);
+                client.get(reqs[i] as u64);
                 i += clients;
             }
+            client.drain();
+            client.stats()
         }));
     }
+    let mut sent = 0u64;
     for h in handles {
-        h.join().map_err(|_| anyhow::anyhow!("client panicked"))?;
+        let stats = h.join().map_err(|_| anyhow::anyhow!("client panicked"))?;
+        anyhow::ensure!(stats.replies == stats.sent, "client lost replies");
+        sent += stats.sent;
     }
     let drive_s = t0.elapsed().as_secs_f64();
     let snap_live = server.snapshot();
     println!(
-        "\nlive snapshot after drive: {} processed / {} sent",
-        snap_live.requests, n_req
+        "\nsnapshot after drive: {} processed / {sent} sent",
+        snap_live.requests
     );
 
-    let server = Arc::try_unwrap(server)
-        .map_err(|_| anyhow::anyhow!("server still referenced"))?;
     let snap = server.shutdown();
     let total_s = t0.elapsed().as_secs_f64();
 
@@ -85,7 +90,7 @@ fn main() -> anyhow::Result<()> {
     println!("requests      : {}", snap.requests);
     println!("hit ratio     : {:.4}", snap.hit_ratio());
     println!("evictions     : {}", snap.evictions);
-    println!("batch updates : {}", snap.batch_updates);
+    println!("batches       : {}", snap.batch_updates);
     println!(
         "throughput    : {:.3e} req/s (drive {:.2}s, total incl. drain {:.2}s)",
         snap.requests as f64 / total_s,
@@ -93,12 +98,12 @@ fn main() -> anyhow::Result<()> {
         total_s
     );
     println!(
-        "latency       : p50={:.1}us p90={:.1}us p99={:.1}us max={:.1}us (enqueue→served)",
-        snap.latency.percentile_ns(50.0) as f64 / 1e3,
-        snap.latency.percentile_ns(90.0) as f64 / 1e3,
-        snap.latency.percentile_ns(99.0) as f64 / 1e3,
+        "latency       : p50={:.1}us p99={:.1}us p999={:.1}us max={:.1}us (enqueue->served)",
+        snap.p50_ns() as f64 / 1e3,
+        snap.p99_ns() as f64 / 1e3,
+        snap.p999_ns() as f64 / 1e3,
         snap.latency.max_ns() as f64 / 1e3,
     );
-    anyhow::ensure!(snap.requests as usize == n_req, "all requests served");
+    anyhow::ensure!(snap.requests == sent, "all requests served");
     Ok(())
 }

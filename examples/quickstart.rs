@@ -14,9 +14,18 @@
 //!     cargo run --release -- bench            # or: cargo bench --bench hotpath
 //!
 //! which emits `BENCH_hotpath.json` next to the sweep's
-//! `BENCH_stream.json`; the committed `BENCH_*.json` snapshots at the
-//! repo root are the perf trajectory each PR measures itself against.
+//! `BENCH_stream.json`.  To scale across cores, the sharded serving
+//! engine (DESIGN.md §8) runs the same policies behind a batched SPSC
+//! shard pipeline — demoed at the end of this example, driven at scale
+//! by `ogb-cache serve`, and measured by
+//!
+//!     cargo run --release -- serve --smoke    # or: cargo bench --bench shards
+//!
+//! which emits `BENCH_shard.json` (req/s by shard count).  The committed
+//! `BENCH_*.json` snapshots at the repo root are the perf trajectory
+//! each PR measures itself against.
 
+use ogb_cache::coordinator::{CacheServer, ServerConfig};
 use ogb_cache::policies::{Lru, Ogb, Opt, Policy};
 use ogb_cache::sim::{run, run_source, RunConfig, StreamingOpt};
 use ogb_cache::trace::stream::gen::ZipfDriftSource;
@@ -86,5 +95,32 @@ fn main() {
         rs.hit_ratio(),
         opt.opt_hits(c) as f64 / t as f64,
         (opt.opt_hits(c) as f64 - rs.total_reward) / t as f64,
+    );
+
+    // Multi-core: the same workload through the sharded serving engine —
+    // the catalog is partitioned across 2 shard threads, requests move
+    // in recycled batches over SPSC rings, replies come back as bitmaps.
+    let mut server = CacheServer::start(ServerConfig {
+        catalog: n,
+        capacity: c,
+        shards: 2,
+        horizon: t,
+        seed: 42,
+        ..Default::default()
+    })
+    .expect("server");
+    let mut client = server.take_client().expect("client");
+    let t0 = std::time::Instant::now();
+    for &req in &trace.requests {
+        client.get(req as u64);
+    }
+    client.drain();
+    drop(client);
+    let snap = server.shutdown();
+    println!(
+        "\nserved (2 shards): hit_ratio={:.4}  {:.2e} req/s  p99 latency={}ns",
+        snap.hit_ratio(),
+        snap.requests as f64 / t0.elapsed().as_secs_f64(),
+        snap.p99_ns(),
     );
 }

@@ -1,0 +1,169 @@
+//! The unit of work of the shard pipeline: a fixed-capacity batch of
+//! shard-local request ids plus a preallocated reply bitmap
+//! (DESIGN.md §8).
+//!
+//! One batch carries up to B requests (the paper's batch parameter — a
+//! full ring drain maps onto one Algorithm 3 UPDATESAMPLE cadence), a
+//! single batch-level enqueue timestamp (replacing the seed's per-request
+//! `Instant`), and one hit bit per slot (replacing the seed's per-request
+//! `Option<Sender<bool>>` reply channel).  Both buffers are allocated
+//! once at construction and recycled through the reverse ring forever
+//! after — the request path never allocates.
+
+use std::time::Instant;
+
+pub struct Batch {
+    enqueued: Instant,
+    /// per-(client, shard) lane sequence number, assigned at flush;
+    /// FIFO rings preserve it end-to-end (asserted in tests)
+    seq: u64,
+    len: u32,
+    /// shard-local item ids; capacity fixed at B
+    items: Box<[u32]>,
+    /// reply bitmap, one bit per slot: 1 = hit
+    hits: Box<[u64]>,
+}
+
+impl Batch {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1 && capacity <= u32::MAX as usize);
+        Self {
+            enqueued: Instant::now(),
+            seq: 0,
+            len: 0,
+            items: vec![0u32; capacity].into_boxed_slice(),
+            // (cap + 63) / 64 bitmap words; div_ceil needs rust >= 1.73
+            hits: vec![0u64; (capacity + 63) / 64].into_boxed_slice(),
+        }
+    }
+
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.items.len()
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn is_full(&self) -> bool {
+        self.len as usize == self.items.len()
+    }
+
+    /// Append a shard-local id (caller checks `is_full` first).
+    #[inline]
+    pub fn push(&mut self, local_item: u32) {
+        debug_assert!(!self.is_full());
+        self.items[self.len as usize] = local_item;
+        self.len += 1;
+    }
+
+    #[inline]
+    pub fn item(&self, i: usize) -> u32 {
+        debug_assert!(i < self.len());
+        self.items[i]
+    }
+
+    /// Filled slots, in scatter order.
+    #[inline]
+    pub fn items(&self) -> &[u32] {
+        &self.items[..self.len as usize]
+    }
+
+    #[inline]
+    pub fn set_hit(&mut self, i: usize) {
+        debug_assert!(i < self.len());
+        self.hits[i / 64] |= 1u64 << (i % 64);
+    }
+
+    #[inline]
+    pub fn hit(&self, i: usize) -> bool {
+        debug_assert!(i < self.len());
+        self.hits[i / 64] >> (i % 64) & 1 == 1
+    }
+
+    /// Number of hit bits set (only slots `< len` are ever set).
+    pub fn hit_count(&self) -> u64 {
+        self.hits.iter().map(|w| w.count_ones() as u64).sum()
+    }
+
+    /// Reset for reuse: clears the length and every hit bit that could
+    /// have been set (words covering the previous fill).
+    pub fn clear(&mut self) {
+        let words = (self.len as usize + 63) / 64;
+        for w in &mut self.hits[..words] {
+            *w = 0;
+        }
+        self.len = 0;
+        self.seq = 0;
+    }
+
+    /// Stamp the batch-level enqueue time (called once at flush — the
+    /// latency recorded per request covers queueing + policy work from
+    /// this instant, like the seed's per-request stamp did).
+    #[inline]
+    pub fn stamp(&mut self) {
+        self.enqueued = Instant::now();
+    }
+
+    #[inline]
+    pub fn enqueued(&self) -> Instant {
+        self.enqueued
+    }
+
+    #[inline]
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    #[inline]
+    pub fn set_seq(&mut self, seq: u64) {
+        self.seq = seq;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fill_mark_and_recycle() {
+        let mut b = Batch::new(70); // spans two bitmap words
+        assert_eq!(b.capacity(), 70);
+        for i in 0..70u32 {
+            assert!(!b.is_full());
+            b.push(i * 3);
+        }
+        assert!(b.is_full());
+        assert_eq!(b.items().len(), 70);
+        for i in (0..70).step_by(2) {
+            b.set_hit(i);
+        }
+        assert_eq!(b.hit_count(), 35);
+        assert!(b.hit(0) && !b.hit(1) && b.hit(68) && !b.hit(69));
+        b.set_seq(7);
+        assert_eq!(b.seq(), 7);
+        b.clear();
+        assert!(b.is_empty());
+        assert_eq!(b.hit_count(), 0);
+        assert_eq!(b.seq(), 0);
+        // reuse after clear behaves like fresh
+        b.push(1);
+        assert_eq!(b.items(), &[1]);
+        assert!(!b.hit(0));
+    }
+
+    #[test]
+    fn stamp_measures_elapsed() {
+        let mut b = Batch::new(4);
+        b.stamp();
+        assert!(b.enqueued().elapsed().as_nanos() < 1_000_000_000);
+    }
+}

@@ -1,24 +1,42 @@
-//! Deployable cache-service coordinator built around the OGB policy —
-//! the L3 "system" wrapper (router → shards → batcher → metrics), shaped
-//! like a production cache front (cf. vllm-project/router):
+//! Sharded serving engine built around the OGB policy — the L3 "system"
+//! wrapper (partitioned router → batched shard pipeline → metrics),
+//! shaped like a production cache front (DESIGN.md §8):
 //!
-//! * [`router`]  — stable hash routing of keys to shard workers;
-//! * [`shard`]   — one OS thread per shard owning an OGB instance and an
-//!   (optional) value store; requests arrive over bounded channels
-//!   (backpressure by construction);
+//! * [`ring`]    — fixed-capacity SPSC ring buffers, the lock-free
+//!   transport of the pipeline (one producer and one consumer per ring,
+//!   by construction);
+//! * [`batch`]   — the unit of work: up to B shard-local request ids +
+//!   a preallocated reply bitmap + one batch-level timestamp, recycled
+//!   through reverse rings so the request path never allocates;
+//! * [`router`]  — stable hash routing plus [`router::Partition`], the
+//!   cached bijection `global id ↔ (shard, dense local id)`;
+//! * [`shard`]   — one OS thread per shard owning a concrete policy
+//!   over its dense local catalog, draining request batches (each full
+//!   batch maps onto one Algorithm 3 UPDATESAMPLE cadence when ring
+//!   B == policy B);
 //! * [`metrics`] — lock-free hit/miss counters + log-bucketed latency
-//!   histograms, snapshot-able while running;
-//! * [`server`]  — lifecycle: spawn, client handles, drain, join.
+//!   histograms (p50/p99/p999), snapshot-able while running;
+//! * [`server`]  — lifecycle: spawn, batching [`ShardedClient`] handles
+//!   (scatter/gather over the partition), drain, join.
 //!
-//! The OGB batch parameter B maps naturally onto the shard request loop:
-//! each shard refreshes its sampled cache every B requests (Algorithm 3),
-//! amortizing update cost exactly as §2.1 motivates.
+//! Regret decomposes across the partition: each shard runs an
+//! independent OGB instance over its own catalog slice with Theorem 3.1
+//! eta on the shard-local horizon, so the per-shard regret bounds sum —
+//! the coordinate-separable structure OMD/OGD caching analyses exploit
+//! (see DESIGN.md §8 for the argument and its batching caveat).
+//!
+//! Entry points: `ogb-cache serve` (streaming scenarios through the
+//! engine), `sim::shardbench` / `benches/shards.rs` (the multi-core
+//! scaling record, `BENCH_shard.json`), `examples/cache_server.rs`.
 
+pub mod batch;
 pub mod metrics;
+pub mod ring;
 pub mod router;
 pub mod server;
 pub mod shard;
 
+pub use batch::Batch;
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use router::Router;
-pub use server::{CacheClient, CacheServer, ServerConfig};
+pub use router::{Partition, Router};
+pub use server::{CacheServer, ClientStats, ServerConfig, ShardedClient};

@@ -1,0 +1,319 @@
+//! Fixed-capacity single-producer/single-consumer ring buffer — the
+//! transport of the batched shard pipeline (DESIGN.md §8).
+//!
+//! Why not `std::sync::mpsc`: the seed coordinator moved one heap-backed
+//! message per request through a `SyncSender`, which costs an allocation
+//! plus a mutex/condvar handshake on every request.  The serving engine
+//! instead moves owned [`super::batch::Batch`]es (B requests at a time)
+//! through this lock-free ring: a push is one slot write plus one
+//! release store, a pop one slot read plus one release store, and the
+//! batch buffers themselves are recycled through a paired reverse ring —
+//! zero steady-state allocations on either side.
+//!
+//! Design: classic Lamport SPSC over a power-of-two slot array.
+//! `head`/`tail` are monotonically increasing (wrapping) counters on
+//! separate cache lines; the producer owns `tail`, the consumer owns
+//! `head`, each reads the other side with `Acquire` and publishes with
+//! `Release`.  Disconnect flags are set on handle drop *after* all prior
+//! operations, so an `Acquire` load of the flag also publishes the final
+//! items (the consumer re-checks `tail` after observing a dead producer
+//! and never loses a message).
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Pad to a cache line so the producer's `tail` and the consumer's
+/// `head` never false-share.
+#[repr(align(64))]
+struct CachePadded<T>(T);
+
+struct Inner<T> {
+    mask: usize,
+    slots: Box<[UnsafeCell<MaybeUninit<T>>]>,
+    /// next write position (owned by the producer)
+    tail: CachePadded<AtomicUsize>,
+    /// next read position (owned by the consumer)
+    head: CachePadded<AtomicUsize>,
+    producer_dead: AtomicBool,
+    consumer_dead: AtomicBool,
+}
+
+// SAFETY: slots are only touched by the single producer (writes at
+// `tail`) and the single consumer (reads at `head`), synchronized by the
+// Release/Acquire pair on the counters; the handles enforce single
+// ownership of each side by not implementing Clone.
+unsafe impl<T: Send> Send for Inner<T> {}
+unsafe impl<T: Send> Sync for Inner<T> {}
+
+impl<T> Drop for Inner<T> {
+    fn drop(&mut self) {
+        // Sole owner at this point: drop every unconsumed item.
+        let head = *self.head.0.get_mut();
+        let tail = *self.tail.0.get_mut();
+        let mut i = head;
+        while i != tail {
+            unsafe { (*self.slots[i & self.mask].get()).assume_init_drop() };
+            i = i.wrapping_add(1);
+        }
+    }
+}
+
+/// Error returned by [`Producer::try_push`]; hands the value back.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// ring full — caller should make progress elsewhere (e.g. reap the
+    /// reverse ring) and retry
+    Full(T),
+    /// consumer dropped — no one will ever pop this
+    Disconnected(T),
+}
+
+/// Error returned by [`Consumer::try_pop`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum PopError {
+    /// nothing queued right now
+    Empty,
+    /// producer dropped and the ring is drained — terminal
+    Disconnected,
+}
+
+pub struct Producer<T> {
+    inner: Arc<Inner<T>>,
+}
+
+pub struct Consumer<T> {
+    inner: Arc<Inner<T>>,
+}
+
+/// Create a ring with at least `capacity` slots (rounded up to a power
+/// of two, minimum 2).
+pub fn ring<T>(capacity: usize) -> (Producer<T>, Consumer<T>) {
+    let cap = capacity.max(2).next_power_of_two();
+    let slots: Box<[UnsafeCell<MaybeUninit<T>>]> = (0..cap)
+        .map(|_| UnsafeCell::new(MaybeUninit::uninit()))
+        .collect();
+    let inner = Arc::new(Inner {
+        mask: cap - 1,
+        slots,
+        tail: CachePadded(AtomicUsize::new(0)),
+        head: CachePadded(AtomicUsize::new(0)),
+        producer_dead: AtomicBool::new(false),
+        consumer_dead: AtomicBool::new(false),
+    });
+    (
+        Producer {
+            inner: inner.clone(),
+        },
+        Consumer { inner },
+    )
+}
+
+impl<T> Producer<T> {
+    /// Slots currently occupied (racy snapshot; exact from this side).
+    pub fn len(&self) -> usize {
+        self.inner
+            .tail
+            .0
+            .load(Ordering::Relaxed)
+            .wrapping_sub(self.inner.head.0.load(Ordering::Acquire))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.inner.mask + 1
+    }
+
+    /// Whether the consumer side has been dropped (pushes can never be
+    /// observed again).
+    pub fn is_closed(&self) -> bool {
+        self.inner.consumer_dead.load(Ordering::Acquire)
+    }
+
+    #[inline]
+    pub fn try_push(&mut self, value: T) -> Result<(), PushError<T>> {
+        if self.inner.consumer_dead.load(Ordering::Acquire) {
+            return Err(PushError::Disconnected(value));
+        }
+        let tail = self.inner.tail.0.load(Ordering::Relaxed);
+        let head = self.inner.head.0.load(Ordering::Acquire);
+        if tail.wrapping_sub(head) > self.inner.mask {
+            return Err(PushError::Full(value));
+        }
+        // SAFETY: slot `tail` is outside [head, tail) so the consumer
+        // will not touch it until the Release store below publishes it.
+        unsafe { (*self.inner.slots[tail & self.inner.mask].get()).write(value) };
+        self.inner
+            .tail
+            .0
+            .store(tail.wrapping_add(1), Ordering::Release);
+        Ok(())
+    }
+}
+
+impl<T> Drop for Producer<T> {
+    fn drop(&mut self) {
+        self.inner.producer_dead.store(true, Ordering::Release);
+    }
+}
+
+impl<T> Consumer<T> {
+    /// Slots currently occupied (racy snapshot; exact from this side).
+    pub fn len(&self) -> usize {
+        self.inner
+            .tail
+            .0
+            .load(Ordering::Acquire)
+            .wrapping_sub(self.inner.head.0.load(Ordering::Relaxed))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.inner.mask + 1
+    }
+
+    #[inline]
+    fn pop_at(&mut self, head: usize) -> T {
+        // SAFETY: `head < tail` was observed with Acquire, so the slot
+        // write is visible; the Release store hands the slot back.
+        let v = unsafe { (*self.inner.slots[head & self.inner.mask].get()).assume_init_read() };
+        self.inner
+            .head
+            .0
+            .store(head.wrapping_add(1), Ordering::Release);
+        v
+    }
+
+    #[inline]
+    pub fn try_pop(&mut self) -> Result<T, PopError> {
+        let head = self.inner.head.0.load(Ordering::Relaxed);
+        let tail = self.inner.tail.0.load(Ordering::Acquire);
+        if head != tail {
+            return Ok(self.pop_at(head));
+        }
+        if self.inner.producer_dead.load(Ordering::Acquire) {
+            // The dead flag was set after the producer's final push;
+            // re-reading tail after the Acquire load above cannot miss it.
+            let tail = self.inner.tail.0.load(Ordering::Acquire);
+            if head != tail {
+                return Ok(self.pop_at(head));
+            }
+            return Err(PopError::Disconnected);
+        }
+        Err(PopError::Empty)
+    }
+}
+
+impl<T> Drop for Consumer<T> {
+    fn drop(&mut self) {
+        self.inner.consumer_dead.store(true, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_and_capacity() {
+        let (mut tx, mut rx) = ring::<u64>(4);
+        assert_eq!(tx.capacity(), 4);
+        for i in 0..4u64 {
+            tx.try_push(i).unwrap();
+        }
+        assert!(matches!(tx.try_push(99), Err(PushError::Full(99))));
+        for i in 0..4u64 {
+            assert_eq!(rx.try_pop().unwrap(), i);
+        }
+        assert_eq!(rx.try_pop(), Err(PopError::Empty));
+        // interleaved wrap-around
+        for round in 0..100u64 {
+            tx.try_push(round).unwrap();
+            tx.try_push(round + 1000).unwrap();
+            assert_eq!(rx.try_pop().unwrap(), round);
+            assert_eq!(rx.try_pop().unwrap(), round + 1000);
+        }
+    }
+
+    #[test]
+    fn producer_drop_delivers_tail_then_disconnects() {
+        let (mut tx, mut rx) = ring::<u32>(8);
+        tx.try_push(1).unwrap();
+        tx.try_push(2).unwrap();
+        drop(tx);
+        assert_eq!(rx.try_pop().unwrap(), 1);
+        assert_eq!(rx.try_pop().unwrap(), 2);
+        assert_eq!(rx.try_pop(), Err(PopError::Disconnected));
+    }
+
+    #[test]
+    fn consumer_drop_disconnects_producer() {
+        let (mut tx, rx) = ring::<u32>(8);
+        tx.try_push(1).unwrap();
+        drop(rx);
+        assert!(matches!(tx.try_push(2), Err(PushError::Disconnected(2))));
+    }
+
+    #[test]
+    fn unconsumed_items_are_dropped_exactly_once() {
+        use std::sync::atomic::AtomicU64;
+        static DROPS: AtomicU64 = AtomicU64::new(0);
+        struct D;
+        impl Drop for D {
+            fn drop(&mut self) {
+                DROPS.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let (mut tx, mut rx) = ring::<D>(8);
+        for _ in 0..5 {
+            tx.try_push(D).unwrap();
+        }
+        drop(rx.try_pop().unwrap()); // 1 consumed
+        drop(tx);
+        drop(rx); // 4 left in the ring
+        assert_eq!(DROPS.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn cross_thread_transfer_is_lossless() {
+        const N: u64 = 1_000_000;
+        let (mut tx, mut rx) = ring::<u64>(64);
+        let producer = std::thread::spawn(move || {
+            for i in 0..N {
+                let mut v = i;
+                loop {
+                    match tx.try_push(v) {
+                        Ok(()) => break,
+                        Err(PushError::Full(ret)) => {
+                            v = ret;
+                            std::hint::spin_loop();
+                        }
+                        Err(PushError::Disconnected(_)) => panic!("consumer died"),
+                    }
+                }
+            }
+        });
+        let mut sum = 0u64;
+        let mut count = 0u64;
+        loop {
+            match rx.try_pop() {
+                Ok(v) => {
+                    sum = sum.wrapping_add(v);
+                    count += 1;
+                }
+                Err(PopError::Empty) => std::hint::spin_loop(),
+                Err(PopError::Disconnected) => break,
+            }
+        }
+        producer.join().unwrap();
+        assert_eq!(count, N);
+        assert_eq!(sum, N * (N - 1) / 2);
+    }
+}

@@ -1,10 +1,18 @@
-//! Key → shard routing.
+//! Key → shard routing and the catalog partition.
 //!
 //! Stable hash routing: shard = h(key) mod S, with a salted high-quality
 //! mixer so adversarial key patterns cannot skew shard load.  A routing
 //! epoch allows controlled re-sharding (all keys move deterministically to
 //! the new layout; per-key stability across epochs is not a goal — the
 //! cache warms back up via the policy itself).
+//!
+//! [`Partition`] freezes one routing epoch into a cached bijection
+//! `global id ↔ (shard, shard-local id)` (DESIGN.md §8).  Each shard's
+//! policy runs over a *dense* local id space `0..local_catalog`, so the
+//! per-shard OGB state vectors are exactly sized; the seed's
+//! `key / shards` striping — which could collide two hash-routed globals
+//! onto one local slot — is gone, and the bijection is property-tested in
+//! `rust/tests/coordinator_equivalence.rs`.
 
 use crate::util::fxhash::hash2;
 
@@ -39,13 +47,70 @@ impl Router {
         self.epoch += 1;
     }
 
-    /// Split a catalog across shards: the *expected* number of keys routed
-    /// to each shard, used to size per-shard capacity.
-    pub fn shard_catalog_size(&self, catalog: usize, shard: usize) -> usize {
-        // balanced split with remainder spread over the first shards
-        let base = catalog / self.shards;
-        let extra = usize::from(shard < catalog % self.shards);
-        base + extra
+}
+
+/// Frozen catalog partition: a cached bijection between global item ids
+/// and `(shard, dense shard-local id)` pairs, built once at server start
+/// (O(catalog) time, ~12 bytes per item).
+///
+/// * scatter path: [`Partition::locate`] — two array loads per request;
+/// * gather/debug path: [`Partition::global`] — one array load;
+/// * shard sizing: [`Partition::local_catalog`] — exact, not estimated.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    shard_of: Box<[u32]>,
+    local_of: Box<[u32]>,
+    /// per shard: local id → global id (inverse mapping)
+    global_of: Vec<Box<[u32]>>,
+}
+
+impl Partition {
+    /// Partition `0..catalog` by the router's stable hash, assigning
+    /// dense local ids in ascending global order within each shard.
+    pub fn build(router: &Router, catalog: usize) -> Self {
+        assert!(catalog > 0 && catalog <= u32::MAX as usize);
+        let shards = router.shards();
+        let mut shard_of = vec![0u32; catalog].into_boxed_slice();
+        let mut local_of = vec![0u32; catalog].into_boxed_slice();
+        let mut globals: Vec<Vec<u32>> = vec![Vec::new(); shards];
+        for g in 0..catalog {
+            let s = router.route(g as u64);
+            shard_of[g] = s as u32;
+            local_of[g] = globals[s].len() as u32;
+            globals[s].push(g as u32);
+        }
+        Self {
+            shard_of,
+            local_of,
+            global_of: globals.into_iter().map(Vec::into_boxed_slice).collect(),
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.global_of.len()
+    }
+
+    pub fn catalog(&self) -> usize {
+        self.shard_of.len()
+    }
+
+    /// Global id → (shard, shard-local id).  `global` must be `< catalog`.
+    #[inline]
+    pub fn locate(&self, global: u64) -> (usize, u32) {
+        let g = global as usize;
+        (self.shard_of[g] as usize, self.local_of[g])
+    }
+
+    /// (shard, shard-local id) → global id (inverse of [`Self::locate`]).
+    #[inline]
+    pub fn global(&self, shard: usize, local: u32) -> u32 {
+        self.global_of[shard][local as usize]
+    }
+
+    /// Exact number of catalog items this shard owns — the shard
+    /// policy's dense local catalog size.
+    pub fn local_catalog(&self, shard: usize) -> usize {
+        self.global_of[shard].len()
     }
 }
 
@@ -88,9 +153,27 @@ mod tests {
     }
 
     #[test]
-    fn catalog_split_sums() {
-        let r = Router::new(3, 1);
-        let total: usize = (0..3).map(|s| r.shard_catalog_size(1000, s)).sum();
-        assert_eq!(total, 1000);
+    fn partition_roundtrips_and_is_dense() {
+        let r = Router::new(5, 11);
+        let p = Partition::build(&r, 10_000);
+        assert_eq!(p.shards(), 5);
+        assert_eq!(p.catalog(), 10_000);
+        let total: usize = (0..5).map(|s| p.local_catalog(s)).sum();
+        assert_eq!(total, 10_000);
+        for g in 0..10_000u64 {
+            let (s, l) = p.locate(g);
+            assert_eq!(s, r.route(g), "partition must follow the router");
+            assert!((l as usize) < p.local_catalog(s), "local id dense");
+            assert_eq!(p.global(s, l) as u64, g, "bijection roundtrip");
+        }
+    }
+
+    #[test]
+    fn single_shard_partition_is_identity() {
+        let p = Partition::build(&Router::new(1, 42), 1_000);
+        for g in 0..1_000u64 {
+            assert_eq!(p.locate(g), (0, g as u32));
+            assert_eq!(p.global(0, g as u32) as u64, g);
+        }
     }
 }

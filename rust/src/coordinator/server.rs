@@ -1,31 +1,56 @@
-//! Cache server lifecycle: spawn shard workers, hand out client handles,
-//! drain and join.  Bounded request channels give backpressure: when a
-//! shard falls behind, `try_get` rejects (counted in metrics) instead of
-//! growing an unbounded queue.
+//! Serving-engine lifecycle: build the catalog [`Partition`], spawn shard
+//! workers, hand out batching client handles, drain and join
+//! (DESIGN.md §8).
+//!
+//! Topology: `clients × shards` SPSC ring *pairs* (work ring in, done
+//! ring back), so every ring has exactly one producer and one consumer
+//! and no path takes a lock.  A [`ShardedClient`] scatters requests into
+//! per-shard pending batches (flushed at B or explicitly), and gathers
+//! replies by draining its done rings — recycling every batch buffer, so
+//! the steady-state request path allocates nothing on either side.
+//!
+//! Backpressure is by construction: at most `queue_depth` batches sit in
+//! each work ring and `queue_depth` in each done ring; when a work ring
+//! is full the client reaps replies until a slot frees instead of
+//! queueing unboundedly (and when a done ring is full the shard waits for
+//! the client to reap).
 
-use std::sync::mpsc::{self, SyncSender, TrySendError};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
 
 use anyhow::Result;
 
+use super::batch::Batch;
 use super::metrics::{Metrics, MetricsSnapshot};
-use super::router::Router;
-use super::shard::{run_shard, ShardConfig, ShardMsg, ShardRequest};
+use super::ring::{self, PopError, PushError};
+use super::router::{Partition, Router};
+use super::shard::{run_shard, ShardConfig, ShardLane};
 
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     pub catalog: usize,
-    /// total cache capacity across shards (soft, E[items] = capacity)
+    /// total cache capacity across shards (items; split evenly)
     pub capacity: usize,
     pub shards: usize,
-    /// OGB batch size per shard
+    /// shard policy name accepted by `policies::build`.  Rejected:
+    /// `opt` (needs a full trace in hindsight) and the fractional
+    /// variants (the reply bitmap is integral)
+    pub policy: String,
+    /// batch size B: ring batch capacity == each policy's sample-refresh
+    /// batch, so a full drained batch maps onto one UPDATESAMPLE cadence
     pub batch: usize,
-    /// expected horizon (sets the theoretical eta)
+    /// expected horizon across the whole server (sets per-shard eta)
     pub horizon: usize,
+    /// per-lane ring capacity in *batches* (backpressure bound).
+    /// Rounded up to the next power of two by the ring allocator, so a
+    /// non-power-of-two value admits up to the rounded count in flight
     pub queue_depth: usize,
+    /// number of client handles to pre-wire (each gets its own SPSC
+    /// lane per shard; handles come from [`CacheServer::take_client`])
+    pub clients: usize,
     pub seed: u64,
+    pub rebase_threshold: Option<f64>,
 }
 
 impl Default for ServerConfig {
@@ -34,173 +59,420 @@ impl Default for ServerConfig {
             catalog: 100_000,
             capacity: 5_000,
             shards: 4,
+            policy: "ogb".into(),
             batch: 64,
             horizon: 10_000_000,
-            queue_depth: 1024,
+            queue_depth: 64,
+            clients: 1,
             seed: 0xCAFE,
+            rebase_threshold: None,
         }
     }
 }
 
 pub struct CacheServer {
-    router: Router,
-    senders: Vec<SyncSender<ShardMsg>>,
     workers: Vec<JoinHandle<()>>,
     metrics: Vec<Arc<Metrics>>,
-    cfg: ServerConfig,
-}
-
-/// Cloneable client handle.
-#[derive(Clone)]
-pub struct CacheClient {
-    router: Router,
-    senders: Vec<SyncSender<ShardMsg>>,
-    catalog: usize,
-    shards: usize,
+    redraw: Vec<Arc<AtomicBool>>,
+    /// pre-wired handles not yet taken by callers
+    clients: Vec<ShardedClient>,
+    /// liveness token cloned into every client handle: shutdown can tell
+    /// whether taken handles are still alive (strong_count > 1) and fail
+    /// loudly instead of joining forever
+    alive: Arc<()>,
 }
 
 impl CacheServer {
     pub fn start(cfg: ServerConfig) -> Result<Self> {
-        anyhow::ensure!(cfg.shards > 0 && cfg.capacity > 0 && cfg.catalog > cfg.capacity);
+        anyhow::ensure!(
+            cfg.shards > 0 && cfg.capacity > 0 && cfg.catalog > cfg.capacity,
+            "need shards > 0 and 0 < capacity < catalog"
+        );
+        anyhow::ensure!(
+            cfg.batch >= 1 && cfg.queue_depth >= 1 && cfg.clients >= 1,
+            "need batch, queue_depth and clients >= 1"
+        );
+        // The reply bitmap is integral (1 bit per request): fractional
+        // policies would have rewards in (0, 1) silently truncated to
+        // misses, making server numbers incomparable with `sim` runs —
+        // reject them up front like `opt`.
+        anyhow::ensure!(
+            !matches!(
+                cfg.policy.as_str(),
+                "ogb-frac" | "ogb-classic-frac" | "omd-frac"
+            ),
+            "fractional policy `{}` is not servable: the hit/miss reply \
+             bitmap cannot represent fractional rewards (use the integral \
+             variant, or `ogb-cache sweep` for fractional comparisons)",
+            cfg.policy
+        );
+        // Probe-build the policy on a tiny shape so a bad name (or `opt`,
+        // which needs a hindsight trace) fails here, not in a worker.
+        crate::policies::build(
+            &cfg.policy,
+            16,
+            4,
+            &crate::policies::BuildOpts::new(16, cfg.batch, cfg.seed),
+            None,
+        )
+        .map_err(|e| anyhow::anyhow!("server policy `{}`: {e}", cfg.policy))?;
+
         let router = Router::new(cfg.shards, cfg.seed);
-        let mut senders = Vec::with_capacity(cfg.shards);
+        let partition = Arc::new(Partition::build(&router, cfg.catalog));
+
+        // clients × shards ring pairs
+        let alive = Arc::new(());
+        let mut shard_lanes: Vec<Vec<ShardLane>> = (0..cfg.shards).map(|_| Vec::new()).collect();
+        let mut clients = Vec::with_capacity(cfg.clients);
+        for _ in 0..cfg.clients {
+            let mut lanes = Vec::with_capacity(cfg.shards);
+            for shard_lane in shard_lanes.iter_mut() {
+                let (work_tx, work_rx) = ring::ring::<Batch>(cfg.queue_depth);
+                let (done_tx, done_rx) = ring::ring::<Batch>(cfg.queue_depth);
+                // Batches in circulation per lane are bounded by both
+                // rings (at their power-of-two rounded capacities) plus
+                // one being processed; eagerly creating that many free
+                // batches (plus slack) makes the steady-state request
+                // path allocation-free *by construction* — `free` can
+                // never run dry, and returning every batch never grows
+                // the Vec.
+                let free_cap = work_tx.capacity() + done_tx.capacity() + 2;
+                let mut free = Vec::with_capacity(free_cap);
+                free.resize_with(free_cap, || Batch::new(cfg.batch));
+                shard_lane.push(ShardLane {
+                    work: work_rx,
+                    done: done_tx,
+                });
+                lanes.push(ClientLane {
+                    work: work_tx,
+                    done: done_rx,
+                    pending: Batch::new(cfg.batch),
+                    free,
+                    next_seq: 0,
+                    reaped_seq: 0,
+                    inflight: 0,
+                    replies: 0,
+                    hits: 0,
+                });
+            }
+            clients.push(ShardedClient {
+                partition: partition.clone(),
+                lanes,
+                sent: 0,
+                flushes: 0,
+                _alive: alive.clone(),
+            });
+        }
+
         let mut workers = Vec::with_capacity(cfg.shards);
         let mut metrics = Vec::with_capacity(cfg.shards);
-        for shard_id in 0..cfg.shards {
-            let (tx, rx) = mpsc::sync_channel::<ShardMsg>(cfg.queue_depth);
+        let mut redraw = Vec::with_capacity(cfg.shards);
+        for (shard_id, lanes) in shard_lanes.into_iter().enumerate() {
             let m = Arc::new(Metrics::new());
-            // Each shard handles ~catalog/S keys with ~capacity/S budget;
-            // eta follows Theorem 3.1 on the shard-local horizon.
-            let local_catalog = router.shard_catalog_size(cfg.catalog, shard_id).max(2);
-            let local_capacity = (cfg.capacity as f64 / cfg.shards as f64).max(1.0);
-            let local_horizon = (cfg.horizon / cfg.shards).max(1);
-            let eta = crate::theory_eta(
-                local_capacity,
-                local_catalog as f64,
-                local_horizon as f64,
-                cfg.batch as f64,
-            );
+            let r = Arc::new(AtomicBool::new(false));
+            let local_catalog = partition.local_catalog(shard_id);
+            // Exact floor-plus-remainder split of the total budget (sums
+            // to cfg.capacity); eta follows Theorem 3.1 on the
+            // shard-local horizon (requests split ~evenly by the stable
+            // hash).  Each shard still needs >= 1 item, so degenerate
+            // capacity < shards configs exceed the total; conversely a
+            // shard whose hash share of the catalog is smaller than its
+            // capacity share gets clamped down in the worker (cache
+            // must stay below its catalog) — warn, since the effective
+            // total capacity then differs from the configured one.
+            let capacity = (cfg.capacity / cfg.shards
+                + usize::from(shard_id < cfg.capacity % cfg.shards))
+            .max(1);
+            if capacity >= local_catalog || local_catalog < 2 {
+                // Degenerate shard: either the capacity share exceeds the
+                // hash-assigned catalog slice (worker clamps it down, so
+                // effective total capacity < cfg.capacity), or the slice
+                // is so small the policy runs over a padded 2-item
+                // catalog whose phantom item absorbs cache mass.  Both
+                // mean "too many shards for this catalog/capacity".
+                crate::log_warn!(
+                    "shard {shard_id}: degenerate shape (capacity share {capacity}, \
+                     local catalog {local_catalog}) — effective capacity/hit ratio \
+                     will deviate from the configured total {}; use fewer shards",
+                    cfg.capacity
+                );
+            }
             let scfg = ShardConfig {
                 shard_id,
                 local_catalog,
-                capacity: local_capacity,
-                eta,
+                capacity,
+                policy: cfg.policy.clone(),
                 batch: cfg.batch,
+                horizon: (cfg.horizon / cfg.shards).max(1),
                 seed: cfg.seed,
+                rebase_threshold: cfg.rebase_threshold,
             };
-            let m2 = m.clone();
+            let (m2, r2) = (m.clone(), r.clone());
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("ogb-shard-{shard_id}"))
-                    .spawn(move || run_shard(scfg, rx, m2))?,
+                    .spawn(move || run_shard(scfg, lanes, r2, m2))?,
             );
-            senders.push(tx);
             metrics.push(m);
+            redraw.push(r);
         }
         Ok(Self {
-            router,
-            senders,
             workers,
             metrics,
-            cfg,
+            redraw,
+            clients,
+            alive,
         })
     }
 
-    pub fn client(&self) -> CacheClient {
-        CacheClient {
-            router: self.router.clone(),
-            senders: self.senders.clone(),
-            catalog: self.cfg.catalog,
-            shards: self.cfg.shards,
-        }
+    /// Take one of the `cfg.clients` pre-wired client handles.  Handles
+    /// are `Send`: move them into load-generator threads.
+    pub fn take_client(&mut self) -> Result<ShardedClient> {
+        self.clients
+            .pop()
+            .ok_or_else(|| anyhow::anyhow!("all client handles taken (cfg.clients)"))
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot::merge(self.metrics.iter().map(|m| m.snapshot()).collect())
     }
 
-    /// Ask every shard to redraw its sampler's permanent random numbers.
+    /// Ask every shard to redraw its sampler's permanent random numbers
+    /// at the next batch boundary (paper §5.1).
     pub fn redraw_samplers(&self) {
-        for tx in &self.senders {
-            let _ = tx.send(ShardMsg::Redraw);
+        for r in &self.redraw {
+            r.store(true, Ordering::Release);
         }
     }
 
-    /// Drain queues, stop workers, return the final metrics.
-    pub fn shutdown(self) -> MetricsSnapshot {
-        for tx in &self.senders {
-            let _ = tx.send(ShardMsg::Shutdown);
+    /// Stop workers and return the final metrics.  Every taken
+    /// [`ShardedClient`] must have been dropped first (shards exit when
+    /// all their work rings disconnect) — call `drain()` on each client
+    /// to flush partial batches and collect outstanding replies before
+    /// dropping it.
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        self.clients.clear(); // close un-taken lanes
+        // Shards only exit once every client handle is dropped.  Joining
+        // with live handles would hang forever and silently; give
+        // in-flight drops a grace period, then fail loudly.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while Arc::strong_count(&self.alive) > 1 {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "CacheServer::shutdown with {} client handle(s) still alive — \
+                 drain() and drop every taken ShardedClient first",
+                Arc::strong_count(&self.alive) - 1
+            );
+            std::thread::yield_now();
         }
-        drop(self.senders);
-        for w in self.workers {
+        for w in std::mem::take(&mut self.workers) {
             let _ = w.join();
         }
         MetricsSnapshot::merge(self.metrics.iter().map(|m| m.snapshot()).collect())
     }
+}
 
-    fn reject(&self) {
-        // rejected requests are recorded on shard 0's metrics
-        self.metrics[0]
-            .rejected
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-    }
+/// Client-side totals (scatter/gather accounting, per handle).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClientStats {
+    /// requests scattered into pending batches
+    pub sent: u64,
+    /// requests whose reply batch has been reaped
+    pub replies: u64,
+    /// hit bits observed in reaped batches
+    pub hits: u64,
+    /// batches flushed into work rings
+    pub flushes: u64,
+}
 
-    /// Fire-and-forget enqueue with backpressure; returns false if the
-    /// shard queue is full (request rejected).
-    pub fn try_get(&self, key: u64) -> bool {
-        let shard = self.router.route(key);
-        let local = self.local_id(key);
-        match self.senders[shard].try_send(ShardMsg::Request(ShardRequest {
-            local_item: local,
-            enqueued: Instant::now(),
-            reply: None,
-        })) {
-            Ok(()) => true,
-            Err(TrySendError::Full(_)) => {
-                self.reject();
-                false
-            }
-            Err(TrySendError::Disconnected(_)) => false,
+struct ClientLane {
+    work: ring::Producer<Batch>,
+    done: ring::Consumer<Batch>,
+    /// batch currently being filled by scatter
+    pending: Batch,
+    /// recycled empty batches (bounded by ring capacities)
+    free: Vec<Batch>,
+    next_seq: u64,
+    /// next reply sequence expected (FIFO invariant, debug-asserted)
+    reaped_seq: u64,
+    /// batches pushed and not yet reaped
+    inflight: usize,
+    replies: u64,
+    hits: u64,
+}
+
+/// Batching client handle: scatters mixed-key request streams into
+/// per-shard batches, gathers reply bitmaps, recycles buffers.
+///
+/// Not `Clone` — each handle owns the producer side of its rings.  Wire
+/// as many handles as you have load-generator threads via
+/// `ServerConfig::clients`.
+pub struct ShardedClient {
+    partition: Arc<Partition>,
+    lanes: Vec<ClientLane>,
+    sent: u64,
+    flushes: u64,
+    /// see `CacheServer::alive`
+    _alive: Arc<()>,
+}
+
+impl ShardedClient {
+    /// Scatter one request.  Keys `>= catalog` wrap (mod catalog).  The
+    /// shard's batch is flushed automatically when it reaches B; replies
+    /// are collected opportunistically (see [`Self::reap`] /
+    /// [`Self::drain`]).
+    #[inline]
+    pub fn get(&mut self, key: u64) {
+        let catalog = self.partition.catalog() as u64;
+        let g = if key < catalog { key } else { key % catalog };
+        let (shard, local) = self.partition.locate(g);
+        self.lanes[shard].pending.push(local);
+        self.sent += 1;
+        if self.lanes[shard].pending.is_full() {
+            self.flush_shard(shard);
         }
     }
 
-    /// Blocking enqueue (waits when the queue is full).
-    pub fn get_nowait(&self, key: u64) {
-        let shard = self.router.route(key);
-        let local = self.local_id(key);
-        let _ = self.senders[shard].send(ShardMsg::Request(ShardRequest {
-            local_item: local,
-            enqueued: Instant::now(),
-            reply: None,
-        }));
+    /// Flush every non-empty pending batch (partial batches included) —
+    /// the drain/join path uses this so no request is stranded.
+    pub fn flush(&mut self) {
+        for shard in 0..self.lanes.len() {
+            if !self.lanes[shard].pending.is_empty() {
+                self.flush_shard(shard);
+            }
+        }
     }
 
-    #[inline]
-    fn local_id(&self, key: u64) -> u64 {
-        // dense shard-local id: keys are striped across shards
-        key / self.cfg.shards as u64
+    fn flush_shard(&mut self, shard: usize) {
+        let lane = &mut self.lanes[shard];
+        let replacement = {
+            let cap = lane.pending.capacity();
+            lane.free.pop().unwrap_or_else(|| Batch::new(cap))
+        };
+        let mut b = std::mem::replace(&mut lane.pending, replacement);
+        b.set_seq(lane.next_seq);
+        lane.next_seq += 1;
+        b.stamp();
+        self.flushes += 1;
+        loop {
+            match self.lanes[shard].work.try_push(b) {
+                Ok(()) => {
+                    self.lanes[shard].inflight += 1;
+                    return;
+                }
+                Err(PushError::Full(ret)) => {
+                    b = ret;
+                    // Backpressure: free a slot by consuming replies.
+                    if Self::reap_lane(&mut self.lanes[shard], &mut |_| {}) == 0 {
+                        std::thread::yield_now();
+                    }
+                }
+                Err(PushError::Disconnected(_)) => return, // shard gone (shutdown)
+            }
+        }
     }
-}
 
-impl CacheClient {
-    /// Synchronous lookup: true = hit. One reply channel per call-site
-    /// would be wasteful; callers in benches keep a reusable channel via
-    /// [`CacheClient::get_with`].
-    pub fn get(&self, key: u64) -> bool {
-        let (tx, rx) = mpsc::channel();
-        self.get_with(key, &tx);
-        rx.recv().unwrap_or(false)
+    /// Drain one lane's done ring; `inspect` sees each reply batch
+    /// (still annotated) before it is cleared and recycled.  Returns the
+    /// number of requests reaped.
+    fn reap_lane(lane: &mut ClientLane, inspect: &mut dyn FnMut(&Batch)) -> u64 {
+        let mut n = 0u64;
+        loop {
+            match lane.done.try_pop() {
+                Ok(mut b) => {
+                    // FIFO pipeline invariant: replies come back in flush
+                    // order.
+                    debug_assert_eq!(b.seq(), lane.reaped_seq, "reply batch out of order");
+                    lane.reaped_seq += 1;
+                    inspect(&b);
+                    n += b.len() as u64;
+                    lane.replies += b.len() as u64;
+                    lane.hits += b.hit_count();
+                    lane.inflight -= 1;
+                    b.clear();
+                    lane.free.push(b);
+                }
+                Err(PopError::Empty) => break,
+                Err(PopError::Disconnected) => {
+                    // Shard worker gone (exited or panicked) with replies
+                    // still outstanding: they can never arrive.  Write the
+                    // inflight count off so `drain()` terminates instead
+                    // of spinning forever; the missing replies surface as
+                    // stats().replies < stats().sent.
+                    lane.inflight = 0;
+                    break;
+                }
+            }
+        }
+        n
     }
 
-    /// Synchronous lookup reusing the caller's reply channel.
-    pub fn get_with(&self, key: u64, reply: &mpsc::Sender<bool>) {
-        let shard = self.router.route(key % self.catalog as u64);
-        let local = (key % self.catalog as u64) / self.shards as u64;
-        let _ = self.senders[shard].send(ShardMsg::Request(ShardRequest {
-            local_item: local,
-            enqueued: Instant::now(),
-            reply: Some(reply.clone()),
-        }));
+    /// Gather: drain all done rings. Returns the number of requests
+    /// whose replies were collected.
+    pub fn reap(&mut self) -> u64 {
+        self.reap_with(|_, _| {})
+    }
+
+    /// [`Self::reap`] with a per-batch inspector `(shard, &batch)` —
+    /// batches arrive in flush order per shard (FIFO rings), which the
+    /// order-preservation test asserts via [`Batch::seq`].
+    ///
+    /// Caveat: when a *work* ring fills, the internal backpressure path
+    /// inside [`Self::get`]/[`Self::flush`] reaps replies without an
+    /// inspector to keep memory bounded — those batches are accounted in
+    /// [`Self::stats`] but not inspected.  Callers that must observe
+    /// every batch should reap after each `get` and size `queue_depth`
+    /// above their worst-case burst (in batches), which makes the
+    /// bypass unreachable.
+    pub fn reap_with(&mut self, mut inspect: impl FnMut(usize, &Batch)) -> u64 {
+        let mut n = 0u64;
+        for shard in 0..self.lanes.len() {
+            n += Self::reap_lane(&mut self.lanes[shard], &mut |b| inspect(shard, b));
+        }
+        n
+    }
+
+    /// Batches pushed and not yet reaped.
+    pub fn inflight(&self) -> usize {
+        self.lanes.iter().map(|l| l.inflight).sum()
+    }
+
+    /// Flush partial batches and block until every outstanding reply has
+    /// been gathered (`stats().replies == stats().sent` afterwards).
+    pub fn drain(&mut self) {
+        self.drain_with(|_, _| {});
+    }
+
+    /// [`Self::drain`] with a per-batch inspector (see [`Self::reap_with`]).
+    pub fn drain_with(&mut self, mut inspect: impl FnMut(usize, &Batch)) {
+        self.flush();
+        let mut idle = 0u32;
+        while self.inflight() > 0 {
+            if self.reap_with(&mut inspect) == 0 {
+                idle = idle.saturating_add(1);
+                if idle < 64 {
+                    std::hint::spin_loop();
+                } else {
+                    std::thread::yield_now();
+                }
+            } else {
+                idle = 0;
+            }
+        }
+    }
+
+    pub fn stats(&self) -> ClientStats {
+        ClientStats {
+            sent: self.sent,
+            replies: self.lanes.iter().map(|l| l.replies).sum(),
+            hits: self.lanes.iter().map(|l| l.hits).sum(),
+            flushes: self.flushes,
+        }
+    }
+
+    /// The partition this client scatters with (global ↔ (shard, local)).
+    pub fn partition(&self) -> &Partition {
+        &self.partition
     }
 }
 
@@ -216,81 +488,169 @@ mod tests {
             shards: 4,
             batch: 16,
             horizon: 200_000,
-            queue_depth: 256,
+            queue_depth: 32,
             seed: 7,
+            ..Default::default()
         }
     }
 
     #[test]
     fn end_to_end_hit_ratio_on_zipf() {
-        let server = CacheServer::start(small_cfg()).unwrap();
+        let mut server = CacheServer::start(small_cfg()).unwrap();
+        let mut client = server.take_client().unwrap();
         let t = synth::zipf(10_000, 120_000, 1.0, 3);
-        for &r in &t.requests {
-            server.get_nowait(r as u64);
+        for (k, &r) in t.requests.iter().enumerate() {
+            if k == 60_000 {
+                // mid-stream sampler redraw (paper §5.1) must not disturb
+                // request accounting
+                server.redraw_samplers();
+            }
+            client.get(r as u64);
         }
+        client.drain();
+        let cs = client.stats();
+        assert_eq!(cs.sent, 120_000);
+        assert_eq!(cs.replies, 120_000);
+        drop(client);
         let snap = server.shutdown();
         assert_eq!(snap.requests, 120_000);
+        assert_eq!(snap.hits, cs.hits, "server and client agree on hits");
         // Zipf(1.0), C/N = 5%: a learning policy lands well above C/N
         assert!(
             snap.hit_ratio() > 0.2,
             "server hit ratio {:.3} too low",
             snap.hit_ratio()
         );
-        assert!(snap.latency.percentile_ns(50.0) > 0);
+        assert!(snap.p50_ns() > 0);
+        assert!(snap.p999_ns() >= snap.p99_ns());
     }
 
     #[test]
-    fn synchronous_client_replies() {
-        let server = CacheServer::start(small_cfg()).unwrap();
-        let client = server.client();
-        let mut hits = 0;
-        for k in 0..2000u64 {
-            if client.get(k % 20) {
-                hits += 1;
-            }
+    fn partial_batches_flush_on_drain() {
+        let mut server = CacheServer::start(small_cfg()).unwrap();
+        let mut client = server.take_client().unwrap();
+        // 999 requests over 4 shards with B=16: partial batches everywhere
+        for k in 0..999u64 {
+            client.get(k % 50);
         }
-        assert!(hits > 500, "hot-set sync gets should hit ({hits})");
-        let snap = server.shutdown();
-        assert_eq!(snap.requests, 2000);
+        client.drain();
+        assert_eq!(client.stats().replies, 999);
+        drop(client);
+        assert_eq!(server.shutdown().requests, 999);
     }
 
     #[test]
-    fn backpressure_rejects_rather_than_grow() {
+    fn backpressure_bounds_batches_in_flight() {
         let mut cfg = small_cfg();
-        cfg.queue_depth = 4;
-        let server = CacheServer::start(cfg).unwrap();
-        let mut sent = 0u64;
-        let mut rejected = 0u64;
+        cfg.queue_depth = 2;
+        cfg.batch = 8;
+        let mut server = CacheServer::start(cfg).unwrap();
+        let mut client = server.take_client().unwrap();
+        let bound = 4 * (2 * 2 + 1); // shards * (work + done + processing)
         for k in 0..50_000u64 {
-            if server.try_get(k % 1000) {
-                sent += 1;
-            } else {
-                rejected += 1;
-            }
+            client.get(k % 1000);
+            assert!(client.inflight() <= bound, "inflight exceeded bound");
         }
-        let snap = server.shutdown();
-        assert_eq!(snap.requests, sent, "every accepted request processed");
-        assert_eq!(snap.rejected, rejected, "rejections accounted");
-        assert_eq!(sent + rejected, 50_000);
+        client.drain();
+        let cs = client.stats();
+        assert_eq!(cs.sent, 50_000);
+        assert_eq!(cs.replies, 50_000);
+        drop(client);
+        assert_eq!(server.shutdown().requests, 50_000);
     }
 
     #[test]
-    fn multithreaded_clients() {
-        let server = Arc::new(CacheServer::start(small_cfg()).unwrap());
+    fn multiple_client_handles_across_threads() {
+        let mut cfg = small_cfg();
+        cfg.clients = 4;
+        let mut server = CacheServer::start(cfg).unwrap();
         let mut handles = Vec::new();
         for w in 0..4u64 {
-            let s = server.clone();
+            let mut client = server.take_client().unwrap();
             handles.push(std::thread::spawn(move || {
                 for k in 0..20_000u64 {
-                    s.get_nowait((k.wrapping_mul(w + 1)) % 5_000);
+                    client.get((k.wrapping_mul(w + 1)) % 5_000);
                 }
+                client.drain();
+                client.stats()
             }));
         }
+        assert!(server.take_client().is_err(), "only cfg.clients handles");
+        let mut sent = 0;
         for h in handles {
-            h.join().unwrap();
+            sent += h.join().unwrap().sent;
         }
-        let server = Arc::try_unwrap(server).ok().expect("sole owner");
         let snap = server.shutdown();
+        assert_eq!(sent, 80_000);
         assert_eq!(snap.requests, 80_000);
+    }
+
+    #[test]
+    fn untaken_clients_do_not_block_shutdown() {
+        let mut cfg = small_cfg();
+        cfg.clients = 3;
+        let mut server = CacheServer::start(cfg).unwrap();
+        let mut client = server.take_client().unwrap();
+        for k in 0..500u64 {
+            client.get(k);
+        }
+        client.drain();
+        drop(client);
+        // 2 clients never taken: shutdown must still join cleanly
+        assert_eq!(server.shutdown().requests, 500);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        for cfg in [
+            ServerConfig {
+                capacity: 0,
+                ..Default::default()
+            },
+            ServerConfig {
+                catalog: 100,
+                capacity: 200,
+                ..Default::default()
+            },
+            ServerConfig {
+                policy: "bogus".into(),
+                ..Default::default()
+            },
+            ServerConfig {
+                policy: "opt".into(), // needs a hindsight trace
+                ..Default::default()
+            },
+            ServerConfig {
+                policy: "ogb-frac".into(), // fractional: bitmap can't represent
+                ..Default::default()
+            },
+            ServerConfig {
+                policy: "omd-frac".into(),
+                ..Default::default()
+            },
+            ServerConfig {
+                shards: 0,
+                ..Default::default()
+            },
+        ] {
+            assert!(CacheServer::start(cfg).is_err());
+        }
+    }
+
+    #[test]
+    fn lru_policy_server_works_too() {
+        let mut cfg = small_cfg();
+        cfg.policy = "lru".into();
+        let mut server = CacheServer::start(cfg).unwrap();
+        let mut client = server.take_client().unwrap();
+        for k in 0..10_000u64 {
+            client.get(k % 20); // tiny hot set: LRU hits nearly always
+        }
+        client.drain();
+        let hits = client.stats().hits;
+        drop(client);
+        let snap = server.shutdown();
+        assert_eq!(snap.requests, 10_000);
+        assert!(hits > 9_000, "hot set should hit under LRU: {hits}");
     }
 }

@@ -1,127 +1,321 @@
-//! Shard worker: one OS thread owning an OGB policy instance for its slice
-//! of the key space.  Requests arrive over a bounded channel (backpressure)
-//! and carry their enqueue timestamp so the recorded latency covers
-//! queueing + policy work — the number a client actually observes.
+//! Shard worker: one OS thread owning a concrete [`AnyPolicy`] instance
+//! for its dense slice of the key space, draining request *batches* from
+//! SPSC work rings and pushing the same (bitmap-annotated) batches back
+//! on reply rings (DESIGN.md §8).
+//!
+//! Steady-state contract: the loop performs **zero heap allocations per
+//! request** — batches are recycled buffers moved through the rings, hit
+//! results are bits in the batch's preallocated bitmap (the seed's
+//! per-request `Instant` + `Option<Sender<bool>>` are gone), metrics are
+//! three relaxed atomic adds plus one O(1) weighted histogram record per
+//! batch.  `ogb-cache serve --smoke` asserts the contract in CI via the
+//! counting global allocator (`util::bench::alloc_count`).
 
-use std::sync::mpsc::{Receiver, Sender};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::Duration;
 
-use crate::policies::{Ogb, Policy};
+use crate::policies::{self, BuildOpts, Policy};
 
+use super::batch::Batch;
 use super::metrics::Metrics;
-
-/// A request routed to a shard.
-pub struct ShardRequest {
-    /// key already translated to the shard-local dense id
-    pub local_item: u64,
-    pub enqueued: Instant,
-    /// optional synchronous reply (true = hit)
-    pub reply: Option<Sender<bool>>,
-}
-
-/// Control messages interleaved with requests.
-pub enum ShardMsg {
-    Request(ShardRequest),
-    /// redraw the sampler's permanent random numbers (paper §5.1)
-    Redraw,
-    /// flush + stop
-    Shutdown,
-}
+use super::ring::{Consumer, PopError, Producer, PushError};
 
 pub struct ShardConfig {
     pub shard_id: usize,
+    /// dense local catalog size (exact, from [`super::router::Partition`])
     pub local_catalog: usize,
-    pub capacity: f64,
-    pub eta: f64,
+    /// shard-local cache capacity (items)
+    pub capacity: usize,
+    /// policy name accepted by `policies::build`
+    pub policy: String,
+    /// batch size B: ring batch capacity == the policy's sample-refresh
+    /// batch, so one full drained batch maps onto one Algorithm 3
+    /// UPDATESAMPLE cadence
     pub batch: usize,
+    /// expected shard-local horizon (sets the theoretical eta)
+    pub horizon: usize,
     pub seed: u64,
+    pub rebase_threshold: Option<f64>,
 }
 
-/// Run the shard loop until `Shutdown` (or the channel closes).
-pub fn run_shard(cfg: ShardConfig, rx: Receiver<ShardMsg>, metrics: Arc<Metrics>) {
-    let mut policy = Ogb::new(
-        cfg.local_catalog,
-        cfg.capacity,
-        cfg.eta,
-        cfg.batch,
-        cfg.seed ^ (cfg.shard_id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
-    );
+/// One client's pair of rings as seen from the shard: requests in,
+/// replies out.  A shard serves one lane per client handle so every ring
+/// keeps exactly one producer and one consumer.
+pub struct ShardLane {
+    pub work: Consumer<Batch>,
+    pub done: Producer<Batch>,
+}
+
+/// Escalating idle wait: spin first (another batch usually lands within
+/// tens of cycles under load), then yield, then — only when truly idle —
+/// sleep so parked shards do not burn a core.  While work is queued but
+/// blocked on a full reply ring (`reply_blocked`), the escalation stops
+/// at `yield_now` so the resume latency after the client reaps stays in
+/// the scheduler-quantum range instead of adding 50us sleeps to p99.
+#[inline]
+fn idle_backoff(idle: &mut u32, reply_blocked: bool) {
+    *idle = idle.saturating_add(1);
+    if *idle < 64 {
+        std::hint::spin_loop();
+    } else if *idle < 512 || reply_blocked {
+        std::thread::yield_now();
+    } else {
+        std::thread::sleep(Duration::from_micros(50));
+    }
+}
+
+/// Run the shard loop until every client lane disconnects (client
+/// handles dropped) and all queued batches are drained.
+///
+/// The policy is built *inside* the worker thread because `Policy`
+/// implementations are deliberately `!Send` (see `policies`).  Shard 0
+/// seeds its policy with `cfg.seed` verbatim so a 1-shard server is
+/// bit-identical to a single-policy `sim::run_source` replay
+/// (`rust/tests/coordinator_equivalence.rs`); later shards decorrelate.
+pub fn run_shard(
+    cfg: ShardConfig,
+    mut lanes: Vec<ShardLane>,
+    redraw: Arc<AtomicBool>,
+    metrics: Arc<Metrics>,
+) {
+    let opts = BuildOpts {
+        t_hint: cfg.horizon.max(1),
+        batch: cfg.batch,
+        seed: cfg.seed ^ (cfg.shard_id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        rebase_threshold: cfg.rebase_threshold,
+    };
+    // `CacheServer::start` validated the (policy, shape) combination with
+    // a probe build; a failure here is unreachable in practice.
+    let mut policy = policies::build(
+        &cfg.policy,
+        cfg.local_catalog.max(2),
+        cfg.capacity.clamp(1, cfg.local_catalog.max(2) - 1),
+        &opts,
+        None,
+    )
+    .expect("policy validated at server start");
+
+    let mut open = vec![true; lanes.len()];
+    let mut n_open = lanes.len();
     let mut last_evictions = 0u64;
-    let mut last_requests = 0u64;
-    while let Ok(msg) = rx.recv() {
-        match msg {
-            ShardMsg::Request(req) => {
-                let hit = policy.request(req.local_item) >= 1.0;
-                let lat = req.enqueued.elapsed().as_nanos().min(u128::from(u64::MAX)) as u64;
-                metrics.record_request(hit, lat);
-                last_requests += 1;
-                if last_requests % cfg.batch as u64 == 0 {
-                    metrics
-                        .batch_updates
-                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let mut idle = 0u32;
+    while n_open > 0 {
+        let mut progressed = false;
+        let mut reply_blocked = false;
+        for (i, lane) in lanes.iter_mut().enumerate() {
+            if !open[i] {
+                continue;
+            }
+            // Don't start a batch this lane cannot reply to: when the
+            // done ring is full, skip the lane (its client will reap)
+            // instead of blocking on the reply push below — otherwise
+            // one idle client head-of-line-blocks every other lane on
+            // this shard.  If the client is already gone the reply will
+            // be dropped anyway, so proceed and drain the work ring.
+            if lane.done.len() == lane.done.capacity() && !lane.done.is_closed() {
+                reply_blocked |= !lane.work.is_empty();
+                continue;
+            }
+            // One batch per lane per pass keeps multi-client service fair.
+            match lane.work.try_pop() {
+                Ok(mut batch) => {
+                    progressed = true;
+                    if redraw.swap(false, Ordering::AcqRel) {
+                        policy_redraw(&mut policy);
+                    }
+                    let mut hits = 0u64;
+                    for k in 0..batch.len() {
+                        let item = batch.item(k) as u64;
+                        if policy.request(item) >= 1.0 {
+                            batch.set_hit(k);
+                            hits += 1;
+                        }
+                    }
                     let ev = policy.diag().sample_evictions;
                     metrics
                         .evictions
-                        .fetch_add(ev - last_evictions, std::sync::atomic::Ordering::Relaxed);
+                        .fetch_add(ev - last_evictions, Ordering::Relaxed);
                     last_evictions = ev;
+                    let lat = batch
+                        .enqueued()
+                        .elapsed()
+                        .as_nanos()
+                        .min(u128::from(u64::MAX)) as u64;
+                    metrics.record_batch(batch.len() as u64, hits, lat);
+                    // Reply: push the annotated batch back.  The free-
+                    // slot check above makes Full effectively
+                    // unreachable (only the client removes entries, so
+                    // occupancy cannot grow behind our back); the loop
+                    // stays as a belt-and-braces fallback.
+                    let mut b = batch;
+                    loop {
+                        match lane.done.try_push(b) {
+                            Ok(()) => break,
+                            Err(PushError::Full(ret)) => {
+                                b = ret;
+                                std::thread::yield_now();
+                            }
+                            Err(PushError::Disconnected(_)) => break, // client gone
+                        }
+                    }
                 }
-                if let Some(reply) = req.reply {
-                    let _ = reply.send(hit);
+                Err(PopError::Empty) => {}
+                Err(PopError::Disconnected) => {
+                    open[i] = false;
+                    n_open -= 1;
                 }
             }
-            ShardMsg::Redraw => policy.redraw_sampler(),
-            ShardMsg::Shutdown => break,
         }
+        if progressed {
+            idle = 0;
+        } else {
+            idle_backoff(&mut idle, reply_blocked);
+        }
+    }
+}
+
+/// Redraw the sampler's permanent random numbers where the policy has
+/// one (paper §5.1); a no-op for the comparison policies.
+fn policy_redraw(policy: &mut policies::AnyPolicy) {
+    if let policies::AnyPolicy::Ogb(p) = policy {
+        p.redraw_sampler();
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::ring;
     use super::*;
-    use std::sync::mpsc;
 
-    #[test]
-    fn shard_processes_and_replies() {
-        let (tx, rx) = mpsc::sync_channel::<ShardMsg>(64);
+    fn spawn_shard(
+        batch: usize,
+        lanes: usize,
+        depth: usize,
+    ) -> (
+        Vec<ring::Producer<Batch>>,
+        Vec<ring::Consumer<Batch>>,
+        Arc<Metrics>,
+        std::thread::JoinHandle<()>,
+    ) {
         let metrics = Arc::new(Metrics::new());
+        let mut works = Vec::new();
+        let mut dones = Vec::new();
+        let mut shard_lanes = Vec::new();
+        for _ in 0..lanes {
+            let (wtx, wrx) = ring::ring::<Batch>(depth);
+            let (dtx, drx) = ring::ring::<Batch>(depth);
+            works.push(wtx);
+            dones.push(drx);
+            shard_lanes.push(ShardLane {
+                work: wrx,
+                done: dtx,
+            });
+        }
         let m2 = metrics.clone();
         let h = std::thread::spawn(move || {
             run_shard(
                 ShardConfig {
                     shard_id: 0,
                     local_catalog: 100,
-                    capacity: 20.0,
-                    eta: 0.01,
-                    batch: 4,
+                    capacity: 20,
+                    policy: "ogb".into(),
+                    batch,
+                    horizon: 100_000,
                     seed: 1,
+                    rebase_threshold: None,
                 },
-                rx,
+                shard_lanes,
+                Arc::new(AtomicBool::new(false)),
                 m2,
             )
         });
-        let (rtx, rrx) = mpsc::channel();
+        (works, dones, metrics, h)
+    }
+
+    #[test]
+    fn shard_processes_batches_and_replies_in_order() {
+        let batch = 8usize;
+        let (mut works, mut dones, metrics, h) = spawn_shard(batch, 1, 16);
         let total = 2_000u64;
-        for k in 0..total {
-            tx.send(ShardMsg::Request(ShardRequest {
-                local_item: k % 10,
-                enqueued: Instant::now(),
-                reply: Some(rtx.clone()),
-            }))
-            .unwrap();
-            let _ = rrx.recv().unwrap();
+        let mut sent = 0u64;
+        let mut replies = 0u64;
+        let mut hits = 0u64;
+        let mut next_seq = 0u64;
+        let mut expect_seq = 0u64;
+        let mut pending = Batch::new(batch);
+        while replies < total {
+            if sent < total && !pending.is_full() {
+                pending.push((sent % 10) as u32); // hot 10-item set
+                sent += 1;
+            }
+            if pending.is_full() || (sent == total && !pending.is_empty()) {
+                pending.set_seq(next_seq);
+                pending.stamp();
+                match works[0].try_push(std::mem::replace(&mut pending, Batch::new(batch))) {
+                    Ok(()) => next_seq += 1,
+                    Err(PushError::Full(ret)) => pending = ret,
+                    Err(PushError::Disconnected(_)) => panic!("shard died"),
+                }
+            }
+            while let Ok(b) = dones[0].try_pop() {
+                assert_eq!(b.seq(), expect_seq, "reply order must be FIFO");
+                expect_seq += 1;
+                replies += b.len() as u64;
+                hits += b.hit_count();
+            }
         }
-        tx.send(ShardMsg::Shutdown).unwrap();
+        drop(works);
         h.join().unwrap();
         let s = metrics.snapshot();
         assert_eq!(s.requests, total);
+        assert_eq!(s.hits, hits);
         // hot 10-item set inside C=20: the policy converges to caching it
         assert!(
-            s.hits as f64 > 0.5 * total as f64,
-            "hot set should mostly hit: {}/{}",
-            s.hits,
-            total
+            hits as f64 > 0.5 * total as f64,
+            "hot set should mostly hit: {hits}/{total}"
         );
-        assert!(s.batch_updates >= total / 4 - 1);
+        assert!(s.batch_updates >= total / batch as u64);
+        assert!(s.p50_ns() > 0);
+    }
+
+    #[test]
+    fn shard_exits_when_all_lanes_disconnect() {
+        let (works, dones, metrics, h) = spawn_shard(4, 3, 8);
+        drop(works);
+        h.join().unwrap();
+        drop(dones);
+        assert_eq!(metrics.snapshot().requests, 0);
+    }
+
+    #[test]
+    fn queued_batches_drain_before_exit() {
+        let (mut works, mut dones, metrics, h) = spawn_shard(4, 1, 64);
+        let mut sent = 0u64;
+        for seq in 0..32u64 {
+            let mut b = Batch::new(4);
+            for k in 0..4u32 {
+                b.push(k);
+            }
+            b.set_seq(seq);
+            b.stamp();
+            sent += 4;
+            let mut v = b;
+            loop {
+                match works[0].try_push(v) {
+                    Ok(()) => break,
+                    Err(PushError::Full(ret)) => {
+                        v = ret;
+                        // keep the done ring from filling up
+                        while dones[0].try_pop().is_ok() {}
+                        std::thread::yield_now();
+                    }
+                    Err(PushError::Disconnected(_)) => panic!("shard died"),
+                }
+            }
+        }
+        drop(works); // disconnect with work still queued
+        h.join().unwrap(); // must drain, not deadlock
+        assert_eq!(metrics.snapshot().requests, sent);
     }
 }

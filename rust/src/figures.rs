@@ -664,19 +664,25 @@ mod tests {
     }
 
     #[test]
-    fn every_figure_runs_at_tiny_scale() {
+    fn every_figure_runs_at_tiny_scale() -> Result<()> {
+        use anyhow::Context as _;
         for id in ALL_IDS {
             // fig3/fig4 clamp their own minimums; all must produce files.
             let opts = tiny_opts(id);
-            let files = run_figure(id, &opts).unwrap_or_else(|e| panic!("{id}: {e}"));
-            assert!(!files.is_empty(), "{id} produced no files");
+            // Result propagation (no panic in the dispatch path): a
+            // failing figure reaches the harness as a tagged Err, the
+            // same way `ogb-cache figures` reaches the CLI exit path.
+            let files = run_figure(id, &opts).with_context(|| format!("figure `{id}`"))?;
+            anyhow::ensure!(!files.is_empty(), "{id} produced no files");
             for f in &files {
-                let text = std::fs::read_to_string(f).unwrap();
-                assert!(text.lines().count() > 3, "{id}: {f:?} nearly empty");
-                assert!(text.contains("# experiment"), "{id}: missing provenance");
+                let text = std::fs::read_to_string(f)
+                    .with_context(|| format!("{id}: read {}", f.display()))?;
+                anyhow::ensure!(text.lines().count() > 3, "{id}: {f:?} nearly empty");
+                anyhow::ensure!(text.contains("# experiment"), "{id}: missing provenance");
             }
             std::fs::remove_dir_all(&opts.out_dir).ok();
         }
+        Ok(())
     }
 
     #[test]

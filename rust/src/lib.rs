@@ -25,12 +25,18 @@
 //!   policy type so concrete callers monomorphize the per-request loop),
 //!   regret accounting with the one-pass streaming OPT
 //!   ([`sim::StreamingOpt`]), the parallel policy × cache-size
-//!   [`sim::sweep`] runner behind `ogb-cache sweep`, and the
-//!   [`sim::hotpath`] microbench suite behind `ogb-cache bench`;
+//!   [`sim::sweep`] runner behind `ogb-cache sweep`, the
+//!   [`sim::hotpath`] microbench suite behind `ogb-cache bench`, and
+//!   the [`sim::shardbench`] multi-core scaling suite behind
+//!   `ogb-cache serve --smoke` / `cargo bench --bench shards`;
 //! * [`runtime`] — the PJRT (XLA) runtime that loads the AOT-compiled JAX /
 //!   Pallas artifacts backing the dense baseline;
-//! * [`coordinator`] — a deployable sharded cache service built around the
-//!   policy (router, batcher, metrics);
+//! * [`coordinator`] — the sharded serving engine (DESIGN.md §8): a
+//!   partitioned router over dense per-shard id spaces, batched SPSC
+//!   ring pipeline with recycled request batches and bitmap replies
+//!   (zero steady-state allocations end-to-end), p50/p99/p999 latency
+//!   metrics — driven by `ogb-cache serve` over any `trace::stream`
+//!   scenario;
 //! * [`util`] — zero-dependency substrates required by the offline build
 //!   environment: PRNG, CLI, CSV, property-testing, and
 //!   [`util::flattree::FlatTree`] — the flat arena B+-tree carrying the
@@ -53,6 +59,12 @@
 //!   allocs/request = 0 (see [`policies::Diag::scratch_grows`]).
 //! * `BENCH_stream.json` — `ogb-cache sweep`: end-to-end replay
 //!   throughput, per-policy hit ratio, peak-RSS proxy.
+//! * `BENCH_shard.json` — `ogb-cache serve --smoke` (or `cargo bench
+//!   --bench shards`): the multi-core axis — aggregate req/s,
+//!   ns/request, allocs/request and p50/p99/p999 enqueue-to-served
+//!   latency by policy × shard count × catalog × cache size; the
+//!   shard pipeline's steady-state contract is likewise 0
+//!   allocations, asserted by the CI smoke run.
 //!
 //! CI regenerates both in smoke mode on every push (tiny grids, one
 //! repetition) so the emission paths cannot rot; commit refreshed

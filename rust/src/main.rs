@@ -5,7 +5,8 @@
 //!   sweep      replay a streaming scenario across a policy × cache grid
 //!   bench      hot-path microbench (ns/req, pops/req, allocs/req -> BENCH_hotpath.json)
 //!   figures    regenerate the paper's tables/figures (CSV under results/)
-//!   serve      run the sharded cache service under synthetic load
+//!   serve      pump a streaming scenario through the sharded serving engine
+//!              (--smoke runs the multi-core shard suite -> BENCH_shard.json)
 //!   analyze    temporal-locality analysis of a trace (App. B)
 //!   validate   three-way projection check: lazy == dense == XLA artifact
 //!   gen-trace  write a generated trace to a binary file
@@ -15,8 +16,8 @@ use ogb_cache::coordinator::{CacheServer, ServerConfig};
 use ogb_cache::figures::{run_figure, FigOpts};
 use ogb_cache::policies::{BuildOpts, Policy};
 use ogb_cache::proj::{dense, LazySimplex};
-use ogb_cache::sim::{self, HotpathConfig, RunConfig, SweepConfig};
-use ogb_cache::trace::stream::SourceSpec;
+use ogb_cache::sim::{self, HotpathConfig, RunConfig, ShardBenchConfig, SweepConfig};
+use ogb_cache::trace::stream::{RequestSource, SourceSpec};
 use ogb_cache::trace::{self, realworld, stream, synth, Trace};
 use ogb_cache::util::args::{flag, opt, Cli};
 use ogb_cache::util::bench::alloc_count::CountingAlloc;
@@ -93,17 +94,24 @@ fn cli() -> Cli {
         )
         .command(
             "serve",
-            "run the sharded cache service under synthetic load",
+            "pump a streaming scenario through the sharded serving engine (batched SPSC shard pipeline)",
             vec![
-                opt("catalog", "catalog size", "100000"),
-                opt("capacity", "total cache capacity", "5000"),
-                opt("shards", "shard threads", "4"),
-                opt("batch", "OGB batch size per shard", "64"),
-                opt("requests", "number of requests to drive", "1000000"),
-                opt("zipf", "workload Zipf exponent", "0.9"),
-                opt("clients", "load-generator threads", "2"),
+                opt(
+                    "source",
+                    "source spec, e.g. `drift-zipf:n=1e6,t=1e7 & flash:n=1e6,t=1e7` (see trace::stream::spec)",
+                    "zipf:n=100000,t=1000000,s=0.9",
+                ),
+                opt("policy", "shard policy name (lru lfu fifo arc gds ftpl ogb ogb-classic; fractional variants and opt are not servable)", "ogb"),
+                opt("capacity", "total cache capacity across shards (0 = 5% of catalog)", "0"),
+                opt("shards", "shard worker threads", "4"),
+                opt("clients", "load-generator threads (each gets its own SPSC lane per shard)", "1"),
+                opt("batch", "ring batch size B (also each shard policy's sample-refresh batch)", "64"),
+                opt("queue-depth", "per-lane ring capacity in batches", "64"),
+                opt("max-requests", "cap on driven requests (0 = source horizon)", "0"),
                 opt("seed", "random seed", "42"),
-                flag("open-loop", "fire-and-forget load (throughput mode)"),
+                opt("rebase-threshold", "lazy projection re-base threshold (empty = default 1e6)", ""),
+                opt("bench-json", "BENCH_shard.json path for --smoke (empty = skip)", "BENCH_shard.json"),
+                flag("smoke", "tiny CI grid: run the multi-core shard suite (shards {1,2}, small N; honors --policy/--batch/--queue-depth/--seed, ignores the other serve flags), emit BENCH_shard.json, assert the zero-allocation contract"),
             ],
         )
         .command(
@@ -373,60 +381,130 @@ fn cmd_bench(a: &ogb_cache::util::args::Args) -> Result<()> {
 }
 
 fn cmd_serve(a: &ogb_cache::util::args::Args) -> Result<()> {
-    let cfg = ServerConfig {
-        catalog: a.get_parse("catalog", 100_000),
-        capacity: a.get_parse("capacity", 5_000),
-        shards: a.get_parse("shards", 4),
-        batch: a.get_parse("batch", 64),
-        horizon: a.get_parse("requests", 1_000_000),
-        queue_depth: 1024,
-        seed: a.get_parse("seed", 42),
+    if a.flag("smoke") {
+        // CI mode: run the multi-core shard suite on its tiny grid, emit
+        // BENCH_shard.json, and enforce the zero-allocation contract.
+        // The grid (shards {1,2}, small N/C) is fixed; the measurement
+        // knobs that map onto the suite are honored.
+        let mut cfg = ShardBenchConfig::smoke();
+        cfg.policies = vec![a.get_or("policy", "ogb").to_string()];
+        cfg.batch = a.get_parse("batch", cfg.batch);
+        cfg.queue_depth = a.get_parse("queue-depth", cfg.queue_depth);
+        cfg.seed = a.get_parse("seed", cfg.seed);
+        let r = sim::run_shardbench(&cfg)?;
+        r.print();
+        println!(
+            "\n{} cells in {:.2}s (alloc counter {})",
+            r.rows.len(),
+            r.wall_s,
+            if r.alloc_counter_active { "active" } else { "inactive" }
+        );
+        let out = a.get_or("bench-json", "BENCH_shard.json");
+        if !out.is_empty() {
+            println!("wrote {}", r.write_json(out)?.display());
+        }
+        if r.alloc_counter_active {
+            anyhow::ensure!(
+                r.steady_allocs_total() == 0,
+                "shard pipeline allocated at steady state: {} allocations",
+                r.steady_allocs_total()
+            );
+            println!("steady-state allocation contract holds (0 allocs)");
+        }
+        return Ok(());
+    }
+
+    let spec = SourceSpec::parse(a.get_or("source", "zipf:n=100000,t=1000000,s=0.9"))?;
+    let seed: u64 = a.get_parse("seed", 42);
+    let max_requests: usize = a.get_parse("max-requests", 0);
+    let probe = spec.build(seed)?;
+    let catalog = probe.catalog();
+    let horizon = probe.horizon();
+    drop(probe);
+    let requests = match (horizon, max_requests) {
+        (_, m) if m > 0 => horizon.map_or(m, |h| h.min(m)),
+        (Some(h), _) => h,
+        (None, _) => anyhow::bail!("unbounded source `{}` needs --max-requests", spec.text()),
     };
-    let requests: usize = a.get_parse("requests", 1_000_000);
-    let clients: usize = a.get_parse("clients", 2);
-    let zipf_s: f64 = a.get_parse("zipf", 0.9);
-    let open_loop = a.flag("open-loop");
+    let capacity_arg: usize = a.get_parse("capacity", 0);
+    let clients: usize = a.get_parse("clients", 1);
+    let cfg = ServerConfig {
+        catalog,
+        capacity: if capacity_arg > 0 {
+            capacity_arg
+        } else {
+            (catalog / 20).max(1)
+        },
+        shards: a.get_parse("shards", 4),
+        policy: a.get_or("policy", "ogb").to_string(),
+        batch: a.get_parse("batch", 64),
+        horizon: requests,
+        queue_depth: a.get_parse("queue-depth", 64),
+        clients,
+        seed,
+        rebase_threshold: parse_rebase_threshold(a)?,
+    };
     println!(
-        "serving catalog={} capacity={} shards={} batch={} clients={clients} zipf={zipf_s} open_loop={open_loop}",
-        cfg.catalog, cfg.capacity, cfg.shards, cfg.batch
+        "serving `{}` T={requests} N={catalog} | policy={} capacity={} shards={} batch={} queue_depth={} clients={}",
+        spec.text(),
+        cfg.policy,
+        cfg.capacity,
+        cfg.shards,
+        cfg.batch,
+        cfg.queue_depth,
+        cfg.clients,
     );
-    let catalog = cfg.catalog;
-    let seed = cfg.seed;
-    let server = std::sync::Arc::new(CacheServer::start(cfg)?);
+    let mut server = CacheServer::start(cfg)?;
     let start = std::time::Instant::now();
     let mut handles = Vec::new();
     for w in 0..clients {
-        let s = server.clone();
-        let per_client = requests / clients;
-        handles.push(std::thread::spawn(move || {
-            let mut rng = Xoshiro256pp::seed_from(seed ^ ((w as u64) << 32));
-            let dist = ogb_cache::util::Zipf::new(catalog as u64, zipf_s);
-            if open_loop {
-                for _ in 0..per_client {
-                    s.get_nowait(dist.sample(&mut rng));
-                }
-            } else {
-                let client = s.client();
-                let (tx, rx) = std::sync::mpsc::channel();
-                for _ in 0..per_client {
-                    client.get_with(dist.sample(&mut rng), &tx);
-                    let _ = rx.recv();
+        let mut client = server.take_client()?;
+        // Clients partition the scenario by striding: client w serves
+        // requests w, w+K, w+2K, ... of the *same* deterministic stream
+        // (every client builds `spec` with the same seed), so the union
+        // of clients covers the scenario exactly once — including for
+        // seed-independent `file:`/`trace:` sources, where per-client
+        // reseeding would just replay the same prefix K times.  With
+        // K = 1 this is exactly the `sim::run_source` request order.
+        let spec = spec.clone();
+        let per_client = requests / clients + usize::from(w < requests % clients);
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            let mut source = spec.build(seed)?;
+            for _ in 0..w {
+                if source.next_request().is_none() {
+                    break;
                 }
             }
+            let mut served = 0usize;
+            'serve: while served < per_client {
+                let Some(r) = source.next_request() else {
+                    break;
+                };
+                client.get(r as u64);
+                served += 1;
+                for _ in 1..clients {
+                    if source.next_request().is_none() {
+                        break 'serve;
+                    }
+                }
+            }
+            client.drain();
+            Ok(())
         }));
     }
     for h in handles {
-        h.join().map_err(|_| anyhow::anyhow!("client panicked"))?;
+        h.join().map_err(|_| anyhow::anyhow!("client panicked"))??;
     }
     let elapsed = start.elapsed().as_secs_f64();
-    let server = std::sync::Arc::try_unwrap(server)
-        .map_err(|_| anyhow::anyhow!("server still referenced"))?;
     let snap = server.shutdown();
     println!("{}", snap.report());
     println!(
-        "drove {} requests in {elapsed:.2}s => {:.3e} req/s end-to-end",
+        "drove {} requests in {elapsed:.2}s => {:.3e} req/s end-to-end | latency p50={}ns p99={}ns p999={}ns",
         snap.requests,
-        snap.requests as f64 / elapsed
+        snap.requests as f64 / elapsed.max(1e-12),
+        snap.p50_ns(),
+        snap.p99_ns(),
+        snap.p999_ns(),
     );
     Ok(())
 }

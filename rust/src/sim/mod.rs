@@ -3,15 +3,19 @@
 //! cumulative hit ratio, occupancy samples, removed-coefficient rates,
 //! wall-clock throughput — plus regret accounting against OPT (Eq. (1)),
 //! including the streaming one-pass [`StreamingOpt`], the parallel
-//! policy × cache-size [`sweep`] runner, and the request [`hotpath`]
-//! microbench suite behind `ogb-cache bench` / `BENCH_hotpath.json`.
+//! policy × cache-size [`sweep`] runner, the request [`hotpath`]
+//! microbench suite behind `ogb-cache bench` / `BENCH_hotpath.json`,
+//! and the [`shardbench`] multi-core scaling suite behind
+//! `ogb-cache serve --smoke` / `BENCH_shard.json`.
 
 pub mod engine;
 pub mod hotpath;
 pub mod regret;
+pub mod shardbench;
 pub mod sweep;
 
 pub use engine::{run, run_source, RunConfig, RunResult};
 pub use hotpath::{run_hotpath, HotpathConfig, HotpathResult, HotpathRow};
 pub use regret::{regret_series, RegretPoint, StreamingOpt};
+pub use shardbench::{run_shardbench, ShardBenchConfig, ShardBenchResult, ShardBenchRow};
 pub use sweep::{run_sweep, SweepCell, SweepConfig, SweepResult};

@@ -1,0 +1,444 @@
+//! Multi-core scaling suite behind `ogb-cache serve --smoke` and
+//! `benches/shards.rs` — the per-PR perf record of the sharded serving
+//! engine (DESIGN.md §8, EXPERIMENTS.md §Perf iter 5), the multi-core
+//! axis next to `sim::hotpath`'s single-thread record.
+//!
+//! For every policy × shard-count × catalog × cache-size cell the suite
+//! starts a [`CacheServer`], pumps a pre-generated Zipf request vector
+//! through a single batching client (scatter is ~10 ns/request, far
+//! below per-request policy cost, so one producer saturates the shard
+//! counts measured here), and reports per cell:
+//!
+//! * **req/s, ns/request** — median over repetitions of flush-to-drain
+//!   wall clock (pipeline throughput, reply gathering included);
+//! * **allocs/request + steady_allocs** — heap allocations observed by
+//!   the counting global allocator across the *whole process* during the
+//!   timed window; the steady-state contract for the shard loop and the
+//!   client scatter/gather path is **0** (warm-up populates every free
+//!   list first);
+//! * **p50/p99/p999 enqueue-to-served latency** — from the merged shard
+//!   histograms (batch-level flush stamps, per-request weighted; covers
+//!   ring queueing + policy work, not pre-flush pending-batch dwell or
+//!   reply transit — see `MetricsSnapshot::p50_ns`);
+//! * **hit_ratio** — over the timed passes only (warm-up excluded via a
+//!   snapshot delta), for cross-checking against `sim` runs.
+//!
+//! Results land in machine-readable `BENCH_shard.json` next to
+//! `BENCH_hotpath.json` / `BENCH_stream.json`; the CI bench-smoke job
+//! runs `serve --smoke` and asserts both the emission path and the
+//! zero-allocation contract.
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::coordinator::{CacheServer, ServerConfig, ShardedClient};
+use crate::util::bench::{alloc_count, print_table, BenchResult};
+use crate::util::csv::json::Json;
+use crate::util::{Xoshiro256pp, Zipf};
+
+/// Grid and measurement configuration.
+#[derive(Debug, Clone)]
+pub struct ShardBenchConfig {
+    /// policy names accepted by `policies::build` (`opt` excluded)
+    pub policies: Vec<String>,
+    /// shard thread counts to sweep (the multi-core axis)
+    pub shard_counts: Vec<usize>,
+    /// catalog sizes N
+    pub ns: Vec<usize>,
+    /// cache sizes as a percentage of the catalog
+    pub cache_pcts: Vec<f64>,
+    /// requests per replay (one warm-up replay + `reps` timed replays)
+    pub requests: usize,
+    /// timed repetitions (median reported)
+    pub reps: usize,
+    /// ring batch size B (also each shard policy's sample-refresh batch)
+    pub batch: usize,
+    /// per-lane ring capacity in batches
+    pub queue_depth: usize,
+    /// workload skew
+    pub zipf_s: f64,
+    pub seed: u64,
+    /// marks the tiny CI configuration in the report
+    pub smoke: bool,
+}
+
+impl Default for ShardBenchConfig {
+    fn default() -> Self {
+        Self {
+            policies: vec!["ogb".into(), "lru".into()],
+            shard_counts: vec![1, 2, 4, 8],
+            ns: vec![100_000, 1_000_000],
+            cache_pcts: vec![5.0],
+            requests: 2_000_000,
+            reps: 3,
+            batch: 64,
+            queue_depth: 64,
+            zipf_s: 0.9,
+            seed: 42,
+            smoke: false,
+        }
+    }
+}
+
+impl ShardBenchConfig {
+    /// Tiny configuration for the CI smoke job: 2 shards, small N, one
+    /// repetition — enough to exercise the full pipeline and the
+    /// zero-allocation assertion without loading a shared runner.
+    pub fn smoke() -> Self {
+        Self {
+            policies: vec!["ogb".into()],
+            shard_counts: vec![1, 2],
+            ns: vec![20_000],
+            cache_pcts: vec![5.0],
+            requests: 120_000,
+            reps: 1,
+            queue_depth: 32,
+            smoke: true,
+            ..Self::default()
+        }
+    }
+}
+
+/// One grid cell's measurements.
+#[derive(Debug, Clone)]
+pub struct ShardBenchRow {
+    pub policy: String,
+    pub shards: usize,
+    pub n: usize,
+    pub c: usize,
+    pub cache_pct: f64,
+    /// median flush-to-drain ns per request across reps
+    pub ns_per_request: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    /// aggregate pipeline throughput (1e9 / ns_per_request)
+    pub req_per_s: f64,
+    /// process-wide heap allocations in the timed window (None when the
+    /// counting allocator is not installed in this binary)
+    pub allocs_per_request: Option<f64>,
+    /// raw allocation count in the timed window (contract: 0)
+    pub steady_allocs: Option<u64>,
+    /// enqueue-to-served percentiles from the merged shard histograms
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+    pub p999_ns: u64,
+    pub hit_ratio: f64,
+    pub requests_timed: u64,
+}
+
+/// Whole-suite outcome.
+#[derive(Debug, Clone)]
+pub struct ShardBenchResult {
+    pub rows: Vec<ShardBenchRow>,
+    pub requests_per_rep: usize,
+    pub reps: usize,
+    pub batch: usize,
+    pub queue_depth: usize,
+    pub zipf_s: f64,
+    pub seed: u64,
+    pub smoke: bool,
+    pub alloc_counter_active: bool,
+    pub wall_s: f64,
+}
+
+impl ShardBenchResult {
+    /// Total allocations observed across every timed window — the CI
+    /// smoke job asserts this is zero (shard loop + scatter/gather are
+    /// allocation-free at steady state).
+    pub fn steady_allocs_total(&self) -> u64 {
+        self.rows
+            .iter()
+            .map(|r| r.steady_allocs.unwrap_or(0))
+            .sum()
+    }
+
+    /// Render the aligned console table plus the latency/alloc columns.
+    pub fn print(&self) {
+        let results: Vec<BenchResult> = self
+            .rows
+            .iter()
+            .map(|r| BenchResult {
+                name: format!(
+                    "{:<10} shards={:<2} N={:<9} C={:<8}",
+                    r.policy, r.shards, r.n, r.c
+                ),
+                ns_per_op: r.ns_per_request,
+                min_ns: r.min_ns,
+                max_ns: r.max_ns,
+                ops: r.requests_timed,
+            })
+            .collect();
+        print_table(
+            "sharded serving engine: ns/request flush-to-drain (median over reps)",
+            &results,
+        );
+        println!(
+            "\n{:<10} {:>7} {:>10} {:>10} {:>11} {:>11} {:>11} {:>10} {:>12}",
+            "policy", "shards", "N", "C", "p50", "p99", "p999", "hit", "allocs/req"
+        );
+        for r in &self.rows {
+            println!(
+                "{:<10} {:>7} {:>10} {:>10} {:>9}ns {:>9}ns {:>9}ns {:>10.4} {:>12}",
+                r.policy,
+                r.shards,
+                r.n,
+                r.c,
+                r.p50_ns,
+                r.p99_ns,
+                r.p999_ns,
+                r.hit_ratio,
+                match r.allocs_per_request {
+                    Some(a) => format!("{a:.6}"),
+                    None => "n/a".to_string(),
+                },
+            );
+        }
+        if !self.alloc_counter_active {
+            println!(
+                "(allocs/request unavailable: this binary does not install the \
+                 counting allocator — run `ogb-cache serve --smoke` or \
+                 `cargo bench --bench shards`)"
+            );
+        }
+    }
+
+    /// Machine-readable perf snapshot (`BENCH_shard.json`): the
+    /// multi-core numbers future PRs regress against (convention:
+    /// BENCH_*.json at the repo root, one file per benchmark family).
+    pub fn write_json<P: AsRef<Path>>(&self, path: P) -> Result<PathBuf> {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("policy", Json::Str(r.policy.clone())),
+                    ("shards", Json::Num(r.shards as f64)),
+                    ("n", Json::Num(r.n as f64)),
+                    ("c", Json::Num(r.c as f64)),
+                    ("cache_pct", Json::Num(r.cache_pct)),
+                    ("ns_per_request", Json::Num(r.ns_per_request)),
+                    ("min_ns", Json::Num(r.min_ns)),
+                    ("max_ns", Json::Num(r.max_ns)),
+                    ("requests_per_sec", Json::Num(r.req_per_s)),
+                    (
+                        "allocs_per_request",
+                        match r.allocs_per_request {
+                            Some(a) => Json::Num(a),
+                            None => Json::Null,
+                        },
+                    ),
+                    (
+                        "steady_allocs",
+                        match r.steady_allocs {
+                            Some(a) => Json::Num(a as f64),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("p50_ns", Json::Num(r.p50_ns as f64)),
+                    ("p99_ns", Json::Num(r.p99_ns as f64)),
+                    ("p999_ns", Json::Num(r.p999_ns as f64)),
+                    ("hit_ratio", Json::Num(r.hit_ratio)),
+                    ("requests_timed", Json::Num(r.requests_timed as f64)),
+                ])
+            })
+            .collect();
+        let j = Json::obj(vec![
+            ("experiment", Json::Str("shard".into())),
+            ("requests_per_rep", Json::Num(self.requests_per_rep as f64)),
+            ("reps", Json::Num(self.reps as f64)),
+            ("batch", Json::Num(self.batch as f64)),
+            ("queue_depth", Json::Num(self.queue_depth as f64)),
+            ("zipf_s", Json::Num(self.zipf_s)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("smoke", Json::Bool(self.smoke)),
+            (
+                "alloc_counter_active",
+                Json::Bool(self.alloc_counter_active),
+            ),
+            (
+                "steady_allocs_total",
+                Json::Num(self.steady_allocs_total() as f64),
+            ),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("rows", Json::Arr(rows)),
+        ]);
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("mkdir -p {}", dir.display()))?;
+            }
+        }
+        std::fs::write(&path, j.render() + "\n")
+            .with_context(|| format!("write {}", path.display()))?;
+        Ok(path)
+    }
+}
+
+/// Scatter the request vector and wait for every reply (one flush-to-
+/// drain pipeline pass) — allocation-free after the first pass warmed
+/// the batch free lists.
+fn drive(client: &mut ShardedClient, reqs: &[u64]) {
+    for &r in reqs {
+        client.get(r);
+    }
+    client.drain();
+}
+
+/// Run the suite: one warm-up pass plus `reps` timed passes per cell.
+pub fn run_shardbench(cfg: &ShardBenchConfig) -> Result<ShardBenchResult> {
+    ensure!(!cfg.policies.is_empty(), "shard bench needs a policy");
+    ensure!(!cfg.shard_counts.is_empty(), "shard bench needs shard counts");
+    ensure!(!cfg.ns.is_empty(), "shard bench needs a catalog size");
+    ensure!(!cfg.cache_pcts.is_empty(), "shard bench needs a cache size");
+    ensure!(cfg.requests > 0 && cfg.reps > 0, "empty measurement");
+    ensure!(
+        cfg.shard_counts.iter().all(|&s| s > 0),
+        "shard counts must be positive"
+    );
+    ensure!(
+        cfg.ns.iter().all(|&n| n >= 2),
+        "catalog sizes must be >= 2 (capacity < catalog)"
+    );
+    let wall0 = Instant::now();
+    let alloc_counter_active = alloc_count::active();
+    let mut rows = Vec::new();
+
+    for &n in &cfg.ns {
+        // One request vector per catalog size, generated outside every
+        // timed region (the drive then measures pure pipeline cost).
+        let zipf = Zipf::new(n as u64, cfg.zipf_s);
+        let mut rng = Xoshiro256pp::seed_from(cfg.seed ^ (n as u64).rotate_left(17));
+        let reqs: Vec<u64> = (0..cfg.requests).map(|_| zipf.sample(&mut rng)).collect();
+
+        for name in &cfg.policies {
+            for &shards in &cfg.shard_counts {
+                for &pct in &cfg.cache_pcts {
+                    let c = ((n as f64 * pct / 100.0) as usize).clamp(1, n - 1);
+                    let scfg = ServerConfig {
+                        catalog: n,
+                        capacity: c,
+                        shards,
+                        policy: name.clone(),
+                        batch: cfg.batch,
+                        horizon: cfg.requests * (cfg.reps + 1),
+                        queue_depth: cfg.queue_depth,
+                        clients: 1,
+                        seed: cfg.seed,
+                        rebase_threshold: None,
+                    };
+                    let mut server = CacheServer::start(scfg)
+                        .with_context(|| format!("shard bench cell `{name}` x{shards}"))?;
+                    let mut client = server.take_client()?;
+
+                    // Warm-up pass: reaches policy steady state and
+                    // populates every batch free list before measuring.
+                    drive(&mut client, &reqs);
+                    // Snapshot so percentiles/hit_ratio below cover only
+                    // the timed passes (cold-start spikes excluded), like
+                    // the throughput and allocation windows.
+                    let warm = server.snapshot();
+
+                    let mut samples: Vec<f64> = Vec::with_capacity(cfg.reps);
+                    let a0 = alloc_count::current();
+                    for _ in 0..cfg.reps {
+                        let t0 = Instant::now();
+                        drive(&mut client, &reqs);
+                        samples.push(t0.elapsed().as_nanos() as f64);
+                    }
+                    let allocs = alloc_count::current() - a0;
+
+                    drop(client);
+                    let snap = server.shutdown().since(&warm);
+
+                    samples.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+                    let timed = (cfg.reps * cfg.requests) as u64;
+                    let per_req = |ns: f64| ns / cfg.requests as f64;
+                    let median = per_req(samples[samples.len() / 2]);
+                    rows.push(ShardBenchRow {
+                        policy: name.clone(),
+                        shards,
+                        n,
+                        c,
+                        cache_pct: pct,
+                        ns_per_request: median,
+                        min_ns: per_req(samples[0]),
+                        max_ns: per_req(*samples.last().unwrap()),
+                        req_per_s: 1e9 / median.max(1e-9),
+                        allocs_per_request: alloc_counter_active
+                            .then(|| allocs as f64 / timed as f64),
+                        steady_allocs: alloc_counter_active.then_some(allocs),
+                        p50_ns: snap.p50_ns(),
+                        p99_ns: snap.p99_ns(),
+                        p999_ns: snap.p999_ns(),
+                        hit_ratio: snap.hit_ratio(),
+                        requests_timed: timed,
+                    });
+                }
+            }
+        }
+    }
+
+    Ok(ShardBenchResult {
+        rows,
+        requests_per_rep: cfg.requests,
+        reps: cfg.reps,
+        batch: cfg.batch,
+        queue_depth: cfg.queue_depth,
+        zipf_s: cfg.zipf_s,
+        seed: cfg.seed,
+        smoke: cfg.smoke,
+        alloc_counter_active,
+        wall_s: wall0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_suite_measures_and_writes_json() {
+        let mut cfg = ShardBenchConfig::smoke();
+        cfg.requests = 8_000; // keep the unit test quick
+        cfg.ns = vec![2_000];
+        let r = run_shardbench(&cfg).unwrap();
+        assert_eq!(r.rows.len(), 2); // ogb x shards {1, 2}
+        for row in &r.rows {
+            assert!(row.ns_per_request > 0.0, "{}", row.policy);
+            assert!(row.req_per_s > 0.0);
+            assert!(row.p99_ns >= row.p50_ns);
+            assert!(row.hit_ratio > 0.0 && row.hit_ratio < 1.0);
+            assert_eq!(row.requests_timed, 8_000);
+        }
+        // the library test harness does not install the counting allocator
+        if !r.alloc_counter_active {
+            assert!(r.rows[0].allocs_per_request.is_none());
+            assert_eq!(r.steady_allocs_total(), 0);
+        }
+        let dir = std::env::temp_dir().join("ogb_shardbench_test");
+        let p = r.write_json(dir.join("BENCH_shard.json")).unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert!(text.contains("\"experiment\":\"shard\""));
+        assert!(text.contains("\"requests_per_sec\""));
+        assert!(text.contains("\"p999_ns\""));
+        assert!(text.contains("\"steady_allocs_total\""));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn bad_configs_rejected() {
+        let mut cfg = ShardBenchConfig::smoke();
+        cfg.policies.clear();
+        assert!(run_shardbench(&cfg).is_err());
+        let mut cfg = ShardBenchConfig::smoke();
+        cfg.shard_counts = vec![0];
+        assert!(run_shardbench(&cfg).is_err());
+        let mut cfg = ShardBenchConfig::smoke();
+        cfg.policies = vec!["opt".into()]; // needs a hindsight trace
+        cfg.requests = 100;
+        assert!(run_shardbench(&cfg).is_err());
+    }
+}

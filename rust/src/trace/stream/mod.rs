@@ -19,7 +19,10 @@
 //! * [`spec`] — a textual spec language (`"drift-zipf:n=1e6,t=1e7 + ..."`)
 //!   producing fresh sources on demand, which is what lets the parallel
 //!   sweep runner (`sim::sweep`) replay one scenario across a policy ×
-//!   cache-size grid with an independent source per worker.
+//!   cache-size grid with an independent source per worker — and lets
+//!   `ogb-cache serve` pump any scenario through the sharded serving
+//!   engine (DESIGN.md §8) with one deterministic source per
+//!   load-generator thread.
 //!
 //! Determinism contract: a source is seeded at construction and its
 //! request sequence depends only on its parameters, never on when or how

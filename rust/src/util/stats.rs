@@ -126,9 +126,20 @@ impl LatencyHistogram {
 
     #[inline]
     pub fn record_ns(&mut self, ns: u64) {
-        self.buckets[Self::bucket_of(ns)] += 1;
-        self.count += 1;
-        self.sum_ns += ns as u128;
+        self.record_ns_weighted(ns, 1);
+    }
+
+    /// Record the same latency for `weight` observations in O(1) — the
+    /// batched shard pipeline measures enqueue-to-served latency once per batch
+    /// and accounts it to every request in the batch (DESIGN.md §8).
+    #[inline]
+    pub fn record_ns_weighted(&mut self, ns: u64, weight: u64) {
+        if weight == 0 {
+            return;
+        }
+        self.buckets[Self::bucket_of(ns)] += weight;
+        self.count += weight;
+        self.sum_ns += ns as u128 * weight as u128;
         self.max_ns = self.max_ns.max(ns);
     }
 
@@ -176,6 +187,25 @@ impl LatencyHistogram {
         self.sum_ns += other.sum_ns;
         self.max_ns = self.max_ns.max(other.max_ns);
     }
+
+    /// Bucket-wise difference `self - earlier`, for isolating a
+    /// measurement window from cumulative counters (`earlier` must be a
+    /// previous snapshot of the same histogram).  `max_ns` cannot be
+    /// un-merged, so the result keeps the cumulative max — an upper
+    /// bound that only affects the top-bucket percentile cap.  Misuse
+    /// (a non-prefix `earlier`) debug-asserts; in release it saturates
+    /// to zero rather than wrapping into garbage percentiles.
+    pub fn diff(&self, earlier: &LatencyHistogram) -> LatencyHistogram {
+        let mut out = self.clone();
+        for (a, b) in out.buckets.iter_mut().zip(earlier.buckets.iter()) {
+            debug_assert!(*a >= *b, "diff against a non-prefix snapshot");
+            *a = a.saturating_sub(*b);
+        }
+        debug_assert!(out.count >= earlier.count && out.sum_ns >= earlier.sum_ns);
+        out.count = out.count.saturating_sub(earlier.count);
+        out.sum_ns = out.sum_ns.saturating_sub(earlier.sum_ns);
+        out
+    }
 }
 
 #[cfg(test)]
@@ -219,6 +249,25 @@ mod tests {
     }
 
     #[test]
+    fn weighted_record_matches_repeated_record() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        for (ns, n) in [(100u64, 64u64), (5_000, 64), (1_000_000, 2)] {
+            a.record_ns_weighted(ns, n);
+            for _ in 0..n {
+                b.record_ns(ns);
+            }
+        }
+        a.record_ns_weighted(42, 0); // no-op
+        assert_eq!(a.count(), b.count());
+        assert_eq!(a.mean_ns(), b.mean_ns());
+        assert_eq!(a.max_ns(), b.max_ns());
+        for p in [50.0, 99.0, 99.9] {
+            assert_eq!(a.percentile_ns(p), b.percentile_ns(p));
+        }
+    }
+
+    #[test]
     fn histogram_merge() {
         let mut a = LatencyHistogram::new();
         let mut b = LatencyHistogram::new();
@@ -227,5 +276,22 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.count(), 2);
         assert_eq!(a.max_ns(), 1_000_000);
+    }
+
+    #[test]
+    fn diff_isolates_a_window() {
+        let mut h = LatencyHistogram::new();
+        for ns in [100u64, 200, 300] {
+            h.record_ns(ns); // "warm-up"
+        }
+        let warm = h.clone();
+        for _ in 0..1000 {
+            h.record_ns(5_000); // steady window
+        }
+        let steady = h.diff(&warm);
+        assert_eq!(steady.count(), 1000);
+        let p50 = steady.percentile_ns(50.0) as f64;
+        assert!((p50 / 5_000.0 - 1.0).abs() < 0.06, "p50 {p50}");
+        assert!((steady.mean_ns() - 5_000.0).abs() < 1e-9);
     }
 }

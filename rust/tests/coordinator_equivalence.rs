@@ -1,0 +1,215 @@
+//! Serving-engine contracts (DESIGN.md §8):
+//!
+//! 1. the catalog partition is a bijection — every global id roundtrips
+//!    through (shard, local) and local ids are dense, for random catalog
+//!    sizes and shard counts;
+//! 2. batch scatter/gather preserves per-shard request order end-to-end
+//!    (client → work ring → shard → done ring → client);
+//! 3. the server is a *refactor, not a semantic change*: a 1-shard
+//!    server over a seeded trace produces exactly the hit/miss counts of
+//!    `sim::run_source` with the same `policies::build` policy.
+
+use ogb_cache::coordinator::{CacheServer, Partition, Router, ServerConfig};
+use ogb_cache::policies::{self, BuildOpts, Policy};
+use ogb_cache::sim::{self, RunConfig};
+use ogb_cache::trace::stream::TraceSource;
+use ogb_cache::trace::synth;
+use ogb_cache::util::Xoshiro256pp;
+
+/// Satellite: partition bijection property over random shapes.
+#[test]
+fn partition_is_a_bijection_for_random_shapes() {
+    let mut rng = Xoshiro256pp::seed_from(0xB17E_C7);
+    for case in 0..40u64 {
+        let catalog = 2 + rng.next_below(5_000) as usize;
+        let shards = 1 + rng.next_below(17) as usize;
+        let salt = rng.next_u64();
+        let router = Router::new(shards, salt);
+        let p = Partition::build(&router, catalog);
+        assert_eq!(p.shards(), shards);
+        assert_eq!(p.catalog(), catalog);
+        let total: usize = (0..shards).map(|s| p.local_catalog(s)).sum();
+        assert_eq!(total, catalog, "case {case}: locals must cover the catalog");
+        // forward → inverse roundtrip + density + injectivity
+        let mut seen: Vec<Vec<bool>> = (0..shards).map(|s| vec![false; p.local_catalog(s)]).collect();
+        for g in 0..catalog as u64 {
+            let (s, l) = p.locate(g);
+            assert_eq!(s, router.route(g), "case {case}: partition follows router");
+            assert!((l as usize) < p.local_catalog(s), "case {case}: dense local");
+            assert!(!seen[s][l as usize], "case {case}: (shard, local) reused");
+            seen[s][l as usize] = true;
+            assert_eq!(p.global(s, l) as u64, g, "case {case}: roundtrip");
+        }
+    }
+}
+
+/// Satellite: scatter/gather preserves per-shard request order.  Replies
+/// must arrive in flush order per shard (monotonic batch seq), and the
+/// concatenated reply items must equal the scatter-order projection of
+/// the request stream onto that shard.
+#[test]
+fn batch_scatter_gather_preserves_per_shard_order() {
+    let catalog = 5_000usize;
+    let shards = 4usize;
+    let batch = 16usize;
+    let mut server = CacheServer::start(ServerConfig {
+        catalog,
+        capacity: 400,
+        shards,
+        policy: "lru".into(),
+        batch,
+        horizon: 100_000,
+        // Deep enough that a work ring can never fill (33_333/4/16 ≈ 521
+        // batches per shard): the client's internal backpressure reap —
+        // which bypasses this test's inspector — stays unreachable, so
+        // `inspect` deterministically sees every reply batch.
+        queue_depth: 1024,
+        clients: 1,
+        seed: 77,
+        rebase_threshold: None,
+    })
+    .unwrap();
+    let mut client = server.take_client().unwrap();
+
+    // expected per-shard local-id sequences, in scatter order
+    let mut rng = Xoshiro256pp::seed_from(5);
+    let keys: Vec<u64> = (0..33_333).map(|_| rng.next_below(catalog as u64)).collect();
+    let mut expected: Vec<Vec<u32>> = vec![Vec::new(); shards];
+    for &k in &keys {
+        let (s, l) = client.partition().locate(k);
+        expected[s].push(l);
+    }
+
+    let mut gathered: Vec<Vec<u32>> = vec![Vec::new(); shards];
+    let mut last_seq: Vec<Option<u64>> = vec![None; shards];
+    let mut inspect = |shard: usize, b: &ogb_cache::coordinator::Batch| {
+        assert!(
+            last_seq[shard].map_or(b.seq() == 0, |prev| b.seq() == prev + 1),
+            "shard {shard}: reply batches out of order (seq {})",
+            b.seq()
+        );
+        last_seq[shard] = Some(b.seq());
+        gathered[shard].extend_from_slice(b.items());
+    };
+    for &k in &keys {
+        client.get(k);
+        client.reap_with(&mut inspect);
+    }
+    client.drain_with(&mut inspect);
+    assert_eq!(gathered, expected, "per-shard order must survive the pipeline");
+    drop(client);
+    assert_eq!(server.shutdown().requests, keys.len() as u64);
+}
+
+/// The 1-shard server must produce identical hit/miss counts to
+/// `sim::run_source` with the same `policies::build` policy over the
+/// same seeded trace — the engine is a refactor of the request path, not
+/// a semantic change.
+#[test]
+fn one_shard_server_matches_run_source() {
+    let n = 5_000usize;
+    let c = 250usize;
+    let b = 16usize;
+    let seed = 9u64;
+    let trace = synth::zipf(n, 150_000, 0.9, 7);
+    let t = trace.len();
+    for policy_name in ["ogb", "lru", "lfu", "ftpl"] {
+        // reference: monomorphized streaming replay
+        let mut reference =
+            policies::build(policy_name, n, c, &BuildOpts::new(t, b, seed), None).unwrap();
+        let r = sim::run_source(
+            &mut reference,
+            &mut TraceSource::new(&trace),
+            &RunConfig {
+                window: 100_000,
+                occupancy_every: 0,
+                max_requests: 0,
+            },
+        );
+
+        // server: one shard (partition is the identity, shard 0 builds
+        // with cfg.seed verbatim, local horizon == horizon)
+        let mut server = CacheServer::start(ServerConfig {
+            catalog: n,
+            capacity: c,
+            shards: 1,
+            policy: policy_name.into(),
+            batch: b,
+            horizon: t,
+            queue_depth: 32,
+            clients: 1,
+            seed,
+            rebase_threshold: None,
+        })
+        .unwrap();
+        let mut client = server.take_client().unwrap();
+        for &req in &trace.requests {
+            client.get(req as u64);
+        }
+        client.drain();
+        let stats = client.stats();
+        drop(client);
+        let snap = server.shutdown();
+
+        assert_eq!(snap.requests as usize, t, "{policy_name}: all served");
+        assert_eq!(stats.replies as usize, t, "{policy_name}: all replied");
+        assert_eq!(
+            stats.hits as f64, r.total_reward,
+            "{policy_name}: client-observed hits == run_source reward"
+        );
+        assert_eq!(
+            snap.hits as f64, r.total_reward,
+            "{policy_name}: server-counted hits == run_source reward"
+        );
+    }
+}
+
+/// Multi-shard sanity companion to the exact 1-shard equivalence: the
+/// partitioned server serves every request exactly once and the hit
+/// ratio stays in the plausible band of the single-policy replay (the
+/// partition changes *which* N/C each item competes under, so exact
+/// equality is not expected).
+#[test]
+fn multi_shard_server_is_complete_and_sane() {
+    let trace = synth::zipf(4_000, 80_000, 1.0, 11);
+    let mut reference = policies::build(
+        "ogb",
+        4_000,
+        200,
+        &BuildOpts::new(trace.len(), 16, 3),
+        None,
+    )
+    .unwrap();
+    let mut hits_ref = 0.0;
+    for &r in &trace.requests {
+        hits_ref += reference.request(r as u64);
+    }
+    let ref_ratio = hits_ref / trace.len() as f64;
+
+    let mut server = CacheServer::start(ServerConfig {
+        catalog: 4_000,
+        capacity: 200,
+        shards: 4,
+        policy: "ogb".into(),
+        batch: 16,
+        horizon: trace.len(),
+        queue_depth: 32,
+        clients: 1,
+        seed: 3,
+        rebase_threshold: None,
+    })
+    .unwrap();
+    let mut client = server.take_client().unwrap();
+    for &r in &trace.requests {
+        client.get(r as u64);
+    }
+    client.drain();
+    drop(client);
+    let snap = server.shutdown();
+    assert_eq!(snap.requests as usize, trace.len());
+    let ratio = snap.hit_ratio();
+    assert!(
+        (ratio - ref_ratio).abs() < 0.15,
+        "sharded hit ratio {ratio:.3} far from single-policy {ref_ratio:.3}"
+    );
+}

@@ -150,8 +150,8 @@ fn end_to_end_determinism() {
     assert_eq!(run_once(), run_once());
 }
 
-/// Failure injection: dropping the server mid-load must not deadlock, and
-/// a zero-capacity/invalid config must be rejected.
+/// Failure injection: dropping the client with queued work must not
+/// deadlock the drain/join path, and invalid configs must be rejected.
 #[test]
 fn coordinator_failure_paths() {
     assert!(CacheServer::start(ServerConfig {
@@ -166,9 +166,16 @@ fn coordinator_failure_paths() {
         ..Default::default()
     })
     .is_err());
+    assert!(CacheServer::start(ServerConfig {
+        policy: "no-such-policy".into(),
+        ..Default::default()
+    })
+    .is_err());
 
-    // graceful shutdown with queued work
-    let server = CacheServer::start(ServerConfig {
+    // graceful shutdown with queued work: the client flushes partial
+    // batches on drain, then its drop disconnects the lanes and the
+    // shards exit after consuming everything still in the rings.
+    let mut server = CacheServer::start(ServerConfig {
         catalog: 10_000,
         capacity: 500,
         shards: 2,
@@ -176,13 +183,21 @@ fn coordinator_failure_paths() {
         horizon: 100_000,
         queue_depth: 64,
         seed: 1,
+        ..Default::default()
     })
     .unwrap();
+    let mut client = server.take_client().unwrap();
     for k in 0..5_000u64 {
-        server.get_nowait(k % 1_000);
+        client.get(k % 1_000);
     }
+    client.drain();
+    let stats = client.stats();
+    assert_eq!(stats.sent, 5_000);
+    assert_eq!(stats.replies, 5_000);
+    drop(client);
     let snap = server.shutdown(); // must drain, not deadlock
     assert_eq!(snap.requests, 5_000);
+    assert_eq!(snap.hits, stats.hits);
 }
 
 /// The trace file round-trip composes with the sim engine.
