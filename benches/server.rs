@@ -20,6 +20,7 @@ fn run_clients(shards: usize, clients: usize, requests: usize) -> (f64, f64, u64
         clients,
         seed: 3,
         rebase_threshold: None,
+        per_request_serve: false,
     };
     let catalog = cfg.catalog as u64;
     let mut server = CacheServer::start(cfg).expect("server");

@@ -83,6 +83,7 @@ fn main() -> anyhow::Result<()> {
         window: t,
         occupancy_every: 0,
         max_requests: 0,
+        ..RunConfig::default()
     };
     results.push(bench_batch("replay lru materialized", t as u64, reps, || {
         let mut p = Lru::new(n / 20);

@@ -33,17 +33,22 @@ fn main() -> anyhow::Result<()> {
     let n_req = trace.len().min(requests);
     println!("workload: {n_req} requests over catalog {catalog} (twitter-like bursts)");
 
+    // The shard policy is a PolicySpec string: parameters ride along in
+    // the `{key=value}` form (here the projection re-base threshold).
+    let policy: ogb_cache::policies::PolicySpec =
+        "ogb{rebase=1e6}".parse().expect("valid policy spec");
     let cfg = ServerConfig {
         catalog,
         capacity,
         shards,
-        policy: "ogb".into(),
+        policy: policy.to_string(),
         batch: 64,
         horizon: n_req,
         queue_depth: 64,
         clients,
         seed: 1,
         rebase_threshold: None,
+        per_request_serve: false,
     };
     println!(
         "server: shards={} capacity={} batch={} queue_depth={} clients={clients}",

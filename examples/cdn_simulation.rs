@@ -48,6 +48,7 @@ fn main() -> anyhow::Result<()> {
                 window,
                 occupancy_every: window,
                 max_requests: 0,
+                ..RunConfig::default()
             },
         );
         let occ: std::collections::HashMap<usize, f64> = r.occupancy.iter().copied().collect();

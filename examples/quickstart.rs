@@ -26,7 +26,7 @@
 //! each PR measures itself against.
 
 use ogb_cache::coordinator::{CacheServer, ServerConfig};
-use ogb_cache::policies::{Lru, Ogb, Opt, Policy};
+use ogb_cache::policies::{self, BuildOpts, Ogb, Policy, PolicySpec};
 use ogb_cache::sim::{run, run_source, RunConfig, StreamingOpt};
 use ogb_cache::trace::stream::gen::ZipfDriftSource;
 use ogb_cache::trace::synth;
@@ -44,8 +44,12 @@ fn main() {
         trace.distinct()
     );
 
-    // The paper's policy: O(log N) per request, eta from Theorem 3.1.
-    let mut ogb = Ogb::with_theory_eta(n, c as f64, t, /*batch=*/ 1, /*seed=*/ 42);
+    // Policies are built from typed specs (Policy API v2, DESIGN.md §9):
+    // `kind{key=value,...}` strings parse to a PolicySpec; unset values
+    // fall back to BuildOpts and the theory formulas (Theorem 3.1 eta).
+    let opts = BuildOpts::new(t, /*batch=*/ 1, /*seed=*/ 42);
+    let spec: PolicySpec = "ogb{batch=1}".parse().expect("valid policy spec");
+    let mut ogb = policies::build_spec(&spec, n, c, &opts, None).expect("build ogb");
     let cfg = RunConfig::default();
     let r = run(&mut ogb, &trace, &cfg);
     println!(
@@ -55,7 +59,7 @@ fn main() {
         ogb.occupancy()
     );
 
-    let mut lru = Lru::new(c);
+    let mut lru = policies::build("lru", n, c, &opts, None).expect("build lru");
     let r_lru = run(&mut lru, &trace, &cfg);
     println!(
         "LRU   hit_ratio={:.4}  throughput={:.2e} req/s",
@@ -63,7 +67,7 @@ fn main() {
         r_lru.throughput_rps
     );
 
-    let mut opt = Opt::from_trace(&trace, c);
+    let mut opt = policies::build("opt", n, c, &opts, Some(&trace)).expect("build opt");
     let r_opt = run(&mut opt, &trace, &cfg);
     println!(
         "OPT   hit_ratio={:.4}  (best static allocation in hindsight)",
@@ -104,6 +108,9 @@ fn main() {
         catalog: n,
         capacity: c,
         shards: 2,
+        // shard policies are named by the same spec grammar; the batch
+        // parameter defaults to the server's ring batch size
+        policy: "ogb".parse::<PolicySpec>().unwrap().to_string(),
         horizon: t,
         seed: 42,
         ..Default::default()

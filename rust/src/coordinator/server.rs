@@ -33,9 +33,11 @@ pub struct ServerConfig {
     /// total cache capacity across shards (items; split evenly)
     pub capacity: usize,
     pub shards: usize,
-    /// shard policy name accepted by `policies::build`.  Rejected:
-    /// `opt` (needs a full trace in hindsight) and the fractional
-    /// variants (the reply bitmap is integral)
+    /// shard policy spec string accepted by `policies::build` (e.g.
+    /// `"ogb{batch=64}"`; the `{batch=..}` parameter defaults to this
+    /// config's `batch`).  Rejected: `opt` (needs a full trace in
+    /// hindsight) and the fractional variants (the reply bitmap is
+    /// integral)
     pub policy: String,
     /// batch size B: ring batch capacity == each policy's sample-refresh
     /// batch, so a full drained batch maps onto one UPDATESAMPLE cadence
@@ -51,6 +53,10 @@ pub struct ServerConfig {
     pub clients: usize,
     pub seed: u64,
     pub rebase_threshold: Option<f64>,
+    /// serve drained batches item-by-item (`Policy::serve`) instead of
+    /// with one `serve_batch` call per ring pop — the v1 comparison
+    /// shape measured by `sim::shardbench`'s `per_request` rows
+    pub per_request_serve: bool,
 }
 
 impl Default for ServerConfig {
@@ -66,6 +72,7 @@ impl Default for ServerConfig {
             clients: 1,
             seed: 0xCAFE,
             rebase_threshold: None,
+            per_request_serve: false,
         }
     }
 }
@@ -95,12 +102,14 @@ impl CacheServer {
         // The reply bitmap is integral (1 bit per request): fractional
         // policies would have rewards in (0, 1) silently truncated to
         // misses, making server numbers incomparable with `sim` runs —
-        // reject them up front like `opt`.
+        // reject them up front like `opt`.  Parsing the typed spec here
+        // also catches `ogb-frac{batch=8}`-style parameterized forms.
+        let spec = cfg
+            .policy
+            .parse::<crate::policies::PolicySpec>()
+            .map_err(|e| anyhow::anyhow!("server policy `{}`: {e}", cfg.policy))?;
         anyhow::ensure!(
-            !matches!(
-                cfg.policy.as_str(),
-                "ogb-frac" | "ogb-classic-frac" | "omd-frac"
-            ),
+            !spec.is_fractional(),
             "fractional policy `{}` is not servable: the hit/miss reply \
              bitmap cannot represent fractional rewards (use the integral \
              variant, or `ogb-cache sweep` for fractional comparisons)",
@@ -206,6 +215,7 @@ impl CacheServer {
                 horizon: (cfg.horizon / cfg.shards).max(1),
                 seed: cfg.seed,
                 rebase_threshold: cfg.rebase_threshold,
+                per_request_serve: cfg.per_request_serve,
             };
             let (m2, r2) = (m.clone(), r.clone());
             workers.push(
@@ -622,6 +632,11 @@ mod tests {
             },
             ServerConfig {
                 policy: "ogb-frac".into(), // fractional: bitmap can't represent
+                ..Default::default()
+            },
+            ServerConfig {
+                // parameterized fractional spec: still caught
+                policy: "ogb-frac{batch=8}".into(),
                 ..Default::default()
             },
             ServerConfig {

@@ -15,7 +15,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::policies::{self, BuildOpts, Policy};
+use crate::policies::{self, BuildOpts, Policy, Request};
 
 use super::batch::Batch;
 use super::metrics::Metrics;
@@ -27,7 +27,7 @@ pub struct ShardConfig {
     pub local_catalog: usize,
     /// shard-local cache capacity (items)
     pub capacity: usize,
-    /// policy name accepted by `policies::build`
+    /// policy spec string accepted by `policies::build`
     pub policy: String,
     /// batch size B: ring batch capacity == the policy's sample-refresh
     /// batch, so one full drained batch maps onto one Algorithm 3
@@ -37,6 +37,12 @@ pub struct ShardConfig {
     pub horizon: usize,
     pub seed: u64,
     pub rebase_threshold: Option<f64>,
+    /// serve each drained batch with one `Policy::serve` call per item
+    /// instead of one `serve_batch` call per batch — the v1 shape, kept
+    /// for the batched-vs-per-request comparison rows in
+    /// `BENCH_shard.json` (`sim::shardbench`); identical hit/miss
+    /// outcomes by the `serve_batch ≡ serve` contract
+    pub per_request_serve: bool,
 }
 
 /// One client's pair of rings as seen from the shard: requests in,
@@ -100,6 +106,12 @@ pub fn run_shard(
     let mut n_open = lanes.len();
     let mut last_evictions = 0u64;
     let mut idle = 0u32;
+    // Reused per-batch buffers (pre-sized to B, the ring batch capacity):
+    // the drained batch is handed to the policy as ONE serve_batch call —
+    // the request path stays allocation-free and the batched policies
+    // amortize their boundary bookkeeping across the whole batch.
+    let mut reqbuf: Vec<Request> = Vec::with_capacity(cfg.batch);
+    let mut rewards: Vec<f64> = Vec::with_capacity(cfg.batch);
     while n_open > 0 {
         let mut progressed = false;
         let mut reply_blocked = false;
@@ -125,11 +137,28 @@ pub fn run_shard(
                         policy_redraw(&mut policy);
                     }
                     let mut hits = 0u64;
-                    for k in 0..batch.len() {
-                        let item = batch.item(k) as u64;
-                        if policy.request(item) >= 1.0 {
-                            batch.set_hit(k);
-                            hits += 1;
+                    if cfg.per_request_serve {
+                        // v1 comparison shape: one policy call per item
+                        for k in 0..batch.len() {
+                            let item = batch.item(k) as u64;
+                            if policy.request(item) >= 1.0 {
+                                batch.set_hit(k);
+                                hits += 1;
+                            }
+                        }
+                    } else {
+                        // one policy call per ring pop (DESIGN.md §9)
+                        reqbuf.clear();
+                        for &item in batch.items() {
+                            reqbuf.push(Request::unit(item as u64));
+                        }
+                        rewards.clear();
+                        policy.serve_batch(&reqbuf, &mut rewards);
+                        for (k, &r) in rewards.iter().enumerate() {
+                            if r >= 1.0 {
+                                batch.set_hit(k);
+                                hits += 1;
+                            }
                         }
                     }
                     let ev = policy.diag().sample_evictions;
@@ -224,6 +253,7 @@ mod tests {
                     horizon: 100_000,
                     seed: 1,
                     rebase_threshold: None,
+                    per_request_serve: false,
                 },
                 shard_lanes,
                 Arc::new(AtomicBool::new(false)),

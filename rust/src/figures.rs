@@ -102,6 +102,7 @@ fn run_and_dump(
                 window,
                 occupancy_every: 0,
                 max_requests: 0,
+                ..RunConfig::default()
             },
         );
         for (k, (&wh, &ch)) in r.windowed.iter().zip(&r.cumulative).enumerate() {
@@ -146,6 +147,7 @@ fn run_and_dump_stream(
                 window,
                 occupancy_every: 0,
                 max_requests: 0,
+                ..RunConfig::default()
             },
         );
         for (k, (&wh, &ch)) in r.windowed.iter().zip(&r.cumulative).enumerate() {
@@ -378,11 +380,11 @@ fn fig4(opts: &FigOpts) -> Result<Vec<PathBuf>> {
     for mult in [0.1, 0.5, 1.0, 5.0, 10.0] {
         let mut p: Box<dyn Policy> =
             Box::new(policies::Ogb::new(n, c as f64, eta_theory * mult, 1, opts.seed));
-        let r = sim::run(p.as_mut(), &trace, &RunConfig { window, occupancy_every: 0, max_requests: 0 });
+        let r = sim::run(p.as_mut(), &trace, &RunConfig { window, occupancy_every: 0, max_requests: 0, ..RunConfig::default() });
         w.row_str(&["OGB".into(), mult.to_string(), format!("{:.6}", r.hit_ratio())])?;
         let mut p: Box<dyn Policy> =
             Box::new(policies::Ftpl::new(n, c, zeta_theory * mult, opts.seed));
-        let r = sim::run(p.as_mut(), &trace, &RunConfig { window, occupancy_every: 0, max_requests: 0 });
+        let r = sim::run(p.as_mut(), &trace, &RunConfig { window, occupancy_every: 0, max_requests: 0, ..RunConfig::default() });
         w.row_str(&["FTPL".into(), mult.to_string(), format!("{:.6}", r.hit_ratio())])?;
         eprintln!("  sensitivity mult={mult} done");
     }
@@ -468,6 +470,7 @@ fn fig9(opts: &FigOpts) -> Result<Vec<PathBuf>> {
                 window,
                 occupancy_every: (t_len / 200).max(1),
                 max_requests: 0,
+                ..RunConfig::default()
             },
         );
         for &(k, occ) in &r.occupancy {
@@ -528,6 +531,7 @@ fn fig10(opts: &FigOpts) -> Result<Vec<PathBuf>> {
                     window: t_len,
                     occupancy_every: 0,
                     max_requests: 0,
+                    ..RunConfig::default()
                 },
             );
             w.row_str(&[

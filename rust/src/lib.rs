@@ -11,7 +11,14 @@
 //! * [`sample`] — the coordinated Poisson sampling scheme (Algorithm 3)
 //!   plus Madow systematic sampling as the classic baseline;
 //! * [`policies`] — OGB (the paper's policy), OGB_cl, fractional OGB, and
-//!   the full comparison set: LRU, LFU, FIFO, ARC, GDS, FTPL, OPT;
+//!   the full comparison set: LRU, LFU, FIFO, ARC, GDS, FTPL, OPT — all
+//!   behind the batched, weight-aware Policy API v2 (DESIGN.md §9):
+//!   [`policies::Policy::serve`] takes a weighted
+//!   [`policies::Request`], [`policies::Policy::serve_batch`] serves B
+//!   requests per call (trajectory-identical, amortized bookkeeping),
+//!   construction is typed via [`policies::PolicySpec`]
+//!   (`"ogb{batch=64,rebase=1e6}"`) and extensible via the open
+//!   [`policies::PolicyRegistry`];
 //! * [`trace`] — synthetic and real-world-like request trace generators and
 //!   the temporal-locality analyses of the paper's App. B;
 //! * [`trace::stream`] — the streaming workload engine (DESIGN.md §6):
@@ -66,9 +73,46 @@
 //!   shard pipeline's steady-state contract is likewise 0
 //!   allocations, asserted by the CI smoke run.
 //!
+//! Since Policy API v2, `BENCH_hotpath.json` and `BENCH_shard.json`
+//! carry `mode: "per_request"` vs `mode: "batched"` rows — the v1
+//! serve shape next to the amortized `serve_batch` path — and the CI
+//! smoke jobs assert both modes exist with the zero-allocation
+//! contract intact.
+//!
 //! CI regenerates both in smoke mode on every push (tiny grids, one
 //! repetition) so the emission paths cannot rot; commit refreshed
 //! full-grid snapshots when a PR moves the numbers.
+//!
+//! ## Migrating from Policy API v1 (DESIGN.md §9)
+//!
+//! * `policy.request(item)` still works — it is now a provided trait
+//!   shim for `policy.serve(Request::unit(item))`.  Implementors
+//!   provide `serve` (and optionally `serve_batch`) instead of
+//!   `request`.
+//! * `Policy::name` returns `&str` (no per-call allocation); call
+//!   `.to_string()` where an owned `String` is genuinely needed.
+//! * `policies::build(name, ..)` accepts the `kind{key=value,...}` spec
+//!   grammar everywhere a bare kind was accepted before;
+//!   `policies::build_spec` takes the parsed [`policies::PolicySpec`].
+//! * New policies register at runtime:
+//!   `PolicyRegistry::global().register("mine", |ctx| ...)` — no edit
+//!   to `policies/mod.rs` required.
+//! * `sim::RunConfig` gained a `batch` field (serve-batch chunk size;
+//!   metrics are chunk-size-invariant) — struct literals need
+//!   `..RunConfig::default()`.
+
+// Clippy gates the merge (CI lint job, `-D warnings`).  The allows below
+// are deliberate house-style positions, not suppressed bugs: manual
+// div-ceil keeps the MSRV below 1.73 (`usize::div_ceil`), builder-less
+// `new(args)` constructors and len-without-is_empty accessors match the
+// zero-dependency substrate style of DESIGN.md §3, and the few
+// many-argument internal helpers are plumbing, not API.
+#![allow(
+    clippy::manual_div_ceil,
+    clippy::new_without_default,
+    clippy::len_without_is_empty,
+    clippy::too_many_arguments
+)]
 
 pub mod coordinator;
 pub mod figures;

@@ -34,7 +34,7 @@ fn cli() -> Cli {
             "simulate",
             "replay a trace through a policy",
             vec![
-                opt("policy", "policy name (lru lfu fifo arc gds ftpl ogb ogb-frac ogb-classic ogb-classic-frac opt infinite)", "ogb"),
+                opt("policy", "policy spec (lru lfu fifo arc gds ftpl ogb ogb-frac ogb-classic ogb-classic-frac opt infinite, with optional {key=value} params, e.g. `ogb{batch=64,rebase=1e6}`)", "ogb"),
                 opt("trace", "trace name (cdn twitter ms-ex systor adversarial zipf uniform), `stream:<spec>`, or path to .ogbt/.txt", "cdn"),
                 opt("scale", "trace scale factor", "0.1"),
                 opt("cache-pct", "cache size as % of catalog", "5"),
@@ -54,7 +54,7 @@ fn cli() -> Cli {
                     "source spec, e.g. `drift-zipf:n=1e6,t=1e7 & flash:n=1e6,t=1e7` (see trace::stream::spec)",
                     "drift-zipf:n=100000,t=1000000,s=0.9",
                 ),
-                opt("policies", "comma-separated policy names (plus `opt`)", "lru,lfu,arc,ogb,opt"),
+                opt("policies", "comma-separated policy specs (plus `opt`), e.g. `lru,ogb{batch=64}`", "lru,lfu,arc,ogb,opt"),
                 opt("cache-pcts", "comma-separated cache sizes as % of catalog", "1,5,10"),
                 opt("batch", "batch size B", "1"),
                 opt("threads", "worker threads (0 = all cores)", "0"),
@@ -69,12 +69,13 @@ fn cli() -> Cli {
             "bench",
             "hot-path microbench: ns/request, pops/request, allocs/request by policy × N × C (emits BENCH_hotpath.json)",
             vec![
-                opt("policies", "comma-separated policy names", "ogb"),
+                opt("policies", "comma-separated policy specs", "ogb"),
                 opt("ns", "comma-separated catalog sizes (1e6 notation ok)", "10000,1000000"),
                 opt("cache-pcts", "comma-separated cache sizes as % of catalog", "1,10"),
                 opt("requests", "requests per replay (1 warm-up + reps timed)", "1000000"),
                 opt("reps", "timed repetitions (median reported)", "3"),
-                opt("batch", "batch size B", "1"),
+                opt("batch", "batch size B for the per-request mode rows", "1"),
+                opt("batch-sizes", "comma-separated serve_batch sizes for the batched-mode rows (empty = skip)", "16,64,256"),
                 opt("zipf", "workload Zipf exponent", "0.9"),
                 opt("seed", "random seed", "42"),
                 opt("rebase-threshold", "lazy projection re-base threshold (empty = default 1e6)", ""),
@@ -101,7 +102,7 @@ fn cli() -> Cli {
                     "source spec, e.g. `drift-zipf:n=1e6,t=1e7 & flash:n=1e6,t=1e7` (see trace::stream::spec)",
                     "zipf:n=100000,t=1000000,s=0.9",
                 ),
-                opt("policy", "shard policy name (lru lfu fifo arc gds ftpl ogb ogb-classic; fractional variants and opt are not servable)", "ogb"),
+                opt("policy", "shard policy spec (lru lfu fifo arc gds ftpl ogb ogb-classic + {key=value} params; fractional variants and opt are not servable)", "ogb"),
                 opt("capacity", "total cache capacity across shards (0 = 5% of catalog)", "0"),
                 opt("shards", "shard worker threads", "4"),
                 opt("clients", "load-generator threads (each gets its own SPSC lane per shard)", "1"),
@@ -111,7 +112,8 @@ fn cli() -> Cli {
                 opt("seed", "random seed", "42"),
                 opt("rebase-threshold", "lazy projection re-base threshold (empty = default 1e6)", ""),
                 opt("bench-json", "BENCH_shard.json path for --smoke (empty = skip)", "BENCH_shard.json"),
-                flag("smoke", "tiny CI grid: run the multi-core shard suite (shards {1,2}, small N; honors --policy/--batch/--queue-depth/--seed, ignores the other serve flags), emit BENCH_shard.json, assert the zero-allocation contract"),
+                flag("per-request", "serve drained batches item-by-item (v1 comparison shape) instead of one serve_batch call per ring pop"),
+                flag("smoke", "tiny CI grid: run the multi-core shard suite (shards {1,2}, batched + per-request modes, small N; honors --policy/--batch/--queue-depth/--seed, ignores the other serve flags), emit BENCH_shard.json, assert the zero-allocation contract"),
             ],
         )
         .command(
@@ -154,6 +156,14 @@ fn load_trace(name: &str, scale: f64, seed: u64) -> Result<Trace> {
     // without materializing).
     if let Some(spec_text) = name.strip_prefix("stream:") {
         let spec = SourceSpec::parse(spec_text)?;
+        if spec.has_weights() {
+            ogb_cache::log_warn!(
+                "spec `{}` carries an `@ weights:` clause, but materialization keeps \
+                 only item ids — the weights are dropped here (use `ogb-cache sweep` \
+                 for weighted accounting)",
+                spec.text()
+            );
+        }
         return Ok(stream::materialize(spec.build(seed)?.as_mut(), 0));
     }
     Ok(match name {
@@ -210,6 +220,7 @@ fn cmd_simulate(a: &ogb_cache::util::args::Args) -> Result<()> {
         window: a.get_parse("window", 100_000),
         occupancy_every: 10_000,
         max_requests: 0,
+        ..RunConfig::default()
     };
     println!(
         "trace={} T={} N={} (distinct {}) C={c} policy={}",
@@ -242,7 +253,7 @@ fn cmd_simulate(a: &ogb_cache::util::args::Args) -> Result<()> {
             csv,
             &[
                 ("trace", tr.name.clone()),
-                ("policy", policy.name()),
+                ("policy", policy.name().to_string()),
                 ("seed", seed.to_string()),
             ],
             &["window_end", "window_hit_ratio", "cumulative_hit_ratio"],
@@ -297,6 +308,12 @@ fn cmd_sweep(a: &ogb_cache::util::args::Args) -> Result<()> {
         r.aggregate_rps(),
         r.peak_rss_bytes as f64 / (1024.0 * 1024.0),
     );
+    if r.weighted {
+        println!(
+            "(weighted objective: hit_ratio columns are mean weighted rewards, \
+             regret is against the weighted hindsight OPT)"
+        );
+    }
     println!(
         "\n{:<16} {:>10} {:>8} {:>10} {:>12} {:>12}",
         "policy", "C", "pct", "hit_ratio", "regret/T", "req/s"
@@ -359,12 +376,23 @@ fn cmd_bench(a: &ogb_cache::util::args::Args) -> Result<()> {
             requests: a.get_parse("requests", 1_000_000),
             reps: a.get_parse("reps", 3),
             batch: a.get_parse("batch", 1),
+            batch_sizes: parse_list("batch-sizes", "batch-sizes")?
+                .into_iter()
+                .map(|v| {
+                    anyhow::ensure!(
+                        v >= 1.0 && v.fract() == 0.0,
+                        "--batch-sizes entries must be positive integers (got `{v}`)"
+                    );
+                    Ok(v as usize)
+                })
+                .collect::<Result<_>>()?,
             zipf_s: a.get_parse("zipf", 0.9),
             seed: a.get_parse("seed", 42),
             rebase_threshold: parse_rebase_threshold(a)?,
             smoke: false,
         }
     };
+    let smoke = cfg.smoke;
     let r = sim::run_hotpath(&cfg)?;
     r.print();
     println!(
@@ -376,6 +404,27 @@ fn cmd_bench(a: &ogb_cache::util::args::Args) -> Result<()> {
     let out = a.get_or("out", "BENCH_hotpath.json");
     if !out.is_empty() {
         println!("wrote {}", r.write_json(out)?.display());
+    }
+    if smoke {
+        // CI contract (DESIGN.md §7/§9): both serve modes are present and
+        // the OGB request path allocates nothing at steady state in
+        // either of them.
+        anyhow::ensure!(
+            r.rows.iter().any(|row| row.mode == "per_request")
+                && r.rows.iter().any(|row| row.mode == "batched"),
+            "smoke grid must report per_request AND batched rows"
+        );
+        if r.alloc_counter_active {
+            for row in r.rows.iter().filter(|row| row.policy == "ogb") {
+                anyhow::ensure!(
+                    row.allocs_per_request == Some(0.0),
+                    "ogb {} mode allocated at steady state: {:?} allocs/request",
+                    row.mode,
+                    row.allocs_per_request
+                );
+            }
+            println!("steady-state allocation contract holds (0 allocs, both modes)");
+        }
     }
     Ok(())
 }
@@ -415,6 +464,14 @@ fn cmd_serve(a: &ogb_cache::util::args::Args) -> Result<()> {
     }
 
     let spec = SourceSpec::parse(a.get_or("source", "zipf:n=100000,t=1000000,s=0.9"))?;
+    if spec.has_weights() {
+        ogb_cache::log_warn!(
+            "source `{}` carries an `@ weights:` clause, but the serving engine's \
+             reply bitmap is hit/miss — weights are ignored here (use `ogb-cache \
+             sweep` for weighted accounting)",
+            spec.text()
+        );
+    }
     let seed: u64 = a.get_parse("seed", 42);
     let max_requests: usize = a.get_parse("max-requests", 0);
     let probe = spec.build(seed)?;
@@ -443,6 +500,7 @@ fn cmd_serve(a: &ogb_cache::util::args::Args) -> Result<()> {
         clients,
         seed,
         rebase_threshold: parse_rebase_threshold(a)?,
+        per_request_serve: a.flag("per-request"),
     };
     println!(
         "serving `{}` T={requests} N={catalog} | policy={} capacity={} shards={} batch={} queue_depth={} clients={}",

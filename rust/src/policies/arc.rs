@@ -5,7 +5,7 @@
 //! published pseudocode; O(1) per request.
 
 use super::list::DList;
-use super::Policy;
+use super::{Policy, Request};
 use crate::util::FxHashMap;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -61,23 +61,24 @@ impl ArcCache {
 }
 
 impl Policy for ArcCache {
-    fn name(&self) -> String {
-        "ARC".into()
+    fn name(&self) -> &str {
+        "ARC"
     }
 
-    fn request(&mut self, item: u64) -> f64 {
+    fn serve(&mut self, req: Request) -> f64 {
+        let item = req.item;
         match self.map.get(&item).copied() {
             // Case I: hit in T1 or T2 -> move to MRU of T2.
             Some((Where::T1, h)) => {
                 self.t1.remove(h);
                 let nh = self.t2.push_front(item);
                 self.map.insert(item, (Where::T2, nh));
-                1.0
+                req.weight
             }
             Some((Where::T2, h)) => {
                 self.t2.move_front(h);
                 self.map.insert(item, (Where::T2, h));
-                1.0
+                req.weight
             }
             // Case II: ghost hit in B1 -> grow p, replace, promote to T2.
             Some((Where::B1, h)) => {

@@ -1,7 +1,7 @@
 //! First-In First-Out — O(1) per request; no reordering on hit.
 
 use super::list::DList;
-use super::Policy;
+use super::{Policy, Request};
 use crate::util::FxHashMap;
 
 #[derive(Debug, Clone)]
@@ -23,13 +23,14 @@ impl Fifo {
 }
 
 impl Policy for Fifo {
-    fn name(&self) -> String {
-        "FIFO".into()
+    fn name(&self) -> &str {
+        "FIFO"
     }
 
-    fn request(&mut self, item: u64) -> f64 {
+    fn serve(&mut self, req: Request) -> f64 {
+        let item = req.item;
         if self.map.contains_key(&item) {
-            return 1.0; // no touch: insertion order rules
+            return req.weight; // no touch: insertion order rules
         }
         if self.map.len() >= self.cap {
             let victim = self.list.pop_back().expect("non-empty at capacity");

@@ -12,7 +12,7 @@
 //! materialization remains available through
 //! [`crate::proj::LazySimplex::to_dense`]).
 
-use super::{Diag, Policy};
+use super::{Diag, Policy, Request};
 use crate::proj::LazySimplex;
 
 #[derive(Debug, Clone)]
@@ -21,6 +21,7 @@ pub struct FractionalOgb {
     eta: f64,
     b: usize,
     in_batch: usize,
+    name: String,
     removed_coeffs: u64,
     rebases: u64,
 }
@@ -35,6 +36,7 @@ impl FractionalOgb {
             eta,
             b,
             in_batch: 0,
+            name: format!("OGB-frac(b={b})"),
             removed_coeffs: 0,
             rebases: 0,
         }
@@ -61,26 +63,59 @@ impl FractionalOgb {
     pub fn prob(&self, item: u64) -> f64 {
         self.lazy.prob(item)
     }
+
+    /// Batch boundary: re-base if the numerics drifted, then freeze the
+    /// fractional state that pays the next batch's rewards.
+    fn flush_batch(&mut self) {
+        self.in_batch = 0;
+        if self.lazy.maybe_rebase().is_some() {
+            self.rebases += 1;
+        }
+        self.lazy.freeze();
+    }
 }
 
 impl Policy for FractionalOgb {
-    fn name(&self) -> String {
-        format!("OGB-frac(b={})", self.b)
+    fn name(&self) -> &str {
+        &self.name
     }
 
-    fn request(&mut self, item: u64) -> f64 {
-        let reward = self.lazy.frozen_prob(item);
-        let st = self.lazy.request(item, self.eta);
+    fn serve(&mut self, req: Request) -> f64 {
+        assert!(req.weight >= 0.0, "weights must be non-negative");
+        let reward = req.weight * self.lazy.frozen_prob(req.item);
+        let st = self.lazy.request(req.item, self.eta * req.weight);
         self.removed_coeffs += st.removed as u64;
         self.in_batch += 1;
         if self.in_batch >= self.b {
-            self.in_batch = 0;
-            if self.lazy.maybe_rebase().is_some() {
-                self.rebases += 1;
-            }
-            self.lazy.freeze();
+            self.flush_batch();
         }
         reward
+    }
+
+    /// Batched serve, split at the B-boundaries: within one chunk the
+    /// materialized (frozen) fractional cache does not move, so all
+    /// rewards are read in one pass before the per-request gradient
+    /// steps run — trajectory-identical to per-request `serve`.
+    fn serve_batch(&mut self, reqs: &[Request], rewards: &mut Vec<f64>) {
+        rewards.reserve(reqs.len());
+        let mut rest = reqs;
+        while !rest.is_empty() {
+            let take = (self.b - self.in_batch).min(rest.len());
+            let (chunk, tail) = rest.split_at(take);
+            for r in chunk {
+                assert!(r.weight >= 0.0, "weights must be non-negative");
+                rewards.push(r.weight * self.lazy.frozen_prob(r.item));
+            }
+            for r in chunk {
+                let st = self.lazy.request(r.item, self.eta * r.weight);
+                self.removed_coeffs += st.removed as u64;
+            }
+            self.in_batch += chunk.len();
+            if self.in_batch >= self.b {
+                self.flush_batch();
+            }
+            rest = tail;
+        }
     }
 
     fn occupancy(&self) -> f64 {

@@ -13,7 +13,7 @@
 //! counts for a long prefix — the mechanism behind FTPL's slow start in the
 //! paper's Figs. 3-4 and its LFU-like rigidity under pattern changes.
 
-use super::Policy;
+use super::{Policy, Request};
 use crate::util::fxhash::hash2;
 use crate::util::FlatTree;
 
@@ -23,11 +23,14 @@ pub struct Ftpl {
     cap: usize,
     zeta: f64,
     seed: u64,
-    counts: Vec<u64>,
+    /// accumulated (weighted) request counts; f64 so weighted requests
+    /// add `w_i` per request — integer-exact for unit weights below 2^53
+    counts: Vec<f64>,
     /// ordered by perturbed count; holds exactly the cached top-C
     cached: FlatTree,
     /// perturbed-count key per cached item (NaN = not cached)
     key_of: Vec<f64>,
+    name: String,
 }
 
 impl Ftpl {
@@ -38,9 +41,10 @@ impl Ftpl {
             cap,
             zeta,
             seed,
-            counts: vec![0; n],
+            counts: vec![0.0; n],
             cached: FlatTree::new(),
             key_of: vec![f64::NAN; n],
+            name: format!("FTPL(zeta={zeta:.3})"),
         };
         // Initial cache: top-C by pure noise (all counts are zero) —
         // O(N) select of the C largest perturbed keys, sort only that
@@ -77,7 +81,7 @@ impl Ftpl {
 
     #[inline]
     fn perturbed(&self, i: u64) -> f64 {
-        self.counts[i as usize] as f64 + self.zeta * self.noise(i)
+        self.counts[i as usize] + self.zeta * self.noise(i)
     }
 
     pub fn is_cached(&self, i: u64) -> bool {
@@ -104,24 +108,35 @@ impl Ftpl {
 }
 
 impl Policy for Ftpl {
-    fn name(&self) -> String {
-        format!("FTPL(zeta={:.3})", self.zeta)
+    fn name(&self) -> &str {
+        &self.name
     }
 
-    fn request(&mut self, item: u64) -> f64 {
-        let ii = item as usize;
+    /// Weighted FTPL: the perturbed leader of the weighted counts
+    /// `sum w · 1[request]` — the natural extension of the count
+    /// statistic to the paper's weighted objective.  The reward is `w`
+    /// on a hit.  Per-request tree re-keying is the algorithm (no batch
+    /// cadence exists to amortize), so the default `serve_batch` loop is
+    /// already the fastest correct implementation.
+    fn serve(&mut self, req: Request) -> f64 {
+        let ii = req.item as usize;
         assert!(ii < self.n);
-        let hit = if !self.key_of[ii].is_nan() { 1.0 } else { 0.0 };
-        self.counts[ii] += 1;
-        if hit == 1.0 {
+        assert!(req.weight >= 0.0, "weights must be non-negative");
+        let hit = if !self.key_of[ii].is_nan() {
+            req.weight
+        } else {
+            0.0
+        };
+        self.counts[ii] += req.weight;
+        if !self.key_of[ii].is_nan() {
             // re-key in place
             let old = self.key_of[ii];
-            let new = self.perturbed(item);
-            self.cached.remove(old, item);
-            self.cached.insert(new, item);
+            let new = self.perturbed(req.item);
+            self.cached.remove(old, req.item);
+            self.cached.insert(new, req.item);
             self.key_of[ii] = new;
         } else {
-            self.offer(item);
+            self.offer(req.item);
         }
         hit
     }

@@ -8,7 +8,7 @@
 
 use std::collections::BTreeSet;
 
-use super::Policy;
+use super::{Policy, Request};
 use crate::util::{FxHashMap, OrdF64};
 
 #[derive(Debug, Clone)]
@@ -51,11 +51,12 @@ impl Gds {
 }
 
 impl Policy for Gds {
-    fn name(&self) -> String {
-        "GDS".into()
+    fn name(&self) -> &str {
+        "GDS"
     }
 
-    fn request(&mut self, item: u64) -> f64 {
+    fn serve(&mut self, req: Request) -> f64 {
+        let item = req.item;
         let (cost, size) = (self.cost_fn)(item);
         self.tick += 1;
         if let Some(&(h, t)) = self.h_of.get(&item) {
@@ -64,7 +65,7 @@ impl Policy for Gds {
             self.queue.remove(&(OrdF64::new(h), t, item));
             self.queue.insert((OrdF64::new(new_h), self.tick, item));
             self.h_of.insert(item, (new_h, self.tick));
-            return 1.0;
+            return req.weight;
         }
         if self.h_of.len() >= self.cap {
             let &(h_min, t_min, victim) = self.queue.iter().next().expect("full cache");

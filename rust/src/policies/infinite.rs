@@ -2,7 +2,7 @@
 //! Upper-bounds every feasible policy's hit count (used by the App. B.2
 //! lifetime analysis and as a sanity ceiling in figures).
 
-use super::Policy;
+use super::{Policy, Request};
 use crate::util::FxHashSet;
 
 #[derive(Debug, Clone, Default)]
@@ -17,15 +17,15 @@ impl InfiniteCache {
 }
 
 impl Policy for InfiniteCache {
-    fn name(&self) -> String {
-        "Infinite".into()
+    fn name(&self) -> &str {
+        "Infinite"
     }
 
-    fn request(&mut self, item: u64) -> f64 {
-        if self.seen.insert(item) {
+    fn serve(&mut self, req: Request) -> f64 {
+        if self.seen.insert(req.item) {
             0.0
         } else {
-            1.0
+            req.weight
         }
     }
 

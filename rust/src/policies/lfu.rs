@@ -10,7 +10,7 @@
 
 use std::collections::BTreeSet;
 
-use super::Policy;
+use super::{Policy, Request};
 use crate::util::FxHashMap;
 
 #[derive(Debug, Clone)]
@@ -46,11 +46,14 @@ impl Lfu {
 }
 
 impl Policy for Lfu {
-    fn name(&self) -> String {
-        "LFU".into()
+    fn name(&self) -> &str {
+        "LFU"
     }
 
-    fn request(&mut self, item: u64) -> f64 {
+    /// Weight-oblivious baseline: counts stay pure frequencies (the
+    /// paper's LFU), the weight only scales the hit reward.
+    fn serve(&mut self, req: Request) -> f64 {
+        let item = req.item;
         self.tick += 1;
         let cnt = {
             let e = self.counts.entry(item).or_insert(0);
@@ -62,7 +65,7 @@ impl Policy for Lfu {
             self.cached.remove(&(old_cnt, old_tick, item));
             self.cached.insert((cnt, self.tick, item));
             self.key_of.insert(item, (cnt, self.tick));
-            return 1.0;
+            return req.weight;
         }
         // miss: admit; evict the (count, recency)-smallest if full.
         if self.key_of.len() >= self.cap {

@@ -1,7 +1,7 @@
 //! Least Recently Used — O(1) per request (hash map + intrusive list).
 
 use super::list::DList;
-use super::Policy;
+use super::{Policy, Request};
 use crate::util::FxHashMap;
 
 #[derive(Debug, Clone)]
@@ -27,14 +27,15 @@ impl Lru {
 }
 
 impl Policy for Lru {
-    fn name(&self) -> String {
-        "LRU".into()
+    fn name(&self) -> &str {
+        "LRU"
     }
 
-    fn request(&mut self, item: u64) -> f64 {
+    fn serve(&mut self, req: Request) -> f64 {
+        let item = req.item;
         if let Some(&h) = self.map.get(&item) {
             self.list.move_front(h);
-            return 1.0;
+            return req.weight;
         }
         if self.map.len() >= self.cap {
             let victim = self.list.pop_back().expect("non-empty at capacity");

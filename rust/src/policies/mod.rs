@@ -3,8 +3,17 @@
 //! comparison set used in the paper's evaluation — LRU, LFU, FIFO, ARC,
 //! GDS, FTPL and OPT (best static allocation in hindsight).
 //!
-//! All policies implement the streaming [`Policy`] trait; OPT is two-pass
-//! and is constructed from the trace directly.
+//! All policies implement the streaming [`Policy`] trait (v2, DESIGN.md
+//! §9): requests are weighted [`Request`]s served one at a time
+//! ([`Policy::serve`]) or as batches ([`Policy::serve_batch`] — the
+//! paper's B-batched operation, overridden by the batched policies to
+//! amortize per-request bookkeeping without changing the trajectory).
+//! OPT is two-pass and is constructed from the trace directly.
+//!
+//! Construction is typed: a [`PolicySpec`] (parsed from strings like
+//! `ogb{batch=64,rebase=1e6}`) names every built-in, and the open
+//! [`PolicyRegistry`] lets external code add constructors without
+//! editing this module (they flow through [`AnyPolicy::Dyn`]).
 
 pub mod arc;
 pub mod fifo;
@@ -19,6 +28,7 @@ pub mod ogb;
 pub mod ogb_classic;
 pub mod omd;
 pub mod opt;
+pub mod spec;
 
 pub use arc::ArcCache;
 pub use fifo::Fifo;
@@ -32,21 +42,89 @@ pub use ogb::Ogb;
 pub use ogb_classic::{CpuDenseStep, DenseStep, OgbClassic, OgbClassicMode};
 pub use omd::OmdFractional;
 pub use opt::Opt;
+pub use spec::{PolicyBuildCtx, PolicyRegistry, PolicySpec};
 
-/// Streaming cache policy.
+/// One weighted request: the paper's general objective (Eq. 1) rewards a
+/// hit on item `i` with `w_i`, not 1.  `weight = 1.0` recovers the unit
+/// setting exactly — every policy is bit-identical to the v1
+/// `request(item)` path under unit weights (asserted by
+/// `rust/tests/policy_api_v2.rs`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Request {
+    pub item: u64,
+    pub weight: f64,
+}
+
+impl Request {
+    /// Unit-weight request — the v1 `request(item)` semantics.
+    #[inline]
+    pub fn unit(item: u64) -> Self {
+        Self { item, weight: 1.0 }
+    }
+
+    /// Weighted request (`weight >= 0`; checked by the policies that use
+    /// the weight in their update, not here on the hot path).
+    #[inline]
+    pub fn weighted(item: u64, weight: f64) -> Self {
+        debug_assert!(weight >= 0.0, "weights must be non-negative");
+        Self { item, weight }
+    }
+}
+
+impl From<u64> for Request {
+    #[inline]
+    fn from(item: u64) -> Self {
+        Self::unit(item)
+    }
+}
+
+/// Streaming cache policy (API v2 — DESIGN.md §9).
 ///
-/// `request` serves one request and returns the obtained reward: for
-/// integral policies a hit indicator in {0, 1}; for fractional policies
-/// the stored fraction `f_j ∈ [0, 1]` of the requested item (the paper's
-/// `phi_t` with `w = 1`).
+/// [`Policy::serve`] serves one weighted request and returns the obtained
+/// reward: for integral policies `weight` on a hit and 0 on a miss; for
+/// fractional policies `weight · f_j` where `f_j ∈ [0, 1]` is the stored
+/// fraction of the requested item (the paper's `phi_t`, generalized to
+/// per-item weights as in §2.1 "our results can be easily extended").
+///
+/// [`Policy::serve_batch`] serves a slice of requests and appends one
+/// reward per request to `rewards`.  The default implementation loops
+/// over `serve`; the batched policies (OGB, OGB-frac, OGB_cl, OMD)
+/// override it to amortize bookkeeping across the batch — splitting at
+/// their internal B-boundaries so the reward trajectory is **identical**
+/// to the per-request path (the `serve_batch ≡ serve` contract,
+/// differential-tested for every registered policy).
+///
+/// `request(item)` survives as a provided convenience shim equal to
+/// `serve(Request::unit(item))` so v1 call sites keep working.
 ///
 /// Deliberately NOT `Send`: the XLA-backed dense backend wraps PJRT
 /// handles that are single-threaded; the coordinator's shard threads own
 /// concrete (`Send`) policy values instead of trait objects.
 pub trait Policy {
-    fn name(&self) -> String;
+    /// Human-readable policy name.  Borrowed (either `'static` or from a
+    /// string precomputed at construction): calling this on the hot path
+    /// — per batch, in diagnostics — must not allocate.
+    fn name(&self) -> &str;
 
-    fn request(&mut self, item: u64) -> f64;
+    /// Serve one weighted request, returning the obtained reward.
+    fn serve(&mut self, req: Request) -> f64;
+
+    /// Serve a batch of requests, appending one reward per request to
+    /// `rewards` (not cleared first; callers reuse the buffer).  Must be
+    /// trajectory-identical to calling [`Policy::serve`] per request.
+    fn serve_batch(&mut self, reqs: &[Request], rewards: &mut Vec<f64>) {
+        rewards.reserve(reqs.len());
+        for &r in reqs {
+            let x = self.serve(r);
+            rewards.push(x);
+        }
+    }
+
+    /// v1 compatibility shim: unit-weight single request.
+    #[inline]
+    fn request(&mut self, item: u64) -> f64 {
+        self.serve(Request::unit(item))
+    }
 
     /// Number of items currently stored (fractional mass for fractional
     /// policies).  Drives the paper's Fig. 9 (left).
@@ -75,7 +153,8 @@ pub struct Diag {
 }
 
 /// Construction knobs shared by the policy factory (`t_hint` is the
-/// expected horizon used for the theoretical eta/zeta).
+/// expected horizon used for the theoretical eta/zeta).  Spec-level
+/// parameters (`ogb{batch=8}`) override the corresponding field.
 #[derive(Debug, Clone)]
 pub struct BuildOpts {
     pub t_hint: usize,
@@ -102,6 +181,11 @@ impl BuildOpts {
 /// simulation inner loop monomorphizes (`sim::run_source::<AnyPolicy>`)
 /// into a direct, predictable branch per request instead of a vtable
 /// call per request through `Box<dyn Policy>` (DESIGN.md §7).
+///
+/// [`AnyPolicy::Dyn`] is the escape hatch for [`PolicyRegistry`]-built
+/// policies: external constructors return `Box<dyn Policy>` and still
+/// flow through every harness (sim, sweep, bench, shards) — paying the
+/// vtable call the built-ins avoid.
 pub enum AnyPolicy {
     Lru(Lru),
     Lfu(Lfu),
@@ -115,6 +199,8 @@ pub enum AnyPolicy {
     Omd(OmdFractional),
     Opt(Opt),
     Infinite(InfiniteCache),
+    /// registry-built policy (open extension point, DESIGN.md §9)
+    Dyn(Box<dyn Policy>),
 }
 
 macro_rules! any_policy_dispatch {
@@ -132,18 +218,24 @@ macro_rules! any_policy_dispatch {
             AnyPolicy::Omd($p) => $body,
             AnyPolicy::Opt($p) => $body,
             AnyPolicy::Infinite($p) => $body,
+            AnyPolicy::Dyn($p) => $body,
         }
     };
 }
 
 impl Policy for AnyPolicy {
-    fn name(&self) -> String {
+    fn name(&self) -> &str {
         any_policy_dispatch!(self, p => p.name())
     }
 
     #[inline(always)]
-    fn request(&mut self, item: u64) -> f64 {
-        any_policy_dispatch!(self, p => p.request(item))
+    fn serve(&mut self, req: Request) -> f64 {
+        any_policy_dispatch!(self, p => p.serve(req))
+    }
+
+    #[inline]
+    fn serve_batch(&mut self, reqs: &[Request], rewards: &mut Vec<f64>) {
+        any_policy_dispatch!(self, p => p.serve_batch(reqs, rewards))
     }
 
     fn occupancy(&self) -> f64 {
@@ -155,70 +247,54 @@ impl Policy for AnyPolicy {
     }
 }
 
-/// Construct a concrete [`AnyPolicy`] by CLI name; `trace` is required
-/// only by `opt`.
+impl Policy for Box<dyn Policy> {
+    fn name(&self) -> &str {
+        (**self).name()
+    }
+
+    fn serve(&mut self, req: Request) -> f64 {
+        (**self).serve(req)
+    }
+
+    fn serve_batch(&mut self, reqs: &[Request], rewards: &mut Vec<f64>) {
+        (**self).serve_batch(reqs, rewards)
+    }
+
+    fn occupancy(&self) -> f64 {
+        (**self).occupancy()
+    }
+
+    fn diag(&self) -> Diag {
+        (**self).diag()
+    }
+}
+
+/// Construct a concrete [`AnyPolicy`] from a spec string (`"lru"`,
+/// `"ogb{batch=64,rebase=1e6}"`, or any [`PolicyRegistry`] name); `trace`
+/// is required only by `opt`.  Parses via [`PolicySpec`] and delegates to
+/// [`build_spec`] — the stringly match of v1 is gone.
 pub fn build(
-    name: &str,
+    spec_text: &str,
     n: usize,
     c: usize,
     opts: &BuildOpts,
     trace: Option<&crate::trace::Trace>,
 ) -> anyhow::Result<AnyPolicy> {
-    let (t_hint, b, seed) = (opts.t_hint, opts.batch, opts.seed);
-    let eta = crate::theory_eta(c as f64, n as f64, t_hint as f64, b as f64);
-    let zeta = crate::ftpl_theory_zeta(c as f64, n as f64, t_hint as f64);
-    Ok(match name {
-        "lru" => AnyPolicy::Lru(Lru::new(c)),
-        "lfu" => AnyPolicy::Lfu(Lfu::new(c)),
-        "fifo" => AnyPolicy::Fifo(Fifo::new(c)),
-        "arc" => AnyPolicy::Arc(ArcCache::new(c)),
-        "gds" => AnyPolicy::Gds(Gds::new(c)),
-        "ftpl" => AnyPolicy::Ftpl(Ftpl::new(n, c, zeta, seed)),
-        "ogb" => {
-            let mut p = Ogb::new(n, c as f64, eta, b, seed);
-            if let Some(t) = opts.rebase_threshold {
-                p = p.with_rebase_threshold(t);
-            }
-            AnyPolicy::Ogb(p)
-        }
-        "ogb-frac" => {
-            let mut p = FractionalOgb::new(n, c as f64, eta, b);
-            if let Some(t) = opts.rebase_threshold {
-                p = p.with_rebase_threshold(t);
-            }
-            AnyPolicy::OgbFrac(p)
-        }
-        "ogb-classic" => AnyPolicy::Classic(OgbClassic::new(
-            n,
-            c as f64,
-            eta,
-            b,
-            OgbClassicMode::Integral,
-            Box::new(CpuDenseStep),
-            seed,
-        )),
-        "ogb-classic-frac" => AnyPolicy::Classic(OgbClassic::new(
-            n,
-            c as f64,
-            eta,
-            b,
-            OgbClassicMode::Fractional,
-            Box::new(CpuDenseStep),
-            seed,
-        )),
-        "omd-frac" => AnyPolicy::Omd(OmdFractional::with_theory_eta(n, c as f64, t_hint, b)),
-        "opt" => {
-            let tr = trace.ok_or_else(|| anyhow::anyhow!("opt policy needs the trace"))?;
-            AnyPolicy::Opt(Opt::from_trace(tr, c))
-        }
-        "infinite" => AnyPolicy::Infinite(InfiniteCache::new()),
-        other => anyhow::bail!(
-            "unknown policy `{other}` (known: lru lfu fifo arc gds ftpl ogb ogb-frac ogb-classic ogb-classic-frac omd-frac opt infinite)"
-        ),
-    })
+    build_spec(&spec_text.parse::<PolicySpec>()?, n, c, opts, trace)
 }
 
-/// Construct a boxed policy by CLI name — the dyn-dispatch convenience
+/// Construct a concrete [`AnyPolicy`] from a typed [`PolicySpec`].
+pub fn build_spec(
+    spec: &PolicySpec,
+    n: usize,
+    c: usize,
+    opts: &BuildOpts,
+    trace: Option<&crate::trace::Trace>,
+) -> anyhow::Result<AnyPolicy> {
+    spec::build_spec(spec, n, c, opts, trace)
+}
+
+/// Construct a boxed policy by spec string — the dyn-dispatch convenience
 /// wrapper around [`build`] kept for callers that store heterogeneous
 /// policies; hot loops should prefer `build` + a monomorphized
 /// `sim::run_source`.
@@ -315,7 +391,8 @@ mod tests {
 
     /// DESIGN.md §7 contract: once warmed up, the OGB request path
     /// performs zero heap allocations — no scratch buffer may grow over a
-    /// steady-state window.
+    /// steady-state window.  Checked on both the per-request and the
+    /// batched serve paths.
     #[test]
     fn steady_state_request_path_is_allocation_free() {
         let n = 2_000;
@@ -326,8 +403,14 @@ mod tests {
             p.request(zipf.sample(&mut rng));
         }
         let warm = p.diag().scratch_grows;
-        for _ in 0..20_000 {
-            p.request(zipf.sample(&mut rng));
+        let mut reqs = [Request::unit(0); 64];
+        let mut rewards = Vec::with_capacity(64);
+        for _ in 0..300 {
+            for r in reqs.iter_mut() {
+                *r = Request::unit(zipf.sample(&mut rng));
+            }
+            rewards.clear();
+            p.serve_batch(&reqs, &mut rewards);
         }
         assert_eq!(
             p.diag().scratch_grows,
@@ -363,6 +446,38 @@ mod tests {
             assert!(
                 (occ - c as f64).abs() < 6.0 * (c as f64).sqrt(),
                 "{name} occupancy {occ} far from soft C={c}"
+            );
+        }
+    }
+
+    /// Weighted serving: the weight-*oblivious* comparison policies pay
+    /// `w` per hit while their eviction decisions ignore weights, so the
+    /// weighted trajectory is the unit trajectory with scaled rewards.
+    /// (FTPL is deliberately NOT in this list: its perturbed counts
+    /// accumulate `w`, so weights change which items it caches —
+    /// DESIGN.md §9.)
+    #[test]
+    fn unit_weight_serve_equals_request_for_baselines() {
+        let t = synth::zipf(300, 10_000, 0.9, 17);
+        for name in ["lru", "lfu", "fifo", "arc", "gds", "infinite"] {
+            let mut a = by_name(name, 300, 30, t.len(), 1, 7, None).unwrap();
+            let mut b = by_name(name, 300, 30, t.len(), 1, 7, None).unwrap();
+            for &r in &t.requests {
+                let x = a.request(r as u64);
+                let y = b.serve(Request::weighted(r as u64, 3.0));
+                assert_eq!(3.0 * x, y, "{name}: weight must scale the reward");
+            }
+        }
+        // FTPL is weight-aware (counts accumulate w, so non-unit weights
+        // legitimately change its cache); the property that must hold is
+        // the unit-weight identity with the v1 path.
+        let mut a = by_name("ftpl", 300, 30, t.len(), 1, 7, None).unwrap();
+        let mut b = by_name("ftpl", 300, 30, t.len(), 1, 7, None).unwrap();
+        for &r in &t.requests {
+            assert_eq!(
+                a.request(r as u64),
+                b.serve(Request::unit(r as u64)),
+                "ftpl: unit-weight serve must equal v1 request"
             );
         }
     }

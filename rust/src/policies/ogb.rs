@@ -14,7 +14,7 @@
 //! The policy also drives the numerical re-base, shifting the sampler's
 //! keys in lock-step (see `LazySimplex::maybe_rebase`).
 
-use super::{Diag, Policy};
+use super::{Diag, Policy, Request};
 use crate::proj::LazySimplex;
 use crate::sample::CoordinatedSampler;
 
@@ -25,6 +25,7 @@ pub struct Ogb {
     eta: f64,
     b: usize,
     batch: Vec<u64>,
+    name: String,
     // cumulative diagnostics
     removed_coeffs: u64,
     sample_evictions: u64,
@@ -47,6 +48,7 @@ impl Ogb {
             eta,
             b,
             batch: Vec::with_capacity(b),
+            name: format!("OGB(b={b})"),
             removed_coeffs: 0,
             sample_evictions: 0,
             rebases: 0,
@@ -90,24 +92,22 @@ impl Ogb {
     /// Weighted request — the paper's general reward `w_{t,i}·r_{t,i}·x_i`
     /// (§2.1: "our results can be easily extended").  The gradient of the
     /// weighted reward w.r.t. `f_j` is `w`, so the step is `eta·w`; the
-    /// returned reward is `w` on a hit, 0 otherwise.
+    /// returned reward is `w` on a hit, 0 otherwise.  Equivalent to
+    /// `serve(Request::weighted(item, weight))`.
     pub fn request_weighted(&mut self, item: u64, weight: f64) -> f64 {
-        assert!(weight >= 0.0, "weights must be non-negative");
-        self.requests += 1;
-        let hit = if self.sampler.is_cached(item) { weight } else { 0.0 };
-        let st = self.lazy.request(item, self.eta * weight);
-        self.removed_coeffs += st.removed as u64;
-        self.batch.push(item);
-        if self.batch.len() >= self.b {
-            let sst = self.sampler.update(&self.lazy, &self.batch);
-            self.sample_evictions += sst.evicted as u64;
-            self.batch.clear();
-            if let Some(shift) = self.lazy.maybe_rebase() {
-                self.sampler.shift_keys(shift);
-                self.rebases += 1;
-            }
+        self.serve(Request::weighted(item, weight))
+    }
+
+    /// End of an Algorithm 3 batch: refresh the sample from the advanced
+    /// fractional state, then (possibly) re-base the numerics.
+    fn flush_batch(&mut self) {
+        let sst = self.sampler.update(&self.lazy, &self.batch);
+        self.sample_evictions += sst.evicted as u64;
+        self.batch.clear();
+        if let Some(shift) = self.lazy.maybe_rebase() {
+            self.sampler.shift_keys(shift);
+            self.rebases += 1;
         }
-        hit
     }
 
     /// Exhaustive debug validation (tests only — O(N)).
@@ -121,14 +121,66 @@ impl Ogb {
 }
 
 impl Policy for Ogb {
-    fn name(&self) -> String {
-        format!("OGB(b={})", self.b)
+    fn name(&self) -> &str {
+        &self.name
     }
 
-    fn request(&mut self, item: u64) -> f64 {
+    fn serve(&mut self, req: Request) -> f64 {
         // 1. serve against the current integral cache; 2. gradient step +
         // lazy projection (every request); 3. sample refresh every B.
-        self.request_weighted(item, 1.0)
+        assert!(req.weight >= 0.0, "weights must be non-negative");
+        self.requests += 1;
+        let hit = if self.sampler.is_cached(req.item) {
+            req.weight
+        } else {
+            0.0
+        };
+        let st = self.lazy.request(req.item, self.eta * req.weight);
+        self.removed_coeffs += st.removed as u64;
+        self.batch.push(req.item);
+        if self.batch.len() >= self.b {
+            self.flush_batch();
+        }
+        hit
+    }
+
+    /// Batched serve, split at the policy's internal B-boundaries so the
+    /// trajectory is identical to per-request [`Ogb::serve`]: within one
+    /// chunk the sampled cache `x_t` is frozen (Algorithm 3 refreshes
+    /// only at the boundary), so all chunk rewards are read first in one
+    /// pass, then the per-request gradient steps (Algorithm 2 — the
+    /// fractional state advances *every* request, OGB's defining
+    /// difference from OGB_cl) are applied, then one UPDATESAMPLE runs.
+    /// This hoists the hit checks out of the projection loop and pays
+    /// one batch-boundary check per chunk instead of per request.
+    fn serve_batch(&mut self, reqs: &[Request], rewards: &mut Vec<f64>) {
+        rewards.reserve(reqs.len());
+        let mut rest = reqs;
+        while !rest.is_empty() {
+            let room = self.b - self.batch.len();
+            let take = room.min(rest.len());
+            let (chunk, tail) = rest.split_at(take);
+            // rewards against the frozen sample
+            for r in chunk {
+                assert!(r.weight >= 0.0, "weights must be non-negative");
+                rewards.push(if self.sampler.is_cached(r.item) {
+                    r.weight
+                } else {
+                    0.0
+                });
+            }
+            // per-request fractional steps (order preserved)
+            for r in chunk {
+                let st = self.lazy.request(r.item, self.eta * r.weight);
+                self.removed_coeffs += st.removed as u64;
+                self.batch.push(r.item);
+            }
+            self.requests += chunk.len() as u64;
+            if self.batch.len() >= self.b {
+                self.flush_batch();
+            }
+            rest = tail;
+        }
     }
 
     fn occupancy(&self) -> f64 {

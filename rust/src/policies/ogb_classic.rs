@@ -16,7 +16,7 @@
 //! mode rewards the stored fraction.  Both freeze `f` within a batch —
 //! the defining difference from the paper's OGB.
 
-use super::{Diag, Policy};
+use super::{Diag, Policy, Request};
 use crate::proj::dense;
 use crate::sample::systematic_sample;
 use crate::util::Xoshiro256pp;
@@ -61,6 +61,7 @@ pub struct OgbClassic {
     b: usize,
     mode: OgbClassicMode,
     backend: Box<dyn DenseStep>,
+    name: String,
     f: Vec<f64>,
     counts: Vec<f64>,
     touched: Vec<u64>,
@@ -84,6 +85,14 @@ impl OgbClassic {
         assert!(b >= 1 && eta > 0.0);
         assert!(c > 0.0 && c <= n as f64);
         let f = vec![c / n as f64; n];
+        let name = format!(
+            "OGB_cl[{},{}](b={b})",
+            match mode {
+                OgbClassicMode::Integral => "int",
+                OgbClassicMode::Fractional => "frac",
+            },
+            backend.backend_name()
+        );
         let mut s = Self {
             n,
             c,
@@ -91,6 +100,7 @@ impl OgbClassic {
             b,
             mode,
             backend,
+            name,
             f,
             counts: vec![0.0; n],
             touched: Vec::new(),
@@ -159,36 +169,79 @@ impl OgbClassic {
 }
 
 impl Policy for OgbClassic {
-    fn name(&self) -> String {
-        let m = match self.mode {
-            OgbClassicMode::Integral => "int",
-            OgbClassicMode::Fractional => "frac",
-        };
-        format!("OGB_cl[{m},{}](b={})", self.backend.backend_name(), self.b)
+    fn name(&self) -> &str {
+        &self.name
     }
 
-    fn request(&mut self, item: u64) -> f64 {
-        let ii = item as usize;
+    fn serve(&mut self, req: Request) -> f64 {
+        let ii = req.item as usize;
         assert!(ii < self.n);
-        let reward = match self.mode {
-            OgbClassicMode::Integral => {
-                if self.cached[ii] {
-                    1.0
-                } else {
-                    0.0
+        assert!(req.weight >= 0.0, "weights must be non-negative");
+        let reward = req.weight
+            * match self.mode {
+                OgbClassicMode::Integral => {
+                    if self.cached[ii] {
+                        1.0
+                    } else {
+                        0.0
+                    }
                 }
-            }
-            OgbClassicMode::Fractional => self.f[ii],
-        };
+                OgbClassicMode::Fractional => self.f[ii],
+            };
         if self.counts[ii] == 0.0 {
-            self.touched.push(item);
+            self.touched.push(req.item);
         }
-        self.counts[ii] += 1.0;
+        self.counts[ii] += req.weight;
         self.in_batch += 1;
         if self.in_batch >= self.b {
             self.flush_batch();
         }
         reward
+    }
+
+    /// Batched serve, split at the B-boundaries: OGB_cl freezes both `f`
+    /// and the sampled cache within a batch (its defining difference from
+    /// OGB), so chunk rewards are one frozen-state read pass and the
+    /// gradient accumulation is a commutative sum — one dense
+    /// `f <- Pi_F(f + eta·counts)` step per boundary, exactly the paper's
+    /// Eq. (2) batch cadence.  Trajectory-identical to per-request serve.
+    fn serve_batch(&mut self, reqs: &[Request], rewards: &mut Vec<f64>) {
+        rewards.reserve(reqs.len());
+        let mut rest = reqs;
+        while !rest.is_empty() {
+            let take = (self.b - self.in_batch).min(rest.len());
+            let (chunk, tail) = rest.split_at(take);
+            for r in chunk {
+                let ii = r.item as usize;
+                assert!(ii < self.n);
+                assert!(r.weight >= 0.0, "weights must be non-negative");
+                rewards.push(
+                    r.weight
+                        * match self.mode {
+                            OgbClassicMode::Integral => {
+                                if self.cached[ii] {
+                                    1.0
+                                } else {
+                                    0.0
+                                }
+                            }
+                            OgbClassicMode::Fractional => self.f[ii],
+                        },
+                );
+            }
+            for r in chunk {
+                let ii = r.item as usize;
+                if self.counts[ii] == 0.0 {
+                    self.touched.push(r.item);
+                }
+                self.counts[ii] += r.weight;
+            }
+            self.in_batch += chunk.len();
+            if self.in_batch >= self.b {
+                self.flush_batch();
+            }
+            rest = tail;
+        }
     }
 
     fn occupancy(&self) -> f64 {

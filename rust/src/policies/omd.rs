@@ -14,7 +14,7 @@
 //! paper cites for OMD and the reason it cannot reach OGB's O(log N); we
 //! include it as a correctness/quality baseline, not a speed one.
 
-use super::{Diag, Policy};
+use super::{Diag, Policy, Request};
 
 pub struct OmdFractional {
     n: usize,
@@ -28,6 +28,7 @@ pub struct OmdFractional {
     /// allocated a fresh `vec![false; n]` per batch flush).
     cap_scratch: Vec<bool>,
     in_batch: usize,
+    name: String,
     projection_passes: u64,
 }
 
@@ -45,6 +46,7 @@ impl OmdFractional {
             touched: Vec::new(),
             cap_scratch: vec![false; n],
             in_batch: 0,
+            name: format!("OMD-frac(b={b})"),
             projection_passes: 0,
         }
     }
@@ -121,23 +123,58 @@ impl OmdFractional {
 }
 
 impl Policy for OmdFractional {
-    fn name(&self) -> String {
-        format!("OMD-frac(b={})", self.b)
+    fn name(&self) -> &str {
+        &self.name
     }
 
-    fn request(&mut self, item: u64) -> f64 {
-        let ii = item as usize;
+    fn serve(&mut self, req: Request) -> f64 {
+        let ii = req.item as usize;
         assert!(ii < self.n);
-        let reward = self.f[ii];
+        assert!(req.weight >= 0.0, "weights must be non-negative");
+        // gradient of the weighted reward `w·f_i` w.r.t. f_i is w: the
+        // multiplicative step accumulates eta·w per request
+        let reward = req.weight * self.f[ii];
         if self.counts[ii] == 0.0 {
-            self.touched.push(item);
+            self.touched.push(req.item);
         }
-        self.counts[ii] += 1.0;
+        self.counts[ii] += req.weight;
         self.in_batch += 1;
         if self.in_batch >= self.b {
             self.flush();
         }
         reward
+    }
+
+    /// Batched serve, split at the B-boundaries: `f` is frozen between
+    /// flushes, so chunk rewards are read in one pass and the gradient
+    /// accumulation (a commutative sum) follows — one flush per boundary
+    /// instead of a boundary check per request.  Trajectory-identical to
+    /// per-request `serve`.
+    fn serve_batch(&mut self, reqs: &[Request], rewards: &mut Vec<f64>) {
+        rewards.reserve(reqs.len());
+        let mut rest = reqs;
+        while !rest.is_empty() {
+            let take = (self.b - self.in_batch).min(rest.len());
+            let (chunk, tail) = rest.split_at(take);
+            for r in chunk {
+                let ii = r.item as usize;
+                assert!(ii < self.n);
+                assert!(r.weight >= 0.0, "weights must be non-negative");
+                rewards.push(r.weight * self.f[ii]);
+            }
+            for r in chunk {
+                let ii = r.item as usize;
+                if self.counts[ii] == 0.0 {
+                    self.touched.push(r.item);
+                }
+                self.counts[ii] += r.weight;
+            }
+            self.in_batch += chunk.len();
+            if self.in_batch >= self.b {
+                self.flush();
+            }
+            rest = tail;
+        }
     }
 
     fn occupancy(&self) -> f64 {

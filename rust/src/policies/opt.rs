@@ -5,7 +5,7 @@
 //! Note this is the online-learning OPT (static), not Belady's MIN
 //! (dynamic); the paper's regret is defined against the static allocation.
 
-use super::Policy;
+use super::{Policy, Request};
 use crate::trace::Trace;
 use crate::util::FxHashSet;
 
@@ -34,13 +34,13 @@ impl Opt {
 }
 
 impl Policy for Opt {
-    fn name(&self) -> String {
-        "OPT".into()
+    fn name(&self) -> &str {
+        "OPT"
     }
 
-    fn request(&mut self, item: u64) -> f64 {
-        if self.set.contains(&item) {
-            1.0
+    fn serve(&mut self, req: Request) -> f64 {
+        if self.set.contains(&req.item) {
+            req.weight
         } else {
             0.0
         }

@@ -1,0 +1,649 @@
+//! Typed policy construction (DESIGN.md §9): [`PolicySpec`] — a parsed,
+//! validated description of a policy configuration — replaces the v1
+//! stringly `build(name, ...)` match, and the open [`PolicyRegistry`]
+//! lets tests, benches and external code add policies without editing
+//! `policies/mod.rs`.
+//!
+//! Grammar (one spec = one policy):
+//!
+//! ```text
+//! spec   :=  kind [ '{' key=value (',' key=value)* '}' ]
+//! ```
+//!
+//! Numbers accept `1e6` / `1_000_000` forms.  Built-in kinds and their
+//! parameters (all optional; unset values fall back to [`BuildOpts`] and
+//! the theory formulas):
+//!
+//! | kind               | parameters                                  |
+//! |--------------------|---------------------------------------------|
+//! | `lru` `lfu` `fifo` `arc` `gds` `infinite` `opt` | —              |
+//! | `ftpl`             | `zeta` (noise scale; default theory)        |
+//! | `ogb`              | `batch`, `eta`, `rebase` (re-base threshold)|
+//! | `ogb-frac`         | `batch`, `eta`, `rebase`                    |
+//! | `ogb-classic`      | `batch`, `eta`                              |
+//! | `ogb-classic-frac` | `batch`, `eta`                              |
+//! | `omd-frac`         | `batch`, `eta`                              |
+//!
+//! Examples: `ogb{batch=64,rebase=1e6}`, `ftpl{zeta=25}`, `lru`.
+//!
+//! Any other kind resolves through the global [`PolicyRegistry`] at
+//! build time; registered constructors receive the raw key=value pairs
+//! in a [`PolicyBuildCtx`] and return `Box<dyn Policy>`, which every
+//! harness serves via [`AnyPolicy::Dyn`].
+
+use std::fmt;
+use std::str::FromStr;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::{AnyPolicy, BuildOpts, Policy};
+
+/// Built-in kinds (reserved in the registry).
+pub const BUILTIN_KINDS: &[&str] = &[
+    "lru",
+    "lfu",
+    "fifo",
+    "arc",
+    "gds",
+    "ftpl",
+    "ogb",
+    "ogb-frac",
+    "ogb-classic",
+    "ogb-classic-frac",
+    "omd-frac",
+    "opt",
+    "infinite",
+];
+
+/// A validated policy configuration.  `FromStr` parses the
+/// `kind{key=value,...}` grammar; `Display` renders the canonical text
+/// (used in CSV provenance and server configs).
+#[derive(Debug, Clone, PartialEq)]
+pub enum PolicySpec {
+    Lru,
+    Lfu,
+    Fifo,
+    Arc,
+    Gds,
+    Infinite,
+    Opt,
+    Ftpl {
+        zeta: Option<f64>,
+    },
+    Ogb {
+        batch: Option<usize>,
+        eta: Option<f64>,
+        rebase: Option<f64>,
+    },
+    OgbFrac {
+        batch: Option<usize>,
+        eta: Option<f64>,
+        rebase: Option<f64>,
+    },
+    OgbClassic {
+        fractional: bool,
+        batch: Option<usize>,
+        eta: Option<f64>,
+    },
+    OmdFrac {
+        batch: Option<usize>,
+        eta: Option<f64>,
+    },
+    /// Non-built-in kind, resolved through the [`PolicyRegistry`] when
+    /// built (so specs can be parsed before the constructor registers).
+    Registered {
+        name: String,
+        params: Vec<(String, String)>,
+    },
+}
+
+impl PolicySpec {
+    /// Parse and validate a spec string (see module grammar).
+    pub fn parse(text: &str) -> Result<Self> {
+        text.parse()
+    }
+
+    /// The policy kind (built-in name or registered name).
+    pub fn kind(&self) -> &str {
+        match self {
+            PolicySpec::Lru => "lru",
+            PolicySpec::Lfu => "lfu",
+            PolicySpec::Fifo => "fifo",
+            PolicySpec::Arc => "arc",
+            PolicySpec::Gds => "gds",
+            PolicySpec::Infinite => "infinite",
+            PolicySpec::Opt => "opt",
+            PolicySpec::Ftpl { .. } => "ftpl",
+            PolicySpec::Ogb { .. } => "ogb",
+            PolicySpec::OgbFrac { .. } => "ogb-frac",
+            PolicySpec::OgbClassic {
+                fractional: false, ..
+            } => "ogb-classic",
+            PolicySpec::OgbClassic {
+                fractional: true, ..
+            } => "ogb-classic-frac",
+            PolicySpec::OmdFrac { .. } => "omd-frac",
+            PolicySpec::Registered { name, .. } => name,
+        }
+    }
+
+    /// True for the fractional policies, whose rewards live in `(0, 1)`
+    /// and cannot be represented by the server's hit/miss reply bitmap.
+    pub fn is_fractional(&self) -> bool {
+        matches!(
+            self,
+            PolicySpec::OgbFrac { .. }
+                | PolicySpec::OmdFrac { .. }
+                | PolicySpec::OgbClassic {
+                    fractional: true,
+                    ..
+                }
+        )
+    }
+}
+
+impl FromStr for PolicySpec {
+    type Err = anyhow::Error;
+
+    fn from_str(text: &str) -> Result<Self> {
+        let text = text.trim();
+        ensure!(!text.is_empty(), "empty policy spec");
+        let (kind, params) = match text.split_once('{') {
+            None => (text, Vec::new()),
+            Some((kind, rest)) => {
+                let Some(body) = rest.strip_suffix('}') else {
+                    bail!("policy spec `{text}`: missing closing `}}`");
+                };
+                let mut params = Vec::new();
+                for kv in body.split(',') {
+                    let kv = kv.trim();
+                    if kv.is_empty() {
+                        continue;
+                    }
+                    let Some((k, v)) = kv.split_once('=') else {
+                        bail!("policy spec `{kind}`: expected key=value, got `{kv}`");
+                    };
+                    let (k, v) = (k.trim().to_string(), v.trim().to_string());
+                    if params.iter().any(|(pk, _)| *pk == k) {
+                        bail!("policy spec `{kind}`: duplicate parameter `{k}`");
+                    }
+                    params.push((k, v));
+                }
+                (kind.trim(), params)
+            }
+        };
+        ensure!(
+            !kind.is_empty()
+                && kind
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_'),
+            "bad policy kind `{kind}`"
+        );
+        let get = |key: &str| params.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str());
+        let check_keys = |allowed: &[&str]| -> Result<()> {
+            for (k, _) in &params {
+                ensure!(
+                    allowed.contains(&k.as_str()),
+                    "policy `{kind}`: unknown parameter `{k}` (allowed: {allowed:?})"
+                );
+            }
+            Ok(())
+        };
+        let f64_of = |key: &str| -> Result<Option<f64>> {
+            get(key)
+                .map(|v| {
+                    v.replace('_', "")
+                        .parse::<f64>()
+                        .with_context(|| format!("policy `{kind}`: bad `{key}` value `{v}`"))
+                })
+                .transpose()
+        };
+        let usize_of = |key: &str| -> Result<Option<usize>> {
+            match f64_of(key)? {
+                None => Ok(None),
+                Some(f) => {
+                    ensure!(
+                        f >= 1.0 && f.fract() == 0.0 && f <= 1e18,
+                        "policy `{kind}`: `{key}` must be a positive integer"
+                    );
+                    Ok(Some(f as usize))
+                }
+            }
+        };
+        Ok(match kind {
+            "lru" => {
+                check_keys(&[])?;
+                PolicySpec::Lru
+            }
+            "lfu" => {
+                check_keys(&[])?;
+                PolicySpec::Lfu
+            }
+            "fifo" => {
+                check_keys(&[])?;
+                PolicySpec::Fifo
+            }
+            "arc" => {
+                check_keys(&[])?;
+                PolicySpec::Arc
+            }
+            "gds" => {
+                check_keys(&[])?;
+                PolicySpec::Gds
+            }
+            "infinite" => {
+                check_keys(&[])?;
+                PolicySpec::Infinite
+            }
+            "opt" => {
+                check_keys(&[])?;
+                PolicySpec::Opt
+            }
+            "ftpl" => {
+                check_keys(&["zeta"])?;
+                PolicySpec::Ftpl {
+                    zeta: f64_of("zeta")?,
+                }
+            }
+            "ogb" => {
+                check_keys(&["batch", "eta", "rebase"])?;
+                PolicySpec::Ogb {
+                    batch: usize_of("batch")?,
+                    eta: f64_of("eta")?,
+                    rebase: f64_of("rebase")?,
+                }
+            }
+            "ogb-frac" => {
+                check_keys(&["batch", "eta", "rebase"])?;
+                PolicySpec::OgbFrac {
+                    batch: usize_of("batch")?,
+                    eta: f64_of("eta")?,
+                    rebase: f64_of("rebase")?,
+                }
+            }
+            "ogb-classic" | "ogb-classic-frac" => {
+                check_keys(&["batch", "eta"])?;
+                PolicySpec::OgbClassic {
+                    fractional: kind == "ogb-classic-frac",
+                    batch: usize_of("batch")?,
+                    eta: f64_of("eta")?,
+                }
+            }
+            "omd-frac" => {
+                check_keys(&["batch", "eta"])?;
+                PolicySpec::OmdFrac {
+                    batch: usize_of("batch")?,
+                    eta: f64_of("eta")?,
+                }
+            }
+            other => PolicySpec::Registered {
+                name: other.to_string(),
+                params,
+            },
+        })
+    }
+}
+
+impl fmt::Display for PolicySpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fn params(f: &mut fmt::Formatter<'_>, kv: &[(String, String)]) -> fmt::Result {
+            if kv.is_empty() {
+                return Ok(());
+            }
+            write!(f, "{{")?;
+            for (i, (k, v)) in kv.iter().enumerate() {
+                if i > 0 {
+                    write!(f, ",")?;
+                }
+                write!(f, "{k}={v}")?;
+            }
+            write!(f, "}}")
+        }
+        let mut kv: Vec<(String, String)> = Vec::new();
+        match self {
+            PolicySpec::Ftpl { zeta } => {
+                if let Some(z) = zeta {
+                    kv.push(("zeta".into(), format!("{z}")));
+                }
+            }
+            PolicySpec::Ogb { batch, eta, rebase } | PolicySpec::OgbFrac { batch, eta, rebase } => {
+                if let Some(b) = batch {
+                    kv.push(("batch".into(), b.to_string()));
+                }
+                if let Some(e) = eta {
+                    kv.push(("eta".into(), format!("{e}")));
+                }
+                if let Some(r) = rebase {
+                    kv.push(("rebase".into(), format!("{r}")));
+                }
+            }
+            PolicySpec::OgbClassic { batch, eta, .. } | PolicySpec::OmdFrac { batch, eta } => {
+                if let Some(b) = batch {
+                    kv.push(("batch".into(), b.to_string()));
+                }
+                if let Some(e) = eta {
+                    kv.push(("eta".into(), format!("{e}")));
+                }
+            }
+            PolicySpec::Registered { params, .. } => kv = params.clone(),
+            _ => {}
+        }
+        write!(f, "{}", self.kind())?;
+        params(f, &kv)
+    }
+}
+
+/// Everything a registered constructor gets to work with: the shape
+/// (`n`, `c`), the shared [`BuildOpts`], the spec's raw key=value pairs,
+/// and the hindsight trace when the caller has one.
+pub struct PolicyBuildCtx<'a> {
+    pub n: usize,
+    pub c: usize,
+    pub opts: &'a BuildOpts,
+    pub params: &'a [(String, String)],
+    pub trace: Option<&'a crate::trace::Trace>,
+}
+
+impl PolicyBuildCtx<'_> {
+    /// Convenience accessor for a raw spec parameter.
+    pub fn param(&self, key: &str) -> Option<&str> {
+        self.params
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+type Ctor = Arc<dyn Fn(&PolicyBuildCtx) -> Result<Box<dyn Policy>> + Send + Sync>;
+
+/// Open policy registry: maps non-built-in kinds to constructors.  The
+/// process-global instance ([`PolicyRegistry::global`]) is what
+/// `policies::build` consults, so a policy registered from a test, a
+/// bench, or an embedding binary is immediately usable by simulate /
+/// sweep / bench / serve — no edit to `policies/mod.rs` required.
+#[derive(Default)]
+pub struct PolicyRegistry {
+    inner: Mutex<Vec<(String, Ctor)>>,
+}
+
+impl PolicyRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The process-global registry.
+    pub fn global() -> &'static PolicyRegistry {
+        static GLOBAL: OnceLock<PolicyRegistry> = OnceLock::new();
+        GLOBAL.get_or_init(PolicyRegistry::new)
+    }
+
+    /// Register a constructor under `name`.  Fails on built-in kinds and
+    /// on duplicates (use a fresh name per registration).
+    pub fn register<F>(&self, name: &str, ctor: F) -> Result<()>
+    where
+        F: Fn(&PolicyBuildCtx) -> Result<Box<dyn Policy>> + Send + Sync + 'static,
+    {
+        ensure!(
+            !name.is_empty()
+                && name
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_'),
+            "bad registry policy name `{name}`"
+        );
+        ensure!(
+            !BUILTIN_KINDS.contains(&name),
+            "`{name}` is a built-in policy kind"
+        );
+        let mut g = self.inner.lock().unwrap();
+        ensure!(
+            !g.iter().any(|(n, _)| n == name),
+            "policy `{name}` is already registered"
+        );
+        g.push((name.to_string(), Arc::new(ctor)));
+        Ok(())
+    }
+
+    pub fn is_registered(&self, name: &str) -> bool {
+        self.inner.lock().unwrap().iter().any(|(n, _)| n == name)
+    }
+
+    /// Registered names, in registration order.
+    pub fn names(&self) -> Vec<String> {
+        self.inner
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(n, _)| n.clone())
+            .collect()
+    }
+
+    fn get(&self, name: &str) -> Option<Ctor> {
+        self.inner
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, c)| c.clone())
+    }
+}
+
+/// Typed construction: dispatch on the [`PolicySpec`] enum.  Spec-level
+/// parameters override the corresponding [`BuildOpts`] fields; unset
+/// values fall back to the theory formulas (Theorem 3.1 eta, the
+/// Bhattacharjee zeta).
+pub(super) fn build_spec(
+    spec: &PolicySpec,
+    n: usize,
+    c: usize,
+    opts: &BuildOpts,
+    trace: Option<&crate::trace::Trace>,
+) -> Result<AnyPolicy> {
+    use super::{
+        ArcCache, CpuDenseStep, Fifo, FractionalOgb, Ftpl, Gds, InfiniteCache, Lfu, Lru, Ogb,
+        OgbClassic, OgbClassicMode, OmdFractional, Opt,
+    };
+    let t_hint = opts.t_hint;
+    let theory_eta =
+        |b: usize| crate::theory_eta(c as f64, n as f64, t_hint as f64, b as f64);
+    Ok(match spec {
+        PolicySpec::Lru => AnyPolicy::Lru(Lru::new(c)),
+        PolicySpec::Lfu => AnyPolicy::Lfu(Lfu::new(c)),
+        PolicySpec::Fifo => AnyPolicy::Fifo(Fifo::new(c)),
+        PolicySpec::Arc => AnyPolicy::Arc(ArcCache::new(c)),
+        PolicySpec::Gds => AnyPolicy::Gds(Gds::new(c)),
+        PolicySpec::Infinite => AnyPolicy::Infinite(InfiniteCache::new()),
+        PolicySpec::Opt => {
+            let tr = trace.ok_or_else(|| anyhow::anyhow!("opt policy needs the trace"))?;
+            AnyPolicy::Opt(Opt::from_trace(tr, c))
+        }
+        PolicySpec::Ftpl { zeta } => {
+            let z = zeta
+                .unwrap_or_else(|| crate::ftpl_theory_zeta(c as f64, n as f64, t_hint as f64));
+            AnyPolicy::Ftpl(Ftpl::new(n, c, z, opts.seed))
+        }
+        PolicySpec::Ogb { batch, eta, rebase } => {
+            let b = batch.unwrap_or(opts.batch);
+            let mut p = Ogb::new(n, c as f64, eta.unwrap_or_else(|| theory_eta(b)), b, opts.seed);
+            if let Some(t) = rebase.or(opts.rebase_threshold) {
+                p = p.with_rebase_threshold(t);
+            }
+            AnyPolicy::Ogb(p)
+        }
+        PolicySpec::OgbFrac { batch, eta, rebase } => {
+            let b = batch.unwrap_or(opts.batch);
+            let mut p = FractionalOgb::new(n, c as f64, eta.unwrap_or_else(|| theory_eta(b)), b);
+            if let Some(t) = rebase.or(opts.rebase_threshold) {
+                p = p.with_rebase_threshold(t);
+            }
+            AnyPolicy::OgbFrac(p)
+        }
+        PolicySpec::OgbClassic {
+            fractional,
+            batch,
+            eta,
+        } => {
+            let b = batch.unwrap_or(opts.batch);
+            AnyPolicy::Classic(OgbClassic::new(
+                n,
+                c as f64,
+                eta.unwrap_or_else(|| theory_eta(b)),
+                b,
+                if *fractional {
+                    OgbClassicMode::Fractional
+                } else {
+                    OgbClassicMode::Integral
+                },
+                Box::new(CpuDenseStep),
+                opts.seed,
+            ))
+        }
+        PolicySpec::OmdFrac { batch, eta } => {
+            let b = batch.unwrap_or(opts.batch);
+            AnyPolicy::Omd(match eta {
+                Some(e) => OmdFractional::new(n, c as f64, *e, b),
+                None => OmdFractional::with_theory_eta(n, c as f64, t_hint, b),
+            })
+        }
+        PolicySpec::Registered { name, params } => {
+            let Some(ctor) = PolicyRegistry::global().get(name) else {
+                let registered = PolicyRegistry::global().names();
+                bail!(
+                    "unknown policy `{name}` (built-ins: {BUILTIN_KINDS:?}; registered: \
+                     {registered:?})"
+                );
+            };
+            let ctx = PolicyBuildCtx {
+                n,
+                c,
+                opts,
+                params,
+                trace,
+            };
+            AnyPolicy::Dyn(ctor(&ctx).with_context(|| format!("registered policy `{name}`"))?)
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policies::{self, Request};
+
+    #[test]
+    fn parse_roundtrips_canonical_text() {
+        for text in [
+            "lru",
+            "ogb{batch=64,rebase=1000000}",
+            "ogb-frac{batch=8}",
+            "ftpl{zeta=25}",
+            "omd-frac{batch=4,eta=0.01}",
+            "ogb-classic-frac",
+        ] {
+            let spec: PolicySpec = text.parse().unwrap();
+            assert_eq!(spec.to_string(), text, "canonical rendering");
+            let again: PolicySpec = spec.to_string().parse().unwrap();
+            assert_eq!(spec, again);
+        }
+        // scientific / underscore numbers normalize
+        let spec: PolicySpec = "ogb{batch=1_0,rebase=1e6}".parse().unwrap();
+        assert_eq!(spec.to_string(), "ogb{batch=10,rebase=1000000}");
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        for bad in [
+            "",
+            "ogb{batch=64",
+            "ogb{batch}",
+            "ogb{bogus=1}",
+            "lru{batch=1}",
+            "ogb{batch=0}",
+            "ogb{batch=x}",
+            "ogb{batch=1,batch=2}",
+            "we!rd",
+        ] {
+            assert!(bad.parse::<PolicySpec>().is_err(), "`{bad}`");
+        }
+    }
+
+    #[test]
+    fn spec_params_override_build_opts() {
+        let opts = crate::policies::BuildOpts::new(10_000, 1, 5);
+        // spec batch wins over opts.batch
+        let p = policies::build("ogb{batch=7}", 100, 10, &opts, None).unwrap();
+        assert_eq!(p.name(), "OGB(b=7)");
+        let p = policies::build("ogb", 100, 10, &opts, None).unwrap();
+        assert_eq!(p.name(), "OGB(b=1)");
+        // spec rebase threshold reaches the projection
+        let mut p = policies::build("ogb{rebase=1e-3}", 100, 10, &opts, None).unwrap();
+        for k in 0..20_000u64 {
+            p.request(k % 100);
+        }
+        assert!(p.diag().rebases > 10, "spec-level rebase ignored");
+    }
+
+    #[test]
+    fn registry_round_trip_through_build_and_harness() {
+        // A trivial external policy: caches nothing, rewards nothing.
+        struct NullCache;
+        impl Policy for NullCache {
+            fn name(&self) -> &str {
+                "null"
+            }
+            fn serve(&mut self, _req: Request) -> f64 {
+                0.0
+            }
+            fn occupancy(&self) -> f64 {
+                0.0
+            }
+        }
+        PolicyRegistry::global()
+            .register("null-spec-test", |_ctx| Ok(Box::new(NullCache)))
+            .unwrap();
+        assert!(PolicyRegistry::global().is_registered("null-spec-test"));
+        // duplicate and builtin registrations fail
+        assert!(PolicyRegistry::global()
+            .register("null-spec-test", |_ctx| Ok(Box::new(NullCache)))
+            .is_err());
+        assert!(PolicyRegistry::global()
+            .register("lru", |_ctx| Ok(Box::new(NullCache)))
+            .is_err());
+
+        let opts = crate::policies::BuildOpts::new(100, 1, 1);
+        let mut p = policies::build("null-spec-test", 10, 2, &opts, None).unwrap();
+        assert_eq!(p.name(), "null");
+        assert_eq!(p.request(3), 0.0);
+        // unknown names still fail with a helpful message
+        let err = policies::build("definitely-missing", 10, 2, &opts, None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("definitely-missing"));
+    }
+
+    #[test]
+    fn registered_ctor_sees_params_and_shape() {
+        struct Fixed(f64);
+        impl Policy for Fixed {
+            fn name(&self) -> &str {
+                "fixed"
+            }
+            fn serve(&mut self, req: Request) -> f64 {
+                self.0 * req.weight
+            }
+            fn occupancy(&self) -> f64 {
+                0.0
+            }
+        }
+        PolicyRegistry::global()
+            .register("fixed-spec-test", |ctx| {
+                let r: f64 = ctx.param("r").unwrap_or("0.5").parse()?;
+                anyhow::ensure!(ctx.c < ctx.n, "shape plumbed");
+                Ok(Box::new(Fixed(r)))
+            })
+            .unwrap();
+        let opts = crate::policies::BuildOpts::new(100, 1, 1);
+        let mut p = policies::build("fixed-spec-test{r=0.25}", 10, 2, &opts, None).unwrap();
+        assert_eq!(p.serve(Request::weighted(1, 2.0)), 0.5);
+    }
+}

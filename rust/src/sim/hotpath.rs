@@ -17,16 +17,35 @@
 //!   contract is **0**.  Reported as `null` when the embedding binary did
 //!   not install the counting allocator.
 //!
+//! Since Policy API v2 (DESIGN.md §9) every cell runs in two **modes**:
+//!
+//! * `per_request` — one [`Policy::serve`] call per request (the v1
+//!   shape): one baseline row at the configured `batch` (continuity
+//!   with earlier BENCH_hotpath.json records) plus one *twin* row per
+//!   `batch_sizes` entry with the policy's sample-refresh B set to that
+//!   entry;
+//! * `batched` — one [`Policy::serve_batch`] call per B requests, for
+//!   each `batch_sizes` entry, with the policy's own sample-refresh B
+//!   set to the same value so one call spans exactly one Algorithm 3
+//!   UPDATESAMPLE cadence.  Same trajectory (the `serve_batch ≡ serve`
+//!   contract), amortized boundary bookkeeping — the payoff row.
+//!
+//! The per-request twin shares the batched row's `policy_batch`, so the
+//! batched-vs-per-request delta at equal B isolates the serve_batch
+//! call amortization from the UPDATESAMPLE cadence change (compare rows
+//! with equal `policy_batch`; `serve_batch` is the call chunk size).
+//!
 //! Results land in machine-readable `BENCH_hotpath.json` next to PR 1's
 //! `BENCH_stream.json`, so every future PR has a baseline to beat; the
-//! CI bench-smoke job keeps the emission path from rotting.
+//! CI bench-smoke job asserts both mode rows exist and that the OGB rows
+//! allocate nothing at steady state.
 
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use anyhow::{ensure, Context, Result};
 
-use crate::policies::{self, BuildOpts, Policy};
+use crate::policies::{self, BuildOpts, Policy, Request};
 use crate::util::bench::{alloc_count, black_box, print_table, BenchResult};
 use crate::util::csv::json::Json;
 use crate::util::{Xoshiro256pp, Zipf};
@@ -34,7 +53,7 @@ use crate::util::{Xoshiro256pp, Zipf};
 /// Grid and measurement configuration.
 #[derive(Debug, Clone)]
 pub struct HotpathConfig {
-    /// policy names accepted by `policies::build`
+    /// policy spec strings accepted by `policies::build`
     pub policies: Vec<String>,
     /// catalog sizes N
     pub ns: Vec<usize>,
@@ -44,8 +63,11 @@ pub struct HotpathConfig {
     pub requests: usize,
     /// timed repetitions (median reported)
     pub reps: usize,
-    /// batch size B handed to batched policies
+    /// batch size B handed to batched policies in `per_request` mode
     pub batch: usize,
+    /// serve-batch sizes for the `batched` mode rows (policy B == chunk
+    /// size per entry; empty = per-request rows only)
+    pub batch_sizes: Vec<usize>,
     /// workload skew
     pub zipf_s: f64,
     pub seed: u64,
@@ -65,6 +87,7 @@ impl Default for HotpathConfig {
             requests: 1_000_000,
             reps: 3,
             batch: 1,
+            batch_sizes: vec![16, 64, 256],
             zipf_s: 0.9,
             seed: 42,
             rebase_threshold: None,
@@ -82,6 +105,7 @@ impl HotpathConfig {
             cache_pcts: vec![5.0],
             requests: 20_000,
             reps: 1,
+            batch_sizes: vec![64],
             smoke: true,
             ..Self::default()
         }
@@ -92,6 +116,13 @@ impl HotpathConfig {
 #[derive(Debug, Clone)]
 pub struct HotpathRow {
     pub policy: String,
+    /// `"per_request"` or `"batched"`
+    pub mode: &'static str,
+    /// serve-batch call chunk size (1 in per_request mode)
+    pub serve_batch: usize,
+    /// the policy's own sample-refresh batch B — compare rows with equal
+    /// `policy_batch` to isolate the serve_batch amortization
+    pub policy_batch: usize,
     pub n: usize,
     pub c: usize,
     pub cache_pct: f64,
@@ -132,8 +163,8 @@ impl HotpathResult {
             .iter()
             .map(|r| BenchResult {
                 name: format!(
-                    "{:<14} N={:<9} C={:<8}",
-                    r.policy, r.n, r.c
+                    "{:<14} {:<11} B={:<5} call={:<5} N={:<9} C={:<8}",
+                    r.policy, r.mode, r.policy_batch, r.serve_batch, r.n, r.c
                 ),
                 ns_per_op: r.ns_per_request,
                 min_ns: r.min_ns,
@@ -143,13 +174,16 @@ impl HotpathResult {
             .collect();
         print_table("request hot path: ns/request (median over reps)", &results);
         println!(
-            "\n{:<14} {:>10} {:>10} {:>14} {:>16} {:>14}",
-            "policy", "N", "C", "pops/req", "allocs/req", "scratch_grows"
+            "\n{:<14} {:<11} {:>6} {:>6} {:>10} {:>10} {:>12} {:>14} {:>14}",
+            "policy", "mode", "B", "call", "N", "C", "pops/req", "allocs/req", "scratch_grows"
         );
         for r in &self.rows {
             println!(
-                "{:<14} {:>10} {:>10} {:>14.4} {:>16} {:>14}",
+                "{:<14} {:<11} {:>6} {:>6} {:>10} {:>10} {:>12.4} {:>14} {:>14}",
                 r.policy,
+                r.mode,
+                r.policy_batch,
+                r.serve_batch,
                 r.n,
                 r.c,
                 r.pops_per_request,
@@ -178,6 +212,9 @@ impl HotpathResult {
             .map(|r| {
                 Json::obj(vec![
                     ("policy", Json::Str(r.policy.clone())),
+                    ("mode", Json::Str(r.mode.into())),
+                    ("serve_batch", Json::Num(r.serve_batch as f64)),
+                    ("policy_batch", Json::Num(r.policy_batch as f64)),
                     ("n", Json::Num(r.n as f64)),
                     ("c", Json::Num(r.c as f64)),
                     ("cache_pct", Json::Num(r.cache_pct)),
@@ -231,7 +268,43 @@ impl HotpathResult {
     }
 }
 
-/// Run the suite: one warm-up replay plus `reps` timed replays per cell.
+/// One measured cell: warm-up replay + `reps` timed replays of `drive`.
+struct CellMeasure {
+    samples: Vec<f64>,
+    allocs: u64,
+    d0: crate::policies::Diag,
+    d1: crate::policies::Diag,
+}
+
+fn measure_cell(
+    policy: &mut policies::AnyPolicy,
+    reps: usize,
+    mut drive: impl FnMut(&mut policies::AnyPolicy),
+) -> CellMeasure {
+    // Warm-up replay: reaches steady state and sizes every scratch
+    // buffer before anything is measured.
+    drive(policy);
+    let mut samples: Vec<f64> = Vec::with_capacity(reps);
+    let d0 = policy.diag();
+    let a0 = alloc_count::current();
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        drive(policy);
+        // pre-reserved push: no allocation inside the window
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    let allocs = alloc_count::current() - a0;
+    let d1 = policy.diag();
+    samples.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    CellMeasure {
+        samples,
+        allocs,
+        d0,
+        d1,
+    }
+}
+
+/// Run the suite: per-request and batched mode rows per cell.
 pub fn run_hotpath(cfg: &HotpathConfig) -> Result<HotpathResult> {
     ensure!(!cfg.policies.is_empty(), "bench needs at least one policy");
     ensure!(!cfg.ns.is_empty(), "bench needs at least one catalog size");
@@ -240,67 +313,103 @@ pub fn run_hotpath(cfg: &HotpathConfig) -> Result<HotpathResult> {
         "bench needs at least one cache size"
     );
     ensure!(cfg.requests > 0 && cfg.reps > 0, "empty measurement");
+    ensure!(
+        cfg.batch_sizes.iter().all(|&b| b >= 1),
+        "batched-mode sizes must be >= 1"
+    );
     let wall0 = Instant::now();
     let alloc_counter_active = alloc_count::active();
     let mut rows = Vec::new();
 
     for &n in &cfg.ns {
         // One request vector per catalog size, generated outside every
-        // timed region (the replay then measures pure policy cost).
+        // timed region (the replay then measures pure policy cost); the
+        // batched mode replays the same sequence as unit Requests.
         let zipf = Zipf::new(n as u64, cfg.zipf_s);
         let mut rng = Xoshiro256pp::seed_from(cfg.seed ^ (n as u64).rotate_left(17));
         let reqs: Vec<u64> = (0..cfg.requests).map(|_| zipf.sample(&mut rng)).collect();
+        let reqs_w: Vec<Request> = reqs.iter().map(|&r| Request::unit(r)).collect();
 
         for name in &cfg.policies {
             for &pct in &cfg.cache_pcts {
                 let c = ((n as f64 * pct / 100.0) as usize).clamp(1, n);
                 let horizon = cfg.requests * (cfg.reps + 1);
-                let mut opts = BuildOpts::new(horizon, cfg.batch, cfg.seed);
-                opts.rebase_threshold = cfg.rebase_threshold;
-                let mut policy = policies::build(name, n, c, &opts, None)
-                    .with_context(|| format!("bench policy `{name}`"))?;
+                let push_row = |rows: &mut Vec<HotpathRow>,
+                                mode: &'static str,
+                                serve_batch: usize,
+                                policy_batch: usize,
+                                m: CellMeasure| {
+                    let timed = (cfg.reps * cfg.requests) as u64;
+                    let per_req = |ns: f64| ns / cfg.requests as f64;
+                    let removed =
+                        (m.d1.removed_coeffs - m.d0.removed_coeffs) as f64 / timed as f64;
+                    let evicted =
+                        (m.d1.sample_evictions - m.d0.sample_evictions) as f64 / timed as f64;
+                    rows.push(HotpathRow {
+                        policy: name.clone(),
+                        mode,
+                        serve_batch,
+                        policy_batch,
+                        n,
+                        c,
+                        cache_pct: pct,
+                        ns_per_request: per_req(m.samples[m.samples.len() / 2]),
+                        min_ns: per_req(m.samples[0]),
+                        max_ns: per_req(*m.samples.last().unwrap()),
+                        pops_per_request: removed + evicted,
+                        removed_per_request: removed,
+                        evictions_per_request: evicted,
+                        allocs_per_request: alloc_counter_active
+                            .then(|| m.allocs as f64 / timed as f64),
+                        scratch_grows: m.d1.scratch_grows - m.d0.scratch_grows,
+                        requests_timed: timed,
+                    });
+                };
 
-                // Warm-up replay: reaches steady state and sizes every
-                // scratch buffer before anything is measured.
-                for &r in &reqs {
-                    black_box(policy.request(r));
+                let build_policy = |policy_batch: usize| -> Result<policies::AnyPolicy> {
+                    let mut opts = BuildOpts::new(horizon, policy_batch, cfg.seed);
+                    opts.rebase_threshold = cfg.rebase_threshold;
+                    policies::build(name, n, c, &opts, None)
+                        .with_context(|| format!("bench policy `{name}`"))
+                };
+                let measure_per_request = |policy: &mut policies::AnyPolicy| {
+                    measure_cell(policy, cfg.reps, |p| {
+                        for &r in &reqs {
+                            black_box(p.request(r));
+                        }
+                    })
+                };
+
+                // per-request baseline at the configured batch (the v1
+                // row every earlier BENCH_hotpath.json measured)
+                {
+                    let mut policy = build_policy(cfg.batch)?;
+                    let m = measure_per_request(&mut policy);
+                    push_row(&mut rows, "per_request", 1, cfg.batch, m);
                 }
 
-                let mut samples: Vec<f64> = Vec::with_capacity(cfg.reps);
-                let d0 = policy.diag();
-                let a0 = alloc_count::current();
-                for _ in 0..cfg.reps {
-                    let t0 = Instant::now();
-                    for &r in &reqs {
-                        black_box(policy.request(r));
+                // batched mode — one serve_batch call per B requests,
+                // policy B == chunk size (one Algorithm 3 cadence per
+                // call) — plus its equal-B per-request twin, so the
+                // mode delta isolates the call amortization from the
+                // sampling-cadence change
+                for &bb in &cfg.batch_sizes {
+                    if bb != cfg.batch {
+                        let mut policy = build_policy(bb)?;
+                        let m = measure_per_request(&mut policy);
+                        push_row(&mut rows, "per_request", 1, bb, m);
                     }
-                    // pre-reserved push: no allocation inside the window
-                    samples.push(t0.elapsed().as_nanos() as f64);
+                    let mut policy = build_policy(bb)?;
+                    let mut rewards: Vec<f64> = Vec::with_capacity(bb);
+                    let m = measure_cell(&mut policy, cfg.reps, |p| {
+                        for chunk in reqs_w.chunks(bb) {
+                            rewards.clear();
+                            p.serve_batch(chunk, &mut rewards);
+                            black_box(rewards.last().copied());
+                        }
+                    });
+                    push_row(&mut rows, "batched", bb, bb, m);
                 }
-                let allocs = alloc_count::current() - a0;
-                let d1 = policy.diag();
-
-                samples.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
-                let timed = (cfg.reps * cfg.requests) as u64;
-                let per_req = |ns: f64| ns / cfg.requests as f64;
-                let removed = (d1.removed_coeffs - d0.removed_coeffs) as f64 / timed as f64;
-                let evicted = (d1.sample_evictions - d0.sample_evictions) as f64 / timed as f64;
-                rows.push(HotpathRow {
-                    policy: name.clone(),
-                    n,
-                    c,
-                    cache_pct: pct,
-                    ns_per_request: per_req(samples[samples.len() / 2]),
-                    min_ns: per_req(samples[0]),
-                    max_ns: per_req(*samples.last().unwrap()),
-                    pops_per_request: removed + evicted,
-                    removed_per_request: removed,
-                    evictions_per_request: evicted,
-                    allocs_per_request: alloc_counter_active
-                        .then(|| allocs as f64 / timed as f64),
-                    scratch_grows: d1.scratch_grows - d0.scratch_grows,
-                    requests_timed: timed,
-                });
             }
         }
     }
@@ -327,18 +436,37 @@ mod tests {
         let mut cfg = HotpathConfig::smoke();
         cfg.requests = 5_000; // keep the unit test quick
         let r = run_hotpath(&cfg).unwrap();
-        assert_eq!(r.rows.len(), 2);
+        // 2 policies x (per_request baseline B=1, per_request twin B=64,
+        // batched B=64) rows
+        assert_eq!(r.rows.len(), 6);
         for row in &r.rows {
-            assert!(row.ns_per_request > 0.0, "{}", row.policy);
+            assert!(row.ns_per_request > 0.0, "{} {}", row.policy, row.mode);
             assert!(row.pops_per_request >= 0.0);
             assert_eq!(row.c, 100);
         }
+        assert!(r.rows.iter().any(|r| r.mode == "per_request"));
+        // the batched row and its equal-B per-request twin both exist
+        assert!(r
+            .rows
+            .iter()
+            .any(|r| r.mode == "batched" && r.serve_batch == 64 && r.policy_batch == 64));
+        assert!(r
+            .rows
+            .iter()
+            .any(|r| r.mode == "per_request" && r.policy_batch == 64));
         // OGB's steady-state scratch buffers must not grow mid-measurement
-        let ogb = r.rows.iter().find(|r| r.policy == "ogb").unwrap();
-        assert_eq!(ogb.scratch_grows, 0, "hot path grew a scratch buffer");
-        // the library test harness does not install the counting allocator
-        if !r.alloc_counter_active {
-            assert!(ogb.allocs_per_request.is_none());
+        // in either mode
+        for ogb in r.rows.iter().filter(|r| r.policy == "ogb") {
+            assert_eq!(
+                ogb.scratch_grows, 0,
+                "{} mode grew a scratch buffer",
+                ogb.mode
+            );
+            // the library test harness does not install the counting
+            // allocator
+            if !r.alloc_counter_active {
+                assert!(ogb.allocs_per_request.is_none());
+            }
         }
         let dir = std::env::temp_dir().join("ogb_hotpath_test");
         let p = r.write_json(dir.join("BENCH_hotpath.json")).unwrap();
@@ -347,6 +475,8 @@ mod tests {
         assert!(text.contains("\"ns_per_request\""));
         assert!(text.contains("\"pops_per_request\""));
         assert!(text.contains("\"allocs_per_request\""));
+        assert!(text.contains("\"mode\":\"per_request\""));
+        assert!(text.contains("\"mode\":\"batched\""));
         std::fs::remove_dir_all(dir).ok();
     }
 
@@ -357,6 +487,9 @@ mod tests {
         assert!(run_hotpath(&cfg).is_err());
         let mut cfg = HotpathConfig::smoke();
         cfg.policies = vec!["bogus".into()];
+        assert!(run_hotpath(&cfg).is_err());
+        let mut cfg = HotpathConfig::smoke();
+        cfg.batch_sizes = vec![0];
         assert!(run_hotpath(&cfg).is_err());
     }
 }

@@ -16,6 +16,6 @@ pub mod sweep;
 
 pub use engine::{run, run_source, RunConfig, RunResult};
 pub use hotpath::{run_hotpath, HotpathConfig, HotpathResult, HotpathRow};
-pub use regret::{regret_series, RegretPoint, StreamingOpt};
-pub use shardbench::{run_shardbench, ShardBenchConfig, ShardBenchResult, ShardBenchRow};
+pub use regret::{regret_series, regret_series_weighted, RegretPoint, StreamingOpt};
+pub use shardbench::{run_shardbench, ServeMode, ShardBenchConfig, ShardBenchResult, ShardBenchRow};
 pub use sweep::{run_sweep, SweepCell, SweepConfig, SweepResult};

@@ -13,10 +13,10 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-use crate::policies::Policy;
+use crate::policies::{Policy, Request};
 use crate::trace::stream::RequestSource;
 use crate::trace::Trace;
-use crate::util::FxHashMap;
+use crate::util::{FxHashMap, OrdF64};
 
 /// One regret checkpoint.
 #[derive(Debug, Clone, Copy)]
@@ -82,15 +82,24 @@ pub fn regret_series(
     out
 }
 
-/// One-pass streaming hindsight-OPT accounting.
+/// One-pass streaming hindsight-OPT accounting, weighted-aware
+/// (DESIGN.md §9).
 ///
-/// Records each request's item id; answers `opt_hits(c)` (the paper's
-/// OPT_T for any cache size C) and `top_c(c)` (the hindsight allocation
-/// `x*`) without ever materializing the request vector.
+/// Records each request's item id (and weight); answers `opt_hits(c)`
+/// (the paper's OPT_T for any cache size C), `top_c(c)` (the hindsight
+/// allocation `x*`), and their weighted counterparts
+/// `opt_weighted_reward(c)` / `top_c_weighted(c)` — the best static
+/// allocation under Eq. (1)'s weighted objective is the top-C items by
+/// accumulated weighted count `sum_t w_{t,i}` (= `w_i · count_i` for the
+/// per-item [`crate::trace::stream::WeightScheme`]s), extracted by the
+/// same bounded min-heap — without ever materializing the request
+/// vector.
 #[derive(Debug, Clone, Default)]
 pub struct StreamingOpt {
-    counts: FxHashMap<u32, u64>,
+    /// per-item (request count, accumulated weight)
+    counts: FxHashMap<u32, (u64, f64)>,
     total: u64,
+    total_weight: f64,
 }
 
 impl StreamingOpt {
@@ -99,6 +108,8 @@ impl StreamingOpt {
     }
 
     /// Build by draining a source (`max_requests = 0` ⇒ until exhausted).
+    /// Weighted sources (`@ weights:` specs) are accounted with their
+    /// weights; plain sources degenerate to unit counting.
     pub fn from_source(source: &mut dyn RequestSource, max_requests: usize) -> Self {
         let mut s = Self::new();
         let limit = if max_requests > 0 {
@@ -107,8 +118,8 @@ impl StreamingOpt {
             usize::MAX
         };
         while s.total < limit as u64 {
-            match source.next_request() {
-                Some(r) => s.record(r),
+            match source.next_weighted() {
+                Some(r) => s.record_weighted(r.item as u32, r.weight),
                 None => break,
             }
         }
@@ -117,8 +128,16 @@ impl StreamingOpt {
 
     #[inline]
     pub fn record(&mut self, item: u32) {
-        *self.counts.entry(item).or_insert(0) += 1;
+        self.record_weighted(item, 1.0);
+    }
+
+    #[inline]
+    pub fn record_weighted(&mut self, item: u32, weight: f64) {
+        let e = self.counts.entry(item).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += weight;
         self.total += 1;
+        self.total_weight += weight;
     }
 
     /// Requests recorded so far.
@@ -126,19 +145,25 @@ impl StreamingOpt {
         self.total
     }
 
+    /// Total weight recorded so far (== `requests()` for unit weights).
+    pub fn total_weight(&self) -> f64 {
+        self.total_weight
+    }
+
     /// Distinct items requested so far.
     pub fn distinct(&self) -> usize {
         self.counts.len()
     }
 
-    /// Total hits of the best static C-slot allocation: sum of the C
-    /// largest counts, via a bounded min-heap (never sorts all items).
+    /// Total hits of the best static C-slot allocation under the *unit*
+    /// objective: sum of the C largest counts, via a bounded min-heap
+    /// (never sorts all items).
     pub fn opt_hits(&self, c: usize) -> u64 {
         if c == 0 {
             return 0;
         }
         let mut heap: BinaryHeap<Reverse<u64>> = BinaryHeap::with_capacity(c + 1);
-        for &cnt in self.counts.values() {
+        for &(cnt, _) in self.counts.values() {
             if heap.len() < c {
                 heap.push(Reverse(cnt));
             } else if cnt > heap.peek().unwrap().0 {
@@ -147,6 +172,26 @@ impl StreamingOpt {
             }
         }
         heap.into_iter().map(|Reverse(cnt)| cnt).sum()
+    }
+
+    /// Total reward of the best static C-slot allocation under the
+    /// weighted objective: sum of the C largest accumulated weights
+    /// (`w_i · count_i`).  Equals `opt_hits(c) as f64` for unit weights.
+    pub fn opt_weighted_reward(&self, c: usize) -> f64 {
+        if c == 0 {
+            return 0.0;
+        }
+        let mut heap: BinaryHeap<Reverse<OrdF64>> = BinaryHeap::with_capacity(c + 1);
+        for &(_, w) in self.counts.values() {
+            let w = OrdF64::new(w);
+            if heap.len() < c {
+                heap.push(Reverse(w));
+            } else if w > heap.peek().unwrap().0 {
+                heap.pop();
+                heap.push(Reverse(w));
+            }
+        }
+        heap.into_iter().map(|Reverse(w)| w.get()).sum()
     }
 
     /// The hindsight allocation: the (up to) C most-requested items, ties
@@ -159,7 +204,7 @@ impl StreamingOpt {
         // priority = (count, Reverse(id)): more requests win, then lower id
         let mut heap: BinaryHeap<Reverse<(u64, Reverse<u32>)>> =
             BinaryHeap::with_capacity(c + 1);
-        for (&item, &cnt) in &self.counts {
+        for (&item, &(cnt, _)) in &self.counts {
             let p = (cnt, Reverse(item));
             if heap.len() < c {
                 heap.push(Reverse(p));
@@ -172,6 +217,96 @@ impl StreamingOpt {
         best.sort_unstable_by(|a, b| b.cmp(a));
         best.into_iter().map(|(_, Reverse(id))| id).collect()
     }
+
+    /// The weighted hindsight allocation `x*`: the (up to) C items with
+    /// the largest accumulated weights, ties broken by smaller id.
+    /// Identical to [`StreamingOpt::top_c`] for unit weights (weighted
+    /// counts are then integer-exact f64s).
+    pub fn top_c_weighted(&self, c: usize) -> Vec<u32> {
+        if c == 0 {
+            return Vec::new();
+        }
+        let mut heap: BinaryHeap<Reverse<(OrdF64, Reverse<u32>)>> =
+            BinaryHeap::with_capacity(c + 1);
+        for (&item, &(_, w)) in &self.counts {
+            let p = (OrdF64::new(w), Reverse(item));
+            if heap.len() < c {
+                heap.push(Reverse(p));
+            } else if p > heap.peek().unwrap().0 {
+                heap.pop();
+                heap.push(Reverse(p));
+            }
+        }
+        let mut best: Vec<(OrdF64, Reverse<u32>)> = heap.into_iter().map(|Reverse(p)| p).collect();
+        best.sort_unstable_by(|a, b| b.cmp(a));
+        best.into_iter().map(|(_, Reverse(id))| id).collect()
+    }
+}
+
+/// Weighted [`regret_series`]: replay `trace` with per-item weights
+/// (`weights[i]` = the reward of a hit on item `i`), checkpointing the
+/// reward gap to the best static allocation under the weighted objective
+/// — the top-C items by `w_i · count_i`.  The reported bound is the
+/// Theorem 3.1 bound scaled by `max_i w_i` (the gradient norm scales
+/// with the largest weight in the paper's extension).
+pub fn regret_series_weighted(
+    policy: &mut dyn Policy,
+    trace: &Trace,
+    weights: &[f64],
+    c: usize,
+    b: usize,
+    points: usize,
+) -> Vec<RegretPoint> {
+    let t_total = trace.len();
+    assert!(t_total > 1);
+    assert!(weights.len() >= trace.catalog, "one weight per catalog item");
+    // hindsight OPT under the weighted objective
+    let counts = trace.counts();
+    let mut ranked: Vec<(OrdF64, u32)> = counts
+        .iter()
+        .enumerate()
+        .map(|(i, &cnt)| (OrdF64::new(weights[i] * cnt as f64), i as u32))
+        .collect();
+    ranked.sort_unstable_by(|a, b| (b.0, Reverse(b.1)).cmp(&(a.0, Reverse(a.1))));
+    let mut is_opt = vec![false; trace.catalog];
+    for &(_, i) in ranked.iter().take(c) {
+        is_opt[i as usize] = true;
+    }
+    let w_max = weights
+        .iter()
+        .take(trace.catalog)
+        .fold(0.0f64, |a, &w| a.max(w));
+
+    let mut checkpoints: Vec<usize> = (1..=points)
+        .map(|k| ((t_total as f64).powf(k as f64 / points as f64) as usize).clamp(1, t_total))
+        .collect();
+    checkpoints.dedup();
+
+    let n = trace.catalog as f64;
+    let cf = c as f64;
+    let mut out = Vec::with_capacity(checkpoints.len());
+    let mut policy_reward = 0.0;
+    let mut opt_reward = 0.0;
+    let mut next_cp = 0usize;
+    for (k, &r) in trace.requests.iter().enumerate() {
+        let w = weights[r as usize];
+        policy_reward += policy.serve(Request::weighted(r as u64, w));
+        if is_opt[r as usize] {
+            opt_reward += w;
+        }
+        while next_cp < checkpoints.len() && k + 1 == checkpoints[next_cp] {
+            let t = k + 1;
+            let regret = opt_reward - policy_reward;
+            out.push(RegretPoint {
+                t,
+                regret,
+                avg_regret: regret / t as f64,
+                bound: w_max * (cf * (1.0 - cf / n) * t as f64 * b as f64).sqrt(),
+            });
+            next_cp += 1;
+        }
+    }
+    out
 }
 
 /// Least-squares slope of log(max(R_t,1)) vs log(t): < 1.0 ⟹ sub-linear
@@ -265,6 +400,88 @@ mod tests {
         assert_eq!(full.opt_hits(10), t.opt_hits(10));
         let capped = StreamingOpt::from_source(&mut ZipfSource::new(100, 5_000, 1.0, 9), 1_000);
         assert_eq!(capped.requests(), 1_000);
+    }
+
+    /// The heap-based weighted OPT must equal exhaustive subset
+    /// enumeration on a small catalog — the true brute-force optimum of
+    /// the weighted static allocation problem.
+    #[test]
+    fn weighted_opt_matches_brute_force_subsets() {
+        let n = 12usize;
+        let c = 4usize;
+        let t = synth::zipf(n, 3_000, 0.7, 21);
+        let weights: Vec<f64> = (0..n).map(|i| 0.5 + ((i * 7 + 3) % 11) as f64).collect();
+        let mut opt = StreamingOpt::new();
+        for &r in &t.requests {
+            opt.record_weighted(r, weights[r as usize]);
+        }
+        // brute force: every C-subset of the catalog
+        let counts = t.counts();
+        let mut best = 0.0f64;
+        for mask in 0u32..(1 << n) {
+            if mask.count_ones() as usize != c {
+                continue;
+            }
+            let total: f64 = (0..n)
+                .filter(|&i| mask >> i & 1 == 1)
+                .map(|i| weights[i] * counts[i] as f64)
+                .sum();
+            best = best.max(total);
+        }
+        let heap_opt = opt.opt_weighted_reward(c);
+        assert!(
+            (heap_opt - best).abs() < 1e-9,
+            "heap OPT {heap_opt} != brute force {best}"
+        );
+        // the weighted allocation realizes exactly that reward
+        let realized: f64 = opt
+            .top_c_weighted(c)
+            .iter()
+            .map(|&i| weights[i as usize] * counts[i as usize] as f64)
+            .sum();
+        assert!((realized - best).abs() < 1e-9);
+        // unit weights degenerate to the count-based oracle
+        let mut unit = StreamingOpt::new();
+        for &r in &t.requests {
+            unit.record(r);
+        }
+        assert_eq!(unit.opt_weighted_reward(c), unit.opt_hits(c) as f64);
+        assert_eq!(unit.top_c_weighted(c), unit.top_c(c));
+        assert_eq!(unit.total_weight(), unit.requests() as f64);
+    }
+
+    /// Weighted regret: OGB with weighted gradient steps stays sub-linear
+    /// against the weighted hindsight OPT, and unit weights reproduce the
+    /// unweighted series exactly.
+    #[test]
+    fn weighted_regret_series_sublinear_and_unit_consistent() {
+        let n = 200;
+        let c = 50;
+        let t = synth::adversarial(n, 250, 5);
+        // unit weights == the unweighted harness, bit for bit
+        let ones = vec![1.0; n];
+        let mut a = Ogb::with_theory_eta(n, c as f64, t.len(), 1, 2);
+        let su = regret_series(&mut a, &t, c, 1, 16);
+        let mut b = Ogb::with_theory_eta(n, c as f64, t.len(), 1, 2);
+        let sw = regret_series_weighted(&mut b, &t, &ones, c, 1, 16);
+        for (u, w) in su.iter().zip(&sw) {
+            assert_eq!(u.t, w.t);
+            assert_eq!(u.regret, w.regret);
+            assert_eq!(u.bound, w.bound);
+        }
+        // heterogeneous weights: still sub-linear
+        let weights: Vec<f64> = (0..n).map(|i| 1.0 + (i % 5) as f64).collect();
+        let mut p = Ogb::with_theory_eta(n, c as f64, t.len(), 1, 2);
+        let s = regret_series_weighted(&mut p, &t, &weights, c, 1, 24);
+        let e = regret_growth_exponent(&s);
+        assert!(e < 0.85, "weighted OGB regret exponent {e} not sub-linear");
+        let last = s.last().unwrap();
+        assert!(
+            last.regret <= last.bound * 1.05,
+            "weighted regret {} exceeds scaled bound {}",
+            last.regret,
+            last.bound
+        );
     }
 
     #[test]

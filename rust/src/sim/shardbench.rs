@@ -38,11 +38,31 @@ use crate::util::bench::{alloc_count, print_table, BenchResult};
 use crate::util::csv::json::Json;
 use crate::util::{Xoshiro256pp, Zipf};
 
+/// How shards hand drained batches to their policy (DESIGN.md §9).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeMode {
+    /// one `Policy::serve_batch` call per ring pop (the v2 default)
+    Batched,
+    /// one `Policy::serve` call per item (the v1 comparison baseline)
+    PerRequest,
+}
+
+impl ServeMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ServeMode::Batched => "batched",
+            ServeMode::PerRequest => "per_request",
+        }
+    }
+}
+
 /// Grid and measurement configuration.
 #[derive(Debug, Clone)]
 pub struct ShardBenchConfig {
-    /// policy names accepted by `policies::build` (`opt` excluded)
+    /// policy spec strings accepted by `policies::build` (`opt` excluded)
     pub policies: Vec<String>,
+    /// serve modes to sweep (batched vs per-request rows)
+    pub modes: Vec<ServeMode>,
     /// shard thread counts to sweep (the multi-core axis)
     pub shard_counts: Vec<usize>,
     /// catalog sizes N
@@ -68,6 +88,7 @@ impl Default for ShardBenchConfig {
     fn default() -> Self {
         Self {
             policies: vec!["ogb".into(), "lru".into()],
+            modes: vec![ServeMode::Batched, ServeMode::PerRequest],
             shard_counts: vec![1, 2, 4, 8],
             ns: vec![100_000, 1_000_000],
             cache_pcts: vec![5.0],
@@ -105,6 +126,8 @@ impl ShardBenchConfig {
 #[derive(Debug, Clone)]
 pub struct ShardBenchRow {
     pub policy: String,
+    /// `"batched"` or `"per_request"` (see [`ServeMode`])
+    pub mode: &'static str,
     pub shards: usize,
     pub n: usize,
     pub c: usize,
@@ -161,8 +184,8 @@ impl ShardBenchResult {
             .iter()
             .map(|r| BenchResult {
                 name: format!(
-                    "{:<10} shards={:<2} N={:<9} C={:<8}",
-                    r.policy, r.shards, r.n, r.c
+                    "{:<10} {:<11} shards={:<2} N={:<9} C={:<8}",
+                    r.policy, r.mode, r.shards, r.n, r.c
                 ),
                 ns_per_op: r.ns_per_request,
                 min_ns: r.min_ns,
@@ -175,13 +198,14 @@ impl ShardBenchResult {
             &results,
         );
         println!(
-            "\n{:<10} {:>7} {:>10} {:>10} {:>11} {:>11} {:>11} {:>10} {:>12}",
-            "policy", "shards", "N", "C", "p50", "p99", "p999", "hit", "allocs/req"
+            "\n{:<10} {:<11} {:>7} {:>10} {:>10} {:>11} {:>11} {:>11} {:>10} {:>12}",
+            "policy", "mode", "shards", "N", "C", "p50", "p99", "p999", "hit", "allocs/req"
         );
         for r in &self.rows {
             println!(
-                "{:<10} {:>7} {:>10} {:>10} {:>9}ns {:>9}ns {:>9}ns {:>10.4} {:>12}",
+                "{:<10} {:<11} {:>7} {:>10} {:>10} {:>9}ns {:>9}ns {:>9}ns {:>10.4} {:>12}",
                 r.policy,
+                r.mode,
                 r.shards,
                 r.n,
                 r.c,
@@ -214,6 +238,7 @@ impl ShardBenchResult {
             .map(|r| {
                 Json::obj(vec![
                     ("policy", Json::Str(r.policy.clone())),
+                    ("mode", Json::Str(r.mode.into())),
                     ("shards", Json::Num(r.shards as f64)),
                     ("n", Json::Num(r.n as f64)),
                     ("c", Json::Num(r.c as f64)),
@@ -290,6 +315,7 @@ fn drive(client: &mut ShardedClient, reqs: &[u64]) {
 /// Run the suite: one warm-up pass plus `reps` timed passes per cell.
 pub fn run_shardbench(cfg: &ShardBenchConfig) -> Result<ShardBenchResult> {
     ensure!(!cfg.policies.is_empty(), "shard bench needs a policy");
+    ensure!(!cfg.modes.is_empty(), "shard bench needs a serve mode");
     ensure!(!cfg.shard_counts.is_empty(), "shard bench needs shard counts");
     ensure!(!cfg.ns.is_empty(), "shard bench needs a catalog size");
     ensure!(!cfg.cache_pcts.is_empty(), "shard bench needs a cache size");
@@ -314,68 +340,74 @@ pub fn run_shardbench(cfg: &ShardBenchConfig) -> Result<ShardBenchResult> {
         let reqs: Vec<u64> = (0..cfg.requests).map(|_| zipf.sample(&mut rng)).collect();
 
         for name in &cfg.policies {
-            for &shards in &cfg.shard_counts {
-                for &pct in &cfg.cache_pcts {
-                    let c = ((n as f64 * pct / 100.0) as usize).clamp(1, n - 1);
-                    let scfg = ServerConfig {
-                        catalog: n,
-                        capacity: c,
-                        shards,
-                        policy: name.clone(),
-                        batch: cfg.batch,
-                        horizon: cfg.requests * (cfg.reps + 1),
-                        queue_depth: cfg.queue_depth,
-                        clients: 1,
-                        seed: cfg.seed,
-                        rebase_threshold: None,
-                    };
-                    let mut server = CacheServer::start(scfg)
-                        .with_context(|| format!("shard bench cell `{name}` x{shards}"))?;
-                    let mut client = server.take_client()?;
+            for &mode in &cfg.modes {
+                for &shards in &cfg.shard_counts {
+                    for &pct in &cfg.cache_pcts {
+                        let c = ((n as f64 * pct / 100.0) as usize).clamp(1, n - 1);
+                        let scfg = ServerConfig {
+                            catalog: n,
+                            capacity: c,
+                            shards,
+                            policy: name.clone(),
+                            batch: cfg.batch,
+                            horizon: cfg.requests * (cfg.reps + 1),
+                            queue_depth: cfg.queue_depth,
+                            clients: 1,
+                            seed: cfg.seed,
+                            rebase_threshold: None,
+                            per_request_serve: mode == ServeMode::PerRequest,
+                        };
+                        let mut server = CacheServer::start(scfg)
+                            .with_context(|| format!("shard bench cell `{name}` x{shards}"))?;
+                        let mut client = server.take_client()?;
 
-                    // Warm-up pass: reaches policy steady state and
-                    // populates every batch free list before measuring.
-                    drive(&mut client, &reqs);
-                    // Snapshot so percentiles/hit_ratio below cover only
-                    // the timed passes (cold-start spikes excluded), like
-                    // the throughput and allocation windows.
-                    let warm = server.snapshot();
-
-                    let mut samples: Vec<f64> = Vec::with_capacity(cfg.reps);
-                    let a0 = alloc_count::current();
-                    for _ in 0..cfg.reps {
-                        let t0 = Instant::now();
+                        // Warm-up pass: reaches policy steady state and
+                        // populates every batch free list before
+                        // measuring.
                         drive(&mut client, &reqs);
-                        samples.push(t0.elapsed().as_nanos() as f64);
+                        // Snapshot so percentiles/hit_ratio below cover
+                        // only the timed passes (cold-start spikes
+                        // excluded), like the throughput and allocation
+                        // windows.
+                        let warm = server.snapshot();
+
+                        let mut samples: Vec<f64> = Vec::with_capacity(cfg.reps);
+                        let a0 = alloc_count::current();
+                        for _ in 0..cfg.reps {
+                            let t0 = Instant::now();
+                            drive(&mut client, &reqs);
+                            samples.push(t0.elapsed().as_nanos() as f64);
+                        }
+                        let allocs = alloc_count::current() - a0;
+
+                        drop(client);
+                        let snap = server.shutdown().since(&warm);
+
+                        samples.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+                        let timed = (cfg.reps * cfg.requests) as u64;
+                        let per_req = |ns: f64| ns / cfg.requests as f64;
+                        let median = per_req(samples[samples.len() / 2]);
+                        rows.push(ShardBenchRow {
+                            policy: name.clone(),
+                            mode: mode.label(),
+                            shards,
+                            n,
+                            c,
+                            cache_pct: pct,
+                            ns_per_request: median,
+                            min_ns: per_req(samples[0]),
+                            max_ns: per_req(*samples.last().unwrap()),
+                            req_per_s: 1e9 / median.max(1e-9),
+                            allocs_per_request: alloc_counter_active
+                                .then(|| allocs as f64 / timed as f64),
+                            steady_allocs: alloc_counter_active.then_some(allocs),
+                            p50_ns: snap.p50_ns(),
+                            p99_ns: snap.p99_ns(),
+                            p999_ns: snap.p999_ns(),
+                            hit_ratio: snap.hit_ratio(),
+                            requests_timed: timed,
+                        });
                     }
-                    let allocs = alloc_count::current() - a0;
-
-                    drop(client);
-                    let snap = server.shutdown().since(&warm);
-
-                    samples.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
-                    let timed = (cfg.reps * cfg.requests) as u64;
-                    let per_req = |ns: f64| ns / cfg.requests as f64;
-                    let median = per_req(samples[samples.len() / 2]);
-                    rows.push(ShardBenchRow {
-                        policy: name.clone(),
-                        shards,
-                        n,
-                        c,
-                        cache_pct: pct,
-                        ns_per_request: median,
-                        min_ns: per_req(samples[0]),
-                        max_ns: per_req(*samples.last().unwrap()),
-                        req_per_s: 1e9 / median.max(1e-9),
-                        allocs_per_request: alloc_counter_active
-                            .then(|| allocs as f64 / timed as f64),
-                        steady_allocs: alloc_counter_active.then_some(allocs),
-                        p50_ns: snap.p50_ns(),
-                        p99_ns: snap.p99_ns(),
-                        p999_ns: snap.p999_ns(),
-                        hit_ratio: snap.hit_ratio(),
-                        requests_timed: timed,
-                    });
                 }
             }
         }
@@ -405,7 +437,10 @@ mod tests {
         cfg.requests = 8_000; // keep the unit test quick
         cfg.ns = vec![2_000];
         let r = run_shardbench(&cfg).unwrap();
-        assert_eq!(r.rows.len(), 2); // ogb x shards {1, 2}
+        // ogb x modes {batched, per_request} x shards {1, 2}
+        assert_eq!(r.rows.len(), 4);
+        assert!(r.rows.iter().any(|row| row.mode == "batched"));
+        assert!(r.rows.iter().any(|row| row.mode == "per_request"));
         for row in &r.rows {
             assert!(row.ns_per_request > 0.0, "{}", row.policy);
             assert!(row.req_per_s > 0.0);
@@ -425,6 +460,8 @@ mod tests {
         assert!(text.contains("\"requests_per_sec\""));
         assert!(text.contains("\"p999_ns\""));
         assert!(text.contains("\"steady_allocs_total\""));
+        assert!(text.contains("\"mode\":\"batched\""));
+        assert!(text.contains("\"mode\":\"per_request\""));
         std::fs::remove_dir_all(dir).ok();
     }
 

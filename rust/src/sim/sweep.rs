@@ -78,8 +78,13 @@ pub struct SweepCell {
     pub requests: usize,
     pub hit_ratio: f64,
     pub total_reward: f64,
+    /// unit-objective OPT hits (count-based; kept for cross-checking)
     pub opt_hits: u64,
-    /// `OPT_hits(C) - reward` (negative when a dynamic policy beats
+    /// hindsight-OPT reward under the scenario's objective: weighted
+    /// (`w_i · count_i` top-C) when the spec has an `@ weights:` clause,
+    /// `opt_hits as f64` otherwise
+    pub opt_reward: f64,
+    /// `opt_reward - reward` (negative when a dynamic policy beats
     /// static hindsight OPT, e.g. recency policies on bursty traffic)
     pub regret: f64,
     pub elapsed_s: f64,
@@ -91,6 +96,10 @@ pub struct SweepCell {
 pub struct SweepResult {
     pub source: String,
     pub spec: String,
+    /// true when the spec carries a non-unit `@ weights:` clause — the
+    /// `hit_ratio` columns are then mean *weighted* rewards (can exceed
+    /// 1.0), and regret is against the weighted OPT
+    pub weighted: bool,
     pub catalog: usize,
     pub requests: usize,
     pub seed: u64,
@@ -120,6 +129,12 @@ impl SweepResult {
                 ("experiment", "stream_sweep".to_string()),
                 ("source", self.source.clone()),
                 ("spec", self.spec.clone()),
+                // unit: hit_ratio columns are plain 0..1 hit/fraction
+                // rates; weighted: mean weighted rewards (can exceed 1)
+                (
+                    "objective",
+                    if self.weighted { "weighted" } else { "unit" }.to_string(),
+                ),
                 ("catalog", self.catalog.to_string()),
                 ("requests", self.requests.to_string()),
                 ("seed", self.seed.to_string()),
@@ -144,7 +159,7 @@ impl SweepResult {
                 cell.c.to_string(),
                 format!("{:.3}", cell.cache_pct),
                 format!("{:.6}", cell.hit_ratio),
-                format!("{:.6}", cell.opt_hits as f64 / t),
+                format!("{:.6}", cell.opt_reward / t),
                 format!("{:.2}", cell.regret),
                 format!("{:.6}", cell.regret / t),
                 format!("{:.1}", cell.throughput_rps),
@@ -166,6 +181,7 @@ impl SweepResult {
                     ("c", Json::Num(c.c as f64)),
                     ("cache_pct", Json::Num(c.cache_pct)),
                     ("hit_ratio", Json::Num(c.hit_ratio)),
+                    ("opt_reward", Json::Num(c.opt_reward)),
                     ("regret", Json::Num(c.regret)),
                     ("requests_per_sec", Json::Num(c.throughput_rps)),
                 ])
@@ -175,6 +191,10 @@ impl SweepResult {
             ("experiment", Json::Str("stream_sweep".into())),
             ("source", Json::Str(self.source.clone())),
             ("spec", Json::Str(self.spec.clone())),
+            (
+                "objective",
+                Json::Str(if self.weighted { "weighted" } else { "unit" }.into()),
+            ),
             ("catalog", Json::Num(self.catalog as f64)),
             ("requests_per_cell", Json::Num(self.requests as f64)),
             ("seed", Json::Num(self.seed as f64)),
@@ -318,6 +338,7 @@ pub fn run_sweep(spec: &SourceSpec, cfg: &SweepConfig) -> Result<SweepResult> {
     Ok(SweepResult {
         source: source_name,
         spec: spec.text().to_string(),
+        weighted: spec.has_weights(),
         catalog,
         requests: t_total,
         seed: cfg.seed,
@@ -345,8 +366,13 @@ fn run_cell(
     // Concrete enum dispatch: the replay loop below monomorphizes over
     // `AnyPolicy` instead of paying a vtable call per request.
     let mut policy: AnyPolicy = if name == "opt" {
-        // hindsight allocation from the shared streaming OPT pass
-        AnyPolicy::Opt(Opt::from_items(opt.top_c(c).into_iter().map(u64::from), c))
+        // hindsight allocation from the shared streaming OPT pass —
+        // ranked by weighted count, which degenerates to the plain count
+        // ranking for unweighted specs (exact for integer counts)
+        AnyPolicy::Opt(Opt::from_items(
+            opt.top_c_weighted(c).into_iter().map(u64::from),
+            c,
+        ))
     } else {
         let mut opts = BuildOpts::new(t_total, cfg.batch, cfg.seed);
         opts.rebase_threshold = cfg.rebase_threshold;
@@ -360,9 +386,13 @@ fn run_cell(
             window: t_total.max(1),
             occupancy_every: 0,
             max_requests: cfg.max_requests,
+            // one serve_batch call per policy sample-refresh batch (at
+            // least the engine default, so B=1 policies still amortize)
+            batch: cfg.batch.max(RunConfig::default().batch),
         },
     );
     let opt_hits = opt.opt_hits(c);
+    let opt_reward = opt.opt_weighted_reward(c);
     Ok(SweepCell {
         policy: name.to_string(),
         c,
@@ -371,7 +401,8 @@ fn run_cell(
         hit_ratio: r.hit_ratio(),
         total_reward: r.total_reward,
         opt_hits,
-        regret: opt_hits as f64 - r.total_reward,
+        opt_reward,
+        regret: opt_reward - r.total_reward,
         elapsed_s: r.elapsed_s,
         throughput_rps: r.throughput_rps,
     })
@@ -397,6 +428,7 @@ mod tests {
     fn sweep_covers_grid_and_matches_opt() {
         let spec = SourceSpec::parse("zipf:n=500,t=20000,s=1.0").unwrap();
         let r = run_sweep(&spec, &small_cfg()).unwrap();
+        assert!(!r.weighted, "unit spec must be labeled unit");
         assert_eq!(r.catalog, 500);
         assert_eq!(r.requests, 20_000);
         assert_eq!(r.cells.len(), 6);
@@ -416,6 +448,37 @@ mod tests {
             assert_eq!(hrs.len(), 2);
             assert!(hrs[1] >= hrs[0] - 0.02, "{p}: {hrs:?}");
         }
+    }
+
+    /// Weighted scenario (`@ weights:`): rewards are `w_i` per hit, the
+    /// OPT cell realizes the weighted hindsight optimum exactly, and OGB
+    /// stays competitive with it.
+    #[test]
+    fn weighted_sweep_accounts_weighted_opt() {
+        let spec =
+            SourceSpec::parse("zipf:n=400,t=30000,s=1.0 @ weights:uniform,lo=1,hi=9").unwrap();
+        let mut cfg = small_cfg();
+        cfg.policies = ["ogb", "opt"].map(String::from).to_vec();
+        cfg.cache_pcts = vec![10.0];
+        let r = run_sweep(&spec, &cfg).unwrap();
+        assert!(r.weighted, "weighted spec must be labeled");
+        assert_eq!(r.cells.len(), 2);
+        let opt = r.cells.iter().find(|c| c.policy == "opt").unwrap();
+        assert!(
+            (opt.total_reward - opt.opt_reward).abs() < 1e-6,
+            "OPT cell must realize the weighted optimum: {} vs {}",
+            opt.total_reward,
+            opt.opt_reward
+        );
+        // weighted rewards exceed the count-based hits (weights > 1)
+        assert!(opt.opt_reward > opt.opt_hits as f64);
+        let ogb = r.cells.iter().find(|c| c.policy == "ogb").unwrap();
+        assert!(
+            ogb.total_reward > 0.5 * opt.opt_reward,
+            "weighted OGB should track weighted OPT: {} vs {}",
+            ogb.total_reward,
+            opt.opt_reward
+        );
     }
 
     #[test]

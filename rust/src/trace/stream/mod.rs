@@ -34,6 +34,7 @@ pub mod combine;
 pub mod file;
 pub mod gen;
 pub mod spec;
+pub mod weight;
 
 pub use combine::{Concat, Interleave, Mix};
 pub use file::FileSource;
@@ -42,11 +43,19 @@ pub use gen::{
     ZipfDriftSource, ZipfSource,
 };
 pub use spec::SourceSpec;
+pub use weight::{WeightScheme, WeightedSource};
 
 use super::Trace;
+use crate::policies::Request;
 
 /// A pull-based stream of `u32` item ids over a dense catalog
 /// `0..catalog`, the streaming generalization of [`Trace`].
+///
+/// Sources emit *weighted* requests (DESIGN.md §9): `next_weighted` /
+/// `fill` attach the per-item weight `w_i` of the paper's Eq. (1)
+/// objective; plain sources default every weight to 1.0 and only the
+/// [`weight::WeightedSource`] wrapper (the spec DSL's `@ weights:`
+/// clause) overrides it.
 pub trait RequestSource {
     /// Human-readable source name (recorded in results, like `Trace::name`).
     fn name(&self) -> String;
@@ -60,6 +69,30 @@ pub trait RequestSource {
 
     /// The next request, or `None` when the source is exhausted.
     fn next_request(&mut self) -> Option<u32>;
+
+    /// The next request with its weight (unit unless wrapped).
+    #[inline]
+    fn next_weighted(&mut self) -> Option<Request> {
+        self.next_request().map(|i| Request::unit(i as u64))
+    }
+
+    /// Append up to `max` weighted requests to `buf`; returns how many
+    /// were appended (0 = exhausted).  The batched replay loop
+    /// (`sim::run_source`) calls this once per chunk with a reused
+    /// buffer, so implementations must not allocate beyond `buf`.
+    fn fill(&mut self, buf: &mut Vec<Request>, max: usize) -> usize {
+        let mut n = 0usize;
+        while n < max {
+            match self.next_weighted() {
+                Some(r) => {
+                    buf.push(r);
+                    n += 1;
+                }
+                None => break,
+            }
+        }
+        n
+    }
 
     /// Generator seed (0 for file/trace-backed sources) — recorded in CSV
     /// provenance like `Trace::seed`.
@@ -83,6 +116,14 @@ impl<S: RequestSource + ?Sized> RequestSource for Box<S> {
 
     fn next_request(&mut self) -> Option<u32> {
         (**self).next_request()
+    }
+
+    fn next_weighted(&mut self) -> Option<Request> {
+        (**self).next_weighted()
+    }
+
+    fn fill(&mut self, buf: &mut Vec<Request>, max: usize) -> usize {
+        (**self).fill(buf, max)
     }
 
     fn seed(&self) -> u64 {

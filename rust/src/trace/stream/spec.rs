@@ -3,14 +3,23 @@
 //! flags, CSV provenance headers, and the parallel sweep runner (which
 //! builds a *fresh* deterministic source from the spec for every worker).
 //!
-//! Grammar (no nesting/parentheses; precedence `+` over `&` over `|`):
+//! Grammar (no nesting/parentheses; precedence `+` over `&` over `|`;
+//! an optional request-weight clause follows the whole expression):
 //!
 //! ```text
-//! spec  :=  part ( '|' part )*          probabilistic Mix (equal weights)
-//! part  :=  seq  ( '&' seq  )*          round-robin Interleave
-//! seq   :=  leaf ( '+' leaf )*          sequential Concat
-//! leaf  :=  kind [ ':' key=value (',' key=value)* ]
+//! spec   :=  expr [ '@' wspec ]
+//! expr   :=  part ( '|' part )*          probabilistic Mix (equal weights)
+//! part   :=  seq  ( '&' seq  )*          round-robin Interleave
+//! seq    :=  leaf ( '+' leaf )*          sequential Concat
+//! leaf   :=  kind [ ':' key=value (',' key=value)* ]
+//! wspec  :=  'weights:' wkind [ ',' key=value ... ]
 //! ```
+//!
+//! `wspec` attaches a deterministic per-item weight `w_i` (the paper's
+//! Eq. (1) weighted objective) to every emitted request — see
+//! [`super::weight::WeightScheme`] for the kinds (`unit`, `uniform`,
+//! `pareto`, `rank`) and their parameters.  Example:
+//! `zipf:n=1e5,t=1e6 @ weights:pareto,alpha=1.5`.
 //!
 //! Leaves (numbers accept `1e6` / `1_000_000` forms; `seed` defaults to
 //! the sweep seed, offset per leaf so parallel parts decorrelate):
@@ -41,6 +50,7 @@ use super::gen::{
     AdversarialSource, DiurnalSource, FlashCrowdSource, ShiftingZipfSource, UniformSource,
     ZipfDriftSource, ZipfSource,
 };
+use super::weight::{WeightScheme, WeightedSource};
 use super::{FileSource, OwnedTraceSource, RequestSource};
 use crate::util::rng::mix64;
 
@@ -52,11 +62,16 @@ pub struct SourceSpec {
 }
 
 impl SourceSpec {
-    /// Parse and validate (kinds, parameter names, number syntax).  File
-    /// existence and catalog checks happen at [`SourceSpec::build`] time.
+    /// Parse and validate (kinds, parameter names, number syntax, weight
+    /// clause).  File existence and catalog checks happen at
+    /// [`SourceSpec::build`] time.
     pub fn parse(text: &str) -> Result<Self> {
         let text = text.trim().to_string();
-        parse_ast(&text)?;
+        let (expr, wspec) = split_weight_clause(&text)?;
+        parse_ast(expr)?;
+        if let Some(w) = wspec {
+            parse_weight_clause(w, 0)?;
+        }
         Ok(Self { text })
     }
 
@@ -64,14 +79,124 @@ impl SourceSpec {
         &self.text
     }
 
+    /// True when the spec carries a non-unit `@ weights:` clause — such
+    /// scenarios reward `w_i` per hit and only run on weight-aware
+    /// consumers (sim/sweep; the serving engine's reply bitmap is
+    /// hit/miss and ignores weights).
+    pub fn has_weights(&self) -> bool {
+        matches!(
+            split_weight_clause(&self.text),
+            Ok((_, Some(w))) if !matches!(parse_weight_clause(w, 0), Ok(WeightScheme::Unit))
+        )
+    }
+
     /// Construct a fresh source.  Leaves without an explicit `seed=` get
     /// `default_seed` offset by their position, so re-building with the
-    /// same seed replays the identical scenario.
+    /// same seed replays the identical scenario; the weight scheme's
+    /// default seed decorrelates from the request stream.
     pub fn build(&self, default_seed: u64) -> Result<Box<dyn RequestSource>> {
-        let ast = parse_ast(&self.text)?;
+        let (expr, wspec) = split_weight_clause(&self.text)?;
+        let ast = parse_ast(expr)?;
         let mut leaf_idx = 0u64;
-        build_node(&ast, default_seed, &mut leaf_idx)
+        let source = build_node(&ast, default_seed, &mut leaf_idx)?;
+        Ok(match wspec {
+            None => source,
+            Some(w) => {
+                let scheme = parse_weight_clause(w, default_seed)?;
+                Box::new(WeightedSource::new(source, scheme))
+            }
+        })
     }
+}
+
+/// Split `expr [@ wspec]` (at most one `@`).
+fn split_weight_clause(text: &str) -> Result<(&str, Option<&str>)> {
+    let mut parts = text.splitn(3, '@');
+    let expr = parts.next().unwrap_or("").trim();
+    let wspec = parts.next().map(str::trim);
+    if parts.next().is_some() {
+        bail!("source spec has more than one `@` weight clause");
+    }
+    Ok((expr, wspec))
+}
+
+/// Parse `weights:<kind>[,key=value...]` into a [`WeightScheme`].
+fn parse_weight_clause(text: &str, default_seed: u64) -> Result<WeightScheme> {
+    let Some(rest) = text.strip_prefix("weights:") else {
+        bail!("weight clause must start with `weights:` (got `{text}`)");
+    };
+    let mut fields = rest.split(',').map(str::trim);
+    let kind = fields.next().unwrap_or("");
+    let mut params: Vec<(String, String)> = Vec::new();
+    for kv in fields {
+        if kv.is_empty() {
+            continue;
+        }
+        let Some((k, v)) = kv.split_once('=') else {
+            bail!("weights:{kind}: expected key=value, got `{kv}`");
+        };
+        let (k, v) = (k.trim().to_string(), v.trim().to_string());
+        if params.iter().any(|(pk, _)| *pk == k) {
+            bail!("weights:{kind}: duplicate parameter `{k}`");
+        }
+        params.push((k, v));
+    }
+    let allowed: &[&str] = match kind {
+        "unit" => &[],
+        "uniform" => &["lo", "hi", "seed"],
+        "pareto" => &["alpha", "lo", "cap", "seed"],
+        "rank" => &["gamma"],
+        other => bail!("unknown weight kind `{other}` (known: unit uniform pareto rank)"),
+    };
+    for (k, _) in &params {
+        ensure_key(kind, k, allowed)?;
+    }
+    let f64_or = |key: &str, default: f64| -> Result<f64> {
+        match params.iter().find(|(k, _)| k == key) {
+            None => Ok(default),
+            Some((_, v)) => v
+                .replace('_', "")
+                .parse()
+                .with_context(|| format!("weights:{kind}: bad `{key}`")),
+        }
+    };
+    let seed = match params.iter().find(|(k, _)| k.as_str() == "seed") {
+        Some((_, v)) => parse_usize(v).with_context(|| format!("weights:{kind}: bad `seed`"))? as u64,
+        None => mix64(default_seed ^ 0x5747_4854), // "WGHT"
+    };
+    Ok(match kind {
+        "unit" => WeightScheme::Unit,
+        "uniform" => {
+            let (lo, hi) = (f64_or("lo", 1.0)?, f64_or("hi", 4.0)?);
+            anyhow::ensure!(lo > 0.0 && hi >= lo, "weights:uniform needs 0 < lo <= hi");
+            WeightScheme::Uniform { lo, hi, seed }
+        }
+        "pareto" => {
+            let (alpha, lo, cap) = (f64_or("alpha", 1.5)?, f64_or("lo", 1.0)?, f64_or("cap", 1e3)?);
+            anyhow::ensure!(
+                alpha > 0.0 && lo > 0.0 && cap >= lo,
+                "weights:pareto needs alpha > 0 and 0 < lo <= cap"
+            );
+            WeightScheme::Pareto {
+                alpha,
+                lo,
+                cap,
+                seed,
+            }
+        }
+        "rank" => WeightScheme::Rank {
+            gamma: f64_or("gamma", 0.5)?,
+        },
+        _ => unreachable!("validated above"),
+    })
+}
+
+fn ensure_key(kind: &str, key: &str, allowed: &[&str]) -> Result<()> {
+    anyhow::ensure!(
+        allowed.contains(&key),
+        "weights:{kind}: unknown parameter `{key}` (allowed: {allowed:?})"
+    );
+    Ok(())
 }
 
 #[derive(Debug)]
@@ -411,6 +536,52 @@ mod tests {
             "zipf:n=10 + ",
         ] {
             assert!(SourceSpec::parse(bad).is_err(), "`{bad}` should be rejected");
+        }
+    }
+
+    #[test]
+    fn weight_clause_parses_and_attaches() {
+        let spec = SourceSpec::parse("zipf:n=200,t=3000,s=1.0 @ weights:uniform,lo=2,hi=6").unwrap();
+        assert!(spec.has_weights());
+        let mut src = spec.build(17).unwrap();
+        // id stream identical to the unweighted twin
+        let plain: Vec<u32> = SourceIter(
+            SourceSpec::parse("zipf:n=200,t=3000,s=1.0")
+                .unwrap()
+                .build(17)
+                .unwrap()
+                .as_mut(),
+        )
+        .collect();
+        let mut got = Vec::new();
+        while let Some(r) = src.next_weighted() {
+            assert!((2.0..=6.0).contains(&r.weight), "weight {}", r.weight);
+            got.push(r.item as u32);
+        }
+        assert_eq!(got, plain);
+        // weights are a pure function of the item id
+        let mut a = spec.build(17).unwrap();
+        let mut by_item = std::collections::HashMap::new();
+        while let Some(r) = a.next_weighted() {
+            let w = by_item.entry(r.item).or_insert(r.weight);
+            assert_eq!(*w, r.weight, "item {} weight changed", r.item);
+        }
+        // unit clause and no clause are both unweighted
+        assert!(!SourceSpec::parse("zipf:n=10,t=10 @ weights:unit").unwrap().has_weights());
+        assert!(!SourceSpec::parse("zipf:n=10,t=10").unwrap().has_weights());
+    }
+
+    #[test]
+    fn bad_weight_clauses_rejected() {
+        for bad in [
+            "zipf:n=10,t=10 @ weights:bogus",
+            "zipf:n=10,t=10 @ weights:uniform,lo=0",
+            "zipf:n=10,t=10 @ weights:uniform,q=1",
+            "zipf:n=10,t=10 @ sizes:uniform",
+            "zipf:n=10,t=10 @ weights:unit @ weights:unit",
+            "zipf:n=10,t=10 @ weights:pareto,alpha=-1",
+        ] {
+            assert!(SourceSpec::parse(bad).is_err(), "`{bad}`");
         }
     }
 

@@ -1,0 +1,203 @@
+//! Per-item request weights (DESIGN.md §9): the paper's Eq. (1) rewards
+//! a hit on item `i` with `w_i` (fetch cost, object size, tier price —
+//! also the setting of Si Salem et al.'s OMD caching and Paschos et
+//! al.'s miss-cost model).  A [`WeightScheme`] is a *deterministic*
+//! per-item weight function — depending only on the item id and a seed —
+//! so weighted hindsight OPT is well-defined (`w_i · count_i`) and
+//! replays are reproducible; [`WeightedSource`] attaches a scheme to any
+//! [`RequestSource`].
+//!
+//! In the scenario DSL a weights clause follows the source expression:
+//!
+//! ```text
+//! zipf:n=1e5,t=1e6 @ weights:pareto,alpha=1.5
+//! ```
+//!
+//! | kind      | parameters (defaults)           | model                               |
+//! |-----------|---------------------------------|-------------------------------------|
+//! | `unit`    | —                               | `w_i = 1` (the unweighted setting)  |
+//! | `uniform` | `lo=1, hi=4, seed`              | hash-uniform in `[lo, hi]`          |
+//! | `pareto`  | `alpha=1.5, lo=1, cap=1e3, seed`| heavy-tailed sizes, capped          |
+//! | `rank`    | `gamma=0.5`                     | `w_i = (i+1)^-gamma` — for rank-ordered catalogs (the synth generators), cost *correlated* with popularity; negative `gamma` anti-correlates |
+
+use super::RequestSource;
+use crate::policies::Request;
+use crate::util::fxhash::hash2;
+
+/// Deterministic per-item weight function.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WeightScheme {
+    /// `w_i = 1` — the unweighted setting.
+    Unit,
+    /// hash-uniform in `[lo, hi]`
+    Uniform { lo: f64, hi: f64, seed: u64 },
+    /// hash-Pareto `lo · (1-u)^(-1/alpha)`, capped at `cap`
+    Pareto {
+        alpha: f64,
+        lo: f64,
+        cap: f64,
+        seed: u64,
+    },
+    /// `w_i = (i+1)^-gamma` over rank-ordered ids
+    Rank { gamma: f64 },
+}
+
+/// `bits -> [0, 1)` with 53-bit resolution.
+#[inline]
+fn unit_f64(bits: u64) -> f64 {
+    (bits >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+impl WeightScheme {
+    /// The weight of `item` — pure in `(scheme, item)`.
+    #[inline]
+    pub fn weight_of(&self, item: u64) -> f64 {
+        match *self {
+            WeightScheme::Unit => 1.0,
+            WeightScheme::Uniform { lo, hi, seed } => {
+                lo + unit_f64(hash2(seed ^ 0x5745_4947, item)) * (hi - lo) // "WEIG"
+            }
+            WeightScheme::Pareto {
+                alpha,
+                lo,
+                cap,
+                seed,
+            } => {
+                let u = unit_f64(hash2(seed ^ 0x5041_5245, item)); // "PARE"
+                (lo * (1.0 - u).max(1e-15).powf(-1.0 / alpha)).min(cap)
+            }
+            WeightScheme::Rank { gamma } => ((item + 1) as f64).powf(-gamma),
+        }
+    }
+
+    /// Short label for source names / provenance.
+    pub fn label(&self) -> String {
+        match self {
+            WeightScheme::Unit => "unit".into(),
+            WeightScheme::Uniform { lo, hi, .. } => format!("uniform[{lo},{hi}]"),
+            WeightScheme::Pareto { alpha, .. } => format!("pareto(a={alpha})"),
+            WeightScheme::Rank { gamma } => format!("rank(g={gamma})"),
+        }
+    }
+}
+
+/// Attach a [`WeightScheme`] to any source: `next_weighted`/`fill` carry
+/// `w_item`; the plain `next_request` view is unchanged, so weight-
+/// oblivious consumers (`materialize`, the serving engine's hit bitmap)
+/// see the same id stream.
+pub struct WeightedSource<S> {
+    inner: S,
+    scheme: WeightScheme,
+}
+
+impl<S: RequestSource> WeightedSource<S> {
+    pub fn new(inner: S, scheme: WeightScheme) -> Self {
+        Self { inner, scheme }
+    }
+
+    pub fn scheme(&self) -> &WeightScheme {
+        &self.scheme
+    }
+}
+
+impl<S: RequestSource> RequestSource for WeightedSource<S> {
+    fn name(&self) -> String {
+        format!("{}@w:{}", self.inner.name(), self.scheme.label())
+    }
+
+    fn catalog(&self) -> usize {
+        self.inner.catalog()
+    }
+
+    fn horizon(&self) -> Option<usize> {
+        self.inner.horizon()
+    }
+
+    fn next_request(&mut self) -> Option<u32> {
+        self.inner.next_request()
+    }
+
+    #[inline]
+    fn next_weighted(&mut self) -> Option<Request> {
+        self.inner
+            .next_request()
+            .map(|i| Request::weighted(i as u64, self.scheme.weight_of(i as u64)))
+    }
+
+    fn seed(&self) -> u64 {
+        self.inner.seed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::stream::gen::ZipfSource;
+
+    #[test]
+    fn weights_are_deterministic_and_positive() {
+        for scheme in [
+            WeightScheme::Unit,
+            WeightScheme::Uniform {
+                lo: 1.0,
+                hi: 8.0,
+                seed: 7,
+            },
+            WeightScheme::Pareto {
+                alpha: 1.5,
+                lo: 1.0,
+                cap: 1e3,
+                seed: 7,
+            },
+            WeightScheme::Rank { gamma: 0.5 },
+            WeightScheme::Rank { gamma: -0.5 },
+        ] {
+            for i in 0..1000u64 {
+                let w = scheme.weight_of(i);
+                assert!(w > 0.0 && w.is_finite(), "{scheme:?} at {i}: {w}");
+                assert_eq!(w, scheme.weight_of(i), "pure in (scheme, item)");
+            }
+        }
+        // uniform range respected
+        let u = WeightScheme::Uniform {
+            lo: 2.0,
+            hi: 3.0,
+            seed: 1,
+        };
+        for i in 0..1000u64 {
+            let w = u.weight_of(i);
+            assert!((2.0..=3.0).contains(&w));
+        }
+        // pareto capped
+        let p = WeightScheme::Pareto {
+            alpha: 0.5,
+            lo: 1.0,
+            cap: 50.0,
+            seed: 1,
+        };
+        assert!((0..10_000u64).all(|i| p.weight_of(i) <= 50.0));
+    }
+
+    #[test]
+    fn wrapper_preserves_ids_and_attaches_weights() {
+        let scheme = WeightScheme::Uniform {
+            lo: 1.0,
+            hi: 4.0,
+            seed: 3,
+        };
+        let mut plain = ZipfSource::new(100, 500, 0.9, 5);
+        let mut wrapped = WeightedSource::new(ZipfSource::new(100, 500, 0.9, 5), scheme.clone());
+        assert_eq!(wrapped.catalog(), 100);
+        assert_eq!(wrapped.horizon(), Some(500));
+        loop {
+            match (plain.next_request(), wrapped.next_weighted()) {
+                (None, None) => break,
+                (Some(i), Some(r)) => {
+                    assert_eq!(r.item, i as u64);
+                    assert_eq!(r.weight, scheme.weight_of(i as u64));
+                }
+                other => panic!("streams desynced: {other:?}"),
+            }
+        }
+    }
+}

@@ -67,6 +67,7 @@ fn batch_scatter_gather_preserves_per_shard_order() {
         clients: 1,
         seed: 77,
         rebase_threshold: None,
+        per_request_serve: false,
     })
     .unwrap();
     let mut client = server.take_client().unwrap();
@@ -124,6 +125,7 @@ fn one_shard_server_matches_run_source() {
                 window: 100_000,
                 occupancy_every: 0,
                 max_requests: 0,
+                ..RunConfig::default()
             },
         );
 
@@ -140,6 +142,7 @@ fn one_shard_server_matches_run_source() {
             clients: 1,
             seed,
             rebase_threshold: None,
+            per_request_serve: false,
         })
         .unwrap();
         let mut client = server.take_client().unwrap();
@@ -197,6 +200,7 @@ fn multi_shard_server_is_complete_and_sane() {
         clients: 1,
         seed: 3,
         rebase_threshold: None,
+        per_request_serve: false,
     })
     .unwrap();
     let mut client = server.take_client().unwrap();

@@ -1,0 +1,251 @@
+//! Policy API v2 contracts (DESIGN.md §9):
+//!
+//! 1. **serve_batch ≡ serve** — for every registered policy, serving the
+//!    same trace through `serve_batch` at any chunk size {1, 3, B, B+1,
+//!    full trace} produces the *identical* reward trajectory and final
+//!    occupancy as per-request `serve` with unit weights.  This is the
+//!    contract that lets the sim engine, the sweep runner and the shard
+//!    pipeline batch freely without changing any number.
+//! 2. **v1 shim** — `request(item) == serve(Request::unit(item))`.
+//! 3. **weight semantics** — weighting a subset of items up strictly
+//!    increases OGB's allocation to it (the gradient carries `eta·w`),
+//!    and every policy's unit-weight path is bit-identical to v1.
+//! 4. **open registry** — a policy registered at runtime flows through
+//!    `policies::build`, the sim engine, and the sweep/bench plumbing
+//!    without touching `policies/mod.rs`.
+
+use ogb_cache::policies::{self, BuildOpts, Policy, PolicyRegistry, Request};
+use ogb_cache::sim::{self, RunConfig};
+use ogb_cache::trace::synth;
+
+/// Every spec the differential suite covers (the full registered set;
+/// `opt` needs the trace and is exercised too).
+const ALL_POLICIES: &[&str] = &[
+    "lru",
+    "lfu",
+    "fifo",
+    "arc",
+    "gds",
+    "ftpl",
+    "ogb",
+    "ogb-frac",
+    "ogb-classic",
+    "ogb-classic-frac",
+    "omd-frac",
+    "opt",
+    "infinite",
+];
+
+/// The policy batch size B used for the batched policies in this suite.
+const B: usize = 16;
+
+fn build(name: &str, n: usize, c: usize, t: usize, trace: &ogb_cache::trace::Trace) -> policies::AnyPolicy {
+    policies::build(name, n, c, &BuildOpts::new(t, B, 7), Some(trace)).unwrap()
+}
+
+/// serve_batch over chunk sizes {1, 3, B, B+1, full} == per-request
+/// serve: identical per-request rewards and identical occupancy.
+#[test]
+fn serve_batch_equals_per_request_for_every_policy() {
+    let n = 400;
+    let c = 40;
+    let trace = synth::zipf(n, 6_000, 0.9, 3);
+    let reqs: Vec<Request> = trace.requests.iter().map(|&r| Request::unit(r as u64)).collect();
+    for name in ALL_POLICIES {
+        // reference: per-request serve
+        let mut p = build(name, n, c, trace.len(), &trace);
+        let reference: Vec<f64> = reqs.iter().map(|&r| p.serve(r)).collect();
+        let occ_ref = p.occupancy();
+        for chunk in [1usize, 3, B, B + 1, reqs.len()] {
+            let mut q = build(name, n, c, trace.len(), &trace);
+            let mut rewards: Vec<f64> = Vec::new();
+            for slice in reqs.chunks(chunk) {
+                q.serve_batch(slice, &mut rewards);
+            }
+            assert_eq!(
+                rewards.len(),
+                reference.len(),
+                "{name} chunk={chunk}: reward count"
+            );
+            for (k, (a, b)) in reference.iter().zip(&rewards).enumerate() {
+                assert_eq!(
+                    a, b,
+                    "{name} chunk={chunk}: reward diverged at request {k}"
+                );
+            }
+            assert_eq!(
+                occ_ref,
+                q.occupancy(),
+                "{name} chunk={chunk}: occupancy diverged"
+            );
+        }
+    }
+}
+
+/// The v1 shim: `request(item)` is exactly `serve(Request::unit(item))`.
+#[test]
+fn request_shim_equals_unit_serve() {
+    let n = 300;
+    let c = 30;
+    let trace = synth::zipf(n, 4_000, 1.0, 11);
+    for name in ALL_POLICIES {
+        let mut a = build(name, n, c, trace.len(), &trace);
+        let mut b = build(name, n, c, trace.len(), &trace);
+        for &r in &trace.requests {
+            assert_eq!(
+                a.request(r as u64),
+                b.serve(Request::unit(r as u64)),
+                "{name}"
+            );
+        }
+        assert_eq!(a.occupancy(), b.occupancy(), "{name}");
+    }
+}
+
+/// Weighted-vs-unit sanity: weighting a subset up strictly increases
+/// OGB's allocation to it (per-item gradient steps scale with `eta·w`).
+#[test]
+fn weighting_a_subset_up_increases_ogb_allocation()  {
+    let n = 200usize;
+    let c = 40;
+    // two equally popular halves; group A (items 0..100) weighted 8x
+    let trace = synth::uniform(n, 50_000, 5);
+    let weight_of = |item: u64| if item < 100 { 8.0 } else { 1.0 };
+
+    let mass_of = |weighted: bool| -> (f64, f64) {
+        let mut p = ogb_cache::policies::Ogb::new(n, c as f64, 0.002, B, 9);
+        let mut rewards = Vec::new();
+        let reqs: Vec<Request> = trace
+            .requests
+            .iter()
+            .map(|&r| {
+                let w = if weighted { weight_of(r as u64) } else { 1.0 };
+                Request::weighted(r as u64, w)
+            })
+            .collect();
+        for chunk in reqs.chunks(B) {
+            rewards.clear();
+            p.serve_batch(chunk, &mut rewards);
+        }
+        let a: f64 = (0..100u64).map(|i| p.prob(i)).sum();
+        let b: f64 = (100..200u64).map(|i| p.prob(i)).sum();
+        (a, b)
+    };
+
+    let (a_unit, b_unit) = mass_of(false);
+    // equally popular, equally weighted: near-symmetric allocation
+    assert!(
+        (a_unit - b_unit).abs() < 0.25 * (a_unit + b_unit),
+        "unit weights should stay near-symmetric: A={a_unit:.2} B={b_unit:.2}"
+    );
+    let (a_w, b_w) = mass_of(true);
+    assert!(
+        a_w > 2.0 * b_w,
+        "8x-weighted half must dominate the cache: A={a_w:.2} B={b_w:.2}"
+    );
+    assert!(
+        a_w > a_unit,
+        "weighting up must strictly increase the subset's allocation"
+    );
+}
+
+/// Weighted serving through the full streaming engine: a weighted spec
+/// rewards `w_i` per hit and the engine's batched loop accounts it.
+#[test]
+fn weighted_source_flows_through_run_source() {
+    use ogb_cache::trace::stream::SourceSpec;
+    let spec = SourceSpec::parse("zipf:n=300,t=20000,s=1.0 @ weights:uniform,lo=2,hi=2").unwrap();
+    // constant weight 2: total reward must be exactly twice the unit run
+    let mut unit_policy = build("lru", 300, 30, 20_000, &synth::zipf(300, 1, 1.0, 17));
+    let unit_spec = SourceSpec::parse("zipf:n=300,t=20000,s=1.0").unwrap();
+    let r_unit = sim::run_source(
+        &mut unit_policy,
+        unit_spec.build(17).unwrap().as_mut(),
+        &RunConfig::default(),
+    );
+    let mut w_policy = build("lru", 300, 30, 20_000, &synth::zipf(300, 1, 1.0, 17));
+    let r_w = sim::run_source(
+        &mut w_policy,
+        spec.build(17).unwrap().as_mut(),
+        &RunConfig::default(),
+    );
+    assert_eq!(r_unit.requests, r_w.requests);
+    assert!(
+        (r_w.total_reward - 2.0 * r_unit.total_reward).abs() < 1e-9,
+        "constant weight 2 must double the reward: {} vs {}",
+        r_w.total_reward,
+        r_unit.total_reward
+    );
+}
+
+/// Open registry end-to-end: register, build through the factory, replay
+/// through the sim engine — no edits to policies/mod.rs.
+#[test]
+fn registered_policy_runs_through_sim_engine() {
+    /// A deliberately simple external policy: caches the last K distinct
+    /// items seen (a bounded "most-recent set", not LRU-ordered).
+    struct RecentSet {
+        cap: usize,
+        items: Vec<u64>,
+    }
+    impl Policy for RecentSet {
+        fn name(&self) -> &str {
+            "RecentSet"
+        }
+        fn serve(&mut self, req: Request) -> f64 {
+            if self.items.contains(&req.item) {
+                return req.weight;
+            }
+            if self.items.len() >= self.cap {
+                self.items.remove(0);
+            }
+            self.items.push(req.item);
+            0.0
+        }
+        fn occupancy(&self) -> f64 {
+            self.items.len() as f64
+        }
+    }
+
+    PolicyRegistry::global()
+        .register("recent-set", |ctx| {
+            let cap: usize = match ctx.param("cap") {
+                Some(v) => v.parse()?,
+                None => ctx.c,
+            };
+            anyhow::ensure!(cap >= 1, "recent-set: cap must be >= 1");
+            Ok(Box::new(RecentSet {
+                cap,
+                items: Vec::new(),
+            }))
+        })
+        .unwrap();
+
+    let trace = synth::zipf(100, 5_000, 1.0, 23);
+    let mut p = policies::build(
+        "recent-set{cap=20}",
+        100,
+        10,
+        &BuildOpts::new(trace.len(), 1, 1),
+        None,
+    )
+    .unwrap();
+    assert_eq!(p.name(), "RecentSet");
+    let r = sim::run(&mut p, &trace, &RunConfig::default());
+    assert_eq!(r.requests, 5_000);
+    assert!(r.total_reward > 0.0, "hot Zipf head must produce hits");
+    assert!(p.occupancy() <= 20.0);
+    // and the serve_batch ≡ serve contract holds for it via the default
+    // trait impl
+    let reqs: Vec<Request> = trace.requests.iter().map(|&r| Request::unit(r as u64)).collect();
+    let mut a = policies::build("recent-set{cap=20}", 100, 10, &BuildOpts::new(5_000, 1, 1), None)
+        .unwrap();
+    let mut b = policies::build("recent-set{cap=20}", 100, 10, &BuildOpts::new(5_000, 1, 1), None)
+        .unwrap();
+    let ra: Vec<f64> = reqs.iter().map(|&r| a.serve(r)).collect();
+    let mut rb = Vec::new();
+    for chunk in reqs.chunks(7) {
+        b.serve_batch(chunk, &mut rb);
+    }
+    assert_eq!(ra, rb);
+}

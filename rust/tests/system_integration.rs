@@ -40,7 +40,7 @@ fn fig8_shape_cdn() {
     let hr = |name: &str| -> f64 {
         let mut p = policies::by_name(name, n, c, t, 1, 5, Some(&trace)).unwrap();
         // score the second half (post-convergence), mirroring windowed plots
-        let r = sim::run(p.as_mut(), &trace, &RunConfig { window: t / 10, occupancy_every: 0, max_requests: 0 });
+        let r = sim::run(p.as_mut(), &trace, &RunConfig { window: t / 10, occupancy_every: 0, max_requests: 0, ..RunConfig::default() });
         r.windowed[r.windowed.len() / 2..].iter().sum::<f64>() / (r.windowed.len() - r.windowed.len() / 2) as f64
     };
     let opt = hr("opt");
@@ -80,7 +80,7 @@ fn ftpl_slow_start_vs_ogb() {
     let t = trace.len();
     let early = |name: &str| -> f64 {
         let mut p = policies::by_name(name, n, c, t, 1, 5, Some(&trace)).unwrap();
-        let r = sim::run(p.as_mut(), &trace, &RunConfig { window: t / 20, occupancy_every: 0, max_requests: 0 });
+        let r = sim::run(p.as_mut(), &trace, &RunConfig { window: t / 20, occupancy_every: 0, max_requests: 0, ..RunConfig::default() });
         r.windowed[..3].iter().sum::<f64>() / 3.0
     };
     let ogb_early = early("ogb");
@@ -101,7 +101,7 @@ fn ogb_tracks_pattern_changes_better_than_ftpl() {
     let t = trace.len();
     let late = |name: &str| -> f64 {
         let mut p = policies::by_name(name, n, c, t, 1, 5, Some(&trace)).unwrap();
-        let r = sim::run(p.as_mut(), &trace, &RunConfig { window: t / 30, occupancy_every: 0, max_requests: 0 });
+        let r = sim::run(p.as_mut(), &trace, &RunConfig { window: t / 30, occupancy_every: 0, max_requests: 0, ..RunConfig::default() });
         // score windows in the LAST phase only
         let k = r.windowed.len();
         r.windowed[k - 8..].iter().sum::<f64>() / 8.0
