@@ -49,40 +49,56 @@ impl Router {
 
 }
 
-/// Frozen catalog partition: a cached bijection between global item ids
-/// and `(shard, dense shard-local id)` pairs, built once at server start
-/// (O(catalog) time, ~12 bytes per item).
+/// Catalog partition: a cached bijection between global item ids and
+/// `(shard, dense shard-local id)` pairs, built at server start
+/// (O(catalog) time, ~12 bytes per item) and *grown lazily* when the
+/// catalog does (DESIGN.md §10): [`Partition::grow`] appends only the
+/// new tail — existing assignments never move, so every copy of the
+/// partition that grows through the same catalog sizes agrees exactly.
 ///
 /// * scatter path: [`Partition::locate`] — two array loads per request;
 /// * gather/debug path: [`Partition::global`] — one array load;
 /// * shard sizing: [`Partition::local_catalog`] — exact, not estimated.
 #[derive(Debug, Clone)]
 pub struct Partition {
-    shard_of: Box<[u32]>,
-    local_of: Box<[u32]>,
+    shard_of: Vec<u32>,
+    local_of: Vec<u32>,
     /// per shard: local id → global id (inverse mapping)
-    global_of: Vec<Box<[u32]>>,
+    global_of: Vec<Vec<u32>>,
 }
 
 impl Partition {
     /// Partition `0..catalog` by the router's stable hash, assigning
     /// dense local ids in ascending global order within each shard.
     pub fn build(router: &Router, catalog: usize) -> Self {
-        assert!(catalog > 0 && catalog <= u32::MAX as usize);
-        let shards = router.shards();
-        let mut shard_of = vec![0u32; catalog].into_boxed_slice();
-        let mut local_of = vec![0u32; catalog].into_boxed_slice();
-        let mut globals: Vec<Vec<u32>> = vec![Vec::new(); shards];
-        for g in 0..catalog {
+        let mut p = Self {
+            shard_of: Vec::new(),
+            local_of: Vec::new(),
+            global_of: vec![Vec::new(); router.shards()],
+        };
+        assert!(catalog > 0, "empty catalog");
+        p.grow(router, catalog);
+        p
+    }
+
+    /// Extend the bijection to `n_new` global ids (`CatalogGrew(n)`,
+    /// DESIGN.md §10).  Lazy: only ids `catalog..n_new` are routed —
+    /// O(growth), not O(n_new) — appended in ascending global order so
+    /// the per-shard local id spaces stay dense and deterministic.
+    /// No-op when `n_new <= catalog`.  `router` must be the same
+    /// routing epoch the partition was built with.
+    pub fn grow(&mut self, router: &Router, n_new: usize) {
+        assert_eq!(
+            router.shards(),
+            self.global_of.len(),
+            "router shape changed under the partition"
+        );
+        assert!(n_new <= u32::MAX as usize, "catalog exceeds u32 ids");
+        for g in self.shard_of.len()..n_new {
             let s = router.route(g as u64);
-            shard_of[g] = s as u32;
-            local_of[g] = globals[s].len() as u32;
-            globals[s].push(g as u32);
-        }
-        Self {
-            shard_of,
-            local_of,
-            global_of: globals.into_iter().map(Vec::into_boxed_slice).collect(),
+            self.shard_of.push(s as u32);
+            self.local_of.push(self.global_of[s].len() as u32);
+            self.global_of[s].push(g as u32);
         }
     }
 
@@ -166,6 +182,30 @@ mod tests {
             assert!((l as usize) < p.local_catalog(s), "local id dense");
             assert_eq!(p.global(s, l) as u64, g, "bijection roundtrip");
         }
+    }
+
+    /// Lazy growth: extending the partition never moves an existing
+    /// assignment, grown copies agree with from-scratch builds, and the
+    /// bijection stays dense per shard.
+    #[test]
+    fn partition_grows_lazily_and_deterministically() {
+        let r = Router::new(3, 9);
+        let mut grown = Partition::build(&r, 500);
+        let before: Vec<(usize, u32)> = (0..500u64).map(|g| grown.locate(g)).collect();
+        grown.grow(&r, 2_000);
+        grown.grow(&r, 1_000); // shrink/no-op ignored
+        assert_eq!(grown.catalog(), 2_000);
+        for g in 0..500u64 {
+            assert_eq!(grown.locate(g), before[g as usize], "assignment moved");
+        }
+        let fresh = Partition::build(&r, 2_000);
+        for g in 0..2_000u64 {
+            assert_eq!(grown.locate(g), fresh.locate(g), "grown != fresh at {g}");
+            let (s, l) = grown.locate(g);
+            assert_eq!(grown.global(s, l) as u64, g);
+        }
+        let total: usize = (0..3).map(|s| grown.local_catalog(s)).sum();
+        assert_eq!(total, 2_000);
     }
 
     #[test]

@@ -127,7 +127,11 @@ impl CacheServer {
         .map_err(|e| anyhow::anyhow!("server policy `{}`: {e}", cfg.policy))?;
 
         let router = Router::new(cfg.shards, cfg.seed);
-        let partition = Arc::new(Partition::build(&router, cfg.catalog));
+        // Every client owns its copy of the partition (plus the router
+        // that extends it) so mid-stream catalog growth stays lock-free:
+        // growth appends deterministically (Partition::grow), so copies
+        // that grow through the same sizes agree bit-for-bit.
+        let partition = Partition::build(&router, cfg.catalog);
 
         // clients × shards ring pairs
         let alive = Arc::new(());
@@ -166,6 +170,7 @@ impl CacheServer {
             }
             clients.push(ShardedClient {
                 partition: partition.clone(),
+                router: router.clone(),
                 lanes,
                 sent: 0,
                 flushes: 0,
@@ -318,7 +323,8 @@ struct ClientLane {
 /// as many handles as you have load-generator threads via
 /// `ServerConfig::clients`.
 pub struct ShardedClient {
-    partition: Arc<Partition>,
+    partition: Partition,
+    router: Router,
     lanes: Vec<ClientLane>,
     sent: u64,
     flushes: u64,
@@ -341,6 +347,33 @@ impl ShardedClient {
         if self.lanes[shard].pending.is_full() {
             self.flush_shard(shard);
         }
+    }
+
+    /// Scatter one request over an *open* catalog (DESIGN.md §10): a key
+    /// at or beyond the current catalog grows this client's partition
+    /// lazily (new globals appended deterministically, so concurrent
+    /// client copies agree) instead of wrapping.  The owning shard
+    /// learns of the growth implicitly — the batch carries a local id at
+    /// or beyond its live catalog, which the worker grows its policy
+    /// for before serving (`coordinator::shard`).
+    #[inline]
+    pub fn get_growing(&mut self, key: u64) {
+        if key >= self.partition.catalog() as u64 {
+            self.partition.grow(&self.router, key as usize + 1);
+        }
+        let (shard, local) = self.partition.locate(key);
+        self.lanes[shard].pending.push(local);
+        self.sent += 1;
+        if self.lanes[shard].pending.is_full() {
+            self.flush_shard(shard);
+        }
+    }
+
+    /// Grow this client's catalog view to `n_new` ids (`CatalogGrew`).
+    /// [`Self::get_growing`] calls it implicitly; explicit calls let a
+    /// driver pre-announce growth it learned out of band.
+    pub fn grow(&mut self, n_new: usize) {
+        self.partition.grow(&self.router, n_new);
     }
 
     /// Flush every non-empty pending batch (partial batches included) —
@@ -533,6 +566,43 @@ mod tests {
         );
         assert!(snap.p50_ns() > 0);
         assert!(snap.p999_ns() >= snap.p99_ns());
+    }
+
+    /// Open-catalog serving (DESIGN.md §10): keys beyond the configured
+    /// catalog grow the client partition and the shard policies instead
+    /// of wrapping; accounting stays exact and the hot set still hits.
+    #[test]
+    fn catalog_grows_mid_stream() {
+        let mut server = CacheServer::start(small_cfg()).unwrap();
+        let mut client = server.take_client().unwrap();
+        let t = synth::zipf(10_000, 40_000, 1.0, 5);
+        for &r in &t.requests {
+            client.get_growing(r as u64);
+        }
+        // the catalog triples mid-stream; the hot head keeps being served
+        for (k, &r) in t.requests.iter().enumerate() {
+            let key = if k % 3 == 0 {
+                10_000 + (k as u64 % 20_000) // cold new tail
+            } else {
+                r as u64
+            };
+            client.get_growing(key);
+        }
+        client.drain();
+        let cs = client.stats();
+        assert_eq!(cs.sent, 80_000);
+        assert_eq!(cs.replies, 80_000);
+        assert_eq!(client.partition().catalog(), 30_000);
+        let total: usize = (0..4).map(|s| client.partition().local_catalog(s)).sum();
+        assert_eq!(total, 30_000, "grown partition stays a bijection");
+        drop(client);
+        let snap = server.shutdown();
+        assert_eq!(snap.requests, 80_000);
+        assert!(
+            snap.hit_ratio() > 0.1,
+            "hot head should survive growth: {:.3}",
+            snap.hit_ratio()
+        );
     }
 
     #[test]

@@ -106,6 +106,12 @@ pub fn run_shard(
     let mut n_open = lanes.len();
     let mut last_evictions = 0u64;
     let mut idle = 0u32;
+    // Open-catalog growth (DESIGN.md §10): local ids at or beyond this
+    // frontier grow the policy (next power of two, immediately before
+    // the offending request is served) — how a shard learns of
+    // `CatalogGrew` without a control plane: the client's grown
+    // partition simply starts emitting larger dense local ids.
+    let mut live_catalog = cfg.local_catalog.max(2);
     // Reused per-batch buffers (pre-sized to B, the ring batch capacity):
     // the drained batch is handed to the policy as ONE serve_batch call —
     // the request path stays allocation-free and the batched policies
@@ -141,19 +147,30 @@ pub fn run_shard(
                         // v1 comparison shape: one policy call per item
                         for k in 0..batch.len() {
                             let item = batch.item(k) as u64;
+                            if item as usize >= live_catalog {
+                                live_catalog = (item as usize + 1).next_power_of_two();
+                                policy.grow(live_catalog);
+                            }
                             if policy.request(item) >= 1.0 {
                                 batch.set_hit(k);
                                 hits += 1;
                             }
                         }
                     } else {
-                        // one policy call per ring pop (DESIGN.md §9)
+                        // one policy call per ring pop (DESIGN.md §9),
+                        // split only at catalog-growth points (§10) —
+                        // the same shared loop as sim::run_source
                         reqbuf.clear();
                         for &item in batch.items() {
                             reqbuf.push(Request::unit(item as u64));
                         }
                         rewards.clear();
-                        policy.serve_batch(&reqbuf, &mut rewards);
+                        crate::sim::engine::serve_growing(
+                            &mut policy,
+                            &reqbuf,
+                            &mut rewards,
+                            &mut live_catalog,
+                        );
                         for (k, &r) in rewards.iter().enumerate() {
                             if r >= 1.0 {
                                 batch.set_hit(k);

@@ -21,6 +21,16 @@
 //!   [`policies::PolicyRegistry`];
 //! * [`trace`] — synthetic and real-world-like request trace generators and
 //!   the temporal-locality analyses of the paper's App. B;
+//! * [`trace::ingest`] — open-catalog ingestion (DESIGN.md §10): raw
+//!   sparse-keyed traces (csv/tsv column maps, the length-prefixed
+//!   `OGBR` binary format, OGBT) behind one
+//!   [`trace::ingest::open_raw`] entry, remapped online to dense ids
+//!   by the deterministic, collision-safe, snapshot-spillable
+//!   [`trace::ingest::KeyRemapper`]; policies grow with the discovered
+//!   catalog via [`policies::Policy::grow`] (capacity doubling, mass
+//!   re-normalization, doubling-trick eta) — driven end-to-end by
+//!   `ogb-cache replay` (`BENCH_replay.json`), whose exact mode is
+//!   bit-identical to a pre-densified run;
 //! * [`trace::stream`] — the streaming workload engine (DESIGN.md §6):
 //!   pull-based [`trace::stream::RequestSource`]s (chunked `.ogbt` file
 //!   replay, drifting-Zipf / flash-crowd / diurnal generators,
@@ -72,6 +82,10 @@
 //!   latency by policy × shard count × catalog × cache size; the
 //!   shard pipeline's steady-state contract is likewise 0
 //!   allocations, asserted by the CI smoke run.
+//! * `BENCH_replay.json` — `ogb-cache replay`: raw-trace end-to-end —
+//!   per-policy hit ratio, regret vs the streaming hindsight OPT,
+//!   req/s, catalog-growth events; the `replay-e2e` CI job asserts the
+//!   exact-mode bit-identity with a pre-densified run on every push.
 //!
 //! Since Policy API v2, `BENCH_hotpath.json` and `BENCH_shard.json`
 //! carry `mode: "per_request"` vs `mode: "batched"` rows — the v1
@@ -100,6 +114,9 @@
 //! * `sim::RunConfig` gained a `batch` field (serve-batch chunk size;
 //!   metrics are chunk-size-invariant) — struct literals need
 //!   `..RunConfig::default()`.
+//! * `Policy::grow(n_new)` (DESIGN.md §10) is a provided no-op —
+//!   correct for id-keyed policies; only catalog-sized state needs an
+//!   override.  Existing implementors compile unchanged.
 
 // Clippy gates the merge (CI lint job, `-D warnings`).  The allows below
 // are deliberate house-style positions, not suppressed bugs: manual

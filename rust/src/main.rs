@@ -7,16 +7,22 @@
 //!   figures    regenerate the paper's tables/figures (CSV under results/)
 //!   serve      pump a streaming scenario through the sharded serving engine
 //!              (--smoke runs the multi-core shard suite -> BENCH_shard.json)
+//!   replay     run a raw sparse-keyed trace (csv/tsv/OGBR/OGBT) end-to-end
+//!              through online key remapping -> BENCH_replay.json
 //!   analyze    temporal-locality analysis of a trace (App. B)
 //!   validate   three-way projection check: lazy == dense == XLA artifact
-//!   gen-trace  write a generated trace to a binary file
+//!   gen-trace  write a generated trace to a binary file (optionally as a
+//!              sparse-keyed raw file for the ingest path)
 
 use anyhow::Result;
 use ogb_cache::coordinator::{CacheServer, ServerConfig};
 use ogb_cache::figures::{run_figure, FigOpts};
 use ogb_cache::policies::{BuildOpts, Policy};
 use ogb_cache::proj::{dense, LazySimplex};
-use ogb_cache::sim::{self, HotpathConfig, RunConfig, ShardBenchConfig, SweepConfig};
+use ogb_cache::sim::{
+    self, HotpathConfig, ReplayConfig, ReplayMode, RunConfig, ShardBenchConfig, SweepConfig,
+};
+use ogb_cache::trace::ingest::{RawBinaryWriter, RawKey};
 use ogb_cache::trace::stream::{RequestSource, SourceSpec};
 use ogb_cache::trace::{self, realworld, stream, synth, Trace};
 use ogb_cache::util::args::{flag, opt, Cli};
@@ -117,6 +123,30 @@ fn cli() -> Cli {
             ],
         )
         .command(
+            "replay",
+            "replay a raw sparse-keyed trace end-to-end: online key remapping + per-policy metrics (emits BENCH_replay.json)",
+            vec![
+                opt("input", "raw trace: a path (.csv .tsv .ogbr .ogbt, or magic-sniffed) or an explicit `kind:path=...` spec (see trace::ingest::open_raw)", ""),
+                opt("format", "input format override (auto csv tsv ogbr ogbt)", "auto"),
+                opt("key-col", "0-based key column (csv/tsv)", "0"),
+                opt("weight-col", "0-based weight column (csv/tsv; empty = unit weights)", ""),
+                opt("ts-col", "0-based timestamp column (csv/tsv; empty = record index)", ""),
+                opt("delim", "field delimiter (single char or comma/tab/space/semicolon; empty = by format)", ""),
+                flag("skip-header", "drop the first non-comment line (csv/tsv)"),
+                opt("policies", "comma-separated policy specs (plus `opt`)", "lru,ogb"),
+                opt("cache-pct", "cache size as % of the discovered catalog", "5"),
+                opt("capacity", "absolute cache capacity override (0 = use --cache-pct)", "0"),
+                opt("batch", "batch size B", "1"),
+                opt("mode", "`exact` (two-pass, bit-identical to a pre-densified run) or `grow` (single policy pass, policies grow online — DESIGN.md §10)", "exact"),
+                opt("max-requests", "cap on replayed requests (0 = whole trace)", "0"),
+                opt("seed", "random seed", "42"),
+                opt("rebase-threshold", "lazy projection re-base threshold (empty = default 1e6)", ""),
+                opt("densify-out", "write the remapped dense trace here as .ogbt (empty = skip)", ""),
+                opt("snapshot-out", "spill the key-remapper snapshot here (empty = skip)", ""),
+                opt("bench-json", "machine-readable snapshot path (empty = skip)", "BENCH_replay.json"),
+            ],
+        )
+        .command(
             "analyze",
             "temporal-locality analysis of a trace (paper App. B)",
             vec![
@@ -143,6 +173,8 @@ fn cli() -> Cli {
                 opt("scale", "trace scale factor", "0.1"),
                 opt("seed", "random seed", "42"),
                 opt("out", "output path", "trace.ogbt"),
+                opt("raw-format", "write a sparse-keyed RAW file instead of .ogbt (csv tsv ogbr): dense ids are relabeled through the bijective mix64, producing the open-catalog shape `ogb-cache replay` ingests (empty = normal .ogbt)", ""),
+                opt("sparsify-seed", "salt for the dense-id -> sparse-key relabeling", "1"),
             ],
         )
 }
@@ -567,6 +599,76 @@ fn cmd_serve(a: &ogb_cache::util::args::Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_replay(a: &ogb_cache::util::args::Args) -> Result<()> {
+    let input = a.get_or("input", "");
+    anyhow::ensure!(!input.is_empty(), "replay needs --input <raw trace>");
+    // Fold the format flags into an `open_raw` spec; `auto` passes the
+    // input through untouched (extension / magic-sniff dispatch).
+    let format = a.get_or("format", "auto");
+    let spec = match format {
+        "auto" => {
+            anyhow::ensure!(
+                a.get_or("key-col", "0") == "0"
+                    && a.get_or("weight-col", "").is_empty()
+                    && a.get_or("ts-col", "").is_empty()
+                    && a.get_or("delim", "").is_empty()
+                    && !a.flag("skip-header"),
+                "column-map flags need an explicit --format csv|tsv"
+            );
+            input.to_string()
+        }
+        "ogbr" | "ogbt" => format!("{format}:path={input}"),
+        "csv" | "tsv" => {
+            anyhow::ensure!(
+                !input.contains(','),
+                "--format {format} cannot spec a path containing `,` — rename the file"
+            );
+            let mut s = format!("{format}:path={input},key-col={}", a.get_or("key-col", "0"));
+            for (flag_name, key) in [("weight-col", "weight-col"), ("ts-col", "ts-col")] {
+                let v = a.get_or(flag_name, "");
+                if !v.is_empty() {
+                    s.push_str(&format!(",{key}={v}"));
+                }
+            }
+            let d = a.get_or("delim", "");
+            if !d.is_empty() {
+                s.push_str(&format!(",delim={d}"));
+            }
+            if a.flag("skip-header") {
+                s.push_str(",skip-header=1");
+            }
+            s
+        }
+        other => anyhow::bail!("unknown --format `{other}` (auto csv tsv ogbr ogbt)"),
+    };
+    let cfg = ReplayConfig {
+        input: spec,
+        policies: a
+            .get_or("policies", "lru,ogb")
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect(),
+        cache_pct: a.get_parse("cache-pct", 5.0),
+        capacity: a.get_parse("capacity", 0),
+        batch: a.get_parse("batch", 1),
+        seed: a.get_parse("seed", 42),
+        mode: a.get_or("mode", "exact").parse::<ReplayMode>()?,
+        max_requests: a.get_parse("max-requests", 0),
+        rebase_threshold: parse_rebase_threshold(a)?,
+        densify_out: a.get_or("densify-out", "").to_string(),
+        snapshot_out: a.get_or("snapshot-out", "").to_string(),
+    };
+    let r = sim::run_replay(&cfg)?;
+    r.print();
+    println!("\n{} policies in {:.2}s", r.rows.len(), r.wall_s);
+    let out = a.get_or("bench-json", "BENCH_replay.json");
+    if !out.is_empty() {
+        println!("wrote {}", r.write_bench_json(out)?.display());
+    }
+    Ok(())
+}
+
 fn cmd_analyze(a: &ogb_cache::util::args::Args) -> Result<()> {
     let tr = load_trace(
         a.get_or("trace", "twitter"),
@@ -653,6 +755,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         "serve" => cmd_serve(&a),
+        "replay" => cmd_replay(&a),
         "analyze" => cmd_analyze(&a),
         "validate" => cmd_validate(&a),
         "gen-trace" => {
@@ -662,8 +765,49 @@ fn main() -> Result<()> {
                 a.get_parse("seed", 42),
             )?;
             let out = a.get_or("out", "trace.ogbt");
-            trace::file::write_binary(&tr, out)?;
-            println!("wrote {} ({} requests, catalog {})", out, tr.len(), tr.catalog);
+            let raw_format = a.get_or("raw-format", "");
+            if raw_format.is_empty() {
+                trace::file::write_binary(&tr, out)?;
+                println!("wrote {} ({} requests, catalog {})", out, tr.len(), tr.catalog);
+            } else {
+                // Sparse-keyed raw twin (ingest-path fixture): relabel the
+                // dense ids through the bijective mix64, so distinct ids
+                // stay distinct but the key space becomes the sparse u64
+                // shape real traces have.  The `replay-e2e` CI job feeds
+                // this into `ogb-cache replay`.
+                let salt = ogb_cache::util::rng::mix64(
+                    a.get_parse::<u64>("sparsify-seed", 1) ^ 0x5350_4152, // "SPAR"
+                );
+                let sparse = |id: u32| ogb_cache::util::rng::mix64(id as u64 ^ salt);
+                match raw_format {
+                    "csv" | "tsv" => {
+                        use std::io::Write;
+                        let d = if raw_format == "csv" { ',' } else { '\t' };
+                        let f = std::fs::File::create(out)
+                            .map_err(|e| anyhow::anyhow!("create {out}: {e}"))?;
+                        let mut w = std::io::BufWriter::new(f);
+                        for (k, &r) in tr.requests.iter().enumerate() {
+                            writeln!(w, "{}{d}1{d}{k}", sparse(r))?;
+                        }
+                        w.flush()?;
+                    }
+                    "ogbr" => {
+                        let mut w = RawBinaryWriter::create(out)?;
+                        for (k, &r) in tr.requests.iter().enumerate() {
+                            w.write(RawKey::U64(sparse(r)), 1.0, k as u64)?;
+                        }
+                        w.finish()?;
+                    }
+                    other => anyhow::bail!("unknown --raw-format `{other}` (csv tsv ogbr)"),
+                }
+                println!(
+                    "wrote {} ({} requests, {} distinct sparse keys, format {})",
+                    out,
+                    tr.len(),
+                    tr.distinct(),
+                    raw_format
+                );
+            }
             Ok(())
         }
         _ => unreachable!("cli() rejects unknown commands"),

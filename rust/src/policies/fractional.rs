@@ -22,8 +22,12 @@ pub struct FractionalOgb {
     b: usize,
     in_batch: usize,
     name: String,
+    /// see [`crate::policies::Ogb`]: Some(t) = theory eta, re-tuned on
+    /// catalog growth (doubling trick, DESIGN.md §10)
+    theory_t: Option<usize>,
     removed_coeffs: u64,
     rebases: u64,
+    grows: u64,
 }
 
 impl FractionalOgb {
@@ -37,14 +41,18 @@ impl FractionalOgb {
             b,
             in_batch: 0,
             name: format!("OGB-frac(b={b})"),
+            theory_t: None,
             removed_coeffs: 0,
             rebases: 0,
+            grows: 0,
         }
     }
 
     pub fn with_theory_eta(n: usize, c: f64, t: usize, b: usize) -> Self {
         let eta = crate::theory_eta(c, n as f64, t as f64, b as f64);
-        Self::new(n, c, eta, b)
+        let mut s = Self::new(n, c, eta, b);
+        s.theory_t = Some(t);
+        s
     }
 
     /// Builder-style override of the numerical re-base threshold (see
@@ -118,6 +126,28 @@ impl Policy for FractionalOgb {
         }
     }
 
+    /// Catalog growth (DESIGN.md §10): a batch boundary — the partial
+    /// batch closes, the state renormalizes ([`LazySimplex::grow`],
+    /// which re-freezes so subsequent rewards are paid against the
+    /// post-growth materialized state), and theory-derived eta re-tunes
+    /// to the enlarged catalog.
+    fn grow(&mut self, n_new: usize) {
+        if n_new <= self.lazy.n() {
+            return;
+        }
+        self.in_batch = 0;
+        self.lazy.grow(n_new);
+        if let Some(t) = self.theory_t {
+            self.eta = crate::theory_eta(
+                self.lazy.capacity(),
+                n_new as f64,
+                t as f64,
+                self.b as f64,
+            );
+        }
+        self.grows += 1;
+    }
+
     fn occupancy(&self) -> f64 {
         self.lazy.capacity() // mass is conserved exactly by construction
     }
@@ -127,6 +157,7 @@ impl Policy for FractionalOgb {
             removed_coeffs: self.removed_coeffs,
             rebases: self.rebases,
             scratch_grows: self.lazy.scratch_grows(),
+            grows: self.grows,
             ..Default::default()
         }
     }

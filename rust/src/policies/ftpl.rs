@@ -31,6 +31,7 @@ pub struct Ftpl {
     /// perturbed-count key per cached item (NaN = not cached)
     key_of: Vec<f64>,
     name: String,
+    grows: u64,
 }
 
 impl Ftpl {
@@ -45,6 +46,7 @@ impl Ftpl {
             cached: FlatTree::new(),
             key_of: vec![f64::NAN; n],
             name: format!("FTPL(zeta={zeta:.3})"),
+            grows: 0,
         };
         // Initial cache: top-C by pure noise (all counts are zero) —
         // O(N) select of the C largest perturbed keys, sort only that
@@ -141,8 +143,36 @@ impl Policy for Ftpl {
         hit
     }
 
+    /// Catalog growth (DESIGN.md §10): new items enter with zero count
+    /// and their (hash-derived, id-permanent) perturbation, and are
+    /// *offered* to the cache — afterwards the cache is exactly the
+    /// top-C perturbed set over the grown catalog, i.e. the state a
+    /// fresh `n_new`-catalog FTPL with the same counts would hold.
+    /// Zeta keeps its construction value (the single-initial-noise
+    /// variant draws its noise scale once).  O(Δn · log C).
+    fn grow(&mut self, n_new: usize) {
+        if n_new <= self.n {
+            return;
+        }
+        let n_old = self.n;
+        self.counts.resize(n_new, 0.0);
+        self.key_of.resize(n_new, f64::NAN);
+        self.n = n_new;
+        for i in n_old..n_new {
+            self.offer(i as u64);
+        }
+        self.grows += 1;
+    }
+
     fn occupancy(&self) -> f64 {
         self.cached.len() as f64
+    }
+
+    fn diag(&self) -> super::Diag {
+        super::Diag {
+            grows: self.grows,
+            ..Default::default()
+        }
     }
 }
 

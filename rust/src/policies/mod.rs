@@ -126,6 +126,20 @@ pub trait Policy {
         self.serve(Request::unit(item))
     }
 
+    /// Grow the catalog to `n_new`: ids `n_old..n_new` become valid
+    /// requests from here on (open-catalog ingestion, DESIGN.md §10).
+    ///
+    /// The default is a no-op, which is *correct* for every policy whose
+    /// state is keyed by item id rather than sized to the catalog — the
+    /// capacity-based baselines (LRU, LFU, FIFO, ARC, GDS), the
+    /// hash-set OPT/Infinite — since any u64 id is already servable.
+    /// Catalog-sized policies (OGB, OGB-frac, OGB_cl, OMD, FTPL)
+    /// override it with the renormalizing growth of DESIGN.md §10; a
+    /// call with `n_new` at or below the current catalog must be a
+    /// no-op.  Growth is the one place the steady-state allocation
+    /// contract does not apply (state vectors legitimately extend).
+    fn grow(&mut self, _n_new: usize) {}
+
     /// Number of items currently stored (fractional mass for fractional
     /// policies).  Drives the paper's Fig. 9 (left).
     fn occupancy(&self) -> f64;
@@ -150,6 +164,8 @@ pub struct Diag {
     /// 0 over a steady-state window certifies the allocation-free hot
     /// path (DESIGN.md §7)
     pub scratch_grows: u64,
+    /// catalog growth events applied ([`Policy::grow`], DESIGN.md §10)
+    pub grows: u64,
 }
 
 /// Construction knobs shared by the policy factory (`t_hint` is the
@@ -238,6 +254,10 @@ impl Policy for AnyPolicy {
         any_policy_dispatch!(self, p => p.serve_batch(reqs, rewards))
     }
 
+    fn grow(&mut self, n_new: usize) {
+        any_policy_dispatch!(self, p => p.grow(n_new))
+    }
+
     fn occupancy(&self) -> f64 {
         any_policy_dispatch!(self, p => p.occupancy())
     }
@@ -258,6 +278,10 @@ impl Policy for Box<dyn Policy> {
 
     fn serve_batch(&mut self, reqs: &[Request], rewards: &mut Vec<f64>) {
         (**self).serve_batch(reqs, rewards)
+    }
+
+    fn grow(&mut self, n_new: usize) {
+        (**self).grow(n_new)
     }
 
     fn occupancy(&self) -> f64 {

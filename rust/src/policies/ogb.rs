@@ -26,10 +26,15 @@ pub struct Ogb {
     b: usize,
     batch: Vec<u64>,
     name: String,
+    /// `Some(t_hint)` when eta came from Theorem 3.1: catalog growth then
+    /// re-tunes eta to the bound at the enlarged N (the doubling-trick
+    /// schedule of DESIGN.md §10).  Explicit-eta policies keep theirs.
+    theory_t: Option<usize>,
     // cumulative diagnostics
     removed_coeffs: u64,
     sample_evictions: u64,
     rebases: u64,
+    grows: u64,
     requests: u64,
 }
 
@@ -49,17 +54,24 @@ impl Ogb {
             b,
             batch: Vec::with_capacity(b),
             name: format!("OGB(b={b})"),
+            theory_t: None,
             removed_coeffs: 0,
             sample_evictions: 0,
             rebases: 0,
+            grows: 0,
             requests: 0,
         }
     }
 
-    /// Theoretical configuration for a horizon of `t` requests.
+    /// Theoretical configuration for a horizon of `t` requests.  Also
+    /// arms the doubling-trick eta re-tune on catalog growth
+    /// (DESIGN.md §10) — eta tracks the Theorem 3.1 value at the
+    /// running catalog size.
     pub fn with_theory_eta(n: usize, c: f64, t: usize, b: usize, seed: u64) -> Self {
         let eta = crate::theory_eta(c, n as f64, t as f64, b as f64);
-        Self::new(n, c, eta, b, seed)
+        let mut s = Self::new(n, c, eta, b, seed);
+        s.theory_t = Some(t);
+        s
     }
 
     /// Builder-style override of the numerical re-base threshold (how far
@@ -183,6 +195,34 @@ impl Policy for Ogb {
         }
     }
 
+    /// Catalog growth (DESIGN.md §10): close the current Algorithm-3
+    /// batch early (UPDATESAMPLE on the partial batch — growth is a
+    /// batch boundary), renormalize the fractional state
+    /// ([`LazySimplex::grow`]), rebuild the sample under the unchanged
+    /// permanent random numbers ([`CoordinatedSampler::grow`]), and —
+    /// when eta is theory-derived — re-tune it to the Theorem 3.1 value
+    /// at the enlarged catalog (doubling trick).
+    fn grow(&mut self, n_new: usize) {
+        if n_new <= self.lazy.n() {
+            return;
+        }
+        if !self.batch.is_empty() {
+            self.flush_batch();
+        }
+        self.lazy.grow(n_new);
+        let st = self.sampler.grow(&self.lazy);
+        self.sample_evictions += st.evicted as u64;
+        if let Some(t) = self.theory_t {
+            self.eta = crate::theory_eta(
+                self.lazy.capacity(),
+                n_new as f64,
+                t as f64,
+                self.b as f64,
+            );
+        }
+        self.grows += 1;
+    }
+
     fn occupancy(&self) -> f64 {
         self.sampler.occupancy() as f64
     }
@@ -195,6 +235,7 @@ impl Policy for Ogb {
             // `batch` is bounded by B and reused, so only the projection
             // and sampler scratches can ever grow.
             scratch_grows: self.lazy.scratch_grows() + self.sampler.scratch_grows(),
+            grows: self.grows,
         }
     }
 }

@@ -69,7 +69,11 @@ pub struct OgbClassic {
     cached: Vec<bool>,
     occupancy: usize,
     rng: Xoshiro256pp,
+    /// see [`crate::policies::Ogb`]: Some(t) = theory eta, re-tuned on
+    /// catalog growth (doubling trick, DESIGN.md §10)
+    theory_t: Option<usize>,
     sample_evictions: u64,
+    grows: u64,
 }
 
 impl OgbClassic {
@@ -108,7 +112,9 @@ impl OgbClassic {
             cached: vec![false; n],
             occupancy: 0,
             rng: Xoshiro256pp::seed_from(seed),
+            theory_t: None,
             sample_evictions: 0,
+            grows: 0,
         };
         if s.mode == OgbClassicMode::Integral {
             s.resample();
@@ -126,7 +132,9 @@ impl OgbClassic {
         seed: u64,
     ) -> Self {
         let eta = crate::theory_eta(c, n as f64, t as f64, b as f64);
-        Self::new(n, c, eta, b, mode, backend, seed)
+        let mut s = Self::new(n, c, eta, b, mode, backend, seed);
+        s.theory_t = Some(t);
+        s
     }
 
     pub fn fraction(&self, item: u64) -> f64 {
@@ -244,6 +252,34 @@ impl Policy for OgbClassic {
         }
     }
 
+    /// Catalog growth (DESIGN.md §10): close the batch early (one dense
+    /// Eq. (2) step on the accumulated counts), renormalize `f` by
+    /// `n_old/n_new` with new items at `C/n_new`, re-sample the
+    /// integral cache over the grown catalog, and re-tune theory eta.
+    fn grow(&mut self, n_new: usize) {
+        if n_new <= self.n {
+            return;
+        }
+        if self.in_batch > 0 {
+            self.flush_batch();
+        }
+        let scale = self.n as f64 / n_new as f64;
+        for v in self.f.iter_mut() {
+            *v *= scale;
+        }
+        self.f.resize(n_new, self.c / n_new as f64);
+        self.counts.resize(n_new, 0.0);
+        self.cached.resize(n_new, false);
+        self.n = n_new;
+        if let Some(t) = self.theory_t {
+            self.eta = crate::theory_eta(self.c, n_new as f64, t as f64, self.b as f64);
+        }
+        if self.mode == OgbClassicMode::Integral {
+            self.resample();
+        }
+        self.grows += 1;
+    }
+
     fn occupancy(&self) -> f64 {
         match self.mode {
             OgbClassicMode::Integral => self.occupancy as f64,
@@ -254,6 +290,7 @@ impl Policy for OgbClassic {
     fn diag(&self) -> Diag {
         Diag {
             sample_evictions: self.sample_evictions,
+            grows: self.grows,
             ..Default::default()
         }
     }

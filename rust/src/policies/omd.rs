@@ -29,7 +29,11 @@ pub struct OmdFractional {
     cap_scratch: Vec<bool>,
     in_batch: usize,
     name: String,
+    /// see [`crate::policies::Ogb`]: Some(t) = theory eta, re-tuned on
+    /// catalog growth (doubling trick, DESIGN.md §10)
+    theory_t: Option<usize>,
     projection_passes: u64,
+    grows: u64,
 }
 
 impl OmdFractional {
@@ -47,16 +51,29 @@ impl OmdFractional {
             cap_scratch: vec![false; n],
             in_batch: 0,
             name: format!("OMD-frac(b={b})"),
+            theory_t: None,
             projection_passes: 0,
+            grows: 0,
         }
     }
 
     /// Theoretical learning rate for OMD with the neg-entropy mirror map:
     /// eta = sqrt(2 ln(N/C) / T) / B-ish scalings appear in [34]; we use
-    /// the diminishing-horizon form analogous to Theorem 3.1.
+    /// the diminishing-horizon form analogous to Theorem 3.1.  One
+    /// definition shared by construction and the growth re-tune.
+    fn neg_entropy_theory_eta(n: usize, c: f64, t: usize, b: usize) -> f64 {
+        (2.0 * (n as f64 / c).ln() / (t as f64 * b as f64))
+            .sqrt()
+            .max(1e-12)
+    }
+
+    /// Construct with the theoretical eta (see
+    /// [`Self::neg_entropy_theory_eta`]).  Arms the doubling-trick
+    /// re-tune on catalog growth (DESIGN.md §10).
     pub fn with_theory_eta(n: usize, c: f64, t: usize, b: usize) -> Self {
-        let eta = (2.0 * (n as f64 / c).ln() / (t as f64 * b as f64)).sqrt();
-        Self::new(n, c, eta.max(1e-12), b)
+        let mut s = Self::new(n, c, Self::neg_entropy_theory_eta(n, c, t, b), b);
+        s.theory_t = Some(t);
+        s
     }
 
     pub fn fraction(&self, i: u64) -> f64 {
@@ -177,6 +194,32 @@ impl Policy for OmdFractional {
         }
     }
 
+    /// Catalog growth (DESIGN.md §10): close the batch early (the
+    /// accumulated multiplicative step applies), renormalize — existing
+    /// fractions scale by `n_old/n_new`, new items enter at the uniform
+    /// `C/n_new` — and re-tune theory-derived eta to the enlarged
+    /// catalog (the neg-entropy diameter grows with ln N).
+    fn grow(&mut self, n_new: usize) {
+        if n_new <= self.n {
+            return;
+        }
+        if self.in_batch > 0 {
+            self.flush();
+        }
+        let scale = self.n as f64 / n_new as f64;
+        for v in self.f.iter_mut() {
+            *v *= scale;
+        }
+        self.f.resize(n_new, self.c / n_new as f64);
+        self.counts.resize(n_new, 0.0);
+        self.cap_scratch.resize(n_new, false);
+        self.n = n_new;
+        if let Some(t) = self.theory_t {
+            self.eta = Self::neg_entropy_theory_eta(n_new, self.c, t, self.b);
+        }
+        self.grows += 1;
+    }
+
     fn occupancy(&self) -> f64 {
         self.f.iter().sum()
     }
@@ -184,6 +227,7 @@ impl Policy for OmdFractional {
     fn diag(&self) -> Diag {
         Diag {
             removed_coeffs: self.projection_passes,
+            grows: self.grows,
             ..Default::default()
         }
     }

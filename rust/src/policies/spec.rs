@@ -444,8 +444,6 @@ pub(super) fn build_spec(
         OgbClassic, OgbClassicMode, OmdFractional, Opt,
     };
     let t_hint = opts.t_hint;
-    let theory_eta =
-        |b: usize| crate::theory_eta(c as f64, n as f64, t_hint as f64, b as f64);
     Ok(match spec {
         PolicySpec::Lru => AnyPolicy::Lru(Lru::new(c)),
         PolicySpec::Lfu => AnyPolicy::Lfu(Lfu::new(c)),
@@ -464,7 +462,12 @@ pub(super) fn build_spec(
         }
         PolicySpec::Ogb { batch, eta, rebase } => {
             let b = batch.unwrap_or(opts.batch);
-            let mut p = Ogb::new(n, c as f64, eta.unwrap_or_else(|| theory_eta(b)), b, opts.seed);
+            // eta left to theory goes through with_theory_eta so the
+            // doubling-trick re-tune arms on catalog growth (§10)
+            let mut p = match eta {
+                Some(e) => Ogb::new(n, c as f64, *e, b, opts.seed),
+                None => Ogb::with_theory_eta(n, c as f64, t_hint, b, opts.seed),
+            };
             if let Some(t) = rebase.or(opts.rebase_threshold) {
                 p = p.with_rebase_threshold(t);
             }
@@ -472,7 +475,10 @@ pub(super) fn build_spec(
         }
         PolicySpec::OgbFrac { batch, eta, rebase } => {
             let b = batch.unwrap_or(opts.batch);
-            let mut p = FractionalOgb::new(n, c as f64, eta.unwrap_or_else(|| theory_eta(b)), b);
+            let mut p = match eta {
+                Some(e) => FractionalOgb::new(n, c as f64, *e, b),
+                None => FractionalOgb::with_theory_eta(n, c as f64, t_hint, b),
+            };
             if let Some(t) = rebase.or(opts.rebase_threshold) {
                 p = p.with_rebase_threshold(t);
             }
@@ -484,19 +490,31 @@ pub(super) fn build_spec(
             eta,
         } => {
             let b = batch.unwrap_or(opts.batch);
-            AnyPolicy::Classic(OgbClassic::new(
-                n,
-                c as f64,
-                eta.unwrap_or_else(|| theory_eta(b)),
-                b,
-                if *fractional {
-                    OgbClassicMode::Fractional
-                } else {
-                    OgbClassicMode::Integral
-                },
-                Box::new(CpuDenseStep),
-                opts.seed,
-            ))
+            let mode = if *fractional {
+                OgbClassicMode::Fractional
+            } else {
+                OgbClassicMode::Integral
+            };
+            AnyPolicy::Classic(match eta {
+                Some(e) => OgbClassic::new(
+                    n,
+                    c as f64,
+                    *e,
+                    b,
+                    mode,
+                    Box::new(CpuDenseStep),
+                    opts.seed,
+                ),
+                None => OgbClassic::with_theory_eta(
+                    n,
+                    c as f64,
+                    t_hint,
+                    b,
+                    mode,
+                    Box::new(CpuDenseStep),
+                    opts.seed,
+                ),
+            })
         }
         PolicySpec::OmdFrac { batch, eta } => {
             let b = batch.unwrap_or(opts.batch);

@@ -430,6 +430,65 @@ impl LazySimplex {
         }
     }
 
+    /// Grow the catalog to `n_new` (DESIGN.md §10): new components enter
+    /// at the uniform value `C/n_new` — the state they would hold under
+    /// the paper's uniform initialization had the catalog been `n_new`
+    /// from the start — and the existing components re-normalize by
+    /// `n_old/n_new` so the total mass stays exactly C.  (The two
+    /// compose: growing `n1 → n2 → n3` yields the same state as growing
+    /// `n1 → n3` directly, so the doubling schedule the harnesses use is
+    /// semantics-free.)  Zero components stay zero.
+    ///
+    /// Cost: O(n_new) — one in-place rescale, one sort of the positive
+    /// keys, one bulk tree rebuild (shares the re-base machinery).
+    /// Callers must grow any structure keyed off the raw `f_tilde`
+    /// values too ([`crate::sample::CoordinatedSampler::grow`]).
+    /// No-op when `n_new <= n`.
+    pub fn grow(&mut self, n_new: usize) {
+        if n_new <= self.n {
+            return;
+        }
+        let scale = self.n as f64 / n_new as f64;
+        let f0 = self.c / n_new as f64;
+        let rho = self.rho;
+        for i in 0..self.n {
+            if !self.in_z[i] {
+                continue;
+            }
+            let v = (self.f_tilde[i] - rho) * scale;
+            if v > 0.0 {
+                self.f_tilde[i] = v;
+                self.z_key[i] = v;
+            } else {
+                // FP dust at the zero boundary: the component leaves z
+                self.f_tilde[i] = ZERO_SENTINEL;
+                self.in_z[i] = false;
+                self.z_key[i] = f64::NAN;
+            }
+        }
+        self.f_tilde.resize(n_new, f0);
+        self.in_z.resize(n_new, true);
+        self.z_key.resize(n_new, f0);
+        self.rho = 0.0;
+        self.n = n_new;
+        let mut scratch = std::mem::take(&mut self.rebase_scratch);
+        scratch.clear();
+        for i in 0..n_new {
+            if self.in_z[i] {
+                scratch.push(FlatTree::key_of(self.f_tilde[i], i as u64));
+            }
+        }
+        scratch.sort_unstable();
+        self.z.rebuild_from_sorted_keys(&scratch);
+        self.rebase_scratch = scratch;
+        // Frozen-state tracking cannot span a growth (every value moved):
+        // re-freeze at the post-growth state, which is the documented
+        // batch-boundary semantics (growth closes the batch).
+        if self.shadow.is_some() {
+            self.freeze();
+        }
+    }
+
     /// Subtract rho from every stored coefficient and reset it to zero —
     /// restores full float precision.  One O(N log N) sort of the reused
     /// scratch run plus an O(N) bulk tree rebuild (the old path re-keyed
@@ -727,6 +786,53 @@ mod tests {
         for i in 0..n as u64 {
             assert!((s.frozen_prob(i) - s.prob(i)).abs() < 1e-12);
         }
+    }
+
+    /// DESIGN.md §10: growth renormalizes existing mass by n_old/n_new,
+    /// admits new components at C/n_new, conserves total mass, and
+    /// composes (n1→n2→n3 == n1→n3).
+    #[test]
+    fn grow_renormalizes_and_composes() {
+        let (n1, c) = (24usize, 6.0);
+        let mut a = LazySimplex::new_uniform(n1, c);
+        let mut rng = Xoshiro256pp::seed_from(21);
+        for _ in 0..500 {
+            a.request(rng.next_below(n1 as u64), 0.05);
+        }
+        let before: Vec<f64> = (0..n1 as u64).map(|i| a.prob(i)).collect();
+        let mut b = a.clone();
+        let n3 = 96usize;
+        a.grow(n3);
+        b.grow(40);
+        b.grow(n3);
+        assert_eq!(a.n(), n3);
+        let s = n1 as f64 / n3 as f64;
+        for i in 0..n3 as u64 {
+            let expect = if (i as usize) < n1 {
+                before[i as usize] * s
+            } else {
+                c / n3 as f64
+            };
+            assert!(
+                (a.prob(i) - expect).abs() < 1e-12,
+                "item {i}: {} vs {expect}",
+                a.prob(i)
+            );
+            assert!(
+                (a.prob(i) - b.prob(i)).abs() < 1e-12,
+                "growth must compose at {i}"
+            );
+        }
+        a.check_invariants(1e-9);
+        b.check_invariants(1e-9);
+        // shrink/no-op growth is ignored
+        a.grow(n3 - 10);
+        assert_eq!(a.n(), n3);
+        // the grown state keeps serving requests (including new ids)
+        for _ in 0..500 {
+            a.request(rng.next_below(n3 as u64), 0.05);
+        }
+        a.check_invariants(1e-9);
     }
 
     #[test]

@@ -208,6 +208,26 @@ impl CoordinatedSampler {
         self.key_scratch = keys;
     }
 
+    /// Grow to the owning [`LazySimplex`]'s (already grown) catalog
+    /// (DESIGN.md §10): extend the per-item arrays and rebuild the
+    /// sample against the renormalized fractional state.  The permanent
+    /// random numbers are *hash-derived per item id and epoch*, so
+    /// existing items keep theirs (coordination is preserved — an item
+    /// whose f barely moved keeps its cached status with high
+    /// probability) and new items get well-defined ones for free.
+    /// O(n) per call; amortized by the callers' doubling schedule.
+    pub fn grow(&mut self, lazy: &LazySimplex) -> SampleStats {
+        let n_new = lazy.n();
+        if n_new <= self.n {
+            debug_assert_eq!(n_new, self.n, "sampler ahead of the lazy state");
+            return SampleStats::default();
+        }
+        self.cached.resize(n_new, false);
+        self.d_key.resize(n_new, f64::NAN);
+        self.n = n_new;
+        self.rebuild(lazy)
+    }
+
     /// Redraw the permanent random numbers (paper §5.1: "may periodically
     /// be randomly redrawn") and rebuild the sample accordingly.
     pub fn redraw(&mut self, lazy: &LazySimplex) -> SampleStats {
@@ -436,6 +456,39 @@ mod tests {
             smp.check_invariants(&lazy);
         }
         assert!(rebases > 3, "rebase exercised ({rebases})");
+    }
+
+    /// Growth keeps permanent numbers: after `lazy.grow` + sampler
+    /// `grow`, the sample equals a from-scratch Poisson sample of the
+    /// grown state under the *same* p_i, and invariants hold.
+    #[test]
+    fn grow_tracks_lazy_growth() {
+        let (n1, c) = (64usize, 16.0);
+        let mut lazy = LazySimplex::new_uniform(n1, c);
+        let mut smp = CoordinatedSampler::new(&lazy, 13);
+        let mut rng = Xoshiro256pp::seed_from(14);
+        for _ in 0..400 {
+            let j = rng.next_below(n1 as u64);
+            lazy.request(j, 0.03);
+            smp.update(&lazy, &[j]);
+        }
+        let p_before: Vec<f64> = (0..n1 as u64).map(|i| smp.p(i)).collect();
+        lazy.grow(256);
+        let st = smp.grow(&lazy);
+        assert_eq!(smp.n(), 256);
+        smp.check_invariants(&lazy);
+        for (i, &p) in p_before.iter().enumerate() {
+            assert_eq!(smp.p(i as u64), p, "permanent number changed at {i}");
+        }
+        // accounting covers exactly the membership changes
+        assert!(st.added as usize <= 256);
+        // keep serving across the grown catalog
+        for _ in 0..400 {
+            let j = rng.next_below(256);
+            lazy.request(j, 0.03);
+            smp.update(&lazy, &[j]);
+        }
+        smp.check_invariants(&lazy);
     }
 
     #[test]

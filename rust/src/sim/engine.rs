@@ -87,6 +87,39 @@ pub fn run<P: Policy + ?Sized>(policy: &mut P, trace: &Trace, cfg: &RunConfig) -
     run_source(policy, &mut TraceSource::new(trace), cfg)
 }
 
+/// Serve `reqs` through `policy` over an *open* catalog (DESIGN.md
+/// §10), appending one reward per request to `rewards`: the slice is
+/// split *immediately before* any request whose id reaches the live
+/// frontier `*live`, the policy grows to the next power of two above
+/// that id (the doubling trick — O(log N) growth events per run, each
+/// O(N), amortized O(1) per new item), and serving resumes.  Keying
+/// growth to the request sequence rather than the chunk boundary makes
+/// the trajectory chunk-size-invariant.  Shared by the engine loop
+/// below and the shard worker (`coordinator::shard`), so the two
+/// pipelines can never diverge on growth semantics.
+pub fn serve_growing<P: Policy + ?Sized>(
+    policy: &mut P,
+    reqs: &[Request],
+    rewards: &mut Vec<f64>,
+    live: &mut usize,
+) {
+    let mut lo = 0usize;
+    while lo < reqs.len() {
+        let split = reqs[lo..].iter().position(|r| r.item as usize >= *live);
+        let hi = split.map_or(reqs.len(), |off| lo + off);
+        if hi > lo {
+            policy.serve_batch(&reqs[lo..hi], rewards);
+        }
+        if let Some(off) = split {
+            // need > *live, so the frontier strictly advances: progress
+            let need = reqs[lo + off].item as usize + 1;
+            *live = need.next_power_of_two();
+            policy.grow(*live);
+        }
+        lo = hi;
+    }
+}
+
 /// Replay a streaming `source` through `policy` in one pass — requests
 /// are consumed chunk-by-chunk as they are produced and never buffered
 /// beyond one reused `Vec<Request>`, so the horizon is bounded by the
@@ -123,6 +156,14 @@ pub fn run_source<P: Policy + ?Sized, S: RequestSource + ?Sized>(
     let mut reqbuf: Vec<Request> = Vec::with_capacity(batch);
     let mut rewards: Vec<f64> = Vec::with_capacity(batch);
 
+    // Open-catalog growth (DESIGN.md §10): the id frontier below which
+    // requests are known servable.  Fixed-catalog sources never cross it
+    // (every id is < catalog), so the growth path costs one compare per
+    // request and changes nothing.  Growing sources (the ingest layer's
+    // RemappedSource) cross it exactly when a first-seen key maps to a
+    // fresh dense id.
+    let mut n_live = source.catalog();
+
     let start = Instant::now();
     let mut k = 0usize;
     loop {
@@ -151,7 +192,7 @@ pub fn run_source<P: Policy + ?Sized, S: RequestSource + ?Sized>(
             break;
         }
         rewards.clear();
-        policy.serve_batch(&reqbuf[..got], &mut rewards);
+        serve_growing(policy, &reqbuf[..got], &mut rewards, &mut n_live);
         debug_assert_eq!(rewards.len(), got, "serve_batch reward count");
         for &reward in &rewards[..got] {
             total += reward;

@@ -5,17 +5,21 @@
 //! including the streaming one-pass [`StreamingOpt`], the parallel
 //! policy × cache-size [`sweep`] runner, the request [`hotpath`]
 //! microbench suite behind `ogb-cache bench` / `BENCH_hotpath.json`,
-//! and the [`shardbench`] multi-core scaling suite behind
-//! `ogb-cache serve --smoke` / `BENCH_shard.json`.
+//! the [`shardbench`] multi-core scaling suite behind
+//! `ogb-cache serve --smoke` / `BENCH_shard.json`, and the raw-trace
+//! [`replay`] harness (open-catalog ingestion, DESIGN.md §10) behind
+//! `ogb-cache replay` / `BENCH_replay.json`.
 
 pub mod engine;
 pub mod hotpath;
 pub mod regret;
+pub mod replay;
 pub mod shardbench;
 pub mod sweep;
 
-pub use engine::{run, run_source, RunConfig, RunResult};
+pub use engine::{run, run_source, serve_growing, RunConfig, RunResult};
 pub use hotpath::{run_hotpath, HotpathConfig, HotpathResult, HotpathRow};
 pub use regret::{regret_series, regret_series_weighted, RegretPoint, StreamingOpt};
+pub use replay::{run_replay, ReplayConfig, ReplayMode, ReplayResult, ReplayRow};
 pub use shardbench::{run_shardbench, ServeMode, ShardBenchConfig, ShardBenchResult, ShardBenchRow};
 pub use sweep::{run_sweep, SweepCell, SweepConfig, SweepResult};

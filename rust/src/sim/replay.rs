@@ -1,0 +1,537 @@
+//! End-to-end raw-trace replay (DESIGN.md §10) — the harness behind
+//! `ogb-cache replay <file>`: open any raw trace (csv/tsv, OGBR, OGBT),
+//! remap its sparse keys to dense ids online, and drive every requested
+//! policy over it, reporting hit ratios, regret against the streaming
+//! hindsight OPT, and throughput into `BENCH_replay.json`.
+//!
+//! Two modes:
+//!
+//! * [`ReplayMode::Exact`] (default) — two passes.  Pass 1 streams the
+//!   raw trace once through the [`KeyRemapper`] + [`StreamingOpt`],
+//!   pinning the catalog N, horizon T, and hindsight OPT in O(distinct)
+//!   memory.  Pass 2 replays per policy under the *completed* mapping
+//!   with N known upfront.  Result: **bit-identical** to pre-densifying
+//!   the trace and running `ogb-cache simulate` on it (the first-seen
+//!   determinism contract makes the dense sequences equal) — the
+//!   differential the `replay-e2e` CI job asserts.
+//! * [`ReplayMode::Grow`] — single policy pass with a fresh remapper:
+//!   the catalog is discovered *as the trace streams*, and policies
+//!   grow online (`Policy::grow`, capacity doubling + eta re-tuning).
+//!   The n-agnostic baselines (LRU/LFU/FIFO/ARC/GDS) are bit-identical
+//!   to exact mode; the catalog-sized learners follow the documented
+//!   §10 growth semantics instead (their regret tracks the running
+//!   catalog size via the doubling trick).  One pass over the raw data
+//!   is still spent on the OPT/regret accounting.
+
+use std::path::{Path, PathBuf};
+use std::str::FromStr;
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::policies::{self, AnyPolicy, BuildOpts, Opt, Policy};
+use crate::sim::engine::{run_source, RunConfig};
+use crate::sim::regret::StreamingOpt;
+use crate::trace::file::OgbtWriter;
+use crate::trace::ingest::{open_raw, KeyRemapper, RemappedSource};
+use crate::trace::stream::RequestSource;
+use crate::util::csv::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplayMode {
+    /// two-pass: catalog known before policies run (bit-identical to a
+    /// pre-densified replay)
+    Exact,
+    /// single policy pass: catalog discovered online, policies grow
+    Grow,
+}
+
+impl ReplayMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ReplayMode::Exact => "exact",
+            ReplayMode::Grow => "grow",
+        }
+    }
+}
+
+impl FromStr for ReplayMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "exact" => Ok(ReplayMode::Exact),
+            "grow" => Ok(ReplayMode::Grow),
+            other => bail!("unknown replay mode `{other}` (exact | grow)"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ReplayConfig {
+    /// path or `kind:path=...` spec accepted by [`open_raw`]
+    pub input: String,
+    /// policy specs accepted by `policies::build`, plus `opt`
+    pub policies: Vec<String>,
+    /// cache size as % of the (discovered) catalog
+    pub cache_pct: f64,
+    /// absolute capacity override (0 = use `cache_pct`)
+    pub capacity: usize,
+    /// batch size B handed to batched policies
+    pub batch: usize,
+    pub seed: u64,
+    pub mode: ReplayMode,
+    /// cap on replayed requests (0 = whole trace)
+    pub max_requests: usize,
+    pub rebase_threshold: Option<f64>,
+    /// write the remapped dense trace here as `.ogbt` ("" = skip)
+    pub densify_out: String,
+    /// spill the remapper snapshot here ("" = skip)
+    pub snapshot_out: String,
+}
+
+impl Default for ReplayConfig {
+    fn default() -> Self {
+        Self {
+            input: String::new(),
+            policies: ["lru", "ogb"].map(String::from).to_vec(),
+            cache_pct: 5.0,
+            capacity: 0,
+            batch: 1,
+            seed: 42,
+            mode: ReplayMode::Exact,
+            max_requests: 0,
+            rebase_threshold: None,
+            densify_out: String::new(),
+            snapshot_out: String::new(),
+        }
+    }
+}
+
+/// One policy's replay outcome.
+#[derive(Debug, Clone)]
+pub struct ReplayRow {
+    pub policy: String,
+    pub mode: &'static str,
+    pub requests: usize,
+    pub total_reward: f64,
+    pub hit_ratio: f64,
+    pub opt_reward: f64,
+    pub regret: f64,
+    pub throughput_rps: f64,
+    pub elapsed_s: f64,
+    /// catalog growth events applied by the policy (0 in exact mode)
+    pub grow_events: u64,
+    /// request-path scratch re-allocations (DESIGN.md §7 contract:
+    /// stable outside warm-up and growth events)
+    pub scratch_grows: u64,
+}
+
+/// Whole-replay outcome.
+#[derive(Debug, Clone)]
+pub struct ReplayResult {
+    pub input: String,
+    pub source: String,
+    pub mode: ReplayMode,
+    /// distinct keys (== dense catalog size) discovered by pass 1
+    pub catalog: usize,
+    pub requests: usize,
+    /// remapper hash collisions survived (keys stayed distinct)
+    pub collisions: u64,
+    /// true when any record carried a non-unit weight
+    pub weighted: bool,
+    pub c: usize,
+    pub seed: u64,
+    pub rows: Vec<ReplayRow>,
+    pub wall_s: f64,
+}
+
+impl ReplayResult {
+    pub fn print(&self) {
+        println!(
+            "replay `{}`: T={} N={} (collisions {}) C={} mode={}{}",
+            self.source,
+            self.requests,
+            self.catalog,
+            self.collisions,
+            self.c,
+            self.mode.as_str(),
+            if self.weighted { " [weighted]" } else { "" },
+        );
+        println!(
+            "\n{:<20} {:>10} {:>12} {:>12} {:>8} {:>12}",
+            "policy", "hit_ratio", "regret/T", "req/s", "grows", "scratch"
+        );
+        for r in &self.rows {
+            println!(
+                "{:<20} {:>10.4} {:>12.6} {:>12.3e} {:>8} {:>12}",
+                r.policy,
+                r.hit_ratio,
+                r.regret / r.requests.max(1) as f64,
+                r.throughput_rps,
+                r.grow_events,
+                r.scratch_grows,
+            );
+        }
+    }
+
+    /// Machine-readable snapshot (`BENCH_replay.json`) — structure
+    /// asserted by the `replay-e2e` CI job.
+    pub fn write_bench_json<P: AsRef<Path>>(&self, path: P) -> Result<PathBuf> {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("policy", Json::Str(r.policy.clone())),
+                    ("mode", Json::Str(r.mode.into())),
+                    ("requests", Json::Num(r.requests as f64)),
+                    ("total_reward", Json::Num(r.total_reward)),
+                    ("hit_ratio", Json::Num(r.hit_ratio)),
+                    ("opt_reward", Json::Num(r.opt_reward)),
+                    ("regret", Json::Num(r.regret)),
+                    ("requests_per_sec", Json::Num(r.throughput_rps)),
+                    ("grow_events", Json::Num(r.grow_events as f64)),
+                    ("scratch_grows", Json::Num(r.scratch_grows as f64)),
+                ])
+            })
+            .collect();
+        let j = Json::obj(vec![
+            ("experiment", Json::Str("replay".into())),
+            ("input", Json::Str(self.input.clone())),
+            ("source", Json::Str(self.source.clone())),
+            ("mode", Json::Str(self.mode.as_str().into())),
+            ("catalog", Json::Num(self.catalog as f64)),
+            ("requests", Json::Num(self.requests as f64)),
+            ("collisions", Json::Num(self.collisions as f64)),
+            (
+                "objective",
+                Json::Str(if self.weighted { "weighted" } else { "unit" }.into()),
+            ),
+            ("c", Json::Num(self.c as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("rows", Json::Arr(rows)),
+        ]);
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("mkdir -p {}", dir.display()))?;
+            }
+        }
+        std::fs::write(&path, j.render() + "\n")
+            .with_context(|| format!("write {}", path.display()))?;
+        Ok(path)
+    }
+}
+
+/// Bail out if the remapped stream ended on a raw parse error — a
+/// silently truncated replay would report wrong hit ratios.
+fn check_stream(src: &RemappedSource) -> Result<()> {
+    if let Some(e) = src.error() {
+        bail!("raw trace ended on a parse error: {e}");
+    }
+    Ok(())
+}
+
+/// Run the replay (see module docs).
+pub fn run_replay(cfg: &ReplayConfig) -> Result<ReplayResult> {
+    ensure!(!cfg.policies.is_empty(), "replay needs at least one policy");
+    let wall0 = Instant::now();
+
+    // Pass 1: discover the catalog + hindsight OPT in one streaming scan
+    // (drained by hand rather than via `StreamingOpt::from_source` so a
+    // single non-unit weight flags the run as weighted — a float-sum
+    // comparison could cancel out, e.g. alternating 0.5 and 1.5).
+    let mut src = RemappedSource::new(open_raw(&cfg.input)?);
+    let source_name = src.name();
+    let mut opt = StreamingOpt::new();
+    let mut weighted = false;
+    let limit = if cfg.max_requests > 0 {
+        cfg.max_requests as u64
+    } else {
+        u64::MAX
+    };
+    while opt.requests() < limit {
+        match src.next_weighted() {
+            Some(r) => {
+                weighted |= r.weight != 1.0;
+                opt.record_weighted(r.item as u32, r.weight);
+            }
+            None => break,
+        }
+    }
+    check_stream(&src)?;
+    let remapper = src.into_remapper();
+    let catalog = remapper.len();
+    let t_total = opt.requests() as usize;
+    ensure!(t_total > 0, "raw trace `{}` has no records", cfg.input);
+    let c = if cfg.capacity > 0 {
+        cfg.capacity
+    } else {
+        // match `ogb-cache simulate` exactly (the bit-identity target)
+        ((catalog as f64 * cfg.cache_pct / 100.0) as usize).max(1)
+    };
+    ensure!(
+        c <= catalog,
+        "cache capacity {c} exceeds the discovered catalog {catalog}"
+    );
+
+    if !cfg.snapshot_out.is_empty() {
+        remapper.save_snapshot(&cfg.snapshot_out)?;
+        crate::log_info!("wrote remapper snapshot {}", cfg.snapshot_out);
+    }
+    if !cfg.densify_out.is_empty() {
+        let n = densify(&cfg.input, &remapper, &source_name, cfg, catalog)?;
+        ensure!(
+            n == t_total as u64,
+            "densify pass emitted {n} of {t_total} requests"
+        );
+        crate::log_info!("wrote densified trace {}", cfg.densify_out);
+    }
+
+    // Policy passes.
+    let mut rows = Vec::with_capacity(cfg.policies.len());
+    for name in &cfg.policies {
+        let mut src = match cfg.mode {
+            // completed mapping: catalog already final, no growth events
+            ReplayMode::Exact => {
+                RemappedSource::with_remapper(open_raw(&cfg.input)?, remapper.clone())
+            }
+            // fresh mapping: the catalog is re-discovered online
+            ReplayMode::Grow => RemappedSource::new(open_raw(&cfg.input)?),
+        };
+        let mut policy: AnyPolicy = if name == "opt" {
+            AnyPolicy::Opt(Opt::from_items(
+                opt.top_c_weighted(c).into_iter().map(u64::from),
+                c,
+            ))
+        } else {
+            let n0 = match cfg.mode {
+                ReplayMode::Exact => catalog,
+                // start small so growth genuinely runs; c must fit
+                ReplayMode::Grow => (2 * c).next_power_of_two().max(2),
+            };
+            let mut opts = BuildOpts::new(t_total, cfg.batch, cfg.seed);
+            opts.rebase_threshold = cfg.rebase_threshold;
+            policies::build(name, n0, c, &opts, None)
+                .with_context(|| format!("replay policy `{name}`"))?
+        };
+        let r = run_source(
+            &mut policy,
+            &mut src,
+            &RunConfig {
+                window: t_total.max(1),
+                occupancy_every: 0,
+                max_requests: cfg.max_requests,
+                batch: cfg.batch.max(RunConfig::default().batch),
+            },
+        );
+        check_stream(&src)?;
+        ensure!(
+            r.requests == t_total,
+            "policy pass replayed {} of {t_total} requests",
+            r.requests
+        );
+        let d = policy.diag();
+        let opt_reward = opt.opt_weighted_reward(c);
+        rows.push(ReplayRow {
+            policy: name.clone(),
+            mode: cfg.mode.as_str(),
+            requests: r.requests,
+            total_reward: r.total_reward,
+            hit_ratio: r.hit_ratio(),
+            opt_reward,
+            regret: opt_reward - r.total_reward,
+            throughput_rps: r.throughput_rps,
+            elapsed_s: r.elapsed_s,
+            grow_events: d.grows,
+            scratch_grows: d.scratch_grows,
+        });
+        crate::log_info!(
+            "replay {}/{}: {} hit={:.4} ({:.2e} req/s, {} grows)",
+            rows.len(),
+            cfg.policies.len(),
+            name,
+            rows.last().unwrap().hit_ratio,
+            rows.last().unwrap().throughput_rps,
+            d.grows
+        );
+    }
+
+    Ok(ReplayResult {
+        input: cfg.input.clone(),
+        source: source_name,
+        mode: cfg.mode,
+        catalog,
+        requests: t_total,
+        collisions: remapper.collisions(),
+        weighted,
+        c,
+        seed: cfg.seed,
+        rows,
+        wall_s: wall0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Re-stream the raw trace under the completed mapping and spill the
+/// dense id sequence as `.ogbt` — the "pre-densified with known n" twin
+/// the exact mode is differential-tested against.
+fn densify(
+    input: &str,
+    remapper: &KeyRemapper,
+    name: &str,
+    cfg: &ReplayConfig,
+    catalog: usize,
+) -> Result<u64> {
+    let mut src = RemappedSource::with_remapper(open_raw(input)?, remapper.clone());
+    let mut w = OgbtWriter::create(&cfg.densify_out, name, 0)?;
+    let limit = if cfg.max_requests > 0 {
+        cfg.max_requests
+    } else {
+        usize::MAX
+    };
+    let mut n = 0u64;
+    while (n as usize) < limit {
+        match src.next_request() {
+            Some(id) => {
+                w.push(id)?;
+                n += 1;
+            }
+            None => break,
+        }
+    }
+    check_stream(&src)?;
+    w.finish(catalog)?;
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::run;
+    use crate::trace::ingest::{RawBinaryWriter, RawKey};
+    use crate::trace::synth;
+    use crate::util::rng::mix64;
+
+    fn sparse_fixture(dir: &std::path::Path) -> (std::path::PathBuf, crate::trace::Trace) {
+        // a dense zipf trace relabeled through the bijective mix64 — the
+        // sparse-keyed shape real traces have
+        let t = synth::zipf(400, 20_000, 0.9, 5);
+        std::fs::create_dir_all(dir).unwrap();
+        let p = dir.join("sparse.ogbr");
+        let mut w = RawBinaryWriter::create(&p).unwrap();
+        for (k, &r) in t.requests.iter().enumerate() {
+            w.write(RawKey::U64(mix64(r as u64)), 1.0, k as u64).unwrap();
+        }
+        w.finish().unwrap();
+        (p, t)
+    }
+
+    /// Acceptance: exact-mode replay is bit-identical to densifying the
+    /// raw trace and running the dense harness, for every policy row.
+    #[test]
+    fn exact_mode_matches_densified_run() {
+        let dir = std::env::temp_dir().join("ogb_replay_exact_test");
+        let (p, _) = sparse_fixture(&dir);
+        let cfg = ReplayConfig {
+            input: p.to_string_lossy().into_owned(),
+            policies: ["lru", "ogb", "ogb{batch=8}", "ftpl", "opt"]
+                .map(String::from)
+                .to_vec(),
+            cache_pct: 5.0,
+            seed: 9,
+            densify_out: dir.join("dense.ogbt").to_string_lossy().into_owned(),
+            ..ReplayConfig::default()
+        };
+        let r = run_replay(&cfg).unwrap();
+        assert_eq!(r.requests, 20_000);
+        let dense = crate::trace::file::read_binary(dir.join("dense.ogbt")).unwrap();
+        assert_eq!(dense.catalog, r.catalog);
+        let c = ((dense.catalog as f64 * 5.0 / 100.0) as usize).max(1);
+        for row in &r.rows {
+            let mut opts = BuildOpts::new(dense.len(), 1, 9);
+            opts.rebase_threshold = None;
+            let mut p = policies::build(&row.policy, dense.catalog, c, &opts, Some(&dense))
+                .unwrap();
+            let dr = run(
+                &mut p,
+                &dense,
+                &RunConfig {
+                    window: dense.len(),
+                    occupancy_every: 0,
+                    max_requests: 0,
+                    ..RunConfig::default()
+                },
+            );
+            assert_eq!(
+                dr.total_reward, row.total_reward,
+                "{}: replay != densified run",
+                row.policy
+            );
+            assert_eq!(row.grow_events, 0, "{}: exact mode must not grow", row.policy);
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    /// Grow mode: the n-agnostic baselines are bit-identical to exact
+    /// mode; catalog-sized learners grow and stay in a sane reward band.
+    #[test]
+    fn grow_mode_discovers_catalog_online() {
+        let dir = std::env::temp_dir().join("ogb_replay_grow_test");
+        let (p, _) = sparse_fixture(&dir);
+        let base = ReplayConfig {
+            input: p.to_string_lossy().into_owned(),
+            policies: ["lru", "lfu", "arc", "ogb"].map(String::from).to_vec(),
+            cache_pct: 5.0,
+            seed: 9,
+            ..ReplayConfig::default()
+        };
+        let exact = run_replay(&base).unwrap();
+        let grow = run_replay(&ReplayConfig {
+            mode: ReplayMode::Grow,
+            ..base
+        })
+        .unwrap();
+        for (e, g) in exact.rows.iter().zip(&grow.rows) {
+            assert_eq!(e.policy, g.policy);
+            if g.policy != "ogb" {
+                assert_eq!(
+                    e.total_reward, g.total_reward,
+                    "{}: n-agnostic baseline must not notice growth",
+                    g.policy
+                );
+            } else {
+                assert!(g.grow_events > 0, "ogb must have grown");
+                assert!(
+                    g.total_reward > 0.5 * e.total_reward,
+                    "grown ogb reward {} collapsed vs exact {}",
+                    g.total_reward,
+                    e.total_reward
+                );
+            }
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn replay_rejects_bad_configs() {
+        assert!(run_replay(&ReplayConfig::default()).is_err()); // empty input
+        let dir = std::env::temp_dir().join("ogb_replay_cfg_test");
+        let (p, _) = sparse_fixture(&dir);
+        let r = run_replay(&ReplayConfig {
+            input: p.to_string_lossy().into_owned(),
+            policies: vec!["bogus".into()],
+            ..ReplayConfig::default()
+        });
+        assert!(r.is_err());
+        let r = run_replay(&ReplayConfig {
+            input: p.to_string_lossy().into_owned(),
+            capacity: 100_000, // larger than the catalog
+            ..ReplayConfig::default()
+        });
+        assert!(r.is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

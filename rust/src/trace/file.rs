@@ -8,7 +8,7 @@
 //! header) for interoperability with external trace tooling.
 
 use std::fs::File;
-use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::io::{BufRead, BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
@@ -17,6 +17,9 @@ use super::Trace;
 
 const MAGIC: &[u8; 4] = b"OGBT";
 const VERSION: u32 = 1;
+/// header byte offsets of the fields [`OgbtWriter::finish`] patches
+const CATALOG_OFFSET: u64 = 8;
+const LEN_OFFSET: u64 = 12;
 
 pub fn write_binary<P: AsRef<Path>>(trace: &Trace, path: P) -> Result<()> {
     let f = File::create(path.as_ref())
@@ -34,6 +37,87 @@ pub fn write_binary<P: AsRef<Path>>(trace: &Trace, path: P) -> Result<()> {
         w.write_all(&r.to_le_bytes())?;
     }
     w.flush()?;
+    Ok(())
+}
+
+/// Streaming OGBT writer for traces whose length (and catalog) are not
+/// known upfront — the densify path of `ogb-cache replay` (DESIGN.md
+/// §10) streams remapped ids straight to disk and patches the header's
+/// catalog/len fields on [`OgbtWriter::finish`].  A file abandoned
+/// before `finish` advertises 0 requests rather than reading as
+/// truncated garbage.
+pub struct OgbtWriter {
+    w: BufWriter<File>,
+    count: u64,
+    max_id: u32,
+    finished: bool,
+}
+
+impl OgbtWriter {
+    pub fn create<P: AsRef<Path>>(path: P, name: &str, seed: u64) -> Result<Self> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("mkdir -p {}", dir.display()))?;
+            }
+        }
+        let f = File::create(path).with_context(|| format!("create {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&0u32.to_le_bytes())?; // catalog, patched in finish()
+        w.write_all(&0u64.to_le_bytes())?; // len, patched in finish()
+        w.write_all(&seed.to_le_bytes())?;
+        let name = name.as_bytes();
+        ensure_name_len(name.len())?;
+        w.write_all(&(name.len() as u16).to_le_bytes())?;
+        w.write_all(name)?;
+        Ok(Self {
+            w,
+            count: 0,
+            max_id: 0,
+            finished: false,
+        })
+    }
+
+    pub fn push(&mut self, id: u32) -> Result<()> {
+        self.w.write_all(&id.to_le_bytes())?;
+        self.max_id = self.max_id.max(id);
+        self.count += 1;
+        Ok(())
+    }
+
+    /// Patch catalog and length into the header; returns the request
+    /// count.  `catalog` must cover every pushed id.
+    pub fn finish(mut self, catalog: usize) -> Result<u64> {
+        if self.count > 0 {
+            anyhow::ensure!(
+                (self.max_id as usize) < catalog && catalog <= u32::MAX as usize,
+                "catalog {catalog} does not cover max pushed id {}",
+                self.max_id
+            );
+        }
+        self.w.seek(SeekFrom::Start(CATALOG_OFFSET))?;
+        self.w.write_all(&(catalog as u32).to_le_bytes())?;
+        self.w.seek(SeekFrom::Start(LEN_OFFSET))?;
+        self.w.write_all(&self.count.to_le_bytes())?;
+        self.w.flush()?;
+        self.finished = true;
+        Ok(self.count)
+    }
+}
+
+impl Drop for OgbtWriter {
+    fn drop(&mut self) {
+        if !self.finished {
+            crate::log_warn!("OgbtWriter dropped without finish(): file advertises 0 requests");
+        }
+    }
+}
+
+fn ensure_name_len(len: usize) -> Result<()> {
+    anyhow::ensure!(len <= u16::MAX as usize, "trace name too long ({len} bytes)");
     Ok(())
 }
 
@@ -167,6 +251,29 @@ mod tests {
         assert_eq!(t.catalog, t2.catalog);
         assert_eq!(t.seed, t2.seed);
         assert_eq!(t.requests, t2.requests);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn streamed_writer_matches_materialized_writer() {
+        let t = synth::zipf(77, 3_000, 0.9, 11);
+        let dir = std::env::temp_dir().join("ogb_trace_writer_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.ogbt");
+        let mut w = OgbtWriter::create(&p, &t.name, t.seed).unwrap();
+        for &r in &t.requests {
+            w.push(r).unwrap();
+        }
+        assert_eq!(w.finish(t.catalog).unwrap(), t.len() as u64);
+        let t2 = read_binary(&p).unwrap();
+        assert_eq!(t.name, t2.name);
+        assert_eq!(t.catalog, t2.catalog);
+        assert_eq!(t.seed, t2.seed);
+        assert_eq!(t.requests, t2.requests);
+        // catalog must cover every pushed id
+        let mut w = OgbtWriter::create(dir.join("bad.ogbt"), "bad", 0).unwrap();
+        w.push(10).unwrap();
+        assert!(w.finish(10).is_err());
         std::fs::remove_dir_all(dir).ok();
     }
 

@@ -1,0 +1,273 @@
+//! `OGBR` — the length-prefixed binary raw-record format (DESIGN.md
+//! §10): the compact on-disk shape for sparse-keyed traces that are too
+//! large to keep re-parsing as text.
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! magic "OGBR" | u32 version=1 | u64 record_count
+//! record := u8 tag | key | f64 weight | u64 ts
+//!   tag 0: key = u64 (8 bytes)
+//!   tag 1: key = u32 byte length + bytes
+//! ```
+//!
+//! `record_count` is patched on [`RawBinaryWriter::finish`], so the
+//! writer streams without knowing the count upfront (a partially
+//! written file advertises 0 records and reads as empty rather than
+//! truncated-garbage).
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{RawKey, RawRecord, RawSource};
+
+const MAGIC: &[u8; 4] = b"OGBR";
+const VERSION: u32 = 1;
+/// byte offset of the u64 record_count in the header
+const COUNT_OFFSET: u64 = 8;
+/// sanity cap on byte-key length (a corrupt length prefix would
+/// otherwise ask for gigabytes)
+const MAX_KEY_BYTES: u32 = 1 << 20;
+
+/// Streaming writer for the OGBR format.
+pub struct RawBinaryWriter {
+    w: BufWriter<File>,
+    count: u64,
+    finished: bool,
+}
+
+impl RawBinaryWriter {
+    pub fn create<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("mkdir -p {}", dir.display()))?;
+            }
+        }
+        let f = File::create(path).with_context(|| format!("create {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&0u64.to_le_bytes())?; // count, patched in finish()
+        Ok(Self {
+            w,
+            count: 0,
+            finished: false,
+        })
+    }
+
+    pub fn write(&mut self, key: RawKey<'_>, weight: f64, ts: u64) -> Result<()> {
+        match key {
+            RawKey::U64(k) => {
+                self.w.write_all(&[0u8])?;
+                self.w.write_all(&k.to_le_bytes())?;
+            }
+            RawKey::Bytes(b) => {
+                if b.len() as u64 > MAX_KEY_BYTES as u64 {
+                    bail!("byte key of {} bytes exceeds the {MAX_KEY_BYTES} cap", b.len());
+                }
+                self.w.write_all(&[1u8])?;
+                self.w.write_all(&(b.len() as u32).to_le_bytes())?;
+                self.w.write_all(b)?;
+            }
+        }
+        self.w.write_all(&weight.to_le_bytes())?;
+        self.w.write_all(&ts.to_le_bytes())?;
+        self.count += 1;
+        Ok(())
+    }
+
+    /// Patch the record count into the header and flush.
+    pub fn finish(mut self) -> Result<u64> {
+        self.w.seek(SeekFrom::Start(COUNT_OFFSET))?;
+        self.w.write_all(&self.count.to_le_bytes())?;
+        self.w.flush()?;
+        self.finished = true;
+        Ok(self.count)
+    }
+}
+
+impl Drop for RawBinaryWriter {
+    fn drop(&mut self) {
+        if !self.finished {
+            crate::log_warn!(
+                "RawBinaryWriter dropped without finish(): file advertises 0 records"
+            );
+        }
+    }
+}
+
+/// Streaming [`RawSource`] over an OGBR file.
+pub struct RawBinarySource {
+    r: BufReader<File>,
+    name: String,
+    len: u64,
+    read: u64,
+}
+
+impl RawBinarySource {
+    pub fn open<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let path = path.as_ref();
+        let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let mut r = BufReader::with_capacity(1 << 20, f);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)
+            .with_context(|| format!("read OGBR header of {}", path.display()))?;
+        if &magic != MAGIC {
+            bail!("{}: not an OGBR raw trace", path.display());
+        }
+        let mut u32b = [0u8; 4];
+        r.read_exact(&mut u32b)?;
+        let version = u32::from_le_bytes(u32b);
+        if version != VERSION {
+            bail!("{}: unsupported OGBR version {version}", path.display());
+        }
+        let mut u64b = [0u8; 8];
+        r.read_exact(&mut u64b)?;
+        let len = u64::from_le_bytes(u64b);
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "raw-binary".into());
+        Ok(Self {
+            r,
+            name,
+            len,
+            read: 0,
+        })
+    }
+}
+
+impl RawSource for RawBinarySource {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn next_record(&mut self, rec: &mut RawRecord) -> Result<bool> {
+        if self.read >= self.len {
+            return Ok(false);
+        }
+        let at = self.read;
+        let ctx = |what: &str| format!("OGBR record {at}: truncated {what}");
+        let mut tag = [0u8; 1];
+        self.r.read_exact(&mut tag).with_context(|| ctx("tag"))?;
+        let mut u64b = [0u8; 8];
+        match tag[0] {
+            0 => {
+                self.r.read_exact(&mut u64b).with_context(|| ctx("u64 key"))?;
+                rec.set_u64(u64::from_le_bytes(u64b));
+            }
+            1 => {
+                let mut u32b = [0u8; 4];
+                self.r
+                    .read_exact(&mut u32b)
+                    .with_context(|| ctx("key length"))?;
+                let klen = u32::from_le_bytes(u32b);
+                if klen > MAX_KEY_BYTES {
+                    bail!("OGBR record {at}: byte key of {klen} bytes exceeds the cap");
+                }
+                // read into the record's reused buffer, no temporary
+                rec.set_bytes(&[]);
+                rec.key_buf.resize(klen as usize, 0);
+                self.r
+                    .read_exact(&mut rec.key_buf)
+                    .with_context(|| ctx("key bytes"))?;
+            }
+            t => bail!("OGBR record {at}: unknown key tag {t}"),
+        }
+        self.r.read_exact(&mut u64b).with_context(|| ctx("weight"))?;
+        rec.weight = f64::from_le_bytes(u64b);
+        if !(rec.weight >= 0.0 && rec.weight.is_finite()) {
+            bail!("OGBR record {at}: weight {} must be finite and >= 0", rec.weight);
+        }
+        self.r.read_exact(&mut u64b).with_context(|| ctx("ts"))?;
+        rec.ts = u64::from_le_bytes(u64b);
+        self.read += 1;
+        Ok(true)
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.len as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("ogb_ingest_bin_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_mixed_keys() {
+        let p = tmp("mix.ogbr");
+        let mut w = RawBinaryWriter::create(&p).unwrap();
+        w.write(RawKey::U64(42), 1.0, 0).unwrap();
+        w.write(RawKey::Bytes(b"/object/a"), 2.5, 17).unwrap();
+        w.write(RawKey::U64(u64::MAX), 0.0, u64::MAX).unwrap();
+        assert_eq!(w.finish().unwrap(), 3);
+
+        let mut r = RawBinarySource::open(&p).unwrap();
+        assert_eq!(r.len_hint(), Some(3));
+        let mut rec = RawRecord::new();
+        assert!(r.next_record(&mut rec).unwrap());
+        assert_eq!(rec.key(), RawKey::U64(42));
+        assert_eq!((rec.weight, rec.ts), (1.0, 0));
+        assert!(r.next_record(&mut rec).unwrap());
+        assert_eq!(rec.key(), RawKey::Bytes(b"/object/a"));
+        assert_eq!((rec.weight, rec.ts), (2.5, 17));
+        assert!(r.next_record(&mut rec).unwrap());
+        assert_eq!(rec.key(), RawKey::U64(u64::MAX));
+        assert!(!r.next_record(&mut rec).unwrap());
+        assert!(!r.next_record(&mut rec).unwrap(), "stays exhausted");
+    }
+
+    #[test]
+    fn truncated_and_corrupt_files_error() {
+        let p = tmp("trunc.ogbr");
+        let mut w = RawBinaryWriter::create(&p).unwrap();
+        for i in 0..10u64 {
+            w.write(RawKey::U64(i), 1.0, i).unwrap();
+        }
+        w.finish().unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 4]).unwrap();
+        let mut r = RawBinarySource::open(&p).unwrap();
+        let mut rec = RawRecord::new();
+        let mut err = None;
+        for _ in 0..10 {
+            match r.next_record(&mut rec) {
+                Ok(true) => {}
+                Ok(false) => panic!("must error, not end quietly"),
+                Err(e) => {
+                    err = Some(e.to_string());
+                    break;
+                }
+            }
+        }
+        assert!(err.unwrap().contains("truncated"));
+
+        let q = tmp("garbage.ogbr");
+        std::fs::write(&q, b"nope").unwrap();
+        assert!(RawBinarySource::open(&q).is_err());
+    }
+
+    #[test]
+    fn bad_weight_rejected() {
+        let p = tmp("badw.ogbr");
+        let mut w = RawBinaryWriter::create(&p).unwrap();
+        w.write(RawKey::U64(1), f64::NAN, 0).ok();
+        // writer does not validate (caller's data); reader must
+        w.finish().unwrap();
+        let mut r = RawBinarySource::open(&p).unwrap();
+        let mut rec = RawRecord::new();
+        assert!(r.next_record(&mut rec).is_err());
+    }
+}

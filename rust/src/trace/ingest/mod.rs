@@ -1,0 +1,375 @@
+//! Open-catalog trace ingestion (DESIGN.md §10).
+//!
+//! Every harness below this layer runs on a *dense* id space
+//! `0..catalog`.  Real-world traces are nothing like that: keys are
+//! sparse u64s (block addresses, content hashes) or strings (URLs,
+//! object names), the catalog is not known in advance, and the files
+//! come in ad-hoc shapes (csv/tsv dumps, binary logs).  This module is
+//! the boundary that turns any of those into the dense streaming world:
+//!
+//! * [`RawRecord`] / [`RawKey`] — one ingested request: a u64-or-bytes
+//!   key, a reward weight, and a timestamp.  Records are read through a
+//!   reused buffer ([`RawSource::next_record`]) so the parse loop does
+//!   not allocate per request;
+//! * [`text::DelimitedTextSource`] — csv/tsv/space-delimited text with a
+//!   column map (key/weight/ts columns, header skip, `#` comments) —
+//!   covers the common public-trace shapes;
+//! * [`binary`] — `OGBR`, a length-prefixed binary record format
+//!   (tagged u64/bytes key, f64 weight, u64 ts) with a streaming writer,
+//!   for traces too large to re-parse as text;
+//! * [`OgbtRawSource`] — adapter over the existing dense `.ogbt` format,
+//!   so one code path replays everything;
+//! * [`open_raw`] — the one entry point: a bare path (dispatched on
+//!   extension, falling back to a 4-byte magic sniff) or an explicit
+//!   `kind:path=...,key-col=...` spec;
+//! * [`remap::KeyRemapper`] — the deterministic online key→dense-id map
+//!   (first-seen assignment, collision-safe, spillable snapshot) and
+//!   [`remap::RemappedSource`], which turns any [`RawSource`] into a
+//!   [`RequestSource`](crate::trace::stream::RequestSource) whose
+//!   `catalog()` is the *live* number of distinct keys seen so far —
+//!   the signal the growth layer (DESIGN.md §10) keys off.
+
+pub mod binary;
+pub mod remap;
+pub mod text;
+
+use std::fs::File;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub use binary::{RawBinarySource, RawBinaryWriter};
+pub use remap::{KeyRemapper, RemappedSource};
+pub use text::{DelimitedTextSource, TextFormat};
+
+use crate::trace::stream::{FileSource, RequestSource};
+
+/// A raw trace key: either a 64-bit integer (block address, numeric id)
+/// or an opaque byte string (URL, object name).  Numeric-looking text
+/// keys are canonicalized to `U64` by the text parser (so `"42"` and a
+/// binary key `42` map to the same item).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RawKey<'a> {
+    U64(u64),
+    Bytes(&'a [u8]),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum KeyKind {
+    U64,
+    Bytes,
+}
+
+/// One ingested request record.  The key lives in a reused internal
+/// buffer: [`RawSource::next_record`] overwrites it in place, so a
+/// million-record parse performs O(1) allocations once the buffer has
+/// sized itself.
+#[derive(Debug, Clone)]
+pub struct RawRecord {
+    kind: KeyKind,
+    key_num: u64,
+    key_buf: Vec<u8>,
+    /// reward weight of this request (1.0 when the format has none)
+    pub weight: f64,
+    /// timestamp (the record index when the format has none)
+    pub ts: u64,
+}
+
+impl Default for RawRecord {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RawRecord {
+    pub fn new() -> Self {
+        Self {
+            kind: KeyKind::U64,
+            key_num: 0,
+            key_buf: Vec::new(),
+            weight: 1.0,
+            ts: 0,
+        }
+    }
+
+    /// Borrow the record's key.
+    #[inline]
+    pub fn key(&self) -> RawKey<'_> {
+        match self.kind {
+            KeyKind::U64 => RawKey::U64(self.key_num),
+            KeyKind::Bytes => RawKey::Bytes(&self.key_buf),
+        }
+    }
+
+    #[inline]
+    pub fn set_u64(&mut self, key: u64) {
+        self.kind = KeyKind::U64;
+        self.key_num = key;
+    }
+
+    /// Copy `key` into the reused byte buffer.
+    #[inline]
+    pub fn set_bytes(&mut self, key: &[u8]) {
+        self.kind = KeyKind::Bytes;
+        self.key_buf.clear();
+        self.key_buf.extend_from_slice(key);
+    }
+}
+
+/// A pull-based stream of [`RawRecord`]s — the raw-side counterpart of
+/// [`RequestSource`].  Unlike the dense trait, parsing can fail
+/// (malformed line, truncated record): errors surface through `Result`
+/// instead of silently ending the stream.
+pub trait RawSource {
+    /// Human-readable source name (usually the file stem).
+    fn name(&self) -> String;
+
+    /// Fill `rec` with the next record.  `Ok(false)` = end of stream.
+    fn next_record(&mut self, rec: &mut RawRecord) -> Result<bool>;
+
+    /// Total records this source will emit, when the format knows it.
+    fn len_hint(&self) -> Option<usize> {
+        None
+    }
+}
+
+/// Adapter replaying a dense `.ogbt` trace as a [`RawSource`]: dense ids
+/// become `RawKey::U64` keys, weight 1, ts = request index.  This is
+/// what makes `ogb-cache replay` accept the repo's native format next
+/// to the raw ones.
+pub struct OgbtRawSource {
+    inner: FileSource,
+    idx: u64,
+}
+
+impl OgbtRawSource {
+    pub fn open<P: AsRef<Path>>(path: P) -> Result<Self> {
+        Ok(Self {
+            inner: FileSource::open(path)?,
+            idx: 0,
+        })
+    }
+}
+
+impl RawSource for OgbtRawSource {
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn next_record(&mut self, rec: &mut RawRecord) -> Result<bool> {
+        match self.inner.next_request() {
+            Some(id) => {
+                rec.set_u64(id as u64);
+                rec.weight = 1.0;
+                rec.ts = self.idx;
+                self.idx += 1;
+                Ok(true)
+            }
+            None => {
+                if let Some(e) = self.inner.error() {
+                    bail!("corrupt OGBT stream: {e}");
+                }
+                Ok(false)
+            }
+        }
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        self.inner.horizon()
+    }
+}
+
+/// Open a raw trace from a bare path or an explicit spec — the single
+/// entry point of the ingest layer.
+///
+/// * bare path: dispatched on extension (`.csv` / `.tsv` / `.txt` /
+///   `.ogbr` / `.ogbt`); unknown extensions fall back to sniffing the
+///   first 4 bytes for the `OGBT`/`OGBR` magics, then to
+///   comma-delimited text;
+/// * spec: `kind:path=<p>[,key=value...]` with kind ∈ `csv` `tsv`
+///   `ogbr` `ogbt`.  Text kinds accept `key-col` (default 0),
+///   `weight-col`, `ts-col`, `skip-header=1`, and `delim` (a single
+///   character or one of `comma` `tab` `space` `semicolon`).  A spec
+///   whose remainder has no `=` is treated as a bare path for that
+///   kind: `csv:/data/trace.log`.
+pub fn open_raw(spec_or_path: &str) -> Result<Box<dyn RawSource>> {
+    let s = spec_or_path.trim();
+    if s.is_empty() {
+        bail!("empty raw trace spec");
+    }
+    if let Some((kind, rest)) = s.split_once(':') {
+        match kind {
+            "csv" | "tsv" => return open_text_spec(kind, rest),
+            "ogbr" => return Ok(Box::new(RawBinarySource::open(spec_path(rest)?)?)),
+            "ogbt" => return Ok(Box::new(OgbtRawSource::open(spec_path(rest)?)?)),
+            _ => {} // fall through: paths may contain ':'
+        }
+    }
+    // bare path: extension, then magic sniff
+    let path = Path::new(s);
+    let ext = path
+        .extension()
+        .map(|e| e.to_string_lossy().to_ascii_lowercase())
+        .unwrap_or_default();
+    match ext.as_str() {
+        "csv" | "txt" => Ok(Box::new(DelimitedTextSource::open(
+            path,
+            TextFormat::csv(),
+        )?)),
+        "tsv" => Ok(Box::new(DelimitedTextSource::open(
+            path,
+            TextFormat::tsv(),
+        )?)),
+        "ogbr" => Ok(Box::new(RawBinarySource::open(path)?)),
+        "ogbt" => Ok(Box::new(OgbtRawSource::open(path)?)),
+        _ => {
+            let mut magic = [0u8; 4];
+            let n = File::open(path)
+                .with_context(|| format!("open {}", path.display()))?
+                .read(&mut magic)
+                .unwrap_or(0);
+            let head = &magic[..n.min(4)];
+            if head == &b"OGBT"[..] {
+                Ok(Box::new(OgbtRawSource::open(path)?))
+            } else if head == &b"OGBR"[..] {
+                Ok(Box::new(RawBinarySource::open(path)?))
+            } else {
+                Ok(Box::new(DelimitedTextSource::open(
+                    path,
+                    TextFormat::csv(),
+                )?))
+            }
+        }
+    }
+}
+
+/// A spec remainder used as a bare `path=` (or a literal path).
+fn spec_path(rest: &str) -> Result<&str> {
+    let rest = rest.trim();
+    let p = match rest.strip_prefix("path=") {
+        Some(p) => p,
+        None if !rest.contains('=') => rest,
+        None => bail!("raw spec: expected `path=...`, got `{rest}`"),
+    };
+    if p.is_empty() {
+        bail!("raw spec: empty path");
+    }
+    Ok(p)
+}
+
+fn open_text_spec(kind: &str, rest: &str) -> Result<Box<dyn RawSource>> {
+    let mut fmt = if kind == "tsv" {
+        TextFormat::tsv()
+    } else {
+        TextFormat::csv()
+    };
+    let mut path: Option<&str> = None;
+    if !rest.contains('=') {
+        path = Some(rest.trim());
+    } else {
+        for kv in rest.split(',') {
+            let kv = kv.trim();
+            if kv.is_empty() {
+                continue;
+            }
+            let Some((k, v)) = kv.split_once('=') else {
+                bail!("{kind} spec: expected key=value, got `{kv}`");
+            };
+            let (k, v) = (k.trim(), v.trim());
+            match k {
+                "path" => path = Some(v),
+                "key-col" => fmt.key_col = v.parse().context("bad key-col")?,
+                "weight-col" => fmt.weight_col = Some(v.parse().context("bad weight-col")?),
+                "ts-col" => fmt.ts_col = Some(v.parse().context("bad ts-col")?),
+                "skip-header" => fmt.skip_header = v == "1" || v.eq_ignore_ascii_case("true"),
+                "delim" => fmt.delim = parse_delim(v)?,
+                other => bail!(
+                    "{kind} spec: unknown parameter `{other}` (allowed: path key-col \
+                     weight-col ts-col skip-header delim)"
+                ),
+            }
+        }
+    }
+    let Some(path) = path else {
+        bail!("{kind} spec: missing required `path=`");
+    };
+    if path.is_empty() {
+        bail!("{kind} spec: empty path");
+    }
+    Ok(Box::new(DelimitedTextSource::open(path, fmt)?))
+}
+
+fn parse_delim(v: &str) -> Result<u8> {
+    Ok(match v {
+        "comma" => b',',
+        "tab" => b'\t',
+        "space" => b' ',
+        "semicolon" => b';',
+        s if s.len() == 1 && s.is_ascii() => s.as_bytes()[0],
+        other => bail!("bad delim `{other}` (single ASCII char or comma/tab/space/semicolon)"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::synth;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("ogb_ingest_mod_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn ogbt_adapter_replays_dense_ids() {
+        let t = synth::zipf(50, 2_000, 0.9, 3);
+        let p = tmp("adapter.ogbt");
+        crate::trace::file::write_binary(&t, &p).unwrap();
+        let mut src = OgbtRawSource::open(&p).unwrap();
+        assert_eq!(src.len_hint(), Some(2_000));
+        let mut rec = RawRecord::new();
+        let mut got = Vec::new();
+        while src.next_record(&mut rec).unwrap() {
+            match rec.key() {
+                RawKey::U64(k) => got.push(k as u32),
+                RawKey::Bytes(_) => panic!("dense ids must be u64 keys"),
+            }
+            assert_eq!(rec.weight, 1.0);
+        }
+        assert_eq!(got, t.requests);
+    }
+
+    #[test]
+    fn open_raw_dispatches_on_extension_and_magic() {
+        let t = synth::zipf(20, 100, 0.9, 1);
+        let p = tmp("dispatch.ogbt");
+        crate::trace::file::write_binary(&t, &p).unwrap();
+        let mut rec = RawRecord::new();
+        // extension
+        assert!(open_raw(p.to_str().unwrap())
+            .unwrap()
+            .next_record(&mut rec)
+            .unwrap());
+        // magic sniff: same file under an unknown extension
+        let q = tmp("dispatch.bin");
+        std::fs::copy(&p, &q).unwrap();
+        assert!(open_raw(q.to_str().unwrap())
+            .unwrap()
+            .next_record(&mut rec)
+            .unwrap());
+        // explicit spec
+        let spec = format!("ogbt:path={}", p.display());
+        assert!(open_raw(&spec).unwrap().next_record(&mut rec).unwrap());
+    }
+
+    #[test]
+    fn open_raw_rejects_garbage() {
+        assert!(open_raw("").is_err());
+        assert!(open_raw("csv:path=").is_err());
+        assert!(open_raw("csv:bogus=1").is_err());
+        assert!(open_raw("/definitely/not/a/file.ogbt").is_err());
+        assert!(parse_delim("xx").is_err());
+    }
+}

@@ -1,0 +1,412 @@
+//! Online key remapping (DESIGN.md §10): [`KeyRemapper`] turns sparse
+//! raw keys into the dense `0..n` id space every policy and harness
+//! below the ingest layer expects, *while the trace streams past*.
+//!
+//! Determinism contract: ids are assigned **first-seen** — the k-th
+//! distinct key of the stream gets id `k-1`, independent of hashing,
+//! interleaved lookups, or snapshot/restore cycles.  Replaying the same
+//! raw stream through a fresh remapper therefore reproduces the exact
+//! same dense trace, which is what makes `ogb-cache replay`'s two-pass
+//! exact mode bit-identical to a pre-densified run.
+//!
+//! Collision safety: the index maps `hash(key) → [dense ids]` buckets
+//! and every probe compares the stored *full* key, so two keys that
+//! collide under the 64-bit hash still get distinct ids (property-
+//! tested with an artificially truncated hash via
+//! [`KeyRemapper::with_hash_mask`]).
+//!
+//! Snapshots: [`KeyRemapper::save_snapshot`] spills the id→key table to
+//! a compact binary file (`OGBM`); [`KeyRemapper::load_snapshot`]
+//! rebuilds the full index from it, and assignment continues
+//! deterministically from the restored catalog size — the handoff point
+//! for resuming a long ingest or sharing one mapping across runs.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{RawKey, RawRecord, RawSource};
+use crate::policies::Request;
+use crate::trace::stream::RequestSource;
+use crate::util::fxhash::hash2;
+use crate::util::FxHashMap;
+
+const SNAP_MAGIC: &[u8; 4] = b"OGBM";
+const SNAP_VERSION: u32 = 1;
+
+/// Owned copy of a raw key (the id → key direction of the mapping).
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum StoredKey {
+    U64(u64),
+    Bytes(Box<[u8]>),
+}
+
+impl StoredKey {
+    fn of(key: RawKey<'_>) -> Self {
+        match key {
+            RawKey::U64(k) => StoredKey::U64(k),
+            RawKey::Bytes(b) => StoredKey::Bytes(b.into()),
+        }
+    }
+
+    fn as_raw(&self) -> RawKey<'_> {
+        match self {
+            StoredKey::U64(k) => RawKey::U64(*k),
+            StoredKey::Bytes(b) => RawKey::Bytes(b),
+        }
+    }
+}
+
+/// Deterministic online raw-key → dense-id map (see module docs).
+#[derive(Debug, Clone)]
+pub struct KeyRemapper {
+    /// hash(key) & mask → dense ids sharing that hash (collision chain)
+    buckets: FxHashMap<u64, Vec<u32>>,
+    /// dense id → full key (first-seen order; `keys.len()` is the catalog)
+    keys: Vec<StoredKey>,
+    /// test knob: truncating the hash forces collisions (default `!0`)
+    hash_mask: u64,
+    collisions: u64,
+}
+
+impl KeyRemapper {
+    pub fn new() -> Self {
+        Self {
+            buckets: FxHashMap::default(),
+            keys: Vec::new(),
+            hash_mask: !0,
+            collisions: 0,
+        }
+    }
+
+    /// Collision-injection constructor: truncate every hash to `mask`
+    /// bits' worth of values.  `mask = 0` puts every key in one bucket —
+    /// the pure chain-scan worst case the property tests exercise.
+    pub fn with_hash_mask(mask: u64) -> Self {
+        Self {
+            hash_mask: mask,
+            ..Self::new()
+        }
+    }
+
+    fn hash(&self, key: RawKey<'_>) -> u64 {
+        let h = match key {
+            RawKey::U64(k) => hash2(0x4F47_424D, k), // "OGBM"
+            RawKey::Bytes(b) => {
+                use std::hash::Hasher;
+                let mut h = crate::util::fxhash::FxHasher::default();
+                h.write(b);
+                // distinct domain from u64 keys
+                hash2(0x4F47_424D ^ 0xB17E, h.finish())
+            }
+        };
+        h & self.hash_mask
+    }
+
+    fn key_eq(&self, id: u32, key: RawKey<'_>) -> bool {
+        self.keys[id as usize].as_raw() == key
+    }
+
+    /// Map `key` to its dense id, assigning the next id on first sight.
+    pub fn map_key(&mut self, key: RawKey<'_>) -> u32 {
+        let h = self.hash(key);
+        if let Some(ids) = self.buckets.get(&h) {
+            for &id in ids {
+                if self.key_eq(id, key) {
+                    return id;
+                }
+            }
+        }
+        assert!(
+            self.keys.len() < u32::MAX as usize,
+            "catalog overflow: more than 2^32 - 1 distinct keys"
+        );
+        let id = self.keys.len() as u32;
+        self.keys.push(StoredKey::of(key));
+        let bucket = self.buckets.entry(h).or_default();
+        if !bucket.is_empty() {
+            self.collisions += 1;
+        }
+        bucket.push(id);
+        id
+    }
+
+    /// Look a key up without assigning.
+    pub fn get(&self, key: RawKey<'_>) -> Option<u32> {
+        let ids = self.buckets.get(&self.hash(key))?;
+        ids.iter().copied().find(|&id| self.key_eq(id, key))
+    }
+
+    /// Live catalog size: number of distinct keys seen (== next id).
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    /// The raw key assigned to `id` (the inverse direction).
+    pub fn key_of(&self, id: u32) -> Option<RawKey<'_>> {
+        self.keys.get(id as usize).map(|k| k.as_raw())
+    }
+
+    /// Hash collisions survived so far (distinct keys sharing a bucket).
+    pub fn collisions(&self) -> u64 {
+        self.collisions
+    }
+
+    /// Spill the mapping to `path` (`OGBM` format: id→key table in id
+    /// order; the hash index is rebuilt on load).
+    pub fn save_snapshot<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("mkdir -p {}", dir.display()))?;
+            }
+        }
+        let f = File::create(path).with_context(|| format!("create {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        w.write_all(SNAP_MAGIC)?;
+        w.write_all(&SNAP_VERSION.to_le_bytes())?;
+        w.write_all(&self.hash_mask.to_le_bytes())?;
+        w.write_all(&(self.keys.len() as u64).to_le_bytes())?;
+        for k in &self.keys {
+            match k {
+                StoredKey::U64(v) => {
+                    w.write_all(&[0u8])?;
+                    w.write_all(&v.to_le_bytes())?;
+                }
+                StoredKey::Bytes(b) => {
+                    w.write_all(&[1u8])?;
+                    w.write_all(&(b.len() as u32).to_le_bytes())?;
+                    w.write_all(b)?;
+                }
+            }
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Restore a snapshot written by [`KeyRemapper::save_snapshot`].
+    pub fn load_snapshot<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let path = path.as_ref();
+        let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let mut r = BufReader::new(f);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != SNAP_MAGIC {
+            bail!("{}: not a remapper snapshot", path.display());
+        }
+        let mut u32b = [0u8; 4];
+        r.read_exact(&mut u32b)?;
+        let version = u32::from_le_bytes(u32b);
+        if version != SNAP_VERSION {
+            bail!("{}: unsupported snapshot version {version}", path.display());
+        }
+        let mut u64b = [0u8; 8];
+        r.read_exact(&mut u64b)?;
+        let hash_mask = u64::from_le_bytes(u64b);
+        r.read_exact(&mut u64b)?;
+        let count = u64::from_le_bytes(u64b) as usize;
+        let mut s = Self {
+            hash_mask,
+            ..Self::new()
+        };
+        let mut buf = Vec::new();
+        for i in 0..count {
+            let mut tag = [0u8; 1];
+            r.read_exact(&mut tag)
+                .with_context(|| format!("snapshot entry {i}: truncated"))?;
+            let id = match tag[0] {
+                0 => {
+                    r.read_exact(&mut u64b)?;
+                    s.map_key(RawKey::U64(u64::from_le_bytes(u64b)))
+                }
+                1 => {
+                    r.read_exact(&mut u32b)?;
+                    let klen = u32::from_le_bytes(u32b) as usize;
+                    buf.resize(klen, 0);
+                    r.read_exact(&mut buf)?;
+                    s.map_key(RawKey::Bytes(&buf))
+                }
+                t => bail!("snapshot entry {i}: unknown key tag {t}"),
+            };
+            if id as usize != i {
+                bail!("snapshot entry {i}: duplicate key (mapped to id {id})");
+            }
+        }
+        Ok(s)
+    }
+}
+
+/// [`RequestSource`] adapter: any [`RawSource`] remapped on the fly.
+///
+/// `catalog()` is **live** — it reports the number of distinct keys
+/// seen so far and grows as the stream reveals new ones; the growth
+/// layer (`sim::run_source`, DESIGN.md §10) watches exactly this.
+/// Weights flow through from the raw records; parse errors end the
+/// stream with a WARN (the dense trait has no error channel) and are
+/// kept readable via [`RemappedSource::error`].
+pub struct RemappedSource {
+    raw: Box<dyn RawSource>,
+    remapper: KeyRemapper,
+    rec: RawRecord,
+    name: String,
+    error: Option<String>,
+}
+
+impl RemappedSource {
+    /// Remap with a fresh (empty) mapping.
+    pub fn new(raw: Box<dyn RawSource>) -> Self {
+        Self::with_remapper(raw, KeyRemapper::new())
+    }
+
+    /// Remap with an existing mapping (e.g. the completed pass-1 map of
+    /// `ogb-cache replay`, under which `catalog()` is already final and
+    /// no growth events fire).
+    pub fn with_remapper(raw: Box<dyn RawSource>, remapper: KeyRemapper) -> Self {
+        let name = raw.name();
+        Self {
+            raw,
+            remapper,
+            rec: RawRecord::new(),
+            name,
+            error: None,
+        }
+    }
+
+    pub fn remapper(&self) -> &KeyRemapper {
+        &self.remapper
+    }
+
+    /// Hand the mapping back (e.g. to snapshot it after a pass).
+    pub fn into_remapper(self) -> KeyRemapper {
+        self.remapper
+    }
+
+    /// First raw parse error, if the stream ended early on one.
+    pub fn error(&self) -> Option<&str> {
+        self.error.as_deref()
+    }
+}
+
+impl RequestSource for RemappedSource {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    /// Live catalog: distinct keys seen so far.
+    fn catalog(&self) -> usize {
+        self.remapper.len()
+    }
+
+    fn horizon(&self) -> Option<usize> {
+        self.raw.len_hint()
+    }
+
+    fn next_request(&mut self) -> Option<u32> {
+        self.next_weighted().map(|r| r.item as u32)
+    }
+
+    fn next_weighted(&mut self) -> Option<Request> {
+        if self.error.is_some() {
+            return None;
+        }
+        match self.raw.next_record(&mut self.rec) {
+            Ok(true) => {
+                let id = self.remapper.map_key(self.rec.key());
+                Some(Request::weighted(id as u64, self.rec.weight))
+            }
+            Ok(false) => None,
+            Err(e) => {
+                let msg = format!("{e:#}");
+                crate::log_warn!("RemappedSource `{}`: {msg}", self.name);
+                self.error = Some(msg);
+                None
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn keyset() -> Vec<StoredKey> {
+        let mut v: Vec<StoredKey> = (0..200u64)
+            .map(|i| StoredKey::U64(i.wrapping_mul(0x9E37_79B9_7F4A_7C15)))
+            .collect();
+        for i in 0..100u64 {
+            v.push(StoredKey::Bytes(
+                format!("/obj/{}", i * 31).into_bytes().into(),
+            ));
+        }
+        v
+    }
+
+    #[test]
+    fn first_seen_assignment_is_stable() {
+        let keys = keyset();
+        let mut m = KeyRemapper::new();
+        let ids: Vec<u32> = keys.iter().map(|k| m.map_key(k.as_raw())).collect();
+        assert_eq!(ids, (0..keys.len() as u32).collect::<Vec<_>>());
+        // re-mapping and lookups return the same ids, in any order
+        for (i, k) in keys.iter().enumerate().rev() {
+            assert_eq!(m.map_key(k.as_raw()), i as u32);
+            assert_eq!(m.get(k.as_raw()), Some(i as u32));
+        }
+        assert_eq!(m.len(), keys.len());
+    }
+
+    #[test]
+    fn collisions_keep_keys_distinct() {
+        // every key hashes into one of 4 buckets: chains do the work
+        let keys = keyset();
+        let mut m = KeyRemapper::with_hash_mask(0b11);
+        for (i, k) in keys.iter().enumerate() {
+            assert_eq!(m.map_key(k.as_raw()), i as u32, "id under collisions");
+        }
+        assert!(m.collisions() >= keys.len() as u64 - 4);
+        for (i, k) in keys.iter().enumerate() {
+            assert_eq!(m.get(k.as_raw()), Some(i as u32));
+            assert_eq!(m.key_of(i as u32), Some(k.as_raw()));
+        }
+        assert_eq!(m.get(RawKey::Bytes(b"missing")), None);
+    }
+
+    #[test]
+    fn u64_and_bytes_domains_are_disjoint() {
+        let mut m = KeyRemapper::new();
+        let a = m.map_key(RawKey::U64(7));
+        let b = m.map_key(RawKey::Bytes(&7u64.to_le_bytes()));
+        assert_ne!(a, b, "a u64 key and its byte image are different keys");
+    }
+
+    #[test]
+    fn snapshot_roundtrip_resumes_assignment() {
+        let keys = keyset();
+        let mut m = KeyRemapper::with_hash_mask(0xFF);
+        for k in &keys[..150] {
+            m.map_key(k.as_raw());
+        }
+        let dir = std::env::temp_dir().join("ogb_remap_snap_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.ogbm");
+        m.save_snapshot(&p).unwrap();
+        let mut restored = KeyRemapper::load_snapshot(&p).unwrap();
+        assert_eq!(restored.len(), 150);
+        assert_eq!(restored.collisions(), m.collisions());
+        // continue both: identical assignments
+        for k in &keys[150..] {
+            assert_eq!(m.map_key(k.as_raw()), restored.map_key(k.as_raw()));
+        }
+        for (i, k) in keys.iter().enumerate() {
+            assert_eq!(restored.get(k.as_raw()), Some(i as u32));
+        }
+        assert!(KeyRemapper::load_snapshot(dir.join("missing.ogbm")).is_err());
+    }
+}

@@ -1,0 +1,294 @@
+//! Delimited-text raw traces (DESIGN.md §10): one record per line, a
+//! configurable single-character delimiter, and a column map selecting
+//! the key / weight / timestamp fields — the shape of most public cache
+//! traces (csv dumps, space-separated block logs).
+//!
+//! Parsing contract:
+//! * empty lines and `#`-prefixed comment lines are skipped;
+//! * `skip_header` drops the first non-comment line;
+//! * keys that parse as plain decimal u64 are canonicalized to
+//!   [`RawKey::U64`](super::RawKey::U64); everything else is an opaque
+//!   byte key (so `"007"` and `"7"` are the *same* item — numeric keys
+//!   are ids, not strings);
+//! * missing/unparsable mapped columns are hard errors with the line
+//!   number — a silently mis-parsed trace would corrupt every result
+//!   built on it.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{RawRecord, RawSource};
+
+/// Column map + delimiter for [`DelimitedTextSource`].
+#[derive(Debug, Clone)]
+pub struct TextFormat {
+    /// single-byte field delimiter
+    pub delim: u8,
+    /// 0-based column holding the key
+    pub key_col: usize,
+    /// optional column holding the per-request weight (default 1.0)
+    pub weight_col: Option<usize>,
+    /// optional column holding the timestamp (default: record index)
+    pub ts_col: Option<usize>,
+    /// drop the first non-comment line
+    pub skip_header: bool,
+}
+
+impl TextFormat {
+    /// Comma-delimited, key in column 0, no weight/ts columns.
+    pub fn csv() -> Self {
+        Self {
+            delim: b',',
+            key_col: 0,
+            weight_col: None,
+            ts_col: None,
+            skip_header: false,
+        }
+    }
+
+    /// Tab-delimited variant of [`TextFormat::csv`].
+    pub fn tsv() -> Self {
+        Self {
+            delim: b'\t',
+            ..Self::csv()
+        }
+    }
+}
+
+/// Streaming [`RawSource`] over a delimited text file; memory is one
+/// line buffer regardless of file size.
+pub struct DelimitedTextSource {
+    reader: BufReader<File>,
+    fmt: TextFormat,
+    name: String,
+    line: String,
+    lineno: usize,
+    row: u64,
+    header_skipped: bool,
+}
+
+impl DelimitedTextSource {
+    pub fn open<P: AsRef<Path>>(path: P, fmt: TextFormat) -> Result<Self> {
+        let path = path.as_ref();
+        let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "raw-text".into());
+        Ok(Self {
+            reader: BufReader::with_capacity(1 << 20, f),
+            fmt,
+            name,
+            line: String::new(),
+            lineno: 0,
+            row: 0,
+            header_skipped: false,
+        })
+    }
+}
+
+/// True when `s` is a plain decimal u64 (canonicalized numeric key).
+fn parse_u64_key(s: &str) -> Option<u64> {
+    if s.is_empty() || !s.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    s.parse().ok()
+}
+
+impl RawSource for DelimitedTextSource {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn next_record(&mut self, rec: &mut RawRecord) -> Result<bool> {
+        loop {
+            self.line.clear();
+            let n = self
+                .reader
+                .read_line(&mut self.line)
+                .with_context(|| format!("{}: read line {}", self.name, self.lineno + 1))?;
+            if n == 0 {
+                return Ok(false);
+            }
+            self.lineno += 1;
+            let s = self.line.trim();
+            if s.is_empty() || s.starts_with('#') {
+                continue;
+            }
+            if self.fmt.skip_header && !self.header_skipped {
+                self.header_skipped = true;
+                continue;
+            }
+            // One pass over the fields, capturing only the mapped columns.
+            let (mut key_s, mut weight_s, mut ts_s) = (None, None, None);
+            for (col, field) in s.split(self.fmt.delim as char).enumerate() {
+                if col == self.fmt.key_col {
+                    key_s = Some(field.trim());
+                }
+                if Some(col) == self.fmt.weight_col {
+                    weight_s = Some(field.trim());
+                }
+                if Some(col) == self.fmt.ts_col {
+                    ts_s = Some(field.trim());
+                }
+            }
+            let Some(key) = key_s else {
+                bail!(
+                    "{}:{}: missing key column {}",
+                    self.name,
+                    self.lineno,
+                    self.fmt.key_col
+                );
+            };
+            if key.is_empty() {
+                bail!("{}:{}: empty key", self.name, self.lineno);
+            }
+            match parse_u64_key(key) {
+                Some(k) => rec.set_u64(k),
+                None => rec.set_bytes(key.as_bytes()),
+            }
+            rec.weight = match (self.fmt.weight_col, weight_s) {
+                (None, _) => 1.0,
+                (Some(c), None) => {
+                    bail!("{}:{}: missing weight column {c}", self.name, self.lineno)
+                }
+                (Some(_), Some(w)) => {
+                    let w: f64 = w.parse().with_context(|| {
+                        format!("{}:{}: bad weight `{w}`", self.name, self.lineno)
+                    })?;
+                    if !(w >= 0.0 && w.is_finite()) {
+                        bail!("{}:{}: weight {w} must be finite and >= 0", self.name, self.lineno);
+                    }
+                    w
+                }
+            };
+            rec.ts = match (self.fmt.ts_col, ts_s) {
+                (None, _) => self.row,
+                (Some(c), None) => {
+                    bail!("{}:{}: missing ts column {c}", self.name, self.lineno)
+                }
+                (Some(_), Some(t)) => t.parse().with_context(|| {
+                    format!("{}:{}: bad timestamp `{t}`", self.name, self.lineno)
+                })?,
+            };
+            self.row += 1;
+            return Ok(true);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::ingest::RawKey;
+
+    fn tmp(name: &str, content: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("ogb_ingest_text_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        std::fs::write(&p, content).unwrap();
+        p
+    }
+
+    fn drain(src: &mut DelimitedTextSource) -> Vec<(String, f64, u64)> {
+        let mut rec = RawRecord::new();
+        let mut out = Vec::new();
+        while src.next_record(&mut rec).unwrap() {
+            let k = match rec.key() {
+                RawKey::U64(k) => format!("u{k}"),
+                RawKey::Bytes(b) => format!("b{}", String::from_utf8_lossy(b)),
+            };
+            out.push((k, rec.weight, rec.ts));
+        }
+        out
+    }
+
+    #[test]
+    fn csv_with_column_map() {
+        let p = tmp(
+            "map.csv",
+            "ts,key,weight\n10,42,2.5\n11,hello,1\n# comment\n\n12,42,0.5\n",
+        );
+        let fmt = TextFormat {
+            key_col: 1,
+            weight_col: Some(2),
+            ts_col: Some(0),
+            skip_header: true,
+            ..TextFormat::csv()
+        };
+        let mut src = DelimitedTextSource::open(&p, fmt).unwrap();
+        assert_eq!(
+            drain(&mut src),
+            vec![
+                ("u42".into(), 2.5, 10),
+                ("bhello".into(), 1.0, 11),
+                ("u42".into(), 0.5, 12),
+            ]
+        );
+    }
+
+    #[test]
+    fn defaults_fill_weight_and_ts() {
+        let p = tmp("plain.csv", "7\nalpha\n7\n");
+        let mut src = DelimitedTextSource::open(&p, TextFormat::csv()).unwrap();
+        assert_eq!(
+            drain(&mut src),
+            vec![
+                ("u7".into(), 1.0, 0),
+                ("balpha".into(), 1.0, 1),
+                ("u7".into(), 1.0, 2),
+            ]
+        );
+    }
+
+    #[test]
+    fn tsv_and_custom_delims() {
+        let p = tmp("t.tsv", "1\t2.0\nkey x\t3.0\n");
+        let fmt = TextFormat {
+            weight_col: Some(1),
+            ..TextFormat::tsv()
+        };
+        let mut src = DelimitedTextSource::open(&p, fmt).unwrap();
+        let got = drain(&mut src);
+        assert_eq!(got[0], ("u1".into(), 2.0, 0));
+        assert_eq!(got[1], ("bkey x".into(), 3.0, 1));
+    }
+
+    #[test]
+    fn numeric_keys_canonicalize() {
+        // "007" and "7" are the same u64 key; "7x" and "-7" are bytes
+        assert_eq!(parse_u64_key("007"), Some(7));
+        assert_eq!(parse_u64_key("7"), Some(7));
+        assert_eq!(parse_u64_key("7x"), None);
+        assert_eq!(parse_u64_key("-7"), None);
+        assert_eq!(parse_u64_key(""), None);
+        // 21-digit overflow falls back to a bytes key
+        assert_eq!(parse_u64_key("999999999999999999999"), None);
+    }
+
+    #[test]
+    fn malformed_lines_error_with_position() {
+        let p = tmp("bad.csv", "1,1.0\n2,notanumber\n");
+        let fmt = TextFormat {
+            weight_col: Some(1),
+            ..TextFormat::csv()
+        };
+        let mut src = DelimitedTextSource::open(&p, fmt).unwrap();
+        let mut rec = RawRecord::new();
+        assert!(src.next_record(&mut rec).unwrap());
+        let err = src.next_record(&mut rec).unwrap_err().to_string();
+        assert!(err.contains(":2"), "error should carry the line: {err}");
+
+        let p = tmp("short.csv", "1,1.0\n2\n");
+        let fmt = TextFormat {
+            weight_col: Some(1),
+            ..TextFormat::csv()
+        };
+        let mut src = DelimitedTextSource::open(&p, fmt).unwrap();
+        assert!(src.next_record(&mut rec).unwrap());
+        assert!(src.next_record(&mut rec).is_err());
+    }
+}

@@ -2,11 +2,15 @@
 //! (including the paper's adversarial round-robin pattern), generators
 //! mimicking the four real-world traces of Table 1 (substitutions — see
 //! DESIGN.md §3), temporal-locality analyses (paper App. B), a binary
-//! on-disk format, and the streaming request-source layer
+//! on-disk format, the streaming request-source layer
 //! ([`stream`], DESIGN.md §6) that replays unbounded horizons without
-//! materializing the request vector.
+//! materializing the request vector, and the open-catalog ingest layer
+//! ([`ingest`], DESIGN.md §10) that turns sparse-keyed raw traces
+//! (csv/tsv, length-prefixed binary, OGBT) into that dense streaming
+//! world via deterministic online key remapping.
 
 pub mod file;
+pub mod ingest;
 pub mod realworld;
 pub mod stats;
 pub mod stream;

@@ -173,18 +173,34 @@ pub fn systor_like(n: usize, t: usize, seed: u64) -> Trace {
     Trace::new(format!("systor-like_n{n}"), n, requests, seed)
 }
 
-/// Default experiment scales: (catalog, length) pairs per trace family,
-/// scaled down from the paper's (6.8e6 items / 3.5e7 requests) to CI-class
+/// Default experiment scales: (catalog, length) per trace family, scaled
+/// down from the paper's (6.8e6 items / 3.5e7 requests) to CI-class
 /// budgets while keeping N, C, T ratios comparable.  `scale` multiplies
-/// both dimensions.
-pub fn by_name(name: &str, scale: f64, seed: u64) -> Option<Trace> {
+/// both dimensions.  Shared by the materializing [`by_name`] and the
+/// byte-identical streaming twins
+/// ([`crate::trace::stream::realworld::by_name_source`]).
+pub fn scaled_dims(name: &str, scale: f64) -> Option<(usize, usize)> {
     let s = |base: usize| ((base as f64 * scale) as usize).max(1000);
     Some(match name {
-        "cdn" => cdn_like(s(200_000), s(2_000_000), seed),
-        "twitter" => twitter_like(s(100_000), s(2_000_000), seed),
-        "ms-ex" | "msex" => msex_like(s(60_000), s(1_200_000), seed),
-        "systor" => systor_like(s(80_000), s(1_500_000), seed),
+        "cdn" => (s(200_000), s(2_000_000)),
+        "twitter" => (s(100_000), s(2_000_000)),
+        "ms-ex" | "msex" => (s(60_000), s(1_200_000)),
+        "systor" => (s(80_000), s(1_500_000)),
         _ => return None,
+    })
+}
+
+/// Materialize a named Table-1-like workload at `scale`.  Peak-RSS hint:
+/// the streaming twins replay the identical sequences in O(catalog)
+/// memory — `sweep`/`serve` specs should use `realworld:<name>` instead.
+pub fn by_name(name: &str, scale: f64, seed: u64) -> Option<Trace> {
+    let (n, t) = scaled_dims(name, scale)?;
+    Some(match name {
+        "cdn" => cdn_like(n, t, seed),
+        "twitter" => twitter_like(n, t, seed),
+        "ms-ex" | "msex" => msex_like(n, t, seed),
+        "systor" => systor_like(n, t, seed),
+        _ => unreachable!("scaled_dims filters unknown names"),
     })
 }
 

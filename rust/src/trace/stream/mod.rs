@@ -14,6 +14,9 @@
 //!   `trace::synth` generators plus streaming-only families (Zipf with
 //!   popularity drift, Markov-modulated flash crowds, diurnal phase
 //!   mixtures);
+//! * [`realworld`] — byte-identical streaming twins of the Table-1-like
+//!   `trace::realworld` generators (O(catalog) memory at any horizon),
+//!   reachable from the spec DSL as `realworld:cdn,scale=...`;
 //! * [`combine`] — `Concat` / `Interleave` / `Mix` combinators, so new
 //!   scenarios are composed from pieces rather than written from scratch;
 //! * [`spec`] — a textual spec language (`"drift-zipf:n=1e6,t=1e7 + ..."`)
@@ -33,6 +36,7 @@
 pub mod combine;
 pub mod file;
 pub mod gen;
+pub mod realworld;
 pub mod spec;
 pub mod weight;
 
@@ -42,6 +46,7 @@ pub use gen::{
     AdversarialSource, DiurnalSource, FlashCrowdSource, ShiftingZipfSource, UniformSource,
     ZipfDriftSource, ZipfSource,
 };
+pub use realworld::{CdnLikeSource, MsexLikeSource, SystorLikeSource, TwitterLikeSource};
 pub use spec::SourceSpec;
 pub use weight::{WeightScheme, WeightedSource};
 

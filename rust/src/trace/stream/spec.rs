@@ -34,7 +34,13 @@
 //! | `flash`       | `n=100000, t=1000000, s=0.9, p-on=0.0002, p-off=0.002, crowd-k=50, crowd-q=0.8, seed` |
 //! | `diurnal`     | `n=100000, t=1000000, s=0.9, period=250000, seed`              |
 //! | `file`        | `path=<trace.ogbt>` (streamed, never materialized)             |
-//! | `trace`       | `name=<cdn\|twitter\|ms-ex\|systor>, scale=0.1, seed` (materialized) |
+//! | `trace`       | `name=<cdn\|twitter\|ms-ex\|systor>, scale=0.1, seed`          |
+//! | `realworld`   | alias of `trace`; the name may be the bare first token: `realworld:cdn,scale=0.5` |
+//!
+//! `trace`/`realworld` leaves build the *streaming twins*
+//! ([`super::realworld`], byte-identical with the materialized
+//! generators) — the Table-1-like workloads run through `sweep`/`serve`
+//! in O(catalog) memory at any horizon.
 //!
 //! Example: a drifting-Zipf base with an interleaved flash-crowd overlay,
 //! followed by an adversarial tail:
@@ -51,7 +57,7 @@ use super::gen::{
     ZipfDriftSource, ZipfSource,
 };
 use super::weight::{WeightScheme, WeightedSource};
-use super::{FileSource, OwnedTraceSource, RequestSource};
+use super::{FileSource, RequestSource};
 use crate::util::rng::mix64;
 
 /// A validated, buildable source spec.  Cloneable and `Send + Sync`, so
@@ -273,7 +279,7 @@ fn allowed_keys(kind: &str) -> Option<&'static [&'static str]> {
         "flash" => &["n", "t", "s", "p-on", "p-off", "crowd-k", "crowd-q", "seed"],
         "diurnal" => &["n", "t", "s", "period", "seed"],
         "file" => &["path"],
-        "trace" => &["name", "scale", "seed"],
+        "trace" | "realworld" => &["name", "scale", "seed"],
         _ => return None,
     })
 }
@@ -295,9 +301,15 @@ fn parse_leaf(text: &str) -> Result<Leaf> {
     };
     let mut params = Vec::new();
     if let Some(rest) = rest {
-        for kv in rest.split(',') {
+        for (i, kv) in rest.split(',').enumerate() {
             let kv = kv.trim();
             if kv.is_empty() {
+                continue;
+            }
+            // `realworld:cdn,scale=...` sugar: a bare first token is the
+            // generator name
+            if i == 0 && kind == "realworld" && !kv.contains('=') {
+                params.push(("name".to_string(), kv.to_string()));
                 continue;
             }
             let Some((k, v)) = kv.split_once('=') else {
@@ -324,9 +336,9 @@ fn parse_leaf(text: &str) -> Result<Leaf> {
                 bail!("file: missing required `path=`");
             }
         }
-        "trace" => {
+        "trace" | "realworld" => {
             if leaf.get("name").is_none() {
-                bail!("trace: missing required `name=`");
+                bail!("{}: missing required `name=`", leaf.kind);
             }
             leaf.f64_or("scale", 0.1)?;
         }
@@ -467,13 +479,15 @@ fn build_leaf(
             seed,
         )),
         "file" => Box::new(FileSource::open(leaf.get("path").expect("validated"))?),
-        "trace" => {
+        "trace" | "realworld" => {
+            // streaming twins (byte-identical with the materialized
+            // generators; O(catalog) memory — DESIGN.md §10)
             let name = leaf.get("name").expect("validated");
             let scale = leaf.f64_or("scale", 0.1)?;
-            let Some(trace) = crate::trace::realworld::by_name(name, scale, seed) else {
-                bail!("trace: unknown real-world generator `{name}`");
+            let Some(src) = super::realworld::by_name_source(name, scale, seed) else {
+                bail!("{}: unknown real-world generator `{name}`", leaf.kind);
             };
-            Box::new(OwnedTraceSource::new(trace))
+            src
         }
         other => unreachable!("parse_leaf rejects unknown kind {other}"),
     })
@@ -586,10 +600,40 @@ mod tests {
     }
 
     #[test]
-    fn trace_leaf_materializes_realworld() {
+    fn trace_leaf_streams_realworld() {
         let spec = SourceSpec::parse("trace:name=cdn,scale=0.001").unwrap();
         let mut src = spec.build(7).unwrap();
         assert!(src.catalog() >= 1_000);
         assert!(SourceIter(src.as_mut()).count() >= 1_000);
+    }
+
+    /// `realworld:` alias: bare-name sugar, streaming twins, and
+    /// byte-identity with the materialized `trace:` path.
+    #[test]
+    fn realworld_leaf_bare_name_matches_trace_leaf() {
+        let a: Vec<u32> = SourceIter(
+            SourceSpec::parse("realworld:cdn,scale=0.001")
+                .unwrap()
+                .build(7)
+                .unwrap()
+                .as_mut(),
+        )
+        .collect();
+        let b: Vec<u32> = SourceIter(
+            SourceSpec::parse("trace:name=cdn,scale=0.001")
+                .unwrap()
+                .build(7)
+                .unwrap()
+                .as_mut(),
+        )
+        .collect();
+        assert_eq!(a, b);
+        // the twin matches the materialized generator byte-for-byte
+        let m = crate::trace::realworld::by_name("cdn", 0.001, 7).unwrap();
+        assert_eq!(a, m.requests);
+        for bad in ["realworld:", "realworld:bogus", "realworld:cdn,name=cdn"] {
+            let r = SourceSpec::parse(bad).and_then(|s| s.build(1).map(|_| ()));
+            assert!(r.is_err(), "`{bad}` should be rejected");
+        }
     }
 }

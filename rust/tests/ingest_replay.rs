@@ -1,0 +1,443 @@
+//! Open-catalog ingestion + growth (DESIGN.md §10), end to end:
+//!
+//! * `KeyRemapper` property tests — first-seen stability under
+//!   interleaving, collision injection, snapshot/restore roundtrips;
+//! * remapping determinism — the foundation of `ogb-cache replay`'s
+//!   exact-mode bit-identity with a pre-densified run;
+//! * `Policy::grow` trajectory identity against the §10 reference
+//!   semantics for every registered policy family;
+//! * growth through `sim::run_source` — chunk-size invariance and the
+//!   zero-allocation steady state outside growth events.
+
+use ogb_cache::policies::{
+    self, BuildOpts, CpuDenseStep, FractionalOgb, Ftpl, Ogb, OgbClassic, OgbClassicMode,
+    OmdFractional, Policy, Request,
+};
+use ogb_cache::sim::{run_source, RunConfig};
+use ogb_cache::trace::ingest::{
+    open_raw, KeyRemapper, RawBinaryWriter, RawKey, RawRecord, RemappedSource,
+};
+use ogb_cache::trace::stream::{RequestSource, TraceSource};
+use ogb_cache::trace::synth;
+use ogb_cache::util::check::{check, Gen};
+use ogb_cache::util::rng::mix64;
+use ogb_cache::util::Xoshiro256pp;
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("ogb_ingest_it_{name}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A deterministic mixed u64/bytes key pool.
+fn key_pool(size: usize) -> Vec<(bool, u64)> {
+    (0..size as u64)
+        .map(|i| (i % 3 == 0, mix64(i ^ 0xFEED)))
+        .collect()
+}
+
+fn map_pool_key(m: &mut KeyRemapper, (bytes, v): (bool, u64)) -> u32 {
+    if bytes {
+        m.map_key(RawKey::Bytes(&v.to_le_bytes()))
+    } else {
+        m.map_key(RawKey::U64(v))
+    }
+}
+
+/// First-seen ids are a pure function of the key *sequence*: re-mapping,
+/// interleaved lookups, different hash masks (collision injection), and
+/// snapshot/restore never change an assignment.
+#[test]
+fn remapper_ids_stable_under_interleaving_collisions_and_snapshots() {
+    let dir = tmpdir("remap_prop");
+    check("remapper_stability", |g: &mut Gen| {
+        let pool = key_pool(g.usize_in(3, 60));
+        let seq: Vec<(bool, u64)> = (0..g.usize_in(1, 300))
+            .map(|_| pool[g.usize_in(0, pool.len())])
+            .collect();
+        let mask = if g.bool_p(0.5) {
+            g.u64_below(15) // heavy collisions (down to one bucket)
+        } else {
+            !0
+        };
+        let mut a = KeyRemapper::with_hash_mask(mask);
+        let ids_a: Vec<u32> = seq.iter().map(|&k| map_pool_key(&mut a, k)).collect();
+        // first-seen: id k assigned at the k-th distinct key, ids dense
+        assert_eq!(a.len() as u32 - 1, *ids_a.iter().max().unwrap());
+        // replay through a fresh remapper, with interleaved re-lookups
+        let mut b = KeyRemapper::with_hash_mask(mask);
+        for (i, &k) in seq.iter().enumerate() {
+            assert_eq!(map_pool_key(&mut b, k), ids_a[i], "id diverged at {i}");
+            let j = g.usize_in(0, i + 1);
+            assert_eq!(
+                map_pool_key(&mut b, seq[j]),
+                ids_a[j],
+                "interleaved lookup perturbed the mapping"
+            );
+        }
+        // snapshot at a random prefix, restore, finish the tail
+        let cut = g.usize_in(0, seq.len() + 1);
+        let mut c = KeyRemapper::with_hash_mask(mask);
+        for &k in &seq[..cut] {
+            map_pool_key(&mut c, k);
+        }
+        let snap = dir.join(format!("snap_{cut}.ogbm"));
+        c.save_snapshot(&snap).unwrap();
+        let mut d = KeyRemapper::load_snapshot(&snap).unwrap();
+        for (i, &k) in seq[cut..].iter().enumerate() {
+            assert_eq!(
+                map_pool_key(&mut d, k),
+                ids_a[cut + i],
+                "restored remapper diverged"
+            );
+        }
+        assert_eq!(d.len(), a.len());
+    });
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Remapping a sparse-keyed raw stream reproduces exactly the dense
+/// sequence a pre-densification pass produces — for any id relabeling.
+#[test]
+fn remapped_stream_equals_pre_densified_sequence() {
+    let dir = tmpdir("remap_dense");
+    let t = synth::zipf(300, 15_000, 0.9, 3);
+    let p = dir.join("sparse.ogbr");
+    let mut w = RawBinaryWriter::create(&p).unwrap();
+    for (k, &r) in t.requests.iter().enumerate() {
+        w.write(RawKey::U64(mix64(r as u64 ^ 0xAB)), 1.0, k as u64)
+            .unwrap();
+    }
+    w.finish().unwrap();
+
+    // pre-densify: first-seen ids over the sparse keys
+    let mut pre = KeyRemapper::new();
+    let mut rec = RawRecord::new();
+    let mut raw = open_raw(p.to_str().unwrap()).unwrap();
+    let mut dense = Vec::new();
+    while raw.next_record(&mut rec).unwrap() {
+        dense.push(pre.map_key(rec.key()));
+    }
+    assert_eq!(pre.len(), t.distinct());
+
+    // streaming remap: identical sequence, live catalog trajectory
+    let mut src = RemappedSource::new(open_raw(p.to_str().unwrap()).unwrap());
+    assert_eq!(src.catalog(), 0, "empty before the stream starts");
+    let mut got = Vec::new();
+    let mut catalog_monotone = 0usize;
+    while let Some(id) = src.next_request() {
+        got.push(id);
+        assert!(src.catalog() >= catalog_monotone, "catalog shrank");
+        assert!((id as usize) < src.catalog(), "id beyond live catalog");
+        catalog_monotone = src.catalog();
+    }
+    assert_eq!(got, dense);
+    assert_eq!(src.catalog(), t.distinct());
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// §10 reference semantics, n-agnostic families: LRU/LFU/FIFO/ARC/GDS/
+/// Infinite keep no catalog-sized state, so prefix-at-n1 + grow(n2) +
+/// suffix must be *bit-identical* to a fresh n2 policy over the same
+/// requests.  (`opt` is hindsight-fixed: growth is a no-op by
+/// definition and it serves any id — checked too.)
+#[test]
+fn grow_identity_for_n_agnostic_policies() {
+    let (n1, n2) = (500usize, 3_000usize);
+    let t1 = synth::zipf(n1, 6_000, 0.9, 5);
+    let t2 = synth::zipf(n2, 6_000, 0.9, 6);
+    let full = ogb_cache::trace::Trace::new(
+        "concat",
+        n2,
+        t1.requests
+            .iter()
+            .chain(&t2.requests)
+            .copied()
+            .collect::<Vec<u32>>(),
+        0,
+    );
+    for name in ["lru", "lfu", "fifo", "arc", "gds", "infinite", "opt"] {
+        let opts = BuildOpts::new(full.len(), 1, 7);
+        let mut grown = policies::build(name, n1, 50, &opts, Some(&full)).unwrap();
+        let mut fresh = policies::build(name, n2, 50, &opts, Some(&full)).unwrap();
+        let mut rg = 0.0;
+        let mut rf = 0.0;
+        for &r in &t1.requests {
+            rg += grown.request(r as u64);
+            rf += fresh.request(r as u64);
+        }
+        grown.grow(n2);
+        for &r in &t2.requests {
+            rg += grown.request(r as u64);
+            rf += fresh.request(r as u64);
+        }
+        assert_eq!(rg, rf, "{name}: grow must be transparent");
+        assert_eq!(grown.occupancy(), fresh.occupancy(), "{name}");
+    }
+}
+
+/// §10 reference semantics, OGB family: after growth the fractional
+/// state equals the renormalization `f'_i = (n1/n2)·f_i` (existing) /
+/// `C/n2` (new), mass conserved; serving continues over the grown
+/// catalog without violating invariants.
+#[test]
+fn grow_identity_for_gradient_policies() {
+    let (n1, n2, c) = (200usize, 1_024usize, 40.0);
+    let t = synth::zipf(n1, 4_000, 0.9, 8);
+
+    // §10 reference: f'_i = (n1/n2)·f_i for existing, C/n2 for new
+    fn check_renorm(before: &[f64], after: &[f64], n1: usize, n2: usize, c: f64) {
+        let scale = n1 as f64 / n2 as f64;
+        assert_eq!(after.len(), n2);
+        for (i, &a) in after.iter().enumerate() {
+            let expect = if i < n1 { before[i] * scale } else { c / n2 as f64 };
+            assert!((a - expect).abs() < 1e-9, "item {i}: {a} vs {expect}");
+        }
+        let mass: f64 = after.iter().sum();
+        assert!((mass - c).abs() < 1e-6, "mass {mass} != C={c}");
+    }
+
+    // OGB (integral)
+    let mut ogb = Ogb::with_theory_eta(n1, c, 20_000, 4, 9);
+    for &r in &t.requests {
+        ogb.request(r as u64);
+    }
+    let before: Vec<f64> = (0..n1 as u64).map(|i| ogb.prob(i)).collect();
+    ogb.grow(n2);
+    let after: Vec<f64> = (0..n2 as u64).map(|i| ogb.prob(i)).collect();
+    check_renorm(&before, &after, n1, n2, c);
+    assert_eq!(ogb.diag().grows, 1);
+    ogb.check_invariants();
+    let mut rng = Xoshiro256pp::seed_from(4);
+    for _ in 0..2_000 {
+        ogb.request(rng.next_below(n2 as u64));
+    }
+    ogb.check_invariants();
+
+    // OGB-frac
+    let mut frac = FractionalOgb::with_theory_eta(n1, c, 20_000, 4);
+    for &r in &t.requests {
+        frac.request(r as u64);
+    }
+    let before: Vec<f64> = (0..n1 as u64).map(|i| frac.prob(i)).collect();
+    frac.grow(n2);
+    let after: Vec<f64> = (0..n2 as u64).map(|i| frac.prob(i)).collect();
+    check_renorm(&before, &after, n1, n2, c);
+    // rewards after growth are paid against the re-frozen grown state
+    assert!((frac.cached_fraction(n2 as u64 - 1) - c / n2 as f64).abs() < 1e-12);
+
+    // OGB_cl (fractional mode exposes the dense state)
+    let mut cl = OgbClassic::with_theory_eta(
+        n1,
+        c,
+        20_000,
+        4,
+        OgbClassicMode::Fractional,
+        Box::new(CpuDenseStep),
+        9,
+    );
+    for &r in &t.requests {
+        cl.request(r as u64);
+    }
+    let before: Vec<f64> = (0..n1 as u64).map(|i| cl.fraction(i)).collect();
+    cl.grow(n2);
+    let after: Vec<f64> = (0..n2 as u64).map(|i| cl.fraction(i)).collect();
+    check_renorm(&before, &after, n1, n2, c);
+
+    // OMD
+    let mut omd = OmdFractional::with_theory_eta(n1, c, 20_000, 4);
+    for &r in &t.requests {
+        omd.request(r as u64);
+    }
+    let before: Vec<f64> = (0..n1 as u64).map(|i| omd.fraction(i)).collect();
+    omd.grow(n2);
+    let after: Vec<f64> = (0..n2 as u64).map(|i| omd.fraction(i)).collect();
+    check_renorm(&before, &after, n1, n2, c);
+    for _ in 0..2_000 {
+        omd.request(rng.next_below(n2 as u64));
+    }
+    assert!((omd.occupancy() - c).abs() < 1e-6);
+}
+
+/// §10 reference semantics, FTPL: after growth the cache equals the
+/// top-C perturbed set over the grown catalog — exactly the state a
+/// fresh n2-catalog FTPL holds after serving the same prefix (the
+/// perturbations are id-permanent, so state converges even though the
+/// prefix rewards legitimately differ).
+#[test]
+fn grow_identity_for_ftpl() {
+    let (n1, n2, cap) = (300usize, 900usize, 30usize);
+    let t = synth::zipf(n1, 5_000, 1.0, 11);
+    let mut grown = Ftpl::new(n1, cap, 8.0, 13);
+    let mut fresh = Ftpl::new(n2, cap, 8.0, 13);
+    for &r in &t.requests {
+        grown.request(r as u64);
+        fresh.request(r as u64);
+    }
+    grown.grow(n2);
+    for i in 0..n2 as u64 {
+        assert_eq!(
+            grown.is_cached(i),
+            fresh.is_cached(i),
+            "cached set diverged at {i}"
+        );
+    }
+    // and from here the trajectories coincide exactly
+    let t2 = synth::zipf(n2, 5_000, 1.0, 12);
+    for &r in &t2.requests {
+        assert_eq!(grown.request(r as u64), fresh.request(r as u64));
+    }
+}
+
+/// Every registered policy kind survives growth mid-stream through the
+/// generic `Policy::grow` entry (serving ids beyond the original
+/// catalog afterwards), including parameterized specs.
+#[test]
+fn every_builtin_survives_growth() {
+    let (n1, n2) = (128usize, 700usize);
+    let t1 = synth::zipf(n1, 2_000, 0.9, 2);
+    let t2 = synth::zipf(n2, 2_000, 0.9, 3);
+    let full = ogb_cache::trace::Trace::new(
+        "concat",
+        n2,
+        t1.requests
+            .iter()
+            .chain(&t2.requests)
+            .copied()
+            .collect::<Vec<u32>>(),
+        0,
+    );
+    for name in [
+        "lru",
+        "lfu",
+        "fifo",
+        "arc",
+        "gds",
+        "ftpl",
+        "ogb",
+        "ogb{batch=16}",
+        "ogb-frac",
+        "ogb-classic",
+        "ogb-classic-frac",
+        "omd-frac",
+        "opt",
+        "infinite",
+    ] {
+        let opts = BuildOpts::new(full.len(), 2, 5);
+        let mut p = policies::build(name, n1, 25, &opts, Some(&full)).unwrap();
+        let mut reward = 0.0;
+        for &r in &t1.requests {
+            reward += p.serve(Request::unit(r as u64));
+        }
+        p.grow(n2);
+        p.grow(n1); // shrink attempts are ignored
+        for &r in &t2.requests {
+            reward += p.serve(Request::unit(r as u64));
+        }
+        assert!(reward >= 0.0, "{name}");
+        assert!(p.occupancy() >= 0.0, "{name}");
+    }
+}
+
+fn sparse_raw_fixture(dir: &std::path::Path, n: usize, t: usize, seed: u64) -> std::path::PathBuf {
+    let tr = synth::zipf(n, t, 0.9, seed);
+    let p = dir.join("grow.ogbr");
+    let mut w = RawBinaryWriter::create(&p).unwrap();
+    for (k, &r) in tr.requests.iter().enumerate() {
+        w.write(RawKey::U64(mix64(r as u64 ^ 0x77)), 1.0, k as u64)
+            .unwrap();
+    }
+    w.finish().unwrap();
+    p
+}
+
+/// Growth instants are keyed to the request sequence (split immediately
+/// before the first unseen-frontier request), so the whole RunResult —
+/// including the growth-sensitive OGB trajectory — is invariant to the
+/// engine chunk size.
+#[test]
+fn run_source_growth_is_chunk_size_invariant() {
+    let dir = tmpdir("chunk_inv");
+    let p = sparse_raw_fixture(&dir, 400, 12_000, 21);
+    let cfg = |batch: usize| RunConfig {
+        window: 500,
+        occupancy_every: 333,
+        max_requests: 0,
+        batch,
+    };
+    let run_with = |batch: usize| {
+        // built small (n0=16): the catalog is discovered online and the
+        // policy grows through ~5 doublings to cover the 400 items
+        let mut src = RemappedSource::new(open_raw(p.to_str().unwrap()).unwrap());
+        let mut policy =
+            policies::build("ogb{batch=4}", 16, 4, &BuildOpts::new(12_000, 4, 9), None).unwrap();
+        let r = run_source(&mut policy, &mut src, &cfg(batch));
+        assert!(policy.diag().grows > 0, "growth must have fired");
+        r
+    };
+    let reference = run_with(1);
+    assert_eq!(reference.requests, 12_000);
+    for batch in [2usize, 3, 7, 64, 100_000] {
+        let r = run_with(batch);
+        assert_eq!(reference.total_reward, r.total_reward, "batch={batch}");
+        assert_eq!(reference.windowed, r.windowed, "batch={batch}");
+        assert_eq!(reference.cumulative, r.cumulative, "batch={batch}");
+        assert_eq!(reference.occupancy, r.occupancy, "batch={batch}");
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Fixed-catalog sources take the growth-aware engine path with zero
+/// behavioral change: identical results to the seed semantics.
+#[test]
+fn fixed_catalog_sources_unaffected_by_growth_path() {
+    let t = synth::zipf(300, 8_000, 0.9, 4);
+    let cfg = RunConfig {
+        window: 1_000,
+        occupancy_every: 500,
+        max_requests: 0,
+        batch: 16,
+    };
+    let mut a = policies::build("ogb", 300, 30, &BuildOpts::new(t.len(), 1, 7), None).unwrap();
+    let ra = run_source(&mut a, &mut TraceSource::new(&t), &cfg);
+    let mut b = policies::build("ogb", 300, 30, &BuildOpts::new(t.len(), 1, 7), None).unwrap();
+    let rb = ogb_cache::sim::run(&mut b, &t, &cfg);
+    assert_eq!(ra.total_reward, rb.total_reward);
+    assert_eq!(ra.windowed, rb.windowed);
+    assert_eq!(a.diag().grows, 0, "no growth events on a fixed catalog");
+}
+
+/// The §10 allocation contract: scratch buffers may grow *at* growth
+/// events, but between them the OGB request path stays allocation-free
+/// once warmed.
+#[test]
+fn steady_state_allocation_free_outside_growth_events() {
+    let n_final = 4_096usize;
+    let mut p = Ogb::with_theory_eta(64, 16.0, 60_000, 4, 7);
+    let mut rng = Xoshiro256pp::seed_from(5);
+    // alternate growth phases and serving phases
+    for phase in 1..=3usize {
+        p.grow(64 << (2 * phase)); // 256, 1024, 4096
+        for _ in 0..5_000 {
+            p.request(rng.next_below((64 << (2 * phase)) as u64));
+        }
+    }
+    assert_eq!(p.diag().grows, 3);
+    // steady state: no growth events, warmed scratches => no allocs
+    let warm = p.diag().scratch_grows;
+    let mut reqs = [Request::unit(0); 64];
+    let mut rewards = Vec::with_capacity(64);
+    for _ in 0..400 {
+        for r in reqs.iter_mut() {
+            *r = Request::unit(rng.next_below(n_final as u64));
+        }
+        rewards.clear();
+        p.serve_batch(&reqs, &mut rewards);
+    }
+    assert_eq!(
+        p.diag().scratch_grows,
+        warm,
+        "request path allocated outside growth events"
+    );
+    p.check_invariants();
+}

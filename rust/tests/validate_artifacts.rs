@@ -4,6 +4,13 @@
 //!
 //! Requires `make artifacts` (skips with a notice otherwise, so plain
 //! `cargo test` works in a fresh checkout).
+//!
+//! Also validates the *committed* `BENCH_*.json` perf snapshots at the
+//! repo root: every snapshot must keep its `"provenance"` label
+//! (`projected` model vs `measured` run) and its per-mode rows, so a
+//! projected baseline can never silently masquerade as a measurement.
+//! CI runs this test against the clean checkout *before* the smoke jobs
+//! regenerate any snapshot in the workspace.
 
 use ogb_cache::proj::{dense, LazySimplex};
 use ogb_cache::runtime::{artifacts_available, ArtifactRegistry};
@@ -17,6 +24,34 @@ fn registry() -> Option<ArtifactRegistry> {
         return None;
     }
     Some(ArtifactRegistry::open(path).expect("open registry"))
+}
+
+/// Committed snapshot guard (no XLA artifacts needed): the perf
+/// trajectory files must carry an explicit provenance label and the
+/// Policy-API-v2 mode rows.
+#[test]
+fn committed_bench_snapshots_keep_provenance_and_mode_rows() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    for file in ["BENCH_hotpath.json", "BENCH_shard.json"] {
+        let path = root.join(file);
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("committed snapshot {file} missing: {e}"));
+        assert!(
+            text.contains("\"provenance\":\"projected\"")
+                || text.contains("\"provenance\":\"measured\""),
+            "{file}: lost its provenance label (must say projected or measured)"
+        );
+        for mode in ["\"mode\":\"per_request\"", "\"mode\":\"batched\""] {
+            assert!(
+                text.contains(mode),
+                "{file}: lost its {mode} rows (Policy API v2 contract)"
+            );
+        }
+        assert!(
+            text.contains("\"rows\":["),
+            "{file}: snapshot has no rows array"
+        );
+    }
 }
 
 #[test]
