@@ -24,10 +24,29 @@
 //! which emits `BENCH_shard.json` (req/s by shard count).  The committed
 //! `BENCH_*.json` snapshots at the repo root are the perf trajectory
 //! each PR measures itself against.
+//!
+//! Every harness can also fly a recorder (DESIGN.md §11): add
+//! `--obs-out obs.jsonl` to any subcommand for a windowed time-series
+//! with policy internals and provenance, e.g.
+//!
+//!     cargo run --release -- serve --smoke --obs-out obs.jsonl
+//!
+//! and then a 5-line analysis of the output is just line filtering:
+//!
+//!     grep '"obs":"window"' obs.jsonl | tail -1        # last steady window
+//!     grep -o '"hit_ratio":[0-9.]*' obs.jsonl          # hit-ratio series
+//!     grep -o '"p99_ns":[0-9]*' obs.jsonl              # tail-latency series
+//!     grep -o '"ring_depth_hw":[0-9]*' obs.jsonl       # backpressure high-water
+//!     head -1 obs.jsonl | grep -o '"provenance":"[^"]*"'   # measured-vs-projected
+//!
+//! The end of this example does the same from the library API.
 
 use ogb_cache::coordinator::{CacheServer, ServerConfig};
+use ogb_cache::obs::{FlightRecorder, Provenance};
 use ogb_cache::policies::{self, BuildOpts, Ogb, Policy, PolicySpec};
-use ogb_cache::sim::{run, run_replay, run_source, ReplayConfig, RunConfig, StreamingOpt};
+use ogb_cache::sim::{
+    run, run_replay, run_source, run_source_obs, ReplayConfig, RunConfig, StreamingOpt,
+};
 use ogb_cache::trace::ingest::{RawBinaryWriter, RawKey};
 use ogb_cache::trace::stream::gen::ZipfDriftSource;
 use ogb_cache::trace::synth;
@@ -170,4 +189,51 @@ fn main() {
         );
     }
     std::fs::remove_file(raw_path).ok();
+
+    // Observability (DESIGN.md §11): attach a FlightRecorder and the
+    // engine emits one provenance-stamped JSONL record per window —
+    // the CLI spelling is `--obs-out obs.jsonl` on any subcommand.
+    let obs_path = std::env::temp_dir().join("quickstart_obs.jsonl");
+    let prov = Provenance::collect("ogb{batch=1}", "quickstart:drift-zipf");
+    let mut rec = FlightRecorder::create(&obs_path, &prov).expect("create recorder");
+    let mut source = ZipfDriftSource::new(n, t, 0.9, 200, 7);
+    let mut ogb3 = Ogb::with_theory_eta(n, c as f64, t, 1, 42);
+    run_source_obs(&mut ogb3, &mut source, &cfg, Some(&mut rec));
+    let records = rec.records();
+    rec.finish().expect("flush recorder");
+    // the 5-line analysis: pull the hit-ratio trend and policy-internal
+    // gauges straight out of the windowed series
+    let text = std::fs::read_to_string(&obs_path).expect("read obs.jsonl");
+    let grab = |line: &str, key: &str| -> String {
+        let pat = format!("\"{key}\":");
+        let tail = &line[line.find(&pat).expect("key present") + pat.len()..];
+        tail[..tail.find(|ch| ch == ',' || ch == '}').unwrap()].to_string()
+    };
+    let windows: Vec<&str> = text
+        .lines()
+        .filter(|l| l.contains("\"obs\":\"window\""))
+        .collect();
+    let (first, last) = (windows[0], *windows.last().unwrap());
+    println!(
+        "\nflight recorder: {records} records, {} windows -> {}",
+        windows.len(),
+        obs_path.display()
+    );
+    println!(
+        "  hit_ratio {} -> {} (warm-up to steady), pops/request {}",
+        grab(first, "hit_ratio"),
+        grab(last, "hit_ratio"),
+        grab(last, "pops_per_request")
+    );
+    let instr = text
+        .lines()
+        .rfind(|l| l.contains("\"obs\":\"instruments\""))
+        .expect("instruments record");
+    println!(
+        "  O(log N) witness: proj.tree_height={} proj.support={} (N={n})",
+        grab(instr, "proj.tree_height"),
+        grab(instr, "proj.support")
+    );
+    println!("  provenance: {}", grab(first, "provenance"));
+    std::fs::remove_file(obs_path).ok();
 }

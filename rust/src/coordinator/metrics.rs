@@ -1,224 +1,6 @@
-//! Service metrics: lock-free counters updated by shard threads, plus
-//! per-shard latency histograms, snapshot-able while the server runs.
-//!
-//! The batched pipeline records one [`Metrics::record_batch`] per drained
-//! ring batch (three relaxed atomic adds + one O(1) weighted histogram
-//! record), not one call per request — the shard loop stays
-//! allocation-free and the metrics cost amortizes over B requests.
+//! Service metrics — absorbed into the unified observability subsystem
+//! ([`crate::obs::metrics`]); re-exported here so coordinator call sites
+//! and embedders keep their import paths.  The shard loop updates the
+//! same registry the flight recorder samples (DESIGN.md §11).
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
-
-use crate::util::stats::LatencyHistogram;
-
-#[derive(Debug, Default)]
-pub struct Metrics {
-    pub requests: AtomicU64,
-    pub hits: AtomicU64,
-    pub evictions: AtomicU64,
-    /// ring batches drained by the shard loop (each full batch maps onto
-    /// one Algorithm 3 sample-refresh cadence when ring B == policy B)
-    pub batch_updates: AtomicU64,
-    latency: Mutex<LatencyHistogram>,
-}
-
-impl Metrics {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    /// Record one request (legacy single-request path; the shard loop
-    /// uses [`Metrics::record_batch`]).
-    #[inline]
-    pub fn record_request(&self, hit: bool, latency_ns: u64) {
-        self.requests.fetch_add(1, Ordering::Relaxed);
-        if hit {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-        }
-        self.latency.lock().unwrap().record_ns(latency_ns);
-    }
-
-    /// Record one drained batch: `n` requests, `hits` of them hits, all
-    /// sharing the batch-level enqueue-to-served latency.  Histogram under
-    /// a short uncontended lock (one writer per shard); cross-shard
-    /// contention is avoided by giving each shard its own `Metrics` and
-    /// merging at snapshot time.
-    #[inline]
-    pub fn record_batch(&self, n: u64, hits: u64, latency_ns: u64) {
-        self.requests.fetch_add(n, Ordering::Relaxed);
-        self.hits.fetch_add(hits, Ordering::Relaxed);
-        self.batch_updates.fetch_add(1, Ordering::Relaxed);
-        self.latency
-            .lock()
-            .unwrap()
-            .record_ns_weighted(latency_ns, n);
-    }
-
-    pub fn snapshot(&self) -> MetricsSnapshot {
-        let h = self.latency.lock().unwrap().clone();
-        MetricsSnapshot {
-            requests: self.requests.load(Ordering::Relaxed),
-            hits: self.hits.load(Ordering::Relaxed),
-            evictions: self.evictions.load(Ordering::Relaxed),
-            batch_updates: self.batch_updates.load(Ordering::Relaxed),
-            latency: h,
-        }
-    }
-}
-
-#[derive(Debug, Clone)]
-pub struct MetricsSnapshot {
-    pub requests: u64,
-    pub hits: u64,
-    pub evictions: u64,
-    pub batch_updates: u64,
-    pub latency: LatencyHistogram,
-}
-
-impl MetricsSnapshot {
-    pub fn hit_ratio(&self) -> f64 {
-        self.hits as f64 / self.requests.max(1) as f64
-    }
-
-    /// Median enqueue-to-served latency from the log-bucketed histogram.
-    ///
-    /// Measured from the batch's flush stamp to the end of shard-side
-    /// processing: it covers work-ring queueing + policy work, but not
-    /// the time a request waits in a *partial pending batch* before
-    /// flush (unbounded under trickling load until `flush`/`drain`),
-    /// nor reply-ring transit and client reap.
-    pub fn p50_ns(&self) -> u64 {
-        self.latency.percentile_ns(50.0)
-    }
-
-    pub fn p99_ns(&self) -> u64 {
-        self.latency.percentile_ns(99.0)
-    }
-
-    pub fn p999_ns(&self) -> u64 {
-        self.latency.percentile_ns(99.9)
-    }
-
-    /// Counter-wise difference `self - earlier`, isolating a measurement
-    /// window from the server's cumulative metrics (`earlier` must be an
-    /// earlier snapshot of the same server) — e.g. `sim::shardbench`
-    /// excludes its warm-up pass this way.  The latency histogram keeps
-    /// the cumulative `max_ns` (see `LatencyHistogram::diff`).
-    pub fn since(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
-        // saturate like LatencyHistogram::diff: misuse must not wrap
-        MetricsSnapshot {
-            requests: self.requests.saturating_sub(earlier.requests),
-            hits: self.hits.saturating_sub(earlier.hits),
-            evictions: self.evictions.saturating_sub(earlier.evictions),
-            batch_updates: self.batch_updates.saturating_sub(earlier.batch_updates),
-            latency: self.latency.diff(&earlier.latency),
-        }
-    }
-
-    pub fn merge(mut snaps: Vec<MetricsSnapshot>) -> MetricsSnapshot {
-        let mut out = snaps.pop().expect("at least one shard");
-        for s in snaps {
-            out.requests += s.requests;
-            out.hits += s.hits;
-            out.evictions += s.evictions;
-            out.batch_updates += s.batch_updates;
-            out.latency.merge(&s.latency);
-        }
-        out
-    }
-
-    pub fn report(&self) -> String {
-        format!(
-            "requests={} hit_ratio={:.4} evictions={} batches={} p50={}ns p99={}ns p999={}ns max={}ns",
-            self.requests,
-            self.hit_ratio(),
-            self.evictions,
-            self.batch_updates,
-            self.p50_ns(),
-            self.p99_ns(),
-            self.p999_ns(),
-            self.latency.max_ns(),
-        )
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn record_and_snapshot() {
-        let m = Metrics::new();
-        m.record_request(true, 100);
-        m.record_request(false, 200);
-        m.record_request(true, 300);
-        let s = m.snapshot();
-        assert_eq!(s.requests, 3);
-        assert_eq!(s.hits, 2);
-        assert!((s.hit_ratio() - 2.0 / 3.0).abs() < 1e-12);
-        assert_eq!(s.latency.count(), 3);
-    }
-
-    #[test]
-    fn batch_record_counts_every_request() {
-        let m = Metrics::new();
-        m.record_batch(64, 40, 1_500);
-        m.record_batch(64, 10, 3_000);
-        m.record_batch(16, 16, 800); // partial flush
-        let s = m.snapshot();
-        assert_eq!(s.requests, 144);
-        assert_eq!(s.hits, 66);
-        assert_eq!(s.batch_updates, 3);
-        assert_eq!(s.latency.count(), 144);
-        assert!(s.p50_ns() > 0 && s.p99_ns() >= s.p50_ns());
-        assert!(s.p999_ns() >= s.p99_ns());
-    }
-
-    #[test]
-    fn percentiles_order_and_report() {
-        let m = Metrics::new();
-        for i in 1..=1000u64 {
-            m.record_request(i % 2 == 0, i * 100);
-        }
-        let s = m.snapshot();
-        assert!(s.p50_ns() <= s.p99_ns() && s.p99_ns() <= s.p999_ns());
-        assert!(s.p999_ns() <= s.latency.max_ns());
-        let r = s.report();
-        assert!(r.contains("p50=") && r.contains("p99=") && r.contains("p999="));
-    }
-
-    #[test]
-    fn merge_across_shards() {
-        let a = Metrics::new();
-        let b = Metrics::new();
-        a.record_batch(10, 5, 50);
-        b.record_batch(20, 4, 150);
-        b.record_request(false, 250);
-        let merged = MetricsSnapshot::merge(vec![a.snapshot(), b.snapshot()]);
-        assert_eq!(merged.requests, 31);
-        assert_eq!(merged.hits, 9);
-        assert_eq!(merged.latency.count(), 31);
-        assert!(!merged.report().is_empty());
-    }
-
-    #[test]
-    fn concurrent_updates() {
-        use std::sync::Arc;
-        let m = Arc::new(Metrics::new());
-        let mut handles = Vec::new();
-        for _ in 0..4 {
-            let m = m.clone();
-            handles.push(std::thread::spawn(move || {
-                for i in 0..10_000 {
-                    m.record_request(i % 2 == 0, i);
-                }
-            }));
-        }
-        for h in handles {
-            h.join().unwrap();
-        }
-        let s = m.snapshot();
-        assert_eq!(s.requests, 40_000);
-        assert_eq!(s.hits, 20_000);
-    }
-}
+pub use crate::obs::metrics::{Metrics, MetricsSnapshot};

@@ -15,7 +15,7 @@
 //! queueing unboundedly (and when a done ring is full the shard waits for
 //! the client to reap).
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
@@ -87,6 +87,11 @@ pub struct CacheServer {
     /// whether taken handles are still alive (strong_count > 1) and fail
     /// loudly instead of joining forever
     alive: Arc<()>,
+    /// shared backpressure counter: client flushes that found their work
+    /// ring full and had to reap replies before pushing (one per flush,
+    /// not per retry) — folded into [`CacheServer::snapshot`] so the
+    /// flight recorder sees queueing pressure without touching the shards
+    reap_on_full: Arc<AtomicU64>,
 }
 
 impl CacheServer {
@@ -135,6 +140,7 @@ impl CacheServer {
 
         // clients × shards ring pairs
         let alive = Arc::new(());
+        let reap_on_full = Arc::new(AtomicU64::new(0));
         let mut shard_lanes: Vec<Vec<ShardLane>> = (0..cfg.shards).map(|_| Vec::new()).collect();
         let mut clients = Vec::with_capacity(cfg.clients);
         for _ in 0..cfg.clients {
@@ -174,6 +180,7 @@ impl CacheServer {
                 lanes,
                 sent: 0,
                 flushes: 0,
+                reap_on_full: reap_on_full.clone(),
                 _alive: alive.clone(),
             });
         }
@@ -237,6 +244,7 @@ impl CacheServer {
             redraw,
             clients,
             alive,
+            reap_on_full,
         })
     }
 
@@ -249,7 +257,9 @@ impl CacheServer {
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        MetricsSnapshot::merge(self.metrics.iter().map(|m| m.snapshot()).collect())
+        let mut s = MetricsSnapshot::merge(self.metrics.iter().map(|m| m.snapshot()).collect());
+        s.reap_on_full += self.reap_on_full.load(Ordering::Relaxed);
+        s
     }
 
     /// Ask every shard to redraw its sampler's permanent random numbers
@@ -283,7 +293,9 @@ impl CacheServer {
         for w in std::mem::take(&mut self.workers) {
             let _ = w.join();
         }
-        MetricsSnapshot::merge(self.metrics.iter().map(|m| m.snapshot()).collect())
+        let mut s = MetricsSnapshot::merge(self.metrics.iter().map(|m| m.snapshot()).collect());
+        s.reap_on_full += self.reap_on_full.load(Ordering::Relaxed);
+        s
     }
 }
 
@@ -328,6 +340,8 @@ pub struct ShardedClient {
     lanes: Vec<ClientLane>,
     sent: u64,
     flushes: u64,
+    /// see `CacheServer::reap_on_full`
+    reap_on_full: Arc<AtomicU64>,
     /// see `CacheServer::alive`
     _alive: Arc<()>,
 }
@@ -397,6 +411,7 @@ impl ShardedClient {
         lane.next_seq += 1;
         b.stamp();
         self.flushes += 1;
+        let mut noted_full = false;
         loop {
             match self.lanes[shard].work.try_push(b) {
                 Ok(()) => {
@@ -405,6 +420,12 @@ impl ShardedClient {
                 }
                 Err(PushError::Full(ret)) => {
                     b = ret;
+                    if !noted_full {
+                        // Count the backpressure *event* once per flush,
+                        // not once per retry spin.
+                        noted_full = true;
+                        self.reap_on_full.fetch_add(1, Ordering::Relaxed);
+                    }
                     // Backpressure: free a slot by consuming replies.
                     if Self::reap_lane(&mut self.lanes[shard], &mut |_| {}) == 0 {
                         std::thread::yield_now();

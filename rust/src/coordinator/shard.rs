@@ -104,7 +104,12 @@ pub fn run_shard(
 
     let mut open = vec![true; lanes.len()];
     let mut n_open = lanes.len();
+    // Cumulative policy diagnostics observed so far: the shard loop turns
+    // them into per-batch deltas on the shared [`Metrics`] so the flight
+    // recorder sees live policy internals without any policy-side atomics.
     let mut last_evictions = 0u64;
+    let mut last_pops = 0u64;
+    let mut last_grows = 0u64;
     let mut idle = 0u32;
     // Open-catalog growth (DESIGN.md §10): local ids at or beyond this
     // frontier grow the policy (next power of two, immediately before
@@ -139,6 +144,9 @@ pub fn run_shard(
             match lane.work.try_pop() {
                 Ok(mut batch) => {
                     progressed = true;
+                    // Ring-depth high-water: the popped batch plus what is
+                    // still queued behind it (bounded by ring capacity).
+                    metrics.note_ring_depth(lane.work.len() as u64 + 1);
                     if redraw.swap(false, Ordering::AcqRel) {
                         policy_redraw(&mut policy);
                     }
@@ -178,17 +186,29 @@ pub fn run_shard(
                             }
                         }
                     }
-                    let ev = policy.diag().sample_evictions;
+                    let d = policy.diag();
                     metrics
-                        .evictions
-                        .fetch_add(ev - last_evictions, Ordering::Relaxed);
-                    last_evictions = ev;
+                        .pops
+                        .fetch_add(d.removed_coeffs - last_pops, Ordering::Relaxed);
+                    last_pops = d.removed_coeffs;
+                    if d.grows != last_grows {
+                        metrics
+                            .grow_events
+                            .fetch_add(d.grows - last_grows, Ordering::Relaxed);
+                        last_grows = d.grows;
+                    }
                     let lat = batch
                         .enqueued()
                         .elapsed()
                         .as_nanos()
                         .min(u128::from(u64::MAX)) as u64;
-                    metrics.record_batch(batch.len() as u64, hits, lat);
+                    metrics.record_batch(
+                        batch.len() as u64,
+                        hits,
+                        d.sample_evictions - last_evictions,
+                        lat,
+                    );
+                    last_evictions = d.sample_evictions;
                     // Reply: push the annotated batch back.  The free-
                     // slot check above makes Full effectively
                     // unreachable (only the client removes entries, so
@@ -219,6 +239,16 @@ pub fn run_shard(
             idle_backoff(&mut idle, reply_blocked);
         }
     }
+    // Rare-path span: shard drained (all client lanes disconnected and
+    // every queued batch served) — the structured counterpart of the
+    // worker thread exiting.
+    crate::log_span!(
+        crate::util::logger::Level::Debug,
+        "shard_drain",
+        "shard" => cfg.shard_id,
+        "requests" => metrics.requests.load(Ordering::Relaxed),
+        "catalog" => live_catalog,
+    );
 }
 
 /// Redraw the sampler's permanent random numbers where the policy has

@@ -46,6 +46,17 @@
 //!   [`sim::hotpath`] microbench suite behind `ogb-cache bench`, and
 //!   the [`sim::shardbench`] multi-core scaling suite behind
 //!   `ogb-cache serve --smoke` / `cargo bench --bench shards`;
+//! * [`obs`] — the flight-recorder observability subsystem (DESIGN.md
+//!   §11): a lock-free instrument registry ([`obs::Metrics`], absorbed
+//!   from the coordinator) plus uniform policy-internal read-outs via
+//!   [`policies::Policy::instruments`], and windowed JSONL telemetry
+//!   ([`obs::FlightRecorder`], `--obs-out` on every harness) — req/s,
+//!   hit ratio, latency percentiles, pops/request, ring high-water,
+//!   backpressure and grow events, each record stamped with run
+//!   [`obs::Provenance`] (git sha, host, cpus, policy + scenario spec,
+//!   projected-vs-measured label).  Obs off ⇒ bit-identical trajectory
+//!   and 0 allocs/request (differential-tested); obs on ⇒ one relaxed
+//!   add per existing counter site plus O(1) per window;
 //! * [`runtime`] — the PJRT (XLA) runtime that loads the AOT-compiled JAX /
 //!   Pallas artifacts backing the dense baseline;
 //! * [`coordinator`] — the sharded serving engine (DESIGN.md §8): a
@@ -133,6 +144,7 @@
 
 pub mod coordinator;
 pub mod figures;
+pub mod obs;
 pub mod policies;
 pub mod proj;
 pub mod runtime;

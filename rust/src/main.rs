@@ -17,6 +17,7 @@
 use anyhow::Result;
 use ogb_cache::coordinator::{CacheServer, ServerConfig};
 use ogb_cache::figures::{run_figure, FigOpts};
+use ogb_cache::obs::{FlightRecorder, Provenance, WindowRecord};
 use ogb_cache::policies::{BuildOpts, Policy};
 use ogb_cache::proj::{dense, LazySimplex};
 use ogb_cache::sim::{
@@ -49,6 +50,7 @@ fn cli() -> Cli {
                 opt("seed", "random seed", "42"),
                 opt("rebase-threshold", "lazy projection re-base threshold (empty = default 1e6)", ""),
                 opt("csv", "optional output CSV path", ""),
+                opt("obs-out", "flight-recorder JSONL path (empty = obs off)", ""),
             ],
         )
         .command(
@@ -69,6 +71,7 @@ fn cli() -> Cli {
                 opt("rebase-threshold", "lazy projection re-base threshold (empty = default 1e6)", ""),
                 opt("out", "output CSV path", "results/sweep/sweep.csv"),
                 opt("bench-json", "machine-readable perf snapshot (empty = skip)", "BENCH_stream.json"),
+                opt("obs-out", "flight-recorder JSONL path, one window per grid cell (empty = obs off)", ""),
             ],
         )
         .command(
@@ -86,6 +89,7 @@ fn cli() -> Cli {
                 opt("seed", "random seed", "42"),
                 opt("rebase-threshold", "lazy projection re-base threshold (empty = default 1e6)", ""),
                 opt("out", "output JSON path (empty = skip)", "BENCH_hotpath.json"),
+                opt("obs-out", "flight-recorder JSONL path — records are emitted inside the allocation-counted region, proving the recorder is allocation-free (empty = obs off)", ""),
                 flag("smoke", "tiny CI grid (ogb+lru, N=2000, 20k requests, 1 rep; overrides --policies/--ns/--cache-pcts/--requests/--reps)"),
             ],
         )
@@ -118,6 +122,7 @@ fn cli() -> Cli {
                 opt("seed", "random seed", "42"),
                 opt("rebase-threshold", "lazy projection re-base threshold (empty = default 1e6)", ""),
                 opt("bench-json", "BENCH_shard.json path for --smoke (empty = skip)", "BENCH_shard.json"),
+                opt("obs-out", "flight-recorder JSONL path: live sampled windows while serving, warm+steady windows per --smoke cell (empty = obs off)", ""),
                 flag("per-request", "serve drained batches item-by-item (v1 comparison shape) instead of one serve_batch call per ring pop"),
                 flag("smoke", "tiny CI grid: run the multi-core shard suite (shards {1,2}, batched + per-request modes, small N; honors --policy/--batch/--queue-depth/--seed, ignores the other serve flags), emit BENCH_shard.json, assert the zero-allocation contract"),
             ],
@@ -144,6 +149,7 @@ fn cli() -> Cli {
                 opt("densify-out", "write the remapped dense trace here as .ogbt (empty = skip)", ""),
                 opt("snapshot-out", "spill the key-remapper snapshot here (empty = skip)", ""),
                 opt("bench-json", "machine-readable snapshot path (empty = skip)", "BENCH_replay.json"),
+                opt("obs-out", "flight-recorder JSONL path, one window per policy pass (empty = obs off)", ""),
             ],
         )
         .command(
@@ -222,6 +228,31 @@ fn load_trace(name: &str, scale: f64, seed: u64) -> Result<Trace> {
     })
 }
 
+/// `--obs-out` shared by simulate / sweep / bench / serve / replay:
+/// open a provenance-stamped flight recorder when a path was given.
+fn open_recorder(
+    a: &ogb_cache::util::args::Args,
+    policy: &str,
+    scenario: &str,
+) -> Result<Option<FlightRecorder>> {
+    let path = a.get_or("obs-out", "");
+    if path.is_empty() {
+        return Ok(None);
+    }
+    let prov = Provenance::collect(policy, scenario);
+    Ok(Some(FlightRecorder::create(path, &prov)?))
+}
+
+/// Flush the recorder (surfacing any deferred I/O error) and report it.
+fn finish_recorder(rec: Option<FlightRecorder>) -> Result<()> {
+    if let Some(rec) = rec {
+        let n = rec.records();
+        let p = rec.finish()?;
+        println!("wrote {} ({n} obs records)", p.display());
+    }
+    Ok(())
+}
+
 /// `--rebase-threshold` shared by simulate / sweep / bench ("" = default).
 fn parse_rebase_threshold(a: &ogb_cache::util::args::Args) -> Result<Option<f64>> {
     let s = a.get_or("rebase-threshold", "");
@@ -262,7 +293,17 @@ fn cmd_simulate(a: &ogb_cache::util::args::Args) -> Result<()> {
         tr.distinct(),
         policy.name()
     );
-    let r = sim::run(&mut policy, &tr, &cfg);
+    let mut rec = open_recorder(
+        a,
+        a.get_or("policy", "ogb"),
+        &format!("simulate:{}", tr.name),
+    )?;
+    let r = sim::run_source_obs(
+        &mut policy,
+        &mut ogb_cache::trace::stream::TraceSource::new(&tr),
+        &cfg,
+        rec.as_mut(),
+    );
     println!(
         "hit_ratio={:.4} total_reward={:.0} elapsed={:.2}s throughput={:.3e} req/s",
         r.hit_ratio(),
@@ -296,7 +337,7 @@ fn cmd_simulate(a: &ogb_cache::util::args::Args) -> Result<()> {
         let p = w.finish()?;
         println!("wrote {}", p.display());
     }
-    Ok(())
+    finish_recorder(rec)
 }
 
 fn cmd_sweep(a: &ogb_cache::util::args::Args) -> Result<()> {
@@ -369,7 +410,15 @@ fn cmd_sweep(a: &ogb_cache::util::args::Args) -> Result<()> {
     if !bench.is_empty() {
         println!("wrote {}", r.write_bench_json(bench)?.display());
     }
-    Ok(())
+    let mut rec = open_recorder(
+        a,
+        &cfg.policies.join(","),
+        &format!("sweep:{}", spec.text()),
+    )?;
+    if let Some(rec2) = rec.as_mut() {
+        r.record_obs(rec2);
+    }
+    finish_recorder(rec)
 }
 
 fn cmd_bench(a: &ogb_cache::util::args::Args) -> Result<()> {
@@ -425,7 +474,15 @@ fn cmd_bench(a: &ogb_cache::util::args::Args) -> Result<()> {
         }
     };
     let smoke = cfg.smoke;
-    let r = sim::run_hotpath(&cfg)?;
+    let mut rec = open_recorder(
+        a,
+        &cfg.policies.join(","),
+        &format!(
+            "hotpath:requests={},reps={},zipf_s={}",
+            cfg.requests, cfg.reps, cfg.zipf_s
+        ),
+    )?;
+    let r = sim::run_hotpath_obs(&cfg, rec.as_mut())?;
     r.print();
     println!(
         "\n{} cells in {:.2}s (alloc counter {})",
@@ -458,7 +515,7 @@ fn cmd_bench(a: &ogb_cache::util::args::Args) -> Result<()> {
             println!("steady-state allocation contract holds (0 allocs, both modes)");
         }
     }
-    Ok(())
+    finish_recorder(rec)
 }
 
 fn cmd_serve(a: &ogb_cache::util::args::Args) -> Result<()> {
@@ -472,7 +529,15 @@ fn cmd_serve(a: &ogb_cache::util::args::Args) -> Result<()> {
         cfg.batch = a.get_parse("batch", cfg.batch);
         cfg.queue_depth = a.get_parse("queue-depth", cfg.queue_depth);
         cfg.seed = a.get_parse("seed", cfg.seed);
-        let r = sim::run_shardbench(&cfg)?;
+        let mut rec = open_recorder(
+            a,
+            &cfg.policies.join(","),
+            &format!(
+                "shardbench:smoke,shards={:?},requests={}",
+                cfg.shard_counts, cfg.requests
+            ),
+        )?;
+        let r = sim::run_shardbench_obs(&cfg, rec.as_mut())?;
         r.print();
         println!(
             "\n{} cells in {:.2}s (alloc counter {})",
@@ -492,7 +557,7 @@ fn cmd_serve(a: &ogb_cache::util::args::Args) -> Result<()> {
             );
             println!("steady-state allocation contract holds (0 allocs)");
         }
-        return Ok(());
+        return finish_recorder(rec);
     }
 
     let spec = SourceSpec::parse(a.get_or("source", "zipf:n=100000,t=1000000,s=0.9"))?;
@@ -544,6 +609,11 @@ fn cmd_serve(a: &ogb_cache::util::args::Args) -> Result<()> {
         cfg.queue_depth,
         cfg.clients,
     );
+    let mut rec = open_recorder(
+        a,
+        a.get_or("policy", "ogb"),
+        &format!("serve:{}", spec.text()),
+    )?;
     let mut server = CacheServer::start(cfg)?;
     let start = std::time::Instant::now();
     let mut handles = Vec::new();
@@ -582,11 +652,42 @@ fn cmd_serve(a: &ogb_cache::util::args::Args) -> Result<()> {
             Ok(())
         }));
     }
+    // Live time-series: while the clients run, the main thread samples
+    // the merged shard metrics every 200ms and emits one windowed delta
+    // per sample (skipping empty windows during warm-up stalls).  The
+    // recorder lives entirely off the serving threads, so the hot path
+    // is untouched.
+    let mut last = rec.as_ref().map(|_| server.snapshot());
+    let mut win_t0 = std::time::Instant::now();
+    if rec.is_some() {
+        while handles.iter().any(|h| !h.is_finished()) {
+            std::thread::sleep(std::time::Duration::from_millis(200));
+            let snap = server.snapshot();
+            let win = snap.since(last.as_ref().expect("sampling implies a baseline"));
+            if win.requests > 0 {
+                rec.as_mut().expect("sampling implies a recorder").record_window(
+                    &WindowRecord::from_snapshot(&win, win_t0.elapsed().as_secs_f64()),
+                );
+                win_t0 = std::time::Instant::now();
+            }
+            last = Some(snap);
+        }
+    }
     for h in handles {
         h.join().map_err(|_| anyhow::anyhow!("client panicked"))??;
     }
     let elapsed = start.elapsed().as_secs_f64();
     let snap = server.shutdown();
+    if let (Some(rec2), Some(prev)) = (rec.as_mut(), last.as_ref()) {
+        // final window: the tail since the last poll (drain included)
+        let win = snap.since(prev);
+        if win.requests > 0 {
+            rec2.record_window(&WindowRecord::from_snapshot(
+                &win,
+                win_t0.elapsed().as_secs_f64(),
+            ));
+        }
+    }
     println!("{}", snap.report());
     println!(
         "drove {} requests in {elapsed:.2}s => {:.3e} req/s end-to-end | latency p50={}ns p99={}ns p999={}ns",
@@ -596,7 +697,7 @@ fn cmd_serve(a: &ogb_cache::util::args::Args) -> Result<()> {
         snap.p99_ns(),
         snap.p999_ns(),
     );
-    Ok(())
+    finish_recorder(rec)
 }
 
 fn cmd_replay(a: &ogb_cache::util::args::Args) -> Result<()> {
@@ -659,14 +760,19 @@ fn cmd_replay(a: &ogb_cache::util::args::Args) -> Result<()> {
         densify_out: a.get_or("densify-out", "").to_string(),
         snapshot_out: a.get_or("snapshot-out", "").to_string(),
     };
-    let r = sim::run_replay(&cfg)?;
+    let mut rec = open_recorder(
+        a,
+        &cfg.policies.join(","),
+        &format!("replay:{}", cfg.input),
+    )?;
+    let r = sim::run_replay_obs(&cfg, rec.as_mut())?;
     r.print();
     println!("\n{} policies in {:.2}s", r.rows.len(), r.wall_s);
     let out = a.get_or("bench-json", "BENCH_replay.json");
     if !out.is_empty() {
         println!("wrote {}", r.write_bench_json(out)?.display());
     }
-    Ok(())
+    finish_recorder(rec)
 }
 
 fn cmd_analyze(a: &ogb_cache::util::args::Args) -> Result<()> {

@@ -1,0 +1,103 @@
+//! Uniform read-out of policy internals: policies expose their live
+//! counters and gauges through [`crate::policies::Policy::instruments`],
+//! pushing `(name, value)` pairs into an [`InstrumentVisitor`].  The
+//! default implementation reports the `Diag` counters plus occupancy; the
+//! gradient family overrides it to add the structural witnesses of the
+//! log-complexity claim (projection support, FlatTree depth, eta).
+//!
+//! Visitors are plain `&mut` callbacks — no registration, no global
+//! state, no allocation imposed on the policy.  [`InstrumentSet`] is the
+//! standard collector (a `Vec` of named values) used by the harnesses to
+//! render one registry walk into JSONL / reports.
+
+/// Receiver for a policy's instrument walk.
+pub trait InstrumentVisitor {
+    /// A monotone cumulative counter (events since construction).
+    fn counter(&mut self, name: &str, value: u64);
+
+    /// A point-in-time level.
+    fn gauge(&mut self, name: &str, value: f64);
+}
+
+/// Collected `(name, value)` pairs from one instrument walk.  Counter
+/// values are stored exactly (u64 → f64 is lossless below 2^53, far above
+/// any realistic run length; the `kind` tag keeps the distinction).
+#[derive(Debug, Clone, Default)]
+pub struct InstrumentSet {
+    entries: Vec<(String, InstrumentValue)>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum InstrumentValue {
+    Counter(u64),
+    Gauge(f64),
+}
+
+impl InstrumentValue {
+    pub fn as_f64(self) -> f64 {
+        match self {
+            InstrumentValue::Counter(v) => v as f64,
+            InstrumentValue::Gauge(v) => v,
+        }
+    }
+}
+
+impl InstrumentSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, InstrumentValue)> + '_ {
+        self.entries.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    pub fn get(&self, name: &str) -> Option<InstrumentValue> {
+        self.entries
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| *v)
+    }
+
+    /// Re-walk support: clear without dropping the allocation.
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+}
+
+impl InstrumentVisitor for InstrumentSet {
+    fn counter(&mut self, name: &str, value: u64) {
+        self.entries
+            .push((name.to_string(), InstrumentValue::Counter(value)));
+    }
+
+    fn gauge(&mut self, name: &str, value: f64) {
+        self.entries
+            .push((name.to_string(), InstrumentValue::Gauge(value)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_collects_and_clears() {
+        let mut s = InstrumentSet::new();
+        s.counter("policy.pops", 7);
+        s.gauge("policy.occupancy", 49.5);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get("policy.pops"), Some(InstrumentValue::Counter(7)));
+        assert_eq!(s.get("policy.occupancy").unwrap().as_f64(), 49.5);
+        assert_eq!(s.get("missing"), None);
+        s.clear();
+        assert!(s.is_empty());
+    }
+}

@@ -1,0 +1,400 @@
+//! The instrument registry: lock-free service counters updated by shard
+//! threads, plus per-shard latency histograms, snapshot-able while the
+//! server runs.  Moved here from `coordinator::metrics` (which re-exports
+//! these types for compatibility) so one registry serves every harness —
+//! the coordinator's shard loop, the single-threaded sim engine, and the
+//! flight recorder all read the same counters.
+//!
+//! The batched pipeline records one [`Metrics::record_batch`] per drained
+//! ring batch (a handful of relaxed atomic adds + one O(1) weighted
+//! histogram record), not one call per request — the shard loop stays
+//! allocation-free and the metrics cost amortizes over B requests.
+//!
+//! Concurrency contract (exercised by the stress test below): writers use
+//! relaxed atomics, so a snapshot taken mid-batch may observe a torn
+//! *cross-counter* state (e.g. requests from a batch whose hits are not
+//! yet added), but each counter is individually monotone and no count is
+//! ever lost — after writers quiesce, a snapshot is exact.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::stats::LatencyHistogram;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub hits: AtomicU64,
+    /// real cache evictions reported by the policy (`Diag::sample_evictions`
+    /// deltas wired through the shard loop / sim engine)
+    pub evictions: AtomicU64,
+    /// ring batches drained by the shard loop (each full batch maps onto
+    /// one Algorithm 3 sample-refresh cadence when ring B == policy B)
+    pub batch_updates: AtomicU64,
+    /// projection pops (`Diag::removed_coeffs` deltas) — the live witness
+    /// of the paper's ≤ 1 + (N-C)/t pops/request claim
+    pub pops: AtomicU64,
+    /// catalog growth events (`Diag::grows` deltas)
+    pub grow_events: AtomicU64,
+    /// work-ring depth high-water mark (requests queued per shard lane,
+    /// including the batch being drained); bounded by the ring capacity
+    pub ring_depth_hw: AtomicU64,
+    /// reap-on-full backpressure events: a client found its work ring
+    /// full and had to reap replies before retrying the push
+    pub reap_on_full: AtomicU64,
+    latency: Mutex<LatencyHistogram>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one request (legacy single-request path; the shard loop
+    /// uses [`Metrics::record_batch`]).
+    #[inline]
+    pub fn record_request(&self, hit: bool, latency_ns: u64) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        if hit {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        self.latency.lock().unwrap().record_ns(latency_ns);
+    }
+
+    /// Record one drained batch: `n` requests, `hits` of them hits,
+    /// `evictions` cache evictions performed while serving it, all
+    /// sharing the batch-level enqueue-to-served latency.  Histogram under
+    /// a short uncontended lock (one writer per shard); cross-shard
+    /// contention is avoided by giving each shard its own `Metrics` and
+    /// merging at snapshot time.
+    #[inline]
+    pub fn record_batch(&self, n: u64, hits: u64, evictions: u64, latency_ns: u64) {
+        self.requests.fetch_add(n, Ordering::Relaxed);
+        self.hits.fetch_add(hits, Ordering::Relaxed);
+        if evictions > 0 {
+            self.evictions.fetch_add(evictions, Ordering::Relaxed);
+        }
+        self.batch_updates.fetch_add(1, Ordering::Relaxed);
+        self.latency
+            .lock()
+            .unwrap()
+            .record_ns_weighted(latency_ns, n);
+    }
+
+    /// Raise the work-ring depth high-water mark (relaxed `fetch_max`).
+    #[inline]
+    pub fn note_ring_depth(&self, depth: u64) {
+        self.ring_depth_hw.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let h = self.latency.lock().unwrap().clone();
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            hits: self.hits.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            batch_updates: self.batch_updates.load(Ordering::Relaxed),
+            pops: self.pops.load(Ordering::Relaxed),
+            grow_events: self.grow_events.load(Ordering::Relaxed),
+            ring_depth_hw: self.ring_depth_hw.load(Ordering::Relaxed),
+            reap_on_full: self.reap_on_full.load(Ordering::Relaxed),
+            latency: h,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub hits: u64,
+    pub evictions: u64,
+    pub batch_updates: u64,
+    pub pops: u64,
+    pub grow_events: u64,
+    pub ring_depth_hw: u64,
+    pub reap_on_full: u64,
+    pub latency: LatencyHistogram,
+}
+
+impl MetricsSnapshot {
+    pub fn hit_ratio(&self) -> f64 {
+        self.hits as f64 / self.requests.max(1) as f64
+    }
+
+    /// Projection pops per request over this snapshot's window.
+    pub fn pops_per_request(&self) -> f64 {
+        self.pops as f64 / self.requests.max(1) as f64
+    }
+
+    /// Median enqueue-to-served latency from the log-bucketed histogram.
+    ///
+    /// Measured from the batch's flush stamp to the end of shard-side
+    /// processing: it covers work-ring queueing + policy work, but not
+    /// the time a request waits in a *partial pending batch* before
+    /// flush (unbounded under trickling load until `flush`/`drain`),
+    /// nor reply-ring transit and client reap.
+    pub fn p50_ns(&self) -> u64 {
+        self.latency.percentile_ns(50.0)
+    }
+
+    pub fn p99_ns(&self) -> u64 {
+        self.latency.percentile_ns(99.0)
+    }
+
+    pub fn p999_ns(&self) -> u64 {
+        self.latency.percentile_ns(99.9)
+    }
+
+    /// Counter-wise difference `self - earlier`, isolating a measurement
+    /// window from the server's cumulative metrics (`earlier` must be an
+    /// earlier snapshot of the same server) — e.g. `sim::shardbench`
+    /// excludes its warm-up pass this way.  The latency histogram keeps
+    /// the cumulative `max_ns` (see `LatencyHistogram::diff`); likewise
+    /// `ring_depth_hw` is a high-water mark, which cannot be un-merged,
+    /// so the window keeps the cumulative value (an upper bound).
+    pub fn since(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
+        // saturate like LatencyHistogram::diff: misuse must not wrap
+        MetricsSnapshot {
+            requests: self.requests.saturating_sub(earlier.requests),
+            hits: self.hits.saturating_sub(earlier.hits),
+            evictions: self.evictions.saturating_sub(earlier.evictions),
+            batch_updates: self.batch_updates.saturating_sub(earlier.batch_updates),
+            pops: self.pops.saturating_sub(earlier.pops),
+            grow_events: self.grow_events.saturating_sub(earlier.grow_events),
+            ring_depth_hw: self.ring_depth_hw,
+            reap_on_full: self.reap_on_full.saturating_sub(earlier.reap_on_full),
+            latency: self.latency.diff(&earlier.latency),
+        }
+    }
+
+    pub fn merge(mut snaps: Vec<MetricsSnapshot>) -> MetricsSnapshot {
+        let mut out = snaps.pop().expect("at least one shard");
+        for s in snaps {
+            out.requests += s.requests;
+            out.hits += s.hits;
+            out.evictions += s.evictions;
+            out.batch_updates += s.batch_updates;
+            out.pops += s.pops;
+            out.grow_events += s.grow_events;
+            out.ring_depth_hw = out.ring_depth_hw.max(s.ring_depth_hw);
+            out.reap_on_full += s.reap_on_full;
+            out.latency.merge(&s.latency);
+        }
+        out
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} hit_ratio={:.4} evictions={} batches={} pops={} ring_hw={} reaps={} p50={}ns p99={}ns p999={}ns max={}ns",
+            self.requests,
+            self.hit_ratio(),
+            self.evictions,
+            self.batch_updates,
+            self.pops,
+            self.ring_depth_hw,
+            self.reap_on_full,
+            self.p50_ns(),
+            self.p99_ns(),
+            self.p999_ns(),
+            self.latency.max_ns(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_snapshot() {
+        let m = Metrics::new();
+        m.record_request(true, 100);
+        m.record_request(false, 200);
+        m.record_request(true, 300);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.hits, 2);
+        assert!((s.hit_ratio() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.latency.count(), 3);
+    }
+
+    #[test]
+    fn batch_record_counts_every_request() {
+        let m = Metrics::new();
+        m.record_batch(64, 40, 3, 1_500);
+        m.record_batch(64, 10, 0, 3_000);
+        m.record_batch(16, 16, 1, 800); // partial flush
+        let s = m.snapshot();
+        assert_eq!(s.requests, 144);
+        assert_eq!(s.hits, 66);
+        assert_eq!(s.evictions, 4);
+        assert_eq!(s.batch_updates, 3);
+        assert_eq!(s.latency.count(), 144);
+        assert!(s.p50_ns() > 0 && s.p99_ns() >= s.p50_ns());
+        assert!(s.p999_ns() >= s.p99_ns());
+    }
+
+    #[test]
+    fn percentiles_order_and_report() {
+        let m = Metrics::new();
+        for i in 1..=1000u64 {
+            m.record_request(i % 2 == 0, i * 100);
+        }
+        let s = m.snapshot();
+        assert!(s.p50_ns() <= s.p99_ns() && s.p99_ns() <= s.p999_ns());
+        assert!(s.p999_ns() <= s.latency.max_ns());
+        let r = s.report();
+        assert!(r.contains("p50=") && r.contains("p99=") && r.contains("p999="));
+        assert!(r.contains("pops=") && r.contains("ring_hw=") && r.contains("reaps="));
+    }
+
+    #[test]
+    fn merge_across_shards() {
+        let a = Metrics::new();
+        let b = Metrics::new();
+        a.record_batch(10, 5, 0, 50);
+        b.record_batch(20, 4, 2, 150);
+        b.record_request(false, 250);
+        a.note_ring_depth(7);
+        b.note_ring_depth(3);
+        b.pops.fetch_add(11, Ordering::Relaxed);
+        let merged = MetricsSnapshot::merge(vec![a.snapshot(), b.snapshot()]);
+        assert_eq!(merged.requests, 31);
+        assert_eq!(merged.hits, 9);
+        assert_eq!(merged.evictions, 2);
+        assert_eq!(merged.pops, 11);
+        assert_eq!(merged.ring_depth_hw, 7); // high-water merges by max
+        assert_eq!(merged.latency.count(), 31);
+        assert!(!merged.report().is_empty());
+    }
+
+    #[test]
+    fn concurrent_updates() {
+        use std::sync::Arc;
+        let m = Arc::new(Metrics::new());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..10_000 {
+                    m.record_request(i % 2 == 0, i);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = m.snapshot();
+        assert_eq!(s.requests, 40_000);
+        assert_eq!(s.hits, 20_000);
+    }
+
+    /// Satellite: snapshot-while-recording stress.  4 writer threads hammer
+    /// `record_batch` while the main thread snapshots continuously; every
+    /// counter must be individually monotone across snapshots (no lost or
+    /// wrapped counts), nothing may panic or deadlock, and once writers
+    /// quiesce the totals are exact.
+    #[test]
+    fn snapshot_during_concurrent_writers_is_monotone_and_lossless() {
+        use std::sync::Arc;
+        const WRITERS: usize = 4;
+        const BATCHES: u64 = 2_000;
+        let m = Arc::new(Metrics::new());
+        let mut handles = Vec::new();
+        for w in 0..WRITERS as u64 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..BATCHES {
+                    m.record_batch(8, i % 9, i % 3, 100 + i);
+                    m.note_ring_depth(1 + (i + w) % 32);
+                    m.pops.fetch_add(2, Ordering::Relaxed);
+                }
+            }));
+        }
+        let mut prev = m.snapshot();
+        while m.snapshot().batch_updates < WRITERS as u64 * BATCHES {
+            let s = m.snapshot();
+            assert!(s.requests >= prev.requests, "requests went backwards");
+            assert!(s.hits >= prev.hits, "hits went backwards");
+            assert!(s.evictions >= prev.evictions, "evictions went backwards");
+            assert!(s.pops >= prev.pops, "pops went backwards");
+            assert!(
+                s.ring_depth_hw >= prev.ring_depth_hw,
+                "high-water went backwards"
+            );
+            assert!(s.latency.count() <= s.requests + WRITERS as u64 * 8);
+            prev = s;
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = m.snapshot();
+        assert_eq!(s.requests, WRITERS as u64 * BATCHES * 8);
+        assert_eq!(s.batch_updates, WRITERS as u64 * BATCHES);
+        assert_eq!(s.pops, WRITERS as u64 * BATCHES * 2);
+        assert_eq!(s.latency.count(), s.requests);
+        assert!(s.ring_depth_hw <= 32 + WRITERS as u64);
+    }
+
+    /// Satellite: `since()`/`merge()` property test over random shard
+    /// snapshot sequences — windows must tile (earlier + window == later
+    /// counter-wise), merged totals must equal the sum of parts, and the
+    /// high-water mark must behave as a max under merge.
+    #[test]
+    fn since_and_merge_properties() {
+        use crate::util::check::check;
+        check("metrics_since_merge", |g| {
+            let shards = g.usize_in(1, 5);
+            let ms: Vec<Metrics> = (0..shards).map(|_| Metrics::new()).collect();
+            let mut mid: Option<Vec<MetricsSnapshot>> = None;
+            let events = g.usize_in(1, 60);
+            for e in 0..events {
+                let s = g.usize_in(0, shards);
+                let n = g.u64_below(100) + 1;
+                let hits = g.u64_below(n + 1);
+                let ev = g.u64_below(4);
+                ms[s].record_batch(n, hits, ev, g.u64_below(10_000) + 1);
+                ms[s].note_ring_depth(g.u64_below(64));
+                ms[s].pops.fetch_add(g.u64_below(10), Ordering::Relaxed);
+                if mid.is_none() && (e + 1) * 2 >= events {
+                    mid = Some(ms.iter().map(|m| m.snapshot()).collect());
+                }
+            }
+            let mid = mid.unwrap();
+            let fin: Vec<MetricsSnapshot> = ms.iter().map(|m| m.snapshot()).collect();
+            // per-shard window tiling
+            for (a, b) in mid.iter().zip(&fin) {
+                let w = b.since(a);
+                assert_eq!(a.requests + w.requests, b.requests);
+                assert_eq!(a.hits + w.hits, b.hits);
+                assert_eq!(a.evictions + w.evictions, b.evictions);
+                assert_eq!(a.pops + w.pops, b.pops);
+                assert_eq!(a.batch_updates + w.batch_updates, b.batch_updates);
+                assert_eq!(a.latency.count() + w.latency.count(), b.latency.count());
+                // the high-water window keeps the cumulative upper bound
+                assert!(w.ring_depth_hw >= a.ring_depth_hw);
+            }
+            // merge sums counters and maxes the high-water
+            let merged = MetricsSnapshot::merge(fin.clone());
+            assert_eq!(merged.requests, fin.iter().map(|s| s.requests).sum::<u64>());
+            assert_eq!(merged.hits, fin.iter().map(|s| s.hits).sum::<u64>());
+            assert_eq!(
+                merged.evictions,
+                fin.iter().map(|s| s.evictions).sum::<u64>()
+            );
+            assert_eq!(merged.pops, fin.iter().map(|s| s.pops).sum::<u64>());
+            assert_eq!(
+                merged.ring_depth_hw,
+                fin.iter().map(|s| s.ring_depth_hw).max().unwrap()
+            );
+            assert_eq!(
+                merged.latency.count(),
+                fin.iter().map(|s| s.latency.count()).sum::<u64>()
+            );
+            // since(self) is empty
+            let zero = merged.since(&merged);
+            assert_eq!(zero.requests, 0);
+            assert_eq!(zero.latency.count(), 0);
+        });
+    }
+}

@@ -1,0 +1,37 @@
+//! `obs` — the unified observability subsystem (DESIGN.md §11).
+//!
+//! Three pieces, each dependency-light and usable on its own:
+//!
+//! * **Instrument registry** ([`Metrics`] / [`MetricsSnapshot`], absorbed
+//!   from `coordinator::metrics`): lock-free relaxed-atomic counters plus
+//!   the log-bucketed latency histogram, per-shard, merged at snapshot
+//!   time.  Policies expose their internals uniformly through
+//!   [`crate::policies::Policy::instruments`] into an
+//!   [`InstrumentVisitor`] — pops, evictions, rebases, scratch/catalog
+//!   grows, projection support and FlatTree depth: the live witnesses of
+//!   the paper's O(log N) claim.
+//! * **Flight recorder** ([`FlightRecorder`]): windowed JSONL deltas
+//!   (req/s, hit ratio, p50/p99/p999, pops/request, ring-depth
+//!   high-water, reap-on-full backpressure, grow events) to `--obs-out`,
+//!   every record stamped with run [`Provenance`] (git sha, hostname,
+//!   cpu count, policy spec, scenario spec, projected-vs-measured label).
+//! * **Span events**: rare-but-important paths (rebase, grow, snapshot
+//!   spill, shard drain) emit structured lines through `util::logger`
+//!   (`log_span!`, machine-parseable under `OGB_LOG_FORMAT=json`).
+//!
+//! Zero-overhead-when-off contract (enforced by bench + differential
+//! test): with obs disabled the hot path is bit-identical in trajectory
+//! and performs 0 allocs/request — harnesses take `Option<&mut
+//! FlightRecorder>` and skip every obs branch on `None` at window
+//! granularity, never per request.  Enabled, the cost is the
+//! already-existing relaxed counter sites plus O(1) work per window.
+
+pub mod instruments;
+pub mod metrics;
+pub mod provenance;
+pub mod recorder;
+
+pub use instruments::{InstrumentSet, InstrumentValue, InstrumentVisitor};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use provenance::{provenance_label, Provenance};
+pub use recorder::{FlightRecorder, WindowRecord};

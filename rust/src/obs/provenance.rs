@@ -1,0 +1,164 @@
+//! Run provenance: every flight-recorder record (and, through
+//! [`provenance_label`], every BENCH_*.json snapshot) is stamped with
+//! where it came from — git sha, hostname, cpu count, policy spec,
+//! scenario spec — and with a provenance *label* distinguishing
+//! `"projected"` numbers (analytical model, no toolchain run) from
+//! `"measured:<runner>"` numbers (an actual run on a named machine).
+//! The committed perf baselines stay `projected` until the first
+//! toolchain-equipped runner flips them to `measured:<runner>` — same
+//! format, no churn (EXPERIMENTS.md, Perf iter 8).
+
+use std::path::Path;
+
+/// Identity of one run, rendered once into every obs record.
+#[derive(Debug, Clone)]
+pub struct Provenance {
+    pub git_sha: String,
+    pub hostname: String,
+    pub cpus: usize,
+    /// policy spec text (canonical `PolicySpec` rendering), or a list
+    pub policy: String,
+    /// scenario / source spec text
+    pub scenario: String,
+    /// `"measured:<runner>"` for live runs (which obs records always
+    /// are); BENCH snapshot writers use [`provenance_label`] directly
+    pub label: String,
+}
+
+impl Provenance {
+    /// Collect from the environment.  `policy`/`scenario` are the run's
+    /// own spec strings; everything else is discovered.
+    pub fn collect(policy: &str, scenario: &str) -> Self {
+        Self {
+            git_sha: git_sha().unwrap_or_else(|| "unknown".into()),
+            hostname: hostname(),
+            cpus: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            policy: policy.to_string(),
+            scenario: scenario.to_string(),
+            label: provenance_label(),
+        }
+    }
+
+    /// Render as a JSON object-body fragment (no braces), suitable for
+    /// embedding into each JSONL record: `"git_sha":"...","hostname":...`.
+    pub fn json_fragment(&self) -> String {
+        use crate::util::csv::json::Json;
+        let obj = Json::obj(vec![
+            ("git_sha", Json::Str(self.git_sha.clone())),
+            ("hostname", Json::Str(self.hostname.clone())),
+            ("cpus", Json::Num(self.cpus as f64)),
+            ("policy", Json::Str(self.policy.clone())),
+            ("scenario", Json::Str(self.scenario.clone())),
+            ("provenance", Json::Str(self.label.clone())),
+        ]);
+        let s = obj.render();
+        // strip the surrounding braces to get the fragment
+        s[1..s.len() - 1].to_string()
+    }
+}
+
+/// The provenance label for numbers produced *by this process*:
+/// `measured:<runner>` where the runner is `OGB_BENCH_RUNNER` when set
+/// (pinned perf boxes set it; EXPERIMENTS.md) and the hostname otherwise.
+pub fn provenance_label() -> String {
+    let runner = std::env::var("OGB_BENCH_RUNNER")
+        .ok()
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(hostname);
+    format!("measured:{runner}")
+}
+
+/// Short git sha of HEAD, read directly from `.git` (no `git` binary
+/// needed): resolves `HEAD` → ref file or packed-refs; `None` outside a
+/// repository.
+pub fn git_sha() -> Option<String> {
+    let root = find_git_dir()?;
+    let head = std::fs::read_to_string(root.join("HEAD")).ok()?;
+    let head = head.trim();
+    let full = if let Some(r) = head.strip_prefix("ref: ") {
+        let ref_path = root.join(r.trim());
+        if let Ok(s) = std::fs::read_to_string(&ref_path) {
+            s.trim().to_string()
+        } else {
+            // ref may only exist in packed-refs
+            let packed = std::fs::read_to_string(root.join("packed-refs")).ok()?;
+            packed
+                .lines()
+                .filter(|l| !l.starts_with('#') && !l.starts_with('^'))
+                .find_map(|l| {
+                    let (sha, name) = l.split_once(' ')?;
+                    (name.trim() == r.trim()).then(|| sha.to_string())
+                })?
+        }
+    } else {
+        head.to_string() // detached HEAD
+    };
+    let full = full.trim();
+    if full.len() >= 7 && full.bytes().all(|b| b.is_ascii_hexdigit()) {
+        Some(full[..12.min(full.len())].to_string())
+    } else {
+        None
+    }
+}
+
+fn find_git_dir() -> Option<std::path::PathBuf> {
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let cand = dir.join(".git");
+        if cand.is_dir() {
+            return Some(cand);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+fn hostname() -> String {
+    if let Ok(h) = std::env::var("HOSTNAME") {
+        if !h.is_empty() {
+            return h;
+        }
+    }
+    if let Ok(h) = std::fs::read_to_string(Path::new("/etc/hostname")) {
+        let h = h.trim();
+        if !h.is_empty() {
+            return h.to_string();
+        }
+    }
+    "unknown-host".to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fragment_has_all_provenance_keys() {
+        let p = Provenance::collect("ogb{batch=64}", "zipf:n=1000,t=10000");
+        let frag = p.json_fragment();
+        for key in [
+            "\"git_sha\":",
+            "\"hostname\":",
+            "\"cpus\":",
+            "\"policy\":",
+            "\"scenario\":",
+            "\"provenance\":",
+        ] {
+            assert!(frag.contains(key), "missing {key} in {frag}");
+        }
+        assert!(!frag.starts_with('{') && !frag.ends_with('}'));
+        assert!(p.label.starts_with("measured:"), "{}", p.label);
+        assert!(p.cpus >= 1);
+    }
+
+    #[test]
+    fn label_honors_runner_env() {
+        std::env::set_var("OGB_BENCH_RUNNER", "ci-box-7");
+        assert_eq!(provenance_label(), "measured:ci-box-7");
+        std::env::remove_var("OGB_BENCH_RUNNER");
+        assert!(provenance_label().starts_with("measured:"));
+    }
+}

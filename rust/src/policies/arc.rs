@@ -5,7 +5,7 @@
 //! published pseudocode; O(1) per request.
 
 use super::list::DList;
-use super::{Policy, Request};
+use super::{Diag, Policy, Request};
 use crate::util::FxHashMap;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -25,6 +25,7 @@ pub struct ArcCache {
     b1: DList,
     b2: DList,
     map: FxHashMap<u64, (Where, u32)>,
+    evictions: u64,
 }
 
 impl ArcCache {
@@ -38,6 +39,7 @@ impl ArcCache {
             b1: DList::new(),
             b2: DList::new(),
             map: FxHashMap::default(),
+            evictions: 0,
         }
     }
 
@@ -47,6 +49,7 @@ impl ArcCache {
 
     /// REPLACE(x, p): evict from T1 or T2 into the corresponding ghost list.
     fn replace(&mut self, in_b2: bool) {
+        self.evictions += 1;
         let t1_len = self.t1.len();
         if t1_len > 0 && (t1_len > self.p || (in_b2 && t1_len == self.p)) {
             let victim = self.t1.pop_back().expect("t1 non-empty");
@@ -114,6 +117,7 @@ impl Policy for ArcCache {
                         // T1 itself is at capacity: drop its LRU outright.
                         if let Some(victim) = self.t1.pop_back() {
                             self.map.remove(&victim);
+                            self.evictions += 1;
                         }
                     }
                 } else if l1 < self.cap && l1 + l2 >= self.cap {
@@ -135,6 +139,13 @@ impl Policy for ArcCache {
 
     fn occupancy(&self) -> f64 {
         (self.t1.len() + self.t2.len()) as f64
+    }
+
+    fn diag(&self) -> Diag {
+        Diag {
+            sample_evictions: self.evictions,
+            ..Diag::default()
+        }
     }
 }
 

@@ -1,7 +1,7 @@
 //! First-In First-Out — O(1) per request; no reordering on hit.
 
 use super::list::DList;
-use super::{Policy, Request};
+use super::{Diag, Policy, Request};
 use crate::util::FxHashMap;
 
 #[derive(Debug, Clone)]
@@ -9,6 +9,7 @@ pub struct Fifo {
     cap: usize,
     map: FxHashMap<u64, u32>,
     list: DList,
+    evictions: u64,
 }
 
 impl Fifo {
@@ -18,6 +19,7 @@ impl Fifo {
             cap,
             map: FxHashMap::default(),
             list: DList::new(),
+            evictions: 0,
         }
     }
 }
@@ -35,6 +37,7 @@ impl Policy for Fifo {
         if self.map.len() >= self.cap {
             let victim = self.list.pop_back().expect("non-empty at capacity");
             self.map.remove(&victim);
+            self.evictions += 1;
         }
         let h = self.list.push_front(item);
         self.map.insert(item, h);
@@ -43,6 +46,13 @@ impl Policy for Fifo {
 
     fn occupancy(&self) -> f64 {
         self.map.len() as f64
+    }
+
+    fn diag(&self) -> Diag {
+        Diag {
+            sample_evictions: self.evictions,
+            ..Diag::default()
+        }
     }
 }
 

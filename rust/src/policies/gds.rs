@@ -8,7 +8,7 @@
 
 use std::collections::BTreeSet;
 
-use super::{Policy, Request};
+use super::{Diag, Policy, Request};
 use crate::util::{FxHashMap, OrdF64};
 
 #[derive(Debug, Clone)]
@@ -21,6 +21,7 @@ pub struct Gds {
     queue: BTreeSet<(OrdF64, u64, u64)>,
     h_of: FxHashMap<u64, (f64, u64)>,
     tick: u64,
+    evictions: u64,
     cost_fn: fn(u64) -> (f64, f64), // (cost, size)
 }
 
@@ -41,6 +42,7 @@ impl Gds {
             queue: BTreeSet::new(),
             h_of: FxHashMap::default(),
             tick: 0,
+            evictions: 0,
             cost_fn,
         }
     }
@@ -72,6 +74,7 @@ impl Policy for Gds {
             self.inflation = h_min.get(); // L <- H_min
             self.queue.remove(&(h_min, t_min, victim));
             self.h_of.remove(&victim);
+            self.evictions += 1;
         }
         let h = self.inflation + cost / size;
         self.queue.insert((OrdF64::new(h), self.tick, item));
@@ -81,6 +84,13 @@ impl Policy for Gds {
 
     fn occupancy(&self) -> f64 {
         self.h_of.len() as f64
+    }
+
+    fn diag(&self) -> Diag {
+        Diag {
+            sample_evictions: self.evictions,
+            ..Diag::default()
+        }
     }
 }
 

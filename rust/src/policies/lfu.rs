@@ -10,7 +10,7 @@
 
 use std::collections::BTreeSet;
 
-use super::{Policy, Request};
+use super::{Diag, Policy, Request};
 use crate::util::FxHashMap;
 
 #[derive(Debug, Clone)]
@@ -22,6 +22,7 @@ pub struct Lfu {
     cached: BTreeSet<(u64, u64, u64)>,
     key_of: FxHashMap<u64, (u64, u64)>,
     tick: u64,
+    evictions: u64,
 }
 
 impl Lfu {
@@ -33,6 +34,7 @@ impl Lfu {
             cached: BTreeSet::new(),
             key_of: FxHashMap::default(),
             tick: 0,
+            evictions: 0,
         }
     }
 
@@ -74,6 +76,7 @@ impl Policy for Lfu {
             // replacement): the newcomer (count cnt) replaces the minimum.
             self.cached.remove(&(vc, vt, victim));
             self.key_of.remove(&victim);
+            self.evictions += 1;
         }
         self.cached.insert((cnt, self.tick, item));
         self.key_of.insert(item, (cnt, self.tick));
@@ -82,6 +85,13 @@ impl Policy for Lfu {
 
     fn occupancy(&self) -> f64 {
         self.key_of.len() as f64
+    }
+
+    fn diag(&self) -> Diag {
+        Diag {
+            sample_evictions: self.evictions,
+            ..Diag::default()
+        }
     }
 }
 

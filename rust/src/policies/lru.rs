@@ -1,7 +1,7 @@
 //! Least Recently Used — O(1) per request (hash map + intrusive list).
 
 use super::list::DList;
-use super::{Policy, Request};
+use super::{Diag, Policy, Request};
 use crate::util::FxHashMap;
 
 #[derive(Debug, Clone)]
@@ -9,6 +9,7 @@ pub struct Lru {
     cap: usize,
     map: FxHashMap<u64, u32>,
     list: DList,
+    evictions: u64,
 }
 
 impl Lru {
@@ -18,6 +19,7 @@ impl Lru {
             cap,
             map: FxHashMap::default(),
             list: DList::new(),
+            evictions: 0,
         }
     }
 
@@ -40,6 +42,7 @@ impl Policy for Lru {
         if self.map.len() >= self.cap {
             let victim = self.list.pop_back().expect("non-empty at capacity");
             self.map.remove(&victim);
+            self.evictions += 1;
         }
         let h = self.list.push_front(item);
         self.map.insert(item, h);
@@ -48,6 +51,13 @@ impl Policy for Lru {
 
     fn occupancy(&self) -> f64 {
         self.map.len() as f64
+    }
+
+    fn diag(&self) -> Diag {
+        Diag {
+            sample_evictions: self.evictions,
+            ..Diag::default()
+        }
     }
 }
 
@@ -61,8 +71,21 @@ mod tests {
         assert_eq!(l.request(1), 0.0);
         assert_eq!(l.request(2), 0.0);
         assert_eq!(l.request(1), 1.0); // 1 now MRU
+        assert_eq!(l.diag().sample_evictions, 0);
         assert_eq!(l.request(3), 0.0); // evicts 2
         assert!(l.contains(1) && l.contains(3) && !l.contains(2));
+        assert_eq!(l.diag().sample_evictions, 1);
+    }
+
+    #[test]
+    fn adversarial_stream_counts_every_eviction() {
+        // capacity-1 cache under an all-distinct stream: every request
+        // after the first evicts the previous item.
+        let mut l = Lru::new(1);
+        for k in 0..100u64 {
+            l.request(k);
+        }
+        assert_eq!(l.diag().sample_evictions, 99);
     }
 
     #[test]

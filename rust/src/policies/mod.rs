@@ -149,6 +149,23 @@ pub trait Policy {
     fn diag(&self) -> Diag {
         Diag::default()
     }
+
+    /// Walk the policy's live instruments into an observability visitor
+    /// (DESIGN.md §11).  The default reports the [`Diag`] counters plus
+    /// occupancy under uniform `policy.*` names; structurally interesting
+    /// policies (the gradient family) override it to *extend* the walk
+    /// with their internals — projection support, FlatTree depth, eta —
+    /// the live witnesses of the O(log N) claim.  Read-only and off the
+    /// hot path: harnesses call it at window boundaries / end of run.
+    fn instruments(&self, v: &mut dyn crate::obs::InstrumentVisitor) {
+        let d = self.diag();
+        v.counter("policy.removed_coeffs", d.removed_coeffs);
+        v.counter("policy.sample_evictions", d.sample_evictions);
+        v.counter("policy.rebases", d.rebases);
+        v.counter("policy.scratch_grows", d.scratch_grows);
+        v.counter("policy.grows", d.grows);
+        v.gauge("policy.occupancy", self.occupancy());
+    }
 }
 
 /// Cumulative diagnostics counters.
@@ -265,6 +282,10 @@ impl Policy for AnyPolicy {
     fn diag(&self) -> Diag {
         any_policy_dispatch!(self, p => p.diag())
     }
+
+    fn instruments(&self, v: &mut dyn crate::obs::InstrumentVisitor) {
+        any_policy_dispatch!(self, p => p.instruments(v))
+    }
 }
 
 impl Policy for Box<dyn Policy> {
@@ -290,6 +311,10 @@ impl Policy for Box<dyn Policy> {
 
     fn diag(&self) -> Diag {
         (**self).diag()
+    }
+
+    fn instruments(&self, v: &mut dyn crate::obs::InstrumentVisitor) {
+        (**self).instruments(v)
     }
 }
 

@@ -119,6 +119,13 @@ impl Ogb {
         if let Some(shift) = self.lazy.maybe_rebase() {
             self.sampler.shift_keys(shift);
             self.rebases += 1;
+            crate::log_span!(
+                crate::util::logger::Level::Debug,
+                "rebase",
+                "shift" => shift,
+                "count" => self.rebases,
+                "requests" => self.requests,
+            );
         }
     }
 
@@ -221,6 +228,13 @@ impl Policy for Ogb {
             );
         }
         self.grows += 1;
+        crate::log_span!(
+            crate::util::logger::Level::Debug,
+            "grow",
+            "n_new" => n_new,
+            "eta" => self.eta,
+            "count" => self.grows,
+        );
     }
 
     fn occupancy(&self) -> f64 {
@@ -237,6 +251,26 @@ impl Policy for Ogb {
             scratch_grows: self.lazy.scratch_grows() + self.sampler.scratch_grows(),
             grows: self.grows,
         }
+    }
+
+    /// Extends the default walk with the structural witnesses of the
+    /// O(log N) claim: projection support and tree height, sampler tree
+    /// height, rho drift, and the live eta.
+    fn instruments(&self, v: &mut dyn crate::obs::InstrumentVisitor) {
+        let d = self.diag();
+        v.counter("policy.requests", self.requests);
+        v.counter("policy.removed_coeffs", d.removed_coeffs);
+        v.counter("policy.sample_evictions", d.sample_evictions);
+        v.counter("policy.rebases", d.rebases);
+        v.counter("policy.scratch_grows", d.scratch_grows);
+        v.counter("policy.grows", d.grows);
+        v.gauge("policy.occupancy", self.occupancy());
+        v.gauge("policy.eta", self.eta);
+        v.gauge("proj.support", self.lazy.support() as f64);
+        v.gauge("proj.tree_height", self.lazy.tree_height() as f64);
+        v.gauge("proj.rho", self.lazy.rho());
+        v.gauge("sampler.tree_height", self.sampler.tree_height() as f64);
+        v.gauge("policy.catalog_n", self.lazy.n() as f64);
     }
 }
 

@@ -198,6 +198,13 @@ impl LazySimplex {
         self.z.len()
     }
 
+    /// Height of the ordered multiset `z` (inner levels above the
+    /// leaves) — the live structural witness of the O(log N) per-request
+    /// bound, exported through `Policy::instruments` (DESIGN.md §11).
+    pub fn tree_height(&self) -> u32 {
+        self.z.height()
+    }
+
     pub fn rebase_count(&self) -> u64 {
         self.rebase_count
     }

@@ -89,6 +89,13 @@ impl CoordinatedSampler {
         self.occupancy
     }
 
+    /// Height of the ordered key tree `d` — exported through
+    /// `Policy::instruments` alongside the projection's tree height
+    /// (DESIGN.md §11).
+    pub fn tree_height(&self) -> u32 {
+        self.d.height()
+    }
+
     pub fn n(&self) -> usize {
         self.n
     }

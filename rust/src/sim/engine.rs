@@ -17,8 +17,10 @@
 //! (`serve_batch ≡ serve` is the trait contract; the boundary splitting
 //! keeps the measurement instants identical too).
 
+use std::sync::atomic::Ordering;
 use std::time::Instant;
 
+use crate::obs::{FlightRecorder, InstrumentSet, Metrics, WindowRecord};
 use crate::policies::{Policy, Request};
 use crate::trace::stream::{RequestSource, TraceSource};
 use crate::trace::Trace;
@@ -130,6 +132,94 @@ pub fn run_source<P: Policy + ?Sized, S: RequestSource + ?Sized>(
     source: &mut S,
     cfg: &RunConfig,
 ) -> RunResult {
+    run_source_obs(policy, source, cfg, None)
+}
+
+/// Flight-recorder side state for [`run_source_obs`], created only when a
+/// recorder is attached — the `None` path never constructs it, so obs-off
+/// replays take the exact `run_source` trajectory with zero extra work
+/// (the zero-overhead-when-off contract, asserted by
+/// `rust/tests/obs_flight_recorder.rs`).
+struct ObsAccum {
+    metrics: Metrics,
+    last: crate::obs::MetricsSnapshot,
+    last_evictions: u64,
+    last_pops: u64,
+    last_grows: u64,
+    instruments: InstrumentSet,
+    win_t0: Instant,
+}
+
+impl ObsAccum {
+    fn new<P: Policy + ?Sized>(policy: &P) -> Self {
+        let d = policy.diag();
+        let metrics = Metrics::new();
+        let last = metrics.snapshot();
+        Self {
+            metrics,
+            last,
+            last_evictions: d.sample_evictions,
+            last_pops: d.removed_coeffs,
+            last_grows: d.grows,
+            instruments: InstrumentSet::new(),
+            win_t0: Instant::now(),
+        }
+    }
+
+    /// Fold one served chunk into the live metrics: hit/eviction/pop/grow
+    /// deltas from the policy's cumulative diagnostics plus one weighted
+    /// latency record for the chunk (same accounting shape as the shard
+    /// worker's per-batch path, so sim and server windows are comparable).
+    fn note_chunk<P: Policy + ?Sized>(&mut self, policy: &P, rewards: &[f64], chunk_ns: u64) {
+        let hits = rewards.iter().filter(|&&r| r >= 1.0).count() as u64;
+        let d = policy.diag();
+        self.metrics.record_batch(
+            rewards.len() as u64,
+            hits,
+            d.sample_evictions - self.last_evictions,
+            chunk_ns,
+        );
+        self.metrics
+            .pops
+            .fetch_add(d.removed_coeffs - self.last_pops, Ordering::Relaxed);
+        if d.grows != self.last_grows {
+            self.metrics
+                .grow_events
+                .fetch_add(d.grows - self.last_grows, Ordering::Relaxed);
+        }
+        self.last_evictions = d.sample_evictions;
+        self.last_pops = d.removed_coeffs;
+        self.last_grows = d.grows;
+    }
+
+    /// Emit one windowed delta record plus the policy's current
+    /// instrument values, and roll the window baseline forward.
+    fn emit_window<P: Policy + ?Sized>(&mut self, policy: &P, rec: &mut FlightRecorder) {
+        let snap = self.metrics.snapshot();
+        let win = snap.since(&self.last);
+        rec.record_window(&WindowRecord::from_snapshot(
+            &win,
+            self.win_t0.elapsed().as_secs_f64(),
+        ));
+        self.instruments.clear();
+        policy.instruments(&mut self.instruments);
+        rec.record_instruments(&self.instruments);
+        self.last = snap;
+        self.win_t0 = Instant::now();
+    }
+}
+
+/// [`run_source`] with an optional [`FlightRecorder`] attached: every
+/// metric window additionally emits one JSONL windowed-delta record and
+/// one policy-instruments record (DESIGN.md §11).  `obs = None` is the
+/// plain `run_source` path — same policy call sequence, same RunResult,
+/// no timing reads, no allocation.
+pub fn run_source_obs<P: Policy + ?Sized, S: RequestSource + ?Sized>(
+    policy: &mut P,
+    source: &mut S,
+    cfg: &RunConfig,
+    mut obs: Option<&mut FlightRecorder>,
+) -> RunResult {
     let window = cfg.window.max(1);
     let batch = cfg.batch.max(1);
     let reserve = source
@@ -164,6 +254,8 @@ pub fn run_source<P: Policy + ?Sized, S: RequestSource + ?Sized>(
     // fresh dense id.
     let mut n_live = source.catalog();
 
+    let mut acc = obs.as_ref().map(|_| ObsAccum::new(policy));
+
     let start = Instant::now();
     let mut k = 0usize;
     loop {
@@ -192,8 +284,17 @@ pub fn run_source<P: Policy + ?Sized, S: RequestSource + ?Sized>(
             break;
         }
         rewards.clear();
+        let chunk_t0 = acc.as_ref().map(|_| Instant::now());
         serve_growing(policy, &reqbuf[..got], &mut rewards, &mut n_live);
         debug_assert_eq!(rewards.len(), got, "serve_batch reward count");
+        if let Some(a) = acc.as_mut() {
+            let chunk_ns = chunk_t0
+                .expect("timer set with accumulator")
+                .elapsed()
+                .as_nanos()
+                .min(u128::from(u64::MAX)) as u64;
+            a.note_chunk(policy, &rewards[..got], chunk_ns);
+        }
         for &reward in &rewards[..got] {
             total += reward;
             win_reward += reward;
@@ -209,6 +310,12 @@ pub fn run_source<P: Policy + ?Sized, S: RequestSource + ?Sized>(
                 removed_at_win_start = removed_now;
                 win_reward = 0.0;
                 win_len = 0;
+                // Chunks split at window boundaries (`want` above), so a
+                // window always closes on the chunk's last request — the
+                // accumulator already holds this whole window.
+                if let (Some(a), Some(rec)) = (acc.as_mut(), obs.as_deref_mut()) {
+                    a.emit_window(policy, rec);
+                }
             }
             k += 1;
         }
@@ -219,6 +326,9 @@ pub fn run_source<P: Policy + ?Sized, S: RequestSource + ?Sized>(
         cumulative.push(total / t_total as f64);
         let removed_now = policy.diag().removed_coeffs;
         removed_per_req.push((removed_now - removed_at_win_start) as f64 / win_len as f64);
+        if let (Some(a), Some(rec)) = (acc.as_mut(), obs.as_deref_mut()) {
+            a.emit_window(policy, rec);
+        }
     }
     let elapsed = start.elapsed().as_secs_f64();
 
@@ -363,6 +473,57 @@ mod tests {
         );
         assert_eq!(r.requests, 777);
         assert_eq!(r.windowed.len(), 8); // 7 full + 1 partial
+    }
+
+    /// Attaching a flight recorder must not perturb the replay: same
+    /// policy call sequence, same RunResult series, and at least one
+    /// window + instruments record pair per metric window.
+    #[test]
+    fn obs_recorder_does_not_change_the_trajectory() {
+        use crate::obs::{FlightRecorder, Provenance};
+        let cfg = RunConfig {
+            window: 500,
+            occupancy_every: 250,
+            max_requests: 0,
+            batch: 64,
+        };
+        let mut p1 = crate::policies::Ogb::with_theory_eta(200, 20.0, 5_000, 8, 7);
+        let mut s1 = crate::trace::stream::gen::ZipfSource::new(200, 5_000, 0.9, 7);
+        let r1 = run_source(&mut p1, &mut s1, &cfg);
+
+        let dir = std::env::temp_dir().join("ogb_obs_engine_test");
+        let path = dir.join(format!("engine_{}.jsonl", std::process::id()));
+        let mut p2 = crate::policies::Ogb::with_theory_eta(200, 20.0, 5_000, 8, 7);
+        let mut s2 = crate::trace::stream::gen::ZipfSource::new(200, 5_000, 0.9, 7);
+        let mut rec = FlightRecorder::create(&path, &Provenance::collect("ogb", "zipf")).unwrap();
+        let r2 = run_source_obs(&mut p2, &mut s2, &cfg, Some(&mut rec));
+        // 10 windows -> 10 window records + 10 instruments records
+        assert_eq!(rec.records(), 20);
+        let out = rec.finish().unwrap();
+
+        assert_eq!(r1.total_reward, r2.total_reward);
+        assert_eq!(r1.windowed, r2.windowed);
+        assert_eq!(r1.cumulative, r2.cumulative);
+        assert_eq!(r1.occupancy, r2.occupancy);
+        assert_eq!(r1.removed_per_req, r2.removed_per_req);
+
+        let text = std::fs::read_to_string(&out).unwrap();
+        let windows: Vec<&str> = text
+            .lines()
+            .filter(|l| l.contains("\"obs\":\"window\""))
+            .collect();
+        assert_eq!(windows.len(), 10);
+        for l in &windows {
+            assert!(l.contains("\"requests\":500,"), "window size: {l}");
+            assert!(l.contains("\"provenance\":\"measured:"), "label: {l}");
+        }
+        assert!(
+            text.lines()
+                .filter(|l| l.contains("\"obs\":\"instruments\""))
+                .all(|l| l.contains("\"policy.occupancy\":")),
+            "instruments records carry the occupancy gauge"
+        );
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

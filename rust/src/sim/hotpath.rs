@@ -45,6 +45,7 @@ use std::time::Instant;
 
 use anyhow::{ensure, Context, Result};
 
+use crate::obs::{FlightRecorder, WindowRecord};
 use crate::policies::{self, BuildOpts, Policy, Request};
 use crate::util::bench::{alloc_count, black_box, print_table, BenchResult};
 use crate::util::csv::json::Json;
@@ -279,11 +280,20 @@ struct CellMeasure {
 fn measure_cell(
     policy: &mut policies::AnyPolicy,
     reps: usize,
+    requests_per_rep: u64,
+    mut obs: Option<&mut FlightRecorder>,
     mut drive: impl FnMut(&mut policies::AnyPolicy),
 ) -> CellMeasure {
     // Warm-up replay: reaches steady state and sizes every scratch
     // buffer before anything is measured.
     drive(policy);
+    if let Some(rec) = obs.as_deref_mut() {
+        // Warm-up emit: sizes the recorder's reused line buffer so the
+        // per-rep emits below fall under the allocation count — the CI
+        // smoke job runs with --obs-out precisely to prove that an
+        // enabled recorder keeps allocs/request at 0.
+        rec.record_window(&WindowRecord::default());
+    }
     let mut samples: Vec<f64> = Vec::with_capacity(reps);
     let d0 = policy.diag();
     let a0 = alloc_count::current();
@@ -292,6 +302,19 @@ fn measure_cell(
         drive(policy);
         // pre-reserved push: no allocation inside the window
         samples.push(t0.elapsed().as_nanos() as f64);
+        if let Some(rec) = obs.as_deref_mut() {
+            // one windowed record per timed rep, deliberately INSIDE the
+            // allocation-counted region (but outside the timed sample)
+            let d = policy.diag();
+            rec.record_window(&WindowRecord {
+                requests: requests_per_rep,
+                pops: (d.removed_coeffs - d0.removed_coeffs)
+                    + (d.sample_evictions - d0.sample_evictions),
+                evictions: d.sample_evictions - d0.sample_evictions,
+                elapsed_s: *samples.last().unwrap() / 1e9,
+                ..Default::default()
+            });
+        }
     }
     let allocs = alloc_count::current() - a0;
     let d1 = policy.diag();
@@ -306,6 +329,17 @@ fn measure_cell(
 
 /// Run the suite: per-request and batched mode rows per cell.
 pub fn run_hotpath(cfg: &HotpathConfig) -> Result<HotpathResult> {
+    run_hotpath_obs(cfg, None)
+}
+
+/// [`run_hotpath`] with an optional flight recorder: each timed rep of
+/// each cell emits one windowed record *inside* the allocation-counted
+/// region, making `ogb-cache bench --smoke --obs-out …` a proof that an
+/// enabled recorder does not break the 0 allocs/request contract.
+pub fn run_hotpath_obs(
+    cfg: &HotpathConfig,
+    mut obs: Option<&mut FlightRecorder>,
+) -> Result<HotpathResult> {
     ensure!(!cfg.policies.is_empty(), "bench needs at least one policy");
     ensure!(!cfg.ns.is_empty(), "bench needs at least one catalog size");
     ensure!(
@@ -372,19 +406,20 @@ pub fn run_hotpath(cfg: &HotpathConfig) -> Result<HotpathResult> {
                     policies::build(name, n, c, &opts, None)
                         .with_context(|| format!("bench policy `{name}`"))
                 };
-                let measure_per_request = |policy: &mut policies::AnyPolicy| {
-                    measure_cell(policy, cfg.reps, |p| {
-                        for &r in &reqs {
-                            black_box(p.request(r));
-                        }
-                    })
-                };
+                let measure_per_request =
+                    |policy: &mut policies::AnyPolicy, obs: Option<&mut FlightRecorder>| {
+                        measure_cell(policy, cfg.reps, cfg.requests as u64, obs, |p| {
+                            for &r in &reqs {
+                                black_box(p.request(r));
+                            }
+                        })
+                    };
 
                 // per-request baseline at the configured batch (the v1
                 // row every earlier BENCH_hotpath.json measured)
                 {
                     let mut policy = build_policy(cfg.batch)?;
-                    let m = measure_per_request(&mut policy);
+                    let m = measure_per_request(&mut policy, obs.as_deref_mut());
                     push_row(&mut rows, "per_request", 1, cfg.batch, m);
                 }
 
@@ -396,18 +431,24 @@ pub fn run_hotpath(cfg: &HotpathConfig) -> Result<HotpathResult> {
                 for &bb in &cfg.batch_sizes {
                     if bb != cfg.batch {
                         let mut policy = build_policy(bb)?;
-                        let m = measure_per_request(&mut policy);
+                        let m = measure_per_request(&mut policy, obs.as_deref_mut());
                         push_row(&mut rows, "per_request", 1, bb, m);
                     }
                     let mut policy = build_policy(bb)?;
                     let mut rewards: Vec<f64> = Vec::with_capacity(bb);
-                    let m = measure_cell(&mut policy, cfg.reps, |p| {
-                        for chunk in reqs_w.chunks(bb) {
-                            rewards.clear();
-                            p.serve_batch(chunk, &mut rewards);
-                            black_box(rewards.last().copied());
-                        }
-                    });
+                    let m = measure_cell(
+                        &mut policy,
+                        cfg.reps,
+                        cfg.requests as u64,
+                        obs.as_deref_mut(),
+                        |p| {
+                            for chunk in reqs_w.chunks(bb) {
+                                rewards.clear();
+                                p.serve_batch(chunk, &mut rewards);
+                                black_box(rewards.last().copied());
+                            }
+                        },
+                    );
                     push_row(&mut rows, "batched", bb, bb, m);
                 }
             }

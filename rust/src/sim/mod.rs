@@ -17,9 +17,12 @@ pub mod replay;
 pub mod shardbench;
 pub mod sweep;
 
-pub use engine::{run, run_source, serve_growing, RunConfig, RunResult};
-pub use hotpath::{run_hotpath, HotpathConfig, HotpathResult, HotpathRow};
+pub use engine::{run, run_source, run_source_obs, serve_growing, RunConfig, RunResult};
+pub use hotpath::{run_hotpath, run_hotpath_obs, HotpathConfig, HotpathResult, HotpathRow};
 pub use regret::{regret_series, regret_series_weighted, RegretPoint, StreamingOpt};
-pub use replay::{run_replay, ReplayConfig, ReplayMode, ReplayResult, ReplayRow};
-pub use shardbench::{run_shardbench, ServeMode, ShardBenchConfig, ShardBenchResult, ShardBenchRow};
+pub use replay::{run_replay, run_replay_obs, ReplayConfig, ReplayMode, ReplayResult, ReplayRow};
+pub use shardbench::{
+    run_shardbench, run_shardbench_obs, ServeMode, ShardBenchConfig, ShardBenchResult,
+    ShardBenchRow,
+};
 pub use sweep::{run_sweep, SweepCell, SweepConfig, SweepResult};

@@ -29,8 +29,9 @@ use std::time::Instant;
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::obs::FlightRecorder;
 use crate::policies::{self, AnyPolicy, BuildOpts, Opt, Policy};
-use crate::sim::engine::{run_source, RunConfig};
+use crate::sim::engine::{run_source_obs, RunConfig};
 use crate::sim::regret::StreamingOpt;
 use crate::trace::file::OgbtWriter;
 use crate::trace::ingest::{open_raw, KeyRemapper, RemappedSource};
@@ -237,6 +238,16 @@ fn check_stream(src: &RemappedSource) -> Result<()> {
 
 /// Run the replay (see module docs).
 pub fn run_replay(cfg: &ReplayConfig) -> Result<ReplayResult> {
+    run_replay_obs(cfg, None)
+}
+
+/// [`run_replay`] with an optional flight recorder threaded into each
+/// policy pass (the engine emits one windowed record per pass — replay
+/// runs with `window == T`).
+pub fn run_replay_obs(
+    cfg: &ReplayConfig,
+    mut obs: Option<&mut FlightRecorder>,
+) -> Result<ReplayResult> {
     ensure!(!cfg.policies.is_empty(), "replay needs at least one policy");
     let wall0 = Instant::now();
 
@@ -280,7 +291,13 @@ pub fn run_replay(cfg: &ReplayConfig) -> Result<ReplayResult> {
 
     if !cfg.snapshot_out.is_empty() {
         remapper.save_snapshot(&cfg.snapshot_out)?;
-        crate::log_info!("wrote remapper snapshot {}", cfg.snapshot_out);
+        crate::log_span!(
+            crate::util::logger::Level::Info,
+            "snapshot_spill",
+            "path" => &cfg.snapshot_out,
+            "keys" => catalog,
+            "collisions" => remapper.collisions(),
+        );
     }
     if !cfg.densify_out.is_empty() {
         let n = densify(&cfg.input, &remapper, &source_name, cfg, catalog)?;
@@ -318,7 +335,7 @@ pub fn run_replay(cfg: &ReplayConfig) -> Result<ReplayResult> {
             policies::build(name, n0, c, &opts, None)
                 .with_context(|| format!("replay policy `{name}`"))?
         };
-        let r = run_source(
+        let r = run_source_obs(
             &mut policy,
             &mut src,
             &RunConfig {
@@ -327,6 +344,7 @@ pub fn run_replay(cfg: &ReplayConfig) -> Result<ReplayResult> {
                 max_requests: cfg.max_requests,
                 batch: cfg.batch.max(RunConfig::default().batch),
             },
+            obs.as_deref_mut(),
         );
         check_stream(&src)?;
         ensure!(

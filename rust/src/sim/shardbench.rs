@@ -34,6 +34,7 @@ use std::time::Instant;
 use anyhow::{ensure, Context, Result};
 
 use crate::coordinator::{CacheServer, ServerConfig, ShardedClient};
+use crate::obs::{FlightRecorder, WindowRecord};
 use crate::util::bench::{alloc_count, print_table, BenchResult};
 use crate::util::csv::json::Json;
 use crate::util::{Xoshiro256pp, Zipf};
@@ -314,6 +315,18 @@ fn drive(client: &mut ShardedClient, reqs: &[u64]) {
 
 /// Run the suite: one warm-up pass plus `reps` timed passes per cell.
 pub fn run_shardbench(cfg: &ShardBenchConfig) -> Result<ShardBenchResult> {
+    run_shardbench_obs(cfg, None)
+}
+
+/// [`run_shardbench`] with an optional flight recorder: each cell emits
+/// a warm-up window and a steady-state window built from the same merged
+/// shard snapshots the rows report.  Both emits sit *outside* the
+/// allocation-counted region, so the steady-allocs-0 contract is
+/// measured exactly as in the plain run.
+pub fn run_shardbench_obs(
+    cfg: &ShardBenchConfig,
+    mut obs: Option<&mut FlightRecorder>,
+) -> Result<ShardBenchResult> {
     ensure!(!cfg.policies.is_empty(), "shard bench needs a policy");
     ensure!(!cfg.modes.is_empty(), "shard bench needs a serve mode");
     ensure!(!cfg.shard_counts.is_empty(), "shard bench needs shard counts");
@@ -364,12 +377,17 @@ pub fn run_shardbench(cfg: &ShardBenchConfig) -> Result<ShardBenchResult> {
                         // Warm-up pass: reaches policy steady state and
                         // populates every batch free list before
                         // measuring.
+                        let warm_t0 = Instant::now();
                         drive(&mut client, &reqs);
+                        let warm_elapsed = warm_t0.elapsed().as_secs_f64();
                         // Snapshot so percentiles/hit_ratio below cover
                         // only the timed passes (cold-start spikes
                         // excluded), like the throughput and allocation
                         // windows.
                         let warm = server.snapshot();
+                        if let Some(rec) = obs.as_deref_mut() {
+                            rec.record_window(&WindowRecord::from_snapshot(&warm, warm_elapsed));
+                        }
 
                         let mut samples: Vec<f64> = Vec::with_capacity(cfg.reps);
                         let a0 = alloc_count::current();
@@ -382,6 +400,10 @@ pub fn run_shardbench(cfg: &ShardBenchConfig) -> Result<ShardBenchResult> {
 
                         drop(client);
                         let snap = server.shutdown().since(&warm);
+                        if let Some(rec) = obs.as_deref_mut() {
+                            let timed_s = samples.iter().sum::<f64>() / 1e9;
+                            rec.record_window(&WindowRecord::from_snapshot(&snap, timed_s));
+                        }
 
                         samples.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
                         let timed = (cfg.reps * cfg.requests) as u64;

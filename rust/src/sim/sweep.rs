@@ -114,6 +114,21 @@ pub struct SweepResult {
 }
 
 impl SweepResult {
+    /// Emit one windowed record per grid cell into a flight recorder —
+    /// post-hoc (cells run concurrently on worker threads, so live
+    /// per-window emission would interleave; the per-cell summary is the
+    /// natural window for a sweep).
+    pub fn record_obs(&self, rec: &mut crate::obs::FlightRecorder) {
+        for cell in &self.cells {
+            rec.record_window(&crate::obs::WindowRecord {
+                requests: cell.requests as u64,
+                hits: (cell.hit_ratio * cell.requests as f64).round().max(0.0) as u64,
+                elapsed_s: cell.elapsed_s,
+                ..Default::default()
+            });
+        }
+    }
+
     /// Aggregate replay throughput: requests replayed across all cells
     /// (excluding the OPT pass) per second of the grid phase.
     pub fn aggregate_rps(&self) -> f64 {

@@ -146,6 +146,14 @@ impl FlatTree {
         self.len == 0
     }
 
+    /// Number of inner levels above the leaves (0 = root is a leaf).
+    /// With B≈32-wide nodes this is the live witness of the O(log N)
+    /// claim: height grows as log_B(len).
+    #[inline]
+    pub fn height(&self) -> u32 {
+        self.height
+    }
+
     /// Arena footprint diagnostics: (live leaves, live inner nodes).
     /// A rooted-but-empty tree reports one (empty) live leaf.
     pub fn node_counts(&self) -> (usize, usize) {

@@ -1,6 +1,14 @@
 //! Leveled stderr logger controlled by `OGB_LOG` (error|warn|info|debug|trace).
 //! Thread-safe, zero-dependency; intentionally minimal — the coordinator's
-//! operational metrics go through `coordinator::metrics`, not logs.
+//! operational metrics go through `obs::Metrics`, not logs.
+//!
+//! Two line formats, selected by `OGB_LOG_FORMAT` (`text` default, `json`
+//! for machine consumers): text renders `[{t}s LEVEL module] msg`, json
+//! renders one object per line (`{"ts":..,"level":..,"module":..,"msg":..,
+//! "fields":{..}}`).  Rare-but-important paths (rebase, grow, snapshot
+//! spill, shard drain) emit **span events** — a named event plus key=value
+//! fields — through [`span`] / the `log_span!` macro, which evaluates its
+//! field expressions only when the level is enabled.
 
 use std::io::Write;
 use std::sync::atomic::{AtomicU8, Ordering};
@@ -39,9 +47,28 @@ impl Level {
             Level::Trace => "TRACE",
         }
     }
+
+    fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+            Level::Trace => "trace",
+        }
+    }
+}
+
+/// Output line format (`OGB_LOG_FORMAT`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Format {
+    Text = 0,
+    Json = 1,
 }
 
 static MAX_LEVEL: AtomicU8 = AtomicU8::new(2); // Info
+static FORMAT: AtomicU8 = AtomicU8::new(0); // Text
 static START: Lazy<Instant> = Lazy::new(Instant::now);
 
 /// `once_cell` is vendored but only as the full crate; to stay dependency-
@@ -71,11 +98,17 @@ mod once_cell_lite {
     }
 }
 
-/// Initialize from the OGB_LOG env var; safe to call multiple times.
+/// Initialize from the OGB_LOG / OGB_LOG_FORMAT env vars; safe to call
+/// multiple times.
 pub fn init() {
     if let Ok(v) = std::env::var("OGB_LOG") {
         if let Some(l) = Level::parse(&v) {
             MAX_LEVEL.store(l as u8, Ordering::Relaxed);
+        }
+    }
+    if let Ok(v) = std::env::var("OGB_LOG_FORMAT") {
+        if v.eq_ignore_ascii_case("json") {
+            FORMAT.store(Format::Json as u8, Ordering::Relaxed);
         }
     }
     let _ = START.elapsed(); // pin the epoch
@@ -85,25 +118,102 @@ pub fn set_level(l: Level) {
     MAX_LEVEL.store(l as u8, Ordering::Relaxed);
 }
 
+pub fn set_format(f: Format) {
+    FORMAT.store(f as u8, Ordering::Relaxed);
+}
+
+pub fn format() -> Format {
+    if FORMAT.load(Ordering::Relaxed) == Format::Json as u8 {
+        Format::Json
+    } else {
+        Format::Text
+    }
+}
+
 #[inline]
 pub fn enabled(l: Level) -> bool {
     (l as u8) <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// JSON string escape (mirrors `util::csv::json`; inlined to keep the
+/// logger free of cross-module dependencies on the hot error path).
+fn push_json_str(out: &mut String, s: &str) {
+    use std::fmt::Write as _;
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn emit(level: Level, module: &str, msg: std::fmt::Arguments, fields: &[(&str, String)]) {
+    use std::fmt::Write as _;
+    let t = START.elapsed();
+    let mut line = String::with_capacity(96);
+    match format() {
+        Format::Text => {
+            let _ = write!(
+                line,
+                "[{:>8.3}s {} {}] {}",
+                t.as_secs_f64(),
+                level.tag(),
+                module,
+                msg
+            );
+            for (k, v) in fields {
+                let _ = write!(line, " {k}={v}");
+            }
+        }
+        Format::Json => {
+            let _ = write!(line, "{{\"ts\":{:.6},\"level\":", t.as_secs_f64());
+            push_json_str(&mut line, level.name());
+            line.push_str(",\"module\":");
+            push_json_str(&mut line, module);
+            line.push_str(",\"msg\":");
+            push_json_str(&mut line, &msg.to_string());
+            if !fields.is_empty() {
+                line.push_str(",\"fields\":{");
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        line.push(',');
+                    }
+                    push_json_str(&mut line, k);
+                    line.push(':');
+                    push_json_str(&mut line, v);
+                }
+                line.push('}');
+            }
+            line.push('}');
+        }
+    }
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "{line}");
 }
 
 pub fn log(level: Level, module: &str, msg: std::fmt::Arguments) {
     if !enabled(level) {
         return;
     }
-    let t = START.elapsed();
-    let mut err = std::io::stderr().lock();
-    let _ = writeln!(
-        err,
-        "[{:>8.3}s {} {}] {}",
-        t.as_secs_f64(),
-        level.tag(),
-        module,
-        msg
-    );
+    emit(level, module, msg, &[]);
+}
+
+/// Structured span event for rare-but-important paths (rebase, grow,
+/// snapshot spill, shard drain): a named event plus key=value fields,
+/// machine-parseable under `OGB_LOG_FORMAT=json`.  Prefer the `log_span!`
+/// macro, which skips field formatting when the level is disabled.
+pub fn span(level: Level, module: &str, event: &str, fields: &[(&str, String)]) {
+    if !enabled(level) {
+        return;
+    }
+    emit(level, module, format_args!("span {event}"), fields);
 }
 
 #[macro_export]
@@ -114,6 +224,26 @@ macro_rules! log_warn { ($($arg:tt)*) => { $crate::util::logger::log($crate::uti
 macro_rules! log_info { ($($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Info, module_path!(), format_args!($($arg)*)) } }
 #[macro_export]
 macro_rules! log_debug { ($($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Debug, module_path!(), format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_trace { ($($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Trace, module_path!(), format_args!($($arg)*)) } }
+
+/// Span event with lazily-formatted fields:
+/// `log_span!(Level::Debug, "rebase", "shift" => shift, "n" => n);`
+/// Field expressions are only evaluated when the level is enabled, so
+/// call sites on rare paths stay free when logging is off.
+#[macro_export]
+macro_rules! log_span {
+    ($lvl:expr, $event:expr $(, $k:literal => $v:expr)* $(,)?) => {
+        if $crate::util::logger::enabled($lvl) {
+            $crate::util::logger::span(
+                $lvl,
+                module_path!(),
+                $event,
+                &[$(($k, format!("{}", $v))),*],
+            );
+        }
+    };
+}
 
 #[cfg(test)]
 mod tests {
@@ -133,5 +263,32 @@ mod tests {
         assert!(enabled(Level::Warn));
         assert!(!enabled(Level::Info));
         set_level(Level::Info);
+    }
+
+    #[test]
+    fn trace_macro_compiles_and_filters() {
+        // Info default: trace is filtered, so this is a no-op — the test
+        // is that the macro exists and routes through the leveled gate.
+        assert!(!enabled(Level::Trace));
+        crate::log_trace!("invisible {}", 42);
+        crate::log_span!(Level::Trace, "noop", "k" => 1);
+    }
+
+    #[test]
+    fn json_escape_is_valid() {
+        let mut s = String::new();
+        push_json_str(&mut s, "a\"b\\c\nd\u{1}e");
+        assert_eq!(s, "\"a\\\"b\\\\c\\nd\\u0001e\"");
+    }
+
+    #[test]
+    fn format_toggle() {
+        assert_eq!(format(), Format::Text);
+        set_format(Format::Json);
+        assert_eq!(format(), Format::Json);
+        // both formats render without panicking even with fields
+        span(Level::Error, "test", "probe", &[("k", "v\"w".to_string())]);
+        set_format(Format::Text);
+        span(Level::Error, "test", "probe", &[("k", "v".to_string())]);
     }
 }

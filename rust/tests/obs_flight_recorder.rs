@@ -1,0 +1,196 @@
+//! End-to-end flight-recorder tests (DESIGN.md §11): the
+//! zero-overhead-when-off differential (obs on/off runs are
+//! trajectory-identical), the JSONL schema + provenance contract of
+//! `--obs-out`, and the eviction-counter wiring through the sharded
+//! server under an adversarial capacity-1 stream.
+
+use std::path::PathBuf;
+
+use ogb_cache::coordinator::{CacheServer, ServerConfig};
+use ogb_cache::obs::{FlightRecorder, Provenance, WindowRecord};
+use ogb_cache::policies::{self, BuildOpts};
+use ogb_cache::sim::{run_source, run_source_obs, RunConfig};
+use ogb_cache::trace::stream::ZipfSource;
+
+fn tmp_path(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("ogb_obs_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{}_{}.jsonl", name, std::process::id()))
+}
+
+fn build_ogb(n: usize, c: usize, t: usize, seed: u64) -> policies::AnyPolicy {
+    policies::build("ogb{batch=8}", n, c, &BuildOpts::new(t, 8, seed), None).unwrap()
+}
+
+/// Extract the integer value of `"key":<int>` from a JSONL line.
+fn field_u64(line: &str, key: &str) -> u64 {
+    let pat = format!("\"{key}\":");
+    let at = line.find(&pat).unwrap_or_else(|| panic!("no {key} in {line}"));
+    line[at + pat.len()..]
+        .chars()
+        .take_while(|ch| ch.is_ascii_digit())
+        .collect::<String>()
+        .parse()
+        .unwrap_or_else(|_| panic!("non-integer {key} in {line}"))
+}
+
+/// Acceptance differential: attaching a recorder must not perturb the
+/// trajectory — every reported series is bit-identical to the plain run.
+#[test]
+fn recorder_attached_run_is_trajectory_identical() {
+    let (n, t, seed) = (1_000, 30_000, 11);
+    let c = 50;
+    let cfg = RunConfig {
+        window: 10_000,
+        occupancy_every: 5_000,
+        max_requests: 0,
+        batch: 64,
+    };
+
+    let mut p_plain = build_ogb(n, c, t, seed);
+    let mut src = ZipfSource::new(n, t, 0.9, seed);
+    let plain = run_source(&mut p_plain, &mut src, &cfg);
+
+    let path = tmp_path("differential");
+    let mut rec =
+        FlightRecorder::create(&path, &Provenance::collect("ogb{batch=8}", "it:zipf")).unwrap();
+    let mut p_obs = build_ogb(n, c, t, seed);
+    let mut src = ZipfSource::new(n, t, 0.9, seed);
+    let obs = run_source_obs(&mut p_obs, &mut src, &cfg, Some(&mut rec));
+    rec.finish().unwrap();
+
+    assert_eq!(plain.total_reward, obs.total_reward, "reward diverged");
+    assert_eq!(plain.windowed, obs.windowed, "windowed series diverged");
+    assert_eq!(plain.cumulative, obs.cumulative, "cumulative diverged");
+    assert_eq!(plain.occupancy, obs.occupancy, "occupancy diverged");
+    assert_eq!(
+        plain.removed_per_req, obs.removed_per_req,
+        "pops series diverged"
+    );
+    std::fs::remove_file(path).ok();
+}
+
+/// The JSONL schema contract: every line is one self-describing object
+/// with monotone `seq`, the windowed counters, latency percentiles, and
+/// the full provenance stamp.
+#[test]
+fn obs_out_jsonl_schema_and_provenance() {
+    let (n, t, seed) = (500, 20_000, 3);
+    let path = tmp_path("schema");
+    let mut rec =
+        FlightRecorder::create(&path, &Provenance::collect("ogb{batch=8}", "it:schema")).unwrap();
+    let mut p = build_ogb(n, 25, t, seed);
+    let mut src = ZipfSource::new(n, t, 0.9, seed);
+    let cfg = RunConfig {
+        window: 5_000,
+        occupancy_every: 0,
+        max_requests: 0,
+        batch: 64,
+    };
+    let r = run_source_obs(&mut p, &mut src, &cfg, Some(&mut rec));
+    assert_eq!(r.requests, t);
+    // 4 windows, each one "window" + one "instruments" record
+    assert_eq!(rec.records(), 8);
+    rec.finish().unwrap();
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 8);
+    let mut requests_total = 0u64;
+    for (i, l) in lines.iter().enumerate() {
+        assert!(l.starts_with('{') && l.ends_with('}'), "not JSONL: {l}");
+        assert_eq!(field_u64(l, "seq"), i as u64, "seq not monotone");
+        for key in [
+            "\"git_sha\":",
+            "\"hostname\":",
+            "\"cpus\":",
+            "\"policy\":\"ogb{batch=8}\"",
+            "\"scenario\":\"it:schema\"",
+            "\"provenance\":\"measured:",
+        ] {
+            assert!(l.contains(key), "missing {key} in {l}");
+        }
+    }
+    for l in lines.iter().filter(|l| l.contains("\"obs\":\"window\"")) {
+        for key in [
+            "\"hit_ratio\":",
+            "\"req_per_s\":",
+            "\"pops_per_request\":",
+            "\"evictions\":",
+            "\"ring_depth_hw\":",
+            "\"reap_on_full\":",
+            "\"p50_ns\":",
+            "\"p99_ns\":",
+            "\"p999_ns\":",
+        ] {
+            assert!(l.contains(key), "missing {key} in {l}");
+        }
+        requests_total += field_u64(l, "requests");
+    }
+    assert_eq!(requests_total, t as u64, "windows must tile the horizon");
+    let instruments: Vec<&&str> = lines
+        .iter()
+        .filter(|l| l.contains("\"obs\":\"instruments\""))
+        .collect();
+    assert_eq!(instruments.len(), 4);
+    for l in instruments {
+        assert!(l.contains("\"policy.occupancy\":"), "missing occupancy: {l}");
+        assert!(
+            l.contains("\"policy.removed_coeffs\":"),
+            "missing pops counter: {l}"
+        );
+        assert!(
+            l.contains("\"proj.tree_height\":"),
+            "missing FlatTree depth gauge: {l}"
+        );
+    }
+    std::fs::remove_file(path).ok();
+}
+
+/// Satellite 1 at system level: an adversarial distinct-key stream
+/// against a capacity-1 shard evicts on every miss after the first, and
+/// the count survives the shard loop's delta wiring into the merged
+/// server snapshot (it was hardwired to 0 before PR 6).
+#[test]
+fn capacity_one_server_counts_every_eviction() {
+    let catalog = 64usize;
+    let requests = 640usize;
+    let mut server = CacheServer::start(ServerConfig {
+        catalog,
+        capacity: 1,
+        shards: 1,
+        policy: "lru".into(),
+        batch: 8,
+        horizon: requests,
+        queue_depth: 32,
+        clients: 1,
+        seed: 7,
+        rebase_threshold: None,
+        per_request_serve: false,
+    })
+    .unwrap();
+    let mut client = server.take_client().unwrap();
+    for i in 0..requests {
+        // cycle through the catalog: cache size 1 never sees a hit
+        client.get((i % catalog) as u64);
+    }
+    client.drain();
+    drop(client);
+    let snap = server.shutdown();
+    assert_eq!(snap.requests, requests as u64);
+    assert_eq!(snap.hits, 0, "capacity-1 cycling stream cannot hit");
+    assert_eq!(
+        snap.evictions,
+        requests as u64 - 1,
+        "every miss after the first insert must evict"
+    );
+    assert!(
+        snap.ring_depth_hw >= 1 && snap.ring_depth_hw <= 32 + 1,
+        "ring high-water {} out of [1, queue_depth+1]",
+        snap.ring_depth_hw
+    );
+    // the single-policy server's windows feed the recorder unchanged
+    let w = WindowRecord::from_snapshot(&snap, 1.0);
+    assert_eq!(w.evictions, requests as u64 - 1);
+    assert_eq!(w.requests, requests as u64);
+}

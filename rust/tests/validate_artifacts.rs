@@ -54,6 +54,89 @@ fn committed_bench_snapshots_keep_provenance_and_mode_rows() {
     }
 }
 
+/// Flight-recorder output guard, driven by the CI obs-smoke job: point
+/// `OGB_OBS_JSONL` at a `--obs-out` file (skips with a notice when
+/// unset, so plain `cargo test` needs no fixture) and every line must be
+/// a self-describing JSONL record — provenance-stamped, `seq`-monotone,
+/// with ≥ 2 windowed records whose counters are sane; set
+/// `OGB_OBS_RING_BOUND` to additionally bound the ring high-water mark
+/// by the known queue depth.
+#[test]
+fn obs_jsonl_schema_holds() {
+    let Ok(path) = std::env::var("OGB_OBS_JSONL") else {
+        eprintln!("SKIP: OGB_OBS_JSONL not set — run `ogb-cache ... --obs-out <f>` first");
+        return;
+    };
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {path}: {e}"));
+    let field = |line: &str, key: &str| -> u64 {
+        let pat = format!("\"{key}\":");
+        let at = line
+            .find(&pat)
+            .unwrap_or_else(|| panic!("no {key} in {line}"));
+        line[at + pat.len()..]
+            .chars()
+            .take_while(|ch| ch.is_ascii_digit())
+            .collect::<String>()
+            .parse()
+            .unwrap_or_else(|_| panic!("non-integer {key} in {line}"))
+    };
+    let ring_bound: Option<u64> = std::env::var("OGB_OBS_RING_BOUND")
+        .ok()
+        .map(|s| s.parse().expect("OGB_OBS_RING_BOUND must be an integer"));
+    let mut windows = 0u64;
+    let mut next_seq = 0u64;
+    for line in text.lines() {
+        assert!(
+            line.starts_with('{') && line.ends_with('}'),
+            "{path}: not a JSONL object: {line}"
+        );
+        for key in [
+            "\"git_sha\":",
+            "\"hostname\":",
+            "\"cpus\":",
+            "\"policy\":",
+            "\"scenario\":",
+            "\"provenance\":\"measured:",
+        ] {
+            assert!(line.contains(key), "{path}: missing {key} in {line}");
+        }
+        assert_eq!(field(line, "seq"), next_seq, "{path}: seq not monotone");
+        next_seq += 1;
+        if line.contains("\"obs\":\"window\"") {
+            windows += 1;
+            for key in [
+                "\"requests\":",
+                "\"hit_ratio\":",
+                "\"pops_per_request\":",
+                "\"ring_depth_hw\":",
+                "\"reap_on_full\":",
+                "\"p50_ns\":",
+                "\"p99_ns\":",
+                "\"p999_ns\":",
+            ] {
+                assert!(line.contains(key), "{path}: window missing {key}: {line}");
+            }
+            assert!(
+                field(line, "p99_ns") >= field(line, "p50_ns"),
+                "{path}: percentile order violated: {line}"
+            );
+            if let Some(bound) = ring_bound {
+                // the high-water counts the popped batch plus what is
+                // still queued behind it, so the bound is depth + 1
+                let hw = field(line, "ring_depth_hw");
+                assert!(
+                    hw <= bound + 1,
+                    "{path}: ring high-water {hw} exceeds queue depth {bound}+1"
+                );
+            }
+        }
+    }
+    assert!(
+        windows >= 2,
+        "{path}: expected >= 2 windowed records, got {windows}"
+    );
+}
+
 #[test]
 fn three_way_projection_triangle() {
     let Some(reg) = registry() else { return };
