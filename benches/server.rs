@@ -21,6 +21,7 @@ fn run_clients(shards: usize, clients: usize, requests: usize) -> (f64, f64, u64
         seed: 3,
         rebase_threshold: None,
         per_request_serve: false,
+        ..Default::default()
     };
     let catalog = cfg.catalog as u64;
     let mut server = CacheServer::start(cfg).expect("server");

@@ -49,6 +49,7 @@ fn main() -> anyhow::Result<()> {
         seed: 1,
         rebase_threshold: None,
         per_request_serve: false,
+        ..Default::default()
     };
     println!(
         "server: shards={} capacity={} batch={} queue_depth={} clients={clients}",

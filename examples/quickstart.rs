@@ -39,6 +39,18 @@
 //!     grep -o '"ring_depth_hw":[0-9]*' obs.jsonl       # backpressure high-water
 //!     head -1 obs.jsonl | grep -o '"provenance":"[^"]*"'   # measured-vs-projected
 //!
+//! Fault tolerance (DESIGN.md §12): the serving engine supervises its
+//! shards — checkpointed policies restart in place and re-serve the
+//! lost batch exactly once.  Inject deterministic faults to watch it:
+//!
+//!     cargo run --release -- serve --smoke --checkpoint-every 1 \
+//!         --fault-spec "panic@shard0:t=2000"
+//!
+//! recovers bit-identically to the fault-free run (`shard_restarts` and
+//! `degraded_replies` land in BENCH_shard.json and the obs windows);
+//! `--fault-spec "corrupt@trace:byte=4096"` on `ogb-cache replay`
+//! exercises the ingest hardening instead.
+//!
 //! The end of this example does the same from the library API.
 
 use ogb_cache::coordinator::{CacheServer, ServerConfig};

@@ -105,6 +105,16 @@ impl Batch {
         self.seq = 0;
     }
 
+    /// Clear only the hit bits, keeping length, items, and seq — used by
+    /// the shard supervisor to re-serve the same batch after a restart
+    /// (the restored policy recomputes every reply from scratch).
+    pub fn clear_hits(&mut self) {
+        let words = (self.len as usize + 63) / 64;
+        for w in &mut self.hits[..words] {
+            *w = 0;
+        }
+    }
+
     /// Stamp the batch-level enqueue time (called once at flush — the
     /// latency recorded per request covers queueing + policy work from
     /// this instant, like the seed's per-request stamp did).
@@ -158,6 +168,23 @@ mod tests {
         b.push(1);
         assert_eq!(b.items(), &[1]);
         assert!(!b.hit(0));
+    }
+
+    #[test]
+    fn clear_hits_keeps_items_and_seq() {
+        let mut b = Batch::new(70);
+        for i in 0..70u32 {
+            b.push(i);
+        }
+        b.set_seq(9);
+        for i in 0..70 {
+            b.set_hit(i);
+        }
+        b.clear_hits();
+        assert_eq!(b.hit_count(), 0);
+        assert_eq!(b.len(), 70);
+        assert_eq!(b.seq(), 9);
+        assert_eq!(b.item(69), 69);
     }
 
     #[test]

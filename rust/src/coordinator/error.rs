@@ -1,0 +1,57 @@
+//! Typed failures for the sharded serving engine (ISSUE 7).
+//!
+//! Before fault tolerance, every abnormal condition in the coordinator
+//! was a `panic!` — a dead shard took the whole server down and a full
+//! ring spun forever.  The supervisor (shard.rs) now contains policy
+//! panics and restarts from checkpoints; what escapes to callers is one
+//! of these typed errors, so harnesses can degrade gracefully (report
+//! misses, finish the run) instead of hanging or aborting.
+
+use std::fmt;
+
+/// An error surfaced by the sharded serving engine.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CoordinatorError {
+    /// A shard worker's thread is gone (channel disconnected) and the
+    /// supervisor could not bring it back.  Replies still owed by that
+    /// shard are accounted as `degraded_replies` misses.
+    ShardDisconnected { shard: usize },
+    /// A request ring stayed full past the client's bounded flush
+    /// timeout; the batch was dropped and accounted as degraded misses
+    /// rather than spinning forever.
+    FlushTimeout { shard: usize, waited_ms: u64 },
+}
+
+impl fmt::Display for CoordinatorError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::ShardDisconnected { shard } => {
+                write!(f, "shard {shard} disconnected and could not be restarted")
+            }
+            Self::FlushTimeout { shard, waited_ms } => {
+                write!(
+                    f,
+                    "shard {shard} ring full after {waited_ms} ms; batch dropped as degraded"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for CoordinatorError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_shard() {
+        let e = CoordinatorError::ShardDisconnected { shard: 3 };
+        assert!(e.to_string().contains("shard 3"));
+        let e = CoordinatorError::FlushTimeout {
+            shard: 1,
+            waited_ms: 250,
+        };
+        assert!(e.to_string().contains("250 ms"));
+    }
+}

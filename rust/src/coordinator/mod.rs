@@ -10,6 +10,8 @@
 //!   through reverse rings so the request path never allocates;
 //! * [`router`]  — stable hash routing plus [`router::Partition`], the
 //!   cached bijection `global id ↔ (shard, dense local id)`;
+//! * [`error`]   — typed [`CoordinatorError`]s replacing the historical
+//!   panics, so callers degrade (account misses) instead of aborting;
 //! * [`shard`]   — one OS thread per shard owning a concrete policy
 //!   over its dense local catalog, draining request batches (each full
 //!   batch maps onto one Algorithm 3 UPDATESAMPLE cadence when ring
@@ -30,6 +32,7 @@
 //! scaling record, `BENCH_shard.json`), `examples/cache_server.rs`.
 
 pub mod batch;
+pub mod error;
 pub mod metrics;
 pub mod ring;
 pub mod router;
@@ -37,6 +40,7 @@ pub mod server;
 pub mod shard;
 
 pub use batch::Batch;
+pub use error::CoordinatorError;
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use router::{Partition, Router};
 pub use server::{CacheServer, ClientStats, ServerConfig, ShardedClient};

@@ -295,7 +295,12 @@ mod tests {
                             v = ret;
                             std::hint::spin_loop();
                         }
-                        Err(PushError::Disconnected(_)) => panic!("consumer died"),
+                        Err(PushError::Disconnected(_)) => {
+                            unreachable!(
+                                "{}",
+                                super::super::CoordinatorError::ShardDisconnected { shard: 0 }
+                            )
+                        }
                     }
                 }
             }

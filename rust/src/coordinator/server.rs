@@ -18,10 +18,14 @@
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::sim::fault::FaultPlan;
+
 use super::batch::Batch;
+use super::error::CoordinatorError;
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::ring::{self, PopError, PushError};
 use super::router::{Partition, Router};
@@ -57,6 +61,18 @@ pub struct ServerConfig {
     /// with one `serve_batch` call per ring pop — the v1 comparison
     /// shape measured by `sim::shardbench`'s `per_request` rows
     pub per_request_serve: bool,
+    /// shard policy checkpoint cadence in batches (0 = off; see
+    /// [`ShardConfig::checkpoint_every`]) — faulted shards restore from
+    /// the last checkpoint instead of restarting cold
+    pub checkpoint_every: usize,
+    /// deterministic fault-injection plan (chaos harness); shard-scoped
+    /// faults are split per shard via [`FaultPlan::for_shard`]
+    pub fault_plan: Option<FaultPlan>,
+    /// bound on how long a client flush waits for a full work ring
+    /// before dropping the batch as degraded misses (0 = wait forever —
+    /// the pre-fault-tolerance behavior).  Normal backpressure clears in
+    /// microseconds; hitting this bound means the shard is wedged.
+    pub flush_timeout_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -73,6 +89,9 @@ impl Default for ServerConfig {
             seed: 0xCAFE,
             rebase_threshold: None,
             per_request_serve: false,
+            checkpoint_every: 0,
+            fault_plan: None,
+            flush_timeout_ms: 5_000,
         }
     }
 }
@@ -92,6 +111,14 @@ pub struct CacheServer {
     /// not per retry) — folded into [`CacheServer::snapshot`] so the
     /// flight recorder sees queueing pressure without touching the shards
     reap_on_full: Arc<AtomicU64>,
+    /// client flush retry attempts against a full work ring (bounded by
+    /// the escalating backoff + `flush_timeout_ms`), folded like
+    /// `reap_on_full`
+    retries: Arc<AtomicU64>,
+    /// requests whose replies were lost or given up on client-side
+    /// (flush timeout, shard disconnect) — the reply-loss path that used
+    /// to vanish silently, now first-class in the metrics
+    degraded: Arc<AtomicU64>,
 }
 
 impl CacheServer {
@@ -141,6 +168,8 @@ impl CacheServer {
         // clients × shards ring pairs
         let alive = Arc::new(());
         let reap_on_full = Arc::new(AtomicU64::new(0));
+        let retries = Arc::new(AtomicU64::new(0));
+        let degraded = Arc::new(AtomicU64::new(0));
         let mut shard_lanes: Vec<Vec<ShardLane>> = (0..cfg.shards).map(|_| Vec::new()).collect();
         let mut clients = Vec::with_capacity(cfg.clients);
         for _ in 0..cfg.clients {
@@ -170,6 +199,7 @@ impl CacheServer {
                     next_seq: 0,
                     reaped_seq: 0,
                     inflight: 0,
+                    flushed_reqs: 0,
                     replies: 0,
                     hits: 0,
                 });
@@ -181,6 +211,10 @@ impl CacheServer {
                 sent: 0,
                 flushes: 0,
                 reap_on_full: reap_on_full.clone(),
+                retries: retries.clone(),
+                degraded: degraded.clone(),
+                flush_timeout_ms: cfg.flush_timeout_ms,
+                last_error: None,
                 _alive: alive.clone(),
             });
         }
@@ -228,6 +262,8 @@ impl CacheServer {
                 seed: cfg.seed,
                 rebase_threshold: cfg.rebase_threshold,
                 per_request_serve: cfg.per_request_serve,
+                checkpoint_every: cfg.checkpoint_every,
+                faults: cfg.fault_plan.as_ref().map(|p| p.for_shard(shard_id)),
             };
             let (m2, r2) = (m.clone(), r.clone());
             workers.push(
@@ -245,6 +281,8 @@ impl CacheServer {
             clients,
             alive,
             reap_on_full,
+            retries,
+            degraded,
         })
     }
 
@@ -259,6 +297,8 @@ impl CacheServer {
     pub fn snapshot(&self) -> MetricsSnapshot {
         let mut s = MetricsSnapshot::merge(self.metrics.iter().map(|m| m.snapshot()).collect());
         s.reap_on_full += self.reap_on_full.load(Ordering::Relaxed);
+        s.retries += self.retries.load(Ordering::Relaxed);
+        s.degraded_replies += self.degraded.load(Ordering::Relaxed);
         s
     }
 
@@ -295,6 +335,8 @@ impl CacheServer {
         }
         let mut s = MetricsSnapshot::merge(self.metrics.iter().map(|m| m.snapshot()).collect());
         s.reap_on_full += self.reap_on_full.load(Ordering::Relaxed);
+        s.retries += self.retries.load(Ordering::Relaxed);
+        s.degraded_replies += self.degraded.load(Ordering::Relaxed);
         s
     }
 }
@@ -324,6 +366,11 @@ struct ClientLane {
     reaped_seq: u64,
     /// batches pushed and not yet reaped
     inflight: usize,
+    /// requests successfully flushed into the work ring — minus
+    /// `replies`, the exact count still owed by the shard (the
+    /// disconnect accounting below needs it; `inflight` only counts
+    /// batches, whose lengths vary)
+    flushed_reqs: u64,
     replies: u64,
     hits: u64,
 }
@@ -342,6 +389,15 @@ pub struct ShardedClient {
     flushes: u64,
     /// see `CacheServer::reap_on_full`
     reap_on_full: Arc<AtomicU64>,
+    /// see `CacheServer::retries`
+    retries: Arc<AtomicU64>,
+    /// see `CacheServer::degraded`
+    degraded: Arc<AtomicU64>,
+    /// see `ServerConfig::flush_timeout_ms`
+    flush_timeout_ms: u64,
+    /// last degradation this handle observed (flush timeout or shard
+    /// disconnect); sticky until read via [`ShardedClient::take_error`]
+    last_error: Option<CoordinatorError>,
     /// see `CacheServer::alive`
     _alive: Arc<()>,
 }
@@ -411,27 +467,88 @@ impl ShardedClient {
         lane.next_seq += 1;
         b.stamp();
         self.flushes += 1;
+        let blen = b.len() as u64;
         let mut noted_full = false;
+        let mut deadline: Option<Instant> = None;
+        let mut spins = 0u32;
         loop {
             match self.lanes[shard].work.try_push(b) {
                 Ok(()) => {
-                    self.lanes[shard].inflight += 1;
+                    let lane = &mut self.lanes[shard];
+                    lane.inflight += 1;
+                    lane.flushed_reqs += blen;
                     return;
                 }
                 Err(PushError::Full(ret)) => {
                     b = ret;
                     if !noted_full {
                         // Count the backpressure *event* once per flush,
-                        // not once per retry spin.
+                        // not once per retry spin; start the bounded
+                        // timeout clock at the first Full.
                         noted_full = true;
                         self.reap_on_full.fetch_add(1, Ordering::Relaxed);
+                        if self.flush_timeout_ms > 0 {
+                            deadline = Some(
+                                Instant::now() + Duration::from_millis(self.flush_timeout_ms),
+                            );
+                        }
+                    } else {
+                        self.retries.fetch_add(1, Ordering::Relaxed);
                     }
-                    // Backpressure: free a slot by consuming replies.
-                    if Self::reap_lane(&mut self.lanes[shard], &mut |_| {}) == 0 {
+                    // Backpressure: free a slot by consuming replies; if
+                    // none arrive, back off with escalation (spin →
+                    // yield → sleep) under the bounded deadline instead
+                    // of spinning forever on a wedged shard.
+                    if Self::reap_lane(&mut self.lanes[shard], &mut |_| {}, &self.degraded) > 0 {
+                        spins = 0;
+                        continue;
+                    }
+                    if let Some(d) = deadline {
+                        if Instant::now() >= d {
+                            // Shard wedged past the bound: drop the batch
+                            // as degraded misses, roll back the unused
+                            // seq (FIFO numbering stays gapless), recycle
+                            // the buffer, and surface a typed error.
+                            let lane = &mut self.lanes[shard];
+                            lane.next_seq -= 1;
+                            self.degraded.fetch_add(blen, Ordering::Relaxed);
+                            crate::log_span!(
+                                crate::util::logger::Level::Warn,
+                                "flush_timeout",
+                                "shard" => shard,
+                                "dropped" => blen,
+                                "waited_ms" => self.flush_timeout_ms,
+                            );
+                            self.last_error = Some(CoordinatorError::FlushTimeout {
+                                shard,
+                                waited_ms: self.flush_timeout_ms,
+                            });
+                            b.clear();
+                            lane.free.push(b);
+                            return;
+                        }
+                    }
+                    spins = spins.saturating_add(1);
+                    if spins < 64 {
+                        std::hint::spin_loop();
+                    } else if spins < 4096 {
                         std::thread::yield_now();
+                    } else {
+                        std::thread::sleep(Duration::from_micros(50));
                     }
                 }
-                Err(PushError::Disconnected(_)) => return, // shard gone (shutdown)
+                Err(PushError::Disconnected(_)) => {
+                    // Shard gone: this batch can never be served — account
+                    // it as degraded misses and surface the typed error
+                    // (previously the batch just vanished silently).
+                    let lane = &mut self.lanes[shard];
+                    lane.next_seq -= 1;
+                    self.degraded.fetch_add(blen, Ordering::Relaxed);
+                    self.last_error = Some(CoordinatorError::ShardDisconnected { shard });
+                    b.clear();
+                    lane.free.push(b);
+                    return;
+                }
             }
         }
     }
@@ -439,13 +556,19 @@ impl ShardedClient {
     /// Drain one lane's done ring; `inspect` sees each reply batch
     /// (still annotated) before it is cleared and recycled.  Returns the
     /// number of requests reaped.
-    fn reap_lane(lane: &mut ClientLane, inspect: &mut dyn FnMut(&Batch)) -> u64 {
+    fn reap_lane(
+        lane: &mut ClientLane,
+        inspect: &mut dyn FnMut(&Batch),
+        degraded: &AtomicU64,
+    ) -> u64 {
         let mut n = 0u64;
         loop {
             match lane.done.try_pop() {
                 Ok(mut b) => {
                     // FIFO pipeline invariant: replies come back in flush
-                    // order.
+                    // order — supervised shard restarts preserve it (the
+                    // re-served batch keeps its original seq, and the
+                    // rings themselves are FIFO).
                     debug_assert_eq!(b.seq(), lane.reaped_seq, "reply batch out of order");
                     lane.reaped_seq += 1;
                     inspect(&b);
@@ -458,11 +581,19 @@ impl ShardedClient {
                 }
                 Err(PopError::Empty) => break,
                 Err(PopError::Disconnected) => {
-                    // Shard worker gone (exited or panicked) with replies
-                    // still outstanding: they can never arrive.  Write the
+                    // Shard worker gone (exited or died) with replies
+                    // still outstanding: they can never arrive.  Account
+                    // every owed request as a degraded (miss) reply —
+                    // previously this loss was invisible — and write the
                     // inflight count off so `drain()` terminates instead
-                    // of spinning forever; the missing replies surface as
-                    // stats().replies < stats().sent.
+                    // of spinning forever.  FIFO held right up to the
+                    // disconnect (asserted above), so the loss is a clean
+                    // tail cut, never a reorder.
+                    let owed = lane.flushed_reqs - lane.replies;
+                    if owed > 0 {
+                        degraded.fetch_add(owed, Ordering::Relaxed);
+                    }
+                    lane.flushed_reqs = lane.replies;
                     lane.inflight = 0;
                     break;
                 }
@@ -491,7 +622,7 @@ impl ShardedClient {
     pub fn reap_with(&mut self, mut inspect: impl FnMut(usize, &Batch)) -> u64 {
         let mut n = 0u64;
         for shard in 0..self.lanes.len() {
-            n += Self::reap_lane(&mut self.lanes[shard], &mut |b| inspect(shard, b));
+            n += Self::reap_lane(&mut self.lanes[shard], &mut |b| inspect(shard, b), &self.degraded);
         }
         n
     }
@@ -523,6 +654,14 @@ impl ShardedClient {
                 idle = 0;
             }
         }
+    }
+
+    /// The most recent client-side degradation (flush timeout or shard
+    /// disconnect), if any — cleared by taking it.  The affected
+    /// requests are already accounted as `degraded_replies` in the
+    /// server's metrics snapshot.
+    pub fn take_error(&mut self) -> Option<CoordinatorError> {
+        self.last_error.take()
     }
 
     pub fn stats(&self) -> ClientStats {
@@ -741,6 +880,88 @@ mod tests {
         ] {
             assert!(CacheServer::start(cfg).is_err());
         }
+    }
+
+    /// End-to-end supervision: an injected shard panic mid-run recovers
+    /// from per-batch checkpoints with no lost replies, and the faulted
+    /// run's hit count matches the fault-free one exactly (bit-identical
+    /// outside the — here empty — degraded window).
+    #[test]
+    fn injected_shard_panic_recovers_end_to_end() {
+        let run = |fault: Option<&str>| {
+            let mut cfg = small_cfg();
+            cfg.checkpoint_every = 1;
+            cfg.fault_plan = fault.map(|s| FaultPlan::parse(s).unwrap());
+            let mut server = CacheServer::start(cfg).unwrap();
+            let mut client = server.take_client().unwrap();
+            let t = synth::zipf(10_000, 60_000, 1.0, 13);
+            for &r in &t.requests {
+                client.get(r as u64);
+            }
+            client.drain();
+            let cs = client.stats();
+            drop(client);
+            (cs, server.shutdown())
+        };
+        let (cs_fault, snap_fault) = run(Some("panic@shard:t=9000,panic@shard2:t=3000"));
+        let (cs_clean, snap_clean) = run(None);
+        assert_eq!(cs_fault.sent, 60_000);
+        assert_eq!(cs_fault.replies, 60_000, "no reply may be lost to a restart");
+        assert!(snap_fault.shard_restarts >= 2, "both faults must fire");
+        assert_eq!(snap_fault.degraded_replies, 0);
+        assert!(snap_fault.checkpoint_bytes > 0);
+        assert_eq!(snap_clean.shard_restarts, 0);
+        assert_eq!(
+            cs_fault.hits, cs_clean.hits,
+            "per-batch checkpoints make the faulted run bit-identical"
+        );
+        assert_eq!(snap_fault.requests, snap_clean.requests);
+    }
+
+    /// A stalled shard with a tiny ring must not wedge the client
+    /// forever: the bounded flush timeout drops batches as degraded
+    /// misses and the run still completes, with the loss visible in the
+    /// metrics instead of a hang.
+    #[test]
+    fn stalled_shard_times_out_instead_of_hanging() {
+        let mut cfg = small_cfg();
+        cfg.shards = 1;
+        cfg.catalog = 2_000;
+        cfg.capacity = 100;
+        cfg.batch = 4;
+        cfg.queue_depth = 1;
+        cfg.flush_timeout_ms = 20;
+        cfg.fault_plan = Some(FaultPlan::parse("stall@shard0:t=0,ms=400").unwrap());
+        let mut server = CacheServer::start(cfg).unwrap();
+        let mut client = server.take_client().unwrap();
+        let t0 = std::time::Instant::now();
+        for k in 0..400u64 {
+            client.get(k % 50);
+        }
+        client.drain();
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(30),
+            "run must complete promptly, not hang on the stalled shard"
+        );
+        let cs = client.stats();
+        assert_eq!(cs.sent, 400);
+        let err = client.take_error();
+        drop(client);
+        let snap = server.shutdown();
+        // every request either got a real reply or was accounted degraded
+        assert_eq!(
+            cs.replies + snap.degraded_replies,
+            400,
+            "lost replies must be accounted, not vanish"
+        );
+        if snap.degraded_replies > 0 {
+            assert!(
+                matches!(err, Some(CoordinatorError::FlushTimeout { .. })),
+                "timeout degradation must surface a typed error, got {err:?}"
+            );
+            assert!(snap.retries > 0, "bounded retry loop must have counted");
+        }
+        assert_eq!(snap.requests + snap.degraded_replies, 400);
     }
 
     #[test]

@@ -10,16 +10,33 @@
 //! three relaxed atomic adds plus one O(1) weighted histogram record per
 //! batch.  `ogb-cache serve --smoke` asserts the contract in CI via the
 //! counting global allocator (`util::bench::alloc_count`).
+//!
+//! Supervision (ISSUE 7, DESIGN.md §12): every batch is served under
+//! `catch_unwind`, so a policy panic (bug or injected fault) no longer
+//! kills the worker.  The supervisor rebuilds the policy from the last
+//! periodic OGBS checkpoint (`checkpoint_every` batches; 0 = off — the
+//! default, which keeps the zero-allocation contract since checkpoints
+//! serialize into a reused buffer *between* batches), restores the
+//! catalog frontier, clears the batch's partial hit bits, and re-serves
+//! the same batch — replies stay exactly-once and FIFO because the batch
+//! (and its lane seq) never left the shard.  After `MAX_RESTARTS`
+//! consecutive failures on one batch the shard degrades it to all-miss
+//! (`degraded_replies`) instead of wedging the pipeline.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
 use crate::policies::{self, BuildOpts, Policy, Request};
+use crate::sim::fault::ShardFaults;
+use crate::util::logger::Level;
 
 use super::batch::Batch;
 use super::metrics::Metrics;
 use super::ring::{Consumer, PopError, Producer, PushError};
+
+/// Consecutive serve attempts per batch before degrading it to all-miss.
+const MAX_RESTARTS: u32 = 2;
 
 pub struct ShardConfig {
     pub shard_id: usize,
@@ -43,6 +60,16 @@ pub struct ShardConfig {
     /// `BENCH_shard.json` (`sim::shardbench`); identical hit/miss
     /// outcomes by the `serve_batch ≡ serve` contract
     pub per_request_serve: bool,
+    /// take an OGBS checkpoint of the policy every this many batches
+    /// (0 = never — the default; faulted shards then restart *cold*).
+    /// Checkpoints are taken off the request path, at batch boundaries,
+    /// into a buffer reused across checkpoints.  With
+    /// `checkpoint_every = 1` a restarted shard is bit-identical to an
+    /// unfaulted one outside the degraded window.
+    pub checkpoint_every: usize,
+    /// deterministic fault schedule for this shard (chaos harness);
+    /// `None` leaves the hot path exactly as before
+    pub faults: Option<ShardFaults>,
 }
 
 /// One client's pair of rings as seen from the shard: requests in,
@@ -80,7 +107,7 @@ fn idle_backoff(idle: &mut u32, reply_blocked: bool) {
 /// bit-identical to a single-policy `sim::run_source` replay
 /// (`rust/tests/coordinator_equivalence.rs`); later shards decorrelate.
 pub fn run_shard(
-    cfg: ShardConfig,
+    mut cfg: ShardConfig,
     mut lanes: Vec<ShardLane>,
     redraw: Arc<AtomicBool>,
     metrics: Arc<Metrics>,
@@ -93,14 +120,19 @@ pub fn run_shard(
     };
     // `CacheServer::start` validated the (policy, shape) combination with
     // a probe build; a failure here is unreachable in practice.
-    let mut policy = policies::build(
-        &cfg.policy,
-        cfg.local_catalog.max(2),
-        cfg.capacity.clamp(1, cfg.local_catalog.max(2) - 1),
-        &opts,
-        None,
-    )
-    .expect("policy validated at server start");
+    let mut policy = build_policy(&cfg, &opts);
+
+    // Supervisor state: the last good checkpoint (OGBS bytes + the
+    // catalog frontier it was taken at), refreshed every
+    // `checkpoint_every` batches into a reused buffer.
+    let mut faults = cfg.faults.take();
+    let mut ckpt_enabled = cfg.checkpoint_every > 0;
+    let mut ckpt_buf: Vec<u8> = Vec::new();
+    let mut ckpt_catalog = cfg.local_catalog.max(2);
+    let mut have_ckpt = false;
+    let mut batches_since_ckpt = 0usize;
+    // Cumulative requests served by this shard — the fault trigger clock.
+    let mut served = 0u64;
 
     let mut open = vec![true; lanes.len()];
     let mut n_open = lanes.len();
@@ -150,42 +182,80 @@ pub fn run_shard(
                     if redraw.swap(false, Ordering::AcqRel) {
                         policy_redraw(&mut policy);
                     }
-                    let mut hits = 0u64;
-                    if cfg.per_request_serve {
-                        // v1 comparison shape: one policy call per item
-                        for k in 0..batch.len() {
-                            let item = batch.item(k) as u64;
-                            if item as usize >= live_catalog {
-                                live_catalog = (item as usize + 1).next_power_of_two();
-                                policy.grow(live_catalog);
+                    // Serve under the supervisor: a panic inside the
+                    // policy (bug or injected fault) is contained here,
+                    // state is rebuilt from the last checkpoint, and the
+                    // same batch is re-served — replies stay exactly-once
+                    // and FIFO because the batch never left this shard.
+                    let mut attempt = 0u32;
+                    let outcome = loop {
+                        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            if let Some(f) = faults.as_mut() {
+                                f.before_batch(served);
                             }
-                            if policy.request(item) >= 1.0 {
-                                batch.set_hit(k);
-                                hits += 1;
+                            serve_batch_once(
+                                cfg.per_request_serve,
+                                &mut policy,
+                                &mut batch,
+                                &mut live_catalog,
+                                &mut reqbuf,
+                                &mut rewards,
+                            )
+                        }));
+                        match r {
+                            Ok(hits) => break Some(hits),
+                            Err(_) => {
+                                attempt += 1;
+                                metrics.shard_restarts.fetch_add(1, Ordering::Relaxed);
+                                crate::log_span!(
+                                    Level::Warn,
+                                    "shard_restart",
+                                    "shard" => cfg.shard_id,
+                                    "served" => served,
+                                    "attempt" => attempt,
+                                    "from_checkpoint" => have_ckpt,
+                                );
+                                // the panic may have left partial hit bits
+                                batch.clear_hits();
+                                let ckpt =
+                                    have_ckpt.then(|| (ckpt_buf.as_slice(), ckpt_catalog));
+                                let (p, cat) = rebuild_policy(&cfg, &opts, ckpt);
+                                policy = p;
+                                live_catalog = cat;
+                                // re-baseline the diag deltas at the
+                                // restored values or the next delta
+                                // computation would underflow
+                                let d = policy.diag();
+                                last_pops = d.removed_coeffs;
+                                last_grows = d.grows;
+                                last_evictions = d.sample_evictions;
+                                if attempt > MAX_RESTARTS {
+                                    break None;
+                                }
                             }
                         }
-                    } else {
-                        // one policy call per ring pop (DESIGN.md §9),
-                        // split only at catalog-growth points (§10) —
-                        // the same shared loop as sim::run_source
-                        reqbuf.clear();
-                        for &item in batch.items() {
-                            reqbuf.push(Request::unit(item as u64));
+                    };
+                    let hits = match outcome {
+                        Some(h) => h,
+                        None => {
+                            // Degrade: reply all-miss rather than wedge
+                            // the pipeline on a batch that keeps killing
+                            // the policy.
+                            batch.clear_hits();
+                            metrics
+                                .degraded_replies
+                                .fetch_add(batch.len() as u64, Ordering::Relaxed);
+                            crate::log_span!(
+                                Level::Warn,
+                                "shard_degraded",
+                                "shard" => cfg.shard_id,
+                                "served" => served,
+                                "requests" => batch.len(),
+                            );
+                            0
                         }
-                        rewards.clear();
-                        crate::sim::engine::serve_growing(
-                            &mut policy,
-                            &reqbuf,
-                            &mut rewards,
-                            &mut live_catalog,
-                        );
-                        for (k, &r) in rewards.iter().enumerate() {
-                            if r >= 1.0 {
-                                batch.set_hit(k);
-                                hits += 1;
-                            }
-                        }
-                    }
+                    };
+                    served += batch.len() as u64;
                     let d = policy.diag();
                     metrics
                         .pops
@@ -209,6 +279,25 @@ pub fn run_shard(
                         lat,
                     );
                     last_evictions = d.sample_evictions;
+                    // Periodic checkpoint, off the request path at the
+                    // batch boundary; the buffer is reused forever, so
+                    // steady-state checkpointing settles at zero
+                    // allocations once the buffer has grown to size.
+                    if ckpt_enabled {
+                        batches_since_ckpt += 1;
+                        if !have_ckpt || batches_since_ckpt >= cfg.checkpoint_every {
+                            if take_checkpoint(&policy, &mut ckpt_buf, cfg.shard_id, &metrics) {
+                                ckpt_catalog = live_catalog;
+                                have_ckpt = true;
+                                batches_since_ckpt = 0;
+                            } else {
+                                // e.g. an unsupported policy: warn once
+                                // (inside take_checkpoint) and stop trying
+                                ckpt_enabled = false;
+                                have_ckpt = false;
+                            }
+                        }
+                    }
                     // Reply: push the annotated batch back.  The free-
                     // slot check above makes Full effectively
                     // unreachable (only the client removes entries, so
@@ -251,6 +340,125 @@ pub fn run_shard(
     );
 }
 
+/// Build the shard's policy at its initial shape.  Deterministic: a
+/// rebuild with the same `cfg`/`opts` is bit-identical to the instance
+/// built at shard start (the seed is derived, not drawn).
+fn build_policy(cfg: &ShardConfig, opts: &BuildOpts) -> policies::AnyPolicy {
+    policies::build(
+        &cfg.policy,
+        cfg.local_catalog.max(2),
+        cfg.capacity.clamp(1, cfg.local_catalog.max(2) - 1),
+        opts,
+        None,
+    )
+    .expect("policy validated at server start")
+}
+
+/// Serve one drained batch, marking hit bits; returns the hit count.
+/// This is the only code the supervisor runs under `catch_unwind` — a
+/// panic anywhere in here loses at most this batch's partial progress,
+/// which the restart path recomputes from the last checkpoint.
+fn serve_batch_once(
+    per_request_serve: bool,
+    policy: &mut policies::AnyPolicy,
+    batch: &mut Batch,
+    live_catalog: &mut usize,
+    reqbuf: &mut Vec<Request>,
+    rewards: &mut Vec<f64>,
+) -> u64 {
+    let mut hits = 0u64;
+    if per_request_serve {
+        // v1 comparison shape: one policy call per item
+        for k in 0..batch.len() {
+            let item = batch.item(k) as u64;
+            if item as usize >= *live_catalog {
+                *live_catalog = (item as usize + 1).next_power_of_two();
+                policy.grow(*live_catalog);
+            }
+            if policy.request(item) >= 1.0 {
+                batch.set_hit(k);
+                hits += 1;
+            }
+        }
+    } else {
+        // one policy call per ring pop (DESIGN.md §9), split only at
+        // catalog-growth points (§10) — the same shared loop as
+        // sim::run_source
+        reqbuf.clear();
+        for &item in batch.items() {
+            reqbuf.push(Request::unit(item as u64));
+        }
+        rewards.clear();
+        crate::sim::engine::serve_growing(policy, reqbuf, rewards, live_catalog);
+        for (k, &r) in rewards.iter().enumerate() {
+            if r >= 1.0 {
+                batch.set_hit(k);
+                hits += 1;
+            }
+        }
+    }
+    hits
+}
+
+/// Rebuild the shard's policy after a contained panic: fresh instance,
+/// then restore the last checkpoint if one exists.  Returns the policy
+/// and the catalog frontier to resume at.  Falls back to a cold fresh
+/// instance (initial catalog) when there is no checkpoint or the
+/// checkpoint fails verification — a cold restart before the first
+/// checkpoint IS the initial state, so early crashes recover exactly.
+fn rebuild_policy(
+    cfg: &ShardConfig,
+    opts: &BuildOpts,
+    ckpt: Option<(&[u8], usize)>,
+) -> (policies::AnyPolicy, usize) {
+    let mut policy = build_policy(cfg, opts);
+    if let Some((bytes, catalog)) = ckpt {
+        match crate::policies::snapshot::restore_from_slice(&mut policy, bytes) {
+            Ok(()) => return (policy, catalog),
+            Err(e) => {
+                crate::log_span!(
+                    Level::Warn,
+                    "checkpoint_restore_failed",
+                    "shard" => cfg.shard_id,
+                    "error" => e,
+                );
+                // the half-restored instance is suspect; build again
+                policy = build_policy(cfg, opts);
+            }
+        }
+    }
+    (policy, cfg.local_catalog.max(2))
+}
+
+/// Serialize the policy into the reused checkpoint buffer.  Returns
+/// false (after a warn span) when the policy cannot snapshot — the
+/// caller then disables checkpointing for the rest of the run.
+fn take_checkpoint(
+    policy: &policies::AnyPolicy,
+    buf: &mut Vec<u8>,
+    shard_id: usize,
+    metrics: &Metrics,
+) -> bool {
+    buf.clear();
+    match policy.snapshot(buf) {
+        Ok(()) => {
+            metrics
+                .checkpoint_bytes
+                .fetch_add(buf.len() as u64, Ordering::Relaxed);
+            true
+        }
+        Err(e) => {
+            crate::log_span!(
+                Level::Warn,
+                "checkpoint_disabled",
+                "shard" => shard_id,
+                "error" => e,
+            );
+            false
+        }
+    }
+}
+
 /// Redraw the sampler's permanent random numbers where the policy has
 /// one (paper §5.1); a no-op for the comparison policies.
 fn policy_redraw(policy: &mut policies::AnyPolicy) {
@@ -264,10 +472,12 @@ mod tests {
     use super::super::ring;
     use super::*;
 
-    fn spawn_shard(
+    fn spawn_shard_cfg(
         batch: usize,
         lanes: usize,
         depth: usize,
+        checkpoint_every: usize,
+        faults: Option<ShardFaults>,
     ) -> (
         Vec<ring::Producer<Batch>>,
         Vec<ring::Consumer<Batch>>,
@@ -301,6 +511,8 @@ mod tests {
                     seed: 1,
                     rebase_threshold: None,
                     per_request_serve: false,
+                    checkpoint_every,
+                    faults,
                 },
                 shard_lanes,
                 Arc::new(AtomicBool::new(false)),
@@ -308,6 +520,19 @@ mod tests {
             )
         });
         (works, dones, metrics, h)
+    }
+
+    fn spawn_shard(
+        batch: usize,
+        lanes: usize,
+        depth: usize,
+    ) -> (
+        Vec<ring::Producer<Batch>>,
+        Vec<ring::Consumer<Batch>>,
+        Arc<Metrics>,
+        std::thread::JoinHandle<()>,
+    ) {
+        spawn_shard_cfg(batch, lanes, depth, 0, None)
     }
 
     #[test]
@@ -332,7 +557,11 @@ mod tests {
                 match works[0].try_push(std::mem::replace(&mut pending, Batch::new(batch))) {
                     Ok(()) => next_seq += 1,
                     Err(PushError::Full(ret)) => pending = ret,
-                    Err(PushError::Disconnected(_)) => panic!("shard died"),
+                    Err(PushError::Disconnected(_)) => {
+                        unreachable!("{}", super::super::CoordinatorError::ShardDisconnected {
+                            shard: 0
+                        })
+                    }
                 }
             }
             while let Ok(b) = dones[0].try_pop() {
@@ -354,6 +583,103 @@ mod tests {
         );
         assert!(s.batch_updates >= total / batch as u64);
         assert!(s.p50_ns() > 0);
+    }
+
+    /// Feed `total` requests (hot 10-item set) in `batch`-sized batches,
+    /// collecting every reply's (seq, hit-bit) pattern in FIFO order.
+    fn drive_shard(
+        works: &mut [ring::Producer<Batch>],
+        dones: &mut [ring::Consumer<Batch>],
+        batch: usize,
+        total: u64,
+    ) -> Vec<(u64, Vec<bool>)> {
+        let mut out = Vec::new();
+        let mut sent = 0u64;
+        let mut replies = 0u64;
+        let mut next_seq = 0u64;
+        let mut expect_seq = 0u64;
+        let mut pending = Batch::new(batch);
+        while replies < total {
+            if sent < total && !pending.is_full() {
+                pending.push((sent % 10) as u32);
+                sent += 1;
+            }
+            if pending.is_full() || (sent == total && !pending.is_empty()) {
+                pending.set_seq(next_seq);
+                pending.stamp();
+                match works[0].try_push(std::mem::replace(&mut pending, Batch::new(batch))) {
+                    Ok(()) => next_seq += 1,
+                    Err(PushError::Full(ret)) => pending = ret,
+                    Err(PushError::Disconnected(_)) => {
+                        unreachable!("supervised shard must not disconnect")
+                    }
+                }
+            }
+            while let Ok(b) = dones[0].try_pop() {
+                assert_eq!(b.seq(), expect_seq, "reply order must be FIFO");
+                expect_seq += 1;
+                replies += b.len() as u64;
+                out.push((b.seq(), (0..b.len()).map(|k| b.hit(k)).collect()));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn injected_panic_recovers_bit_identically_with_per_batch_checkpoints() {
+        use crate::sim::fault::FaultPlan;
+        let batch = 8usize;
+        let total = 2_000u64;
+        let plan = FaultPlan::parse("panic@shard0:t=600").unwrap();
+        let (mut works, mut dones, metrics, h) =
+            spawn_shard_cfg(batch, 1, 16, 1, Some(plan.for_shard(0)));
+        let faulted = drive_shard(&mut works, &mut dones, batch, total);
+        drop(works);
+        h.join().unwrap();
+        let s = metrics.snapshot();
+        assert_eq!(s.requests, total);
+        assert!(s.shard_restarts >= 1, "injected fault must have fired");
+        assert_eq!(s.degraded_replies, 0);
+        assert!(s.checkpoint_bytes > 0);
+
+        let (mut works, mut dones, metrics2, h2) = spawn_shard_cfg(batch, 1, 16, 1, None);
+        let clean = drive_shard(&mut works, &mut dones, batch, total);
+        drop(works);
+        h2.join().unwrap();
+        assert_eq!(metrics2.snapshot().shard_restarts, 0);
+        assert_eq!(
+            faulted, clean,
+            "restart from a per-batch checkpoint must be bit-identical"
+        );
+    }
+
+    #[test]
+    fn repeated_panics_on_one_batch_degrade_to_all_miss() {
+        use crate::sim::fault::FaultPlan;
+        let batch = 4usize;
+        let total = 200u64;
+        // three faults with the same trigger: each re-serve attempt fires
+        // the next one, exhausting MAX_RESTARTS on a single batch
+        let plan =
+            FaultPlan::parse("panic@shard0:t=100,panic@shard0:t=100,panic@shard0:t=100").unwrap();
+        let (mut works, mut dones, metrics, h) =
+            spawn_shard_cfg(batch, 1, 16, 1, Some(plan.for_shard(0)));
+        let replies = drive_shard(&mut works, &mut dones, batch, total);
+        drop(works);
+        h.join().unwrap();
+        let s = metrics.snapshot();
+        assert_eq!(s.requests, total, "degraded batch still counted and replied");
+        assert_eq!(s.shard_restarts, 3);
+        assert_eq!(s.degraded_replies, batch as u64);
+        assert_eq!(
+            replies.iter().map(|(_, v)| v.len() as u64).sum::<u64>(),
+            total
+        );
+        let (_, bits) = replies
+            .iter()
+            .find(|(seq, _)| *seq == 100 / batch as u64)
+            .expect("degraded batch must still be replied");
+        assert!(bits.iter().all(|&b| !b), "degraded batch must be all-miss");
     }
 
     #[test]
@@ -387,7 +713,11 @@ mod tests {
                         while dones[0].try_pop().is_ok() {}
                         std::thread::yield_now();
                     }
-                    Err(PushError::Disconnected(_)) => panic!("shard died"),
+                    Err(PushError::Disconnected(_)) => {
+                        unreachable!("{}", super::super::CoordinatorError::ShardDisconnected {
+                            shard: 0
+                        })
+                    }
                 }
             }
         }

@@ -64,7 +64,16 @@
 //!   ring pipeline with recycled request batches and bitmap replies
 //!   (zero steady-state allocations end-to-end), p50/p99/p999 latency
 //!   metrics — driven by `ogb-cache serve` over any `trace::stream`
-//!   scenario;
+//!   scenario.  Shards are *supervised* (DESIGN.md §12): a panicking
+//!   serve call restarts from the last [`policies::Policy::snapshot`]
+//!   checkpoint (`--checkpoint-every`) and re-serves the batch exactly
+//!   once — bit-identically to a fault-free run — degrading to an
+//!   all-miss reply only after repeated failures; clients bound their
+//!   backpressure wait (`--flush-timeout-ms`) and surface typed
+//!   [`coordinator::CoordinatorError`]s instead of hanging.  The
+//!   deterministic fault-injection DSL ([`sim::FaultPlan`],
+//!   `--fault-spec "panic@shard1:t=1e6"`) drives the `chaos-smoke` CI
+//!   differential;
 //! * [`util`] — zero-dependency substrates required by the offline build
 //!   environment: PRNG, CLI, CSV, property-testing, and
 //!   [`util::flattree::FlatTree`] — the flat arena B+-tree carrying the

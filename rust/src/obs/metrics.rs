@@ -42,6 +42,18 @@ pub struct Metrics {
     /// reap-on-full backpressure events: a client found its work ring
     /// full and had to reap replies before retrying the push
     pub reap_on_full: AtomicU64,
+    /// shard worker panics caught by the supervisor and recovered from a
+    /// checkpoint (DESIGN.md §12)
+    pub shard_restarts: AtomicU64,
+    /// client-side flush retry spins after backpressure (each pass of
+    /// the bounded retry-with-backoff loop)
+    pub retries: AtomicU64,
+    /// cumulative bytes written by periodic policy checkpoints
+    pub checkpoint_bytes: AtomicU64,
+    /// replies accounted as lost-to-failure: requests answered as
+    /// forced misses after a shard exhausted its restart budget, or
+    /// written off because a shard died with replies outstanding
+    pub degraded_replies: AtomicU64,
     latency: Mutex<LatencyHistogram>,
 }
 
@@ -98,6 +110,10 @@ impl Metrics {
             grow_events: self.grow_events.load(Ordering::Relaxed),
             ring_depth_hw: self.ring_depth_hw.load(Ordering::Relaxed),
             reap_on_full: self.reap_on_full.load(Ordering::Relaxed),
+            shard_restarts: self.shard_restarts.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            checkpoint_bytes: self.checkpoint_bytes.load(Ordering::Relaxed),
+            degraded_replies: self.degraded_replies.load(Ordering::Relaxed),
             latency: h,
         }
     }
@@ -113,6 +129,10 @@ pub struct MetricsSnapshot {
     pub grow_events: u64,
     pub ring_depth_hw: u64,
     pub reap_on_full: u64,
+    pub shard_restarts: u64,
+    pub retries: u64,
+    pub checkpoint_bytes: u64,
+    pub degraded_replies: u64,
     pub latency: LatencyHistogram,
 }
 
@@ -163,6 +183,10 @@ impl MetricsSnapshot {
             grow_events: self.grow_events.saturating_sub(earlier.grow_events),
             ring_depth_hw: self.ring_depth_hw,
             reap_on_full: self.reap_on_full.saturating_sub(earlier.reap_on_full),
+            shard_restarts: self.shard_restarts.saturating_sub(earlier.shard_restarts),
+            retries: self.retries.saturating_sub(earlier.retries),
+            checkpoint_bytes: self.checkpoint_bytes.saturating_sub(earlier.checkpoint_bytes),
+            degraded_replies: self.degraded_replies.saturating_sub(earlier.degraded_replies),
             latency: self.latency.diff(&earlier.latency),
         }
     }
@@ -178,6 +202,10 @@ impl MetricsSnapshot {
             out.grow_events += s.grow_events;
             out.ring_depth_hw = out.ring_depth_hw.max(s.ring_depth_hw);
             out.reap_on_full += s.reap_on_full;
+            out.shard_restarts += s.shard_restarts;
+            out.retries += s.retries;
+            out.checkpoint_bytes += s.checkpoint_bytes;
+            out.degraded_replies += s.degraded_replies;
             out.latency.merge(&s.latency);
         }
         out
@@ -185,7 +213,7 @@ impl MetricsSnapshot {
 
     pub fn report(&self) -> String {
         format!(
-            "requests={} hit_ratio={:.4} evictions={} batches={} pops={} ring_hw={} reaps={} p50={}ns p99={}ns p999={}ns max={}ns",
+            "requests={} hit_ratio={:.4} evictions={} batches={} pops={} ring_hw={} reaps={} restarts={} retries={} ckpt_bytes={} degraded={} p50={}ns p99={}ns p999={}ns max={}ns",
             self.requests,
             self.hit_ratio(),
             self.evictions,
@@ -193,6 +221,10 @@ impl MetricsSnapshot {
             self.pops,
             self.ring_depth_hw,
             self.reap_on_full,
+            self.shard_restarts,
+            self.retries,
+            self.checkpoint_bytes,
+            self.degraded_replies,
             self.p50_ns(),
             self.p99_ns(),
             self.p999_ns(),

@@ -42,6 +42,10 @@ pub struct WindowRecord {
     pub grow_events: u64,
     pub ring_depth_hw: u64,
     pub reap_on_full: u64,
+    pub shard_restarts: u64,
+    pub retries: u64,
+    pub checkpoint_bytes: u64,
+    pub degraded_replies: u64,
     pub p50_ns: u64,
     pub p99_ns: u64,
     pub p999_ns: u64,
@@ -61,6 +65,10 @@ impl WindowRecord {
             grow_events: s.grow_events,
             ring_depth_hw: s.ring_depth_hw,
             reap_on_full: s.reap_on_full,
+            shard_restarts: s.shard_restarts,
+            retries: s.retries,
+            checkpoint_bytes: s.checkpoint_bytes,
+            degraded_replies: s.degraded_replies,
             p50_ns: s.p50_ns(),
             p99_ns: s.p99_ns(),
             p999_ns: s.p999_ns(),
@@ -136,6 +144,8 @@ impl FlightRecorder {
              \"pops\":{},\"pops_per_request\":{pops_per_request:.4},\
              \"evictions\":{},\"grow_events\":{},\
              \"ring_depth_hw\":{},\"reap_on_full\":{},\
+             \"shard_restarts\":{},\"retries\":{},\
+             \"checkpoint_bytes\":{},\"degraded_replies\":{},\
              \"p50_ns\":{},\"p99_ns\":{},\"p999_ns\":{},\"max_ns\":{},",
             w.requests,
             w.hits,
@@ -145,6 +155,10 @@ impl FlightRecorder {
             w.grow_events,
             w.ring_depth_hw,
             w.reap_on_full,
+            w.shard_restarts,
+            w.retries,
+            w.checkpoint_bytes,
+            w.degraded_replies,
             w.p50_ns,
             w.p99_ns,
             w.p999_ns,
@@ -245,6 +259,10 @@ mod tests {
                 grow_events: 0,
                 ring_depth_hw: 32,
                 reap_on_full: 1,
+                shard_restarts: 2,
+                retries: 3,
+                checkpoint_bytes: 4096,
+                degraded_replies: 5,
                 p50_ns: 500,
                 p99_ns: 2_000,
                 p999_ns: 9_000,
@@ -281,6 +299,10 @@ mod tests {
             "\"req_per_s\":4000.0",
             "\"ring_depth_hw\":32",
             "\"reap_on_full\":1",
+            "\"shard_restarts\":2",
+            "\"retries\":3",
+            "\"checkpoint_bytes\":4096",
+            "\"degraded_replies\":5",
             "\"p999_ns\":9000",
         ] {
             assert!(lines[0].contains(key), "missing {key} in {}", lines[0]);

@@ -147,6 +147,77 @@ impl Policy for ArcCache {
             ..Diag::default()
         }
     }
+
+    /// OGBS checkpoint: the four list orders (T1/T2 caches, B1/B2
+    /// ghosts, each front → back) plus the adaptation target `p`.  The
+    /// directory map is rebuilt from the lists on restore.
+    fn snapshot(&self, w: &mut dyn std::io::Write) -> super::SnapshotResult<()> {
+        use super::snapshot::{tag, Payload, SnapshotWriter};
+        let mut sw = SnapshotWriter::new(w, self.name())?;
+        let mut st = Payload::new();
+        st.put_usize(self.cap);
+        st.put_usize(self.p);
+        st.put_u64(self.evictions);
+        for list in [&self.t1, &self.t2, &self.b1, &self.b2] {
+            st.put_u64s(&list.iter().collect::<Vec<_>>());
+        }
+        sw.section(tag::STATE, &st)?;
+        sw.finish()
+    }
+
+    fn restore(&mut self, r: &mut dyn std::io::Read) -> super::SnapshotResult<()> {
+        use super::snapshot::{tag, Cur, SnapshotError, SnapshotReader};
+        let mut rd = SnapshotReader::new(r)?;
+        rd.check_policy(self.name())?;
+        let mut st = None;
+        while let Some((t, pl)) = rd.next_section()? {
+            if t == tag::STATE {
+                st = Some(pl);
+            }
+        }
+        let st = st.ok_or(SnapshotError::Truncated("ARC STATE section"))?;
+        let mut cur = Cur::new(&st);
+        let cap = cur.get_usize()?;
+        let p = cur.get_usize()?;
+        let evictions = cur.get_u64()?;
+        let orders: [Vec<u64>; 4] = [
+            cur.get_u64s()?,
+            cur.get_u64s()?,
+            cur.get_u64s()?,
+            cur.get_u64s()?,
+        ];
+        cur.finish()?;
+        let [o1, o2, ob1, ob2] = &orders;
+        if cap == 0
+            || p > cap
+            || o1.len() + o2.len() > cap
+            || o1.len() + ob1.len() > cap
+            || o1.len() + o2.len() + ob1.len() + ob2.len() > 2 * cap
+        {
+            return Err(SnapshotError::Corrupt("ARC invariants violated"));
+        }
+        let mut map = FxHashMap::default();
+        let mut lists = [DList::new(), DList::new(), DList::new(), DList::new()];
+        let wheres = [Where::T1, Where::T2, Where::B1, Where::B2];
+        for ((order, list), &wh) in orders.iter().zip(&mut lists).zip(&wheres) {
+            for &item in order.iter().rev() {
+                let h = list.push_front(item);
+                if map.insert(item, (wh, h)).is_some() {
+                    return Err(SnapshotError::Corrupt("ARC item in two lists"));
+                }
+            }
+        }
+        let [t1, t2, b1, b2] = lists;
+        self.cap = cap;
+        self.p = p;
+        self.t1 = t1;
+        self.t2 = t2;
+        self.b1 = b1;
+        self.b2 = b2;
+        self.map = map;
+        self.evictions = evictions;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

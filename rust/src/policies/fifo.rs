@@ -54,6 +54,54 @@ impl Policy for Fifo {
             ..Diag::default()
         }
     }
+
+    /// OGBS checkpoint: insertion order front (newest) → back (oldest)
+    /// is the complete policy state; restore replays oldest-first.
+    fn snapshot(&self, w: &mut dyn std::io::Write) -> super::SnapshotResult<()> {
+        use super::snapshot::{tag, Payload, SnapshotWriter};
+        let mut sw = SnapshotWriter::new(w, self.name())?;
+        let mut st = Payload::new();
+        st.put_usize(self.cap);
+        st.put_u64(self.evictions);
+        let order: Vec<u64> = self.list.iter().collect();
+        st.put_u64s(&order);
+        sw.section(tag::STATE, &st)?;
+        sw.finish()
+    }
+
+    fn restore(&mut self, r: &mut dyn std::io::Read) -> super::SnapshotResult<()> {
+        use super::snapshot::{tag, Cur, SnapshotError, SnapshotReader};
+        let mut rd = SnapshotReader::new(r)?;
+        rd.check_policy(self.name())?;
+        let mut st = None;
+        while let Some((t, pl)) = rd.next_section()? {
+            if t == tag::STATE {
+                st = Some(pl);
+            }
+        }
+        let st = st.ok_or(SnapshotError::Truncated("FIFO STATE section"))?;
+        let mut cur = Cur::new(&st);
+        let cap = cur.get_usize()?;
+        let evictions = cur.get_u64()?;
+        let order = cur.get_u64s()?;
+        cur.finish()?;
+        if cap == 0 || order.len() > cap {
+            return Err(SnapshotError::Corrupt("FIFO state out of range"));
+        }
+        let mut list = DList::new();
+        let mut map = FxHashMap::default();
+        for &item in order.iter().rev() {
+            let h = list.push_front(item);
+            if map.insert(item, h).is_some() {
+                return Err(SnapshotError::Corrupt("FIFO duplicate item"));
+            }
+        }
+        self.cap = cap;
+        self.map = map;
+        self.list = list;
+        self.evictions = evictions;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

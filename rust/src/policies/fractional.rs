@@ -152,6 +152,67 @@ impl Policy for FractionalOgb {
         self.lazy.capacity() // mass is conserved exactly by construction
     }
 
+    /// OGBS checkpoint: META (eta, B, mid-batch position, counters) +
+    /// the LAZY projection.  The lazy payload carries the shadow-freeze,
+    /// so restored rewards are paid against the same materialized state.
+    fn snapshot(&self, w: &mut dyn std::io::Write) -> super::SnapshotResult<()> {
+        use super::snapshot::{tag, Payload, SnapshotWriter};
+        let mut sw = SnapshotWriter::new(w, &self.name)?;
+        let mut meta = Payload::new();
+        meta.put_f64(self.eta);
+        meta.put_usize(self.b);
+        meta.put_usize(self.in_batch);
+        meta.put_opt_usize(self.theory_t);
+        meta.put_u64(self.removed_coeffs);
+        meta.put_u64(self.rebases);
+        meta.put_u64(self.grows);
+        sw.section(tag::META, &meta)?;
+        let mut lz = Payload::new();
+        self.lazy.snapshot_payload(&mut lz);
+        sw.section(tag::LAZY, &lz)?;
+        sw.finish()
+    }
+
+    fn restore(&mut self, r: &mut dyn std::io::Read) -> super::SnapshotResult<()> {
+        use super::snapshot::{tag, Cur, SnapshotError, SnapshotReader};
+        let mut rd = SnapshotReader::new(r)?;
+        rd.check_policy(&self.name)?;
+        let (mut meta, mut lz) = (None, None);
+        while let Some((t, pl)) = rd.next_section()? {
+            match t {
+                tag::META => meta = Some(pl),
+                tag::LAZY => lz = Some(pl),
+                _ => {}
+            }
+        }
+        let meta = meta.ok_or(SnapshotError::Truncated("OGB-frac META section"))?;
+        let lz = lz.ok_or(SnapshotError::Truncated("OGB-frac LAZY section"))?;
+        let mut cur = Cur::new(&meta);
+        let eta = cur.get_f64()?;
+        let b = cur.get_usize()?;
+        let in_batch = cur.get_usize()?;
+        let theory_t = cur.get_opt_usize()?;
+        let removed_coeffs = cur.get_u64()?;
+        let rebases = cur.get_u64()?;
+        let grows = cur.get_u64()?;
+        cur.finish()?;
+        if b < 1 || !(eta > 0.0) || in_batch >= b {
+            return Err(SnapshotError::Corrupt("OGB-frac meta out of range"));
+        }
+        let mut lcur = Cur::new(&lz);
+        let lazy = LazySimplex::restore_payload(&mut lcur)?;
+        lcur.finish()?;
+        self.lazy = lazy;
+        self.eta = eta;
+        self.b = b;
+        self.in_batch = in_batch;
+        self.theory_t = theory_t;
+        self.removed_coeffs = removed_coeffs;
+        self.rebases = rebases;
+        self.grows = grows;
+        Ok(())
+    }
+
     fn diag(&self) -> Diag {
         Diag {
             removed_coeffs: self.removed_coeffs,

@@ -168,6 +168,82 @@ impl Policy for Ftpl {
         self.cached.len() as f64
     }
 
+    /// OGBS checkpoint: META (n, cap, zeta, seed) + STATE (weighted
+    /// counts, per-item perturbed keys).  The noise is hash-derived from
+    /// (seed, item) so it costs zero snapshot bytes; the ordered tree is
+    /// rebuilt from the stored keys (never recomputed — the stored key is
+    /// what the in-tree ordering actually used).
+    fn snapshot(&self, w: &mut dyn std::io::Write) -> super::SnapshotResult<()> {
+        use super::snapshot::{tag, Payload, SnapshotWriter};
+        let mut sw = SnapshotWriter::new(w, &self.name)?;
+        let mut meta = Payload::new();
+        meta.put_usize(self.n);
+        meta.put_usize(self.cap);
+        meta.put_f64(self.zeta);
+        meta.put_u64(self.seed);
+        meta.put_u64(self.grows);
+        sw.section(tag::META, &meta)?;
+        let mut st = Payload::new();
+        st.put_f64s(&self.counts);
+        st.put_f64s(&self.key_of);
+        sw.section(tag::STATE, &st)?;
+        sw.finish()
+    }
+
+    fn restore(&mut self, r: &mut dyn std::io::Read) -> super::SnapshotResult<()> {
+        use super::snapshot::{tag, Cur, SnapshotError, SnapshotReader};
+        let mut rd = SnapshotReader::new(r)?;
+        rd.check_policy(&self.name)?;
+        let (mut meta, mut st) = (None, None);
+        while let Some((t, pl)) = rd.next_section()? {
+            match t {
+                tag::META => meta = Some(pl),
+                tag::STATE => st = Some(pl),
+                _ => {}
+            }
+        }
+        let meta = meta.ok_or(SnapshotError::Truncated("FTPL META section"))?;
+        let st = st.ok_or(SnapshotError::Truncated("FTPL STATE section"))?;
+        let mut cur = Cur::new(&meta);
+        let n = cur.get_usize()?;
+        let cap = cur.get_usize()?;
+        let zeta = cur.get_f64()?;
+        let seed = cur.get_u64()?;
+        let grows = cur.get_u64()?;
+        cur.finish()?;
+        let mut scur = Cur::new(&st);
+        let counts = scur.get_f64s()?;
+        let key_of = scur.get_f64s()?;
+        scur.finish()?;
+        if n == 0 || cap == 0 || cap > n || counts.len() != n || key_of.len() != n {
+            return Err(SnapshotError::Corrupt("FTPL state out of range"));
+        }
+        let mut keys: Vec<u128> = Vec::with_capacity(cap);
+        for (i, &k) in key_of.iter().enumerate() {
+            if k.is_nan() {
+                continue;
+            }
+            if !k.is_finite() {
+                return Err(SnapshotError::Corrupt("FTPL non-finite cached key"));
+            }
+            keys.push(FlatTree::key_of(k, i as u64));
+        }
+        // the cache is exactly top-C by construction (new() fills it)
+        if keys.len() != cap {
+            return Err(SnapshotError::Corrupt("FTPL cached-set size"));
+        }
+        keys.sort_unstable();
+        self.n = n;
+        self.cap = cap;
+        self.zeta = zeta;
+        self.seed = seed;
+        self.counts = counts;
+        self.cached.rebuild_from_sorted_keys(&keys);
+        self.key_of = key_of;
+        self.grows = grows;
+        Ok(())
+    }
+
     fn diag(&self) -> super::Diag {
         super::Diag {
             grows: self.grows,

@@ -92,6 +92,76 @@ impl Policy for Gds {
             ..Diag::default()
         }
     }
+
+    /// OGBS checkpoint: inflation value + per-item (H, tick) priorities,
+    /// serialized sorted by item id.  The eviction queue is rebuilt from
+    /// the stored priorities; `cost_fn` is a plain fn pointer and stays
+    /// whatever the fresh instance was built with.
+    fn snapshot(&self, w: &mut dyn std::io::Write) -> super::SnapshotResult<()> {
+        use super::snapshot::{tag, Payload, SnapshotWriter};
+        let mut sw = SnapshotWriter::new(w, self.name())?;
+        let mut st = Payload::new();
+        st.put_usize(self.cap);
+        st.put_f64(self.inflation);
+        st.put_u64(self.tick);
+        st.put_u64(self.evictions);
+        let mut entries: Vec<(u64, f64, u64)> =
+            self.h_of.iter().map(|(&i, &(h, t))| (i, h, t)).collect();
+        entries.sort_unstable_by_key(|&(i, _, _)| i);
+        st.put_u64s(&entries.iter().map(|&(i, _, _)| i).collect::<Vec<_>>());
+        st.put_f64s(&entries.iter().map(|&(_, h, _)| h).collect::<Vec<_>>());
+        st.put_u64s(&entries.iter().map(|&(_, _, t)| t).collect::<Vec<_>>());
+        sw.section(tag::STATE, &st)?;
+        sw.finish()
+    }
+
+    fn restore(&mut self, r: &mut dyn std::io::Read) -> super::SnapshotResult<()> {
+        use super::snapshot::{tag, Cur, SnapshotError, SnapshotReader};
+        let mut rd = SnapshotReader::new(r)?;
+        rd.check_policy(self.name())?;
+        let mut st = None;
+        while let Some((t, pl)) = rd.next_section()? {
+            if t == tag::STATE {
+                st = Some(pl);
+            }
+        }
+        let st = st.ok_or(SnapshotError::Truncated("GDS STATE section"))?;
+        let mut cur = Cur::new(&st);
+        let cap = cur.get_usize()?;
+        let inflation = cur.get_f64()?;
+        let tick = cur.get_u64()?;
+        let evictions = cur.get_u64()?;
+        let items = cur.get_u64s()?;
+        let hs = cur.get_f64s()?;
+        let ticks = cur.get_u64s()?;
+        cur.finish()?;
+        if cap == 0
+            || !inflation.is_finite()
+            || items.len() != hs.len()
+            || items.len() != ticks.len()
+            || items.len() > cap
+        {
+            return Err(SnapshotError::Corrupt("GDS state out of range"));
+        }
+        let mut h_of = FxHashMap::default();
+        let mut queue = BTreeSet::new();
+        for ((&i, &h), &t) in items.iter().zip(&hs).zip(&ticks) {
+            if !h.is_finite() || t > tick {
+                return Err(SnapshotError::Corrupt("GDS priority out of range"));
+            }
+            if h_of.insert(i, (h, t)).is_some() {
+                return Err(SnapshotError::Corrupt("GDS duplicate item"));
+            }
+            queue.insert((OrdF64::new(h), t, i));
+        }
+        self.cap = cap;
+        self.inflation = inflation;
+        self.queue = queue;
+        self.h_of = h_of;
+        self.tick = tick;
+        self.evictions = evictions;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

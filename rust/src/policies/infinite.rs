@@ -32,6 +32,36 @@ impl Policy for InfiniteCache {
     fn occupancy(&self) -> f64 {
         self.seen.len() as f64
     }
+
+    /// OGBS checkpoint: the seen-set, serialized sorted for determinism.
+    fn snapshot(&self, w: &mut dyn std::io::Write) -> super::SnapshotResult<()> {
+        use super::snapshot::{tag, Payload, SnapshotWriter};
+        let mut sw = SnapshotWriter::new(w, self.name())?;
+        let mut st = Payload::new();
+        let mut seen: Vec<u64> = self.seen.iter().copied().collect();
+        seen.sort_unstable();
+        st.put_u64s(&seen);
+        sw.section(tag::STATE, &st)?;
+        sw.finish()
+    }
+
+    fn restore(&mut self, r: &mut dyn std::io::Read) -> super::SnapshotResult<()> {
+        use super::snapshot::{tag, Cur, SnapshotError, SnapshotReader};
+        let mut rd = SnapshotReader::new(r)?;
+        rd.check_policy(self.name())?;
+        let mut st = None;
+        while let Some((t, pl)) = rd.next_section()? {
+            if t == tag::STATE {
+                st = Some(pl);
+            }
+        }
+        let st = st.ok_or(SnapshotError::Truncated("Infinite STATE section"))?;
+        let mut cur = Cur::new(&st);
+        let seen = cur.get_u64s()?;
+        cur.finish()?;
+        self.seen = seen.into_iter().collect();
+        Ok(())
+    }
 }
 
 #[cfg(test)]

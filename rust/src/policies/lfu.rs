@@ -93,6 +93,88 @@ impl Policy for Lfu {
             ..Diag::default()
         }
     }
+
+    /// OGBS checkpoint: persistent frequency map + cached-set keys, both
+    /// serialized sorted by item id for deterministic bytes.  The ordered
+    /// eviction set is rebuilt from the stored (count, tick) keys.
+    fn snapshot(&self, w: &mut dyn std::io::Write) -> super::SnapshotResult<()> {
+        use super::snapshot::{tag, Payload, SnapshotWriter};
+        let mut sw = SnapshotWriter::new(w, self.name())?;
+        let mut st = Payload::new();
+        st.put_usize(self.cap);
+        st.put_u64(self.tick);
+        st.put_u64(self.evictions);
+        let mut freq: Vec<(u64, u64)> = self.counts.iter().map(|(&i, &c)| (i, c)).collect();
+        freq.sort_unstable();
+        st.put_u64s(&freq.iter().map(|&(i, _)| i).collect::<Vec<_>>());
+        st.put_u64s(&freq.iter().map(|&(_, c)| c).collect::<Vec<_>>());
+        let mut keys: Vec<(u64, u64, u64)> = self
+            .key_of
+            .iter()
+            .map(|(&i, &(c, t))| (i, c, t))
+            .collect();
+        keys.sort_unstable();
+        st.put_u64s(&keys.iter().map(|&(i, _, _)| i).collect::<Vec<_>>());
+        st.put_u64s(&keys.iter().map(|&(_, c, _)| c).collect::<Vec<_>>());
+        st.put_u64s(&keys.iter().map(|&(_, _, t)| t).collect::<Vec<_>>());
+        sw.section(tag::STATE, &st)?;
+        sw.finish()
+    }
+
+    fn restore(&mut self, r: &mut dyn std::io::Read) -> super::SnapshotResult<()> {
+        use super::snapshot::{tag, Cur, SnapshotError, SnapshotReader};
+        let mut rd = SnapshotReader::new(r)?;
+        rd.check_policy(self.name())?;
+        let mut st = None;
+        while let Some((t, pl)) = rd.next_section()? {
+            if t == tag::STATE {
+                st = Some(pl);
+            }
+        }
+        let st = st.ok_or(SnapshotError::Truncated("LFU STATE section"))?;
+        let mut cur = Cur::new(&st);
+        let cap = cur.get_usize()?;
+        let tick = cur.get_u64()?;
+        let evictions = cur.get_u64()?;
+        let freq_items = cur.get_u64s()?;
+        let freq_counts = cur.get_u64s()?;
+        let key_items = cur.get_u64s()?;
+        let key_counts = cur.get_u64s()?;
+        let key_ticks = cur.get_u64s()?;
+        cur.finish()?;
+        if cap == 0
+            || freq_items.len() != freq_counts.len()
+            || key_items.len() != key_counts.len()
+            || key_items.len() != key_ticks.len()
+            || key_items.len() > cap
+        {
+            return Err(SnapshotError::Corrupt("LFU state out of range"));
+        }
+        let mut counts = FxHashMap::default();
+        for (&i, &c) in freq_items.iter().zip(&freq_counts) {
+            if counts.insert(i, c).is_some() {
+                return Err(SnapshotError::Corrupt("LFU duplicate count entry"));
+            }
+        }
+        let mut key_of = FxHashMap::default();
+        let mut cached = BTreeSet::new();
+        for ((&i, &c), &t) in key_items.iter().zip(&key_counts).zip(&key_ticks) {
+            if !counts.contains_key(&i) || t > tick {
+                return Err(SnapshotError::Corrupt("LFU cached item inconsistent"));
+            }
+            if key_of.insert(i, (c, t)).is_some() {
+                return Err(SnapshotError::Corrupt("LFU duplicate cached item"));
+            }
+            cached.insert((c, t, i));
+        }
+        self.cap = cap;
+        self.counts = counts;
+        self.cached = cached;
+        self.key_of = key_of;
+        self.tick = tick;
+        self.evictions = evictions;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -28,6 +28,7 @@ pub mod ogb;
 pub mod ogb_classic;
 pub mod omd;
 pub mod opt;
+pub mod snapshot;
 pub mod spec;
 
 pub use arc::ArcCache;
@@ -42,6 +43,7 @@ pub use ogb::Ogb;
 pub use ogb_classic::{CpuDenseStep, DenseStep, OgbClassic, OgbClassicMode};
 pub use omd::OmdFractional;
 pub use opt::Opt;
+pub use snapshot::{SnapshotError, SnapshotResult};
 pub use spec::{PolicyBuildCtx, PolicyRegistry, PolicySpec};
 
 /// One weighted request: the paper's general objective (Eq. 1) rewards a
@@ -148,6 +150,31 @@ pub trait Policy {
     /// cumulative since construction.
     fn diag(&self) -> Diag {
         Diag::default()
+    }
+
+    /// Serialize the complete live state into the `OGBS` checkpoint
+    /// format (DESIGN.md §12).  The contract — enforced by
+    /// `rust/tests/checkpoint_roundtrip.rs` for every registered spec —
+    /// is *trajectory identity*: [`Policy::restore`]-ing the bytes into a
+    /// fresh instance built from the same [`PolicySpec`] and continuing
+    /// must be bit-identical to never having checkpointed.  Every
+    /// built-in implements it; the default (for registry-built externals
+    /// that opt out) returns [`SnapshotError::Unsupported`], which the
+    /// shard supervisor treats as "checkpointing unavailable" and
+    /// degrades to rebuild-from-scratch on restart.
+    fn snapshot(&self, w: &mut dyn std::io::Write) -> SnapshotResult<()> {
+        let _ = w;
+        Err(SnapshotError::Unsupported("this policy"))
+    }
+
+    /// Replace the live state with a checkpoint previously written by
+    /// [`Policy::snapshot`] on a same-spec instance.  Malformed input —
+    /// wrong policy, flipped bits, truncation — returns a typed
+    /// [`SnapshotError`]; on error the policy may be left partially
+    /// restored and must be discarded.
+    fn restore(&mut self, r: &mut dyn std::io::Read) -> SnapshotResult<()> {
+        let _ = r;
+        Err(SnapshotError::Unsupported("this policy"))
     }
 
     /// Walk the policy's live instruments into an observability visitor
@@ -283,6 +310,14 @@ impl Policy for AnyPolicy {
         any_policy_dispatch!(self, p => p.diag())
     }
 
+    fn snapshot(&self, w: &mut dyn std::io::Write) -> SnapshotResult<()> {
+        any_policy_dispatch!(self, p => p.snapshot(w))
+    }
+
+    fn restore(&mut self, r: &mut dyn std::io::Read) -> SnapshotResult<()> {
+        any_policy_dispatch!(self, p => p.restore(r))
+    }
+
     fn instruments(&self, v: &mut dyn crate::obs::InstrumentVisitor) {
         any_policy_dispatch!(self, p => p.instruments(v))
     }
@@ -311,6 +346,14 @@ impl Policy for Box<dyn Policy> {
 
     fn diag(&self) -> Diag {
         (**self).diag()
+    }
+
+    fn snapshot(&self, w: &mut dyn std::io::Write) -> SnapshotResult<()> {
+        (**self).snapshot(w)
+    }
+
+    fn restore(&mut self, r: &mut dyn std::io::Read) -> SnapshotResult<()> {
+        (**self).restore(r)
     }
 
     fn instruments(&self, v: &mut dyn crate::obs::InstrumentVisitor) {

@@ -253,6 +253,89 @@ impl Policy for Ogb {
         }
     }
 
+    /// OGBS checkpoint (DESIGN.md §12): three sections — policy META
+    /// (eta, B, pending un-flushed batch, diag counters), the LAZY
+    /// projection (stale tree keys included), and the SAMPLER (stale
+    /// difference keys included).  Restoring into a fresh same-spec
+    /// instance continues bit-identically, even mid-batch.
+    fn snapshot(&self, w: &mut dyn std::io::Write) -> super::SnapshotResult<()> {
+        use super::snapshot::{tag, Payload, SnapshotWriter};
+        let mut sw = SnapshotWriter::new(w, &self.name)?;
+        let mut meta = Payload::new();
+        meta.put_f64(self.eta);
+        meta.put_usize(self.b);
+        meta.put_opt_usize(self.theory_t);
+        meta.put_u64(self.removed_coeffs);
+        meta.put_u64(self.sample_evictions);
+        meta.put_u64(self.rebases);
+        meta.put_u64(self.grows);
+        meta.put_u64(self.requests);
+        meta.put_u64s(&self.batch);
+        sw.section(tag::META, &meta)?;
+        let mut lz = Payload::new();
+        self.lazy.snapshot_payload(&mut lz);
+        sw.section(tag::LAZY, &lz)?;
+        let mut sp = Payload::new();
+        self.sampler.snapshot_payload(&mut sp);
+        sw.section(tag::SAMPLER, &sp)?;
+        sw.finish()
+    }
+
+    fn restore(&mut self, r: &mut dyn std::io::Read) -> super::SnapshotResult<()> {
+        use super::snapshot::{tag, Cur, SnapshotError, SnapshotReader};
+        let mut rd = SnapshotReader::new(r)?;
+        rd.check_policy(&self.name)?;
+        let (mut meta, mut lz, mut sp) = (None, None, None);
+        while let Some((t, pl)) = rd.next_section()? {
+            match t {
+                tag::META => meta = Some(pl),
+                tag::LAZY => lz = Some(pl),
+                tag::SAMPLER => sp = Some(pl),
+                _ => {} // unknown sections are skippable by design
+            }
+        }
+        let meta = meta.ok_or(SnapshotError::Truncated("OGB META section"))?;
+        let lz = lz.ok_or(SnapshotError::Truncated("OGB LAZY section"))?;
+        let sp = sp.ok_or(SnapshotError::Truncated("OGB SAMPLER section"))?;
+        let mut cur = Cur::new(&meta);
+        let eta = cur.get_f64()?;
+        let b = cur.get_usize()?;
+        let theory_t = cur.get_opt_usize()?;
+        let removed_coeffs = cur.get_u64()?;
+        let sample_evictions = cur.get_u64()?;
+        let rebases = cur.get_u64()?;
+        let grows = cur.get_u64()?;
+        let requests = cur.get_u64()?;
+        let batch = cur.get_u64s()?;
+        cur.finish()?;
+        if b < 1 || !(eta > 0.0) || batch.len() > b {
+            return Err(SnapshotError::Corrupt("OGB meta out of range"));
+        }
+        let mut lcur = Cur::new(&lz);
+        let lazy = LazySimplex::restore_payload(&mut lcur)?;
+        lcur.finish()?;
+        let mut scur = Cur::new(&sp);
+        let sampler = CoordinatedSampler::restore_payload(&mut scur)?;
+        scur.finish()?;
+        if sampler.n() != lazy.n() || batch.iter().any(|&j| j as usize >= lazy.n()) {
+            return Err(SnapshotError::Corrupt("OGB sub-state catalogs disagree"));
+        }
+        let mut pending = Vec::with_capacity(b);
+        pending.extend_from_slice(&batch);
+        self.lazy = lazy;
+        self.sampler = sampler;
+        self.eta = eta;
+        self.b = b;
+        self.batch = pending;
+        self.theory_t = theory_t;
+        self.removed_coeffs = removed_coeffs;
+        self.sample_evictions = sample_evictions;
+        self.rebases = rebases;
+        self.grows = grows;
+        self.requests = requests;
+        Ok(())
+    }
+
     /// Extends the default walk with the structural witnesses of the
     /// O(log N) claim: projection support and tree height, sampler tree
     /// height, rho drift, and the live eta.

@@ -287,6 +287,118 @@ impl Policy for OgbClassic {
         }
     }
 
+    /// OGBS checkpoint: META (scalars + RNG state) and STATE (dense f,
+    /// per-batch counts, sampled cache).  The `DenseStep` backend is NOT
+    /// serialized — the fresh instance keeps its own; the backend name is
+    /// part of the policy name, so a backend mismatch fails the header
+    /// check.  RNG state travels so post-restore re-sampling draws the
+    /// same Madow offsets as the uninterrupted run.
+    fn snapshot(&self, w: &mut dyn std::io::Write) -> super::SnapshotResult<()> {
+        use super::snapshot::{tag, Payload, SnapshotWriter};
+        let mut sw = SnapshotWriter::new(w, &self.name)?;
+        let mut meta = Payload::new();
+        meta.put_usize(self.n);
+        meta.put_f64(self.c);
+        meta.put_f64(self.eta);
+        meta.put_usize(self.b);
+        meta.put_u8(match self.mode {
+            OgbClassicMode::Integral => 0,
+            OgbClassicMode::Fractional => 1,
+        });
+        meta.put_usize(self.in_batch);
+        meta.put_usize(self.occupancy);
+        let (rs, spare) = self.rng.state();
+        meta.put_u64s(&rs);
+        meta.put_opt_f64(spare);
+        meta.put_opt_usize(self.theory_t);
+        meta.put_u64(self.sample_evictions);
+        meta.put_u64(self.grows);
+        sw.section(tag::META, &meta)?;
+        let mut st = Payload::new();
+        st.put_f64s(&self.f);
+        st.put_f64s(&self.counts);
+        st.put_u64s(&self.touched);
+        st.put_bools(&self.cached);
+        sw.section(tag::STATE, &st)?;
+        sw.finish()
+    }
+
+    fn restore(&mut self, r: &mut dyn std::io::Read) -> super::SnapshotResult<()> {
+        use super::snapshot::{tag, Cur, SnapshotError, SnapshotReader};
+        let mut rd = SnapshotReader::new(r)?;
+        rd.check_policy(&self.name)?;
+        let (mut meta, mut st) = (None, None);
+        while let Some((t, pl)) = rd.next_section()? {
+            match t {
+                tag::META => meta = Some(pl),
+                tag::STATE => st = Some(pl),
+                _ => {}
+            }
+        }
+        let meta = meta.ok_or(SnapshotError::Truncated("OGB_cl META section"))?;
+        let st = st.ok_or(SnapshotError::Truncated("OGB_cl STATE section"))?;
+        let mut cur = Cur::new(&meta);
+        let n = cur.get_usize()?;
+        let c = cur.get_f64()?;
+        let eta = cur.get_f64()?;
+        let b = cur.get_usize()?;
+        let mode = match cur.get_u8()? {
+            0 => OgbClassicMode::Integral,
+            1 => OgbClassicMode::Fractional,
+            _ => return Err(SnapshotError::Corrupt("OGB_cl mode byte")),
+        };
+        let in_batch = cur.get_usize()?;
+        let occupancy = cur.get_usize()?;
+        let rs = cur.get_u64s()?;
+        let spare = cur.get_opt_f64()?;
+        let theory_t = cur.get_opt_usize()?;
+        let sample_evictions = cur.get_u64()?;
+        let grows = cur.get_u64()?;
+        cur.finish()?;
+        let mut scur = Cur::new(&st);
+        let f = scur.get_f64s()?;
+        let counts = scur.get_f64s()?;
+        let touched = scur.get_u64s()?;
+        let cached = scur.get_bools()?;
+        scur.finish()?;
+        if n == 0
+            || !(c > 0.0 && c <= n as f64)
+            || b < 1
+            || !(eta > 0.0)
+            || mode != self.mode
+            || in_batch >= b
+            || rs.len() != 4
+            || f.len() != n
+            || counts.len() != n
+            || cached.len() != n
+            || touched.len() > n
+            || touched.iter().any(|&i| i as usize >= n)
+        {
+            return Err(SnapshotError::Corrupt("OGB_cl state out of range"));
+        }
+        if mode == OgbClassicMode::Integral
+            && cached.iter().filter(|&&x| x).count() != occupancy
+        {
+            return Err(SnapshotError::Corrupt("OGB_cl occupancy mismatch"));
+        }
+        self.n = n;
+        self.c = c;
+        self.eta = eta;
+        self.b = b;
+        self.mode = mode;
+        self.f = f;
+        self.counts = counts;
+        self.touched = touched;
+        self.in_batch = in_batch;
+        self.cached = cached;
+        self.occupancy = occupancy;
+        self.rng = Xoshiro256pp::from_state([rs[0], rs[1], rs[2], rs[3]], spare);
+        self.theory_t = theory_t;
+        self.sample_evictions = sample_evictions;
+        self.grows = grows;
+        Ok(())
+    }
+
     fn diag(&self) -> Diag {
         Diag {
             sample_evictions: self.sample_evictions,

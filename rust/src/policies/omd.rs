@@ -224,6 +224,86 @@ impl Policy for OmdFractional {
         self.f.iter().sum()
     }
 
+    /// OGBS checkpoint: META scalars + dense STATE (f, per-batch counts).
+    /// `cap_scratch` is pure scratch (reset at every projection) and is
+    /// rebuilt zeroed on restore.
+    fn snapshot(&self, w: &mut dyn std::io::Write) -> super::SnapshotResult<()> {
+        use super::snapshot::{tag, Payload, SnapshotWriter};
+        let mut sw = SnapshotWriter::new(w, &self.name)?;
+        let mut meta = Payload::new();
+        meta.put_usize(self.n);
+        meta.put_f64(self.c);
+        meta.put_f64(self.eta);
+        meta.put_usize(self.b);
+        meta.put_usize(self.in_batch);
+        meta.put_opt_usize(self.theory_t);
+        meta.put_u64(self.projection_passes);
+        meta.put_u64(self.grows);
+        sw.section(tag::META, &meta)?;
+        let mut st = Payload::new();
+        st.put_f64s(&self.f);
+        st.put_f64s(&self.counts);
+        st.put_u64s(&self.touched);
+        sw.section(tag::STATE, &st)?;
+        sw.finish()
+    }
+
+    fn restore(&mut self, r: &mut dyn std::io::Read) -> super::SnapshotResult<()> {
+        use super::snapshot::{tag, Cur, SnapshotError, SnapshotReader};
+        let mut rd = SnapshotReader::new(r)?;
+        rd.check_policy(&self.name)?;
+        let (mut meta, mut st) = (None, None);
+        while let Some((t, pl)) = rd.next_section()? {
+            match t {
+                tag::META => meta = Some(pl),
+                tag::STATE => st = Some(pl),
+                _ => {}
+            }
+        }
+        let meta = meta.ok_or(SnapshotError::Truncated("OMD META section"))?;
+        let st = st.ok_or(SnapshotError::Truncated("OMD STATE section"))?;
+        let mut cur = Cur::new(&meta);
+        let n = cur.get_usize()?;
+        let c = cur.get_f64()?;
+        let eta = cur.get_f64()?;
+        let b = cur.get_usize()?;
+        let in_batch = cur.get_usize()?;
+        let theory_t = cur.get_opt_usize()?;
+        let projection_passes = cur.get_u64()?;
+        let grows = cur.get_u64()?;
+        cur.finish()?;
+        let mut scur = Cur::new(&st);
+        let f = scur.get_f64s()?;
+        let counts = scur.get_f64s()?;
+        let touched = scur.get_u64s()?;
+        scur.finish()?;
+        if n == 0
+            || !(c > 0.0 && c <= n as f64)
+            || b < 1
+            || !(eta > 0.0)
+            || in_batch >= b
+            || f.len() != n
+            || counts.len() != n
+            || touched.len() > n
+            || touched.iter().any(|&i| i as usize >= n)
+        {
+            return Err(SnapshotError::Corrupt("OMD state out of range"));
+        }
+        self.n = n;
+        self.c = c;
+        self.eta = eta;
+        self.b = b;
+        self.f = f;
+        self.counts = counts;
+        self.touched = touched;
+        self.cap_scratch = vec![false; n];
+        self.in_batch = in_batch;
+        self.theory_t = theory_t;
+        self.projection_passes = projection_passes;
+        self.grows = grows;
+        Ok(())
+    }
+
     fn diag(&self) -> Diag {
         Diag {
             removed_coeffs: self.projection_passes,

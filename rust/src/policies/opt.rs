@@ -49,6 +49,42 @@ impl Policy for Opt {
     fn occupancy(&self) -> f64 {
         self.set.len().min(self.cap) as f64
     }
+
+    /// OGBS checkpoint: the static allocation, serialized sorted.
+    fn snapshot(&self, w: &mut dyn std::io::Write) -> super::SnapshotResult<()> {
+        use super::snapshot::{tag, Payload, SnapshotWriter};
+        let mut sw = SnapshotWriter::new(w, self.name())?;
+        let mut st = Payload::new();
+        st.put_usize(self.cap);
+        let mut items: Vec<u64> = self.set.iter().copied().collect();
+        items.sort_unstable();
+        st.put_u64s(&items);
+        sw.section(tag::STATE, &st)?;
+        sw.finish()
+    }
+
+    fn restore(&mut self, r: &mut dyn std::io::Read) -> super::SnapshotResult<()> {
+        use super::snapshot::{tag, Cur, SnapshotError, SnapshotReader};
+        let mut rd = SnapshotReader::new(r)?;
+        rd.check_policy(self.name())?;
+        let mut st = None;
+        while let Some((t, pl)) = rd.next_section()? {
+            if t == tag::STATE {
+                st = Some(pl);
+            }
+        }
+        let st = st.ok_or(SnapshotError::Truncated("OPT STATE section"))?;
+        let mut cur = Cur::new(&st);
+        let cap = cur.get_usize()?;
+        let items = cur.get_u64s()?;
+        cur.finish()?;
+        if items.len() > cap {
+            return Err(SnapshotError::Corrupt("OPT allocation exceeds capacity"));
+        }
+        self.cap = cap;
+        self.set = items.into_iter().collect();
+        Ok(())
+    }
 }
 
 #[cfg(test)]

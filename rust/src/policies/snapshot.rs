@@ -1,0 +1,598 @@
+//! `OGBS` — versioned, length-prefixed, checksummed policy checkpoints
+//! (DESIGN.md §12).
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! magic "OGBS" | version u32 | name_len u16 | name bytes        header
+//! tag u32 | len u64 | payload bytes | fnv1a(tag,len,payload)    section *
+//! tag 0   | len 0   |               | fnv1a(0,0)                END
+//! ```
+//!
+//! Every concrete policy implements [`crate::policies::Policy::snapshot`] /
+//! [`crate::policies::Policy::restore`] over this format: the header names
+//! the policy (restore refuses a mismatched name — you cannot load an LRU
+//! checkpoint into an FTPL), each section carries its own FNV-1a checksum
+//! (bit flips surface as [`SnapshotError::BadChecksum`], truncation as
+//! [`SnapshotError::Truncated`]), and unknown section tags are *skipped*
+//! so a newer writer stays readable by policies that ignore its additions.
+//!
+//! The hard contract — enforced by `rust/tests/checkpoint_roundtrip.rs`
+//! for every registered [`crate::policies::PolicySpec`] — is **trajectory
+//! identity**: restoring a snapshot into a fresh same-spec instance and
+//! continuing must be bit-identical to never having stopped.  That forces
+//! the format to carry state that a naive rebuild would lose: the lazy
+//! projection's *stale* tree keys (they determine future pop order), the
+//! sampler's stale difference keys, pending un-flushed batches, live RNG
+//! state, and the frozen reward-paying shadow of the fractional policies.
+//!
+//! A full engine checkpoint composes: the shard's policy OGBS artifact
+//! sits next to the `KeyRemapper`'s OGBM snapshot (`trace::ingest`), both
+//! self-describing, both restorable independently.
+
+use std::io::{Read, Write};
+
+pub const MAGIC: [u8; 4] = *b"OGBS";
+pub const VERSION: u32 = 1;
+
+/// Section tags.  `0` terminates; policies start their own tags at 1.
+/// Shared sub-state sections use fixed well-known tags so composite
+/// policies (OGB = lazy + sampler + meta) stay readable.
+pub mod tag {
+    pub const END: u32 = 0;
+    /// single-section policies (baselines) put everything here
+    pub const STATE: u32 = 1;
+    /// `LazySimplex` state (OGB, OGB-frac)
+    pub const LAZY: u32 = 2;
+    /// `CoordinatedSampler` state (OGB)
+    pub const SAMPLER: u32 = 3;
+    /// policy-level metadata (eta, pending batch, diag counters)
+    pub const META: u32 = 4;
+}
+
+/// Typed checkpoint failure — every malformed input maps to one of these
+/// instead of a panic (the fault-injection harness corrupts checkpoints
+/// on purpose and asserts the error class).
+#[derive(Debug)]
+pub enum SnapshotError {
+    Io(std::io::Error),
+    BadMagic([u8; 4]),
+    BadVersion(u32),
+    PolicyMismatch { expected: String, found: String },
+    BadChecksum { tag: u32 },
+    Truncated(&'static str),
+    Corrupt(&'static str),
+    /// the policy does not support checkpointing (registry-built
+    /// `Box<dyn Policy>` without an override)
+    Unsupported(&'static str),
+}
+
+impl std::fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SnapshotError::Io(e) => write!(f, "snapshot I/O: {e}"),
+            SnapshotError::BadMagic(m) => write!(f, "bad OGBS magic {m:?}"),
+            SnapshotError::BadVersion(v) => write!(f, "unsupported OGBS version {v}"),
+            SnapshotError::PolicyMismatch { expected, found } => {
+                write!(f, "policy mismatch: snapshot is {found:?}, target is {expected:?}")
+            }
+            SnapshotError::BadChecksum { tag } => {
+                write!(f, "checksum mismatch in OGBS section tag={tag}")
+            }
+            SnapshotError::Truncated(what) => write!(f, "truncated OGBS data: {what}"),
+            SnapshotError::Corrupt(what) => write!(f, "corrupt OGBS data: {what}"),
+            SnapshotError::Unsupported(who) => {
+                write!(f, "policy {who} does not support snapshot/restore")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SnapshotError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for SnapshotError {
+    fn from(e: std::io::Error) -> Self {
+        SnapshotError::Io(e)
+    }
+}
+
+pub type SnapshotResult<T> = Result<T, SnapshotError>;
+
+/// Incremental FNV-1a (64-bit) — the per-section checksum.  Not
+/// cryptographic; it catches the fault model's bit flips and truncations.
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv1a(u64);
+
+impl Fnv1a {
+    pub fn new() -> Self {
+        Fnv1a(0xCBF2_9CE4_8422_2325)
+    }
+
+    #[inline]
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut h = self.0;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        self.0 = h;
+    }
+
+    pub fn finish(self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Growable section payload with primitive little-endian encoders.
+/// Policies build one `Payload` per section, then hand it to
+/// [`SnapshotWriter::section`].
+#[derive(Debug, Default)]
+pub struct Payload(pub Vec<u8>);
+
+impl Payload {
+    pub fn new() -> Self {
+        Payload(Vec::new())
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+
+    pub fn put_bool(&mut self, v: bool) {
+        self.0.push(v as u8);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    pub fn put_opt_f64(&mut self, v: Option<f64>) {
+        match v {
+            Some(x) => {
+                self.put_u8(1);
+                self.put_f64(x);
+            }
+            None => self.put_u8(0),
+        }
+    }
+
+    pub fn put_opt_usize(&mut self, v: Option<usize>) {
+        match v {
+            Some(x) => {
+                self.put_u8(1);
+                self.put_usize(x);
+            }
+            None => self.put_u8(0),
+        }
+    }
+
+    /// Length-prefixed f64 slice.
+    pub fn put_f64s(&mut self, xs: &[f64]) {
+        self.put_usize(xs.len());
+        for &x in xs {
+            self.put_f64(x);
+        }
+    }
+
+    /// Length-prefixed u64 slice.
+    pub fn put_u64s(&mut self, xs: &[u64]) {
+        self.put_usize(xs.len());
+        for &x in xs {
+            self.put_u64(x);
+        }
+    }
+
+    /// Length-prefixed bool slice (one byte per flag: size is dwarfed by
+    /// the f64 vectors it travels with, and byte-per-flag keeps decode
+    /// trivially branch-free).
+    pub fn put_bools(&mut self, xs: &[bool]) {
+        self.put_usize(xs.len());
+        for &x in xs {
+            self.put_bool(x);
+        }
+    }
+}
+
+/// Streaming OGBS writer: header at construction, one call per section,
+/// [`SnapshotWriter::finish`] seals with the END section.
+pub struct SnapshotWriter<'a> {
+    w: &'a mut dyn Write,
+}
+
+impl<'a> SnapshotWriter<'a> {
+    pub fn new(w: &'a mut dyn Write, policy_name: &str) -> SnapshotResult<Self> {
+        let name = policy_name.as_bytes();
+        if name.len() > u16::MAX as usize {
+            return Err(SnapshotError::Corrupt("policy name too long"));
+        }
+        w.write_all(&MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&(name.len() as u16).to_le_bytes())?;
+        w.write_all(name)?;
+        Ok(Self { w })
+    }
+
+    pub fn section(&mut self, tag: u32, payload: &Payload) -> SnapshotResult<()> {
+        debug_assert_ne!(tag, tag::END, "tag 0 is reserved for END");
+        write_section(self.w, tag, &payload.0)
+    }
+
+    pub fn finish(self) -> SnapshotResult<()> {
+        write_section(self.w, tag::END, &[])
+    }
+}
+
+fn write_section(w: &mut dyn Write, tag: u32, payload: &[u8]) -> SnapshotResult<()> {
+    let len = payload.len() as u64;
+    let mut h = Fnv1a::new();
+    h.update(&tag.to_le_bytes());
+    h.update(&len.to_le_bytes());
+    h.update(payload);
+    w.write_all(&tag.to_le_bytes())?;
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(payload)?;
+    w.write_all(&h.finish().to_le_bytes())?;
+    Ok(())
+}
+
+/// Hard cap on a single section length (1 GiB): a corrupt length prefix
+/// must not drive an unbounded allocation.
+const MAX_SECTION_LEN: u64 = 1 << 30;
+
+/// Streaming OGBS reader: validates header at construction, then yields
+/// checksum-verified sections until END.
+pub struct SnapshotReader<'a> {
+    r: &'a mut dyn Read,
+    name: String,
+    done: bool,
+}
+
+impl<'a> SnapshotReader<'a> {
+    pub fn new(r: &'a mut dyn Read) -> SnapshotResult<Self> {
+        let mut magic = [0u8; 4];
+        read_exact(r, &mut magic, "OGBS magic")?;
+        if magic != MAGIC {
+            return Err(SnapshotError::BadMagic(magic));
+        }
+        let mut v4 = [0u8; 4];
+        read_exact(r, &mut v4, "OGBS version")?;
+        let version = u32::from_le_bytes(v4);
+        if version != VERSION {
+            return Err(SnapshotError::BadVersion(version));
+        }
+        let mut l2 = [0u8; 2];
+        read_exact(r, &mut l2, "OGBS name length")?;
+        let name_len = u16::from_le_bytes(l2) as usize;
+        let mut name = vec![0u8; name_len];
+        read_exact(r, &mut name, "OGBS policy name")?;
+        let name =
+            String::from_utf8(name).map_err(|_| SnapshotError::Corrupt("non-UTF8 policy name"))?;
+        Ok(Self { r, name, done: false })
+    }
+
+    /// The policy name recorded in the header.
+    pub fn policy_name(&self) -> &str {
+        &self.name
+    }
+
+    /// Refuse to restore into the wrong policy.
+    pub fn check_policy(&self, expected: &str) -> SnapshotResult<()> {
+        if self.name == expected {
+            Ok(())
+        } else {
+            Err(SnapshotError::PolicyMismatch {
+                expected: expected.to_string(),
+                found: self.name.clone(),
+            })
+        }
+    }
+
+    /// Next checksum-verified section, or `None` at END.
+    pub fn next_section(&mut self) -> SnapshotResult<Option<(u32, Vec<u8>)>> {
+        if self.done {
+            return Ok(None);
+        }
+        let mut t4 = [0u8; 4];
+        read_exact(self.r, &mut t4, "section tag")?;
+        let tag = u32::from_le_bytes(t4);
+        let mut l8 = [0u8; 8];
+        read_exact(self.r, &mut l8, "section length")?;
+        let len = u64::from_le_bytes(l8);
+        if len > MAX_SECTION_LEN {
+            return Err(SnapshotError::Corrupt("section length exceeds 1 GiB cap"));
+        }
+        let mut payload = vec![0u8; len as usize];
+        read_exact(self.r, &mut payload, "section payload")?;
+        let mut c8 = [0u8; 8];
+        read_exact(self.r, &mut c8, "section checksum")?;
+        let mut h = Fnv1a::new();
+        h.update(&t4);
+        h.update(&l8);
+        h.update(&payload);
+        if h.finish() != u64::from_le_bytes(c8) {
+            return Err(SnapshotError::BadChecksum { tag });
+        }
+        if tag == tag::END {
+            self.done = true;
+            return Ok(None);
+        }
+        Ok(Some((tag, payload)))
+    }
+}
+
+fn read_exact(r: &mut dyn Read, buf: &mut [u8], what: &'static str) -> SnapshotResult<()> {
+    match r.read_exact(buf) {
+        Ok(()) => Ok(()),
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+            Err(SnapshotError::Truncated(what))
+        }
+        Err(e) => Err(SnapshotError::Io(e)),
+    }
+}
+
+/// Bounds-checked little-endian decoder over one section's payload.
+pub struct Cur<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    pub fn new(b: &'a [u8]) -> Self {
+        Cur { b, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> SnapshotResult<&'a [u8]> {
+        if self.pos + n > self.b.len() {
+            return Err(SnapshotError::Truncated("section payload underrun"));
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> SnapshotResult<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_bool(&mut self) -> SnapshotResult<bool> {
+        match self.get_u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            _ => Err(SnapshotError::Corrupt("bool flag out of range")),
+        }
+    }
+
+    pub fn get_u32(&mut self) -> SnapshotResult<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> SnapshotResult<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_usize(&mut self) -> SnapshotResult<usize> {
+        usize::try_from(self.get_u64()?).map_err(|_| SnapshotError::Corrupt("usize overflow"))
+    }
+
+    pub fn get_f64(&mut self) -> SnapshotResult<f64> {
+        Ok(f64::from_bits(self.get_u64()?))
+    }
+
+    pub fn get_opt_f64(&mut self) -> SnapshotResult<Option<f64>> {
+        if self.get_bool()? {
+            Ok(Some(self.get_f64()?))
+        } else {
+            Ok(None)
+        }
+    }
+
+    pub fn get_opt_usize(&mut self) -> SnapshotResult<Option<usize>> {
+        if self.get_bool()? {
+            Ok(Some(self.get_usize()?))
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// Length-prefixed vector length, sanity-capped against the bytes
+    /// actually remaining so a corrupt count cannot over-allocate.
+    fn get_len(&mut self, elem_bytes: usize) -> SnapshotResult<usize> {
+        let n = self.get_usize()?;
+        if n.saturating_mul(elem_bytes) > self.b.len() - self.pos {
+            return Err(SnapshotError::Truncated("vector length exceeds payload"));
+        }
+        Ok(n)
+    }
+
+    pub fn get_f64s(&mut self) -> SnapshotResult<Vec<f64>> {
+        let n = self.get_len(8)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.get_f64()?);
+        }
+        Ok(v)
+    }
+
+    pub fn get_u64s(&mut self) -> SnapshotResult<Vec<u64>> {
+        let n = self.get_len(8)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.get_u64()?);
+        }
+        Ok(v)
+    }
+
+    pub fn get_bools(&mut self) -> SnapshotResult<Vec<bool>> {
+        let n = self.get_len(1)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.get_bool()?);
+        }
+        Ok(v)
+    }
+
+    /// Assert the payload was consumed exactly (catches writer/reader
+    /// drift during development and garbage trailing a corrupt section).
+    pub fn finish(self) -> SnapshotResult<()> {
+        if self.pos == self.b.len() {
+            Ok(())
+        } else {
+            Err(SnapshotError::Corrupt("trailing bytes in section payload"))
+        }
+    }
+}
+
+/// Snapshot any policy into a fresh byte vector.
+pub fn to_vec<P: crate::policies::Policy + ?Sized>(p: &P) -> SnapshotResult<Vec<u8>> {
+    let mut out = Vec::new();
+    p.snapshot(&mut out)?;
+    Ok(out)
+}
+
+/// Restore a policy from an in-memory checkpoint.
+pub fn restore_from_slice<P: crate::policies::Policy + ?Sized>(
+    p: &mut P,
+    bytes: &[u8],
+) -> SnapshotResult<()> {
+    let mut r: &[u8] = bytes;
+    p.restore(&mut r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_doc() -> Vec<u8> {
+        let mut out = Vec::new();
+        let mut w = SnapshotWriter::new(&mut out, "TEST").unwrap();
+        let mut p = Payload::new();
+        p.put_u64(42);
+        p.put_f64(1.5);
+        p.put_bools(&[true, false, true]);
+        p.put_opt_f64(Some(-0.25));
+        p.put_opt_usize(None);
+        w.section(tag::STATE, &p).unwrap();
+        let mut p2 = Payload::new();
+        p2.put_u64s(&[7, 8, 9]);
+        w.section(tag::META, &p2).unwrap();
+        w.finish().unwrap();
+        out
+    }
+
+    #[test]
+    fn roundtrip_sections_and_primitives() {
+        let doc = sample_doc();
+        let mut r: &[u8] = &doc;
+        let mut rd = SnapshotReader::new(&mut r).unwrap();
+        assert_eq!(rd.policy_name(), "TEST");
+        rd.check_policy("TEST").unwrap();
+        assert!(matches!(
+            rd.check_policy("OTHER"),
+            Err(SnapshotError::PolicyMismatch { .. })
+        ));
+        let (t1, pl1) = rd.next_section().unwrap().unwrap();
+        assert_eq!(t1, tag::STATE);
+        let mut c = Cur::new(&pl1);
+        assert_eq!(c.get_u64().unwrap(), 42);
+        assert_eq!(c.get_f64().unwrap(), 1.5);
+        assert_eq!(c.get_bools().unwrap(), vec![true, false, true]);
+        assert_eq!(c.get_opt_f64().unwrap(), Some(-0.25));
+        assert_eq!(c.get_opt_usize().unwrap(), None);
+        c.finish().unwrap();
+        let (t2, pl2) = rd.next_section().unwrap().unwrap();
+        assert_eq!(t2, tag::META);
+        let mut c2 = Cur::new(&pl2);
+        assert_eq!(c2.get_u64s().unwrap(), vec![7, 8, 9]);
+        c2.finish().unwrap();
+        assert!(rd.next_section().unwrap().is_none());
+        assert!(rd.next_section().unwrap().is_none()); // idempotent at END
+    }
+
+    #[test]
+    fn every_flipped_byte_is_detected() {
+        let doc = sample_doc();
+        for i in 0..doc.len() {
+            let mut bad = doc.clone();
+            bad[i] ^= 0x40;
+            let mut r: &[u8] = &bad;
+            let outcome = SnapshotReader::new(&mut r).and_then(|mut rd| {
+                while rd.next_section()?.is_some() {}
+                // header name byte flips leave a structurally valid doc
+                // with a different name — the policy check catches those
+                rd.check_policy("TEST")
+            });
+            assert!(outcome.is_err(), "flip at byte {i} went undetected");
+        }
+    }
+
+    #[test]
+    fn truncation_is_detected_everywhere() {
+        let doc = sample_doc();
+        for cut in 0..doc.len() {
+            let mut r: &[u8] = &doc[..cut];
+            let outcome = SnapshotReader::new(&mut r).and_then(|mut rd| {
+                while rd.next_section()?.is_some() {}
+                Ok(())
+            });
+            assert!(outcome.is_err(), "truncation at byte {cut} went undetected");
+        }
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_typed() {
+        let mut doc = sample_doc();
+        doc[0] = b'X';
+        let mut r: &[u8] = &doc;
+        assert!(matches!(
+            SnapshotReader::new(&mut r),
+            Err(SnapshotError::BadMagic(_))
+        ));
+        let mut doc2 = sample_doc();
+        doc2[4] = 99;
+        let mut r2: &[u8] = &doc2;
+        assert!(matches!(
+            SnapshotReader::new(&mut r2),
+            Err(SnapshotError::BadVersion(99))
+        ));
+    }
+
+    #[test]
+    fn corrupt_length_prefix_cannot_overallocate() {
+        let mut out = Vec::new();
+        let mut w = SnapshotWriter::new(&mut out, "TEST").unwrap();
+        let mut p = Payload::new();
+        p.put_u64(u64::MAX); // lies about a following vector's length
+        w.section(tag::STATE, &p).unwrap();
+        w.finish().unwrap();
+        let mut r: &[u8] = &out;
+        let mut rd = SnapshotReader::new(&mut r).unwrap();
+        let (_, pl) = rd.next_section().unwrap().unwrap();
+        let mut c = Cur::new(&pl);
+        assert!(c.get_f64s().is_err(), "corrupt length must not allocate");
+    }
+}

@@ -530,6 +530,124 @@ impl LazySimplex {
         self.rebase_count += 1;
     }
 
+    /// Serialize the complete projection state into an OGBS section
+    /// payload (DESIGN.md §12).  Besides the obvious vectors this must
+    /// carry two things a naive "rebuild from `to_dense()`" would lose:
+    /// the **stale tree keys** (`z_key` — they determine the order in
+    /// which future redistribution sweeps pop components, so trajectory
+    /// identity requires the exact stale values, not freshly computed
+    /// ones) and the **frozen shadow** (the fractional policy pays
+    /// rewards against it mid-batch).  Scratch capacities ride along so
+    /// a restored instance keeps the warmed allocation-free hot path.
+    pub(crate) fn snapshot_payload(&self, p: &mut crate::policies::snapshot::Payload) {
+        p.put_usize(self.n);
+        p.put_f64(self.c);
+        p.put_f64(self.rho);
+        p.put_f64(self.rebase_threshold);
+        p.put_u64(self.rebase_count);
+        p.put_u64(self.scratch_grows);
+        p.put_usize(self.popped_scratch.capacity());
+        p.put_usize(self.rebase_scratch.capacity());
+        p.put_f64s(&self.f_tilde);
+        p.put_bools(&self.in_z);
+        p.put_f64s(&self.z_key);
+        match &self.shadow {
+            None => p.put_bool(false),
+            Some(sh) => {
+                p.put_bool(true);
+                p.put_f64(sh.rho);
+                // sorted by item id so identical states serialize to
+                // identical bytes regardless of hash-map history
+                let mut items: Vec<(u64, f64)> = sh.saved.iter().map(|(&k, &v)| (k, v)).collect();
+                items.sort_unstable_by_key(|&(k, _)| k);
+                p.put_usize(items.len());
+                for (k, v) in items {
+                    p.put_u64(k);
+                    p.put_f64(v);
+                }
+            }
+        }
+    }
+
+    /// Rebuild a `LazySimplex` from a [`LazySimplex::snapshot_payload`]
+    /// section.  The ordered multiset `z` is reconstructed from the
+    /// stored (stale) `z_key` mirror — NOT from the true `f_tilde`
+    /// values — preserving pop order bit-for-bit.
+    pub(crate) fn restore_payload(
+        cur: &mut crate::policies::snapshot::Cur<'_>,
+    ) -> crate::policies::snapshot::SnapshotResult<Self> {
+        use crate::policies::snapshot::SnapshotError;
+        let n = cur.get_usize()?;
+        let c = cur.get_f64()?;
+        let rho = cur.get_f64()?;
+        let rebase_threshold = cur.get_f64()?;
+        let rebase_count = cur.get_u64()?;
+        let scratch_grows = cur.get_u64()?;
+        let popped_cap = cur.get_usize()?;
+        let rebase_cap = cur.get_usize()?;
+        let f_tilde = cur.get_f64s()?;
+        let in_z = cur.get_bools()?;
+        let z_key = cur.get_f64s()?;
+        if n == 0 || !(c > 0.0 && c <= n as f64) {
+            return Err(SnapshotError::Corrupt("lazy simplex shape out of range"));
+        }
+        if f_tilde.len() != n || in_z.len() != n || z_key.len() != n {
+            return Err(SnapshotError::Corrupt("lazy simplex vector length mismatch"));
+        }
+        // Scratch never holds more than n entries, so a doubling-growth
+        // capacity stays below 2n; anything larger is a corrupt count
+        // that must not drive an allocation.
+        if popped_cap > 2 * n + 64 || rebase_cap > 2 * n + 64 {
+            return Err(SnapshotError::Corrupt("lazy simplex scratch capacity out of range"));
+        }
+        let shadow = if cur.get_bool()? {
+            let sh_rho = cur.get_f64()?;
+            let count = cur.get_usize()?;
+            if count > n {
+                return Err(SnapshotError::Corrupt("shadow larger than catalog"));
+            }
+            let mut saved = FxHashMap::default();
+            for _ in 0..count {
+                let k = cur.get_u64()?;
+                let v = cur.get_f64()?;
+                if k as usize >= n {
+                    return Err(SnapshotError::Corrupt("shadow item out of catalog"));
+                }
+                saved.insert(k, v);
+            }
+            Some(Shadow { rho: sh_rho, saved })
+        } else {
+            None
+        };
+        let mut keys: Vec<u128> = Vec::with_capacity(n);
+        for i in 0..n {
+            if in_z[i] {
+                if !z_key[i].is_finite() {
+                    return Err(SnapshotError::Corrupt("non-finite tree key for live item"));
+                }
+                keys.push(FlatTree::key_of(z_key[i], i as u64));
+            }
+        }
+        keys.sort_unstable();
+        let mut z = FlatTree::new();
+        z.rebuild_from_sorted_keys(&keys);
+        Ok(Self {
+            n,
+            c,
+            rho,
+            f_tilde,
+            in_z,
+            z,
+            z_key,
+            rebase_threshold,
+            rebase_count,
+            popped_scratch: Vec::with_capacity(popped_cap),
+            rebase_scratch: Vec::with_capacity(rebase_cap),
+            scratch_grows,
+            shadow,
+        })
+    }
+
     /// Exact invariant check (test/debug only — O(N)): sum of components
     /// equals C and every component lies in [0, 1].
     pub fn check_invariants(&self, tol: f64) {
@@ -840,6 +958,49 @@ mod tests {
             a.request(rng.next_below(n3 as u64), 0.05);
         }
         a.check_invariants(1e-9);
+    }
+
+    /// DESIGN.md §12: restoring a snapshot payload and continuing must be
+    /// bit-identical to the uninterrupted run — including the stale tree
+    /// keys (pop order), the frozen shadow, and the rebase cadence.
+    #[test]
+    fn snapshot_payload_roundtrip_is_bit_identical() {
+        use crate::policies::snapshot::{Cur, Payload};
+        let (n, c) = (48usize, 12.0);
+        let mut a = LazySimplex::new_uniform(n, c);
+        a.set_rebase_threshold(0.7);
+        a.freeze();
+        let mut rng = Xoshiro256pp::seed_from(29);
+        for _ in 0..800 {
+            a.request(rng.next_below(n as u64), 0.05);
+            a.maybe_rebase();
+        }
+        let mut p = Payload::new();
+        a.snapshot_payload(&mut p);
+        let mut cur = Cur::new(&p.0);
+        let mut b = LazySimplex::restore_payload(&mut cur).unwrap();
+        cur.finish().unwrap();
+        assert_eq!(a.rebase_count(), b.rebase_count());
+        for _ in 0..800 {
+            let j = rng.next_below(n as u64);
+            let sa = a.request(j, 0.05);
+            let sb = b.request(j, 0.05);
+            assert_eq!(sa, sb, "step stats diverged after restore");
+            assert_eq!(a.maybe_rebase().is_some(), b.maybe_rebase().is_some());
+            for i in 0..n as u64 {
+                assert_eq!(
+                    a.prob(i).to_bits(),
+                    b.prob(i).to_bits(),
+                    "prob diverged at {i}"
+                );
+                assert_eq!(
+                    a.frozen_prob(i).to_bits(),
+                    b.frozen_prob(i).to_bits(),
+                    "frozen prob diverged at {i}"
+                );
+            }
+        }
+        b.check_invariants(1e-9);
     }
 
     #[test]

@@ -292,6 +292,81 @@ impl CoordinatedSampler {
         self.scratch_grows
     }
 
+    /// Serialize the complete sampler state into an OGBS section payload
+    /// (DESIGN.md §12).  The `d_key` mirror is stored verbatim: for a
+    /// cached, recently-requested item the stored key is a *stale lower
+    /// bound* on the true `f~_i - p_i` (the perf optimization in
+    /// [`CoordinatedSampler::update`] skips the re-key), and the stale
+    /// value determines which future threshold sweeps pop the item —
+    /// restoring via [`CoordinatedSampler::rebuild`] would recompute true
+    /// keys and silently change the trajectory.
+    pub(crate) fn snapshot_payload(&self, p: &mut crate::policies::snapshot::Payload) {
+        p.put_usize(self.n);
+        p.put_u64(self.seed);
+        p.put_u64(self.epoch);
+        p.put_usize(self.occupancy);
+        p.put_u64(self.scratch_grows);
+        p.put_usize(self.add_scratch.capacity());
+        p.put_usize(self.key_scratch.capacity());
+        p.put_bools(&self.cached);
+        p.put_f64s(&self.d_key);
+    }
+
+    /// Rebuild a sampler from a [`CoordinatedSampler::snapshot_payload`]
+    /// section.  The ordered tree `d` is reconstructed from the stored
+    /// (possibly stale) keys — NOT resampled — preserving eviction order
+    /// bit-for-bit.  Permanent random numbers need no bytes: they are
+    /// hash-derived from `(seed, epoch, i)`.
+    pub(crate) fn restore_payload(
+        cur: &mut crate::policies::snapshot::Cur<'_>,
+    ) -> crate::policies::snapshot::SnapshotResult<Self> {
+        use crate::policies::snapshot::SnapshotError;
+        let n = cur.get_usize()?;
+        let seed = cur.get_u64()?;
+        let epoch = cur.get_u64()?;
+        let occupancy = cur.get_usize()?;
+        let scratch_grows = cur.get_u64()?;
+        let add_cap = cur.get_usize()?;
+        let key_cap = cur.get_usize()?;
+        let cached = cur.get_bools()?;
+        let d_key = cur.get_f64s()?;
+        if cached.len() != n || d_key.len() != n {
+            return Err(SnapshotError::Corrupt("sampler vector length mismatch"));
+        }
+        if add_cap > 2 * n + 64 || key_cap > 2 * n + 64 {
+            return Err(SnapshotError::Corrupt("sampler scratch capacity out of range"));
+        }
+        let mut keys: Vec<u128> = Vec::new();
+        let mut occ = 0usize;
+        for i in 0..n {
+            if cached[i] {
+                if !d_key[i].is_finite() {
+                    return Err(SnapshotError::Corrupt("non-finite key for cached item"));
+                }
+                keys.push(FlatTree::key_of(d_key[i], i as u64));
+                occ += 1;
+            }
+        }
+        if occ != occupancy {
+            return Err(SnapshotError::Corrupt("sampler occupancy out of sync"));
+        }
+        keys.sort_unstable();
+        let mut d = FlatTree::new();
+        d.rebuild_from_sorted_keys(&keys);
+        Ok(Self {
+            n,
+            seed,
+            epoch,
+            cached,
+            occupancy,
+            d_key,
+            d,
+            add_scratch: Vec::with_capacity(add_cap),
+            key_scratch: Vec::with_capacity(key_cap),
+            scratch_grows,
+        })
+    }
+
     /// Test/debug-only exhaustive consistency check against the fractional
     /// state: cached ⟺ f_i >= p_i, and the d-tree mirrors the cached set.
     pub fn check_invariants(&self, lazy: &LazySimplex) {
@@ -496,6 +571,50 @@ mod tests {
             smp.update(&lazy, &[j]);
         }
         smp.check_invariants(&lazy);
+    }
+
+    /// DESIGN.md §12: a restored sampler must continue bit-identically —
+    /// in particular the stale lower-bound keys must survive the
+    /// round-trip (a `rebuild()`-based restore would recompute true keys
+    /// and change future evictions).
+    #[test]
+    fn snapshot_payload_roundtrip_is_bit_identical() {
+        use crate::policies::snapshot::{Cur, Payload};
+        let (n, c) = (96usize, 24.0);
+        let mut lazy = LazySimplex::new_uniform(n, c);
+        let mut a = CoordinatedSampler::new(&lazy, 31);
+        let mut rng = Xoshiro256pp::seed_from(32);
+        let mut batch = Vec::new();
+        for step in 0..1200 {
+            let j = rng.next_below(n as u64);
+            lazy.request(j, 0.04);
+            batch.push(j);
+            if (step + 1) % 4 == 0 {
+                a.update(&lazy, &batch);
+                batch.clear();
+            }
+        }
+        let mut p = Payload::new();
+        a.snapshot_payload(&mut p);
+        let mut cur = Cur::new(&p.0);
+        let mut b = CoordinatedSampler::restore_payload(&mut cur).unwrap();
+        cur.finish().unwrap();
+        assert_eq!(a.occupancy(), b.occupancy());
+        for step in 0..1200 {
+            let j = rng.next_below(n as u64);
+            lazy.request(j, 0.04);
+            batch.push(j);
+            if (step + 1) % 4 == 0 {
+                let sa = a.update(&lazy, &batch);
+                let sb = b.update(&lazy, &batch);
+                batch.clear();
+                assert_eq!(sa, sb, "sample stats diverged after restore");
+                for i in 0..n as u64 {
+                    assert_eq!(a.is_cached(i), b.is_cached(i), "cache diverged at {i}");
+                }
+            }
+        }
+        b.check_invariants(&lazy);
     }
 
     #[test]

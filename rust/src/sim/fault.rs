@@ -1,0 +1,396 @@
+//! Deterministic fault injection for the chaos harness (ISSUE 7).
+//!
+//! A [`FaultPlan`] is parsed from a compact spec string and threaded
+//! through `serve`/`replay` via `--fault-spec`.  Faults fire at exact,
+//! seed-independent trigger points (request counts or byte offsets), so
+//! a faulted run is reproducible bit-for-bit: the same spec against the
+//! same trace panics the same shard at the same batch boundary every
+//! time.  Grammar (the `faults:` prefix is optional):
+//!
+//! ```text
+//! faults:panic@shard1:t=1e6,stall@ring:t=2e6,ms=5,corrupt@trace:byte=4096
+//! ```
+//!
+//! Comma-separated segments; a segment containing `@` starts a new
+//! fault entry (`kind@target[:k=v]`), otherwise it is an extra `k=v`
+//! parameter of the previous entry (this resolves the ambiguity between
+//! the comma that separates faults and the comma that separates a
+//! fault's parameters).  Targets: `shard` (any shard), `shardK`
+//! (specific), `ring` (alias for any shard's ring-drain point), and
+//! `trace` (the ingest byte stream).  Numbers accept `1e6` scientific
+//! notation.
+//!
+//! Injection sites are checked only when a plan is present, keeping the
+//! fault-free hot path untouched (same contract as the flight recorder:
+//! zero overhead when off).
+
+use std::fmt;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// One deterministic fault.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Fault {
+    /// Panic inside the targeted shard's serve loop once it has served
+    /// at least `t` requests.  `shard: None` targets every shard (the
+    /// first to reach `t` fires; with deterministic routing that is
+    /// itself reproducible).
+    Panic { shard: Option<usize>, t: u64 },
+    /// Stall the targeted shard for `ms` milliseconds once it has
+    /// served at least `t` requests — exercises ring backpressure and
+    /// the client's bounded-timeout flush path without killing state.
+    Stall {
+        shard: Option<usize>,
+        t: u64,
+        ms: u64,
+    },
+    /// Flip one byte (XOR 0xFF) at `byte` in the raw trace stream
+    /// during ingest — exercises the typed-error hardening in
+    /// `trace::ingest` and replay's graceful truncation.
+    Corrupt { byte: u64 },
+}
+
+impl fmt::Display for Fault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let shard = |s: &Option<usize>| match s {
+            Some(k) => format!("shard{k}"),
+            None => "shard".to_string(),
+        };
+        match self {
+            Self::Panic { shard: s, t } => write!(f, "panic@{}:t={t}", shard(s)),
+            Self::Stall { shard: s, t, ms } => {
+                write!(f, "stall@{}:t={t},ms={ms}", shard(s))
+            }
+            Self::Corrupt { byte } => write!(f, "corrupt@trace:byte={byte}"),
+        }
+    }
+}
+
+/// A parsed `--fault-spec`: an ordered list of deterministic faults.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+}
+
+/// Parse a number that may use `1e6`-style scientific notation; must be
+/// a non-negative integer value.
+fn parse_count(s: &str, what: &str) -> Result<u64> {
+    if let Ok(v) = s.parse::<u64>() {
+        return Ok(v);
+    }
+    let f: f64 = s
+        .parse()
+        .with_context(|| format!("fault spec: bad {what} {s:?}"))?;
+    if !f.is_finite() || f < 0.0 || f.fract() != 0.0 || f > u64::MAX as f64 {
+        bail!("fault spec: {what} {s:?} is not a non-negative integer");
+    }
+    Ok(f as u64)
+}
+
+/// Parse a target: `shard`, `shardK`, or `ring` → shard scope;
+/// `trace` → the ingest stream.
+fn parse_target(s: &str) -> Result<Option<Option<usize>>> {
+    if s == "trace" {
+        return Ok(None);
+    }
+    if s == "ring" || s == "shard" {
+        return Ok(Some(None));
+    }
+    if let Some(rest) = s.strip_prefix("shard") {
+        let k: usize = rest
+            .parse()
+            .with_context(|| format!("fault spec: bad shard index in {s:?}"))?;
+        return Ok(Some(Some(k)));
+    }
+    bail!("fault spec: unknown target {s:?} (expected shard, shardK, ring, or trace)");
+}
+
+impl FaultPlan {
+    /// Parse a fault-spec string; see the module docs for the grammar.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let spec = spec.trim();
+        let spec = spec.strip_prefix("faults:").unwrap_or(spec);
+        if spec.is_empty() {
+            bail!("fault spec is empty");
+        }
+        // Group comma segments into entries: a segment with '@' starts a
+        // new entry, the rest are that entry's extra k=v parameters.
+        let mut entries: Vec<Vec<&str>> = Vec::new();
+        for seg in spec.split(',') {
+            let seg = seg.trim();
+            if seg.is_empty() {
+                continue;
+            }
+            if seg.contains('@') {
+                entries.push(vec![seg]);
+            } else if let Some(last) = entries.last_mut() {
+                last.push(seg);
+            } else {
+                bail!("fault spec: parameter {seg:?} before any kind@target entry");
+            }
+        }
+        let mut faults = Vec::new();
+        for entry in entries {
+            // entry[0] is "kind@target[:k=v]", rest are extra "k=v"
+            let (kind, tail) = entry[0]
+                .split_once('@')
+                .expect("entry starts with an @ segment");
+            let (target, first_params) = match tail.split_once(':') {
+                Some((t, p)) => (t, Some(p)),
+                None => (tail, None),
+            };
+            let mut params: Vec<(&str, &str)> = Vec::new();
+            for kv in first_params.into_iter().chain(entry[1..].iter().copied()) {
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| anyhow!("fault spec: expected k=v, got {kv:?}"))?;
+                params.push((k.trim(), v.trim()));
+            }
+            let get = |key: &str| params.iter().find(|(k, _)| *k == key).map(|(_, v)| *v);
+            for (k, _) in &params {
+                if !matches!(*k, "t" | "ms" | "byte") {
+                    bail!("fault spec: unknown parameter {k:?} in {:?}", entry[0]);
+                }
+            }
+            let shard_target = parse_target(target)?;
+            let fault = match (kind, shard_target) {
+                ("panic", Some(shard)) => Fault::Panic {
+                    shard,
+                    t: parse_count(
+                        get("t").ok_or_else(|| anyhow!("fault spec: panic needs t="))?,
+                        "t",
+                    )?,
+                },
+                ("stall", Some(shard)) => Fault::Stall {
+                    shard,
+                    t: parse_count(
+                        get("t").ok_or_else(|| anyhow!("fault spec: stall needs t="))?,
+                        "t",
+                    )?,
+                    ms: parse_count(get("ms").unwrap_or("1"), "ms")?,
+                },
+                ("corrupt", None) => Fault::Corrupt {
+                    byte: parse_count(
+                        get("byte").ok_or_else(|| anyhow!("fault spec: corrupt needs byte="))?,
+                        "byte",
+                    )?,
+                },
+                ("corrupt", Some(_)) => {
+                    bail!("fault spec: corrupt targets the trace (corrupt@trace:byte=N)")
+                }
+                (other, None) => bail!("fault spec: {other:?} cannot target the trace"),
+                (other, _) => bail!("fault spec: unknown fault kind {other:?}"),
+            };
+            faults.push(fault);
+        }
+        Ok(Self { faults })
+    }
+
+    /// The shard-scoped faults visible to shard `shard_id`, as a
+    /// mutable firing schedule for its supervisor loop.
+    pub fn for_shard(&self, shard_id: usize) -> ShardFaults {
+        let mut sf = ShardFaults::default();
+        for f in &self.faults {
+            match *f {
+                Fault::Panic { shard, t } if shard.is_none() || shard == Some(shard_id) => {
+                    sf.entries.push(ShardFault {
+                        t,
+                        kind: ShardFaultKind::Panic,
+                        fired: false,
+                    });
+                }
+                Fault::Stall { shard, t, ms } if shard.is_none() || shard == Some(shard_id) => {
+                    sf.entries.push(ShardFault {
+                        t,
+                        kind: ShardFaultKind::Stall { ms },
+                        fired: false,
+                    });
+                }
+                _ => {}
+            }
+        }
+        sf.entries.sort_by_key(|e| e.t);
+        sf
+    }
+
+    /// The byte offset to corrupt in the trace stream, if any.
+    pub fn trace_corruption(&self) -> Option<u64> {
+        self.faults.iter().find_map(|f| match f {
+            Fault::Corrupt { byte } => Some(*byte),
+            _ => None,
+        })
+    }
+
+    /// True if any fault targets shard serve loops (panic or stall).
+    pub fn has_shard_faults(&self) -> bool {
+        self.faults
+            .iter()
+            .any(|f| matches!(f, Fault::Panic { .. } | Fault::Stall { .. }))
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "faults:")?;
+        for (i, fault) in self.faults.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{fault}")?;
+        }
+        Ok(())
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ShardFaultKind {
+    Panic,
+    Stall { ms: u64 },
+}
+
+#[derive(Debug, Clone)]
+struct ShardFault {
+    t: u64,
+    kind: ShardFaultKind,
+    fired: bool,
+}
+
+/// A shard-local firing schedule, consumed by the supervisor loop.
+/// Each fault fires at most once: the `fired` flag is set *before* the
+/// panic is raised, so the re-served batch after a restart does not
+/// re-trigger the same fault.
+#[derive(Debug, Clone, Default)]
+pub struct ShardFaults {
+    entries: Vec<ShardFault>,
+}
+
+impl ShardFaults {
+    /// True if any fault is still pending.
+    pub fn pending(&self) -> bool {
+        self.entries.iter().any(|e| !e.fired)
+    }
+
+    /// Called at a batch boundary with the shard's cumulative served
+    /// count.  Sleeps through any due stalls; panics (after marking the
+    /// fault fired) for a due panic fault.
+    pub fn before_batch(&mut self, served: u64) {
+        for e in &mut self.entries {
+            if e.fired || served < e.t {
+                continue;
+            }
+            e.fired = true;
+            match e.kind {
+                ShardFaultKind::Stall { ms } => {
+                    std::thread::sleep(std::time::Duration::from_millis(ms));
+                }
+                ShardFaultKind::Panic => {
+                    panic!("injected fault: panic at served={served} (trigger t={})", e.t);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_issue_example() {
+        let p =
+            FaultPlan::parse("faults:panic@shard1:t=1e6,stall@ring:t=2e6,ms=5,corrupt@trace:byte=4096")
+                .unwrap();
+        assert_eq!(
+            p.faults,
+            vec![
+                Fault::Panic {
+                    shard: Some(1),
+                    t: 1_000_000
+                },
+                Fault::Stall {
+                    shard: None,
+                    t: 2_000_000,
+                    ms: 5
+                },
+                Fault::Corrupt { byte: 4096 },
+            ]
+        );
+        assert_eq!(p.trace_corruption(), Some(4096));
+        assert!(p.has_shard_faults());
+    }
+
+    #[test]
+    fn prefix_is_optional_and_display_round_trips() {
+        let p = FaultPlan::parse("panic@shard:t=500").unwrap();
+        assert_eq!(
+            p.faults,
+            vec![Fault::Panic {
+                shard: None,
+                t: 500
+            }]
+        );
+        let q = FaultPlan::parse(&p.to_string()).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn stall_defaults_ms_to_one() {
+        let p = FaultPlan::parse("stall@shard0:t=100").unwrap();
+        assert_eq!(
+            p.faults,
+            vec![Fault::Stall {
+                shard: Some(0),
+                t: 100,
+                ms: 1
+            }]
+        );
+    }
+
+    #[test]
+    fn for_shard_scopes_and_sorts() {
+        let p = FaultPlan::parse("panic@shard1:t=900,panic@shard0:t=100,stall@shard:t=50,ms=2")
+            .unwrap();
+        let s0 = p.for_shard(0);
+        // shard 0 sees its own panic plus the any-shard stall, sorted by t
+        assert_eq!(s0.entries.len(), 2);
+        assert_eq!(s0.entries[0].t, 50);
+        assert_eq!(s0.entries[1].t, 100);
+        let s1 = p.for_shard(1);
+        assert_eq!(s1.entries.len(), 2);
+        assert_eq!(s1.entries[1].t, 900);
+    }
+
+    #[test]
+    fn before_batch_fires_once() {
+        let p = FaultPlan::parse("panic@shard0:t=10").unwrap();
+        let mut sf = p.for_shard(0);
+        sf.before_batch(5); // not due yet
+        assert!(sf.pending());
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| sf.before_batch(10)));
+        assert!(r.is_err(), "due panic fault must fire");
+        // fired flag was set before the panic: a re-served batch at the
+        // same served count must NOT re-trigger
+        assert!(!sf.pending());
+        sf.before_batch(10);
+        sf.before_batch(11);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "",
+            "faults:",
+            "t=5",                      // param before any entry
+            "panic@shard1",             // missing t
+            "panic@trace:t=5",          // panic cannot target trace
+            "corrupt@shard0:byte=5",    // corrupt must target trace
+            "explode@shard0:t=5",       // unknown kind
+            "panic@disk0:t=5",          // unknown target
+            "panic@shard0:t=1.5",      // non-integer trigger
+            "panic@shard0:t=5,zz=3",    // unknown param
+            "stall@shard0:t=5,ms",      // not k=v
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted: {bad:?}");
+        }
+    }
+}

@@ -6,11 +6,14 @@
 //! policy × cache-size [`sweep`] runner, the request [`hotpath`]
 //! microbench suite behind `ogb-cache bench` / `BENCH_hotpath.json`,
 //! the [`shardbench`] multi-core scaling suite behind
-//! `ogb-cache serve --smoke` / `BENCH_shard.json`, and the raw-trace
+//! `ogb-cache serve --smoke` / `BENCH_shard.json`, the raw-trace
 //! [`replay`] harness (open-catalog ingestion, DESIGN.md §10) behind
-//! `ogb-cache replay` / `BENCH_replay.json`.
+//! `ogb-cache replay` / `BENCH_replay.json`, and the deterministic
+//! [`fault`] injection plan behind `--fault-spec` (chaos harness,
+//! DESIGN.md §12).
 
 pub mod engine;
+pub mod fault;
 pub mod hotpath;
 pub mod regret;
 pub mod replay;
@@ -18,6 +21,7 @@ pub mod shardbench;
 pub mod sweep;
 
 pub use engine::{run, run_source, run_source_obs, serve_growing, RunConfig, RunResult};
+pub use fault::{Fault, FaultPlan, ShardFaults};
 pub use hotpath::{run_hotpath, run_hotpath_obs, HotpathConfig, HotpathResult, HotpathRow};
 pub use regret::{regret_series, regret_series_weighted, RegretPoint, StreamingOpt};
 pub use replay::{run_replay, run_replay_obs, ReplayConfig, ReplayMode, ReplayResult, ReplayRow};

@@ -89,6 +89,10 @@ pub struct ReplayConfig {
     pub densify_out: String,
     /// spill the remapper snapshot here ("" = skip)
     pub snapshot_out: String,
+    /// fault injection (DESIGN.md §12): XOR-flip the raw input byte at
+    /// this offset before parsing — the corruption lands *below* the
+    /// format parsers, which is the layer the hardening contract covers
+    pub corrupt_byte: Option<u64>,
 }
 
 impl Default for ReplayConfig {
@@ -105,6 +109,7 @@ impl Default for ReplayConfig {
             rebase_threshold: None,
             densify_out: String::new(),
             snapshot_out: String::new(),
+            corrupt_byte: None,
         }
     }
 }
@@ -227,13 +232,87 @@ impl ReplayResult {
     }
 }
 
-/// Bail out if the remapped stream ended on a raw parse error — a
-/// silently truncated replay would report wrong hit ratios.
-fn check_stream(src: &RemappedSource) -> Result<()> {
+/// Check how the remapped stream ended.  Exact mode is a measurement
+/// mode: a parse error is a hard failure (a silently truncated replay
+/// would report wrong hit ratios).  Grow mode is the online-serving
+/// shape (DESIGN.md §12): a corrupt record truncates the stream with a
+/// WARN and the clean prefix stands — first-seen remapping makes the
+/// truncation point identical across passes, so per-policy results stay
+/// comparable.
+fn check_stream(src: &RemappedSource, truncate_ok: bool) -> Result<()> {
     if let Some(e) = src.error() {
+        if truncate_ok {
+            crate::log_warn!(
+                "grow mode: raw stream truncated on a parse error ({e}) — \
+                 replaying the clean prefix"
+            );
+            return Ok(());
+        }
         bail!("raw trace ended on a parse error: {e}");
     }
     Ok(())
+}
+
+/// Deletes the corrupted temp copy when the replay ends (success or
+/// error path alike).
+struct CorruptGuard(Option<PathBuf>);
+
+impl Drop for CorruptGuard {
+    fn drop(&mut self) {
+        if let Some(p) = &self.0 {
+            std::fs::remove_file(p).ok();
+        }
+    }
+}
+
+/// The filesystem path inside an [`open_raw`] spec (bare path,
+/// `kind:<path>`, or `kind:...,path=<p>,...`).
+fn spec_input_path(input: &str) -> &str {
+    let Some((kind, rest)) = input.split_once(':') else {
+        return input;
+    };
+    if !matches!(kind, "csv" | "tsv" | "ogbr" | "ogbt") {
+        return input; // a bare path that happens to contain ':'
+    }
+    if !rest.contains('=') {
+        return rest.trim();
+    }
+    rest.split(',')
+        .filter_map(|kv| kv.trim().strip_prefix("path="))
+        .next()
+        .unwrap_or(input)
+}
+
+/// `corrupt@trace:byte=K` (DESIGN.md §12): materialize a copy of the
+/// raw input with byte K XOR'd with 0xFF and point the replay at it.
+/// The extension is preserved so `open_raw`'s dispatch is unchanged —
+/// the flipped byte hits whatever the format put there (magic, length
+/// prefix, key, weight), exercising the parser hardening below.
+fn corrupt_input(input: &str, offset: u64) -> Result<(String, CorruptGuard)> {
+    let path = spec_input_path(input);
+    let mut bytes =
+        std::fs::read(path).with_context(|| format!("read `{path}` for fault injection"))?;
+    ensure!(
+        (offset as usize) < bytes.len(),
+        "corrupt@trace byte {offset} is beyond the input ({} bytes)",
+        bytes.len()
+    );
+    bytes[offset as usize] ^= 0xFF;
+    let ext = Path::new(path)
+        .extension()
+        .map(|e| format!(".{}", e.to_string_lossy()))
+        .unwrap_or_default();
+    let tmp = std::env::temp_dir().join(format!(
+        "ogb_corrupt_{}_{offset}{ext}",
+        std::process::id()
+    ));
+    std::fs::write(&tmp, &bytes).with_context(|| format!("write {}", tmp.display()))?;
+    crate::log_warn!(
+        "fault injection: flipped byte {offset} of `{path}` -> {}",
+        tmp.display()
+    );
+    let spec = input.replacen(path, &tmp.to_string_lossy(), 1);
+    Ok((spec, CorruptGuard(Some(tmp))))
 }
 
 /// Run the replay (see module docs).
@@ -250,12 +329,19 @@ pub fn run_replay_obs(
 ) -> Result<ReplayResult> {
     ensure!(!cfg.policies.is_empty(), "replay needs at least one policy");
     let wall0 = Instant::now();
+    let truncate_ok = cfg.mode == ReplayMode::Grow;
+    // Fault injection happens once, up front: every pass below streams
+    // the same corrupted bytes, keeping the runs comparable.
+    let (input, _corrupt_guard) = match cfg.corrupt_byte {
+        Some(b) => corrupt_input(&cfg.input, b)?,
+        None => (cfg.input.clone(), CorruptGuard(None)),
+    };
 
     // Pass 1: discover the catalog + hindsight OPT in one streaming scan
     // (drained by hand rather than via `StreamingOpt::from_source` so a
     // single non-unit weight flags the run as weighted — a float-sum
     // comparison could cancel out, e.g. alternating 0.5 and 1.5).
-    let mut src = RemappedSource::new(open_raw(&cfg.input)?);
+    let mut src = RemappedSource::new(open_raw(&input)?);
     let source_name = src.name();
     let mut opt = StreamingOpt::new();
     let mut weighted = false;
@@ -273,7 +359,7 @@ pub fn run_replay_obs(
             None => break,
         }
     }
-    check_stream(&src)?;
+    check_stream(&src, truncate_ok)?;
     let remapper = src.into_remapper();
     let catalog = remapper.len();
     let t_total = opt.requests() as usize;
@@ -300,7 +386,7 @@ pub fn run_replay_obs(
         );
     }
     if !cfg.densify_out.is_empty() {
-        let n = densify(&cfg.input, &remapper, &source_name, cfg, catalog)?;
+        let n = densify(&input, &remapper, &source_name, cfg, catalog)?;
         ensure!(
             n == t_total as u64,
             "densify pass emitted {n} of {t_total} requests"
@@ -314,10 +400,10 @@ pub fn run_replay_obs(
         let mut src = match cfg.mode {
             // completed mapping: catalog already final, no growth events
             ReplayMode::Exact => {
-                RemappedSource::with_remapper(open_raw(&cfg.input)?, remapper.clone())
+                RemappedSource::with_remapper(open_raw(&input)?, remapper.clone())
             }
             // fresh mapping: the catalog is re-discovered online
-            ReplayMode::Grow => RemappedSource::new(open_raw(&cfg.input)?),
+            ReplayMode::Grow => RemappedSource::new(open_raw(&input)?),
         };
         let mut policy: AnyPolicy = if name == "opt" {
             AnyPolicy::Opt(Opt::from_items(
@@ -346,7 +432,7 @@ pub fn run_replay_obs(
             },
             obs.as_deref_mut(),
         );
-        check_stream(&src)?;
+        check_stream(&src, truncate_ok)?;
         ensure!(
             r.requests == t_total,
             "policy pass replayed {} of {t_total} requests",
@@ -420,7 +506,7 @@ fn densify(
             None => break,
         }
     }
-    check_stream(&src)?;
+    check_stream(&src, cfg.mode == ReplayMode::Grow)?;
     w.finish(catalog)?;
     Ok(n)
 }
@@ -530,6 +616,55 @@ mod tests {
                 );
             }
         }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    /// Fault injection (DESIGN.md §12): flipping one byte of an OGBR
+    /// record tag kills that record's framing.  Exact mode (measurement)
+    /// must fail hard; grow mode (online serving shape) truncates to the
+    /// clean prefix and reports exactly the records before the flip.
+    #[test]
+    fn corrupt_byte_truncates_grow_and_fails_exact() {
+        let dir = std::env::temp_dir().join("ogb_replay_corrupt_test");
+        let (p, _) = sparse_fixture(&dir);
+        // OGBR layout: 16-byte header, then 25 bytes per u64-key record
+        // (tag 1 + key 8 + weight 8 + ts 8); flip record 1000's tag.
+        let base = ReplayConfig {
+            input: p.to_string_lossy().into_owned(),
+            policies: vec!["lru".into()],
+            corrupt_byte: Some(16 + 25 * 1_000),
+            ..ReplayConfig::default()
+        };
+        let err = run_replay(&base).unwrap_err().to_string();
+        assert!(
+            err.contains("parse error"),
+            "exact mode must fail hard on corrupt input: {err}"
+        );
+        let r = run_replay(&ReplayConfig {
+            mode: ReplayMode::Grow,
+            ..base.clone()
+        })
+        .unwrap();
+        assert_eq!(
+            r.requests, 1_000,
+            "grow mode must replay exactly the clean prefix"
+        );
+        assert_eq!(r.rows.len(), 1);
+        // an offset past EOF is a config error, not a silent no-op
+        assert!(run_replay(&ReplayConfig {
+            corrupt_byte: Some(1 << 40),
+            mode: ReplayMode::Grow,
+            ..base
+        })
+        .is_err());
+        // the original file is untouched: a clean replay still works
+        let clean = run_replay(&ReplayConfig {
+            input: p.to_string_lossy().into_owned(),
+            policies: vec!["lru".into()],
+            ..ReplayConfig::default()
+        })
+        .unwrap();
+        assert_eq!(clean.requests, 20_000);
         std::fs::remove_dir_all(dir).ok();
     }
 

@@ -83,6 +83,14 @@ pub struct ShardBenchConfig {
     pub seed: u64,
     /// marks the tiny CI configuration in the report
     pub smoke: bool,
+    /// shard checkpoint cadence in batches (0 = off; see
+    /// [`ServerConfig::checkpoint_every`])
+    pub checkpoint_every: usize,
+    /// deterministic fault-spec string ([`FaultPlan`] grammar) applied
+    /// to every cell's server — the chaos-smoke harness.  Faulted runs
+    /// allocate on the restart path, so the steady-allocs-0 contract is
+    /// only asserted for fault-free runs.
+    pub fault_spec: Option<String>,
 }
 
 impl Default for ShardBenchConfig {
@@ -100,6 +108,8 @@ impl Default for ShardBenchConfig {
             zipf_s: 0.9,
             seed: 42,
             smoke: false,
+            checkpoint_every: 0,
+            fault_spec: None,
         }
     }
 }
@@ -165,6 +175,14 @@ pub struct ShardBenchResult {
     pub smoke: bool,
     pub alloc_counter_active: bool,
     pub wall_s: f64,
+    /// the fault spec the suite ran under, if any (chaos harness)
+    pub fault_spec: Option<String>,
+    pub checkpoint_every: usize,
+    /// supervised shard restarts summed over every cell's full run
+    /// (warm-up included — faults usually fire there)
+    pub shard_restarts_total: u64,
+    /// degraded (lost/given-up) replies summed over every cell
+    pub degraded_replies_total: u64,
 }
 
 impl ShardBenchResult {
@@ -287,6 +305,25 @@ impl ShardBenchResult {
                 "steady_allocs_total",
                 Json::Num(self.steady_allocs_total() as f64),
             ),
+            (
+                "fault_spec",
+                match &self.fault_spec {
+                    Some(s) => Json::Str(s.clone()),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "checkpoint_every",
+                Json::Num(self.checkpoint_every as f64),
+            ),
+            (
+                "shard_restarts_total",
+                Json::Num(self.shard_restarts_total as f64),
+            ),
+            (
+                "degraded_replies_total",
+                Json::Num(self.degraded_replies_total as f64),
+            ),
             ("wall_s", Json::Num(self.wall_s)),
             ("rows", Json::Arr(rows)),
         ]);
@@ -341,9 +378,16 @@ pub fn run_shardbench_obs(
         cfg.ns.iter().all(|&n| n >= 2),
         "catalog sizes must be >= 2 (capacity < catalog)"
     );
+    let fault_plan = cfg
+        .fault_spec
+        .as_deref()
+        .map(crate::sim::fault::FaultPlan::parse)
+        .transpose()?;
     let wall0 = Instant::now();
     let alloc_counter_active = alloc_count::active();
     let mut rows = Vec::new();
+    let mut shard_restarts_total = 0u64;
+    let mut degraded_replies_total = 0u64;
 
     for &n in &cfg.ns {
         // One request vector per catalog size, generated outside every
@@ -369,6 +413,9 @@ pub fn run_shardbench_obs(
                             seed: cfg.seed,
                             rebase_threshold: None,
                             per_request_serve: mode == ServeMode::PerRequest,
+                            checkpoint_every: cfg.checkpoint_every,
+                            fault_plan: fault_plan.clone(),
+                            flush_timeout_ms: 5_000,
                         };
                         let mut server = CacheServer::start(scfg)
                             .with_context(|| format!("shard bench cell `{name}` x{shards}"))?;
@@ -399,7 +446,13 @@ pub fn run_shardbench_obs(
                         let allocs = alloc_count::current() - a0;
 
                         drop(client);
-                        let snap = server.shutdown().since(&warm);
+                        let full = server.shutdown();
+                        // fault counters are totaled over the *full* run
+                        // (faults usually fire during warm-up, which the
+                        // windowed delta below excludes)
+                        shard_restarts_total += full.shard_restarts;
+                        degraded_replies_total += full.degraded_replies;
+                        let snap = full.since(&warm);
                         if let Some(rec) = obs.as_deref_mut() {
                             let timed_s = samples.iter().sum::<f64>() / 1e9;
                             rec.record_window(&WindowRecord::from_snapshot(&snap, timed_s));
@@ -446,6 +499,10 @@ pub fn run_shardbench_obs(
         smoke: cfg.smoke,
         alloc_counter_active,
         wall_s: wall0.elapsed().as_secs_f64(),
+        fault_spec: cfg.fault_spec.clone(),
+        checkpoint_every: cfg.checkpoint_every,
+        shard_restarts_total,
+        degraded_replies_total,
     })
 }
 
@@ -485,6 +542,32 @@ mod tests {
         assert!(text.contains("\"mode\":\"batched\""));
         assert!(text.contains("\"mode\":\"per_request\""));
         std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn faulted_smoke_run_recovers_and_reports() {
+        let mut cfg = ShardBenchConfig::smoke();
+        cfg.requests = 8_000;
+        cfg.ns = vec![2_000];
+        cfg.shard_counts = vec![2];
+        cfg.modes = vec![ServeMode::Batched];
+        cfg.checkpoint_every = 1;
+        cfg.fault_spec = Some("panic@shard0:t=2000".into());
+        let r = run_shardbench(&cfg).unwrap();
+        assert_eq!(r.rows.len(), 1);
+        assert!(r.shard_restarts_total >= 1, "injected fault must fire");
+        assert_eq!(r.degraded_replies_total, 0);
+        let dir = std::env::temp_dir().join("ogb_shardbench_fault_test");
+        let p = r.write_json(dir.join("BENCH_shard.json")).unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert!(text.contains("\"fault_spec\":\"panic@shard0:t=2000\""));
+        assert!(text.contains("\"shard_restarts_total\""));
+        assert!(text.contains("\"checkpoint_every\":1"));
+        std::fs::remove_dir_all(dir).ok();
+
+        let mut bad = ShardBenchConfig::smoke();
+        bad.fault_spec = Some("explode@shard0:t=5".into());
+        assert!(run_shardbench(&bad).is_err(), "bad fault spec rejected");
     }
 
     #[test]

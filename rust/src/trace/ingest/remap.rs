@@ -35,6 +35,10 @@ use crate::util::FxHashMap;
 
 const SNAP_MAGIC: &[u8; 4] = b"OGBM";
 const SNAP_VERSION: u32 = 1;
+/// sanity cap on snapshot byte-key length (mirrors the OGBR record cap):
+/// a corrupt length prefix would otherwise ask for a multi-gigabyte
+/// allocation before the parse error surfaces
+const MAX_SNAP_KEY_BYTES: usize = 1 << 20;
 
 /// Owned copy of a raw key (the id → key direction of the mapping).
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -229,8 +233,15 @@ impl KeyRemapper {
                 1 => {
                     r.read_exact(&mut u32b)?;
                     let klen = u32::from_le_bytes(u32b) as usize;
+                    if klen > MAX_SNAP_KEY_BYTES {
+                        bail!(
+                            "snapshot entry {i}: byte key of {klen} bytes exceeds the \
+                             {MAX_SNAP_KEY_BYTES} cap (corrupt length prefix?)"
+                        );
+                    }
                     buf.resize(klen, 0);
-                    r.read_exact(&mut buf)?;
+                    r.read_exact(&mut buf)
+                        .with_context(|| format!("snapshot entry {i}: truncated key bytes"))?;
                     s.map_key(RawKey::Bytes(&buf))
                 }
                 t => bail!("snapshot entry {i}: unknown key tag {t}"),

@@ -15,12 +15,17 @@
 //!   built on it.
 
 use std::fs::File;
-use std::io::{BufRead, BufReader};
+use std::io::{BufRead, BufReader, Read};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
 use super::{RawRecord, RawSource};
+
+/// Sanity cap on a single line: a delimiter-less multi-gigabyte file
+/// (binary data fed to the text parser) must produce a typed error, not
+/// an unbounded line-buffer allocation.
+const MAX_LINE_BYTES: u64 = 1 << 20;
 
 /// Column map + delimiter for [`DelimitedTextSource`].
 #[derive(Debug, Clone)]
@@ -106,12 +111,22 @@ impl RawSource for DelimitedTextSource {
     fn next_record(&mut self, rec: &mut RawRecord) -> Result<bool> {
         loop {
             self.line.clear();
-            let n = self
-                .reader
+            // `take` bounds the read *before* the allocation happens; a
+            // cut falls mid-line, so n > cap detects the oversized line.
+            let n = (&mut self.reader)
+                .take(MAX_LINE_BYTES + 1)
                 .read_line(&mut self.line)
                 .with_context(|| format!("{}: read line {}", self.name, self.lineno + 1))?;
             if n == 0 {
                 return Ok(false);
+            }
+            if n as u64 > MAX_LINE_BYTES {
+                bail!(
+                    "{}:{}: line exceeds the {MAX_LINE_BYTES}-byte cap (binary data \
+                     fed to the text parser?)",
+                    self.name,
+                    self.lineno + 1
+                );
             }
             self.lineno += 1;
             let s = self.line.trim();

@@ -104,6 +104,19 @@ impl Xoshiro256pp {
         r * theta.cos()
     }
 
+    /// Export the full generator state — the 256-bit xoshiro word array
+    /// plus the cached Box–Muller spare — for checkpointing (OGBS,
+    /// DESIGN.md §12).  Restoring via [`Xoshiro256pp::from_state`]
+    /// continues the exact output stream, including the pending Gaussian.
+    pub fn state(&self) -> ([u64; 4], Option<f64>) {
+        (self.s, self.gauss_spare)
+    }
+
+    /// Rebuild a generator from a [`Xoshiro256pp::state`] export.
+    pub fn from_state(s: [u64; 4], gauss_spare: Option<f64>) -> Self {
+        Self { s, gauss_spare }
+    }
+
     /// Exponential with rate `lambda`.
     #[inline]
     pub fn next_exp(&mut self, lambda: f64) -> f64 {
@@ -247,6 +260,20 @@ mod tests {
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
         assert!(mean.abs() < 0.02, "gaussian mean {mean}");
         assert!((var - 1.0).abs() < 0.03, "gaussian var {var}");
+    }
+
+    #[test]
+    fn state_roundtrip_continues_the_stream() {
+        let mut r = Xoshiro256pp::seed_from(21);
+        for _ in 0..17 {
+            r.next_gaussian(); // odd count leaves a Box–Muller spare cached
+        }
+        let (s, spare) = r.state();
+        let mut twin = Xoshiro256pp::from_state(s, spare);
+        for _ in 0..64 {
+            assert_eq!(r.next_u64(), twin.next_u64());
+        }
+        assert_eq!(r.next_gaussian(), twin.next_gaussian());
     }
 
     #[test]

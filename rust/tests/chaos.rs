@@ -1,0 +1,134 @@
+//! Differential chaos tests (DESIGN.md §12): drive the public
+//! `CacheServer` API under a parsed `--fault-spec` plan and hold the
+//! fault-tolerance contracts:
+//!
+//! 1. **checkpointed recovery is invisible** — with per-batch
+//!    checkpoints, a seeded shard panic produces bit-identical hit
+//!    totals to the fault-free run (exactly-once re-serve from the
+//!    restored policy state);
+//! 2. **cold restart completes** — without checkpoints the shard
+//!    rebuilds from its deterministic initial state: every request is
+//!    still served exactly once, hit totals stay in a sane band;
+//! 3. **degraded mode accounts for everything** — when restarts are
+//!    exhausted, `replies + degraded_replies == sent` (no request
+//!    vanishes, no request is double-counted).
+
+use ogb_cache::coordinator::{CacheServer, ServerConfig};
+use ogb_cache::obs::MetricsSnapshot;
+use ogb_cache::sim::FaultPlan;
+use ogb_cache::util::{Xoshiro256pp, Zipf};
+
+const CATALOG: usize = 8_000;
+const REQUESTS: usize = 40_000;
+
+/// One full serve run: a seeded Zipf client stream against a 2-shard
+/// server, with an optional fault plan.  Returns (client hits, client
+/// replies, merged server snapshot).
+fn run(fault: Option<&str>, checkpoint_every: usize) -> (u64, u64, MetricsSnapshot) {
+    let cfg = ServerConfig {
+        catalog: CATALOG,
+        capacity: 400,
+        shards: 2,
+        policy: "ogb".into(),
+        batch: 16,
+        horizon: REQUESTS,
+        queue_depth: 64,
+        clients: 1,
+        seed: 13,
+        rebase_threshold: None,
+        per_request_serve: false,
+        checkpoint_every,
+        fault_plan: fault.map(|s| FaultPlan::parse(s).expect("valid fault spec")),
+        flush_timeout_ms: 60_000,
+    };
+    let mut server = CacheServer::start(cfg).unwrap();
+    let mut client = server.take_client().unwrap();
+    let mut rng = Xoshiro256pp::seed_from(99);
+    let dist = Zipf::new(CATALOG as u64, 0.9);
+    for _ in 0..REQUESTS {
+        client.get(dist.sample(&mut rng));
+    }
+    client.drain();
+    let stats = client.stats();
+    assert_eq!(stats.sent, REQUESTS as u64, "client sent the whole stream");
+    drop(client);
+    (stats.hits, stats.replies, server.shutdown())
+}
+
+/// Contract 1: the acceptance differential.  A seeded `panic@shard`
+/// fault with per-batch checkpoints completes and its hit totals are
+/// bit-identical to the fault-free run — recovery restores the exact
+/// pre-crash policy state and re-serves the lost batch exactly once.
+#[test]
+fn checkpointed_panic_recovery_is_bit_identical() {
+    let (hits_clean, replies_clean, snap_clean) = run(None, 1);
+    let (hits_fault, replies_fault, snap_fault) = run(Some("panic@shard:t=20000"), 1);
+
+    assert_eq!(replies_clean, REQUESTS as u64);
+    assert_eq!(replies_fault, REQUESTS as u64, "every request replied");
+    assert!(
+        snap_fault.shard_restarts >= 1,
+        "the fault must actually have fired"
+    );
+    assert_eq!(snap_fault.degraded_replies, 0, "recovery, not degradation");
+    assert!(snap_fault.checkpoint_bytes > 0, "checkpoints were taken");
+    assert_eq!(snap_clean.shard_restarts, 0, "clean run saw no faults");
+    assert_eq!(
+        hits_fault, hits_clean,
+        "restored run must be hit-identical to the fault-free run"
+    );
+    assert_eq!(snap_fault.requests, snap_clean.requests);
+    assert_eq!(snap_fault.hits, snap_clean.hits);
+}
+
+/// Contract 2: without checkpoints the restart falls back to the
+/// deterministic initial build.  Before the first checkpoint would have
+/// existed this IS the pre-crash state; after warm-up it loses learned
+/// state but must still serve everything exactly once.
+#[test]
+fn cold_restart_serves_everything_exactly_once() {
+    let (hits_clean, _, _) = run(None, 0);
+    let (hits_fault, replies, snap) = run(Some("panic@shard:t=20000"), 0);
+
+    assert_eq!(replies, REQUESTS as u64, "every request replied");
+    assert_eq!(snap.requests, REQUESTS as u64, "served exactly once");
+    assert!(snap.shard_restarts >= 1);
+    assert_eq!(snap.degraded_replies, 0);
+    assert_eq!(snap.checkpoint_bytes, 0, "checkpointing was off");
+    // the restarted shard forgot its learned state mid-stream: totals
+    // may differ from clean, but only within the post-crash window
+    let diff = hits_clean.abs_diff(hits_fault);
+    assert!(
+        diff <= (REQUESTS / 2) as u64,
+        "cold restart diverged implausibly: clean {hits_clean} vs fault {hits_fault}"
+    );
+}
+
+/// Contract 3: a fault that re-fires on every restart attempt exhausts
+/// the restart budget; the batch degrades to an all-miss reply instead
+/// of wedging the pipeline, and every request stays accounted — the
+/// client still sees a reply for each, the server counts the degraded
+/// ones separately.
+#[test]
+fn exhausted_restarts_degrade_with_full_accounting() {
+    // three same-trigger panics: initial serve + both restart attempts
+    let (_, replies, snap) = run(
+        Some("panic@shard0:t=1000,panic@shard0:t=1000,panic@shard0:t=1000"),
+        1,
+    );
+    assert_eq!(snap.shard_restarts, 3, "initial + 2 restarts all panicked");
+    assert_eq!(
+        snap.degraded_replies, 16,
+        "exactly the poisoned batch degrades (batch = 16)"
+    );
+    assert_eq!(
+        replies,
+        REQUESTS as u64,
+        "degraded batches are still replied (all-miss), nothing vanishes"
+    );
+    assert_eq!(
+        snap.requests,
+        REQUESTS as u64,
+        "server-side request accounting stays complete"
+    );
+}

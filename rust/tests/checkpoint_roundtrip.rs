@@ -1,0 +1,174 @@
+//! Checkpoint trajectory-identity property test (ISSUE 7 tentpole).
+//!
+//! For every built-in policy kind: run a reference instance over a full
+//! trace; run a twin that is snapshotted at a mid-trace point, restored
+//! into a *fresh* same-spec instance, and continued.  The continued
+//! trajectory must be bit-identical to the reference — same reward bits
+//! per request, same occupancy bits, same diagnostics — both for a
+//! plain run and for a run that grows the catalog before the snapshot
+//! point (post-`grow` state must round-trip too).
+//!
+//! Also exercises the failure surface: corrupt bytes and truncation must
+//! surface as typed `SnapshotError`s (never panics), and restoring into
+//! a differently-parameterized instance must be a `PolicyMismatch`.
+
+use ogb_cache::policies::{self, snapshot, BuildOpts, Policy, SnapshotError};
+use ogb_cache::trace::synth;
+
+/// Every built-in kind, with parameters pinned so the fresh restore
+/// target is constructed identically.  Batch sizes are co-prime with the
+/// split points below, so OGB-family snapshots land mid-batch.
+const KINDS: &[&str] = &[
+    "lru",
+    "lfu",
+    "fifo",
+    "arc",
+    "gds",
+    "infinite",
+    "opt",
+    "ftpl{zeta=5}",
+    "ogb{batch=4,eta=0.05}",
+    "ogb-frac{batch=4,eta=0.05}",
+    "ogb-classic{batch=8,eta=0.05}",
+    "ogb-classic-frac{batch=8,eta=0.05}",
+    "omd-frac{batch=4,eta=0.05}",
+];
+
+const N: usize = 60;
+const N_GROWN: usize = 90;
+const C: usize = 12;
+
+fn build(kind: &str, n: usize, tr: &ogb_cache::trace::Trace) -> policies::AnyPolicy {
+    let opts = BuildOpts::new(4_000, 1, 11);
+    policies::build(kind, n, C, &opts, Some(tr)).expect("build")
+}
+
+/// Drive `p` over `reqs`, returning the reward bit-pattern per request.
+fn drive(p: &mut policies::AnyPolicy, reqs: &[u32]) -> Vec<u64> {
+    reqs.iter().map(|&r| p.request(r as u64).to_bits()).collect()
+}
+
+fn assert_same_end_state(a: &policies::AnyPolicy, b: &policies::AnyPolicy, ctx: &str) {
+    assert_eq!(
+        a.occupancy().to_bits(),
+        b.occupancy().to_bits(),
+        "{ctx}: occupancy diverged"
+    );
+    assert_eq!(
+        format!("{:?}", a.diag()),
+        format!("{:?}", b.diag()),
+        "{ctx}: diagnostics diverged"
+    );
+}
+
+#[test]
+fn restored_run_is_bit_identical_for_every_builtin() {
+    for (k, kind) in KINDS.iter().enumerate() {
+        let tr = synth::zipf(N, 3_000, 1.0, 100 + k as u64);
+        // deterministic pseudo-random split, different per kind, never on
+        // a batch boundary for the batched kinds (co-prime with 4 and 8)
+        let split = 997 + (k * 131) % 211;
+        let mut reference = build(kind, N, &tr);
+        let ref_rewards = drive(&mut reference, &tr.requests);
+
+        let mut twin = build(kind, N, &tr);
+        let pre = drive(&mut twin, &tr.requests[..split]);
+        assert_eq!(pre, ref_rewards[..split], "{kind}: prefix diverged");
+        let bytes = snapshot::to_vec(&twin).unwrap_or_else(|e| panic!("{kind}: snapshot: {e}"));
+
+        let mut restored = build(kind, N, &tr);
+        snapshot::restore_from_slice(&mut restored, &bytes)
+            .unwrap_or_else(|e| panic!("{kind}: restore: {e}"));
+        let post = drive(&mut restored, &tr.requests[split..]);
+        assert_eq!(post, ref_rewards[split..], "{kind}: continuation diverged");
+        assert_same_end_state(&reference, &restored, kind);
+
+        // snapshot of the restored instance must be byte-identical to the
+        // snapshot the twin would produce at the same point — i.e. the
+        // serialized state itself round-trips exactly
+        let mut twin2 = build(kind, N, &tr);
+        drive(&mut twin2, &tr.requests[..split]);
+        let bytes2 = snapshot::to_vec(&twin2).unwrap();
+        assert_eq!(bytes, bytes2, "{kind}: snapshot bytes not deterministic");
+    }
+}
+
+#[test]
+fn post_grow_state_round_trips() {
+    for (k, kind) in KINDS.iter().enumerate() {
+        let tr1 = synth::zipf(N, 1_200, 1.0, 300 + k as u64);
+        let tr2 = synth::zipf(N_GROWN, 1_800, 1.0, 400 + k as u64);
+        let split = 500 + (k * 97) % 401; // inside the post-grow phase
+        let run_full = |p: &mut policies::AnyPolicy| -> Vec<u64> {
+            let mut out = drive(p, &tr1.requests);
+            p.grow(N_GROWN);
+            out.extend(drive(p, &tr2.requests));
+            out
+        };
+        let mut reference = build(kind, N, &tr1);
+        let ref_rewards = run_full(&mut reference);
+
+        let mut twin = build(kind, N, &tr1);
+        drive(&mut twin, &tr1.requests);
+        twin.grow(N_GROWN);
+        drive(&mut twin, &tr2.requests[..split]);
+        let bytes = snapshot::to_vec(&twin).unwrap_or_else(|e| panic!("{kind}: snapshot: {e}"));
+
+        // fresh instance is built at the ORIGINAL catalog size; restore
+        // must adopt the snapshot's grown n wholesale
+        let mut restored = build(kind, N, &tr1);
+        snapshot::restore_from_slice(&mut restored, &bytes)
+            .unwrap_or_else(|e| panic!("{kind}: post-grow restore: {e}"));
+        let post = drive(&mut restored, &tr2.requests[split..]);
+        assert_eq!(
+            post,
+            ref_rewards[tr1.requests.len() + split..],
+            "{kind}: post-grow continuation diverged"
+        );
+        assert_same_end_state(&reference, &restored, kind);
+    }
+}
+
+#[test]
+fn corrupt_bytes_are_typed_errors_never_panics() {
+    for kind in ["lru", "ftpl{zeta=5}", "ogb{batch=4,eta=0.05}"] {
+        let tr = synth::zipf(N, 800, 1.0, 9);
+        let mut p = build(kind, N, &tr);
+        drive(&mut p, &tr.requests);
+        let bytes = snapshot::to_vec(&p).unwrap();
+        // every single-byte corruption must be rejected (checksums) or at
+        // minimum never panic and never silently yield a diverging state
+        for off in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[off] ^= 0x40;
+            let mut target = build(kind, N, &tr);
+            if snapshot::restore_from_slice(&mut target, &bad).is_ok() {
+                panic!("{kind}: flipped byte {off} accepted");
+            }
+        }
+        // every truncation must be a typed error
+        for cut in 0..bytes.len() {
+            let mut target = build(kind, N, &tr);
+            assert!(
+                snapshot::restore_from_slice(&mut target, &bytes[..cut]).is_err(),
+                "{kind}: truncation at {cut} accepted"
+            );
+        }
+    }
+}
+
+#[test]
+fn mismatched_spec_is_policy_mismatch() {
+    let tr = synth::zipf(N, 500, 1.0, 5);
+    let mut a = build("ogb{batch=4,eta=0.05}", N, &tr);
+    drive(&mut a, &tr.requests);
+    let bytes = snapshot::to_vec(&a).unwrap();
+    let mut b = build("ogb{batch=8,eta=0.05}", N, &tr);
+    match snapshot::restore_from_slice(&mut b, &bytes) {
+        Err(SnapshotError::PolicyMismatch { expected, found }) => {
+            assert_eq!(expected, "OGB(b=8)");
+            assert_eq!(found, "OGB(b=4)");
+        }
+        other => panic!("expected PolicyMismatch, got {other:?}"),
+    }
+}

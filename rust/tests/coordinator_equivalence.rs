@@ -68,6 +68,7 @@ fn batch_scatter_gather_preserves_per_shard_order() {
         seed: 77,
         rebase_threshold: None,
         per_request_serve: false,
+        ..Default::default()
     })
     .unwrap();
     let mut client = server.take_client().unwrap();
@@ -143,6 +144,7 @@ fn one_shard_server_matches_run_source() {
             seed,
             rebase_threshold: None,
             per_request_serve: false,
+            ..Default::default()
         })
         .unwrap();
         let mut client = server.take_client().unwrap();
@@ -201,6 +203,7 @@ fn multi_shard_server_is_complete_and_sane() {
         seed: 3,
         rebase_threshold: None,
         per_request_serve: false,
+        ..Default::default()
     })
     .unwrap();
     let mut client = server.take_client().unwrap();

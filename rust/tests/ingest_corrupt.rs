@@ -1,0 +1,181 @@
+//! Ingest hardening corpus (DESIGN.md §12): malformed raw traces must
+//! surface *typed errors* — never a panic, never an unbounded
+//! allocation driven by attacker-controlled length prefixes.  The crown
+//! test is a full byte-flip sweep over an OGBR fixture: every single
+//! corrupted variant must either parse (the flip hit a value byte) or
+//! error cleanly (it hit framing).
+
+use std::path::PathBuf;
+
+use ogb_cache::trace::ingest::{
+    open_raw, DelimitedTextSource, KeyRemapper, RawBinaryWriter, RawKey, RawRecord, RawSource,
+    RemappedSource, TextFormat,
+};
+use ogb_cache::trace::stream::RequestSource;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ogb_ingest_corrupt_{name}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A small OGBR fixture with both key kinds (u64 and bytes), so the
+/// byte-flip sweep exercises every branch of the record parser.
+fn ogbr_fixture(dir: &std::path::Path) -> PathBuf {
+    let p = dir.join("mix.ogbr");
+    let mut w = RawBinaryWriter::create(&p).unwrap();
+    for i in 0..10u64 {
+        w.write(RawKey::U64(i.wrapping_mul(0x9E37_79B9)), 1.0, i).unwrap();
+        w.write(RawKey::Bytes(format!("/obj/{i}").as_bytes()), 2.0, i)
+            .unwrap();
+    }
+    w.finish().unwrap();
+    p
+}
+
+/// Drain a raw source to completion through the remapper, returning
+/// Ok(records) or the first parse error.  Must never panic.
+fn drain(path: &std::path::Path) -> Result<usize, String> {
+    let raw = open_raw(path.to_str().unwrap()).map_err(|e| format!("{e:#}"))?;
+    let mut src = RemappedSource::new(raw);
+    let mut n = 0usize;
+    while src.next_request().is_some() {
+        n += 1;
+    }
+    match src.error() {
+        Some(e) => Err(e.to_string()),
+        None => Ok(n),
+    }
+}
+
+/// Corpus sweep: flip every byte of the OGBR fixture (one at a time)
+/// and replay each variant end to end.  The only acceptable outcomes
+/// are a clean parse or a typed error — a panic aborts the test, and a
+/// runaway length prefix would hang/OOM it.
+#[test]
+fn ogbr_byte_flip_sweep_never_panics() {
+    let dir = tmp_dir("sweep");
+    let p = ogbr_fixture(&dir);
+    let clean = std::fs::read(&p).unwrap();
+    let total = drain(&p).expect("clean fixture must parse");
+    assert_eq!(total, 20);
+    let q = dir.join("flip.ogbr");
+    let (mut parsed_ok, mut errored) = (0usize, 0usize);
+    for at in 0..clean.len() {
+        let mut bytes = clean.clone();
+        bytes[at] ^= 0xFF;
+        std::fs::write(&q, &bytes).unwrap();
+        match drain(&q) {
+            Ok(n) => {
+                parsed_ok += 1;
+                assert!(n <= total, "flip at {at} cannot add records (got {n})");
+            }
+            Err(e) => {
+                errored += 1;
+                assert!(!e.is_empty(), "flip at {at}: empty error message");
+            }
+        }
+    }
+    // both outcome classes must occur: value flips parse, framing flips
+    // error (a sweep where everything errors would mean the clean-parse
+    // path is broken; all-Ok would mean corruption goes undetected)
+    assert!(parsed_ok > 0, "no corrupted variant parsed (value bytes exist)");
+    assert!(errored > 0, "no corrupted variant errored (framing bytes exist)");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// A corrupt OGBR byte-key length prefix must hit the cap error, not
+/// attempt the multi-gigabyte allocation it encodes.
+#[test]
+fn ogbr_runaway_key_length_is_capped() {
+    let dir = tmp_dir("klen");
+    let p = ogbr_fixture(&dir);
+    let mut bytes = std::fs::read(&p).unwrap();
+    // record 0 is a u64 key (1 + 8 + 8 + 8 = 25 bytes); record 1 starts
+    // at header(16) + 25 with tag 1 and a u32 length prefix right after
+    let len_at = 16 + 25 + 1;
+    bytes[len_at..len_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+    std::fs::write(&p, &bytes).unwrap();
+    let e = drain(&p).unwrap_err();
+    assert!(e.contains("cap"), "expected the length-cap error, got: {e}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Same property for the remapper snapshot format (OGBM): a corrupt
+/// length prefix errors at the cap instead of allocating.
+#[test]
+fn remapper_snapshot_runaway_key_length_is_capped() {
+    let dir = tmp_dir("ogbm");
+    let p = dir.join("m.ogbm");
+    let mut m = KeyRemapper::new();
+    m.map_key(RawKey::Bytes(b"/obj/a"));
+    m.map_key(RawKey::U64(7));
+    m.save_snapshot(&p).unwrap();
+    // entry 0 is a bytes key: tag at 24 (magic 4 + version 4 + mask 8 +
+    // count 8), length prefix at 25
+    let mut bytes = std::fs::read(&p).unwrap();
+    assert_eq!(bytes[24], 1, "entry 0 must be a bytes key");
+    bytes[25..29].copy_from_slice(&u32::MAX.to_le_bytes());
+    std::fs::write(&p, &bytes).unwrap();
+    let e = KeyRemapper::load_snapshot(&p).unwrap_err().to_string();
+    assert!(e.contains("cap"), "expected the length-cap error, got: {e}");
+    // truncated snapshot: cut mid-entry
+    let clean = {
+        let mut m = KeyRemapper::new();
+        m.map_key(RawKey::Bytes(b"/obj/a"));
+        m.map_key(RawKey::U64(7));
+        m.save_snapshot(&p).unwrap();
+        std::fs::read(&p).unwrap()
+    };
+    std::fs::write(&p, &clean[..clean.len() - 3]).unwrap();
+    let e = format!("{:#}", KeyRemapper::load_snapshot(&p).unwrap_err());
+    assert!(
+        e.contains("truncated") || e.contains("fill whole buffer"),
+        "expected a truncation error, got: {e}"
+    );
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Binary garbage fed to the text parser (no delimiter, no newline for
+/// megabytes) must produce the line-cap error, not an unbounded line
+/// buffer.
+#[test]
+fn text_parser_caps_runaway_lines() {
+    let dir = tmp_dir("line");
+    let p = dir.join("huge.csv");
+    std::fs::write(&p, vec![b'a'; 3 << 20]).unwrap();
+    let mut src = DelimitedTextSource::open(&p, TextFormat::csv()).unwrap();
+    let mut rec = RawRecord::new();
+    let e = format!("{:#}", src.next_record(&mut rec).unwrap_err());
+    assert!(e.contains("cap"), "expected the line-cap error, got: {e}");
+    // a normal-sized line after reopening still parses
+    std::fs::write(&p, "42,1.0\n").unwrap();
+    let mut src = DelimitedTextSource::open(&p, TextFormat::csv()).unwrap();
+    assert!(src.next_record(&mut rec).unwrap());
+    assert_eq!(rec.key(), RawKey::U64(42));
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// The remapped stream latches the first parse error: the dense facade
+/// ends the stream, `error()` stays readable, and further pulls return
+/// None instead of re-driving the broken parser.
+#[test]
+fn remapped_source_latches_parse_errors() {
+    let dir = tmp_dir("latch");
+    // arbitrary key bytes parse as opaque byte keys (not a panic) — the
+    // real error comes from a weight column that is not numeric
+    let q = dir.join("badw.csv");
+    std::fs::write(&q, "1,1.0\n2,notanumber\n3,1.0\n").unwrap();
+    let fmt = TextFormat {
+        weight_col: Some(1),
+        ..TextFormat::csv()
+    };
+    let raw = DelimitedTextSource::open(&q, fmt).unwrap();
+    let mut src = RemappedSource::new(Box::new(raw));
+    assert!(src.next_request().is_some());
+    assert!(src.next_request().is_none(), "error ends the stream");
+    assert!(src.error().unwrap().contains("bad weight"));
+    assert!(src.next_request().is_none(), "stream stays ended");
+    assert_eq!(src.catalog(), 1, "only the clean prefix was mapped");
+    std::fs::remove_dir_all(dir).ok();
+}

@@ -167,6 +167,7 @@ fn capacity_one_server_counts_every_eviction() {
         seed: 7,
         rebase_threshold: None,
         per_request_serve: false,
+        ..Default::default()
     })
     .unwrap();
     let mut client = server.take_client().unwrap();

@@ -110,6 +110,10 @@ fn obs_jsonl_schema_holds() {
                 "\"pops_per_request\":",
                 "\"ring_depth_hw\":",
                 "\"reap_on_full\":",
+                "\"shard_restarts\":",
+                "\"retries\":",
+                "\"checkpoint_bytes\":",
+                "\"degraded_replies\":",
                 "\"p50_ns\":",
                 "\"p99_ns\":",
                 "\"p999_ns\":",
