@@ -51,6 +51,22 @@
 //! `--fault-spec "corrupt@trace:byte=4096"` on `ogb-cache replay`
 //! exercises the ingest hardening instead.
 //!
+//! Network serving (DESIGN.md §13): put a real wire in front of the
+//! same engine and drive it from another terminal —
+//!
+//!     cargo run --release -- serve --listen 127.0.0.1:4780 \
+//!         --catalog 100000 --shards 4                  # Ctrl-C drains
+//!     cargo run --release -- loadgen --addr 127.0.0.1:4780 \
+//!         --requests 100000 --frame-size 64            # BENCH_server.json
+//!
+//! The server prints its accounting ledger on exit (`accepted ==
+//! replies + degraded + shed` — overload is shed as typed BUSY frames,
+//! never a stall); the loadgen retries BUSY with backoff and records
+//! client-observed latency percentiles.  Wire faults
+//! (`--fault-spec "garbage@frame:t=100"` etc. on the server) exercise
+//! the retry/replay-cache path — the run stays hit-identical to an
+//! in-process one.
+//!
 //! The end of this example does the same from the library API.
 
 use ogb_cache::coordinator::{CacheServer, ServerConfig};

@@ -1,0 +1,461 @@
+//! `OGBW` — the length-prefixed binary wire protocol of the network
+//! front door (DESIGN.md §13), shared by `coordinator::net` (server) and
+//! `sim::serverbench` (load generator).
+//!
+//! A connection stream is one 8-byte handshake followed by frames:
+//!
+//! ```text
+//! handshake: magic "OGBW" | version u32            (each side sends one)
+//! frame:     len u32 | op u8 | id u64 | body       len = 9 + body bytes
+//! ```
+//!
+//! All integers little-endian, matching the OGBR/OGBM ingest formats.
+//! `len` covers everything after itself (op + id + body) and is bounded
+//! by [`MAX_FRAME`] — the same 1 MiB cap as every other length-prefixed
+//! payload in the repo (`trace::ingest::binary`), validated *before* the
+//! body is buffered so a hostile length can never force an allocation.
+//!
+//! Ops (`id` is a client-chosen correlation id echoed in the reply):
+//!
+//! * `REQ`   (0x01, client→server): body is repeated 9-byte records
+//!   `tag u8 | key u64`, tag 0 = unit-weight get (the only tag in
+//!   version 1 — mirroring the OGBR record tag byte, minus weight and
+//!   timestamp, which the serving path does not carry).
+//! * `REPLY` (0x81, server→client): body is `count u32 | degraded u32 |`
+//!   hit bitmap (`ceil(count/8)` bytes, bit k = key k hit).  `degraded`
+//!   counts requests in this frame answered as forced misses after a
+//!   shard failure — shedding and failures are *typed*, never silent.
+//! * `BUSY`  (0x82, server→client): empty body; the whole request frame
+//!   was shed under overload — retry with backoff.
+//! * `ERR`   (0x8F, server→client): body is a UTF-8 message; sent on a
+//!   protocol violation, after which the server closes the connection
+//!   (a corrupted length-prefixed stream cannot be resynchronized).
+//!
+//! Malformed input surfaces as a typed [`ProtocolError`] — never a
+//! panic, hang, or unbounded allocation (`rust/tests/wire_corrupt.rs`
+//! sweeps a corruption corpus over the codec to enforce this).
+
+use std::fmt;
+
+pub use crate::trace::ingest::MAX_FRAME;
+
+/// Wire handshake magic, version 1.
+pub const WIRE_MAGIC: [u8; 4] = *b"OGBW";
+pub const WIRE_VERSION: u32 = 1;
+
+/// Frame header bytes after the length prefix: op u8 + id u64.
+pub const FRAME_HEADER: usize = 9;
+/// One REQ body record: tag u8 + key u64.
+pub const REQ_RECORD: usize = 9;
+/// Most keys one REQ frame can carry under [`MAX_FRAME`].
+pub const MAX_KEYS_PER_FRAME: usize = (MAX_FRAME as usize - FRAME_HEADER) / REQ_RECORD;
+
+pub const OP_REQ: u8 = 0x01;
+pub const OP_REPLY: u8 = 0x81;
+pub const OP_BUSY: u8 = 0x82;
+pub const OP_ERR: u8 = 0x8F;
+
+/// Typed wire-protocol violations.  Every variant means the stream is
+/// unrecoverable: the peer answers `ERR` (when it still can) and closes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ProtocolError {
+    /// handshake did not start with `OGBW`
+    BadMagic([u8; 4]),
+    /// handshake version this side does not speak
+    BadVersion(u32),
+    /// frame length below the 9-byte op+id header
+    Undersize(u32),
+    /// frame length above [`MAX_FRAME`]
+    Oversize(u32),
+    /// unknown op byte
+    BadOp(u8),
+    /// REQ body not a whole number of 9-byte records
+    BadReqLen(usize),
+    /// REQ record tag other than 0 (unit get)
+    BadTag(u8),
+    /// REPLY body shorter than its own count field requires
+    BadReplyLen { count: u32, body: usize },
+    /// peer closed mid-handshake or mid-frame (client-side read path)
+    Truncated,
+}
+
+impl fmt::Display for ProtocolError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::BadMagic(m) => write!(f, "bad wire magic {m:?} (expected \"OGBW\")"),
+            Self::BadVersion(v) => write!(f, "unsupported wire version {v}"),
+            Self::Undersize(n) => write!(f, "frame length {n} below the {FRAME_HEADER}-byte header"),
+            Self::Oversize(n) => write!(f, "frame length {n} exceeds the cap {MAX_FRAME}"),
+            Self::BadOp(op) => write!(f, "unknown op byte {op:#04x}"),
+            Self::BadReqLen(n) => {
+                write!(f, "REQ body of {n} bytes is not a multiple of {REQ_RECORD}")
+            }
+            Self::BadTag(t) => write!(f, "unknown REQ record tag {t}"),
+            Self::BadReplyLen { count, body } => {
+                write!(f, "REPLY claims {count} results but body has {body} bytes")
+            }
+            Self::Truncated => write!(f, "connection closed mid-frame"),
+        }
+    }
+}
+
+impl std::error::Error for ProtocolError {}
+
+/// One parsed frame, body copied out of the read buffer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OwnedFrame {
+    pub op: u8,
+    pub id: u64,
+    pub body: Vec<u8>,
+}
+
+/// Incremental frame parser over a bounded buffer: `feed` raw bytes,
+/// then drain parsed frames with `next` until it returns `Ok(None)`
+/// (incomplete data is *not* an error — more bytes may arrive).
+///
+/// Memory bound: the buffer holds at most one maximum frame plus the
+/// last `feed` chunk — the length prefix is validated against
+/// [`MAX_FRAME`] as soon as its 4 bytes arrive, before any body is
+/// accumulated, so a hostile length cannot grow the buffer.
+#[derive(Debug, Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+    pos: usize,
+    handshaken: bool,
+}
+
+impl FrameReader {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// True once the peer's 8-byte handshake has been consumed.
+    pub fn handshaken(&self) -> bool {
+        self.handshaken
+    }
+
+    /// Bytes buffered and not yet parsed.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Append raw bytes from the socket.  Call [`Self::next`] until
+    /// `Ok(None)` after every feed — that is what keeps the buffer at
+    /// its one-frame bound.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        // compact the consumed prefix before growing
+        if self.pos > 0 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    fn peek(&self, n: usize) -> Option<&[u8]> {
+        let end = self.pos.checked_add(n)?;
+        self.buf.get(self.pos..end)
+    }
+
+    /// Parse the next complete frame, if buffered.  `Ok(None)` means
+    /// "need more bytes"; `Err` means the stream is unrecoverable.
+    pub fn next(&mut self) -> Result<Option<OwnedFrame>, ProtocolError> {
+        if !self.handshaken {
+            let Some(h) = self.peek(8) else {
+                return Ok(None);
+            };
+            let magic: [u8; 4] = h[..4].try_into().expect("peeked 8");
+            if magic != WIRE_MAGIC {
+                return Err(ProtocolError::BadMagic(magic));
+            }
+            let version = u32::from_le_bytes(h[4..8].try_into().expect("peeked 8"));
+            if version != WIRE_VERSION {
+                return Err(ProtocolError::BadVersion(version));
+            }
+            self.pos += 8;
+            self.handshaken = true;
+        }
+        let Some(l4) = self.peek(4) else {
+            return Ok(None);
+        };
+        let len = u32::from_le_bytes(l4.try_into().expect("peeked 4"));
+        if (len as usize) < FRAME_HEADER {
+            return Err(ProtocolError::Undersize(len));
+        }
+        if len > MAX_FRAME {
+            return Err(ProtocolError::Oversize(len));
+        }
+        let Some(frame) = self.peek(4 + len as usize) else {
+            return Ok(None);
+        };
+        let op = frame[4];
+        if !matches!(op, OP_REQ | OP_REPLY | OP_BUSY | OP_ERR) {
+            return Err(ProtocolError::BadOp(op));
+        }
+        let id = u64::from_le_bytes(frame[5..13].try_into().expect("peeked header"));
+        let body = frame[13..].to_vec();
+        self.pos += 4 + len as usize;
+        Ok(Some(OwnedFrame { op, id, body }))
+    }
+}
+
+/// Append the 8-byte handshake.
+pub fn encode_handshake(out: &mut Vec<u8>) {
+    out.extend_from_slice(&WIRE_MAGIC);
+    out.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+}
+
+fn encode_header(out: &mut Vec<u8>, op: u8, id: u64, body_len: usize) {
+    debug_assert!(FRAME_HEADER + body_len <= MAX_FRAME as usize);
+    out.extend_from_slice(&((FRAME_HEADER + body_len) as u32).to_le_bytes());
+    out.push(op);
+    out.extend_from_slice(&id.to_le_bytes());
+}
+
+/// Append one REQ frame.  Panics (debug) past [`MAX_KEYS_PER_FRAME`] —
+/// callers chunk their key streams below the bound.
+pub fn encode_req(out: &mut Vec<u8>, id: u64, keys: &[u64]) {
+    debug_assert!(keys.len() <= MAX_KEYS_PER_FRAME);
+    encode_header(out, OP_REQ, id, keys.len() * REQ_RECORD);
+    for &k in keys {
+        out.push(0); // tag 0: unit-weight get
+        out.extend_from_slice(&k.to_le_bytes());
+    }
+}
+
+/// Append one REPLY frame: `hits[k]` answers key k of the matching REQ;
+/// `degraded` of them were forced misses from shard failures.
+pub fn encode_reply(out: &mut Vec<u8>, id: u64, hits: &[bool], degraded: u32) {
+    // (n + 7) / 8 bitmap bytes; div_ceil needs rust >= 1.73
+    let bitmap = (hits.len() + 7) / 8;
+    encode_header(out, OP_REPLY, id, 8 + bitmap);
+    out.extend_from_slice(&(hits.len() as u32).to_le_bytes());
+    out.extend_from_slice(&degraded.to_le_bytes());
+    let start = out.len();
+    out.resize(start + bitmap, 0);
+    for (k, &h) in hits.iter().enumerate() {
+        if h {
+            out[start + k / 8] |= 1 << (k % 8);
+        }
+    }
+}
+
+/// Append one BUSY frame (the whole request frame `id` was shed).
+pub fn encode_busy(out: &mut Vec<u8>, id: u64) {
+    encode_header(out, OP_BUSY, id, 0);
+}
+
+/// Append one ERR frame carrying a (truncated) UTF-8 message.
+pub fn encode_err(out: &mut Vec<u8>, id: u64, msg: &str) {
+    let mut cut = msg.len().min(512);
+    while !msg.is_char_boundary(cut) {
+        cut -= 1;
+    }
+    encode_header(out, OP_ERR, id, cut);
+    out.extend_from_slice(&msg.as_bytes()[..cut]);
+}
+
+/// Parse a REQ body into `keys` (cleared first).
+pub fn parse_req(body: &[u8], keys: &mut Vec<u64>) -> Result<(), ProtocolError> {
+    keys.clear();
+    if body.len() % REQ_RECORD != 0 {
+        return Err(ProtocolError::BadReqLen(body.len()));
+    }
+    for rec in body.chunks_exact(REQ_RECORD) {
+        if rec[0] != 0 {
+            return Err(ProtocolError::BadTag(rec[0]));
+        }
+        keys.push(u64::from_le_bytes(rec[1..9].try_into().expect("9-byte record")));
+    }
+    Ok(())
+}
+
+/// A parsed REPLY body, borrowing the frame's bitmap.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Reply<'a> {
+    pub count: u32,
+    pub degraded: u32,
+    bits: &'a [u8],
+}
+
+impl Reply<'_> {
+    pub fn hit(&self, k: usize) -> bool {
+        debug_assert!(k < self.count as usize);
+        self.bits[k / 8] >> (k % 8) & 1 == 1
+    }
+
+    pub fn hit_count(&self) -> u64 {
+        (0..self.count as usize).filter(|&k| self.hit(k)).count() as u64
+    }
+}
+
+/// Parse a REPLY body.
+pub fn parse_reply(body: &[u8]) -> Result<Reply<'_>, ProtocolError> {
+    if body.len() < 8 {
+        return Err(ProtocolError::BadReplyLen {
+            count: 0,
+            body: body.len(),
+        });
+    }
+    let count = u32::from_le_bytes(body[..4].try_into().expect("8-byte prefix"));
+    let degraded = u32::from_le_bytes(body[4..8].try_into().expect("8-byte prefix"));
+    // u64 arithmetic: a hostile count near u32::MAX must not overflow
+    let bitmap = ((count as u64 + 7) / 8) as usize;
+    if body.len() < 8 + bitmap || degraded > count {
+        return Err(ProtocolError::BadReplyLen {
+            count,
+            body: body.len(),
+        });
+    }
+    Ok(Reply {
+        count,
+        degraded,
+        bits: &body[8..8 + bitmap],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_req_reply_busy_err() {
+        let mut wire = Vec::new();
+        encode_handshake(&mut wire);
+        encode_req(&mut wire, 7, &[1, u64::MAX, 0, 42]);
+        encode_reply(&mut wire, 7, &[true, false, false, true], 1);
+        encode_busy(&mut wire, 8);
+        encode_err(&mut wire, 9, "boom");
+
+        let mut r = FrameReader::new();
+        r.feed(&wire);
+        let f = r.next().unwrap().unwrap();
+        assert!(r.handshaken());
+        assert_eq!((f.op, f.id), (OP_REQ, 7));
+        let mut keys = vec![99]; // parse_req must clear
+        parse_req(&f.body, &mut keys).unwrap();
+        assert_eq!(keys, vec![1, u64::MAX, 0, 42]);
+
+        let f = r.next().unwrap().unwrap();
+        assert_eq!((f.op, f.id), (OP_REPLY, 7));
+        let rep = parse_reply(&f.body).unwrap();
+        assert_eq!((rep.count, rep.degraded), (4, 1));
+        assert!(rep.hit(0) && !rep.hit(1) && !rep.hit(2) && rep.hit(3));
+        assert_eq!(rep.hit_count(), 2);
+
+        let f = r.next().unwrap().unwrap();
+        assert_eq!((f.op, f.id, f.body.len()), (OP_BUSY, 8, 0));
+        let f = r.next().unwrap().unwrap();
+        assert_eq!((f.op, f.id), (OP_ERR, 9));
+        assert_eq!(f.body, b"boom");
+        assert_eq!(r.next().unwrap(), None);
+        assert_eq!(r.buffered(), 0);
+    }
+
+    #[test]
+    fn byte_at_a_time_feeding_reassembles() {
+        let mut wire = Vec::new();
+        encode_handshake(&mut wire);
+        encode_req(&mut wire, 3, &[5, 6, 7]);
+        encode_req(&mut wire, 4, &[]);
+        let mut r = FrameReader::new();
+        let mut frames = Vec::new();
+        for &b in &wire {
+            r.feed(&[b]);
+            while let Some(f) = r.next().unwrap() {
+                frames.push(f);
+            }
+        }
+        assert_eq!(frames.len(), 2);
+        assert_eq!(frames[0].id, 3);
+        assert_eq!(frames[1].id, 4);
+        assert!(frames[1].body.is_empty());
+    }
+
+    #[test]
+    fn handshake_violations_are_typed() {
+        let mut r = FrameReader::new();
+        r.feed(b"NOPE\x01\x00\x00\x00");
+        assert_eq!(r.next(), Err(ProtocolError::BadMagic(*b"NOPE")));
+        let mut r = FrameReader::new();
+        r.feed(b"OGBW\x02\x00\x00\x00");
+        assert_eq!(r.next(), Err(ProtocolError::BadVersion(2)));
+        // incomplete handshake is not an error
+        let mut r = FrameReader::new();
+        r.feed(b"OGBW");
+        assert_eq!(r.next(), Ok(None));
+    }
+
+    #[test]
+    fn length_cap_rejected_before_buffering() {
+        let mut r = FrameReader::new();
+        let mut wire = Vec::new();
+        encode_handshake(&mut wire);
+        wire.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+        r.feed(&wire);
+        assert_eq!(r.next(), Err(ProtocolError::Oversize(MAX_FRAME + 1)));
+        // a runaway length never grew the buffer past the fed bytes
+        assert!(r.buffered() <= wire.len());
+
+        let mut r = FrameReader::new();
+        let mut wire = Vec::new();
+        encode_handshake(&mut wire);
+        wire.extend_from_slice(&3u32.to_le_bytes());
+        r.feed(&wire);
+        assert_eq!(r.next(), Err(ProtocolError::Undersize(3)));
+    }
+
+    #[test]
+    fn bad_bodies_are_typed() {
+        assert_eq!(
+            parse_req(&[0u8; 10], &mut Vec::new()),
+            Err(ProtocolError::BadReqLen(10))
+        );
+        let mut rec = [0u8; 9];
+        rec[0] = 1; // weighted tag: not in wire version 1
+        assert_eq!(
+            parse_req(&rec, &mut Vec::new()),
+            Err(ProtocolError::BadTag(1))
+        );
+        assert!(matches!(
+            parse_reply(&[1, 2, 3]),
+            Err(ProtocolError::BadReplyLen { .. })
+        ));
+        // count claims more bits than the body carries
+        let mut body = Vec::new();
+        body.extend_from_slice(&100u32.to_le_bytes());
+        body.extend_from_slice(&0u32.to_le_bytes());
+        body.push(0xFF);
+        assert!(matches!(
+            parse_reply(&body),
+            Err(ProtocolError::BadReplyLen { count: 100, .. })
+        ));
+        // degraded > count is inconsistent
+        let mut body = Vec::new();
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.extend_from_slice(&2u32.to_le_bytes());
+        body.push(1);
+        assert!(parse_reply(&body).is_err());
+    }
+
+    #[test]
+    fn unknown_op_is_typed() {
+        let mut wire = Vec::new();
+        encode_handshake(&mut wire);
+        wire.extend_from_slice(&(FRAME_HEADER as u32).to_le_bytes());
+        wire.push(0x55);
+        wire.extend_from_slice(&0u64.to_le_bytes());
+        let mut r = FrameReader::new();
+        r.feed(&wire);
+        assert_eq!(r.next(), Err(ProtocolError::BadOp(0x55)));
+    }
+
+    #[test]
+    fn err_message_truncates_on_char_boundary() {
+        let long = "é".repeat(400); // 800 bytes of 2-byte chars
+        let mut out = Vec::new();
+        encode_err(&mut out, 1, &long);
+        let body = &out[4 + FRAME_HEADER..];
+        assert!(body.len() <= 512);
+        assert!(std::str::from_utf8(body).is_ok(), "cut on a char boundary");
+    }
+}

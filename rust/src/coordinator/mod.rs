@@ -19,7 +19,13 @@
 //! * [`metrics`] — lock-free hit/miss counters + log-bucketed latency
 //!   histograms (p50/p99/p999), snapshot-able while running;
 //! * [`server`]  — lifecycle: spawn, batching [`ShardedClient`] handles
-//!   (scatter/gather over the partition), drain, join.
+//!   (scatter/gather over the partition), drain, join;
+//! * [`conn`]    — the OGBW length-prefixed wire codec (shares
+//!   `MAX_FRAME` with the trace ingest parsers; typed errors, bounded
+//!   buffering);
+//! * [`net`]     — the resilient TCP front door (DESIGN.md §13):
+//!   nonblocking framed serving with overload shedding, deadlines,
+//!   graceful drain and wire-level fault injection.
 //!
 //! Regret decomposes across the partition: each shard runs an
 //! independent OGB instance over its own catalog slice with Theorem 3.1
@@ -32,15 +38,19 @@
 //! scaling record, `BENCH_shard.json`), `examples/cache_server.rs`.
 
 pub mod batch;
+pub mod conn;
 pub mod error;
 pub mod metrics;
+pub mod net;
 pub mod ring;
 pub mod router;
 pub mod server;
 pub mod shard;
 
 pub use batch::Batch;
+pub use conn::{FrameReader, OwnedFrame, ProtocolError};
 pub use error::CoordinatorError;
 pub use metrics::{Metrics, MetricsSnapshot};
+pub use net::{NetConfig, NetHandle, NetReport};
 pub use router::{Partition, Router};
 pub use server::{CacheServer, ClientStats, ServerConfig, ShardedClient};

@@ -1,0 +1,1115 @@
+//! Resilient network front door (DESIGN.md §13): a dependency-light
+//! nonblocking TCP server multiplexing many framed connections onto the
+//! existing clients×shards SPSC lanes.
+//!
+//! One OS thread (`ogb-net`) owns the listener, every connection, and a
+//! single [`ShardedClient`] handle.  The event loop is a plain
+//! nonblocking poll cycle — accept, read, parse, admit, resolve, write,
+//! evict — with escalating idle backoff; no async runtime, no epoll
+//! registration, no extra crates.
+//!
+//! Robustness contracts, each one tested:
+//!
+//! * **Framed wire protocol** ([`super::conn`]): length-prefixed OGBW
+//!   frames sharing [`conn::MAX_FRAME`] with the trace ingest parsers.
+//!   Malformed input gets a typed `ERR` frame and a clean close — never
+//!   a panic, a hang, or an unbounded allocation.
+//! * **Overload shedding**: an admission controller mirrors per-shard
+//!   ring occupancy and answers would-be ring-full with a typed `BUSY`
+//!   reply instead of blocking the loop.  Every accepted REQ frame
+//!   resolves to exactly one of REPLY / degraded-REPLY / BUSY, so
+//!   `replies + degraded + shed == accepted` holds end-to-end (enforced
+//!   with `ensure!` at drain).
+//! * **Deadlines**: per-connection read/write staleness bounds evict
+//!   slow or wedged peers; a bounded output backlog caps per-connection
+//!   memory.  Evicted connections' in-flight replies are discarded but
+//!   still counted.
+//! * **Graceful drain**: on stop (Ctrl-C flag or `max_requests`) the
+//!   listener closes, reads stop, in-flight frames flush, shards write
+//!   final OGBS checkpoints (`ServerConfig::checkpoint_dir`), and the
+//!   loop exits within a bounded grace window — unresolved frames are
+//!   written off as degraded, keeping the accounting identity exact.
+//! * **Wire fault injection** ([`crate::sim::fault`]): `drop@conn`,
+//!   `delay@conn:ms=`, `partial_write@conn` and `garbage@frame` specs
+//!   fire deterministically inside this loop, clocked by the cumulative
+//!   REQ-frame counter.
+//!
+//! Hit-identity under retries: a bounded replay cache maps recently
+//! replied frame ids to their cached bitmaps, so a client that resends
+//! a frame whose reply was garbled or truncated gets the *same* answer
+//! without the keys being served twice — the loopback differential test
+//! holds bit-identical hit totals even under reply-path faults.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::obs::MetricsSnapshot;
+use crate::sim::fault::WireFaults;
+use crate::util::fxhash::FxHashMap;
+use crate::util::logger::Level;
+
+use super::conn::{self, FrameReader, OwnedFrame};
+use super::server::{CacheServer, ServerConfig, ShardedClient};
+
+/// Read chunk per connection per loop iteration.
+const READ_CHUNK: usize = 16 * 1024;
+/// Hard bound on unsent bytes buffered per connection; beyond it the
+/// peer is evicted as unrecoverably slow.
+const OUT_BACKLOG: usize = 4 * conn::MAX_FRAME as usize;
+/// Replay (idempotency) cache entries kept.
+const REPLAY_CAP: usize = 1024;
+/// Floor on the graceful-drain grace window.
+const MIN_DRAIN_GRACE_MS: u64 = 5_000;
+
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// bind address, e.g. `127.0.0.1:0` (port 0 = ephemeral; the bound
+    /// address is known synchronously via [`NetHandle::addr`])
+    pub listen: String,
+    /// the serving engine behind the front door.  `clients` is forced
+    /// to 1 — the event loop is the single producer on every lane
+    pub server: ServerConfig,
+    /// connection slots; accepts beyond this are refused with `ERR`
+    pub max_conns: usize,
+    /// evict a connection idle mid-frame (or mid-handshake) longer than
+    /// this (0 = never)
+    pub read_timeout_ms: u64,
+    /// evict a connection whose unsent output makes no progress for
+    /// this long (0 = never); also the drain grace floor contributor
+    pub write_timeout_ms: u64,
+    /// serve this many keys then drain gracefully (0 = run until stop)
+    pub max_requests: u64,
+    /// external stop flag (e.g. `util::shutdown::flag()`); the loop
+    /// also honors [`NetHandle::stop`]
+    pub stop: Option<Arc<AtomicBool>>,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self {
+            listen: "127.0.0.1:0".into(),
+            server: ServerConfig::default(),
+            max_conns: 64,
+            read_timeout_ms: 5_000,
+            write_timeout_ms: 5_000,
+            max_requests: 0,
+            stop: None,
+        }
+    }
+}
+
+/// Final accounting of one serve run.  The frame identity
+/// `accepted == replies + degraded + shed` is `ensure!`d before this is
+/// returned.
+#[derive(Debug, Clone)]
+pub struct NetReport {
+    /// REQ frames admitted past parsing and fault-drop (sheds included)
+    pub accepted: u64,
+    /// frames answered with a clean REPLY (no written-off key)
+    pub replies: u64,
+    /// frames answered with a REPLY carrying >= 1 degraded (written-off)
+    /// key — shard loss or drain-deadline write-off
+    pub degraded: u64,
+    /// frames answered `BUSY` by the admission controller
+    pub shed: u64,
+    /// keys inside accepted non-shed frames (scattered to shards)
+    pub keys: u64,
+    /// protocol violations answered `ERR` (not accepted)
+    pub wire_errors: u64,
+    pub connections: u64,
+    pub conn_evictions: u64,
+    /// merged shard metrics with the net counters folded in
+    pub snapshot: MetricsSnapshot,
+}
+
+/// Handle to a running front door: the bound address (known before any
+/// connection), a stop trigger, and the join that yields the report.
+pub struct NetHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: JoinHandle<Result<NetReport>>,
+}
+
+impl NetHandle {
+    /// The actually-bound listen address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Request a graceful drain: stop accepting, flush in-flight,
+    /// checkpoint, exit.  Idempotent.
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Release);
+    }
+
+    /// Wait for the serve loop to finish and return its report.
+    pub fn join(self) -> Result<NetReport> {
+        self.thread
+            .join()
+            .map_err(|_| anyhow::anyhow!("ogb-net thread panicked"))?
+    }
+}
+
+/// Bind `cfg.listen` and spawn the serve loop on its own thread.  The
+/// bind happens synchronously so a bad address fails here and
+/// [`NetHandle::addr`] is immediately valid.
+pub fn spawn(cfg: NetConfig) -> Result<NetHandle> {
+    let listener = TcpListener::bind(&cfg.listen)
+        .map_err(|e| anyhow::anyhow!("bind {}: {e}", cfg.listen))?;
+    listener.set_nonblocking(true)?;
+    let addr = listener.local_addr()?;
+    let stop = cfg
+        .stop
+        .clone()
+        .unwrap_or_else(|| Arc::new(AtomicBool::new(false)));
+    let stop2 = stop.clone();
+    let thread = std::thread::Builder::new()
+        .name("ogb-net".into())
+        .spawn(move || run(cfg, listener, stop2))?;
+    Ok(NetHandle { addr, stop, thread })
+}
+
+/// One live connection slot.
+struct Conn {
+    stream: TcpStream,
+    reader: FrameReader,
+    /// pending output bytes (handshake pre-pushed on accept)
+    out: Vec<u8>,
+    out_pos: usize,
+    /// generation stamp: frames record `(slot, gen)` so replies for an
+    /// evicted connection never reach a slot reuser
+    gen: u64,
+    /// peer still readable (false after EOF or protocol error)
+    open: bool,
+    /// terminal: stop reading, close once `out` is flushed
+    dead: bool,
+    /// admitted frames not yet replied
+    outstanding: u32,
+    last_read: Instant,
+    /// last write *progress* (reset only when bytes actually move)
+    last_write: Instant,
+}
+
+/// One admitted REQ frame being served across shards.
+struct FrameState {
+    conn: usize,
+    gen: u64,
+    id: u64,
+    /// cumulative REQ-frame number, the wire-fault clock
+    wire_no: u64,
+    keys: Vec<u64>,
+    resolved: usize,
+    degraded: u32,
+    hits: Vec<bool>,
+}
+
+/// Mirror of one shard lane's FIFO: which (frame, key-index) slots each
+/// flushed batch carries, in flush order.
+#[derive(Default)]
+struct ShardMirror {
+    /// slots scattered into the client's pending batch, not yet flushed
+    pending: Vec<Slot>,
+    /// one group per flushed batch, FIFO
+    flushed: VecDeque<Vec<Slot>>,
+    reaped_seq: u64,
+}
+
+struct Slot {
+    frame: usize,
+    k: usize,
+}
+
+/// Bounded idempotency cache: frame id -> cached reply.  Makes client
+/// retries of already-served frames (reply garbled / truncated on the
+/// wire) hit-identical instead of re-serving the keys.
+struct Replay {
+    map: FxHashMap<u64, (Vec<bool>, u32)>,
+    order: VecDeque<u64>,
+    cap: usize,
+}
+
+impl Replay {
+    fn new(cap: usize) -> Self {
+        Self {
+            map: FxHashMap::default(),
+            order: VecDeque::new(),
+            cap,
+        }
+    }
+
+    fn get(&self, id: u64) -> Option<&(Vec<bool>, u32)> {
+        self.map.get(&id)
+    }
+
+    fn insert(&mut self, id: u64, hits: Vec<bool>, degraded: u32) {
+        if self.map.insert(id, (hits, degraded)).is_none() {
+            self.order.push_back(id);
+        }
+        while self.order.len() > self.cap {
+            let old = self.order.pop_front().expect("non-empty order");
+            self.map.remove(&old);
+        }
+    }
+}
+
+/// The serve loop's state (everything except the [`ShardedClient`],
+/// which is passed to the methods that need it so the mirror and the
+/// client can be borrowed disjointly).
+struct Net {
+    slots: Vec<Option<Conn>>,
+    next_gen: u64,
+    frames: Vec<Option<FrameState>>,
+    free_frames: Vec<usize>,
+    active_frames: usize,
+    mirror: Vec<ShardMirror>,
+    /// frame indices fully resolved this cycle, pending reply encode
+    completed: Vec<usize>,
+    replay: Replay,
+    /// scratch: keys per shard for the current frame
+    shard_counts: Vec<u32>,
+    faults: WireFaults,
+    req_frames: u64,
+    batch: usize,
+    qcap: usize,
+    max_conns: usize,
+    read_timeout_ms: u64,
+    write_timeout_ms: u64,
+    // frame accounting (the invariant) + wire counters
+    accepted: u64,
+    replies: u64,
+    degraded: u64,
+    shed: u64,
+    keys_served: u64,
+    wire_errors: u64,
+    connections: u64,
+    conn_evictions: u64,
+}
+
+/// Resolve one (frame, key) slot; queues the frame for reply encode
+/// when its last key resolves.  Free fn so the mirror-walk closures can
+/// borrow `frames`/`completed` without touching the rest of [`Net`].
+fn mark(
+    frames: &mut [Option<FrameState>],
+    completed: &mut Vec<usize>,
+    slot: Slot,
+    hit: bool,
+    degraded: bool,
+) {
+    if let Some(f) = frames[slot.frame].as_mut() {
+        f.hits[slot.k] = hit;
+        if degraded {
+            f.degraded += 1;
+        }
+        f.resolved += 1;
+        if f.resolved == f.keys.len() {
+            completed.push(slot.frame);
+        }
+    }
+}
+
+impl Net {
+    fn new(cfg: &NetConfig, shards: usize, batch: usize, qcap: usize, faults: WireFaults) -> Self {
+        Self {
+            slots: Vec::new(),
+            next_gen: 0,
+            frames: Vec::new(),
+            free_frames: Vec::new(),
+            active_frames: 0,
+            mirror: (0..shards).map(|_| ShardMirror::default()).collect(),
+            completed: Vec::new(),
+            replay: Replay::new(REPLAY_CAP),
+            shard_counts: vec![0; shards],
+            faults,
+            req_frames: 0,
+            batch,
+            qcap,
+            max_conns: cfg.max_conns,
+            read_timeout_ms: cfg.read_timeout_ms,
+            write_timeout_ms: cfg.write_timeout_ms,
+            accepted: 0,
+            replies: 0,
+            degraded: 0,
+            shed: 0,
+            keys_served: 0,
+            wire_errors: 0,
+            connections: 0,
+            conn_evictions: 0,
+        }
+    }
+
+    /// Accept every pending connection (nonblocking listener).
+    fn accept_new(&mut self, listener: &TcpListener) -> bool {
+        let mut any = false;
+        loop {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    any = true;
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let slot = match self.slots.iter().position(|s| s.is_none()) {
+                        Some(i) => i,
+                        None if self.slots.len() < self.max_conns => {
+                            self.slots.push(None);
+                            self.slots.len() - 1
+                        }
+                        None => {
+                            // full house: refuse with a best-effort ERR
+                            // and close; the peer sees a typed reason
+                            // instead of a silent reset
+                            let mut out = Vec::with_capacity(64);
+                            conn::encode_handshake(&mut out);
+                            conn::encode_err(&mut out, 0, "server at connection capacity");
+                            let mut s = stream;
+                            let _ = s.write_all(&out);
+                            self.wire_errors += 1;
+                            continue;
+                        }
+                    };
+                    self.next_gen += 1;
+                    self.connections += 1;
+                    let mut out = Vec::with_capacity(256);
+                    conn::encode_handshake(&mut out);
+                    let now = Instant::now();
+                    self.slots[slot] = Some(Conn {
+                        stream,
+                        reader: FrameReader::new(),
+                        out,
+                        out_pos: 0,
+                        gen: self.next_gen,
+                        open: true,
+                        dead: false,
+                        outstanding: 0,
+                        last_read: now,
+                        last_write: now,
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(_) => break, // transient accept failure: retry next cycle
+            }
+        }
+        any
+    }
+
+    /// One read per live connection, then parse and handle every
+    /// complete frame that produced.
+    fn read_and_parse(&mut self, client: &mut ShardedClient) -> bool {
+        let mut any = false;
+        let mut buf = [0u8; READ_CHUNK];
+        for i in 0..self.slots.len() {
+            {
+                let Some(c) = self.slots[i].as_mut() else {
+                    continue;
+                };
+                if c.dead || !c.open {
+                    continue;
+                }
+                match c.stream.read(&mut buf) {
+                    Ok(0) => {
+                        // EOF: peer finished sending; parse what's
+                        // buffered, reply, then close
+                        c.open = false;
+                        any = true;
+                    }
+                    Ok(n) => {
+                        c.last_read = Instant::now();
+                        c.reader.feed(&buf[..n]);
+                        any = true;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => continue,
+                    Err(_) => {
+                        c.dead = true;
+                        c.open = false;
+                        any = true;
+                        continue;
+                    }
+                }
+            }
+            loop {
+                let parsed = match self.slots[i].as_mut() {
+                    Some(c) if !c.dead => c.reader.next(),
+                    _ => break,
+                };
+                match parsed {
+                    Ok(Some(frame)) => self.handle_frame(i, frame, client),
+                    Ok(None) => break,
+                    Err(e) => {
+                        self.protocol_error(i, 0, &e.to_string());
+                        break;
+                    }
+                }
+            }
+        }
+        any
+    }
+
+    /// Admit (or shed, or replay, or fault-drop) one parsed REQ frame.
+    fn handle_frame(&mut self, i: usize, frame: OwnedFrame, client: &mut ShardedClient) {
+        if frame.op != conn::OP_REQ {
+            self.protocol_error(i, frame.id, &format!("unexpected client op 0x{:02x}", frame.op));
+            return;
+        }
+        let mut keys = Vec::new();
+        if let Err(e) = conn::parse_req(&frame.body, &mut keys) {
+            self.protocol_error(i, frame.id, &e.to_string());
+            return;
+        }
+        self.req_frames += 1;
+        let wire_no = self.req_frames;
+        if self.faults.on_request_frame(wire_no) {
+            // drop@conn: the connection vanishes *before* admission —
+            // the frame was never accepted, so a client resend after
+            // reconnect serves it exactly once
+            crate::log_span!(
+                Level::Warn,
+                "wire_fault_drop",
+                "conn" => i,
+                "frame" => wire_no,
+            );
+            self.slots[i] = None;
+            return;
+        }
+        if let Some((hits, degraded)) = self.replay.get(frame.id).cloned() {
+            // retry of an already-served frame (its reply was lost on
+            // the wire): answer from the cache, do not serve twice
+            self.accepted += 1;
+            if degraded > 0 {
+                self.degraded += 1;
+            } else {
+                self.replies += 1;
+            }
+            self.send_reply(i, frame.id, &hits, degraded, wire_no);
+            return;
+        }
+        if keys.is_empty() {
+            // an empty REQ is a legal no-op ping
+            self.accepted += 1;
+            self.replies += 1;
+            self.replay.insert(frame.id, Vec::new(), 0);
+            self.send_reply(i, frame.id, &[], 0, wire_no);
+            return;
+        }
+
+        // Admission: mirror per-shard occupancy and only admit when
+        // every touched shard has ring room for this frame's batches —
+        // then the blocking Full path inside the client is unreachable
+        // and overload turns into a typed BUSY instead of a stall.
+        let catalog = client.partition().catalog() as u64;
+        for c in self.shard_counts.iter_mut() {
+            *c = 0;
+        }
+        for &key in &keys {
+            let g = if key < catalog { key } else { key % catalog };
+            let (s, _) = client.partition().locate(g);
+            self.shard_counts[s] += 1;
+        }
+        let b = self.batch as u32;
+        let qcap = self.qcap;
+        let room = |counts: &[u32], client: &ShardedClient| -> (bool, bool) {
+            let (mut over, mut impossible) = (false, false);
+            for (s, &cnt) in counts.iter().enumerate() {
+                if cnt == 0 {
+                    continue;
+                }
+                let needed = ((cnt + b - 1) / b) as usize; // div_ceil needs rust >= 1.73
+                if needed > qcap {
+                    impossible = true;
+                }
+                if client.inflight_shard(s) + needed > qcap {
+                    over = true;
+                }
+            }
+            (over, impossible)
+        };
+        let (mut over, impossible) = room(&self.shard_counts, client);
+        if over && !impossible {
+            // work-conserving shed: rings may be full of *finished*
+            // batches — reap once before giving up on the frame
+            let counts = std::mem::take(&mut self.shard_counts);
+            self.resolve(client);
+            over = room(&counts, client).0;
+            self.shard_counts = counts;
+        }
+        if impossible {
+            // could never be admitted even against idle rings: a BUSY
+            // would livelock the client's retry loop — reject instead
+            self.protocol_error(
+                i,
+                frame.id,
+                "frame exceeds server queue capacity; split it",
+            );
+            return;
+        }
+        if over {
+            self.accepted += 1;
+            self.shed += 1;
+            if let Some(c) = self.slots[i].as_mut() {
+                conn::encode_busy(&mut c.out, frame.id);
+            }
+            return;
+        }
+
+        // Admit: scatter keys into shard batches, mirroring each flush.
+        let fidx = self.free_frames.pop().unwrap_or_else(|| {
+            self.frames.push(None);
+            self.frames.len() - 1
+        });
+        let gen = {
+            let c = self.slots[i].as_mut().expect("live conn");
+            c.outstanding += 1;
+            c.gen
+        };
+        let nkeys = keys.len();
+        self.accepted += 1;
+        self.keys_served += nkeys as u64;
+        self.active_frames += 1;
+        self.frames[fidx] = Some(FrameState {
+            conn: i,
+            gen,
+            id: frame.id,
+            wire_no,
+            hits: vec![false; nkeys],
+            resolved: 0,
+            degraded: 0,
+            keys,
+        });
+        // mirror slot BEFORE get(): get() may auto-flush at B, and
+        // note_flush must see the full pending group
+        for k in 0..nkeys {
+            let key = self.frames[fidx].as_ref().expect("live frame").keys[k];
+            let g = if key < catalog { key } else { key % catalog };
+            let (s, _) = client.partition().locate(g);
+            self.mirror[s].pending.push(Slot { frame: fidx, k });
+            client.get(key);
+            if client.pending_len(s) == 0 {
+                self.note_flush(s, client);
+            }
+        }
+        // flush partial remainders now: the net loop never sits on a
+        // partially filled batch waiting for co-sharded traffic
+        for s in 0..client.shards() {
+            if client.pending_len(s) > 0 {
+                client.flush_one(s);
+                self.note_flush(s, client);
+            }
+        }
+    }
+
+    /// Move the mirror's pending group to the flushed FIFO — or, if the
+    /// flush degraded (shard disconnected / wedged past the timeout),
+    /// resolve the whole group as degraded misses right here.
+    fn note_flush(&mut self, s: usize, client: &mut ShardedClient) {
+        let group = std::mem::take(&mut self.mirror[s].pending);
+        if group.is_empty() {
+            return;
+        }
+        if let Some(err) = client.take_error() {
+            crate::log_span!(
+                Level::Warn,
+                "net_flush_degraded",
+                "shard" => s,
+                "dropped" => group.len(),
+                "err" => err,
+            );
+            for slot in group {
+                mark(&mut self.frames, &mut self.completed, slot, false, true);
+            }
+        } else {
+            self.mirror[s].flushed.push_back(group);
+        }
+    }
+
+    /// Reap reply batches from the shards and resolve their mirrored
+    /// frame slots; then write off batches the client gave up on
+    /// (disconnect tail-cut: `flushed` groups beyond `inflight`).
+    fn resolve(&mut self, client: &mut ShardedClient) -> bool {
+        let Net {
+            mirror,
+            frames,
+            completed,
+            ..
+        } = self;
+        let before = completed.len();
+        let n = client.reap_with(|s, b| {
+            let m = &mut mirror[s];
+            debug_assert_eq!(b.seq(), m.reaped_seq, "reply batch out of order");
+            m.reaped_seq += 1;
+            let group = m.flushed.pop_front().expect("reply for unmirrored batch");
+            debug_assert_eq!(group.len(), b.len(), "mirror length mismatch");
+            for (j, slot) in group.into_iter().enumerate() {
+                mark(frames, completed, slot, b.hit(j), false);
+            }
+        });
+        // a dead shard's owed replies were written off inside the
+        // client (degraded misses); mirror-side, the orphaned groups
+        // are everything beyond the surviving inflight count
+        let mut wrote_off = false;
+        for s in 0..mirror.len() {
+            while mirror[s].flushed.len() > client.inflight_shard(s) {
+                let group = mirror[s].flushed.pop_front().expect("non-empty");
+                mirror[s].reaped_seq += 1;
+                wrote_off = true;
+                for slot in group {
+                    mark(frames, completed, slot, false, true);
+                }
+            }
+        }
+        n > 0 || wrote_off || completed.len() > before
+    }
+
+    /// Encode replies for every fully resolved frame.
+    fn process_completed(&mut self) -> bool {
+        let done = std::mem::take(&mut self.completed);
+        let any = !done.is_empty();
+        for fidx in done {
+            self.finish_frame(fidx);
+        }
+        any
+    }
+
+    fn finish_frame(&mut self, fidx: usize) {
+        let f = self.frames[fidx].take().expect("completed frame");
+        self.free_frames.push(fidx);
+        self.active_frames -= 1;
+        if f.degraded > 0 {
+            self.degraded += 1;
+        } else {
+            self.replies += 1;
+        }
+        self.replay.insert(f.id, f.hits.clone(), f.degraded);
+        let deliver = match self.slots.get_mut(f.conn).and_then(|s| s.as_mut()) {
+            Some(c) if c.gen == f.gen => {
+                c.outstanding -= 1;
+                !c.dead
+            }
+            // connection evicted or replaced: reply discarded, counted
+            _ => false,
+        };
+        if deliver {
+            self.send_reply(f.conn, f.id, &f.hits, f.degraded, f.wire_no);
+        }
+    }
+
+    /// Encode one REPLY into the connection's output, applying any due
+    /// reply-path wire faults (garble / partial-write-then-close).
+    fn send_reply(&mut self, i: usize, id: u64, hits: &[bool], degraded: u32, wire_no: u64) {
+        let fault = self.faults.on_reply_frame(wire_no);
+        let Some(c) = self.slots.get_mut(i).and_then(|s| s.as_mut()) else {
+            return;
+        };
+        let start = c.out.len();
+        conn::encode_reply(&mut c.out, id, hits, degraded);
+        if fault.garble {
+            crate::log_span!(Level::Warn, "wire_fault_garbage", "conn" => i, "frame" => wire_no);
+            // keep the 4-byte length intact so the client reads one
+            // whole frame of garbage and fails with a typed BadOp
+            for byte in &mut c.out[start + 4..] {
+                *byte ^= 0xFF;
+            }
+        }
+        if fault.partial_then_close {
+            crate::log_span!(Level::Warn, "wire_fault_partial", "conn" => i, "frame" => wire_no);
+            let keep = start + (c.out.len() - start) / 2;
+            c.out.truncate(keep);
+            c.dead = true;
+            c.open = false;
+        }
+    }
+
+    /// Typed ERR + terminal close: protocol violations are answered,
+    /// never panicked on, and the connection stops being read.
+    fn protocol_error(&mut self, i: usize, id: u64, msg: &str) {
+        self.wire_errors += 1;
+        if let Some(c) = self.slots[i].as_mut() {
+            crate::log_span!(Level::Warn, "wire_protocol_error", "conn" => i, "err" => msg);
+            conn::encode_err(&mut c.out, id, msg);
+            c.dead = true;
+            c.open = false;
+        }
+    }
+
+    /// One write attempt per connection with pending output, then slot
+    /// cleanup: a connection closes once its output is flushed and it is
+    /// either dead or EOF'd with nothing outstanding.
+    fn write_pass(&mut self) -> bool {
+        let mut any = false;
+        for i in 0..self.slots.len() {
+            let Some(c) = self.slots[i].as_mut() else {
+                continue;
+            };
+            if c.out_pos < c.out.len() {
+                match c.stream.write(&c.out[c.out_pos..]) {
+                    Ok(0) => {
+                        c.dead = true;
+                        any = true;
+                    }
+                    Ok(n) => {
+                        c.out_pos += n;
+                        c.last_write = Instant::now();
+                        any = true;
+                        if c.out_pos == c.out.len() {
+                            c.out.clear();
+                            c.out_pos = 0;
+                        } else if c.out_pos > READ_CHUNK {
+                            c.out.drain(..c.out_pos);
+                            c.out_pos = 0;
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+                    Err(_) => {
+                        c.dead = true;
+                        c.open = false;
+                        any = true;
+                    }
+                }
+            }
+            let c = self.slots[i].as_mut().expect("still present");
+            let flushed = c.out_pos >= c.out.len();
+            if flushed && (c.dead || (!c.open && c.outstanding == 0)) {
+                let _ = c.stream.shutdown(Shutdown::Both);
+                self.slots[i] = None;
+                any = true;
+            }
+        }
+        any
+    }
+
+    /// Evict stale peers: idle mid-frame past the read deadline, zero
+    /// write progress past the write deadline, or an output backlog
+    /// beyond the hard bound.
+    fn enforce_deadlines(&mut self) {
+        let now = Instant::now();
+        for i in 0..self.slots.len() {
+            let Some(c) = self.slots[i].as_ref() else {
+                continue;
+            };
+            let unsent = c.out.len() - c.out_pos;
+            let read_stale = self.read_timeout_ms > 0
+                && c.open
+                && !c.dead
+                && (c.reader.buffered() > 0 || !c.reader.handshaken())
+                && now.duration_since(c.last_read).as_millis() as u64 > self.read_timeout_ms;
+            let write_stale = self.write_timeout_ms > 0
+                && unsent > 0
+                && now.duration_since(c.last_write).as_millis() as u64 > self.write_timeout_ms;
+            let backlogged = unsent > OUT_BACKLOG;
+            if read_stale || write_stale || backlogged {
+                crate::log_span!(
+                    Level::Warn,
+                    "conn_evicted",
+                    "conn" => i,
+                    "read_stale" => read_stale,
+                    "write_stale" => write_stale,
+                    "backlog" => unsent,
+                );
+                self.conn_evictions += 1;
+                self.slots[i] = None; // outstanding replies will be discarded by gen mismatch
+            }
+        }
+    }
+
+    /// Drain-deadline fallback: write every unresolved key of every
+    /// in-flight frame off as a degraded miss so the accounting identity
+    /// survives even a wedged shard at shutdown.
+    fn force_resolve_all(&mut self) {
+        for fidx in 0..self.frames.len() {
+            if let Some(f) = self.frames[fidx].as_mut() {
+                if f.resolved < f.keys.len() {
+                    f.degraded += (f.keys.len() - f.resolved) as u32;
+                    f.resolved = f.keys.len();
+                    self.completed.push(fidx);
+                }
+            }
+        }
+        for m in self.mirror.iter_mut() {
+            m.pending.clear();
+            m.flushed.clear();
+        }
+    }
+
+    fn all_output_flushed(&self) -> bool {
+        self.slots
+            .iter()
+            .flatten()
+            .all(|c| c.out_pos >= c.out.len())
+    }
+}
+
+/// The serve loop.  Runs on the `ogb-net` thread; [`spawn`] is the
+/// public entry.
+fn run(mut cfg: NetConfig, listener: TcpListener, stop: Arc<AtomicBool>) -> Result<NetReport> {
+    anyhow::ensure!(cfg.max_conns >= 1, "need max_conns >= 1");
+    // single-threaded event loop == single producer on every lane
+    cfg.server.clients = 1;
+    let faults = cfg
+        .server
+        .fault_plan
+        .as_ref()
+        .map(|p| p.wire_faults())
+        .unwrap_or_default();
+    let mut server = CacheServer::start(cfg.server.clone())?;
+    let mut client = server.take_client()?;
+    let mut net = Net::new(
+        &cfg,
+        client.shards(),
+        cfg.server.batch,
+        client.queue_capacity(),
+        faults,
+    );
+    let grace = Duration::from_millis(cfg.write_timeout_ms.max(MIN_DRAIN_GRACE_MS));
+
+    let mut listener = Some(listener);
+    let mut draining = false;
+    let mut drain_deadline = Instant::now(); // set when draining flips
+    let mut idle: u32 = 0;
+    loop {
+        if !draining
+            && (stop.load(Ordering::Acquire)
+                || (cfg.max_requests > 0 && net.keys_served >= cfg.max_requests))
+        {
+            draining = true;
+            drain_deadline = Instant::now() + grace;
+            listener = None; // close the listen socket: no new connections
+            crate::log_span!(
+                Level::Info,
+                "net_drain",
+                "active_frames" => net.active_frames,
+                "keys_served" => net.keys_served,
+            );
+        }
+        let mut progress = false;
+        if let Some(l) = listener.as_ref() {
+            progress |= net.accept_new(l);
+        }
+        if !draining {
+            progress |= net.read_and_parse(&mut client);
+        }
+        progress |= net.resolve(&mut client);
+        progress |= net.process_completed();
+        progress |= net.write_pass();
+        net.enforce_deadlines();
+        if draining {
+            if net.active_frames == 0 && net.all_output_flushed() {
+                break;
+            }
+            if Instant::now() >= drain_deadline {
+                crate::log_span!(
+                    Level::Warn,
+                    "net_drain_deadline",
+                    "unresolved_frames" => net.active_frames,
+                );
+                net.force_resolve_all();
+                net.process_completed();
+                net.write_pass();
+                break;
+            }
+        }
+        if progress {
+            idle = 0;
+        } else {
+            idle = idle.saturating_add(1);
+            if idle < 64 {
+                std::hint::spin_loop();
+            } else if idle < 256 {
+                std::thread::yield_now();
+            } else {
+                std::thread::sleep(Duration::from_micros(500));
+            }
+        }
+    }
+    // close every connection, then drain the engine: shards exit when
+    // the client's rings disconnect, writing final OGBS checkpoints if
+    // `checkpoint_dir` is set
+    net.slots.clear();
+    drop(client);
+    let mut snapshot = server.shutdown();
+    snapshot.connections += net.connections;
+    snapshot.conn_evictions += net.conn_evictions;
+    snapshot.shed_replies += net.shed;
+    snapshot.wire_errors += net.wire_errors;
+    if net.faults.pending() {
+        crate::log_warn!("wire fault spec has unfired entries (run too short to reach them)");
+    }
+    anyhow::ensure!(
+        net.accepted == net.replies + net.degraded + net.shed,
+        "net accounting broken: accepted={} != replies={} + degraded={} + shed={}",
+        net.accepted,
+        net.replies,
+        net.degraded,
+        net.shed,
+    );
+    Ok(NetReport {
+        accepted: net.accepted,
+        replies: net.replies,
+        degraded: net.degraded,
+        shed: net.shed,
+        keys: net.keys_served,
+        wire_errors: net.wire_errors,
+        connections: net.connections,
+        conn_evictions: net.conn_evictions,
+        snapshot,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replay_cache_is_bounded_and_idempotent() {
+        let mut r = Replay::new(4);
+        for id in 0..8u64 {
+            r.insert(id, vec![id % 2 == 0], 0);
+        }
+        assert!(r.get(0).is_none(), "oldest entries evicted");
+        assert!(r.get(3).is_none());
+        for id in 4..8u64 {
+            let (hits, degraded) = r.get(id).expect("recent entry cached");
+            assert_eq!(hits, &vec![id % 2 == 0]);
+            assert_eq!(*degraded, 0);
+        }
+        // re-inserting an existing id must not grow the order queue
+        r.insert(7, vec![true], 1);
+        assert_eq!(r.order.len(), 4);
+        assert_eq!(r.get(7), Some(&(vec![true], 1)));
+    }
+
+    /// Minimal end-to-end smoke over a real loopback socket: handshake,
+    /// a few REQ frames from a plain blocking client, graceful stop.
+    /// The full differential matrix lives in `tests/net_loopback.rs`.
+    #[test]
+    fn loopback_smoke_serves_and_drains() {
+        let cfg = NetConfig {
+            server: ServerConfig {
+                catalog: 2_000,
+                capacity: 100,
+                shards: 2,
+                batch: 8,
+                horizon: 10_000,
+                queue_depth: 64,
+                seed: 5,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let handle = spawn(cfg).unwrap();
+        let mut s = TcpStream::connect(handle.addr()).unwrap();
+        let mut out = Vec::new();
+        conn::encode_handshake(&mut out);
+        let keys: Vec<u64> = (0..25).collect();
+        for id in 0..10u64 {
+            conn::encode_req(&mut out, id, &keys);
+        }
+        s.write_all(&out).unwrap();
+        let mut reader = FrameReader::new();
+        let mut buf = [0u8; 4096];
+        let mut got = 0u64;
+        let mut keys_hit = 0u64;
+        while got < 10 {
+            let n = s.read(&mut buf).unwrap();
+            assert!(n > 0, "server closed early");
+            reader.feed(&buf[..n]);
+            while let Some(f) = reader.next().unwrap() {
+                assert_eq!(f.op, conn::OP_REPLY);
+                let reply = conn::parse_reply(&f.body).unwrap();
+                assert_eq!(reply.count, 25);
+                assert_eq!(reply.degraded, 0);
+                keys_hit += reply.hit_count();
+                got += 1;
+            }
+        }
+        drop(s);
+        handle.stop();
+        let report = handle.join().unwrap();
+        assert_eq!(report.accepted, 10);
+        assert_eq!(report.replies, 10);
+        assert_eq!(report.degraded, 0);
+        assert_eq!(report.shed, 0);
+        assert_eq!(report.keys, 250);
+        assert_eq!(report.connections, 1);
+        assert_eq!(report.snapshot.requests, 250);
+        // hot 25-key set in a 100-item cache: hits must accumulate
+        assert!(keys_hit > 0, "hot set should produce hits");
+        assert_eq!(report.snapshot.hits, keys_hit, "wire and engine agree");
+    }
+
+    /// A garbage-spewing peer gets a typed ERR and a clean close; the
+    /// server survives and still serves a well-behaved peer afterwards.
+    #[test]
+    fn garbage_peer_gets_err_and_server_survives() {
+        let cfg = NetConfig {
+            server: ServerConfig {
+                catalog: 2_000,
+                capacity: 100,
+                shards: 2,
+                batch: 8,
+                horizon: 10_000,
+                queue_depth: 16,
+                seed: 6,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let handle = spawn(cfg).unwrap();
+
+        // hostile peer: valid handshake, then junk
+        let mut bad = TcpStream::connect(handle.addr()).unwrap();
+        let mut out = Vec::new();
+        conn::encode_handshake(&mut out);
+        out.extend_from_slice(&[0xDE; 64]);
+        bad.write_all(&out).unwrap();
+        let mut reader = FrameReader::new();
+        let mut buf = [0u8; 1024];
+        let mut saw_err = false;
+        loop {
+            match bad.read(&mut buf) {
+                Ok(0) => break,
+                Ok(n) => {
+                    reader.feed(&buf[..n]);
+                    while let Ok(Some(f)) = reader.next() {
+                        if f.op == conn::OP_ERR {
+                            saw_err = true;
+                        }
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+        assert!(saw_err, "protocol violation must be answered with ERR");
+
+        // a well-behaved peer still gets served
+        let mut good = TcpStream::connect(handle.addr()).unwrap();
+        let mut out = Vec::new();
+        conn::encode_handshake(&mut out);
+        conn::encode_req(&mut out, 1, &[1, 2, 3]);
+        good.write_all(&out).unwrap();
+        let mut reader = FrameReader::new();
+        let mut replied = false;
+        while !replied {
+            let n = good.read(&mut buf).unwrap();
+            assert!(n > 0, "server closed on the healthy peer");
+            reader.feed(&buf[..n]);
+            while let Ok(Some(f)) = reader.next() {
+                if f.op == conn::OP_REPLY {
+                    replied = true;
+                }
+            }
+        }
+        drop(good);
+        drop(bad);
+        handle.stop();
+        let report = handle.join().unwrap();
+        assert_eq!(report.wire_errors, 1);
+        assert_eq!(report.accepted, 1);
+        assert_eq!(report.replies, 1);
+        assert_eq!(report.connections, 2);
+    }
+}

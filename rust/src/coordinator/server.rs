@@ -73,6 +73,11 @@ pub struct ServerConfig {
     /// the pre-fault-tolerance behavior).  Normal backpressure clears in
     /// microseconds; hitting this bound means the shard is wedged.
     pub flush_timeout_ms: u64,
+    /// directory for final policy checkpoints: each shard writes its
+    /// complete OGBS snapshot to `<dir>/shard<K>.ogbs` as it drains
+    /// (graceful shutdown path, DESIGN.md §13).  `None` = no files —
+    /// the in-memory `checkpoint_every` supervision is unaffected
+    pub checkpoint_dir: Option<std::path::PathBuf>,
 }
 
 impl Default for ServerConfig {
@@ -92,6 +97,7 @@ impl Default for ServerConfig {
             checkpoint_every: 0,
             fault_plan: None,
             flush_timeout_ms: 5_000,
+            checkpoint_dir: None,
         }
     }
 }
@@ -264,6 +270,7 @@ impl CacheServer {
                 per_request_serve: cfg.per_request_serve,
                 checkpoint_every: cfg.checkpoint_every,
                 faults: cfg.fault_plan.as_ref().map(|p| p.for_shard(shard_id)),
+                checkpoint_dir: cfg.checkpoint_dir.clone(),
             };
             let (m2, r2) = (m.clone(), r.clone());
             workers.push(
@@ -454,6 +461,39 @@ impl ShardedClient {
                 self.flush_shard(shard);
             }
         }
+    }
+
+    /// Flush one shard's pending batch if non-empty.  The network front
+    /// door (`coordinator::net`) uses this to bound how long a partially
+    /// filled batch waits for co-sharded requests.
+    pub fn flush_one(&mut self, shard: usize) {
+        if !self.lanes[shard].pending.is_empty() {
+            self.flush_shard(shard);
+        }
+    }
+
+    /// Number of shard lanes this handle scatters over.
+    pub fn shards(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Requests sitting in `shard`'s pending (not yet flushed) batch.
+    pub fn pending_len(&self, shard: usize) -> usize {
+        self.lanes[shard].pending.len()
+    }
+
+    /// Batches flushed into `shard`'s work ring and not yet reaped.
+    pub fn inflight_shard(&self, shard: usize) -> usize {
+        self.lanes[shard].inflight
+    }
+
+    /// The work ring's true capacity in batches (`queue_depth` rounded
+    /// up to a power of two by the ring allocator).  An admission
+    /// controller that keeps `inflight_shard() + 1` below this bound
+    /// guarantees the next flush finds a free slot, so the internal
+    /// inspector-less backpressure reap in [`Self::get`] is unreachable.
+    pub fn queue_capacity(&self) -> usize {
+        self.lanes[0].work.capacity()
     }
 
     fn flush_shard(&mut self, shard: usize) {

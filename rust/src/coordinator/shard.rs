@@ -70,6 +70,9 @@ pub struct ShardConfig {
     /// deterministic fault schedule for this shard (chaos harness);
     /// `None` leaves the hot path exactly as before
     pub faults: Option<ShardFaults>,
+    /// write a final OGBS snapshot to `<dir>/shard<K>.ogbs` when the
+    /// shard drains (graceful shutdown, DESIGN.md §13); `None` = no file
+    pub checkpoint_dir: Option<std::path::PathBuf>,
 }
 
 /// One client's pair of rings as seen from the shard: requests in,
@@ -328,6 +331,45 @@ pub fn run_shard(
             idle_backoff(&mut idle, reply_blocked);
         }
     }
+    // Graceful-drain checkpoint (DESIGN.md §13): the shard has served
+    // everything it will ever see, so this snapshot is the policy's
+    // complete final state — the durable half of `serve --listen`'s
+    // drain protocol.  Off the request path by construction (the loop
+    // above has exited); failures warn rather than panic, since the
+    // replies are already delivered.
+    if let Some(dir) = cfg.checkpoint_dir.as_ref() {
+        let path = dir.join(format!("shard{}.ogbs", cfg.shard_id));
+        let write = || -> Result<usize, String> {
+            std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+            let mut buf = Vec::new();
+            policy.snapshot(&mut buf).map_err(|e| e.to_string())?;
+            std::fs::write(&path, &buf).map_err(|e| e.to_string())?;
+            Ok(buf.len())
+        };
+        match write() {
+            Ok(bytes) => {
+                metrics
+                    .checkpoint_bytes
+                    .fetch_add(bytes as u64, Ordering::Relaxed);
+                crate::log_span!(
+                    Level::Info,
+                    "final_checkpoint",
+                    "shard" => cfg.shard_id,
+                    "path" => path.display(),
+                    "bytes" => bytes,
+                );
+            }
+            Err(e) => {
+                crate::log_span!(
+                    Level::Warn,
+                    "final_checkpoint_failed",
+                    "shard" => cfg.shard_id,
+                    "path" => path.display(),
+                    "error" => e,
+                );
+            }
+        }
+    }
     // Rare-path span: shard drained (all client lanes disconnected and
     // every queued batch served) — the structured counterpart of the
     // worker thread exiting.
@@ -513,6 +555,7 @@ mod tests {
                     per_request_serve: false,
                     checkpoint_every,
                     faults,
+                    checkpoint_dir: None,
                 },
                 shard_lanes,
                 Arc::new(AtomicBool::new(false)),

@@ -73,7 +73,24 @@
 //!   [`coordinator::CoordinatorError`]s instead of hanging.  The
 //!   deterministic fault-injection DSL ([`sim::FaultPlan`],
 //!   `--fault-spec "panic@shard1:t=1e6"`) drives the `chaos-smoke` CI
-//!   differential;
+//!   differential.  The engine also has a network front door (DESIGN.md
+//!   §13): `ogb-cache serve --listen <addr>` runs
+//!   [`coordinator::net`] — a dependency-light nonblocking TCP loop
+//!   speaking the length-prefixed OGBW framing of
+//!   [`coordinator::conn`] (shared 1 MiB `MAX_FRAME` cap with the
+//!   ingest parsers), with per-connection read/write deadlines and
+//!   slow-peer eviction, typed `BUSY` overload shedding under the
+//!   CI-asserted ledger `accepted == replies + degraded + shed`, a
+//!   bounded replay cache making client resends exactly-once, and a
+//!   graceful SIGINT/`--max-requests` drain (flush in-flight, final
+//!   checkpoints, exit 0).  The client side is `ogb-cache loadgen`
+//!   ([`sim::run_serverbench`]): seeded Zipf drive, BUSY backoff,
+//!   reconnect/resend, client-observed percentiles into
+//!   `BENCH_server.json`; wire-level faults (`drop@conn`,
+//!   `delay@conn`, `garbage@frame`, `partial_write@conn`) extend the
+//!   fault DSL and the `net-smoke`/`chaos-smoke` CI jobs hold a
+//!   loopback run hit-identical to the in-process engine under every
+//!   one of them;
 //! * [`util`] — zero-dependency substrates required by the offline build
 //!   environment: PRNG, CLI, CSV, property-testing, and
 //!   [`util::flattree::FlatTree`] — the flat arena B+-tree carrying the
@@ -106,6 +123,12 @@
 //!   per-policy hit ratio, regret vs the streaming hindsight OPT,
 //!   req/s, catalog-growth events; the `replay-e2e` CI job asserts the
 //!   exact-mode bit-identity with a pre-densified run on every push.
+//! * `BENCH_server.json` — `ogb-cache loadgen` against `ogb-cache
+//!   serve --listen`: the network axis — client-observed p50/p99/p999
+//!   frame latency, req/s, and the retry ledger (busy_retries,
+//!   resends, reconnects, gave_up); the `net-smoke` CI job regenerates
+//!   a loopback twin and asserts it hit-identical to the in-process
+//!   engine.
 //!
 //! Since Policy API v2, `BENCH_hotpath.json` and `BENCH_shard.json`
 //! carry `mode: "per_request"` vs `mode: "batched"` rows — the v1

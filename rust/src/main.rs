@@ -6,7 +6,12 @@
 //!   bench      hot-path microbench (ns/req, pops/req, allocs/req -> BENCH_hotpath.json)
 //!   figures    regenerate the paper's tables/figures (CSV under results/)
 //!   serve      pump a streaming scenario through the sharded serving engine
-//!              (--smoke runs the multi-core shard suite -> BENCH_shard.json)
+//!              (--smoke runs the multi-core shard suite -> BENCH_shard.json;
+//!              --listen <addr> opens the framed TCP front door instead,
+//!              serving OGBW frames until Ctrl-C or --max-requests keys)
+//!   loadgen    network load generator: drive a `serve --listen` server over
+//!              TCP with retry/backoff, record client-side latency
+//!              percentiles -> BENCH_server.json
 //!   replay     run a raw sparse-keyed trace (csv/tsv/OGBR/OGBT) end-to-end
 //!              through online key remapping -> BENCH_replay.json
 //!   analyze    temporal-locality analysis of a trace (App. B)
@@ -15,20 +20,21 @@
 //!              sparse-keyed raw file for the ingest path)
 
 use anyhow::Result;
-use ogb_cache::coordinator::{CacheServer, ServerConfig};
+use ogb_cache::coordinator::{net, CacheServer, NetConfig, ServerConfig};
 use ogb_cache::figures::{run_figure, FigOpts};
 use ogb_cache::obs::{FlightRecorder, Provenance, WindowRecord};
 use ogb_cache::policies::{BuildOpts, Policy};
 use ogb_cache::proj::{dense, LazySimplex};
 use ogb_cache::sim::{
-    self, HotpathConfig, ReplayConfig, ReplayMode, RunConfig, ShardBenchConfig, SweepConfig,
+    self, HotpathConfig, ReplayConfig, ReplayMode, RunConfig, ServerBenchConfig, ShardBenchConfig,
+    SweepConfig,
 };
 use ogb_cache::trace::ingest::{RawBinaryWriter, RawKey};
 use ogb_cache::trace::stream::{RequestSource, SourceSpec};
 use ogb_cache::trace::{self, realworld, stream, synth, Trace};
 use ogb_cache::util::args::{flag, opt, Cli};
 use ogb_cache::util::bench::alloc_count::CountingAlloc;
-use ogb_cache::util::{logger, Xoshiro256pp};
+use ogb_cache::util::{logger, shutdown, Xoshiro256pp};
 
 /// Counting allocator (one relaxed atomic add per allocation): keeps the
 /// allocs/request column of `ogb-cache bench` live in the shipped binary.
@@ -124,10 +130,34 @@ fn cli() -> Cli {
                 opt("checkpoint-every", "shard policy checkpoint cadence in batches: restart-from-checkpoint instead of cold rebuild after a shard panic (0 = checkpointing off)", "0"),
                 opt("fault-spec", "deterministic fault-injection plan, e.g. `panic@shard1:t=1e6,stall@ring:t=2e6,ms=5` (DESIGN.md §12; empty = no faults)", ""),
                 opt("flush-timeout-ms", "client-side bound on waiting for a full shard ring: on expiry the batch is dropped as degraded instead of hanging (0 = wait forever)", "5000"),
+                opt("checkpoint-dir", "directory for OGBS policy checkpoints: periodic with --checkpoint-every, and a final per-shard snapshot at drain (empty = off)", ""),
+                opt("listen", "TCP listen address, e.g. 127.0.0.1:4600 (port 0 = kernel-assigned, printed as `listening on ...`): serve OGBW frames from the network instead of a --source scenario, until Ctrl-C or --max-requests served keys (DESIGN.md §13)", ""),
+                opt("catalog", "key universe size N for --listen mode (0 = derive from --source)", "0"),
+                opt("max-conns", "connection cap for --listen mode; excess accepts get a typed ERR and close", "64"),
+                opt("read-timeout-ms", "slow-client read deadline for --listen mode: a connection stalled mid-frame past this is evicted", "5000"),
+                opt("write-timeout-ms", "slow-client write deadline for --listen mode: a connection accepting no bytes past this with replies pending is evicted (also bounds the drain grace)", "5000"),
                 opt("bench-json", "BENCH_shard.json path for --smoke (empty = skip)", "BENCH_shard.json"),
                 opt("obs-out", "flight-recorder JSONL path: live sampled windows while serving, warm+steady windows per --smoke cell (empty = obs off)", ""),
                 flag("per-request", "serve drained batches item-by-item (v1 comparison shape) instead of one serve_batch call per ring pop"),
                 flag("smoke", "tiny CI grid: run the multi-core shard suite (shards {1,2}, batched + per-request modes, small N; honors --policy/--batch/--queue-depth/--seed/--fault-spec/--checkpoint-every, ignores the other serve flags), emit BENCH_shard.json, assert the zero-allocation contract"),
+            ],
+        )
+        .command(
+            "loadgen",
+            "network load generator: drive a running `serve --listen` server over TCP with retry/backoff+jitter, record client-side latency percentiles (emits BENCH_server.json)",
+            vec![
+                opt("addr", "server address, e.g. 127.0.0.1:4600 (required; grep the server's `listening on` line for kernel-assigned ports)", ""),
+                opt("requests", "total keys to drive", "100000"),
+                opt("frame-size", "keys per request frame", "64"),
+                opt("window", "max frames in flight (1 = lockstep; required for hit-identity differential checks)", "1"),
+                opt("catalog", "key universe size N (keys drawn Zipf over 0..N; must match the server's --catalog for meaningful hit ratios)", "100000"),
+                opt("zipf", "workload Zipf exponent", "0.9"),
+                opt("seed", "random seed", "42"),
+                opt("timeout-ms", "per-read socket timeout; expiry counts as a broken connection and triggers reconnect+resend", "5000"),
+                opt("max-retries", "per-frame retry budget (BUSY backoff / reconnect resend) before the frame is recorded as gave_up", "8"),
+                opt("connect-timeout-ms", "bound on initial-connect retrying", "5000"),
+                opt("bench-json", "machine-readable snapshot path (empty = skip)", "BENCH_server.json"),
+                flag("smoke", "CI mode: additionally assert that no frame was given up and every key was answered"),
             ],
         )
         .command(
@@ -269,6 +299,17 @@ fn parse_fault_spec(a: &ogb_cache::util::args::Args) -> Result<Option<ogb_cache:
 }
 
 /// `--rebase-threshold` shared by simulate / sweep / bench ("" = default).
+/// `--checkpoint-dir` shared by the in-process and `--listen` serve
+/// paths: empty means checkpointing to disk is off.
+fn checkpoint_dir_arg(a: &ogb_cache::util::args::Args) -> Option<std::path::PathBuf> {
+    let d = a.get_or("checkpoint-dir", "");
+    if d.is_empty() {
+        None
+    } else {
+        Some(std::path::PathBuf::from(d))
+    }
+}
+
 fn parse_rebase_threshold(a: &ogb_cache::util::args::Args) -> Result<Option<f64>> {
     let s = a.get_or("rebase-threshold", "");
     if s.is_empty() {
@@ -534,6 +575,14 @@ fn cmd_bench(a: &ogb_cache::util::args::Args) -> Result<()> {
 }
 
 fn cmd_serve(a: &ogb_cache::util::args::Args) -> Result<()> {
+    let listen = a.get_or("listen", "");
+    if !listen.is_empty() {
+        anyhow::ensure!(
+            !a.flag("smoke"),
+            "--listen and --smoke are mutually exclusive (the smoke suite is in-process)"
+        );
+        return cmd_serve_net(a, listen);
+    }
     if a.flag("smoke") {
         // CI mode: run the multi-core shard suite on its tiny grid, emit
         // BENCH_shard.json, and enforce the zero-allocation contract.
@@ -634,12 +683,18 @@ fn cmd_serve(a: &ogb_cache::util::args::Args) -> Result<()> {
         checkpoint_every: a.get_parse("checkpoint-every", 0),
         fault_plan: parse_fault_spec(a)?,
         flush_timeout_ms: a.get_parse("flush-timeout-ms", 5_000),
+        checkpoint_dir: checkpoint_dir_arg(a),
     };
     anyhow::ensure!(
         cfg.fault_plan
             .as_ref()
             .map_or(true, |p| p.trace_corruption().is_none()),
         "`corrupt@trace` does not apply to serve (use `ogb-cache replay`)"
+    );
+    anyhow::ensure!(
+        cfg.fault_plan.as_ref().map_or(true, |p| !p.has_wire_faults()),
+        "wire-level faults (drop@conn, delay@conn, partial_write@conn, \
+         garbage@frame) need a wire — add `--listen <addr>`"
     );
     if let Some(plan) = &cfg.fault_plan {
         println!("fault plan: {plan} (checkpoint_every={})", cfg.checkpoint_every);
@@ -660,10 +715,16 @@ fn cmd_serve(a: &ogb_cache::util::args::Args) -> Result<()> {
         &format!("serve:{}", spec.text()),
     )?;
     let mut server = CacheServer::start(cfg)?;
+    // First Ctrl-C turns into a drain: clients stop pulling requests at
+    // the next batch boundary, flush in-flight work, and the normal
+    // shutdown path below writes final checkpoints (util::shutdown).
+    shutdown::install();
+    let stop = shutdown::flag();
     let start = std::time::Instant::now();
     let mut handles = Vec::new();
     for w in 0..clients {
         let mut client = server.take_client()?;
+        let stop = stop.clone();
         // Clients partition the scenario by striding: client w serves
         // requests w, w+K, w+2K, ... of the *same* deterministic stream
         // (every client builds `spec` with the same seed), so the union
@@ -682,6 +743,9 @@ fn cmd_serve(a: &ogb_cache::util::args::Args) -> Result<()> {
             }
             let mut served = 0usize;
             'serve: while served < per_client {
+                if stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    break;
+                }
                 let Some(r) = source.next_request() else {
                     break;
                 };
@@ -723,6 +787,13 @@ fn cmd_serve(a: &ogb_cache::util::args::Args) -> Result<()> {
     }
     let elapsed = start.elapsed().as_secs_f64();
     let snap = server.shutdown();
+    if stop.load(std::sync::atomic::Ordering::Relaxed) {
+        println!(
+            "graceful stop: drained after {} of {requests} requests \
+             (in-flight flushed, checkpoints written)",
+            snap.requests
+        );
+    }
     if let (Some(rec2), Some(prev)) = (rec.as_mut(), last.as_ref()) {
         // final window: the tail since the last poll (drain included)
         let win = snap.since(prev);
@@ -735,14 +806,180 @@ fn cmd_serve(a: &ogb_cache::util::args::Args) -> Result<()> {
     }
     println!("{}", snap.report());
     println!(
-        "drove {} requests in {elapsed:.2}s => {:.3e} req/s end-to-end | latency p50={}ns p99={}ns p999={}ns",
+        "drove {} requests in {elapsed:.2}s => {:.3e} req/s end-to-end | hits={} | latency p50={}ns p99={}ns p999={}ns",
         snap.requests,
         snap.requests as f64 / elapsed.max(1e-12),
+        snap.hits,
         snap.p50_ns(),
         snap.p99_ns(),
         snap.p999_ns(),
     );
     finish_recorder(rec)
+}
+
+/// `serve --listen <addr>`: the framed TCP front door (DESIGN.md §13).
+/// Requests come from the network instead of a `--source` scenario, so
+/// the scenario spec is only probed for its catalog/horizon defaults
+/// (overridable with `--catalog` / `--max-requests`).  Runs until
+/// Ctrl-C (graceful drain: stop accepting, flush in-flight, final
+/// checkpoints) or until `--max-requests` keys have been served.
+fn cmd_serve_net(a: &ogb_cache::util::args::Args, listen: &str) -> Result<()> {
+    let seed: u64 = a.get_parse("seed", 42);
+    let catalog_arg: usize = a.get_parse("catalog", 0);
+    let max_requests: u64 = a.get_parse("max-requests", 0);
+    let (catalog, horizon_hint) = if catalog_arg > 0 {
+        (catalog_arg, None)
+    } else {
+        let spec = SourceSpec::parse(a.get_or("source", "zipf:n=100000,t=1000000,s=0.9"))?;
+        let probe = spec.build(seed)?;
+        (probe.catalog(), probe.horizon())
+    };
+    // Theorem 3.1 eta needs a horizon; an open-ended listener has none,
+    // so take the explicit cap, then the probed scenario's, then a
+    // round default — eta only shifts the regret constant, not safety.
+    let horizon = if max_requests > 0 {
+        max_requests as usize
+    } else {
+        horizon_hint.unwrap_or(1_000_000)
+    };
+    let capacity_arg: usize = a.get_parse("capacity", 0);
+    let server = ServerConfig {
+        catalog,
+        capacity: if capacity_arg > 0 {
+            capacity_arg
+        } else {
+            (catalog / 20).max(1)
+        },
+        shards: a.get_parse("shards", 4),
+        policy: a.get_or("policy", "ogb").to_string(),
+        batch: a.get_parse("batch", 64),
+        horizon,
+        queue_depth: a.get_parse("queue-depth", 64),
+        clients: 1, // the net loop is the single producer on every lane
+        seed,
+        rebase_threshold: parse_rebase_threshold(a)?,
+        per_request_serve: a.flag("per-request"),
+        checkpoint_every: a.get_parse("checkpoint-every", 0),
+        fault_plan: parse_fault_spec(a)?,
+        flush_timeout_ms: a.get_parse("flush-timeout-ms", 5_000),
+        checkpoint_dir: checkpoint_dir_arg(a),
+    };
+    anyhow::ensure!(
+        server
+            .fault_plan
+            .as_ref()
+            .map_or(true, |p| p.trace_corruption().is_none()),
+        "`corrupt@trace` does not apply to serve (use `ogb-cache replay`)"
+    );
+    if let Some(plan) = &server.fault_plan {
+        println!(
+            "fault plan: {plan} (checkpoint_every={})",
+            server.checkpoint_every
+        );
+    }
+    println!(
+        "serving on the wire | policy={} catalog={} capacity={} shards={} batch={} queue_depth={} max_conns={}",
+        server.policy,
+        server.catalog,
+        server.capacity,
+        server.shards,
+        server.batch,
+        server.queue_depth,
+        a.get_or("max-conns", "64"),
+    );
+    let mut rec = open_recorder(
+        a,
+        a.get_or("policy", "ogb"),
+        &format!("serve-net:{listen}"),
+    )?;
+    shutdown::install();
+    let cfg = NetConfig {
+        listen: listen.to_string(),
+        server,
+        max_conns: a.get_parse("max-conns", 64),
+        read_timeout_ms: a.get_parse("read-timeout-ms", 5_000),
+        write_timeout_ms: a.get_parse("write-timeout-ms", 5_000),
+        max_requests,
+        stop: Some(shutdown::flag()),
+    };
+    let start = std::time::Instant::now();
+    let handle = net::spawn(cfg)?;
+    // CI and scripts grep this exact line for the kernel-assigned port.
+    println!("listening on {}", handle.addr());
+    let report = handle.join()?;
+    let elapsed = start.elapsed().as_secs_f64();
+    // The overload-control ledger: every accepted frame got exactly one
+    // disposition (net::run re-checks this and errors out otherwise).
+    println!(
+        "accounting: accepted={} replies={} degraded={} shed={}",
+        report.accepted, report.replies, report.degraded, report.shed
+    );
+    println!(
+        "wire: keys={} hits={} wire_errors={} connections={} conn_evictions={}",
+        report.keys,
+        report.snapshot.hits,
+        report.wire_errors,
+        report.connections,
+        report.conn_evictions
+    );
+    println!("{}", report.snapshot.report());
+    println!(
+        "served {} keys in {elapsed:.2}s => {:.3e} keys/s end-to-end",
+        report.keys,
+        report.keys as f64 / elapsed.max(1e-12),
+    );
+    if let Some(rec2) = rec.as_mut() {
+        // one summary window: the whole run (wire counters included in
+        // the snapshot, so the flight record carries the ledger too)
+        rec2.record_window(&WindowRecord::from_snapshot(&report.snapshot, elapsed));
+    }
+    finish_recorder(rec)
+}
+
+/// `loadgen`: the client side of `serve --listen` — drive frames over
+/// TCP with BUSY backoff and reconnect/resend, record client-observed
+/// latency percentiles, emit BENCH_server.json.
+fn cmd_loadgen(a: &ogb_cache::util::args::Args) -> Result<()> {
+    let addr = a.get_or("addr", "").to_string();
+    anyhow::ensure!(
+        !addr.is_empty(),
+        "loadgen needs --addr <host:port> (start a server with \
+         `ogb-cache serve --listen 127.0.0.1:0` and grep its `listening on` line)"
+    );
+    let cfg = ServerBenchConfig {
+        addr,
+        requests: a.get_parse("requests", 100_000),
+        frame_size: a.get_parse("frame-size", 64),
+        window: a.get_parse("window", 1),
+        catalog: a.get_parse("catalog", 100_000),
+        zipf_s: a.get_parse("zipf", 0.9),
+        seed: a.get_parse("seed", 42),
+        timeout_ms: a.get_parse("timeout-ms", 5_000),
+        max_retries: a.get_parse("max-retries", 8),
+        connect_timeout_ms: a.get_parse("connect-timeout-ms", 5_000),
+        smoke: a.flag("smoke"),
+    };
+    let r = sim::run_serverbench(&cfg)?;
+    r.print();
+    let out = a.get_or("bench-json", "BENCH_server.json");
+    if !out.is_empty() {
+        println!("wrote {}", r.write_json(out)?.display());
+    }
+    if cfg.smoke {
+        anyhow::ensure!(
+            r.gave_up == 0,
+            "loadgen --smoke: {} frames exhausted their retry budget",
+            r.gave_up
+        );
+        anyhow::ensure!(
+            r.keys == cfg.requests as u64,
+            "loadgen --smoke: {} of {} keys answered",
+            r.keys,
+            cfg.requests
+        );
+        println!("smoke OK: every frame answered, none given up");
+    }
+    Ok(())
 }
 
 fn cmd_replay(a: &ogb_cache::util::args::Args) -> Result<()> {
@@ -811,7 +1048,19 @@ fn cmd_replay(a: &ogb_cache::util::args::Args) -> Result<()> {
                 "serve-scope faults (panic/stall) do not apply to replay — \
                  only `corrupt@trace:byte=K`"
             );
+            anyhow::ensure!(
+                plan.as_ref().map_or(true, |p| !p.has_wire_faults()),
+                "wire-level faults (drop@conn, delay@conn, partial_write@conn, \
+                 garbage@frame) do not apply to replay — use `ogb-cache serve \
+                 --listen`"
+            );
             plan.as_ref().and_then(|p| p.trace_corruption())
+        },
+        // First Ctrl-C truncates the pass at the next batch boundary and
+        // still writes reports; a second one kills (util::shutdown).
+        stop: {
+            shutdown::install();
+            Some(shutdown::flag())
         },
     };
     let mut rec = open_recorder(
@@ -915,6 +1164,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         "serve" => cmd_serve(&a),
+        "loadgen" => cmd_loadgen(&a),
         "replay" => cmd_replay(&a),
         "analyze" => cmd_analyze(&a),
         "validate" => cmd_validate(&a),

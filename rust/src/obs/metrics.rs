@@ -54,6 +54,15 @@ pub struct Metrics {
     /// forced misses after a shard exhausted its restart budget, or
     /// written off because a shard died with replies outstanding
     pub degraded_replies: AtomicU64,
+    /// TCP connections accepted by the network front door (DESIGN.md §13)
+    pub connections: AtomicU64,
+    /// connections evicted for missing a read/write deadline or
+    /// overflowing their bounded output buffer
+    pub conn_evictions: AtomicU64,
+    /// request frames answered with a `BUSY` shed reply under overload
+    pub shed_replies: AtomicU64,
+    /// malformed wire frames answered with a typed `ERR` reply + close
+    pub wire_errors: AtomicU64,
     latency: Mutex<LatencyHistogram>,
 }
 
@@ -114,6 +123,10 @@ impl Metrics {
             retries: self.retries.load(Ordering::Relaxed),
             checkpoint_bytes: self.checkpoint_bytes.load(Ordering::Relaxed),
             degraded_replies: self.degraded_replies.load(Ordering::Relaxed),
+            connections: self.connections.load(Ordering::Relaxed),
+            conn_evictions: self.conn_evictions.load(Ordering::Relaxed),
+            shed_replies: self.shed_replies.load(Ordering::Relaxed),
+            wire_errors: self.wire_errors.load(Ordering::Relaxed),
             latency: h,
         }
     }
@@ -133,6 +146,10 @@ pub struct MetricsSnapshot {
     pub retries: u64,
     pub checkpoint_bytes: u64,
     pub degraded_replies: u64,
+    pub connections: u64,
+    pub conn_evictions: u64,
+    pub shed_replies: u64,
+    pub wire_errors: u64,
     pub latency: LatencyHistogram,
 }
 
@@ -187,6 +204,10 @@ impl MetricsSnapshot {
             retries: self.retries.saturating_sub(earlier.retries),
             checkpoint_bytes: self.checkpoint_bytes.saturating_sub(earlier.checkpoint_bytes),
             degraded_replies: self.degraded_replies.saturating_sub(earlier.degraded_replies),
+            connections: self.connections.saturating_sub(earlier.connections),
+            conn_evictions: self.conn_evictions.saturating_sub(earlier.conn_evictions),
+            shed_replies: self.shed_replies.saturating_sub(earlier.shed_replies),
+            wire_errors: self.wire_errors.saturating_sub(earlier.wire_errors),
             latency: self.latency.diff(&earlier.latency),
         }
     }
@@ -206,6 +227,10 @@ impl MetricsSnapshot {
             out.retries += s.retries;
             out.checkpoint_bytes += s.checkpoint_bytes;
             out.degraded_replies += s.degraded_replies;
+            out.connections += s.connections;
+            out.conn_evictions += s.conn_evictions;
+            out.shed_replies += s.shed_replies;
+            out.wire_errors += s.wire_errors;
             out.latency.merge(&s.latency);
         }
         out
@@ -213,7 +238,7 @@ impl MetricsSnapshot {
 
     pub fn report(&self) -> String {
         format!(
-            "requests={} hit_ratio={:.4} evictions={} batches={} pops={} ring_hw={} reaps={} restarts={} retries={} ckpt_bytes={} degraded={} p50={}ns p99={}ns p999={}ns max={}ns",
+            "requests={} hit_ratio={:.4} evictions={} batches={} pops={} ring_hw={} reaps={} restarts={} retries={} ckpt_bytes={} degraded={} conns={} conn_evictions={} shed={} wire_errors={} p50={}ns p99={}ns p999={}ns max={}ns",
             self.requests,
             self.hit_ratio(),
             self.evictions,
@@ -225,6 +250,10 @@ impl MetricsSnapshot {
             self.retries,
             self.checkpoint_bytes,
             self.degraded_replies,
+            self.connections,
+            self.conn_evictions,
+            self.shed_replies,
+            self.wire_errors,
             self.p50_ns(),
             self.p99_ns(),
             self.p999_ns(),

@@ -46,6 +46,10 @@ pub struct WindowRecord {
     pub retries: u64,
     pub checkpoint_bytes: u64,
     pub degraded_replies: u64,
+    pub connections: u64,
+    pub conn_evictions: u64,
+    pub shed_replies: u64,
+    pub wire_errors: u64,
     pub p50_ns: u64,
     pub p99_ns: u64,
     pub p999_ns: u64,
@@ -69,6 +73,10 @@ impl WindowRecord {
             retries: s.retries,
             checkpoint_bytes: s.checkpoint_bytes,
             degraded_replies: s.degraded_replies,
+            connections: s.connections,
+            conn_evictions: s.conn_evictions,
+            shed_replies: s.shed_replies,
+            wire_errors: s.wire_errors,
             p50_ns: s.p50_ns(),
             p99_ns: s.p99_ns(),
             p999_ns: s.p999_ns(),
@@ -146,6 +154,8 @@ impl FlightRecorder {
              \"ring_depth_hw\":{},\"reap_on_full\":{},\
              \"shard_restarts\":{},\"retries\":{},\
              \"checkpoint_bytes\":{},\"degraded_replies\":{},\
+             \"connections\":{},\"conn_evictions\":{},\
+             \"shed_replies\":{},\"wire_errors\":{},\
              \"p50_ns\":{},\"p99_ns\":{},\"p999_ns\":{},\"max_ns\":{},",
             w.requests,
             w.hits,
@@ -159,6 +169,10 @@ impl FlightRecorder {
             w.retries,
             w.checkpoint_bytes,
             w.degraded_replies,
+            w.connections,
+            w.conn_evictions,
+            w.shed_replies,
+            w.wire_errors,
             w.p50_ns,
             w.p99_ns,
             w.p999_ns,
@@ -263,6 +277,10 @@ mod tests {
                 retries: 3,
                 checkpoint_bytes: 4096,
                 degraded_replies: 5,
+                connections: 6,
+                conn_evictions: 1,
+                shed_replies: 9,
+                wire_errors: 2,
                 p50_ns: 500,
                 p99_ns: 2_000,
                 p999_ns: 9_000,
@@ -303,6 +321,10 @@ mod tests {
             "\"retries\":3",
             "\"checkpoint_bytes\":4096",
             "\"degraded_replies\":5",
+            "\"connections\":6",
+            "\"conn_evictions\":1",
+            "\"shed_replies\":9",
+            "\"wire_errors\":2",
             "\"p999_ns\":9000",
         ] {
             assert!(lines[0].contains(key), "missing {key} in {}", lines[0]);

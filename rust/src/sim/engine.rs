@@ -17,7 +17,8 @@
 //! (`serve_batch ≡ serve` is the trait contract; the boundary splitting
 //! keeps the measurement instants identical too).
 
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::obs::{FlightRecorder, InstrumentSet, Metrics, WindowRecord};
@@ -37,6 +38,12 @@ pub struct RunConfig {
     /// serve-batch chunk size for the inner loop (1 = per-request
     /// serving; metrics are identical either way)
     pub batch: usize,
+    /// graceful-stop flag (DESIGN.md §13), checked at chunk boundaries:
+    /// when it flips the replay ends early with everything served so
+    /// far accounted, instead of being killed mid-batch.  The CLI wires
+    /// `util::shutdown::flag()` here so Ctrl-C drains; `None` (the
+    /// default) costs nothing.
+    pub stop: Option<Arc<AtomicBool>>,
 }
 
 impl Default for RunConfig {
@@ -46,6 +53,7 @@ impl Default for RunConfig {
             occupancy_every: 10_000,
             max_requests: 0,
             batch: 64,
+            stop: None,
         }
     }
 }
@@ -259,6 +267,12 @@ pub fn run_source_obs<P: Policy + ?Sized, S: RequestSource + ?Sized>(
     let start = Instant::now();
     let mut k = 0usize;
     loop {
+        // Graceful stop (DESIGN.md §13): between chunks only, so the
+        // rewards already produced stay consistent with the requests
+        // already pulled from the source.
+        if cfg.stop.as_ref().is_some_and(|s| s.load(Ordering::Relaxed)) {
+            break;
+        }
         // Chunk size: bounded so that every metric boundary lands exactly
         // on a chunk end — the occupancy sample after request k with
         // k % occupancy_every == 0, the window close, and max_requests.
@@ -431,6 +445,7 @@ mod tests {
                     occupancy_every: 333,
                     max_requests: 0,
                     batch: 1,
+                    ..RunConfig::default()
                 },
             )
         };
@@ -444,6 +459,7 @@ mod tests {
                     occupancy_every: 333,
                     max_requests: 0,
                     batch,
+                    ..RunConfig::default()
                 },
             );
             assert_eq!(reference.total_reward, r.total_reward, "batch={batch}");
@@ -486,6 +502,7 @@ mod tests {
             occupancy_every: 250,
             max_requests: 0,
             batch: 64,
+            ..RunConfig::default()
         };
         let mut p1 = crate::policies::Ogb::with_theory_eta(200, 20.0, 5_000, 8, 7);
         let mut s1 = crate::trace::stream::gen::ZipfSource::new(200, 5_000, 0.9, 7);

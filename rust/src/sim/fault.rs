@@ -9,6 +9,7 @@
 //!
 //! ```text
 //! faults:panic@shard1:t=1e6,stall@ring:t=2e6,ms=5,corrupt@trace:byte=4096
+//! faults:drop@conn:t=50,delay@conn:t=80,ms=100,garbage@frame:t=120
 //! ```
 //!
 //! Comma-separated segments; a segment containing `@` starts a new
@@ -16,9 +17,19 @@
 //! parameter of the previous entry (this resolves the ambiguity between
 //! the comma that separates faults and the comma that separates a
 //! fault's parameters).  Targets: `shard` (any shard), `shardK`
-//! (specific), `ring` (alias for any shard's ring-drain point), and
-//! `trace` (the ingest byte stream).  Numbers accept `1e6` scientific
-//! notation.
+//! (specific), `ring` (alias for any shard's ring-drain point),
+//! `trace` (the ingest byte stream), and — for the network front door
+//! (DESIGN.md §13) — `conn` (a TCP connection) and `frame` (one wire
+//! frame).  Numbers accept `1e6` scientific notation.
+//!
+//! Wire faults are clocked by the server's cumulative request-frame
+//! count (`t=N` fires at the N-th frame), which a single-connection
+//! load generator makes fully deterministic: `drop@conn` closes the
+//! carrying connection abruptly, `delay@conn:ms=M` stalls the server's
+//! event loop before processing the frame, `partial_write@conn` writes
+//! half a reply frame and closes, and `garbage@frame` corrupts a reply
+//! frame in flight.  All fire once, server-side, so a faulted network
+//! run reproduces without any packet-level tooling.
 //!
 //! Injection sites are checked only when a plan is present, keeping the
 //! fault-free hot path untouched (same contract as the flight recorder:
@@ -48,6 +59,24 @@ pub enum Fault {
     /// during ingest — exercises the typed-error hardening in
     /// `trace::ingest` and replay's graceful truncation.
     Corrupt { byte: u64 },
+    /// Abruptly close the connection carrying request frame `t` —
+    /// exercises the load generator's reconnect + retry path and the
+    /// server's orphaned-reply accounting (replies to a dead connection
+    /// are counted, then discarded).
+    ConnDrop { t: u64 },
+    /// Stall the server's event loop for `ms` milliseconds before
+    /// processing request frame `t` — exercises client-side reply
+    /// deadlines and backoff without losing any state.
+    ConnDelay { t: u64, ms: u64 },
+    /// Write only the first half of the reply to request frame `t`,
+    /// then close the connection — the truncated frame must surface as
+    /// a typed protocol error on the client, never a hang.
+    PartialWrite { t: u64 },
+    /// XOR-corrupt the reply to request frame `t` in flight — the
+    /// client must detect the garbage, drop the connection, and resync
+    /// by reconnecting (a corrupted length-prefixed stream cannot be
+    /// resynchronized in place).
+    GarbageFrame { t: u64 },
 }
 
 impl fmt::Display for Fault {
@@ -62,6 +91,10 @@ impl fmt::Display for Fault {
                 write!(f, "stall@{}:t={t},ms={ms}", shard(s))
             }
             Self::Corrupt { byte } => write!(f, "corrupt@trace:byte={byte}"),
+            Self::ConnDrop { t } => write!(f, "drop@conn:t={t}"),
+            Self::ConnDelay { t, ms } => write!(f, "delay@conn:t={t},ms={ms}"),
+            Self::PartialWrite { t } => write!(f, "partial_write@conn:t={t}"),
+            Self::GarbageFrame { t } => write!(f, "garbage@frame:t={t}"),
         }
     }
 }
@@ -87,22 +120,41 @@ fn parse_count(s: &str, what: &str) -> Result<u64> {
     Ok(f as u64)
 }
 
+/// A parsed fault target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Target {
+    /// the ingest byte stream
+    Trace,
+    /// a shard serve loop (`None` = any shard)
+    Shard(Option<usize>),
+    /// a TCP connection of the network front door
+    Conn,
+    /// one wire frame of the network front door
+    Frame,
+}
+
 /// Parse a target: `shard`, `shardK`, or `ring` → shard scope;
-/// `trace` → the ingest stream.
-fn parse_target(s: &str) -> Result<Option<Option<usize>>> {
+/// `trace` → the ingest stream; `conn`/`frame` → the wire.
+fn parse_target(s: &str) -> Result<Target> {
     if s == "trace" {
-        return Ok(None);
+        return Ok(Target::Trace);
+    }
+    if s == "conn" {
+        return Ok(Target::Conn);
+    }
+    if s == "frame" {
+        return Ok(Target::Frame);
     }
     if s == "ring" || s == "shard" {
-        return Ok(Some(None));
+        return Ok(Target::Shard(None));
     }
     if let Some(rest) = s.strip_prefix("shard") {
         let k: usize = rest
             .parse()
             .with_context(|| format!("fault spec: bad shard index in {s:?}"))?;
-        return Ok(Some(Some(k)));
+        return Ok(Target::Shard(Some(k)));
     }
-    bail!("fault spec: unknown target {s:?} (expected shard, shardK, ring, or trace)");
+    bail!("fault spec: unknown target {s:?} (expected shard, shardK, ring, trace, conn, or frame)");
 }
 
 impl FaultPlan {
@@ -152,16 +204,16 @@ impl FaultPlan {
                     bail!("fault spec: unknown parameter {k:?} in {:?}", entry[0]);
                 }
             }
-            let shard_target = parse_target(target)?;
-            let fault = match (kind, shard_target) {
-                ("panic", Some(shard)) => Fault::Panic {
+            let target = parse_target(target)?;
+            let fault = match (kind, target) {
+                ("panic", Target::Shard(shard)) => Fault::Panic {
                     shard,
                     t: parse_count(
                         get("t").ok_or_else(|| anyhow!("fault spec: panic needs t="))?,
                         "t",
                     )?,
                 },
-                ("stall", Some(shard)) => Fault::Stall {
+                ("stall", Target::Shard(shard)) => Fault::Stall {
                     shard,
                     t: parse_count(
                         get("t").ok_or_else(|| anyhow!("fault spec: stall needs t="))?,
@@ -169,16 +221,42 @@ impl FaultPlan {
                     )?,
                     ms: parse_count(get("ms").unwrap_or("1"), "ms")?,
                 },
-                ("corrupt", None) => Fault::Corrupt {
+                ("corrupt", Target::Trace) => Fault::Corrupt {
                     byte: parse_count(
                         get("byte").ok_or_else(|| anyhow!("fault spec: corrupt needs byte="))?,
                         "byte",
                     )?,
                 },
-                ("corrupt", Some(_)) => {
+                ("corrupt", _) => {
                     bail!("fault spec: corrupt targets the trace (corrupt@trace:byte=N)")
                 }
-                (other, None) => bail!("fault spec: {other:?} cannot target the trace"),
+                ("panic" | "stall", _) => {
+                    bail!("fault spec: {kind:?} targets a shard ({kind}@shard or {kind}@shardK)")
+                }
+                // wire faults (DESIGN.md §13): t defaults to the first frame
+                ("drop", Target::Conn) => Fault::ConnDrop {
+                    t: parse_count(get("t").unwrap_or("1"), "t")?,
+                },
+                ("delay", Target::Conn) => Fault::ConnDelay {
+                    t: parse_count(get("t").unwrap_or("1"), "t")?,
+                    ms: parse_count(
+                        get("ms").ok_or_else(|| anyhow!("fault spec: delay needs ms="))?,
+                        "ms",
+                    )?,
+                },
+                ("partial_write", Target::Conn) => Fault::PartialWrite {
+                    t: parse_count(get("t").unwrap_or("1"), "t")?,
+                },
+                ("garbage", Target::Frame) => Fault::GarbageFrame {
+                    t: parse_count(get("t").unwrap_or("1"), "t")?,
+                },
+                ("drop" | "delay" | "partial_write", _) => {
+                    bail!("fault spec: {kind:?} targets a connection ({kind}@conn)")
+                }
+                ("garbage", _) => {
+                    bail!("fault spec: garbage targets a frame (garbage@frame:t=N)")
+                }
+                (other, Target::Trace) => bail!("fault spec: {other:?} cannot target the trace"),
                 (other, _) => bail!("fault spec: unknown fault kind {other:?}"),
             };
             faults.push(fault);
@@ -226,6 +304,42 @@ impl FaultPlan {
         self.faults
             .iter()
             .any(|f| matches!(f, Fault::Panic { .. } | Fault::Stall { .. }))
+    }
+
+    /// True if any fault targets the wire (conn or frame) — only the
+    /// network front door (`serve --listen`) can honor those.
+    pub fn has_wire_faults(&self) -> bool {
+        self.faults.iter().any(|f| {
+            matches!(
+                f,
+                Fault::ConnDrop { .. }
+                    | Fault::ConnDelay { .. }
+                    | Fault::PartialWrite { .. }
+                    | Fault::GarbageFrame { .. }
+            )
+        })
+    }
+
+    /// The wire-scoped faults as a mutable firing schedule for the
+    /// network event loop (DESIGN.md §13).
+    pub fn wire_faults(&self) -> WireFaults {
+        let mut wf = WireFaults::default();
+        for f in &self.faults {
+            let (t, kind) = match *f {
+                Fault::ConnDrop { t } => (t, WireFaultKind::Drop),
+                Fault::ConnDelay { t, ms } => (t, WireFaultKind::Delay { ms }),
+                Fault::PartialWrite { t } => (t, WireFaultKind::PartialWrite),
+                Fault::GarbageFrame { t } => (t, WireFaultKind::Garbage),
+                _ => continue,
+            };
+            wf.entries.push(WireFault {
+                t,
+                kind,
+                fired: false,
+            });
+        }
+        wf.entries.sort_by_key(|e| e.t);
+        wf
     }
 }
 
@@ -288,6 +402,97 @@ impl ShardFaults {
                 }
             }
         }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum WireFaultKind {
+    Drop,
+    Delay { ms: u64 },
+    PartialWrite,
+    Garbage,
+}
+
+#[derive(Debug, Clone)]
+struct WireFault {
+    t: u64,
+    kind: WireFaultKind,
+    fired: bool,
+}
+
+/// Reply-path mutations due for one frame (see [`WireFaults::on_reply_frame`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ReplyFault {
+    /// XOR-corrupt the encoded reply frame before sending
+    pub garble: bool,
+    /// send only the first half of the reply, then close the connection
+    pub partial_then_close: bool,
+}
+
+/// The wire-scoped firing schedule, consumed by the network event loop
+/// (DESIGN.md §13).  Clocked by the server's cumulative request-frame
+/// count; each fault fires at most once (`fired` is latched on the
+/// first frame at-or-past its trigger, so retransmitted frames after a
+/// reconnect do not re-trigger it).
+#[derive(Debug, Clone, Default)]
+pub struct WireFaults {
+    entries: Vec<WireFault>,
+}
+
+impl WireFaults {
+    /// True if any wire fault is still pending.
+    pub fn pending(&self) -> bool {
+        self.entries.iter().any(|e| !e.fired)
+    }
+
+    /// Called when request frame number `frame` (1-based, cumulative
+    /// across connections) arrives, before it is admitted.  Sleeps
+    /// through any due delay; returns `true` when a due `drop@conn`
+    /// asks for the carrying connection to be closed abruptly (the
+    /// frame is then discarded un-accepted).
+    pub fn on_request_frame(&mut self, frame: u64) -> bool {
+        let mut drop_conn = false;
+        for e in &mut self.entries {
+            if e.fired || frame < e.t {
+                continue;
+            }
+            match e.kind {
+                WireFaultKind::Delay { ms } => {
+                    e.fired = true;
+                    std::thread::sleep(std::time::Duration::from_millis(ms));
+                }
+                WireFaultKind::Drop => {
+                    e.fired = true;
+                    drop_conn = true;
+                }
+                // reply-path faults are consumed by on_reply_frame
+                WireFaultKind::PartialWrite | WireFaultKind::Garbage => {}
+            }
+        }
+        drop_conn
+    }
+
+    /// Called before the reply to request frame `frame` is written:
+    /// returns which reply mutations are due.
+    pub fn on_reply_frame(&mut self, frame: u64) -> ReplyFault {
+        let mut due = ReplyFault::default();
+        for e in &mut self.entries {
+            if e.fired || frame < e.t {
+                continue;
+            }
+            match e.kind {
+                WireFaultKind::Garbage => {
+                    e.fired = true;
+                    due.garble = true;
+                }
+                WireFaultKind::PartialWrite => {
+                    e.fired = true;
+                    due.partial_then_close = true;
+                }
+                WireFaultKind::Drop | WireFaultKind::Delay { .. } => {}
+            }
+        }
+        due
     }
 }
 
@@ -389,8 +594,67 @@ mod tests {
             "panic@shard0:t=1.5",      // non-integer trigger
             "panic@shard0:t=5,zz=3",    // unknown param
             "stall@shard0:t=5,ms",      // not k=v
+            "drop@shard0:t=5",          // drop targets a connection
+            "delay@conn:t=5",           // delay needs ms=
+            "garbage@conn:t=5",         // garbage targets a frame
+            "partial_write@frame:t=5",  // partial_write targets a connection
+            "panic@conn:t=5",           // panic targets a shard
         ] {
             assert!(FaultPlan::parse(bad).is_err(), "accepted: {bad:?}");
         }
+    }
+
+    #[test]
+    fn parses_wire_faults_and_display_round_trips() {
+        let spec = "drop@conn:t=50,delay@conn:t=80,ms=100,partial_write@conn:t=90,garbage@frame:t=120";
+        let p = FaultPlan::parse(spec).unwrap();
+        assert_eq!(
+            p.faults,
+            vec![
+                Fault::ConnDrop { t: 50 },
+                Fault::ConnDelay { t: 80, ms: 100 },
+                Fault::PartialWrite { t: 90 },
+                Fault::GarbageFrame { t: 120 },
+            ]
+        );
+        assert!(p.has_wire_faults());
+        assert!(!p.has_shard_faults());
+        let q = FaultPlan::parse(&p.to_string()).unwrap();
+        assert_eq!(p, q);
+        // t defaults to the first frame
+        let d = FaultPlan::parse("drop@conn").unwrap();
+        assert_eq!(d.faults, vec![Fault::ConnDrop { t: 1 }]);
+    }
+
+    #[test]
+    fn wire_schedule_fires_each_fault_once() {
+        let p = FaultPlan::parse("drop@conn:t=3,garbage@frame:t=5,partial_write@conn:t=7").unwrap();
+        let mut wf = p.wire_faults();
+        assert!(wf.pending());
+        assert!(!wf.on_request_frame(2), "not due yet");
+        assert!(wf.on_request_frame(3), "drop fires at its frame");
+        assert!(!wf.on_request_frame(4), "drop fired once");
+        assert_eq!(wf.on_reply_frame(4), ReplyFault::default());
+        // a late reply (frame number past the trigger) still fires it
+        assert_eq!(
+            wf.on_reply_frame(6),
+            ReplyFault {
+                garble: true,
+                partial_then_close: false
+            }
+        );
+        assert_eq!(
+            wf.on_reply_frame(7),
+            ReplyFault {
+                garble: false,
+                partial_then_close: true
+            }
+        );
+        assert!(!wf.pending(), "all wire faults fired");
+        // shard and wire schedules are disjoint scopes of one plan
+        let mixed = FaultPlan::parse("panic@shard0:t=10,drop@conn:t=2").unwrap();
+        assert!(mixed.has_shard_faults() && mixed.has_wire_faults());
+        assert_eq!(mixed.for_shard(0).entries.len(), 1);
+        assert_eq!(mixed.wire_faults().entries.len(), 1);
     }
 }

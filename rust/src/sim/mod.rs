@@ -8,15 +8,18 @@
 //! the [`shardbench`] multi-core scaling suite behind
 //! `ogb-cache serve --smoke` / `BENCH_shard.json`, the raw-trace
 //! [`replay`] harness (open-catalog ingestion, DESIGN.md §10) behind
-//! `ogb-cache replay` / `BENCH_replay.json`, and the deterministic
+//! `ogb-cache replay` / `BENCH_replay.json`, the network
+//! [`serverbench`] load generator behind `ogb-cache loadgen` /
+//! `BENCH_server.json` (DESIGN.md §13), and the deterministic
 //! [`fault`] injection plan behind `--fault-spec` (chaos harness,
-//! DESIGN.md §12).
+//! DESIGN.md §12, wire faults included).
 
 pub mod engine;
 pub mod fault;
 pub mod hotpath;
 pub mod regret;
 pub mod replay;
+pub mod serverbench;
 pub mod shardbench;
 pub mod sweep;
 
@@ -25,6 +28,7 @@ pub use fault::{Fault, FaultPlan, ShardFaults};
 pub use hotpath::{run_hotpath, run_hotpath_obs, HotpathConfig, HotpathResult, HotpathRow};
 pub use regret::{regret_series, regret_series_weighted, RegretPoint, StreamingOpt};
 pub use replay::{run_replay, run_replay_obs, ReplayConfig, ReplayMode, ReplayResult, ReplayRow};
+pub use serverbench::{run_serverbench, ServerBenchConfig, ServerBenchResult};
 pub use shardbench::{
     run_shardbench, run_shardbench_obs, ServeMode, ShardBenchConfig, ShardBenchResult,
     ShardBenchRow,

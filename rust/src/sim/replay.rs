@@ -93,6 +93,11 @@ pub struct ReplayConfig {
     /// this offset before parsing — the corruption lands *below* the
     /// format parsers, which is the layer the hardening contract covers
     pub corrupt_byte: Option<u64>,
+    /// graceful-stop flag (DESIGN.md §13): when it flips mid-pass the
+    /// replay truncates at the next batch boundary, keeps the rows
+    /// finished so far plus the truncated one, and returns normally so
+    /// reports still get written — Ctrl-C drains instead of killing
+    pub stop: Option<std::sync::Arc<std::sync::atomic::AtomicBool>>,
 }
 
 impl Default for ReplayConfig {
@@ -110,6 +115,7 @@ impl Default for ReplayConfig {
             densify_out: String::new(),
             snapshot_out: String::new(),
             corrupt_byte: None,
+            stop: None,
         }
     }
 }
@@ -429,15 +435,25 @@ pub fn run_replay_obs(
                 occupancy_every: 0,
                 max_requests: cfg.max_requests,
                 batch: cfg.batch.max(RunConfig::default().batch),
+                stop: cfg.stop.clone(),
             },
             obs.as_deref_mut(),
         );
         check_stream(&src, truncate_ok)?;
-        ensure!(
-            r.requests == t_total,
-            "policy pass replayed {} of {t_total} requests",
-            r.requests
-        );
+        // A tripped stop flag (Ctrl-C, DESIGN.md §13) truncates the pass
+        // at a batch boundary: the partial row stands, remaining policies
+        // are skipped, and the report below is still written.
+        let stopped = cfg
+            .stop
+            .as_ref()
+            .is_some_and(|s| s.load(std::sync::atomic::Ordering::Relaxed));
+        if !stopped {
+            ensure!(
+                r.requests == t_total,
+                "policy pass replayed {} of {t_total} requests",
+                r.requests
+            );
+        }
         let d = policy.diag();
         let opt_reward = opt.opt_weighted_reward(c);
         rows.push(ReplayRow {
@@ -462,6 +478,14 @@ pub fn run_replay_obs(
             rows.last().unwrap().throughput_rps,
             d.grows
         );
+        if stopped {
+            crate::log_warn!(
+                "graceful stop: `{name}` truncated after {} of {t_total} requests; \
+                 skipping the remaining policies",
+                r.requests
+            );
+            break;
+        }
     }
 
     Ok(ReplayResult {

@@ -1,0 +1,650 @@
+//! Network load generator behind `ogb-cache loadgen` — the client half
+//! of the resilient front door (DESIGN.md §13, `coordinator::net`).
+//!
+//! Connects to a running `ogb-cache serve --listen` instance, pumps a
+//! seeded Zipf key stream through OGBW REQ frames, and records
+//! end-to-end (send-to-reply) latency percentiles through the same
+//! `obs` histogram the shard metrics use.  Results land in
+//! machine-readable `BENCH_server.json` next to the other BENCH_*
+//! families, stamped with run provenance.
+//!
+//! Retry discipline (all bounded by `max_retries` per frame):
+//!
+//! * **BUSY** replies back off exponentially with seeded jitter and
+//!   resend the *same* frame id;
+//! * **garbled or truncated replies, EOF, read timeouts** reconnect and
+//!   resend every outstanding frame, original ids, original order —
+//!   the server's replay cache answers already-served ids from cache,
+//!   so retried frames are hit-identical, never served twice;
+//! * a server that stays unreachable ends the run gracefully: the
+//!   remaining frames are counted `gave_up`, the report still emits
+//!   (CI asserts on the accounting, not on a panic).
+//!
+//! Determinism contract for the loopback differential: with
+//! `window == 1` and a fault-free server, frame `i` carries keys
+//! `[i*frame_size, (i+1)*frame_size)` of the seeded stream and is
+//! acknowledged before frame `i+1` is sent, so the server's per-shard
+//! batch sequence is bit-identical to an in-process [`ShardedClient`]
+//! run that calls `flush()` after every `frame_size` keys.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::coordinator::conn::{self, FrameReader};
+use crate::obs::{provenance_label, Metrics, Provenance};
+use crate::util::csv::json::Json;
+use crate::util::{Xoshiro256pp, Zipf};
+
+#[derive(Debug, Clone)]
+pub struct ServerBenchConfig {
+    /// server address (`host:port`) to connect to
+    pub addr: String,
+    /// total keys to send
+    pub requests: usize,
+    /// keys per REQ frame
+    pub frame_size: usize,
+    /// frames in flight before waiting for a reply.  `1` (the default)
+    /// is the deterministic differential shape; larger windows pipeline
+    pub window: usize,
+    /// key space of the generated stream (should match the server's
+    /// catalog for differential runs; larger keys wrap server-side)
+    pub catalog: u64,
+    pub zipf_s: f64,
+    pub seed: u64,
+    /// per-read reply wait bound; an expiry reconnects and resends
+    pub timeout_ms: u64,
+    /// per-frame retry budget (BUSY backoffs and resends combined)
+    pub max_retries: u32,
+    /// how long to keep retrying the initial/re-connect before giving
+    /// up on the server entirely
+    pub connect_timeout_ms: u64,
+    /// marks the tiny CI configuration in the report
+    pub smoke: bool,
+}
+
+impl Default for ServerBenchConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7878".into(),
+            requests: 100_000,
+            frame_size: 64,
+            window: 1,
+            catalog: 20_000,
+            zipf_s: 0.9,
+            seed: 42,
+            timeout_ms: 10_000,
+            max_retries: 8,
+            connect_timeout_ms: 5_000,
+            smoke: false,
+        }
+    }
+}
+
+/// One run's client-side accounting + latency record.
+#[derive(Debug, Clone)]
+pub struct ServerBenchResult {
+    /// frames acknowledged with a REPLY (degraded ones included)
+    pub frames: u64,
+    /// keys inside acknowledged frames
+    pub keys: u64,
+    /// hit bits observed in reply bitmaps
+    pub hits: u64,
+    /// degraded (written-off miss) keys reported by the server
+    pub degraded_keys: u64,
+    /// BUSY replies received (each one backed off and resent)
+    pub busy_retries: u64,
+    /// frames re-sent after a reconnect
+    pub resends: u64,
+    pub reconnects: u64,
+    /// frames abandoned after the retry budget (or server loss)
+    pub gave_up: u64,
+    /// send-to-reply latency percentiles, per-key weighted
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+    pub p999_ns: u64,
+    pub req_per_s: f64,
+    pub wall_s: f64,
+    // run shape, echoed for the report
+    pub requests: usize,
+    pub frame_size: usize,
+    pub window: usize,
+    pub zipf_s: f64,
+    pub seed: u64,
+    pub smoke: bool,
+    pub addr: String,
+}
+
+impl ServerBenchResult {
+    pub fn print(&self) {
+        println!(
+            "loadgen {}: frames={} keys={} hits={} degraded_keys={} \
+             busy_retries={} resends={} reconnects={} gave_up={}",
+            self.addr,
+            self.frames,
+            self.keys,
+            self.hits,
+            self.degraded_keys,
+            self.busy_retries,
+            self.resends,
+            self.reconnects,
+            self.gave_up,
+        );
+        println!(
+            "latency p50={}ns p99={}ns p999={}ns throughput={:.0} req/s wall={:.2}s",
+            self.p50_ns, self.p99_ns, self.p999_ns, self.req_per_s, self.wall_s
+        );
+        // the CI differential greps this exact line
+        println!("hits={}", self.hits);
+    }
+
+    /// Machine-readable snapshot (`BENCH_server.json`), provenance-
+    /// stamped like every BENCH_* family.
+    pub fn write_json<P: AsRef<Path>>(&self, path: P) -> Result<PathBuf> {
+        let prov = Provenance::collect("server", &format!("loadgen:{}", self.addr));
+        let j = Json::obj(vec![
+            ("experiment", Json::Str("server".into())),
+            ("git_sha", Json::Str(prov.git_sha)),
+            ("hostname", Json::Str(prov.hostname)),
+            ("cpus", Json::Num(prov.cpus as f64)),
+            ("provenance", Json::Str(provenance_label())),
+            ("requests", Json::Num(self.requests as f64)),
+            ("frame_size", Json::Num(self.frame_size as f64)),
+            ("window", Json::Num(self.window as f64)),
+            ("zipf_s", Json::Num(self.zipf_s)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("smoke", Json::Bool(self.smoke)),
+            ("frames", Json::Num(self.frames as f64)),
+            ("keys", Json::Num(self.keys as f64)),
+            ("hits", Json::Num(self.hits as f64)),
+            ("degraded_keys", Json::Num(self.degraded_keys as f64)),
+            ("busy_retries", Json::Num(self.busy_retries as f64)),
+            ("resends", Json::Num(self.resends as f64)),
+            ("reconnects", Json::Num(self.reconnects as f64)),
+            ("gave_up", Json::Num(self.gave_up as f64)),
+            ("p50_ns", Json::Num(self.p50_ns as f64)),
+            ("p99_ns", Json::Num(self.p99_ns as f64)),
+            ("p999_ns", Json::Num(self.p999_ns as f64)),
+            ("requests_per_sec", Json::Num(self.req_per_s)),
+            ("wall_s", Json::Num(self.wall_s)),
+        ]);
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("mkdir -p {}", dir.display()))?;
+            }
+        }
+        std::fs::write(&path, j.render() + "\n")
+            .with_context(|| format!("write {}", path.display()))?;
+        Ok(path)
+    }
+}
+
+/// One frame awaiting its reply.
+struct Pending {
+    id: u64,
+    /// key range `[lo, hi)` into the generated stream
+    lo: usize,
+    hi: usize,
+    sent_at: Instant,
+    attempts: u32,
+}
+
+/// The connection half: a blocking stream + frame reader, rebuilt on
+/// every reconnect.
+struct Wire {
+    stream: TcpStream,
+    reader: FrameReader,
+}
+
+impl Wire {
+    /// Connect with bounded retry (the server may still be binding) and
+    /// send our handshake.
+    fn connect(addr: &str, budget_ms: u64) -> Result<Self> {
+        let deadline = Instant::now() + Duration::from_millis(budget_ms.max(1));
+        let mut delay = Duration::from_millis(10);
+        loop {
+            match TcpStream::connect(addr) {
+                Ok(stream) => {
+                    stream.set_nodelay(true).ok();
+                    let mut hs = Vec::with_capacity(8);
+                    conn::encode_handshake(&mut hs);
+                    let mut w = Wire {
+                        stream,
+                        reader: FrameReader::new(),
+                    };
+                    w.stream.write_all(&hs)?;
+                    return Ok(w);
+                }
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(e).with_context(|| format!("connect {addr}"));
+                    }
+                    std::thread::sleep(delay);
+                    delay = (delay * 2).min(Duration::from_millis(200));
+                }
+            }
+        }
+    }
+
+    fn send_frame(&mut self, id: u64, keys: &[u64]) -> std::io::Result<()> {
+        let mut buf = Vec::with_capacity(conn::FRAME_HEADER + keys.len() * conn::REQ_RECORD);
+        conn::encode_req(&mut buf, id, keys);
+        self.stream.write_all(&buf)
+    }
+}
+
+/// What one read produced, normalized for the retry loop.
+enum ReadOutcome {
+    Frames(Vec<conn::OwnedFrame>),
+    /// EOF, IO error, protocol error, or read timeout: reconnect
+    Broken,
+}
+
+fn read_frames(wire: &mut Wire, timeout_ms: u64) -> ReadOutcome {
+    wire.stream
+        .set_read_timeout(Some(Duration::from_millis(timeout_ms.max(1))))
+        .ok();
+    let mut buf = [0u8; 16 * 1024];
+    match wire.stream.read(&mut buf) {
+        Ok(0) => ReadOutcome::Broken,
+        Ok(n) => {
+            wire.reader.feed(&buf[..n]);
+            let mut frames = Vec::new();
+            loop {
+                match wire.reader.next() {
+                    Ok(Some(f)) => frames.push(f),
+                    Ok(None) => break,
+                    // garbled reply (wire fault or corruption): typed
+                    // error client-side, recover by reconnect + resend
+                    Err(_) => return ReadOutcome::Broken,
+                }
+            }
+            ReadOutcome::Frames(frames)
+        }
+        Err(e)
+            if e.kind() == std::io::ErrorKind::WouldBlock
+                || e.kind() == std::io::ErrorKind::TimedOut =>
+        {
+            ReadOutcome::Broken
+        }
+        Err(_) => ReadOutcome::Broken,
+    }
+}
+
+/// Run the load generator against a live server.
+pub fn run_serverbench(cfg: &ServerBenchConfig) -> Result<ServerBenchResult> {
+    ensure!(cfg.requests > 0, "loadgen needs requests > 0");
+    ensure!(cfg.frame_size > 0, "loadgen needs frame_size > 0");
+    ensure!(
+        cfg.frame_size <= conn::MAX_KEYS_PER_FRAME,
+        "frame_size {} exceeds the wire maximum {}",
+        cfg.frame_size,
+        conn::MAX_KEYS_PER_FRAME
+    );
+    ensure!(cfg.window >= 1, "loadgen needs window >= 1");
+    ensure!(cfg.catalog >= 1, "loadgen needs catalog >= 1");
+
+    // The whole stream is generated up front so resends carry exactly
+    // the original keys (determinism under faults).
+    let zipf = Zipf::new(cfg.catalog, cfg.zipf_s);
+    let mut rng = Xoshiro256pp::seed_from(cfg.seed);
+    let keys: Vec<u64> = (0..cfg.requests).map(|_| zipf.sample(&mut rng)).collect();
+    let nframes = (cfg.requests + cfg.frame_size - 1) / cfg.frame_size; // div_ceil needs rust >= 1.73
+    let mut backoff_rng = Xoshiro256pp::seed_from(cfg.seed ^ 0xB0FF);
+
+    let metrics = Metrics::new();
+    let mut outstanding: VecDeque<Pending> = VecDeque::new();
+    let mut next_frame = 0usize;
+    let mut done: u64 = 0;
+    let mut result = ServerBenchResult {
+        frames: 0,
+        keys: 0,
+        hits: 0,
+        degraded_keys: 0,
+        busy_retries: 0,
+        resends: 0,
+        reconnects: 0,
+        gave_up: 0,
+        p50_ns: 0,
+        p99_ns: 0,
+        p999_ns: 0,
+        req_per_s: 0.0,
+        wall_s: 0.0,
+        requests: cfg.requests,
+        frame_size: cfg.frame_size,
+        window: cfg.window,
+        zipf_s: cfg.zipf_s,
+        seed: cfg.seed,
+        smoke: cfg.smoke,
+        addr: cfg.addr.clone(),
+    };
+
+    let wall0 = Instant::now();
+    let mut wire = Some(Wire::connect(&cfg.addr, cfg.connect_timeout_ms)?);
+    let mut server_lost = false;
+
+    while !server_lost && (done + result.gave_up) < nframes as u64 {
+        let w = wire.as_mut().expect("wire present while running");
+        // fill the pipeline window
+        while outstanding.len() < cfg.window && next_frame < nframes {
+            let lo = next_frame * cfg.frame_size;
+            let hi = (lo + cfg.frame_size).min(keys.len());
+            let id = next_frame as u64;
+            if w.send_frame(id, &keys[lo..hi]).is_err() {
+                break; // broken pipe: the read below notices and reconnects
+            }
+            outstanding.push_back(Pending {
+                id,
+                lo,
+                hi,
+                sent_at: Instant::now(),
+                attempts: 0,
+            });
+            next_frame += 1;
+        }
+
+        match read_frames(w, cfg.timeout_ms) {
+            ReadOutcome::Frames(frames) => {
+                let mut resend: Vec<u64> = Vec::new();
+                for f in frames {
+                    match f.op {
+                        conn::OP_REPLY => {
+                            let Some(pos) = outstanding.iter().position(|p| p.id == f.id) else {
+                                continue; // stale reply for an abandoned frame
+                            };
+                            let p = outstanding.remove(pos).expect("position valid");
+                            let reply = match conn::parse_reply(&f.body) {
+                                Ok(r) => r,
+                                Err(_) => {
+                                    // well-framed but nonsense body:
+                                    // treat like a garbled wire
+                                    outstanding.push_front(p);
+                                    break;
+                                }
+                            };
+                            let n = (p.hi - p.lo) as u64;
+                            if reply.count as u64 != n {
+                                outstanding.push_front(p);
+                                break;
+                            }
+                            let hits = reply.hit_count();
+                            metrics.record_batch(
+                                n,
+                                hits,
+                                0,
+                                p.sent_at.elapsed().as_nanos() as u64,
+                            );
+                            done += 1;
+                            result.frames += 1;
+                            result.keys += n;
+                            result.hits += hits;
+                            result.degraded_keys += reply.degraded as u64;
+                        }
+                        conn::OP_BUSY => {
+                            let Some(pos) = outstanding.iter().position(|p| p.id == f.id) else {
+                                continue;
+                            };
+                            result.busy_retries += 1;
+                            let p = &mut outstanding[pos];
+                            p.attempts += 1;
+                            if p.attempts > cfg.max_retries {
+                                outstanding.remove(pos);
+                                result.gave_up += 1;
+                                continue;
+                            }
+                            // exponential backoff with seeded jitter
+                            let exp = 1u64 << p.attempts.min(6);
+                            let jitter = backoff_rng.next_u64() % (exp + 1);
+                            std::thread::sleep(Duration::from_millis(exp + jitter));
+                            resend.push(f.id);
+                        }
+                        conn::OP_ERR => {
+                            // typed rejection: the server will close this
+                            // connection; give up on the named frame (if
+                            // any) and let the reconnect path resend the
+                            // rest
+                            if let Some(pos) = outstanding.iter().position(|p| p.id == f.id) {
+                                outstanding.remove(pos);
+                                result.gave_up += 1;
+                            }
+                        }
+                        _ => {} // unknown op from a future server: ignore
+                    }
+                }
+                for id in resend {
+                    if let Some(p) = outstanding.iter_mut().find(|p| p.id == id) {
+                        p.sent_at = Instant::now();
+                        let (lo, hi) = (p.lo, p.hi);
+                        let _ = w.send_frame(id, &keys[lo..hi]);
+                    }
+                }
+            }
+            ReadOutcome::Broken => {
+                // reconnect and resend every outstanding frame, original
+                // ids and order — the server's replay cache keeps retried
+                // frames hit-identical
+                result.reconnects += 1;
+                wire = None;
+                match Wire::connect(&cfg.addr, cfg.connect_timeout_ms) {
+                    Ok(mut w2) => {
+                        outstanding.retain_mut(|p| {
+                            p.attempts += 1;
+                            if p.attempts > cfg.max_retries {
+                                result.gave_up += 1;
+                                return false;
+                            }
+                            p.sent_at = Instant::now();
+                            if w2.send_frame(p.id, &keys[p.lo..p.hi]).is_ok() {
+                                result.resends += 1;
+                                true
+                            } else {
+                                result.gave_up += 1;
+                                false
+                            }
+                        });
+                        wire = Some(w2);
+                    }
+                    Err(_) => {
+                        // server gone for good: account the tail and end
+                        // the run gracefully (exit 0, CI checks counters)
+                        crate::log_warn!(
+                            "loadgen: server {} unreachable; giving up with {} outstanding \
+                             and {} unsent frames",
+                            cfg.addr,
+                            outstanding.len(),
+                            nframes - next_frame
+                        );
+                        result.gave_up +=
+                            outstanding.len() as u64 + (nframes - next_frame) as u64;
+                        outstanding.clear();
+                        server_lost = true;
+                    }
+                }
+            }
+        }
+    }
+
+    result.wall_s = wall0.elapsed().as_secs_f64();
+    let snap = metrics.snapshot();
+    result.p50_ns = snap.p50_ns();
+    result.p99_ns = snap.p99_ns();
+    result.p999_ns = snap.p999_ns();
+    result.req_per_s = result.keys as f64 / result.wall_s.max(1e-9);
+    Ok(result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::net::{spawn, NetConfig};
+    use crate::coordinator::{CacheServer, ServerConfig, ShardedClient};
+
+    fn small_server_cfg() -> ServerConfig {
+        ServerConfig {
+            catalog: 2_000,
+            capacity: 100,
+            shards: 2,
+            batch: 8,
+            horizon: 50_000,
+            queue_depth: 32,
+            seed: 9,
+            ..Default::default()
+        }
+    }
+
+    /// In-process baseline matching the loadgen's determinism contract:
+    /// same seeded stream, `flush()` after every `frame_size` keys.
+    fn baseline_hits(cfg: &ServerBenchConfig, scfg: ServerConfig) -> u64 {
+        let zipf = Zipf::new(cfg.catalog, cfg.zipf_s);
+        let mut rng = Xoshiro256pp::seed_from(cfg.seed);
+        let keys: Vec<u64> = (0..cfg.requests).map(|_| zipf.sample(&mut rng)).collect();
+        let mut server = CacheServer::start(scfg).unwrap();
+        let mut client: ShardedClient = server.take_client().unwrap();
+        for chunk in keys.chunks(cfg.frame_size) {
+            for &k in chunk {
+                client.get(k);
+            }
+            client.flush();
+        }
+        client.drain();
+        let hits = client.stats().hits;
+        drop(client);
+        server.shutdown();
+        hits
+    }
+
+    /// The loopback differential in miniature: a network run is
+    /// hit-identical to the in-process chunk-flushed baseline.
+    #[test]
+    fn loadgen_run_is_hit_identical_to_in_process() {
+        let handle = spawn(NetConfig {
+            server: small_server_cfg(),
+            ..Default::default()
+        })
+        .unwrap();
+        let cfg = ServerBenchConfig {
+            addr: handle.addr().to_string(),
+            requests: 4_000,
+            frame_size: 32,
+            window: 1,
+            catalog: 2_000,
+            zipf_s: 0.9,
+            seed: 77,
+            smoke: true,
+            ..Default::default()
+        };
+        let r = run_serverbench(&cfg).unwrap();
+        handle.stop();
+        let report = handle.join().unwrap();
+
+        assert_eq!(r.frames, 125, "4000 keys / 32 per frame");
+        assert_eq!(r.keys, 4_000);
+        assert_eq!(r.gave_up, 0);
+        assert_eq!(r.reconnects, 0);
+        assert_eq!(r.degraded_keys, 0);
+        assert!(r.p999_ns >= r.p50_ns);
+        assert_eq!(report.accepted, report.replies + report.degraded + report.shed);
+        assert_eq!(report.replies, 125);
+
+        let baseline = baseline_hits(&cfg, small_server_cfg());
+        assert_eq!(
+            r.hits, baseline,
+            "network serving must be hit-identical to the in-process run"
+        );
+        assert_eq!(report.snapshot.hits, r.hits, "server agrees with the wire");
+    }
+
+    #[test]
+    fn writes_bench_json_with_provenance_and_accounting() {
+        let r = ServerBenchResult {
+            frames: 10,
+            keys: 640,
+            hits: 321,
+            degraded_keys: 0,
+            busy_retries: 2,
+            resends: 1,
+            reconnects: 1,
+            gave_up: 0,
+            p50_ns: 1_000,
+            p99_ns: 5_000,
+            p999_ns: 9_000,
+            req_per_s: 1e5,
+            wall_s: 0.0064,
+            requests: 640,
+            frame_size: 64,
+            window: 1,
+            zipf_s: 0.9,
+            seed: 42,
+            smoke: true,
+            addr: "127.0.0.1:0".into(),
+        };
+        let dir = std::env::temp_dir().join("ogb_serverbench_test");
+        let p = r.write_json(dir.join("BENCH_server.json")).unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        for key in [
+            "\"experiment\":\"server\"",
+            "\"provenance\"",
+            "\"git_sha\"",
+            "\"frames\":10",
+            "\"hits\":321",
+            "\"busy_retries\":2",
+            "\"resends\":1",
+            "\"reconnects\":1",
+            "\"gave_up\":0",
+            "\"p999_ns\"",
+            "\"requests_per_sec\"",
+        ] {
+            assert!(text.contains(key), "missing {key} in {text}");
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn bad_configs_rejected() {
+        for cfg in [
+            ServerBenchConfig {
+                requests: 0,
+                ..Default::default()
+            },
+            ServerBenchConfig {
+                frame_size: conn::MAX_KEYS_PER_FRAME + 1,
+                ..Default::default()
+            },
+            ServerBenchConfig {
+                window: 0,
+                ..Default::default()
+            },
+        ] {
+            assert!(run_serverbench(&cfg).is_err());
+        }
+    }
+
+    /// A dead address ends gracefully: everything gave_up, no panic.
+    #[test]
+    fn unreachable_server_gives_up_gracefully() {
+        // bind-then-drop yields a port with nothing listening
+        let port = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().port()
+        };
+        let cfg = ServerBenchConfig {
+            addr: format!("127.0.0.1:{port}"),
+            requests: 100,
+            frame_size: 10,
+            connect_timeout_ms: 50,
+            timeout_ms: 50,
+            smoke: true,
+            ..Default::default()
+        };
+        assert!(
+            run_serverbench(&cfg).is_err(),
+            "initial connect failure is an error (no server was ever there)"
+        );
+    }
+}

@@ -383,6 +383,14 @@ pub fn run_shardbench_obs(
         .as_deref()
         .map(crate::sim::fault::FaultPlan::parse)
         .transpose()?;
+    if let Some(p) = &fault_plan {
+        ensure!(
+            !p.has_wire_faults(),
+            "wire-level faults (drop@conn, delay@conn, partial_write@conn, \
+             garbage@frame) need a wire: use `ogb-cache serve --listen`, \
+             not the in-process shard bench"
+        );
+    }
     let wall0 = Instant::now();
     let alloc_counter_active = alloc_count::active();
     let mut rows = Vec::new();
@@ -416,6 +424,7 @@ pub fn run_shardbench_obs(
                             checkpoint_every: cfg.checkpoint_every,
                             fault_plan: fault_plan.clone(),
                             flush_timeout_ms: 5_000,
+                            checkpoint_dir: None,
                         };
                         let mut server = CacheServer::start(scfg)
                             .with_context(|| format!("shard bench cell `{name}` x{shards}"))?;

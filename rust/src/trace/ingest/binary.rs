@@ -28,9 +28,15 @@ const MAGIC: &[u8; 4] = b"OGBR";
 const VERSION: u32 = 1;
 /// byte offset of the u64 record_count in the header
 const COUNT_OFFSET: u64 = 8;
+/// The shared 1 MiB length cap for every length-prefixed payload in the
+/// repo: OGBR byte keys, OGBM snapshot keys, delimited-text lines, and
+/// the wire frames of `coordinator::conn`.  One constant instead of one
+/// per parser, so a corrupt (or hostile) length prefix is bounded by
+/// the same number everywhere and can never ask for gigabytes.
+pub const MAX_FRAME: u32 = 1 << 20;
 /// sanity cap on byte-key length (a corrupt length prefix would
 /// otherwise ask for gigabytes)
-const MAX_KEY_BYTES: u32 = 1 << 20;
+const MAX_KEY_BYTES: u32 = MAX_FRAME;
 
 /// Streaming writer for the OGBR format.
 pub struct RawBinaryWriter {

@@ -39,7 +39,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-pub use binary::{RawBinarySource, RawBinaryWriter};
+pub use binary::{RawBinarySource, RawBinaryWriter, MAX_FRAME};
 pub use remap::{KeyRemapper, RemappedSource};
 pub use text::{DelimitedTextSource, TextFormat};
 

@@ -35,10 +35,11 @@ use crate::util::FxHashMap;
 
 const SNAP_MAGIC: &[u8; 4] = b"OGBM";
 const SNAP_VERSION: u32 = 1;
-/// sanity cap on snapshot byte-key length (mirrors the OGBR record cap):
-/// a corrupt length prefix would otherwise ask for a multi-gigabyte
-/// allocation before the parse error surfaces
-const MAX_SNAP_KEY_BYTES: usize = 1 << 20;
+/// sanity cap on snapshot byte-key length (the OGBR record cap): a
+/// corrupt length prefix would otherwise ask for a multi-gigabyte
+/// allocation before the parse error surfaces.  Shares the repo-wide
+/// [`MAX_FRAME`](super::binary::MAX_FRAME) bound.
+const MAX_SNAP_KEY_BYTES: usize = super::binary::MAX_FRAME as usize;
 
 /// Owned copy of a raw key (the id → key direction of the mapping).
 #[derive(Debug, Clone, PartialEq, Eq)]

@@ -24,8 +24,9 @@ use super::{RawRecord, RawSource};
 
 /// Sanity cap on a single line: a delimiter-less multi-gigabyte file
 /// (binary data fed to the text parser) must produce a typed error, not
-/// an unbounded line-buffer allocation.
-const MAX_LINE_BYTES: u64 = 1 << 20;
+/// an unbounded line-buffer allocation.  Shares the repo-wide
+/// [`MAX_FRAME`](super::binary::MAX_FRAME) bound.
+const MAX_LINE_BYTES: u64 = super::binary::MAX_FRAME as u64;
 
 /// Column map + delimiter for [`DelimitedTextSource`].
 #[derive(Debug, Clone)]

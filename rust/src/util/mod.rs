@@ -13,6 +13,7 @@ pub mod fxhash;
 pub mod logger;
 pub mod ordf64;
 pub mod rng;
+pub mod shutdown;
 pub mod stats;
 
 pub use flattree::FlatTree;

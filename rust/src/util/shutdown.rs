@@ -1,0 +1,100 @@
+//! Graceful-shutdown flag (DESIGN.md §13): one process-wide
+//! `AtomicBool` that SIGINT/SIGTERM flip, checked by the long-running
+//! harnesses at batch boundaries.  A first Ctrl-C turns into a drain —
+//! stop pulling work, flush in-flight batches, write checkpoints and
+//! reports — instead of killing the run mid-batch; a second Ctrl-C
+//! falls through to the default disposition and kills the process (the
+//! handler restores the default after the first delivery), so a wedged
+//! drain can still be escaped.
+//!
+//! The flag is exposed as an `Arc<AtomicBool>` rather than a hidden
+//! global read: run loops take an optional stop flag in their configs
+//! (`RunConfig::stop`, `NetConfig::stop`), the CLI passes
+//! [`flag()`] after calling [`install()`], and tests pass their own
+//! private `Arc` — no test can trip another test's run by touching
+//! process state.
+//!
+//! The handler itself is dependency-free: `libc` is always linked on
+//! unix, so a direct `extern "C"` declaration of `signal(2)` is enough
+//! — no signal crate, matching the repo's offline-build constraint
+//! (DESIGN.md §3).  Non-unix builds get the flag without the handler.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, OnceLock};
+
+static FLAG: OnceLock<Arc<AtomicBool>> = OnceLock::new();
+
+/// The process-wide stop flag (created on first use).  Clone it into
+/// any run config's `stop` slot.
+pub fn flag() -> Arc<AtomicBool> {
+    FLAG.get_or_init(|| Arc::new(AtomicBool::new(false))).clone()
+}
+
+/// Has a shutdown been requested (signal delivered or [`request`]ed)?
+pub fn requested() -> bool {
+    FLAG.get().is_some_and(|f| f.load(Ordering::Relaxed))
+}
+
+/// Programmatic trigger — same effect as the first Ctrl-C.
+pub fn request() {
+    flag().store(true, Ordering::Relaxed);
+}
+
+const SIGINT: i32 = 2;
+const SIGTERM: i32 = 15;
+#[cfg(unix)]
+const SIG_DFL: usize = 0;
+
+#[cfg(unix)]
+extern "C" fn on_signal(sig: i32) {
+    // async-signal-safe: one atomic store, then restore the default
+    // disposition so a second signal terminates a wedged drain
+    if let Some(f) = FLAG.get() {
+        f.store(true, Ordering::Relaxed);
+    }
+    unsafe { signal(sig, SIG_DFL) };
+}
+
+#[cfg(unix)]
+extern "C" {
+    // from libc, which std always links on unix; glibc and musl both
+    // give `signal` BSD semantics (handler persists, syscalls restart)
+    fn signal(signum: i32, handler: usize) -> usize;
+}
+
+/// Install the SIGINT/SIGTERM → flag handlers.  Idempotent; call once
+/// from the CLI before starting a drainable run.  On non-unix targets
+/// this only materializes the flag (no handler, Ctrl-C keeps the
+/// default kill behavior).
+pub fn install() {
+    let _ = flag(); // the handler reads FLAG; make sure it exists
+    #[cfg(unix)]
+    unsafe {
+        signal(SIGINT, on_signal as extern "C" fn(i32) as usize);
+        signal(SIGTERM, on_signal as extern "C" fn(i32) as usize);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: no test sets the process-wide flag — tests in this binary
+    // run concurrently and the run loops consult private Arc flags
+    // precisely so the global one never needs to be tripped in-process.
+
+    #[test]
+    fn flag_is_shared_and_starts_clear() {
+        let a = flag();
+        let b = flag();
+        assert!(Arc::ptr_eq(&a, &b), "one process-wide flag");
+        // `requested()` reflects the same cell (other tests never set it)
+        assert_eq!(a.load(Ordering::Relaxed), requested());
+    }
+
+    #[test]
+    fn install_is_idempotent() {
+        install();
+        install();
+    }
+}

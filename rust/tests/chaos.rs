@@ -40,6 +40,7 @@ fn run(fault: Option<&str>, checkpoint_every: usize) -> (u64, u64, MetricsSnapsh
         checkpoint_every,
         fault_plan: fault.map(|s| FaultPlan::parse(s).expect("valid fault spec")),
         flush_timeout_ms: 60_000,
+        checkpoint_dir: None,
     };
     let mut server = CacheServer::start(cfg).unwrap();
     let mut client = server.take_client().unwrap();

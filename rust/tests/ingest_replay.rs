@@ -364,6 +364,7 @@ fn run_source_growth_is_chunk_size_invariant() {
         occupancy_every: 333,
         max_requests: 0,
         batch,
+        ..RunConfig::default()
     };
     let run_with = |batch: usize| {
         // built small (n0=16): the catalog is discovered online and the
@@ -397,6 +398,7 @@ fn fixed_catalog_sources_unaffected_by_growth_path() {
         occupancy_every: 500,
         max_requests: 0,
         batch: 16,
+        ..RunConfig::default()
     };
     let mut a = policies::build("ogb", 300, 30, &BuildOpts::new(t.len(), 1, 7), None).unwrap();
     let ra = run_source(&mut a, &mut TraceSource::new(&t), &cfg);

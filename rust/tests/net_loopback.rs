@@ -1,0 +1,300 @@
+//! Loopback differential for the network front door (DESIGN.md §13).
+//!
+//! The determinism contract under test: with `window == 1`, a network
+//! run through `coordinator::net` + the `sim::serverbench` load
+//! generator is **hit-identical** to an in-process [`ShardedClient`]
+//! run that flushes after every `frame_size` keys — and stays so under
+//! every wire-level fault (client retries + the server's replay cache
+//! make reply loss invisible to the hit ledger) and across a graceful
+//! mid-run drain.  Alongside, the overload-control accounting identity
+//! `accepted == replies + degraded + shed` must hold on every exit
+//! path; `net::run` enforces it internally and these tests re-check the
+//! reported numbers end to end.
+
+use std::io::{Read, Write};
+
+use ogb_cache::coordinator::net::spawn;
+use ogb_cache::coordinator::{conn, CacheServer, NetConfig, NetReport, ServerConfig, ShardedClient};
+use ogb_cache::sim::{run_serverbench, FaultPlan, ServerBenchConfig};
+use ogb_cache::util::{Xoshiro256pp, Zipf};
+
+/// The frame-disposition ledger: every accepted frame got exactly one
+/// of REPLY / degraded-REPLY / BUSY.
+fn assert_ledger(r: &NetReport) {
+    assert_eq!(
+        r.accepted,
+        r.replies + r.degraded + r.shed,
+        "accounting identity broken: {r:?}"
+    );
+}
+
+/// Regenerate the loadgen's seeded key stream (same generator, same
+/// seed — the contract both sides are built on).
+fn keystream(catalog: u64, zipf_s: f64, seed: u64, n: usize) -> Vec<u64> {
+    let zipf = Zipf::new(catalog, zipf_s);
+    let mut rng = Xoshiro256pp::seed_from(seed);
+    (0..n).map(|_| zipf.sample(&mut rng)).collect()
+}
+
+/// In-process baseline: the same keys through the same `ServerConfig`,
+/// flushed every `frame_size` keys — exactly the batch sequence a
+/// lockstep network run produces.
+fn baseline_hits(scfg: ServerConfig, keys: &[u64], frame_size: usize) -> u64 {
+    let mut server = CacheServer::start(scfg).unwrap();
+    let mut client: ShardedClient = server.take_client().unwrap();
+    for chunk in keys.chunks(frame_size) {
+        for &k in chunk {
+            client.get(k);
+        }
+        client.flush();
+    }
+    client.drain();
+    let hits = client.stats().hits;
+    drop(client);
+    server.shutdown();
+    hits
+}
+
+fn small_server(fault_spec: Option<&str>) -> ServerConfig {
+    ServerConfig {
+        catalog: 1_000,
+        capacity: 64,
+        shards: 2,
+        batch: 8,
+        horizon: 20_000,
+        queue_depth: 32,
+        seed: 5,
+        fault_plan: fault_spec.map(|s| FaultPlan::parse(s).unwrap()),
+        ..Default::default()
+    }
+}
+
+/// Clean full run: network serving is hit-identical to in-process,
+/// nothing shed, nothing degraded, ledger exact on both sides.
+#[test]
+fn loopback_differential_matches_in_process() {
+    let scfg = ServerConfig {
+        catalog: 3_000,
+        capacity: 150,
+        shards: 3,
+        batch: 8,
+        horizon: 20_000,
+        queue_depth: 64,
+        seed: 11,
+        ..Default::default()
+    };
+    let handle = spawn(NetConfig {
+        server: scfg.clone(),
+        ..Default::default()
+    })
+    .unwrap();
+    let cfg = ServerBenchConfig {
+        addr: handle.addr().to_string(),
+        requests: 4_800,
+        frame_size: 16,
+        window: 1,
+        catalog: 3_000,
+        zipf_s: 0.9,
+        seed: 23,
+        ..Default::default()
+    };
+    let r = run_serverbench(&cfg).unwrap();
+    handle.stop();
+    let report = handle.join().unwrap();
+
+    assert_eq!(r.frames, 300, "4800 keys / 16 per frame");
+    assert_eq!((r.keys, r.gave_up, r.degraded_keys), (4_800, 0, 0));
+    assert_ledger(&report);
+    assert_eq!(report.replies, 300);
+    assert_eq!((report.shed, report.degraded, report.wire_errors), (0, 0, 0));
+    assert_eq!(report.keys, 4_800);
+
+    let keys = keystream(cfg.catalog, cfg.zipf_s, cfg.seed, cfg.requests);
+    let baseline = baseline_hits(scfg, &keys, cfg.frame_size);
+    assert_eq!(r.hits, baseline, "network run diverged from in-process");
+    assert_eq!(report.snapshot.hits, r.hits, "server ledger agrees with the wire");
+}
+
+/// Every wire-fault kind, one by one: the client's retry discipline
+/// plus the server's replay cache keep the run hit-identical to the
+/// fault-free in-process baseline, with nothing abandoned.
+#[test]
+fn differential_holds_under_every_wire_fault() {
+    for (spec, expect_reconnect) in [
+        ("drop@conn:t=5", true),            // conn killed pre-admission
+        ("delay@conn:t=5,ms=50", false),    // server-side stall only
+        ("garbage@frame:t=5", true),        // reply garbled -> typed err
+        ("partial_write@conn:t=5", true),   // reply truncated + close
+    ] {
+        let handle = spawn(NetConfig {
+            server: small_server(Some(spec)),
+            ..Default::default()
+        })
+        .unwrap();
+        let cfg = ServerBenchConfig {
+            addr: handle.addr().to_string(),
+            requests: 1_280,
+            frame_size: 16,
+            window: 1,
+            catalog: 1_000,
+            zipf_s: 0.9,
+            seed: 31,
+            timeout_ms: 250, // a truncated reply pends until this expires
+            ..Default::default()
+        };
+        let r = run_serverbench(&cfg).unwrap();
+        handle.stop();
+        let report = handle.join().unwrap();
+
+        assert_eq!(r.gave_up, 0, "{spec}: frames abandoned");
+        assert_eq!(r.keys, 1_280, "{spec}: keys unanswered");
+        if expect_reconnect {
+            assert!(r.reconnects >= 1, "{spec}: fault never disturbed the wire");
+        }
+        assert_ledger(&report);
+        assert!(report.accepted >= 80, "{spec}: 80 frames sent, {report:?}");
+
+        let keys = keystream(cfg.catalog, cfg.zipf_s, cfg.seed, cfg.requests);
+        let baseline = baseline_hits(small_server(None), &keys, cfg.frame_size);
+        assert_eq!(r.hits, baseline, "{spec}: hit ledger diverged");
+        assert_eq!(
+            report.snapshot.hits, r.hits,
+            "{spec}: server served keys the client never accounted (double-serve?)"
+        );
+    }
+}
+
+/// Graceful drain mid-run, deterministically: `max_requests` caps the
+/// served keys at a frame boundary, in-flight frames still get their
+/// replies, and the answered prefix is hit-identical to an in-process
+/// run over exactly that prefix.  The unanswered tail is accounted
+/// `gave_up` client-side, never half-served.
+#[test]
+fn graceful_drain_mid_run_keeps_the_differential() {
+    let handle = spawn(NetConfig {
+        server: small_server(None),
+        max_requests: 1_600, // 100 frames of 16, then drain
+        ..Default::default()
+    })
+    .unwrap();
+    let cfg = ServerBenchConfig {
+        addr: handle.addr().to_string(),
+        requests: 3_200, // the second half lands after the drain
+        frame_size: 16,
+        window: 1,
+        catalog: 1_000,
+        zipf_s: 0.9,
+        seed: 47,
+        timeout_ms: 250,
+        connect_timeout_ms: 300, // post-drain reconnect fails fast
+        ..Default::default()
+    };
+    let r = run_serverbench(&cfg).unwrap();
+    let report = handle.join().unwrap();
+
+    assert_eq!(r.frames, 100, "drain lands exactly at the key cap");
+    assert_eq!(r.keys, 1_600);
+    assert_eq!(r.gave_up, 100, "the tail is abandoned, not half-served");
+    assert_ledger(&report);
+    assert_eq!(report.keys, 1_600);
+
+    let keys = keystream(cfg.catalog, cfg.zipf_s, cfg.seed, cfg.requests);
+    let baseline = baseline_hits(small_server(None), &keys[..1_600], cfg.frame_size);
+    assert_eq!(r.hits, baseline, "drained prefix diverged from in-process");
+    assert_eq!(report.snapshot.hits, r.hits);
+}
+
+/// A peer stalled mid-frame past the read deadline is evicted; the
+/// server stays up and keeps serving healthy clients afterwards.
+#[test]
+fn slow_mid_frame_client_is_evicted_and_server_survives() {
+    let handle = spawn(NetConfig {
+        server: small_server(None),
+        read_timeout_ms: 100,
+        ..Default::default()
+    })
+    .unwrap();
+
+    // handshake + 4 bytes of a frame header, then stall past the deadline
+    let mut slow = std::net::TcpStream::connect(handle.addr()).unwrap();
+    let mut bytes = Vec::new();
+    conn::encode_handshake(&mut bytes);
+    bytes.extend_from_slice(&25u32.to_le_bytes()); // length only, no body
+    slow.write_all(&bytes).unwrap();
+    slow.set_read_timeout(Some(std::time::Duration::from_secs(5))).unwrap();
+    let mut sink = [0u8; 64];
+    loop {
+        // the server's handshake arrives first; eviction then closes us
+        match slow.read(&mut sink) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+    }
+
+    // a healthy client is still served normally
+    let cfg = ServerBenchConfig {
+        addr: handle.addr().to_string(),
+        requests: 320,
+        frame_size: 16,
+        window: 1,
+        catalog: 1_000,
+        zipf_s: 0.9,
+        seed: 3,
+        ..Default::default()
+    };
+    let r = run_serverbench(&cfg).unwrap();
+    handle.stop();
+    let report = handle.join().unwrap();
+
+    assert_eq!((r.frames, r.gave_up), (20, 0));
+    assert!(report.conn_evictions >= 1, "stalled peer was not evicted");
+    assert!(report.connections >= 2);
+    assert_ledger(&report);
+    assert_eq!(report.snapshot.hits, r.hits);
+}
+
+/// Overload control: with a stalled shard and a pipelined window, ring
+/// pressure surfaces as typed BUSY replies (never a stall, never a
+/// protocol error), the client's backoff absorbs them, and every key is
+/// eventually answered with the ledger exact.
+#[test]
+fn overload_is_shed_as_busy_and_recovers() {
+    let scfg = ServerConfig {
+        catalog: 500,
+        capacity: 50,
+        shards: 1,
+        batch: 8,
+        horizon: 20_000,
+        queue_depth: 2, // two in-flight batches fill the lane
+        seed: 13,
+        fault_plan: Some(FaultPlan::parse("stall@ring:t=1,ms=500").unwrap()),
+        ..Default::default()
+    };
+    let handle = spawn(NetConfig {
+        server: scfg,
+        ..Default::default()
+    })
+    .unwrap();
+    let cfg = ServerBenchConfig {
+        addr: handle.addr().to_string(),
+        requests: 640,
+        frame_size: 16, // 2 batches per frame: one frame fills the ring
+        window: 8,      // pipelining pushes frames into the stalled lane
+        catalog: 500,
+        zipf_s: 0.9,
+        seed: 61,
+        timeout_ms: 2_000, // outlive the stall
+        max_retries: 20,
+        ..Default::default()
+    };
+    let r = run_serverbench(&cfg).unwrap();
+    handle.stop();
+    let report = handle.join().unwrap();
+
+    assert!(report.shed >= 1, "stalled ring never shed: {report:?}");
+    assert!(r.busy_retries >= 1, "client never saw a BUSY");
+    assert_eq!(r.gave_up, 0, "backoff must absorb the stall, not give up");
+    assert_eq!(r.keys, 640, "every key answered despite shedding");
+    assert_eq!(report.wire_errors, 0, "overload must be BUSY, not ERR");
+    assert_ledger(&report);
+}

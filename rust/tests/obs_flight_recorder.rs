@@ -45,6 +45,7 @@ fn recorder_attached_run_is_trajectory_identical() {
         occupancy_every: 5_000,
         max_requests: 0,
         batch: 64,
+        ..RunConfig::default()
     };
 
     let mut p_plain = build_ogb(n, c, t, seed);
@@ -86,6 +87,7 @@ fn obs_out_jsonl_schema_and_provenance() {
         occupancy_every: 0,
         max_requests: 0,
         batch: 64,
+        ..RunConfig::default()
     };
     let r = run_source_obs(&mut p, &mut src, &cfg, Some(&mut rec));
     assert_eq!(r.requests, t);

@@ -101,6 +101,7 @@ fn run_source_equals_run_on_materialized_trace() {
             occupancy_every: g.usize_in(0, 3) * 97,
             max_requests: 0,
             batch: g.usize_in(1, 129),
+            ..RunConfig::default()
         };
         let mut src = gen::FlashCrowdSource::new(n, t, 0.9, 0.002, 0.01, 10, 0.8, seed);
         let trace = materialize(&mut src, 0);

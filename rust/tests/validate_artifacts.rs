@@ -54,6 +54,51 @@ fn committed_bench_snapshots_keep_provenance_and_mode_rows() {
     }
 }
 
+/// Committed network-serving snapshot guard: `BENCH_server.json` must
+/// keep its provenance label and the client-side accounting fields the
+/// `net-smoke` CI job asserts on (frames / keys / hits / retry
+/// counters), and the ledger must stay sane (hits bounded by keys).
+#[test]
+fn committed_server_snapshot_keeps_provenance_and_accounting() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let path = root.join("BENCH_server.json");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("committed snapshot BENCH_server.json missing: {e}"));
+    assert!(
+        text.contains("\"provenance\":\"projected\"")
+            || text.contains("\"provenance\":\"measured"),
+        "BENCH_server.json: lost its provenance label"
+    );
+    for key in [
+        "\"experiment\":\"server\"",
+        "\"frames\":",
+        "\"keys\":",
+        "\"hits\":",
+        "\"degraded_keys\":",
+        "\"busy_retries\":",
+        "\"resends\":",
+        "\"reconnects\":",
+        "\"gave_up\":",
+        "\"p50_ns\":",
+        "\"p999_ns\":",
+        "\"requests_per_sec\":",
+    ] {
+        assert!(text.contains(key), "BENCH_server.json: missing {key}");
+    }
+    let num = |key: &str| -> f64 {
+        let pat = format!("\"{key}\":");
+        let at = text.find(&pat).unwrap_or_else(|| panic!("no {key}"));
+        text[at + pat.len()..]
+            .chars()
+            .take_while(|ch| ch.is_ascii_digit() || *ch == '.')
+            .collect::<String>()
+            .parse()
+            .unwrap_or_else(|_| panic!("non-numeric {key}"))
+    };
+    assert!(num("hits") <= num("keys"), "hits exceed answered keys");
+    assert!(num("keys") <= num("requests"), "answered keys exceed the drive");
+}
+
 /// Flight-recorder output guard, driven by the CI obs-smoke job: point
 /// `OGB_OBS_JSONL` at a `--obs-out` file (skips with a notice when
 /// unset, so plain `cargo test` needs no fixture) and every line must be
@@ -114,6 +159,10 @@ fn obs_jsonl_schema_holds() {
                 "\"retries\":",
                 "\"checkpoint_bytes\":",
                 "\"degraded_replies\":",
+                "\"connections\":",
+                "\"conn_evictions\":",
+                "\"shed_replies\":",
+                "\"wire_errors\":",
                 "\"p50_ns\":",
                 "\"p99_ns\":",
                 "\"p999_ns\":",

@@ -1,0 +1,179 @@
+//! Wire hardening corpus (DESIGN.md §13): malformed OGBW byte streams
+//! must surface *typed* [`ProtocolError`]s — never a panic, never a
+//! hang, never an allocation driven by an attacker-controlled length
+//! prefix.  Mirrors `ingest_corrupt.rs`: the crown test is a full
+//! byte-flip sweep over a clean wire capture, where every corrupted
+//! variant must either still parse (the flip hit a value byte) or error
+//! cleanly (it hit framing).  Socket-level behavior (ERR + close, the
+//! server staying up) lives in `net_loopback.rs`; this file pins the
+//! codec layer both sides are built on.
+
+use ogb_cache::coordinator::conn::{
+    encode_busy, encode_err, encode_handshake, encode_reply, encode_req, parse_reply, parse_req,
+    FrameReader, ProtocolError, OP_REPLY, OP_REQ, MAX_FRAME,
+};
+use ogb_cache::util::Xoshiro256pp;
+
+/// A clean wire capture exercising every frame kind and both body
+/// parsers: handshake, REQ frames (empty + loaded), REPLY (with a
+/// degraded key), BUSY, ERR.
+fn clean_capture() -> Vec<u8> {
+    let mut wire = Vec::new();
+    encode_handshake(&mut wire);
+    encode_req(&mut wire, 1, &[7, u64::MAX, 0, 0x9E37_79B9_7F4A_7C15]);
+    encode_reply(&mut wire, 1, &[true, false, true, false], 1);
+    encode_req(&mut wire, 2, &[]);
+    encode_busy(&mut wire, 2);
+    encode_err(&mut wire, 3, "synthetic");
+    wire
+}
+
+/// Drive raw bytes through the incremental reader *and* both body
+/// parsers, exactly as the server/client read paths do.  Returns the
+/// number of fully parsed frames, or the first typed error rendered to
+/// a string.  Must never panic or hang regardless of input.
+fn drain(bytes: &[u8]) -> Result<usize, String> {
+    let mut r = FrameReader::new();
+    let mut keys = Vec::new();
+    let mut n = 0usize;
+    // chunked feeding exercises the resume-from-partial paths too
+    for chunk in bytes.chunks(13) {
+        r.feed(chunk);
+        loop {
+            match r.next() {
+                Ok(Some(f)) => {
+                    match f.op {
+                        OP_REQ => parse_req(&f.body, &mut keys).map_err(|e| e.to_string())?,
+                        OP_REPLY => {
+                            let rep = parse_reply(&f.body).map_err(|e| e.to_string())?;
+                            // walking the bitmap must stay in bounds for
+                            // any body the parser accepted
+                            let _ = rep.hit_count();
+                        }
+                        _ => {}
+                    }
+                    n += 1;
+                }
+                Ok(None) => break,
+                Err(e) => return Err(e.to_string()),
+            }
+        }
+    }
+    Ok(n)
+}
+
+/// Corpus sweep: flip every byte of the capture (one at a time) and
+/// replay each variant through the reader + body parsers.  The only
+/// acceptable outcomes are a clean parse or a typed error — a panic
+/// aborts the test, a runaway length would hang/OOM it.
+#[test]
+fn wire_byte_flip_sweep_never_panics() {
+    let clean = clean_capture();
+    let total = drain(&clean).expect("clean capture must parse");
+    assert_eq!(total, 5);
+    let (mut parsed_ok, mut errored) = (0usize, 0usize);
+    for at in 0..clean.len() {
+        let mut bytes = clean.clone();
+        bytes[at] ^= 0xFF;
+        match drain(&bytes) {
+            Ok(_) => parsed_ok += 1,
+            Err(e) => {
+                errored += 1;
+                assert!(!e.is_empty(), "flip at {at}: empty error message");
+            }
+        }
+    }
+    // both outcome classes must occur: value flips (ids, keys, bitmap
+    // bits) parse, framing flips (magic, lens, ops, tags) error — an
+    // all-error sweep would mean the clean path is broken, an all-Ok
+    // sweep would mean corruption goes undetected
+    assert!(parsed_ok > 0, "no corrupted variant parsed (value bytes exist)");
+    assert!(errored > 0, "no corrupted variant errored (framing bytes exist)");
+}
+
+/// Every strict prefix of a clean stream is "need more bytes", never an
+/// error: truncation mid-handshake, mid-length, mid-header and mid-body
+/// all park the reader at `Ok(None)` — the TCP read loop treats a short
+/// read as pending, and only an actual close escalates it.
+#[test]
+fn truncation_is_pending_not_an_error() {
+    let clean = clean_capture();
+    let total = drain(&clean).unwrap();
+    for cut in 0..clean.len() {
+        match drain(&clean[..cut]) {
+            Ok(n) => assert!(n < total, "prefix of {cut} bytes cannot parse everything"),
+            Err(e) => panic!("prefix of {cut} bytes must pend, got error: {e}"),
+        }
+    }
+}
+
+/// A hostile length prefix is rejected the moment its 4 bytes arrive —
+/// before any body is buffered, so the reader's memory stays bounded by
+/// what was actually fed, not by what the attacker *claimed*.
+#[test]
+fn hostile_length_is_rejected_before_buffering() {
+    for hostile in [MAX_FRAME + 1, u32::MAX, u32::MAX - 7] {
+        let mut wire = Vec::new();
+        encode_handshake(&mut wire);
+        wire.extend_from_slice(&hostile.to_le_bytes());
+        let mut r = FrameReader::new();
+        r.feed(&wire);
+        assert_eq!(r.next(), Err(ProtocolError::Oversize(hostile)));
+        assert!(
+            r.buffered() <= wire.len(),
+            "a claimed {hostile}-byte frame grew the buffer"
+        );
+    }
+}
+
+/// Hostile REPLY bodies reaching the client parser (count far past the
+/// body, degraded exceeding count, truncated bitmap) are typed errors —
+/// the loadgen treats them as a broken connection, never as data.
+#[test]
+fn hostile_reply_bodies_are_typed() {
+    let frame = |count: u32, degraded: u32, bitmap: &[u8]| {
+        let mut body = Vec::new();
+        body.extend_from_slice(&count.to_le_bytes());
+        body.extend_from_slice(&degraded.to_le_bytes());
+        body.extend_from_slice(bitmap);
+        body
+    };
+    // count u32::MAX with an 8-byte body: the bitmap bound must be
+    // computed in u64 (a u32 overflow here would read out of bounds)
+    assert!(matches!(
+        parse_reply(&frame(u32::MAX, 0, &[])),
+        Err(ProtocolError::BadReplyLen { .. })
+    ));
+    // one key claimed hit-and-degraded twice over
+    assert!(parse_reply(&frame(1, 2, &[1])).is_err());
+    // bitmap one byte short of what count requires
+    assert!(parse_reply(&frame(9, 0, &[0xFF])).is_err());
+    // exact-fit bitmap still parses and stays in bounds
+    let ok = parse_reply(&frame(9, 0, &[0xFF, 0x01])).unwrap();
+    assert_eq!(ok.hit_count(), 9);
+}
+
+/// Seeded random garbage — raw, and grafted after a valid handshake so
+/// the frame parser (not just the magic check) takes the hits.  Every
+/// stream must terminate in a clean parse or a typed error.
+#[test]
+fn random_garbage_streams_never_panic() {
+    let mut rng = Xoshiro256pp::seed_from(0x5749_5245); // "WIRE"
+    let mut typed_errors = 0usize;
+    for round in 0..200 {
+        let len = 64 + (rng.next_below(2048) as usize);
+        let mut bytes: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        if round % 2 == 0 {
+            // valid handshake prefix: the garbage lands on frame framing
+            let mut wire = Vec::new();
+            encode_handshake(&mut wire);
+            wire.extend_from_slice(&bytes);
+            bytes = wire;
+        }
+        if let Err(e) = drain(&bytes) {
+            typed_errors += 1;
+            assert!(!e.is_empty(), "round {round}: empty error");
+        }
+    }
+    assert!(typed_errors > 0, "garbage overwhelmingly produces typed errors");
+}
