@@ -2,12 +2,19 @@
 //! front door (DESIGN.md §13), shared by `coordinator::net` (server) and
 //! `sim::serverbench` (load generator).
 //!
-//! A connection stream is one 8-byte handshake followed by frames:
+//! A connection stream is one 16-byte handshake followed by frames:
 //!
 //! ```text
-//! handshake: magic "OGBW" | version u32            (each side sends one)
-//! frame:     len u32 | op u8 | id u64 | body       len = 9 + body bytes
+//! handshake: magic "OGBW" | version u32 | nonce u64  (each side sends one)
+//! frame:     len u32 | op u8 | id u64 | body         len = 9 + body bytes
 //! ```
+//!
+//! The client's `nonce` is a session identity that survives reconnects:
+//! the server keys its replay (idempotency) cache by `(nonce, frame id)`,
+//! so concurrent clients that number their frames identically never
+//! collide on each other's cached replies.  A client picks one random
+//! nonce per *run* ([`session_nonce`]) and re-sends it on every
+//! reconnect.  The server's own handshake carries nonce 0.
 //!
 //! All integers little-endian, matching the OGBR/OGBM ingest formats.
 //! `len` covers everything after itself (op + id + body) and is bounded
@@ -30,6 +37,11 @@
 //! * `ERR`   (0x8F, server→client): body is a UTF-8 message; sent on a
 //!   protocol violation, after which the server closes the connection
 //!   (a corrupted length-prefixed stream cannot be resynchronized).
+//!   Frame-scoped rejections echo the offending frame's id; connection-
+//!   scoped failures (unparseable stream, capacity refusal) carry the
+//!   reserved sentinel [`CONN_ERR_ID`] — which is therefore not a legal
+//!   REQ correlation id, so a client can always tell "your frame was
+//!   rejected" from "this connection is done".
 //!
 //! Malformed input surfaces as a typed [`ProtocolError`] — never a
 //! panic, hang, or unbounded allocation (`rust/tests/wire_corrupt.rs`
@@ -39,9 +51,17 @@ use std::fmt;
 
 pub use crate::trace::ingest::MAX_FRAME;
 
-/// Wire handshake magic, version 1.
+/// Wire handshake magic, version 2 (v2 added the session nonce; v1's
+/// 8-byte handshake is rejected with a typed `BadVersion`).
 pub const WIRE_MAGIC: [u8; 4] = *b"OGBW";
-pub const WIRE_VERSION: u32 = 1;
+pub const WIRE_VERSION: u32 = 2;
+/// Handshake bytes: magic + version u32 + session nonce u64.
+pub const HANDSHAKE_LEN: usize = 16;
+
+/// Reserved correlation id for *connection-scoped* `ERR` frames (stream
+/// unparseable, server at capacity): no REQ may use it, so a client can
+/// always distinguish "frame `id` was rejected" from "connection dead".
+pub const CONN_ERR_ID: u64 = u64::MAX;
 
 /// Frame header bytes after the length prefix: op u8 + id u64.
 pub const FRAME_HEADER: usize = 9;
@@ -73,6 +93,8 @@ pub enum ProtocolError {
     BadReqLen(usize),
     /// REQ record tag other than 0 (unit get)
     BadTag(u8),
+    /// REQ used the reserved connection-ERR correlation id
+    ReservedId,
     /// REPLY body shorter than its own count field requires
     BadReplyLen { count: u32, body: usize },
     /// peer closed mid-handshake or mid-frame (client-side read path)
@@ -91,6 +113,9 @@ impl fmt::Display for ProtocolError {
                 write!(f, "REQ body of {n} bytes is not a multiple of {REQ_RECORD}")
             }
             Self::BadTag(t) => write!(f, "unknown REQ record tag {t}"),
+            Self::ReservedId => {
+                write!(f, "correlation id {CONN_ERR_ID:#x} is reserved for connection errors")
+            }
             Self::BadReplyLen { count, body } => {
                 write!(f, "REPLY claims {count} results but body has {body} bytes")
             }
@@ -122,6 +147,7 @@ pub struct FrameReader {
     buf: Vec<u8>,
     pos: usize,
     handshaken: bool,
+    nonce: u64,
 }
 
 impl FrameReader {
@@ -129,9 +155,14 @@ impl FrameReader {
         Self::default()
     }
 
-    /// True once the peer's 8-byte handshake has been consumed.
+    /// True once the peer's 16-byte handshake has been consumed.
     pub fn handshaken(&self) -> bool {
         self.handshaken
+    }
+
+    /// The peer's session nonce (0 until [`Self::handshaken`]).
+    pub fn nonce(&self) -> u64 {
+        self.nonce
     }
 
     /// Bytes buffered and not yet parsed.
@@ -160,18 +191,25 @@ impl FrameReader {
     /// "need more bytes"; `Err` means the stream is unrecoverable.
     pub fn next(&mut self) -> Result<Option<OwnedFrame>, ProtocolError> {
         if !self.handshaken {
+            // magic + version are validated the moment their 8 bytes
+            // arrive, so a nonce-less v1 peer gets its typed rejection
+            // instead of pending on bytes it will never send
             let Some(h) = self.peek(8) else {
                 return Ok(None);
             };
-            let magic: [u8; 4] = h[..4].try_into().expect("peeked 8");
+            let magic: [u8; 4] = h[..4].try_into().expect("peeked handshake");
             if magic != WIRE_MAGIC {
                 return Err(ProtocolError::BadMagic(magic));
             }
-            let version = u32::from_le_bytes(h[4..8].try_into().expect("peeked 8"));
+            let version = u32::from_le_bytes(h[4..8].try_into().expect("peeked handshake"));
             if version != WIRE_VERSION {
                 return Err(ProtocolError::BadVersion(version));
             }
-            self.pos += 8;
+            let Some(h) = self.peek(HANDSHAKE_LEN) else {
+                return Ok(None);
+            };
+            self.nonce = u64::from_le_bytes(h[8..16].try_into().expect("peeked handshake"));
+            self.pos += HANDSHAKE_LEN;
             self.handshaken = true;
         }
         let Some(l4) = self.peek(4) else {
@@ -198,10 +236,24 @@ impl FrameReader {
     }
 }
 
-/// Append the 8-byte handshake.
-pub fn encode_handshake(out: &mut Vec<u8>) {
+/// Append the 16-byte handshake.  Clients pass their per-run
+/// [`session_nonce`]; the server passes 0.
+pub fn encode_handshake(out: &mut Vec<u8>, nonce: u64) {
     out.extend_from_slice(&WIRE_MAGIC);
     out.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    out.extend_from_slice(&nonce.to_le_bytes());
+}
+
+/// A random session nonce — one per client *run*, reused across
+/// reconnects so the server's replay cache recognizes resent frames.
+/// Dependency-free entropy: std's per-process randomized hasher state.
+pub fn session_nonce() -> u64 {
+    use std::hash::{BuildHasher, Hasher};
+    let n = std::collections::hash_map::RandomState::new()
+        .build_hasher()
+        .finish();
+    // never collide with the server's 0 or the reserved CONN_ERR_ID
+    n.clamp(1, CONN_ERR_ID - 1)
 }
 
 fn encode_header(out: &mut Vec<u8>, op: u8, id: u64, body_len: usize) {
@@ -320,7 +372,7 @@ mod tests {
     #[test]
     fn round_trip_req_reply_busy_err() {
         let mut wire = Vec::new();
-        encode_handshake(&mut wire);
+        encode_handshake(&mut wire, 0xABCD);
         encode_req(&mut wire, 7, &[1, u64::MAX, 0, 42]);
         encode_reply(&mut wire, 7, &[true, false, false, true], 1);
         encode_busy(&mut wire, 8);
@@ -330,6 +382,7 @@ mod tests {
         r.feed(&wire);
         let f = r.next().unwrap().unwrap();
         assert!(r.handshaken());
+        assert_eq!(r.nonce(), 0xABCD, "handshake nonce surfaces to the server");
         assert_eq!((f.op, f.id), (OP_REQ, 7));
         let mut keys = vec![99]; // parse_req must clear
         parse_req(&f.body, &mut keys).unwrap();
@@ -354,7 +407,7 @@ mod tests {
     #[test]
     fn byte_at_a_time_feeding_reassembles() {
         let mut wire = Vec::new();
-        encode_handshake(&mut wire);
+        encode_handshake(&mut wire, 7);
         encode_req(&mut wire, 3, &[5, 6, 7]);
         encode_req(&mut wire, 4, &[]);
         let mut r = FrameReader::new();
@@ -374,22 +427,31 @@ mod tests {
     #[test]
     fn handshake_violations_are_typed() {
         let mut r = FrameReader::new();
-        r.feed(b"NOPE\x01\x00\x00\x00");
+        r.feed(b"NOPE\x01\x00\x00\x00\x00\x00\x00\x00\x00\x00\x00\x00");
         assert_eq!(r.next(), Err(ProtocolError::BadMagic(*b"NOPE")));
+        // the nonce-less v1 handshake is a typed version error
         let mut r = FrameReader::new();
-        r.feed(b"OGBW\x02\x00\x00\x00");
-        assert_eq!(r.next(), Err(ProtocolError::BadVersion(2)));
-        // incomplete handshake is not an error
+        r.feed(b"OGBW\x01\x00\x00\x00\x00\x00\x00\x00\x00\x00\x00\x00");
+        assert_eq!(r.next(), Err(ProtocolError::BadVersion(1)));
+        // incomplete handshake is not an error (even past the v1 length)
         let mut r = FrameReader::new();
-        r.feed(b"OGBW");
+        r.feed(b"OGBW\x02\x00\x00\x00\x01\x02");
         assert_eq!(r.next(), Ok(None));
+    }
+
+    #[test]
+    fn session_nonce_avoids_reserved_values() {
+        for _ in 0..64 {
+            let n = session_nonce();
+            assert!(n != 0 && n != CONN_ERR_ID);
+        }
     }
 
     #[test]
     fn length_cap_rejected_before_buffering() {
         let mut r = FrameReader::new();
         let mut wire = Vec::new();
-        encode_handshake(&mut wire);
+        encode_handshake(&mut wire, 1);
         wire.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
         r.feed(&wire);
         assert_eq!(r.next(), Err(ProtocolError::Oversize(MAX_FRAME + 1)));
@@ -398,7 +460,7 @@ mod tests {
 
         let mut r = FrameReader::new();
         let mut wire = Vec::new();
-        encode_handshake(&mut wire);
+        encode_handshake(&mut wire, 1);
         wire.extend_from_slice(&3u32.to_le_bytes());
         r.feed(&wire);
         assert_eq!(r.next(), Err(ProtocolError::Undersize(3)));
@@ -440,7 +502,7 @@ mod tests {
     #[test]
     fn unknown_op_is_typed() {
         let mut wire = Vec::new();
-        encode_handshake(&mut wire);
+        encode_handshake(&mut wire, 1);
         wire.extend_from_slice(&(FRAME_HEADER as u32).to_le_bytes());
         wire.push(0x55);
         wire.extend_from_slice(&0u64.to_le_bytes());

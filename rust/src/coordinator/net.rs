@@ -35,10 +35,16 @@
 //!   REQ-frame counter.
 //!
 //! Hit-identity under retries: a bounded replay cache maps recently
-//! replied frame ids to their cached bitmaps, so a client that resends
-//! a frame whose reply was garbled or truncated gets the *same* answer
-//! without the keys being served twice — the loopback differential test
-//! holds bit-identical hit totals even under reply-path faults.
+//! replied `(session nonce, frame id)` pairs to their cached bitmaps,
+//! so a client that resends a frame whose reply was garbled or
+//! truncated gets the *same* answer without the keys being served
+//! twice — the loopback differential test holds bit-identical hit
+//! totals even under reply-path faults.  The nonce comes from the
+//! client's handshake and survives its reconnects, so concurrent
+//! clients that both number their frames 0,1,2,... can never be
+//! answered from each other's cache entries.  The cache is sized to
+//! `max_conns`; a resend that outlives even that window is counted in
+//! `replay_stale_misses` so a double-serve is observable, never silent.
 
 use std::collections::VecDeque;
 use std::io::{Read, Write};
@@ -63,8 +69,14 @@ const READ_CHUNK: usize = 16 * 1024;
 /// Hard bound on unsent bytes buffered per connection; beyond it the
 /// peer is evicted as unrecoverably slow.
 const OUT_BACKLOG: usize = 4 * conn::MAX_FRAME as usize;
-/// Replay (idempotency) cache entries kept.
-const REPLAY_CAP: usize = 1024;
+/// Replay (idempotency) cache entries kept per connection slot: the
+/// total cap is `max_conns * REPLAY_PER_CONN` (floored at
+/// [`REPLAY_CAP_FLOOR`]) so a full house of pipelining clients cannot
+/// evict each other's entries before their retries arrive.
+const REPLAY_PER_CONN: usize = 64;
+const REPLAY_CAP_FLOOR: usize = 1024;
+/// Per-session served-watermark entries kept for stale-miss detection.
+const WATERMARK_CAP_FLOOR: usize = 256;
 /// Floor on the graceful-drain grace window.
 const MIN_DRAIN_GRACE_MS: u64 = 5_000;
 
@@ -125,6 +137,10 @@ pub struct NetReport {
     pub wire_errors: u64,
     pub connections: u64,
     pub conn_evictions: u64,
+    /// admitted frames at/below their session's served watermark that
+    /// missed the replay cache — each one is a resend the cache had
+    /// already evicted, i.e. a possible double-serve (0 in healthy runs)
+    pub replay_stale_misses: u64,
     /// merged shard metrics with the net counters folded in
     pub snapshot: MetricsSnapshot,
 }
@@ -201,6 +217,8 @@ struct Conn {
 struct FrameState {
     conn: usize,
     gen: u64,
+    /// session nonce of the issuing client (replay-cache scope)
+    nonce: u64,
     id: u64,
     /// cumulative REQ-frame number, the wire-fault clock
     wire_no: u64,
@@ -226,36 +244,67 @@ struct Slot {
     k: usize,
 }
 
-/// Bounded idempotency cache: frame id -> cached reply.  Makes client
-/// retries of already-served frames (reply garbled / truncated on the
-/// wire) hit-identical instead of re-serving the keys.
+/// Bounded idempotency cache: `(session nonce, frame id)` -> cached
+/// reply.  Makes client retries of already-served frames (reply garbled
+/// / truncated on the wire) hit-identical instead of re-serving the
+/// keys.  The nonce scoping is what lets concurrent clients number
+/// their frames identically (loadgen always starts at 0) without being
+/// answered from each other's entries.
 struct Replay {
-    map: FxHashMap<u64, (Vec<bool>, u32)>,
-    order: VecDeque<u64>,
+    map: FxHashMap<(u64, u64), (Vec<bool>, u32)>,
+    order: VecDeque<(u64, u64)>,
     cap: usize,
+    /// highest frame id replied per session nonce, kept so a resend
+    /// whose cache entry was already evicted is *observable* (it is
+    /// about to be served a second time) instead of silent
+    watermark: FxHashMap<u64, u64>,
+    wm_order: VecDeque<u64>,
+    wm_cap: usize,
 }
 
 impl Replay {
-    fn new(cap: usize) -> Self {
+    fn new(cap: usize, wm_cap: usize) -> Self {
         Self {
             map: FxHashMap::default(),
             order: VecDeque::new(),
             cap,
+            watermark: FxHashMap::default(),
+            wm_order: VecDeque::new(),
+            wm_cap,
         }
     }
 
-    fn get(&self, id: u64) -> Option<&(Vec<bool>, u32)> {
-        self.map.get(&id)
+    fn get(&self, nonce: u64, id: u64) -> Option<&(Vec<bool>, u32)> {
+        self.map.get(&(nonce, id))
     }
 
-    fn insert(&mut self, id: u64, hits: Vec<bool>, degraded: u32) {
-        if self.map.insert(id, (hits, degraded)).is_none() {
-            self.order.push_back(id);
+    /// True when an admit that missed the cache sits at/below the
+    /// session's served watermark — a resend whose entry was evicted,
+    /// i.e. a potential double-serve.  (Heuristic: under pipelined
+    /// windows a shed-then-resent frame below the watermark was never
+    /// served and still trips this; the counter is a conservative
+    /// over-signal, never an under-signal.)
+    fn is_stale_miss(&self, nonce: u64, id: u64) -> bool {
+        self.watermark.get(&nonce).map_or(false, |&w| id <= w)
+    }
+
+    fn insert(&mut self, nonce: u64, id: u64, hits: Vec<bool>, degraded: u32) {
+        if self.map.insert((nonce, id), (hits, degraded)).is_none() {
+            self.order.push_back((nonce, id));
         }
         while self.order.len() > self.cap {
             let old = self.order.pop_front().expect("non-empty order");
             self.map.remove(&old);
         }
+        if !self.watermark.contains_key(&nonce) {
+            self.wm_order.push_back(nonce);
+            while self.wm_order.len() > self.wm_cap {
+                let old = self.wm_order.pop_front().expect("non-empty order");
+                self.watermark.remove(&old);
+            }
+        }
+        let w = self.watermark.entry(nonce).or_insert(0);
+        *w = (*w).max(id);
     }
 }
 
@@ -290,6 +339,7 @@ struct Net {
     wire_errors: u64,
     connections: u64,
     conn_evictions: u64,
+    replay_stale_misses: u64,
 }
 
 /// Resolve one (frame, key) slot; queues the frame for reply encode
@@ -324,7 +374,10 @@ impl Net {
             active_frames: 0,
             mirror: (0..shards).map(|_| ShardMirror::default()).collect(),
             completed: Vec::new(),
-            replay: Replay::new(REPLAY_CAP),
+            replay: Replay::new(
+                (cfg.max_conns * REPLAY_PER_CONN).max(REPLAY_CAP_FLOOR),
+                (cfg.max_conns * 4).max(WATERMARK_CAP_FLOOR),
+            ),
             shard_counts: vec![0; shards],
             faults,
             req_frames: 0,
@@ -341,6 +394,7 @@ impl Net {
             wire_errors: 0,
             connections: 0,
             conn_evictions: 0,
+            replay_stale_misses: 0,
         }
     }
 
@@ -366,8 +420,12 @@ impl Net {
                             // and close; the peer sees a typed reason
                             // instead of a silent reset
                             let mut out = Vec::with_capacity(64);
-                            conn::encode_handshake(&mut out);
-                            conn::encode_err(&mut out, 0, "server at connection capacity");
+                            conn::encode_handshake(&mut out, 0);
+                            conn::encode_err(
+                                &mut out,
+                                conn::CONN_ERR_ID,
+                                "server at connection capacity",
+                            );
                             let mut s = stream;
                             let _ = s.write_all(&out);
                             self.wire_errors += 1;
@@ -377,7 +435,7 @@ impl Net {
                     self.next_gen += 1;
                     self.connections += 1;
                     let mut out = Vec::with_capacity(256);
-                    conn::encode_handshake(&mut out);
+                    conn::encode_handshake(&mut out, 0);
                     let now = Instant::now();
                     self.slots[slot] = Some(Conn {
                         stream,
@@ -442,7 +500,10 @@ impl Net {
                     Ok(Some(frame)) => self.handle_frame(i, frame, client),
                     Ok(None) => break,
                     Err(e) => {
-                        self.protocol_error(i, 0, &e.to_string());
+                        // stream-level violation: no frame is to blame,
+                        // so the ERR carries the reserved sentinel (id 0
+                        // is a legal correlation id a client may own)
+                        self.protocol_error(i, conn::CONN_ERR_ID, &e.to_string());
                         break;
                     }
                 }
@@ -457,6 +518,20 @@ impl Net {
             self.protocol_error(i, frame.id, &format!("unexpected client op 0x{:02x}", frame.op));
             return;
         }
+        if frame.id == conn::CONN_ERR_ID {
+            self.protocol_error(
+                i,
+                conn::CONN_ERR_ID,
+                &conn::ProtocolError::ReservedId.to_string(),
+            );
+            return;
+        }
+        // the client's session nonce, consumed with its handshake —
+        // frames only parse after it, so a live slot always has one
+        let nonce = match self.slots[i].as_ref() {
+            Some(c) => c.reader.nonce(),
+            None => return,
+        };
         let mut keys = Vec::new();
         if let Err(e) = conn::parse_req(&frame.body, &mut keys) {
             self.protocol_error(i, frame.id, &e.to_string());
@@ -477,7 +552,7 @@ impl Net {
             self.slots[i] = None;
             return;
         }
-        if let Some((hits, degraded)) = self.replay.get(frame.id).cloned() {
+        if let Some((hits, degraded)) = self.replay.get(nonce, frame.id).cloned() {
             // retry of an already-served frame (its reply was lost on
             // the wire): answer from the cache, do not serve twice
             self.accepted += 1;
@@ -493,7 +568,7 @@ impl Net {
             // an empty REQ is a legal no-op ping
             self.accepted += 1;
             self.replies += 1;
-            self.replay.insert(frame.id, Vec::new(), 0);
+            self.replay.insert(nonce, frame.id, Vec::new(), 0);
             self.send_reply(i, frame.id, &[], 0, wire_no);
             return;
         }
@@ -558,6 +633,18 @@ impl Net {
         }
 
         // Admit: scatter keys into shard batches, mirroring each flush.
+        if self.replay.is_stale_miss(nonce, frame.id) {
+            // a resend whose cached reply was already evicted: the keys
+            // are about to be served a second time — count it so a
+            // hit-identity violation is observable, never silent
+            self.replay_stale_misses += 1;
+            crate::log_span!(
+                Level::Warn,
+                "replay_cache_stale_miss",
+                "conn" => i,
+                "frame_id" => frame.id,
+            );
+        }
         let fidx = self.free_frames.pop().unwrap_or_else(|| {
             self.frames.push(None);
             self.frames.len() - 1
@@ -574,6 +661,7 @@ impl Net {
         self.frames[fidx] = Some(FrameState {
             conn: i,
             gen,
+            nonce,
             id: frame.id,
             wire_no,
             hits: vec![false; nkeys],
@@ -684,7 +772,7 @@ impl Net {
         } else {
             self.replies += 1;
         }
-        self.replay.insert(f.id, f.hits.clone(), f.degraded);
+        self.replay.insert(f.nonce, f.id, f.hits.clone(), f.degraded);
         let deliver = match self.slots.get_mut(f.conn).and_then(|s| s.as_mut()) {
             Some(c) if c.gen == f.gen => {
                 c.outstanding -= 1;
@@ -955,6 +1043,7 @@ fn run(mut cfg: NetConfig, listener: TcpListener, stop: Arc<AtomicBool>) -> Resu
         wire_errors: net.wire_errors,
         connections: net.connections,
         conn_evictions: net.conn_evictions,
+        replay_stale_misses: net.replay_stale_misses,
         snapshot,
     })
 }
@@ -965,21 +1054,54 @@ mod tests {
 
     #[test]
     fn replay_cache_is_bounded_and_idempotent() {
-        let mut r = Replay::new(4);
+        let mut r = Replay::new(4, 8);
+        let nonce = 0xA;
         for id in 0..8u64 {
-            r.insert(id, vec![id % 2 == 0], 0);
+            r.insert(nonce, id, vec![id % 2 == 0], 0);
         }
-        assert!(r.get(0).is_none(), "oldest entries evicted");
-        assert!(r.get(3).is_none());
+        assert!(r.get(nonce, 0).is_none(), "oldest entries evicted");
+        assert!(r.get(nonce, 3).is_none());
         for id in 4..8u64 {
-            let (hits, degraded) = r.get(id).expect("recent entry cached");
+            let (hits, degraded) = r.get(nonce, id).expect("recent entry cached");
             assert_eq!(hits, &vec![id % 2 == 0]);
             assert_eq!(*degraded, 0);
         }
         // re-inserting an existing id must not grow the order queue
-        r.insert(7, vec![true], 1);
+        r.insert(nonce, 7, vec![true], 1);
         assert_eq!(r.order.len(), 4);
-        assert_eq!(r.get(7), Some(&(vec![true], 1)));
+        assert_eq!(r.get(nonce, 7), Some(&(vec![true], 1)));
+    }
+
+    /// Two sessions numbering their frames identically never see each
+    /// other's cached replies — the high-severity collision the nonce
+    /// scoping exists to prevent.
+    #[test]
+    fn replay_cache_isolates_sessions_by_nonce() {
+        let mut r = Replay::new(16, 8);
+        r.insert(0xA, 0, vec![true], 0);
+        assert!(
+            r.get(0xB, 0).is_none(),
+            "client B's frame 0 answered from client A's cache"
+        );
+        assert_eq!(r.get(0xA, 0), Some(&(vec![true], 0)));
+        r.insert(0xB, 0, vec![false], 0);
+        assert_eq!(r.get(0xA, 0), Some(&(vec![true], 0)));
+        assert_eq!(r.get(0xB, 0), Some(&(vec![false], 0)));
+    }
+
+    /// An evicted entry's resend is flagged as a stale miss (potential
+    /// double-serve), per session; fresh ids never trip it.
+    #[test]
+    fn replay_cache_flags_stale_misses() {
+        let mut r = Replay::new(2, 8);
+        for id in 0..4u64 {
+            r.insert(0xA, id, Vec::new(), 0);
+        }
+        assert!(r.get(0xA, 0).is_none(), "entry 0 evicted by cap 2");
+        assert!(r.is_stale_miss(0xA, 0), "evicted resend must be observable");
+        assert!(r.is_stale_miss(0xA, 3), "watermark is inclusive");
+        assert!(!r.is_stale_miss(0xA, 4), "fresh id is not stale");
+        assert!(!r.is_stale_miss(0xB, 0), "other sessions unaffected");
     }
 
     /// Minimal end-to-end smoke over a real loopback socket: handshake,
@@ -1003,7 +1125,7 @@ mod tests {
         let handle = spawn(cfg).unwrap();
         let mut s = TcpStream::connect(handle.addr()).unwrap();
         let mut out = Vec::new();
-        conn::encode_handshake(&mut out);
+        conn::encode_handshake(&mut out, conn::session_nonce());
         let keys: Vec<u64> = (0..25).collect();
         for id in 0..10u64 {
             conn::encode_req(&mut out, id, &keys);
@@ -1063,7 +1185,7 @@ mod tests {
         // hostile peer: valid handshake, then junk
         let mut bad = TcpStream::connect(handle.addr()).unwrap();
         let mut out = Vec::new();
-        conn::encode_handshake(&mut out);
+        conn::encode_handshake(&mut out, conn::session_nonce());
         out.extend_from_slice(&[0xDE; 64]);
         bad.write_all(&out).unwrap();
         let mut reader = FrameReader::new();
@@ -1088,7 +1210,7 @@ mod tests {
         // a well-behaved peer still gets served
         let mut good = TcpStream::connect(handle.addr()).unwrap();
         let mut out = Vec::new();
-        conn::encode_handshake(&mut out);
+        conn::encode_handshake(&mut out, conn::session_nonce());
         conn::encode_req(&mut out, 1, &[1, 2, 3]);
         good.write_all(&out).unwrap();
         let mut reader = FrameReader::new();
@@ -1111,5 +1233,112 @@ mod tests {
         assert_eq!(report.accepted, 1);
         assert_eq!(report.replies, 1);
         assert_eq!(report.connections, 2);
+    }
+
+    /// Send one REQ on a fresh connection and return the reply's count.
+    fn ask(addr: SocketAddr, nonce: u64, id: u64, keys: &[u64]) -> u32 {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut out = Vec::new();
+        conn::encode_handshake(&mut out, nonce);
+        conn::encode_req(&mut out, id, keys);
+        s.write_all(&out).unwrap();
+        let mut reader = FrameReader::new();
+        let mut buf = [0u8; 4096];
+        loop {
+            let n = s.read(&mut buf).unwrap();
+            assert!(n > 0, "server closed before replying");
+            reader.feed(&buf[..n]);
+            if let Some(f) = reader.next().unwrap() {
+                assert_eq!(f.op, conn::OP_REPLY);
+                return conn::parse_reply(&f.body).unwrap().count;
+            }
+        }
+    }
+
+    /// The high-severity collision the nonce scoping prevents: every
+    /// client numbers its frames from 0, so client B's first frame must
+    /// NOT be answered from client A's cached id-0 reply — while a
+    /// same-session resend of id 0 *must* hit the cache (exactly-once).
+    #[test]
+    fn colliding_frame_ids_across_clients_are_isolated() {
+        let cfg = NetConfig {
+            server: ServerConfig {
+                catalog: 2_000,
+                capacity: 100,
+                shards: 2,
+                batch: 8,
+                horizon: 10_000,
+                queue_depth: 64,
+                seed: 7,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let handle = spawn(cfg).unwrap();
+        let (na, nb) = (0xAAAA, 0xBBBB);
+        assert_eq!(ask(handle.addr(), na, 0, &[1, 2, 3, 4, 5]), 5);
+        // different client, same frame id, different shape: a cache
+        // collision would answer with A's 5-bit bitmap
+        assert_eq!(ask(handle.addr(), nb, 0, &[10, 11, 12]), 3);
+        // same client retrying id 0 (reply lost): replay hit, not a
+        // second serve
+        assert_eq!(ask(handle.addr(), nb, 0, &[10, 11, 12]), 3);
+        handle.stop();
+        let report = handle.join().unwrap();
+        assert_eq!(report.accepted, 3);
+        assert_eq!(report.replies, 3);
+        assert_eq!(report.replay_stale_misses, 0);
+        assert_eq!(
+            report.snapshot.requests, 8,
+            "the replayed frame must not reach the engine twice"
+        );
+    }
+
+    /// A REQ claiming the reserved connection-ERR correlation id is a
+    /// typed protocol error carrying the sentinel, and the connection
+    /// closes cleanly.
+    #[test]
+    fn reserved_correlation_id_is_rejected() {
+        let cfg = NetConfig {
+            server: ServerConfig {
+                catalog: 1_000,
+                capacity: 50,
+                shards: 1,
+                batch: 8,
+                horizon: 10_000,
+                queue_depth: 16,
+                seed: 8,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let handle = spawn(cfg).unwrap();
+        let mut s = TcpStream::connect(handle.addr()).unwrap();
+        let mut out = Vec::new();
+        conn::encode_handshake(&mut out, conn::session_nonce());
+        conn::encode_req(&mut out, conn::CONN_ERR_ID, &[1, 2]);
+        s.write_all(&out).unwrap();
+        let mut reader = FrameReader::new();
+        let mut buf = [0u8; 1024];
+        let mut saw_err = false;
+        loop {
+            match s.read(&mut buf) {
+                Ok(0) | Err(_) => break,
+                Ok(n) => {
+                    reader.feed(&buf[..n]);
+                    while let Ok(Some(f)) = reader.next() {
+                        if f.op == conn::OP_ERR {
+                            assert_eq!(f.id, conn::CONN_ERR_ID);
+                            saw_err = true;
+                        }
+                    }
+                }
+            }
+        }
+        assert!(saw_err, "reserved id must be answered with a typed ERR");
+        handle.stop();
+        let report = handle.join().unwrap();
+        assert_eq!(report.wire_errors, 1);
+        assert_eq!(report.accepted, 0);
     }
 }

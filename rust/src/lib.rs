@@ -81,7 +81,9 @@
 //!   ingest parsers), with per-connection read/write deadlines and
 //!   slow-peer eviction, typed `BUSY` overload shedding under the
 //!   CI-asserted ledger `accepted == replies + degraded + shed`, a
-//!   bounded replay cache making client resends exactly-once, and a
+//!   bounded session-scoped replay cache (keyed by the handshake's
+//!   client nonce + frame id) making client resends exactly-once even
+//!   with concurrent clients numbering frames identically, and a
 //!   graceful SIGINT/`--max-requests` drain (flush in-flight, final
 //!   checkpoints, exit 0).  The client side is `ogb-cache loadgen`
 //!   ([`sim::run_serverbench`]): seeded Zipf drive, BUSY backoff,

@@ -915,12 +915,14 @@ fn cmd_serve_net(a: &ogb_cache::util::args::Args, listen: &str) -> Result<()> {
         report.accepted, report.replies, report.degraded, report.shed
     );
     println!(
-        "wire: keys={} hits={} wire_errors={} connections={} conn_evictions={}",
+        "wire: keys={} hits={} wire_errors={} connections={} conn_evictions={} \
+         replay_stale_misses={}",
         report.keys,
         report.snapshot.hits,
         report.wire_errors,
         report.connections,
-        report.conn_evictions
+        report.conn_evictions,
+        report.replay_stale_misses
     );
     println!("{}", report.snapshot.report());
     println!(

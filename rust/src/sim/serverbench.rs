@@ -12,10 +12,13 @@
 //!
 //! * **BUSY** replies back off exponentially with seeded jitter and
 //!   resend the *same* frame id;
-//! * **garbled or truncated replies, EOF, read timeouts** reconnect and
-//!   resend every outstanding frame, original ids, original order —
-//!   the server's replay cache answers already-served ids from cache,
-//!   so retried frames are hit-identical, never served twice;
+//! * **garbled, truncated, or inconsistent replies, EOF, read
+//!   timeouts** reconnect immediately and resend every outstanding
+//!   frame, original ids, original order, under the run's fixed session
+//!   nonce — the server's replay cache (keyed by nonce + frame id)
+//!   answers already-served ids from cache, so retried frames are
+//!   hit-identical, never served twice, and never collide with another
+//!   client's ids;
 //! * a server that stays unreachable ends the run gracefully: the
 //!   remaining frames are counted `gave_up`, the report still emits
 //!   (CI asserts on the accounting, not on a panic).
@@ -204,16 +207,19 @@ struct Wire {
 
 impl Wire {
     /// Connect with bounded retry (the server may still be binding) and
-    /// send our handshake.
-    fn connect(addr: &str, budget_ms: u64) -> Result<Self> {
+    /// send our handshake.  The session `nonce` is fixed per run and
+    /// resent on every reconnect — it is what scopes the server's
+    /// replay cache to *this* client, so resent frame ids never collide
+    /// with another client's.
+    fn connect(addr: &str, budget_ms: u64, nonce: u64) -> Result<Self> {
         let deadline = Instant::now() + Duration::from_millis(budget_ms.max(1));
         let mut delay = Duration::from_millis(10);
         loop {
             match TcpStream::connect(addr) {
                 Ok(stream) => {
                     stream.set_nodelay(true).ok();
-                    let mut hs = Vec::with_capacity(8);
-                    conn::encode_handshake(&mut hs);
+                    let mut hs = Vec::with_capacity(conn::HANDSHAKE_LEN);
+                    conn::encode_handshake(&mut hs, nonce);
                     let mut w = Wire {
                         stream,
                         reader: FrameReader::new(),
@@ -326,7 +332,8 @@ pub fn run_serverbench(cfg: &ServerBenchConfig) -> Result<ServerBenchResult> {
     };
 
     let wall0 = Instant::now();
-    let mut wire = Some(Wire::connect(&cfg.addr, cfg.connect_timeout_ms)?);
+    let nonce = conn::session_nonce();
+    let mut wire = Some(Wire::connect(&cfg.addr, cfg.connect_timeout_ms, nonce)?);
     let mut server_lost = false;
 
     while !server_lost && (done + result.gave_up) < nframes as u64 {
@@ -349,9 +356,10 @@ pub fn run_serverbench(cfg: &ServerBenchConfig) -> Result<ServerBenchResult> {
             next_frame += 1;
         }
 
-        match read_frames(w, cfg.timeout_ms) {
+        let needs_reconnect = match read_frames(w, cfg.timeout_ms) {
             ReadOutcome::Frames(frames) => {
                 let mut resend: Vec<u64> = Vec::new();
+                let mut inconsistent = false;
                 for f in frames {
                     match f.op {
                         conn::OP_REPLY => {
@@ -363,14 +371,19 @@ pub fn run_serverbench(cfg: &ServerBenchConfig) -> Result<ServerBenchResult> {
                                 Ok(r) => r,
                                 Err(_) => {
                                     // well-framed but nonsense body:
-                                    // treat like a garbled wire
+                                    // treat like a garbled wire — drop
+                                    // the connection *now* and resend,
+                                    // instead of idling out the full
+                                    // read timeout on a dead exchange
                                     outstanding.push_front(p);
+                                    inconsistent = true;
                                     break;
                                 }
                             };
                             let n = (p.hi - p.lo) as u64;
                             if reply.count as u64 != n {
                                 outstanding.push_front(p);
+                                inconsistent = true;
                                 break;
                             }
                             let hits = reply.hit_count();
@@ -405,10 +418,17 @@ pub fn run_serverbench(cfg: &ServerBenchConfig) -> Result<ServerBenchResult> {
                             resend.push(f.id);
                         }
                         conn::OP_ERR => {
-                            // typed rejection: the server will close this
-                            // connection; give up on the named frame (if
-                            // any) and let the reconnect path resend the
-                            // rest
+                            // connection-scoped ERR (unparseable stream,
+                            // capacity refusal): no frame was rejected —
+                            // the server closes and the reconnect path
+                            // resends everything outstanding
+                            if f.id == conn::CONN_ERR_ID {
+                                continue;
+                            }
+                            // frame-scoped typed rejection: the server
+                            // will close this connection; give up on the
+                            // named frame and let the reconnect path
+                            // resend the rest
                             if let Some(pos) = outstanding.iter().position(|p| p.id == f.id) {
                                 outstanding.remove(pos);
                                 result.gave_up += 1;
@@ -417,54 +437,58 @@ pub fn run_serverbench(cfg: &ServerBenchConfig) -> Result<ServerBenchResult> {
                         _ => {} // unknown op from a future server: ignore
                     }
                 }
-                for id in resend {
-                    if let Some(p) = outstanding.iter_mut().find(|p| p.id == id) {
-                        p.sent_at = Instant::now();
-                        let (lo, hi) = (p.lo, p.hi);
-                        let _ = w.send_frame(id, &keys[lo..hi]);
+                if !inconsistent {
+                    for id in resend {
+                        if let Some(p) = outstanding.iter_mut().find(|p| p.id == id) {
+                            p.sent_at = Instant::now();
+                            let (lo, hi) = (p.lo, p.hi);
+                            let _ = w.send_frame(id, &keys[lo..hi]);
+                        }
                     }
                 }
+                inconsistent
             }
-            ReadOutcome::Broken => {
-                // reconnect and resend every outstanding frame, original
-                // ids and order — the server's replay cache keeps retried
-                // frames hit-identical
-                result.reconnects += 1;
-                wire = None;
-                match Wire::connect(&cfg.addr, cfg.connect_timeout_ms) {
-                    Ok(mut w2) => {
-                        outstanding.retain_mut(|p| {
-                            p.attempts += 1;
-                            if p.attempts > cfg.max_retries {
-                                result.gave_up += 1;
-                                return false;
-                            }
-                            p.sent_at = Instant::now();
-                            if w2.send_frame(p.id, &keys[p.lo..p.hi]).is_ok() {
-                                result.resends += 1;
-                                true
-                            } else {
-                                result.gave_up += 1;
-                                false
-                            }
-                        });
-                        wire = Some(w2);
-                    }
-                    Err(_) => {
-                        // server gone for good: account the tail and end
-                        // the run gracefully (exit 0, CI checks counters)
-                        crate::log_warn!(
-                            "loadgen: server {} unreachable; giving up with {} outstanding \
-                             and {} unsent frames",
-                            cfg.addr,
-                            outstanding.len(),
-                            nframes - next_frame
-                        );
-                        result.gave_up +=
-                            outstanding.len() as u64 + (nframes - next_frame) as u64;
-                        outstanding.clear();
-                        server_lost = true;
-                    }
+            ReadOutcome::Broken => true,
+        };
+        if needs_reconnect {
+            // reconnect and resend every outstanding frame, original
+            // ids and order — the server's replay cache keeps retried
+            // frames hit-identical
+            result.reconnects += 1;
+            wire = None;
+            match Wire::connect(&cfg.addr, cfg.connect_timeout_ms, nonce) {
+                Ok(mut w2) => {
+                    outstanding.retain_mut(|p| {
+                        p.attempts += 1;
+                        if p.attempts > cfg.max_retries {
+                            result.gave_up += 1;
+                            return false;
+                        }
+                        p.sent_at = Instant::now();
+                        if w2.send_frame(p.id, &keys[p.lo..p.hi]).is_ok() {
+                            result.resends += 1;
+                            true
+                        } else {
+                            result.gave_up += 1;
+                            false
+                        }
+                    });
+                    wire = Some(w2);
+                }
+                Err(_) => {
+                    // server gone for good: account the tail and end
+                    // the run gracefully (exit 0, CI checks counters)
+                    crate::log_warn!(
+                        "loadgen: server {} unreachable; giving up with {} outstanding \
+                         and {} unsent frames",
+                        cfg.addr,
+                        outstanding.len(),
+                        nframes - next_frame
+                    );
+                    result.gave_up +=
+                        outstanding.len() as u64 + (nframes - next_frame) as u64;
+                    outstanding.clear();
+                    server_lost = true;
                 }
             }
         }

@@ -109,10 +109,59 @@ fn loopback_differential_matches_in_process() {
     assert_eq!((report.shed, report.degraded, report.wire_errors), (0, 0, 0));
     assert_eq!(report.keys, 4_800);
 
+    assert_eq!(report.replay_stale_misses, 0);
+
     let keys = keystream(cfg.catalog, cfg.zipf_s, cfg.seed, cfg.requests);
     let baseline = baseline_hits(scfg, &keys, cfg.frame_size);
     assert_eq!(r.hits, baseline, "network run diverged from in-process");
     assert_eq!(report.snapshot.hits, r.hits, "server ledger agrees with the wire");
+}
+
+/// Two clients served concurrently, both numbering their frames
+/// 0,1,2,...: the session-nonce-scoped replay cache keeps them isolated
+/// — neither is ever answered from the other's cached replies (an
+/// unscoped cache returns client A's bitmap to client B's first send of
+/// the same id).  Interleaved policy state makes per-client hit totals
+/// non-deterministic here, so the assertions are on exactly-once
+/// accounting and the union ledger.
+#[test]
+fn concurrent_clients_are_isolated_and_fully_served() {
+    let handle = spawn(NetConfig {
+        server: small_server(None),
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = handle.addr().to_string();
+    let mk = |seed: u64, frame_size: usize, requests: usize| ServerBenchConfig {
+        addr: addr.clone(),
+        requests,
+        frame_size,
+        window: 1,
+        catalog: 1_000,
+        zipf_s: 0.9,
+        seed,
+        ..Default::default()
+    };
+    // different frame shapes: a cross-client replay hit would surface
+    // as a count mismatch instead of passing as plausible data
+    let cfg_a = mk(101, 16, 1_600);
+    let cfg_b = mk(202, 10, 1_000);
+    let ta = std::thread::spawn(move || run_serverbench(&cfg_a).unwrap());
+    let rb = run_serverbench(&cfg_b).unwrap();
+    let ra = ta.join().unwrap();
+    handle.stop();
+    let report = handle.join().unwrap();
+
+    assert_eq!((ra.keys, ra.gave_up), (1_600, 0), "client A starved: {ra:?}");
+    assert_eq!((rb.keys, rb.gave_up), (1_000, 0), "client B starved: {rb:?}");
+    assert_ledger(&report);
+    assert_eq!(report.keys, 2_600, "every key served exactly once");
+    assert_eq!(report.replay_stale_misses, 0);
+    assert_eq!(
+        report.snapshot.hits,
+        ra.hits + rb.hits,
+        "server ledger equals the union of both clients' wires"
+    );
 }
 
 /// Every wire-fault kind, one by one: the client's retry discipline
@@ -153,6 +202,10 @@ fn differential_holds_under_every_wire_fault() {
         }
         assert_ledger(&report);
         assert!(report.accepted >= 80, "{spec}: 80 frames sent, {report:?}");
+        assert_eq!(
+            report.replay_stale_misses, 0,
+            "{spec}: a retry outlived the replay cache"
+        );
 
         let keys = keystream(cfg.catalog, cfg.zipf_s, cfg.seed, cfg.requests);
         let baseline = baseline_hits(small_server(None), &keys, cfg.frame_size);
@@ -218,7 +271,7 @@ fn slow_mid_frame_client_is_evicted_and_server_survives() {
     // handshake + 4 bytes of a frame header, then stall past the deadline
     let mut slow = std::net::TcpStream::connect(handle.addr()).unwrap();
     let mut bytes = Vec::new();
-    conn::encode_handshake(&mut bytes);
+    conn::encode_handshake(&mut bytes, conn::session_nonce());
     bytes.extend_from_slice(&25u32.to_le_bytes()); // length only, no body
     slow.write_all(&bytes).unwrap();
     slow.set_read_timeout(Some(std::time::Duration::from_secs(5))).unwrap();

@@ -19,7 +19,7 @@ use ogb_cache::util::Xoshiro256pp;
 /// degraded key), BUSY, ERR.
 fn clean_capture() -> Vec<u8> {
     let mut wire = Vec::new();
-    encode_handshake(&mut wire);
+    encode_handshake(&mut wire, 0x00C0_FFEE);
     encode_req(&mut wire, 1, &[7, u64::MAX, 0, 0x9E37_79B9_7F4A_7C15]);
     encode_reply(&mut wire, 1, &[true, false, true, false], 1);
     encode_req(&mut wire, 2, &[]);
@@ -114,7 +114,7 @@ fn truncation_is_pending_not_an_error() {
 fn hostile_length_is_rejected_before_buffering() {
     for hostile in [MAX_FRAME + 1, u32::MAX, u32::MAX - 7] {
         let mut wire = Vec::new();
-        encode_handshake(&mut wire);
+        encode_handshake(&mut wire, 1);
         wire.extend_from_slice(&hostile.to_le_bytes());
         let mut r = FrameReader::new();
         r.feed(&wire);
@@ -166,7 +166,7 @@ fn random_garbage_streams_never_panic() {
         if round % 2 == 0 {
             // valid handshake prefix: the garbage lands on frame framing
             let mut wire = Vec::new();
-            encode_handshake(&mut wire);
+            encode_handshake(&mut wire, 1);
             wire.extend_from_slice(&bytes);
             bytes = wire;
         }
