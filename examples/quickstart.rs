@@ -67,6 +67,14 @@
 //! the retry/replay-cache path — the run stays hit-identical to an
 //! in-process one.
 //!
+//! Meta-caching (DESIGN.md §14): when no single policy wins across the
+//! day, hedge over a pool of them — this example races
+//! `meta{experts=[ogb{batch=64},lru,ftpl]}` against each of its own
+//! experts on a diurnal workload; the CLI twin sweeps the whole
+//! scenario grid with regret-vs-best-expert accounting:
+//!
+//!     cargo run --release -- metabench --smoke    # BENCH_meta.json
+//!
 //! The end of this example does the same from the library API.
 
 use ogb_cache::coordinator::{CacheServer, ServerConfig};
@@ -77,6 +85,7 @@ use ogb_cache::sim::{
 };
 use ogb_cache::trace::ingest::{RawBinaryWriter, RawKey};
 use ogb_cache::trace::stream::gen::ZipfDriftSource;
+use ogb_cache::trace::stream::{self, SourceSpec};
 use ogb_cache::trace::synth;
 
 fn main() {
@@ -148,6 +157,36 @@ fn main() {
         opt.opt_hits(c) as f64 / t as f64,
         (opt.opt_hits(c) as f64 - rs.total_reward) / t as f64,
     );
+
+    // Meta-caching (DESIGN.md §14): a diurnal workload alternates which
+    // expert is best, so no fixed choice wins — `meta{experts=[...]}`
+    // runs the whole pool over one stream and learns EG/Hedge weights
+    // online, tracking the best expert in hindsight with
+    // O(sqrt(T·B·ln K)) regret.  Same spec grammar, nested.
+    let diurnal = stream::materialize(
+        SourceSpec::parse("diurnal:n=20000,t=300000,s=0.9,period=30000")
+            .expect("scenario spec")
+            .build(7)
+            .expect("build source")
+            .as_mut(),
+        0,
+    );
+    let (dn, dc) = (diurnal.catalog, diurnal.catalog / 20);
+    let dopts = BuildOpts::new(diurnal.len(), /*batch=*/ 64, /*seed=*/ 42);
+    println!("\nmeta-caching on diurnal (N={dn}, C={dc}):");
+    for spec in [
+        "ogb{batch=64}",
+        "lru",
+        "ftpl",
+        "meta{experts=[ogb{batch=64},lru,ftpl],batch=64}",
+    ] {
+        let mut p = policies::build(spec, dn, dc, &dopts, None).expect("build policy");
+        let rr = run(&mut p, &diurnal, &cfg);
+        println!("  {spec:<48} hit_ratio={:.4}", rr.hit_ratio());
+    }
+    // `ogb-cache metabench` sweeps the full scenario grid (stationary,
+    // drift, diurnal, flash-crowd, realworld) with regret-vs-best-expert
+    // series per scenario and emits BENCH_meta.json.
 
     // Multi-core: the same workload through the sharded serving engine —
     // the catalog is partitioned across 2 shard threads, requests move

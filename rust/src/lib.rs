@@ -17,8 +17,14 @@
 //!   [`policies::Request`], [`policies::Policy::serve_batch`] serves B
 //!   requests per call (trajectory-identical, amortized bookkeeping),
 //!   construction is typed via [`policies::PolicySpec`]
-//!   (`"ogb{batch=64,rebase=1e6}"`) and extensible via the open
-//!   [`policies::PolicyRegistry`];
+//!   (`"ogb{batch=64,rebase=1e6}"`, nested specs included) and
+//!   extensible via the open [`policies::PolicyRegistry`] — plus the
+//!   meta-caching expert pool [`policies::MetaPolicy`] (DESIGN.md §14):
+//!   `"meta{experts=[ogb{batch=64},lru,ftpl],algo=eg}"` runs K experts
+//!   over the same stream under Hedge/EG multiplicative weights, with
+//!   regret `O(sqrt(T·B·ln K))` versus the best expert in hindsight,
+//!   serving the weighted fractional mixture (`mix=frac`) or a
+//!   weight-sampled expert (`mix=sample`);
 //! * [`trace`] — synthetic and real-world-like request trace generators and
 //!   the temporal-locality analyses of the paper's App. B;
 //! * [`trace::ingest`] — open-catalog ingestion (DESIGN.md §10): raw
@@ -43,7 +49,10 @@
 //!   regret accounting with the one-pass streaming OPT
 //!   ([`sim::StreamingOpt`]), the parallel policy × cache-size
 //!   [`sim::sweep`] runner behind `ogb-cache sweep`, the
-//!   [`sim::hotpath`] microbench suite behind `ogb-cache bench`, and
+//!   [`sim::hotpath`] microbench suite behind `ogb-cache bench`, the
+//!   meta-caching expert-pool grid [`sim::metabench`] behind
+//!   `ogb-cache metabench` (meta vs each of its own experts vs OPT,
+//!   with a [`sim::regret_vs_best_expert`] series per scenario), and
 //!   the [`sim::shardbench`] multi-core scaling suite behind
 //!   `ogb-cache serve --smoke` / `cargo bench --bench shards`;
 //! * [`obs`] — the flight-recorder observability subsystem (DESIGN.md
@@ -125,6 +134,13 @@
 //!   per-policy hit ratio, regret vs the streaming hindsight OPT,
 //!   req/s, catalog-growth events; the `replay-e2e` CI job asserts the
 //!   exact-mode bit-identity with a pre-densified run on every push.
+//! * `BENCH_meta.json` — `ogb-cache metabench`: the meta-caching axis
+//!   (DESIGN.md §14) — per-scenario hit ratio for the meta policy,
+//!   each of its experts and hindsight OPT, the best-expert pin, and
+//!   the regret-vs-best-expert series with its Hedge bound; the
+//!   `meta-smoke` CI job asserts sublinear regret growth and that meta
+//!   lands within tolerance of the best expert on the adversarial
+//!   families (diurnal, flash-crowd).
 //! * `BENCH_server.json` — `ogb-cache loadgen` against `ogb-cache
 //!   serve --listen`: the network axis — client-observed p50/p99/p999
 //!   frame latency, req/s, and the retry ledger (busy_retries,

@@ -4,6 +4,9 @@
 //!   simulate   replay a trace through a policy, report hit ratio
 //!   sweep      replay a streaming scenario across a policy × cache grid
 //!   bench      hot-path microbench (ns/req, pops/req, allocs/req -> BENCH_hotpath.json)
+//!   metabench  meta-caching expert-pool grid: meta vs each of its own
+//!              experts vs OPT across the scenario grid, with a
+//!              regret-vs-best-expert series -> BENCH_meta.json
 //!   figures    regenerate the paper's tables/figures (CSV under results/)
 //!   serve      pump a streaming scenario through the sharded serving engine
 //!              (--smoke runs the multi-core shard suite -> BENCH_shard.json;
@@ -57,6 +60,7 @@ fn cli() -> Cli {
                 opt("rebase-threshold", "lazy projection re-base threshold (empty = default 1e6)", ""),
                 opt("csv", "optional output CSV path", ""),
                 opt("obs-out", "flight-recorder JSONL path (empty = obs off)", ""),
+                opt("regret-baseline", "extra regret pass on a fresh policy: `opt` (vs the hindsight top-C allocation, Eq. (1)) or `expert` (meta specs only: vs the best expert in hindsight, DESIGN.md §14); empty = off", ""),
             ],
         )
         .command(
@@ -97,6 +101,21 @@ fn cli() -> Cli {
                 opt("out", "output JSON path (empty = skip)", "BENCH_hotpath.json"),
                 opt("obs-out", "flight-recorder JSONL path — records are emitted inside the allocation-counted region, proving the recorder is allocation-free (empty = obs off)", ""),
                 flag("smoke", "tiny CI grid (ogb+lru, N=2000, 20k requests, 1 rep; overrides --policies/--ns/--cache-pcts/--requests/--reps)"),
+            ],
+        )
+        .command(
+            "metabench",
+            "meta-caching expert-pool grid: meta vs each of its own experts vs hindsight OPT across the scenario grid, with a regret-vs-best-expert series per scenario (emits BENCH_meta.json; DESIGN.md §14)",
+            vec![
+                opt("policy", "the `meta{experts=[...]}` spec under test", "meta{experts=[ogb{batch=64},lru,ftpl],batch=64}"),
+                opt("cache-pct", "cache size as % of each scenario's catalog", "5"),
+                opt("batch", "batch size B handed to the policies (spec-level values win)", "64"),
+                opt("max-requests", "cap on replayed requests per scenario (0 = scenario horizon)", "0"),
+                opt("regret-points", "log-spaced regret checkpoints per scenario", "24"),
+                opt("seed", "random seed", "42"),
+                opt("out", "output JSON path (empty = skip)", "BENCH_meta.json"),
+                opt("obs-out", "flight-recorder JSONL path: per-scenario windowed replay recording the expert weight trajectory (`meta.expert{k}.weight` gauges; empty = obs off)", ""),
+                flag("smoke", "tiny CI grid (4 scenario families, 60k requests each) + assert the regret-vs-best-expert series stays sublinear on every family"),
             ],
         )
         .command(
@@ -376,6 +395,72 @@ fn cmd_simulate(a: &ogb_cache::util::args::Args) -> Result<()> {
         d.scratch_grows,
         policy.occupancy()
     );
+    let baseline = a.get_or("regret-baseline", "");
+    if !baseline.is_empty() {
+        // a fresh replay: the regret pass drives its own policy instance
+        // so the numbers are not contaminated by the run above
+        let points = 16;
+        match baseline {
+            "opt" => {
+                let mut fresh = ogb_cache::policies::build(
+                    a.get_or("policy", "ogb"),
+                    tr.catalog,
+                    c,
+                    &opts,
+                    Some(&tr),
+                )?;
+                let series = sim::regret_series(&mut fresh, &tr, c, b, points);
+                println!("regret vs hindsight OPT (Eq. (1), C={c}):");
+                for p in &series {
+                    println!(
+                        "  t={:>10} regret={:>12.1} avg={:.5} bound={:.1}",
+                        p.t, p.regret, p.avg_regret, p.bound
+                    );
+                }
+                println!(
+                    "regret growth exponent ~ {:.3} (sublinear < 1)",
+                    sim::regret_growth_exponent(&series)
+                );
+            }
+            "expert" => {
+                let spec: ogb_cache::policies::PolicySpec = a.get_or("policy", "ogb").parse()?;
+                let ogb_cache::policies::PolicySpec::Meta { experts, .. } = &spec else {
+                    anyhow::bail!(
+                        "--regret-baseline expert needs a `meta{{experts=[...]}}` --policy \
+                         (got `{}`)",
+                        a.get_or("policy", "ogb")
+                    );
+                };
+                let mut meta =
+                    ogb_cache::policies::build_spec(&spec, tr.catalog, c, &opts, Some(&tr))?;
+                let mut standalone = Vec::with_capacity(experts.len());
+                for e in experts {
+                    standalone
+                        .push(ogb_cache::policies::build_spec(e, tr.catalog, c, &opts, Some(&tr))?);
+                }
+                let mut pool: Vec<&mut dyn Policy> = standalone
+                    .iter_mut()
+                    .map(|p| p as &mut dyn Policy)
+                    .collect();
+                let s = sim::regret_vs_best_expert(&mut meta, &mut pool, &tr, b, points);
+                println!(
+                    "best expert in hindsight: `{}` ({:.0} hits; meta {:.0})",
+                    experts[s.best_expert], s.expert_total[s.best_expert], s.meta_total
+                );
+                for p in &s.points {
+                    println!(
+                        "  t={:>10} regret={:>12.1} avg={:.5} hedge_bound={:.1}",
+                        p.t, p.regret, p.avg_regret, p.bound
+                    );
+                }
+                println!(
+                    "regret growth exponent ~ {:.3} (sublinear < 1)",
+                    sim::regret_growth_exponent(&s.points)
+                );
+            }
+            other => anyhow::bail!("unknown --regret-baseline `{other}` (opt|expert)"),
+        }
+    }
     let csv = a.get_or("csv", "");
     if !csv.is_empty() {
         let mut w = ogb_cache::util::csv::CsvWriter::create(
@@ -551,25 +636,87 @@ fn cmd_bench(a: &ogb_cache::util::args::Args) -> Result<()> {
         println!("wrote {}", r.write_json(out)?.display());
     }
     if smoke {
-        // CI contract (DESIGN.md §7/§9): both serve modes are present and
-        // the OGB request path allocates nothing at steady state in
-        // either of them.
+        // CI contract (DESIGN.md §7/§9/§14): both serve modes are present
+        // and the OGB request path — standalone AND inside a meta expert
+        // pool — allocates nothing at steady state in either of them.
         anyhow::ensure!(
             r.rows.iter().any(|row| row.mode == "per_request")
                 && r.rows.iter().any(|row| row.mode == "batched"),
             "smoke grid must report per_request AND batched rows"
         );
         if r.alloc_counter_active {
-            for row in r.rows.iter().filter(|row| row.policy == "ogb") {
+            for row in r
+                .rows
+                .iter()
+                .filter(|row| row.policy == "ogb" || row.policy.starts_with("meta"))
+            {
                 anyhow::ensure!(
                     row.allocs_per_request == Some(0.0),
-                    "ogb {} mode allocated at steady state: {:?} allocs/request",
+                    "{} {} mode allocated at steady state: {:?} allocs/request",
+                    row.policy,
                     row.mode,
                     row.allocs_per_request
                 );
             }
-            println!("steady-state allocation contract holds (0 allocs, both modes)");
+            println!("steady-state allocation contract holds (0 allocs, both modes, ogb + meta)");
         }
+    }
+    finish_recorder(rec)
+}
+
+fn cmd_metabench(a: &ogb_cache::util::args::Args) -> Result<()> {
+    let cfg = sim::MetaBenchConfig {
+        meta_spec: a
+            .get_or("policy", "meta{experts=[ogb{batch=64},lru,ftpl],batch=64}")
+            .to_string(),
+        cache_pct: a.get_parse("cache-pct", 5.0),
+        batch: a.get_parse("batch", 64),
+        seed: a.get_parse("seed", 42),
+        max_requests: a.get_parse("max-requests", 0),
+        regret_points: a.get_parse("regret-points", 24),
+        smoke: a.flag("smoke"),
+        ..sim::MetaBenchConfig::default()
+    };
+    let mut rec = open_recorder(
+        a,
+        &cfg.meta_spec,
+        if cfg.smoke {
+            "metabench:smoke"
+        } else {
+            "metabench:full"
+        },
+    )?;
+    let r = sim::run_metabench(&cfg, rec.as_mut())?;
+    for s in &r.scenarios {
+        println!(
+            "scenario {:<10} {:<55} N={} C={} T={}",
+            s.name, s.spec, s.catalog, s.c, s.requests
+        );
+        for cell in &s.cells {
+            println!("  {:<50} hit_ratio={:.4}", cell.policy, cell.hit_ratio);
+        }
+        println!(
+            "  best expert `{}`, regret growth exponent {:.3}",
+            s.best_expert, s.regret_growth_exponent
+        );
+    }
+    println!("{} scenarios in {:.2}s", r.scenarios.len(), r.wall_s);
+    let out = a.get_or("out", "BENCH_meta.json");
+    if !out.is_empty() {
+        println!("wrote {}", r.write_bench_json(out)?.display());
+    }
+    if cfg.smoke {
+        // CI contract (DESIGN.md §14): meta's regret against the best
+        // expert in hindsight stays sublinear on every scenario family.
+        for s in &r.scenarios {
+            anyhow::ensure!(
+                s.regret_growth_exponent < 1.0,
+                "scenario `{}`: regret growth exponent {:.3} is not sublinear",
+                s.name,
+                s.regret_growth_exponent
+            );
+        }
+        println!("sublinear regret-vs-best-expert contract holds on the smoke grid");
     }
     finish_recorder(rec)
 }
@@ -1153,6 +1300,7 @@ fn main() -> Result<()> {
         "simulate" => cmd_simulate(&a),
         "sweep" => cmd_sweep(&a),
         "bench" => cmd_bench(&a),
+        "metabench" => cmd_metabench(&a),
         "figures" => {
             let opts = FigOpts {
                 out_dir: a.get_or("out", "results").into(),

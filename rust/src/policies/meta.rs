@@ -1,0 +1,701 @@
+//! Meta-caching: a no-regret expert pool (DESIGN.md §14).
+//!
+//! [`MetaPolicy`] runs K expert policies over one shared request stream
+//! and hedges between them with multiplicative weights — the classic
+//! Hedge / exponentiated-gradient scheme of Paschos et al. (*Learning to
+//! Cache With No Regrets*) lifted onto this repo's [`Policy`] API.  The
+//! guarantee changes target: instead of regret vs the best *static
+//! cache* in hindsight (what each OGB instance already certifies), the
+//! meta policy attains `O(sqrt(R ln K))` regret over R meta-batches vs
+//! the best *expert* in hindsight.  On streams where a single OGB loses
+//! to a cheap heuristic — the scenario DSL's diurnal, flash-crowd and
+//! drift grids — the meta-learner converts every such loss into a win
+//! up to the sublinear hedging cost, measured empirically by
+//! `sim::metabench` (the committed `BENCH_meta.json`).
+//!
+//! Mechanics (chunked-reward freezing):
+//!
+//! * Every request is fed to **all** K experts.  On the batched path the
+//!   whole chunk goes to each expert via its own [`Policy::serve_batch`]
+//!   (per-chunk cost: K policy calls, not K×B), so batched experts keep
+//!   their amortization and their `serve_batch ≡ serve` contract makes
+//!   the meta trajectory chunk-size independent too.
+//! * Meta weights are **frozen for the duration of a meta-batch** (B
+//!   requests, `batch=`): the reward the meta policy reports for request
+//!   t uses the weights as of the last batch boundary, exactly like the
+//!   experts' own B-batched updates.  At the boundary each expert's
+//!   accumulated realized reward becomes its gradient and the weights
+//!   take one multiplicative step (`algo=eg` normalizes by the chunk's
+//!   total request weight; `algo=hedge` uses the raw gains).
+//! * Serving is either the weighted fractional mixture `Σ_k w_k·r_k`
+//!   (`mix=frac`, default — fractional rewards, like `ogb-frac`) or the
+//!   reward of one weight-sampled expert (`mix=sample` — integral when
+//!   the experts are, re-sampled from the fresh weights at every
+//!   boundary with the policy's own seeded RNG).
+//!
+//! The meta policy is a complete citizen of every subsystem: built from
+//! nested [`PolicySpec`]s (`meta{experts=[ogb{batch=64},lru],...}`,
+//! registry kinds compose), [`Policy::grow`] fans out to all experts and
+//! re-tunes the meta step by the doubling trick, OGBS snapshot/restore
+//! frames each expert's own checkpoint document as a section so a
+//! mid-stream meta resumes bit-identically, and `instruments()` exposes
+//! the live weight vector and per-expert cumulative rewards to the
+//! flight recorder.
+//!
+//! [`PolicySpec`]: super::PolicySpec
+
+use super::spec::{MetaAlgo, MetaMix};
+use super::{AnyPolicy, Policy, Request};
+use crate::util::Xoshiro256pp;
+
+/// Expert checkpoint documents are framed as sections `EXPERT_TAG_BASE + k`
+/// inside the meta policy's own OGBS document (tags 0..=4 are reserved by
+/// `snapshot::tag`; unknown tags are skipped by older readers).
+const EXPERT_TAG_BASE: u32 = 10;
+
+/// Construction knobs for [`MetaPolicy`] (the spec-level `meta{...}`
+/// parameters plus the shared harness context).
+#[derive(Debug, Clone)]
+pub struct MetaConfig {
+    pub algo: MetaAlgo,
+    /// `None` = theory default `sqrt(8 ln K / R)` with `R = t_hint/batch`
+    /// rounds, re-tuned by the doubling trick on catalog growth;
+    /// `Some(eta)` pins the step size (growth keeps it).
+    pub meta_eta: Option<f64>,
+    /// Meta-batch size B: weights are frozen within a batch and updated
+    /// at its boundary.
+    pub batch: usize,
+    pub mix: MetaMix,
+    /// Expected horizon (requests) for the theory step size.
+    pub t_hint: usize,
+    /// Seed for the `mix=sample` expert draws.
+    pub seed: u64,
+    /// Catalog size at construction (for `grow` no-op detection).
+    pub n: usize,
+}
+
+/// Hedge/EG meta-learner over a pool of expert policies.  See the module
+/// docs for the algorithm; see [`MetaConfig`] for the knobs.
+pub struct MetaPolicy {
+    experts: Vec<AnyPolicy>,
+    /// simplex weight per expert (frozen within a meta-batch)
+    weights: Vec<f64>,
+    /// realized reward per expert, accumulated over the current batch
+    batch_reward: Vec<f64>,
+    /// total realized reward per expert since construction
+    cum_reward: Vec<f64>,
+    /// total request weight seen in the current batch (EG normalizer)
+    batch_weight_mass: f64,
+    pos_in_batch: usize,
+    batch: usize,
+    algo: MetaAlgo,
+    mix: MetaMix,
+    meta_eta: f64,
+    eta_pinned: bool,
+    /// horizon estimate in meta-batches; doubled on catalog growth
+    horizon_rounds: u64,
+    n: usize,
+    /// the serving expert under `mix=sample` (unused reads under frac)
+    active: usize,
+    rng: Xoshiro256pp,
+    grows: u64,
+    /// reused per-expert reward buffers for the batched path; counted
+    /// into `scratch_grows` if they ever re-allocate in steady state
+    expert_bufs: Vec<Vec<f64>>,
+    scratch_grows: u64,
+    name: String,
+    /// precomputed instrument names (`name()` and the visitor walk must
+    /// not allocate)
+    weight_labels: Vec<String>,
+    reward_labels: Vec<String>,
+}
+
+impl MetaPolicy {
+    pub fn new(experts: Vec<AnyPolicy>, cfg: MetaConfig) -> anyhow::Result<Self> {
+        anyhow::ensure!(!experts.is_empty(), "meta policy needs at least one expert");
+        anyhow::ensure!(cfg.batch >= 1, "meta batch must be >= 1");
+        if let Some(e) = cfg.meta_eta {
+            anyhow::ensure!(e > 0.0 && e.is_finite(), "meta_eta must be positive");
+        }
+        let k_n = experts.len();
+        let rounds = (cfg.t_hint / cfg.batch).max(1) as u64;
+        let (meta_eta, eta_pinned) = match cfg.meta_eta {
+            Some(e) => (e, true),
+            None => (Self::theory_eta(k_n, rounds), false),
+        };
+        let mut name = format!(
+            "META({},b={},{})[",
+            cfg.algo.as_str(),
+            cfg.batch,
+            cfg.mix.as_str()
+        );
+        for (k, e) in experts.iter().enumerate() {
+            if k > 0 {
+                name.push(',');
+            }
+            name.push_str(e.name());
+        }
+        name.push(']');
+        let mut rng = Xoshiro256pp::seed_from(cfg.seed ^ 0x4D45_5441); // "META"
+        let weights = vec![1.0 / k_n as f64; k_n];
+        // the initial active expert is a draw from the uniform weights,
+        // so the sampled trajectory is seed-deterministic from request 0
+        let active = match cfg.mix {
+            MetaMix::Frac => 0,
+            MetaMix::Sample => Self::sample_index(&weights, &mut rng),
+        };
+        Ok(Self {
+            weights,
+            batch_reward: vec![0.0; k_n],
+            cum_reward: vec![0.0; k_n],
+            batch_weight_mass: 0.0,
+            pos_in_batch: 0,
+            batch: cfg.batch,
+            algo: cfg.algo,
+            mix: cfg.mix,
+            meta_eta,
+            eta_pinned,
+            horizon_rounds: rounds,
+            n: cfg.n,
+            active,
+            rng,
+            grows: 0,
+            expert_bufs: (0..k_n).map(|_| Vec::with_capacity(cfg.batch)).collect(),
+            scratch_grows: 0,
+            weight_labels: (0..k_n).map(|k| format!("meta.expert{k}.weight")).collect(),
+            reward_labels: (0..k_n)
+                .map(|k| format!("meta.expert{k}.cum_reward"))
+                .collect(),
+            name,
+            experts,
+        })
+    }
+
+    /// Hedge theory step for K experts over R rounds (Freund–Schapire):
+    /// `sqrt(8 ln K / R)`.  K = 1 gives 0 — no update is ever needed.
+    fn theory_eta(k: usize, rounds: u64) -> f64 {
+        (8.0 * (k as f64).ln() / rounds as f64).sqrt()
+    }
+
+    /// One categorical draw from the (normalized) weight vector.
+    fn sample_index(weights: &[f64], rng: &mut Xoshiro256pp) -> usize {
+        let u = rng.next_f64();
+        let mut acc = 0.0;
+        for (k, &w) in weights.iter().enumerate() {
+            acc += w;
+            if u < acc {
+                return k;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Current weight vector (frozen within the running batch).
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+
+    /// Cumulative realized reward per expert (includes the running batch).
+    pub fn expert_rewards(&self) -> Vec<f64> {
+        self.cum_reward
+            .iter()
+            .zip(&self.batch_reward)
+            .map(|(c, b)| c + b)
+            .collect()
+    }
+
+    /// The expert currently serving under `mix=sample`.
+    pub fn active_expert(&self) -> usize {
+        self.active
+    }
+
+    pub fn meta_eta(&self) -> f64 {
+        self.meta_eta
+    }
+
+    /// Expert names in pool order (borrowed from the experts).
+    pub fn expert_names(&self) -> Vec<&str> {
+        self.experts.iter().map(|e| e.name()).collect()
+    }
+
+    /// Batch-boundary weight update: each expert's accumulated realized
+    /// reward becomes its gradient (EG normalizes by the chunk's total
+    /// request weight so gains live in [0,1]; Hedge uses raw gains), the
+    /// weights take one numerically-stable multiplicative step, and
+    /// under `mix=sample` the serving expert is re-drawn.
+    fn apply_update(&mut self) {
+        let scale = match self.algo {
+            MetaAlgo::Eg => {
+                if self.batch_weight_mass > 0.0 {
+                    Some(1.0 / self.batch_weight_mass)
+                } else {
+                    None // a zero-weight batch carries no information
+                }
+            }
+            MetaAlgo::Hedge => Some(1.0),
+        };
+        if let Some(scale) = scale {
+            let g_max = self
+                .batch_reward
+                .iter()
+                .map(|r| r * scale)
+                .fold(f64::NEG_INFINITY, f64::max);
+            let mut sum = 0.0;
+            for (w, r) in self.weights.iter_mut().zip(&self.batch_reward) {
+                // subtracting g_max keeps every factor in (0, 1]; the
+                // leader's factor is exactly 1, so sum > 0 always
+                *w *= (self.meta_eta * (r * scale - g_max)).exp();
+                sum += *w;
+            }
+            for w in &mut self.weights {
+                *w /= sum;
+            }
+        }
+        for (c, r) in self.cum_reward.iter_mut().zip(&mut self.batch_reward) {
+            *c += *r;
+            *r = 0.0;
+        }
+        self.batch_weight_mass = 0.0;
+        self.pos_in_batch = 0;
+        if self.mix == MetaMix::Sample {
+            self.active = Self::sample_index(&self.weights, &mut self.rng);
+        }
+    }
+
+}
+
+impl Policy for MetaPolicy {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn serve(&mut self, req: Request) -> f64 {
+        let mut meta_r = 0.0;
+        for (k, e) in self.experts.iter_mut().enumerate() {
+            let r = e.serve(req);
+            self.batch_reward[k] += r;
+            match self.mix {
+                MetaMix::Frac => meta_r += self.weights[k] * r,
+                MetaMix::Sample => {
+                    if k == self.active {
+                        meta_r = r;
+                    }
+                }
+            }
+        }
+        self.batch_weight_mass += req.weight;
+        self.pos_in_batch += 1;
+        if self.pos_in_batch == self.batch {
+            self.apply_update();
+        }
+        meta_r
+    }
+
+    /// Batched path: the caller's chunk is split at the meta-batch
+    /// boundaries, each segment goes to every expert via its own
+    /// `serve_batch` (one call per expert per segment), and the meta
+    /// rewards are mixed from the per-expert reward buffers under the
+    /// frozen weights.  Trajectory-identical to the per-request path:
+    /// the experts guarantee `serve_batch ≡ serve`, the weights are
+    /// frozen within a segment exactly as within B single serves, and
+    /// the boundary update (and `mix=sample` re-draw) fires at the same
+    /// request index either way.
+    fn serve_batch(&mut self, reqs: &[Request], rewards: &mut Vec<f64>) {
+        rewards.reserve(reqs.len());
+        let mut off = 0;
+        while off < reqs.len() {
+            let take = (self.batch - self.pos_in_batch).min(reqs.len() - off);
+            let seg = &reqs[off..off + take];
+            for (k, e) in self.experts.iter_mut().enumerate() {
+                let buf = &mut self.expert_bufs[k];
+                buf.clear();
+                let cap = buf.capacity();
+                e.serve_batch(seg, buf);
+                debug_assert_eq!(buf.len(), seg.len(), "expert reward arity");
+                if buf.capacity() > cap {
+                    self.scratch_grows += 1;
+                }
+            }
+            for (i, r) in seg.iter().enumerate() {
+                let mut meta_r = 0.0;
+                for k in 0..self.weights.len() {
+                    let rk = self.expert_bufs[k][i];
+                    self.batch_reward[k] += rk;
+                    match self.mix {
+                        MetaMix::Frac => meta_r += self.weights[k] * rk,
+                        MetaMix::Sample => {
+                            if k == self.active {
+                                meta_r = rk;
+                            }
+                        }
+                    }
+                }
+                self.batch_weight_mass += r.weight;
+                rewards.push(meta_r);
+            }
+            self.pos_in_batch += take;
+            if self.pos_in_batch == self.batch {
+                self.apply_update();
+            }
+            off += take;
+        }
+    }
+
+    /// Catalog growth fans out to every expert; the meta step is
+    /// re-tuned by the doubling trick (DESIGN.md §10): the horizon
+    /// estimate in rounds doubles and eta is recomputed from it, unless
+    /// the user pinned `meta_eta` in the spec.
+    fn grow(&mut self, n_new: usize) {
+        for e in &mut self.experts {
+            e.grow(n_new);
+        }
+        if n_new <= self.n {
+            return;
+        }
+        self.n = n_new;
+        self.grows += 1;
+        if !self.eta_pinned {
+            self.horizon_rounds = self.horizon_rounds.saturating_mul(2);
+            self.meta_eta = Self::theory_eta(self.weights.len(), self.horizon_rounds);
+        }
+    }
+
+    fn occupancy(&self) -> f64 {
+        match self.mix {
+            MetaMix::Frac => self
+                .weights
+                .iter()
+                .zip(&self.experts)
+                .map(|(w, e)| w * e.occupancy())
+                .sum(),
+            MetaMix::Sample => self.experts[self.active].occupancy(),
+        }
+    }
+
+    fn diag(&self) -> super::Diag {
+        let mut d = super::Diag::default();
+        for e in &self.experts {
+            let ed = e.diag();
+            d.removed_coeffs += ed.removed_coeffs;
+            d.sample_evictions += ed.sample_evictions;
+            d.rebases += ed.rebases;
+            d.scratch_grows += ed.scratch_grows;
+            d.grows += ed.grows;
+        }
+        d.grows += self.grows;
+        d.scratch_grows += self.scratch_grows;
+        d
+    }
+
+    /// OGBS checkpoint (DESIGN.md §12): the META section carries the
+    /// meta-learner state (weights, per-batch accumulators, RNG, step
+    /// schedule) and each expert's complete own OGBS document is framed
+    /// as section `EXPERT_TAG_BASE + k` — restore hands those bytes to
+    /// the expert's `restore`, so every expert's bit-identical-resume
+    /// contract composes into the meta one.  The policy name embeds the
+    /// expert pool (count, kinds, configs), so restoring against a
+    /// differently-shaped meta fails as a typed `PolicyMismatch`.
+    fn snapshot(&self, w: &mut dyn std::io::Write) -> super::SnapshotResult<()> {
+        use super::snapshot::{tag, to_vec, Payload, SnapshotWriter};
+        let mut sw = SnapshotWriter::new(w, &self.name)?;
+        let mut meta = Payload::new();
+        meta.put_usize(self.n);
+        meta.put_u8(match self.algo {
+            MetaAlgo::Eg => 0,
+            MetaAlgo::Hedge => 1,
+        });
+        meta.put_f64(self.meta_eta);
+        meta.put_bool(self.eta_pinned);
+        meta.put_usize(self.batch);
+        meta.put_u8(match self.mix {
+            MetaMix::Frac => 0,
+            MetaMix::Sample => 1,
+        });
+        meta.put_usize(self.pos_in_batch);
+        meta.put_u64(self.horizon_rounds);
+        meta.put_u64(self.grows);
+        meta.put_u64(self.scratch_grows);
+        meta.put_usize(self.active);
+        let (st, spare) = self.rng.state();
+        for x in st {
+            meta.put_u64(x);
+        }
+        meta.put_opt_f64(spare);
+        meta.put_usize(self.experts.len());
+        meta.put_f64s(&self.weights);
+        meta.put_f64s(&self.batch_reward);
+        meta.put_f64(self.batch_weight_mass);
+        meta.put_f64s(&self.cum_reward);
+        sw.section(tag::META, &meta)?;
+        for (k, e) in self.experts.iter().enumerate() {
+            let mut pl = Payload::new();
+            pl.0.extend_from_slice(&to_vec(e)?);
+            sw.section(EXPERT_TAG_BASE + k as u32, &pl)?;
+        }
+        sw.finish()
+    }
+
+    fn restore(&mut self, r: &mut dyn std::io::Read) -> super::SnapshotResult<()> {
+        use super::snapshot::{restore_from_slice, tag, Cur, SnapshotError, SnapshotReader};
+        let mut rd = SnapshotReader::new(r)?;
+        rd.check_policy(&self.name)?;
+        let mut meta = None;
+        let mut expert_docs: Vec<Option<Vec<u8>>> =
+            (0..self.experts.len()).map(|_| None).collect();
+        while let Some((t, pl)) = rd.next_section()? {
+            if t == tag::META {
+                meta = Some(pl);
+            } else if t >= EXPERT_TAG_BASE {
+                let k = (t - EXPERT_TAG_BASE) as usize;
+                if k >= expert_docs.len() {
+                    return Err(SnapshotError::Corrupt("meta expert section out of range"));
+                }
+                expert_docs[k] = Some(pl);
+            }
+        }
+        let meta = meta.ok_or(SnapshotError::Truncated("meta META section"))?;
+        let mut cur = Cur::new(&meta);
+        let n = cur.get_usize()?;
+        let algo = match cur.get_u8()? {
+            0 => MetaAlgo::Eg,
+            1 => MetaAlgo::Hedge,
+            _ => return Err(SnapshotError::Corrupt("meta algo byte")),
+        };
+        let meta_eta = cur.get_f64()?;
+        let eta_pinned = cur.get_bool()?;
+        let batch = cur.get_usize()?;
+        let mix = match cur.get_u8()? {
+            0 => MetaMix::Frac,
+            1 => MetaMix::Sample,
+            _ => return Err(SnapshotError::Corrupt("meta mix byte")),
+        };
+        let pos_in_batch = cur.get_usize()?;
+        let horizon_rounds = cur.get_u64()?;
+        let grows = cur.get_u64()?;
+        let scratch_grows = cur.get_u64()?;
+        let active = cur.get_usize()?;
+        let mut st = [0u64; 4];
+        for x in &mut st {
+            *x = cur.get_u64()?;
+        }
+        let spare = cur.get_opt_f64()?;
+        let k_n = cur.get_usize()?;
+        let weights = cur.get_f64s()?;
+        let batch_reward = cur.get_f64s()?;
+        let batch_weight_mass = cur.get_f64()?;
+        let cum_reward = cur.get_f64s()?;
+        cur.finish()?;
+        if k_n != self.experts.len() {
+            return Err(SnapshotError::Corrupt("meta expert-count mismatch"));
+        }
+        if weights.len() != k_n
+            || batch_reward.len() != k_n
+            || cum_reward.len() != k_n
+            || active >= k_n
+            || batch == 0
+            || pos_in_batch >= batch
+        {
+            return Err(SnapshotError::Corrupt("meta state out of range"));
+        }
+        if !weights.iter().all(|w| w.is_finite() && *w >= 0.0)
+            || !(weights.iter().sum::<f64>() > 0.0)
+            || !meta_eta.is_finite()
+        {
+            return Err(SnapshotError::Corrupt("meta weight vector"));
+        }
+        for (k, doc) in expert_docs.iter().enumerate() {
+            let Some(doc) = doc else {
+                return Err(SnapshotError::Truncated("meta expert section"));
+            };
+            restore_from_slice(&mut self.experts[k], doc)?;
+        }
+        self.n = n;
+        self.algo = algo;
+        self.meta_eta = meta_eta;
+        self.eta_pinned = eta_pinned;
+        self.batch = batch;
+        self.mix = mix;
+        self.pos_in_batch = pos_in_batch;
+        self.horizon_rounds = horizon_rounds;
+        self.grows = grows;
+        self.scratch_grows = scratch_grows;
+        self.active = active;
+        self.rng = Xoshiro256pp::from_state(st, spare);
+        self.weights = weights;
+        self.batch_reward = batch_reward;
+        self.batch_weight_mass = batch_weight_mass;
+        self.cum_reward = cum_reward;
+        for buf in &mut self.expert_bufs {
+            buf.clear();
+            buf.reserve(self.batch);
+        }
+        Ok(())
+    }
+
+    /// Default `policy.*` walk plus the meta-learner's live state: the
+    /// weight vector, per-expert cumulative realized rewards, the step
+    /// size and the sampled expert — what the flight recorder captures
+    /// as the weight trajectory asserted by the CI `meta-smoke` job.
+    fn instruments(&self, v: &mut dyn crate::obs::InstrumentVisitor) {
+        let d = self.diag();
+        v.counter("policy.removed_coeffs", d.removed_coeffs);
+        v.counter("policy.sample_evictions", d.sample_evictions);
+        v.counter("policy.rebases", d.rebases);
+        v.counter("policy.scratch_grows", d.scratch_grows);
+        v.counter("policy.grows", d.grows);
+        v.gauge("policy.occupancy", self.occupancy());
+        v.counter("meta.experts", self.weights.len() as u64);
+        v.counter("meta.active", self.active as u64);
+        v.gauge("meta.eta", self.meta_eta);
+        for k in 0..self.weights.len() {
+            v.gauge(&self.weight_labels[k], self.weights[k]);
+            v.gauge(&self.reward_labels[k], self.cum_reward[k] + self.batch_reward[k]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{build, BuildOpts};
+    use super::*;
+    use crate::trace::synth;
+
+    fn opts(t: usize, b: usize, seed: u64) -> BuildOpts {
+        BuildOpts::new(t, b, seed)
+    }
+
+    fn drive(p: &mut dyn Policy, reqs: &[Request]) -> Vec<f64> {
+        reqs.iter().map(|&r| p.serve(r)).collect()
+    }
+
+    #[test]
+    fn weights_stay_on_the_simplex() {
+        let t = synth::zipf(200, 10_000, 0.9, 5);
+        let mut p = build(
+            "meta{experts=[ogb{batch=16},lru,ftpl],batch=16}",
+            200,
+            20,
+            &opts(10_000, 16, 5),
+            None,
+        )
+        .unwrap();
+        for &r in &t.requests {
+            p.request(r as u64);
+        }
+        let AnyPolicy::Meta(m) = &p else { panic!("not meta") };
+        let sum: f64 = m.weights().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "weights sum to {sum}");
+        assert!(m.weights().iter().all(|w| *w > 0.0 && *w < 1.0));
+    }
+
+    #[test]
+    fn eg_weights_track_the_better_expert() {
+        // Adversarial-for-FTPL stream: huge-noise FTPL freezes on its
+        // initial cache while LRU tracks the working set, so the meta
+        // weight must migrate to LRU.
+        let t = synth::zipf(100, 40_000, 1.2, 9);
+        let mut p = build(
+            "meta{experts=[ftpl{zeta=1e9},lru],batch=32,algo=eg}",
+            100,
+            10,
+            &opts(40_000, 32, 9),
+            None,
+        )
+        .unwrap();
+        for &r in &t.requests {
+            p.request(r as u64);
+        }
+        let AnyPolicy::Meta(m) = &p else { panic!("not meta") };
+        let rewards = m.expert_rewards();
+        assert!(
+            rewards[1] > rewards[0],
+            "LRU should out-hit frozen FTPL ({rewards:?})"
+        );
+        assert!(
+            m.weights()[1] > 0.9,
+            "weight should migrate to LRU: {:?}",
+            m.weights()
+        );
+    }
+
+    #[test]
+    fn sample_mix_is_seed_deterministic() {
+        let t = synth::zipf(100, 5_000, 0.8, 3);
+        let reqs: Vec<Request> = t.requests.iter().map(|&r| Request::unit(r as u64)).collect();
+        let spec = "meta{experts=[ogb{batch=8},lru],batch=8,mix=sample}";
+        let mut a = build(spec, 100, 10, &opts(5_000, 8, 7), None).unwrap();
+        let mut b = build(spec, 100, 10, &opts(5_000, 8, 7), None).unwrap();
+        assert_eq!(drive(&mut a, &reqs), drive(&mut b, &reqs));
+    }
+
+    #[test]
+    fn grow_fans_out_and_retunes_eta() {
+        let mut p = build(
+            "meta{experts=[ogb{batch=4},ftpl],batch=4}",
+            50,
+            5,
+            &opts(1_000, 4, 1),
+            None,
+        )
+        .unwrap();
+        let eta_before = {
+            let AnyPolicy::Meta(m) = &p else { panic!() };
+            m.meta_eta()
+        };
+        p.grow(80);
+        let eta_after = {
+            let AnyPolicy::Meta(m) = &p else { panic!() };
+            m.meta_eta()
+        };
+        assert!(eta_after < eta_before, "doubling trick must shrink eta");
+        // meta's own grow + one per catalog-sized expert (ogb, ftpl)
+        assert_eq!(p.diag().grows, 3, "diag grows: {}", p.diag().grows);
+        // grown ids are servable end-to-end
+        assert!(p.request(79) >= 0.0);
+        // growth to a smaller catalog is a no-op
+        p.grow(60);
+        let AnyPolicy::Meta(m) = &p else { panic!() };
+        assert_eq!(m.meta_eta(), eta_after);
+        assert_eq!(p.diag().grows, 3);
+    }
+
+    #[test]
+    fn pinned_eta_survives_growth() {
+        let mut p = build(
+            "meta{experts=[lru,fifo],batch=4,meta_eta=0.25}",
+            50,
+            5,
+            &opts(1_000, 4, 1),
+            None,
+        )
+        .unwrap();
+        p.grow(80);
+        let AnyPolicy::Meta(m) = &p else { panic!() };
+        assert_eq!(m.meta_eta(), 0.25);
+    }
+
+    #[test]
+    fn instruments_expose_weights_and_rewards() {
+        use crate::obs::InstrumentSet;
+        let t = synth::zipf(100, 2_000, 0.9, 2);
+        let mut p = build(
+            "meta{experts=[ogb{batch=8},lru],batch=8}",
+            100,
+            10,
+            &opts(2_000, 8, 2),
+            None,
+        )
+        .unwrap();
+        for &r in &t.requests {
+            p.request(r as u64);
+        }
+        let mut set = InstrumentSet::new();
+        p.instruments(&mut set);
+        let w0 = set.get("meta.expert0.weight").expect("weight gauge").as_f64();
+        let w1 = set.get("meta.expert1.weight").expect("weight gauge").as_f64();
+        assert!((w0 + w1 - 1.0).abs() < 1e-9, "gauges are the simplex");
+        assert!(set.get("meta.expert0.cum_reward").unwrap().as_f64() > 0.0);
+        assert_eq!(set.get("meta.experts").unwrap().as_f64(), 2.0);
+    }
+}
+

@@ -24,6 +24,7 @@ pub mod infinite;
 pub mod lfu;
 pub mod list;
 pub mod lru;
+pub mod meta;
 pub mod ogb;
 pub mod ogb_classic;
 pub mod omd;
@@ -39,12 +40,13 @@ pub use gds::Gds;
 pub use infinite::InfiniteCache;
 pub use lfu::Lfu;
 pub use lru::Lru;
+pub use meta::{MetaConfig, MetaPolicy};
 pub use ogb::Ogb;
 pub use ogb_classic::{CpuDenseStep, DenseStep, OgbClassic, OgbClassicMode};
 pub use omd::OmdFractional;
 pub use opt::Opt;
 pub use snapshot::{SnapshotError, SnapshotResult};
-pub use spec::{PolicyBuildCtx, PolicyRegistry, PolicySpec};
+pub use spec::{DynPolicy, MetaAlgo, MetaMix, PolicyBuildCtx, PolicyRegistry, PolicySpec};
 
 /// One weighted request: the paper's general objective (Eq. 1) rewards a
 /// hit on item `i` with `w_i`, not 1.  `weight = 1.0` recovers the unit
@@ -259,6 +261,9 @@ pub enum AnyPolicy {
     Omd(OmdFractional),
     Opt(Opt),
     Infinite(InfiniteCache),
+    /// Hedge/EG expert pool over nested `AnyPolicy` experts (§14); boxed
+    /// indirection lives inside `MetaPolicy`'s expert `Vec`
+    Meta(MetaPolicy),
     /// registry-built policy (open extension point, DESIGN.md §9)
     Dyn(Box<dyn Policy>),
 }
@@ -278,6 +283,7 @@ macro_rules! any_policy_dispatch {
             AnyPolicy::Omd($p) => $body,
             AnyPolicy::Opt($p) => $body,
             AnyPolicy::Infinite($p) => $body,
+            AnyPolicy::Meta($p) => $body,
             AnyPolicy::Dyn($p) => $body,
         }
     };
@@ -430,6 +436,8 @@ mod tests {
             "omd-frac",
             "opt",
             "infinite",
+            "meta{experts=[ogb{batch=4},lru,ftpl],batch=4}",
+            "meta{experts=[ogb{batch=4},lru],batch=4,mix=sample,algo=hedge}",
         ] {
             let mut p = by_name(name, 100, 25, 1000, 1, 42, Some(&t)).unwrap();
             let mut reward = 0.0;

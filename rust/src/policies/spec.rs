@@ -4,14 +4,18 @@
 //! lets tests, benches and external code add policies without editing
 //! `policies/mod.rs`.
 //!
-//! Grammar (one spec = one policy):
+//! Grammar (one spec = one policy; values may be nested specs):
 //!
 //! ```text
 //! spec   :=  kind [ '{' key=value (',' key=value)* '}' ]
+//! value  :=  scalar | '[' spec (',' spec)* ']'
 //! ```
 //!
-//! Numbers accept `1e6` / `1_000_000` forms.  Built-in kinds and their
-//! parameters (all optional; unset values fall back to [`BuildOpts`] and
+//! Parameter splitting is depth-tracked over `{}` and `[]`, so list
+//! values can carry full sub-specs with their own braces:
+//! `meta{experts=[ogb{batch=64},lru]}`.  Numbers accept `1e6` /
+//! `1_000_000` forms.  Built-in kinds and their parameters (all
+//! optional unless noted; unset values fall back to [`BuildOpts`] and
 //! the theory formulas):
 //!
 //! | kind               | parameters                                  |
@@ -23,8 +27,10 @@
 //! | `ogb-classic`      | `batch`, `eta`                              |
 //! | `ogb-classic-frac` | `batch`, `eta`                              |
 //! | `omd-frac`         | `batch`, `eta`                              |
+//! | `meta`             | `experts` (required list of non-meta specs), `algo` (`eg`\|`hedge`), `meta_eta`, `batch`, `mix` (`frac`\|`sample`) |
 //!
-//! Examples: `ogb{batch=64,rebase=1e6}`, `ftpl{zeta=25}`, `lru`.
+//! Examples: `ogb{batch=64,rebase=1e6}`, `ftpl{zeta=25}`, `lru`,
+//! `meta{experts=[ogb{batch=64},lru,ftpl],algo=eg,mix=sample}`.
 //!
 //! Any other kind resolves through the global [`PolicyRegistry`] at
 //! build time; registered constructors receive the raw key=value pairs
@@ -54,7 +60,50 @@ pub const BUILTIN_KINDS: &[&str] = &[
     "omd-frac",
     "opt",
     "infinite",
+    "meta",
 ];
+
+/// Meta-learner update rule (DESIGN.md §14): both are multiplicative
+/// weight updates over per-expert realized rewards; they differ in the
+/// gradient normalization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MetaAlgo {
+    /// Exponentiated gradient: the per-batch gradient is the expert's
+    /// mean reward per unit of request weight (scale-free in B).
+    #[default]
+    Eg,
+    /// Classic Hedge over gains: the raw per-batch expert reward.
+    Hedge,
+}
+
+impl MetaAlgo {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            MetaAlgo::Eg => "eg",
+            MetaAlgo::Hedge => "hedge",
+        }
+    }
+}
+
+/// How the meta policy serves (DESIGN.md §14).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MetaMix {
+    /// Weighted fractional mixture `Σ_k w_k · r_k` (fractional rewards).
+    #[default]
+    Frac,
+    /// One weight-sampled expert serves; re-sampled (seeded) at every
+    /// meta-batch boundary.  Integral when the experts are integral.
+    Sample,
+}
+
+impl MetaMix {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            MetaMix::Frac => "frac",
+            MetaMix::Sample => "sample",
+        }
+    }
+}
 
 /// A validated policy configuration.  `FromStr` parses the
 /// `kind{key=value,...}` grammar; `Display` renders the canonical text
@@ -90,6 +139,16 @@ pub enum PolicySpec {
         batch: Option<usize>,
         eta: Option<f64>,
     },
+    /// Expert-pool meta policy (DESIGN.md §14): Hedge/EG weights over a
+    /// list of sub-specs.  Experts may be any non-meta spec, including
+    /// registry-resolved kinds; nesting meta inside meta is rejected.
+    Meta {
+        experts: Vec<PolicySpec>,
+        algo: Option<MetaAlgo>,
+        meta_eta: Option<f64>,
+        batch: Option<usize>,
+        mix: Option<MetaMix>,
+    },
     /// Non-built-in kind, resolved through the [`PolicyRegistry`] when
     /// built (so specs can be parsed before the constructor registers).
     Registered {
@@ -124,23 +183,61 @@ impl PolicySpec {
                 fractional: true, ..
             } => "ogb-classic-frac",
             PolicySpec::OmdFrac { .. } => "omd-frac",
+            PolicySpec::Meta { .. } => "meta",
             PolicySpec::Registered { name, .. } => name,
         }
     }
 
     /// True for the fractional policies, whose rewards live in `(0, 1)`
     /// and cannot be represented by the server's hit/miss reply bitmap.
+    /// A meta policy is fractional when it serves the weighted mixture
+    /// (`mix=frac`, the default) or when any expert is fractional;
+    /// `mix=sample` over integral experts is servable.
     pub fn is_fractional(&self) -> bool {
-        matches!(
-            self,
-            PolicySpec::OgbFrac { .. }
-                | PolicySpec::OmdFrac { .. }
-                | PolicySpec::OgbClassic {
-                    fractional: true,
-                    ..
-                }
-        )
+        match self {
+            PolicySpec::Meta { experts, mix, .. } => {
+                mix.unwrap_or_default() == MetaMix::Frac
+                    || experts.iter().any(|e| e.is_fractional())
+            }
+            _ => matches!(
+                self,
+                PolicySpec::OgbFrac { .. }
+                    | PolicySpec::OmdFrac { .. }
+                    | PolicySpec::OgbClassic {
+                        fractional: true,
+                        ..
+                    }
+            ),
+        }
     }
+}
+
+/// Split `body` at `sep` occurrences that sit at brace/bracket depth 0,
+/// validating that `{}` / `[]` nest properly.  This is what lets list
+/// values carry full sub-specs (`experts=[ogb{batch=64},lru]`) through
+/// the flat-looking `key=value,...` grammar.
+fn split_depth0(body: &str, sep: char) -> Result<Vec<&str>> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, ch) in body.char_indices() {
+        match ch {
+            '{' | '[' => depth += 1,
+            '}' | ']' => {
+                depth = depth
+                    .checked_sub(1)
+                    .ok_or_else(|| anyhow::anyhow!("unbalanced `{ch}` in `{body}`"))?;
+            }
+            c if c == sep && depth == 0 => {
+                parts.push(&body[start..i]);
+                start = i + ch.len_utf8();
+            }
+            _ => {}
+        }
+    }
+    ensure!(depth == 0, "unclosed `{{` or `[` in `{body}`");
+    parts.push(&body[start..]);
+    Ok(parts)
 }
 
 impl FromStr for PolicySpec {
@@ -156,7 +253,7 @@ impl FromStr for PolicySpec {
                     bail!("policy spec `{text}`: missing closing `}}`");
                 };
                 let mut params = Vec::new();
-                for kv in body.split(',') {
+                for kv in split_depth0(body, ',')? {
                     let kv = kv.trim();
                     if kv.is_empty() {
                         continue;
@@ -277,6 +374,64 @@ impl FromStr for PolicySpec {
                     eta: f64_of("eta")?,
                 }
             }
+            "meta" => {
+                check_keys(&["experts", "algo", "meta_eta", "batch", "mix"])?;
+                let Some(list) = get("experts") else {
+                    bail!("policy `meta`: missing required `experts=[...]` list");
+                };
+                let Some(inner) = list
+                    .strip_prefix('[')
+                    .and_then(|s| s.strip_suffix(']'))
+                else {
+                    bail!("policy `meta`: `experts` must be a `[spec,...]` list (got `{list}`)");
+                };
+                let mut experts = Vec::new();
+                for e in split_depth0(inner, ',')? {
+                    let e = e.trim();
+                    if e.is_empty() {
+                        continue;
+                    }
+                    let sub: PolicySpec = e
+                        .parse()
+                        .with_context(|| format!("policy `meta`: bad expert spec `{e}`"))?;
+                    ensure!(
+                        !matches!(sub, PolicySpec::Meta { .. }),
+                        "policy `meta`: experts cannot nest another `meta`"
+                    );
+                    ensure!(
+                        !matches!(sub, PolicySpec::Opt),
+                        "policy `meta`: `opt` is a hindsight baseline, not a servable expert"
+                    );
+                    experts.push(sub);
+                }
+                ensure!(
+                    !experts.is_empty(),
+                    "policy `meta`: `experts` list must name at least one expert"
+                );
+                let algo = match get("algo") {
+                    None => None,
+                    Some("eg") => Some(MetaAlgo::Eg),
+                    Some("hedge") => Some(MetaAlgo::Hedge),
+                    Some(other) => bail!("policy `meta`: bad `algo` `{other}` (eg|hedge)"),
+                };
+                let mix = match get("mix") {
+                    None => None,
+                    Some("frac") => Some(MetaMix::Frac),
+                    Some("sample") => Some(MetaMix::Sample),
+                    Some(other) => bail!("policy `meta`: bad `mix` `{other}` (frac|sample)"),
+                };
+                let meta_eta = f64_of("meta_eta")?;
+                if let Some(e) = meta_eta {
+                    ensure!(e > 0.0, "policy `meta`: `meta_eta` must be positive");
+                }
+                PolicySpec::Meta {
+                    experts,
+                    algo,
+                    meta_eta,
+                    batch: usize_of("batch")?,
+                    mix,
+                }
+            }
             other => PolicySpec::Registered {
                 name: other.to_string(),
                 params,
@@ -326,6 +481,35 @@ impl fmt::Display for PolicySpec {
                     kv.push(("eta".into(), format!("{e}")));
                 }
             }
+            PolicySpec::Meta {
+                experts,
+                algo,
+                meta_eta,
+                batch,
+                mix,
+            } => {
+                let mut list = String::from("[");
+                for (i, e) in experts.iter().enumerate() {
+                    if i > 0 {
+                        list.push(',');
+                    }
+                    list.push_str(&e.to_string());
+                }
+                list.push(']');
+                kv.push(("experts".into(), list));
+                if let Some(a) = algo {
+                    kv.push(("algo".into(), a.as_str().to_string()));
+                }
+                if let Some(e) = meta_eta {
+                    kv.push(("meta_eta".into(), format!("{e}")));
+                }
+                if let Some(b) = batch {
+                    kv.push(("batch".into(), b.to_string()));
+                }
+                if let Some(m) = mix {
+                    kv.push(("mix".into(), m.as_str().to_string()));
+                }
+            }
             PolicySpec::Registered { params, .. } => kv = params.clone(),
             _ => {}
         }
@@ -357,6 +541,80 @@ impl PolicyBuildCtx<'_> {
 
 type Ctor = Arc<dyn Fn(&PolicyBuildCtx) -> Result<Box<dyn Policy>> + Send + Sync>;
 
+/// Wrapper around a registry-built `Box<dyn Policy>` that carries the
+/// ctor's `supports_batch` hint.  Registered policies that never
+/// override [`Policy::serve_batch`] silently fall back to the
+/// per-request default; when such a policy is handed a real multi-request
+/// batch (a meta expert chunk, a shard ring pop) this wrapper emits a
+/// warn-once span so the degradation is visible instead of silent.
+pub struct DynPolicy {
+    inner: Box<dyn Policy>,
+    supports_batch: bool,
+    warned: std::cell::Cell<bool>,
+}
+
+impl DynPolicy {
+    pub fn new(inner: Box<dyn Policy>, supports_batch: bool) -> Self {
+        Self {
+            inner,
+            supports_batch,
+            warned: std::cell::Cell::new(false),
+        }
+    }
+
+    /// The registration-time batching hint.
+    pub fn supports_batch(&self) -> bool {
+        self.supports_batch
+    }
+}
+
+impl Policy for DynPolicy {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn serve(&mut self, req: super::Request) -> f64 {
+        self.inner.serve(req)
+    }
+
+    fn serve_batch(&mut self, reqs: &[super::Request], rewards: &mut Vec<f64>) {
+        if reqs.len() > 1 && !self.supports_batch && !self.warned.get() {
+            self.warned.set(true);
+            crate::log_span!(
+                crate::util::logger::Level::Warn,
+                "dyn_policy_per_request_batch",
+                "policy" => self.inner.name(),
+                "batch" => reqs.len()
+            );
+        }
+        self.inner.serve_batch(reqs, rewards)
+    }
+
+    fn grow(&mut self, n_new: usize) {
+        self.inner.grow(n_new)
+    }
+
+    fn occupancy(&self) -> f64 {
+        self.inner.occupancy()
+    }
+
+    fn diag(&self) -> super::Diag {
+        self.inner.diag()
+    }
+
+    fn snapshot(&self, w: &mut dyn std::io::Write) -> super::SnapshotResult<()> {
+        self.inner.snapshot(w)
+    }
+
+    fn restore(&mut self, r: &mut dyn std::io::Read) -> super::SnapshotResult<()> {
+        self.inner.restore(r)
+    }
+
+    fn instruments(&self, v: &mut dyn crate::obs::InstrumentVisitor) {
+        self.inner.instruments(v)
+    }
+}
+
 /// Open policy registry: maps non-built-in kinds to constructors.  The
 /// process-global instance ([`PolicyRegistry::global`]) is what
 /// `policies::build` consults, so a policy registered from a test, a
@@ -364,7 +622,7 @@ type Ctor = Arc<dyn Fn(&PolicyBuildCtx) -> Result<Box<dyn Policy>> + Send + Sync
 /// sweep / bench / serve — no edit to `policies/mod.rs` required.
 #[derive(Default)]
 pub struct PolicyRegistry {
-    inner: Mutex<Vec<(String, Ctor)>>,
+    inner: Mutex<Vec<(String, Ctor, bool)>>,
 }
 
 impl PolicyRegistry {
@@ -379,8 +637,29 @@ impl PolicyRegistry {
     }
 
     /// Register a constructor under `name`.  Fails on built-in kinds and
-    /// on duplicates (use a fresh name per registration).
+    /// on duplicates (use a fresh name per registration).  Policies
+    /// registered this way are assumed to serve batches per-request
+    /// (the [`Policy::serve_batch`] default); use
+    /// [`PolicyRegistry::register_batched`] for constructors whose
+    /// policies override `serve_batch` with a real batched path.
     pub fn register<F>(&self, name: &str, ctor: F) -> Result<()>
+    where
+        F: Fn(&PolicyBuildCtx) -> Result<Box<dyn Policy>> + Send + Sync + 'static,
+    {
+        self.register_with_hint(name, ctor, false)
+    }
+
+    /// Register a constructor whose policies carry a real batched
+    /// `serve_batch` implementation — suppresses the per-request
+    /// fallback warning when the policy serves a meta/shard batch.
+    pub fn register_batched<F>(&self, name: &str, ctor: F) -> Result<()>
+    where
+        F: Fn(&PolicyBuildCtx) -> Result<Box<dyn Policy>> + Send + Sync + 'static,
+    {
+        self.register_with_hint(name, ctor, true)
+    }
+
+    fn register_with_hint<F>(&self, name: &str, ctor: F, supports_batch: bool) -> Result<()>
     where
         F: Fn(&PolicyBuildCtx) -> Result<Box<dyn Policy>> + Send + Sync + 'static,
     {
@@ -397,15 +676,15 @@ impl PolicyRegistry {
         );
         let mut g = self.inner.lock().unwrap();
         ensure!(
-            !g.iter().any(|(n, _)| n == name),
+            !g.iter().any(|(n, _, _)| n == name),
             "policy `{name}` is already registered"
         );
-        g.push((name.to_string(), Arc::new(ctor)));
+        g.push((name.to_string(), Arc::new(ctor), supports_batch));
         Ok(())
     }
 
     pub fn is_registered(&self, name: &str) -> bool {
-        self.inner.lock().unwrap().iter().any(|(n, _)| n == name)
+        self.inner.lock().unwrap().iter().any(|(n, _, _)| n == name)
     }
 
     /// Registered names, in registration order.
@@ -414,17 +693,17 @@ impl PolicyRegistry {
             .lock()
             .unwrap()
             .iter()
-            .map(|(n, _)| n.clone())
+            .map(|(n, _, _)| n.clone())
             .collect()
     }
 
-    fn get(&self, name: &str) -> Option<Ctor> {
+    fn get(&self, name: &str) -> Option<(Ctor, bool)> {
         self.inner
             .lock()
             .unwrap()
             .iter()
-            .find(|(n, _)| n == name)
-            .map(|(_, c)| c.clone())
+            .find(|(n, _, _)| n == name)
+            .map(|(_, c, b)| (c.clone(), *b))
     }
 }
 
@@ -523,8 +802,35 @@ pub(super) fn build_spec(
                 None => OmdFractional::with_theory_eta(n, c as f64, t_hint, b),
             })
         }
+        PolicySpec::Meta {
+            experts,
+            algo,
+            meta_eta,
+            batch,
+            mix,
+        } => {
+            let mut built = Vec::with_capacity(experts.len());
+            for (k, sub) in experts.iter().enumerate() {
+                built.push(
+                    build_spec(sub, n, c, opts, trace)
+                        .with_context(|| format!("meta expert {k} (`{sub}`)"))?,
+                );
+            }
+            AnyPolicy::Meta(super::MetaPolicy::new(
+                built,
+                super::MetaConfig {
+                    algo: algo.unwrap_or_default(),
+                    meta_eta: *meta_eta,
+                    batch: batch.unwrap_or(opts.batch),
+                    mix: mix.unwrap_or_default(),
+                    t_hint,
+                    seed: opts.seed,
+                    n,
+                },
+            )?)
+        }
         PolicySpec::Registered { name, params } => {
-            let Some(ctor) = PolicyRegistry::global().get(name) else {
+            let Some((ctor, supports_batch)) = PolicyRegistry::global().get(name) else {
                 let registered = PolicyRegistry::global().names();
                 bail!(
                     "unknown policy `{name}` (built-ins: {BUILTIN_KINDS:?}; registered: \
@@ -538,7 +844,10 @@ pub(super) fn build_spec(
                 params,
                 trace,
             };
-            AnyPolicy::Dyn(ctor(&ctx).with_context(|| format!("registered policy `{name}`"))?)
+            AnyPolicy::Dyn(Box::new(DynPolicy::new(
+                ctor(&ctx).with_context(|| format!("registered policy `{name}`"))?,
+                supports_batch,
+            )))
         }
     })
 }
@@ -663,5 +972,206 @@ mod tests {
         let opts = crate::policies::BuildOpts::new(100, 1, 1);
         let mut p = policies::build("fixed-spec-test{r=0.25}", 10, 2, &opts, None).unwrap();
         assert_eq!(p.serve(Request::weighted(1, 2.0)), 0.5);
+    }
+
+    #[test]
+    fn meta_specs_roundtrip_canonical_text() {
+        for text in [
+            "meta{experts=[lru]}",
+            "meta{experts=[ogb{batch=64},lru,ftpl{zeta=25}],algo=hedge,meta_eta=0.5,batch=32,\
+             mix=sample}",
+            "meta{experts=[ogb{batch=4,eta=0.05},ogb-frac{batch=8}],algo=eg,mix=frac}",
+        ] {
+            let spec: PolicySpec = text.parse().unwrap();
+            assert_eq!(
+                spec.to_string().replace(' ', ""),
+                text.replace(' ', "").replace('\n', ""),
+                "canonical rendering"
+            );
+            let again: PolicySpec = spec.to_string().parse().unwrap();
+            assert_eq!(spec, again);
+        }
+        // the inner commas belong to the expert specs, not the meta kv list
+        let spec: PolicySpec = "meta{experts=[ogb{batch=4,eta=0.1},lru]}".parse().unwrap();
+        let PolicySpec::Meta { experts, .. } = &spec else {
+            panic!("not meta")
+        };
+        assert_eq!(experts.len(), 2);
+        assert_eq!(experts[0].kind(), "ogb");
+        assert_eq!(experts[1].kind(), "lru");
+    }
+
+    #[test]
+    fn bad_meta_specs_rejected() {
+        for bad in [
+            "meta",                              // experts required
+            "meta{algo=eg}",                     // experts required
+            "meta{experts=[]}",                  // empty pool
+            "meta{experts=[meta{experts=[lru]}]}", // no nesting
+            "meta{experts=[opt]}",               // hindsight baseline
+            "meta{experts=[ogb{batch=4]}",       // unbalanced brace
+            "meta{experts=[lru],algo=bogus}",
+            "meta{experts=[lru],mix=bogus}",
+            "meta{experts=[lru],meta_eta=0}",
+            "meta{experts=[lru],meta_eta=-1}",
+            "meta{experts=[lru]],algo=eg}",      // unbalanced bracket
+        ] {
+            assert!(bad.parse::<PolicySpec>().is_err(), "`{bad}` should fail");
+        }
+    }
+
+    /// Satellite: parse∘display == id on random spec trees.  A seeded
+    /// generator builds arbitrary (possibly meta-wrapped) specs; every
+    /// one must render to text that parses back to an equal tree.
+    #[test]
+    fn parse_display_roundtrip_on_random_spec_trees() {
+        use crate::util::Xoshiro256pp;
+        let mut rng = Xoshiro256pp::seed_from(0x5eed_00c5);
+        fn leaf(rng: &mut Xoshiro256pp) -> PolicySpec {
+            match rng.next_below(8) {
+                0 => PolicySpec::Lru,
+                1 => PolicySpec::Lfu,
+                2 => PolicySpec::Fifo,
+                3 => PolicySpec::Ftpl {
+                    zeta: if rng.next_below(2) == 0 {
+                        None
+                    } else {
+                        Some((rng.next_below(100) + 1) as f64 / 4.0)
+                    },
+                },
+                4 => PolicySpec::Ogb {
+                    batch: Some((rng.next_below(128) + 1) as usize),
+                    eta: if rng.next_below(2) == 0 {
+                        None
+                    } else {
+                        Some((rng.next_below(1000) + 1) as f64 / 1000.0)
+                    },
+                    rebase: None,
+                },
+                5 => PolicySpec::OgbFrac {
+                    batch: Some((rng.next_below(64) + 1) as usize),
+                    eta: None,
+                    rebase: if rng.next_below(2) == 0 {
+                        None
+                    } else {
+                        Some((rng.next_below(1000) + 1) as f64)
+                    },
+                },
+                6 => PolicySpec::OmdFrac {
+                    batch: Some((rng.next_below(16) + 1) as usize),
+                    eta: Some((rng.next_below(100) + 1) as f64 / 100.0),
+                },
+                _ => PolicySpec::Arc,
+            }
+        }
+        for trial in 0..500 {
+            let spec = if rng.next_below(2) == 0 {
+                leaf(&mut rng)
+            } else {
+                let k = (rng.next_below(4) + 1) as usize;
+                PolicySpec::Meta {
+                    experts: (0..k).map(|_| leaf(&mut rng)).collect(),
+                    algo: match rng.next_below(3) {
+                        0 => None,
+                        1 => Some(MetaAlgo::Eg),
+                        _ => Some(MetaAlgo::Hedge),
+                    },
+                    meta_eta: if rng.next_below(2) == 0 {
+                        None
+                    } else {
+                        Some((rng.next_below(1000) + 1) as f64 / 1000.0)
+                    },
+                    batch: if rng.next_below(2) == 0 {
+                        None
+                    } else {
+                        Some((rng.next_below(256) + 1) as usize)
+                    },
+                    mix: match rng.next_below(3) {
+                        0 => None,
+                        1 => Some(MetaMix::Frac),
+                        _ => Some(MetaMix::Sample),
+                    },
+                }
+            };
+            let text = spec.to_string();
+            let back: PolicySpec = text
+                .parse()
+                .unwrap_or_else(|e| panic!("trial {trial}: `{text}` failed to re-parse: {e}"));
+            assert_eq!(spec, back, "trial {trial}: `{text}` did not round-trip");
+        }
+    }
+
+    #[test]
+    fn registry_batched_hint_controls_fallback_warning() {
+        struct NullCache;
+        impl Policy for NullCache {
+            fn name(&self) -> &str {
+                "null"
+            }
+            fn serve(&mut self, _req: Request) -> f64 {
+                0.0
+            }
+            fn occupancy(&self) -> f64 {
+                0.0
+            }
+        }
+        PolicyRegistry::global()
+            .register("plain-hint-test", |_ctx| Ok(Box::new(NullCache)))
+            .unwrap();
+        PolicyRegistry::global()
+            .register_batched("batched-hint-test", |_ctx| Ok(Box::new(NullCache)))
+            .unwrap();
+        assert_eq!(
+            PolicyRegistry::global().get("plain-hint-test").unwrap().1,
+            false
+        );
+        assert_eq!(
+            PolicyRegistry::global().get("batched-hint-test").unwrap().1,
+            true
+        );
+        // both build and serve a multi-request batch through the wrapper
+        let opts = crate::policies::BuildOpts::new(100, 1, 1);
+        for name in ["plain-hint-test", "batched-hint-test"] {
+            let mut p = policies::build(name, 10, 2, &opts, None).unwrap();
+            let reqs: Vec<Request> = (0..4).map(Request::unit).collect();
+            let mut out = Vec::new();
+            p.serve_batch(&reqs, &mut out);
+            assert_eq!(out, vec![0.0; 4]);
+        }
+    }
+
+    #[test]
+    fn meta_builds_and_serves_registered_experts() {
+        struct HalfCache;
+        impl Policy for HalfCache {
+            fn name(&self) -> &str {
+                "half"
+            }
+            fn serve(&mut self, req: Request) -> f64 {
+                0.5 * req.weight
+            }
+            fn occupancy(&self) -> f64 {
+                0.0
+            }
+        }
+        PolicyRegistry::global()
+            .register("half-meta-test", |_ctx| Ok(Box::new(HalfCache)))
+            .unwrap();
+        let opts = crate::policies::BuildOpts::new(1000, 4, 3);
+        let mut p = policies::build(
+            "meta{experts=[half-meta-test,lru],batch=4,mix=frac}",
+            50,
+            5,
+            &opts,
+            None,
+        )
+        .unwrap();
+        let mut total = 0.0;
+        for k in 0..64u64 {
+            total += p.request(k % 8);
+        }
+        // the fixed 0.5-reward expert floors the mixture reward
+        assert!(total > 0.0, "meta over registered expert produced no reward");
+        assert!(p.name().starts_with("META("), "name = {}", p.name());
     }
 }

@@ -101,7 +101,14 @@ impl HotpathConfig {
     /// Tiny single-repetition configuration for the CI smoke job.
     pub fn smoke() -> Self {
         Self {
-            policies: vec!["ogb".into(), "lru".into()],
+            policies: vec![
+                "ogb".into(),
+                "lru".into(),
+                // the meta expert pool rides the same zero-alloc contract
+                // as standalone OGB (DESIGN.md §14); trace-free experts
+                // only — the bench grid builds with `trace: None`
+                "meta{experts=[ogb{batch=64},lru],batch=64,mix=sample}".into(),
+            ],
             ns: vec![2_000],
             cache_pcts: vec![5.0],
             requests: 20_000,
@@ -477,9 +484,9 @@ mod tests {
         let mut cfg = HotpathConfig::smoke();
         cfg.requests = 5_000; // keep the unit test quick
         let r = run_hotpath(&cfg).unwrap();
-        // 2 policies x (per_request baseline B=1, per_request twin B=64,
-        // batched B=64) rows
-        assert_eq!(r.rows.len(), 6);
+        // 3 policies (ogb, lru, meta) x (per_request baseline B=1,
+        // per_request twin B=64, batched B=64) rows
+        assert_eq!(r.rows.len(), 9);
         for row in &r.rows {
             assert!(row.ns_per_request > 0.0, "{} {}", row.policy, row.mode);
             assert!(row.pops_per_request >= 0.0);
@@ -495,9 +502,13 @@ mod tests {
             .rows
             .iter()
             .any(|r| r.mode == "per_request" && r.policy_batch == 64));
-        // OGB's steady-state scratch buffers must not grow mid-measurement
-        // in either mode
-        for ogb in r.rows.iter().filter(|r| r.policy == "ogb") {
+        // Steady-state scratch buffers must not grow mid-measurement in
+        // either mode — for standalone OGB and for the meta expert pool
+        for ogb in r
+            .rows
+            .iter()
+            .filter(|r| r.policy == "ogb" || r.policy.starts_with("meta"))
+        {
             assert_eq!(
                 ogb.scratch_grows, 0,
                 "{} mode grew a scratch buffer",

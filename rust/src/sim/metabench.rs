@@ -1,0 +1,428 @@
+//! Meta-caching benchmark (DESIGN.md §14): meta vs each of its own
+//! experts vs hindsight OPT across the scenario grid, with an empirical
+//! meta-vs-best-expert regret series per scenario — the numbers behind
+//! the committed `BENCH_meta.json` and the CI `meta-smoke` job.
+//!
+//! For every scenario the meta policy and **fresh standalone instances**
+//! of its experts replay the identical materialized trace side-by-side
+//! (one shared [`regret_vs_best_expert`] pass pins the best expert in
+//! hindsight, the per-policy totals and the checkpointed regret series);
+//! OPT comes from the trace's top-C count oracle.  The claim under test:
+//! on the adversarial-for-OGB scenarios (diurnal, flash-crowd, drift)
+//! the meta policy's hit ratio tracks the best expert within the
+//! sublinear hedging cost — CI asserts both the hit-ratio tolerance and
+//! a regret growth exponent < 1 on the smoke grid.
+//!
+//! With `--obs-out`, each scenario additionally replays the meta policy
+//! in windows, emitting one windowed record plus one instruments record
+//! per window — the per-expert weight trajectory
+//! (`meta.expert{k}.weight`) the flight recorder makes inspectable.
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::log_info;
+use crate::obs::{provenance_label, FlightRecorder, InstrumentSet, WindowRecord};
+use crate::policies::{self, BuildOpts, Policy, PolicySpec};
+use crate::sim::regret::{regret_growth_exponent, regret_vs_best_expert, RegretPoint};
+use crate::trace::stream::{self, SourceSpec};
+use crate::trace::Trace;
+use crate::util::csv::json::Json;
+
+/// Metabench configuration.
+#[derive(Debug, Clone)]
+pub struct MetaBenchConfig {
+    /// the `meta{experts=[...],...}` spec under test
+    pub meta_spec: String,
+    /// cache size as a percentage of each scenario's catalog
+    pub cache_pct: f64,
+    /// batch size B handed to the policies (spec-level values win)
+    pub batch: usize,
+    pub seed: u64,
+    /// cap on replayed requests per scenario (0 = scenario horizon)
+    pub max_requests: usize,
+    /// regret checkpoints per scenario (log-spaced)
+    pub regret_points: usize,
+    /// windows per scenario for the obs weight-trajectory replay
+    pub obs_windows: usize,
+    /// smoke grid (small, CI-sized) vs the full grid (adds realworld)
+    pub smoke: bool,
+}
+
+impl Default for MetaBenchConfig {
+    fn default() -> Self {
+        Self {
+            meta_spec: "meta{experts=[ogb{batch=64},lru,ftpl],batch=64}".into(),
+            cache_pct: 5.0,
+            batch: 64,
+            seed: 42,
+            max_requests: 0,
+            regret_points: 24,
+            obs_windows: 8,
+            smoke: false,
+        }
+    }
+}
+
+/// One policy's outcome on one scenario.
+#[derive(Debug, Clone)]
+pub struct MetaBenchCell {
+    /// spec text: `meta`, the expert's canonical spec, or `opt`
+    pub policy: String,
+    pub hit_ratio: f64,
+    pub total_reward: f64,
+}
+
+/// One scenario's outcome.
+#[derive(Debug, Clone)]
+pub struct MetaScenarioResult {
+    pub name: String,
+    pub spec: String,
+    pub catalog: usize,
+    pub c: usize,
+    pub requests: usize,
+    /// meta first, then each expert in pool order, then `opt`
+    pub cells: Vec<MetaBenchCell>,
+    /// canonical spec text of the best expert in hindsight
+    pub best_expert: String,
+    /// log-log slope of the meta-vs-best-expert regret tail (< 1 ⟹
+    /// sublinear; ~0 when meta beats the best expert outright)
+    pub regret_growth_exponent: f64,
+    /// checkpointed meta-vs-best-expert series (Hedge bound included)
+    pub regret: Vec<RegretPoint>,
+    pub elapsed_s: f64,
+}
+
+/// Whole-grid outcome.
+#[derive(Debug, Clone)]
+pub struct MetaBenchResult {
+    pub meta_spec: String,
+    pub seed: u64,
+    pub cache_pct: f64,
+    pub scenarios: Vec<MetaScenarioResult>,
+    pub wall_s: f64,
+}
+
+/// The scenario families of the grid.  The smoke grid is CI-sized
+/// (seconds, 4 families); the full grid scales the horizons up and adds
+/// the realworld trace twin.
+pub fn scenario_grid(smoke: bool) -> Vec<(&'static str, String)> {
+    if smoke {
+        vec![
+            ("stationary", "zipf:n=2000,t=60000,s=0.9".into()),
+            (
+                "drift",
+                "drift-zipf:n=2000,t=60000,s=0.8,swap-every=2000".into(),
+            ),
+            ("diurnal", "diurnal:n=2000,t=60000,s=0.9,period=10000".into()),
+            (
+                "flash",
+                "flash:n=2000,t=60000,s=0.9,p-on=0.001,p-off=0.005,crowd-k=40,crowd-q=0.7".into(),
+            ),
+        ]
+    } else {
+        vec![
+            ("stationary", "zipf:n=20000,t=400000,s=0.9".into()),
+            (
+                "drift",
+                "drift-zipf:n=20000,t=400000,s=0.8,swap-every=10000".into(),
+            ),
+            (
+                "diurnal",
+                "diurnal:n=20000,t=400000,s=0.9,period=50000".into(),
+            ),
+            ("flash", "flash:n=20000,t=400000,s=0.9".into()),
+            ("realworld", "realworld:cdn,scale=0.02".into()),
+        ]
+    }
+}
+
+/// Run the grid.  `rec` (from `--obs-out`) additionally captures the
+/// windowed weight trajectories.
+pub fn run_metabench(
+    cfg: &MetaBenchConfig,
+    mut rec: Option<&mut FlightRecorder>,
+) -> Result<MetaBenchResult> {
+    let wall0 = Instant::now();
+    let spec: PolicySpec = cfg
+        .meta_spec
+        .parse()
+        .with_context(|| format!("metabench spec `{}`", cfg.meta_spec))?;
+    let PolicySpec::Meta { experts, .. } = &spec else {
+        anyhow::bail!(
+            "metabench needs a `meta{{experts=[...]}}` spec, got `{}`",
+            cfg.meta_spec
+        );
+    };
+    ensure!(
+        cfg.cache_pct > 0.0 && cfg.cache_pct <= 100.0,
+        "cache-pct out of (0, 100]"
+    );
+    let expert_texts: Vec<String> = experts.iter().map(|e| e.to_string()).collect();
+
+    let mut scenarios = Vec::new();
+    for (name, source_text) in scenario_grid(cfg.smoke) {
+        let t0 = Instant::now();
+        let source = SourceSpec::parse(&source_text)
+            .with_context(|| format!("metabench scenario `{name}`"))?;
+        let mut built = source.build(cfg.seed)?;
+        let trace: Trace = stream::materialize(built.as_mut(), cfg.max_requests);
+        ensure!(trace.len() > 1, "scenario `{name}` produced no requests");
+        let catalog = trace.catalog;
+        let c = ((catalog as f64 * cfg.cache_pct / 100.0) as usize).clamp(1, catalog);
+        let opts = BuildOpts::new(trace.len(), cfg.batch, cfg.seed);
+
+        // one shared pass: meta + fresh standalone experts, side by side
+        let mut meta = policies::build_spec(&spec, catalog, c, &opts, None)
+            .with_context(|| format!("metabench meta policy on `{name}`"))?;
+        let mut standalone = Vec::with_capacity(experts.len());
+        for e in experts {
+            standalone.push(
+                policies::build_spec(e, catalog, c, &opts, None)
+                    .with_context(|| format!("metabench expert `{e}` on `{name}`"))?,
+            );
+        }
+        let mut pool: Vec<&mut dyn Policy> = standalone
+            .iter_mut()
+            .map(|p| p as &mut dyn Policy)
+            .collect();
+        let series =
+            regret_vs_best_expert(&mut meta, &mut pool, &trace, cfg.batch, cfg.regret_points);
+
+        let t_total = trace.len() as f64;
+        let mut cells = Vec::with_capacity(experts.len() + 2);
+        cells.push(MetaBenchCell {
+            policy: "meta".into(),
+            hit_ratio: series.meta_total / t_total,
+            total_reward: series.meta_total,
+        });
+        for (k, text) in expert_texts.iter().enumerate() {
+            cells.push(MetaBenchCell {
+                policy: text.clone(),
+                hit_ratio: series.expert_total[k] / t_total,
+                total_reward: series.expert_total[k],
+            });
+        }
+        let opt_hits = trace.opt_hits(c) as f64;
+        cells.push(MetaBenchCell {
+            policy: "opt".into(),
+            hit_ratio: opt_hits / t_total,
+            total_reward: opt_hits,
+        });
+
+        // weight-trajectory replay for the flight recorder
+        if let Some(r) = rec.as_deref_mut() {
+            record_weight_trajectory(&spec, &trace, catalog, c, &opts, cfg.obs_windows, r)?;
+        }
+
+        let exponent = regret_growth_exponent(&series.points);
+        log_info!(
+            "metabench `{name}`: meta hit {:.4}, best expert `{}` hit {:.4}, regret exp {:.2}",
+            cells[0].hit_ratio,
+            expert_texts[series.best_expert],
+            series.expert_total[series.best_expert] / t_total,
+            exponent
+        );
+        scenarios.push(MetaScenarioResult {
+            name: name.to_string(),
+            spec: source_text,
+            catalog,
+            c,
+            requests: trace.len(),
+            cells,
+            best_expert: expert_texts[series.best_expert].clone(),
+            regret_growth_exponent: exponent,
+            regret: series.points,
+            elapsed_s: t0.elapsed().as_secs_f64(),
+        });
+    }
+
+    Ok(MetaBenchResult {
+        meta_spec: spec.to_string(),
+        seed: cfg.seed,
+        cache_pct: cfg.cache_pct,
+        scenarios,
+        wall_s: wall0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Replay a fresh meta policy over `trace` in `windows` chunks, emitting
+/// one windowed record plus one instruments walk per chunk — the weight
+/// trajectory (`meta.expert{k}.weight` gauges over time).
+fn record_weight_trajectory(
+    spec: &PolicySpec,
+    trace: &Trace,
+    catalog: usize,
+    c: usize,
+    opts: &BuildOpts,
+    windows: usize,
+    rec: &mut FlightRecorder,
+) -> Result<()> {
+    let mut meta = policies::build_spec(spec, catalog, c, opts, None)?;
+    let windows = windows.max(2);
+    let per = (trace.len() / windows).max(1);
+    let mut set = InstrumentSet::new();
+    let mut served = 0usize;
+    while served < trace.len() {
+        let end = (served + per).min(trace.len());
+        let w0 = Instant::now();
+        let mut reward = 0.0;
+        for &r in &trace.requests[served..end] {
+            reward += meta.request(r as u64);
+        }
+        rec.record_window(&WindowRecord {
+            requests: (end - served) as u64,
+            hits: reward.round().max(0.0) as u64,
+            elapsed_s: w0.elapsed().as_secs_f64(),
+            ..Default::default()
+        });
+        set.clear();
+        meta.instruments(&mut set);
+        rec.record_instruments(&set);
+        served = end;
+    }
+    Ok(())
+}
+
+impl MetaBenchResult {
+    /// Machine-readable snapshot (`BENCH_meta.json`), provenance-labeled
+    /// like every committed BENCH file.
+    pub fn write_bench_json<P: AsRef<Path>>(&self, path: P) -> Result<PathBuf> {
+        let scenarios: Vec<Json> = self
+            .scenarios
+            .iter()
+            .map(|s| {
+                let cells: Vec<Json> = s
+                    .cells
+                    .iter()
+                    .map(|c| {
+                        Json::obj(vec![
+                            ("policy", Json::Str(c.policy.clone())),
+                            ("hit_ratio", Json::Num(c.hit_ratio)),
+                            ("total_reward", Json::Num(c.total_reward)),
+                        ])
+                    })
+                    .collect();
+                let regret: Vec<Json> = s
+                    .regret
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("t", Json::Num(p.t as f64)),
+                            ("regret", Json::Num(p.regret)),
+                            ("bound", Json::Num(p.bound)),
+                        ])
+                    })
+                    .collect();
+                Json::obj(vec![
+                    ("name", Json::Str(s.name.clone())),
+                    ("spec", Json::Str(s.spec.clone())),
+                    ("catalog", Json::Num(s.catalog as f64)),
+                    ("c", Json::Num(s.c as f64)),
+                    ("requests", Json::Num(s.requests as f64)),
+                    ("best_expert", Json::Str(s.best_expert.clone())),
+                    (
+                        "regret_growth_exponent",
+                        Json::Num(s.regret_growth_exponent),
+                    ),
+                    ("cells", Json::Arr(cells)),
+                    ("regret", Json::Arr(regret)),
+                    ("elapsed_s", Json::Num(s.elapsed_s)),
+                ])
+            })
+            .collect();
+        let j = Json::obj(vec![
+            ("experiment", Json::Str("meta".into())),
+            ("provenance", Json::Str(provenance_label())),
+            ("meta_spec", Json::Str(self.meta_spec.clone())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("cache_pct", Json::Num(self.cache_pct)),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("scenarios", Json::Arr(scenarios)),
+        ]);
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("mkdir -p {}", dir.display()))?;
+            }
+        }
+        std::fs::write(&path, j.render() + "\n")
+            .with_context(|| format!("write {}", path.display()))?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> MetaBenchConfig {
+        MetaBenchConfig {
+            meta_spec: "meta{experts=[ogb{batch=32},lru],batch=32}".into(),
+            cache_pct: 5.0,
+            batch: 32,
+            seed: 7,
+            max_requests: 8_000,
+            regret_points: 12,
+            obs_windows: 4,
+            smoke: true,
+        }
+    }
+
+    #[test]
+    fn smoke_grid_runs_and_meta_tracks_pool() {
+        let r = run_metabench(&tiny_cfg(), None).unwrap();
+        assert_eq!(r.scenarios.len(), 4);
+        for s in &r.scenarios {
+            assert_eq!(s.requests, 8_000, "{}", s.name);
+            // meta + 2 experts + opt
+            assert_eq!(s.cells.len(), 4, "{}", s.name);
+            assert_eq!(s.cells[0].policy, "meta");
+            assert_eq!(s.cells.last().unwrap().policy, "opt");
+            assert!(!s.regret.is_empty());
+            // meta is within the pool's envelope at this tiny horizon:
+            // no worse than the worst expert by a wide margin
+            let best = s
+                .cells
+                .iter()
+                .filter(|c| c.policy != "meta" && c.policy != "opt")
+                .map(|c| c.hit_ratio)
+                .fold(0.0f64, f64::max);
+            assert!(
+                s.cells[0].hit_ratio >= best - 0.1,
+                "{}: meta {:.4} vs best expert {:.4}",
+                s.name,
+                s.cells[0].hit_ratio,
+                best
+            );
+        }
+    }
+
+    #[test]
+    fn bench_json_has_provenance_and_structure() {
+        let mut cfg = tiny_cfg();
+        cfg.max_requests = 4_000;
+        let r = run_metabench(&cfg, None).unwrap();
+        let dir = std::env::temp_dir().join("ogb_metabench_test");
+        let p = r.write_bench_json(dir.join("BENCH_meta.json")).unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert!(text.contains("\"experiment\":\"meta\""));
+        assert!(text.contains("\"provenance\":\"measured:"));
+        assert!(text.contains("\"best_expert\":"));
+        assert!(text.contains("\"regret_growth_exponent\":"));
+        assert!(text.contains("\"policy\":\"meta\""));
+        assert!(text.contains("\"policy\":\"opt\""));
+        assert!(text.contains("\"policy\":\"ogb{batch=32}\""));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_non_meta_specs() {
+        let mut cfg = tiny_cfg();
+        cfg.meta_spec = "lru".into();
+        assert!(run_metabench(&cfg, None).is_err());
+    }
+}

@@ -6,7 +6,9 @@
 //! policy × cache-size [`sweep`] runner, the request [`hotpath`]
 //! microbench suite behind `ogb-cache bench` / `BENCH_hotpath.json`,
 //! the [`shardbench`] multi-core scaling suite behind
-//! `ogb-cache serve --smoke` / `BENCH_shard.json`, the raw-trace
+//! `ogb-cache serve --smoke` / `BENCH_shard.json`, the meta-caching
+//! expert-pool grid [`metabench`] behind `ogb-cache metabench` /
+//! `BENCH_meta.json` (DESIGN.md §14), the raw-trace
 //! [`replay`] harness (open-catalog ingestion, DESIGN.md §10) behind
 //! `ogb-cache replay` / `BENCH_replay.json`, the network
 //! [`serverbench`] load generator behind `ogb-cache loadgen` /
@@ -17,6 +19,7 @@
 pub mod engine;
 pub mod fault;
 pub mod hotpath;
+pub mod metabench;
 pub mod regret;
 pub mod replay;
 pub mod serverbench;
@@ -26,7 +29,13 @@ pub mod sweep;
 pub use engine::{run, run_source, run_source_obs, serve_growing, RunConfig, RunResult};
 pub use fault::{Fault, FaultPlan, ShardFaults};
 pub use hotpath::{run_hotpath, run_hotpath_obs, HotpathConfig, HotpathResult, HotpathRow};
-pub use regret::{regret_series, regret_series_weighted, RegretPoint, StreamingOpt};
+pub use metabench::{
+    run_metabench, MetaBenchCell, MetaBenchConfig, MetaBenchResult, MetaScenarioResult,
+};
+pub use regret::{
+    regret_growth_exponent, regret_series, regret_series_weighted, regret_vs_best_expert,
+    ExpertRegretSeries, RegretPoint, StreamingOpt,
+};
 pub use replay::{run_replay, run_replay_obs, ReplayConfig, ReplayMode, ReplayResult, ReplayRow};
 pub use serverbench::{run_serverbench, ServerBenchConfig, ServerBenchResult};
 pub use shardbench::{

@@ -32,6 +32,10 @@ const KINDS: &[&str] = &[
     "ogb-classic{batch=8,eta=0.05}",
     "ogb-classic-frac{batch=8,eta=0.05}",
     "omd-frac{batch=4,eta=0.05}",
+    // meta expert pools (ISSUE 9): the snapshot frames each expert's own
+    // OGBS document as a section, plus the weight vector — both mixes
+    "meta{experts=[ogb{batch=4,eta=0.05},lru,ftpl{zeta=5}],batch=4,meta_eta=0.3}",
+    "meta{experts=[ogb{batch=4,eta=0.05},lru],batch=4,mix=sample}",
 ];
 
 const N: usize = 60;
@@ -131,7 +135,14 @@ fn post_grow_state_round_trips() {
 
 #[test]
 fn corrupt_bytes_are_typed_errors_never_panics() {
-    for kind in ["lru", "ftpl{zeta=5}", "ogb{batch=4,eta=0.05}"] {
+    for kind in [
+        "lru",
+        "ftpl{zeta=5}",
+        "ogb{batch=4,eta=0.05}",
+        // single-byte flips inside an embedded expert section must be
+        // caught by the enclosing section's checksum
+        "meta{experts=[ogb{batch=4,eta=0.05},lru],batch=4}",
+    ] {
         let tr = synth::zipf(N, 800, 1.0, 9);
         let mut p = build(kind, N, &tr);
         drive(&mut p, &tr.requests);
@@ -171,4 +182,30 @@ fn mismatched_spec_is_policy_mismatch() {
         }
         other => panic!("expected PolicyMismatch, got {other:?}"),
     }
+}
+
+#[test]
+fn meta_expert_count_mismatch_is_policy_mismatch() {
+    // the meta name encodes the expert pool, so restoring a two-expert
+    // snapshot into a one-expert instance is a shape mismatch, not a
+    // silent partial restore
+    let tr = synth::zipf(N, 500, 1.0, 5);
+    let mut a = build("meta{experts=[ogb{batch=4,eta=0.05},lru],batch=4}", N, &tr);
+    drive(&mut a, &tr.requests);
+    let bytes = snapshot::to_vec(&a).unwrap();
+    let mut b = build("meta{experts=[ogb{batch=4,eta=0.05}],batch=4}", N, &tr);
+    match snapshot::restore_from_slice(&mut b, &bytes) {
+        Err(SnapshotError::PolicyMismatch { expected, found }) => {
+            assert_eq!(expected, "META(eg,b=4,frac)[OGB(b=4)]");
+            assert_eq!(found, "META(eg,b=4,frac)[OGB(b=4),LRU]");
+        }
+        other => panic!("expected PolicyMismatch, got {other:?}"),
+    }
+    // same pool, different expert parameters: also a mismatch (the
+    // expert's own check_policy line catches it even when K agrees)
+    let mut c = build("meta{experts=[ogb{batch=8,eta=0.05},lru],batch=4}", N, &tr);
+    assert!(matches!(
+        snapshot::restore_from_slice(&mut c, &bytes),
+        Err(SnapshotError::PolicyMismatch { .. })
+    ));
 }

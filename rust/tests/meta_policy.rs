@@ -1,0 +1,152 @@
+//! Meta-caching differential suite (ISSUE 9, DESIGN.md §14).
+//!
+//! The meta policy is a *combinator*: every guarantee it offers reduces
+//! to trajectory identities against its own experts, so the tests here
+//! are differentials, not golden values:
+//!
+//! 1. **degenerate pool** — `meta{experts=[X]}` is bit-identical to a
+//!    bare `X` for every expert kind and both mixes (K=1 pins the weight
+//!    vector at exactly 1.0, and `1.0 * r == r` in IEEE 754).
+//! 2. **chunk independence** — serve_batch at chunk sizes {1, 3, B,
+//!    B+1, full} equals per-request serve: weight updates happen at the
+//!    meta batch boundary regardless of how the caller slices the
+//!    stream.
+//! 3. **mid-stream checkpoint** — snapshot at a point co-prime with the
+//!    meta batch (mid-round, partial `batch_reward` accumulators),
+//!    restore into a fresh instance, continue: bit-identical rewards,
+//!    occupancy, diagnostics, and re-snapshot bytes.
+//! 4. **steady-state allocation contract** — after warm-up, further
+//!    serving grows no scratch buffer anywhere in the pool
+//!    (`diag().scratch_grows` is flat), the precondition for the
+//!    `bench --smoke` zero-allocs row.
+
+use ogb_cache::policies::{self, BuildOpts, Policy, Request};
+use ogb_cache::trace::synth;
+
+const N: usize = 300;
+const C: usize = 30;
+const B: usize = 16;
+
+fn build(spec: &str, tr: &ogb_cache::trace::Trace) -> policies::AnyPolicy {
+    let opts = BuildOpts::new(tr.len(), B, 7);
+    policies::build(spec, N, C, &opts, Some(tr)).unwrap()
+}
+
+fn drive(p: &mut policies::AnyPolicy, reqs: &[u32]) -> Vec<u64> {
+    reqs.iter().map(|&r| p.request(r as u64).to_bits()).collect()
+}
+
+#[test]
+fn single_expert_pool_is_identical_to_the_bare_expert() {
+    let tr = synth::zipf(N, 6_000, 0.9, 21);
+    for expert in ["ogb{batch=16}", "lru", "ftpl{zeta=5}"] {
+        for mix in ["frac", "sample"] {
+            let meta_spec = format!("meta{{experts=[{expert}],batch=16,mix={mix}}}");
+            let mut bare = build(expert, &tr);
+            let mut pool = build(&meta_spec, &tr);
+            let a = drive(&mut bare, &tr.requests);
+            let b = drive(&mut pool, &tr.requests);
+            assert_eq!(a, b, "{meta_spec}: trajectory diverged from `{expert}`");
+            assert_eq!(
+                bare.occupancy().to_bits(),
+                pool.occupancy().to_bits(),
+                "{meta_spec}: occupancy diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn chunked_serving_is_identical_to_per_request() {
+    let tr = synth::zipf(N, 6_000, 0.9, 22);
+    let reqs: Vec<Request> = tr
+        .requests
+        .iter()
+        .map(|&r| Request::unit(r as u64))
+        .collect();
+    for spec in [
+        "meta{experts=[ogb,lru,ftpl]}",
+        "meta{experts=[ogb,lru],mix=sample}",
+        "meta{experts=[ogb{batch=8},lfu],algo=hedge,meta_eta=0.4}",
+    ] {
+        let mut p = build(spec, &tr);
+        let reference: Vec<u64> = reqs.iter().map(|&r| p.serve(r).to_bits()).collect();
+        for chunk in [1usize, 3, B, B + 1, reqs.len()] {
+            let mut q = build(spec, &tr);
+            let mut rewards: Vec<f64> = Vec::new();
+            for slice in reqs.chunks(chunk) {
+                q.serve_batch(slice, &mut rewards);
+            }
+            let got: Vec<u64> = rewards.iter().map(|r| r.to_bits()).collect();
+            assert_eq!(got, reference, "{spec} chunk={chunk}: rewards diverged");
+            assert_eq!(
+                p.occupancy().to_bits(),
+                q.occupancy().to_bits(),
+                "{spec} chunk={chunk}: occupancy diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn mid_stream_snapshot_restores_bit_identically() {
+    let tr = synth::zipf(N, 4_000, 1.0, 23);
+    for spec in [
+        "meta{experts=[ogb{batch=4},lru,ftpl{zeta=5}],batch=4}",
+        "meta{experts=[ogb{batch=4},lru],batch=4,mix=sample}",
+    ] {
+        // 997 is co-prime with batch=4: the snapshot lands mid-round with
+        // partial batch_reward accumulators and a non-zero pos_in_batch
+        let split = 997;
+        let mut reference = build(spec, &tr);
+        let ref_rewards = drive(&mut reference, &tr.requests);
+
+        let mut twin = build(spec, &tr);
+        drive(&mut twin, &tr.requests[..split]);
+        let bytes = policies::snapshot::to_vec(&twin).unwrap();
+
+        let mut restored = build(spec, &tr);
+        policies::snapshot::restore_from_slice(&mut restored, &bytes).unwrap();
+        let post = drive(&mut restored, &tr.requests[split..]);
+        assert_eq!(post, ref_rewards[split..], "{spec}: continuation diverged");
+        assert_eq!(
+            reference.occupancy().to_bits(),
+            restored.occupancy().to_bits(),
+            "{spec}: occupancy diverged"
+        );
+        assert_eq!(
+            format!("{:?}", reference.diag()),
+            format!("{:?}", restored.diag()),
+            "{spec}: diagnostics diverged"
+        );
+        // the restored state re-serializes to the exact same bytes
+        let bytes2 = policies::snapshot::to_vec(&restored).unwrap();
+        assert_eq!(bytes, bytes2, "{spec}: snapshot bytes not stable");
+    }
+}
+
+#[test]
+fn steady_state_grows_no_scratch_buffers() {
+    let tr = synth::zipf(N, 12_000, 0.9, 24);
+    let reqs: Vec<Request> = tr
+        .requests
+        .iter()
+        .map(|&r| Request::unit(r as u64))
+        .collect();
+    let mut p = build("meta{experts=[ogb,lru,ftpl]}", &tr);
+    let mut rewards = Vec::with_capacity(reqs.len());
+    // warm-up: first half settles every scratch buffer in the pool
+    for slice in reqs[..reqs.len() / 2].chunks(B) {
+        p.serve_batch(slice, &mut rewards);
+    }
+    let warm = p.diag().scratch_grows;
+    for slice in reqs[reqs.len() / 2..].chunks(B) {
+        p.serve_batch(slice, &mut rewards);
+    }
+    assert_eq!(
+        p.diag().scratch_grows,
+        warm,
+        "steady-state serving grew a scratch buffer in the expert pool"
+    );
+    assert_eq!(rewards.len(), reqs.len());
+}

@@ -34,6 +34,12 @@ const ALL_POLICIES: &[&str] = &[
     "omd-frac",
     "opt",
     "infinite",
+    // meta expert pools (DESIGN.md §14) ride the same contracts: the
+    // chunked differential below is the chunk-boundary-vs-expert-batch
+    // alignment test (meta batch B=16 equals the suite's B, so chunks
+    // {1,3,B,B+1,full} straddle weight-update boundaries every way)
+    "meta{experts=[ogb,lru,ftpl]}",
+    "meta{experts=[ogb,lru],mix=sample,algo=hedge}",
 ];
 
 /// The policy batch size B used for the batched policies in this suite.

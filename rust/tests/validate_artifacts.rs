@@ -54,6 +54,47 @@ fn committed_bench_snapshots_keep_provenance_and_mode_rows() {
     }
 }
 
+/// Committed meta-caching snapshot guard: `BENCH_meta.json` must keep
+/// its provenance label and the expert-pool structure the `meta-smoke`
+/// CI job asserts on — per-scenario cells for the meta policy, each
+/// expert, and the OPT baseline, plus the best-expert pin and the
+/// regret-vs-best-expert series (DESIGN.md §14).
+#[test]
+fn committed_meta_snapshot_keeps_provenance_and_expert_cells() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let path = root.join("BENCH_meta.json");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("committed snapshot BENCH_meta.json missing: {e}"));
+    assert!(
+        text.contains("\"provenance\":\"projected\"")
+            || text.contains("\"provenance\":\"measured"),
+        "BENCH_meta.json: lost its provenance label"
+    );
+    for key in [
+        "\"experiment\":\"meta\"",
+        "\"meta_spec\":\"meta{experts=[",
+        "\"scenarios\":[",
+        "\"best_expert\":",
+        "\"regret_growth_exponent\":",
+        "\"cells\":[",
+        "\"policy\":\"meta\"",
+        "\"policy\":\"opt\"",
+        "\"regret\":[",
+        "\"bound\":",
+    ] {
+        assert!(text.contains(key), "BENCH_meta.json: missing {key}");
+    }
+    // the grid must keep >= 4 scenario families, diurnal + flash-crowd
+    // among them (the adversarial-for-a-single-expert settings the meta
+    // subsystem exists for)
+    for name in ["stationary", "drift", "diurnal", "flash"] {
+        assert!(
+            text.contains(&format!("\"name\":\"{name}\"")),
+            "BENCH_meta.json: lost the `{name}` scenario family"
+        );
+    }
+}
+
 /// Committed network-serving snapshot guard: `BENCH_server.json` must
 /// keep its provenance label and the client-side accounting fields the
 /// `net-smoke` CI job asserts on (frames / keys / hits / retry
