@@ -9,7 +9,7 @@ vector operation, which is exactly the kind of compute that belongs on the
 accelerator, while the paper's O(log N) lazy variant lives in the Rust
 coordinator.
 
-Hardware adaptation (DESIGN.md §Hardware-Adaptation): instead of the
+Hardware adaptation (DESIGN.md §15 Hardware adaptation): instead of the
 data-dependent sort used by CPU implementations (O(N log N), hostile to
 SIMD), we run a **fixed-iteration bisection**: each iteration is a
 branch-free clip + reduction over the catalog, tiled into VMEM via

@@ -7,7 +7,10 @@
 //! The crate provides:
 //!
 //! * [`proj`] — the paper's lazy O(log N) capped-simplex projection
-//!   (Algorithm 2) plus a dense exact oracle;
+//!   (Algorithm 2) plus a dense exact oracle; the fractional policy can
+//!   also run on the dense SoA engine [`policies::DenseSimplex`]
+//!   (DESIGN.md §15: `ogb-frac{backend=lazy|dense|auto}`,
+//!   bit-identical trajectories via the summation-order contract);
 //! * [`sample`] — the coordinated Poisson sampling scheme (Algorithm 3)
 //!   plus Madow systematic sampling as the classic baseline;
 //! * [`policies`] — OGB (the paper's policy), OGB_cl, fractional OGB, and
@@ -66,8 +69,13 @@
 //!   projected-vs-measured label).  Obs off ⇒ bit-identical trajectory
 //!   and 0 allocs/request (differential-tested); obs on ⇒ one relaxed
 //!   add per existing counter site plus O(1) per window;
-//! * [`runtime`] — the PJRT (XLA) runtime that loads the AOT-compiled JAX /
-//!   Pallas artifacts backing the dense baseline;
+//! * [`runtime`] — accelerator-backend dispatch (DESIGN.md §15):
+//!   [`runtime::resolve_dense_step`] resolves a
+//!   [`runtime::BackendKind`] (`Cpu`/`Pjrt`/`Auto`) to a working dense
+//!   step or a typed [`runtime::BackendError`]; the PJRT half loads
+//!   the AOT-compiled JAX/Pallas artifacts when a real `xla` build is
+//!   present and reports `BackendUnavailable` (never a panic) under
+//!   the vendored stub;
 //! * [`coordinator`] — the sharded serving engine (DESIGN.md §8): a
 //!   partitioned router over dense per-shard id spaces, batched SPSC
 //!   ring pipeline with recycled request batches and bitmap replies

@@ -50,7 +50,7 @@ fn cli() -> Cli {
             "simulate",
             "replay a trace through a policy",
             vec![
-                opt("policy", "policy spec (lru lfu fifo arc gds ftpl ogb ogb-frac ogb-classic ogb-classic-frac opt infinite, with optional {key=value} params, e.g. `ogb{batch=64,rebase=1e6}`)", "ogb"),
+                opt("policy", "policy spec (lru lfu fifo arc gds ftpl ogb ogb-frac ogb-classic ogb-classic-frac opt infinite, with optional {key=value} params, e.g. `ogb{batch=64,rebase=1e6}` or `ogb-frac{batch=64,backend=dense}`)", "ogb"),
                 opt("trace", "trace name (cdn twitter ms-ex systor adversarial zipf uniform), `stream:<spec>`, or path to .ogbt/.txt", "cdn"),
                 opt("scale", "trace scale factor", "0.1"),
                 opt("cache-pct", "cache size as % of catalog", "5"),
@@ -100,7 +100,7 @@ fn cli() -> Cli {
                 opt("rebase-threshold", "lazy projection re-base threshold (empty = default 1e6)", ""),
                 opt("out", "output JSON path (empty = skip)", "BENCH_hotpath.json"),
                 opt("obs-out", "flight-recorder JSONL path — records are emitted inside the allocation-counted region, proving the recorder is allocation-free (empty = obs off)", ""),
-                flag("smoke", "tiny CI grid (ogb+lru, N=2000, 20k requests, 1 rep; overrides --policies/--ns/--cache-pcts/--requests/--reps)"),
+                flag("smoke", "tiny CI grid (ogb+lru+meta+ogb-frac lazy/dense, N=2000, 20k requests, 1 rep; overrides --policies/--ns/--cache-pcts/--requests/--reps)"),
             ],
         )
         .command(
@@ -636,20 +636,27 @@ fn cmd_bench(a: &ogb_cache::util::args::Args) -> Result<()> {
         println!("wrote {}", r.write_json(out)?.display());
     }
     if smoke {
-        // CI contract (DESIGN.md §7/§9/§14): both serve modes are present
-        // and the OGB request path — standalone AND inside a meta expert
-        // pool — allocates nothing at steady state in either of them.
+        // CI contract (DESIGN.md §7/§9/§14/§15): both serve modes are
+        // present, both fractional projection engines produced rows, and
+        // the OGB request path — standalone, inside a meta expert pool,
+        // and on either fractional backend — allocates nothing at steady
+        // state.
         anyhow::ensure!(
             r.rows.iter().any(|row| row.mode == "per_request")
                 && r.rows.iter().any(|row| row.mode == "batched"),
             "smoke grid must report per_request AND batched rows"
         );
+        anyhow::ensure!(
+            r.rows.iter().any(|row| row.backend == Some("lazy"))
+                && r.rows.iter().any(|row| row.backend == Some("dense")),
+            "smoke grid must report both fractional backend rows (lazy + dense)"
+        );
         if r.alloc_counter_active {
-            for row in r
-                .rows
-                .iter()
-                .filter(|row| row.policy == "ogb" || row.policy.starts_with("meta"))
-            {
+            for row in r.rows.iter().filter(|row| {
+                row.policy == "ogb"
+                    || row.policy.starts_with("meta")
+                    || row.policy.starts_with("ogb-frac")
+            }) {
                 anyhow::ensure!(
                     row.allocs_per_request == Some(0.0),
                     "{} {} mode allocated at steady state: {:?} allocs/request",
@@ -658,7 +665,10 @@ fn cmd_bench(a: &ogb_cache::util::args::Args) -> Result<()> {
                     row.allocs_per_request
                 );
             }
-            println!("steady-state allocation contract holds (0 allocs, both modes, ogb + meta)");
+            println!(
+                "steady-state allocation contract holds (0 allocs, both modes, \
+                 ogb + meta + ogb-frac lazy/dense)"
+            );
         }
     }
     finish_recorder(rec)

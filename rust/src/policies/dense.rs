@@ -1,0 +1,1279 @@
+//! Dense SoA fractional engine — the CPU half of the hardware-adaptation
+//! layer (DESIGN.md §15).
+//!
+//! [`DenseSimplex`] is a drop-in engine for the paper's Algorithm 2 that
+//! replaces the [`crate::util::FlatTree`] ordered multiset of
+//! [`crate::proj::LazySimplex`] with contiguous `Vec<f64>` state and a
+//! blocked minimum hierarchy:
+//!
+//!   * `f_tilde[i]`, `rho` — the same (unadjusted value, global
+//!     adjustment) decomposition as the lazy engine, with the invariant
+//!     `f_i = f_tilde[i] - rho` if `i` is active, else 0;
+//!   * `z_key[i]`          — the *stale lower-bound* key the lazy engine
+//!     stores in its tree, kept as a flat array with `+inf` marking
+//!     inactive slots (so block scans need no mask load);
+//!   * `chunk_min` / `super_min` / `global_min` — exact minima over
+//!     [`LANE`]-item blocks, [`SUPER`]-block super blocks, and the whole
+//!     array.
+//!
+//! A request that pops nothing (the steady-state case: the paper's
+//! amortized bound is ≤ 1 + (N-C)/t pops per request) costs O(1): one
+//! bump, one `global_min` compare, one `rho` advance.  A pop event scans
+//! only the blocks whose minimum is below the redistribution threshold
+//! and re-tightens them — O(N/([`LANE`]·[`SUPER`])) plus O([`LANE`]) per
+//! dirty block, all linear passes over contiguous memory that the
+//! compiler auto-vectorizes.
+//!
+//! **Summation-order contract** (DESIGN.md §15): the engine is
+//! *bit-identical* to [`crate::proj::LazySimplex`] — not merely within
+//! tolerance — because every redistribution round processes the
+//! sub-threshold components in the exact order the lazy tree pops them.
+//! The tree pops ascending `(stale key, item id)`; the dense engine
+//! collects the same candidates, encodes them with
+//! [`FlatTree::key_of`] and sorts, so the floating-point accumulation
+//! `eta_left -= v - rho` runs in the same order and produces the same
+//! bits.  (Revalidated entries re-enter with a fresh key at or above the
+//! round threshold, so neither engine can visit them twice in a round.)
+//!
+//! The module also carries [`bisect_water_level`] /
+//! [`bisect_project`] — the fixed-iteration, block-accumulated CPU port
+//! of the Pallas kernel `python/compile/kernels/capped_simplex.py` used
+//! by the dense *full* projection (classic OGB_cl path and the
+//! [`crate::runtime::registry`] CPU backend).
+
+use super::Request;
+use crate::proj::StepStats;
+use crate::util::FlatTree;
+
+/// Sentinel stored in `f_tilde` for components currently at zero
+/// (mirrors the lazy engine's encoding, so frozen-state payloads are
+/// field-compatible).
+const ZERO_SENTINEL: f64 = -1.0;
+
+/// In-memory `z_key` marker for inactive slots: `+inf` never compares
+/// below a redistribution threshold, so inactive components vanish from
+/// the block min-scans without a separate mask.  (The OGBS wire format
+/// keeps the lazy engine's NaN convention; see
+/// [`DenseSimplex::snapshot_payload`].)
+const INACTIVE_KEY: f64 = f64::INFINITY;
+
+/// Items per leaf block of the minimum hierarchy.  64 `f64`s = 8 cache
+/// lines: small enough that a dirty-block rescan is a handful of
+/// vectorized iterations, large enough that `chunk_min` is 64× smaller
+/// than the catalog.
+pub const LANE: usize = 64;
+
+/// Leaf blocks per super block (so one super block covers
+/// `LANE * SUPER` = 4096 items and `global_min` summarizes
+/// N/4096 supers).
+pub const SUPER: usize = 64;
+
+/// Engine selection for the fractional gradient policies
+/// (`ogb-frac{backend=...}` in the spec grammar; DESIGN.md §15).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FracBackend {
+    /// The O(log N) FlatTree engine ([`crate::proj::LazySimplex`]) —
+    /// the paper's Algorithm 2 as landed in PR 2; the default.
+    #[default]
+    Lazy,
+    /// The contiguous SoA engine ([`DenseSimplex`]): O(1) steady-state
+    /// requests, block-scanned pop events, auto-vectorized passes.
+    Dense,
+    /// Resolve lazy vs dense at construction from catalog size × batch
+    /// size ([`auto_prefers_dense`]).
+    Auto,
+}
+
+impl FracBackend {
+    /// Canonical spec-grammar token (`backend=` value).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FracBackend::Lazy => "lazy",
+            FracBackend::Dense => "dense",
+            FracBackend::Auto => "auto",
+        }
+    }
+
+    /// Resolve `Auto` against a concrete (catalog, batch) shape; `Lazy`
+    /// and `Dense` are already resolved.  Deterministic, so a policy
+    /// rebuilt from the same spec and shape restores into the same
+    /// engine (OGBS names embed the resolved backend).
+    pub fn resolve(self, n: usize, batch: usize) -> FracBackend {
+        match self {
+            FracBackend::Auto => {
+                if auto_prefers_dense(n, batch) {
+                    FracBackend::Dense
+                } else {
+                    FracBackend::Lazy
+                }
+            }
+            other => other,
+        }
+    }
+}
+
+/// The `backend=auto` dispatch heuristic (DESIGN.md §15).  The dense
+/// engine's only super-linear cost over the lazy one is the
+/// O(N / (LANE·SUPER)) super-block sweep a pop event pays to re-tighten
+/// `global_min`; everything else is O(1) against O(log N).  Choose
+/// dense when that sweep is either trivially small (the whole summary
+/// fits in cache) or amortized by the batch the policy serves between
+/// boundary work:
+///
+/// * `n <= 2^20` — at most 256 super minima per sweep; dense wins
+///   outright on memory locality;
+/// * `n <= batch * LANE * SUPER` — one sweep per pop event costs no
+///   more than O(batch) work, i.e. O(1) amortized per request served.
+///
+/// Beyond both bounds (huge catalog, tiny batches) the lazy tree's
+/// O(log N) pops stay cheaper and auto resolves to lazy.
+pub fn auto_prefers_dense(n: usize, batch: usize) -> bool {
+    n <= (1 << 20) || n <= batch.saturating_mul(LANE * SUPER)
+}
+
+/// Dense SoA engine for the lazy capped-simplex decomposition —
+/// bit-identical in trajectory to [`crate::proj::LazySimplex`] (see the
+/// module docs for the summation-order argument).
+#[derive(Debug, Clone)]
+pub struct DenseSimplex {
+    n: usize,
+    c: f64,
+    rho: f64,
+    f_tilde: Vec<f64>,
+    in_z: Vec<bool>,
+    /// Stale lower-bound keys (the lazy engine's tree keys) as a flat
+    /// array; `+inf` for inactive slots.
+    z_key: Vec<f64>,
+    /// Number of active (positive) components — the lazy tree's `len()`.
+    z_len: usize,
+    /// Exact minimum of `z_key` per [`LANE`]-item block.
+    chunk_min: Vec<f64>,
+    /// Exact minimum of `chunk_min` per [`SUPER`]-block super block.
+    super_min: Vec<f64>,
+    /// Exact minimum over the whole `z_key` array — the O(1) no-pop
+    /// early-out.
+    global_min: f64,
+    rebase_threshold: f64,
+    rebase_count: u64,
+    /// Reused buffer of popped `(unadjusted value, item)` pairs — same
+    /// role and contents as the lazy engine's scratch (phase B restores
+    /// from it).
+    popped_scratch: Vec<(f64, u64)>,
+    /// Reused sub-threshold candidate buffer, holding
+    /// [`FlatTree::key_of`]-encoded `(stale key, id)` pairs so one sort
+    /// reproduces the tree's pop order exactly.
+    cand_scratch: Vec<u128>,
+    /// Reused list of blocks whose minima were raised this round.
+    dirty_scratch: Vec<u32>,
+    /// Times a request-path scratch buffer had to grow; 0 after warm-up
+    /// certifies the allocation-free hot path (DESIGN.md §7).
+    scratch_grows: u64,
+    /// Frozen-state tracking via epoch stamping: `freeze()` is O(1)
+    /// (bump `epoch`), `capture` writes the pre-mutation encoded value
+    /// into `frozen_enc` the first time an item mutates in the epoch.
+    /// This replaces the lazy engine's hash-map shadow with two flat
+    /// arrays — zero allocation at any point, including `freeze()`.
+    frozen_on: bool,
+    frozen_rho: f64,
+    epoch: u64,
+    stamp: Vec<u64>,
+    frozen_enc: Vec<f64>,
+}
+
+impl DenseSimplex {
+    /// Start from the uniform state `f_i = C/N` (paper Theorem 3.1's
+    /// minimax center) — same construction as
+    /// [`crate::proj::LazySimplex::new_uniform`].
+    pub fn new_uniform(n: usize, c: f64) -> Self {
+        assert!(n > 0, "empty catalog");
+        assert!(
+            c > 0.0 && c <= n as f64,
+            "capacity must be in (0, N], got {c} for N={n}"
+        );
+        let f0 = c / n as f64;
+        let mut s = Self {
+            n,
+            c,
+            rho: 0.0,
+            f_tilde: vec![f0; n],
+            in_z: vec![true; n],
+            z_key: vec![f0; n],
+            z_len: n,
+            chunk_min: Vec::new(),
+            super_min: Vec::new(),
+            global_min: INACTIVE_KEY,
+            rebase_threshold: 1e6,
+            rebase_count: 0,
+            popped_scratch: Vec::new(),
+            cand_scratch: Vec::new(),
+            dirty_scratch: Vec::new(),
+            scratch_grows: 0,
+            frozen_on: false,
+            frozen_rho: 0.0,
+            epoch: 0,
+            stamp: vec![0; n],
+            frozen_enc: vec![ZERO_SENTINEL; n],
+        };
+        s.rebuild_minima();
+        s.reserve_dirty();
+        s
+    }
+
+    /// Start from an arbitrary feasible state (tests, state handover) —
+    /// mirrors [`crate::proj::LazySimplex::from_state`].
+    pub fn from_state(f: &[f64], c: f64) -> Self {
+        let n = f.len();
+        let mut f_tilde = vec![ZERO_SENTINEL; n];
+        let mut in_z = vec![false; n];
+        let mut z_key = vec![INACTIVE_KEY; n];
+        let mut z_len = 0usize;
+        for (i, &v) in f.iter().enumerate() {
+            assert!((-1e-9..=1.0 + 1e-9).contains(&v), "component out of range");
+            if v > 0.0 {
+                f_tilde[i] = v;
+                in_z[i] = true;
+                z_key[i] = v;
+                z_len += 1;
+            }
+        }
+        let mut s = Self {
+            n,
+            c,
+            rho: 0.0,
+            f_tilde,
+            in_z,
+            z_key,
+            z_len,
+            chunk_min: Vec::new(),
+            super_min: Vec::new(),
+            global_min: INACTIVE_KEY,
+            rebase_threshold: 1e6,
+            rebase_count: 0,
+            popped_scratch: Vec::new(),
+            cand_scratch: Vec::new(),
+            dirty_scratch: Vec::new(),
+            scratch_grows: 0,
+            frozen_on: false,
+            frozen_rho: 0.0,
+            epoch: 0,
+            stamp: vec![0; n],
+            frozen_enc: vec![ZERO_SENTINEL; n],
+        };
+        s.rebuild_minima();
+        s.reserve_dirty();
+        s
+    }
+
+    /// Current catalog size.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Cache capacity C.
+    pub fn capacity(&self) -> f64 {
+        self.c
+    }
+
+    /// Current adjustment coefficient rho.
+    pub fn rho(&self) -> f64 {
+        self.rho
+    }
+
+    /// Number of strictly positive components.
+    pub fn support(&self) -> usize {
+        self.z_len
+    }
+
+    /// Number of re-bases performed so far.
+    pub fn rebase_count(&self) -> u64 {
+        self.rebase_count
+    }
+
+    /// Configure the numerical re-base threshold (tests use tiny values
+    /// to force frequent re-bases; the CLI exposes `--rebase-threshold`).
+    pub fn set_rebase_threshold(&mut self, t: f64) {
+        assert!(t > 0.0);
+        self.rebase_threshold = t;
+    }
+
+    /// The configured numerical re-base threshold.
+    pub fn rebase_threshold(&self) -> f64 {
+        self.rebase_threshold
+    }
+
+    /// Times a request-path scratch buffer had to grow.  0 after warm-up
+    /// means the steady-state request path performed no heap allocations.
+    pub fn scratch_grows(&self) -> u64 {
+        self.scratch_grows
+    }
+
+    /// Current probability/fraction of item `i`: `f_i = f~_i - rho` or 0.
+    #[inline]
+    pub fn prob(&self, i: u64) -> f64 {
+        if self.in_z[i as usize] {
+            (self.f_tilde[i as usize] - self.rho).clamp(0.0, 1.0)
+        } else {
+            0.0
+        }
+    }
+
+    /// Materialize the full dense vector — O(N); boundary/test use only.
+    pub fn to_dense(&self) -> Vec<f64> {
+        (0..self.n as u64).map(|i| self.prob(i)).collect()
+    }
+
+    /// Enable frozen-state tracking and snapshot "now" as the frozen
+    /// state.  O(1): bumps the capture epoch (no clearing pass, no
+    /// allocation — this is what keeps batch boundaries allocation-free).
+    pub fn freeze(&mut self) {
+        self.frozen_on = true;
+        self.frozen_rho = self.rho;
+        self.epoch += 1;
+    }
+
+    /// Value of item `i` in the frozen (last [`DenseSimplex::freeze`])
+    /// state; falls back to the live value when freezing was never
+    /// enabled.
+    pub fn frozen_prob(&self, i: u64) -> f64 {
+        if !self.frozen_on {
+            return self.prob(i);
+        }
+        let ii = i as usize;
+        let ft = if self.stamp[ii] == self.epoch {
+            self.frozen_enc[ii]
+        } else {
+            self.encoded(ii)
+        };
+        if ft == ZERO_SENTINEL {
+            0.0
+        } else {
+            (ft - self.frozen_rho).clamp(0.0, 1.0)
+        }
+    }
+
+    #[inline]
+    fn encoded(&self, i: usize) -> f64 {
+        if self.in_z[i] {
+            self.f_tilde[i]
+        } else {
+            ZERO_SENTINEL
+        }
+    }
+
+    /// Record the pre-mutation value of `i` into the frozen arrays
+    /// (no-op when tracking is off or the item was already captured this
+    /// epoch) — the epoch-stamped equivalent of the lazy shadow's
+    /// `entry().or_insert()`.
+    #[inline]
+    fn capture(&mut self, i: usize) {
+        if self.frozen_on && self.stamp[i] != self.epoch {
+            self.stamp[i] = self.epoch;
+            self.frozen_enc[i] = if self.in_z[i] {
+                self.f_tilde[i]
+            } else {
+                ZERO_SENTINEL
+            };
+        }
+    }
+
+    /// Pre-size the dirty-block scratch to its hard bound (one entry per
+    /// leaf block) so the request path never grows it.
+    fn reserve_dirty(&mut self) {
+        let chunks = (self.n + LANE - 1) / LANE;
+        if self.dirty_scratch.capacity() < chunks {
+            self.dirty_scratch.reserve(chunks);
+        }
+    }
+
+    /// Recompute the whole minimum hierarchy from `z_key` — O(N); used
+    /// by construction, growth, re-base and restore.
+    fn rebuild_minima(&mut self) {
+        let chunks = (self.n + LANE - 1) / LANE;
+        let supers = (chunks + SUPER - 1) / SUPER;
+        self.chunk_min.clear();
+        self.chunk_min.resize(chunks, INACTIVE_KEY);
+        self.super_min.clear();
+        self.super_min.resize(supers, INACTIVE_KEY);
+        for ci in 0..chunks {
+            self.recompute_chunk(ci);
+        }
+        for si in 0..supers {
+            self.recompute_super(si);
+        }
+        self.recompute_global();
+    }
+
+    /// Exact minimum of one leaf block — a branch-free linear scan the
+    /// compiler vectorizes (`+inf` inactive slots need no mask).
+    fn recompute_chunk(&mut self, ci: usize) {
+        let lo = ci * LANE;
+        let hi = (lo + LANE).min(self.n);
+        let mut m = INACTIVE_KEY;
+        for &k in &self.z_key[lo..hi] {
+            m = if k < m { k } else { m };
+        }
+        self.chunk_min[ci] = m;
+    }
+
+    fn recompute_super(&mut self, si: usize) {
+        let lo = si * SUPER;
+        let hi = (lo + SUPER).min(self.chunk_min.len());
+        let mut m = INACTIVE_KEY;
+        for &k in &self.chunk_min[lo..hi] {
+            m = if k < m { k } else { m };
+        }
+        self.super_min[si] = m;
+    }
+
+    fn recompute_global(&mut self) {
+        let mut m = INACTIVE_KEY;
+        for &k in &self.super_min {
+            m = if k < m { k } else { m };
+        }
+        self.global_min = m;
+    }
+
+    /// An insert (or restore) can only *lower* minima: push the new key
+    /// down the hierarchy in O(1).
+    #[inline]
+    fn lower_key(&mut self, i: usize, v: f64) {
+        let ci = i / LANE;
+        if v < self.chunk_min[ci] {
+            self.chunk_min[ci] = v;
+            let si = ci / SUPER;
+            if v < self.super_min[si] {
+                self.super_min[si] = v;
+            }
+            if v < self.global_min {
+                self.global_min = v;
+            }
+        }
+    }
+
+    /// A removal raised `z_key[i]` to `+inf`: re-tighten its block path
+    /// exactly (used outside the redistribution loop, which batches its
+    /// own dirty-block recomputation).
+    fn raise_key(&mut self, i: usize) {
+        let ci = i / LANE;
+        self.recompute_chunk(ci);
+        self.recompute_super(ci / SUPER);
+        self.recompute_global();
+    }
+
+    /// Process a request for item `j` with step size `eta` — the same
+    /// Algorithm 2 step as [`crate::proj::LazySimplex::request`],
+    /// expression for expression; only the ordered-set representation
+    /// differs.
+    pub fn request(&mut self, j: u64, eta: f64) -> StepStats {
+        debug_assert!(eta >= 0.0, "negative step");
+        let ji = j as usize;
+        assert!(ji < self.n, "item {j} out of catalog {n}", n = self.n);
+        let mut stats = StepStats::default();
+        if eta == 0.0 {
+            stats.noop = true;
+            return stats;
+        }
+
+        let fj = self.prob(j);
+        // Paper lines 1-2: component already at the cap — the bump is
+        // absorbed by the clamp; the projection is the identity.
+        if fj >= 1.0 - 1e-12 {
+            stats.noop = true;
+            return stats;
+        }
+
+        // Bump the component.  If already active the stored key becomes
+        // a stale lower bound (f~ grew) — exactly the lazy engine's
+        // no-re-key optimization; only a zero component inserts.
+        self.capture(ji);
+        let y_j = fj + eta;
+        self.f_tilde[ji] = y_j + self.rho;
+        if !self.in_z[ji] {
+            self.in_z[ji] = true;
+            self.z_key[ji] = self.f_tilde[ji];
+            self.z_len += 1;
+            let v = self.z_key[ji];
+            self.lower_key(ji, v);
+        }
+
+        // Phase A (lines 11-18): redistribute `eta` over all positives.
+        let popped_cap = self.popped_scratch.capacity();
+        let cand_cap = self.cand_scratch.capacity();
+        let rho_before = self.rho;
+        self.redistribute(eta, &mut stats);
+
+        // Phase B (lines 19-24): the requested component overshot the cap.
+        if self.f_tilde[ji] - self.rho > 1.0 + 1e-12 {
+            stats.capped = true;
+            // RestoreRemoved(): roll phase A back entirely.
+            self.rho = rho_before;
+            for idx in 0..self.popped_scratch.len() {
+                let (v, i) = self.popped_scratch[idx];
+                self.f_tilde[i as usize] = v;
+                self.in_z[i as usize] = true;
+                self.z_key[i as usize] = v;
+                self.z_len += 1;
+                self.lower_key(i as usize, v);
+            }
+            stats.removed = 0;
+            // Take j out; the *others* must absorb exactly 1 - f_j.
+            self.in_z[ji] = false;
+            self.z_key[ji] = INACTIVE_KEY;
+            self.z_len -= 1;
+            self.raise_key(ji);
+            self.redistribute(1.0 - fj, &mut stats);
+            // Pin j at exactly 1 (unadjusted: 1 + rho_final).
+            self.f_tilde[ji] = 1.0 + self.rho;
+            self.in_z[ji] = true;
+            self.z_key[ji] = self.f_tilde[ji];
+            self.z_len += 1;
+            let v = self.z_key[ji];
+            self.lower_key(ji, v);
+        }
+
+        if self.popped_scratch.capacity() > popped_cap
+            || self.cand_scratch.capacity() > cand_cap
+        {
+            self.scratch_grows += 1;
+        }
+        stats
+    }
+
+    /// The redistribution loop — arithmetic identical to the lazy
+    /// engine's.  Each round collects every component whose *stale* key
+    /// sits strictly below the threshold (block scans gated by the
+    /// minimum hierarchy), sorts them into the tree's pop order, then
+    /// revalidates or removes each one.
+    fn redistribute(&mut self, excess: f64, stats: &mut StepStats) {
+        let mut eta_left = excess;
+        self.popped_scratch.clear();
+        loop {
+            stats.loop_rounds += 1;
+            let m = self.z_len;
+            if m == 0 {
+                debug_assert!(false, "positive set emptied during redistribution");
+                break;
+            }
+            let rho_p = eta_left / m as f64;
+            let threshold = self.rho + rho_p;
+            // O(1) steady-state early-out: nothing can cross zero.
+            if self.global_min >= threshold {
+                self.rho += rho_p;
+                break;
+            }
+            // Gather sub-threshold candidates via the minimum hierarchy.
+            self.cand_scratch.clear();
+            self.dirty_scratch.clear();
+            for si in 0..self.super_min.len() {
+                if self.super_min[si] >= threshold {
+                    continue;
+                }
+                let c_lo = si * SUPER;
+                let c_hi = (c_lo + SUPER).min(self.chunk_min.len());
+                for ci in c_lo..c_hi {
+                    if self.chunk_min[ci] >= threshold {
+                        continue;
+                    }
+                    let lo = ci * LANE;
+                    let hi = (lo + LANE).min(self.n);
+                    let before = self.cand_scratch.len();
+                    for i in lo..hi {
+                        let k = self.z_key[i];
+                        if k < threshold {
+                            self.cand_scratch.push(FlatTree::key_of(k, i as u64));
+                        }
+                    }
+                    debug_assert!(
+                        self.cand_scratch.len() > before,
+                        "stale block minimum below threshold"
+                    );
+                    if self.cand_scratch.len() > before {
+                        self.dirty_scratch.push(ci as u32);
+                    }
+                }
+            }
+            // Sort into (stale key, id) order — the exact sequence the
+            // FlatTree pops, hence the exact FP accumulation order.
+            self.cand_scratch.sort_unstable();
+            let mut any = false;
+            for idx in 0..self.cand_scratch.len() {
+                let (k, i) = FlatTree::decode(self.cand_scratch[idx]);
+                let ii = i as usize;
+                // The stored key may be a stale lower bound; revalidate
+                // against f~ (fresh keys land at or above the threshold,
+                // so they cannot be re-collected this round).
+                let v = self.f_tilde[ii];
+                if v >= threshold {
+                    self.z_key[ii] = v;
+                    continue;
+                }
+                debug_assert!(k <= v + 1e-15);
+                // The component only had (v - rho) left to give.
+                eta_left -= v - self.rho;
+                self.capture(ii);
+                self.f_tilde[ii] = ZERO_SENTINEL;
+                self.in_z[ii] = false;
+                self.z_key[ii] = INACTIVE_KEY;
+                self.z_len -= 1;
+                self.popped_scratch.push((v, i));
+                stats.removed += 1;
+                any = true;
+            }
+            // Every touched block only had keys raised (revalidation or
+            // removal): re-tighten them exactly before the next round.
+            let mut last_super = usize::MAX;
+            for t in 0..self.dirty_scratch.len() {
+                let ci = self.dirty_scratch[t] as usize;
+                self.recompute_chunk(ci);
+                let si = ci / SUPER;
+                if si != last_super {
+                    self.recompute_super(si);
+                    last_super = si;
+                }
+            }
+            self.recompute_global();
+            if !any {
+                self.rho += rho_p;
+                break;
+            }
+        }
+    }
+
+    /// Whether the accumulated adjustment warrants a precision re-base
+    /// (owner-driven, same contract as the lazy engine).
+    pub fn needs_rebase(&self) -> bool {
+        self.rho > self.rebase_threshold
+    }
+
+    /// Re-base if needed; returns the applied shift (the old rho).
+    pub fn maybe_rebase(&mut self) -> Option<f64> {
+        if self.needs_rebase() {
+            let shift = self.rho;
+            self.rebase();
+            Some(shift)
+        } else {
+            None
+        }
+    }
+
+    /// Subtract rho from every stored coefficient and reset it to zero —
+    /// one linear pass plus an O(N) minima rebuild (no sort needed: the
+    /// flat arrays are already item-indexed).
+    fn rebase(&mut self) {
+        let rho = self.rho;
+        for i in 0..self.n {
+            if self.in_z[i] {
+                self.capture(i);
+                self.f_tilde[i] -= rho;
+                self.z_key[i] = self.f_tilde[i];
+            }
+        }
+        self.rho = 0.0;
+        self.rebuild_minima();
+        self.rebase_count += 1;
+    }
+
+    /// Grow the catalog to `n_new` (DESIGN.md §10) — the same
+    /// renormalization as [`crate::proj::LazySimplex::grow`]: existing
+    /// components scale by `n_old/n_new`, new components enter at
+    /// `C/n_new`, total mass stays exactly C, and growth composes.
+    /// No-op when `n_new <= n`.
+    pub fn grow(&mut self, n_new: usize) {
+        if n_new <= self.n {
+            return;
+        }
+        let scale = self.n as f64 / n_new as f64;
+        let f0 = self.c / n_new as f64;
+        let rho = self.rho;
+        for i in 0..self.n {
+            if !self.in_z[i] {
+                continue;
+            }
+            let v = (self.f_tilde[i] - rho) * scale;
+            if v > 0.0 {
+                self.f_tilde[i] = v;
+                self.z_key[i] = v;
+            } else {
+                // FP dust at the zero boundary: the component leaves z
+                self.f_tilde[i] = ZERO_SENTINEL;
+                self.in_z[i] = false;
+                self.z_key[i] = INACTIVE_KEY;
+                self.z_len -= 1;
+            }
+        }
+        self.z_len += n_new - self.n;
+        self.f_tilde.resize(n_new, f0);
+        self.in_z.resize(n_new, true);
+        self.z_key.resize(n_new, f0);
+        self.stamp.resize(n_new, 0);
+        self.frozen_enc.resize(n_new, ZERO_SENTINEL);
+        self.rho = 0.0;
+        self.n = n_new;
+        self.rebuild_minima();
+        self.reserve_dirty();
+        // Frozen-state tracking cannot span a growth (every value
+        // moved): re-freeze at the post-growth state, the documented
+        // batch-boundary semantics (growth closes the batch).
+        if self.frozen_on {
+            self.freeze();
+        }
+    }
+
+    /// Serialize the complete engine state into an OGBS section payload
+    /// (DESIGN.md §12) — the **same field sequence** as
+    /// [`crate::proj::LazySimplex::snapshot_payload`], so the two
+    /// engines' checkpoints stay structurally compatible (the in-memory
+    /// `+inf` inactive markers serialize as the lazy NaN convention, and
+    /// the epoch-stamped frozen state serializes as the sorted shadow
+    /// list).
+    pub(crate) fn snapshot_payload(&self, p: &mut crate::policies::snapshot::Payload) {
+        p.put_usize(self.n);
+        p.put_f64(self.c);
+        p.put_f64(self.rho);
+        p.put_f64(self.rebase_threshold);
+        p.put_u64(self.rebase_count);
+        p.put_u64(self.scratch_grows);
+        p.put_usize(self.popped_scratch.capacity());
+        p.put_usize(self.cand_scratch.capacity());
+        p.put_f64s(&self.f_tilde);
+        p.put_bools(&self.in_z);
+        let wire_keys: Vec<f64> = (0..self.n)
+            .map(|i| if self.in_z[i] { self.z_key[i] } else { f64::NAN })
+            .collect();
+        p.put_f64s(&wire_keys);
+        if !self.frozen_on {
+            p.put_bool(false);
+        } else {
+            p.put_bool(true);
+            p.put_f64(self.frozen_rho);
+            let count = (0..self.n).filter(|&i| self.stamp[i] == self.epoch).count();
+            p.put_usize(count);
+            // already sorted by item id — identical bytes to the lazy
+            // engine's sorted shadow dump
+            for i in 0..self.n {
+                if self.stamp[i] == self.epoch {
+                    p.put_u64(i as u64);
+                    p.put_f64(self.frozen_enc[i]);
+                }
+            }
+        }
+    }
+
+    /// Rebuild a [`DenseSimplex`] from a
+    /// [`DenseSimplex::snapshot_payload`] section, preserving the stale
+    /// keys (pop order) bit-for-bit.
+    pub(crate) fn restore_payload(
+        cur: &mut crate::policies::snapshot::Cur<'_>,
+    ) -> crate::policies::snapshot::SnapshotResult<Self> {
+        use crate::policies::snapshot::SnapshotError;
+        let n = cur.get_usize()?;
+        let c = cur.get_f64()?;
+        let rho = cur.get_f64()?;
+        let rebase_threshold = cur.get_f64()?;
+        let rebase_count = cur.get_u64()?;
+        let scratch_grows = cur.get_u64()?;
+        let popped_cap = cur.get_usize()?;
+        let cand_cap = cur.get_usize()?;
+        let f_tilde = cur.get_f64s()?;
+        let in_z = cur.get_bools()?;
+        let wire_keys = cur.get_f64s()?;
+        if n == 0 || !(c > 0.0 && c <= n as f64) {
+            return Err(SnapshotError::Corrupt("dense simplex shape out of range"));
+        }
+        if f_tilde.len() != n || in_z.len() != n || wire_keys.len() != n {
+            return Err(SnapshotError::Corrupt("dense simplex vector length mismatch"));
+        }
+        if popped_cap > 2 * n + 64 || cand_cap > 2 * n + 64 {
+            return Err(SnapshotError::Corrupt(
+                "dense simplex scratch capacity out of range",
+            ));
+        }
+        let mut z_key = vec![INACTIVE_KEY; n];
+        let mut z_len = 0usize;
+        for i in 0..n {
+            if in_z[i] {
+                if !wire_keys[i].is_finite() {
+                    return Err(SnapshotError::Corrupt("non-finite key for live item"));
+                }
+                z_key[i] = wire_keys[i];
+                z_len += 1;
+            }
+        }
+        let mut stamp = vec![0u64; n];
+        let mut frozen_enc = vec![ZERO_SENTINEL; n];
+        let mut frozen_on = false;
+        let mut frozen_rho = 0.0;
+        let mut epoch = 0u64;
+        if cur.get_bool()? {
+            frozen_on = true;
+            epoch = 1;
+            frozen_rho = cur.get_f64()?;
+            let count = cur.get_usize()?;
+            if count > n {
+                return Err(SnapshotError::Corrupt("shadow larger than catalog"));
+            }
+            for _ in 0..count {
+                let k = cur.get_u64()?;
+                let v = cur.get_f64()?;
+                if k as usize >= n {
+                    return Err(SnapshotError::Corrupt("shadow item out of catalog"));
+                }
+                stamp[k as usize] = 1;
+                frozen_enc[k as usize] = v;
+            }
+        }
+        let mut s = Self {
+            n,
+            c,
+            rho,
+            f_tilde,
+            in_z,
+            z_key,
+            z_len,
+            chunk_min: Vec::new(),
+            super_min: Vec::new(),
+            global_min: INACTIVE_KEY,
+            rebase_threshold,
+            rebase_count,
+            popped_scratch: Vec::with_capacity(popped_cap),
+            cand_scratch: Vec::with_capacity(cand_cap),
+            dirty_scratch: Vec::new(),
+            scratch_grows,
+            frozen_on,
+            frozen_rho,
+            epoch,
+            stamp,
+            frozen_enc,
+        };
+        s.rebuild_minima();
+        s.reserve_dirty();
+        Ok(s)
+    }
+
+    /// Serve one whole `serve_batch` chunk against the contiguous state:
+    /// a reward gather pass over the frozen arrays, then the per-request
+    /// gradient steps — the batched application the fractional policy's
+    /// dense path uses.  `rewards` gets one `w·f_frozen` entry per
+    /// request; the return value is the number of coefficients removed
+    /// (for `Diag`).  Trajectory-identical to per-request serving.
+    pub fn serve_chunk(&mut self, reqs: &[Request], eta: f64, rewards: &mut Vec<f64>) -> u64 {
+        for r in reqs {
+            assert!(r.weight >= 0.0, "weights must be non-negative");
+            rewards.push(r.weight * self.frozen_prob(r.item));
+        }
+        let mut removed = 0u64;
+        for r in reqs {
+            let st = self.request(r.item, eta * r.weight);
+            removed += st.removed as u64;
+        }
+        removed
+    }
+
+    /// Exact invariant check (test/debug only — O(N)): mass conservation,
+    /// component range, stale-key soundness, and exactness of the
+    /// minimum hierarchy.
+    pub fn check_invariants(&self, tol: f64) {
+        let mut sum = 0.0;
+        for i in 0..self.n as u64 {
+            let p = self.prob(i);
+            assert!(
+                (0.0..=1.0 + tol).contains(&p),
+                "component {i} out of range: {p}"
+            );
+            sum += p;
+        }
+        assert!(
+            (sum - self.c).abs() < tol * self.c.max(1.0),
+            "mass drifted: sum={sum} expected={c}",
+            c = self.c
+        );
+        assert_eq!(
+            self.z_len,
+            self.in_z.iter().filter(|&&b| b).count(),
+            "z_len / in_z cardinality mismatch"
+        );
+        for i in 0..self.n {
+            if self.in_z[i] {
+                let k = self.z_key[i];
+                let v = self.f_tilde[i];
+                assert!(k.is_finite(), "non-finite key for live item {i}");
+                assert!(k <= v + tol, "key {k} above true value {v} for {i}");
+                assert!(
+                    v - self.rho > -tol,
+                    "non-positive component {i}: {v} vs rho={}",
+                    self.rho
+                );
+            } else {
+                assert_eq!(self.z_key[i], INACTIVE_KEY, "inactive key for {i}");
+                assert_eq!(self.f_tilde[i], ZERO_SENTINEL, "zero sentinel for {i}");
+            }
+        }
+        // Minimum hierarchy must be exact, not just a lower bound.
+        for ci in 0..self.chunk_min.len() {
+            let lo = ci * LANE;
+            let hi = (lo + LANE).min(self.n);
+            let mut m = INACTIVE_KEY;
+            for &k in &self.z_key[lo..hi] {
+                m = if k < m { k } else { m };
+            }
+            assert_eq!(self.chunk_min[ci], m, "stale chunk min at {ci}");
+        }
+        for si in 0..self.super_min.len() {
+            let lo = si * SUPER;
+            let hi = (lo + SUPER).min(self.chunk_min.len());
+            let mut m = INACTIVE_KEY;
+            for &k in &self.chunk_min[lo..hi] {
+                m = if k < m { k } else { m };
+            }
+            assert_eq!(self.super_min[si], m, "stale super min at {si}");
+        }
+        let mut g = INACTIVE_KEY;
+        for &k in &self.super_min {
+            g = if k < g { k } else { g };
+        }
+        assert_eq!(self.global_min, g, "stale global min");
+    }
+}
+
+/// Fixed-iteration bisection for the capped-simplex water level — the
+/// CPU port of the Pallas kernel
+/// `python/compile/kernels/capped_simplex.py` (same 48-iteration
+/// bisection on `g(lam) = sum_i clip(y_i - lam, 0, 1) = C`, evaluated as
+/// branch-free [`LANE`]-blocked partial sums that auto-vectorize).
+/// Where the exact sort-based oracle [`crate::proj::dense::water_level`]
+/// costs O(N log N), this is O(48·N) of pure streaming arithmetic.
+pub fn bisect_water_level(y: &[f64], c: f64, iters: usize) -> f64 {
+    let n = y.len();
+    assert!(n > 0, "empty vector");
+    assert!(
+        c > 0.0 && c <= n as f64,
+        "capacity must be in (0, N], got {c} for N={n}"
+    );
+    let (mut mn, mut mx) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &v in y {
+        mn = if v < mn { v } else { mn };
+        mx = if v > mx { v } else { mx };
+    }
+    // g is non-increasing with g(mn - 1) >= N >= C and g(mx) = 0 <= C.
+    let (mut lo, mut hi) = (mn - 1.0, mx);
+    for _ in 0..iters {
+        let mid = 0.5 * (lo + hi);
+        let mut mass = 0.0;
+        for block in y.chunks(LANE) {
+            let mut acc = 0.0;
+            for &v in block {
+                acc += (v - mid).clamp(0.0, 1.0);
+            }
+            mass += acc;
+        }
+        if mass >= c {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// Default bisection depth — matches `DEFAULT_ITERS` in the Pallas
+/// kernel: 48 halvings of an O(1)-wide bracket reach ~1e-14 resolution.
+pub const BISECT_ITERS: usize = 48;
+
+/// In-place capped-simplex projection `y <- Pi_F(y)` via
+/// [`bisect_water_level`] — the vectorizable dense full projection.
+pub fn bisect_project(y: &mut [f64], c: f64) {
+    let lam = bisect_water_level(y, c, BISECT_ITERS);
+    for v in y.iter_mut() {
+        *v = (*v - lam).clamp(0.0, 1.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proj::{dense as oracle, LazySimplex};
+    use crate::util::check::{check, Gen};
+    use crate::util::{Xoshiro256pp, Zipf};
+
+    /// The core claim: dense and lazy are BIT-identical, per step, on
+    /// any request stream — probs, stats, frozen reads and re-bases.
+    fn compare_engines(n: usize, c: f64, eta: f64, steps: usize, seed: u64, rebase: Option<f64>) {
+        let mut lazy = LazySimplex::new_uniform(n, c);
+        let mut dense = DenseSimplex::new_uniform(n, c);
+        if let Some(t) = rebase {
+            lazy.set_rebase_threshold(t);
+            dense.set_rebase_threshold(t);
+        }
+        lazy.freeze();
+        dense.freeze();
+        let mut rng = Xoshiro256pp::seed_from(seed);
+        for step in 0..steps {
+            let j = rng.next_below(n as u64);
+            let sa = lazy.request(j, eta);
+            let sb = dense.request(j, eta);
+            assert_eq!(sa, sb, "step {step}: stats diverged");
+            assert_eq!(
+                lazy.rho().to_bits(),
+                dense.rho().to_bits(),
+                "step {step}: rho diverged"
+            );
+            assert_eq!(lazy.maybe_rebase().is_some(), dense.maybe_rebase().is_some());
+            if step % 7 == 0 {
+                lazy.freeze();
+                dense.freeze();
+            }
+            for i in 0..n as u64 {
+                assert_eq!(
+                    lazy.prob(i).to_bits(),
+                    dense.prob(i).to_bits(),
+                    "step {step}: prob diverged at {i}"
+                );
+                assert_eq!(
+                    lazy.frozen_prob(i).to_bits(),
+                    dense.frozen_prob(i).to_bits(),
+                    "step {step}: frozen prob diverged at {i}"
+                );
+            }
+        }
+        dense.check_invariants(1e-9);
+    }
+
+    #[test]
+    fn mirrors_lazy_bit_for_bit_small() {
+        compare_engines(16, 4.0, 0.05, 400, 7, None);
+    }
+
+    #[test]
+    fn mirrors_lazy_bit_for_bit_large_eta() {
+        // eta comparable to 1/C forces caps and zero-crossings constantly
+        compare_engines(24, 6.0, 0.5, 600, 13, None);
+    }
+
+    #[test]
+    fn mirrors_lazy_bit_for_bit_across_rebases() {
+        compare_engines(48, 12.0, 0.05, 1500, 29, Some(0.7));
+    }
+
+    #[test]
+    fn mirrors_lazy_across_block_boundaries() {
+        // catalogs straddling the LANE and LANE*SUPER block edges
+        for n in [63, 64, 65, 127, 129, 4095, 4097] {
+            compare_engines(n, (n / 5).max(1) as f64, 0.2, 300, n as u64, None);
+        }
+    }
+
+    #[test]
+    fn property_mirrors_lazy() {
+        check("dense_equals_lazy", |g: &mut Gen| {
+            let n = g.usize_in(4, 200);
+            let c = g.usize_in(1, n.min(60)) as f64;
+            let eta = g.f64_in(1e-4, 0.8);
+            let steps = g.usize_in(20, 150);
+            let seed = g.u64_below(u64::MAX);
+            compare_engines(n, c, eta, steps, seed, None);
+        });
+    }
+
+    #[test]
+    fn matches_dense_oracle_on_zipf() {
+        let n = 300;
+        let c = 60.0;
+        let mut s = DenseSimplex::new_uniform(n, c);
+        let mut f = vec![c / n as f64; n];
+        let zipf = Zipf::new(n as u64, 0.9);
+        let mut rng = Xoshiro256pp::seed_from(5);
+        for _ in 0..500 {
+            let j = zipf.sample(&mut rng);
+            s.request(j, 0.05);
+            oracle::project_single_bump(&mut f, j as usize, 0.05, c);
+        }
+        for (i, fv) in f.iter().enumerate() {
+            assert!(
+                (s.prob(i as u64) - fv).abs() < 1e-8,
+                "item {i}: {} vs {fv}",
+                s.prob(i as u64)
+            );
+        }
+        s.check_invariants(1e-9);
+    }
+
+    #[test]
+    fn grow_matches_lazy_and_composes() {
+        let (n1, c) = (24usize, 6.0);
+        let mut lazy = LazySimplex::new_uniform(n1, c);
+        let mut a = DenseSimplex::new_uniform(n1, c);
+        let mut rng = Xoshiro256pp::seed_from(21);
+        for _ in 0..500 {
+            let j = rng.next_below(n1 as u64);
+            lazy.request(j, 0.05);
+            a.request(j, 0.05);
+        }
+        let mut b = a.clone();
+        let n3 = 96usize;
+        lazy.grow(n3);
+        a.grow(n3);
+        b.grow(40);
+        b.grow(n3);
+        assert_eq!(a.n(), n3);
+        for i in 0..n3 as u64 {
+            assert_eq!(
+                lazy.prob(i).to_bits(),
+                a.prob(i).to_bits(),
+                "grow diverged from lazy at {i}"
+            );
+            assert!(
+                (a.prob(i) - b.prob(i)).abs() < 1e-12,
+                "growth must compose at {i}"
+            );
+        }
+        // growth keeps serving bit-identically (including new ids)
+        for _ in 0..500 {
+            let j = rng.next_below(n3 as u64);
+            let sa = lazy.request(j, 0.05);
+            let sb = a.request(j, 0.05);
+            assert_eq!(sa, sb);
+        }
+        a.check_invariants(1e-9);
+        b.check_invariants(1e-9);
+        // shrink/no-op growth is ignored
+        a.grow(n3 - 10);
+        assert_eq!(a.n(), n3);
+    }
+
+    #[test]
+    fn snapshot_payload_roundtrip_is_bit_identical() {
+        use crate::policies::snapshot::{Cur, Payload};
+        let (n, c) = (48usize, 12.0);
+        let mut a = DenseSimplex::new_uniform(n, c);
+        a.set_rebase_threshold(0.7);
+        a.freeze();
+        let mut rng = Xoshiro256pp::seed_from(29);
+        for _ in 0..800 {
+            a.request(rng.next_below(n as u64), 0.05);
+            a.maybe_rebase();
+        }
+        let mut p = Payload::new();
+        a.snapshot_payload(&mut p);
+        let mut cur = Cur::new(&p.0);
+        let mut b = DenseSimplex::restore_payload(&mut cur).unwrap();
+        cur.finish().unwrap();
+        assert_eq!(a.rebase_count(), b.rebase_count());
+        for _ in 0..800 {
+            let j = rng.next_below(n as u64);
+            let sa = a.request(j, 0.05);
+            let sb = b.request(j, 0.05);
+            assert_eq!(sa, sb, "step stats diverged after restore");
+            assert_eq!(a.maybe_rebase().is_some(), b.maybe_rebase().is_some());
+            for i in 0..n as u64 {
+                assert_eq!(a.prob(i).to_bits(), b.prob(i).to_bits());
+                assert_eq!(a.frozen_prob(i).to_bits(), b.frozen_prob(i).to_bits());
+            }
+        }
+        b.check_invariants(1e-9);
+    }
+
+    /// Payload cross-compatibility: a dense payload restores into a
+    /// LazySimplex (same field sequence) and the two continue
+    /// bit-identically.
+    #[test]
+    fn payload_restores_into_lazy_engine() {
+        use crate::policies::snapshot::{Cur, Payload};
+        let (n, c) = (32usize, 8.0);
+        let mut d = DenseSimplex::new_uniform(n, c);
+        d.freeze();
+        let mut rng = Xoshiro256pp::seed_from(31);
+        for _ in 0..400 {
+            d.request(rng.next_below(n as u64), 0.07);
+        }
+        let mut p = Payload::new();
+        d.snapshot_payload(&mut p);
+        let mut cur = Cur::new(&p.0);
+        let mut l = LazySimplex::restore_payload(&mut cur).unwrap();
+        cur.finish().unwrap();
+        for _ in 0..400 {
+            let j = rng.next_below(n as u64);
+            let sd = d.request(j, 0.07);
+            let sl = l.request(j, 0.07);
+            assert_eq!(sd, sl);
+            for i in 0..n as u64 {
+                assert_eq!(d.prob(i).to_bits(), l.prob(i).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn frozen_prob_tracks_batch_boundary() {
+        let n = 16;
+        let mut s = DenseSimplex::new_uniform(n, 4.0);
+        s.request(0, 0.2);
+        s.freeze();
+        let frozen: Vec<f64> = (0..n as u64).map(|i| s.frozen_prob(i)).collect();
+        for step in 0..10 {
+            s.request(step % n as u64, 0.15);
+            for i in 0..n as u64 {
+                assert!(
+                    (s.frozen_prob(i) - frozen[i as usize]).abs() < 1e-12,
+                    "frozen value drifted at {i}"
+                );
+            }
+        }
+        s.freeze();
+        for i in 0..n as u64 {
+            assert!((s.frozen_prob(i) - s.prob(i)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn steady_state_requests_do_not_allocate_scratch() {
+        let n = 4_000;
+        let mut s = DenseSimplex::new_uniform(n, 400.0);
+        let eta = crate::theory_eta(400.0, n as f64, 4e4, 1.0);
+        let zipf = Zipf::new(n as u64, 0.9);
+        let mut rng = Xoshiro256pp::seed_from(3);
+        for _ in 0..20_000 {
+            s.request(zipf.sample(&mut rng), eta);
+        }
+        let warm = s.scratch_grows();
+        for _ in 0..20_000 {
+            s.request(zipf.sample(&mut rng), eta);
+        }
+        assert_eq!(s.scratch_grows(), warm, "dense scratch grew after warm-up");
+        s.check_invariants(1e-6);
+    }
+
+    #[test]
+    fn bisect_matches_sort_based_oracle() {
+        check("bisect_water_level", |g: &mut Gen| {
+            let n = g.usize_in(2, 400);
+            let c = g.usize_in(1, n) as f64;
+            let scale = g.f64_in(0.2, 4.0);
+            let y: Vec<f64> = (0..n).map(|_| g.f64_in(-0.5, scale)).collect();
+            let mut f = y.clone();
+            bisect_project(&mut f, c);
+            let expect = oracle::project(&y, c);
+            assert!(oracle::is_feasible(&f, c, 1e-9));
+            for (i, (a, b)) in f.iter().zip(&expect).enumerate() {
+                assert!((a - b).abs() < 1e-9, "component {i}: {a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn auto_heuristic_is_deterministic_and_monotone() {
+        assert!(auto_prefers_dense(1 << 20, 1));
+        assert!(!auto_prefers_dense((1 << 20) + 1, 1));
+        // beyond 2^20 the batch must amortize the sweep: N <= B * 4096
+        assert!(auto_prefers_dense(10_000_000, 4096));
+        assert!(!auto_prefers_dense(10_000_000, 64));
+        assert_eq!(FracBackend::Auto.resolve(2_000, 64), FracBackend::Dense);
+        assert_eq!(
+            FracBackend::Auto.resolve(100_000_000, 1),
+            FracBackend::Lazy
+        );
+        assert_eq!(FracBackend::Lazy.resolve(2_000, 64), FracBackend::Lazy);
+        assert_eq!(
+            FracBackend::Dense.resolve(100_000_000, 1),
+            FracBackend::Dense
+        );
+    }
+}

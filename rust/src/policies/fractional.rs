@@ -11,13 +11,120 @@
 //! the B-sweep of Fig. 10 cheap at any catalog size (the O(N/B) full
 //! materialization remains available through
 //! [`crate::proj::LazySimplex::to_dense`]).
+//!
+//! **Backends** (DESIGN.md §15): the projection state lives in one of two
+//! trajectory-identical engines — the sparse O(log N)
+//! [`crate::proj::LazySimplex`] (FlatTree) or the contiguous SoA
+//! [`crate::policies::dense::DenseSimplex`] (vectorized block scans,
+//! batched chunk application).  Select with
+//! `ogb-frac{backend=lazy|dense|auto}`; `auto` resolves from catalog ×
+//! batch shape at construction ([`crate::policies::dense::auto_prefers_dense`]).
 
+use super::dense::{DenseSimplex, FracBackend};
 use super::{Diag, Policy, Request};
 use crate::proj::LazySimplex;
 
+/// The projection engine behind a [`FractionalOgb`] instance — two
+/// representations of the same (f_tilde, rho) state with bit-identical
+/// trajectories (DESIGN.md §15 summation-order contract).
+#[derive(Debug, Clone)]
+enum Engine {
+    Lazy(LazySimplex),
+    Dense(DenseSimplex),
+}
+
+impl Engine {
+    #[inline]
+    fn prob(&self, i: u64) -> f64 {
+        match self {
+            Engine::Lazy(e) => e.prob(i),
+            Engine::Dense(e) => e.prob(i),
+        }
+    }
+
+    #[inline]
+    fn frozen_prob(&self, i: u64) -> f64 {
+        match self {
+            Engine::Lazy(e) => e.frozen_prob(i),
+            Engine::Dense(e) => e.frozen_prob(i),
+        }
+    }
+
+    #[inline]
+    fn request(&mut self, j: u64, eta: f64) -> crate::proj::StepStats {
+        match self {
+            Engine::Lazy(e) => e.request(j, eta),
+            Engine::Dense(e) => e.request(j, eta),
+        }
+    }
+
+    fn freeze(&mut self) {
+        match self {
+            Engine::Lazy(e) => e.freeze(),
+            Engine::Dense(e) => e.freeze(),
+        }
+    }
+
+    fn maybe_rebase(&mut self) -> Option<f64> {
+        match self {
+            Engine::Lazy(e) => e.maybe_rebase(),
+            Engine::Dense(e) => e.maybe_rebase(),
+        }
+    }
+
+    fn grow(&mut self, n_new: usize) {
+        match self {
+            Engine::Lazy(e) => e.grow(n_new),
+            Engine::Dense(e) => e.grow(n_new),
+        }
+    }
+
+    fn n(&self) -> usize {
+        match self {
+            Engine::Lazy(e) => e.n(),
+            Engine::Dense(e) => e.n(),
+        }
+    }
+
+    fn capacity(&self) -> f64 {
+        match self {
+            Engine::Lazy(e) => e.capacity(),
+            Engine::Dense(e) => e.capacity(),
+        }
+    }
+
+    fn set_rebase_threshold(&mut self, t: f64) {
+        match self {
+            Engine::Lazy(e) => e.set_rebase_threshold(t),
+            Engine::Dense(e) => e.set_rebase_threshold(t),
+        }
+    }
+
+    fn scratch_grows(&self) -> u64 {
+        match self {
+            Engine::Lazy(e) => e.scratch_grows(),
+            Engine::Dense(e) => e.scratch_grows(),
+        }
+    }
+
+    fn snapshot_payload(&self, p: &mut super::snapshot::Payload) {
+        match self {
+            Engine::Lazy(e) => e.snapshot_payload(p),
+            Engine::Dense(e) => e.snapshot_payload(p),
+        }
+    }
+
+    fn backend(&self) -> FracBackend {
+        match self {
+            Engine::Lazy(_) => FracBackend::Lazy,
+            Engine::Dense(_) => FracBackend::Dense,
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct FractionalOgb {
-    lazy: LazySimplex,
+    eng: Engine,
     eta: f64,
     b: usize,
     in_batch: usize,
@@ -31,16 +138,35 @@ pub struct FractionalOgb {
 }
 
 impl FractionalOgb {
+    /// Lazy-engine constructor (the historical default; spec
+    /// `ogb-frac{...}` without a `backend=` key builds this).
     pub fn new(n: usize, c: f64, eta: f64, b: usize) -> Self {
+        Self::new_with_backend(n, c, eta, b, FracBackend::Lazy)
+    }
+
+    /// Backend-explicit constructor; `FracBackend::Auto` resolves from
+    /// the (catalog, batch) shape here, once, so the chosen engine is a
+    /// deterministic function of the spec and the build shape.
+    pub fn new_with_backend(n: usize, c: f64, eta: f64, b: usize, backend: FracBackend) -> Self {
         assert!(b >= 1 && eta > 0.0);
-        let mut lazy = LazySimplex::new_uniform(n, c);
-        lazy.freeze();
+        let resolved = backend.resolve(n, b);
+        let (mut eng, name) = match resolved {
+            FracBackend::Dense => (
+                Engine::Dense(DenseSimplex::new_uniform(n, c)),
+                format!("OGB-frac[dense](b={b})"),
+            ),
+            _ => (
+                Engine::Lazy(LazySimplex::new_uniform(n, c)),
+                format!("OGB-frac(b={b})"),
+            ),
+        };
+        eng.freeze();
         Self {
-            lazy,
+            eng,
             eta,
             b,
             in_batch: 0,
-            name: format!("OGB-frac(b={b})"),
+            name,
             theory_t: None,
             removed_coeffs: 0,
             rebases: 0,
@@ -49,8 +175,18 @@ impl FractionalOgb {
     }
 
     pub fn with_theory_eta(n: usize, c: f64, t: usize, b: usize) -> Self {
+        Self::with_theory_eta_backend(n, c, t, b, FracBackend::Lazy)
+    }
+
+    pub fn with_theory_eta_backend(
+        n: usize,
+        c: f64,
+        t: usize,
+        b: usize,
+        backend: FracBackend,
+    ) -> Self {
         let eta = crate::theory_eta(c, n as f64, t as f64, b as f64);
-        let mut s = Self::new(n, c, eta, b);
+        let mut s = Self::new_with_backend(n, c, eta, b, backend);
         s.theory_t = Some(t);
         s
     }
@@ -58,28 +194,34 @@ impl FractionalOgb {
     /// Builder-style override of the numerical re-base threshold (see
     /// `LazySimplex::set_rebase_threshold`).
     pub fn with_rebase_threshold(mut self, t: f64) -> Self {
-        self.lazy.set_rebase_threshold(t);
+        self.eng.set_rebase_threshold(t);
         self
+    }
+
+    /// The resolved projection engine behind this instance (`"lazy"` or
+    /// `"dense"`) — exported into bench rows and observability labels.
+    pub fn backend(&self) -> &'static str {
+        self.eng.backend().as_str()
     }
 
     /// The materialized (frozen) fraction currently serving requests.
     pub fn cached_fraction(&self, item: u64) -> f64 {
-        self.lazy.frozen_prob(item)
+        self.eng.frozen_prob(item)
     }
 
     /// The live probability (will be materialized at the next boundary).
     pub fn prob(&self, item: u64) -> f64 {
-        self.lazy.prob(item)
+        self.eng.prob(item)
     }
 
     /// Batch boundary: re-base if the numerics drifted, then freeze the
     /// fractional state that pays the next batch's rewards.
     fn flush_batch(&mut self) {
         self.in_batch = 0;
-        if self.lazy.maybe_rebase().is_some() {
+        if self.eng.maybe_rebase().is_some() {
             self.rebases += 1;
         }
-        self.lazy.freeze();
+        self.eng.freeze();
     }
 }
 
@@ -90,8 +232,8 @@ impl Policy for FractionalOgb {
 
     fn serve(&mut self, req: Request) -> f64 {
         assert!(req.weight >= 0.0, "weights must be non-negative");
-        let reward = req.weight * self.lazy.frozen_prob(req.item);
-        let st = self.lazy.request(req.item, self.eta * req.weight);
+        let reward = req.weight * self.eng.frozen_prob(req.item);
+        let st = self.eng.request(req.item, self.eta * req.weight);
         self.removed_coeffs += st.removed as u64;
         self.in_batch += 1;
         if self.in_batch >= self.b {
@@ -103,20 +245,30 @@ impl Policy for FractionalOgb {
     /// Batched serve, split at the B-boundaries: within one chunk the
     /// materialized (frozen) fractional cache does not move, so all
     /// rewards are read in one pass before the per-request gradient
-    /// steps run — trajectory-identical to per-request `serve`.
+    /// steps run — trajectory-identical to per-request `serve`.  The
+    /// dense engine hands the whole chunk to
+    /// [`DenseSimplex::serve_chunk`], a batched two-pass sweep over the
+    /// contiguous arrays with no per-request engine dispatch.
     fn serve_batch(&mut self, reqs: &[Request], rewards: &mut Vec<f64>) {
         rewards.reserve(reqs.len());
         let mut rest = reqs;
         while !rest.is_empty() {
             let take = (self.b - self.in_batch).min(rest.len());
             let (chunk, tail) = rest.split_at(take);
-            for r in chunk {
-                assert!(r.weight >= 0.0, "weights must be non-negative");
-                rewards.push(r.weight * self.lazy.frozen_prob(r.item));
-            }
-            for r in chunk {
-                let st = self.lazy.request(r.item, self.eta * r.weight);
-                self.removed_coeffs += st.removed as u64;
+            match &mut self.eng {
+                Engine::Dense(e) => {
+                    self.removed_coeffs += e.serve_chunk(chunk, self.eta, rewards);
+                }
+                Engine::Lazy(e) => {
+                    for r in chunk {
+                        assert!(r.weight >= 0.0, "weights must be non-negative");
+                        rewards.push(r.weight * e.frozen_prob(r.item));
+                    }
+                    for r in chunk {
+                        let st = e.request(r.item, self.eta * r.weight);
+                        self.removed_coeffs += st.removed as u64;
+                    }
+                }
             }
             self.in_batch += chunk.len();
             if self.in_batch >= self.b {
@@ -127,19 +279,22 @@ impl Policy for FractionalOgb {
     }
 
     /// Catalog growth (DESIGN.md §10): a batch boundary — the partial
-    /// batch closes, the state renormalizes ([`LazySimplex::grow`],
-    /// which re-freezes so subsequent rewards are paid against the
-    /// post-growth materialized state), and theory-derived eta re-tunes
-    /// to the enlarged catalog.
+    /// batch closes, the state renormalizes ([`LazySimplex::grow`] /
+    /// [`DenseSimplex::grow`], which re-freeze so subsequent rewards are
+    /// paid against the post-growth materialized state), and
+    /// theory-derived eta re-tunes to the enlarged catalog.  The backend
+    /// is pinned at construction: growth does not re-run the auto
+    /// dispatch (an engine swap mid-stream would break trajectory
+    /// identity with snapshots taken before the growth).
     fn grow(&mut self, n_new: usize) {
-        if n_new <= self.lazy.n() {
+        if n_new <= self.eng.n() {
             return;
         }
         self.in_batch = 0;
-        self.lazy.grow(n_new);
+        self.eng.grow(n_new);
         if let Some(t) = self.theory_t {
             self.eta = crate::theory_eta(
-                self.lazy.capacity(),
+                self.eng.capacity(),
                 n_new as f64,
                 t as f64,
                 self.b as f64,
@@ -149,12 +304,14 @@ impl Policy for FractionalOgb {
     }
 
     fn occupancy(&self) -> f64 {
-        self.lazy.capacity() // mass is conserved exactly by construction
+        self.eng.capacity() // mass is conserved exactly by construction
     }
 
     /// OGBS checkpoint: META (eta, B, mid-batch position, counters) +
-    /// the LAZY projection.  The lazy payload carries the shadow-freeze,
-    /// so restored rewards are paid against the same materialized state.
+    /// the projection state.  Both engines serialize the same payload
+    /// field sequence under `tag::LAZY` (see
+    /// [`DenseSimplex::snapshot_payload`]); the header name embeds the
+    /// resolved backend, so `check_policy` refuses cross-engine restores.
     fn snapshot(&self, w: &mut dyn std::io::Write) -> super::SnapshotResult<()> {
         use super::snapshot::{tag, Payload, SnapshotWriter};
         let mut sw = SnapshotWriter::new(w, &self.name)?;
@@ -168,7 +325,7 @@ impl Policy for FractionalOgb {
         meta.put_u64(self.grows);
         sw.section(tag::META, &meta)?;
         let mut lz = Payload::new();
-        self.lazy.snapshot_payload(&mut lz);
+        self.eng.snapshot_payload(&mut lz);
         sw.section(tag::LAZY, &lz)?;
         sw.finish()
     }
@@ -200,9 +357,12 @@ impl Policy for FractionalOgb {
             return Err(SnapshotError::Corrupt("OGB-frac meta out of range"));
         }
         let mut lcur = Cur::new(&lz);
-        let lazy = LazySimplex::restore_payload(&mut lcur)?;
+        let eng = match &self.eng {
+            Engine::Lazy(_) => Engine::Lazy(LazySimplex::restore_payload(&mut lcur)?),
+            Engine::Dense(_) => Engine::Dense(DenseSimplex::restore_payload(&mut lcur)?),
+        };
         lcur.finish()?;
-        self.lazy = lazy;
+        self.eng = eng;
         self.eta = eta;
         self.b = b;
         self.in_batch = in_batch;
@@ -217,7 +377,7 @@ impl Policy for FractionalOgb {
         Diag {
             removed_coeffs: self.removed_coeffs,
             rebases: self.rebases,
-            scratch_grows: self.lazy.scratch_grows(),
+            scratch_grows: self.eng.scratch_grows(),
             grows: self.grows,
             ..Default::default()
         }
@@ -317,5 +477,33 @@ mod tests {
             burst_drop > stat_drop + 0.02,
             "bursty drop {burst_drop} should exceed stationary drop {stat_drop}"
         );
+    }
+
+    /// The dense engine is a drop-in: same rewards as the lazy engine on
+    /// the same stream, batched and per-request (the exhaustive
+    /// differential grid lives in `rust/tests/dense_backend.rs`).
+    #[test]
+    fn dense_backend_rewards_match_lazy() {
+        let n = 200;
+        let c = 40.0;
+        let t = synth::zipf(n, 5_000, 0.9, 11);
+        let mut lazy = FractionalOgb::new_with_backend(n, c, 0.03, 8, FracBackend::Lazy);
+        let mut dense = FractionalOgb::new_with_backend(n, c, 0.03, 8, FracBackend::Dense);
+        assert_eq!(lazy.backend(), "lazy");
+        assert_eq!(dense.backend(), "dense");
+        assert_eq!(dense.name(), "OGB-frac[dense](b=8)");
+        for &r in &t.requests {
+            let a = lazy.request(r as u64);
+            let b = dense.request(r as u64);
+            assert_eq!(a.to_bits(), b.to_bits(), "rewards diverged");
+        }
+    }
+
+    #[test]
+    fn auto_backend_resolves_deterministically() {
+        let small = FractionalOgb::new_with_backend(2_000, 100.0, 0.01, 64, FracBackend::Auto);
+        assert_eq!(small.backend(), "dense");
+        let huge = FractionalOgb::new_with_backend(2_000_000, 1_000.0, 0.01, 1, FracBackend::Auto);
+        assert_eq!(huge.backend(), "lazy");
     }
 }

@@ -14,8 +14,16 @@
 //! `ogb{batch=64,rebase=1e6}`) names every built-in, and the open
 //! [`PolicyRegistry`] lets external code add constructors without
 //! editing this module (they flow through [`AnyPolicy::Dyn`]).
+//!
+//! The fractional OGB policy carries two interchangeable projection
+//! engines (DESIGN.md §15): the sparse lazy FlatTree path (`proj::lazy`,
+//! O(log N) per step) and the dense SoA path ([`dense::DenseSimplex`],
+//! batched and vectorizable).  Select with
+//! `ogb-frac{backend=lazy|dense|auto}`; trajectories are bit-identical
+//! by the summation-order contract.
 
 pub mod arc;
+pub mod dense;
 pub mod fifo;
 pub mod fractional;
 pub mod ftpl;
@@ -33,6 +41,7 @@ pub mod snapshot;
 pub mod spec;
 
 pub use arc::ArcCache;
+pub use dense::{auto_prefers_dense, DenseSimplex, FracBackend};
 pub use fifo::Fifo;
 pub use fractional::FractionalOgb;
 pub use ftpl::Ftpl;
@@ -371,6 +380,22 @@ impl Policy for Box<dyn Policy> {
 /// `"ogb{batch=64,rebase=1e6}"`, or any [`PolicyRegistry`] name); `trace`
 /// is required only by `opt`.  Parses via [`PolicySpec`] and delegates to
 /// [`build_spec`] — the stringly match of v1 is gone.
+///
+/// # Examples
+///
+/// ```
+/// use ogb_cache::policies::{self, BuildOpts, Policy, Request};
+///
+/// let opts = BuildOpts::new(10_000, 8, 42);
+/// let mut p = policies::build("ogb-frac{batch=8,backend=dense}", 1_000, 100, &opts, None)?;
+/// assert_eq!(p.name(), "OGB-frac[dense](b=8)");
+///
+/// let mut rewards = Vec::new();
+/// let reqs: Vec<Request> = (0..8u64).map(Request::unit).collect();
+/// p.serve_batch(&reqs, &mut rewards);
+/// assert_eq!(rewards.len(), 8);
+/// # Ok::<(), anyhow::Error>(())
+/// ```
 pub fn build(
     spec_text: &str,
     n: usize,
@@ -431,9 +456,12 @@ mod tests {
             "ftpl",
             "ogb",
             "ogb-frac",
+            "ogb-frac{backend=dense}",
+            "ogb-frac{backend=auto}",
             "ogb-classic",
             "ogb-classic-frac",
             "omd-frac",
+            "omd-frac{backend=dense}",
             "opt",
             "infinite",
             "meta{experts=[ogb{batch=4},lru,ftpl],batch=4}",

@@ -23,19 +23,50 @@
 //! | `lru` `lfu` `fifo` `arc` `gds` `infinite` `opt` | —              |
 //! | `ftpl`             | `zeta` (noise scale; default theory)        |
 //! | `ogb`              | `batch`, `eta`, `rebase` (re-base threshold)|
-//! | `ogb-frac`         | `batch`, `eta`, `rebase`                    |
+//! | `ogb-frac`         | `batch`, `eta`, `rebase`, `backend` (`lazy`\|`dense`\|`auto`) |
 //! | `ogb-classic`      | `batch`, `eta`                              |
 //! | `ogb-classic-frac` | `batch`, `eta`                              |
-//! | `omd-frac`         | `batch`, `eta`                              |
+//! | `omd-frac`         | `batch`, `eta`, `backend` (`dense`\|`auto`) |
 //! | `meta`             | `experts` (required list of non-meta specs), `algo` (`eg`\|`hedge`), `meta_eta`, `batch`, `mix` (`frac`\|`sample`) |
 //!
 //! Examples: `ogb{batch=64,rebase=1e6}`, `ftpl{zeta=25}`, `lru`,
+//! `ogb-frac{batch=64,backend=dense}`,
 //! `meta{experts=[ogb{batch=64},lru,ftpl],algo=eg,mix=sample}`.
+//!
+//! The `backend=` key (DESIGN.md §15) selects the projection engine of
+//! the fractional gradient family: `lazy` is the O(log N) FlatTree
+//! engine, `dense` the contiguous SoA engine, and `auto` resolves from
+//! catalog × batch shape at build time
+//! ([`crate::policies::dense::auto_prefers_dense`]).  `omd-frac` is
+//! *inherently* dense — its KL projection touches all N components per
+//! batch — so it accepts `dense`/`auto` (both no-ops, for grid symmetry)
+//! and rejects `lazy`, which has no negative-entropy analogue.
 //!
 //! Any other kind resolves through the global [`PolicyRegistry`] at
 //! build time; registered constructors receive the raw key=value pairs
 //! in a [`PolicyBuildCtx`] and return `Box<dyn Policy>`, which every
 //! harness serves via [`AnyPolicy::Dyn`].
+//!
+//! # Examples
+//!
+//! Parse a spec, inspect it, and round-trip the canonical rendering:
+//!
+//! ```
+//! use ogb_cache::policies::PolicySpec;
+//!
+//! let spec: PolicySpec = "ogb-frac{batch=64,backend=auto}".parse()?;
+//! assert_eq!(spec.kind(), "ogb-frac");
+//! assert!(spec.is_fractional());
+//! assert_eq!(spec.to_string(), "ogb-frac{batch=64,backend=auto}");
+//!
+//! // numbers accept 1e6 / 1_000_000 forms and normalize on display
+//! let spec: PolicySpec = "ogb{batch=1_6,rebase=1e6}".parse()?;
+//! assert_eq!(spec.to_string(), "ogb{batch=16,rebase=1000000}");
+//!
+//! // malformed specs fail with a typed error, not a panic
+//! assert!("ogb-frac{backend=bogus}".parse::<PolicySpec>().is_err());
+//! # Ok::<(), anyhow::Error>(())
+//! ```
 
 use std::fmt;
 use std::str::FromStr;
@@ -43,6 +74,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::{bail, ensure, Context, Result};
 
+use super::dense::FracBackend;
 use super::{AnyPolicy, BuildOpts, Policy};
 
 /// Built-in kinds (reserved in the registry).
@@ -129,6 +161,8 @@ pub enum PolicySpec {
         batch: Option<usize>,
         eta: Option<f64>,
         rebase: Option<f64>,
+        /// projection engine (DESIGN.md §15); `None` = lazy
+        backend: Option<FracBackend>,
     },
     OgbClassic {
         fractional: bool,
@@ -138,6 +172,9 @@ pub enum PolicySpec {
     OmdFrac {
         batch: Option<usize>,
         eta: Option<f64>,
+        /// accepted for grid symmetry (`dense`/`auto` only): the OMD
+        /// engine is already dense SoA, so this never changes behavior
+        backend: Option<FracBackend>,
     },
     /// Expert-pool meta policy (DESIGN.md §14): Hedge/EG weights over a
     /// list of sub-specs.  Experts may be any non-meta spec, including
@@ -352,11 +389,21 @@ impl FromStr for PolicySpec {
                 }
             }
             "ogb-frac" => {
-                check_keys(&["batch", "eta", "rebase"])?;
+                check_keys(&["batch", "eta", "rebase", "backend"])?;
+                let backend = match get("backend") {
+                    None => None,
+                    Some("lazy") => Some(FracBackend::Lazy),
+                    Some("dense") => Some(FracBackend::Dense),
+                    Some("auto") => Some(FracBackend::Auto),
+                    Some(other) => {
+                        bail!("policy `ogb-frac`: bad `backend` `{other}` (lazy|dense|auto)")
+                    }
+                };
                 PolicySpec::OgbFrac {
                     batch: usize_of("batch")?,
                     eta: f64_of("eta")?,
                     rebase: f64_of("rebase")?,
+                    backend,
                 }
             }
             "ogb-classic" | "ogb-classic-frac" => {
@@ -368,10 +415,24 @@ impl FromStr for PolicySpec {
                 }
             }
             "omd-frac" => {
-                check_keys(&["batch", "eta"])?;
+                check_keys(&["batch", "eta", "backend"])?;
+                let backend = match get("backend") {
+                    None => None,
+                    Some("dense") => Some(FracBackend::Dense),
+                    Some("auto") => Some(FracBackend::Auto),
+                    Some("lazy") => bail!(
+                        "policy `omd-frac`: `backend=lazy` is not available — the \
+                         negative-entropy mirror step has no lazy decomposition \
+                         (DESIGN.md §15); omd-frac always runs the dense engine"
+                    ),
+                    Some(other) => {
+                        bail!("policy `omd-frac`: bad `backend` `{other}` (dense|auto)")
+                    }
+                };
                 PolicySpec::OmdFrac {
                     batch: usize_of("batch")?,
                     eta: f64_of("eta")?,
+                    backend,
                 }
             }
             "meta" => {
@@ -462,7 +523,7 @@ impl fmt::Display for PolicySpec {
                     kv.push(("zeta".into(), format!("{z}")));
                 }
             }
-            PolicySpec::Ogb { batch, eta, rebase } | PolicySpec::OgbFrac { batch, eta, rebase } => {
+            PolicySpec::Ogb { batch, eta, rebase } => {
                 if let Some(b) = batch {
                     kv.push(("batch".into(), b.to_string()));
                 }
@@ -473,12 +534,42 @@ impl fmt::Display for PolicySpec {
                     kv.push(("rebase".into(), format!("{r}")));
                 }
             }
-            PolicySpec::OgbClassic { batch, eta, .. } | PolicySpec::OmdFrac { batch, eta } => {
+            PolicySpec::OgbFrac {
+                batch,
+                eta,
+                rebase,
+                backend,
+            } => {
                 if let Some(b) = batch {
                     kv.push(("batch".into(), b.to_string()));
                 }
                 if let Some(e) = eta {
                     kv.push(("eta".into(), format!("{e}")));
+                }
+                if let Some(r) = rebase {
+                    kv.push(("rebase".into(), format!("{r}")));
+                }
+                if let Some(be) = backend {
+                    kv.push(("backend".into(), be.as_str().to_string()));
+                }
+            }
+            PolicySpec::OgbClassic { batch, eta, .. } => {
+                if let Some(b) = batch {
+                    kv.push(("batch".into(), b.to_string()));
+                }
+                if let Some(e) = eta {
+                    kv.push(("eta".into(), format!("{e}")));
+                }
+            }
+            PolicySpec::OmdFrac { batch, eta, backend } => {
+                if let Some(b) = batch {
+                    kv.push(("batch".into(), b.to_string()));
+                }
+                if let Some(e) = eta {
+                    kv.push(("eta".into(), format!("{e}")));
+                }
+                if let Some(be) = backend {
+                    kv.push(("backend".into(), be.as_str().to_string()));
                 }
             }
             PolicySpec::Meta {
@@ -752,11 +843,17 @@ pub(super) fn build_spec(
             }
             AnyPolicy::Ogb(p)
         }
-        PolicySpec::OgbFrac { batch, eta, rebase } => {
+        PolicySpec::OgbFrac {
+            batch,
+            eta,
+            rebase,
+            backend,
+        } => {
             let b = batch.unwrap_or(opts.batch);
+            let be = backend.unwrap_or_default();
             let mut p = match eta {
-                Some(e) => FractionalOgb::new(n, c as f64, *e, b),
-                None => FractionalOgb::with_theory_eta(n, c as f64, t_hint, b),
+                Some(e) => FractionalOgb::new_with_backend(n, c as f64, *e, b, be),
+                None => FractionalOgb::with_theory_eta_backend(n, c as f64, t_hint, b, be),
             };
             if let Some(t) = rebase.or(opts.rebase_threshold) {
                 p = p.with_rebase_threshold(t);
@@ -795,7 +892,9 @@ pub(super) fn build_spec(
                 ),
             })
         }
-        PolicySpec::OmdFrac { batch, eta } => {
+        PolicySpec::OmdFrac { batch, eta, .. } => {
+            // `backend` was validated at parse time (dense/auto only) and
+            // is a no-op: the OMD engine is already the dense formulation.
             let b = batch.unwrap_or(opts.batch);
             AnyPolicy::Omd(match eta {
                 Some(e) => OmdFractional::new(n, c as f64, *e, b),
@@ -863,8 +962,12 @@ mod tests {
             "lru",
             "ogb{batch=64,rebase=1000000}",
             "ogb-frac{batch=8}",
+            "ogb-frac{batch=8,backend=dense}",
+            "ogb-frac{backend=auto}",
+            "ogb-frac{batch=64,eta=0.01,rebase=1000000,backend=lazy}",
             "ftpl{zeta=25}",
             "omd-frac{batch=4,eta=0.01}",
+            "omd-frac{batch=4,backend=dense}",
             "ogb-classic-frac",
         ] {
             let spec: PolicySpec = text.parse().unwrap();
@@ -889,6 +992,11 @@ mod tests {
             "ogb{batch=x}",
             "ogb{batch=1,batch=2}",
             "we!rd",
+            "ogb{backend=dense}",        // backend is a frac-family key
+            "ogb-frac{backend=bogus}",   // unknown engine
+            "ogb-frac{backend=}",        // empty engine
+            "omd-frac{backend=lazy}",    // omd has no lazy decomposition
+            "omd-frac{backend=bogus}",
         ] {
             assert!(bad.parse::<PolicySpec>().is_err(), "`{bad}`");
         }
@@ -908,6 +1016,25 @@ mod tests {
             p.request(k % 100);
         }
         assert!(p.diag().rebases > 10, "spec-level rebase ignored");
+    }
+
+    /// `backend=` reaches the fractional policy: the resolved engine
+    /// shows in the name, and `auto` dispatches from the build shape.
+    #[test]
+    fn backend_key_selects_engine() {
+        let opts = crate::policies::BuildOpts::new(10_000, 4, 5);
+        let p = policies::build("ogb-frac{batch=8,backend=dense}", 100, 10, &opts, None).unwrap();
+        assert_eq!(p.name(), "OGB-frac[dense](b=8)");
+        let p = policies::build("ogb-frac{batch=8,backend=lazy}", 100, 10, &opts, None).unwrap();
+        assert_eq!(p.name(), "OGB-frac(b=8)");
+        let p = policies::build("ogb-frac{batch=8}", 100, 10, &opts, None).unwrap();
+        assert_eq!(p.name(), "OGB-frac(b=8)", "default stays lazy");
+        // auto resolves dense at this small shape
+        let p = policies::build("ogb-frac{backend=auto}", 100, 10, &opts, None).unwrap();
+        assert_eq!(p.name(), "OGB-frac[dense](b=4)");
+        // omd-frac accepts (and ignores) dense/auto
+        let p = policies::build("omd-frac{batch=4,backend=dense}", 100, 10, &opts, None).unwrap();
+        assert_eq!(p.name(), "OMD-frac(b=4)");
     }
 
     #[test]
@@ -1056,10 +1183,21 @@ mod tests {
                     } else {
                         Some((rng.next_below(1000) + 1) as f64)
                     },
+                    backend: match rng.next_below(4) {
+                        0 => None,
+                        1 => Some(FracBackend::Lazy),
+                        2 => Some(FracBackend::Dense),
+                        _ => Some(FracBackend::Auto),
+                    },
                 },
                 6 => PolicySpec::OmdFrac {
                     batch: Some((rng.next_below(16) + 1) as usize),
                     eta: Some((rng.next_below(100) + 1) as f64 / 100.0),
+                    backend: match rng.next_below(3) {
+                        0 => None,
+                        1 => Some(FracBackend::Dense),
+                        _ => Some(FracBackend::Auto),
+                    },
                 },
                 _ => PolicySpec::Arc,
             }

@@ -1,14 +1,91 @@
-//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
-//! (`artifacts/*.hlo.txt`, produced by `make artifacts` →
-//! `python/compile/aot.py`) and executes them on the XLA CPU client from
-//! the Rust request path.  Python never runs at request time.
+//! Accelerator runtime layer: backend discovery and dispatch for the
+//! dense gradient step (DESIGN.md §15).
 //!
-//! Interchange is HLO *text*: jax ≥ 0.5 serializes HloModuleProto with
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see /opt/xla-example/README.md).
+//! Two [`crate::policies::DenseStep`] backends exist:
+//!
+//! * **cpu** — [`crate::policies::CpuDenseStep`], the exact sort-based
+//!   projection running in-process.  Always available.
+//! * **pjrt** — [`XlaDenseStep`], the same computation executed through
+//!   AOT-compiled JAX/Pallas artifacts (`artifacts/*.hlo.txt`, produced
+//!   by `make artifacts` → `python/compile/aot.py`) on the XLA CPU
+//!   client.  Python never runs at request time.  Interchange is HLO
+//!   *text*: jax ≥ 0.5 serializes HloModuleProto with 64-bit
+//!   instruction ids that xla_extension 0.5.1 rejects; the text parser
+//!   reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Resolution goes through [`resolve_dense_step`]: callers name a
+//! [`BackendKind`] (`Cpu`, `Pjrt`, or `Auto`) and get either a working
+//! boxed backend or a typed [`BackendError::BackendUnavailable`] — never
+//! a panic and never a late runtime error.  When the real `xla` crate is
+//! absent (this tree vendors a stub that fails at client creation), the
+//! `pjrt` backend reports unavailable at *resolution* time and `Auto`
+//! falls back to `cpu`; a future PJRT/GPU build slots in by making
+//! [`PjrtRuntime::cpu`] succeed — no call-site changes.
 
 pub mod pjrt;
 pub mod registry;
 
+use std::fmt;
+
 pub use pjrt::{PjrtRuntime, ProjExecutable};
-pub use registry::{artifacts_available, ArtifactRegistry, XlaDenseStep};
+pub use registry::{artifacts_available, resolve_dense_step, ArtifactRegistry, XlaDenseStep};
+
+/// Typed runtime-backend failure.  Implements [`std::error::Error`], so
+/// it flows through `anyhow::Result` call sites via `?` while staying
+/// matchable for callers that want to fall back (see
+/// [`resolve_dense_step`] with [`BackendKind::Auto`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BackendError {
+    /// The named backend cannot run in this build/environment (stub
+    /// `xla` crate, missing artifacts directory, no artifact for the
+    /// requested catalog size).  `detail` says which precondition
+    /// failed.
+    BackendUnavailable {
+        /// backend id as reported by `DenseStep::backend_name`
+        backend: &'static str,
+        detail: String,
+    },
+}
+
+impl fmt::Display for BackendError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BackendError::BackendUnavailable { backend, detail } => {
+                write!(f, "backend `{backend}` unavailable: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for BackendError {}
+
+/// Which [`crate::policies::DenseStep`] backend to resolve.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// In-process exact CPU projection — always available.
+    #[default]
+    Cpu,
+    /// AOT XLA artifacts through PJRT — requires a real `xla` crate and
+    /// compiled artifacts for the catalog size.
+    Pjrt,
+    /// Try `Pjrt`, fall back to `Cpu` if it is unavailable.
+    Auto,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_error_displays_backend_and_detail() {
+        let e = BackendError::BackendUnavailable {
+            backend: "pjrt",
+            detail: "stub xla crate".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("pjrt") && s.contains("unavailable"), "{s}");
+        // flows into anyhow via the blanket StdError conversion
+        let a: anyhow::Error = e.into();
+        assert!(a.to_string().contains("pjrt"));
+    }
+}

@@ -10,14 +10,25 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use super::BackendError;
+
 /// Shared PJRT CPU client (compilation + execution device).
 pub struct PjrtRuntime {
     client: xla::PjRtClient,
 }
 
 impl PjrtRuntime {
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+    /// Create the PJRT CPU client.
+    ///
+    /// Under the vendored stub `xla` crate this *always* returns a typed
+    /// [`BackendError::BackendUnavailable`] — the failure surfaces here,
+    /// at construction, so nothing downstream (`ArtifactRegistry`,
+    /// [`super::resolve_dense_step`]) can reach a runtime panic.
+    pub fn cpu() -> std::result::Result<Self, BackendError> {
+        let client = xla::PjRtClient::cpu().map_err(|e| BackendError::BackendUnavailable {
+            backend: "pjrt",
+            detail: format!("create PJRT CPU client: {e}"),
+        })?;
         Ok(Self { client })
     }
 

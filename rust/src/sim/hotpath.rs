@@ -108,6 +108,11 @@ impl HotpathConfig {
                 // as standalone OGB (DESIGN.md §14); trace-free experts
                 // only — the bench grid builds with `trace: None`
                 "meta{experts=[ogb{batch=64},lru],batch=64,mix=sample}".into(),
+                // both fractional projection engines (DESIGN.md §15): the
+                // CI smoke asserts the lazy and dense `backend` rows both
+                // exist and that dense keeps the zero-alloc contract
+                "ogb-frac{batch=64,backend=lazy}".into(),
+                "ogb-frac{batch=64,backend=dense}".into(),
             ],
             ns: vec![2_000],
             cache_pcts: vec![5.0],
@@ -147,6 +152,10 @@ pub struct HotpathRow {
     pub scratch_grows: u64,
     /// requests in the timed phase (reps × requests)
     pub requests_timed: u64,
+    /// projection engine for fractional policies (`"lazy"`, `"dense"`,
+    /// as resolved at construction — DESIGN.md §15); None for policies
+    /// without a backend choice
+    pub backend: Option<&'static str>,
 }
 
 /// Whole-suite outcome.
@@ -245,6 +254,13 @@ impl HotpathResult {
                     ),
                     ("scratch_grows", Json::Num(r.scratch_grows as f64)),
                     ("requests_timed", Json::Num(r.requests_timed as f64)),
+                    (
+                        "backend",
+                        match r.backend {
+                            Some(b) => Json::Str(b.into()),
+                            None => Json::Null,
+                        },
+                    ),
                 ])
             })
             .collect();
@@ -273,6 +289,15 @@ impl HotpathResult {
         std::fs::write(&path, j.render() + "\n")
             .with_context(|| format!("write {}", path.display()))?;
         Ok(path)
+    }
+}
+
+/// Projection engine of a built policy, when it has one (DESIGN.md §15):
+/// the `backend` column of the bench record.
+fn backend_of(p: &policies::AnyPolicy) -> Option<&'static str> {
+    match p {
+        policies::AnyPolicy::OgbFrac(q) => Some(q.backend()),
+        _ => None,
     }
 }
 
@@ -379,6 +404,7 @@ pub fn run_hotpath_obs(
                                 mode: &'static str,
                                 serve_batch: usize,
                                 policy_batch: usize,
+                                backend: Option<&'static str>,
                                 m: CellMeasure| {
                     let timed = (cfg.reps * cfg.requests) as u64;
                     let per_req = |ns: f64| ns / cfg.requests as f64;
@@ -404,6 +430,7 @@ pub fn run_hotpath_obs(
                             .then(|| m.allocs as f64 / timed as f64),
                         scratch_grows: m.d1.scratch_grows - m.d0.scratch_grows,
                         requests_timed: timed,
+                        backend,
                     });
                 };
 
@@ -426,8 +453,9 @@ pub fn run_hotpath_obs(
                 // row every earlier BENCH_hotpath.json measured)
                 {
                     let mut policy = build_policy(cfg.batch)?;
+                    let be = backend_of(&policy);
                     let m = measure_per_request(&mut policy, obs.as_deref_mut());
-                    push_row(&mut rows, "per_request", 1, cfg.batch, m);
+                    push_row(&mut rows, "per_request", 1, cfg.batch, be, m);
                 }
 
                 // batched mode — one serve_batch call per B requests,
@@ -438,10 +466,12 @@ pub fn run_hotpath_obs(
                 for &bb in &cfg.batch_sizes {
                     if bb != cfg.batch {
                         let mut policy = build_policy(bb)?;
+                        let be = backend_of(&policy);
                         let m = measure_per_request(&mut policy, obs.as_deref_mut());
-                        push_row(&mut rows, "per_request", 1, bb, m);
+                        push_row(&mut rows, "per_request", 1, bb, be, m);
                     }
                     let mut policy = build_policy(bb)?;
+                    let be = backend_of(&policy);
                     let mut rewards: Vec<f64> = Vec::with_capacity(bb);
                     let m = measure_cell(
                         &mut policy,
@@ -456,7 +486,7 @@ pub fn run_hotpath_obs(
                             }
                         },
                     );
-                    push_row(&mut rows, "batched", bb, bb, m);
+                    push_row(&mut rows, "batched", bb, bb, be, m);
                 }
             }
         }
@@ -484,9 +514,10 @@ mod tests {
         let mut cfg = HotpathConfig::smoke();
         cfg.requests = 5_000; // keep the unit test quick
         let r = run_hotpath(&cfg).unwrap();
-        // 3 policies (ogb, lru, meta) x (per_request baseline B=1,
-        // per_request twin B=64, batched B=64) rows
-        assert_eq!(r.rows.len(), 9);
+        // 5 policies (ogb, lru, meta, ogb-frac lazy, ogb-frac dense) x
+        // (per_request baseline B=1, per_request twin B=64, batched
+        // B=64) rows
+        assert_eq!(r.rows.len(), 15);
         for row in &r.rows {
             assert!(row.ns_per_request > 0.0, "{} {}", row.policy, row.mode);
             assert!(row.pops_per_request >= 0.0);
@@ -502,13 +533,26 @@ mod tests {
             .rows
             .iter()
             .any(|r| r.mode == "per_request" && r.policy_batch == 64));
-        // Steady-state scratch buffers must not grow mid-measurement in
-        // either mode — for standalone OGB and for the meta expert pool
-        for ogb in r
+        // both fractional projection engines produce rows, tagged with
+        // the resolved backend; non-fractional rows carry None
+        assert!(r
             .rows
             .iter()
-            .filter(|r| r.policy == "ogb" || r.policy.starts_with("meta"))
-        {
+            .any(|r| r.backend == Some("lazy") && r.mode == "batched"));
+        assert!(r
+            .rows
+            .iter()
+            .any(|r| r.backend == Some("dense") && r.mode == "batched"));
+        assert!(r
+            .rows
+            .iter()
+            .all(|r| r.policy.starts_with("ogb-frac") == r.backend.is_some()));
+        // Steady-state scratch buffers must not grow mid-measurement in
+        // either mode — for standalone OGB, the meta expert pool, and
+        // both fractional engines (the dense rows' zero-alloc contract)
+        for ogb in r.rows.iter().filter(|r| {
+            r.policy == "ogb" || r.policy.starts_with("meta") || r.policy.starts_with("ogb-frac")
+        }) {
             assert_eq!(
                 ogb.scratch_grows, 0,
                 "{} mode grew a scratch buffer",
@@ -529,6 +573,9 @@ mod tests {
         assert!(text.contains("\"allocs_per_request\""));
         assert!(text.contains("\"mode\":\"per_request\""));
         assert!(text.contains("\"mode\":\"batched\""));
+        assert!(text.contains("\"backend\":\"lazy\""));
+        assert!(text.contains("\"backend\":\"dense\""));
+        assert!(text.contains("\"backend\":null"));
         std::fs::remove_dir_all(dir).ok();
     }
 
